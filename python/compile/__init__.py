@@ -1,0 +1,2 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO
+text artifacts for the Rust PJRT runtime. Never imported at run time."""

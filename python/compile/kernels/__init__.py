@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracle."""
+
+from . import ref  # noqa: F401
+from .reduce_blocks import block_combine, stack_reduce  # noqa: F401

@@ -1,0 +1,106 @@
+"""Layer 1 — Pallas kernels for the reduction-operator hot spot.
+
+The paper's reduction collectives (`MPI_Reduce`, `MPI_Reduce_scatter`)
+apply a commutative operator ⊕ to every received block, once per block
+per round. That per-block combine is the compute hot spot of the whole
+stack; here it is written as Pallas kernels:
+
+* :func:`block_combine` — ``out = x ⊕ y`` over one block, tiled so each
+  tile fits VMEM (grid over the block dimension).
+* :func:`stack_reduce` — ``out = ⊕_w xs[w, :]`` over a stack of ``w``
+  partial blocks in a single streaming pass (one tile of every partial is
+  resident at a time; the combine chain stays in registers/VMEM).
+
+Hardware adaptation (paper targets CPU clusters, see DESIGN.md
+§Hardware-Adaptation): the combine is bandwidth-bound, so the kernels are
+structured as single-pass streams with `BlockSpec`-tiled HBM↔VMEM
+movement and no MXU involvement. On this image Pallas must run with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls), so the
+tests validate numerics and the AOT pipeline, not TPU wallclock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default tile: 8 KiB of f32 — comfortably VMEM-resident with double
+#: buffering on any TPU generation.
+DEFAULT_TILE = 2048
+
+_COMBINE = {
+    "sum": lambda a, b: a + b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "prod": lambda a, b: a * b,
+}
+
+
+def _combine_kernel(x_ref, y_ref, o_ref, *, op: str):
+    o_ref[...] = _COMBINE[op](x_ref[...], y_ref[...])
+
+
+def _pad_to(x, tile):
+    m = x.shape[-1]
+    pad = (-m) % tile
+    if pad == 0:
+        return x, m
+    width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, width), m
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile"))
+def block_combine(x, y, op: str = "sum", tile: int = DEFAULT_TILE):
+    """``x ⊕ y`` elementwise over two 1-D blocks of equal length.
+
+    Arbitrary lengths are handled by padding to the tile size (the pad
+    lanes are combined too and then dropped — harmless for elementwise
+    ops).
+    """
+    assert x.shape == y.shape and x.ndim == 1
+    xp, m = _pad_to(x, tile)
+    yp, _ = _pad_to(y, tile)
+    grid = xp.shape[0] // tile
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(xp, yp)
+    return out[:m]
+
+
+def _stack_kernel(x_ref, o_ref, *, op: str, w: int):
+    acc = x_ref[0, :]
+    for i in range(1, w):
+        acc = _COMBINE[op](acc, x_ref[i, :])
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile"))
+def stack_reduce(xs, op: str = "sum", tile: int = DEFAULT_TILE):
+    """Reduce ``xs[w, m]`` over axis 0 in one streaming pass.
+
+    The grid runs over ``m`` tiles; each grid step loads the same tile of
+    all ``w`` partials (one `BlockSpec` block of shape ``(w, tile)``) and
+    folds them, so every input element is read exactly once.
+    """
+    assert xs.ndim == 2
+    w = xs.shape[0]
+    xp, m = _pad_to(xs, tile)
+    grid = xp.shape[1] // tile
+    out = pl.pallas_call(
+        functools.partial(_stack_kernel, op=op, w=w),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[1],), xs.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((w, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(xp)
+    return out[:m]

@@ -1,0 +1,35 @@
+"""Pure-jnp reference oracle for the reduction kernels (Layer 1
+correctness baseline).
+
+Every Pallas kernel in this package must be numerically identical (up to
+dtype-exact equality for these element-wise ops) to the functions here;
+`python/tests/` sweeps shapes, dtypes and operators with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+#: Operator name -> elementwise combine on two arrays.
+OPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "prod": jnp.multiply,
+}
+
+
+def combine_ref(x, y, op: str = "sum"):
+    """Elementwise combine of two equally-shaped blocks."""
+    return OPS[op](x, y)
+
+
+def stack_reduce_ref(xs, op: str = "sum"):
+    """Reduce a stack of partial blocks ``xs[w, m]`` over axis 0."""
+    if op == "sum":
+        return jnp.sum(xs, axis=0)
+    if op == "max":
+        return jnp.max(xs, axis=0)
+    if op == "min":
+        return jnp.min(xs, axis=0)
+    if op == "prod":
+        return jnp.prod(xs, axis=0)
+    raise ValueError(f"unknown op {op!r}")

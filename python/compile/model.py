@@ -1,0 +1,68 @@
+"""Layer 2 — the JAX compute graph around the Layer-1 kernels.
+
+The reduction collectives apply ⊕ per received block per round; this
+module expresses the three shapes that computation takes, all calling the
+Pallas kernels so everything lowers into a single HLO module per variant:
+
+* :func:`reduce_pair` — one round's combine: ``acc ⊕ incoming``.
+* :func:`reduce_stack` — a whole phase's combine: fold ``w`` partials.
+* :func:`pipeline_reduce` — the reversed-schedule chain: a `lax.scan`
+  over rounds feeding :func:`reduce_pair`, which XLA fuses into one loop
+  (the shape of the root's accumulation over `n-1+q` rounds).
+* :func:`reduce_pair_vjp` — the backward view: the adjoint of reduction
+  *is* broadcast (the paper's duality, Observation 1.3, in autodiff
+  form). Exported so the artifact set exercises fwd and bwd.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.reduce_blocks import block_combine, stack_reduce
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def reduce_pair(acc, incoming, op: str = "sum"):
+    """One communication round's combine of two equal-length blocks."""
+    return block_combine(acc, incoming, op=op)
+
+
+def _reduce_pair_fwd(acc, incoming, op):
+    return reduce_pair(acc, incoming, op), None
+
+
+def _reduce_pair_bwd(op, _res, ct):
+    # The adjoint of a sum-reduction is a broadcast of the cotangent to
+    # every contributor — Observation 1.3's bcast/reduce duality, stated
+    # in autodiff. (Only ⊕ = sum is linear; other ops would need residuals.)
+    assert op == "sum", "reverse-mode is defined for the linear op 'sum' only"
+    return ct, ct
+
+
+reduce_pair.defvjp(_reduce_pair_fwd, _reduce_pair_bwd)
+
+
+def reduce_stack(xs, op: str = "sum"):
+    """Fold a stack ``xs[w, m]`` of partial blocks (one phase's worth)."""
+    return stack_reduce(xs, op=op)
+
+
+def pipeline_reduce(xs, op: str = "sum"):
+    """Sequentially fold ``xs[rounds, m]`` the way the root accumulates
+    partial blocks over the reversed schedule's rounds."""
+
+    def step(acc, x):
+        return reduce_pair(acc, x, op=op), None
+
+    acc0 = xs[0]
+    acc, _ = jax.lax.scan(step, acc0, xs[1:])
+    return acc
+
+
+def reduce_pair_vjp(acc, incoming):
+    """Value and input-cotangents of ``sum``-combine: the bwd pass of a
+    reduction is a broadcast of the output cotangent to both inputs."""
+    y, vjp = jax.vjp(lambda a, b: reduce_pair(a, b, op="sum"), acc, incoming)
+    ct_a, ct_b = vjp(jnp.ones_like(y))
+    return y, ct_a, ct_b

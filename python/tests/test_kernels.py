@@ -1,0 +1,92 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, operators and tile sizes; exact
+equality is required for int dtypes and sum/max/min, allclose for float
+prod (reassociation).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.reduce_blocks import block_combine, stack_reduce
+from compile.kernels.ref import combine_ref, stack_reduce_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+DTYPES = [np.float32, np.int32, np.float64]
+OPS = ["sum", "max", "min", "prod"]
+
+
+def _arr(rng, shape, dtype):
+    if np.issubdtype(dtype, np.integer):
+        return rng.integers(-1000, 1000, size=shape).astype(dtype)
+    return (rng.standard_normal(shape) * 10).astype(dtype)
+
+
+@hypothesis.given(
+    m=st.integers(min_value=1, max_value=5000),
+    dtype=st.sampled_from(DTYPES),
+    op=st.sampled_from(OPS),
+    tile=st.sampled_from([64, 256, 2048]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_combine_matches_ref(m, dtype, op, tile, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m,), dtype)
+    y = _arr(rng, (m,), dtype)
+    got = np.asarray(block_combine(jnp.asarray(x), jnp.asarray(y), op=op, tile=tile))
+    want = np.asarray(combine_ref(jnp.asarray(x), jnp.asarray(y), op=op))
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(got, want)
+
+
+@hypothesis.given(
+    w=st.integers(min_value=1, max_value=9),
+    m=st.integers(min_value=1, max_value=3000),
+    dtype=st.sampled_from(DTYPES),
+    op=st.sampled_from(OPS),
+    tile=st.sampled_from([128, 2048]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stack_reduce_matches_ref(w, m, dtype, op, tile, seed):
+    rng = np.random.default_rng(seed)
+    if op == "prod":
+        # keep magnitudes tame for float prod
+        xs = (rng.uniform(0.5, 1.5, size=(w, m))).astype(dtype)
+    else:
+        xs = _arr(rng, (w, m), dtype)
+    got = np.asarray(stack_reduce(jnp.asarray(xs), op=op, tile=tile))
+    want = np.asarray(stack_reduce_ref(jnp.asarray(xs), op=op))
+    assert got.shape == want.shape
+    if op == "prod" and np.issubdtype(dtype, np.floating):
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m", [1, 63, 64, 65, 2048, 2049, 10_000])
+def test_block_combine_edge_lengths(m):
+    x = jnp.arange(m, dtype=jnp.float32)
+    y = jnp.ones((m,), dtype=jnp.float32)
+    got = np.asarray(block_combine(x, y, op="sum"))
+    np.testing.assert_array_equal(got, np.arange(m, dtype=np.float32) + 1)
+
+
+def test_stack_reduce_single_row():
+    xs = jnp.arange(10, dtype=jnp.int32)[None, :]
+    np.testing.assert_array_equal(np.asarray(stack_reduce(xs)), np.arange(10))
+
+
+def test_sum_commutative_associative_int():
+    # The collectives rely on ⊕ being commutative; int sum is exact.
+    rng = np.random.default_rng(7)
+    xs = rng.integers(-99, 99, size=(6, 500)).astype(np.int32)
+    a = np.asarray(stack_reduce(jnp.asarray(xs), op="sum"))
+    b = np.asarray(stack_reduce(jnp.asarray(xs[::-1].copy()), op="sum"))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,63 @@
+//! Ablation: block-count selection (the paper's §3 tuning problem).
+//!
+//! Sweeps n for a fixed (p, m) and compares three policies: the paper's
+//! `F·sqrt(m/q)` rule (F = 70), the α-β model optimum, and the empirical
+//! best from the sweep — quantifying how much the closed-form rules
+//! leave on the table (the paper calls choosing n "a highly interesting
+//! problem outside the scope of this work").
+
+use circulant_bcast::collectives::{bcast_sim, tuning};
+use circulant_bcast::sim::LinearCost;
+
+fn main() {
+    println!("=== Ablation: block-count policy for pipelined bcast ===\n");
+    let cost = LinearCost::hpc_default();
+    let elem = 4usize;
+
+    println!(
+        "{:>6} {:>12} {:>10} {:>14} {:>10} {:>14} {:>10} {:>14}",
+        "p", "m", "n_paper", "t_paper(ms)", "n_model", "t_model(ms)", "n_best", "t_best(ms)"
+    );
+    for p in [64usize, 200, 1000] {
+        for m in [1usize << 14, 1 << 18, 1 << 21] {
+            let data: Vec<i32> = (0..m as i32).collect();
+            let run = |n: usize| {
+                bcast_sim(p, 0, &data, n.max(1), elem, &cost).expect("sim").stats.time
+            };
+
+            let n_paper = tuning::bcast_blocks_paper(m, p, 70.0);
+            let n_model = tuning::bcast_blocks_model(m, p, elem, cost.alpha, cost.beta);
+            let t_paper = run(n_paper);
+            let t_model = run(n_model);
+
+            // Sweep powers of two plus the two candidates' neighbourhoods.
+            let mut best = (f64::INFINITY, 1usize);
+            let mut n = 1usize;
+            while n <= m.min(1 << 13) {
+                let t = run(n);
+                if t < best.0 {
+                    best = (t, n);
+                }
+                n *= 2;
+            }
+            for cand in [n_paper / 2, n_paper, n_paper * 2, n_model / 2, n_model, n_model * 2] {
+                if cand >= 1 && cand <= m {
+                    let t = run(cand);
+                    if t < best.0 {
+                        best = (t, cand);
+                    }
+                }
+            }
+
+            println!(
+                "{p:>6} {m:>12} {n_paper:>10} {:>14.4} {n_model:>10} {:>14.4} {:>10} {:>14.4}",
+                t_paper * 1e3,
+                t_model * 1e3,
+                best.1,
+                best.0 * 1e3
+            );
+        }
+    }
+    println!("\n(expect: model optimum within a few % of the sweep best; the paper's");
+    println!(" F-rule within ~2x — good enough given F is a per-system constant)");
+}

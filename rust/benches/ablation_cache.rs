@@ -1,0 +1,65 @@
+//! Ablation: schedule caching economics ([12]'s communicator caching).
+//!
+//! With the old O(log³p)-class computation, caching schedules on the
+//! communicator was *necessary*; with the new O(log p) algorithms it is
+//! merely nice. This bench quantifies both: per-call cost of cached vs
+//! uncached schedule access, old vs new computation, and the number of
+//! repeated collective calls needed to amortise one cache insertion.
+
+use std::time::Instant;
+
+use circulant_bcast::schedule::baseline::schedules_oldstyle;
+use circulant_bcast::schedule::{Schedule, ScheduleCache, Skips};
+
+fn main() {
+    println!("=== Ablation: schedule cache (communicator caching, ref [12]) ===\n");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>12}",
+        "p", "new (µs)", "old (µs)", "cached (µs)", "amortize@"
+    );
+    for p in [100usize, 10_007, 1 << 17, (1 << 20) + 1] {
+        let sk = Skips::new(p);
+        let iters = 2000usize;
+
+        // Uncached, new algorithm.
+        let t = Instant::now();
+        for i in 0..iters {
+            std::hint::black_box(Schedule::compute(&sk, (i * 7919) % p));
+        }
+        let new_us = t.elapsed().as_secs_f64() / iters as f64 * 1e6;
+
+        // Uncached, old algorithm (fewer iters, it's slow).
+        let old_iters = 200usize;
+        let t = Instant::now();
+        for i in 0..old_iters {
+            std::hint::black_box(schedules_oldstyle(&sk, (i * 7919) % p));
+        }
+        let old_us = t.elapsed().as_secs_f64() / old_iters as f64 * 1e6;
+
+        // Cached access (hot).
+        let cache = ScheduleCache::new();
+        let hot_ranks: Vec<usize> = (0..64).map(|i| (i * 131) % p).collect();
+        for &r in &hot_ranks {
+            cache.get(p, r);
+        }
+        let t = Instant::now();
+        for i in 0..iters {
+            std::hint::black_box(cache.get(p, hot_ranks[i % hot_ranks.len()]));
+        }
+        let cached_us = t.elapsed().as_secs_f64() / iters as f64 * 1e6;
+
+        // Calls needed for the cache to beat recomputing (new algorithm):
+        // insertion ≈ new_us + map overhead; each hit saves new_us - cached_us.
+        let amort = if new_us > cached_us {
+            ((new_us + cached_us) / (new_us - cached_us)).ceil() as usize
+        } else {
+            usize::MAX
+        };
+        println!(
+            "{p:>10} {new_us:>14.3} {old_us:>14.3} {cached_us:>14.3} {amort:>12}",
+        );
+    }
+    println!("\n(the paper's point quantified: with O(log p) computation the cache");
+    println!(" saves little; with the old algorithm it was the difference between");
+    println!(" microseconds and tens of microseconds per communicator per rank)");
+}

@@ -1,0 +1,39 @@
+//! Ablation (future work, §4 / ref [15]): flat circulant broadcast vs the
+//! two-level hierarchical decomposition on node×core machines.
+//!
+//! Expectation: flat wins on shallow hierarchies (its rounds are fewer:
+//! one pipeline instead of two in sequence), hierarchical wins as the
+//! inter/intra gap steepens and cores-per-node grow — mapping out where
+//! the paper's "hierarchical versions" become worthwhile.
+
+use circulant_bcast::collectives::hierarchical::{flat_bcast_time, hier_bcast_sim};
+use circulant_bcast::sim::HierarchicalCost;
+
+fn main() {
+    println!("=== Ablation: flat circulant vs two-level hierarchical bcast ===\n");
+    let m = 1 << 20; // 4 MB of MPI_INT
+    let data: Vec<i32> = (0..m as i32).collect();
+
+    println!(
+        "{:>8} {:>8} {:>10} {:>14} {:>14} {:>10}",
+        "nodes", "cores", "steepness", "flat (ms)", "hier (ms)", "hier/flat"
+    );
+    for (nodes, cores) in [(200usize, 4usize), (200, 16), (36, 32), (16, 64)] {
+        for steep in [1.0f64, 4.0, 16.0] {
+            let mut cost = HierarchicalCost::vega(cores);
+            cost.inter.beta *= steep;
+            let flat = flat_bcast_time(nodes, cores, &data, 0, 4, &cost).expect("flat");
+            let hier = hier_bcast_sim(nodes, cores, &data, 0, 0, 4, &cost).expect("hier");
+            println!(
+                "{nodes:>8} {cores:>8} {steep:>9.0}x {:>14.3} {:>14.3} {:>10.2}",
+                flat.time * 1e3,
+                hier.time() * 1e3,
+                hier.time() / flat.time
+            );
+        }
+        println!();
+    }
+    println!("(ratio < 1: the hierarchical decomposition wins — the regime the");
+    println!(" paper defers to future work; ratio > 1: the flat one-level");
+    println!(" pipeline is already the right answer)");
+}

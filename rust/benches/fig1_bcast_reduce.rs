@@ -1,0 +1,85 @@
+//! Figure 1 reproduction: MPI_Bcast and MPI_Reduce, new (circulant
+//! pipelined) vs native (binomial / van-de-Geijn, whichever the tuned
+//! module would pick), on VEGA-like configurations p = 200×1, 200×4 and
+//! 200×128 MPI processes, MPI_INT payloads, F = 70.
+//!
+//! Payload elements are scaled `SCALE:1` with β scaled inversely, so the
+//! simulated times equal the full-size run while the lockstep simulation
+//! stays in memory. We report simulated milliseconds per (config, m);
+//! the paper's claim to reproduce is the *shape*: the new algorithm wins
+//! for mid/large m by 3–4x, and the gap persists at full nodes.
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::baselines::{
+    binomial_bcast_sim, binomial_reduce_sim, vdg_bcast_sim,
+};
+use circulant_bcast::collectives::{bcast_sim, reduce_sim, tuning, SumOp};
+use circulant_bcast::sim::{CostModel, HierarchicalCost, LinearCost};
+
+const SCALE: usize = 1024;
+const ELEM: usize = 4; // MPI_INT
+
+fn scaled_cost(cores: usize) -> HierarchicalCost {
+    let base = HierarchicalCost::vega(cores);
+    HierarchicalCost {
+        cores,
+        intra: LinearCost { alpha: base.intra.alpha, beta: base.intra.beta * SCALE as f64 },
+        inter: LinearCost { alpha: base.inter.alpha, beta: base.inter.beta * SCALE as f64 },
+        nic_share: base.nic_share,
+    }
+}
+
+fn main() {
+    // (label, nodes, cores). The paper's 200x128 = 25600 ranks is heavy
+    // for a lockstep simulation sweep; 200x16 = 3200 preserves the
+    // hierarchy contrast (full-node NIC sharing) at tractable cost. The
+    // 200x1 and 200x4 configs match the paper exactly.
+    let configs = [("200x1", 200usize, 1usize), ("200x4", 200, 4), ("200x16", 200, 16)];
+    // Total message sizes in MPI_INT elements (full-size, pre-scaling).
+    let sizes: [usize; 6] = [1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24];
+
+    println!("=== Figure 1: Bcast + Reduce, new (circulant, F=70) vs native ===");
+    for (label, nodes, cores) in configs {
+        let p = nodes * cores;
+        let cost = scaled_cost(cores);
+        println!("\n--- p = {label} ({p} ranks), hierarchical VEGA-like model ---");
+        println!(
+            "{:>12} {:>6} {:>12} {:>12} {:>8} | {:>12} {:>12} {:>8}",
+            "m (ints)", "n", "bcast new", "bcast nat", "ratio", "red new", "red nat", "ratio"
+        );
+        for &m in &sizes {
+            let ms = (m / SCALE).max(p.min(m));
+            let n = tuning::bcast_blocks_paper(m, p, 70.0).min(ms.max(1));
+            let data: Vec<i32> = (0..ms as i32).collect();
+
+            // --- Bcast: new vs best-native (binomial vs vdG, tuned pick).
+            let new_b = bcast_sim(p, 0, &data, n, ELEM, &cost).expect("bcast");
+            let (bino, _) = binomial_bcast_sim(p, 0, &data, ELEM, &cost).expect("bino");
+            let (vdg, _) = vdg_bcast_sim(p, 0, &data, ELEM, &cost).expect("vdg");
+            let native_b = bino.time.min(vdg.time);
+
+            // --- Reduce: new (reversed schedules) vs binomial reduce.
+            let inputs: Vec<Vec<i32>> = (0..p).map(|_| data.clone()).collect();
+            let new_r =
+                reduce_sim(&inputs, 0, n, Arc::new(SumOp), ELEM, &cost as &dyn CostModel)
+                    .expect("reduce");
+            let (nat_r, _) =
+                binomial_reduce_sim(&inputs, 0, Arc::new(SumOp), ELEM, &cost).expect("binred");
+
+            println!(
+                "{:>12} {:>6} {:>10.3}ms {:>10.3}ms {:>7.2}x | {:>10.3}ms {:>10.3}ms {:>7.2}x",
+                m,
+                n,
+                new_b.stats.time * 1e3,
+                native_b * 1e3,
+                native_b / new_b.stats.time,
+                new_r.stats.time * 1e3,
+                nat_r.time * 1e3,
+                nat_r.time / new_r.stats.time,
+            );
+        }
+    }
+    println!("\npaper: new implementation faster than native OpenMPI 4.1.5 by >4x / >3x");
+    println!("(1 and 4 ppn) and ~3x at full nodes for large m; crossover at small m.");
+}

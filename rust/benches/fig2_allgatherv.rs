@@ -1,0 +1,72 @@
+//! Figure 2 reproduction: irregular all-broadcast (MPI_Allgatherv), new
+//! (circulant, G = 40) vs native (ring), p = 36×32 = 1152 MPI processes,
+//! on the small-cluster cost model, for the paper's three problem types:
+//! regular, irregular ((i mod 3)·m/p) and degenerate (rank 0 has all).
+//!
+//! The headline shapes to reproduce: (a) the new algorithm's time is
+//! nearly independent of the distribution and close to a plain bcast of
+//! the same volume; (b) the native algorithm degenerates by ~two orders
+//! of magnitude on the degenerate problem.
+
+use circulant_bcast::collectives::baselines::ring_allgatherv_sim;
+use circulant_bcast::collectives::{allgatherv_sim, bcast_sim, tuning};
+use circulant_bcast::coordinator::Dist;
+use circulant_bcast::sim::{HierarchicalCost, LinearCost};
+
+const SCALE: usize = 256;
+const ELEM: usize = 4;
+
+fn main() {
+    let nodes = 36usize;
+    let cores = 32usize;
+    let p = nodes * cores;
+    let base = HierarchicalCost::small_cluster(cores);
+    let cost = HierarchicalCost {
+        cores,
+        intra: LinearCost { alpha: base.intra.alpha, beta: base.intra.beta * SCALE as f64 },
+        inter: LinearCost { alpha: base.inter.alpha, beta: base.inter.beta * SCALE as f64 },
+        nic_share: base.nic_share,
+    };
+    let sizes: [usize; 5] = [1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22];
+
+    println!("=== Figure 2: Allgatherv, new (circulant, G=40) vs native (ring) ===");
+    println!("p = {nodes}x{cores} = {p}, small-cluster hierarchical model, MPI_INT\n");
+    println!(
+        "{:>10} {:>12} {:>6} {:>12} {:>12} {:>8} {:>14}",
+        "m (ints)", "dist", "n", "new (ms)", "native(ms)", "ratio", "bcast-ref(ms)"
+    );
+
+    for &m in &sizes {
+        let ms_total = (m / SCALE).max(p);
+        // Reference: a plain broadcast of the same total volume (the
+        // paper's "in the ballpark of MPI_Bcast" claim).
+        let nb = tuning::bcast_blocks_paper(m, p, 70.0).min(ms_total);
+        let ref_data: Vec<i32> = (0..ms_total as i32).collect();
+        let bref = bcast_sim(p, 0, &ref_data, nb, ELEM, &cost).expect("bcast ref");
+
+        for dist in [Dist::Regular, Dist::Irregular, Dist::Degenerate] {
+            let counts = dist.counts(p, ms_total);
+            let inputs: Vec<Vec<i32>> = counts
+                .iter()
+                .enumerate()
+                .map(|(r, &c)| (0..c).map(|i| (r * 31 + i) as i32).collect())
+                .collect();
+            let n = tuning::allgatherv_blocks_paper(m, p, 40.0).min(64).max(1);
+            let new = allgatherv_sim(&inputs, n, ELEM, &cost).expect("new");
+            let (ring, _) = ring_allgatherv_sim(&inputs, ELEM, &cost).expect("ring");
+            println!(
+                "{:>10} {:>12} {:>6} {:>12.3} {:>12.3} {:>7.1}x {:>14.3}",
+                m,
+                format!("{dist:?}"),
+                n,
+                new.stats.time * 1e3,
+                ring.time * 1e3,
+                ring.time / new.stats.time,
+                bref.stats.time * 1e3,
+            );
+        }
+        println!();
+    }
+    println!("paper: native degenerates ~100x on the degenerate problem; the new");
+    println!("implementation is nearly distribution-independent and bcast-like.");
+}

@@ -1,0 +1,457 @@
+//! All-broadcast (`MPI_Allgatherv` / `MPI_Allgather`) — Algorithm 7 of
+//! the paper: `p` simultaneous pipelined broadcasts, one per root, on the
+//! same circulant pattern, completing in the optimal `n - 1 + q` rounds.
+//!
+//! Every rank `r` holds the receive schedule of relative rank
+//! `(r - j) mod p` for each root `j`; in round `k` the blocks for all
+//! roots are packed into a single message (skipping the to-processor's own
+//! root and negative blocks) and unpacked symmetrically — both sides
+//! compute the identical layout from the schedules, so no sizes or indices
+//! are transmitted. Irregular (`v`) inputs just divide each root's count
+//! into `n` roughly equal blocks; ranks contributing nothing are skipped
+//! in packing entirely, which is what makes the degenerate cases fast.
+
+use std::sync::Arc;
+
+use crate::schedule::{Schedule, Skips};
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+
+use super::common::{BlockGeometry, Element, World};
+
+/// The schedule table for all `p` relative ranks, shared by every rank's
+/// state machine (`O(p log p)` once, instead of per rank).
+pub struct ScheduleTable {
+    pub sk: Arc<Skips>,
+    /// `scheds[rel]` = schedules of relative rank `rel`.
+    pub scheds: Vec<Schedule>,
+    /// Blocks per root.
+    pub n: usize,
+    /// Virtual-round offset.
+    pub x: usize,
+}
+
+impl ScheduleTable {
+    pub fn build(world: &World, n: usize) -> Arc<Self> {
+        assert!(n > 0);
+        let sk = world.sk.clone();
+        let p = sk.p();
+        let q = sk.q();
+        let scheds: Vec<Schedule> = (0..p).map(|r| Schedule::compute(&sk, r)).collect();
+        let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
+        Arc::new(ScheduleTable { sk, scheds, n, x })
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.sk.p()
+    }
+
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.sk.q()
+    }
+
+    /// Total rounds `n - 1 + q`.
+    #[inline]
+    pub fn rounds(&self) -> usize {
+        if self.p() == 1 {
+            0
+        } else {
+            self.n - 1 + self.q()
+        }
+    }
+
+    /// Round slot `k` for network round `j`.
+    #[inline]
+    pub fn slot(&self, j: usize) -> usize {
+        (j + self.x) % self.q()
+    }
+
+    /// Phase-advanced schedule value at network round `j` for relative
+    /// rank `rel`: `recv` or `send` entry per `which`.
+    #[inline]
+    fn value_at(&self, rel: usize, j: usize, recv: bool) -> i64 {
+        let q = self.q();
+        let i = j + self.x;
+        let k = i % q;
+        let base = if recv { self.scheds[rel].recv[k] } else { self.scheds[rel].send[k] };
+        // Apply the x-shift and phase advance (see PhasedSchedule docs).
+        let mut v = base - self.x as i64;
+        if k < self.x {
+            v += q as i64;
+        }
+        let i0 = if k >= self.x { k } else { k + q };
+        v + (q * ((i - i0) / q)) as i64
+    }
+
+    /// Receive-block value of relative rank `rel` at network round `j`.
+    #[inline]
+    pub fn recv_at(&self, rel: usize, j: usize) -> i64 {
+        self.value_at(rel, j, true)
+    }
+
+    /// Send-block value of relative rank `rel` at network round `j`.
+    #[inline]
+    pub fn send_at(&self, rel: usize, j: usize) -> i64 {
+        self.value_at(rel, j, false)
+    }
+
+    /// Per-round constants `(k, delta)` such that the phase-advanced
+    /// value for any relative rank is `scheds[rel].{recv,send}[k] + delta`
+    /// — hoists the round arithmetic out of the per-root packing loops
+    /// (which visit up to `p` roots per rank per round).
+    #[inline]
+    pub fn round_params(&self, j: usize) -> (usize, i64) {
+        let q = self.q();
+        let i = j + self.x;
+        let k = i % q;
+        let mut delta = -(self.x as i64);
+        if k < self.x {
+            delta += q as i64;
+        }
+        let i0 = if k >= self.x { k } else { k + q };
+        delta += (q * ((i - i0) / q)) as i64;
+        (k, delta)
+    }
+
+    /// `recv` entry of `rel` given hoisted round params.
+    #[inline]
+    pub fn recv_fast(&self, rel: usize, k: usize, delta: i64) -> i64 {
+        self.scheds[rel].recv[k] + delta
+    }
+
+    /// `send` entry of `rel` given hoisted round params.
+    #[inline]
+    pub fn send_fast(&self, rel: usize, k: usize, delta: i64) -> i64 {
+        self.scheds[rel].send[k] + delta
+    }
+
+    /// Cap a block value to `None` / `Some(block index)`.
+    #[inline]
+    pub fn cap(&self, v: i64) -> Option<usize> {
+        if v < 0 {
+            None
+        } else if v as usize >= self.n {
+            Some(self.n - 1)
+        } else {
+            Some(v as usize)
+        }
+    }
+}
+
+/// Per-rank state machine for Algorithm 7.
+///
+/// Buffers are stored *flat* per root (one `Vec<T>` per root, block
+/// geometry mapping blocks to ranges) with a receive bitmap — `O(p·n)`
+/// bits of bookkeeping instead of `O(p·n)` separate allocations, which is
+/// what makes the Fig. 2 scale (p = 1152) tractable.
+pub struct AllgathervProc<T> {
+    pub rank: usize,
+    table: Arc<ScheduleTable>,
+    /// Element counts per root (kept for introspection).
+    pub counts: Arc<Vec<usize>>,
+    /// Geometry per root (counts[j] split into n blocks).
+    geoms: Vec<BlockGeometry>,
+    /// `bufs[j]`: root `j`'s data, filled in block by block.
+    bufs: Vec<Vec<T>>,
+    /// Bit `j*n + b`: block `b` of root `j` has been received.
+    received: Vec<u64>,
+    /// Roots with a non-zero contribution, in increasing order — the only
+    /// ones pack/unpack ever touch (the paper's "entirely skipped" rule;
+    /// this is what keeps the degenerate distribution O(1) per round
+    /// instead of O(p)).
+    nonempty: Arc<Vec<usize>>,
+}
+
+impl<T: Element> AllgathervProc<T> {
+    /// `own` is this rank's contribution (`counts[rank]` elements).
+    pub fn new(
+        table: Arc<ScheduleTable>,
+        counts: Arc<Vec<usize>>,
+        rank: usize,
+        own: &[T],
+    ) -> Self {
+        let p = table.p();
+        assert_eq!(counts.len(), p);
+        assert_eq!(own.len(), counts[rank]);
+        let n = table.n;
+        let geoms: Vec<BlockGeometry> =
+            counts.iter().map(|&c| BlockGeometry::new(c, n)).collect();
+        let mut bufs: Vec<Vec<T>> =
+            counts.iter().map(|&c| vec![T::default(); c]).collect();
+        bufs[rank].copy_from_slice(own);
+        let nonempty = Arc::new(
+            (0..p).filter(|&j| counts[j] > 0).collect::<Vec<_>>(),
+        );
+        let mut proc_ = AllgathervProc {
+            rank,
+            table,
+            counts,
+            geoms,
+            bufs,
+            received: vec![0u64; (p * n + 63) / 64],
+            nonempty,
+        };
+        for b in 0..n {
+            proc_.mark_received(rank, b);
+        }
+        proc_
+    }
+
+    #[inline]
+    fn has_block(&self, j: usize, b: usize) -> bool {
+        let bit = j * self.table.n + b;
+        self.received[bit / 64] & (1 << (bit % 64)) != 0
+    }
+
+    #[inline]
+    fn mark_received(&mut self, j: usize, b: usize) {
+        let bit = j * self.table.n + b;
+        self.received[bit / 64] |= 1 << (bit % 64);
+    }
+
+    /// Relative rank of `self.rank` w.r.t. root `j` (branch instead of
+    /// division: both operands are < p).
+    #[inline]
+    fn rel(&self, j: usize) -> usize {
+        let t = self.rank + self.table.p() - j;
+        if t >= self.table.p() {
+            t - self.table.p()
+        } else {
+            t
+        }
+    }
+
+    /// True iff this rank receives anything in round `jr` (early-exit).
+    fn receives_in(&self, jr: usize) -> bool {
+        let (k, delta) = self.table.round_params(jr);
+        for &j in self.nonempty.iter() {
+            if j == self.rank {
+                continue;
+            }
+            if let Some(b) = self.table.cap(self.table.recv_fast(self.rel(j), k, delta)) {
+                if self.geoms[j].len(b) > 0 {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Visit the (root, block, len) triples packed for the to-processor
+    /// `t` in round `jr`: for each non-empty root `j != t`, the send value
+    /// of our relative rank — which equals `t`'s receive value.
+    fn for_each_pack(&self, jr: usize, t: usize, mut f: impl FnMut(usize, usize, usize)) {
+        let (k, delta) = self.table.round_params(jr);
+        for &j in self.nonempty.iter() {
+            if j == t {
+                continue; // t is the root of j's broadcast: already has it
+            }
+            if let Some(b) = self.table.cap(self.table.send_fast(self.rel(j), k, delta)) {
+                let len = self.geoms[j].len(b);
+                if len > 0 {
+                    f(j, b, len);
+                }
+            }
+        }
+    }
+
+    /// Reassemble all `p` buffers (must be complete).
+    pub fn into_buffers(self) -> Vec<Vec<T>> {
+        assert!(self.complete(), "rank {}: blocks missing", self.rank);
+        self.bufs
+    }
+
+    pub fn complete(&self) -> bool {
+        (0..self.table.p()).all(|j| {
+            (0..self.table.n)
+                .all(|b| self.geoms[j].len(b) == 0 || self.has_block(j, b))
+        })
+    }
+}
+
+impl<T: Element> RankProc<T> for AllgathervProc<T> {
+    fn send(&mut self, jr: usize) -> Option<Msg<T>> {
+        let p = self.table.p();
+        let k = self.table.slot(jr);
+        let to = (self.rank + self.table.sk.skip(k)) % p;
+        let mut data: Vec<T> = Vec::new();
+        let rank = self.rank;
+        let n = self.table.n;
+        let bufs = &self.bufs;
+        let geoms = &self.geoms;
+        let received = &self.received;
+        self.for_each_pack(jr, to, |j, b, len| {
+            let bit = j * n + b;
+            assert!(
+                received[bit / 64] & (1 << (bit % 64)) != 0,
+                "rank {rank}: scheduled to pack root {j} block {b} in round {jr} \
+                 but it has not been received"
+            );
+            let (off, _) = geoms[j].range(b);
+            data.extend_from_slice(&bufs[j][off..off + len]);
+        });
+        if data.is_empty() {
+            return None;
+        }
+        Some(Msg { to, data })
+    }
+
+    fn expects(&self, jr: usize) -> Option<usize> {
+        if !self.receives_in(jr) {
+            return None;
+        }
+        let p = self.table.p();
+        let k = self.table.slot(jr);
+        Some((self.rank + p - self.table.sk.skip(k)) % p)
+    }
+
+    fn recv(&mut self, jr: usize, _from: usize, data: Vec<T>) {
+        let rank = self.rank;
+        let n = self.table.n;
+        let table = self.table.clone();
+        let nonempty = self.nonempty.clone();
+        let (k, delta) = table.round_params(jr);
+        let mut off = 0usize;
+        for &j in nonempty.iter() {
+            if j == rank {
+                continue;
+            }
+            let t = rank + table.p() - j;
+            let rel = if t >= table.p() { t - table.p() } else { t };
+            if let Some(b) = table.cap(table.recv_fast(rel, k, delta)) {
+                let len = self.geoms[j].len(b);
+                if len > 0 {
+                    let (boff, _) = self.geoms[j].range(b);
+                    self.bufs[j][boff..boff + len].copy_from_slice(&data[off..off + len]);
+                    let bit = j * n + b;
+                    self.received[bit / 64] |= 1 << (bit % 64);
+                    off += len;
+                }
+            }
+        }
+        assert_eq!(off, data.len(), "rank {rank} round {jr}: payload size mismatch");
+    }
+
+    fn rounds(&self) -> usize {
+        self.table.rounds()
+    }
+}
+
+/// Result of a simulated all-broadcast.
+pub struct AllgathervResult<T> {
+    pub stats: RunStats,
+    /// `buffers[r][j]` = root `j`'s data as received by rank `r`.
+    pub buffers: Vec<Vec<Vec<T>>>,
+}
+
+/// Run the full irregular all-broadcast: `inputs[r]` is rank `r`'s data
+/// (arbitrary per-rank lengths), divided into `n` blocks each.
+pub fn allgatherv_sim<T: Element>(
+    inputs: &[Vec<T>],
+    n: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<AllgathervResult<T>, SimError> {
+    let p = inputs.len();
+    let world = World::new(p);
+    let table = ScheduleTable::build(&world, n);
+    let counts = Arc::new(inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
+    let mut procs: Vec<AllgathervProc<T>> = (0..p)
+        .map(|r| AllgathervProc::new(table.clone(), counts.clone(), r, &inputs[r]))
+        .collect();
+    let mut net = Network::new(p);
+    let stats = net.run(&mut procs, elem_bytes, cost)?;
+    let buffers = procs.into_iter().map(|pr| pr.into_buffers()).collect();
+    Ok(AllgathervResult { stats, buffers })
+}
+
+/// Regular all-gather: every rank contributes the same number of elements.
+pub fn allgather_sim<T: Element>(
+    inputs: &[Vec<T>],
+    n: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<AllgathervResult<T>, SimError> {
+    let len = inputs[0].len();
+    assert!(inputs.iter().all(|v| v.len() == len), "allgather requires equal counts");
+    allgatherv_sim(inputs, n, elem_bytes, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::UnitCost;
+
+    fn check_allgatherv(counts: &[usize], n: usize) {
+        let p = counts.len();
+        let inputs: Vec<Vec<i32>> = (0..p)
+            .map(|r| (0..counts[r]).map(|i| (r * 10000 + i) as i32).collect())
+            .collect();
+        let res = allgatherv_sim(&inputs, n, 4, &UnitCost).unwrap();
+        for r in 0..p {
+            for j in 0..p {
+                assert_eq!(
+                    res.buffers[r][j], inputs[j],
+                    "rank {r} root {j} counts={counts:?} n={n}"
+                );
+            }
+        }
+        if p > 1 {
+            let q = crate::schedule::ceil_log2(p);
+            assert_eq!(res.stats.rounds, n - 1 + q);
+        }
+    }
+
+    #[test]
+    fn allgather_regular_grid() {
+        for p in 1..=16 {
+            for n in [1usize, 2, 4, 7] {
+                check_allgatherv(&vec![24; p], n);
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_irregular_mod3() {
+        // The paper's "irregular" problem: rank i contributes
+        // (i mod 3) * m/p elements.
+        for p in [7usize, 9, 12, 17] {
+            let base = 15;
+            let counts: Vec<usize> = (0..p).map(|i| (i % 3) * base).collect();
+            for n in [1usize, 3, 5] {
+                check_allgatherv(&counts, n);
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_degenerate() {
+        // The paper's "degenerate" problem: one rank has everything.
+        for p in [5usize, 9, 17] {
+            for owner in [0usize, 1, p - 1] {
+                let mut counts = vec![0usize; p];
+                counts[owner] = 120;
+                for n in [1usize, 4, 9] {
+                    check_allgatherv(&counts, n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_wild_counts() {
+        check_allgatherv(&[3, 0, 17, 1, 0, 0, 64, 2, 9], 4);
+        check_allgatherv(&[1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1], 2);
+        check_allgatherv(&[100, 1], 5);
+    }
+
+    #[test]
+    fn allgatherv_paper_17(){
+        let counts: Vec<usize> = (0..17).map(|i| (i * 13) % 40).collect();
+        for n in [1usize, 2, 5, 10] {
+            check_allgatherv(&counts, n);
+        }
+    }
+}

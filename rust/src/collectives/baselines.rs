@@ -1,0 +1,693 @@
+//! Classical baseline collectives — the "native MPI" comparators of the
+//! paper's experiments (Figures 1 and 2).
+//!
+//! These are the algorithms an MPI library's tuned module actually picks
+//! from: binomial-tree broadcast/reduce (latency-optimal, bandwidth-poor),
+//! van de Geijn scatter+ring-allgather broadcast (bandwidth 2mβ), and
+//! ring all-gather(v)/reduce-scatter (bandwidth-optimal, latency `p-1`
+//! rounds). All run on the same simulator and cost models as the
+//! circulant-schedule collectives, so the comparisons isolate algorithm
+//! structure.
+
+use std::sync::Arc;
+
+use crate::schedule::ceil_log2;
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+
+use super::common::{BlockGeometry, Element, ReduceOp};
+
+// ---------------------------------------------------------------------
+// Binomial-tree broadcast
+// ---------------------------------------------------------------------
+
+/// Binomial-tree broadcast: `q` rounds, the full `m`-element buffer on
+/// every edge. Latency-optimal for `n = 1`; the classical small-message
+/// `MPI_Bcast` algorithm.
+pub struct BinomialBcastProc<T> {
+    rank: usize,
+    root: usize,
+    p: usize,
+    q: usize,
+    buf: Option<Vec<T>>,
+}
+
+impl<T: Element> BinomialBcastProc<T> {
+    pub fn new(p: usize, rank: usize, root: usize, data: Option<&[T]>) -> Self {
+        let q = ceil_log2(p);
+        BinomialBcastProc { rank, root, p, q, buf: data.map(|d| d.to_vec()) }
+    }
+
+    #[inline]
+    fn vrel(&self) -> usize {
+        (self.rank + self.p - self.root % self.p) % self.p
+    }
+
+    pub fn into_buffer(self) -> Vec<T> {
+        self.buf.unwrap_or_else(|| panic!("rank {}: never received", self.rank))
+    }
+}
+
+impl<T: Element> RankProc<T> for BinomialBcastProc<T> {
+    fn send(&mut self, t: usize) -> Option<Msg<T>> {
+        let v = self.vrel();
+        // Round t: every rank v < 2^t sends to v + 2^t (if it exists).
+        if v < (1usize << t) && v + (1 << t) < self.p {
+            let to = (self.rank + (1 << t)) % self.p;
+            let data = self.buf.as_ref().expect("binomial: sending before receiving").clone();
+            Some(Msg { to, data })
+        } else {
+            None
+        }
+    }
+
+    fn expects(&self, t: usize) -> Option<usize> {
+        let v = self.vrel();
+        if v >= (1 << t) && v < (1 << (t + 1)) {
+            Some((self.rank + self.p - (1 << t)) % self.p)
+        } else {
+            None
+        }
+    }
+
+    fn recv(&mut self, _t: usize, _from: usize, data: Vec<T>) {
+        self.buf = Some(data);
+    }
+
+    fn rounds(&self) -> usize {
+        if self.p == 1 {
+            0
+        } else {
+            self.q
+        }
+    }
+}
+
+/// Simulate a binomial-tree broadcast.
+pub fn binomial_bcast_sim<T: Element>(
+    p: usize,
+    root: usize,
+    data: &[T],
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
+    let mut procs: Vec<BinomialBcastProc<T>> = (0..p)
+        .map(|r| BinomialBcastProc::new(p, r, root, if r == root { Some(data) } else { None }))
+        .collect();
+    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
+    Ok((stats, procs.into_iter().map(|pr| pr.into_buffer()).collect()))
+}
+
+// ---------------------------------------------------------------------
+// Binomial-tree reduction
+// ---------------------------------------------------------------------
+
+/// Binomial-tree reduction: the reversed binomial broadcast, full vector
+/// per edge, combine at each parent. The classical `MPI_Reduce`.
+pub struct BinomialReduceProc<T> {
+    rank: usize,
+    root: usize,
+    p: usize,
+    q: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    buf: Vec<T>,
+}
+
+impl<T: Element> BinomialReduceProc<T> {
+    pub fn new(p: usize, rank: usize, root: usize, data: &[T], op: Arc<dyn ReduceOp<T>>) -> Self {
+        BinomialReduceProc { rank, root, p, q: ceil_log2(p), op, buf: data.to_vec() }
+    }
+
+    #[inline]
+    fn vrel(&self) -> usize {
+        (self.rank + self.p - self.root % self.p) % self.p
+    }
+
+    /// Mirrored binomial round for network round `j`.
+    #[inline]
+    fn t(&self, j: usize) -> usize {
+        self.q - 1 - j
+    }
+
+    pub fn into_buffer(self) -> Vec<T> {
+        self.buf
+    }
+}
+
+impl<T: Element> RankProc<T> for BinomialReduceProc<T> {
+    fn send(&mut self, j: usize) -> Option<Msg<T>> {
+        let t = self.t(j);
+        let v = self.vrel();
+        if v >= (1 << t) && v < (1 << (t + 1)) {
+            let to = (self.rank + self.p - (1 << t)) % self.p;
+            Some(Msg { to, data: self.buf.clone() })
+        } else {
+            None
+        }
+    }
+
+    fn expects(&self, j: usize) -> Option<usize> {
+        let t = self.t(j);
+        let v = self.vrel();
+        if v < (1 << t) && v + (1 << t) < self.p {
+            Some((self.rank + (1 << t)) % self.p)
+        } else {
+            None
+        }
+    }
+
+    fn recv(&mut self, _j: usize, _from: usize, data: Vec<T>) {
+        self.op.combine(&mut self.buf, &data);
+    }
+
+    fn rounds(&self) -> usize {
+        if self.p == 1 {
+            0
+        } else {
+            self.q
+        }
+    }
+}
+
+/// Simulate a binomial-tree reduction; returns the root's buffer.
+pub fn binomial_reduce_sim<T: Element>(
+    inputs: &[Vec<T>],
+    root: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<T>), SimError> {
+    let p = inputs.len();
+    let mut procs: Vec<BinomialReduceProc<T>> = (0..p)
+        .map(|r| BinomialReduceProc::new(p, r, root, &inputs[r], op.clone()))
+        .collect();
+    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
+    Ok((stats, procs.into_iter().nth(root).unwrap().into_buffer()))
+}
+
+// ---------------------------------------------------------------------
+// van de Geijn broadcast: binomial scatter + ring all-gather
+// ---------------------------------------------------------------------
+
+/// Large-message broadcast: binomial-tree scatter of `p` chunks followed
+/// by a ring all-gather — bandwidth `≈ 2mβ`, `q + p - 1` rounds. The
+/// classical large-message `MPI_Bcast` (what OpenMPI's tuned module
+/// selects for big buffers).
+pub struct VdgBcastProc<T> {
+    rank: usize,
+    root: usize,
+    p: usize,
+    q: usize,
+    geom: BlockGeometry,
+    /// chunk index -> data (filled progressively).
+    chunks: Vec<Option<Vec<T>>>,
+}
+
+impl<T: Element> VdgBcastProc<T> {
+    pub fn new(p: usize, rank: usize, root: usize, m: usize, data: Option<&[T]>) -> Self {
+        let q = ceil_log2(p);
+        let geom = BlockGeometry::new(m, p);
+        let chunks = if let Some(buf) = data {
+            assert_eq!(buf.len(), m);
+            (0..p)
+                .map(|c| {
+                    let (off, len) = geom.range(c);
+                    Some(buf[off..off + len].to_vec())
+                })
+                .collect()
+        } else {
+            vec![None; p]
+        };
+        VdgBcastProc { rank, root, p, q, geom, chunks }
+    }
+
+    #[inline]
+    fn vrel(&self) -> usize {
+        (self.rank + self.p - self.root % self.p) % self.p
+    }
+
+    #[inline]
+    fn abs(&self, vrel: usize) -> usize {
+        (vrel + self.root) % self.p
+    }
+
+    /// Chunk range [lo, hi) sent from parent `v` to child `v + half` in
+    /// scatter round `t` (levels of size `2^(q-t)`), clipped to `p`.
+    fn scatter_edge(&self, t: usize, v: usize) -> Option<(usize, usize, usize)> {
+        let level = 1usize << (self.q - t); // subtree size at this round
+        let half = level >> 1;
+        if half == 0 || v % level != 0 {
+            return None;
+        }
+        let child = v + half;
+        if child >= self.p {
+            return None;
+        }
+        let hi = (v + level).min(self.p);
+        Some((child, child, hi)) // (child vrel, chunk lo, chunk hi)
+    }
+
+    fn chunk_payload(&self, lo: usize, hi: usize) -> Vec<T> {
+        let mut data = Vec::new();
+        for c in lo..hi {
+            if self.geom.len(c) == 0 {
+                continue;
+            }
+            let blk = self.chunks[c]
+                .as_ref()
+                .unwrap_or_else(|| panic!("rank {}: chunk {c} missing for scatter", self.rank));
+            data.extend_from_slice(blk);
+        }
+        data
+    }
+
+    pub fn into_buffer(self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.geom.m);
+        for (c, blk) in self.chunks.into_iter().enumerate() {
+            if self.geom.len(c) == 0 {
+                continue;
+            }
+            out.extend_from_slice(
+                &blk.unwrap_or_else(|| panic!("rank {}: chunk {c} never arrived", self.rank)),
+            );
+        }
+        out
+    }
+}
+
+impl<T: Element> RankProc<T> for VdgBcastProc<T> {
+    fn send(&mut self, round: usize) -> Option<Msg<T>> {
+        let v = self.vrel();
+        if round < self.q {
+            // Scatter phase.
+            let (child, lo, hi) = self.scatter_edge(round, v)?;
+            // Only send if we already hold the range (parents do).
+            let data = self.chunk_payload(lo, hi);
+            if data.is_empty() {
+                return None;
+            }
+            Some(Msg { to: self.abs(child), data })
+        } else {
+            // Ring phase: round u, send chunk (v - u) mod p to v+1.
+            let u = round - self.q;
+            let c = (v + self.p - u) % self.p;
+            if self.geom.len(c) == 0 {
+                return None;
+            }
+            let data = self.chunks[c]
+                .as_ref()
+                .unwrap_or_else(|| panic!("rank {}: ring chunk {c} missing", self.rank))
+                .clone();
+            Some(Msg { to: self.abs((v + 1) % self.p), data })
+        }
+    }
+
+    fn expects(&self, round: usize) -> Option<usize> {
+        let v = self.vrel();
+        if round < self.q {
+            let level = 1usize << (self.q - round);
+            let half = level >> 1;
+            if half != 0 && v % level == half {
+                // We are the child of v - half this round.
+                let lo = v;
+                let hi = (v - half + level).min(self.p);
+                let len: usize = (lo..hi).map(|c| self.geom.len(c)).sum();
+                if len > 0 {
+                    return Some(self.abs(v - half));
+                }
+            }
+            None
+        } else {
+            let u = round - self.q;
+            let prev = (v + self.p - 1) % self.p;
+            let c = (prev + self.p - u) % self.p;
+            if self.geom.len(c) == 0 {
+                None
+            } else {
+                Some(self.abs(prev))
+            }
+        }
+    }
+
+    fn recv(&mut self, round: usize, _from: usize, data: Vec<T>) {
+        let v = self.vrel();
+        if round < self.q {
+            let level = 1usize << (self.q - round);
+            let half = level >> 1;
+            debug_assert_eq!(v % level, half);
+            let lo = v;
+            let hi = (v - half + level).min(self.p);
+            let mut off = 0usize;
+            for c in lo..hi {
+                let len = self.geom.len(c);
+                if len == 0 {
+                    continue;
+                }
+                self.chunks[c] = Some(data[off..off + len].to_vec());
+                off += len;
+            }
+            debug_assert_eq!(off, data.len());
+        } else {
+            let u = round - self.q;
+            let prev = (v + self.p - 1) % self.p;
+            let c = (prev + self.p - u) % self.p;
+            self.chunks[c] = Some(data);
+        }
+    }
+
+    fn rounds(&self) -> usize {
+        if self.p == 1 {
+            0
+        } else {
+            self.q + self.p - 1
+        }
+    }
+}
+
+/// Simulate a van de Geijn (scatter + ring all-gather) broadcast.
+pub fn vdg_bcast_sim<T: Element>(
+    p: usize,
+    root: usize,
+    data: &[T],
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
+    let m = data.len();
+    let mut procs: Vec<VdgBcastProc<T>> = (0..p)
+        .map(|r| VdgBcastProc::new(p, r, root, m, if r == root { Some(data) } else { None }))
+        .collect();
+    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
+    Ok((stats, procs.into_iter().map(|pr| pr.into_buffer()).collect()))
+}
+
+// ---------------------------------------------------------------------
+// Ring all-gather(v)
+// ---------------------------------------------------------------------
+
+/// Ring all-gather(v): `p - 1` rounds; rank `r` forwards chunk
+/// `(r - u) mod p` to `r + 1` in round `u`. Bandwidth-optimal for regular
+/// inputs; for the degenerate distribution every round carries the one big
+/// chunk — the pathology the paper's Fig. 2 exposes in native libraries.
+pub struct RingAllgathervProc<T> {
+    rank: usize,
+    p: usize,
+    counts: Arc<Vec<usize>>,
+    chunks: Vec<Option<Vec<T>>>,
+}
+
+impl<T: Element> RingAllgathervProc<T> {
+    pub fn new(p: usize, rank: usize, counts: Arc<Vec<usize>>, own: &[T]) -> Self {
+        assert_eq!(own.len(), counts[rank]);
+        let mut chunks = vec![None; p];
+        chunks[rank] = Some(own.to_vec());
+        RingAllgathervProc { rank, p, counts, chunks }
+    }
+
+    pub fn into_buffers(self) -> Vec<Vec<T>> {
+        self.chunks
+            .into_iter()
+            .enumerate()
+            .map(|(j, c)| {
+                if self.counts[j] == 0 {
+                    Vec::new()
+                } else {
+                    c.unwrap_or_else(|| panic!("rank {}: chunk {j} never arrived", self.rank))
+                }
+            })
+            .collect()
+    }
+}
+
+impl<T: Element> RankProc<T> for RingAllgathervProc<T> {
+    fn send(&mut self, u: usize) -> Option<Msg<T>> {
+        let c = (self.rank + self.p - u) % self.p;
+        if self.counts[c] == 0 {
+            return None;
+        }
+        let data = self.chunks[c]
+            .as_ref()
+            .unwrap_or_else(|| panic!("rank {}: ring chunk {c} missing in round {u}", self.rank))
+            .clone();
+        Some(Msg { to: (self.rank + 1) % self.p, data })
+    }
+
+    fn expects(&self, u: usize) -> Option<usize> {
+        let prev = (self.rank + self.p - 1) % self.p;
+        let c = (prev + self.p - u) % self.p;
+        if self.counts[c] == 0 {
+            None
+        } else {
+            Some(prev)
+        }
+    }
+
+    fn recv(&mut self, u: usize, _from: usize, data: Vec<T>) {
+        let prev = (self.rank + self.p - 1) % self.p;
+        let c = (prev + self.p - u) % self.p;
+        self.chunks[c] = Some(data);
+    }
+
+    fn rounds(&self) -> usize {
+        if self.p == 1 {
+            0
+        } else {
+            self.p - 1
+        }
+    }
+}
+
+/// Simulate a ring all-gatherv.
+pub fn ring_allgatherv_sim<T: Element>(
+    inputs: &[Vec<T>],
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<Vec<Vec<T>>>), SimError> {
+    let p = inputs.len();
+    let counts = Arc::new(inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
+    let mut procs: Vec<RingAllgathervProc<T>> = (0..p)
+        .map(|r| RingAllgathervProc::new(p, r, counts.clone(), &inputs[r]))
+        .collect();
+    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
+    Ok((stats, procs.into_iter().map(|pr| pr.into_buffers()).collect()))
+}
+
+// ---------------------------------------------------------------------
+// Ring reduce-scatter (bucket algorithm)
+// ---------------------------------------------------------------------
+
+/// Ring reduce-scatter: `p - 1` rounds; each chunk travels the ring
+/// accumulating contributions and ends at its owner. The classical
+/// algorithm of [7, 18] the paper contrasts with.
+pub struct RingReduceScatterProc<T> {
+    rank: usize,
+    p: usize,
+    counts: Arc<Vec<usize>>,
+    op: Arc<dyn ReduceOp<T>>,
+    /// Per-destination partials (own contributions, accumulated in place).
+    partial: Vec<Vec<T>>,
+}
+
+impl<T: Element> RingReduceScatterProc<T> {
+    pub fn new(
+        p: usize,
+        rank: usize,
+        counts: Arc<Vec<usize>>,
+        input: &[T],
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Self {
+        let total: usize = counts.iter().sum();
+        assert_eq!(input.len(), total);
+        let mut partial = Vec::with_capacity(p);
+        let mut off = 0usize;
+        for j in 0..p {
+            partial.push(input[off..off + counts[j]].to_vec());
+            off += counts[j];
+        }
+        RingReduceScatterProc { rank, p, counts, op, partial }
+    }
+
+    /// Chunk this rank forwards in round `u`: `(rank - 1 - u) mod p`.
+    #[inline]
+    fn chunk_out(&self, u: usize) -> usize {
+        (self.rank + 2 * self.p - 1 - u) % self.p
+    }
+
+    pub fn into_chunk(self) -> Vec<T> {
+        let r = self.rank;
+        self.partial.into_iter().nth(r).unwrap()
+    }
+}
+
+impl<T: Element> RankProc<T> for RingReduceScatterProc<T> {
+    fn send(&mut self, u: usize) -> Option<Msg<T>> {
+        let c = self.chunk_out(u);
+        if self.counts[c] == 0 {
+            return None;
+        }
+        Some(Msg { to: (self.rank + 1) % self.p, data: self.partial[c].clone() })
+    }
+
+    fn expects(&self, u: usize) -> Option<usize> {
+        let prev = (self.rank + self.p - 1) % self.p;
+        let c = (prev + 2 * self.p - 1 - u) % self.p;
+        if self.counts[c] == 0 {
+            None
+        } else {
+            Some(prev)
+        }
+    }
+
+    fn recv(&mut self, u: usize, _from: usize, data: Vec<T>) {
+        let prev = (self.rank + self.p - 1) % self.p;
+        let c = (prev + 2 * self.p - 1 - u) % self.p;
+        self.op.combine(&mut self.partial[c], &data);
+    }
+
+    fn rounds(&self) -> usize {
+        if self.p == 1 {
+            0
+        } else {
+            self.p - 1
+        }
+    }
+}
+
+/// Simulate a ring reduce-scatter.
+pub fn ring_reduce_scatter_sim<T: Element>(
+    inputs: &[Vec<T>],
+    counts: &[usize],
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
+    let p = inputs.len();
+    let counts = Arc::new(counts.to_vec());
+    let mut procs: Vec<RingReduceScatterProc<T>> = (0..p)
+        .map(|r| RingReduceScatterProc::new(p, r, counts.clone(), &inputs[r], op.clone()))
+        .collect();
+    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
+    Ok((stats, procs.into_iter().map(|pr| pr.into_chunk()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::sim::cost::UnitCost;
+
+    #[test]
+    fn binomial_bcast_all_p() {
+        for p in 1..=33 {
+            for root in [0, p / 2, p - 1] {
+                let data: Vec<u32> = (0..50).collect();
+                let (stats, bufs) = binomial_bcast_sim(p, root, &data, 4, &UnitCost).unwrap();
+                for b in &bufs {
+                    assert_eq!(b, &data, "p={p} root={root}");
+                }
+                if p > 1 {
+                    assert_eq!(stats.rounds, ceil_log2(p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_reduce_all_p() {
+        for p in 1..=33usize {
+            let m = 20;
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..m).map(|i| (r + i) as i64).collect()).collect();
+            let expect: Vec<i64> =
+                (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+            for root in [0, p - 1] {
+                let (_, buf) =
+                    binomial_reduce_sim(&inputs, root, Arc::new(SumOp), 8, &UnitCost).unwrap();
+                assert_eq!(buf, expect, "p={p} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn vdg_bcast_all_p() {
+        for p in 1..=33 {
+            for root in [0, p / 3] {
+                let data: Vec<u32> = (0..97).map(|i| i * 3 + 1).collect();
+                let (stats, bufs) = vdg_bcast_sim(p, root, &data, 4, &UnitCost).unwrap();
+                for b in &bufs {
+                    assert_eq!(b, &data, "p={p} root={root}");
+                }
+                if p > 1 {
+                    assert_eq!(stats.rounds, ceil_log2(p) + p - 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vdg_bandwidth_half_of_binomial() {
+        // For large m, vdG moves ~2m per rank vs binomial's ~q*m total
+        // bottleneck; check total bytes: binomial = (p-1)*m, vdg < 2*m*p.
+        let p = 16;
+        let data: Vec<u32> = (0..4096).collect();
+        let (b_stats, _) = binomial_bcast_sim(p, 0, &data, 4, &UnitCost).unwrap();
+        let (v_stats, _) = vdg_bcast_sim(p, 0, &data, 4, &UnitCost).unwrap();
+        assert_eq!(b_stats.bytes, (p - 1) * 4096 * 4);
+        assert!(v_stats.bytes < 2 * 4096 * 4 * p);
+        // The real win: max bytes through any single rank.
+        assert!(v_stats.max_rank_bytes < b_stats.max_rank_bytes);
+    }
+
+    #[test]
+    fn ring_allgatherv_regular_and_irregular() {
+        for p in [2usize, 5, 9, 16] {
+            for style in 0..3 {
+                let counts: Vec<usize> = (0..p)
+                    .map(|i| match style {
+                        0 => 12,
+                        1 => (i % 3) * 6,
+                        _ => {
+                            if i == 0 {
+                                48
+                            } else {
+                                0
+                            }
+                        }
+                    })
+                    .collect();
+                let inputs: Vec<Vec<i32>> = (0..p)
+                    .map(|r| (0..counts[r]).map(|i| (r * 100 + i) as i32).collect())
+                    .collect();
+                let (stats, bufs) = ring_allgatherv_sim(&inputs, 4, &UnitCost).unwrap();
+                for r in 0..p {
+                    for j in 0..p {
+                        assert_eq!(bufs[r][j], inputs[j], "p={p} style={style} r={r} j={j}");
+                    }
+                }
+                if p > 1 {
+                    assert_eq!(stats.rounds, p - 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_reduce_scatter_correct() {
+        for p in [2usize, 5, 9, 16] {
+            let counts: Vec<usize> = (0..p).map(|i| 4 + (i % 3)).collect();
+            let total: usize = counts.iter().sum();
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..total).map(|i| ((r + 1) * (i + 3)) as i64).collect())
+                .collect();
+            let sums: Vec<i64> =
+                (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+            let (_, chunks) =
+                ring_reduce_scatter_sim(&inputs, &counts, Arc::new(SumOp), 8, &UnitCost)
+                    .unwrap();
+            let mut off = 0;
+            for r in 0..p {
+                assert_eq!(chunks[r], sums[off..off + counts[r]].to_vec(), "p={p} r={r}");
+                off += counts[r];
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Pipelined `n`-block broadcast on the circulant graph — Algorithm 1 of
+//! the paper, the round-optimal `MPI_Bcast`.
+//!
+//! The root's `m`-element buffer is divided into `n` roughly equal blocks;
+//! the collective completes in the optimal `n - 1 + ceil(log2 p)` rounds.
+//! All processors run the *same* symmetric communication pattern; which
+//! block flows on which edge in which round is fully determined by the
+//! O(log p)-computed send/receive schedules — no metadata is communicated.
+
+use crate::schedule::Schedule;
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+
+use super::common::{BlockGeometry, Element, PhasedSchedule, World};
+
+/// Per-rank state machine for Algorithm 1.
+pub struct BcastProc<T> {
+    /// Absolute rank.
+    pub rank: usize,
+    /// The broadcast root (kept for introspection/debug output).
+    pub root: usize,
+    ps: PhasedSchedule,
+    geom: BlockGeometry,
+    /// `blocks[b]` is `Some(data)` once block `b` is known. The root
+    /// starts with all blocks.
+    blocks: Vec<Option<Vec<T>>>,
+}
+
+impl<T: Element> BcastProc<T> {
+    /// Build rank `rank`'s state machine. `data` must be `Some(buffer)` of
+    /// `geom.m` elements at the root, `None` elsewhere.
+    pub fn new(
+        world: &World,
+        rank: usize,
+        root: usize,
+        geom: BlockGeometry,
+        data: Option<&[T]>,
+    ) -> Self {
+        let ps = super::common::phased_for(&world.sk, rank, root, geom.n);
+        let blocks = if rank == root {
+            let buf = data.expect("root must supply the broadcast buffer");
+            assert_eq!(buf.len(), geom.m);
+            (0..geom.n)
+                .map(|b| {
+                    let (off, len) = geom.range(b);
+                    Some(buf[off..off + len].to_vec())
+                })
+                .collect()
+        } else {
+            assert!(data.is_none(), "non-root ranks start without data");
+            vec![None; geom.n]
+        };
+        BcastProc { rank, root, ps, geom, blocks }
+    }
+
+    /// Reassemble the received buffer (all blocks must have arrived).
+    pub fn into_buffer(self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.geom.m);
+        for (b, blk) in self.blocks.into_iter().enumerate() {
+            let data = blk.unwrap_or_else(|| {
+                panic!("rank {}: block {b} never received", self.rank)
+            });
+            debug_assert_eq!(data.len(), self.geom.len(b));
+            out.extend_from_slice(&data);
+        }
+        out
+    }
+
+    /// True iff every block has been received.
+    pub fn complete(&self) -> bool {
+        self.blocks.iter().all(|b| b.is_some())
+    }
+
+    #[inline]
+    fn p(&self) -> usize {
+        self.ps.p
+    }
+}
+
+impl<T: Element> RankProc<T> for BcastProc<T> {
+    fn send(&mut self, round: usize) -> Option<Msg<T>> {
+        let k = self.ps.slot(round);
+        let t_rel = (self.ps.rel + self.ps.skip(k)) % self.p();
+        if t_rel == 0 {
+            // Never send to the root (it has everything).
+            return None;
+        }
+        let b = self.ps.cap(self.ps.send_at(round))?;
+        let to = (self.rank + self.ps.skip(k)) % self.p();
+        let data = self.blocks[b]
+            .as_ref()
+            .unwrap_or_else(|| {
+                panic!(
+                    "rank {} (rel {}): scheduled to send block {b} in round {round} \
+                     but it has not been received — schedule violation",
+                    self.rank, self.ps.rel
+                )
+            })
+            .clone();
+        Some(Msg { to, data })
+    }
+
+    fn expects(&self, round: usize) -> Option<usize> {
+        if self.ps.rel == 0 {
+            return None; // the root receives nothing
+        }
+        self.ps.cap(self.ps.recv_at(round))?;
+        let k = self.ps.slot(round);
+        Some((self.rank + self.p() - self.ps.skip(k)) % self.p())
+    }
+
+    fn recv(&mut self, round: usize, _from: usize, data: Vec<T>) {
+        let b = self
+            .ps
+            .cap(self.ps.recv_at(round))
+            .expect("recv called in a round with no scheduled receive");
+        debug_assert_eq!(data.len(), self.geom.len(b), "rank {} round {round}", self.rank);
+        self.blocks[b] = Some(data);
+    }
+
+    fn rounds(&self) -> usize {
+        self.ps.rounds()
+    }
+}
+
+/// Result of a simulated broadcast.
+pub struct BcastResult<T> {
+    pub stats: RunStats,
+    pub buffers: Vec<Vec<T>>,
+}
+
+impl<T> BcastResult<T> {
+    pub fn all_received(&self) -> bool {
+        !self.buffers.is_empty()
+    }
+}
+
+/// Run a full broadcast of `data` from `root` over `p` simulated ranks
+/// with `n` blocks, validating the machine model; returns per-rank final
+/// buffers and run statistics.
+pub fn bcast_sim<T: Element>(
+    p: usize,
+    root: usize,
+    data: &[T],
+    n: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<BcastResult<T>, SimError> {
+    let world = World::new(p);
+    let geom = BlockGeometry::new(data.len(), n);
+    let mut procs: Vec<BcastProc<T>> = (0..p)
+        .map(|r| BcastProc::new(&world, r, root, geom, if r == root { Some(data) } else { None }))
+        .collect();
+    let mut net = Network::new(p);
+    let stats = net.run(&mut procs, elem_bytes, cost)?;
+    let buffers = procs.into_iter().map(|pr| pr.into_buffer()).collect();
+    Ok(BcastResult { stats, buffers })
+}
+
+/// Build the full set of rank procs (for the threaded runtime or custom
+/// drivers).
+pub fn bcast_procs<T: Element>(
+    p: usize,
+    root: usize,
+    data: &[T],
+    n: usize,
+) -> Vec<BcastProc<T>> {
+    let world = World::new(p);
+    let geom = BlockGeometry::new(data.len(), n);
+    (0..p)
+        .map(|r| BcastProc::new(&world, r, root, geom, if r == root { Some(data) } else { None }))
+        .collect()
+}
+
+/// Convenience: schedule objects for every rank (used by inspection tools).
+pub fn all_schedules(world: &World) -> Vec<Schedule> {
+    (0..world.p()).map(|r| Schedule::compute(&world.sk, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::UnitCost;
+
+    fn check_bcast(p: usize, root: usize, m: usize, n: usize) {
+        let data: Vec<u32> = (0..m as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let res = bcast_sim(p, root, &data, n, 4, &UnitCost).unwrap();
+        for (r, buf) in res.buffers.iter().enumerate() {
+            assert_eq!(buf, &data, "p={p} root={root} m={m} n={n} rank={r}");
+        }
+        // Round optimality: n - 1 + ceil(log2 p) rounds.
+        if p > 1 {
+            let q = crate::schedule::ceil_log2(p);
+            assert_eq!(res.stats.rounds, n - 1 + q, "p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn bcast_small_grid() {
+        for p in 1..=20 {
+            for n in [1usize, 2, 3, 5, 8] {
+                check_bcast(p, 0, 64, n);
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_nonzero_roots() {
+        for p in [5usize, 9, 17] {
+            for root in 0..p {
+                check_bcast(p, root, 33, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_paper_sizes() {
+        check_bcast(17, 0, 1000, 13);
+        check_bcast(9, 0, 1000, 7);
+        check_bcast(18, 0, 1000, 10);
+    }
+
+    #[test]
+    fn bcast_n_multiple_of_q() {
+        // x = 0 cases and x > 0 cases around multiples of q.
+        for p in [9usize, 17] {
+            let q = crate::schedule::ceil_log2(p);
+            for n in [q, q + 1, 2 * q, 2 * q + 1, 3 * q - 1] {
+                check_bcast(p, 0, 128, n);
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_m_smaller_than_n() {
+        // Degenerate: more blocks than elements (empty blocks allowed).
+        check_bcast(9, 0, 3, 7);
+        check_bcast(17, 2, 0, 4);
+    }
+
+    #[test]
+    fn bcast_single_block_is_binomial_depth() {
+        // n = 1: q rounds, like a binomial tree.
+        for p in [2usize, 3, 8, 15, 16, 17] {
+            let data = vec![7u32; 10];
+            let res = bcast_sim(p, 0, &data, 1, 4, &UnitCost).unwrap();
+            let q = crate::schedule::ceil_log2(p);
+            assert_eq!(res.stats.rounds, q);
+        }
+    }
+
+    #[test]
+    fn bcast_larger_p() {
+        for p in [31usize, 32, 33, 100, 127, 128, 129] {
+            check_bcast(p, 0, 96, 6);
+        }
+    }
+}

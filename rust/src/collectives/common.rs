@@ -1,0 +1,326 @@
+//! Shared vocabulary of the collectives: element types, reduction
+//! operators, block geometry, and the phase-advanced schedule view used by
+//! Algorithm 1 / Algorithm 7.
+
+use std::sync::Arc;
+
+use crate::schedule::{Schedule, Skips};
+
+/// Data element moved by the collectives.
+pub trait Element:
+    Copy + Default + std::fmt::Debug + PartialEq + Send + Sync + 'static
+{
+}
+
+impl<T> Element for T where
+    T: Copy + Default + std::fmt::Debug + PartialEq + Send + Sync + 'static
+{
+}
+
+/// A binary, associative, commutative reduction operator applied to whole
+/// blocks (the paper's reduction collectives require commutativity).
+pub trait ReduceOp<T>: Send + Sync {
+    /// `acc[i] = acc[i] ⊕ incoming[i]` for all `i`.
+    fn combine(&self, acc: &mut [T], incoming: &[T]);
+
+    fn name(&self) -> &str {
+        "op"
+    }
+}
+
+/// Element-wise sum.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SumOp;
+
+macro_rules! impl_sum {
+    ($($t:ty),*) => {$(
+        impl ReduceOp<$t> for SumOp {
+            #[inline]
+            fn combine(&self, acc: &mut [$t], incoming: &[$t]) {
+                debug_assert_eq!(acc.len(), incoming.len());
+                for (a, b) in acc.iter_mut().zip(incoming) {
+                    *a += *b;
+                }
+            }
+            fn name(&self) -> &str { "sum" }
+        }
+    )*};
+}
+
+impl_sum!(i32, i64, u32, u64, f32, f64);
+
+/// Element-wise max.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxOp;
+
+macro_rules! impl_max {
+    ($($t:ty),*) => {$(
+        impl ReduceOp<$t> for MaxOp {
+            #[inline]
+            fn combine(&self, acc: &mut [$t], incoming: &[$t]) {
+                for (a, b) in acc.iter_mut().zip(incoming) {
+                    if *b > *a { *a = *b; }
+                }
+            }
+            fn name(&self) -> &str { "max" }
+        }
+    )*};
+}
+
+impl_max!(i32, i64, u32, u64, f32, f64);
+
+/// Geometry of an `m`-element buffer divided into `n` roughly equal
+/// blocks: the first `m % n` blocks have `ceil(m/n)` elements, the rest
+/// `floor(m/n)` (MPI-style splitting; blocks of a zero-sized buffer are
+/// all empty).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGeometry {
+    pub m: usize,
+    pub n: usize,
+}
+
+impl BlockGeometry {
+    pub fn new(m: usize, n: usize) -> Self {
+        assert!(n > 0);
+        BlockGeometry { m, n }
+    }
+
+    /// (offset, len) of block `b`.
+    #[inline]
+    pub fn range(&self, b: usize) -> (usize, usize) {
+        debug_assert!(b < self.n);
+        let base = self.m / self.n;
+        let rem = self.m % self.n;
+        if b < rem {
+            (b * (base + 1), base + 1)
+        } else {
+            (rem * (base + 1) + (b - rem) * base, base)
+        }
+    }
+
+    #[inline]
+    pub fn len(&self, b: usize) -> usize {
+        self.range(b).1
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+}
+
+/// A processor's schedules in the root-relative frame, pre-shifted by the
+/// `x` virtual rounds of Algorithm 1, with O(1) *stateless* per-round
+/// block queries (instead of the paper's in-place `+= q` updates, so that
+/// `send`/`expects` need no mutation and replay is trivial).
+///
+/// Algorithm 1 initialises `block[k] -= x`, then `+= q` for the `k < x`
+/// virtual rounds, and `+= q` after every use. Equivalently, the value
+/// used at absolute round `i` (with `i` in `x .. x + n-1+q`, `k = i mod
+/// q`) is `block[k] - x + q * ceil((i - k) / q)`... concretely: the first
+/// real use of slot `k` is at `i0 = k` if `k >= x` else `k + q`, and the
+/// value at round `i` is `shifted[k] + q * ((i - i0) / q)` where
+/// `shifted[k]` embeds the initial loop.
+#[derive(Debug, Clone)]
+pub struct PhasedSchedule {
+    pub p: usize,
+    pub q: usize,
+    /// Relative rank of this processor ((rank - root) mod p).
+    pub rel: usize,
+    /// Number of data blocks `n`.
+    pub n: usize,
+    /// Virtual-round offset `x = (q - (n-1) mod q) mod q`.
+    pub x: usize,
+    /// The circulant graph's skip table.
+    pub skips: Arc<Skips>,
+    recv_shifted: Vec<i64>,
+    send_shifted: Vec<i64>,
+}
+
+impl PhasedSchedule {
+    /// Build from a computed [`Schedule`] for `n` blocks.
+    pub fn new(skips: Arc<Skips>, sched: &Schedule, n: usize) -> Self {
+        assert!(n > 0);
+        assert_eq!(skips.p(), sched.p);
+        let q = sched.q;
+        let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
+        let shift = |v: i64, k: usize| {
+            let mut v = v - x as i64;
+            if k < x {
+                v += q as i64;
+            }
+            v
+        };
+        PhasedSchedule {
+            p: sched.p,
+            q,
+            rel: sched.rank,
+            n,
+            x,
+            skips,
+            recv_shifted: sched.recv.iter().enumerate().map(|(k, &v)| shift(v, k)).collect(),
+            send_shifted: sched.send.iter().enumerate().map(|(k, &v)| shift(v, k)).collect(),
+        }
+    }
+
+    /// `skip[k]`.
+    #[inline]
+    pub fn skip(&self, k: usize) -> usize {
+        self.skips.skip(k)
+    }
+
+    /// Total communication rounds: `n - 1 + q`.
+    #[inline]
+    pub fn rounds(&self) -> usize {
+        if self.p == 1 {
+            0
+        } else {
+            self.n - 1 + self.q
+        }
+    }
+
+    /// Absolute round `i` for network round `j` (`i = j + x`).
+    #[inline]
+    fn abs_round(&self, j: usize) -> usize {
+        j + self.x
+    }
+
+    #[inline]
+    fn phased(&self, shifted: &[i64], j: usize) -> i64 {
+        let i = self.abs_round(j);
+        let k = i % self.q;
+        let i0 = if k >= self.x { k } else { k + self.q };
+        debug_assert!(i >= i0);
+        shifted[k] + (self.q * ((i - i0) / self.q)) as i64
+    }
+
+    /// The (uncapped) receive block index for network round `j`.
+    #[inline]
+    pub fn recv_at(&self, j: usize) -> i64 {
+        self.phased(&self.recv_shifted, j)
+    }
+
+    /// The (uncapped) send block index for network round `j`.
+    #[inline]
+    pub fn send_at(&self, j: usize) -> i64 {
+        self.phased(&self.send_shifted, j)
+    }
+
+    /// Cap a block index per Algorithm 1: negative means "no block",
+    /// `>= n` means block `n - 1`.
+    #[inline]
+    pub fn cap(&self, v: i64) -> Option<usize> {
+        if v < 0 {
+            None
+        } else if v as usize >= self.n {
+            Some(self.n - 1)
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    /// Round-slot index `k = (j + x) mod q` for network round `j`.
+    #[inline]
+    pub fn slot(&self, j: usize) -> usize {
+        self.abs_round(j) % self.q
+    }
+}
+
+/// Compute the [`PhasedSchedule`] of `rank` for a broadcast rooted at
+/// `root` over `p` processors with `n` blocks.
+pub fn phased_for(sk: &Arc<Skips>, rank: usize, root: usize, n: usize) -> PhasedSchedule {
+    let p = sk.p();
+    let rel = (rank + p - root % p) % p;
+    let sched = Schedule::compute(sk, rel);
+    PhasedSchedule::new(sk.clone(), &sched, n)
+}
+
+/// Shared, cheaply clonable context for building all ranks of a collective.
+#[derive(Clone)]
+pub struct World {
+    pub sk: Arc<Skips>,
+}
+
+impl World {
+    pub fn new(p: usize) -> Self {
+        World { sk: Arc::new(Skips::new(p)) }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.sk.p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_geometry_partitions() {
+        for m in [0usize, 1, 7, 100, 101] {
+            for n in [1usize, 2, 3, 7, 16] {
+                let g = BlockGeometry::new(m, n);
+                let mut covered = 0usize;
+                for b in 0..n {
+                    let (off, len) = g.range(b);
+                    assert_eq!(off, covered, "m={m} n={n} b={b}");
+                    covered += len;
+                }
+                assert_eq!(covered, m);
+                // Roughly equal: sizes differ by at most one.
+                let lens: Vec<_> = (0..n).map(|b| g.len(b)).collect();
+                let mx = *lens.iter().max().unwrap();
+                let mn = *lens.iter().min().unwrap();
+                assert!(mx - mn <= 1, "m={m} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn phased_matches_paper_inplace_updates() {
+        // Replay the paper's mutable bookkeeping and compare with the
+        // stateless queries, for several (p, n).
+        for p in [2usize, 9, 17, 18, 33] {
+            let sk = Skips::new(p);
+            for n in [1usize, 2, 5, 7, 12] {
+                let skarc = Arc::new(sk.clone());
+                for r in 0..p {
+                    let sched = Schedule::compute(&sk, r);
+                    let ps = PhasedSchedule::new(skarc.clone(), &sched, n);
+                    let q = sched.q;
+                    let x = ps.x;
+                    // Paper's in-place arrays.
+                    let mut recv = sched.recv.clone();
+                    let mut send = sched.send.clone();
+                    for k in 0..q {
+                        recv[k] -= x as i64;
+                        send[k] -= x as i64;
+                        if k < x {
+                            recv[k] += q as i64;
+                            send[k] += q as i64;
+                        }
+                    }
+                    for i in x..(n + q - 1 + x) {
+                        let k = i % q;
+                        let j = i - x; // network round
+                        assert_eq!(ps.recv_at(j), recv[k], "p={p} n={n} r={r} i={i}");
+                        assert_eq!(ps.send_at(j), send[k], "p={p} n={n} r={r} i={i}");
+                        recv[k] += q as i64;
+                        send[k] += q as i64;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sum_and_max_ops() {
+        let mut a = vec![1i64, 2, 3];
+        SumOp.combine(&mut a, &[10, 20, 30]);
+        assert_eq!(a, vec![11, 22, 33]);
+        let mut b = vec![5i32, 1, 9];
+        MaxOp.combine(&mut b, &[3, 7, 2]);
+        assert_eq!(b, vec![5, 7, 9]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Two-level (hierarchical) broadcast — the paper's declared future work
+//! ("versions that are more suitable to systems with hierarchical,
+//! non-homogeneous communication systems [15] is ongoing").
+//!
+//! Decomposition: one circulant pipelined broadcast among the `N` node
+//! leaders over the inter-node network, then `N` *concurrent* circulant
+//! broadcasts inside the nodes over shared memory. Each phase is the
+//! verified Algorithm 1, so correctness is inherited; completion time is
+//! `T_inter(N, m, n1) + T_intra(C, m, n2)` since all intra-node
+//! broadcasts run in parallel on disjoint resources (the leaders of
+//! non-root nodes can start only after receiving the *last* block, which
+//! the sum models conservatively... a fully pipelined inter/intra overlap
+//! is the open problem the paper alludes to).
+//!
+//! The flat circulant algorithm ignores the hierarchy: its skips cross
+//! node boundaries arbitrarily, paying inter-node α/β for most edges; the
+//! hierarchical version pays inter-node costs only `n1-1+⌈log₂N⌉` times
+//! on the critical path. `benches/ablation_hierarchical.rs` quantifies
+//! the crossover.
+
+use crate::sim::cost::{CostModel, HierarchicalCost};
+use crate::sim::network::{RunStats, SimError};
+
+use super::bcast::bcast_sim;
+use super::common::Element;
+use super::tuning;
+
+/// Result of the two-phase hierarchical broadcast.
+#[derive(Debug, Clone)]
+pub struct HierBcastResult {
+    pub inter: RunStats,
+    pub intra: RunStats,
+}
+
+impl HierBcastResult {
+    /// Conservative completion time: inter-node phase then the slowest
+    /// (= any, they're identical) intra-node phase.
+    pub fn time(&self) -> f64 {
+        self.inter.time + self.intra.time
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.inter.rounds + self.intra.rounds
+    }
+
+    /// Total bytes across the machine: inter phase + N intra phases.
+    pub fn bytes(&self, nodes: usize) -> usize {
+        self.inter.bytes + nodes * self.intra.bytes
+    }
+}
+
+/// Wrapper cost model exposing only the inter-node component of a
+/// [`HierarchicalCost`] (used for the leader phase, where consecutive
+/// leader ranks live on different nodes).
+struct InterOnly<'a>(&'a HierarchicalCost);
+
+impl CostModel for InterOnly<'_> {
+    fn msg_time(&self, _from: usize, _to: usize, bytes: usize) -> f64 {
+        self.0.inter.alpha + self.0.inter.beta * self.0.nic_share * bytes as f64
+    }
+    fn name(&self) -> &str {
+        "inter-only"
+    }
+}
+
+/// Intra-node component (ranks within one node).
+struct IntraOnly<'a>(&'a HierarchicalCost);
+
+impl CostModel for IntraOnly<'_> {
+    fn msg_time(&self, _from: usize, _to: usize, bytes: usize) -> f64 {
+        self.0.intra.alpha + self.0.intra.beta * bytes as f64
+    }
+    fn name(&self) -> &str {
+        "intra-only"
+    }
+}
+
+/// Simulate the hierarchical broadcast of `data` over `nodes × cores`
+/// ranks: leader phase with `n1` blocks, intra phase with `n2` blocks
+/// (pass 0 for either to use the paper's F-rule on the respective level).
+pub fn hier_bcast_sim<T: Element>(
+    nodes: usize,
+    cores: usize,
+    data: &[T],
+    n1: usize,
+    n2: usize,
+    elem_bytes: usize,
+    cost: &HierarchicalCost,
+) -> Result<HierBcastResult, SimError> {
+    let m = data.len();
+    // Per-level block counts from the α-β optimum of *that level's*
+    // parameters (the per-level fabrics differ by orders of magnitude, so
+    // a single F constant cannot serve both — this is exactly the tuning
+    // freedom the two-level decomposition buys).
+    let n1 = if n1 == 0 {
+        tuning::bcast_blocks_model(
+            m,
+            nodes.max(2),
+            elem_bytes,
+            cost.inter.alpha,
+            cost.inter.beta * cost.nic_share,
+        )
+    } else {
+        n1
+    };
+    let n2 = if n2 == 0 {
+        tuning::bcast_blocks_model(m, cores.max(2), elem_bytes, cost.intra.alpha, cost.intra.beta)
+    } else {
+        n2
+    };
+
+    // Phase 1: leaders (one rank per node) over the inter-node fabric.
+    let inter = if nodes > 1 {
+        bcast_sim(nodes, 0, data, n1, elem_bytes, &InterOnly(cost))?.stats
+    } else {
+        RunStats::default()
+    };
+
+    // Phase 2: every leader broadcasts within its node; all nodes run in
+    // parallel on disjoint links, so simulate one representative node.
+    let intra = if cores > 1 {
+        bcast_sim(cores, 0, data, n2, elem_bytes, &IntraOnly(cost))?.stats
+    } else {
+        RunStats::default()
+    };
+
+    Ok(HierBcastResult { inter, intra })
+}
+
+/// The flat circulant broadcast on the same machine, for comparison.
+pub fn flat_bcast_time<T: Element>(
+    nodes: usize,
+    cores: usize,
+    data: &[T],
+    n: usize,
+    elem_bytes: usize,
+    cost: &HierarchicalCost,
+) -> Result<RunStats, SimError> {
+    let p = nodes * cores;
+    let n = if n == 0 {
+        // Give the flat algorithm its best shot too: model optimum with
+        // the (dominant) inter-node parameters.
+        tuning::bcast_blocks_model(
+            data.len(),
+            p,
+            elem_bytes,
+            cost.inter.alpha,
+            cost.inter.beta * cost.nic_share,
+        )
+    } else {
+        n
+    };
+    Ok(bcast_sim(p, 0, data, n, elem_bytes, cost)?.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchical_correct_phases() {
+        let data: Vec<i32> = (0..4096).collect();
+        let cost = HierarchicalCost::vega(8);
+        let res = hier_bcast_sim(16, 8, &data, 0, 0, 4, &cost).unwrap();
+        assert!(res.inter.rounds > 0);
+        assert!(res.intra.rounds > 0);
+        assert!(res.time() > 0.0);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_on_steep_hierarchy() {
+        // With a strong intra/inter gap and many cores per node, the
+        // two-level decomposition must win: the flat algorithm sends most
+        // blocks across the fabric many times.
+        let data: Vec<i32> = (0..1 << 16).collect();
+        let mut cost = HierarchicalCost::vega(32);
+        cost.inter.beta *= 4.0; // steepen the hierarchy
+        let hier = hier_bcast_sim(16, 32, &data, 0, 0, 4, &cost).unwrap();
+        let flat = flat_bcast_time(16, 32, &data, 0, 4, &cost).unwrap();
+        assert!(
+            hier.time() < flat.time,
+            "hier {:.6}s should beat flat {:.6}s",
+            hier.time(),
+            flat.time
+        );
+    }
+
+    #[test]
+    fn degenerate_levels() {
+        let data: Vec<i32> = (0..128).collect();
+        let cost = HierarchicalCost::vega(1);
+        // Single node: only intra phase... cores=1 means only inter.
+        let res = hier_bcast_sim(4, 1, &data, 2, 2, 4, &cost).unwrap();
+        assert_eq!(res.intra.rounds, 0);
+        let res = hier_bcast_sim(1, 4, &data, 2, 2, 4, &cost).unwrap();
+        assert_eq!(res.inter.rounds, 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! MPI-style collectives on circulant-graph broadcast schedules — the
+//! paper's Observation 1 applications plus their classical baselines.
+//!
+//! | paper operation | module | MPI analogue |
+//! |---|---|---|
+//! | Algorithm 1 pipelined broadcast | [`bcast`] | `MPI_Bcast` |
+//! | Algorithm 7 all-broadcast | [`allgatherv`] | `MPI_Allgather(v)` |
+//! | reversed-schedule reduction (Obs. 1.3) | [`reduce`] | `MPI_Reduce` |
+//! | reversed all-broadcast (Obs. 1.4) | [`reduce_scatter`] | `MPI_Reduce_scatter(_block)` |
+//! | reduce-scatter + all-gather | [`allreduce`] | `MPI_Allreduce` |
+//! | binomial / van de Geijn / ring comparators | [`baselines`] | native library algorithms |
+//! | block-count selection (§3) | [`tuning`] | — |
+
+pub mod allgatherv;
+pub mod allreduce;
+pub mod baselines;
+pub mod bcast;
+pub mod common;
+pub mod reduce;
+pub mod reduce_scatter;
+pub mod tuning;
+
+pub use allgatherv::{allgather_sim, allgatherv_sim, AllgathervProc, ScheduleTable};
+pub use allreduce::allreduce_sim;
+pub use bcast::{bcast_procs, bcast_sim, BcastProc};
+pub use common::{BlockGeometry, Element, MaxOp, PhasedSchedule, ReduceOp, SumOp, World};
+pub use reduce::{reduce_sim, ReduceProc};
+pub use reduce_scatter::{reduce_scatter_block_sim, reduce_scatter_sim, ReduceScatterProc};
+pub mod rhalving;
+pub mod hierarchical;

@@ -1,0 +1,223 @@
+//! Rooted reduction via reversed broadcast schedules — Observation 1.3 of
+//! the paper, the round-optimal `MPI_Reduce` for commutative operators.
+//!
+//! The broadcast communication pattern of Algorithm 1 is run *backwards*:
+//! network round `j` of the reduction corresponds to broadcast round
+//! `total - 1 - j`, with every edge reversed. Where broadcast moved block
+//! `recvblock[k]_r` from `f_r^k` to `r`, reduction moves the partial
+//! result of that block from `r` to `f_r^k`; the receiver combines it into
+//! its own partial block with the operator ⊕. Every non-root processor
+//! sends each partial block exactly once, and the reversed-time order
+//! guarantees all contributions to a block arrive before that block is
+//! forwarded — the root ends with the full reduction over all `p` ranks.
+
+use std::sync::Arc;
+
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+
+use super::common::{BlockGeometry, Element, PhasedSchedule, ReduceOp, World};
+
+/// Per-rank state machine for the reversed-schedule reduction.
+pub struct ReduceProc<T> {
+    pub rank: usize,
+    root: usize,
+    ps: PhasedSchedule,
+    geom: BlockGeometry,
+    op: Arc<dyn ReduceOp<T>>,
+    /// The rank's partial result, block by block (accumulated in place).
+    blocks: Vec<Vec<T>>,
+}
+
+impl<T: Element> ReduceProc<T> {
+    /// Every rank contributes a full `geom.m`-element buffer.
+    pub fn new(
+        world: &World,
+        rank: usize,
+        root: usize,
+        geom: BlockGeometry,
+        data: &[T],
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Self {
+        assert_eq!(data.len(), geom.m);
+        let ps = super::common::phased_for(&world.sk, rank, root, geom.n);
+        let blocks = (0..geom.n)
+            .map(|b| {
+                let (off, len) = geom.range(b);
+                data[off..off + len].to_vec()
+            })
+            .collect();
+        ReduceProc { rank, root, ps, geom, op, blocks }
+    }
+
+    /// The broadcast round mirrored by network round `j`.
+    #[inline]
+    fn fwd_round(&self, j: usize) -> usize {
+        self.ps.rounds() - 1 - j
+    }
+
+    /// The root's final buffer (only meaningful at the root).
+    pub fn into_buffer(self) -> Vec<T> {
+        assert_eq!(self.rank, self.root, "only the root holds the reduction result");
+        let mut out = Vec::with_capacity(self.geom.m);
+        for blk in self.blocks {
+            out.extend_from_slice(&blk);
+        }
+        out
+    }
+}
+
+impl<T: Element> RankProc<T> for ReduceProc<T> {
+    fn send(&mut self, j: usize) -> Option<Msg<T>> {
+        // Reversal of the broadcast *receive*: send our accumulated
+        // partial of recvblock[k] to the from-processor.
+        if self.ps.rel == 0 {
+            return None; // the root never sends in reduction
+        }
+        let i = self.fwd_round(j);
+        let b = self.ps.cap(self.ps.recv_at(i))?;
+        let k = self.ps.slot(i);
+        let to = (self.rank + self.ps.p - self.ps.skip(k)) % self.ps.p;
+        Some(Msg { to, data: self.blocks[b].clone() })
+    }
+
+    fn expects(&self, j: usize) -> Option<usize> {
+        // Reversal of the broadcast *send*: receive a partial of
+        // sendblock[k] from the to-processor (unless that send was
+        // suppressed because it would have targeted the root — reversed:
+        // the root's outgoing edges carry nothing, so WE, as the root's
+        // from-processor... the suppression is on the broadcast sender
+        // side t_rel == 0, i.e. on edges INTO the root; reversed, edges
+        // out of the root carry nothing, so a rank whose to-processor is
+        // the root receives nothing from it. t_rel == 0 is exactly that.)
+        let i = self.fwd_round(j);
+        let k = self.ps.slot(i);
+        let t_rel = (self.ps.rel + self.ps.skip(k)) % self.ps.p;
+        if t_rel == 0 {
+            return None;
+        }
+        self.ps.cap(self.ps.send_at(i))?;
+        Some((self.rank + self.ps.skip(k)) % self.ps.p)
+    }
+
+    fn recv(&mut self, j: usize, _from: usize, data: Vec<T>) {
+        let i = self.fwd_round(j);
+        let b = self
+            .ps
+            .cap(self.ps.send_at(i))
+            .expect("recv called in a round with no scheduled (reversed) receive");
+        debug_assert_eq!(data.len(), self.geom.len(b));
+        self.op.combine(&mut self.blocks[b], &data);
+    }
+
+    fn rounds(&self) -> usize {
+        self.ps.rounds()
+    }
+}
+
+/// Result of a simulated reduction.
+pub struct ReduceResult<T> {
+    pub stats: RunStats,
+    /// The reduced buffer at the root.
+    pub buffer: Vec<T>,
+}
+
+/// Run a full reduction to `root` over `p` simulated ranks: `inputs[r]` is
+/// rank `r`'s contribution (all of length `m`), divided into `n` blocks.
+pub fn reduce_sim<T: Element>(
+    inputs: &[Vec<T>],
+    root: usize,
+    n: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<ReduceResult<T>, SimError> {
+    let p = inputs.len();
+    let m = inputs[0].len();
+    let world = World::new(p);
+    let geom = BlockGeometry::new(m, n);
+    let mut procs: Vec<ReduceProc<T>> = (0..p)
+        .map(|r| ReduceProc::new(&world, r, root, geom, &inputs[r], op.clone()))
+        .collect();
+    let mut net = Network::new(p);
+    let stats = net.run(&mut procs, elem_bytes, cost)?;
+    let buffer = procs.into_iter().nth(root).unwrap().into_buffer();
+    Ok(ReduceResult { stats, buffer })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::sim::cost::UnitCost;
+
+    fn check_reduce(p: usize, root: usize, m: usize, n: usize) {
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..m).map(|i| (r * 1000 + i) as i64).collect())
+            .collect();
+        let expect: Vec<i64> = (0..m)
+            .map(|i| inputs.iter().map(|v| v[i]).sum())
+            .collect();
+        let res = reduce_sim(&inputs, root, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        assert_eq!(res.buffer, expect, "p={p} root={root} m={m} n={n}");
+        if p > 1 {
+            let q = crate::schedule::ceil_log2(p);
+            assert_eq!(res.stats.rounds, n - 1 + q);
+        }
+    }
+
+    #[test]
+    fn reduce_small_grid() {
+        for p in 1..=20 {
+            for n in [1usize, 2, 3, 5, 8] {
+                check_reduce(p, 0, 64, n);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_nonzero_roots() {
+        for p in [5usize, 9, 17] {
+            for root in 0..p {
+                check_reduce(p, root, 33, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_paper_sizes() {
+        check_reduce(17, 0, 1000, 13);
+        check_reduce(18, 3, 512, 9);
+    }
+
+    #[test]
+    fn reduce_block_boundaries() {
+        for p in [9usize, 17] {
+            let q = crate::schedule::ceil_log2(p);
+            for n in [q - 1, q, q + 1, 2 * q, 2 * q + 1] {
+                check_reduce(p, 0, 100, n);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_larger_p() {
+        for p in [31usize, 32, 33, 64, 100, 128, 129] {
+            check_reduce(p, 0, 48, 5);
+        }
+    }
+
+    #[test]
+    fn reduce_max_operator() {
+        use crate::collectives::common::MaxOp;
+        let p = 13;
+        let m = 40;
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..m).map(|i| ((r * 7 + i * 3) % 97) as i64).collect())
+            .collect();
+        let expect: Vec<i64> =
+            (0..m).map(|i| inputs.iter().map(|v| v[i]).max().unwrap()).collect();
+        let res = reduce_sim(&inputs, 0, 4, Arc::new(MaxOp), 8, &UnitCost).unwrap();
+        assert_eq!(res.buffer, expect);
+    }
+}

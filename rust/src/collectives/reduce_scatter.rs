@@ -1,0 +1,311 @@
+//! All-reduction (`MPI_Reduce_scatter` / `MPI_Reduce_scatter_block`) —
+//! Observation 1.4 of the paper: `p` simultaneous reversed-schedule
+//! reductions, one per destination rank, on the circulant pattern, in the
+//! optimal `n - 1 + q` rounds.
+//!
+//! This reverses Algorithm 7 the same way rooted reduction reverses
+//! Algorithm 1: network round `jr` mirrors all-broadcast round
+//! `total-1-jr` with all edges reversed; each rank accumulates incoming
+//! partials with ⊕ into its per-destination blocks and ends holding the
+//! fully reduced chunk for *itself*. Total volume is the optimal `p - 1`
+//! blocks sent and received per rank (for `n = 1` the paper believes this
+//! is the first logarithmic-round algorithm for arbitrary `p`).
+
+use std::sync::Arc;
+
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+
+use super::allgatherv::ScheduleTable;
+use super::common::{BlockGeometry, Element, ReduceOp, World};
+
+/// Per-rank state machine for the reversed all-broadcast.
+pub struct ReduceScatterProc<T> {
+    pub rank: usize,
+    table: Arc<ScheduleTable>,
+    /// Element counts per destination (kept for introspection).
+    pub counts: Arc<Vec<usize>>,
+    geoms: Vec<BlockGeometry>,
+    op: Arc<dyn ReduceOp<T>>,
+    /// `partial[j]`: this rank's current partial of destination `j`'s
+    /// chunk, flat (block geometry maps blocks to ranges; starts as our
+    /// own contribution).
+    partial: Vec<Vec<T>>,
+    /// Destinations with non-zero chunks — the only ones ever packed.
+    nonempty: Arc<Vec<usize>>,
+}
+
+impl<T: Element> ReduceScatterProc<T> {
+    /// `input` is this rank's full contribution vector: the concatenation
+    /// over destinations `j` of `counts[j]` elements.
+    pub fn new(
+        table: Arc<ScheduleTable>,
+        counts: Arc<Vec<usize>>,
+        rank: usize,
+        input: &[T],
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Self {
+        let p = table.p();
+        assert_eq!(counts.len(), p);
+        let total: usize = counts.iter().sum();
+        assert_eq!(input.len(), total);
+        let n = table.n;
+        let geoms: Vec<BlockGeometry> =
+            counts.iter().map(|&c| BlockGeometry::new(c, n)).collect();
+        let mut partial = Vec::with_capacity(p);
+        let mut off = 0usize;
+        for j in 0..p {
+            partial.push(input[off..off + counts[j]].to_vec());
+            off += counts[j];
+        }
+        let _ = n;
+        let nonempty = Arc::new((0..p).filter(|&j| counts[j] > 0).collect::<Vec<_>>());
+        ReduceScatterProc { rank, table, counts, geoms, op, partial, nonempty }
+    }
+
+    #[inline]
+    fn rel(&self, j: usize) -> usize {
+        let t = self.rank + self.table.p() - j;
+        if t >= self.table.p() {
+            t - self.table.p()
+        } else {
+            t
+        }
+    }
+
+    /// All-broadcast round mirrored by network round `jr`.
+    #[inline]
+    fn fwd_round(&self, jr: usize) -> usize {
+        self.table.rounds() - 1 - jr
+    }
+
+    /// Visit the blocks this rank sends in reversed round `jr` (= the
+    /// blocks it would have *received* in the mirrored all-broadcast
+    /// round). Only non-empty destinations are scanned.
+    fn for_each_send(&self, i: usize, mut f: impl FnMut(usize, usize, usize)) {
+        let (k, delta) = self.table.round_params(i);
+        for &j in self.nonempty.iter() {
+            if j == self.rank {
+                continue; // our own destination's partials stay here
+            }
+            if let Some(b) = self.table.cap(self.table.recv_fast(self.rel(j), k, delta)) {
+                let len = self.geoms[j].len(b);
+                if len > 0 {
+                    f(j, b, len);
+                }
+            }
+        }
+    }
+
+    /// True iff this rank receives anything in reversed round (early-exit).
+    fn receives_in(&self, i: usize, t: usize) -> bool {
+        let (k, delta) = self.table.round_params(i);
+        for &j in self.nonempty.iter() {
+            if j == t {
+                continue;
+            }
+            if let Some(b) = self.table.cap(self.table.send_fast(self.rel(j), k, delta)) {
+                if self.geoms[j].len(b) > 0 {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// This rank's reduced chunk (destination `rank`).
+    pub fn into_chunk(self) -> Vec<T> {
+        let j = self.rank;
+        self.partial.into_iter().nth(j).unwrap()
+    }
+}
+
+impl<T: Element> RankProc<T> for ReduceScatterProc<T> {
+    fn send(&mut self, jr: usize) -> Option<Msg<T>> {
+        let i = self.fwd_round(jr);
+        let p = self.table.p();
+        let k = self.table.slot(i);
+        // Reversed edge: in the mirrored round we received from
+        // (rank - skip[k]); now we send our partials back to it.
+        let to = (self.rank + p - self.table.sk.skip(k)) % p;
+        let mut data: Vec<T> = Vec::new();
+        let geoms = &self.geoms;
+        let partial = &self.partial;
+        self.for_each_send(i, |j, b, len| {
+            let (off, _) = geoms[j].range(b);
+            data.extend_from_slice(&partial[j][off..off + len]);
+        });
+        if data.is_empty() {
+            return None;
+        }
+        Some(Msg { to, data })
+    }
+
+    fn expects(&self, jr: usize) -> Option<usize> {
+        let i = self.fwd_round(jr);
+        let p = self.table.p();
+        let k = self.table.slot(i);
+        let t = (self.rank + self.table.sk.skip(k)) % p;
+        if !self.receives_in(i, t) {
+            return None;
+        }
+        Some(t)
+    }
+
+    fn recv(&mut self, jr: usize, _from: usize, data: Vec<T>) {
+        let i = self.fwd_round(jr);
+        let p = self.table.p();
+        let k = self.table.slot(i);
+        let t = (self.rank + self.table.sk.skip(k)) % p;
+        let rank = self.rank;
+        let table = self.table.clone();
+        let nonempty = self.nonempty.clone();
+        let (kk, delta) = table.round_params(i);
+        let mut off = 0usize;
+        for &j in nonempty.iter() {
+            if j == t {
+                continue;
+            }
+            let rel = { let t = rank + p - j; if t >= p { t - p } else { t } };
+            if let Some(b) = table.cap(table.send_fast(rel, kk, delta)) {
+                let len = self.geoms[j].len(b);
+                if len > 0 {
+                    let (boff, _) = self.geoms[j].range(b);
+                    self.op
+                        .combine(&mut self.partial[j][boff..boff + len], &data[off..off + len]);
+                    off += len;
+                }
+            }
+        }
+        assert_eq!(off, data.len(), "rank {rank} round {jr}: payload size mismatch");
+    }
+
+    fn rounds(&self) -> usize {
+        self.table.rounds()
+    }
+}
+
+/// Result of a simulated all-reduction.
+pub struct ReduceScatterResult<T> {
+    pub stats: RunStats,
+    /// `chunks[r]` = the fully reduced chunk owned by rank `r`.
+    pub chunks: Vec<Vec<T>>,
+}
+
+/// Run the irregular all-reduction: `inputs[r]` is rank `r`'s full vector
+/// (concatenation of per-destination chunks sized by `counts`).
+pub fn reduce_scatter_sim<T: Element>(
+    inputs: &[Vec<T>],
+    counts: &[usize],
+    n: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<ReduceScatterResult<T>, SimError> {
+    let p = inputs.len();
+    assert_eq!(counts.len(), p);
+    let world = World::new(p);
+    let table = ScheduleTable::build(&world, n);
+    let counts = Arc::new(counts.to_vec());
+    let mut procs: Vec<ReduceScatterProc<T>> = (0..p)
+        .map(|r| ReduceScatterProc::new(table.clone(), counts.clone(), r, &inputs[r], op.clone()))
+        .collect();
+    let mut net = Network::new(p);
+    let stats = net.run(&mut procs, elem_bytes, cost)?;
+    let chunks = procs.into_iter().map(|pr| pr.into_chunk()).collect();
+    Ok(ReduceScatterResult { stats, chunks })
+}
+
+/// `MPI_Reduce_scatter_block`: equal chunk of `block_elems` per rank.
+pub fn reduce_scatter_block_sim<T: Element>(
+    inputs: &[Vec<T>],
+    block_elems: usize,
+    n: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<ReduceScatterResult<T>, SimError> {
+    let p = inputs.len();
+    reduce_scatter_sim(inputs, &vec![block_elems; p], n, op, elem_bytes, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::sim::cost::UnitCost;
+
+    fn check_reduce_scatter(counts: &[usize], n: usize) {
+        let p = counts.len();
+        let total: usize = counts.iter().sum();
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..total).map(|i| (r * 31 + i * 7) as i64 % 1001).collect())
+            .collect();
+        // Expected: elementwise sum, then chunked by counts.
+        let sums: Vec<i64> = (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        let res =
+            reduce_scatter_sim(&inputs, counts, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        let mut off = 0usize;
+        for r in 0..p {
+            assert_eq!(
+                res.chunks[r],
+                sums[off..off + counts[r]].to_vec(),
+                "rank {r} counts={counts:?} n={n}"
+            );
+            off += counts[r];
+        }
+        if p > 1 {
+            let q = crate::schedule::ceil_log2(p);
+            assert_eq!(res.stats.rounds, n - 1 + q);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_block_grid() {
+        for p in 1..=14 {
+            for n in [1usize, 2, 4] {
+                check_reduce_scatter(&vec![12; p], n);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_irregular() {
+        for p in [7usize, 9, 17] {
+            let counts: Vec<usize> = (0..p).map(|i| (i % 3) * 9).collect();
+            for n in [1usize, 3] {
+                check_reduce_scatter(&counts, n);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_degenerate() {
+        for p in [5usize, 9] {
+            let mut counts = vec![0usize; p];
+            counts[1] = 60;
+            check_reduce_scatter(&counts, 4);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_paper_sizes() {
+        check_reduce_scatter(&vec![8; 17], 5);
+        check_reduce_scatter(&vec![8; 18], 5);
+        check_reduce_scatter(&[3, 0, 17, 1, 0, 0, 64, 2, 9], 4);
+    }
+
+    #[test]
+    fn reduce_scatter_volume_optimal() {
+        // Observation 1.4: p-1 blocks sent and received per rank (n = 1,
+        // equal blocks): total messages' volume = p(p-1) blocks.
+        let p = 16usize;
+        let b = 4usize;
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..p * b).map(|i| (r + i) as i64).collect()).collect();
+        let res = reduce_scatter_block_sim(&inputs, b, 1, Arc::new(SumOp), 8, &UnitCost)
+            .unwrap();
+        let total_blocks = res.stats.bytes / (8 * b);
+        assert_eq!(total_blocks, p * (p - 1), "volume should be exactly p(p-1) blocks");
+    }
+}

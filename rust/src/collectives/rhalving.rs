@@ -1,0 +1,349 @@
+//! Recursive-halving reduce-scatter — the power-of-two-padded algorithm
+//! the paper contrasts with in Observation 1.4 ("previous algorithms ...
+//! have almost twice the communication volume [16] for certain numbers of
+//! processes p").
+//!
+//! For `p = 2^q` the algorithm is volume-optimal (each rank sends
+//! `(p-1)/p` of its vector over `q` rounds of halving exchanges). For
+//! non-powers-of-two, the classical fix folds the `p - 2^⌊log p⌋` excess
+//! ranks into neighbours first (one full-vector exchange!), which is what
+//! produces the up-to-2x volume the paper's circulant algorithm avoids —
+//! quantified in `benches/ablation_volume.rs`.
+
+use std::sync::Arc;
+
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+
+use super::common::{Element, ReduceOp};
+
+/// Phase-tracked state machine for recursive-halving reduce-scatter with
+/// power-of-two folding (equal chunks of `chunk` elements per rank).
+pub struct RhalvingProc<T> {
+    rank: usize,
+    p: usize,
+    /// Largest power of two <= p.
+    pof2: usize,
+    /// Excess ranks folded away in the pre-step: ranks < 2*excess pair up.
+    excess: usize,
+    chunk: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    /// Full working vector (p * chunk), accumulated in place.
+    vec_: Vec<T>,
+    /// This rank's id in the folded 2^k group (usize::MAX if folded away).
+    newrank: usize,
+    /// Current chunk-range [lo, hi) this rank is responsible for.
+    lo: usize,
+    hi: usize,
+    /// Final result chunk for folded-away ranks comes back in a post step.
+    done_chunk: Option<Vec<T>>,
+}
+
+impl<T: Element> RhalvingProc<T> {
+    pub fn new(
+        p: usize,
+        rank: usize,
+        chunk: usize,
+        input: &[T],
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Self {
+        assert_eq!(input.len(), p * chunk);
+        let pof2 = if p.is_power_of_two() { p } else { p.next_power_of_two() / 2 };
+        let excess = p - pof2;
+        // Folding: ranks 0..2*excess pair up (even absorbs odd); ranks
+        // >= 2*excess keep newrank = rank - excess.
+        let newrank = if rank < 2 * excess {
+            if rank % 2 == 0 {
+                rank / 2
+            } else {
+                usize::MAX // folded away
+            }
+        } else {
+            rank - excess
+        };
+        RhalvingProc {
+            rank,
+            p,
+            pof2,
+            excess,
+            chunk,
+            op,
+            vec_: input.to_vec(),
+            newrank,
+            lo: 0,
+            hi: p,
+            done_chunk: None,
+        }
+    }
+
+    /// Number of halving rounds.
+    fn qrounds(&self) -> usize {
+        self.pof2.trailing_zeros() as usize
+    }
+
+    /// Absolute rank of folded-group id `nr`.
+    fn abs_of(&self, nr: usize) -> usize {
+        if nr < self.excess {
+            2 * nr
+        } else {
+            nr + self.excess
+        }
+    }
+
+    /// The rank's final chunk after completion.
+    pub fn into_chunk(self) -> Vec<T> {
+        if let Some(c) = self.done_chunk {
+            return c;
+        }
+        let r = self.rank;
+        self.vec_[r * self.chunk..(r + 1) * self.chunk].to_vec()
+    }
+
+    /// Chunk-range split for halving round `t` (0-based): ranges halve
+    /// around the bit `qrounds-1-t` of newrank.
+    fn split(&self, t: usize) -> (usize, usize, usize) {
+        // Ranks are grouped by the top bits of newrank; in round t the
+        // group size is pof2 >> t and we exchange with partner differing
+        // in bit (qrounds-1-t).
+        let bit = self.qrounds() - 1 - t;
+        let partner_nr = self.newrank ^ (1 << bit);
+        // The vector range owned by a group is proportional.
+        (bit, partner_nr, 0)
+    }
+
+    /// Chunk range (in folded-group coordinates mapped to absolute chunks)
+    /// for group id prefix at round t. We keep ranges in *absolute chunk*
+    /// space: the group of newranks sharing the top t+1 bits owns an
+    /// equal slice of the p chunks... For simplicity (and exact volume
+    /// accounting) ranges are computed over `pof2` equal super-chunks,
+    /// each super-chunk being the concatenation of the absolute chunks of
+    /// the ranks it folds.
+    fn range_of(&self, nr_prefix: usize, t: usize) -> (usize, usize) {
+        let groups = 1usize << (t + 1);
+        let per = self.pof2 / groups;
+        let g = nr_prefix >> (self.qrounds() - 1 - t);
+        (g * per, (g + 1) * per)
+    }
+
+    /// Elements of the super-chunk range [lo, hi) (in folded ids).
+    fn gather_range(&self, lo: usize, hi: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        for nr in lo..hi {
+            let a = self.abs_of(nr);
+            out.extend_from_slice(&self.vec_[a * self.chunk..(a + 1) * self.chunk]);
+            if nr < self.excess {
+                // Super-chunk also carries the folded odd partner's chunk.
+                let b = a + 1;
+                out.extend_from_slice(&self.vec_[b * self.chunk..(b + 1) * self.chunk]);
+            }
+        }
+        out
+    }
+
+    fn combine_range(&mut self, lo: usize, hi: usize, data: &[T]) {
+        let mut off = 0usize;
+        for nr in lo..hi {
+            let a = self.abs_of(nr);
+            let s = a * self.chunk;
+            self.op.combine(&mut self.vec_[s..s + self.chunk], &data[off..off + self.chunk]);
+            off += self.chunk;
+            if nr < self.excess {
+                let s = (a + 1) * self.chunk;
+                self.op
+                    .combine(&mut self.vec_[s..s + self.chunk], &data[off..off + self.chunk]);
+                off += self.chunk;
+            }
+        }
+        debug_assert_eq!(off, data.len());
+    }
+}
+
+impl<T: Element> RankProc<T> for RhalvingProc<T> {
+    fn send(&mut self, round: usize) -> Option<Msg<T>> {
+        let q = self.qrounds();
+        if round == 0 && self.excess > 0 {
+            // Fold pre-step: odd ranks < 2*excess send their FULL vector
+            // to the even partner — the 2x-volume culprit.
+            if self.rank < 2 * self.excess && self.rank % 2 == 1 {
+                return Some(Msg { to: self.rank - 1, data: self.vec_.clone() });
+            }
+            return None;
+        }
+        let pre = usize::from(self.excess > 0);
+        if round >= pre && round < pre + q {
+            if self.newrank == usize::MAX {
+                return None;
+            }
+            let t = round - pre;
+            let (_, partner_nr, _) = self.split(t);
+            // Send the half the PARTNER keeps.
+            let (lo, hi) = self.range_of(partner_nr, t);
+            let data = self.gather_range(lo, hi);
+            return Some(Msg { to: self.abs_of(partner_nr), data });
+        }
+        // Post-step: even folded ranks send the odd partner's final chunk.
+        if round == pre + q && self.excess > 0 {
+            if self.rank < 2 * self.excess && self.rank % 2 == 0 {
+                let b = self.rank + 1;
+                return Some(Msg {
+                    to: b,
+                    data: self.vec_[b * self.chunk..(b + 1) * self.chunk].to_vec(),
+                });
+            }
+        }
+        None
+    }
+
+    fn expects(&self, round: usize) -> Option<usize> {
+        let q = self.qrounds();
+        if round == 0 && self.excess > 0 {
+            if self.rank < 2 * self.excess && self.rank % 2 == 0 {
+                return Some(self.rank + 1);
+            }
+            return None;
+        }
+        let pre = usize::from(self.excess > 0);
+        if round >= pre && round < pre + q {
+            if self.newrank == usize::MAX {
+                return None;
+            }
+            let t = round - pre;
+            let (_, partner_nr, _) = self.split(t);
+            return Some(self.abs_of(partner_nr));
+        }
+        if round == pre + q && self.excess > 0 {
+            if self.rank < 2 * self.excess && self.rank % 2 == 1 {
+                return Some(self.rank - 1);
+            }
+        }
+        None
+    }
+
+    fn recv(&mut self, round: usize, _from: usize, data: Vec<T>) {
+        let q = self.qrounds();
+        if round == 0 && self.excess > 0 {
+            // Fold: combine the odd partner's full vector.
+            let d = data;
+            self.op.combine(&mut self.vec_, &d);
+            return;
+        }
+        let pre = usize::from(self.excess > 0);
+        if round >= pre && round < pre + q {
+            let t = round - pre;
+            // We keep OUR half.
+            let (lo, hi) = self.range_of(self.newrank, t);
+            self.combine_range(lo, hi, &data);
+            return;
+        }
+        // Post-step: folded-away rank receives its final chunk.
+        self.done_chunk = Some(data);
+    }
+
+    fn rounds(&self) -> usize {
+        if self.p == 1 {
+            return 0;
+        }
+        let pre = usize::from(self.excess > 0);
+        self.qrounds() + pre + usize::from(self.excess > 0)
+    }
+}
+
+/// Simulate recursive-halving reduce-scatter (equal `chunk` per rank).
+pub fn rhalving_reduce_scatter_sim<T: Element>(
+    inputs: &[Vec<T>],
+    chunk: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
+    let p = inputs.len();
+    let mut procs: Vec<RhalvingProc<T>> = (0..p)
+        .map(|r| RhalvingProc::new(p, r, chunk, &inputs[r], op.clone()))
+        .collect();
+    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
+    Ok((stats, procs.into_iter().map(|pr| pr.into_chunk()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::sim::UnitCost;
+
+    fn check(p: usize, chunk: usize) {
+        let total = p * chunk;
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..total).map(|i| ((r + 1) * (i + 7) % 613) as i64).collect())
+            .collect();
+        let sums: Vec<i64> =
+            (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        let (_, chunks) =
+            rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost)
+                .unwrap();
+        for r in 0..p {
+            assert_eq!(chunks[r], sums[r * chunk..(r + 1) * chunk].to_vec(), "p={p} r={r}");
+        }
+    }
+
+    #[test]
+    fn pow2_correct() {
+        for p in [2usize, 4, 8, 16, 32] {
+            check(p, 5);
+        }
+    }
+
+    #[test]
+    fn non_pow2_correct() {
+        for p in [3usize, 5, 6, 7, 9, 12, 17, 18, 33] {
+            check(p, 4);
+        }
+    }
+
+    #[test]
+    fn p1_trivial() {
+        check(1, 6);
+    }
+
+    #[test]
+    fn volume_excess_for_non_pof2() {
+        // The paper's point ("almost twice the communication volume [16]
+        // for certain numbers of processes"): for p just *below* a power
+        // of two, nearly half the ranks fold and each folded pair moves a
+        // full extra vector through one port — the per-rank bottleneck
+        // volume inflates ~1.5x, while the circulant algorithm stays at
+        // the optimal p-1 blocks through every port for every p.
+        use crate::collectives::reduce_scatter_block_sim;
+        let chunk = 16usize;
+        for p in [15usize, 31, 63] {
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..p * chunk).map(|i| (r + i) as i64).collect()).collect();
+            let (rh, _) =
+                rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost)
+                    .unwrap();
+            let circ = reduce_scatter_block_sim(&inputs, chunk, 1, Arc::new(SumOp), 8, &UnitCost)
+                .unwrap();
+            assert!(
+                rh.bytes >= circ.stats.bytes,
+                "p={p}: rh bytes={} circ bytes={}",
+                rh.bytes,
+                circ.stats.bytes
+            );
+            assert!(
+                rh.max_rank_bytes as f64 > 1.4 * circ.stats.max_rank_bytes as f64,
+                "p={p}: rh max/rank={} circ max/rank={}",
+                rh.max_rank_bytes,
+                circ.stats.max_rank_bytes
+            );
+        }
+        // And for p just above a power of two, the overhead is small —
+        // both algorithms near-optimal (the "certain p" qualifier).
+        let p = 17usize;
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..p * chunk).map(|i| (r + i) as i64).collect()).collect();
+        let (rh, _) =
+            rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        let circ =
+            reduce_scatter_block_sim(&inputs, chunk, 1, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        assert!((rh.bytes as f64) < 1.1 * circ.stats.bytes as f64);
+    }
+}

@@ -1,0 +1,115 @@
+//! Block-count selection — the paper's §3 tuning rules plus the
+//! cost-model-optimal choice.
+//!
+//! The paper picks, for `MPI_Bcast`, block *size* `F · sqrt(m / q)` for an
+//! empirical constant `F` (70 in Fig. 1), i.e. `n ≈ sqrt(m·q) / F`; for
+//! `MPI_Allgatherv` it picks `n = sqrt(m·q) / G` (G = 40 in Fig. 2).
+//! Under the linear model the exact optimum for the `n-1+q`-round pipeline
+//! minimising `(n-1+q)(α + β·m·s/n)` is `n* = sqrt(β·m·s·(q-1)/α)` — both
+//! are provided, and the block-size ablation bench contrasts them.
+
+use crate::schedule::ceil_log2;
+
+/// Clamp a candidate block count into `[1, max(m, 1)]`.
+fn clamp_n(n: f64, m: usize) -> usize {
+    let hi = m.max(1);
+    (n.round() as usize).clamp(1, hi)
+}
+
+/// The paper's broadcast rule: block size `F·sqrt(m/q)` elements, hence
+/// `n = m / (F·sqrt(m/q)) = sqrt(m·q)/F`.
+pub fn bcast_blocks_paper(m: usize, p: usize, f_const: f64) -> usize {
+    if p <= 1 || m == 0 {
+        return 1;
+    }
+    let q = ceil_log2(p) as f64;
+    clamp_n((m as f64 * q).sqrt() / f_const, m)
+}
+
+/// The paper's all-gatherv rule: `n = sqrt(m·q)/G` blocks (`m` = total
+/// data over all ranks).
+pub fn allgatherv_blocks_paper(m_total: usize, p: usize, g_const: f64) -> usize {
+    if p <= 1 || m_total == 0 {
+        return 1;
+    }
+    let q = ceil_log2(p) as f64;
+    clamp_n((m_total as f64 * q).sqrt() / g_const, m_total)
+}
+
+/// Linear-cost-model optimum for the `n-1+q` round pipeline over an
+/// `m`-element, `elem_bytes`-per-element buffer:
+/// `T(n) = (n-1+q)(α + β·B/n)` with `B = m·elem_bytes` is minimised at
+/// `n* = sqrt(β·B·(q-1)/α)`.
+pub fn bcast_blocks_model(
+    m: usize,
+    p: usize,
+    elem_bytes: usize,
+    alpha: f64,
+    beta: f64,
+) -> usize {
+    if p <= 1 || m == 0 {
+        return 1;
+    }
+    let q = ceil_log2(p) as f64;
+    let bytes = (m * elem_bytes) as f64;
+    clamp_n((beta * bytes * (q - 1.0).max(1.0) / alpha).sqrt(), m)
+}
+
+/// Predicted pipeline time under the linear model (for quick what-if
+/// analysis without running the simulator).
+pub fn pipeline_time_model(
+    m: usize,
+    n: usize,
+    p: usize,
+    elem_bytes: usize,
+    alpha: f64,
+    beta: f64,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let q = ceil_log2(p) as f64;
+    let n = n.max(1) as f64;
+    let block_bytes = (m * elem_bytes) as f64 / n;
+    (n - 1.0 + q) * (alpha + beta * block_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rule_scales_with_sqrt_m() {
+        let n1 = bcast_blocks_paper(1 << 16, 256, 70.0);
+        let n2 = bcast_blocks_paper(1 << 20, 256, 70.0);
+        // m grows 16x => n grows ~4x.
+        let ratio = n2 as f64 / n1 as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(bcast_blocks_paper(0, 16, 70.0), 1);
+        assert_eq!(bcast_blocks_paper(100, 1, 70.0), 1);
+        assert_eq!(allgatherv_blocks_paper(0, 16, 40.0), 1);
+        assert_eq!(bcast_blocks_model(0, 16, 4, 1e-6, 1e-10), 1);
+    }
+
+    #[test]
+    fn model_optimum_beats_neighbors() {
+        // n* from the model should (weakly) beat n*/2 and 2n* under the
+        // model-predicted time.
+        let (m, p, eb, a, b) = (1 << 20, 300, 4usize, 2e-6, 1e-10);
+        let n = bcast_blocks_model(m, p, eb, a, b);
+        let t = pipeline_time_model(m, n, p, eb, a, b);
+        let t_half = pipeline_time_model(m, (n / 2).max(1), p, eb, a, b);
+        let t_double = pipeline_time_model(m, n * 2, p, eb, a, b);
+        assert!(t <= t_half * 1.001, "t={t} t_half={t_half}");
+        assert!(t <= t_double * 1.001, "t={t} t_double={t_double}");
+    }
+
+    #[test]
+    fn n_clamped_to_m() {
+        assert!(bcast_blocks_paper(4, 1 << 20, 0.0001) <= 4);
+    }
+}

@@ -1,0 +1,284 @@
+//! The coordinator engine: executes planned collective requests over the
+//! simulated machine, with schedule caching, optional XLA-backed ⊕, data
+//! validation, and metrics — the service layer behind the `cbcast` CLI
+//! and the benchmark drivers.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::collectives::baselines;
+use crate::collectives::{
+    allgatherv_sim, allreduce_sim, bcast_sim, reduce_scatter_sim, reduce_sim, ReduceOp, SumOp,
+};
+use crate::schedule::ScheduleCache;
+use crate::sim::cost::CostModel;
+use crate::sim::network::RunStats;
+
+use super::metrics::Metrics;
+use super::planner::{plan, Algo, Kind, Plan, Request, TuningParams};
+
+#[cfg(test)]
+use super::planner::Dist;
+
+/// What the engine reports per request.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub plan: Plan,
+    pub stats: RunStats,
+    /// Wall-clock of the whole simulated run (schedule computation +
+    /// simulation + validation), seconds.
+    pub wall: f64,
+    /// Simulated completion time under the chosen cost model, seconds.
+    pub sim_time: f64,
+    /// Payload checksum validation outcome.
+    pub valid: bool,
+}
+
+/// The engine. Owns the schedule cache and metrics; cost model and ⊕ are
+/// per-call so benches can sweep them.
+pub struct Engine {
+    pub cache: Arc<ScheduleCache>,
+    pub metrics: Metrics,
+    pub tuning: TuningParams,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine {
+            cache: Arc::new(ScheduleCache::new()),
+            metrics: Metrics::new(),
+            tuning: TuningParams::default(),
+        }
+    }
+
+    /// Execute one request with element type i64 and SumOp (the generic
+    /// driver used by the CLI; benches use the typed entry points below).
+    pub fn run(&self, req: &Request, cost: &dyn CostModel) -> anyhow::Result<Report> {
+        self.run_with_op(req, cost, Arc::new(SumOp))
+    }
+
+    /// Execute one request with a caller-chosen reduction operator.
+    pub fn run_with_op(
+        &self,
+        req: &Request,
+        cost: &dyn CostModel,
+        op: Arc<dyn ReduceOp<i64>>,
+    ) -> anyhow::Result<Report> {
+        let t0 = Instant::now();
+        let pl = plan(req, &self.tuning);
+        let p = req.p;
+        let (stats, valid) = match (req.kind, req.algo) {
+            (Kind::Bcast, Algo::Circulant) => {
+                let data = test_pattern(req.m, 1);
+                let res = bcast_sim(p, req.root, &data, pl.n, req.elem_bytes, cost)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let ok = res.buffers.iter().all(|b| b == &data);
+                (res.stats, ok)
+            }
+            (Kind::Bcast, Algo::Binomial) => {
+                let data = test_pattern(req.m, 1);
+                let (stats, bufs) =
+                    baselines::binomial_bcast_sim(p, req.root, &data, req.elem_bytes, cost)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                (stats, bufs.iter().all(|b| b == &data))
+            }
+            (Kind::Bcast, Algo::VanDeGeijn) => {
+                let data = test_pattern(req.m, 1);
+                let (stats, bufs) =
+                    baselines::vdg_bcast_sim(p, req.root, &data, req.elem_bytes, cost)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                (stats, bufs.iter().all(|b| b == &data))
+            }
+            (Kind::Reduce, Algo::Circulant) => {
+                let inputs: Vec<Vec<i64>> = (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
+                let expect = column_sums(&inputs);
+                let res = reduce_sim(&inputs, req.root, pl.n, op, req.elem_bytes, cost)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                (res.stats, res.buffer == expect)
+            }
+            (Kind::Reduce, Algo::Binomial) => {
+                let inputs: Vec<Vec<i64>> = (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
+                let expect = column_sums(&inputs);
+                let (stats, buf) =
+                    baselines::binomial_reduce_sim(&inputs, req.root, op, req.elem_bytes, cost)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                (stats, buf == expect)
+            }
+            (Kind::Allgatherv, Algo::Circulant) => {
+                let counts = req.dist.counts(p, req.m);
+                let inputs = dist_inputs(&counts);
+                let res = allgatherv_sim(&inputs, pl.n, req.elem_bytes, cost)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let ok = res
+                    .buffers
+                    .iter()
+                    .all(|rows| rows.iter().zip(&inputs).all(|(row, inp)| row == inp));
+                (res.stats, ok)
+            }
+            (Kind::Allgatherv, Algo::Ring) => {
+                let counts = req.dist.counts(p, req.m);
+                let inputs = dist_inputs(&counts);
+                let (stats, bufs) =
+                    baselines::ring_allgatherv_sim(&inputs, req.elem_bytes, cost)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let ok = bufs
+                    .iter()
+                    .all(|rows| rows.iter().zip(&inputs).all(|(row, inp)| row == inp));
+                (stats, ok)
+            }
+            (Kind::ReduceScatter, Algo::Circulant) => {
+                let counts = req.dist.counts(p, req.m);
+                let total: usize = counts.iter().sum();
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| test_pattern(total, r as i64)).collect();
+                let sums = column_sums(&inputs);
+                let res =
+                    reduce_scatter_sim(&inputs, &counts, pl.n, op, req.elem_bytes, cost)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let ok = check_chunks(&res.chunks, &sums, &counts);
+                (res.stats, ok)
+            }
+            (Kind::ReduceScatter, Algo::Ring) => {
+                let counts = req.dist.counts(p, req.m);
+                let total: usize = counts.iter().sum();
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| test_pattern(total, r as i64)).collect();
+                let sums = column_sums(&inputs);
+                let (stats, chunks) = baselines::ring_reduce_scatter_sim(
+                    &inputs,
+                    &counts,
+                    op,
+                    req.elem_bytes,
+                    cost,
+                )
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let ok = check_chunks(&chunks, &sums, &counts);
+                (stats, ok)
+            }
+            (Kind::Allreduce, Algo::Circulant) => {
+                let inputs: Vec<Vec<i64>> = (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
+                let expect = column_sums(&inputs);
+                let res = allreduce_sim(&inputs, pl.n, op, req.elem_bytes, cost)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let ok = res.buffers.iter().all(|b| b == &expect);
+                let mut stats = res.rs_stats.clone();
+                stats.rounds += res.ag_stats.rounds;
+                stats.active_rounds += res.ag_stats.active_rounds;
+                stats.messages += res.ag_stats.messages;
+                stats.bytes += res.ag_stats.bytes;
+                stats.time += res.ag_stats.time;
+                (stats, ok)
+            }
+            (kind, algo) => {
+                anyhow::bail!("unsupported combination: {kind:?} with {algo:?}")
+            }
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.observe(&format!("{:?}", req.kind), stats.time, wall, valid);
+        Ok(Report { plan: pl, sim_time: stats.time, stats, wall, valid })
+    }
+}
+
+fn test_pattern(m: usize, seed: i64) -> Vec<i64> {
+    (0..m as i64).map(|i| (seed * 31 + i * 7) % 1009).collect()
+}
+
+fn column_sums(inputs: &[Vec<i64>]) -> Vec<i64> {
+    let m = inputs[0].len();
+    (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect()
+}
+
+fn dist_inputs(counts: &[usize]) -> Vec<Vec<i64>> {
+    counts
+        .iter()
+        .enumerate()
+        .map(|(r, &c)| (0..c as i64).map(|i| (r as i64 * 131 + i) % 997).collect())
+        .collect()
+}
+
+fn check_chunks(chunks: &[Vec<i64>], sums: &[i64], counts: &[usize]) -> bool {
+    let mut off = 0usize;
+    for (r, chunk) in chunks.iter().enumerate() {
+        if chunk != &sums[off..off + counts[r]] {
+            return false;
+        }
+        off += counts[r];
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::UnitCost;
+
+    #[test]
+    fn engine_runs_all_kinds_circulant() {
+        let eng = Engine::new();
+        for kind in [Kind::Bcast, Kind::Reduce, Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce]
+        {
+            let mut req = Request::new(kind, 17, 1000);
+            req.blocks = Some(4);
+            let rep = eng.run(&req, &UnitCost).unwrap();
+            assert!(rep.valid, "{kind:?} failed validation");
+            assert!(rep.stats.messages > 0);
+        }
+    }
+
+    #[test]
+    fn engine_runs_baselines() {
+        let eng = Engine::new();
+        let combos = [
+            (Kind::Bcast, Algo::Binomial),
+            (Kind::Bcast, Algo::VanDeGeijn),
+            (Kind::Reduce, Algo::Binomial),
+            (Kind::Allgatherv, Algo::Ring),
+            (Kind::ReduceScatter, Algo::Ring),
+        ];
+        for (kind, algo) in combos {
+            let mut req = Request::new(kind, 12, 600);
+            req.algo = algo;
+            let rep = eng.run(&req, &UnitCost).unwrap();
+            assert!(rep.valid, "{kind:?}/{algo:?} failed validation");
+        }
+    }
+
+    #[test]
+    fn engine_distributions() {
+        let eng = Engine::new();
+        for dist in [Dist::Regular, Dist::Irregular, Dist::Degenerate] {
+            let mut req = Request::new(Kind::Allgatherv, 9, 900);
+            req.dist = dist;
+            req.blocks = Some(3);
+            let rep = eng.run(&req, &UnitCost).unwrap();
+            assert!(rep.valid, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn engine_rejects_unsupported() {
+        let eng = Engine::new();
+        let mut req = Request::new(Kind::Allgatherv, 9, 900);
+        req.algo = Algo::Binomial;
+        assert!(eng.run(&req, &UnitCost).is_err());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let eng = Engine::new();
+        let mut req = Request::new(Kind::Bcast, 9, 100);
+        req.blocks = Some(2);
+        for _ in 0..3 {
+            eng.run(&req, &UnitCost).unwrap();
+        }
+        let text = eng.metrics.render();
+        assert!(text.contains("Bcast"), "{text}");
+        assert!(text.contains("count=3"), "{text}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Lightweight metrics for the coordinator: per-operation counters and
+//! simple aggregates, rendered as text (the moral equivalent of an MPI
+//! library's PMPI counters).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Default)]
+struct OpStats {
+    count: u64,
+    failures: u64,
+    sim_time_total: f64,
+    wall_total: f64,
+    wall_max: f64,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    ops: Mutex<BTreeMap<String, OpStats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one collective execution.
+    pub fn observe(&self, op: &str, sim_time: f64, wall: f64, valid: bool) {
+        let mut g = self.ops.lock().unwrap();
+        let s = g.entry(op.to_string()).or_default();
+        s.count += 1;
+        if !valid {
+            s.failures += 1;
+        }
+        s.sim_time_total += sim_time;
+        s.wall_total += wall;
+        s.wall_max = s.wall_max.max(wall);
+    }
+
+    /// Total operations observed.
+    pub fn total(&self) -> u64 {
+        self.ops.lock().unwrap().values().map(|s| s.count).sum()
+    }
+
+    /// Render a text report.
+    pub fn render(&self) -> String {
+        let g = self.ops.lock().unwrap();
+        let mut out = String::from("op                count  failures  sim_time_total  wall_avg  wall_max\n");
+        for (name, s) in g.iter() {
+            out.push_str(&format!(
+                "{name:<16} count={:<5} fail={:<4} sim={:<12.6} wavg={:<9.6} wmax={:.6}\n",
+                s.count,
+                s.failures,
+                s.sim_time_total,
+                if s.count > 0 { s.wall_total / s.count as f64 } else { 0.0 },
+                s.wall_max,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_and_render() {
+        let m = Metrics::new();
+        m.observe("Bcast", 0.5, 0.01, true);
+        m.observe("Bcast", 0.7, 0.02, false);
+        m.observe("Reduce", 0.1, 0.005, true);
+        assert_eq!(m.total(), 3);
+        let text = m.render();
+        assert!(text.contains("Bcast"));
+        assert!(text.contains("fail=1"));
+        assert!(text.contains("Reduce"));
+    }
+
+    #[test]
+    fn threaded_observe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.observe("X", 0.0, 0.0, true);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.total(), 400);
+    }
+}

@@ -1,0 +1,12 @@
+//! The coordinator: the service layer that plans and executes collective
+//! requests (the role of an MPI library's collective framework) — request
+//! vocabulary and tuning decisions in [`planner`], execution with schedule
+//! caching and validation in [`engine`], observability in [`metrics`].
+
+pub mod engine;
+pub mod metrics;
+pub mod planner;
+
+pub use engine::{Engine, Report};
+pub use metrics::Metrics;
+pub use planner::{parse_cost, plan, Algo, Dist, Kind, Plan, Request, TuningParams};

@@ -1,0 +1,267 @@
+//! Request vocabulary and planning: which algorithm, how many blocks,
+//! which cost model — the decisions an MPI library's tuned module makes,
+//! centralised and inspectable.
+
+use crate::collectives::tuning;
+use crate::schedule::ceil_log2;
+use crate::sim::cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
+
+/// The collective operations the engine serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Bcast,
+    Reduce,
+    Allgatherv,
+    ReduceScatter,
+    Allreduce,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s {
+            "bcast" => Kind::Bcast,
+            "reduce" => Kind::Reduce,
+            "allgatherv" | "allgather" => Kind::Allgatherv,
+            "reduce-scatter" | "reduce_scatter" => Kind::ReduceScatter,
+            "allreduce" => Kind::Allreduce,
+            _ => return None,
+        })
+    }
+}
+
+/// Algorithm family to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// The paper's circulant-schedule pipelined algorithms.
+    Circulant,
+    /// Binomial tree (bcast/reduce) — the native small-message algorithm.
+    Binomial,
+    /// van de Geijn scatter+allgather (bcast) — native large-message.
+    VanDeGeijn,
+    /// Ring (allgatherv / reduce-scatter) — native large-message.
+    Ring,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        Some(match s {
+            "circulant" | "new" => Algo::Circulant,
+            "binomial" => Algo::Binomial,
+            "vdg" | "native-large" => Algo::VanDeGeijn,
+            "ring" => Algo::Ring,
+            _ => return None,
+        })
+    }
+}
+
+/// Input distribution for the irregular collectives (Fig. 2's problems).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dist {
+    /// `m/p` everywhere.
+    Regular,
+    /// `(i mod 3) * m/p` for rank `i`.
+    Irregular,
+    /// rank 0 holds all `m`, everyone else nothing.
+    Degenerate,
+}
+
+impl Dist {
+    pub fn parse(s: &str) -> Option<Dist> {
+        Some(match s {
+            "regular" => Dist::Regular,
+            "irregular" => Dist::Irregular,
+            "degenerate" => Dist::Degenerate,
+            _ => return None,
+        })
+    }
+
+    /// Per-rank element counts for total volume `m` over `p` ranks.
+    pub fn counts(&self, p: usize, m: usize) -> Vec<usize> {
+        match self {
+            Dist::Regular => {
+                let base = m / p;
+                let rem = m % p;
+                (0..p).map(|i| base + usize::from(i < rem)).collect()
+            }
+            Dist::Irregular => {
+                let unit = m / p;
+                let mut c: Vec<usize> = (0..p).map(|i| (i % 3) * unit).collect();
+                // Put the remainder volume on rank 0 so totals stay m-ish.
+                let used: usize = c.iter().sum();
+                if used < m {
+                    c[0] += m - used;
+                }
+                c
+            }
+            Dist::Degenerate => {
+                let mut c = vec![0usize; p];
+                c[0] = m;
+                c
+            }
+        }
+    }
+}
+
+/// One collective request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub kind: Kind,
+    pub p: usize,
+    /// Total elements (bcast/reduce: buffer length; allgatherv /
+    /// reduce-scatter: sum over ranks).
+    pub m: usize,
+    pub root: usize,
+    pub elem_bytes: usize,
+    /// None = auto-tune via the paper's rule.
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub dist: Dist,
+}
+
+impl Request {
+    pub fn new(kind: Kind, p: usize, m: usize) -> Self {
+        Request {
+            kind,
+            p,
+            m,
+            root: 0,
+            elem_bytes: 4,
+            blocks: None,
+            algo: Algo::Circulant,
+            dist: Dist::Regular,
+        }
+    }
+}
+
+/// The planner's output: everything the engine needs to run the request.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub n: usize,
+    pub q: usize,
+    pub predicted_rounds: usize,
+}
+
+/// Tuning constants (the paper's F and G, plus α/β for the model rule).
+#[derive(Debug, Clone)]
+pub struct TuningParams {
+    pub f_const: f64,
+    pub g_const: f64,
+}
+
+impl Default for TuningParams {
+    fn default() -> Self {
+        // The paper's experimentally chosen constants (Fig. 1: F = 70,
+        // Fig. 2: G = 40).
+        TuningParams { f_const: 70.0, g_const: 40.0 }
+    }
+}
+
+/// Choose the block count and predict the round count for a request.
+pub fn plan(req: &Request, tp: &TuningParams) -> Plan {
+    let q = ceil_log2(req.p.max(1));
+    let n = req.blocks.unwrap_or_else(|| match req.kind {
+        Kind::Bcast | Kind::Reduce => tuning::bcast_blocks_paper(req.m, req.p, tp.f_const),
+        Kind::Allgatherv | Kind::ReduceScatter | Kind::Allreduce => {
+            tuning::allgatherv_blocks_paper(req.m, req.p, tp.g_const)
+        }
+    });
+    let n = n.max(1);
+    let rounds = if req.p <= 1 {
+        0
+    } else {
+        match req.algo {
+            Algo::Circulant => match req.kind {
+                Kind::Allreduce => 2 * (n - 1 + q),
+                _ => n - 1 + q,
+            },
+            Algo::Binomial => q,
+            Algo::VanDeGeijn => q + req.p - 1,
+            Algo::Ring => req.p - 1,
+        }
+    };
+    Plan { n, q, predicted_rounds: rounds }
+}
+
+/// Parse a cost-model spec: `unit`, `linear[:alpha:beta]`,
+/// `vega:<cores>`, `cluster:<cores>`.
+pub fn parse_cost(spec: &str) -> Option<Box<dyn CostModel>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts[0] {
+        "unit" => Some(Box::new(UnitCost)),
+        "linear" => {
+            if parts.len() == 3 {
+                let alpha = parts[1].parse().ok()?;
+                let beta = parts[2].parse().ok()?;
+                Some(Box::new(LinearCost::new(alpha, beta)))
+            } else {
+                Some(Box::new(LinearCost::hpc_default()))
+            }
+        }
+        "vega" => {
+            let cores = parts.get(1)?.parse().ok()?;
+            Some(Box::new(HierarchicalCost::vega(cores)))
+        }
+        "cluster" => {
+            let cores = parts.get(1)?.parse().ok()?;
+            Some(Box::new(HierarchicalCost::small_cluster(cores)))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_counts_sum() {
+        for p in [4usize, 9, 17] {
+            for m in [0usize, 100, 1001] {
+                let reg = Dist::Regular.counts(p, m);
+                assert_eq!(reg.iter().sum::<usize>(), m);
+                let deg = Dist::Degenerate.counts(p, m);
+                assert_eq!(deg.iter().sum::<usize>(), m);
+                assert_eq!(deg[0], m);
+                let irr = Dist::Irregular.counts(p, m);
+                // Irregular sums to m when p >= 3 (remainder goes to 0).
+                if m >= p {
+                    assert_eq!(irr.iter().sum::<usize>(), m, "p={p} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rounds_match_theory() {
+        let mut req = Request::new(Kind::Bcast, 17, 10000);
+        req.blocks = Some(13);
+        let pl = plan(&req, &TuningParams::default());
+        assert_eq!(pl.q, 5);
+        assert_eq!(pl.predicted_rounds, 13 - 1 + 5);
+
+        req.algo = Algo::Binomial;
+        assert_eq!(plan(&req, &TuningParams::default()).predicted_rounds, 5);
+
+        req.algo = Algo::VanDeGeijn;
+        assert_eq!(plan(&req, &TuningParams::default()).predicted_rounds, 5 + 16);
+    }
+
+    #[test]
+    fn parse_cost_specs() {
+        assert!(parse_cost("unit").is_some());
+        assert!(parse_cost("linear").is_some());
+        assert!(parse_cost("linear:1e-6:1e-10").is_some());
+        assert!(parse_cost("vega:128").is_some());
+        assert!(parse_cost("cluster:32").is_some());
+        assert!(parse_cost("bogus").is_none());
+        assert!(parse_cost("vega").is_none());
+    }
+
+    #[test]
+    fn kind_algo_parse() {
+        assert_eq!(Kind::parse("bcast"), Some(Kind::Bcast));
+        assert_eq!(Kind::parse("reduce-scatter"), Some(Kind::ReduceScatter));
+        assert_eq!(Algo::parse("new"), Some(Algo::Circulant));
+        assert!(Kind::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,36 @@
+//! # circulant-bcast
+//!
+//! Production-quality reproduction of *“Optimal Broadcast Schedules in
+//! Logarithmic Time with Applications to Broadcast, All-Broadcast,
+//! Reduction and All-Reduction”* (J. L. Träff, 2024).
+//!
+//! The library provides, in three layers:
+//!
+//! * [`schedule`] — the paper's core contribution: round-optimal broadcast
+//!   schedules on `ceil(log2 p)`-regular circulant graphs, computed in
+//!   **O(log p)** time per processor (Algorithms 2–6, Theorems 2–3), plus
+//!   old-style baselines, the doubling constructions, an exhaustive
+//!   verifier and a schedule cache.
+//! * [`sim`] — the machine substrate: a fully-connected, one-ported,
+//!   send/receive-bidirectional, round-based message-passing simulator
+//!   with linear and hierarchical α-β cost models, and a threaded runtime
+//!   where every simulated rank is an OS thread.
+//! * [`collectives`] — the MPI-style collectives built on the schedules:
+//!   pipelined broadcast (Algorithm 1), all-broadcast/allgatherv
+//!   (Algorithm 7), reduction and all-reduction via reversed schedules
+//!   (Observation 1), their classical baselines (binomial, ring,
+//!   recursive-doubling, van-de-Geijn-style), and block-count tuning.
+//! * [`runtime`] — the PJRT bridge: AOT-compiled XLA artifacts (authored
+//!   in JAX/Pallas at build time, `artifacts/*.hlo.txt`) loaded and
+//!   executed from Rust for the reduction operator hot path.
+//! * [`coordinator`] — the service layer tying it together: planner,
+//!   engine, metrics, request loop (used by the `cbcast` CLI).
+//! * [`testkit`] — a tiny property-testing harness (offline substitute for
+//!   `proptest`).
+
+pub mod collectives;
+pub mod coordinator;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod testkit;

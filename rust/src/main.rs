@@ -1,0 +1,286 @@
+//! `cbcast` — CLI for the circulant-broadcast collectives engine.
+//!
+//! ```text
+//! cbcast schedule -p 17 [-r RANK]          print recv/send schedule table
+//! cbcast verify -p LO[..HI] [--sample N]   machine-check the 4 conditions
+//! cbcast run KIND -p P -m M [options]      simulate a collective
+//!      KIND: bcast | reduce | allgatherv | reduce-scatter | allreduce
+//!      --root R --blocks N|auto --algo circulant|binomial|vdg|ring
+//!      --dist regular|irregular|degenerate
+//!      --cost unit|linear[:a:b]|vega:CORES|cluster:CORES
+//! cbcast artifacts [--dir D]               list + compile AOT artifacts
+//! cbcast serve                             line-based request loop (stdin)
+//! ```
+//!
+//! (Hand-rolled argument parsing: the image has no network access and the
+//! vendored crate set does not include clap.)
+
+use std::sync::Arc;
+
+use circulant_bcast::coordinator::{parse_cost, Algo, Dist, Engine, Kind, Request};
+use circulant_bcast::runtime::XlaRuntime;
+use circulant_bcast::schedule::{recv_schedule, send_schedule, verify_all, verify_sampled, Skips};
+use circulant_bcast::sim::cost::CostModel;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("schedule") => cmd_schedule(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("artifacts") => cmd_artifacts(&args[1..]),
+        Some("serve") => cmd_serve(),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}; try `cbcast help`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!("cbcast — round-optimal broadcast schedules (Träff 2024) and collectives");
+    println!("commands: schedule, verify, run, artifacts, serve, help");
+    println!("see the header of rust/src/main.rs or README.md for options");
+}
+
+/// Tiny flag parser: returns the value following `name`.
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn opt_usize(args: &[String], name: &str, default: usize) -> usize {
+    opt(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_schedule(args: &[String]) -> i32 {
+    let p = opt_usize(args, "-p", 17);
+    let sk = Skips::new(p);
+    let q = sk.q();
+    println!("p = {p}, q = {q}, skips = {:?}", sk.as_slice());
+    let ranks: Vec<usize> = match opt(args, "-r") {
+        Some(r) => vec![r.parse().unwrap_or(0)],
+        None => (0..p).collect(),
+    };
+    // Header like the paper's Table 1.
+    print!("{:<14}", "r:");
+    for &r in &ranks {
+        print!("{r:>5}");
+    }
+    println!();
+    let recvs: Vec<_> = ranks.iter().map(|&r| recv_schedule(&sk, r)).collect();
+    let sends: Vec<_> = ranks.iter().map(|&r| send_schedule(&sk, r)).collect();
+    print!("{:<14}", "b:");
+    for s in &recvs {
+        print!("{:>5}", s.baseblock);
+    }
+    println!();
+    for k in 0..q {
+        print!("recvblock[{k}]: ");
+        for s in &recvs {
+            print!("{:>5}", s.blocks[k]);
+        }
+        println!();
+    }
+    for k in 0..q {
+        print!("sendblock[{k}]: ");
+        for s in &sends {
+            print!("{:>5}", s.blocks[k]);
+        }
+        println!();
+    }
+    0
+}
+
+fn cmd_verify(args: &[String]) -> i32 {
+    let spec = opt(args, "-p").unwrap_or("2..64");
+    let (lo, hi) = match spec.split_once("..") {
+        Some((a, b)) => (a.parse().unwrap_or(2), b.parse().unwrap_or(64)),
+        None => {
+            let v: usize = spec.parse().unwrap_or(17);
+            (v, v)
+        }
+    };
+    let sample = opt(args, "--sample").and_then(|v| v.parse::<usize>().ok());
+    let mut worst_viol = 0usize;
+    for p in lo..=hi {
+        let rep = if let Some(k) = sample {
+            let ranks: Vec<usize> = (0..k).map(|i| (i * 2654435761) % p).collect();
+            verify_sampled(p, &ranks)
+        } else {
+            verify_all(p)
+        };
+        if !rep.ok() {
+            eprintln!("p={p}: FAILED: {:?}", &rep.failures[..rep.failures.len().min(3)]);
+            return 1;
+        }
+        worst_viol = worst_viol.max(rep.max_violations);
+    }
+    println!(
+        "verified p in {lo}..={hi}{}: all four conditions hold; max send-schedule \
+         violations per rank = {worst_viol} (Theorem 3 bound: 4)",
+        if sample.is_some() { " (sampled)" } else { "" }
+    );
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(kind) = args.first().and_then(|k| Kind::parse(k)) else {
+        eprintln!("run: first arg must be a collective kind");
+        return 2;
+    };
+    let p = opt_usize(args, "-p", 16);
+    let m = opt_usize(args, "-m", 1 << 16);
+    let mut req = Request::new(kind, p, m);
+    req.root = opt_usize(args, "--root", 0);
+    req.elem_bytes = opt_usize(args, "--elem-bytes", 4);
+    if let Some(b) = opt(args, "--blocks") {
+        if b != "auto" {
+            req.blocks = b.parse().ok();
+        }
+    }
+    if let Some(a) = opt(args, "--algo") {
+        match Algo::parse(a) {
+            Some(a) => req.algo = a,
+            None => {
+                eprintln!("unknown algo {a:?}");
+                return 2;
+            }
+        }
+    }
+    if let Some(d) = opt(args, "--dist") {
+        match Dist::parse(d) {
+            Some(d) => req.dist = d,
+            None => {
+                eprintln!("unknown dist {d:?}");
+                return 2;
+            }
+        }
+    }
+    let cost: Box<dyn CostModel> = match parse_cost(opt(args, "--cost").unwrap_or("linear")) {
+        Some(c) => c,
+        None => {
+            eprintln!("bad --cost spec");
+            return 2;
+        }
+    };
+    let engine = Engine::new();
+    match engine.run(&req, cost.as_ref()) {
+        Ok(rep) => {
+            println!(
+                "{kind:?} p={p} m={m} algo={:?} dist={:?} n={} q={} rounds={} msgs={} \
+                 bytes={} sim_time={:.6}s wall={:.3}ms valid={}",
+                req.algo,
+                req.dist,
+                rep.plan.n,
+                rep.plan.q,
+                rep.stats.rounds,
+                rep.stats.messages,
+                rep.stats.bytes,
+                rep.sim_time,
+                rep.wall * 1e3,
+                rep.valid
+            );
+            i32::from(!rep.valid)
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts(args: &[String]) -> i32 {
+    let dir = opt(args, "--dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(circulant_bcast::runtime::default_dir);
+    match XlaRuntime::with_dir(&dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            for a in rt.artifacts() {
+                println!(
+                    "  {:?} op={} dtype={:?} shape={:?} ({})",
+                    a.kind,
+                    a.op,
+                    a.dtype,
+                    a.shape,
+                    a.path.file_name().unwrap().to_string_lossy()
+                );
+            }
+            let n = rt.compile_all().expect("compile");
+            println!("compiled {n} artifacts OK");
+            0
+        }
+        Err(e) => {
+            eprintln!("artifacts: {e}");
+            1
+        }
+    }
+}
+
+/// Line-based request loop: one request per line, e.g.
+/// `bcast p=1000 m=65536 blocks=auto algo=circulant cost=linear`.
+fn cmd_serve() -> i32 {
+    use std::io::BufRead;
+    let engine = Arc::new(Engine::new());
+    let stdin = std::io::stdin();
+    println!("cbcast serve: one request per line; `metrics`, `quit`");
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "quit" {
+            break;
+        }
+        if line == "metrics" {
+            print!("{}", engine.metrics.render());
+            continue;
+        }
+        match parse_serve_line(line) {
+            Some((req, cost)) => match engine.run(&req, cost.as_ref()) {
+                Ok(rep) => println!(
+                    "ok kind={:?} n={} rounds={} bytes={} sim_time={:.6} valid={}",
+                    req.kind, rep.plan.n, rep.stats.rounds, rep.stats.bytes, rep.sim_time, rep.valid
+                ),
+                Err(e) => println!("error: {e}"),
+            },
+            None => println!("parse error: {line:?}"),
+        }
+    }
+    0
+}
+
+fn parse_serve_line(line: &str) -> Option<(Request, Box<dyn CostModel>)> {
+    let mut words = line.split_whitespace();
+    let kind = Kind::parse(words.next()?)?;
+    let mut req = Request::new(kind, 16, 1 << 16);
+    let mut cost: Box<dyn CostModel> = parse_cost("linear").unwrap();
+    for w in words {
+        let (k, v) = w.split_once('=')?;
+        match k {
+            "p" => req.p = v.parse().ok()?,
+            "m" => req.m = v.parse().ok()?,
+            "root" => req.root = v.parse().ok()?,
+            "blocks" => {
+                if v != "auto" {
+                    req.blocks = Some(v.parse().ok()?);
+                }
+            }
+            "algo" => req.algo = Algo::parse(v)?,
+            "dist" => req.dist = Dist::parse(v)?,
+            "cost" => cost = parse_cost(v)?,
+            "elem_bytes" => req.elem_bytes = v.parse().ok()?,
+            _ => return None,
+        }
+    }
+    Some((req, cost))
+}

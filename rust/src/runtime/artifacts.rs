@@ -1,0 +1,138 @@
+//! Artifact discovery: find and describe the AOT-compiled HLO text
+//! modules produced by `python -m compile.aot` (see `python/compile/aot.py`
+//! for the naming convention, which is the contract between the layers):
+//!
+//! ```text
+//! <fn>.<op>.<dtype>.<shape>.hlo.txt
+//! pair.sum.f32.4096.hlo.txt       stack.sum.f32.8x4096.hlo.txt
+//! ```
+
+use std::path::{Path, PathBuf};
+
+/// Which Layer-2 function an artifact encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FnKind {
+    /// `reduce_pair(a, b)` — two inputs, one output.
+    Pair,
+    /// `reduce_stack(xs[w, m])` — one input, one output.
+    Stack,
+    /// `reduce_pair_vjp(a, b)` — two inputs, three outputs.
+    PairVjp,
+}
+
+/// Element type of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One discovered artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    pub kind: FnKind,
+    /// Operator name ("sum", "max", ...).
+    pub op: String,
+    pub dtype: DType,
+    /// `[m]` for pair/pair_vjp, `[w, m]` for stack.
+    pub shape: Vec<usize>,
+    pub path: PathBuf,
+}
+
+impl Artifact {
+    /// Block length `m` (the trailing dimension).
+    pub fn block_len(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    /// Parse the artifact filename convention; `None` for foreign files.
+    pub fn parse(path: &Path) -> Option<Artifact> {
+        let name = path.file_name()?.to_str()?;
+        let stem = name.strip_suffix(".hlo.txt")?;
+        let parts: Vec<&str> = stem.split('.').collect();
+        if parts.len() != 4 {
+            return None;
+        }
+        let kind = match parts[0] {
+            "pair" => FnKind::Pair,
+            "stack" => FnKind::Stack,
+            "pair_vjp" => FnKind::PairVjp,
+            _ => return None,
+        };
+        let op = parts[1].to_string();
+        let dtype = match parts[2] {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            _ => return None,
+        };
+        let shape: Vec<usize> = parts[3]
+            .split('x')
+            .map(|s| s.parse().ok())
+            .collect::<Option<Vec<_>>>()?;
+        let want_dims = if kind == FnKind::Stack { 2 } else { 1 };
+        if shape.len() != want_dims {
+            return None;
+        }
+        Some(Artifact { kind, op, dtype, shape, path: path.to_path_buf() })
+    }
+}
+
+/// Scan a directory for artifacts.
+pub fn discover(dir: &Path) -> std::io::Result<Vec<Artifact>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(a) = Artifact::parse(&entry.path()) {
+            out.push(a);
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}
+
+/// The default artifacts directory: `$CBCAST_ARTIFACTS` or `./artifacts`
+/// (relative to the workspace root when run via cargo).
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("CBCAST_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Prefer the manifest-relative location so tests/benches work from
+    // any cwd inside the workspace.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_pair() {
+        let a = Artifact::parse(Path::new("pair.sum.f32.4096.hlo.txt")).unwrap();
+        assert_eq!(a.kind, FnKind::Pair);
+        assert_eq!(a.op, "sum");
+        assert_eq!(a.dtype, DType::F32);
+        assert_eq!(a.shape, vec![4096]);
+        assert_eq!(a.block_len(), 4096);
+    }
+
+    #[test]
+    fn parse_stack() {
+        let a = Artifact::parse(Path::new("/x/stack.max.i32.8x1024.hlo.txt")).unwrap();
+        assert_eq!(a.kind, FnKind::Stack);
+        assert_eq!(a.shape, vec![8, 1024]);
+        assert_eq!(a.block_len(), 1024);
+    }
+
+    #[test]
+    fn parse_rejects_foreign() {
+        assert!(Artifact::parse(Path::new("manifest.json")).is_none());
+        assert!(Artifact::parse(Path::new("pair.sum.f32.hlo.txt")).is_none());
+        assert!(Artifact::parse(Path::new("what.sum.f32.64.hlo.txt")).is_none());
+        assert!(Artifact::parse(Path::new("pair.sum.f99.64.hlo.txt")).is_none());
+        assert!(Artifact::parse(Path::new("stack.sum.f32.64.hlo.txt")).is_none());
+    }
+}

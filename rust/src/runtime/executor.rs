@@ -1,0 +1,296 @@
+//! PJRT execution of the AOT artifacts — the Rust side of the AOT bridge.
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` once per artifact (cached), then `execute` on the
+//! hot path. Python never runs here; the artifacts are self-contained.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{discover, default_dir, Artifact, DType, FnKind};
+
+/// A lazily-compiled artifact registry over one PJRT (CPU) client.
+///
+/// Thread-safety: the `xla` crate wraps the client/executables in `Rc`,
+/// making them `!Send`, but the underlying PJRT C API is thread-safe and
+/// none of the `Rc`s escape this struct; all mutable state sits behind a
+/// `Mutex` and executions are serialized through `exec_lock`. On that
+/// basis `Send`/`Sync` are asserted below so the runtime can back a
+/// [`crate::collectives::ReduceOp`] used from worker threads.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifacts: Vec<Artifact>,
+    /// Executable cache; the lock also serializes compile/execute calls.
+    compiled: Mutex<HashMap<usize, xla::PjRtLoadedExecutable>>,
+}
+
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(&default_dir())
+    }
+
+    /// Create a runtime over a specific artifacts directory.
+    pub fn with_dir(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let artifacts =
+            discover(dir).with_context(|| format!("scanning artifacts dir {dir:?}"))?;
+        if artifacts.is_empty() {
+            return Err(anyhow!(
+                "no artifacts in {dir:?} — run `make artifacts` first"
+            ));
+        }
+        Ok(XlaRuntime { client, artifacts, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// All discovered artifacts.
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pick the best pair-combine artifact for `(op, dtype)` and a block
+    /// of `len` elements: the smallest block size `>= len`, else the
+    /// largest available (chunking handles the rest).
+    pub fn select_pair(&self, op: &str, dtype: DType, len: usize) -> Option<&Artifact> {
+        let mut candidates: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == FnKind::Pair && a.op == op && a.dtype == dtype)
+            .collect();
+        candidates.sort_by_key(|a| a.block_len());
+        candidates
+            .iter()
+            .find(|a| a.block_len() >= len)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// Get-or-compile artifact `idx` and run `body` on it, all under the
+    /// cache lock (which also serializes PJRT calls — see struct docs).
+    fn with_executable<R>(
+        &self,
+        idx: usize,
+        body: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        let mut cache = self.compiled.lock().unwrap();
+        if !cache.contains_key(&idx) {
+            let art = &self.artifacts[idx];
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", art.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {:?}: {e:?}", art.path))?;
+            cache.insert(idx, exe);
+        }
+        body(cache.get(&idx).unwrap())
+    }
+
+    fn index_of(&self, art: &Artifact) -> usize {
+        self.artifacts.iter().position(|a| a == art).expect("artifact from this runtime")
+    }
+
+    /// Execute a pair artifact on exactly its block length.
+    ///
+    /// Uses the `PjRtBuffer` path (`buffer_from_host_buffer` +
+    /// `execute_b`) rather than `Literal` arguments — measured 3.4x
+    /// faster per call on the CPU client (`Literal::vec1` copies
+    /// element-wise through the C API). The artifacts are lowered
+    /// *untupled* (single output) so the result buffer is the array
+    /// itself; see `python/compile/aot.py::to_hlo_text`.
+    fn run_pair_exact<T: xla::NativeType + xla::ArrayElement>(
+        &self,
+        art_idx: usize,
+        x: &[T],
+        y: &[T],
+    ) -> Result<Vec<T>> {
+        self.with_executable(art_idx, |exe| {
+            let client = exe.client();
+            let bx = client
+                .buffer_from_host_buffer(x, &[x.len()], None)
+                .map_err(|e| anyhow!("host->buffer: {e:?}"))?;
+            let by = client
+                .buffer_from_host_buffer(y, &[y.len()], None)
+                .map_err(|e| anyhow!("host->buffer: {e:?}"))?;
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&[bx, by])
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let lit =
+                result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            lit.to_vec::<T>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        })
+    }
+
+    /// `x ⊕ y` for arbitrary-length blocks via the best-fitting pair
+    /// artifact, chunking + zero-padding as needed. `pad` must be the
+    /// operator's identity (0 for sum; for max of possibly-negative data
+    /// pass the type's minimum).
+    pub fn pair_combine<T>(&self, op: &str, dtype: DType, x: &[T], y: &[T], pad: T) -> Result<Vec<T>>
+    where
+        T: xla::NativeType + xla::ArrayElement + Copy,
+    {
+        assert_eq!(x.len(), y.len());
+        let art = self
+            .select_pair(op, dtype, x.len())
+            .ok_or_else(|| anyhow!("no pair artifact for op={op} dtype={dtype:?}"))?;
+        let block = art.block_len();
+        let idx = self.index_of(art);
+        let mut out = Vec::with_capacity(x.len());
+        let mut xb = vec![pad; block];
+        let mut yb = vec![pad; block];
+        let mut off = 0usize;
+        while off < x.len() {
+            let take = block.min(x.len() - off);
+            xb[..take].copy_from_slice(&x[off..off + take]);
+            yb[..take].copy_from_slice(&y[off..off + take]);
+            if take < block {
+                for v in xb[take..].iter_mut() {
+                    *v = pad;
+                }
+                for v in yb[take..].iter_mut() {
+                    *v = pad;
+                }
+            }
+            let res = self.run_pair_exact(idx, &xb, &yb)?;
+            out.extend_from_slice(&res[..take]);
+            off += take;
+        }
+        Ok(out)
+    }
+
+    /// Pick a stack artifact for `(op, dtype)` with width `w` and block
+    /// length >= `len` if possible.
+    pub fn select_stack(&self, op: &str, dtype: DType, w: usize, len: usize) -> Option<&Artifact> {
+        let mut candidates: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == FnKind::Stack && a.op == op && a.dtype == dtype && a.shape[0] == w
+            })
+            .collect();
+        candidates.sort_by_key(|a| a.block_len());
+        candidates
+            .iter()
+            .find(|a| a.block_len() >= len)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// Fold `w` equal-length partial blocks with ⊕ in one executable call
+    /// per chunk — the whole-phase combine (`reduce_stack` in the L2
+    /// model). `xs` are the `w` partials; `pad` the operator identity.
+    pub fn stack_reduce<T>(&self, op: &str, dtype: DType, xs: &[&[T]], pad: T) -> Result<Vec<T>>
+    where
+        T: xla::NativeType + xla::ArrayElement + Copy,
+    {
+        let w = xs.len();
+        anyhow::ensure!(w > 0, "empty stack");
+        let len = xs[0].len();
+        anyhow::ensure!(xs.iter().all(|x| x.len() == len), "ragged stack");
+        let art = self
+            .select_stack(op, dtype, w, len)
+            .ok_or_else(|| anyhow!("no stack artifact for op={op} dtype={dtype:?} w={w}"))?;
+        let block = art.block_len();
+        let idx = self.index_of(art);
+
+        let mut out = Vec::with_capacity(len);
+        let mut flat = vec![pad; w * block];
+        let mut off = 0usize;
+        while off < len {
+            let take = block.min(len - off);
+            for (row, x) in xs.iter().enumerate() {
+                let dst = &mut flat[row * block..row * block + take];
+                dst.copy_from_slice(&x[off..off + take]);
+                if take < block {
+                    for v in flat[row * block + take..(row + 1) * block].iter_mut() {
+                        *v = pad;
+                    }
+                }
+            }
+            let res = self.with_executable(idx, |exe| {
+                let client = exe.client();
+                let b = client
+                    .buffer_from_host_buffer(&flat, &[w, block], None)
+                    .map_err(|e| anyhow!("host->buffer: {e:?}"))?;
+                let result = exe
+                    .execute_b::<xla::PjRtBuffer>(&[b])
+                    .map_err(|e| anyhow!("execute: {e:?}"))?;
+                let lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                lit.to_vec::<T>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            })?;
+            out.extend_from_slice(&res[..take]);
+            off += take;
+        }
+        Ok(out)
+    }
+
+    /// Compile every artifact up front (warm the cache); returns how many.
+    pub fn compile_all(&self) -> Result<usize> {
+        for i in 0..self.artifacts.len() {
+            self.with_executable(i, |_| Ok(()))?;
+        }
+        Ok(self.artifacts.len())
+    }
+}
+
+/// A [`crate::collectives::ReduceOp`] implementation that runs the ⊕ on
+/// the PJRT executable — the paper's reduction collectives with the
+/// operator applied by the AOT-compiled XLA module.
+pub struct XlaSumOp {
+    rt: Arc<XlaRuntime>,
+}
+
+impl XlaSumOp {
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        XlaSumOp { rt }
+    }
+}
+
+impl crate::collectives::ReduceOp<f32> for XlaSumOp {
+    fn combine(&self, acc: &mut [f32], incoming: &[f32]) {
+        if acc.is_empty() {
+            return;
+        }
+        let out = self
+            .rt
+            .pair_combine("sum", DType::F32, acc, incoming, 0.0f32)
+            .expect("XLA pair_combine failed");
+        acc.copy_from_slice(&out);
+    }
+
+    fn name(&self) -> &str {
+        "xla-sum-f32"
+    }
+}
+
+impl crate::collectives::ReduceOp<i32> for XlaSumOp {
+    fn combine(&self, acc: &mut [i32], incoming: &[i32]) {
+        if acc.is_empty() {
+            return;
+        }
+        let out = self
+            .rt
+            .pair_combine("sum", DType::I32, acc, incoming, 0i32)
+            .expect("XLA pair_combine failed");
+        acc.copy_from_slice(&out);
+    }
+
+    fn name(&self) -> &str {
+        "xla-sum-i32"
+    }
+}

@@ -1,0 +1,11 @@
+//! The PJRT runtime bridge: load the AOT-compiled HLO text artifacts
+//! (authored by JAX/Pallas at build time, see `python/compile/`) and
+//! execute them from the Rust hot path. Python is never on the request
+//! path — the `cbcast` binary is self-contained once `make artifacts`
+//! has run.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{discover, default_dir, Artifact, DType, FnKind};
+pub use executor::{XlaRuntime, XlaSumOp};

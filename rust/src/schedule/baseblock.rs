@@ -1,0 +1,238 @@
+//! Baseblock computation (Algorithm 3) and the linear-time listing of all
+//! baseblocks (the construction in the proof of Lemma 3).
+//!
+//! The *baseblock* `b_r` of processor `r` is the smallest (first) skip
+//! index of the canonical skip sequence decomposing `r` into a sum of
+//! distinct skips (Lemma 2). It is the first real (non-negative) block that
+//! `r` receives during broadcast, in round `b_r`... more precisely in the
+//! round given by the *largest* index of its canonical skip sequence.
+//! By convention, the root `r = 0` has baseblock `q` (empty sequence).
+
+use super::skips::Skips;
+
+/// Algorithm 3: the baseblock of processor `r`, `0 <= r < p`, in `O(q)`.
+///
+/// Walks the skips from largest (`skip[q-1]`) to smallest, greedily adding
+/// a skip whenever it does not overshoot `r`; the skip that lands exactly
+/// on `r` is the baseblock. Only `r = 0` returns `q`.
+pub fn baseblock(sk: &Skips, r: usize) -> usize {
+    debug_assert!(r < sk.p());
+    let q = sk.q();
+    if q == 0 {
+        return 0; // p = 1: single processor, trivially root
+    }
+    let mut k = q;
+    let mut acc = 0usize;
+    loop {
+        k -= 1;
+        let s = acc + sk.skip(k);
+        if s == r {
+            return k;
+        } else if s < r {
+            acc = s;
+        }
+        if k == 0 {
+            break;
+        }
+    }
+    // Only processor r = 0 falls through (empty canonical sequence).
+    debug_assert_eq!(r, 0);
+    q
+}
+
+/// The full canonical skip sequence for `r` (increasing skip indices),
+/// i.e. the distinct skips summing to `r` chosen by the Algorithm-3 walk.
+/// Empty for `r = 0`.
+pub fn canonical_sequence(sk: &Skips, r: usize) -> Vec<usize> {
+    debug_assert!(r < sk.p());
+    let q = sk.q();
+    let mut seq = Vec::with_capacity(q);
+    let mut acc = 0usize;
+    for k in (0..q).rev() {
+        let s = acc + sk.skip(k);
+        if s == r {
+            seq.push(k);
+            acc = s;
+            break;
+        } else if s < r {
+            seq.push(k);
+            acc = s;
+        }
+    }
+    debug_assert_eq!(acc, r, "canonical sequence must sum to r");
+    seq.reverse();
+    seq
+}
+
+/// List the baseblocks of **all** processors `0..p` in `O(p)` total time,
+/// following the doubling construction in the proof of Lemma 3:
+///
+/// start with `[0]`; to extend a prefix of length `skip[k]` to length
+/// `skip[k+1]`, append the prefix to itself, truncate to `skip[k+1]`, and
+/// bump the entry of processor 0 to `k+1`.
+///
+/// E.g. skips 1,2,3,6,11: `0 -> 10 -> 201 -> 301201 -> 40120130120`.
+pub fn all_baseblocks(sk: &Skips) -> Vec<usize> {
+    let p = sk.p();
+    let q = sk.q();
+    if q == 0 {
+        return vec![0];
+    }
+    let mut bb = Vec::with_capacity(p);
+    bb.push(0usize);
+    for k in 0..q {
+        // Extend from length skip[k] to length skip[k+1] <= 2*skip[k].
+        let cur = bb.len();
+        debug_assert_eq!(cur, sk.skip(k));
+        let target = sk.skip(k + 1);
+        for i in 0..target - cur {
+            let v = bb[i];
+            bb.push(v);
+        }
+        bb[0] = k + 1;
+    }
+    debug_assert_eq!(bb.len(), p);
+    bb
+}
+
+/// Check the window property actually established by the proof of
+/// Lemma 3: the baseblock sequences of length `skip[k]` starting at
+/// processor `0` and at processor `skip[k]` each contain at least `k+1`
+/// distinct baseblocks (the proof's doubling construction covers exactly
+/// these two anchored windows; arbitrary windows can have fewer — e.g.
+/// `p = 9`, processors 4..6 have baseblocks {0,3,0}).
+pub fn check_lemma3(sk: &Skips) -> bool {
+    let bb = all_baseblocks(sk);
+    let p = sk.p();
+    let q = sk.q();
+    let distinct = |slice: &[usize]| {
+        let mut seen = 0u64;
+        let mut n = 0usize;
+        for &b in slice {
+            if seen & (1 << b) == 0 {
+                seen |= 1 << b;
+                n += 1;
+            }
+        }
+        n
+    };
+    for k in 0..q {
+        let w = sk.skip(k);
+        if w > p {
+            break;
+        }
+        // Window anchored at 0.
+        if distinct(&bb[0..w]) < k + 1 {
+            return false;
+        }
+        // Window anchored at skip[k], when complete within 0..p. (The
+        // proof also argues a one-element-short variant; at the very end
+        // of the list that window is truncated differently, so we check
+        // only complete windows — the schedule correctness itself is
+        // verified directly via the four conditions in `verify`.)
+        if 2 * w <= p && distinct(&bb[w..2 * w]) < k + 1 {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bb_table(p: usize) -> Vec<usize> {
+        let sk = Skips::new(p);
+        (0..p).map(|r| baseblock(&sk, r)).collect()
+    }
+
+    #[test]
+    fn paper_table1_baseblocks_p17() {
+        // Table 1 row b: 5 0 1 2 0 3 0 1 2 4 0 1 2 0 3 0 1
+        assert_eq!(
+            bb_table(17),
+            vec![5, 0, 1, 2, 0, 3, 0, 1, 2, 4, 0, 1, 2, 0, 3, 0, 1]
+        );
+    }
+
+    #[test]
+    fn paper_table2_baseblocks_p9() {
+        // Table 2 row b: 4 0 1 2 0 3 0 1 2
+        assert_eq!(bb_table(9), vec![4, 0, 1, 2, 0, 3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn paper_table3_baseblocks_p18() {
+        // Table 3 row b: 5 0 1 2 0 3 0 1 2 4 0 1 2 0 3 0 1 2
+        assert_eq!(
+            bb_table(18),
+            vec![5, 0, 1, 2, 0, 3, 0, 1, 2, 4, 0, 1, 2, 0, 3, 0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn lemma3_example_sequence() {
+        // The paper's example uses skips 1,2,3,6,11 which arise for p = 11.
+        let sk = Skips::new(11);
+        assert_eq!(sk.as_slice(), &[1, 2, 3, 6, 11]);
+        assert_eq!(all_baseblocks(&sk), vec![4, 0, 1, 2, 0, 1, 3, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn all_baseblocks_matches_per_processor() {
+        for p in 1..2000 {
+            let sk = Skips::new(p);
+            let fast = all_baseblocks(&sk);
+            for r in 0..p {
+                assert_eq!(fast[r], baseblock(&sk, r), "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_sequence_sums_to_r() {
+        for p in [2usize, 9, 17, 18, 100, 1000, 4096, 4097] {
+            let sk = Skips::new(p);
+            for r in 0..p {
+                let seq = canonical_sequence(&sk, r);
+                let sum: usize = seq.iter().map(|&e| sk.skip(e)).sum();
+                assert_eq!(sum, r, "p={p} r={r}");
+                // Indices strictly increasing (distinct skips).
+                for w in seq.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+                // First element is the baseblock.
+                if r > 0 {
+                    assert_eq!(seq[0], baseblock(&sk, r), "p={p} r={r}");
+                } else {
+                    assert!(seq.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lemma3_holds_small_p() {
+        for p in 1..512 {
+            assert!(check_lemma3(&Skips::new(p)), "p={p}");
+        }
+    }
+
+    #[test]
+    fn root_baseblock_is_q() {
+        for p in 2..100 {
+            let sk = Skips::new(p);
+            assert_eq!(baseblock(&sk, 0), sk.q());
+        }
+    }
+
+    #[test]
+    fn nonroot_baseblock_below_q() {
+        for p in 2..1000 {
+            let sk = Skips::new(p);
+            for r in 1..p {
+                assert!(baseblock(&sk, r) < sk.q(), "p={p} r={r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Baseline ("old-style") schedule computations, modelling the complexity
+//! class of the prior algorithms the paper improves on ([13, 14, 17]).
+//!
+//! * [`send_schedule_from_recv`] — the "straightforward computation of
+//!   send schedules from the receive schedules" the paper describes at the
+//!   start of §2.3: `sendblock[k]_r = recvblock[k]_{t_r^k}` via `q`
+//!   receive-schedule computations, i.e. `O(log² p)` per processor.
+//! * [`recv_schedule_oldstyle`] — a receive-schedule computation with no
+//!   incremental state reuse: round `k`'s entry is obtained by re-running
+//!   the greedy search from scratch, `O(log² p)` per processor; paired
+//!   with [`send_schedule_from_recv`] the per-processor cost is
+//!   `O(log³ p)`, the bound of [13, 14].
+//!
+//! Both produce **identical schedules** to the `O(log p)` algorithms (the
+//! paper emphasises the new algorithms compute the *same* schedules); the
+//! test suite checks equality, and the Table 4 bench contrasts runtimes.
+
+use super::recv::{recv_schedule, RecvSchedule};
+use super::send::SendSchedule;
+use super::skips::Skips;
+
+/// Old-style send schedule: `q` receive-schedule computations, one per
+/// to-processor. `O(log² p)` (with the fast receive schedule) — the
+/// comparison point of §2.3.
+pub fn send_schedule_from_recv(sk: &Skips, r: usize) -> SendSchedule {
+    let q = sk.q();
+    if q == 0 {
+        return SendSchedule { blocks: Vec::new(), baseblock: 0, violations: 0 };
+    }
+    let mut blocks = vec![0i64; q];
+    for (k, v) in blocks.iter_mut().enumerate() {
+        let t = sk.to_proc(r, k);
+        *v = recv_schedule(sk, t).blocks[k];
+    }
+    let baseblock = super::baseblock::baseblock(sk, r);
+    SendSchedule { blocks, baseblock, violations: 0 }
+}
+
+/// Old-style receive schedule: recompute the full search for every round
+/// prefix instead of reusing the linked-list state — `O(log² p)` per
+/// processor, returning the identical schedule.
+pub fn recv_schedule_oldstyle(sk: &Skips, r: usize) -> RecvSchedule {
+    let q = sk.q();
+    if q == 0 {
+        return recv_schedule(sk, r);
+    }
+    // One full search per round: take entry k of the k-th recomputation.
+    // (Models the prior work's repeated per-round searches; the constant
+    // is q full searches rather than one.)
+    let mut blocks = vec![0i64; q];
+    let mut baseblock = 0usize;
+    let mut stats = super::recv::SearchStats::default();
+    for (k, v) in blocks.iter_mut().enumerate() {
+        let s = recv_schedule(sk, r);
+        stats.recursions += s.stats.recursions;
+        stats.scans += s.stats.scans;
+        *v = s.blocks[k];
+        baseblock = s.baseblock;
+    }
+    RecvSchedule { blocks, baseblock, stats }
+}
+
+/// Old-style combined schedule computation for one processor: old-style
+/// receive plus send-from-recv where each of the `q` neighbour receive
+/// schedules is also computed old-style — `O(log³ p)` per processor, the
+/// complexity of [13, 14]. Used by the Table 4 benchmark.
+pub fn schedules_oldstyle(sk: &Skips, r: usize) -> (RecvSchedule, SendSchedule) {
+    let recv = recv_schedule_oldstyle(sk, r);
+    let q = sk.q();
+    let mut blocks = vec![0i64; q];
+    for (k, v) in blocks.iter_mut().enumerate() {
+        let t = sk.to_proc(r, k);
+        *v = recv_schedule_oldstyle(sk, t).blocks[k];
+    }
+    let baseblock = recv.baseblock;
+    (recv, SendSchedule { blocks, baseblock, violations: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::send::send_schedule;
+
+    #[test]
+    fn send_from_recv_matches_fast() {
+        for p in 2..400 {
+            let sk = Skips::new(p);
+            for r in 0..p {
+                let fast = send_schedule(&sk, r);
+                let slow = send_schedule_from_recv(&sk, r);
+                assert_eq!(fast.blocks, slow.blocks, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn oldstyle_recv_matches_fast() {
+        for p in 2..400 {
+            let sk = Skips::new(p);
+            for r in 0..p {
+                let fast = recv_schedule(&sk, r);
+                let slow = recv_schedule_oldstyle(&sk, r);
+                assert_eq!(fast.blocks, slow.blocks, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn oldstyle_combined_matches_fast() {
+        for p in [17usize, 100, 255, 256, 257] {
+            let sk = Skips::new(p);
+            for r in 0..p {
+                let (recv, send) = schedules_oldstyle(&sk, r);
+                assert_eq!(recv.blocks, recv_schedule(&sk, r).blocks);
+                assert_eq!(send.blocks, send_schedule(&sk, r).blocks, "p={p} r={r}");
+            }
+        }
+    }
+}

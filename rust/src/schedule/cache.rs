@@ -1,0 +1,164 @@
+//! Schedule caching, the analogue of caching schedules with communicators
+//! in NEC's MPI ([12] in the paper).
+//!
+//! With the `O(log p)` algorithms caching is no longer *required* for
+//! performance (the paper's point), but a real MPI library still reuses a
+//! communicator's schedules across repeated collective calls, and the
+//! all-broadcast/all-reduction collectives need schedules for **all** `p`
+//! roots at once. The cache stores, per `(p, relative rank)`, the combined
+//! receive+send schedule; `Arc`-shared and thread-safe.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::recv::{recv_schedule_core, MAX_Q};
+use super::send::send_schedule_core;
+use super::skips::Skips;
+
+/// Combined per-processor schedule, ready for Algorithm 1 / Algorithm 7.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    /// Number of processors.
+    pub p: usize,
+    /// `q = ceil(log2 p)`.
+    pub q: usize,
+    /// Relative rank (`(r - root) mod p` of the calling processor).
+    pub rank: usize,
+    /// `recvblock[0..q]`.
+    pub recv: Vec<i64>,
+    /// `sendblock[0..q]`.
+    pub send: Vec<i64>,
+    /// Baseblock `b_r` (`q` for the root).
+    pub baseblock: usize,
+}
+
+impl Schedule {
+    /// Compute both schedules for relative rank `r` of a `p`-processor
+    /// system in `O(log p)` — the per-rank hot path: one baseblock walk,
+    /// stack-array cores, exactly two heap allocations (the two result
+    /// vectors).
+    pub fn compute(sk: &Skips, r: usize) -> Self {
+        let q = sk.q();
+        let mut rbuf = [0i64; MAX_Q];
+        let (bb, _) = recv_schedule_core(sk, r, &mut rbuf);
+        let b = if r == 0 { q } else { bb };
+        let mut sbuf = [0i64; MAX_Q];
+        send_schedule_core(sk, r, b, &mut sbuf);
+        Schedule {
+            p: sk.p(),
+            q,
+            rank: r,
+            recv: rbuf[..q].to_vec(),
+            send: sbuf[..q].to_vec(),
+            baseblock: bb,
+        }
+    }
+}
+
+/// Thread-safe cache of [`Schedule`]s keyed by `(p, relative rank)` and of
+/// [`Skips`] keyed by `p`.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    skips: Mutex<HashMap<usize, Arc<Skips>>>,
+    scheds: Mutex<HashMap<(usize, usize), Arc<Schedule>>>,
+    hits: Mutex<u64>,
+    misses: Mutex<u64>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The skip table for `p` (cached).
+    pub fn skips(&self, p: usize) -> Arc<Skips> {
+        let mut g = self.skips.lock().unwrap();
+        g.entry(p).or_insert_with(|| Arc::new(Skips::new(p))).clone()
+    }
+
+    /// The schedule for relative rank `r` of a `p`-processor system
+    /// (cached; computed on miss in `O(log p)`).
+    pub fn get(&self, p: usize, r: usize) -> Arc<Schedule> {
+        {
+            let g = self.scheds.lock().unwrap();
+            if let Some(s) = g.get(&(p, r)) {
+                *self.hits.lock().unwrap() += 1;
+                return s.clone();
+            }
+        }
+        *self.misses.lock().unwrap() += 1;
+        let sk = self.skips(p);
+        let s = Arc::new(Schedule::compute(&sk, r));
+        self.scheds.lock().unwrap().insert((p, r), s.clone());
+        s
+    }
+
+    /// (hits, misses) counters — used by the cache ablation bench.
+    pub fn stats(&self) -> (u64, u64) {
+        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+    }
+
+    /// Drop all cached entries.
+    pub fn clear(&self) {
+        self.skips.lock().unwrap().clear();
+        self.scheds.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_returns_consistent_schedules() {
+        let cache = ScheduleCache::new();
+        let sk = Skips::new(17);
+        for r in 0..17 {
+            let cached = cache.get(17, r);
+            let direct = Schedule::compute(&sk, r);
+            assert_eq!(*cached, direct);
+        }
+        // Second pass hits.
+        for r in 0..17 {
+            cache.get(17, r);
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 17);
+        assert_eq!(hits, 17);
+    }
+
+    #[test]
+    fn cache_multiple_p() {
+        let cache = ScheduleCache::new();
+        for p in [2usize, 9, 17, 64, 100] {
+            for r in 0..p {
+                let s = cache.get(p, r);
+                assert_eq!(s.p, p);
+                assert_eq!(s.rank, r);
+                assert_eq!(s.recv.len(), s.q);
+                assert_eq!(s.send.len(), s.q);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_threaded_access() {
+        let cache = Arc::new(ScheduleCache::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let c = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                for p in [17usize, 100, 1000] {
+                    for i in 0..p.min(50) {
+                        let r = (i * 7 + t) % p;
+                        let s = c.get(p, r);
+                        assert_eq!(s.rank, r);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! The doubling constructions of Observation 2 (receive schedules) and
+//! Observation 6 (send schedules): a correct schedule for `2p` processors
+//! from a correct schedule for `p` processors.
+//!
+//! These are not used on the hot path (they only exist for even processor
+//! counts, which is exactly why the paper needs the harder Algorithms 4–6)
+//! but they give a strong *independent* correctness check: the directly
+//! computed `2p` schedule must equal the doubled `p` schedule, for every
+//! `p` — machine-checked in the test suite. They also show constructively
+//! that schedules exist for all powers of two.
+
+use super::recv::{RecvSchedule, SearchStats};
+use super::send::SendSchedule;
+use super::skips::Skips;
+
+#[cfg(test)]
+use super::recv::recv_schedule;
+#[cfg(test)]
+use super::send::send_schedule;
+
+/// Observation 2: receive schedules for `2p` processors from the receive
+/// schedules (and baseblocks) of `p` processors.
+///
+/// For `r` in `p..2p`, copy processor `r - p`'s schedule; subtract 1 from
+/// every negative entry (q grew by one); then fill round `q`: processor
+/// `p` gets the brand-new baseblock `q`; large processors `p < r < 2p`
+/// move their old positive baseblock `b` to round `q` and replace it by
+/// `-1` in its old round; small processors `0 <= r < p` receive nothing
+/// new (`-1`) in round `q`.
+pub fn double_recv_schedules(p: usize, scheds: &[RecvSchedule]) -> Vec<RecvSchedule> {
+    assert_eq!(scheds.len(), p);
+    let q = Skips::new(p).q();
+    debug_assert!(p >= 1);
+    let p2 = 2 * p;
+    let q2 = Skips::new(p2).q();
+    assert_eq!(q2, q + 1, "doubling must grow q by exactly one");
+
+    let mut out = Vec::with_capacity(p2);
+    for r in 0..p2 {
+        let src = &scheds[r % p];
+        let mut blocks: Vec<i64> = src
+            .blocks
+            .iter()
+            .map(|&v| if v < 0 { v - 1 } else { v })
+            .collect();
+        let baseblock;
+        if r == p {
+            // The new processor p receives the new baseblock q directly
+            // from the root in the new round.
+            blocks.push(q as i64);
+            baseblock = q;
+        } else if r > p {
+            // Move the old positive baseblock b to round q, replace the
+            // old occurrence with -1 (that block now arrives from r - p's
+            // "mirror", one round earlier in relative terms).
+            let b = src.baseblock as i64;
+            let pos = blocks
+                .iter()
+                .position(|&v| v == b)
+                .expect("non-root schedule must contain its positive baseblock");
+            blocks[pos] = -1;
+            blocks.push(b);
+            baseblock = src.baseblock;
+        } else {
+            // Small processors (including the root) receive nothing new.
+            blocks.push(-1);
+            baseblock = if r == 0 { q + 1 } else { src.baseblock };
+        }
+        out.push(RecvSchedule { blocks, baseblock, stats: SearchStats::default() });
+    }
+    out
+}
+
+/// Observation 6: send schedules for `2p` processors from the send
+/// schedules (and baseblocks) of `p` processors.
+///
+/// Copy `r - p`'s schedule for the large processors; subtract 1 from the
+/// negatives; small processors send their baseblock in the new last round,
+/// large processors replace **all** positive send blocks with `-1` and
+/// send `-1` in the last round.
+pub fn double_send_schedules(p: usize, scheds: &[SendSchedule]) -> Vec<SendSchedule> {
+    assert_eq!(scheds.len(), p);
+    let q = Skips::new(p).q();
+    let p2 = 2 * p;
+    let q2 = Skips::new(p2).q();
+    assert_eq!(q2, q + 1);
+
+    let sk = Skips::new(p);
+    let mut out = Vec::with_capacity(p2);
+    for r in 0..p2 {
+        let src = &scheds[r % p];
+        let mut blocks: Vec<i64>;
+        let baseblock;
+        if r < p {
+            // Small processors keep their schedule (negatives shifted) and
+            // send their baseblock in the new last round.
+            blocks = src.blocks.iter().map(|&v| if v < 0 { v - 1 } else { v }).collect();
+            let b = if r == 0 {
+                // Root: baseblock convention is q; in the 2p schedule the
+                // root's new-round send is block q (it sends 0,1,...,q).
+                q as i64
+            } else {
+                src.baseblock as i64
+            };
+            blocks.push(b);
+            baseblock = if r == 0 { q + 1 } else { src.baseblock };
+        } else {
+            // Large processors: all positive send blocks become -1.
+            blocks = src
+                .blocks
+                .iter()
+                .map(|&v| if v < 0 { v - 1 } else { -1 })
+                .collect();
+            blocks.push(-1);
+            baseblock = if r == p { q } else { scheds[r - p].baseblock };
+        }
+        let _ = &sk;
+        out.push(SendSchedule { blocks, baseblock, violations: 0 });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recv_table(p: usize) -> Vec<RecvSchedule> {
+        let sk = Skips::new(p);
+        (0..p).map(|r| recv_schedule(&sk, r)).collect()
+    }
+
+    fn send_table(p: usize) -> Vec<SendSchedule> {
+        let sk = Skips::new(p);
+        (0..p).map(|r| send_schedule(&sk, r)).collect()
+    }
+
+    #[test]
+    fn doubling_9_to_18_matches_direct_recv() {
+        // The paper presents Tables 2 and 3 exactly as this doubling pair.
+        let doubled = double_recv_schedules(9, &recv_table(9));
+        let direct = recv_table(18);
+        for r in 0..18 {
+            assert_eq!(doubled[r].blocks, direct[r].blocks, "r={r}");
+        }
+    }
+
+    #[test]
+    fn doubling_9_to_18_matches_direct_send() {
+        let doubled = double_send_schedules(9, &send_table(9));
+        let direct = send_table(18);
+        for r in 0..18 {
+            assert_eq!(doubled[r].blocks, direct[r].blocks, "r={r}");
+        }
+    }
+
+    #[test]
+    fn doubling_matches_direct_all_small_p() {
+        for p in 2..300 {
+            let dr = double_recv_schedules(p, &recv_table(p));
+            let direct_r = recv_table(2 * p);
+            let ds = double_send_schedules(p, &send_table(p));
+            let direct_s = send_table(2 * p);
+            for r in 0..2 * p {
+                assert_eq!(dr[r].blocks, direct_r[r].blocks, "recv p={p} r={r}");
+                assert_eq!(ds[r].blocks, direct_s[r].blocks, "send p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn doubled_tables_verify() {
+        use crate::schedule::verify::verify_tables;
+        for p in [5usize, 9, 12, 17, 33, 100] {
+            let sk2 = Skips::new(2 * p);
+            let dr = double_recv_schedules(p, &recv_table(p));
+            let ds = double_send_schedules(p, &send_table(p));
+            let rep = verify_tables(&sk2, &dr, &ds);
+            assert!(rep.ok(), "p={p}: {:?}", &rep.failures[..rep.failures.len().min(3)]);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Round-optimal broadcast schedules on circulant graphs — the paper's
+//! core contribution (Section 2).
+//!
+//! A `p`-processor system with `q = ceil(log2 p)` communicates over a
+//! directed, `q`-regular circulant graph whose skips are computed by
+//! repeated halving ([`skips::Skips`], Algorithm 2). Per processor, a
+//! *receive schedule* ([`recv::recv_schedule`], Algorithms 4+5) and a
+//! *send schedule* ([`send::send_schedule`], Algorithm 6) of `q` entries
+//! each determine in O(1) per round which block is received and which is
+//! sent — computed independently per processor in **O(log p)** time and
+//! space (Theorems 2 and 3), with no communication.
+//!
+//! [`baseline`] holds the old-style `O(log² p)`–`O(log³ p)` computations
+//! (identical schedules, slower — the Table 4 comparison), [`doubling`]
+//! the Observation 2/6 constructions used as independent correctness
+//! oracles, [`verify`] the exhaustive four-condition checker (Appendix B),
+//! and [`cache`] the communicator-style schedule cache.
+
+pub mod baseblock;
+pub mod baseline;
+pub mod cache;
+pub mod doubling;
+pub mod recv;
+pub mod send;
+pub mod skips;
+pub mod verify;
+
+pub use baseblock::{all_baseblocks, baseblock, canonical_sequence};
+pub use cache::{Schedule, ScheduleCache};
+pub use recv::{recv_schedule, RecvSchedule};
+pub use send::{send_schedule, SendSchedule};
+pub use skips::{ceil_log2, Skips};
+pub use verify::{verify_all, verify_sampled, VerifyReport};

@@ -1,0 +1,257 @@
+//! Send schedule computation in `O(log p)` time (Algorithm 6, Theorem 3).
+//!
+//! The send schedule is defined by `sendblock[k]_r = recvblock[k]_{t_r^k}`
+//! (Correctness Conditions 1+2): what `r` sends in round `k` is exactly
+//! what its to-processor `t_r^k = (r + skip[k]) mod p` is scheduled to
+//! receive. Computing it that way costs `O(log^2 p)` (q receive schedules,
+//! kept as [`crate::schedule::baseline::send_schedule_from_recv`]).
+//!
+//! Algorithm 6 instead walks rounds `k = q-1` down to `1` maintaining a
+//! virtual processor index `r'` and a range bound `e` (invariant
+//! `r' < e`), emitting for all but O(1) *violation* rounds a predetermined
+//! block: lower-part processors (`r' < skip[k]`) resend the block `c` they
+//! sent in round `k+1`, upper-part processors send `c = k - q` following
+//! the power-of-two doubling structure (Observation 6). Violations fall
+//! back to one receive-schedule computation for the to-processor; Theorem 3
+//! bounds them by **4 per processor**, preserving `O(log p)` total.
+
+use super::baseblock::baseblock;
+use super::recv::{recv_schedule_core, MAX_Q};
+use super::skips::Skips;
+
+/// A computed send schedule for one processor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SendSchedule {
+    /// `sendblock[k]` for rounds `k = 0..q` (relative block indices; in
+    /// phase `j` of Algorithm 1 the block sent in round `k` is
+    /// `sendblock[k] + j*q`).
+    pub blocks: Vec<i64>,
+    /// The baseblock `b_r` of this processor.
+    pub baseblock: usize,
+    /// Number of violation rounds resolved via a receive-schedule
+    /// computation (Theorem 3: at most 4).
+    pub violations: usize,
+}
+
+/// Allocation-free core of Algorithm 6: fill `out[0..q]` with the send
+/// schedule of `r` whose baseblock is `b` (pass `baseblock(sk, r)`);
+/// returns the violation count. The per-rank hot path.
+pub(crate) fn send_schedule_core(
+    sk: &Skips,
+    r: usize,
+    b: usize,
+    out: &mut [i64; MAX_Q],
+) -> usize {
+    debug_assert!(r < sk.p());
+    let q = sk.q();
+    let p = sk.p();
+    if q == 0 {
+        return 0;
+    }
+    let sb = &mut out[..q];
+    if r == 0 {
+        // The root greedily sends blocks 0, 1, ..., q-1.
+        for (k, v) in sb.iter_mut().enumerate() {
+            *v = k as i64;
+        }
+        return 0;
+    }
+
+    let mut rp = r; // virtual processor index r'
+    let mut c = b as i64; // block the lower part keeps resending
+    let mut e = p; // exclusive upper bound on r' (invariant r' < e)
+    let mut violations = 0usize;
+
+    for k in (1..q).rev() {
+        if rp < sk.skip(k) {
+            // ------ lower part ------
+            if rp + sk.skip(k) < e || e < sk.skip(k - 1) || (k == 1 && b > 0) {
+                sb[k] = c;
+            } else {
+                // Violation: the to-processor's missing block is not
+                // predictable here; ask its receive schedule.
+                violations += 1;
+                let t = to_proc(p, r, sk.skip(k));
+                let mut buf = [0i64; MAX_Q];
+                recv_schedule_core(sk, t, &mut buf);
+                sb[k] = buf[k];
+            }
+            if e > sk.skip(k) {
+                e = sk.skip(k);
+            }
+        } else {
+            // ------ upper part (r' >= skip[k]) ------
+            c = k as i64 - q as i64;
+            if k == 1 || rp > sk.skip(k) || e - sk.skip(k) < sk.skip(k - 1) {
+                sb[k] = c;
+            } else if rp + sk.skip(k) > e {
+                // Violation: only possible for r' == skip[k].
+                violations += 1;
+                let t = to_proc(p, r, sk.skip(k));
+                let mut buf = [0i64; MAX_Q];
+                recv_schedule_core(sk, t, &mut buf);
+                sb[k] = buf[k];
+            } else {
+                sb[k] = c;
+            }
+            rp -= sk.skip(k);
+            e -= sk.skip(k);
+        }
+    }
+    sb[0] = b as i64 - q as i64;
+    violations
+}
+
+/// Algorithm 6: compute the send schedule for processor `r` in `O(log p)`.
+pub fn send_schedule(sk: &Skips, r: usize) -> SendSchedule {
+    let q = sk.q();
+    let b = if r == 0 { q } else { baseblock(sk, r) };
+    let mut buf = [0i64; MAX_Q];
+    let violations = send_schedule_core(sk, r, b, &mut buf);
+    SendSchedule { blocks: buf[..q].to_vec(), baseblock: b, violations }
+}
+
+#[inline]
+fn to_proc(p: usize, r: usize, skip: usize) -> usize {
+    let t = r + skip;
+    if t >= p {
+        t - p
+    } else {
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::recv::recv_schedule;
+
+    fn send_row(p: usize, k: usize) -> Vec<i64> {
+        let sk = Skips::new(p);
+        (0..p).map(|r| send_schedule(&sk, r).blocks[k]).collect()
+    }
+
+    #[test]
+    fn paper_table1_send_p17() {
+        assert_eq!(
+            send_row(17, 0),
+            vec![0, -5, -4, -3, -5, -2, -5, -4, -3, -1, -5, -4, -3, -5, -2, -5, -4]
+        );
+        assert_eq!(
+            send_row(17, 1),
+            vec![1, -5, -4, -3, -3, -2, -5, -4, -3, -1, -5, -4, -3, -3, -2, -5, -4]
+        );
+        assert_eq!(
+            send_row(17, 2),
+            vec![2, 0, -4, -4, -3, -2, -2, -4, -3, -1, -1, -4, -4, -3, -2, -2, -2]
+        );
+        assert_eq!(
+            send_row(17, 3),
+            vec![3, 0, 1, 2, -5, -2, -2, -2, -2, -1, -1, -1, -1, -3, -3, -2, -2]
+        );
+        assert_eq!(
+            send_row(17, 4),
+            vec![4, 0, 1, 2, 0, 3, 0, 1, -3, -1, -1, -1, -1, -1, -1, -1, -1]
+        );
+    }
+
+    #[test]
+    fn paper_table2_send_p9() {
+        assert_eq!(send_row(9, 0), vec![0, -4, -3, -2, -4, -1, -4, -3, -2]);
+        assert_eq!(send_row(9, 1), vec![1, -4, -3, -2, -2, -1, -4, -3, -2]);
+        assert_eq!(send_row(9, 2), vec![2, 0, -3, -3, -2, -1, -1, -3, -2]);
+        assert_eq!(send_row(9, 3), vec![3, 0, 1, 2, -4, -1, -1, -1, -1]);
+    }
+
+    #[test]
+    fn paper_table3_send_p18() {
+        assert_eq!(
+            send_row(18, 0),
+            vec![0, -5, -4, -3, -5, -2, -5, -4, -3, -1, -5, -4, -3, -5, -2, -5, -4, -3]
+        );
+        assert_eq!(
+            send_row(18, 1),
+            vec![1, -5, -4, -3, -3, -2, -5, -4, -3, -1, -5, -4, -3, -3, -2, -5, -4, -3]
+        );
+        assert_eq!(
+            send_row(18, 2),
+            vec![2, 0, -4, -4, -3, -2, -2, -4, -3, -1, -1, -4, -4, -3, -2, -2, -4, -3]
+        );
+        assert_eq!(
+            send_row(18, 3),
+            vec![3, 0, 1, 2, -5, -2, -2, -2, -2, -1, -1, -1, -1, -5, -2, -2, -2, -2]
+        );
+        assert_eq!(
+            send_row(18, 4),
+            vec![4, 0, 1, 2, 0, 3, 0, 1, 2, -1, -1, -1, -1, -1, -1, -1, -1, -1]
+        );
+    }
+
+    #[test]
+    fn send_equals_recv_of_to_processor() {
+        // Correctness Conditions 1+2: sendblock[k]_r == recvblock[k]_{t_r^k}.
+        for p in 2..600 {
+            let sk = Skips::new(p);
+            let recvs: Vec<_> = (0..p).map(|r| recv_schedule(&sk, r)).collect();
+            for r in 0..p {
+                let s = send_schedule(&sk, r);
+                for k in 0..sk.q() {
+                    let t = sk.to_proc(r, k);
+                    assert_eq!(
+                        s.blocks[k], recvs[t].blocks[k],
+                        "p={p} r={r} k={k} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn theorem3_violation_bound_small() {
+        for p in 2..2000 {
+            let sk = Skips::new(p);
+            for r in 0..p {
+                let s = send_schedule(&sk, r);
+                assert!(s.violations <= 4, "p={p} r={r} violations={}", s.violations);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_examples_of_violations() {
+        // Paper (end of §2.3): violations for p=17 occur e.g. for r=3
+        // (round k=2) and r=8.
+        let sk = Skips::new(17);
+        assert!(send_schedule(&sk, 3).violations >= 1);
+        assert!(send_schedule(&sk, 8).violations >= 1);
+    }
+
+    #[test]
+    fn root_sends_consecutive() {
+        for p in 2..200 {
+            let sk = Skips::new(p);
+            let s = send_schedule(&sk, 0);
+            let want: Vec<i64> = (0..sk.q() as i64).collect();
+            assert_eq!(s.blocks, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sendblock0_is_baseblock_minus_q() {
+        // Correctness Condition 4 corollary: sendblock[0]_r = b_r - q.
+        for p in 2..500 {
+            let sk = Skips::new(p);
+            for r in 1..p {
+                let s = send_schedule(&sk, r);
+                assert_eq!(s.blocks[0], s.baseblock as i64 - sk.q() as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn p2_send() {
+        let sk = Skips::new(2);
+        assert_eq!(send_schedule(&sk, 0).blocks, vec![0]);
+        assert_eq!(send_schedule(&sk, 1).blocks, vec![-1]);
+    }
+}

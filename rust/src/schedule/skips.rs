@@ -1,0 +1,249 @@
+//! Circulant-graph skips (Algorithm 2 of the paper) and their structural
+//! properties (Observations 3–5, Lemma 1).
+//!
+//! For a `p`-processor system with `q = ceil(log2 p)`, the skips are
+//! computed by repeated halving with rounding up:
+//!
+//! ```text
+//! skip[q] = p;  skip[k-1] = ceil(skip[k] / 2)
+//! ```
+//!
+//! so that always `skip[0] = 1` and `skip[1] = 2` (for `p > 1`). The
+//! directed, q-regular circulant communication graph has, for every
+//! processor `r`, outgoing edges to `(r + skip[k]) mod p` and incoming
+//! edges from `(r - skip[k] + p) mod p` for `k = 0..q-1`.
+
+/// `ceil(log2 p)` — the number of communication rounds per phase and the
+/// number of skips (graph regularity degree).
+///
+/// By convention `q(1) = 0` (a single processor needs no rounds).
+#[inline]
+pub fn ceil_log2(p: usize) -> usize {
+    assert!(p > 0, "p must be positive");
+    (usize::BITS - (p - 1).leading_zeros()) as usize
+}
+
+/// The skips (jumps) of the `p`-processor circulant graph, Algorithm 2.
+///
+/// Returns a vector of length `q + 1` with `skip[q] = p` (the convenience
+/// entry used by the schedule computations) and `skip[k-1] = ceil(skip[k]/2)`.
+/// For `p = 1` the result is just `[1]` (`q = 0`).
+pub fn skips(p: usize) -> Vec<usize> {
+    let q = ceil_log2(p);
+    let mut skip = vec![0usize; q + 1];
+    skip[q] = p;
+    let mut k = q;
+    while k > 0 {
+        // skip[k-1] = skip[k] - floor(skip[k]/2) = ceil(skip[k]/2)
+        skip[k - 1] = skip[k] - skip[k] / 2;
+        k -= 1;
+    }
+    skip
+}
+
+/// Precomputed skip table for one `p`, shared by all schedule computations.
+///
+/// This is the "communication pattern" object: it owns `p`, `q` and the
+/// `q+1` skips, and answers neighbour queries on the circulant graph.
+/// (A fixed inline array was tried for the inner loop and measured within
+/// noise of the Vec — see EXPERIMENTS.md §Perf — so the simpler Vec stays.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Skips {
+    p: usize,
+    q: usize,
+    skip: Vec<usize>,
+}
+
+impl Skips {
+    /// Compute the skip table for a `p`-processor system (Algorithm 2).
+    pub fn new(p: usize) -> Self {
+        let skip = skips(p);
+        let q = skip.len() - 1;
+        Skips { p, q, skip }
+    }
+
+    /// Number of processors.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// `q = ceil(log2 p)`: rounds per phase, schedule length, graph degree.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// `skip[k]` for `0 <= k <= q` (`skip[q] = p`).
+    #[inline]
+    pub fn skip(&self, k: usize) -> usize {
+        self.skip[k]
+    }
+
+    /// All `q+1` skips.
+    #[inline]
+    pub fn as_slice(&self) -> &[usize] {
+        &self.skip
+    }
+
+    /// The to-processor `t_r^k = (r + skip[k]) mod p` for round index `k`.
+    #[inline]
+    pub fn to_proc(&self, r: usize, k: usize) -> usize {
+        debug_assert!(r < self.p);
+        let t = r + self.skip[k];
+        if t >= self.p {
+            t - self.p
+        } else {
+            t
+        }
+    }
+
+    /// The from-processor `f_r^k = (r - skip[k] + p) mod p` for round `k`.
+    #[inline]
+    pub fn from_proc(&self, r: usize, k: usize) -> usize {
+        debug_assert!(r < self.p);
+        let s = self.skip[k];
+        if r >= s {
+            r - s
+        } else {
+            r + self.p - s
+        }
+    }
+}
+
+/// Check Observation 3: `skip[k+1] <= 2*skip[k] <= skip[k+1] + 1`.
+pub fn check_observation3(sk: &Skips) -> bool {
+    (0..sk.q()).all(|k| {
+        let d = 2 * sk.skip(k);
+        sk.skip(k + 1) <= d && d <= sk.skip(k + 1) + 1
+    })
+}
+
+/// Check Lemma 1: `skip[k+1] - 1 <= sum_{i<=k} skip[i] < skip[k+1] + k`.
+pub fn check_lemma1(sk: &Skips) -> bool {
+    let mut sum = 0usize;
+    for k in 0..sk.q() {
+        sum += sk.skip(k);
+        // sum over i = 0..=k
+        if sum + 1 < sk.skip(k + 1) || sum >= sk.skip(k + 1) + k.max(1) {
+            // lower: skip[k+1] - 1 <= sum ; upper: sum < skip[k+1] + k.
+            // For k = 0 the paper's bound is sum = 1 < skip[1] + 0 = 2.
+            if !(sum + 1 >= sk.skip(k + 1) && sum < sk.skip(k + 1) + k) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Count the `k > 1` with `skip[k-2] + skip[k-1] == skip[k]` (Observation 4
+/// says there are at most two, and only via `skip[2] = 3` or `skip[3] = 5`).
+pub fn observation4_count(sk: &Skips) -> usize {
+    (2..=sk.q())
+        .filter(|&k| sk.skip(k - 2) + sk.skip(k - 1) == sk.skip(k))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_small() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(17), 5);
+        assert_eq!(ceil_log2(1 << 20), 20);
+        assert_eq!(ceil_log2((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn skips_p17() {
+        // q = 5; repeated halving from 17: 17, 9, 5, 3, 2, 1.
+        assert_eq!(skips(17), vec![1, 2, 3, 5, 9, 17]);
+    }
+
+    #[test]
+    fn skips_p9() {
+        assert_eq!(skips(9), vec![1, 2, 3, 5, 9]);
+    }
+
+    #[test]
+    fn skips_p18() {
+        // Doubling p = 9 -> 18 keeps all skips and appends skip[q+1] = 18
+        // (Observation 2).
+        assert_eq!(skips(18), vec![1, 2, 3, 5, 9, 18]);
+    }
+
+    #[test]
+    fn skips_pow2() {
+        assert_eq!(skips(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(skips(1), vec![1]);
+        assert_eq!(skips(2), vec![1, 2]);
+    }
+
+    #[test]
+    fn first_two_skips_always_1_2() {
+        for p in 2..2000 {
+            let sk = skips(p);
+            assert_eq!(sk[0], 1, "p={p}");
+            assert_eq!(sk[1], 2, "p={p}");
+        }
+    }
+
+    #[test]
+    fn observation3_holds_for_all_p() {
+        for p in 2..5000 {
+            assert!(check_observation3(&Skips::new(p)), "p={p}");
+        }
+    }
+
+    #[test]
+    fn lemma1_holds_for_all_p() {
+        for p in 2..5000 {
+            let sk = Skips::new(p);
+            let mut sum = 0usize;
+            for k in 0..sk.q() {
+                sum += sk.skip(k);
+                assert!(sum + 1 >= sk.skip(k + 1), "p={p} k={k} lower bound");
+                if k >= 1 {
+                    assert!(sum < sk.skip(k + 1) + k, "p={p} k={k} upper bound");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn observation4_at_most_two() {
+        for p in 2..5000 {
+            let sk = Skips::new(p);
+            assert!(observation4_count(&sk) <= 2, "p={p}");
+        }
+    }
+
+    #[test]
+    fn neighbors_roundtrip() {
+        for p in [2usize, 3, 9, 17, 18, 100, 1023, 1024, 1025] {
+            let sk = Skips::new(p);
+            for r in 0..p {
+                for k in 0..sk.q() {
+                    let t = sk.to_proc(r, k);
+                    assert_eq!(sk.from_proc(t, k), r, "p={p} r={r} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_q_is_p() {
+        for p in 1..1000 {
+            let sk = Skips::new(p);
+            assert_eq!(sk.skip(sk.q()), p);
+        }
+    }
+}

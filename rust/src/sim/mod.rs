@@ -1,0 +1,13 @@
+//! The machine substrate: the paper's fully connected, one-ported,
+//! send/receive-bidirectional `p`-processor system, as (a) a lockstep
+//! round-based simulator with machine-model enforcement and cost
+//! accounting ([`network`]), (b) pluggable cost models ([`cost`]) and (c)
+//! a threaded runtime where every rank is an OS thread ([`threads`]).
+
+pub mod cost;
+pub mod network;
+pub mod threads;
+
+pub use cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
+pub use network::{Msg, Network, RankProc, RunStats, SimError};
+pub use threads::{run_threaded, Comm};

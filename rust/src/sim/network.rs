@@ -1,0 +1,313 @@
+//! The round-based, fully connected, one-ported, bidirectional
+//! message-passing machine (the paper's model, Section 1).
+//!
+//! Collectives are implemented as per-rank state machines
+//! ([`RankProc`]); [`Network::run`] drives all `p` of them in lockstep
+//! rounds, enforcing the machine model:
+//!
+//! * **fully connected** — any rank may send to any other rank;
+//! * **one-ported** — per round each rank sends at most one message *and*
+//!   receives at most one message (send and receive may happen
+//!   simultaneously, possibly with different partners);
+//! * **round-synchronous** — a message sent in round `i` is delivered in
+//!   round `i`; nothing is buffered across rounds.
+//!
+//! Violations of one-portedness (two messages to the same rank in one
+//! round, self-messages) are hard errors: they indicate a broken schedule
+//! and abort the run — this is the simulator's most valuable service as a
+//! correctness instrument.
+
+use super::cost::CostModel;
+
+/// An outgoing message declared by a rank for the current round.
+#[derive(Debug, Clone)]
+pub struct Msg<T> {
+    pub to: usize,
+    pub data: Vec<T>,
+}
+
+/// A collective, viewed from one rank, as a round-stepped state machine.
+pub trait RankProc<T> {
+    /// The message this rank sends in `round`, or `None`.
+    fn send(&mut self, round: usize) -> Option<Msg<T>>;
+
+    /// The rank this rank expects to receive from in `round`, or `None`.
+    ///
+    /// In schedule-driven collectives both endpoints know each round's
+    /// communication fully in advance (no metadata is exchanged — a key
+    /// point of the paper); the simulator cross-checks expectation against
+    /// actual delivery, and the threaded runtime uses it to post receives.
+    fn expects(&self, round: usize) -> Option<usize>;
+
+    /// Deliver the message this rank receives in `round` (called after all
+    /// `send`s of the round are collected).
+    fn recv(&mut self, round: usize, from: usize, data: Vec<T>);
+
+    /// Number of rounds this rank participates in (the network runs until
+    /// the max over ranks).
+    fn rounds(&self) -> usize;
+}
+
+/// Aggregated statistics of one collective run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Rounds executed (max over ranks of [`RankProc::rounds`]).
+    pub rounds: usize,
+    /// Rounds in which at least one message flew.
+    pub active_rounds: usize,
+    /// Total messages.
+    pub messages: usize,
+    /// Total payload bytes moved (sum over messages).
+    pub bytes: usize,
+    /// Max payload bytes sent+received by any single rank (the one-port
+    /// bottleneck volume).
+    pub max_rank_bytes: usize,
+    /// Simulated completion time under the run's cost model, seconds:
+    /// `sum over rounds of max over the round's messages of msg_time`.
+    pub time: f64,
+}
+
+/// Simulation errors — all indicate a broken schedule/collective.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// Two senders targeted the same receiver in one round.
+    ReceivePortBusy { round: usize, to: usize, first_from: usize, second_from: usize },
+    /// A rank addressed itself.
+    SelfMessage { round: usize, rank: usize },
+    /// A rank addressed a non-existent rank.
+    BadTarget { round: usize, rank: usize, to: usize },
+    /// A message arrived at a rank that did not expect one (or expected a
+    /// different sender) — the send/receive schedules disagree.
+    UnexpectedMessage { round: usize, to: usize, from: usize, expected: Option<usize> },
+    /// A rank expected a message that never arrived.
+    MissingMessage { round: usize, rank: usize, expected_from: usize },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::ReceivePortBusy { round, to, first_from, second_from } => write!(
+                f,
+                "round {round}: receive port of rank {to} busy (from {first_from} and {second_from})"
+            ),
+            SimError::SelfMessage { round, rank } => {
+                write!(f, "round {round}: rank {rank} sent to itself")
+            }
+            SimError::BadTarget { round, rank, to } => {
+                write!(f, "round {round}: rank {rank} sent to non-existent rank {to}")
+            }
+            SimError::UnexpectedMessage { round, to, from, expected } => write!(
+                f,
+                "round {round}: rank {to} got message from {from} but expected {expected:?}"
+            ),
+            SimError::MissingMessage { round, rank, expected_from } => write!(
+                f,
+                "round {round}: rank {rank} expected a message from {expected_from}, none came"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// The simulated machine: `p` ranks, element type byte-size `elem_bytes`
+/// (used for cost accounting).
+pub struct Network {
+    p: usize,
+}
+
+impl Network {
+    pub fn new(p: usize) -> Self {
+        assert!(p > 0);
+        Network { p }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Run one collective to completion: `procs[r]` is rank `r`'s state
+    /// machine. Returns run statistics; errors on machine-model violations.
+    pub fn run<T: Clone, P: RankProc<T>>(
+        &mut self,
+        procs: &mut [P],
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<RunStats, SimError> {
+        assert_eq!(procs.len(), self.p);
+        let total_rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
+        let mut stats = RunStats { rounds: total_rounds, ..Default::default() };
+        let mut rank_bytes = vec![0usize; self.p];
+
+        // Reusable per-round delivery slots: receiver -> (sender, data).
+        let mut inbox: Vec<Option<(usize, Vec<T>)>> = (0..self.p).map(|_| None).collect();
+
+        for round in 0..total_rounds {
+            let mut round_time = 0.0f64;
+            let mut any = false;
+
+            // Collect sends.
+            for r in 0..self.p {
+                if let Some(msg) = procs[r].send(round) {
+                    if msg.to == r {
+                        return Err(SimError::SelfMessage { round, rank: r });
+                    }
+                    if msg.to >= self.p {
+                        return Err(SimError::BadTarget { round, rank: r, to: msg.to });
+                    }
+                    if let Some((first, _)) = &inbox[msg.to] {
+                        return Err(SimError::ReceivePortBusy {
+                            round,
+                            to: msg.to,
+                            first_from: *first,
+                            second_from: r,
+                        });
+                    }
+                    let bytes = msg.data.len() * elem_bytes;
+                    stats.messages += 1;
+                    stats.bytes += bytes;
+                    rank_bytes[r] += bytes;
+                    rank_bytes[msg.to] += bytes;
+                    round_time = round_time.max(cost.msg_time(r, msg.to, bytes));
+                    any = true;
+                    inbox[msg.to] = Some((r, msg.data));
+                }
+            }
+
+            // Cross-check expectations, then deliver.
+            for (to, slot) in inbox.iter_mut().enumerate() {
+                let expected = procs[to].expects(round);
+                match (slot.take(), expected) {
+                    (Some((from, data)), Some(exp)) if exp == from => {
+                        procs[to].recv(round, from, data);
+                    }
+                    (Some((from, _)), exp) => {
+                        return Err(SimError::UnexpectedMessage { round, to, from, expected: exp });
+                    }
+                    (None, Some(exp)) => {
+                        return Err(SimError::MissingMessage {
+                            round,
+                            rank: to,
+                            expected_from: exp,
+                        });
+                    }
+                    (None, None) => {}
+                }
+            }
+
+            if any {
+                stats.active_rounds += 1;
+                stats.time += round_time;
+            }
+        }
+        stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::UnitCost;
+
+    /// Trivial ring shift: rank r sends its value to r+1 each round.
+    struct RingShift {
+        rank: usize,
+        p: usize,
+        rounds: usize,
+        val: Vec<u32>,
+        seen: Vec<usize>,
+    }
+
+    impl RankProc<u32> for RingShift {
+        fn send(&mut self, _round: usize) -> Option<Msg<u32>> {
+            Some(Msg { to: (self.rank + 1) % self.p, data: self.val.clone() })
+        }
+        fn expects(&self, _round: usize) -> Option<usize> {
+            Some((self.rank + self.p - 1) % self.p)
+        }
+        fn recv(&mut self, _round: usize, from: usize, data: Vec<u32>) {
+            self.seen.push(from);
+            self.val = data;
+        }
+        fn rounds(&self) -> usize {
+            self.rounds
+        }
+    }
+
+    #[test]
+    fn ring_shift_runs_and_counts() {
+        let p = 5;
+        let mut procs: Vec<RingShift> = (0..p)
+            .map(|r| RingShift { rank: r, p, rounds: p - 1, val: vec![r as u32], seen: vec![] })
+            .collect();
+        let mut net = Network::new(p);
+        let stats = net.run(&mut procs, 4, &UnitCost).unwrap();
+        assert_eq!(stats.rounds, p - 1);
+        assert_eq!(stats.messages, p * (p - 1));
+        assert_eq!(stats.time, (p - 1) as f64);
+        // After p-1 shifts every rank holds its predecessor's... the value
+        // that started p-1 positions back = rank + 1 mod p.
+        for (r, pr) in procs.iter().enumerate() {
+            assert_eq!(pr.val, vec![((r + 1) % p) as u32]);
+        }
+    }
+
+    /// Two ranks target the same receiver -> one-port violation.
+    struct Collider {
+        rank: usize,
+    }
+
+    impl RankProc<u8> for Collider {
+        fn send(&mut self, _round: usize) -> Option<Msg<u8>> {
+            if self.rank == 0 || self.rank == 1 {
+                Some(Msg { to: 2, data: vec![1] })
+            } else {
+                None
+            }
+        }
+        fn expects(&self, _round: usize) -> Option<usize> {
+            None
+        }
+        fn recv(&mut self, _round: usize, _from: usize, _data: Vec<u8>) {}
+        fn rounds(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn one_port_violation_detected() {
+        let mut procs: Vec<Collider> = (0..3).map(|r| Collider { rank: r }).collect();
+        let mut net = Network::new(3);
+        let err = net.run(&mut procs, 1, &UnitCost).unwrap_err();
+        matches!(err, SimError::ReceivePortBusy { .. })
+            .then_some(())
+            .expect("expected ReceivePortBusy");
+    }
+
+    /// Self-message detection.
+    struct Selfie;
+    impl RankProc<u8> for Selfie {
+        fn send(&mut self, _round: usize) -> Option<Msg<u8>> {
+            Some(Msg { to: 0, data: vec![] })
+        }
+        fn expects(&self, _round: usize) -> Option<usize> {
+            None
+        }
+        fn recv(&mut self, _r: usize, _f: usize, _d: Vec<u8>) {}
+        fn rounds(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn self_message_detected() {
+        let mut procs = vec![Selfie];
+        let mut net = Network::new(1);
+        assert_eq!(
+            net.run(&mut procs, 1, &UnitCost).unwrap_err(),
+            SimError::SelfMessage { round: 0, rank: 0 }
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! Threaded runtime: every simulated rank is a real OS thread exchanging
+//! messages over channels — the "distributed" execution mode.
+//!
+//! Unlike the lockstep [`super::network::Network`], ranks here run
+//! asynchronously: rank A can be several rounds ahead of rank B, exactly
+//! as MPI processes would be. Messages are tagged with their round number
+//! and matched out-of-order on the receive side, so the execution is
+//! correct for any interleaving — this validates that the schedules do not
+//! depend on global synchrony (the paper's algorithms are round-*numbered*
+//! but not barrier-synchronised).
+//!
+//! The same [`super::network::RankProc`] state machines run unchanged: the
+//! driver sends the round's message (channels never block on send) and
+//! then blocks on the expected receive.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use super::network::{Msg, RankProc};
+
+/// One round-tagged message in flight.
+struct Packet<T> {
+    from: usize,
+    round: usize,
+    data: Vec<T>,
+}
+
+/// A rank's communication endpoint in the threaded world.
+pub struct Comm<T> {
+    rank: usize,
+    senders: Vec<mpsc::Sender<Packet<T>>>,
+    inbox: mpsc::Receiver<Packet<T>>,
+    /// Messages that arrived before the rank asked for them.
+    pending: HashMap<(usize, usize), Vec<T>>,
+    /// Receive timeout — a blown deadline means a schedule bug (a message
+    /// that will never be sent), which we surface as a panic with context.
+    timeout: Duration,
+}
+
+impl<T: Send> Comm<T> {
+    /// Create endpoints for all `p` ranks of a world.
+    pub fn world(p: usize, timeout: Duration) -> Vec<Comm<T>> {
+        let mut senders = Vec::with_capacity(p);
+        let mut receivers = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel::<Packet<T>>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| Comm {
+                rank,
+                senders: senders.clone(),
+                inbox,
+                pending: HashMap::new(),
+                timeout,
+            })
+            .collect()
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Non-blocking send of `data` to `to`, tagged with `round`.
+    pub fn send(&self, to: usize, round: usize, data: Vec<T>) {
+        assert_ne!(to, self.rank, "self-message from rank {}", self.rank);
+        self.senders[to]
+            .send(Packet { from: self.rank, round, data })
+            .expect("peer hung up — rank thread died");
+    }
+
+    /// Blocking receive of the message from `from` tagged `round`;
+    /// out-of-order arrivals are buffered.
+    pub fn recv(&mut self, from: usize, round: usize) -> Vec<T> {
+        if let Some(data) = self.pending.remove(&(from, round)) {
+            return data;
+        }
+        loop {
+            let pkt = self
+                .inbox
+                .recv_timeout(self.timeout)
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "rank {}: timeout waiting for (from={from}, round={round}): {e}",
+                        self.rank
+                    )
+                });
+            if pkt.from == from && pkt.round == round {
+                return pkt.data;
+            }
+            self.pending.insert((pkt.from, pkt.round), pkt.data);
+        }
+    }
+}
+
+/// Drive one rank's [`RankProc`] over its `Comm` endpoint to completion.
+pub fn drive<T: Send, P: RankProc<T>>(proc_: &mut P, comm: &mut Comm<T>) {
+    let rounds = proc_.rounds();
+    for round in 0..rounds {
+        if let Some(Msg { to, data }) = proc_.send(round) {
+            comm.send(to, round, data);
+        }
+        if let Some(from) = proc_.expects(round) {
+            let data = comm.recv(from, round);
+            proc_.recv(round, from, data);
+        }
+    }
+}
+
+/// Run all ranks' state machines on real threads; returns the final state
+/// machines for inspection.
+pub fn run_threaded<T, P>(procs: Vec<P>) -> Vec<P>
+where
+    T: Send + 'static,
+    P: RankProc<T> + Send + 'static,
+{
+    let p = procs.len();
+    let comms = Comm::<T>::world(p, Duration::from_secs(30));
+    let handles: Vec<_> = procs
+        .into_iter()
+        .zip(comms)
+        .map(|(mut pr, mut comm)| {
+            std::thread::spawn(move || {
+                drive(&mut pr, &mut comm);
+                pr
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-robin token passing, threaded.
+    struct Token {
+        rank: usize,
+        p: usize,
+        have: Vec<u64>,
+    }
+
+    impl RankProc<u64> for Token {
+        fn send(&mut self, round: usize) -> Option<Msg<u64>> {
+            // In round i, rank i sends its token to rank i+1.
+            if round == self.rank {
+                Some(Msg { to: (self.rank + 1) % self.p, data: self.have.clone() })
+            } else {
+                None
+            }
+        }
+        fn expects(&self, round: usize) -> Option<usize> {
+            if round + 1 == self.rank || (self.rank == 0 && round == self.p - 1) {
+                Some(round)
+            } else {
+                None
+            }
+        }
+        fn recv(&mut self, _round: usize, _from: usize, mut data: Vec<u64>) {
+            data.push(self.rank as u64);
+            self.have = data;
+        }
+        fn rounds(&self) -> usize {
+            self.p
+        }
+    }
+
+    #[test]
+    fn token_ring_threaded() {
+        let p = 7;
+        let procs: Vec<Token> =
+            (0..p).map(|rank| Token { rank, p, have: vec![rank as u64] }).collect();
+        let done = run_threaded(procs);
+        // Rank 0 received the token last; it accumulated every rank.
+        assert_eq!(done[0].have, vec![0, 1, 2, 3, 4, 5, 6, 0]);
+    }
+
+    #[test]
+    fn out_of_order_delivery_buffered() {
+        // Rank 0 sends rounds 0 and 1 to rank 1 immediately; rank 1 first
+        // asks for round 1, then round 0 — pending buffer must serve both.
+        let mut comms = Comm::<u8>::world(2, Duration::from_secs(5));
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            c0.send(1, 0, vec![10]);
+            c0.send(1, 1, vec![11]);
+        });
+        let mut c1 = c1;
+        assert_eq!(c1.recv(0, 1), vec![11]);
+        assert_eq!(c1.recv(0, 0), vec![10]);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,166 @@
+//! Minimal property-testing harness — the offline substitute for
+//! `proptest`/`quickcheck` (not in the vendored crate set; see DESIGN.md
+//! §Substitutions).
+//!
+//! Provides a deterministic xorshift PRNG and a `forall` driver that, on
+//! failure, retries with "shrunk" (halved) integer inputs to report a
+//! small counterexample. Deterministic by default (fixed seed) so CI is
+//! reproducible; set `TESTKIT_SEED` to explore.
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    /// Seed from `TESTKIT_SEED` or the fixed default.
+    pub fn from_env() -> Self {
+        let seed = std::env::var("TESTKIT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x9E3779B97F4A7C15);
+        Rng::new(seed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform i64 in `[lo, hi]`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    /// A vector of `len` i64 values in `[lo, hi]`.
+    pub fn vec_i64(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.range_i64(lo, hi)).collect()
+    }
+
+    /// Biased coin.
+    pub fn chance(&mut self, prob_num: u64, prob_den: u64) -> bool {
+        self.next_u64() % prob_den < prob_num
+    }
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`; on failure, try to
+/// shrink (halve all usize fields via the case's own `shrink`) and panic
+/// with the smallest failing case found.
+pub fn forall<C, G, P>(cases: usize, mut generate: G, mut prop: P)
+where
+    C: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> C,
+    P: FnMut(&C) -> Result<(), String>,
+{
+    let mut rng = Rng::from_env();
+    for i in 0..cases {
+        let case = generate(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!("property failed on case #{i}: {case:?}\n  {msg}");
+        }
+    }
+}
+
+/// `forall` with shrinking: `shrink` proposes smaller variants of a
+/// failing case; the smallest still-failing one is reported.
+pub fn forall_shrink<C, G, P, S>(cases: usize, mut generate: G, mut prop: P, shrink: S)
+where
+    C: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> C,
+    P: FnMut(&C) -> Result<(), String>,
+    S: Fn(&C) -> Vec<C>,
+{
+    let mut rng = Rng::from_env();
+    for i in 0..cases {
+        let case = generate(&mut rng);
+        if let Err(first_msg) = prop(&case) {
+            // Greedy shrink loop.
+            let mut best = case.clone();
+            let mut best_msg = first_msg;
+            let mut progress = true;
+            while progress {
+                progress = false;
+                for cand in shrink(&best) {
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed on case #{i}\n  original: {case:?}\n  shrunk:   {best:?}\n  {best_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.range(3, 17);
+            assert!((3..=17).contains(&v));
+            let w = r.range_i64(-5, 5);
+            assert!((-5..=5).contains(&w));
+        }
+    }
+
+    #[test]
+    fn forall_passes() {
+        forall(
+            100,
+            |rng| rng.range(1, 100),
+            |&n| if n >= 1 { Ok(()) } else { Err("n < 1".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_fails_and_reports() {
+        forall(
+            100,
+            |rng| rng.range(1, 100),
+            |&n| if n < 50 { Ok(()) } else { Err(format!("n={n} too big")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn shrinking_finds_smaller() {
+        forall_shrink(
+            10,
+            |rng| rng.range(50, 100),
+            |&n| if n < 10 { Ok(()) } else { Err(format!("n={n}")) },
+            |&n| if n > 1 { vec![n / 2] } else { vec![] },
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Coordinator end-to-end: plan → execute → validate → metrics, across
+//! kinds, algorithms, distributions and cost models — the paths the
+//! `cbcast` CLI and the benches drive.
+
+use circulant_bcast::coordinator::{
+    parse_cost, plan, Algo, Dist, Engine, Kind, Request, TuningParams,
+};
+use circulant_bcast::schedule::ceil_log2;
+use circulant_bcast::sim::UnitCost;
+
+#[test]
+fn full_matrix_small() {
+    let eng = Engine::new();
+    let kinds = [Kind::Bcast, Kind::Reduce, Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce];
+    for kind in kinds {
+        for p in [1usize, 2, 9, 17] {
+            let mut req = Request::new(kind, p, 340);
+            req.blocks = Some(3);
+            let rep = eng.run(&req, &UnitCost).unwrap();
+            assert!(rep.valid, "{kind:?} p={p}");
+        }
+    }
+    assert_eq!(eng.metrics.total(), (kinds.len() * 4) as u64);
+}
+
+#[test]
+fn auto_tuning_produces_sane_block_counts() {
+    let tp = TuningParams::default();
+    for p in [16usize, 200, 25600] {
+        for m in [1usize << 10, 1 << 16, 1 << 22] {
+            let req = Request::new(Kind::Bcast, p, m);
+            let pl = plan(&req, &tp);
+            assert!(pl.n >= 1 && pl.n <= m, "p={p} m={m}: n={}", pl.n);
+            assert_eq!(pl.q, ceil_log2(p));
+            assert_eq!(pl.predicted_rounds, pl.n - 1 + pl.q);
+        }
+    }
+}
+
+#[test]
+fn predicted_rounds_match_simulated() {
+    let eng = Engine::new();
+    for (kind, algo) in [
+        (Kind::Bcast, Algo::Circulant),
+        (Kind::Bcast, Algo::Binomial),
+        (Kind::Bcast, Algo::VanDeGeijn),
+        (Kind::Allgatherv, Algo::Ring),
+        (Kind::ReduceScatter, Algo::Ring),
+    ] {
+        let mut req = Request::new(kind, 17, 680);
+        req.algo = algo;
+        req.blocks = Some(5);
+        let rep = eng.run(&req, &UnitCost).unwrap();
+        assert_eq!(
+            rep.stats.rounds, rep.plan.predicted_rounds,
+            "{kind:?}/{algo:?}: sim {} vs plan {}",
+            rep.stats.rounds, rep.plan.predicted_rounds
+        );
+    }
+}
+
+#[test]
+fn distributions_all_valid() {
+    let eng = Engine::new();
+    for dist in [Dist::Regular, Dist::Irregular, Dist::Degenerate] {
+        for kind in [Kind::Allgatherv, Kind::ReduceScatter] {
+            let mut req = Request::new(kind, 12, 480);
+            req.dist = dist;
+            req.blocks = Some(4);
+            let rep = eng.run(&req, &UnitCost).unwrap();
+            assert!(rep.valid, "{kind:?} {dist:?}");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_cost_orders_algorithms_sanely() {
+    // On the VEGA-like model with a large message, the circulant pipeline
+    // must beat the binomial tree (Fig. 1's headline).
+    let eng = Engine::new();
+    let p = 200usize;
+    let m = 1 << 20;
+    let cost = parse_cost("vega:4").unwrap();
+
+    let mut new = Request::new(Kind::Bcast, p, m);
+    new.algo = Algo::Circulant;
+    let t_new = eng.run(&new, cost.as_ref()).unwrap().sim_time;
+
+    let mut nat = Request::new(Kind::Bcast, p, m);
+    nat.algo = Algo::Binomial;
+    let t_nat = eng.run(&nat, cost.as_ref()).unwrap().sim_time;
+
+    assert!(
+        t_new < t_nat,
+        "circulant ({t_new:.6}s) should beat binomial ({t_nat:.6}s) at m={m}"
+    );
+}
+
+#[test]
+fn schedule_cache_reuse() {
+    let eng = Engine::new();
+    let cache = eng.cache.clone();
+    // Warm.
+    for r in 0..17 {
+        cache.get(17, r);
+    }
+    let (h0, m0) = cache.stats();
+    for r in 0..17 {
+        cache.get(17, r);
+    }
+    let (h1, m1) = cache.stats();
+    assert_eq!(m1, m0, "no new misses on re-request");
+    assert_eq!(h1 - h0, 17);
+}
+
+#[test]
+fn cost_parsing_round_trip() {
+    for spec in ["unit", "linear", "linear:2e-6:1e-10", "vega:128", "cluster:32"] {
+        let c = parse_cost(spec).unwrap_or_else(|| panic!("{spec} should parse"));
+        assert!(c.msg_time(0, 1, 1024) > 0.0);
+    }
+}

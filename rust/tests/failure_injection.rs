@@ -1,0 +1,178 @@
+//! Failure injection: corrupt schedules and misbehaving ranks must be
+//! *detected* by the machine-model enforcement, not silently tolerated —
+//! the simulator doubles as a schedule validator, and these tests prove
+//! the validator actually fires.
+
+use circulant_bcast::collectives::bcast::BcastProc;
+use circulant_bcast::collectives::common::{BlockGeometry, World};
+use circulant_bcast::sim::network::{Msg, Network, RankProc, SimError};
+use circulant_bcast::sim::UnitCost;
+
+/// Wraps a proc and tampers with its behaviour.
+struct Tamper<P> {
+    inner: P,
+    /// Redirect round-0 send to this target.
+    redirect_to: Option<usize>,
+    /// Suppress all sends.
+    mute: bool,
+    /// Send one extra unsolicited message in round 0.
+    extra_to: Option<usize>,
+}
+
+impl<P: RankProc<u32>> RankProc<u32> for Tamper<P> {
+    fn send(&mut self, round: usize) -> Option<Msg<u32>> {
+        if self.mute {
+            // Drain the inner state machine anyway (keeps its bookkeeping
+            // coherent) but drop the message.
+            let _ = self.inner.send(round);
+            return None;
+        }
+        let msg = self.inner.send(round);
+        if round == 0 {
+            if let Some(t) = self.extra_to {
+                // Unsolicited message (possibly while inner sends nothing).
+                return Some(Msg { to: t, data: vec![99] });
+            }
+            if let Some(t) = self.redirect_to {
+                return match msg {
+                    Some(mut m) => {
+                        m.to = t;
+                        Some(m)
+                    }
+                    None => Some(Msg { to: t, data: vec![1, 2, 3] }),
+                };
+            }
+        }
+        msg
+    }
+    fn expects(&self, round: usize) -> Option<usize> {
+        self.inner.expects(round)
+    }
+    fn recv(&mut self, round: usize, from: usize, data: Vec<u32>) {
+        self.inner.recv(round, from, data);
+    }
+    fn rounds(&self) -> usize {
+        self.inner.rounds()
+    }
+}
+
+fn procs(p: usize, m: usize, n: usize) -> Vec<BcastProc<u32>> {
+    let world = World::new(p);
+    let geom = BlockGeometry::new(m, n);
+    let data: Vec<u32> = (0..m as u32).collect();
+    (0..p)
+        .map(|r| BcastProc::new(&world, r, 0, geom, if r == 0 { Some(&data[..]) } else { None }))
+        .collect()
+}
+
+fn wrap(
+    inner: Vec<BcastProc<u32>>,
+    f: impl Fn(usize) -> (Option<usize>, bool, Option<usize>),
+) -> Vec<Tamper<BcastProc<u32>>> {
+    inner
+        .into_iter()
+        .enumerate()
+        .map(|(r, p)| {
+            let (redirect_to, mute, extra_to) = f(r);
+            Tamper { inner: p, redirect_to, mute, extra_to }
+        })
+        .collect()
+}
+
+#[test]
+fn muted_sender_detected_as_missing_message() {
+    // Rank 1 (the root's first target) never sends: some receiver expecting
+    // a block must trip MissingMessage within a few rounds... in round 0
+    // the root's own message still arrives at rank 1; rank 1's silence is
+    // noticed by ITS receiver later.
+    let p = 9usize;
+    let mut t = wrap(procs(p, 36, 4), |r| (None, r == 1, None));
+    let err = Network::new(p).run(&mut t, 4, &UnitCost).unwrap_err();
+    assert!(
+        matches!(err, SimError::MissingMessage { .. }),
+        "expected MissingMessage, got {err:?}"
+    );
+}
+
+#[test]
+fn redirected_message_detected() {
+    // Rank 1 redirects its round-0 message to the wrong target: either the
+    // target's port is unexpectedly busy, the target did not expect it, or
+    // the true receiver starves — all must be caught.
+    let p = 9usize;
+    for wrong_target in [3usize, 5, 7] {
+        let mut t = wrap(procs(p, 36, 4), |r| {
+            (if r == 1 { Some(wrong_target) } else { None }, false, None)
+        });
+        let err = Network::new(p).run(&mut t, 4, &UnitCost).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SimError::UnexpectedMessage { .. }
+                    | SimError::ReceivePortBusy { .. }
+                    | SimError::MissingMessage { .. }
+            ),
+            "wrong_target={wrong_target}: got {err:?}"
+        );
+    }
+}
+
+#[test]
+fn unsolicited_message_detected() {
+    // A rank that sends when its schedule says not to must be caught.
+    let p = 17usize;
+    // rank 12 sends an unsolicited message to rank 4 in round 0.
+    let mut t = wrap(procs(p, 34, 2), |r| (None, false, if r == 12 { Some(4) } else { None }));
+    let err = Network::new(p).run(&mut t, 4, &UnitCost).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SimError::UnexpectedMessage { .. } | SimError::ReceivePortBusy { .. }
+        ),
+        "got {err:?}"
+    );
+}
+
+#[test]
+fn corrupted_schedule_blocks_panic_on_use_before_receive() {
+    // Force a rank to "send" a block it cannot have: BcastProc panics with
+    // a schedule-violation diagnostic (caught here via catch_unwind).
+    struct EarlySender {
+        inner: BcastProc<u32>,
+    }
+    impl RankProc<u32> for EarlySender {
+        fn send(&mut self, round: usize) -> Option<Msg<u32>> {
+            if round == 0 && self.inner.rank == 5 {
+                // Ask the inner proc for a later round's send, which needs
+                // a block rank 5 has not received yet in round 0.
+                return self.inner.send(3);
+            }
+            self.inner.send(round)
+        }
+        fn expects(&self, round: usize) -> Option<usize> {
+            self.inner.expects(round)
+        }
+        fn recv(&mut self, round: usize, from: usize, data: Vec<u32>) {
+            self.inner.recv(round, from, data);
+        }
+        fn rounds(&self) -> usize {
+            self.inner.rounds()
+        }
+    }
+    let p = 17usize;
+    let inner = procs(p, 68, 8);
+    let mut t: Vec<EarlySender> = inner.into_iter().map(|i| EarlySender { inner: i }).collect();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = Network::new(p).run(&mut t, 4, &UnitCost);
+    }));
+    assert!(res.is_err(), "sending an unreceived block must panic with a diagnostic");
+}
+
+#[test]
+fn clean_run_has_no_failures() {
+    // Control: the untampered system runs to completion.
+    let p = 9usize;
+    let mut t = wrap(procs(p, 36, 4), |_| (None, false, None));
+    let stats = Network::new(p).run(&mut t, 4, &UnitCost).unwrap();
+    assert_eq!(stats.rounds, 4 - 1 + 4);
+}

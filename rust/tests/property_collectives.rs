@@ -1,0 +1,211 @@
+//! Property-based tests on the collectives: random (p, root, m, n,
+//! distribution) — data integrity, round optimality and machine-model
+//! cleanliness on every draw, with shrinking on failure.
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::{
+    allgatherv_sim, allreduce_sim, bcast_sim, reduce_scatter_sim, reduce_sim, SumOp,
+};
+use circulant_bcast::schedule::ceil_log2;
+use circulant_bcast::sim::UnitCost;
+use circulant_bcast::testkit::{forall_shrink, Rng};
+
+#[derive(Debug, Clone)]
+struct Case {
+    p: usize,
+    root: usize,
+    m: usize,
+    n: usize,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let p = rng.range(1, 40);
+    Case {
+        p,
+        root: rng.range(0, p - 1),
+        m: rng.range(0, 200),
+        n: rng.range(1, 24),
+    }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    if c.p > 1 {
+        out.push(Case { p: c.p / 2 + 1, root: c.root % (c.p / 2 + 1), ..c.clone() });
+    }
+    if c.m > 0 {
+        out.push(Case { m: c.m / 2, ..c.clone() });
+    }
+    if c.n > 1 {
+        out.push(Case { n: c.n / 2, ..c.clone() });
+    }
+    if c.root > 0 {
+        out.push(Case { root: 0, ..c.clone() });
+    }
+    out
+}
+
+#[test]
+fn prop_bcast_delivers_everything() {
+    forall_shrink(
+        250,
+        gen_case,
+        |c| {
+            let data: Vec<i64> = (0..c.m as i64).map(|i| i * 3 - 7).collect();
+            let res = bcast_sim(c.p, c.root, &data, c.n, 8, &UnitCost)
+                .map_err(|e| format!("sim error: {e}"))?;
+            for (r, buf) in res.buffers.iter().enumerate() {
+                if buf != &data {
+                    return Err(format!("rank {r} got wrong data"));
+                }
+            }
+            if c.p > 1 && res.stats.rounds != c.n - 1 + ceil_log2(c.p) {
+                return Err(format!("rounds {} not optimal", res.stats.rounds));
+            }
+            Ok(())
+        },
+        shrink_case,
+    );
+}
+
+#[test]
+fn prop_reduce_sums_correctly() {
+    forall_shrink(
+        200,
+        gen_case,
+        |c| {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..c.m).map(|i| ((r * 37 + i * 11) % 256) as i64).collect())
+                .collect();
+            let want: Vec<i64> =
+                (0..c.m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+            let res = reduce_sim(&inputs, c.root, c.n, Arc::new(SumOp), 8, &UnitCost)
+                .map_err(|e| format!("sim error: {e}"))?;
+            if res.buffer != want {
+                return Err("wrong reduction at root".into());
+            }
+            Ok(())
+        },
+        shrink_case,
+    );
+}
+
+#[test]
+fn prop_allgatherv_random_counts() {
+    forall_shrink(
+        150,
+        |rng| {
+            let p = rng.range(1, 24);
+            let n = rng.range(1, 12);
+            // counts with zeros, spikes, and ordinary values
+            let counts: Vec<usize> = (0..p)
+                .map(|_| match rng.range(0, 4) {
+                    0 => 0,
+                    1 => rng.range(1, 5),
+                    2 => rng.range(5, 40),
+                    _ => rng.range(40, 120),
+                })
+                .collect();
+            (counts, n)
+        },
+        |(counts, n)| {
+            let p = counts.len();
+            let inputs: Vec<Vec<i32>> = counts
+                .iter()
+                .enumerate()
+                .map(|(r, &c)| (0..c).map(|i| (r * 1000 + i) as i32).collect())
+                .collect();
+            let res = allgatherv_sim(&inputs, *n, 4, &UnitCost)
+                .map_err(|e| format!("sim error: {e}"))?;
+            for r in 0..p {
+                for j in 0..p {
+                    if res.buffers[r][j] != inputs[j] {
+                        return Err(format!("rank {r} root {j} mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        },
+        |(counts, n)| {
+            let mut out = Vec::new();
+            if counts.len() > 1 {
+                out.push((counts[..counts.len() / 2 + 1].to_vec(), *n));
+            }
+            if *n > 1 {
+                out.push((counts.clone(), n / 2));
+            }
+            out.push((counts.iter().map(|c| c / 2).collect(), *n));
+            out
+        },
+    );
+}
+
+#[test]
+fn prop_reduce_scatter_random_counts() {
+    forall_shrink(
+        120,
+        |rng| {
+            let p = rng.range(1, 20);
+            let n = rng.range(1, 8);
+            let counts: Vec<usize> = (0..p).map(|_| rng.range(0, 30)).collect();
+            (counts, n)
+        },
+        |(counts, n)| {
+            let p = counts.len();
+            let total: usize = counts.iter().sum();
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..total).map(|i| ((r + 2) * (i + 1) % 500) as i64).collect())
+                .collect();
+            let sums: Vec<i64> =
+                (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+            let res = reduce_scatter_sim(&inputs, counts, *n, Arc::new(SumOp), 8, &UnitCost)
+                .map_err(|e| format!("sim error: {e}"))?;
+            let mut off = 0;
+            for r in 0..p {
+                if res.chunks[r] != sums[off..off + counts[r]] {
+                    return Err(format!("rank {r} chunk wrong"));
+                }
+                off += counts[r];
+            }
+            Ok(())
+        },
+        |(counts, n)| {
+            let mut out = Vec::new();
+            if counts.len() > 1 {
+                out.push((counts[..counts.len() / 2 + 1].to_vec(), *n));
+            }
+            if *n > 1 {
+                out.push((counts.clone(), n / 2));
+            }
+            out
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_random() {
+    forall_shrink(
+        120,
+        gen_case,
+        |c| {
+            if c.m == 0 {
+                return Ok(()); // nothing to reduce
+            }
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..c.m).map(|i| ((r + 1) * (i + 1) % 333) as i64).collect())
+                .collect();
+            let want: Vec<i64> =
+                (0..c.m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+            let res = allreduce_sim(&inputs, c.n, Arc::new(SumOp), 8, &UnitCost)
+                .map_err(|e| format!("sim error: {e}"))?;
+            for (r, buf) in res.buffers.iter().enumerate() {
+                if buf != &want {
+                    return Err(format!("rank {r} mismatch"));
+                }
+            }
+            Ok(())
+        },
+        shrink_case,
+    );
+}

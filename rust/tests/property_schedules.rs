@@ -1,0 +1,176 @@
+//! Property-based tests on the schedule algorithms (using the in-house
+//! `testkit` harness — the offline substitute for proptest; see DESIGN.md
+//! §Substitutions). Random p up to multi-million, random ranks.
+
+use circulant_bcast::schedule::{
+    all_baseblocks, baseblock, canonical_sequence, recv_schedule, send_schedule, Skips,
+};
+use circulant_bcast::testkit::{forall, forall_shrink, Rng};
+
+fn random_p(rng: &mut Rng) -> usize {
+    // Mix dense small p with exponentially distributed large p.
+    match rng.range(0, 3) {
+        0 => rng.range(2, 300),
+        1 => rng.range(300, 10_000),
+        2 => 1usize << rng.range(10, 22),
+        _ => (1usize << rng.range(10, 22)) + rng.range(1, 1000),
+    }
+}
+
+#[test]
+fn prop_condition3_random_p_and_rank() {
+    forall(
+        400,
+        |rng| {
+            let p = random_p(rng);
+            let r = rng.range(0, p - 1);
+            (p, r)
+        },
+        |&(p, r)| {
+            let sk = Skips::new(p);
+            let q = sk.q() as i64;
+            let s = recv_schedule(&sk, r);
+            let mut got = s.blocks.clone();
+            got.sort_unstable();
+            let mut want: Vec<i64> = (-q..0).collect();
+            if r != 0 {
+                let b = s.baseblock as i64;
+                want.retain(|&v| v != b - q);
+                want.push(b);
+                want.sort_unstable();
+            }
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("condition 3 violated: got {got:?} want {want:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_conditions12_random_edges() {
+    forall(
+        300,
+        |rng| {
+            let p = random_p(rng);
+            let r = rng.range(0, p - 1);
+            (p, r)
+        },
+        |&(p, r)| {
+            let sk = Skips::new(p);
+            let send = send_schedule(&sk, r);
+            for k in 0..sk.q() {
+                let t = sk.to_proc(r, k);
+                let tr = recv_schedule(&sk, t);
+                if send.blocks[k] != tr.blocks[k] {
+                    return Err(format!(
+                        "cond 2: k={k} send={} but recv_t={}",
+                        send.blocks[k], tr.blocks[k]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_condition4_random() {
+    forall(
+        300,
+        |rng| {
+            let p = random_p(rng);
+            let r = rng.range(1, p - 1).max(1);
+            (p, r)
+        },
+        |&(p, r)| {
+            let sk = Skips::new(p);
+            let q = sk.q() as i64;
+            let recv = recv_schedule(&sk, r);
+            let send = send_schedule(&sk, r);
+            let b = send.baseblock as i64;
+            for k in 0..sk.q() {
+                let v = send.blocks[k];
+                let ok = v == b - q || (0..k).any(|j| recv.blocks[j] == v);
+                if !ok {
+                    return Err(format!("cond 4: k={k} block={v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_canonical_sequence_decomposes_r() {
+    forall(
+        500,
+        |rng| {
+            let p = random_p(rng);
+            let r = rng.range(0, p - 1);
+            (p, r)
+        },
+        |&(p, r)| {
+            let sk = Skips::new(p);
+            let seq = canonical_sequence(&sk, r);
+            let sum: usize = seq.iter().map(|&e| sk.skip(e)).sum();
+            if sum != r {
+                return Err(format!("sums to {sum}, want {r}"));
+            }
+            if seq.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("indices not strictly increasing".into());
+            }
+            if r > 0 && seq[0] != baseblock(&sk, r) {
+                return Err("first index is not the baseblock".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_baseblocks_matches_pointwise_with_shrink() {
+    forall_shrink(
+        200,
+        |rng| random_p(rng).min(1 << 18),
+        |&p| {
+            let sk = Skips::new(p);
+            let fast = all_baseblocks(&sk);
+            for r in (0..p).step_by(1 + p / 512) {
+                if fast[r] != baseblock(&sk, r) {
+                    return Err(format!("mismatch at r={r}: {} vs {}", fast[r], baseblock(&sk, r)));
+                }
+            }
+            Ok(())
+        },
+        |&p| if p > 2 { vec![p / 2, p - 1] } else { vec![] },
+    );
+}
+
+#[test]
+fn prop_instrumentation_bounds_random() {
+    forall(
+        400,
+        |rng| {
+            let p = random_p(rng);
+            let r = rng.range(0, p - 1);
+            (p, r)
+        },
+        |&(p, r)| {
+            let sk = Skips::new(p);
+            let s = recv_schedule(&sk, r);
+            let v = send_schedule(&sk, r).violations;
+            if s.stats.recursions > sk.q().saturating_sub(1) {
+                return Err(format!("recursions {} > q-1", s.stats.recursions));
+            }
+            if s.stats.scans > 3 * sk.q() + s.stats.recursions {
+                return Err(format!("scans {} > 3q+R", s.stats.scans));
+            }
+            if v > 4 {
+                return Err(format!("{v} violations > 4"));
+            }
+            Ok(())
+        },
+    );
+}

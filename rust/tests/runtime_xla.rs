@@ -1,0 +1,175 @@
+//! Integration: the PJRT runtime executes the AOT artifacts correctly and
+//! backs the reduction collectives end to end (Python authored the HLO at
+//! build time; only Rust runs here).
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::{reduce_scatter_block_sim, reduce_sim, ReduceOp};
+use circulant_bcast::runtime::{DType, XlaRuntime, XlaSumOp};
+use circulant_bcast::sim::LinearCost;
+
+fn runtime() -> Arc<XlaRuntime> {
+    Arc::new(XlaRuntime::new().expect("artifacts missing — run `make artifacts`"))
+}
+
+#[test]
+fn discovers_expected_artifacts() {
+    let rt = runtime();
+    assert!(rt.artifacts().len() >= 10, "got {}", rt.artifacts().len());
+    assert!(rt.select_pair("sum", DType::F32, 1000).is_some());
+    assert!(rt.select_pair("sum", DType::I32, 1000).is_some());
+    assert!(rt.select_pair("max", DType::F32, 1000).is_some());
+}
+
+#[test]
+fn pair_combine_exact_block() {
+    let rt = runtime();
+    let art = rt.select_pair("sum", DType::F32, 4096).unwrap();
+    let m = art.block_len();
+    let x: Vec<f32> = (0..m).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..m).map(|i| 2.0 * i as f32).collect();
+    let out = rt.pair_combine("sum", DType::F32, &x, &y, 0.0).unwrap();
+    for i in 0..m {
+        assert_eq!(out[i], 3.0 * i as f32);
+    }
+}
+
+#[test]
+fn pair_combine_odd_lengths_padded() {
+    let rt = runtime();
+    for m in [1usize, 7, 1023, 1025, 5000, 70000, 100001] {
+        let x: Vec<f32> = (0..m).map(|i| (i % 97) as f32).collect();
+        let y: Vec<f32> = (0..m).map(|i| (i % 13) as f32).collect();
+        let out = rt.pair_combine("sum", DType::F32, &x, &y, 0.0).unwrap();
+        assert_eq!(out.len(), m);
+        for i in 0..m {
+            assert_eq!(out[i], x[i] + y[i], "m={m} i={i}");
+        }
+    }
+}
+
+#[test]
+fn pair_combine_i32() {
+    let rt = runtime();
+    let m = 9999usize;
+    let x: Vec<i32> = (0..m as i32).collect();
+    let y: Vec<i32> = (0..m as i32).map(|i| -2 * i).collect();
+    let out = rt.pair_combine("sum", DType::I32, &x, &y, 0).unwrap();
+    for i in 0..m {
+        assert_eq!(out[i], -(i as i32));
+    }
+}
+
+#[test]
+fn max_combine_with_identity_pad() {
+    let rt = runtime();
+    let m = 5001usize;
+    let x: Vec<f32> = (0..m).map(|i| (i % 31) as f32 - 15.0).collect();
+    let y: Vec<f32> = (0..m).map(|i| (i % 17) as f32 - 8.0).collect();
+    let out = rt.pair_combine("max", DType::F32, &x, &y, f32::NEG_INFINITY).unwrap();
+    for i in 0..m {
+        assert_eq!(out[i], x[i].max(y[i]), "i={i}");
+    }
+}
+
+#[test]
+fn xla_op_matches_native_sum() {
+    let rt = runtime();
+    let op = XlaSumOp::new(rt);
+    let mut acc: Vec<f32> = (0..3000).map(|i| i as f32 * 0.5).collect();
+    let incoming: Vec<f32> = (0..3000).map(|i| i as f32 * 0.25).collect();
+    let want: Vec<f32> = acc.iter().zip(&incoming).map(|(a, b)| a + b).collect();
+    ReduceOp::<f32>::combine(&op, &mut acc, &incoming);
+    assert_eq!(acc, want);
+}
+
+#[test]
+fn reduce_collective_with_xla_operator() {
+    // The full paper pipeline: reversed-schedule MPI_Reduce with the ⊕
+    // executed by the AOT-compiled XLA module.
+    let rt = runtime();
+    let op = Arc::new(XlaSumOp::new(rt));
+    let p = 9usize;
+    let m = 600usize;
+    let inputs: Vec<Vec<f32>> = (0..p)
+        .map(|r| (0..m).map(|i| (r * 7 + i) as f32 * 0.125).collect())
+        .collect();
+    let expect: Vec<f32> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+    let res = reduce_sim(&inputs, 0, 4, op, 4, &LinearCost::hpc_default()).unwrap();
+    assert_eq!(res.buffer.len(), m);
+    for i in 0..m {
+        assert!((res.buffer[i] - expect[i]).abs() < 1e-3, "i={i}");
+    }
+}
+
+#[test]
+fn reduce_scatter_with_xla_operator() {
+    let rt = runtime();
+    let op = Arc::new(XlaSumOp::new(rt));
+    let p = 8usize;
+    let chunk = 50usize;
+    let inputs: Vec<Vec<i32>> = (0..p)
+        .map(|r| (0..p * chunk).map(|i| (r as i32 + 1) * (i as i32 % 11)).collect())
+        .collect();
+    let sums: Vec<i32> =
+        (0..p * chunk).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+    let res =
+        reduce_scatter_block_sim(&inputs, chunk, 2, op, 4, &LinearCost::hpc_default())
+            .unwrap();
+    for r in 0..p {
+        assert_eq!(res.chunks[r], sums[r * chunk..(r + 1) * chunk].to_vec(), "rank {r}");
+    }
+}
+
+#[test]
+fn compile_all_artifacts() {
+    let rt = runtime();
+    let n = rt.compile_all().unwrap();
+    assert_eq!(n, rt.artifacts().len());
+}
+
+#[test]
+fn stack_reduce_matches_pairwise() {
+    // The whole-phase combine (reduce_stack artifact) must agree with a
+    // chain of pairwise combines.
+    let rt = runtime();
+    let w = 8usize;
+    for m in [100usize, 4096, 5000] {
+        let xs: Vec<Vec<f32>> = (0..w)
+            .map(|r| (0..m).map(|i| ((r * 13 + i) % 101) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let got = rt.stack_reduce("sum", DType::F32, &refs, 0.0).unwrap();
+        let mut want = xs[0].clone();
+        for x in &xs[1..] {
+            let out = rt.pair_combine("sum", DType::F32, &want, x, 0.0).unwrap();
+            want = out;
+        }
+        assert_eq!(got, want, "m={m}");
+        // and against native
+        let native: Vec<f32> =
+            (0..m).map(|i| xs.iter().map(|v| v[i]).sum()).collect();
+        assert_eq!(got, native, "m={m}");
+    }
+}
+
+#[test]
+fn stack_reduce_i32_and_max() {
+    let rt = runtime();
+    let w = 8usize;
+    let m = 2000usize;
+    let xs: Vec<Vec<i32>> =
+        (0..w).map(|r| (0..m).map(|i| ((r + i) % 37) as i32 - 18).collect()).collect();
+    let refs: Vec<&[i32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let sum = rt.stack_reduce("sum", DType::I32, &refs, 0).unwrap();
+    let want: Vec<i32> = (0..m).map(|i| xs.iter().map(|v| v[i]).sum()).collect();
+    assert_eq!(sum, want);
+
+    let xf: Vec<Vec<f32>> = xs.iter().map(|v| v.iter().map(|&x| x as f32).collect()).collect();
+    let reff: Vec<&[f32]> = xf.iter().map(|v| v.as_slice()).collect();
+    let mx = rt.stack_reduce("max", DType::F32, &reff, f32::NEG_INFINITY).unwrap();
+    let wantf: Vec<f32> = (0..m)
+        .map(|i| xf.iter().map(|v| v[i]).fold(f32::NEG_INFINITY, f32::max))
+        .collect();
+    assert_eq!(mx, wantf);
+}

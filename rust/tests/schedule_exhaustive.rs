@@ -1,0 +1,98 @@
+//! Exhaustive schedule verification — the Appendix-B style "finite,
+//! exhaustive proof": for every p in a dense range, compute all p receive
+//! and send schedules and machine-check the four correctness conditions
+//! plus the doubling laws. Larger p are covered by sampled checks
+//! (the paper verified up to ~2^20 and a band around 2^24).
+
+use circulant_bcast::schedule::doubling::{double_recv_schedules, double_send_schedules};
+use circulant_bcast::schedule::{
+    recv_schedule, send_schedule, verify_all, verify_sampled, Skips,
+};
+
+#[test]
+fn all_p_up_to_2048() {
+    for p in 1..=2048 {
+        let rep = verify_all(p);
+        assert!(
+            rep.ok(),
+            "p={p}: {} failures, first: {:?}",
+            rep.failures.len(),
+            rep.failures.first()
+        );
+    }
+}
+
+#[test]
+fn dense_band_around_4096() {
+    for p in 4000..=4200 {
+        assert!(verify_all(p).ok(), "p={p}");
+    }
+}
+
+#[test]
+fn powers_of_two_and_neighbours_to_2_20() {
+    for e in 2..=20usize {
+        let base = 1usize << e;
+        for p in [base - 1, base, base + 1] {
+            // Sampled for large p (full tables above 2^14 get slow in CI).
+            if p <= 1 << 12 {
+                assert!(verify_all(p).ok(), "p={p}");
+            } else {
+                let ranks: Vec<usize> = (0..256).map(|i| (i * 7919) % p).collect();
+                let rep = verify_sampled(p, &ranks);
+                assert!(rep.ok(), "p={p}: {:?}", rep.failures.first());
+            }
+        }
+    }
+}
+
+#[test]
+fn sampled_multimillion() {
+    // The paper's largest verified range: p ≈ 2^21 and a band near 16M.
+    for p in [(1usize << 21) + 1, (1 << 21) + 12345, (1 << 24) + 7] {
+        let ranks: Vec<usize> = (0..128).map(|i| (i * 104_729) % p).collect();
+        let rep = verify_sampled(p, &ranks);
+        assert!(rep.ok(), "p={p}: {:?}", rep.failures.first());
+        assert!(rep.max_violations <= 4);
+    }
+}
+
+#[test]
+fn doubling_laws_dense() {
+    // Observations 2 + 6: doubling any correct p-schedule gives the
+    // directly computed 2p-schedule.
+    for p in 2..=512 {
+        let sk = Skips::new(p);
+        let recvs: Vec<_> = (0..p).map(|r| recv_schedule(&sk, r)).collect();
+        let sends: Vec<_> = (0..p).map(|r| send_schedule(&sk, r)).collect();
+        let sk2 = Skips::new(2 * p);
+        let dr = double_recv_schedules(p, &recvs);
+        let ds = double_send_schedules(p, &sends);
+        for r in 0..2 * p {
+            assert_eq!(dr[r].blocks, recv_schedule(&sk2, r).blocks, "recv p={p} r={r}");
+            assert_eq!(ds[r].blocks, send_schedule(&sk2, r).blocks, "send p={p} r={r}");
+        }
+    }
+}
+
+#[test]
+fn oldstyle_baselines_identical_schedules() {
+    // The O(log² p)/O(log³ p) baselines must produce byte-identical
+    // schedules (the paper's point: same schedules, faster computation).
+    use circulant_bcast::schedule::baseline;
+    for p in [3usize, 17, 100, 1000, 1023, 1024, 1025] {
+        let sk = Skips::new(p);
+        for r in (0..p).step_by(1 + p / 64) {
+            assert_eq!(
+                baseline::recv_schedule_oldstyle(&sk, r).blocks,
+                recv_schedule(&sk, r).blocks,
+                "recv p={p} r={r}"
+            );
+            assert_eq!(
+                baseline::send_schedule_from_recv(&sk, r).blocks,
+                send_schedule(&sk, r).blocks,
+                "send p={p} r={r}"
+            );
+        }
+    }
+}

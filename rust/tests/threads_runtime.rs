@@ -1,0 +1,156 @@
+//! The threaded runtime: every rank a real OS thread, channels instead of
+//! lockstep — validates that the schedules need no global synchrony
+//! (round numbers are tags, not barriers), exactly as MPI processes
+//! behave.
+
+use circulant_bcast::collectives::bcast::BcastProc;
+use circulant_bcast::collectives::common::{BlockGeometry, World};
+use circulant_bcast::collectives::reduce::ReduceProc;
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::sim::run_threaded;
+use std::sync::Arc;
+
+#[test]
+fn threaded_bcast_small() {
+    for p in [2usize, 5, 9, 17] {
+        let m = 64usize;
+        let n = 4usize;
+        let data: Vec<i64> = (0..m as i64).collect();
+        let world = World::new(p);
+        let geom = BlockGeometry::new(m, n);
+        let procs: Vec<BcastProc<i64>> = (0..p)
+            .map(|r| {
+                BcastProc::new(&world, r, 0, geom, if r == 0 { Some(&data[..]) } else { None })
+            })
+            .collect();
+        let done = run_threaded(procs);
+        for (r, pr) in done.into_iter().enumerate() {
+            assert!(pr.complete(), "p={p} rank {r} incomplete");
+            assert_eq!(pr.into_buffer(), data, "p={p} rank {r}");
+        }
+    }
+}
+
+#[test]
+fn threaded_bcast_nonzero_root() {
+    let p = 18usize;
+    let m = 90usize;
+    let n = 6usize;
+    let root = 11usize;
+    let data: Vec<i64> = (0..m as i64).map(|i| i * i).collect();
+    let world = World::new(p);
+    let geom = BlockGeometry::new(m, n);
+    let procs: Vec<BcastProc<i64>> = (0..p)
+        .map(|r| BcastProc::new(&world, r, root, geom, if r == root { Some(&data[..]) } else { None }))
+        .collect();
+    for pr in run_threaded(procs) {
+        assert_eq!(pr.into_buffer(), data);
+    }
+}
+
+#[test]
+fn threaded_reduce() {
+    let p = 17usize;
+    let m = 50usize;
+    let n = 5usize;
+    let world = World::new(p);
+    let geom = BlockGeometry::new(m, n);
+    let inputs: Vec<Vec<i64>> = (0..p)
+        .map(|r| (0..m).map(|i| (r * 7 + i) as i64).collect())
+        .collect();
+    let want: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+    let procs: Vec<ReduceProc<i64>> = (0..p)
+        .map(|r| ReduceProc::new(&world, r, 0, geom, &inputs[r], Arc::new(SumOp)))
+        .collect();
+    let done = run_threaded(procs);
+    let root = done.into_iter().next().unwrap();
+    assert_eq!(root.into_buffer(), want);
+}
+
+#[test]
+fn threaded_matches_lockstep() {
+    // Same collective, both runtimes, identical results.
+    use circulant_bcast::collectives::bcast_sim;
+    use circulant_bcast::sim::UnitCost;
+    let p = 13usize;
+    let m = 77usize;
+    let n = 7usize;
+    let data: Vec<i64> = (0..m as i64).map(|i| i * 31 % 101).collect();
+
+    let lockstep = bcast_sim(p, 3, &data, n, 8, &UnitCost).unwrap();
+
+    let world = World::new(p);
+    let geom = BlockGeometry::new(m, n);
+    let procs: Vec<BcastProc<i64>> = (0..p)
+        .map(|r| BcastProc::new(&world, r, 3, geom, if r == 3 { Some(&data[..]) } else { None }))
+        .collect();
+    let threaded: Vec<Vec<i64>> =
+        run_threaded(procs).into_iter().map(|pr| pr.into_buffer()).collect();
+    assert_eq!(lockstep.buffers, threaded);
+}
+
+#[test]
+fn threaded_many_ranks() {
+    // Stress: 64 OS threads, bigger pipeline.
+    let p = 64usize;
+    let m = 256usize;
+    let n = 16usize;
+    let data: Vec<i64> = (0..m as i64).collect();
+    let world = World::new(p);
+    let geom = BlockGeometry::new(m, n);
+    let procs: Vec<BcastProc<i64>> = (0..p)
+        .map(|r| BcastProc::new(&world, r, 0, geom, if r == 0 { Some(&data[..]) } else { None }))
+        .collect();
+    for pr in run_threaded(procs) {
+        assert!(pr.complete());
+    }
+}
+
+#[test]
+fn threaded_allgatherv() {
+    use circulant_bcast::collectives::allgatherv::{AllgathervProc, ScheduleTable};
+    let p = 12usize;
+    let counts: Vec<usize> = (0..p).map(|i| (i % 3) * 8).collect();
+    let inputs: Vec<Vec<i64>> = counts
+        .iter()
+        .enumerate()
+        .map(|(r, &c)| (0..c).map(|i| (r * 100 + i) as i64).collect())
+        .collect();
+    let world = World::new(p);
+    let table = ScheduleTable::build(&world, 3);
+    let counts = Arc::new(counts);
+    let procs: Vec<AllgathervProc<i64>> = (0..p)
+        .map(|r| AllgathervProc::new(table.clone(), counts.clone(), r, &inputs[r]))
+        .collect();
+    let done = run_threaded(procs);
+    for (r, pr) in done.into_iter().enumerate() {
+        let bufs = pr.into_buffers();
+        for j in 0..p {
+            assert_eq!(bufs[j], inputs[j], "rank {r} root {j}");
+        }
+    }
+}
+
+#[test]
+fn threaded_reduce_scatter() {
+    use circulant_bcast::collectives::allgatherv::ScheduleTable;
+    use circulant_bcast::collectives::reduce_scatter::ReduceScatterProc;
+    let p = 9usize;
+    let chunk = 6usize;
+    let counts = Arc::new(vec![chunk; p]);
+    let total = p * chunk;
+    let inputs: Vec<Vec<i64>> =
+        (0..p).map(|r| (0..total).map(|i| ((r + 1) * (i + 1)) as i64 % 251).collect()).collect();
+    let sums: Vec<i64> = (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+    let world = World::new(p);
+    let table = ScheduleTable::build(&world, 2);
+    let procs: Vec<ReduceScatterProc<i64>> = (0..p)
+        .map(|r| {
+            ReduceScatterProc::new(table.clone(), counts.clone(), r, &inputs[r], Arc::new(SumOp))
+        })
+        .collect();
+    let done = run_threaded(procs);
+    for (r, pr) in done.into_iter().enumerate() {
+        assert_eq!(pr.into_chunk(), sums[r * chunk..(r + 1) * chunk].to_vec(), "rank {r}");
+    }
+}
