@@ -1,7 +1,8 @@
 //! Irregular all-broadcast (`MPI_Allgatherv`) on the paper's three input
 //! distributions (Fig. 2): regular, irregular (`(i mod 3)·m/p`) and
 //! degenerate (one rank holds everything) — new circulant algorithm vs
-//! the native ring, on the small-cluster hierarchical cost model.
+//! the native ring, both through one `Communicator`, on the
+//! small-cluster hierarchical cost model.
 //!
 //! The paper's headline: the circulant algorithm's running time is
 //! largely *independent of the distribution* (close to a plain bcast of
@@ -12,8 +13,8 @@
 //! cargo run --release --example allgatherv_irregular -- [p] [m_total]
 //! ```
 
-use circulant_bcast::collectives::baselines::ring_allgatherv_sim;
-use circulant_bcast::collectives::{allgatherv_sim, tuning};
+use circulant_bcast::collectives::tuning;
+use circulant_bcast::comm::{Algo, AllgathervReq, CommBuilder};
 use circulant_bcast::coordinator::Dist;
 use circulant_bcast::sim::HierarchicalCost;
 
@@ -22,7 +23,7 @@ fn main() {
     let p: usize = args.next().and_then(|a| a.parse().ok()).unwrap_or(9 * 32);
     let m: usize = args.next().and_then(|a| a.parse().ok()).unwrap_or(1 << 18);
     let elem = 4usize;
-    let cost = HierarchicalCost::small_cluster(32);
+    let comm = CommBuilder::new(p).cost_model(HierarchicalCost::small_cluster(32)).build();
     let n = tuning::allgatherv_blocks_paper(m, p, 40.0);
 
     println!("allgatherv p={p}, total m={m} x {elem}B, n={n} blocks, cluster cost model");
@@ -39,24 +40,26 @@ fn main() {
             .map(|(r, &c)| (0..c).map(|i| (r * 7919 + i) as i32).collect())
             .collect();
 
-        let new = allgatherv_sim(&inputs, n, elem, &cost).expect("circulant sim");
+        let new = comm
+            .allgatherv(
+                AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(n).elem_bytes(elem),
+            )
+            .expect("circulant sim");
+        let ring = comm
+            .allgatherv(AllgathervReq::new(&inputs).algo(Algo::Ring).elem_bytes(elem))
+            .expect("ring sim");
         for r in 0..p {
             for j in 0..p {
                 assert_eq!(new.buffers[r][j], inputs[j], "circulant wrong at r={r} j={j}");
-            }
-        }
-        let (ring, bufs) = ring_allgatherv_sim(&inputs, elem, &cost).expect("ring sim");
-        for r in 0..p {
-            for j in 0..p {
-                assert_eq!(bufs[r][j], inputs[j], "ring wrong at r={r} j={j}");
+                assert_eq!(ring.buffers[r][j], inputs[j], "ring wrong at r={r} j={j}");
             }
         }
         println!(
             "{:>12} {:>16.4} {:>14.4} {:>11.1}x",
             format!("{dist:?}"),
-            new.stats.time * 1e3,
-            ring.time * 1e3,
-            ring.time / new.stats.time
+            new.time() * 1e3,
+            ring.time() * 1e3,
+            ring.time() / new.time()
         );
     }
     println!("\n(circulant rounds are n-1+q regardless of distribution; the ring always");

@@ -3,15 +3,16 @@
 //! blocks wastes bandwidth-overlap, too many pays latency; the paper's
 //! `F·sqrt(m/q)` rule and the α-β model optimum both land near the
 //! valley. Also compares against the binomial-tree and van de Geijn
-//! baselines (the two native-MPI regimes).
+//! baselines (the two native-MPI regimes), all through one
+//! `Communicator` (the sweep is exactly the repeated traffic the
+//! schedule cache exists for).
 //!
 //! ```sh
 //! cargo run --release --example bcast_pipeline -- [p] [m_elems]
 //! ```
 
-use circulant_bcast::collectives::baselines::{binomial_bcast_sim, vdg_bcast_sim};
-use circulant_bcast::collectives::{bcast_sim, tuning};
-use circulant_bcast::schedule::ceil_log2;
+use circulant_bcast::collectives::tuning;
+use circulant_bcast::comm::{Algo, BcastReq, CommBuilder};
 use circulant_bcast::sim::LinearCost;
 
 fn main() {
@@ -20,7 +21,8 @@ fn main() {
     let m: usize = args.next().and_then(|a| a.parse().ok()).unwrap_or(1 << 20);
     let elem = 4usize; // MPI_INT
     let cost = LinearCost::hpc_default();
-    let q = ceil_log2(p);
+    let comm = CommBuilder::new(p).cost_model(cost.clone()).build();
+    let q = comm.q();
 
     let data: Vec<i32> = (0..m as i32).collect();
     println!("broadcast p={p} (q={q}), m={m} x {elem}B, alpha={}, beta={}", cost.alpha, cost.beta);
@@ -29,14 +31,19 @@ fn main() {
     let n_paper = tuning::bcast_blocks_paper(m, p, 70.0);
     let n_model = tuning::bcast_blocks_model(m, p, elem, cost.alpha, cost.beta);
 
+    let run = |n: usize| {
+        comm.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n).elem_bytes(elem))
+            .expect("sim")
+    };
+
     let mut best = (f64::INFINITY, 0usize);
     let mut n = 1usize;
     while n <= m.min(1 << 14) {
-        let res = bcast_sim(p, 0, &data, n, elem, &cost).expect("sim");
+        let res = run(n);
         assert!(res.buffers.iter().all(|b| b == &data));
-        let ms = res.stats.time * 1e3;
-        if res.stats.time < best.0 {
-            best = (res.stats.time, n);
+        let ms = res.time() * 1e3;
+        if res.time() < best.0 {
+            best = (res.time(), n);
         }
         let mut note = String::new();
         if n == n_paper {
@@ -45,30 +52,32 @@ fn main() {
         if n == n_model {
             note.push_str(" <- alpha-beta optimum");
         }
-        println!("{n:>8} {:>8} {:>14.4} {note}", res.stats.rounds, ms);
+        println!("{n:>8} {:>8} {:>14.4} {note}", res.rounds, ms);
         n *= 2;
     }
 
     // Exact rule points (may fall between the powers of two above).
     for (label, nn) in [("paper rule", n_paper), ("model optimum", n_model)] {
-        let res = bcast_sim(p, 0, &data, nn, elem, &cost).expect("sim");
+        let res = run(nn);
         println!(
             "{label:>14}: n={nn:<6} rounds={:<6} sim_time={:.4} ms",
-            res.stats.rounds,
-            res.stats.time * 1e3
+            res.rounds,
+            res.time() * 1e3
         );
     }
 
-    let (bt, _) = binomial_bcast_sim(p, 0, &data, elem, &cost).unwrap();
-    let (vt, _) = vdg_bcast_sim(p, 0, &data, elem, &cost).unwrap();
+    let bt = comm.bcast(BcastReq::new(0, &data).algo(Algo::Binomial).elem_bytes(elem)).unwrap();
+    let vt = comm.bcast(BcastReq::new(0, &data).algo(Algo::VanDeGeijn).elem_bytes(elem)).unwrap();
     println!("\nbaselines:");
-    println!("  binomial tree : rounds={:<6} sim_time={:.4} ms", bt.rounds, bt.time * 1e3);
-    println!("  van de Geijn  : rounds={:<6} sim_time={:.4} ms", vt.rounds, vt.time * 1e3);
+    println!("  binomial tree : rounds={:<6} sim_time={:.4} ms", bt.rounds, bt.time() * 1e3);
+    println!("  van de Geijn  : rounds={:<6} sim_time={:.4} ms", vt.rounds, vt.time() * 1e3);
     println!(
         "  circulant best: n={} sim_time={:.4} ms  (speedup {:.2}x over binomial, {:.2}x over vdG)",
         best.1,
         best.0 * 1e3,
-        bt.time / best.0,
-        vt.time / best.0
+        bt.time() / best.0,
+        vt.time() / best.0
     );
+    let (hits, misses) = comm.cache().stats();
+    println!("  schedule cache over the whole sweep: {hits} hits, {misses} misses");
 }

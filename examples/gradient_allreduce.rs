@@ -4,18 +4,20 @@
 //! workload the paper's collectives exist to serve.
 //!
 //! All layers compose here:
-//!   * the O(log p) schedules (computed per rank, cached),
+//!   * one persistent `Communicator` (the service handle: O(log p)
+//!     schedules computed once, cached across every bucket),
 //!   * the circulant reduce-scatter + all-gather pipeline (Obs. 1.4 +
 //!     Alg. 7) with the paper's block-count rule,
 //!   * the one-ported machine simulator + hierarchical cost model,
 //!   * the AOT XLA artifact (Pallas-authored ⊕) numerically verifying one
 //!     bucket's reduction,
-//!   * the ring baseline (what native NCCL/MPI-style allreduce does).
+//!   * the ring baseline (what native NCCL/MPI-style allreduce does),
+//!     selected per request via `Algo::Ring` on the same handle.
 //!
 //! Headline metrics reported (recorded in EXPERIMENTS.md §E2E):
 //!   per-step gradient sync time (simulated), circulant vs ring; round
 //!   counts; schedule-computation overhead per rank (µs, the paper's
-//!   Table 4 quantity in situ).
+//!   Table 4 quantity in situ) and the cache hit receipts.
 //!
 //! Payloads are scaled 1024:1 (elements) with β scaled 1024:1 so the
 //! simulated times are exact for the full 124M-parameter model while the
@@ -29,11 +31,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use circulant_bcast::collectives::baselines::{ring_allgatherv_sim, ring_reduce_scatter_sim};
-use circulant_bcast::collectives::{allreduce_sim, tuning, SumOp};
+use circulant_bcast::collectives::{tuning, SumOp};
+use circulant_bcast::comm::{Algo, AllreduceReq, CommBuilder, ReduceReq};
 use circulant_bcast::runtime::{XlaRuntime, XlaSumOp};
 use circulant_bcast::schedule::{ceil_log2, Schedule, Skips};
-use circulant_bcast::sim::{CostModel, HierarchicalCost, LinearCost};
+use circulant_bcast::sim::{HierarchicalCost, LinearCost};
 
 /// GPT-2-small (124M) parameter tensors: (name, elements).
 fn gpt2_small_tensors() -> Vec<(&'static str, usize)> {
@@ -112,7 +114,10 @@ fn main() {
     let per_rank_us = t0.elapsed().as_secs_f64() / p as f64 * 1e6;
     println!("schedule computation: {per_rank_us:.3} µs per rank (recv+send, O(log p))");
 
-    // --- per-bucket allreduce: circulant vs ring ---
+    // --- the persistent service handle: one Communicator for all buckets
+    let comm = CommBuilder::new(p).cost_model(cost).build();
+
+    // --- per-bucket allreduce: circulant vs ring, same handle ---
     let mut tot_circ = 0.0f64;
     let mut tot_ring = 0.0f64;
     let mut tot_rounds_circ = 0usize;
@@ -130,31 +135,34 @@ fn main() {
         let expect: Vec<f32> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
 
         // New: circulant reduce-scatter + all-gather.
-        let res = allreduce_sim(&inputs, n, Arc::new(SumOp), elem, &cost).expect("circ");
+        let res = comm
+            .allreduce(
+                AllreduceReq::new(&inputs, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(n)
+                    .elem_bytes(elem),
+            )
+            .expect("circ");
         for b in &res.buffers {
             assert!(b.iter().zip(&expect).all(|(a, e)| (a - e).abs() < 1e-2));
         }
-        // Baseline: ring reduce-scatter + ring all-gather.
-        let chunk = m / p;
-        let counts: Vec<usize> = (0..p)
-            .map(|j| chunk + usize::from(j < m % p))
-            .collect();
-        let (rs_stats, chunks) =
-            ring_reduce_scatter_sim(&inputs, &counts, Arc::new(SumOp), elem, &cost)
-                .expect("ring rs");
-        let (ag_stats, _) = ring_allgatherv_sim(&chunks, elem, &cost).expect("ring ag");
-        let ring_time = rs_stats.time + ag_stats.time;
+        // Baseline: ring reduce-scatter + ring all-gather, same handle.
+        let ring = comm
+            .allreduce(
+                AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Ring).elem_bytes(elem),
+            )
+            .expect("ring");
 
         tot_circ += res.time();
-        tot_ring += ring_time;
-        tot_rounds_circ += res.rounds();
-        tot_rounds_ring += rs_stats.rounds + ag_stats.rounds;
+        tot_ring += ring.time();
+        tot_rounds_circ += res.rounds;
+        tot_rounds_ring += ring.rounds;
         println!(
             "{bi:>7} {:>10.2} {:>16.3} {:>14.3} {:>7.2}x",
             sz as f64 / 1e6,
             res.time() * 1e3,
-            ring_time * 1e3,
-            ring_time / res.time()
+            ring.time() * 1e3,
+            ring.time() / res.time()
         );
     }
     println!(
@@ -166,6 +174,8 @@ fn main() {
         tot_rounds_ring,
         tot_ring / tot_circ
     );
+    let (hits, misses) = comm.cache().stats();
+    println!("schedule cache across all buckets: {hits} hits, {misses} misses");
 
     // --- XLA-verified reduction on one bucket (three-layer compose) ---
     match XlaRuntime::new() {
@@ -176,16 +186,17 @@ fn main() {
             let inputs: Vec<Vec<f32>> =
                 (0..pp).map(|r| (0..m).map(|i| ((r + i) % 13) as f32).collect()).collect();
             let expect: Vec<f32> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let res = circulant_bcast::collectives::reduce_sim(
-                &inputs,
-                0,
-                4,
-                Arc::new(XlaSumOp::new(rt)),
-                elem,
-                &LinearCost::hpc_default() as &dyn CostModel,
-            )
-            .expect("xla reduce");
-            assert_eq!(res.buffer, expect);
+            let xla_comm =
+                CommBuilder::new(pp).cost_model(LinearCost::hpc_default()).build();
+            let res = xla_comm
+                .reduce(
+                    ReduceReq::new(0, &inputs, Arc::new(XlaSumOp::new(rt)))
+                        .algo(Algo::Circulant)
+                        .blocks(4)
+                        .elem_bytes(elem),
+                )
+                .expect("xla reduce");
+            assert_eq!(res.buffers, expect);
             println!("XLA-executed ⊕ (Pallas-authored artifact): bucket reduction verified ✓");
         }
         Err(e) => println!("(XLA verification skipped: {e})"),

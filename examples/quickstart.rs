@@ -1,5 +1,9 @@
-//! Quickstart: compute a schedule, broadcast a buffer, reduce it back —
-//! the 60-second tour of the library.
+//! Quickstart: build one `Communicator`, then broadcast, reduce and
+//! all-reduce through it — the 60-second tour of the library.
+//!
+//! The handle is the point: it owns the O(log p) schedules behind a
+//! cache, so the second call (and every call at every root after it)
+//! reuses them instead of recomputing.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -7,7 +11,8 @@
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::{bcast_sim, reduce_sim, tuning, SumOp};
+use circulant_bcast::collectives::{tuning, SumOp};
+use circulant_bcast::comm::{AllreduceReq, BcastReq, CommBuilder, ReduceReq};
 use circulant_bcast::schedule::{verify_all, Schedule, Skips};
 use circulant_bcast::sim::LinearCost;
 
@@ -31,28 +36,52 @@ fn main() {
         rep.max_violations
     );
 
-    // 3. Pipelined broadcast of 1 MiB from rank 0 in the optimal
+    // 3. One Communicator serves every collective (Observation 1): built
+    //    once per p, it owns the skip table, the schedule cache and the
+    //    cost model.
+    let comm = CommBuilder::new(p).cost_model(LinearCost::hpc_default()).build();
+
+    // 4. Pipelined broadcast of 1 MiB from rank 0 in the optimal
     //    n-1+q rounds, with the paper's block-count rule.
-    let m = 1 << 18; // 256 Ki f32-sized elements = 1 MiB
+    let m = 1 << 18; // 256 Ki elements
     let n = tuning::bcast_blocks_paper(m, p, 70.0);
     let data: Vec<i64> = (0..m as i64).collect();
-    let cost = LinearCost::hpc_default();
-    let res = bcast_sim(p, 0, &data, n, 4, &cost).expect("machine model violated");
-    assert!(res.buffers.iter().all(|b| b == &data));
+    let out = comm
+        .bcast(BcastReq::new(0, &data).blocks(n).elem_bytes(4))
+        .expect("machine model violated");
+    assert!(out.all_received());
+    assert!(out.buffers.iter().all(|b| b == &data));
     println!(
-        "bcast  m={m} n={n}: {} rounds (optimal {}), simulated {:.3} ms",
-        res.stats.rounds,
+        "bcast  m={m} n={n} ({:?}): {} rounds (optimal {}), simulated {:.3} ms",
+        out.algo,
+        out.rounds,
         n - 1 + sk.q(),
-        res.stats.time * 1e3
+        out.time() * 1e3
     );
 
-    // 4. The same schedules, reversed, implement MPI_Reduce.
+    // 5. The same schedules, reversed, implement MPI_Reduce — and thanks
+    //    to the cache, this call recomputes nothing.
     let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64; m]).collect();
-    let red = reduce_sim(&inputs, 0, n, Arc::new(SumOp), 4, &cost).unwrap();
-    assert_eq!(red.buffer[0], (0..p as i64).sum::<i64>());
+    let red = comm
+        .reduce(ReduceReq::new(0, &inputs, Arc::new(SumOp)).blocks(n).elem_bytes(4))
+        .unwrap();
+    assert_eq!(red.buffers[0], (0..p as i64).sum::<i64>());
     println!(
         "reduce m={m} n={n}: {} rounds, simulated {:.3} ms — root got the sum",
-        red.stats.rounds,
-        red.stats.time * 1e3
+        red.rounds,
+        red.time() * 1e3
     );
+
+    // 6. All-reduce = reduce-scatter + all-gather on one schedule table.
+    let ar = comm.allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).elem_bytes(4)).unwrap();
+    assert!(ar.buffers.iter().all(|b| b[0] == (0..p as i64).sum::<i64>()));
+    println!(
+        "allreduce m={m}: {} rounds, simulated {:.3} ms — every rank has the sum",
+        ar.rounds,
+        ar.time() * 1e3
+    );
+
+    // 7. The receipts: repeated traffic hits the schedule cache.
+    let (hits, misses) = comm.cache().stats();
+    println!("schedule cache after 3 collectives: {hits} hits, {misses} misses");
 }

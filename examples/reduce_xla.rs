@@ -1,19 +1,21 @@
 //! Reduction with the ⊕ executed by the AOT-compiled XLA artifact — the
 //! full three-layer stack on one workload: Pallas kernel (build time) →
 //! HLO text artifact → Rust PJRT runtime → reversed-schedule MPI_Reduce
-//! over the simulated machine. Also cross-checks against the native Rust
-//! operator and reports per-combine overhead.
+//! over the simulated machine, driven through a `Communicator`. Also
+//! cross-checks against the native Rust operator and reports per-combine
+//! overhead.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a build with the `xla` cargo feature.
 //!
 //! ```sh
-//! cargo run --release --example reduce_xla -- [p] [m_elems]
+//! cargo run --release --features xla --example reduce_xla -- [p] [m_elems]
 //! ```
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use circulant_bcast::collectives::{reduce_sim, SumOp};
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{Algo, CommBuilder, ReduceReq};
 use circulant_bcast::runtime::{DType, XlaRuntime, XlaSumOp};
 use circulant_bcast::sim::LinearCost;
 
@@ -22,9 +24,10 @@ fn main() {
     let p: usize = args.next().and_then(|a| a.parse().ok()).unwrap_or(17);
     let m: usize = args.next().and_then(|a| a.parse().ok()).unwrap_or(1 << 16);
     let n = 8usize;
-    let cost = LinearCost::hpc_default();
 
-    let rt = Arc::new(XlaRuntime::new().expect("run `make artifacts` first"));
+    let rt = Arc::new(
+        XlaRuntime::new().expect("run `make artifacts` first (and build with --features xla)"),
+    );
     println!("PJRT platform: {}; {} artifacts", rt.platform(), rt.artifacts().len());
     let compiled = rt.compile_all().expect("compile");
     println!("compiled {compiled} executables (cached for the hot path)");
@@ -32,27 +35,43 @@ fn main() {
     let inputs: Vec<Vec<f32>> =
         (0..p).map(|r| (0..m).map(|i| ((r + 1) * (i % 1000)) as f32 * 1e-3).collect()).collect();
 
+    let comm = CommBuilder::new(p).cost_model(LinearCost::hpc_default()).build();
+
     // Native Rust ⊕.
     let t0 = Instant::now();
-    let native = reduce_sim(&inputs, 0, n, Arc::new(SumOp), 4, &cost).expect("native");
+    let native = comm
+        .reduce(
+            ReduceReq::new(0, &inputs, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(n)
+                .elem_bytes(4),
+        )
+        .expect("native");
     let t_native = t0.elapsed();
 
-    // XLA-executed ⊕ (the artifact authored by the Pallas kernel).
+    // XLA-executed ⊕ (the artifact authored by the Pallas kernel) — same
+    // communicator, so the schedules are already cached.
     let t0 = Instant::now();
-    let xla = reduce_sim(&inputs, 0, n, Arc::new(XlaSumOp::new(rt.clone())), 4, &cost)
+    let xla = comm
+        .reduce(
+            ReduceReq::new(0, &inputs, Arc::new(XlaSumOp::new(rt.clone())))
+                .algo(Algo::Circulant)
+                .blocks(n)
+                .elem_bytes(4),
+        )
         .expect("xla");
     let t_xla = t0.elapsed();
 
     let max_err = native
-        .buffer
+        .buffers
         .iter()
-        .zip(&xla.buffer)
+        .zip(&xla.buffers)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     println!(
         "reduce p={p} m={m} n={n}: rounds={} (optimal), native ⊕ wall {:.1} ms, \
          XLA ⊕ wall {:.1} ms, max |diff| = {max_err:e}",
-        native.stats.rounds,
+        native.rounds,
         t_native.as_secs_f64() * 1e3,
         t_xla.as_secs_f64() * 1e3,
     );

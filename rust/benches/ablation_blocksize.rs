@@ -4,9 +4,11 @@
 //! `F·sqrt(m/q)` rule (F = 70), the α-β model optimum, and the empirical
 //! best from the sweep — quantifying how much the closed-form rules
 //! leave on the table (the paper calls choosing n "a highly interesting
-//! problem outside the scope of this work").
+//! problem outside the scope of this work"). One `Communicator` per p:
+//! the sweep itself is pure schedule-cache traffic.
 
-use circulant_bcast::collectives::{bcast_sim, tuning};
+use circulant_bcast::collectives::tuning;
+use circulant_bcast::comm::{Algo, BcastReq, CommBuilder};
 use circulant_bcast::sim::LinearCost;
 
 fn main() {
@@ -19,10 +21,18 @@ fn main() {
         "p", "m", "n_paper", "t_paper(ms)", "n_model", "t_model(ms)", "n_best", "t_best(ms)"
     );
     for p in [64usize, 200, 1000] {
+        let comm = CommBuilder::new(p).cost_model(cost.clone()).build();
         for m in [1usize << 14, 1 << 18, 1 << 21] {
             let data: Vec<i32> = (0..m as i32).collect();
             let run = |n: usize| {
-                bcast_sim(p, 0, &data, n.max(1), elem, &cost).expect("sim").stats.time
+                comm.bcast(
+                    BcastReq::new(0, &data)
+                        .algo(Algo::Circulant)
+                        .blocks(n.max(1))
+                        .elem_bytes(elem),
+                )
+                .expect("sim")
+                .time()
             };
 
             let n_paper = tuning::bcast_blocks_paper(m, p, 70.0);

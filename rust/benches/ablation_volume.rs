@@ -1,12 +1,14 @@
 //! Ablation (Observation 1.4): communication volume of the circulant
 //! all-reduction vs recursive halving with power-of-two folding [16],
 //! across p — quantifying the paper's "almost twice the communication
-//! volume for certain numbers of processes".
+//! volume for certain numbers of processes". Both algorithms run through
+//! the same `Communicator` (`Algo::Circulant` vs
+//! `Algo::RecursiveHalving`).
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::rhalving::rhalving_reduce_scatter_sim;
-use circulant_bcast::collectives::{reduce_scatter_block_sim, SumOp};
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{Algo, CommBuilder, ReduceScatterBlockReq};
 use circulant_bcast::sim::UnitCost;
 
 fn main() {
@@ -17,29 +19,40 @@ fn main() {
         "p", "circ bytes", "rh bytes", "ratio", "circ max/rank", "rh max/rank", "ratio"
     );
     for p in [15usize, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129] {
+        let comm = CommBuilder::new(p).cost_model(UnitCost).build();
         let inputs: Vec<Vec<i64>> = (0..p)
             .map(|r| (0..p * chunk).map(|i| (r + i) as i64).collect())
             .collect();
-        let circ =
-            reduce_scatter_block_sim(&inputs, chunk, 1, Arc::new(SumOp), 8, &UnitCost)
-                .expect("circ");
-        let (rh, chunks) =
-            rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost)
-                .expect("rh");
+        let circ = comm
+            .reduce_scatter_block(
+                ReduceScatterBlockReq::new(&inputs, chunk, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(1)
+                    .elem_bytes(8),
+            )
+            .expect("circ");
+        let rh = comm
+            .reduce_scatter_block(
+                ReduceScatterBlockReq::new(&inputs, chunk, Arc::new(SumOp))
+                    .algo(Algo::RecursiveHalving)
+                    .elem_bytes(8),
+            )
+            .expect("rh");
         // sanity: identical results
         let sums: Vec<i64> =
             (0..p * chunk).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
         for r in 0..p {
-            assert_eq!(chunks[r], sums[r * chunk..(r + 1) * chunk].to_vec());
+            assert_eq!(circ.buffers[r], sums[r * chunk..(r + 1) * chunk].to_vec());
+            assert_eq!(rh.buffers[r], sums[r * chunk..(r + 1) * chunk].to_vec());
         }
         println!(
             "{p:>8} {:>14} {:>14} {:>8.2} {:>16} {:>16} {:>8.2}",
             circ.stats.bytes,
-            rh.bytes,
-            rh.bytes as f64 / circ.stats.bytes as f64,
+            rh.stats.bytes,
+            rh.stats.bytes as f64 / circ.stats.bytes as f64,
             circ.stats.max_rank_bytes,
-            rh.max_rank_bytes,
-            rh.max_rank_bytes as f64 / circ.stats.max_rank_bytes as f64,
+            rh.stats.max_rank_bytes,
+            rh.stats.max_rank_bytes as f64 / circ.stats.max_rank_bytes as f64,
         );
     }
     println!("\n(circulant: always exactly p-1 blocks per port — optimal for every p;");

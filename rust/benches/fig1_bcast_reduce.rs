@@ -3,6 +3,10 @@
 //! module would pick), on VEGA-like configurations p = 200×1, 200×4 and
 //! 200×128 MPI processes, MPI_INT payloads, F = 70.
 //!
+//! One `Communicator` per configuration drives the whole size sweep —
+//! the schedules for a given p are computed once and served from the
+//! cache for every message size and algorithm thereafter.
+//!
 //! Payload elements are scaled `SCALE:1` with β scaled inversely, so the
 //! simulated times equal the full-size run while the lockstep simulation
 //! stays in memory. We report simulated milliseconds per (config, m);
@@ -11,11 +15,9 @@
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::baselines::{
-    binomial_bcast_sim, binomial_reduce_sim, vdg_bcast_sim,
-};
-use circulant_bcast::collectives::{bcast_sim, reduce_sim, tuning, SumOp};
-use circulant_bcast::sim::{CostModel, HierarchicalCost, LinearCost};
+use circulant_bcast::collectives::{tuning, SumOp};
+use circulant_bcast::comm::{Algo, BcastReq, CommBuilder, ReduceReq};
+use circulant_bcast::sim::{HierarchicalCost, LinearCost};
 
 const SCALE: usize = 1024;
 const ELEM: usize = 4; // MPI_INT
@@ -42,7 +44,7 @@ fn main() {
     println!("=== Figure 1: Bcast + Reduce, new (circulant, F=70) vs native ===");
     for (label, nodes, cores) in configs {
         let p = nodes * cores;
-        let cost = scaled_cost(cores);
+        let comm = CommBuilder::new(p).cost_model(scaled_cost(cores)).build();
         println!("\n--- p = {label} ({p} ranks), hierarchical VEGA-like model ---");
         println!(
             "{:>12} {:>6} {:>12} {:>12} {:>8} | {:>12} {:>12} {:>8}",
@@ -54,31 +56,49 @@ fn main() {
             let data: Vec<i32> = (0..ms as i32).collect();
 
             // --- Bcast: new vs best-native (binomial vs vdG, tuned pick).
-            let new_b = bcast_sim(p, 0, &data, n, ELEM, &cost).expect("bcast");
-            let (bino, _) = binomial_bcast_sim(p, 0, &data, ELEM, &cost).expect("bino");
-            let (vdg, _) = vdg_bcast_sim(p, 0, &data, ELEM, &cost).expect("vdg");
-            let native_b = bino.time.min(vdg.time);
+            let new_b = comm
+                .bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n).elem_bytes(ELEM))
+                .expect("bcast");
+            let bino = comm
+                .bcast(BcastReq::new(0, &data).algo(Algo::Binomial).elem_bytes(ELEM))
+                .expect("bino");
+            let vdg = comm
+                .bcast(BcastReq::new(0, &data).algo(Algo::VanDeGeijn).elem_bytes(ELEM))
+                .expect("vdg");
+            let native_b = bino.time().min(vdg.time());
 
             // --- Reduce: new (reversed schedules) vs binomial reduce.
             let inputs: Vec<Vec<i32>> = (0..p).map(|_| data.clone()).collect();
-            let new_r =
-                reduce_sim(&inputs, 0, n, Arc::new(SumOp), ELEM, &cost as &dyn CostModel)
-                    .expect("reduce");
-            let (nat_r, _) =
-                binomial_reduce_sim(&inputs, 0, Arc::new(SumOp), ELEM, &cost).expect("binred");
+            let new_r = comm
+                .reduce(
+                    ReduceReq::new(0, &inputs, Arc::new(SumOp))
+                        .algo(Algo::Circulant)
+                        .blocks(n)
+                        .elem_bytes(ELEM),
+                )
+                .expect("reduce");
+            let nat_r = comm
+                .reduce(
+                    ReduceReq::new(0, &inputs, Arc::new(SumOp))
+                        .algo(Algo::Binomial)
+                        .elem_bytes(ELEM),
+                )
+                .expect("binred");
 
             println!(
                 "{:>12} {:>6} {:>10.3}ms {:>10.3}ms {:>7.2}x | {:>10.3}ms {:>10.3}ms {:>7.2}x",
                 m,
                 n,
-                new_b.stats.time * 1e3,
+                new_b.time() * 1e3,
                 native_b * 1e3,
-                native_b / new_b.stats.time,
-                new_r.stats.time * 1e3,
-                nat_r.time * 1e3,
-                nat_r.time / new_r.stats.time,
+                native_b / new_b.time(),
+                new_r.time() * 1e3,
+                nat_r.time() * 1e3,
+                nat_r.time() / new_r.time(),
             );
         }
+        let (hits, misses) = comm.cache().stats();
+        println!("(schedule cache for {label}: {hits} hits, {misses} misses)");
     }
     println!("\npaper: new implementation faster than native OpenMPI 4.1.5 by >4x / >3x");
     println!("(1 and 4 ppn) and ~3x at full nodes for large m; crossover at small m.");

@@ -3,13 +3,16 @@
 //! on the small-cluster cost model, for the paper's three problem types:
 //! regular, irregular ((i mod 3)·m/p) and degenerate (rank 0 has all).
 //!
+//! One `Communicator` drives all sizes, distributions and algorithms;
+//! the p = 1152 schedule table is computed once and cache-served after.
+//!
 //! The headline shapes to reproduce: (a) the new algorithm's time is
 //! nearly independent of the distribution and close to a plain bcast of
 //! the same volume; (b) the native algorithm degenerates by ~two orders
 //! of magnitude on the degenerate problem.
 
-use circulant_bcast::collectives::baselines::ring_allgatherv_sim;
-use circulant_bcast::collectives::{allgatherv_sim, bcast_sim, tuning};
+use circulant_bcast::collectives::tuning;
+use circulant_bcast::comm::{Algo, AllgathervReq, BcastReq, CommBuilder};
 use circulant_bcast::coordinator::Dist;
 use circulant_bcast::sim::{HierarchicalCost, LinearCost};
 
@@ -27,6 +30,7 @@ fn main() {
         inter: LinearCost { alpha: base.inter.alpha, beta: base.inter.beta * SCALE as f64 },
         nic_share: base.nic_share,
     };
+    let comm = CommBuilder::new(p).cost_model(cost).build();
     let sizes: [usize; 5] = [1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22];
 
     println!("=== Figure 2: Allgatherv, new (circulant, G=40) vs native (ring) ===");
@@ -42,7 +46,9 @@ fn main() {
         // paper's "in the ballpark of MPI_Bcast" claim).
         let nb = tuning::bcast_blocks_paper(m, p, 70.0).min(ms_total);
         let ref_data: Vec<i32> = (0..ms_total as i32).collect();
-        let bref = bcast_sim(p, 0, &ref_data, nb, ELEM, &cost).expect("bcast ref");
+        let bref = comm
+            .bcast(BcastReq::new(0, &ref_data).algo(Algo::Circulant).blocks(nb).elem_bytes(ELEM))
+            .expect("bcast ref");
 
         for dist in [Dist::Regular, Dist::Irregular, Dist::Degenerate] {
             let counts = dist.counts(p, ms_total);
@@ -51,22 +57,30 @@ fn main() {
                 .enumerate()
                 .map(|(r, &c)| (0..c).map(|i| (r * 31 + i) as i32).collect())
                 .collect();
-            let n = tuning::allgatherv_blocks_paper(m, p, 40.0).min(64).max(1);
-            let new = allgatherv_sim(&inputs, n, ELEM, &cost).expect("new");
-            let (ring, _) = ring_allgatherv_sim(&inputs, ELEM, &cost).expect("ring");
+            let n = tuning::allgatherv_blocks_paper(m, p, 40.0).clamp(1, 64);
+            let new = comm
+                .allgatherv(
+                    AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(n).elem_bytes(ELEM),
+                )
+                .expect("new");
+            let ring = comm
+                .allgatherv(AllgathervReq::new(&inputs).algo(Algo::Ring).elem_bytes(ELEM))
+                .expect("ring");
             println!(
                 "{:>10} {:>12} {:>6} {:>12.3} {:>12.3} {:>7.1}x {:>14.3}",
                 m,
                 format!("{dist:?}"),
                 n,
-                new.stats.time * 1e3,
-                ring.time * 1e3,
-                ring.time / new.stats.time,
-                bref.stats.time * 1e3,
+                new.time() * 1e3,
+                ring.time() * 1e3,
+                ring.time() / new.time(),
+                bref.time() * 1e3,
             );
         }
         println!();
     }
+    let (hits, misses) = comm.cache().stats();
+    println!("(schedule cache across the sweep: {hits} hits, {misses} misses)");
     println!("paper: native degenerates ~100x on the degenerate problem; the new");
     println!("implementation is nearly distribution-independent and bcast-like.");
 }

@@ -13,11 +13,12 @@
 
 use std::sync::Arc;
 
+use crate::comm::{Algo, AllgathervReq, CommError, Communicator};
 use crate::schedule::{Schedule, Skips};
 use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc, RunStats, SimError};
 
-use super::common::{BlockGeometry, Element, World};
+use super::common::{BlockGeometry, Element, ScheduleSource, World};
 
 /// The schedule table for all `p` relative ranks, shared by every rank's
 /// state machine (`O(p log p)` once, instead of per rank).
@@ -33,11 +34,18 @@ pub struct ScheduleTable {
 
 impl ScheduleTable {
     pub fn build(world: &World, n: usize) -> Arc<Self> {
+        Self::build_from(&ScheduleSource::Direct(&world.sk), n)
+    }
+
+    /// Build from a [`ScheduleSource`] — on the cached path (the
+    /// [`crate::comm::Communicator`]), all `p` relative-rank schedules
+    /// are served from the shared cache instead of recomputed.
+    pub fn build_from(src: &ScheduleSource<'_>, n: usize) -> Arc<Self> {
         assert!(n > 0);
-        let sk = world.sk.clone();
+        let sk = src.skips().clone();
         let p = sk.p();
         let q = sk.q();
-        let scheds: Vec<Schedule> = (0..p).map(|r| Schedule::compute(&sk, r)).collect();
+        let scheds: Vec<Schedule> = (0..p).map(|r| src.schedule(r)).collect();
         let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
         Arc::new(ScheduleTable { sk, scheds, n, x })
     }
@@ -339,6 +347,19 @@ impl<T: Element> RankProc<T> for AllgathervProc<T> {
     }
 }
 
+/// Build all `p` rank state machines over one shared [`ScheduleTable`] —
+/// the shared construction loop used by the [`crate::comm`] backends and
+/// the legacy wrappers alike.
+pub fn build_allgatherv_procs<T: Element>(
+    table: Arc<ScheduleTable>,
+    counts: Arc<Vec<usize>>,
+    inputs: &[Vec<T>],
+) -> Vec<AllgathervProc<T>> {
+    crate::comm::build_procs(table.p(), |r| {
+        AllgathervProc::new(table.clone(), counts.clone(), r, &inputs[r])
+    })
+}
+
 /// Result of a simulated all-broadcast.
 pub struct AllgathervResult<T> {
     pub stats: RunStats,
@@ -348,26 +369,34 @@ pub struct AllgathervResult<T> {
 
 /// Run the full irregular all-broadcast: `inputs[r]` is rank `r`'s data
 /// (arbitrary per-rank lengths), divided into `n` blocks each.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call `.allgatherv(AllgathervReq::new(inputs))`; \
+            it reuses cached schedules across calls"
+)]
 pub fn allgatherv_sim<T: Element>(
     inputs: &[Vec<T>],
     n: usize,
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<AllgathervResult<T>, SimError> {
-    let p = inputs.len();
-    let world = World::new(p);
-    let table = ScheduleTable::build(&world, n);
-    let counts = Arc::new(inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
-    let mut procs: Vec<AllgathervProc<T>> = (0..p)
-        .map(|r| AllgathervProc::new(table.clone(), counts.clone(), r, &inputs[r]))
-        .collect();
-    let mut net = Network::new(p);
-    let stats = net.run(&mut procs, elem_bytes, cost)?;
-    let buffers = procs.into_iter().map(|pr| pr.into_buffers()).collect();
-    Ok(AllgathervResult { stats, buffers })
+    let comm = Communicator::new(inputs.len());
+    let req = AllgathervReq::new(inputs)
+        .blocks(n)
+        .algo(Algo::Circulant)
+        .elem_bytes(elem_bytes);
+    match comm.allgatherv_with(req, cost) {
+        Ok(out) => Ok(AllgathervResult { stats: out.stats, buffers: out.buffers }),
+        Err(CommError::Sim(e)) => Err(e),
+        Err(e) => panic!("allgatherv_sim: {e}"),
+    }
 }
 
 /// Regular all-gather: every rank contributes the same number of elements.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call `.allgather(AllgathervReq::new(inputs))`"
+)]
 pub fn allgather_sim<T: Element>(
     inputs: &[Vec<T>],
     n: usize,
@@ -376,10 +405,15 @@ pub fn allgather_sim<T: Element>(
 ) -> Result<AllgathervResult<T>, SimError> {
     let len = inputs[0].len();
     assert!(inputs.iter().all(|v| v.len() == len), "allgather requires equal counts");
+    // (calling the sibling deprecated wrapper is fine: deprecation
+    // warnings are suppressed inside deprecated items)
     allgatherv_sim(inputs, n, elem_bytes, cost)
 }
 
+// The module tests deliberately exercise the deprecated wrappers: they
+// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::sim::cost::UnitCost;

@@ -5,16 +5,17 @@
 //! the optimal `n - 1 + q` rounds each.
 //!
 //! This is the gradient-allreduce building block used by the end-to-end
-//! example (data-parallel training traffic).
+//! example (data-parallel training traffic). The front door for running
+//! it is [`crate::comm::Communicator::allreduce`]; both phases share one
+//! cached [`super::allgatherv::ScheduleTable`] there.
 
 use std::sync::Arc;
 
+use crate::comm::{Algo, AllreduceReq, CommError, Communicator};
 use crate::sim::cost::CostModel;
-use crate::sim::network::{Network, RunStats, SimError};
+use crate::sim::network::{RunStats, SimError};
 
-use super::allgatherv::{AllgathervProc, ScheduleTable};
-use super::common::{Element, ReduceOp, World};
-use super::reduce_scatter::ReduceScatterProc;
+use super::common::{Element, ReduceOp};
 
 /// Result of a simulated all-reduce.
 pub struct AllreduceResult<T> {
@@ -42,6 +43,11 @@ impl<T> AllreduceResult<T> {
 /// the same length `m`); every rank ends with the elementwise reduction.
 /// The vector is chunked over ranks (`counts` as equal as possible), each
 /// chunk divided into `n` blocks.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call \
+            `.allreduce(AllreduceReq::new(inputs, op))`; it reuses cached schedules across calls"
+)]
 pub fn allreduce_sim<T: Element>(
     inputs: &[Vec<T>],
     n: usize,
@@ -49,50 +55,24 @@ pub fn allreduce_sim<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<AllreduceResult<T>, SimError> {
-    let p = inputs.len();
-    let m = inputs[0].len();
-    assert!(inputs.iter().all(|v| v.len() == m));
-
-    // Chunk m over p ranks as equally as possible.
-    let base = m / p;
-    let rem = m % p;
-    let counts: Vec<usize> = (0..p).map(|j| base + usize::from(j < rem)).collect();
-    let counts = Arc::new(counts);
-
-    let world = World::new(p);
-    let table = ScheduleTable::build(&world, n);
-
-    // Phase 1: reduce-scatter.
-    let mut rs_procs: Vec<ReduceScatterProc<T>> = (0..p)
-        .map(|r| {
-            ReduceScatterProc::new(table.clone(), counts.clone(), r, &inputs[r], op.clone())
-        })
-        .collect();
-    let mut net = Network::new(p);
-    let rs_stats = net.run(&mut rs_procs, elem_bytes, cost)?;
-    let chunks: Vec<Vec<T>> = rs_procs.into_iter().map(|pr| pr.into_chunk()).collect();
-
-    // Phase 2: all-gather of the reduced chunks.
-    let mut ag_procs: Vec<AllgathervProc<T>> = (0..p)
-        .map(|r| AllgathervProc::new(table.clone(), counts.clone(), r, &chunks[r]))
-        .collect();
-    let ag_stats = net.run(&mut ag_procs, elem_bytes, cost)?;
-    let buffers = ag_procs
-        .into_iter()
-        .map(|pr| {
-            let rows = pr.into_buffers();
-            let mut out = Vec::with_capacity(m);
-            for row in rows {
-                out.extend_from_slice(&row);
-            }
-            out
-        })
-        .collect();
-
-    Ok(AllreduceResult { rs_stats, ag_stats, buffers })
+    let comm = Communicator::new(inputs.len());
+    let req = AllreduceReq::new(inputs, op)
+        .blocks(n)
+        .algo(Algo::Circulant)
+        .elem_bytes(elem_bytes);
+    match comm.allreduce_parts_with(req, cost) {
+        Ok((rs_stats, ag_stats, buffers, _)) => {
+            Ok(AllreduceResult { rs_stats, ag_stats, buffers })
+        }
+        Err(CommError::Sim(e)) => Err(e),
+        Err(e) => panic!("allreduce_sim: {e}"),
+    }
 }
 
+// The module tests deliberately exercise the deprecated wrapper: it pins
+// the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;

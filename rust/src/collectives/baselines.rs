@@ -11,11 +11,24 @@
 
 use std::sync::Arc;
 
+use crate::comm::{
+    Algo, AllgathervReq, BcastReq, CommError, Communicator, ReduceReq, ReduceScatterReq,
+};
 use crate::schedule::ceil_log2;
 use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc, RunStats, SimError};
 
 use super::common::{BlockGeometry, Element, ReduceOp};
+
+/// Map a `comm` error back onto the wrappers' historical `SimError`
+/// return type (anything non-simulation is a caller bug, as before).
+fn unwrap_sim<T>(res: Result<T, CommError>, what: &str) -> Result<T, SimError> {
+    match res {
+        Ok(v) => Ok(v),
+        Err(CommError::Sim(e)) => Err(e),
+        Err(e) => panic!("{what}: {e}"),
+    }
+}
 
 // ---------------------------------------------------------------------
 // Binomial-tree broadcast
@@ -84,6 +97,10 @@ impl<T: Element> RankProc<T> for BinomialBcastProc<T> {
 }
 
 /// Simulate a binomial-tree broadcast.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `comm::Communicator::bcast` with `Algo::Binomial`"
+)]
 pub fn binomial_bcast_sim<T: Element>(
     p: usize,
     root: usize,
@@ -91,11 +108,10 @@ pub fn binomial_bcast_sim<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    let mut procs: Vec<BinomialBcastProc<T>> = (0..p)
-        .map(|r| BinomialBcastProc::new(p, r, root, if r == root { Some(data) } else { None }))
-        .collect();
-    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
-    Ok((stats, procs.into_iter().map(|pr| pr.into_buffer()).collect()))
+    let comm = Communicator::new(p);
+    let req = BcastReq::new(root, data).algo(Algo::Binomial).elem_bytes(elem_bytes);
+    let out = unwrap_sim(comm.bcast_with(req, cost), "binomial_bcast_sim")?;
+    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -170,6 +186,10 @@ impl<T: Element> RankProc<T> for BinomialReduceProc<T> {
 }
 
 /// Simulate a binomial-tree reduction; returns the root's buffer.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `comm::Communicator::reduce` with `Algo::Binomial`"
+)]
 pub fn binomial_reduce_sim<T: Element>(
     inputs: &[Vec<T>],
     root: usize,
@@ -178,11 +198,10 @@ pub fn binomial_reduce_sim<T: Element>(
     cost: &dyn CostModel,
 ) -> Result<(RunStats, Vec<T>), SimError> {
     let p = inputs.len();
-    let mut procs: Vec<BinomialReduceProc<T>> = (0..p)
-        .map(|r| BinomialReduceProc::new(p, r, root, &inputs[r], op.clone()))
-        .collect();
-    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
-    Ok((stats, procs.into_iter().nth(root).unwrap().into_buffer()))
+    let comm = Communicator::new(p);
+    let req = ReduceReq::new(root, inputs, op).algo(Algo::Binomial).elem_bytes(elem_bytes);
+    let out = unwrap_sim(comm.reduce_with(req, cost), "binomial_reduce_sim")?;
+    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -365,6 +384,10 @@ impl<T: Element> RankProc<T> for VdgBcastProc<T> {
 }
 
 /// Simulate a van de Geijn (scatter + ring all-gather) broadcast.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `comm::Communicator::bcast` with `Algo::VanDeGeijn`"
+)]
 pub fn vdg_bcast_sim<T: Element>(
     p: usize,
     root: usize,
@@ -372,12 +395,10 @@ pub fn vdg_bcast_sim<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    let m = data.len();
-    let mut procs: Vec<VdgBcastProc<T>> = (0..p)
-        .map(|r| VdgBcastProc::new(p, r, root, m, if r == root { Some(data) } else { None }))
-        .collect();
-    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
-    Ok((stats, procs.into_iter().map(|pr| pr.into_buffer()).collect()))
+    let comm = Communicator::new(p);
+    let req = BcastReq::new(root, data).algo(Algo::VanDeGeijn).elem_bytes(elem_bytes);
+    let out = unwrap_sim(comm.bcast_with(req, cost), "vdg_bcast_sim")?;
+    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -457,18 +478,19 @@ impl<T: Element> RankProc<T> for RingAllgathervProc<T> {
 }
 
 /// Simulate a ring all-gatherv.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `comm::Communicator::allgatherv` with `Algo::Ring`"
+)]
 pub fn ring_allgatherv_sim<T: Element>(
     inputs: &[Vec<T>],
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<(RunStats, Vec<Vec<Vec<T>>>), SimError> {
-    let p = inputs.len();
-    let counts = Arc::new(inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
-    let mut procs: Vec<RingAllgathervProc<T>> = (0..p)
-        .map(|r| RingAllgathervProc::new(p, r, counts.clone(), &inputs[r]))
-        .collect();
-    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
-    Ok((stats, procs.into_iter().map(|pr| pr.into_buffers()).collect()))
+    let comm = Communicator::new(inputs.len());
+    let req = AllgathervReq::new(inputs).algo(Algo::Ring).elem_bytes(elem_bytes);
+    let out = unwrap_sim(comm.allgatherv_with(req, cost), "ring_allgatherv_sim")?;
+    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -553,6 +575,10 @@ impl<T: Element> RankProc<T> for RingReduceScatterProc<T> {
 }
 
 /// Simulate a ring reduce-scatter.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `comm::Communicator::reduce_scatter` with `Algo::Ring`"
+)]
 pub fn ring_reduce_scatter_sim<T: Element>(
     inputs: &[Vec<T>],
     counts: &[usize],
@@ -560,16 +586,16 @@ pub fn ring_reduce_scatter_sim<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    let p = inputs.len();
-    let counts = Arc::new(counts.to_vec());
-    let mut procs: Vec<RingReduceScatterProc<T>> = (0..p)
-        .map(|r| RingReduceScatterProc::new(p, r, counts.clone(), &inputs[r], op.clone()))
-        .collect();
-    let stats = Network::new(p).run(&mut procs, elem_bytes, cost)?;
-    Ok((stats, procs.into_iter().map(|pr| pr.into_chunk()).collect()))
+    let comm = Communicator::new(inputs.len());
+    let req = ReduceScatterReq::new(inputs, counts, op).algo(Algo::Ring).elem_bytes(elem_bytes);
+    let out = unwrap_sim(comm.reduce_scatter_with(req, cost), "ring_reduce_scatter_sim")?;
+    Ok((out.stats, out.buffers))
 }
 
+// The module tests deliberately exercise the deprecated wrappers: they
+// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;

@@ -6,12 +6,18 @@
 //! All processors run the *same* symmetric communication pattern; which
 //! block flows on which edge in which round is fully determined by the
 //! O(log p)-computed send/receive schedules — no metadata is communicated.
+//!
+//! The front door for running this collective is
+//! [`crate::comm::Communicator::bcast`]; this module provides the
+//! per-rank state machine ([`BcastProc`]), the shared proc builder
+//! ([`build_bcast_procs`]) and the deprecated legacy wrappers.
 
+use crate::comm::{Algo, BcastReq, CommError, Communicator};
 use crate::schedule::Schedule;
 use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc, RunStats, SimError};
 
-use super::common::{BlockGeometry, Element, PhasedSchedule, World};
+use super::common::{BlockGeometry, Element, PhasedSchedule, ScheduleSource, World};
 
 /// Per-rank state machine for Algorithm 1.
 pub struct BcastProc<T> {
@@ -37,6 +43,19 @@ impl<T: Element> BcastProc<T> {
         data: Option<&[T]>,
     ) -> Self {
         let ps = super::common::phased_for(&world.sk, rank, root, geom.n);
+        Self::with_schedule(ps, rank, root, geom, data)
+    }
+
+    /// Build from an already-computed [`PhasedSchedule`] (the
+    /// cache-served path used by [`crate::comm::Communicator`]).
+    pub fn with_schedule(
+        ps: PhasedSchedule,
+        rank: usize,
+        root: usize,
+        geom: BlockGeometry,
+        data: Option<&[T]>,
+    ) -> Self {
+        assert_eq!(ps.n, geom.n, "schedule phased for a different block count");
         let blocks = if rank == root {
             let buf = data.expect("root must supply the broadcast buffer");
             assert_eq!(buf.len(), geom.m);
@@ -123,21 +142,51 @@ impl<T: Element> RankProc<T> for BcastProc<T> {
     }
 }
 
+/// Build all `p` rank state machines from one schedule source — the one
+/// shared construction loop used by the [`crate::comm`] backends and the
+/// legacy wrappers alike.
+pub fn build_bcast_procs<T: Element>(
+    src: &ScheduleSource<'_>,
+    root: usize,
+    geom: BlockGeometry,
+    data: &[T],
+) -> Vec<BcastProc<T>> {
+    crate::comm::build_procs(src.p(), |r| {
+        BcastProc::with_schedule(
+            src.phased(r, root, geom.n),
+            r,
+            root,
+            geom,
+            if r == root { Some(data) } else { None },
+        )
+    })
+}
+
 /// Result of a simulated broadcast.
 pub struct BcastResult<T> {
     pub stats: RunStats,
     pub buffers: Vec<Vec<T>>,
+    /// Payload length every rank must end up holding.
+    pub m: usize,
 }
 
 impl<T> BcastResult<T> {
+    /// True iff every rank assembled the complete `m`-element buffer.
+    /// (Historically this only checked that *some* buffers existed, which
+    /// was vacuously true even with ranks missing blocks.)
     pub fn all_received(&self) -> bool {
-        !self.buffers.is_empty()
+        !self.buffers.is_empty() && self.buffers.iter().all(|b| b.len() == self.m)
     }
 }
 
 /// Run a full broadcast of `data` from `root` over `p` simulated ranks
 /// with `n` blocks, validating the machine model; returns per-rank final
 /// buffers and run statistics.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call `.bcast(BcastReq::new(root, data))`; \
+            it reuses cached schedules across calls and roots"
+)]
 pub fn bcast_sim<T: Element>(
     p: usize,
     root: usize,
@@ -146,19 +195,24 @@ pub fn bcast_sim<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<BcastResult<T>, SimError> {
-    let world = World::new(p);
-    let geom = BlockGeometry::new(data.len(), n);
-    let mut procs: Vec<BcastProc<T>> = (0..p)
-        .map(|r| BcastProc::new(&world, r, root, geom, if r == root { Some(data) } else { None }))
-        .collect();
-    let mut net = Network::new(p);
-    let stats = net.run(&mut procs, elem_bytes, cost)?;
-    let buffers = procs.into_iter().map(|pr| pr.into_buffer()).collect();
-    Ok(BcastResult { stats, buffers })
+    let comm = Communicator::new(p);
+    let req = BcastReq::new(root, data)
+        .blocks(n)
+        .algo(Algo::Circulant)
+        .elem_bytes(elem_bytes);
+    match comm.bcast_with(req, cost) {
+        Ok(out) => Ok(BcastResult { stats: out.stats, buffers: out.buffers, m: data.len() }),
+        Err(CommError::Sim(e)) => Err(e),
+        Err(e) => panic!("bcast_sim: {e}"),
+    }
 }
 
 /// Build the full set of rank procs (for the threaded runtime or custom
 /// drivers).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `build_bcast_procs` with a `ScheduleSource` (cache-served via `comm::Communicator`)"
+)]
 pub fn bcast_procs<T: Element>(
     p: usize,
     root: usize,
@@ -166,10 +220,12 @@ pub fn bcast_procs<T: Element>(
     n: usize,
 ) -> Vec<BcastProc<T>> {
     let world = World::new(p);
-    let geom = BlockGeometry::new(data.len(), n);
-    (0..p)
-        .map(|r| BcastProc::new(&world, r, root, geom, if r == root { Some(data) } else { None }))
-        .collect()
+    build_bcast_procs(
+        &ScheduleSource::Direct(&world.sk),
+        root,
+        BlockGeometry::new(data.len(), n),
+        data,
+    )
 }
 
 /// Convenience: schedule objects for every rank (used by inspection tools).
@@ -177,7 +233,10 @@ pub fn all_schedules(world: &World) -> Vec<Schedule> {
     (0..world.p()).map(|r| Schedule::compute(&world.sk, r)).collect()
 }
 
+// The module tests deliberately exercise the deprecated wrappers: they
+// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::sim::cost::UnitCost;
@@ -185,6 +244,7 @@ mod tests {
     fn check_bcast(p: usize, root: usize, m: usize, n: usize) {
         let data: Vec<u32> = (0..m as u32).map(|i| i.wrapping_mul(2654435761)).collect();
         let res = bcast_sim(p, root, &data, n, 4, &UnitCost).unwrap();
+        assert!(res.all_received(), "p={p} root={root} m={m} n={n}");
         for (r, buf) in res.buffers.iter().enumerate() {
             assert_eq!(buf, &data, "p={p} root={root} m={m} n={n} rank={r}");
         }
@@ -254,5 +314,29 @@ mod tests {
         for p in [31usize, 32, 33, 100, 127, 128, 129] {
             check_bcast(p, 0, 96, 6);
         }
+    }
+
+    #[test]
+    fn all_received_reflects_completion() {
+        // The corrected check: a rank with a short (incomplete) buffer is
+        // detected, where the old `!buffers.is_empty()` was vacuously true.
+        let good = BcastResult::<u32> {
+            stats: RunStats::default(),
+            buffers: vec![vec![1, 2, 3]; 4],
+            m: 3,
+        };
+        assert!(good.all_received());
+        let bad = BcastResult::<u32> {
+            stats: RunStats::default(),
+            buffers: vec![vec![1, 2, 3], vec![1]],
+            m: 3,
+        };
+        assert!(!bad.all_received());
+        let empty = BcastResult::<u32> {
+            stats: RunStats::default(),
+            buffers: Vec::new(),
+            m: 3,
+        };
+        assert!(!empty.all_received());
     }
 }

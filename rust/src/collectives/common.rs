@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use crate::schedule::{Schedule, Skips};
+use crate::schedule::{Schedule, ScheduleCache, Skips};
 
 /// Data element moved by the collectives.
 pub trait Element:
@@ -227,12 +227,57 @@ impl PhasedSchedule {
 }
 
 /// Compute the [`PhasedSchedule`] of `rank` for a broadcast rooted at
-/// `root` over `p` processors with `n` blocks.
+/// `root` over `p` processors with `n` blocks (the direct, uncached
+/// path; see [`ScheduleSource`] for the one shared implementation).
 pub fn phased_for(sk: &Arc<Skips>, rank: usize, root: usize, n: usize) -> PhasedSchedule {
-    let p = sk.p();
-    let rel = (rank + p - root % p) % p;
-    let sched = Schedule::compute(sk, rel);
-    PhasedSchedule::new(sk.clone(), &sched, n)
+    ScheduleSource::Direct(sk).phased(rank, root, n)
+}
+
+/// Where per-rank schedules come from when constructing a collective's
+/// state machines: computed directly (throwaway, the legacy `*_sim`
+/// path) or served from a shared [`ScheduleCache`] (the
+/// [`crate::comm::Communicator`] path — schedules are *root-relative*,
+/// so one cache entry per relative rank serves every root).
+pub enum ScheduleSource<'a> {
+    /// Compute schedules on the spot from the skip table.
+    Direct(&'a Arc<Skips>),
+    /// Serve schedules from a shared cache (compute-on-miss).
+    Cached { cache: &'a ScheduleCache, sk: &'a Arc<Skips> },
+}
+
+impl ScheduleSource<'_> {
+    #[inline]
+    pub fn skips(&self) -> &Arc<Skips> {
+        match self {
+            ScheduleSource::Direct(sk) => sk,
+            ScheduleSource::Cached { sk, .. } => sk,
+        }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.skips().p()
+    }
+
+    /// The combined schedule of relative rank `rel` (owned; cloned from
+    /// the cache on the cached path — a `Schedule` is two `q`-element
+    /// vectors, so the clone is O(log p)).
+    pub fn schedule(&self, rel: usize) -> Schedule {
+        match self {
+            ScheduleSource::Direct(sk) => Schedule::compute(sk, rel),
+            ScheduleSource::Cached { cache, sk } => (*cache.get(sk.p(), rel)).clone(),
+        }
+    }
+
+    /// The [`PhasedSchedule`] of absolute `rank` for a collective rooted
+    /// at `root` with `n` blocks.
+    pub fn phased(&self, rank: usize, root: usize, n: usize) -> PhasedSchedule {
+        let sk = self.skips();
+        let p = sk.p();
+        let rel = (rank + p - root % p) % p;
+        let sched = self.schedule(rel);
+        PhasedSchedule::new(sk.clone(), &sched, n)
+    }
 }
 
 /// Shared, cheaply clonable context for building all ranks of a collective.

@@ -19,11 +19,27 @@
 //! the crossover.
 
 use crate::sim::cost::{CostModel, HierarchicalCost};
-use crate::sim::network::{RunStats, SimError};
+use crate::sim::network::{Network, RunStats, SimError};
 
-use super::bcast::bcast_sim;
-use super::common::Element;
+use super::bcast::build_bcast_procs;
+use super::common::{BlockGeometry, Element, ScheduleSource, World};
 use super::tuning;
+
+/// Root-0 circulant pipelined broadcast over `p` throwaway ranks,
+/// returning only the run statistics (the per-phase primitive of the
+/// two-level decomposition).
+fn phase_bcast_stats<T: Element>(
+    p: usize,
+    data: &[T],
+    n: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<RunStats, SimError> {
+    let world = World::new(p);
+    let geom = BlockGeometry::new(data.len(), n.max(1));
+    let mut procs = build_bcast_procs(&ScheduleSource::Direct(&world.sk), 0, geom, data);
+    Network::new(p).run(&mut procs, elem_bytes, cost)
+}
 
 /// Result of the two-phase hierarchical broadcast.
 #[derive(Debug, Clone)]
@@ -111,7 +127,7 @@ pub fn hier_bcast_sim<T: Element>(
 
     // Phase 1: leaders (one rank per node) over the inter-node fabric.
     let inter = if nodes > 1 {
-        bcast_sim(nodes, 0, data, n1, elem_bytes, &InterOnly(cost))?.stats
+        phase_bcast_stats(nodes, data, n1, elem_bytes, &InterOnly(cost))?
     } else {
         RunStats::default()
     };
@@ -119,7 +135,7 @@ pub fn hier_bcast_sim<T: Element>(
     // Phase 2: every leader broadcasts within its node; all nodes run in
     // parallel on disjoint links, so simulate one representative node.
     let intra = if cores > 1 {
-        bcast_sim(cores, 0, data, n2, elem_bytes, &IntraOnly(cost))?.stats
+        phase_bcast_stats(cores, data, n2, elem_bytes, &IntraOnly(cost))?
     } else {
         RunStats::default()
     };
@@ -150,7 +166,7 @@ pub fn flat_bcast_time<T: Element>(
     } else {
         n
     };
-    Ok(bcast_sim(p, 0, data, n, elem_bytes, cost)?.stats)
+    phase_bcast_stats(p, data, n, elem_bytes, cost)
 }
 
 #[cfg(test)]

@@ -10,21 +10,41 @@
 //! | reduce-scatter + all-gather | [`allreduce`] | `MPI_Allreduce` |
 //! | binomial / van de Geijn / ring comparators | [`baselines`] | native library algorithms |
 //! | block-count selection (§3) | [`tuning`] | — |
+//!
+//! **Run collectives through [`crate::comm::Communicator`]** — the typed,
+//! schedule-caching front door. This module provides the per-rank state
+//! machines, the shared `build_*_procs` construction loops, and the
+//! deprecated legacy `*_sim` free functions (thin wrappers over a
+//! throwaway `Communicator`, kept for source compatibility).
 
 pub mod allgatherv;
 pub mod allreduce;
 pub mod baselines;
 pub mod bcast;
 pub mod common;
+pub mod hierarchical;
 pub mod reduce;
 pub mod reduce_scatter;
+pub mod rhalving;
 pub mod tuning;
 
-pub use allgatherv::{allgather_sim, allgatherv_sim, AllgathervProc, ScheduleTable};
+pub use allgatherv::{build_allgatherv_procs, AllgathervProc, ScheduleTable};
+pub use bcast::{build_bcast_procs, BcastProc};
+pub use common::{
+    BlockGeometry, Element, MaxOp, PhasedSchedule, ReduceOp, ScheduleSource, SumOp, World,
+};
+pub use reduce::{build_reduce_procs, ReduceProc};
+pub use reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
+
+// Legacy entry points, re-exported for source compatibility; each is a
+// deprecated wrapper over a throwaway `comm::Communicator`.
+#[allow(deprecated)]
+pub use allgatherv::{allgather_sim, allgatherv_sim};
+#[allow(deprecated)]
 pub use allreduce::allreduce_sim;
-pub use bcast::{bcast_procs, bcast_sim, BcastProc};
-pub use common::{BlockGeometry, Element, MaxOp, PhasedSchedule, ReduceOp, SumOp, World};
-pub use reduce::{reduce_sim, ReduceProc};
-pub use reduce_scatter::{reduce_scatter_block_sim, reduce_scatter_sim, ReduceScatterProc};
-pub mod rhalving;
-pub mod hierarchical;
+#[allow(deprecated)]
+pub use bcast::{bcast_procs, bcast_sim};
+#[allow(deprecated)]
+pub use reduce::reduce_sim;
+#[allow(deprecated)]
+pub use reduce_scatter::{reduce_scatter_block_sim, reduce_scatter_sim};

@@ -10,13 +10,17 @@
 //! sends each partial block exactly once, and the reversed-time order
 //! guarantees all contributions to a block arrive before that block is
 //! forwarded — the root ends with the full reduction over all `p` ranks.
+//!
+//! The front door for running this collective is
+//! [`crate::comm::Communicator::reduce`].
 
 use std::sync::Arc;
 
+use crate::comm::{Algo, CommError, Communicator, ReduceReq};
 use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc, RunStats, SimError};
 
-use super::common::{BlockGeometry, Element, PhasedSchedule, ReduceOp, World};
+use super::common::{BlockGeometry, Element, PhasedSchedule, ReduceOp, ScheduleSource, World};
 
 /// Per-rank state machine for the reversed-schedule reduction.
 pub struct ReduceProc<T> {
@@ -39,8 +43,22 @@ impl<T: Element> ReduceProc<T> {
         data: &[T],
         op: Arc<dyn ReduceOp<T>>,
     ) -> Self {
-        assert_eq!(data.len(), geom.m);
         let ps = super::common::phased_for(&world.sk, rank, root, geom.n);
+        Self::with_schedule(ps, rank, root, geom, data, op)
+    }
+
+    /// Build from an already-computed [`PhasedSchedule`] (the
+    /// cache-served path used by [`crate::comm::Communicator`]).
+    pub fn with_schedule(
+        ps: PhasedSchedule,
+        rank: usize,
+        root: usize,
+        geom: BlockGeometry,
+        data: &[T],
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Self {
+        assert_eq!(data.len(), geom.m);
+        assert_eq!(ps.n, geom.n, "schedule phased for a different block count");
         let blocks = (0..geom.n)
             .map(|b| {
                 let (off, len) = geom.range(b);
@@ -115,6 +133,28 @@ impl<T: Element> RankProc<T> for ReduceProc<T> {
     }
 }
 
+/// Build all `p` rank state machines from one schedule source — the
+/// shared construction loop used by the [`crate::comm`] backends and the
+/// legacy wrapper alike.
+pub fn build_reduce_procs<T: Element>(
+    src: &ScheduleSource<'_>,
+    root: usize,
+    geom: BlockGeometry,
+    inputs: &[Vec<T>],
+    op: Arc<dyn ReduceOp<T>>,
+) -> Vec<ReduceProc<T>> {
+    crate::comm::build_procs(src.p(), |r| {
+        ReduceProc::with_schedule(
+            src.phased(r, root, geom.n),
+            r,
+            root,
+            geom,
+            &inputs[r],
+            op.clone(),
+        )
+    })
+}
+
 /// Result of a simulated reduction.
 pub struct ReduceResult<T> {
     pub stats: RunStats,
@@ -124,6 +164,11 @@ pub struct ReduceResult<T> {
 
 /// Run a full reduction to `root` over `p` simulated ranks: `inputs[r]` is
 /// rank `r`'s contribution (all of length `m`), divided into `n` blocks.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call `.reduce(ReduceReq::new(root, inputs, op))`; \
+            it reuses cached schedules across calls and roots"
+)]
 pub fn reduce_sim<T: Element>(
     inputs: &[Vec<T>],
     root: usize,
@@ -133,19 +178,22 @@ pub fn reduce_sim<T: Element>(
     cost: &dyn CostModel,
 ) -> Result<ReduceResult<T>, SimError> {
     let p = inputs.len();
-    let m = inputs[0].len();
-    let world = World::new(p);
-    let geom = BlockGeometry::new(m, n);
-    let mut procs: Vec<ReduceProc<T>> = (0..p)
-        .map(|r| ReduceProc::new(&world, r, root, geom, &inputs[r], op.clone()))
-        .collect();
-    let mut net = Network::new(p);
-    let stats = net.run(&mut procs, elem_bytes, cost)?;
-    let buffer = procs.into_iter().nth(root).unwrap().into_buffer();
-    Ok(ReduceResult { stats, buffer })
+    let comm = Communicator::new(p);
+    let req = ReduceReq::new(root, inputs, op)
+        .blocks(n)
+        .algo(Algo::Circulant)
+        .elem_bytes(elem_bytes);
+    match comm.reduce_with(req, cost) {
+        Ok(out) => Ok(ReduceResult { stats: out.stats, buffer: out.buffers }),
+        Err(CommError::Sim(e)) => Err(e),
+        Err(e) => panic!("reduce_sim: {e}"),
+    }
 }
 
+// The module tests deliberately exercise the deprecated wrapper: it pins
+// the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;

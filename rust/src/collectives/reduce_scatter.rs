@@ -13,11 +13,12 @@
 
 use std::sync::Arc;
 
+use crate::comm::{Algo, CommError, Communicator, ReduceScatterReq};
 use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, Network, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc, RunStats, SimError};
 
 use super::allgatherv::ScheduleTable;
-use super::common::{BlockGeometry, Element, ReduceOp, World};
+use super::common::{BlockGeometry, Element, ReduceOp};
 
 /// Per-rank state machine for the reversed all-broadcast.
 pub struct ReduceScatterProc<T> {
@@ -185,6 +186,20 @@ impl<T: Element> RankProc<T> for ReduceScatterProc<T> {
     }
 }
 
+/// Build all `p` rank state machines over one shared [`ScheduleTable`] —
+/// the shared construction loop used by the [`crate::comm`] backends and
+/// the legacy wrappers alike.
+pub fn build_reduce_scatter_procs<T: Element>(
+    table: Arc<ScheduleTable>,
+    counts: Arc<Vec<usize>>,
+    inputs: &[Vec<T>],
+    op: Arc<dyn ReduceOp<T>>,
+) -> Vec<ReduceScatterProc<T>> {
+    crate::comm::build_procs(table.p(), |r| {
+        ReduceScatterProc::new(table.clone(), counts.clone(), r, &inputs[r], op.clone())
+    })
+}
+
 /// Result of a simulated all-reduction.
 pub struct ReduceScatterResult<T> {
     pub stats: RunStats,
@@ -194,6 +209,12 @@ pub struct ReduceScatterResult<T> {
 
 /// Run the irregular all-reduction: `inputs[r]` is rank `r`'s full vector
 /// (concatenation of per-destination chunks sized by `counts`).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call \
+            `.reduce_scatter(ReduceScatterReq::new(inputs, counts, op))`; \
+            it reuses cached schedules across calls"
+)]
 pub fn reduce_scatter_sim<T: Element>(
     inputs: &[Vec<T>],
     counts: &[usize],
@@ -202,21 +223,24 @@ pub fn reduce_scatter_sim<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
 ) -> Result<ReduceScatterResult<T>, SimError> {
-    let p = inputs.len();
-    assert_eq!(counts.len(), p);
-    let world = World::new(p);
-    let table = ScheduleTable::build(&world, n);
-    let counts = Arc::new(counts.to_vec());
-    let mut procs: Vec<ReduceScatterProc<T>> = (0..p)
-        .map(|r| ReduceScatterProc::new(table.clone(), counts.clone(), r, &inputs[r], op.clone()))
-        .collect();
-    let mut net = Network::new(p);
-    let stats = net.run(&mut procs, elem_bytes, cost)?;
-    let chunks = procs.into_iter().map(|pr| pr.into_chunk()).collect();
-    Ok(ReduceScatterResult { stats, chunks })
+    let comm = Communicator::new(inputs.len());
+    let req = ReduceScatterReq::new(inputs, counts, op)
+        .blocks(n)
+        .algo(Algo::Circulant)
+        .elem_bytes(elem_bytes);
+    match comm.reduce_scatter_with(req, cost) {
+        Ok(out) => Ok(ReduceScatterResult { stats: out.stats, chunks: out.buffers }),
+        Err(CommError::Sim(e)) => Err(e),
+        Err(e) => panic!("reduce_scatter_sim: {e}"),
+    }
 }
 
 /// `MPI_Reduce_scatter_block`: equal chunk of `block_elems` per rank.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a persistent `comm::Communicator` and call \
+            `.reduce_scatter_block(ReduceScatterBlockReq::new(inputs, block_elems, op))`"
+)]
 pub fn reduce_scatter_block_sim<T: Element>(
     inputs: &[Vec<T>],
     block_elems: usize,
@@ -226,10 +250,15 @@ pub fn reduce_scatter_block_sim<T: Element>(
     cost: &dyn CostModel,
 ) -> Result<ReduceScatterResult<T>, SimError> {
     let p = inputs.len();
+    // (calling the sibling deprecated wrapper is fine: deprecation
+    // warnings are suppressed inside deprecated items)
     reduce_scatter_sim(inputs, &vec![block_elems; p], n, op, elem_bytes, cost)
 }
 
+// The module tests deliberately exercise the deprecated wrappers: they
+// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;

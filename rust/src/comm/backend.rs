@@ -1,0 +1,188 @@
+//! Pluggable execution backends for the [`super::Communicator`].
+//!
+//! A collective is a vector of per-rank state machines
+//! ([`RankProc`]); how those machines are *driven* is the backend's
+//! business:
+//!
+//! * [`LockstepBackend`] — the round-based [`Network`] simulator with
+//!   full machine-model enforcement (one-portedness, expectation
+//!   cross-checks). Violations surface as [`SimError`]s; this is the
+//!   correctness instrument.
+//! * [`ThreadedBackend`] — every rank a real OS thread over channels
+//!   ([`crate::sim::threads`]), ranks free-running without barriers —
+//!   validates that the schedules need no global synchrony. Cost
+//!   accounting is identical (same per-round max/sum), but schedule bugs
+//!   panic the rank thread instead of returning an error.
+//!
+//! Both sit behind one [`ExecBackend`] trait; [`BackendKind`] is the
+//! value-level selector a [`super::Communicator`] stores.
+
+use crate::collectives::common::Element;
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Network, RankProc, RunStats, SimError};
+use crate::sim::threads::run_threaded_stats;
+
+/// A way of driving `p` rank state machines to completion.
+pub trait ExecBackend {
+    fn name(&self) -> &'static str;
+
+    /// Run the collective; returns the run statistics and the final state
+    /// machines (for result assembly).
+    fn execute<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static;
+}
+
+/// The round-based lockstep simulator ([`Network`]) — default backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LockstepBackend;
+
+impl ExecBackend for LockstepBackend {
+    fn name(&self) -> &'static str {
+        "lockstep"
+    }
+
+    fn execute<T, P>(
+        &self,
+        mut procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        let stats = Network::new(procs.len()).run(&mut procs, elem_bytes, cost)?;
+        Ok((stats, procs))
+    }
+}
+
+/// The threaded runtime: one OS thread per rank, round-tagged channel
+/// messages, no barriers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThreadedBackend;
+
+impl ExecBackend for ThreadedBackend {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn execute<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        Ok(run_threaded_stats(procs, elem_bytes, cost))
+    }
+}
+
+/// Value-level backend selector stored by a [`super::Communicator`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Lockstep,
+    Threaded,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Lockstep => LockstepBackend.name(),
+            BackendKind::Threaded => ThreadedBackend.name(),
+        }
+    }
+
+    pub(crate) fn execute<T, P>(
+        self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        match self {
+            BackendKind::Lockstep => LockstepBackend.execute::<T, P>(procs, elem_bytes, cost),
+            BackendKind::Threaded => ThreadedBackend.execute::<T, P>(procs, elem_bytes, cost),
+        }
+    }
+}
+
+/// The one shared per-rank construction loop — previously copy-pasted
+/// between every `*_sim` / `*_procs` pair in the collectives.
+pub fn build_procs<P>(p: usize, make: impl FnMut(usize) -> P) -> Vec<P> {
+    (0..p).map(make).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::UnitCost;
+    use crate::sim::network::Msg;
+
+    /// Trivial ring shift used to compare backends.
+    struct Shift {
+        rank: usize,
+        p: usize,
+        val: Vec<u32>,
+    }
+
+    impl RankProc<u32> for Shift {
+        fn send(&mut self, _round: usize) -> Option<Msg<u32>> {
+            Some(Msg { to: (self.rank + 1) % self.p, data: self.val.clone() })
+        }
+        fn expects(&self, _round: usize) -> Option<usize> {
+            Some((self.rank + self.p - 1) % self.p)
+        }
+        fn recv(&mut self, _round: usize, _from: usize, data: Vec<u32>) {
+            self.val = data;
+        }
+        fn rounds(&self) -> usize {
+            self.p - 1
+        }
+    }
+
+    fn shifts(p: usize) -> Vec<Shift> {
+        build_procs(p, |r| Shift { rank: r, p, val: vec![r as u32] })
+    }
+
+    #[test]
+    fn backends_agree_on_stats_and_results() {
+        let p = 6usize;
+        let (ls, lprocs) =
+            LockstepBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        let (ts, tprocs) =
+            ThreadedBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        assert_eq!(ls.rounds, ts.rounds);
+        assert_eq!(ls.messages, ts.messages);
+        assert_eq!(ls.bytes, ts.bytes);
+        assert_eq!(ls.active_rounds, ts.active_rounds);
+        assert_eq!(ls.max_rank_bytes, ts.max_rank_bytes);
+        assert!((ls.time - ts.time).abs() < 1e-12);
+        for (a, b) in lprocs.iter().zip(&tprocs) {
+            assert_eq!(a.val, b.val);
+        }
+    }
+
+    #[test]
+    fn backend_kind_dispatch() {
+        assert_eq!(BackendKind::Lockstep.name(), "lockstep");
+        assert_eq!(BackendKind::Threaded.name(), "threaded");
+        assert_eq!(BackendKind::default(), BackendKind::Lockstep);
+        let (stats, _) =
+            BackendKind::Threaded.execute::<u32, Shift>(shifts(4), 4, &UnitCost).unwrap();
+        assert_eq!(stats.messages, 4 * 3);
+    }
+}

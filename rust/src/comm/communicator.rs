@@ -1,0 +1,847 @@
+//! The [`Communicator`] — persistent, schedule-caching handle serving
+//! every collective through typed requests — and its [`CommBuilder`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::collectives::allgatherv::{build_allgatherv_procs, AllgathervProc, ScheduleTable};
+use crate::collectives::baselines::{
+    BinomialBcastProc, BinomialReduceProc, RingAllgathervProc, RingReduceScatterProc,
+    VdgBcastProc,
+};
+use crate::collectives::bcast::{build_bcast_procs, BcastProc};
+use crate::collectives::common::{BlockGeometry, Element, ScheduleSource};
+use crate::collectives::reduce::{build_reduce_procs, ReduceProc};
+use crate::collectives::reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
+use crate::collectives::rhalving::RhalvingProc;
+use crate::schedule::{ScheduleCache, Skips};
+use crate::sim::cost::{CostModel, LinearCost};
+use crate::sim::network::{RankProc, RunStats, SimError};
+
+use super::backend::{build_procs, BackendKind};
+use super::outcome::{CommError, Outcome};
+use super::request::{
+    Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq, ReduceScatterBlockReq,
+    ReduceScatterReq, TuningParams,
+};
+
+/// Builder for a [`Communicator`].
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use circulant_bcast::comm::{BackendKind, CommBuilder};
+/// use circulant_bcast::schedule::ScheduleCache;
+/// use circulant_bcast::sim::LinearCost;
+///
+/// let cache = Arc::new(ScheduleCache::new());   // shared across comms
+/// let comm = CommBuilder::new(1000)
+///     .cache(cache)
+///     .cost_model(LinearCost::hpc_default())
+///     .backend(BackendKind::Lockstep)
+///     .build();
+/// ```
+pub struct CommBuilder {
+    p: usize,
+    cache: Option<Arc<ScheduleCache>>,
+    cost: Option<Arc<dyn CostModel>>,
+    tuning: TuningParams,
+    backend: BackendKind,
+}
+
+impl CommBuilder {
+    pub fn new(p: usize) -> Self {
+        assert!(p > 0, "a communicator needs at least one rank");
+        CommBuilder {
+            p,
+            cache: None,
+            cost: None,
+            tuning: TuningParams::default(),
+            backend: BackendKind::Lockstep,
+        }
+    }
+
+    /// Share a schedule cache across communicators (e.g. one per service).
+    pub fn cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Default cost model used by the typed collective methods.
+    pub fn cost(mut self, cost: Arc<dyn CostModel>) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    /// Convenience: wrap a concrete cost model.
+    pub fn cost_model(self, cost: impl CostModel + 'static) -> Self {
+        self.cost(Arc::new(cost))
+    }
+
+    /// Block-count tuning constants (the paper's F and G).
+    pub fn tuning(mut self, tuning: TuningParams) -> Self {
+        self.tuning = tuning;
+        self
+    }
+
+    /// Execution backend (lockstep simulator or threaded runtime).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn build(self) -> Communicator {
+        let cache = self.cache.unwrap_or_default();
+        let sk = cache.skips(self.p);
+        Communicator {
+            p: self.p,
+            sk,
+            cache,
+            cost: self.cost.unwrap_or_else(|| Arc::new(LinearCost::hpc_default())),
+            tuning: self.tuning,
+            backend: self.backend,
+            tables: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+/// A persistent, MPI-communicator-style handle over `p` simulated ranks.
+///
+/// Built once per `p` (cheap: the skip table is O(log p)); every
+/// collective call reuses the owned [`Skips`] and the shared
+/// [`ScheduleCache`], so repeated traffic — including calls with varying
+/// roots, since schedules are root-relative — amortises all schedule
+/// computation. See the [`crate::comm`] module docs for the full tour.
+pub struct Communicator {
+    p: usize,
+    sk: Arc<Skips>,
+    cache: Arc<ScheduleCache>,
+    cost: Arc<dyn CostModel>,
+    tuning: TuningParams,
+    backend: BackendKind,
+    /// Memoized Algorithm-7 schedule tables, keyed by block count `n`
+    /// — the all-collectives' analogue of the per-rank schedule cache
+    /// (building a table is O(p log p); repeated traffic shares it).
+    tables: Mutex<HashMap<usize, Arc<ScheduleTable>>>,
+}
+
+impl Communicator {
+    /// A communicator with all defaults (fresh cache, HPC-default linear
+    /// cost model, lockstep backend). Prefer [`CommBuilder`] for shared
+    /// caches and custom cost models.
+    pub fn new(p: usize) -> Self {
+        CommBuilder::new(p).build()
+    }
+
+    pub fn builder(p: usize) -> CommBuilder {
+        CommBuilder::new(p)
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// `q = ceil(log2 p)`, the rounds per phase.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.sk.q()
+    }
+
+    pub fn skips(&self) -> &Arc<Skips> {
+        &self.sk
+    }
+
+    pub fn cache(&self) -> &Arc<ScheduleCache> {
+        &self.cache
+    }
+
+    pub fn cost(&self) -> &Arc<dyn CostModel> {
+        &self.cost
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    pub fn tuning(&self) -> &TuningParams {
+        &self.tuning
+    }
+
+    /// The block count a request resolves to: the override if given, else
+    /// the paper's §3 rule for the collective kind.
+    pub fn blocks_for(&self, kind: Kind, m: usize, blocks: Option<usize>) -> usize {
+        super::request::resolve_blocks(kind, self.p, m, &self.tuning, blocks)
+    }
+
+    /// Schedule source backed by this communicator's cache.
+    fn schedules(&self) -> ScheduleSource<'_> {
+        ScheduleSource::Cached { cache: &self.cache, sk: &self.sk }
+    }
+
+    /// Cached all-relative-ranks schedule table for `n` blocks (the
+    /// Algorithm 7 machinery): built once per block count from the
+    /// schedule cache, then shared by every later call.
+    fn table(&self, n: usize) -> Arc<ScheduleTable> {
+        let mut tables = self.tables.lock().unwrap();
+        tables
+            .entry(n)
+            .or_insert_with(|| ScheduleTable::build_from(&self.schedules(), n))
+            .clone()
+    }
+
+    fn run<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        self.backend.execute::<T, P>(procs, elem_bytes, cost)
+    }
+
+    // ---------------------------------------------------------------
+    // Broadcast
+    // ---------------------------------------------------------------
+
+    /// `MPI_Bcast`: `req.data` at `req.root` reaches every rank.
+    /// `buffers[r]` is rank `r`'s final buffer.
+    pub fn bcast<T: Element>(
+        &self,
+        req: BcastReq<'_, T>,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let cost = self.cost.clone();
+        self.bcast_with(req, cost.as_ref())
+    }
+
+    pub(crate) fn bcast_with<T: Element>(
+        &self,
+        req: BcastReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let p = self.p;
+        if req.root >= p {
+            return Err(CommError::BadRequest(format!(
+                "bcast root {} out of range for p = {p}",
+                req.root
+            )));
+        }
+        let m = req.data.len();
+        let algo = req.algo.resolve(Kind::Bcast, m, req.elem_bytes, req.blocks);
+        let (stats, buffers) = match algo {
+            Algo::Circulant => {
+                let n = self.blocks_for(Kind::Bcast, m, req.blocks);
+                let geom = BlockGeometry::new(m, n);
+                let procs = build_bcast_procs(&self.schedules(), req.root, geom, req.data);
+                let (stats, procs) = self.run::<T, BcastProc<T>>(procs, req.elem_bytes, cost)?;
+                if let Some(pr) = procs.iter().find(|pr| !pr.complete()) {
+                    return Err(CommError::Incomplete { kind: Kind::Bcast, rank: pr.rank });
+                }
+                let bufs: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                (stats, bufs)
+            }
+            Algo::Binomial => {
+                let procs = build_procs(p, |r| {
+                    let data = if r == req.root { Some(req.data) } else { None };
+                    BinomialBcastProc::new(p, r, req.root, data)
+                });
+                let (stats, procs) =
+                    self.run::<T, BinomialBcastProc<T>>(procs, req.elem_bytes, cost)?;
+                let bufs: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                (stats, bufs)
+            }
+            Algo::VanDeGeijn => {
+                let procs = build_procs(p, |r| {
+                    let data = if r == req.root { Some(req.data) } else { None };
+                    VdgBcastProc::new(p, r, req.root, m, data)
+                });
+                let (stats, procs) =
+                    self.run::<T, VdgBcastProc<T>>(procs, req.elem_bytes, cost)?;
+                let bufs: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                (stats, bufs)
+            }
+            algo => return Err(CommError::Unsupported { kind: Kind::Bcast, algo }),
+        };
+        // Uniform per-rank completion check across every algorithm (the
+        // corrected `all_received` notion): each rank holds the full
+        // m-element buffer.
+        let complete = buffers.len() == p && buffers.iter().all(|b| b.len() == m);
+        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete })
+    }
+
+    // ---------------------------------------------------------------
+    // Reduce
+    // ---------------------------------------------------------------
+
+    /// `MPI_Reduce`: the elementwise ⊕ over every rank's contribution
+    /// lands at `req.root`. `buffers` is the root's reduced vector.
+    pub fn reduce<T: Element>(&self, req: ReduceReq<'_, T>) -> Result<Outcome<Vec<T>>, CommError> {
+        let cost = self.cost.clone();
+        self.reduce_with(req, cost.as_ref())
+    }
+
+    pub(crate) fn reduce_with<T: Element>(
+        &self,
+        req: ReduceReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<Outcome<Vec<T>>, CommError> {
+        let p = self.p;
+        if req.inputs.len() != p {
+            return Err(CommError::BadRequest(format!(
+                "reduce needs {p} contributions, got {}",
+                req.inputs.len()
+            )));
+        }
+        if req.root >= p {
+            return Err(CommError::BadRequest(format!(
+                "reduce root {} out of range for p = {p}",
+                req.root
+            )));
+        }
+        let m = req.inputs[0].len();
+        if req.inputs.iter().any(|v| v.len() != m) {
+            return Err(CommError::BadRequest(
+                "reduce requires equal-length contributions".to_string(),
+            ));
+        }
+        let algo = req.algo.resolve(Kind::Reduce, m, req.elem_bytes, req.blocks);
+        let (stats, buffer) = match algo {
+            Algo::Circulant => {
+                let n = self.blocks_for(Kind::Reduce, m, req.blocks);
+                let geom = BlockGeometry::new(m, n);
+                let procs = build_reduce_procs(
+                    &self.schedules(),
+                    req.root,
+                    geom,
+                    req.inputs,
+                    req.op.clone(),
+                );
+                let (stats, procs) = self.run::<T, ReduceProc<T>>(procs, req.elem_bytes, cost)?;
+                let buffer = procs.into_iter().nth(req.root).unwrap().into_buffer();
+                (stats, buffer)
+            }
+            Algo::Binomial => {
+                let procs = build_procs(p, |r| {
+                    BinomialReduceProc::new(p, r, req.root, &req.inputs[r], req.op.clone())
+                });
+                let (stats, procs) =
+                    self.run::<T, BinomialReduceProc<T>>(procs, req.elem_bytes, cost)?;
+                let buffer = procs.into_iter().nth(req.root).unwrap().into_buffer();
+                (stats, buffer)
+            }
+            algo => return Err(CommError::Unsupported { kind: Kind::Reduce, algo }),
+        };
+        let complete = buffer.len() == m;
+        Ok(Outcome { rounds: stats.rounds, stats, buffers: buffer, algo, complete })
+    }
+
+    // ---------------------------------------------------------------
+    // All-broadcast
+    // ---------------------------------------------------------------
+
+    /// `MPI_Allgatherv`: every rank ends with every rank's contribution.
+    /// `buffers[r][j]` is root `j`'s data as received by rank `r`.
+    pub fn allgatherv<T: Element>(
+        &self,
+        req: AllgathervReq<'_, T>,
+    ) -> Result<Outcome<Vec<Vec<Vec<T>>>>, CommError> {
+        let cost = self.cost.clone();
+        self.allgatherv_with(req, cost.as_ref())
+    }
+
+    /// `MPI_Allgather`: [`Self::allgatherv`] with equal counts enforced.
+    pub fn allgather<T: Element>(
+        &self,
+        req: AllgathervReq<'_, T>,
+    ) -> Result<Outcome<Vec<Vec<Vec<T>>>>, CommError> {
+        let len = req.inputs.first().map(|v| v.len()).unwrap_or(0);
+        if req.inputs.iter().any(|v| v.len() != len) {
+            return Err(CommError::BadRequest(
+                "allgather requires equal counts; use allgatherv for irregular inputs"
+                    .to_string(),
+            ));
+        }
+        self.allgatherv(req)
+    }
+
+    pub(crate) fn allgatherv_with<T: Element>(
+        &self,
+        req: AllgathervReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<Outcome<Vec<Vec<Vec<T>>>>, CommError> {
+        let p = self.p;
+        if req.inputs.len() != p {
+            return Err(CommError::BadRequest(format!(
+                "allgatherv needs {p} contributions, got {}",
+                req.inputs.len()
+            )));
+        }
+        let total: usize = req.inputs.iter().map(|v| v.len()).sum();
+        let counts = Arc::new(req.inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
+        let algo = req.algo.resolve(Kind::Allgatherv, total, req.elem_bytes, req.blocks);
+        let (stats, buffers) = match algo {
+            Algo::Circulant => {
+                let n = self.blocks_for(Kind::Allgatherv, total, req.blocks);
+                let table = self.table(n);
+                let procs = build_allgatherv_procs(table, counts, req.inputs);
+                let (stats, procs) =
+                    self.run::<T, AllgathervProc<T>>(procs, req.elem_bytes, cost)?;
+                if let Some(pr) = procs.iter().find(|pr| !pr.complete()) {
+                    return Err(CommError::Incomplete { kind: Kind::Allgatherv, rank: pr.rank });
+                }
+                let bufs: Vec<Vec<Vec<T>>> =
+                    procs.into_iter().map(|pr| pr.into_buffers()).collect();
+                (stats, bufs)
+            }
+            Algo::Ring => {
+                let procs = build_procs(p, |r| {
+                    RingAllgathervProc::new(p, r, counts.clone(), &req.inputs[r])
+                });
+                let (stats, procs) =
+                    self.run::<T, RingAllgathervProc<T>>(procs, req.elem_bytes, cost)?;
+                let bufs: Vec<Vec<Vec<T>>> =
+                    procs.into_iter().map(|pr| pr.into_buffers()).collect();
+                (stats, bufs)
+            }
+            algo => return Err(CommError::Unsupported { kind: Kind::Allgatherv, algo }),
+        };
+        // Uniform completion check: every rank holds every root's full
+        // contribution.
+        let complete = buffers.len() == p
+            && buffers.iter().all(|rows| {
+                rows.len() == p
+                    && rows.iter().zip(req.inputs).all(|(row, inp)| row.len() == inp.len())
+            });
+        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete })
+    }
+
+    // ---------------------------------------------------------------
+    // Reduce-scatter
+    // ---------------------------------------------------------------
+
+    /// `MPI_Reduce_scatter`: rank `j` ends with the fully reduced chunk
+    /// `j` (sized `req.counts[j]`). `buffers[r]` is rank `r`'s chunk.
+    pub fn reduce_scatter<T: Element>(
+        &self,
+        req: ReduceScatterReq<'_, T>,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let cost = self.cost.clone();
+        self.reduce_scatter_with(req, cost.as_ref())
+    }
+
+    pub(crate) fn reduce_scatter_with<T: Element>(
+        &self,
+        req: ReduceScatterReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let p = self.p;
+        if req.inputs.len() != p || req.counts.len() != p {
+            return Err(CommError::BadRequest(format!(
+                "reduce_scatter needs {p} contributions and {p} counts, got {} and {}",
+                req.inputs.len(),
+                req.counts.len()
+            )));
+        }
+        let total: usize = req.counts.iter().sum();
+        if req.inputs.iter().any(|v| v.len() != total) {
+            return Err(CommError::BadRequest(format!(
+                "reduce_scatter contributions must have sum(counts) = {total} elements"
+            )));
+        }
+        let counts = Arc::new(req.counts.to_vec());
+        let algo = req.algo.resolve(Kind::ReduceScatter, total, req.elem_bytes, req.blocks);
+        let (stats, chunks) = match algo {
+            Algo::Circulant => {
+                let n = self.blocks_for(Kind::ReduceScatter, total, req.blocks);
+                let table = self.table(n);
+                let procs =
+                    build_reduce_scatter_procs(table, counts, req.inputs, req.op.clone());
+                let (stats, procs) =
+                    self.run::<T, ReduceScatterProc<T>>(procs, req.elem_bytes, cost)?;
+                let chunks: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                (stats, chunks)
+            }
+            Algo::Ring => {
+                let procs = build_procs(p, |r| {
+                    RingReduceScatterProc::new(p, r, counts.clone(), &req.inputs[r], req.op.clone())
+                });
+                let (stats, procs) =
+                    self.run::<T, RingReduceScatterProc<T>>(procs, req.elem_bytes, cost)?;
+                let chunks: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                (stats, chunks)
+            }
+            Algo::RecursiveHalving => {
+                let chunk = req.counts[0];
+                if req.counts.iter().any(|&c| c != chunk) {
+                    return Err(CommError::BadRequest(
+                        "recursive halving requires equal chunks (reduce_scatter_block)"
+                            .to_string(),
+                    ));
+                }
+                let procs = build_procs(p, |r| {
+                    RhalvingProc::new(p, r, chunk, &req.inputs[r], req.op.clone())
+                });
+                let (stats, procs) =
+                    self.run::<T, RhalvingProc<T>>(procs, req.elem_bytes, cost)?;
+                let chunks: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                (stats, chunks)
+            }
+            algo => return Err(CommError::Unsupported { kind: Kind::ReduceScatter, algo }),
+        };
+        // Uniform completion check: rank j holds its counts[j]-element chunk.
+        let complete = chunks.len() == p
+            && chunks.iter().zip(req.counts).all(|(chunk, &c)| chunk.len() == c);
+        Ok(Outcome { rounds: stats.rounds, stats, buffers: chunks, algo, complete })
+    }
+
+    /// `MPI_Reduce_scatter_block`: equal chunk per rank.
+    pub fn reduce_scatter_block<T: Element>(
+        &self,
+        req: ReduceScatterBlockReq<'_, T>,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let cost = self.cost.clone();
+        self.reduce_scatter_block_with(req, cost.as_ref())
+    }
+
+    pub(crate) fn reduce_scatter_block_with<T: Element>(
+        &self,
+        req: ReduceScatterBlockReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let counts = vec![req.block_elems; self.p];
+        self.reduce_scatter_with(
+            ReduceScatterReq {
+                inputs: req.inputs,
+                counts: &counts,
+                op: req.op,
+                blocks: req.blocks,
+                algo: req.algo,
+                elem_bytes: req.elem_bytes,
+            },
+            cost,
+        )
+    }
+
+    // ---------------------------------------------------------------
+    // All-reduce
+    // ---------------------------------------------------------------
+
+    /// `MPI_Allreduce` as reduce-scatter + all-gather on the same
+    /// circulant pattern (or both ring phases for [`Algo::Ring`]).
+    /// `buffers[r]` is rank `r`'s fully reduced vector; `stats` and
+    /// `rounds` aggregate both phases.
+    pub fn allreduce<T: Element>(
+        &self,
+        req: AllreduceReq<'_, T>,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let cost = self.cost.clone();
+        self.allreduce_with(req, cost.as_ref())
+    }
+
+    pub(crate) fn allreduce_with<T: Element>(
+        &self,
+        req: AllreduceReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<Outcome<Vec<Vec<T>>>, CommError> {
+        let m = req.inputs.first().map(|v| v.len()).unwrap_or(0);
+        let (rs_stats, ag_stats, buffers, algo) = self.allreduce_parts_with(req, cost)?;
+        let stats = combine_stats(&rs_stats, &ag_stats);
+        // Uniform completion check: every rank holds the full reduced vector.
+        let complete =
+            buffers.len() == self.p && buffers.iter().all(|b| b.len() == m);
+        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete })
+    }
+
+    /// The two phases' stats separately (kept for the legacy
+    /// `allreduce_sim` result shape).
+    pub(crate) fn allreduce_parts_with<T: Element>(
+        &self,
+        req: AllreduceReq<'_, T>,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, RunStats, Vec<Vec<T>>, Algo), CommError> {
+        let p = self.p;
+        if req.inputs.len() != p {
+            return Err(CommError::BadRequest(format!(
+                "allreduce needs {p} contributions, got {}",
+                req.inputs.len()
+            )));
+        }
+        let m = req.inputs[0].len();
+        if req.inputs.iter().any(|v| v.len() != m) {
+            return Err(CommError::BadRequest(
+                "allreduce requires equal-length contributions".to_string(),
+            ));
+        }
+        // Chunk m over p ranks as equally as possible.
+        let base = m / p;
+        let rem = m % p;
+        let counts: Vec<usize> = (0..p).map(|j| base + usize::from(j < rem)).collect();
+        let counts = Arc::new(counts);
+        let algo = req.algo.resolve(Kind::Allreduce, m, req.elem_bytes, req.blocks);
+        match algo {
+            Algo::Circulant => {
+                let n = self.blocks_for(Kind::Allreduce, m, req.blocks);
+                let table = self.table(n);
+
+                // Phase 1: reduce-scatter (reversed all-broadcast).
+                let rs_procs = build_reduce_scatter_procs(
+                    table.clone(),
+                    counts.clone(),
+                    req.inputs,
+                    req.op.clone(),
+                );
+                let (rs_stats, rs_procs) =
+                    self.run::<T, ReduceScatterProc<T>>(rs_procs, req.elem_bytes, cost)?;
+                let chunks: Vec<Vec<T>> =
+                    rs_procs.into_iter().map(|pr| pr.into_chunk()).collect();
+
+                // Phase 2: all-gather of the reduced chunks.
+                let ag_procs = build_allgatherv_procs(table, counts, &chunks);
+                let (ag_stats, ag_procs) =
+                    self.run::<T, AllgathervProc<T>>(ag_procs, req.elem_bytes, cost)?;
+                if let Some(pr) = ag_procs.iter().find(|pr| !pr.complete()) {
+                    return Err(CommError::Incomplete { kind: Kind::Allreduce, rank: pr.rank });
+                }
+                let buffers =
+                    concat_rows(ag_procs.into_iter().map(|pr| pr.into_buffers()), m);
+                Ok((rs_stats, ag_stats, buffers, algo))
+            }
+            Algo::Ring => {
+                let rs_procs = build_procs(p, |r| {
+                    RingReduceScatterProc::new(p, r, counts.clone(), &req.inputs[r], req.op.clone())
+                });
+                let (rs_stats, rs_procs) =
+                    self.run::<T, RingReduceScatterProc<T>>(rs_procs, req.elem_bytes, cost)?;
+                let chunks: Vec<Vec<T>> =
+                    rs_procs.into_iter().map(|pr| pr.into_chunk()).collect();
+
+                let ag_procs = build_procs(p, |r| {
+                    RingAllgathervProc::new(p, r, counts.clone(), &chunks[r])
+                });
+                let (ag_stats, ag_procs) =
+                    self.run::<T, RingAllgathervProc<T>>(ag_procs, req.elem_bytes, cost)?;
+                let buffers =
+                    concat_rows(ag_procs.into_iter().map(|pr| pr.into_buffers()), m);
+                Ok((rs_stats, ag_stats, buffers, algo))
+            }
+            algo => Err(CommError::Unsupported { kind: Kind::Allreduce, algo }),
+        }
+    }
+}
+
+/// Concatenate each rank's per-root rows into one flat `m`-element
+/// vector (the all-gather → all-reduce result assembly, shared by the
+/// circulant and ring paths).
+fn concat_rows<T: Element>(
+    rows_per_rank: impl Iterator<Item = Vec<Vec<T>>>,
+    m: usize,
+) -> Vec<Vec<T>> {
+    rows_per_rank
+        .map(|rows| {
+            let mut out = Vec::with_capacity(m);
+            for row in rows {
+                out.extend_from_slice(&row);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Aggregate two phases' statistics: counts and times add;
+/// `max_rank_bytes` adds too (an upper bound on the true per-rank
+/// maximum over both phases, exact when the same rank is the bottleneck
+/// in both — which the symmetric circulant phases make typical).
+fn combine_stats(a: &RunStats, b: &RunStats) -> RunStats {
+    RunStats {
+        rounds: a.rounds + b.rounds,
+        active_rounds: a.active_rounds + b.active_rounds,
+        messages: a.messages + b.messages,
+        bytes: a.bytes + b.bytes,
+        max_rank_bytes: a.max_rank_bytes + b.max_rank_bytes,
+        time: a.time + b.time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::sim::cost::UnitCost;
+
+    fn comm(p: usize) -> Communicator {
+        CommBuilder::new(p).cost_model(UnitCost).build()
+    }
+
+    #[test]
+    fn bcast_all_algos_deliver() {
+        let data: Vec<i32> = (0..500).collect();
+        for p in [1usize, 2, 9, 17] {
+            let c = comm(p);
+            for algo in [Algo::Circulant, Algo::Binomial, Algo::VanDeGeijn] {
+                let out = c
+                    .bcast(BcastReq::new(0, &data).algo(algo).blocks(4))
+                    .unwrap();
+                assert_eq!(out.algo, algo);
+                assert!(out.all_received());
+                for (r, b) in out.buffers.iter().enumerate() {
+                    assert_eq!(b, &data, "p={p} algo={algo:?} rank={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_round_optimal_via_comm() {
+        let c = comm(17);
+        let data: Vec<i64> = (0..340).collect();
+        let out = c.bcast(BcastReq::new(3, &data).algo(Algo::Circulant).blocks(7)).unwrap();
+        assert_eq!(out.rounds, 7 - 1 + 5);
+        assert_eq!(out.rounds, out.stats.rounds);
+    }
+
+    #[test]
+    fn reduce_circulant_and_binomial() {
+        let p = 9usize;
+        let m = 60usize;
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..m).map(|i| (r * 10 + i) as i64).collect()).collect();
+        let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        let c = comm(p);
+        for algo in [Algo::Circulant, Algo::Binomial] {
+            let out = c
+                .reduce(ReduceReq::new(4, &inputs, Arc::new(SumOp)).algo(algo).blocks(3))
+                .unwrap();
+            assert_eq!(out.buffers, expect, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn allgather_rejects_irregular() {
+        let c = comm(3);
+        let inputs = vec![vec![1i32, 2], vec![3], vec![4, 5]];
+        assert!(matches!(
+            c.allgather(AllgathervReq::new(&inputs)),
+            Err(CommError::BadRequest(_))
+        ));
+        // allgatherv accepts the same inputs.
+        let out = c.allgatherv(AllgathervReq::new(&inputs).blocks(2)).unwrap();
+        for r in 0..3 {
+            for j in 0..3 {
+                assert_eq!(out.buffers[r][j], inputs[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_block_equals_counts_path() {
+        let p = 8usize;
+        let chunk = 5usize;
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..p * chunk).map(|i| ((r + 2) * (i + 1)) as i64).collect())
+            .collect();
+        let sums: Vec<i64> =
+            (0..p * chunk).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        let c = comm(p);
+        for algo in [Algo::Circulant, Algo::Ring, Algo::RecursiveHalving] {
+            let out = c
+                .reduce_scatter_block(
+                    ReduceScatterBlockReq::new(&inputs, chunk, Arc::new(SumOp))
+                        .algo(algo)
+                        .blocks(2),
+                )
+                .unwrap();
+            for r in 0..p {
+                assert_eq!(
+                    out.buffers[r],
+                    sums[r * chunk..(r + 1) * chunk].to_vec(),
+                    "{algo:?} rank {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_circulant_and_ring() {
+        let p = 7usize;
+        let m = 61usize;
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..m).map(|i| ((r + 1) * (i + 1)) as i64 % 503).collect())
+            .collect();
+        let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        let c = comm(p);
+        for algo in [Algo::Circulant, Algo::Ring] {
+            let out = c
+                .allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(algo).blocks(2))
+                .unwrap();
+            for r in 0..p {
+                assert_eq!(out.buffers[r], expect, "{algo:?} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_combinations_error() {
+        let c = comm(5);
+        let data = vec![1i32; 10];
+        let inputs: Vec<Vec<i64>> = (0..5).map(|_| vec![1i64; 10]).collect();
+        assert!(matches!(
+            c.bcast(BcastReq::new(0, &data).algo(Algo::Ring)),
+            Err(CommError::Unsupported { kind: Kind::Bcast, algo: Algo::Ring })
+        ));
+        assert!(matches!(
+            c.reduce(ReduceReq::new(0, &inputs, Arc::new(SumOp)).algo(Algo::VanDeGeijn)),
+            Err(CommError::Unsupported { .. })
+        ));
+        assert!(matches!(
+            c.allgatherv(AllgathervReq::new(&inputs).algo(Algo::Binomial)),
+            Err(CommError::Unsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let c = comm(4);
+        let data = vec![0i32; 4];
+        assert!(matches!(
+            c.bcast(BcastReq::new(4, &data)),
+            Err(CommError::BadRequest(_))
+        ));
+        let short: Vec<Vec<i64>> = vec![vec![1]; 3]; // 3 != p
+        assert!(matches!(
+            c.reduce(ReduceReq::new(0, &short, Arc::new(SumOp))),
+            Err(CommError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn auto_resolves_by_size() {
+        let c = comm(9);
+        let small: Vec<i32> = (0..16).collect();
+        let out = c.bcast(BcastReq::new(0, &small)).unwrap();
+        assert_eq!(out.algo, Algo::Binomial);
+        let large: Vec<i32> = (0..100_000).collect();
+        let out = c.bcast(BcastReq::new(0, &large)).unwrap();
+        assert_eq!(out.algo, Algo::Circulant);
+    }
+
+    #[test]
+    fn threaded_backend_matches_lockstep() {
+        let p = 11usize;
+        let data: Vec<i64> = (0..121).map(|i| i * 3 % 97).collect();
+        let lockstep = comm(p)
+            .bcast(BcastReq::new(2, &data).algo(Algo::Circulant).blocks(5))
+            .unwrap();
+        let threaded = CommBuilder::new(p)
+            .cost_model(UnitCost)
+            .backend(BackendKind::Threaded)
+            .build()
+            .bcast(BcastReq::new(2, &data).algo(Algo::Circulant).blocks(5))
+            .unwrap();
+        assert_eq!(lockstep.buffers, threaded.buffers);
+        assert_eq!(lockstep.stats.messages, threaded.stats.messages);
+        assert_eq!(lockstep.stats.bytes, threaded.stats.bytes);
+        assert_eq!(lockstep.stats.rounds, threaded.stats.rounds);
+    }
+}

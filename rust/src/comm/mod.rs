@@ -1,0 +1,54 @@
+//! The unified `Communicator` API — one typed, schedule-caching entry
+//! point for all of the paper's collectives.
+//!
+//! The paper's central observation (Observation 1) is that *one* schedule
+//! family — the O(log p) circulant-graph send/receive schedules — serves
+//! broadcast, all-broadcast, reduction and all-reduction alike. This
+//! module gives that observation an API: a [`Communicator`] is a
+//! persistent, MPI-communicator-style handle built once per `p` (via
+//! [`CommBuilder`]) that owns
+//!
+//! * the circulant skip table ([`crate::schedule::Skips`], shared `Arc`),
+//! * a shared [`crate::schedule::ScheduleCache`] so repeated calls — and
+//!   calls with *different roots*, since schedules are root-relative —
+//!   reuse cached schedules instead of recomputing them,
+//! * a pluggable execution backend ([`ExecBackend`]: the lockstep
+//!   round-based [`crate::sim::Network`] simulator, or the
+//!   [`crate::sim::threads`] runtime where every rank is an OS thread),
+//! * a default [`crate::sim::CostModel`] and [`TuningParams`] for the
+//!   paper's block-count rules.
+//!
+//! Every collective takes a typed request ([`BcastReq`], [`ReduceReq`],
+//! [`AllgathervReq`], [`ReduceScatterReq`], [`ReduceScatterBlockReq`],
+//! [`AllreduceReq`]) carrying the root, the data, an optional block-count
+//! override and an [`Algo`] selection (with an [`Algo::Auto`] variant that
+//! reuses the `tuning::*` block-count models), and every collective
+//! returns the same uniform [`Outcome`] — run statistics, result buffers,
+//! the resolved algorithm and the round count.
+//!
+//! ```no_run
+//! use circulant_bcast::comm::{BcastReq, Communicator};
+//!
+//! let comm = Communicator::new(17);            // once per p
+//! let data: Vec<i64> = (0..1000).collect();
+//! let out = comm.bcast(BcastReq::new(0, &data)).unwrap();   // many calls
+//! assert!(out.all_received());
+//! assert_eq!(out.buffers[5], data);
+//! ```
+//!
+//! The legacy `*_sim` free functions in [`crate::collectives`] are
+//! deprecated thin wrappers over a throwaway `Communicator`; new code
+//! should build one handle and keep it.
+
+pub mod backend;
+pub mod communicator;
+pub mod outcome;
+pub mod request;
+
+pub use backend::{build_procs, BackendKind, ExecBackend, LockstepBackend, ThreadedBackend};
+pub use communicator::{CommBuilder, Communicator};
+pub use outcome::{CommError, Outcome};
+pub use request::{
+    resolve_blocks, Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq,
+    ReduceScatterBlockReq, ReduceScatterReq, TuningParams, SMALL_MSG_BYTES,
+};

@@ -1,0 +1,83 @@
+//! The uniform result type of every [`super::Communicator`] collective,
+//! and the unified error type.
+
+use crate::sim::network::{RunStats, SimError};
+
+use super::request::{Algo, Kind};
+
+/// What every collective returns: run statistics, the result buffers
+/// (shape depends on the collective — see each method's docs), the
+/// algorithm that actually ran (after [`Algo::Auto`] resolution) and the
+/// executed round count.
+#[derive(Debug, Clone)]
+pub struct Outcome<B> {
+    pub stats: RunStats,
+    pub buffers: B,
+    /// The resolved algorithm (never [`Algo::Auto`]).
+    pub algo: Algo,
+    /// Rounds executed (`stats.rounds`; for all-reduce the sum over both
+    /// phases).
+    pub rounds: usize,
+    /// True iff every rank finished with every block it was due — the
+    /// per-rank completion check (collectives whose state machines cannot
+    /// assemble an incomplete result return
+    /// [`CommError::Incomplete`] instead of a `false` flag).
+    pub complete: bool,
+}
+
+impl<B> Outcome<B> {
+    /// Per-rank completion of the whole collective. Unlike the legacy
+    /// `BcastResult::all_received` (which only checked that *some* buffers
+    /// existed), this reflects the actual per-rank block bookkeeping.
+    pub fn all_received(&self) -> bool {
+        self.complete
+    }
+
+    /// Simulated completion time under the run's cost model, seconds.
+    pub fn time(&self) -> f64 {
+        self.stats.time
+    }
+}
+
+/// Unified error type of the `comm` layer.
+#[derive(Debug)]
+pub enum CommError {
+    /// The machine model was violated mid-run — a broken schedule.
+    Sim(SimError),
+    /// The (kind, algorithm) combination is not implemented.
+    Unsupported { kind: Kind, algo: Algo },
+    /// The request is malformed (wrong lengths, out-of-range root, …).
+    BadRequest(String),
+    /// A rank ended the run missing blocks (per-rank completion check).
+    Incomplete { kind: Kind, rank: usize },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Sim(e) => write!(f, "machine-model violation: {e}"),
+            CommError::Unsupported { kind, algo } => {
+                write!(f, "unsupported combination: {kind:?} with {algo:?}")
+            }
+            CommError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            CommError::Incomplete { kind, rank } => {
+                write!(f, "{kind:?}: rank {rank} finished incomplete (missing blocks)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CommError::Sim(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SimError> for CommError {
+    fn from(e: SimError) -> Self {
+        CommError::Sim(e)
+    }
+}

@@ -1,0 +1,361 @@
+//! Typed request vocabulary of the [`super::Communicator`]: the
+//! collective kinds, the algorithm families (with automatic selection),
+//! the tuning constants, and one request struct per collective.
+//!
+//! String parsing for [`Kind`] and [`Algo`] exists only for the CLI edge
+//! (`cbcast run`/`serve`); library code always uses the enums directly.
+
+use std::sync::Arc;
+
+use crate::collectives::common::ReduceOp;
+
+/// The collective operations a [`super::Communicator`] serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Bcast,
+    Reduce,
+    Allgatherv,
+    ReduceScatter,
+    Allreduce,
+}
+
+impl Kind {
+    /// CLI-edge parser (the typed API never goes through strings).
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s {
+            "bcast" => Kind::Bcast,
+            "reduce" => Kind::Reduce,
+            "allgatherv" | "allgather" => Kind::Allgatherv,
+            "reduce-scatter" | "reduce_scatter" => Kind::ReduceScatter,
+            "allreduce" => Kind::Allreduce,
+            _ => return None,
+        })
+    }
+}
+
+/// Payloads at or below this many bytes resolve [`Algo::Auto`] to the
+/// binomial tree for the rooted collectives (the classical tuned-module
+/// small-message regime; above it the circulant pipeline wins).
+pub const SMALL_MSG_BYTES: usize = 2048;
+
+/// Algorithm family to run a collective with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Pick automatically: the circulant pipeline with the paper's
+    /// `tuning::*` block-count rule, except for small rooted payloads
+    /// (≤ [`SMALL_MSG_BYTES`]) where the binomial tree is selected.
+    Auto,
+    /// The paper's circulant-schedule pipelined algorithms.
+    Circulant,
+    /// Binomial tree (bcast/reduce) — the native small-message algorithm.
+    Binomial,
+    /// van de Geijn scatter+allgather (bcast) — native large-message.
+    VanDeGeijn,
+    /// Ring (allgatherv / reduce-scatter / allreduce) — native
+    /// large-message.
+    Ring,
+    /// Recursive halving with power-of-two folding (reduce-scatter with
+    /// equal chunks) — the Observation 1.4 volume comparator.
+    RecursiveHalving,
+}
+
+impl Algo {
+    /// CLI-edge parser (the typed API never goes through strings).
+    pub fn parse(s: &str) -> Option<Algo> {
+        Some(match s {
+            "auto" => Algo::Auto,
+            "circulant" | "new" => Algo::Circulant,
+            "binomial" => Algo::Binomial,
+            "vdg" | "native-large" => Algo::VanDeGeijn,
+            "ring" => Algo::Ring,
+            "rhalving" | "recursive-halving" => Algo::RecursiveHalving,
+            _ => return None,
+        })
+    }
+
+    /// Resolve [`Algo::Auto`] for a `kind` with an `m`-element,
+    /// `elem_bytes`-per-element payload; every other variant is returned
+    /// unchanged. Never returns `Auto`.
+    ///
+    /// An explicit block-count override (`blocks`) is a request for the
+    /// pipeline, so it pins the circulant algorithm — small rooted
+    /// payloads fall back to the binomial tree only when the block count
+    /// is left automatic.
+    pub fn resolve(self, kind: Kind, m: usize, elem_bytes: usize, blocks: Option<usize>) -> Algo {
+        if self != Algo::Auto {
+            return self;
+        }
+        match kind {
+            Kind::Bcast | Kind::Reduce
+                if blocks.is_none() && m * elem_bytes <= SMALL_MSG_BYTES =>
+            {
+                Algo::Binomial
+            }
+            _ => Algo::Circulant,
+        }
+    }
+}
+
+/// Tuning constants (the paper's F and G from §3: block size
+/// `F·sqrt(m/q)` for bcast/reduce, `n = sqrt(m·q)/G` for the
+/// all-collectives).
+#[derive(Debug, Clone)]
+pub struct TuningParams {
+    pub f_const: f64,
+    pub g_const: f64,
+}
+
+impl Default for TuningParams {
+    fn default() -> Self {
+        // The paper's experimentally chosen constants (Fig. 1: F = 70,
+        // Fig. 2: G = 40).
+        TuningParams { f_const: 70.0, g_const: 40.0 }
+    }
+}
+
+/// The block count a request resolves to: the override if given, else the
+/// paper's §3 rule for the collective kind — the single definition shared
+/// by [`super::Communicator`] and the coordinator's planner.
+pub fn resolve_blocks(
+    kind: Kind,
+    p: usize,
+    m: usize,
+    tp: &TuningParams,
+    blocks: Option<usize>,
+) -> usize {
+    use crate::collectives::tuning;
+    blocks
+        .unwrap_or_else(|| match kind {
+            Kind::Bcast | Kind::Reduce => tuning::bcast_blocks_paper(m, p, tp.f_const),
+            Kind::Allgatherv | Kind::ReduceScatter | Kind::Allreduce => {
+                tuning::allgatherv_blocks_paper(m, p, tp.g_const)
+            }
+        })
+        .max(1)
+}
+
+/// Broadcast request: `data` at `root`, delivered to every rank.
+#[derive(Debug, Clone)]
+pub struct BcastReq<'a, T> {
+    pub root: usize,
+    pub data: &'a [T],
+    /// `None` = the paper's block-count rule.
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+}
+
+impl<'a, T> BcastReq<'a, T> {
+    pub fn new(root: usize, data: &'a [T]) -> Self {
+        BcastReq {
+            root,
+            data,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes: std::mem::size_of::<T>(),
+        }
+    }
+}
+
+/// Rooted reduction request: every rank contributes `inputs[r]` (equal
+/// lengths); the root ends with the elementwise ⊕ over all ranks.
+#[derive(Clone)]
+pub struct ReduceReq<'a, T> {
+    pub root: usize,
+    pub inputs: &'a [Vec<T>],
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+}
+
+impl<'a, T> ReduceReq<'a, T> {
+    pub fn new(root: usize, inputs: &'a [Vec<T>], op: Arc<dyn ReduceOp<T>>) -> Self {
+        ReduceReq {
+            root,
+            inputs,
+            op,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes: std::mem::size_of::<T>(),
+        }
+    }
+}
+
+/// All-broadcast request (`MPI_Allgatherv`): rank `r` contributes
+/// `inputs[r]` (arbitrary per-rank lengths); every rank ends with every
+/// contribution. For the regular `MPI_Allgather`, use
+/// [`super::Communicator::allgather`], which additionally validates equal
+/// counts.
+#[derive(Debug, Clone)]
+pub struct AllgathervReq<'a, T> {
+    pub inputs: &'a [Vec<T>],
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+}
+
+impl<'a, T> AllgathervReq<'a, T> {
+    pub fn new(inputs: &'a [Vec<T>]) -> Self {
+        AllgathervReq {
+            inputs,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes: std::mem::size_of::<T>(),
+        }
+    }
+}
+
+/// Irregular all-reduction request (`MPI_Reduce_scatter`): every rank
+/// contributes a full vector (the concatenation over destinations `j` of
+/// `counts[j]` elements); rank `j` ends with the fully reduced chunk `j`.
+#[derive(Clone)]
+pub struct ReduceScatterReq<'a, T> {
+    pub inputs: &'a [Vec<T>],
+    pub counts: &'a [usize],
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+}
+
+impl<'a, T> ReduceScatterReq<'a, T> {
+    pub fn new(inputs: &'a [Vec<T>], counts: &'a [usize], op: Arc<dyn ReduceOp<T>>) -> Self {
+        ReduceScatterReq {
+            inputs,
+            counts,
+            op,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes: std::mem::size_of::<T>(),
+        }
+    }
+}
+
+/// Regular all-reduction request (`MPI_Reduce_scatter_block`): equal
+/// chunk of `block_elems` elements per rank.
+#[derive(Clone)]
+pub struct ReduceScatterBlockReq<'a, T> {
+    pub inputs: &'a [Vec<T>],
+    pub block_elems: usize,
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+}
+
+impl<'a, T> ReduceScatterBlockReq<'a, T> {
+    pub fn new(inputs: &'a [Vec<T>], block_elems: usize, op: Arc<dyn ReduceOp<T>>) -> Self {
+        ReduceScatterBlockReq {
+            inputs,
+            block_elems,
+            op,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes: std::mem::size_of::<T>(),
+        }
+    }
+}
+
+/// The options every request carries: block-count override, algorithm
+/// selection, element width. One definition for all six request types
+/// (the same trick as `impl_sum!`/`impl_max!` in `collectives::common`).
+macro_rules! impl_request_options {
+    ($($ty:ident),* $(,)?) => {$(
+        impl<T> $ty<'_, T> {
+            /// Override the block count (`None` = the paper's §3 rule).
+            pub fn blocks(mut self, n: usize) -> Self {
+                self.blocks = Some(n);
+                self
+            }
+
+            /// Select the algorithm family (default [`Algo::Auto`]).
+            pub fn algo(mut self, algo: Algo) -> Self {
+                self.algo = algo;
+                self
+            }
+
+            /// Element width in bytes for cost accounting (default
+            /// `size_of::<T>()`).
+            pub fn elem_bytes(mut self, bytes: usize) -> Self {
+                self.elem_bytes = bytes;
+                self
+            }
+        }
+    )*};
+}
+
+impl_request_options!(
+    BcastReq,
+    ReduceReq,
+    AllgathervReq,
+    ReduceScatterReq,
+    ReduceScatterBlockReq,
+    AllreduceReq,
+);
+
+/// All-reduce request: every rank contributes `inputs[r]` (equal
+/// lengths); every rank ends with the elementwise ⊕ over all ranks.
+/// Composed as reduce-scatter + all-gather on the same circulant pattern.
+#[derive(Clone)]
+pub struct AllreduceReq<'a, T> {
+    pub inputs: &'a [Vec<T>],
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+}
+
+impl<'a, T> AllreduceReq<'a, T> {
+    pub fn new(inputs: &'a [Vec<T>], op: Arc<dyn ReduceOp<T>>) -> Self {
+        AllreduceReq {
+            inputs,
+            op,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes: std::mem::size_of::<T>(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_algo_parse() {
+        assert_eq!(Kind::parse("bcast"), Some(Kind::Bcast));
+        assert_eq!(Kind::parse("reduce-scatter"), Some(Kind::ReduceScatter));
+        assert_eq!(Algo::parse("new"), Some(Algo::Circulant));
+        assert_eq!(Algo::parse("auto"), Some(Algo::Auto));
+        assert_eq!(Algo::parse("rhalving"), Some(Algo::RecursiveHalving));
+        assert!(Kind::parse("nope").is_none());
+        assert!(Algo::parse("nope").is_none());
+    }
+
+    #[test]
+    fn auto_resolution() {
+        // Small rooted payloads go binomial, large go circulant.
+        assert_eq!(Algo::Auto.resolve(Kind::Bcast, 16, 4, None), Algo::Binomial);
+        assert_eq!(Algo::Auto.resolve(Kind::Reduce, 100, 4, None), Algo::Binomial);
+        assert_eq!(Algo::Auto.resolve(Kind::Bcast, 1 << 20, 4, None), Algo::Circulant);
+        // The all-collectives always resolve circulant.
+        assert_eq!(Algo::Auto.resolve(Kind::Allgatherv, 16, 4, None), Algo::Circulant);
+        assert_eq!(Algo::Auto.resolve(Kind::Allreduce, 16, 4, None), Algo::Circulant);
+        // Explicit selections pass through.
+        assert_eq!(Algo::Ring.resolve(Kind::Bcast, 16, 4, None), Algo::Ring);
+    }
+
+    #[test]
+    fn request_builders_default_to_auto() {
+        let data = vec![1i64; 8];
+        let req = BcastReq::new(0, &data);
+        assert_eq!(req.algo, Algo::Auto);
+        assert_eq!(req.blocks, None);
+        assert_eq!(req.elem_bytes, 8);
+        let req = req.blocks(3).algo(Algo::Circulant).elem_bytes(4);
+        assert_eq!(req.blocks, Some(3));
+        assert_eq!(req.algo, Algo::Circulant);
+        assert_eq!(req.elem_bytes, 4);
+    }
+}

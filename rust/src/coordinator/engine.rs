@@ -1,24 +1,28 @@
-//! The coordinator engine: executes planned collective requests over the
-//! simulated machine, with schedule caching, optional XLA-backed ⊕, data
-//! validation, and metrics — the service layer behind the `cbcast` CLI
-//! and the benchmark drivers.
+//! The coordinator engine: a thin service layer over
+//! [`crate::comm::Communicator`]. It plans a request, hands it to a
+//! communicator that shares the engine-wide [`ScheduleCache`], validates
+//! the payloads, and records metrics — the role of an MPI library's
+//! collective framework behind the `cbcast` CLI and the benchmark
+//! drivers. All algorithm execution lives in `comm`; the engine
+//! synthesises test data, checks results and observes.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collectives::baselines;
-use crate::collectives::{
-    allgatherv_sim, allreduce_sim, bcast_sim, reduce_scatter_sim, reduce_sim, ReduceOp, SumOp,
+use crate::collectives::{ReduceOp, SumOp};
+use crate::comm::{
+    AllgathervReq, AllreduceReq, BcastReq, CommBuilder, CommError, Communicator, Kind,
+    ReduceReq, ReduceScatterReq,
 };
 use crate::schedule::ScheduleCache;
 use crate::sim::cost::CostModel;
 use crate::sim::network::RunStats;
 
 use super::metrics::Metrics;
-use super::planner::{plan, Algo, Kind, Plan, Request, TuningParams};
+use super::planner::{plan, Plan, Request, TuningParams};
 
 #[cfg(test)]
-use super::planner::Dist;
+use super::planner::{Algo, Dist};
 
 /// What the engine reports per request.
 #[derive(Debug, Clone)]
@@ -57,9 +61,16 @@ impl Engine {
         }
     }
 
+    /// A communicator for `p` ranks sharing this engine's schedule cache
+    /// and tuning constants — what every request runs through (and what
+    /// callers wanting the typed API directly should use).
+    pub fn communicator(&self, p: usize) -> Communicator {
+        CommBuilder::new(p).cache(self.cache.clone()).tuning(self.tuning.clone()).build()
+    }
+
     /// Execute one request with element type i64 and SumOp (the generic
     /// driver used by the CLI; benches use the typed entry points below).
-    pub fn run(&self, req: &Request, cost: &dyn CostModel) -> anyhow::Result<Report> {
+    pub fn run(&self, req: &Request, cost: &dyn CostModel) -> Result<Report, CommError> {
         self.run_with_op(req, cost, Arc::new(SumOp))
     }
 
@@ -69,114 +80,73 @@ impl Engine {
         req: &Request,
         cost: &dyn CostModel,
         op: Arc<dyn ReduceOp<i64>>,
-    ) -> anyhow::Result<Report> {
+    ) -> Result<Report, CommError> {
         let t0 = Instant::now();
         let pl = plan(req, &self.tuning);
+        let comm = self.communicator(req.p);
         let p = req.p;
-        let (stats, valid) = match (req.kind, req.algo) {
-            (Kind::Bcast, Algo::Circulant) => {
+        let (stats, valid) = match req.kind {
+            Kind::Bcast => {
                 let data = test_pattern(req.m, 1);
-                let res = bcast_sim(p, req.root, &data, pl.n, req.elem_bytes, cost)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let ok = res.buffers.iter().all(|b| b == &data);
-                (res.stats, ok)
+                let creq = BcastReq::new(req.root, &data)
+                    .blocks(pl.n)
+                    .algo(pl.algo)
+                    .elem_bytes(req.elem_bytes);
+                let out = comm.bcast_with(creq, cost)?;
+                let ok = out.all_received() && out.buffers.iter().all(|b| b == &data);
+                (out.stats, ok)
             }
-            (Kind::Bcast, Algo::Binomial) => {
-                let data = test_pattern(req.m, 1);
-                let (stats, bufs) =
-                    baselines::binomial_bcast_sim(p, req.root, &data, req.elem_bytes, cost)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                (stats, bufs.iter().all(|b| b == &data))
-            }
-            (Kind::Bcast, Algo::VanDeGeijn) => {
-                let data = test_pattern(req.m, 1);
-                let (stats, bufs) =
-                    baselines::vdg_bcast_sim(p, req.root, &data, req.elem_bytes, cost)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                (stats, bufs.iter().all(|b| b == &data))
-            }
-            (Kind::Reduce, Algo::Circulant) => {
-                let inputs: Vec<Vec<i64>> = (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
+            Kind::Reduce => {
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
                 let expect = column_sums(&inputs);
-                let res = reduce_sim(&inputs, req.root, pl.n, op, req.elem_bytes, cost)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                (res.stats, res.buffer == expect)
+                let creq = ReduceReq::new(req.root, &inputs, op)
+                    .blocks(pl.n)
+                    .algo(pl.algo)
+                    .elem_bytes(req.elem_bytes);
+                let out = comm.reduce_with(creq, cost)?;
+                let ok = out.buffers == expect;
+                (out.stats, ok)
             }
-            (Kind::Reduce, Algo::Binomial) => {
-                let inputs: Vec<Vec<i64>> = (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
-                let expect = column_sums(&inputs);
-                let (stats, buf) =
-                    baselines::binomial_reduce_sim(&inputs, req.root, op, req.elem_bytes, cost)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                (stats, buf == expect)
-            }
-            (Kind::Allgatherv, Algo::Circulant) => {
+            Kind::Allgatherv => {
                 let counts = req.dist.counts(p, req.m);
                 let inputs = dist_inputs(&counts);
-                let res = allgatherv_sim(&inputs, pl.n, req.elem_bytes, cost)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let ok = res
+                let creq = AllgathervReq::new(&inputs)
+                    .blocks(pl.n)
+                    .algo(pl.algo)
+                    .elem_bytes(req.elem_bytes);
+                let out = comm.allgatherv_with(creq, cost)?;
+                let ok = out
                     .buffers
                     .iter()
                     .all(|rows| rows.iter().zip(&inputs).all(|(row, inp)| row == inp));
-                (res.stats, ok)
+                (out.stats, ok)
             }
-            (Kind::Allgatherv, Algo::Ring) => {
-                let counts = req.dist.counts(p, req.m);
-                let inputs = dist_inputs(&counts);
-                let (stats, bufs) =
-                    baselines::ring_allgatherv_sim(&inputs, req.elem_bytes, cost)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let ok = bufs
-                    .iter()
-                    .all(|rows| rows.iter().zip(&inputs).all(|(row, inp)| row == inp));
-                (stats, ok)
-            }
-            (Kind::ReduceScatter, Algo::Circulant) => {
+            Kind::ReduceScatter => {
                 let counts = req.dist.counts(p, req.m);
                 let total: usize = counts.iter().sum();
                 let inputs: Vec<Vec<i64>> =
                     (0..p).map(|r| test_pattern(total, r as i64)).collect();
                 let sums = column_sums(&inputs);
-                let res =
-                    reduce_scatter_sim(&inputs, &counts, pl.n, op, req.elem_bytes, cost)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let ok = check_chunks(&res.chunks, &sums, &counts);
-                (res.stats, ok)
+                let creq = ReduceScatterReq::new(&inputs, &counts, op)
+                    .blocks(pl.n)
+                    .algo(pl.algo)
+                    .elem_bytes(req.elem_bytes);
+                let out = comm.reduce_scatter_with(creq, cost)?;
+                let ok = check_chunks(&out.buffers, &sums, &counts);
+                (out.stats, ok)
             }
-            (Kind::ReduceScatter, Algo::Ring) => {
-                let counts = req.dist.counts(p, req.m);
-                let total: usize = counts.iter().sum();
+            Kind::Allreduce => {
                 let inputs: Vec<Vec<i64>> =
-                    (0..p).map(|r| test_pattern(total, r as i64)).collect();
-                let sums = column_sums(&inputs);
-                let (stats, chunks) = baselines::ring_reduce_scatter_sim(
-                    &inputs,
-                    &counts,
-                    op,
-                    req.elem_bytes,
-                    cost,
-                )
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let ok = check_chunks(&chunks, &sums, &counts);
-                (stats, ok)
-            }
-            (Kind::Allreduce, Algo::Circulant) => {
-                let inputs: Vec<Vec<i64>> = (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
+                    (0..p).map(|r| test_pattern(req.m, r as i64)).collect();
                 let expect = column_sums(&inputs);
-                let res = allreduce_sim(&inputs, pl.n, op, req.elem_bytes, cost)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let ok = res.buffers.iter().all(|b| b == &expect);
-                let mut stats = res.rs_stats.clone();
-                stats.rounds += res.ag_stats.rounds;
-                stats.active_rounds += res.ag_stats.active_rounds;
-                stats.messages += res.ag_stats.messages;
-                stats.bytes += res.ag_stats.bytes;
-                stats.time += res.ag_stats.time;
-                (stats, ok)
-            }
-            (kind, algo) => {
-                anyhow::bail!("unsupported combination: {kind:?} with {algo:?}")
+                let creq = AllreduceReq::new(&inputs, op)
+                    .blocks(pl.n)
+                    .algo(pl.algo)
+                    .elem_bytes(req.elem_bytes);
+                let out = comm.allreduce_with(creq, cost)?;
+                let ok = out.buffers.iter().all(|b| b == &expect);
+                (out.stats, ok)
             }
         };
         let wall = t0.elapsed().as_secs_f64();
@@ -221,7 +191,8 @@ mod tests {
     #[test]
     fn engine_runs_all_kinds_circulant() {
         let eng = Engine::new();
-        for kind in [Kind::Bcast, Kind::Reduce, Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce]
+        for kind in
+            [Kind::Bcast, Kind::Reduce, Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce]
         {
             let mut req = Request::new(kind, 17, 1000);
             req.blocks = Some(4);
@@ -240,6 +211,7 @@ mod tests {
             (Kind::Reduce, Algo::Binomial),
             (Kind::Allgatherv, Algo::Ring),
             (Kind::ReduceScatter, Algo::Ring),
+            (Kind::Allreduce, Algo::Ring),
         ];
         for (kind, algo) in combos {
             let mut req = Request::new(kind, 12, 600);
@@ -266,7 +238,28 @@ mod tests {
         let eng = Engine::new();
         let mut req = Request::new(Kind::Allgatherv, 9, 900);
         req.algo = Algo::Binomial;
-        assert!(eng.run(&req, &UnitCost).is_err());
+        assert!(matches!(
+            eng.run(&req, &UnitCost),
+            Err(CommError::Unsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn engine_shares_schedule_cache_across_requests() {
+        // The engine's communicators all share one cache: a second
+        // request at the same p — even at a different root — must add no
+        // new misses.
+        let eng = Engine::new();
+        let mut req = Request::new(Kind::Bcast, 17, 340);
+        req.blocks = Some(4);
+        eng.run(&req, &UnitCost).unwrap();
+        let (_, misses_after_first) = eng.cache.stats();
+        assert!(misses_after_first >= 17);
+        req.root = 11;
+        eng.run(&req, &UnitCost).unwrap();
+        let (hits, misses) = eng.cache.stats();
+        assert_eq!(misses, misses_after_first, "no recomputation on repeat traffic");
+        assert!(hits >= 17);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! The coordinator: the service layer that plans and executes collective
 //! requests (the role of an MPI library's collective framework) — request
-//! vocabulary and tuning decisions in [`planner`], execution with schedule
-//! caching and validation in [`engine`], observability in [`metrics`].
+//! vocabulary and tuning decisions in [`planner`], execution in [`engine`]
+//! as a thin layer over [`crate::comm::Communicator`] (which owns the
+//! schedule caching), observability in [`metrics`]. The typed
+//! [`Kind`]/[`Algo`] enums live in [`crate::comm`] and are re-exported
+//! here; string parsing survives only at the CLI edge.
 
 pub mod engine;
 pub mod metrics;

@@ -1,58 +1,16 @@
 //! Request vocabulary and planning: which algorithm, how many blocks,
 //! which cost model — the decisions an MPI library's tuned module makes,
 //! centralised and inspectable.
+//!
+//! The typed [`Kind`]/[`Algo`] enums (and the [`TuningParams`] block-count
+//! constants) live in [`crate::comm`] — the coordinator re-exports them
+//! and plans *over* them; it no longer owns a parallel copy of the
+//! algorithm-selection logic.
 
-use crate::collectives::tuning;
 use crate::schedule::ceil_log2;
 use crate::sim::cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
 
-/// The collective operations the engine serves.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Kind {
-    Bcast,
-    Reduce,
-    Allgatherv,
-    ReduceScatter,
-    Allreduce,
-}
-
-impl Kind {
-    pub fn parse(s: &str) -> Option<Kind> {
-        Some(match s {
-            "bcast" => Kind::Bcast,
-            "reduce" => Kind::Reduce,
-            "allgatherv" | "allgather" => Kind::Allgatherv,
-            "reduce-scatter" | "reduce_scatter" => Kind::ReduceScatter,
-            "allreduce" => Kind::Allreduce,
-            _ => return None,
-        })
-    }
-}
-
-/// Algorithm family to use.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algo {
-    /// The paper's circulant-schedule pipelined algorithms.
-    Circulant,
-    /// Binomial tree (bcast/reduce) — the native small-message algorithm.
-    Binomial,
-    /// van de Geijn scatter+allgather (bcast) — native large-message.
-    VanDeGeijn,
-    /// Ring (allgatherv / reduce-scatter) — native large-message.
-    Ring,
-}
-
-impl Algo {
-    pub fn parse(s: &str) -> Option<Algo> {
-        Some(match s {
-            "circulant" | "new" => Algo::Circulant,
-            "binomial" => Algo::Binomial,
-            "vdg" | "native-large" => Algo::VanDeGeijn,
-            "ring" => Algo::Ring,
-            _ => return None,
-        })
-    }
-}
+pub use crate::comm::{Algo, Kind, TuningParams};
 
 /// Input distribution for the irregular collectives (Fig. 2's problems).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,48 +96,45 @@ impl Request {
 pub struct Plan {
     pub n: usize,
     pub q: usize,
+    /// The algorithm after [`Algo::Auto`] resolution.
+    pub algo: Algo,
     pub predicted_rounds: usize,
 }
 
-/// Tuning constants (the paper's F and G, plus α/β for the model rule).
-#[derive(Debug, Clone)]
-pub struct TuningParams {
-    pub f_const: f64,
-    pub g_const: f64,
-}
-
-impl Default for TuningParams {
-    fn default() -> Self {
-        // The paper's experimentally chosen constants (Fig. 1: F = 70,
-        // Fig. 2: G = 40).
-        TuningParams { f_const: 70.0, g_const: 40.0 }
-    }
-}
-
-/// Choose the block count and predict the round count for a request.
+/// Choose the block count, resolve the algorithm and predict the round
+/// count for a request.
 pub fn plan(req: &Request, tp: &TuningParams) -> Plan {
     let q = ceil_log2(req.p.max(1));
-    let n = req.blocks.unwrap_or_else(|| match req.kind {
-        Kind::Bcast | Kind::Reduce => tuning::bcast_blocks_paper(req.m, req.p, tp.f_const),
-        Kind::Allgatherv | Kind::ReduceScatter | Kind::Allreduce => {
-            tuning::allgatherv_blocks_paper(req.m, req.p, tp.g_const)
-        }
-    });
-    let n = n.max(1);
+    // The same rule a Communicator applies — one definition, two callers.
+    let n = crate::comm::resolve_blocks(req.kind, req.p, req.m, tp, req.blocks);
+    let algo = req.algo.resolve(req.kind, req.m, req.elem_bytes, req.blocks);
     let rounds = if req.p <= 1 {
         0
     } else {
-        match req.algo {
+        match algo {
             Algo::Circulant => match req.kind {
                 Kind::Allreduce => 2 * (n - 1 + q),
                 _ => n - 1 + q,
             },
             Algo::Binomial => q,
             Algo::VanDeGeijn => q + req.p - 1,
-            Algo::Ring => req.p - 1,
+            Algo::Ring => match req.kind {
+                Kind::Allreduce => 2 * (req.p - 1),
+                _ => req.p - 1,
+            },
+            // Recursive halving: ⌊log2 p⌋ halving rounds, plus one fold
+            // and one unfold round for non-powers-of-two.
+            Algo::RecursiveHalving => {
+                if req.p.is_power_of_two() {
+                    q
+                } else {
+                    q + 1
+                }
+            }
+            Algo::Auto => unreachable!("resolve() never returns Auto"),
         }
     };
-    Plan { n, q, predicted_rounds: rounds }
+    Plan { n, q, algo, predicted_rounds: rounds }
 }
 
 /// Parse a cost-model spec: `unit`, `linear[:alpha:beta]`,
@@ -237,6 +192,7 @@ mod tests {
         req.blocks = Some(13);
         let pl = plan(&req, &TuningParams::default());
         assert_eq!(pl.q, 5);
+        assert_eq!(pl.algo, Algo::Circulant);
         assert_eq!(pl.predicted_rounds, 13 - 1 + 5);
 
         req.algo = Algo::Binomial;
@@ -244,6 +200,22 @@ mod tests {
 
         req.algo = Algo::VanDeGeijn;
         assert_eq!(plan(&req, &TuningParams::default()).predicted_rounds, 5 + 16);
+    }
+
+    #[test]
+    fn plan_resolves_auto() {
+        // Large payload → circulant pipeline; small → binomial.
+        let mut req = Request::new(Kind::Bcast, 17, 1 << 20);
+        req.algo = Algo::Auto;
+        let pl = plan(&req, &TuningParams::default());
+        assert_eq!(pl.algo, Algo::Circulant);
+        assert_eq!(pl.predicted_rounds, pl.n - 1 + pl.q);
+
+        let mut small = Request::new(Kind::Bcast, 17, 64);
+        small.algo = Algo::Auto;
+        let pl = plan(&small, &TuningParams::default());
+        assert_eq!(pl.algo, Algo::Binomial);
+        assert_eq!(pl.predicted_rounds, pl.q);
     }
 
     #[test]
@@ -258,9 +230,9 @@ mod tests {
     }
 
     #[test]
-    fn kind_algo_parse() {
+    fn kind_algo_reexported() {
+        // The enums live in `comm`; the coordinator path keeps working.
         assert_eq!(Kind::parse("bcast"), Some(Kind::Bcast));
-        assert_eq!(Kind::parse("reduce-scatter"), Some(Kind::ReduceScatter));
         assert_eq!(Algo::parse("new"), Some(Algo::Circulant));
         assert!(Kind::parse("nope").is_none());
     }

@@ -4,31 +4,65 @@
 //! Logarithmic Time with Applications to Broadcast, All-Broadcast,
 //! Reduction and All-Reduction”* (J. L. Träff, 2024).
 //!
-//! The library provides, in three layers:
+//! ## The front door: [`comm::Communicator`]
+//!
+//! The paper's Observation 1 is that one schedule family serves all four
+//! collectives; the API mirrors that. Build a [`comm::Communicator`] once
+//! per processor count `p` and issue every collective through it — the
+//! handle owns the circulant skip table, a shared schedule cache (one
+//! entry per *relative* rank, so repeated calls and varying roots never
+//! recompute), a pluggable execution backend and a cost model:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use circulant_bcast::comm::{AllreduceReq, BcastReq, Communicator};
+//! use circulant_bcast::collectives::SumOp;
+//!
+//! let comm = Communicator::new(1000);              // once
+//! let data: Vec<i64> = (0..1 << 16).collect();
+//! let out = comm.bcast(BcastReq::new(0, &data))?;  // many times
+//! assert!(out.all_received());
+//!
+//! let grads: Vec<Vec<f32>> = (0..1000).map(|_| vec![1.0; 4096]).collect();
+//! let sum = comm.allreduce(AllreduceReq::new(&grads, Arc::new(SumOp)))?;
+//! # Ok::<(), circulant_bcast::comm::CommError>(())
+//! ```
+//!
+//! Typed requests select the algorithm ([`comm::Algo`], with an `Auto`
+//! variant driven by the paper's §3 tuning rules) and optionally override
+//! the block count; every collective returns the same [`comm::Outcome`]
+//! (stats, buffers, resolved algorithm, rounds).
+//!
+//! ## Layers underneath
 //!
 //! * [`schedule`] — the paper's core contribution: round-optimal broadcast
 //!   schedules on `ceil(log2 p)`-regular circulant graphs, computed in
 //!   **O(log p)** time per processor (Algorithms 2–6, Theorems 2–3), plus
 //!   old-style baselines, the doubling constructions, an exhaustive
-//!   verifier and a schedule cache.
+//!   verifier and the communicator-style schedule cache.
 //! * [`sim`] — the machine substrate: a fully-connected, one-ported,
 //!   send/receive-bidirectional, round-based message-passing simulator
 //!   with linear and hierarchical α-β cost models, and a threaded runtime
-//!   where every simulated rank is an OS thread.
-//! * [`collectives`] — the MPI-style collectives built on the schedules:
-//!   pipelined broadcast (Algorithm 1), all-broadcast/allgatherv
-//!   (Algorithm 7), reduction and all-reduction via reversed schedules
-//!   (Observation 1), their classical baselines (binomial, ring,
-//!   recursive-doubling, van-de-Geijn-style), and block-count tuning.
+//!   where every simulated rank is an OS thread (both are
+//!   [`comm::ExecBackend`]s).
+//! * [`collectives`] — the per-rank state machines behind the
+//!   `Communicator` methods: pipelined broadcast (Algorithm 1),
+//!   all-broadcast/allgatherv (Algorithm 7), reduction and all-reduction
+//!   via reversed schedules (Observation 1), their classical baselines
+//!   (binomial, ring, recursive-doubling, van-de-Geijn-style), and
+//!   block-count tuning. The legacy `*_sim` free functions survive as
+//!   `#[deprecated]` wrappers over a throwaway communicator.
 //! * [`runtime`] — the PJRT bridge: AOT-compiled XLA artifacts (authored
 //!   in JAX/Pallas at build time, `artifacts/*.hlo.txt`) loaded and
-//!   executed from Rust for the reduction operator hot path.
-//! * [`coordinator`] — the service layer tying it together: planner,
-//!   engine, metrics, request loop (used by the `cbcast` CLI).
+//!   executed from Rust for the reduction operator hot path (gated behind
+//!   the `xla` cargo feature; a graceful stub compiles in otherwise).
+//! * [`coordinator`] — the service layer: planner, metrics, request loop
+//!   (used by the `cbcast` CLI), with execution delegated to [`comm`].
 //! * [`testkit`] — a tiny property-testing harness (offline substitute for
 //!   `proptest`).
 
 pub mod collectives;
+pub mod comm;
 pub mod coordinator;
 pub mod runtime;
 pub mod schedule;

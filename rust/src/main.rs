@@ -5,7 +5,8 @@
 //! cbcast verify -p LO[..HI] [--sample N]   machine-check the 4 conditions
 //! cbcast run KIND -p P -m M [options]      simulate a collective
 //!      KIND: bcast | reduce | allgatherv | reduce-scatter | allreduce
-//!      --root R --blocks N|auto --algo circulant|binomial|vdg|ring
+//!      --root R --blocks N|auto
+//!      --algo auto|circulant|binomial|vdg|ring|rhalving
 //!      --dist regular|irregular|degenerate
 //!      --cost unit|linear[:a:b]|vega:CORES|cluster:CORES
 //! cbcast artifacts [--dir D]               list + compile AOT artifacts
@@ -174,7 +175,7 @@ fn cmd_run(args: &[String]) -> i32 {
             println!(
                 "{kind:?} p={p} m={m} algo={:?} dist={:?} n={} q={} rounds={} msgs={} \
                  bytes={} sim_time={:.6}s wall={:.3}ms valid={}",
-                req.algo,
+                rep.plan.algo,
                 req.dist,
                 rep.plan.n,
                 rep.plan.q,

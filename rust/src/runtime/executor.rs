@@ -138,7 +138,14 @@ impl XlaRuntime {
     /// artifact, chunking + zero-padding as needed. `pad` must be the
     /// operator's identity (0 for sum; for max of possibly-negative data
     /// pass the type's minimum).
-    pub fn pair_combine<T>(&self, op: &str, dtype: DType, x: &[T], y: &[T], pad: T) -> Result<Vec<T>>
+    pub fn pair_combine<T>(
+        &self,
+        op: &str,
+        dtype: DType,
+        x: &[T],
+        y: &[T],
+        pad: T,
+    ) -> Result<Vec<T>>
     where
         T: xla::NativeType + xla::ArrayElement + Copy,
     {

@@ -3,9 +3,21 @@
 //! execute them from the Rust hot path. Python is never on the request
 //! path — the `cbcast` binary is self-contained once `make artifacts`
 //! has run.
+//!
+//! The executor needs the external `xla` crate and is therefore gated
+//! behind the `xla` cargo feature (the offline build image cannot fetch
+//! it). Without the feature a stub with the same API compiles in; it
+//! reports itself unavailable at runtime and every caller degrades
+//! gracefully (see `rust/Cargo.toml` for how to enable the real thing).
 
 pub mod artifacts;
+
+#[cfg(feature = "xla")]
 pub mod executor;
 
-pub use artifacts::{discover, default_dir, Artifact, DType, FnKind};
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
+pub mod executor;
+
+pub use artifacts::{default_dir, discover, Artifact, DType, FnKind};
 pub use executor::{XlaRuntime, XlaSumOp};

@@ -1,0 +1,126 @@
+//! Stub PJRT runtime, compiled when the `xla` feature is off (the
+//! offline build image has no `xla`/`anyhow` crates).
+//!
+//! Mirrors the API surface of [`super::executor`] so every caller — the
+//! `cbcast artifacts` command, the XLA examples, the XLA-backed
+//! [`crate::collectives::ReduceOp`] — type-checks unchanged; construction
+//! always fails with [`RuntimeUnavailable`], and callers that already
+//! handle the "artifacts missing" error path degrade gracefully.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::artifacts::{Artifact, DType};
+
+/// Error returned by every constructor of the stub runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RuntimeUnavailable;
+
+impl std::fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "XLA runtime unavailable: built without the `xla` feature \
+             (see rust/Cargo.toml [features] for how to enable it)"
+        )
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// Unconstructible stand-in for the PJRT artifact runtime.
+pub struct XlaRuntime {
+    _unconstructible: (),
+}
+
+impl XlaRuntime {
+    /// Always fails: the `xla` feature is off.
+    pub fn new() -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    /// Always fails: the `xla` feature is off.
+    pub fn with_dir(_dir: &Path) -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn artifacts(&self) -> &[Artifact] {
+        &[]
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn select_pair(&self, _op: &str, _dtype: DType, _len: usize) -> Option<&Artifact> {
+        None
+    }
+
+    pub fn select_stack(
+        &self,
+        _op: &str,
+        _dtype: DType,
+        _w: usize,
+        _len: usize,
+    ) -> Option<&Artifact> {
+        None
+    }
+
+    pub fn pair_combine<T: Copy>(
+        &self,
+        _op: &str,
+        _dtype: DType,
+        _x: &[T],
+        _y: &[T],
+        _pad: T,
+    ) -> Result<Vec<T>, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn stack_reduce<T: Copy>(
+        &self,
+        _op: &str,
+        _dtype: DType,
+        _xs: &[&[T]],
+        _pad: T,
+    ) -> Result<Vec<T>, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn compile_all(&self) -> Result<usize, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+/// Stand-in for the XLA-executed ⊕. Constructible only from an
+/// [`XlaRuntime`], which itself cannot be constructed without the `xla`
+/// feature — so `combine` is statically unreachable.
+pub struct XlaSumOp {
+    _rt: Arc<XlaRuntime>,
+}
+
+impl XlaSumOp {
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        XlaSumOp { _rt: rt }
+    }
+}
+
+impl crate::collectives::ReduceOp<f32> for XlaSumOp {
+    fn combine(&self, _acc: &mut [f32], _incoming: &[f32]) {
+        unreachable!("XlaRuntime is unconstructible without the `xla` feature")
+    }
+
+    fn name(&self) -> &str {
+        "xla-sum-f32(unavailable)"
+    }
+}
+
+impl crate::collectives::ReduceOp<i32> for XlaSumOp {
+    fn combine(&self, _acc: &mut [i32], _incoming: &[i32]) {
+        unreachable!("XlaRuntime is unconstructible without the `xla` feature")
+    }
+
+    fn name(&self) -> &str {
+        "xla-sum-i32(unavailable)"
+    }
+}

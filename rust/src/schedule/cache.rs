@@ -9,6 +9,7 @@
 //! receive+send schedule; `Arc`-shared and thread-safe.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::recv::{recv_schedule_core, MAX_Q};
@@ -61,8 +62,8 @@ impl Schedule {
 pub struct ScheduleCache {
     skips: Mutex<HashMap<usize, Arc<Skips>>>,
     scheds: Mutex<HashMap<(usize, usize), Arc<Schedule>>>,
-    hits: Mutex<u64>,
-    misses: Mutex<u64>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl ScheduleCache {
@@ -78,30 +79,47 @@ impl ScheduleCache {
 
     /// The schedule for relative rank `r` of a `p`-processor system
     /// (cached; computed on miss in `O(log p)`).
+    ///
+    /// Schedules are *root-relative*: `r` is `(rank - root) mod p`, so one
+    /// entry per relative rank serves every root a
+    /// [`crate::comm::Communicator`] is asked to broadcast from.
     pub fn get(&self, p: usize, r: usize) -> Arc<Schedule> {
         {
             let g = self.scheds.lock().unwrap();
             if let Some(s) = g.get(&(p, r)) {
-                *self.hits.lock().unwrap() += 1;
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 return s.clone();
             }
         }
-        *self.misses.lock().unwrap() += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let sk = self.skips(p);
         let s = Arc::new(Schedule::compute(&sk, r));
         self.scheds.lock().unwrap().insert((p, r), s.clone());
         s
     }
 
-    /// (hits, misses) counters — used by the cache ablation bench.
+    /// `(hits, misses)` counters — the observable that lets callers (and
+    /// the repeated-traffic bench / tests) verify schedules are being
+    /// *reused* rather than recomputed per call.
     pub fn stats(&self) -> (u64, u64) {
-        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
-    /// Drop all cached entries.
+    /// Cached schedule entries.
+    pub fn len(&self) -> usize {
+        self.scheds.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached entries (counters are reset too).
     pub fn clear(&self) {
         self.skips.lock().unwrap().clear();
         self.scheds.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
     }
 }
 

@@ -10,4 +10,4 @@ pub mod threads;
 
 pub use cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
 pub use network::{Msg, Network, RankProc, RunStats, SimError};
-pub use threads::{run_threaded, Comm};
+pub use threads::{run_threaded, run_threaded_stats, Comm};

@@ -17,7 +17,8 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use super::network::{Msg, RankProc};
+use super::cost::CostModel;
+use super::network::{Msg, RankProc, RunStats};
 
 /// One round-tagged message in flight.
 struct Packet<T> {
@@ -98,11 +99,19 @@ impl<T: Send> Comm<T> {
     }
 }
 
-/// Drive one rank's [`RankProc`] over its `Comm` endpoint to completion.
-pub fn drive<T: Send, P: RankProc<T>>(proc_: &mut P, comm: &mut Comm<T>) {
+/// The one driving loop: send, then block on the expected receive, per
+/// round. `on_send` observes each send as `(round, to, payload elements)`
+/// — a no-op for plain [`drive`], a log append for
+/// [`run_threaded_stats`]'s cost accounting.
+fn drive_with<T: Send, P: RankProc<T>>(
+    proc_: &mut P,
+    comm: &mut Comm<T>,
+    mut on_send: impl FnMut(usize, usize, usize),
+) {
     let rounds = proc_.rounds();
     for round in 0..rounds {
         if let Some(Msg { to, data }) = proc_.send(round) {
+            on_send(round, to, data.len());
             comm.send(to, round, data);
         }
         if let Some(from) = proc_.expects(round) {
@@ -110,6 +119,86 @@ pub fn drive<T: Send, P: RankProc<T>>(proc_: &mut P, comm: &mut Comm<T>) {
             proc_.recv(round, from, data);
         }
     }
+}
+
+/// Drive one rank's [`RankProc`] over its `Comm` endpoint to completion.
+pub fn drive<T: Send, P: RankProc<T>>(proc_: &mut P, comm: &mut Comm<T>) {
+    drive_with(proc_, comm, |_, _, _| {});
+}
+
+/// [`drive`] plus a send log for [`run_threaded_stats`].
+fn drive_logged<T: Send, P: RankProc<T>>(
+    proc_: &mut P,
+    comm: &mut Comm<T>,
+) -> Vec<(usize, usize, usize)> {
+    let mut log = Vec::new();
+    drive_with(proc_, comm, |round, to, elems| log.push((round, to, elems)));
+    log
+}
+
+/// Run all ranks on real threads *and* produce the same [`RunStats`] the
+/// lockstep [`super::network::Network`] would: each thread logs its sends
+/// (round, target, payload); afterwards the logs are folded with the
+/// identical per-round `max` / total `sum` cost accounting. This is what
+/// lets the threaded runtime act as a drop-in
+/// [`crate::comm::ExecBackend`].
+///
+/// Machine-model violations panic the offending rank thread (and then
+/// this function) instead of returning an error — full enforcement is the
+/// lockstep backend's job.
+pub fn run_threaded_stats<T, P>(
+    procs: Vec<P>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> (RunStats, Vec<P>)
+where
+    T: Send + 'static,
+    P: RankProc<T> + Send + 'static,
+{
+    let p = procs.len();
+    let total_rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
+    let comms = Comm::<T>::world(p, Duration::from_secs(30));
+    let handles: Vec<_> = procs
+        .into_iter()
+        .zip(comms)
+        .map(|(mut pr, mut comm)| {
+            std::thread::spawn(move || {
+                let log = drive_logged(&mut pr, &mut comm);
+                (pr, log)
+            })
+        })
+        .collect();
+    let mut done = Vec::with_capacity(p);
+    let mut logs = Vec::with_capacity(p);
+    for h in handles {
+        let (pr, log) = h.join().expect("rank thread panicked");
+        done.push(pr);
+        logs.push(log);
+    }
+
+    let mut stats = RunStats { rounds: total_rounds, ..Default::default() };
+    let mut round_time = vec![0.0f64; total_rounds];
+    let mut round_any = vec![false; total_rounds];
+    let mut rank_bytes = vec![0usize; p];
+    for (from, log) in logs.iter().enumerate() {
+        for &(round, to, elems) in log {
+            let bytes = elems * elem_bytes;
+            stats.messages += 1;
+            stats.bytes += bytes;
+            rank_bytes[from] += bytes;
+            rank_bytes[to] += bytes;
+            round_any[round] = true;
+            round_time[round] = round_time[round].max(cost.msg_time(from, to, bytes));
+        }
+    }
+    for (any, t) in round_any.iter().zip(&round_time) {
+        if *any {
+            stats.active_rounds += 1;
+            stats.time += t;
+        }
+    }
+    stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+    (stats, done)
 }
 
 /// Run all ranks' state machines on real threads; returns the final state

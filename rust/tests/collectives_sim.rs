@@ -1,28 +1,35 @@
-//! Cross-collective integration over the lockstep simulator: round
-//! optimality, volume accounting, consistency between the collectives
-//! (bcast∘reduce, allgather vs p× bcast, allreduce vs reduce+bcast), and
-//! machine-model enforcement on the full grid of paper-relevant sizes.
+//! Cross-collective integration over the lockstep simulator, driven
+//! through the typed `Communicator` API: round optimality, volume
+//! accounting, consistency between the collectives (bcast∘reduce,
+//! allgather vs p× bcast, allreduce vs reduce+bcast), and machine-model
+//! enforcement on the full grid of paper-relevant sizes.
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::baselines::binomial_bcast_sim;
-use circulant_bcast::collectives::{
-    allgather_sim, allgatherv_sim, allreduce_sim, bcast_sim, reduce_scatter_sim, reduce_sim,
-    SumOp,
+use circulant_bcast::collectives::{tuning, SumOp};
+use circulant_bcast::comm::{
+    Algo, AllgathervReq, AllreduceReq, BcastReq, CommBuilder, Communicator, ReduceReq,
+    ReduceScatterReq,
 };
 use circulant_bcast::schedule::ceil_log2;
 use circulant_bcast::sim::{LinearCost, UnitCost};
+
+fn comm(p: usize) -> Communicator {
+    CommBuilder::new(p).cost_model(UnitCost).build()
+}
 
 #[test]
 fn bcast_round_optimality_grid() {
     // n - 1 + ceil(log2 p) rounds, for every p and n in the grid.
     for p in [2usize, 3, 5, 9, 17, 33, 64, 100, 129] {
+        let c = comm(p);
         let q = ceil_log2(p);
         for n in [1usize, 2, q.max(1), 2 * q.max(1) + 1, 17] {
             let data: Vec<i32> = (0..(n * 3) as i32).collect();
-            let res = bcast_sim(p, 0, &data, n, 4, &UnitCost).unwrap();
-            assert_eq!(res.stats.rounds, n - 1 + q, "p={p} n={n}");
-            assert!(res.buffers.iter().all(|b| b == &data));
+            let out = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n)).unwrap();
+            assert_eq!(out.rounds, n - 1 + q, "p={p} n={n}");
+            assert!(out.all_received());
+            assert!(out.buffers.iter().all(|b| b == &data));
         }
     }
 }
@@ -32,11 +39,12 @@ fn bcast_volume_is_p_minus_1_blocks_per_block() {
     // Every non-root receives each of the n blocks exactly once: total
     // messages = (p-1) * n (plus nothing else — no metadata, no dups).
     for p in [5usize, 9, 17, 33] {
+        let c = comm(p);
         for n in [1usize, 4, 9] {
             let m = n * 8;
             let data: Vec<i32> = (0..m as i32).collect();
-            let res = bcast_sim(p, 0, &data, n, 4, &UnitCost).unwrap();
-            assert_eq!(res.stats.messages, (p - 1) * n, "p={p} n={n}");
+            let out = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n)).unwrap();
+            assert_eq!(out.stats.messages, (p - 1) * n, "p={p} n={n}");
         }
     }
 }
@@ -45,12 +53,22 @@ fn bcast_volume_is_p_minus_1_blocks_per_block() {
 fn reduce_equals_transposed_bcast_volume() {
     // Reduction is the exact reverse of broadcast: same message count.
     for p in [5usize, 9, 17] {
+        let c = comm(p);
         let n = 6usize;
         let m = 60usize;
         let data: Vec<i64> = (0..m as i64).collect();
-        let b = bcast_sim(p, 0, &data, n, 8, &UnitCost).unwrap();
+        let b = c
+            .bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n).elem_bytes(8))
+            .unwrap();
         let inputs: Vec<Vec<i64>> = (0..p).map(|_| data.clone()).collect();
-        let r = reduce_sim(&inputs, 0, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        let r = c
+            .reduce(
+                ReduceReq::new(0, &inputs, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(n)
+                    .elem_bytes(8),
+            )
+            .unwrap();
         assert_eq!(b.stats.messages, r.stats.messages, "p={p}");
         assert_eq!(b.stats.rounds, r.stats.rounds);
         assert_eq!(b.stats.bytes, r.stats.bytes);
@@ -61,32 +79,51 @@ fn reduce_equals_transposed_bcast_volume() {
 fn allgather_agrees_with_p_broadcasts() {
     // All-broadcast must deliver exactly what p separate broadcasts would.
     let p = 9usize;
+    let c = comm(p);
     let mlocal = 12usize;
     let inputs: Vec<Vec<i32>> = (0..p)
         .map(|r| (0..mlocal).map(|i| (r * 100 + i) as i32).collect())
         .collect();
-    let ag = allgather_sim(&inputs, 3, 4, &UnitCost).unwrap();
+    let ag = c.allgather(AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(3)).unwrap();
     for root in 0..p {
-        let b = bcast_sim(p, root, &inputs[root], 3, 4, &UnitCost).unwrap();
+        let b = c
+            .bcast(BcastReq::new(root, &inputs[root]).algo(Algo::Circulant).blocks(3))
+            .unwrap();
         for r in 0..p {
             assert_eq!(ag.buffers[r][root], b.buffers[r], "root={root} rank={r}");
         }
     }
     // And in the same n-1+q rounds as ONE broadcast (the paper's point).
     let q = ceil_log2(p);
-    assert_eq!(ag.stats.rounds, 3 - 1 + q);
+    assert_eq!(ag.rounds, 3 - 1 + q);
 }
 
 #[test]
 fn allreduce_agrees_with_reduce_then_bcast() {
     let p = 17usize;
-    let m = 170usize;
+    let c = comm(p);
     let inputs: Vec<Vec<i64>> = (0..p)
-        .map(|r| (0..m).map(|i| ((r * 13 + i * 7) % 101) as i64).collect())
+        .map(|r| (0..170).map(|i| ((r * 13 + i * 7) % 101) as i64).collect())
         .collect();
-    let ar = allreduce_sim(&inputs, 4, Arc::new(SumOp), 8, &UnitCost).unwrap();
-    let red = reduce_sim(&inputs, 0, 4, Arc::new(SumOp), 8, &UnitCost).unwrap();
-    let bc = bcast_sim(p, 0, &red.buffer, 4, 8, &UnitCost).unwrap();
+    let ar = c
+        .allreduce(
+            AllreduceReq::new(&inputs, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(4)
+                .elem_bytes(8),
+        )
+        .unwrap();
+    let red = c
+        .reduce(
+            ReduceReq::new(0, &inputs, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(4)
+                .elem_bytes(8),
+        )
+        .unwrap();
+    let bc = c
+        .bcast(BcastReq::new(0, &red.buffers).algo(Algo::Circulant).blocks(4).elem_bytes(8))
+        .unwrap();
     for r in 0..p {
         assert_eq!(ar.buffers[r], bc.buffers[r], "rank {r}");
     }
@@ -94,17 +131,27 @@ fn allreduce_agrees_with_reduce_then_bcast() {
 
 #[test]
 fn reduce_scatter_then_allgather_is_allreduce() {
-    // The library's own composition is checked in allreduce_sim; here we
+    // The library's own composition is checked in `allreduce`; here we
     // compose manually with *different* block counts per phase.
     let p = 8usize;
+    let c = comm(p);
     let chunk = 9usize;
     let m = p * chunk;
     let inputs: Vec<Vec<i64>> =
         (0..p).map(|r| (0..m).map(|i| (r + i) as i64).collect()).collect();
     let sums: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
     let counts = vec![chunk; p];
-    let rs = reduce_scatter_sim(&inputs, &counts, 2, Arc::new(SumOp), 8, &UnitCost).unwrap();
-    let ag = allgatherv_sim(&rs.chunks, 5, 8, &UnitCost).unwrap();
+    let rs = c
+        .reduce_scatter(
+            ReduceScatterReq::new(&inputs, &counts, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(2)
+                .elem_bytes(8),
+        )
+        .unwrap();
+    let ag = c
+        .allgatherv(AllgathervReq::new(&rs.buffers).algo(Algo::Circulant).blocks(5).elem_bytes(8))
+        .unwrap();
     for r in 0..p {
         let got: Vec<i64> = ag.buffers[r].iter().flatten().copied().collect();
         assert_eq!(got, sums, "rank {r}");
@@ -118,22 +165,23 @@ fn circulant_beats_binomial_for_large_messages() {
     // by close to q/2 and the crossover sits at small m.
     let p = 64usize;
     let cost = LinearCost::hpc_default();
+    let c = CommBuilder::new(p).cost_model(cost.clone()).build();
     let m = 1 << 18;
     let data: Vec<i32> = (0..m as i32).collect();
-    let n = circulant_bcast::collectives::tuning::bcast_blocks_model(m, p, 4, cost.alpha, cost.beta);
-    let circ = bcast_sim(p, 0, &data, n, 4, &cost).unwrap();
-    let (bino, _) = binomial_bcast_sim(p, 0, &data, 4, &cost).unwrap();
+    let n = tuning::bcast_blocks_model(m, p, 4, cost.alpha, cost.beta);
+    let circ = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n)).unwrap();
+    let bino = c.bcast(BcastReq::new(0, &data).algo(Algo::Binomial)).unwrap();
     assert!(
-        circ.stats.time * 2.0 < bino.time,
+        circ.time() * 2.0 < bino.time(),
         "pipelined {:.6}s should be >2x faster than binomial {:.6}s",
-        circ.stats.time,
-        bino.time
+        circ.time(),
+        bino.time()
     );
     // Small message: binomial (= circulant with n=1) is the right call.
     let small: Vec<i32> = (0..64).collect();
-    let c1 = bcast_sim(p, 0, &small, 1, 4, &cost).unwrap();
-    let (b1, _) = binomial_bcast_sim(p, 0, &small, 4, &cost).unwrap();
-    assert_eq!(c1.stats.rounds, b1.rounds);
+    let c1 = c.bcast(BcastReq::new(0, &small).algo(Algo::Circulant).blocks(1)).unwrap();
+    let b1 = c.bcast(BcastReq::new(0, &small).algo(Algo::Binomial)).unwrap();
+    assert_eq!(c1.rounds, b1.rounds);
 }
 
 #[test]
@@ -141,23 +189,25 @@ fn degenerate_allgatherv_round_bound() {
     // Fig. 2's degenerate case: circulant still takes n-1+q rounds and
     // every rank receives the owner's full buffer.
     let p = 33usize;
+    let c = comm(p);
     let q = ceil_log2(p);
     let mut inputs: Vec<Vec<i32>> = vec![Vec::new(); p];
     inputs[7] = (0..500).collect();
     let n = 5usize;
-    let res = allgatherv_sim(&inputs, n, 4, &UnitCost).unwrap();
-    assert_eq!(res.stats.rounds, n - 1 + q);
+    let out = c.allgatherv(AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(n)).unwrap();
+    assert_eq!(out.rounds, n - 1 + q);
     for r in 0..p {
-        assert_eq!(res.buffers[r][7], inputs[7], "rank {r}");
+        assert_eq!(out.buffers[r][7], inputs[7], "rank {r}");
     }
 }
 
 #[test]
 fn elem_bytes_scale_volume_not_rounds() {
     let p = 9usize;
+    let c = comm(p);
     let data: Vec<i64> = (0..90).collect();
-    let a = bcast_sim(p, 0, &data, 5, 1, &UnitCost).unwrap();
-    let b = bcast_sim(p, 0, &data, 5, 8, &UnitCost).unwrap();
+    let a = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(5).elem_bytes(1)).unwrap();
+    let b = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(5).elem_bytes(8)).unwrap();
     assert_eq!(a.stats.rounds, b.stats.rounds);
     assert_eq!(a.stats.messages, b.stats.messages);
     assert_eq!(a.stats.bytes * 8, b.stats.bytes);

@@ -1,0 +1,316 @@
+//! The `Communicator` API contract: schedule reuse across repeated calls
+//! and roots (with cache hit/miss receipts), result stability, degenerate
+//! `p = 1` and nonzero-root cases through the typed interface, backend
+//! parity, and the deprecation-path equivalence of the legacy wrappers.
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{
+    Algo, AllgathervReq, AllreduceReq, BackendKind, BcastReq, CommBuilder, CommError,
+    Communicator, Kind, Outcome, ReduceReq, ReduceScatterBlockReq, ReduceScatterReq,
+};
+use circulant_bcast::schedule::ScheduleCache;
+use circulant_bcast::sim::UnitCost;
+
+fn comm(p: usize) -> Communicator {
+    CommBuilder::new(p).cost_model(UnitCost).build()
+}
+
+// -------------------------------------------------------------------
+// Schedule reuse: the tentpole claim.
+// -------------------------------------------------------------------
+
+#[test]
+fn repeated_bcasts_hit_the_cache_and_agree() {
+    let p = 17usize;
+    let c = comm(p);
+    let data: Vec<i64> = (0..340).map(|i| i * 7 % 1009).collect();
+
+    // Call 1 (root 0): populates the cache — one miss per relative rank.
+    let first = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(5)).unwrap();
+    let (h1, m1) = c.cache().stats();
+    assert_eq!(m1 as usize, p, "first call misses once per relative rank");
+    assert_eq!(h1, 0);
+
+    // Call 2 (same root): identical results, zero new misses.
+    let second = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(5)).unwrap();
+    assert_eq!(first.buffers, second.buffers);
+    assert_eq!(first.stats.messages, second.stats.messages);
+    assert_eq!(first.stats.bytes, second.stats.bytes);
+    assert_eq!(first.rounds, second.rounds);
+    let (h2, m2) = c.cache().stats();
+    assert_eq!(m2, m1, "repeat call must not recompute schedules");
+    assert_eq!(h2 as usize, p);
+
+    // Calls at every *other* root: schedules are root-relative, so the
+    // same p cache entries serve all of them — still zero new misses.
+    for root in 1..p {
+        let out = c.bcast(BcastReq::new(root, &data).algo(Algo::Circulant).blocks(5)).unwrap();
+        assert!(out.all_received());
+        assert!(out.buffers.iter().all(|b| b == &data), "root {root}");
+        assert_eq!(out.rounds, first.rounds, "root {root}");
+    }
+    let (h3, m3) = c.cache().stats();
+    assert_eq!(m3, m1, "varying roots must not recompute schedules");
+    assert_eq!(h3 as usize, p * p, "every root-sweep call fully cache-served");
+}
+
+#[test]
+fn hit_counter_grows_monotonically_across_collectives() {
+    // One handle, all collectives: every call after the first is pure
+    // cache traffic (bcast/reduce use per-rank phased schedules; the
+    // all-collectives build their table from the same entries).
+    let p = 9usize;
+    let c = comm(p);
+    let data: Vec<i64> = (0..90).collect();
+    let inputs: Vec<Vec<i64>> = (0..p).map(|_| data.clone()).collect();
+    let counts = vec![10usize; p];
+
+    c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(3)).unwrap();
+    let (_, misses) = c.cache().stats();
+    assert_eq!(misses as usize, p);
+
+    c.reduce(ReduceReq::new(4, &inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(3))
+        .unwrap();
+    let (hits, m) = c.cache().stats();
+    assert_eq!(m as usize, p, "reduce reuses bcast's schedules");
+    assert!(hits > 0);
+    let last_hits = hits;
+
+    c.allgatherv(AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(2)).unwrap();
+    let (hits, m) = c.cache().stats();
+    assert_eq!(m as usize, p, "allgatherv reuses the same relative-rank entries");
+    assert!(hits > last_hits, "the n=2 table is built from cached schedules");
+    let last_hits = hits;
+
+    c.reduce_scatter(
+        ReduceScatterReq::new(&inputs, &counts, Arc::new(SumOp)).algo(Algo::Circulant).blocks(2),
+    )
+    .unwrap();
+    c.allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(2))
+        .unwrap();
+    let (hits, m) = c.cache().stats();
+    assert_eq!(m as usize, p, "one schedule family serves all four collectives");
+    // The n=2 ScheduleTable is memoized on the handle, so reduce_scatter
+    // and allreduce recompute nothing — not even cache lookups.
+    assert_eq!(hits, last_hits, "memoized table: zero additional schedule work");
+}
+
+#[test]
+fn shared_cache_across_communicators() {
+    // Two communicators over the same cache (the service pattern): the
+    // second sees a warm cache even for its first call.
+    let cache = Arc::new(ScheduleCache::new());
+    let data: Vec<i32> = (0..60).collect();
+    let a = CommBuilder::new(13).cache(cache.clone()).cost_model(UnitCost).build();
+    a.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(4)).unwrap();
+    let (_, misses) = cache.stats();
+    let b = CommBuilder::new(13).cache(cache.clone()).cost_model(UnitCost).build();
+    b.bcast(BcastReq::new(7, &data).algo(Algo::Circulant).blocks(4)).unwrap();
+    let (hits, misses2) = cache.stats();
+    assert_eq!(misses2, misses, "second communicator inherits warm cache");
+    assert!(hits >= 13);
+}
+
+// -------------------------------------------------------------------
+// Degenerate and nonzero-root cases through the typed API.
+// -------------------------------------------------------------------
+
+#[test]
+fn reduce_nonzero_roots_all_p() {
+    for p in [1usize, 5, 9, 18] {
+        let c = comm(p);
+        let m = 33usize;
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..m).map(|i| (r * 100 + i) as i64).collect())
+            .collect();
+        let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        for root in 0..p {
+            let out = c
+                .reduce(
+                    ReduceReq::new(root, &inputs, Arc::new(SumOp))
+                        .algo(Algo::Circulant)
+                        .blocks(4),
+                )
+                .unwrap();
+            assert_eq!(out.buffers, expect, "p={p} root={root}");
+            assert!(out.complete);
+        }
+    }
+}
+
+#[test]
+fn reduce_p1_is_identity() {
+    let c = comm(1);
+    let inputs = vec![vec![5i64, -3, 8]];
+    let out = c.reduce(ReduceReq::new(0, &inputs, Arc::new(SumOp))).unwrap();
+    assert_eq!(out.buffers, inputs[0]);
+    assert_eq!(out.rounds, 0);
+    assert_eq!(out.stats.messages, 0);
+}
+
+#[test]
+fn reduce_scatter_p1_and_degenerate_counts() {
+    // p = 1: the single rank keeps its (fully "reduced") chunk.
+    let c = comm(1);
+    let inputs = vec![vec![4i64, 4, 4, 4]];
+    let out = c
+        .reduce_scatter(ReduceScatterReq::new(&inputs, &[4], Arc::new(SumOp)))
+        .unwrap();
+    assert_eq!(out.buffers, vec![vec![4i64, 4, 4, 4]]);
+    assert_eq!(out.rounds, 0);
+
+    // Degenerate counts: one destination owns everything, others nothing.
+    let p = 7usize;
+    let c = comm(p);
+    let mut counts = vec![0usize; p];
+    counts[3] = 21;
+    let inputs: Vec<Vec<i64>> =
+        (0..p).map(|r| (0..21).map(|i| (r + i) as i64).collect()).collect();
+    let sums: Vec<i64> = (0..21).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+    let out = c
+        .reduce_scatter(
+            ReduceScatterReq::new(&inputs, &counts, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(3),
+        )
+        .unwrap();
+    for (r, chunk) in out.buffers.iter().enumerate() {
+        if r == 3 {
+            assert_eq!(chunk, &sums);
+        } else {
+            assert!(chunk.is_empty(), "rank {r}");
+        }
+    }
+}
+
+#[test]
+fn bcast_p1_and_empty_payloads() {
+    let c = comm(1);
+    let data = vec![9i32; 5];
+    let out = c.bcast(BcastReq::new(0, &data)).unwrap();
+    assert_eq!(out.buffers, vec![data.clone()]);
+    assert_eq!(out.rounds, 0);
+
+    // Zero-length payload over many ranks: still well-formed.
+    let c = comm(9);
+    let empty: Vec<i32> = Vec::new();
+    let out = c.bcast(BcastReq::new(2, &empty).algo(Algo::Circulant).blocks(4)).unwrap();
+    assert!(out.all_received());
+    assert!(out.buffers.iter().all(|b| b.is_empty()));
+}
+
+// -------------------------------------------------------------------
+// Uniform Outcome + error surface.
+// -------------------------------------------------------------------
+
+#[test]
+fn outcome_is_uniform_across_collectives() {
+    fn check<B>(out: &Outcome<B>) {
+        assert!(out.all_received());
+        assert_eq!(out.rounds, out.stats.rounds);
+        assert_ne!(out.algo, Algo::Auto, "outcome always carries the resolved algo");
+    }
+    let p = 9usize;
+    let c = comm(p);
+    let data: Vec<i64> = (0..45).collect();
+    let inputs: Vec<Vec<i64>> = (0..p).map(|_| data.clone()).collect();
+    check(&c.bcast(BcastReq::new(0, &data)).unwrap());
+    check(&c.reduce(ReduceReq::new(0, &inputs, Arc::new(SumOp))).unwrap());
+    check(&c.allgatherv(AllgathervReq::new(&inputs)).unwrap());
+    check(&c.allgather(AllgathervReq::new(&inputs)).unwrap());
+    check(
+        &c.reduce_scatter_block(ReduceScatterBlockReq::new(&inputs, 5, Arc::new(SumOp)))
+            .unwrap(),
+    );
+    // Allreduce aggregates both phases; rounds still equals stats.rounds.
+    check(&c.allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp))).unwrap());
+}
+
+#[test]
+fn error_surface_is_typed() {
+    let c = comm(4);
+    let data = vec![1i32; 8];
+    let inputs: Vec<Vec<i64>> = (0..4).map(|_| vec![1i64; 8]).collect();
+    // Out-of-range root.
+    assert!(matches!(c.bcast(BcastReq::new(9, &data)), Err(CommError::BadRequest(_))));
+    // Unsupported algorithm for the kind.
+    match c.allgatherv(AllgathervReq::new(&inputs).algo(Algo::VanDeGeijn)) {
+        Err(CommError::Unsupported { kind, algo }) => {
+            assert_eq!(kind, Kind::Allgatherv);
+            assert_eq!(algo, Algo::VanDeGeijn);
+        }
+        other => panic!("expected Unsupported, got {:?}", other.map(|o| o.rounds)),
+    }
+    // Recursive halving demands equal chunks.
+    let counts = [3usize, 5, 0, 0];
+    let rs_inputs: Vec<Vec<i64>> = (0..4).map(|_| vec![1i64; 8]).collect();
+    assert!(matches!(
+        c.reduce_scatter(
+            ReduceScatterReq::new(&rs_inputs, &counts, Arc::new(SumOp))
+                .algo(Algo::RecursiveHalving)
+        ),
+        Err(CommError::BadRequest(_))
+    ));
+}
+
+// -------------------------------------------------------------------
+// Backend parity through the public API.
+// -------------------------------------------------------------------
+
+#[test]
+fn threaded_backend_full_parity_on_reduce_scatter() {
+    let p = 8usize;
+    let chunk = 6usize;
+    let inputs: Vec<Vec<i64>> = (0..p)
+        .map(|r| (0..p * chunk).map(|i| ((r + 1) * (i + 1)) as i64 % 251).collect())
+        .collect();
+    let mk = || {
+        ReduceScatterBlockReq::new(&inputs, chunk, Arc::new(SumOp))
+            .algo(Algo::Circulant)
+            .blocks(2)
+    };
+    let lockstep = comm(p).reduce_scatter_block(mk()).unwrap();
+    let threaded = CommBuilder::new(p)
+        .cost_model(UnitCost)
+        .backend(BackendKind::Threaded)
+        .build()
+        .reduce_scatter_block(mk())
+        .unwrap();
+    assert_eq!(lockstep.buffers, threaded.buffers);
+    assert_eq!(lockstep.stats.messages, threaded.stats.messages);
+    assert_eq!(lockstep.stats.bytes, threaded.stats.bytes);
+    assert!((lockstep.stats.time - threaded.stats.time).abs() < 1e-12);
+}
+
+// -------------------------------------------------------------------
+// Deprecation path: the legacy wrappers still agree with the new API.
+// -------------------------------------------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn legacy_wrappers_match_communicator() {
+    use circulant_bcast::collectives::{bcast_sim, reduce_sim};
+    let p = 11usize;
+    let data: Vec<i64> = (0..121).collect();
+    let legacy = bcast_sim(p, 4, &data, 5, 8, &UnitCost).unwrap();
+    assert!(legacy.all_received());
+    let modern = comm(p)
+        .bcast(BcastReq::new(4, &data).algo(Algo::Circulant).blocks(5).elem_bytes(8))
+        .unwrap();
+    assert_eq!(legacy.buffers, modern.buffers);
+    assert_eq!(legacy.stats.messages, modern.stats.messages);
+
+    let inputs: Vec<Vec<i64>> = (0..p).map(|_| data.clone()).collect();
+    let legacy = reduce_sim(&inputs, 4, 5, Arc::new(SumOp), 8, &UnitCost).unwrap();
+    let modern = comm(p)
+        .reduce(
+            ReduceReq::new(4, &inputs, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(5)
+                .elem_bytes(8),
+        )
+        .unwrap();
+    assert_eq!(legacy.buffer, modern.buffers);
+}

@@ -1,13 +1,17 @@
-//! Property-based tests on the collectives: random (p, root, m, n,
-//! distribution) — data integrity, round optimality and machine-model
-//! cleanliness on every draw, with shrinking on failure.
+//! Property-based tests on the collectives, driven through the typed
+//! `Communicator` API: random (p, root, m, n, distribution) — data
+//! integrity, round optimality and machine-model cleanliness on every
+//! draw, with shrinking on failure. All cases of a property share one
+//! `ScheduleCache`, exactly as a long-running service would.
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::{
-    allgatherv_sim, allreduce_sim, bcast_sim, reduce_scatter_sim, reduce_sim, SumOp,
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{
+    Algo, AllgathervReq, AllreduceReq, BcastReq, CommBuilder, Communicator, ReduceReq,
+    ReduceScatterReq,
 };
-use circulant_bcast::schedule::ceil_log2;
+use circulant_bcast::schedule::{ceil_log2, ScheduleCache};
 use circulant_bcast::sim::UnitCost;
 use circulant_bcast::testkit::{forall_shrink, Rng};
 
@@ -46,22 +50,31 @@ fn shrink_case(c: &Case) -> Vec<Case> {
     out
 }
 
+fn comm_for(cache: &Arc<ScheduleCache>, p: usize) -> Communicator {
+    CommBuilder::new(p).cache(cache.clone()).cost_model(UnitCost).build()
+}
+
 #[test]
 fn prop_bcast_delivers_everything() {
+    let cache = Arc::new(ScheduleCache::new());
     forall_shrink(
         250,
         gen_case,
         |c| {
             let data: Vec<i64> = (0..c.m as i64).map(|i| i * 3 - 7).collect();
-            let res = bcast_sim(c.p, c.root, &data, c.n, 8, &UnitCost)
-                .map_err(|e| format!("sim error: {e}"))?;
-            for (r, buf) in res.buffers.iter().enumerate() {
+            let out = comm_for(&cache, c.p)
+                .bcast(BcastReq::new(c.root, &data).algo(Algo::Circulant).blocks(c.n).elem_bytes(8))
+                .map_err(|e| format!("comm error: {e}"))?;
+            if !out.all_received() {
+                return Err("not all ranks complete".into());
+            }
+            for (r, buf) in out.buffers.iter().enumerate() {
                 if buf != &data {
                     return Err(format!("rank {r} got wrong data"));
                 }
             }
-            if c.p > 1 && res.stats.rounds != c.n - 1 + ceil_log2(c.p) {
-                return Err(format!("rounds {} not optimal", res.stats.rounds));
+            if c.p > 1 && out.rounds != c.n - 1 + ceil_log2(c.p) {
+                return Err(format!("rounds {} not optimal", out.rounds));
             }
             Ok(())
         },
@@ -71,6 +84,7 @@ fn prop_bcast_delivers_everything() {
 
 #[test]
 fn prop_reduce_sums_correctly() {
+    let cache = Arc::new(ScheduleCache::new());
     forall_shrink(
         200,
         gen_case,
@@ -80,9 +94,15 @@ fn prop_reduce_sums_correctly() {
                 .collect();
             let want: Vec<i64> =
                 (0..c.m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let res = reduce_sim(&inputs, c.root, c.n, Arc::new(SumOp), 8, &UnitCost)
-                .map_err(|e| format!("sim error: {e}"))?;
-            if res.buffer != want {
+            let out = comm_for(&cache, c.p)
+                .reduce(
+                    ReduceReq::new(c.root, &inputs, Arc::new(SumOp))
+                        .algo(Algo::Circulant)
+                        .blocks(c.n)
+                        .elem_bytes(8),
+                )
+                .map_err(|e| format!("comm error: {e}"))?;
+            if out.buffers != want {
                 return Err("wrong reduction at root".into());
             }
             Ok(())
@@ -93,6 +113,7 @@ fn prop_reduce_sums_correctly() {
 
 #[test]
 fn prop_allgatherv_random_counts() {
+    let cache = Arc::new(ScheduleCache::new());
     forall_shrink(
         150,
         |rng| {
@@ -116,11 +137,12 @@ fn prop_allgatherv_random_counts() {
                 .enumerate()
                 .map(|(r, &c)| (0..c).map(|i| (r * 1000 + i) as i32).collect())
                 .collect();
-            let res = allgatherv_sim(&inputs, *n, 4, &UnitCost)
-                .map_err(|e| format!("sim error: {e}"))?;
+            let out = comm_for(&cache, p)
+                .allgatherv(AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(*n))
+                .map_err(|e| format!("comm error: {e}"))?;
             for r in 0..p {
                 for j in 0..p {
-                    if res.buffers[r][j] != inputs[j] {
+                    if out.buffers[r][j] != inputs[j] {
                         return Err(format!("rank {r} root {j} mismatch"));
                     }
                 }
@@ -143,6 +165,7 @@ fn prop_allgatherv_random_counts() {
 
 #[test]
 fn prop_reduce_scatter_random_counts() {
+    let cache = Arc::new(ScheduleCache::new());
     forall_shrink(
         120,
         |rng| {
@@ -159,11 +182,17 @@ fn prop_reduce_scatter_random_counts() {
                 .collect();
             let sums: Vec<i64> =
                 (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let res = reduce_scatter_sim(&inputs, counts, *n, Arc::new(SumOp), 8, &UnitCost)
-                .map_err(|e| format!("sim error: {e}"))?;
+            let out = comm_for(&cache, p)
+                .reduce_scatter(
+                    ReduceScatterReq::new(&inputs, counts, Arc::new(SumOp))
+                        .algo(Algo::Circulant)
+                        .blocks(*n)
+                        .elem_bytes(8),
+                )
+                .map_err(|e| format!("comm error: {e}"))?;
             let mut off = 0;
             for r in 0..p {
-                if res.chunks[r] != sums[off..off + counts[r]] {
+                if out.buffers[r] != sums[off..off + counts[r]] {
                     return Err(format!("rank {r} chunk wrong"));
                 }
                 off += counts[r];
@@ -185,6 +214,7 @@ fn prop_reduce_scatter_random_counts() {
 
 #[test]
 fn prop_allreduce_random() {
+    let cache = Arc::new(ScheduleCache::new());
     forall_shrink(
         120,
         gen_case,
@@ -197,9 +227,15 @@ fn prop_allreduce_random() {
                 .collect();
             let want: Vec<i64> =
                 (0..c.m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let res = allreduce_sim(&inputs, c.n, Arc::new(SumOp), 8, &UnitCost)
-                .map_err(|e| format!("sim error: {e}"))?;
-            for (r, buf) in res.buffers.iter().enumerate() {
+            let out = comm_for(&cache, c.p)
+                .allreduce(
+                    AllreduceReq::new(&inputs, Arc::new(SumOp))
+                        .algo(Algo::Circulant)
+                        .blocks(c.n)
+                        .elem_bytes(8),
+                )
+                .map_err(|e| format!("comm error: {e}"))?;
+            for (r, buf) in out.buffers.iter().enumerate() {
                 if buf != &want {
                     return Err(format!("rank {r} mismatch"));
                 }
@@ -208,4 +244,28 @@ fn prop_allreduce_random() {
         },
         shrink_case,
     );
+}
+
+#[test]
+fn prop_cache_never_recomputes_across_cases() {
+    // After the random sweeps above the shared cache invariant holds on a
+    // fresh cache too: total misses across arbitrary repeated traffic is
+    // bounded by the number of distinct (p, rel) pairs ever requested.
+    let cache = Arc::new(ScheduleCache::new());
+    let mut distinct = std::collections::HashSet::new();
+    let mut rng = Rng::from_env();
+    for _ in 0..60 {
+        let p = rng.range(1, 24);
+        let root = rng.range(0, p - 1);
+        let data: Vec<i64> = (0..50).collect();
+        comm_for(&cache, p)
+            .bcast(BcastReq::new(root, &data).algo(Algo::Circulant).blocks(3).elem_bytes(8))
+            .unwrap();
+        for rel in 0..p {
+            distinct.insert((p, rel));
+        }
+    }
+    let (hits, misses) = cache.stats();
+    assert_eq!(misses as usize, distinct.len(), "one miss per distinct (p, rel)");
+    assert!(hits > 0, "repeated traffic must hit the cache");
 }

@@ -41,7 +41,10 @@ fn threaded_bcast_nonzero_root() {
     let world = World::new(p);
     let geom = BlockGeometry::new(m, n);
     let procs: Vec<BcastProc<i64>> = (0..p)
-        .map(|r| BcastProc::new(&world, r, root, geom, if r == root { Some(&data[..]) } else { None }))
+        .map(|r| {
+            let buf = if r == root { Some(&data[..]) } else { None };
+            BcastProc::new(&world, r, root, geom, buf)
+        })
         .collect();
     for pr in run_threaded(procs) {
         assert_eq!(pr.into_buffer(), data);
@@ -69,24 +72,44 @@ fn threaded_reduce() {
 
 #[test]
 fn threaded_matches_lockstep() {
-    // Same collective, both runtimes, identical results.
-    use circulant_bcast::collectives::bcast_sim;
+    // Same collective, both backends of one Communicator, identical
+    // results and identical cost accounting.
+    use circulant_bcast::comm::{Algo, BackendKind, BcastReq, CommBuilder};
     use circulant_bcast::sim::UnitCost;
     let p = 13usize;
     let m = 77usize;
     let n = 7usize;
     let data: Vec<i64> = (0..m as i64).map(|i| i * 31 % 101).collect();
 
-    let lockstep = bcast_sim(p, 3, &data, n, 8, &UnitCost).unwrap();
+    let mk = || BcastReq::new(3, &data).algo(Algo::Circulant).blocks(n).elem_bytes(8);
+    let lockstep = CommBuilder::new(p)
+        .cost_model(UnitCost)
+        .backend(BackendKind::Lockstep)
+        .build()
+        .bcast(mk())
+        .unwrap();
+    let threaded = CommBuilder::new(p)
+        .cost_model(UnitCost)
+        .backend(BackendKind::Threaded)
+        .build()
+        .bcast(mk())
+        .unwrap();
+    assert_eq!(lockstep.buffers, threaded.buffers);
+    assert_eq!(lockstep.stats.messages, threaded.stats.messages);
+    assert_eq!(lockstep.stats.bytes, threaded.stats.bytes);
+    assert_eq!(lockstep.stats.rounds, threaded.stats.rounds);
+    assert_eq!(lockstep.stats.active_rounds, threaded.stats.active_rounds);
+    assert!((lockstep.stats.time - threaded.stats.time).abs() < 1e-12);
 
+    // And the raw proc-level threaded driver agrees too.
     let world = World::new(p);
     let geom = BlockGeometry::new(m, n);
     let procs: Vec<BcastProc<i64>> = (0..p)
         .map(|r| BcastProc::new(&world, r, 3, geom, if r == 3 { Some(&data[..]) } else { None }))
         .collect();
-    let threaded: Vec<Vec<i64>> =
+    let raw: Vec<Vec<i64>> =
         run_threaded(procs).into_iter().map(|pr| pr.into_buffer()).collect();
-    assert_eq!(lockstep.buffers, threaded);
+    assert_eq!(lockstep.buffers, raw);
 }
 
 #[test]
