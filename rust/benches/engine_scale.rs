@@ -1,0 +1,97 @@
+//! Engine scale trajectory: full-network broadcast simulation from
+//! p = 2^10 up to p = 2^20 (n = 64 blocks) on the sparse engine, with a
+//! lockstep-`Network` comparison while the lockstep simulator is still
+//! feasible. This is the receipts bench for the `sim::engine` tentpole:
+//! the lockstep driver's per-round `0..p` scans and per-message `Vec`
+//! clones stop around a few thousand ranks; the engine's active-set
+//! worklist plus offset-passing arena carries the same machine-model
+//! simulation to the paper's 2^20 regime in seconds.
+//!
+//! Usage: `cargo bench --bench engine_scale -- [MAX_EXP]`
+//! where MAX_EXP bounds the largest p = 2^MAX_EXP (default 20; CI smoke
+//! runs 17). Simulated results are cross-checked per size: round count
+//! must be the optimal n - 1 + q and, where the lockstep run exists, all
+//! statistics must match exactly.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use circulant_bcast::collectives::bcast::build_bcast_procs;
+use circulant_bcast::collectives::common::{BlockGeometry, ScheduleSource};
+use circulant_bcast::schedule::{ceil_log2, Skips};
+use circulant_bcast::sim::{CirculantEngine, LinearCost, Network, RunStats};
+
+const N_BLOCKS: usize = 64;
+/// Elements per block (payload lengths only drive byte accounting).
+const BLOCK_ELEMS: usize = 16;
+const ELEM_BYTES: usize = 4;
+/// Largest p the lockstep comparison runs at (beyond this it dominates
+/// the bench's wall time, which is exactly the point).
+const LOCKSTEP_MAX_EXP: u32 = 13;
+
+fn main() {
+    let max_exp: u32 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20)
+        .clamp(10, 24);
+    let cost = LinearCost::hpc_default();
+    let m = N_BLOCKS * BLOCK_ELEMS;
+
+    println!("=== engine_scale: full-network bcast simulation, n = {N_BLOCKS} blocks ===");
+    println!("(p up to 2^{max_exp}; lockstep Network comparison up to 2^{LOCKSTEP_MAX_EXP})\n");
+    println!(
+        "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "p", "rounds", "build(ms)", "engine(ms)", "lockstep(ms)", "messages", "msgs/µs"
+    );
+
+    for exp in 10..=max_exp {
+        // Off-by-one p exercises the non-power-of-two schedule structure.
+        let p = (1usize << exp) + usize::from(exp % 2 == 1);
+        let q = ceil_log2(p);
+        let sk = Arc::new(Skips::new(p));
+        let src = ScheduleSource::Direct(&sk);
+        let geom = BlockGeometry::new(m, N_BLOCKS);
+
+        let t = Instant::now();
+        let eng = CirculantEngine::new(&src, 0, geom);
+        let build_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        let stats = eng.run_bcast(ELEM_BYTES, &cost).expect("engine bcast");
+        let engine_ms = t.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(stats.rounds, N_BLOCKS - 1 + q, "p={p}: rounds must be optimal");
+
+        let lockstep_ms = if exp <= LOCKSTEP_MAX_EXP {
+            let data: Vec<u32> = (0..m as u32).collect();
+            let t = Instant::now();
+            let mut procs = build_bcast_procs(&src, 0, geom, &data);
+            let lstats: RunStats =
+                Network::new(p).run(&mut procs, ELEM_BYTES, &cost).expect("lockstep bcast");
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(lstats.rounds, stats.rounds, "p={p}");
+            assert_eq!(lstats.messages, stats.messages, "p={p}");
+            assert_eq!(lstats.bytes, stats.bytes, "p={p}");
+            assert_eq!(lstats.active_rounds, stats.active_rounds, "p={p}");
+            assert_eq!(lstats.max_rank_bytes, stats.max_rank_bytes, "p={p}");
+            assert!((lstats.time - stats.time).abs() < 1e-9, "p={p}");
+            format!("{ms:>12.1}")
+        } else {
+            format!("{:>12}", "-")
+        };
+
+        println!(
+            "{:>10} {:>8} {:>12.1} {:>12.1} {} {:>12} {:>10.1}",
+            p,
+            stats.rounds,
+            build_ms,
+            engine_ms,
+            lockstep_ms,
+            stats.messages,
+            stats.messages as f64 / (engine_ms * 1e3),
+        );
+    }
+    println!("\n(build = schedule arena fill via recv/send_schedule_into, O(p log p);");
+    println!(" engine = active-set simulation; lockstep = Network with per-rank procs.");
+    println!(" Identical statistics where both run — the differential receipts.)");
+}

@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use circulant_bcast::collectives::{tuning, SumOp};
-use circulant_bcast::comm::{Algo, BcastReq, CommBuilder, ReduceReq};
+use circulant_bcast::comm::{Algo, BackendKind, BcastReq, CommBuilder, ReduceReq};
 use circulant_bcast::sim::{HierarchicalCost, LinearCost};
 
 const SCALE: usize = 1024;
@@ -41,10 +41,17 @@ fn main() {
     // Total message sizes in MPI_INT elements (full-size, pre-scaling).
     let sizes: [usize; 6] = [1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24];
 
-    println!("=== Figure 1: Bcast + Reduce, new (circulant, F=70) vs native ===");
+    // Any backend drives the sweep (CBCAST_BACKEND=lockstep|threaded|engine);
+    // simulated times are backend-independent, only wall time changes.
+    let backend = BackendKind::from_env();
+    println!(
+        "=== Figure 1: Bcast + Reduce, new (circulant, F=70) vs native [{} backend] ===",
+        backend.name()
+    );
     for (label, nodes, cores) in configs {
         let p = nodes * cores;
-        let comm = CommBuilder::new(p).cost_model(scaled_cost(cores)).build();
+        let comm =
+            CommBuilder::new(p).cost_model(scaled_cost(cores)).backend(backend).build();
         println!("\n--- p = {label} ({p} ranks), hierarchical VEGA-like model ---");
         println!(
             "{:>12} {:>6} {:>12} {:>12} {:>8} | {:>12} {:>12} {:>8}",

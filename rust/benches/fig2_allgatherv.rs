@@ -12,7 +12,7 @@
 //! of magnitude on the degenerate problem.
 
 use circulant_bcast::collectives::tuning;
-use circulant_bcast::comm::{Algo, AllgathervReq, BcastReq, CommBuilder};
+use circulant_bcast::comm::{Algo, AllgathervReq, BackendKind, BcastReq, CommBuilder};
 use circulant_bcast::coordinator::Dist;
 use circulant_bcast::sim::{HierarchicalCost, LinearCost};
 
@@ -30,10 +30,17 @@ fn main() {
         inter: LinearCost { alpha: base.inter.alpha, beta: base.inter.beta * SCALE as f64 },
         nic_share: base.nic_share,
     };
-    let comm = CommBuilder::new(p).cost_model(cost).build();
+    // CBCAST_BACKEND selects the execution backend (the bcast reference
+    // rides the engine's fast path; allgatherv falls back to lockstep
+    // under the engine backend — see comm::request::Algo docs).
+    let backend = BackendKind::from_env();
+    let comm = CommBuilder::new(p).cost_model(cost).backend(backend).build();
     let sizes: [usize; 5] = [1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22];
 
-    println!("=== Figure 2: Allgatherv, new (circulant, G=40) vs native (ring) ===");
+    println!(
+        "=== Figure 2: Allgatherv, new (circulant, G=40) vs native (ring) [{} backend] ===",
+        backend.name()
+    );
     println!("p = {nodes}x{cores} = {p}, small-cluster hierarchical model, MPI_INT\n");
     println!(
         "{:>10} {:>12} {:>6} {:>12} {:>12} {:>8} {:>14}",

@@ -15,14 +15,14 @@
 
 use std::time::Instant;
 
-use circulant_bcast::comm::{Algo, BcastReq, CommBuilder, Communicator};
+use circulant_bcast::comm::{Algo, BackendKind, BcastReq, CommBuilder, Communicator};
 use circulant_bcast::sim::UnitCost;
 
 const CALLS: usize = 64;
 const N_BLOCKS: usize = 4;
 
-fn persistent(p: usize, data: &[i32]) -> (f64, f64, u64, u64) {
-    let comm = CommBuilder::new(p).cost_model(UnitCost).build();
+fn persistent(p: usize, data: &[i32], backend: BackendKind) -> (f64, f64, u64, u64) {
+    let comm = CommBuilder::new(p).cost_model(UnitCost).backend(backend).build();
     let run = |comm: &Communicator, root: usize| {
         let t = Instant::now();
         let out = comm
@@ -41,10 +41,10 @@ fn persistent(p: usize, data: &[i32]) -> (f64, f64, u64, u64) {
     (first, rest, hits, misses)
 }
 
-fn throwaway(p: usize, data: &[i32]) -> f64 {
+fn throwaway(p: usize, data: &[i32], backend: BackendKind) -> f64 {
     let t = Instant::now();
     for call in 0..CALLS {
-        let comm = CommBuilder::new(p).cost_model(UnitCost).build();
+        let comm = CommBuilder::new(p).cost_model(UnitCost).backend(backend).build();
         let out = comm
             .bcast(BcastReq::new(call % p, data).algo(Algo::Circulant).blocks(N_BLOCKS))
             .expect("bcast");
@@ -54,7 +54,14 @@ fn throwaway(p: usize, data: &[i32]) -> f64 {
 }
 
 fn main() {
-    println!("=== Repeated traffic: persistent Communicator vs per-call rebuild ===");
+    // The cache receipts below hold for every backend: lockstep/threaded
+    // serve per-rank procs from the cache, the engine serves its schedule
+    // arena from the same cache at service scale (p <= 4096).
+    let backend = BackendKind::from_env();
+    println!(
+        "=== Repeated traffic: persistent Communicator vs per-call rebuild [{} backend] ===",
+        backend.name()
+    );
     println!("{CALLS} broadcasts per config, roots rotating over all ranks\n");
     println!(
         "{:>8} {:>14} {:>16} {:>16} {:>9} {:>16}",
@@ -62,8 +69,8 @@ fn main() {
     );
     for p in [64usize, 256, 1024, 4096] {
         let data: Vec<i32> = (0..256).collect();
-        let (first, steady, hits, misses) = persistent(p, &data);
-        let rebuild = throwaway(p, &data);
+        let (first, steady, hits, misses) = persistent(p, &data, backend);
+        let rebuild = throwaway(p, &data, backend);
         println!(
             "{p:>8} {:>14.1} {:>16.1} {:>16.1} {:>8.2}x {:>10}/{}",
             first * 1e6,

@@ -80,17 +80,9 @@ impl ScheduleTable {
     /// rank `rel`: `recv` or `send` entry per `which`.
     #[inline]
     fn value_at(&self, rel: usize, j: usize, recv: bool) -> i64 {
-        let q = self.q();
-        let i = j + self.x;
-        let k = i % q;
+        let (k, delta) = self.round_params(j);
         let base = if recv { self.scheds[rel].recv[k] } else { self.scheds[rel].send[k] };
-        // Apply the x-shift and phase advance (see PhasedSchedule docs).
-        let mut v = base - self.x as i64;
-        if k < self.x {
-            v += q as i64;
-        }
-        let i0 = if k >= self.x { k } else { k + q };
-        v + (q * ((i - i0) / q)) as i64
+        base + delta
     }
 
     /// Receive-block value of relative rank `rel` at network round `j`.
@@ -108,19 +100,12 @@ impl ScheduleTable {
     /// Per-round constants `(k, delta)` such that the phase-advanced
     /// value for any relative rank is `scheds[rel].{recv,send}[k] + delta`
     /// — hoists the round arithmetic out of the per-root packing loops
-    /// (which visit up to `p` roots per rank per round).
+    /// (which visit up to `p` roots per rank per round). One shared
+    /// definition with the sparse engine
+    /// ([`super::common::phase_params`]).
     #[inline]
     pub fn round_params(&self, j: usize) -> (usize, i64) {
-        let q = self.q();
-        let i = j + self.x;
-        let k = i % q;
-        let mut delta = -(self.x as i64);
-        if k < self.x {
-            delta += q as i64;
-        }
-        let i0 = if k >= self.x { k } else { k + q };
-        delta += (q * ((i - i0) / q)) as i64;
-        (k, delta)
+        super::common::phase_params(self.q(), self.x, j)
     }
 
     /// `recv` entry of `rel` given hoisted round params.

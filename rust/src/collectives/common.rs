@@ -233,6 +233,27 @@ pub fn phased_for(sk: &Arc<Skips>, rank: usize, root: usize, n: usize) -> Phased
     ScheduleSource::Direct(sk).phased(rank, root, n)
 }
 
+/// The rank-independent phase constants of Algorithm 1 for network round
+/// `j` under virtual-round offset `x`: the slot `k` and the shift `delta`
+/// such that the phased value of any rank's raw schedule entry is
+/// `row[k] + delta` (see [`PhasedSchedule`] for the derivation; that type
+/// keeps its own pre-shifted representation, which the
+/// `phased_matches_paper_inplace_updates` test pins to this formula).
+/// The one definition shared by the Algorithm-7 `ScheduleTable` and the
+/// sparse [`crate::sim::engine`] — requires `q > 0`.
+#[inline]
+pub fn phase_params(q: usize, x: usize, j: usize) -> (usize, i64) {
+    let i = j + x;
+    let k = i % q;
+    let mut delta = -(x as i64);
+    if k < x {
+        delta += q as i64;
+    }
+    let i0 = if k >= x { k } else { k + q };
+    delta += (q * ((i - i0) / q)) as i64;
+    (k, delta)
+}
+
 /// Where per-rank schedules come from when constructing a collective's
 /// state machines: computed directly (throwaway, the legacy `*_sim`
 /// path) or served from a shared [`ScheduleCache`] (the
@@ -277,6 +298,37 @@ impl ScheduleSource<'_> {
         let rel = (rank + p - root % p) % p;
         let sched = self.schedule(rel);
         PhasedSchedule::new(sk.clone(), &sched, n)
+    }
+
+    /// Fill `recv_out[0..q]` / `send_out[0..q]` with relative rank `rel`'s
+    /// raw schedule rows; returns the baseblock. The allocation-free
+    /// row-filling path used by [`crate::sim::engine`]'s flat schedule
+    /// arena: on the `Direct` path it runs the stack-array cores
+    /// ([`crate::schedule::recv_schedule_into`] /
+    /// [`crate::schedule::send_schedule_into`]) with **zero** heap
+    /// allocation per rank; on the `Cached` path it copies the shared
+    /// entry (computing it on miss), so repeated engine traffic on one
+    /// communicator reuses schedules exactly like the proc-based backends.
+    pub fn schedule_rows_into(
+        &self,
+        rel: usize,
+        recv_out: &mut [i64],
+        send_out: &mut [i64],
+    ) -> usize {
+        match self {
+            ScheduleSource::Direct(sk) => {
+                let bb = crate::schedule::recv_schedule_into(sk, rel, recv_out);
+                crate::schedule::send_schedule_into(sk, rel, bb, send_out);
+                bb
+            }
+            ScheduleSource::Cached { cache, sk } => {
+                let s = cache.get(sk.p(), rel);
+                let q = sk.q();
+                recv_out[..q].copy_from_slice(&s.recv);
+                send_out[..q].copy_from_slice(&s.send);
+                s.baseblock
+            }
+        }
     }
 }
 
@@ -354,6 +406,28 @@ mod tests {
                         recv[k] += q as i64;
                         send[k] += q as i64;
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_rows_into_matches_compute_on_both_paths() {
+        for p in [1usize, 2, 9, 17, 18, 33, 100] {
+            let sk = Arc::new(Skips::new(p));
+            let q = sk.q();
+            let cache = ScheduleCache::new();
+            let direct = ScheduleSource::Direct(&sk);
+            let cached = ScheduleSource::Cached { cache: &cache, sk: &sk };
+            let mut rbuf = vec![0i64; q];
+            let mut sbuf = vec![0i64; q];
+            for rel in 0..p {
+                let want = Schedule::compute(&sk, rel);
+                for src in [&direct, &cached] {
+                    let bb = src.schedule_rows_into(rel, &mut rbuf, &mut sbuf);
+                    assert_eq!(bb, want.baseblock, "p={p} rel={rel}");
+                    assert_eq!(rbuf, want.recv, "p={p} rel={rel}");
+                    assert_eq!(sbuf, want.send, "p={p} rel={rel}");
                 }
             }
         }

@@ -13,8 +13,17 @@
 //!   validates that the schedules need no global synchrony. Cost
 //!   accounting is identical (same per-round max/sum), but schedule bugs
 //!   panic the rank thread instead of returning an error.
+//! * [`EngineBackend`] — the sparse, zero-copy engine
+//!   ([`crate::sim::engine`]) for full-network simulation at up to
+//!   millions of ranks. The engine evaluates the circulant schedules
+//!   directly (active-set worklist, arena payloads), so it accelerates
+//!   the schedule-driven collectives: the [`super::Communicator`]
+//!   dispatches circulant broadcast and reduce onto it, and every other
+//!   (kind, algorithm) combination — generic [`RankProc`] state machines
+//!   whose activity the engine cannot know — runs on the lockstep
+//!   [`Network`], which is what this trait impl does.
 //!
-//! Both sit behind one [`ExecBackend`] trait; [`BackendKind`] is the
+//! All sit behind one [`ExecBackend`] trait; [`BackendKind`] is the
 //! value-level selector a [`super::Communicator`] stores.
 
 use crate::collectives::common::Element;
@@ -87,12 +96,45 @@ impl ExecBackend for ThreadedBackend {
     }
 }
 
+/// The sparse engine as an [`ExecBackend`].
+///
+/// The engine's fast paths are *schedule-driven*, not proc-driven, so the
+/// [`super::Communicator`] routes circulant broadcast/reduce requests to
+/// [`crate::sim::engine::CirculantEngine`] directly when this backend is
+/// selected; the generic `execute` entry point — reached for every other
+/// algorithm and collective — falls back to the lockstep [`Network`]
+/// driver with full machine-model enforcement.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineBackend;
+
+impl ExecBackend for EngineBackend {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn execute<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        LockstepBackend.execute::<T, P>(procs, elem_bytes, cost)
+    }
+}
+
 /// Value-level backend selector stored by a [`super::Communicator`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
     #[default]
     Lockstep,
     Threaded,
+    /// The sparse million-rank engine (circulant bcast/reduce run on
+    /// [`crate::sim::engine::CirculantEngine`]; everything else lockstep).
+    Engine,
 }
 
 impl BackendKind {
@@ -100,7 +142,28 @@ impl BackendKind {
         match self {
             BackendKind::Lockstep => LockstepBackend.name(),
             BackendKind::Threaded => ThreadedBackend.name(),
+            BackendKind::Engine => EngineBackend.name(),
         }
+    }
+
+    /// CLI/bench-edge parser (library code uses the enum directly).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "lockstep" | "network" => BackendKind::Lockstep,
+            "threaded" | "threads" => BackendKind::Threaded,
+            "engine" | "sparse" => BackendKind::Engine,
+            _ => return None,
+        })
+    }
+
+    /// Backend selected by the `CBCAST_BACKEND` environment variable
+    /// (`lockstep` | `threaded` | `engine`), defaulting to lockstep —
+    /// how the benches accept either backend without changing code.
+    pub fn from_env() -> BackendKind {
+        std::env::var("CBCAST_BACKEND")
+            .ok()
+            .and_then(|s| BackendKind::parse(s.trim()))
+            .unwrap_or_default()
     }
 
     pub(crate) fn execute<T, P>(
@@ -116,6 +179,7 @@ impl BackendKind {
         match self {
             BackendKind::Lockstep => LockstepBackend.execute::<T, P>(procs, elem_bytes, cost),
             BackendKind::Threaded => ThreadedBackend.execute::<T, P>(procs, elem_bytes, cost),
+            BackendKind::Engine => EngineBackend.execute::<T, P>(procs, elem_bytes, cost),
         }
     }
 }
@@ -180,9 +244,23 @@ mod tests {
     fn backend_kind_dispatch() {
         assert_eq!(BackendKind::Lockstep.name(), "lockstep");
         assert_eq!(BackendKind::Threaded.name(), "threaded");
+        assert_eq!(BackendKind::Engine.name(), "engine");
         assert_eq!(BackendKind::default(), BackendKind::Lockstep);
         let (stats, _) =
             BackendKind::Threaded.execute::<u32, Shift>(shifts(4), 4, &UnitCost).unwrap();
         assert_eq!(stats.messages, 4 * 3);
+        // Generic procs under the engine backend run the lockstep driver.
+        let (stats, _) =
+            BackendKind::Engine.execute::<u32, Shift>(shifts(4), 4, &UnitCost).unwrap();
+        assert_eq!(stats.messages, 4 * 3);
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("lockstep"), Some(BackendKind::Lockstep));
+        assert_eq!(BackendKind::parse("threaded"), Some(BackendKind::Threaded));
+        assert_eq!(BackendKind::parse("engine"), Some(BackendKind::Engine));
+        assert_eq!(BackendKind::parse("sparse"), Some(BackendKind::Engine));
+        assert!(BackendKind::parse("nope").is_none());
     }
 }

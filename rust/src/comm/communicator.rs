@@ -16,6 +16,7 @@ use crate::collectives::reduce_scatter::{build_reduce_scatter_procs, ReduceScatt
 use crate::collectives::rhalving::RhalvingProc;
 use crate::schedule::{ScheduleCache, Skips};
 use crate::sim::cost::{CostModel, LinearCost};
+use crate::sim::engine::{CirculantEngine, ENGINE_CACHE_MAX_P};
 use crate::sim::network::{RankProc, RunStats, SimError};
 
 use super::backend::{build_procs, BackendKind};
@@ -178,6 +179,19 @@ impl Communicator {
         ScheduleSource::Cached { cache: &self.cache, sk: &self.sk }
     }
 
+    /// Schedule source for the sparse engine: cache-served at service
+    /// scale (repeated traffic reuses schedules exactly like the proc
+    /// backends), computed directly with the allocation-free cores beyond
+    /// [`ENGINE_CACHE_MAX_P`] (a HashMap of `p` `Arc` entries is the
+    /// wrong shape at million-rank scale).
+    fn engine_schedules(&self) -> ScheduleSource<'_> {
+        if self.p <= ENGINE_CACHE_MAX_P {
+            self.schedules()
+        } else {
+            ScheduleSource::Direct(&self.sk)
+        }
+    }
+
     /// Cached all-relative-ranks schedule table for `n` blocks (the
     /// Algorithm 7 machinery): built once per block count from the
     /// schedule cache, then shared by every later call.
@@ -231,6 +245,21 @@ impl Communicator {
         let m = req.data.len();
         let algo = req.algo.resolve(Kind::Bcast, m, req.elem_bytes, req.blocks);
         let (stats, buffers) = match algo {
+            Algo::Circulant if self.backend == BackendKind::Engine => {
+                // The sparse engine simulates the schedule directly (a
+                // broadcast never transforms payloads) and errors if any
+                // rank ends incomplete. NOTE: assembling `Outcome::buffers`
+                // is O(p·m) — the API contract every backend shares — so
+                // the million-rank regime belongs to `CirculantEngine`
+                // directly (see `benches/engine_scale.rs`); through this
+                // method the engine "only" removes the simulation cost.
+                let n = self.blocks_for(Kind::Bcast, m, req.blocks);
+                let geom = BlockGeometry::new(m, n);
+                let eng = CirculantEngine::new(&self.engine_schedules(), req.root, geom);
+                let stats = eng.run_bcast(req.elem_bytes, cost)?;
+                let bufs: Vec<Vec<T>> = (0..p).map(|_| req.data.to_vec()).collect();
+                (stats, bufs)
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::Bcast, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
@@ -308,6 +337,14 @@ impl Communicator {
         }
         let algo = req.algo.resolve(Kind::Reduce, m, req.elem_bytes, req.blocks);
         let (stats, buffer) = match algo {
+            Algo::Circulant if self.backend == BackendKind::Engine => {
+                let n = self.blocks_for(Kind::Reduce, m, req.blocks);
+                let geom = BlockGeometry::new(m, n);
+                let eng = CirculantEngine::new(&self.engine_schedules(), req.root, geom);
+                let (stats, buffer) =
+                    eng.run_reduce(req.inputs, req.op.as_ref(), req.elem_bytes, cost)?;
+                (stats, buffer)
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::Reduce, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
@@ -824,6 +861,38 @@ mod tests {
         let large: Vec<i32> = (0..100_000).collect();
         let out = c.bcast(BcastReq::new(0, &large)).unwrap();
         assert_eq!(out.algo, Algo::Circulant);
+    }
+
+    #[test]
+    fn engine_backend_matches_lockstep() {
+        let p = 13usize;
+        let data: Vec<i64> = (0..161).map(|i| i * 5 % 89).collect();
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..77).map(|i| ((r + 1) * (i + 2)) as i64 % 101).collect())
+            .collect();
+        let mk = |backend| CommBuilder::new(p).cost_model(UnitCost).backend(backend).build();
+        for root in [0usize, 5, 12] {
+            let a = mk(BackendKind::Lockstep)
+                .bcast(BcastReq::new(root, &data).algo(Algo::Circulant).blocks(6))
+                .unwrap();
+            let b = mk(BackendKind::Engine)
+                .bcast(BcastReq::new(root, &data).algo(Algo::Circulant).blocks(6))
+                .unwrap();
+            assert_eq!(a.buffers, b.buffers, "root={root}");
+            assert_eq!(a.stats.rounds, b.stats.rounds, "root={root}");
+            assert_eq!(a.stats.messages, b.stats.messages, "root={root}");
+            assert_eq!(a.stats.bytes, b.stats.bytes, "root={root}");
+            assert_eq!(a.stats.max_rank_bytes, b.stats.max_rank_bytes, "root={root}");
+            assert!(a.all_received() && b.all_received());
+
+            let req = || ReduceReq::new(root, &inputs, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(4);
+            let ra = mk(BackendKind::Lockstep).reduce(req()).unwrap();
+            let rb = mk(BackendKind::Engine).reduce(req()).unwrap();
+            assert_eq!(ra.buffers, rb.buffers, "root={root}");
+            assert_eq!(ra.stats.messages, rb.stats.messages, "root={root}");
+        }
     }
 
     #[test]

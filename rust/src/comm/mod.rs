@@ -13,8 +13,11 @@
 //!   calls with *different roots*, since schedules are root-relative —
 //!   reuse cached schedules instead of recomputing them,
 //! * a pluggable execution backend ([`ExecBackend`]: the lockstep
-//!   round-based [`crate::sim::Network`] simulator, or the
-//!   [`crate::sim::threads`] runtime where every rank is an OS thread),
+//!   round-based [`crate::sim::Network`] simulator, the
+//!   [`crate::sim::threads`] runtime where every rank is an OS thread, or
+//!   the sparse million-rank [`crate::sim::engine`] — circulant
+//!   broadcast/reduce run on the engine's active-set/arena fast path,
+//!   every other (kind, algorithm) combination on the lockstep driver),
 //! * a default [`crate::sim::CostModel`] and [`TuningParams`] for the
 //!   paper's block-count rules.
 //!
@@ -45,7 +48,9 @@ pub mod communicator;
 pub mod outcome;
 pub mod request;
 
-pub use backend::{build_procs, BackendKind, ExecBackend, LockstepBackend, ThreadedBackend};
+pub use backend::{
+    build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, ThreadedBackend,
+};
 pub use communicator::{CommBuilder, Communicator};
 pub use outcome::{CommError, Outcome};
 pub use request::{

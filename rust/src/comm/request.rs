@@ -39,6 +39,26 @@ impl Kind {
 pub const SMALL_MSG_BYTES: usize = 2048;
 
 /// Algorithm family to run a collective with.
+///
+/// # Backend-selection rules
+///
+/// The algorithm family and the execution backend
+/// ([`crate::comm::BackendKind`], chosen per communicator) compose as
+/// follows — [`Algo::Auto`] resolution is *backend-independent*, so all
+/// three backends agree on which algorithm runs (the differential
+/// backend-parity suite pins this):
+///
+/// * `Lockstep` drives every (kind, algorithm) pair on the round-based
+///   [`crate::sim::Network`] with full machine-model enforcement.
+/// * `Threaded` drives every pair on one OS thread per rank.
+/// * `Engine` runs [`Algo::Circulant`] broadcast and reduce on the sparse
+///   [`crate::sim::engine::CirculantEngine`]; every other pair — the
+///   all-collectives' per-root packing and all baseline algorithms are
+///   generic state machines — falls back to the lockstep driver with
+///   identical results and statistics. Note that every backend's
+///   `Outcome::buffers` assembly is inherently O(p·m); the true
+///   million-rank regime is served by `CirculantEngine`'s own API (as in
+///   `benches/engine_scale.rs`), which skips result materialization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// Pick automatically: the circulant pipeline with the paper's

@@ -27,7 +27,7 @@ pub mod verify;
 
 pub use baseblock::{all_baseblocks, baseblock, canonical_sequence};
 pub use cache::{Schedule, ScheduleCache};
-pub use recv::{recv_schedule, RecvSchedule};
-pub use send::{send_schedule, SendSchedule};
+pub use recv::{recv_schedule, recv_schedule_into, RecvSchedule};
+pub use send::{send_schedule, send_schedule_into, SendSchedule};
 pub use skips::{ceil_log2, Skips};
 pub use verify::{verify_all, verify_sampled, VerifyReport};

@@ -102,6 +102,22 @@ pub(crate) fn send_schedule_core(
     violations
 }
 
+/// Compute only the `sendblock` entries (no instrumentation wrapper) into
+/// a caller-provided buffer; returns the violation count. The allocation-
+/// free companion of [`crate::schedule::recv::recv_schedule_into`], used
+/// by the sparse simulation engine's flat schedule arena.
+///
+/// `b` is the processor's baseblock as returned by `recv_schedule_into`
+/// (the root's conventional `b = q` is substituted internally).
+pub fn send_schedule_into(sk: &Skips, r: usize, b: usize, out: &mut [i64]) -> usize {
+    let q = sk.q();
+    let b = if r == 0 { q } else { b };
+    let mut buf = [0i64; MAX_Q];
+    let violations = send_schedule_core(sk, r, b, &mut buf);
+    out[..q].copy_from_slice(&buf[..q]);
+    violations
+}
+
 /// Algorithm 6: compute the send schedule for processor `r` in `O(log p)`.
 pub fn send_schedule(sk: &Skips, r: usize) -> SendSchedule {
     let q = sk.q();

@@ -1,0 +1,724 @@
+//! The sparse, zero-copy simulation engine — full-network simulation of
+//! the circulant-schedule collectives at million-rank scale.
+//!
+//! The lockstep [`super::network::Network`] drives `p` boxed state
+//! machines by scanning `0..p` every round and cloning a fresh `Vec<T>`
+//! per message; that is the right *correctness instrument* but tops out
+//! around a few thousand ranks. The paper's point, however, is that
+//! schedule computation is O(log p) per rank with no communication — the
+//! interesting regime is `p` up to `2^20`, where per-round scans and
+//! per-message allocations dominate everything. This engine simulates the
+//! same machine model directly on the schedules:
+//!
+//! * **Active-set worklist** — only ranks that can act in a round are
+//!   visited. For broadcast the invariant is: a rank is in the worklist
+//!   iff it holds at least one block (ranks join exactly once, when their
+//!   first block arrives, and sends of round `j` scan only the ranks
+//!   active at the *start* of round `j`, preserving lockstep delivery
+//!   order). For reduction (reversed schedules) the worklist is pruned
+//!   from the tail as reversed time passes each rank's first forward send
+//!   round — computed in closed form from its schedule row, O(log p) per
+//!   rank, no scanning.
+//! * **Arena payload storage, offset-passing sends** — block payloads
+//!   live in one flat arena indexed by `(rank, block)` (`rank*m +
+//!   BlockGeometry::range(b)`); a "send" passes offsets into the arena
+//!   (reduction stages the sender's range through one reused per-round
+//!   scratch, mirroring the lockstep clone-at-send semantics without a
+//!   per-message allocation). A broadcast never transforms payloads at
+//!   all, so its arena degenerates to the caller's buffer plus a
+//!   `(rank, block)` *holds* bitmap — the simulation is payload-free.
+//! * **Allocation-free schedule evaluation** — all `p` schedule rows are
+//!   filled once through [`ScheduleSource::schedule_rows_into`] (backed
+//!   by [`crate::schedule::recv_schedule_into`] /
+//!   [`crate::schedule::send_schedule_into`] on the direct path) into two
+//!   flat `i8` arenas; the per-round phase shift is one `(slot, delta)`
+//!   pair shared by every rank (hoisted exactly like
+//!   `ScheduleTable::round_params`), so the hot path is an array load
+//!   plus an add.
+//!
+//! ## Accounting and enforcement contract
+//!
+//! [`RunStats`] accounting is identical to the lockstep [`Network`]: same
+//! message/byte counts (empty blocks still count as messages), same
+//! per-round `max` / total `sum` cost folding over *absolute* ranks (so
+//! hierarchical cost models see the same locality), same
+//! `max_rank_bytes`. On machine-model violations the engine returns the
+//! same [`SimError`] values: [`SimError::ReceivePortBusy`] and
+//! [`SimError::UnexpectedMessage`] abort mid-round exactly like the
+//! lockstep simulator; an expected-but-never-sent message surfaces as
+//! [`SimError::MissingMessage`] through a *deferred* completion check
+//! (per-rank holds bitmap for broadcast, closed-form expected-receive
+//! counts for reduction) that reconstructs the earliest offending round.
+//! Sending a block that was never received panics, like the proc state
+//! machines do. The only divergence is on *broken* schedules, where the
+//! deferred checks may report a different (but equally fatal) violation
+//! than the mid-round lockstep abort — full round-by-round enforcement
+//! remains the lockstep backend's job, exactly as it already is for the
+//! threaded runtime.
+//!
+//! [`Network`]: super::network::Network
+
+use std::sync::Arc;
+
+use crate::collectives::common::{phase_params, BlockGeometry, Element, ReduceOp, ScheduleSource};
+use crate::schedule::recv::MAX_Q;
+use crate::schedule::Skips;
+use crate::sim::cost::CostModel;
+use crate::sim::network::{RunStats, SimError};
+
+/// Above this `p`, the `comm` layer stops serving the engine's schedule
+/// rows from the shared [`crate::schedule::ScheduleCache`] (a HashMap of
+/// `p` `Arc` entries is the wrong shape at million-rank scale) and
+/// computes them directly with the allocation-free cores.
+pub const ENGINE_CACHE_MAX_P: usize = 1 << 12;
+
+/// The engine for one `(p, root, block geometry)` configuration: flat
+/// schedule arenas plus the phase bookkeeping of Algorithm 1. Build once,
+/// then run broadcasts ([`Self::run_bcast`]) and reductions
+/// ([`Self::run_reduce`]) over it.
+pub struct CirculantEngine {
+    sk: Arc<Skips>,
+    root: usize,
+    geom: BlockGeometry,
+    p: usize,
+    q: usize,
+    n: usize,
+    /// Virtual-round offset `x = (q - (n-1) mod q) mod q` of Algorithm 1.
+    x: usize,
+    rounds: usize,
+    /// `recv_rows[rel*q + k]` = raw `recvblock[k]` of relative rank `rel`.
+    /// Raw entries lie in `[-q, q)` and `q <= 64`, so `i8` holds them —
+    /// the whole table is `2·p·q` bytes (40 MiB at `p = 2^20`).
+    recv_rows: Vec<i8>,
+    /// `send_rows[rel*q + k]` = raw `sendblock[k]` of relative rank `rel`.
+    send_rows: Vec<i8>,
+}
+
+impl CirculantEngine {
+    /// Build the engine from a schedule source (cache-served or direct),
+    /// a broadcast/reduction root and the block geometry.
+    pub fn new(src: &ScheduleSource<'_>, root: usize, geom: BlockGeometry) -> Self {
+        let sk = src.skips().clone();
+        let p = sk.p();
+        assert!(root < p, "root {root} out of range for p = {p}");
+        let q = sk.q();
+        let n = geom.n;
+        let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
+        let rounds = if p == 1 { 0 } else { n - 1 + q };
+        let mut recv_rows = vec![0i8; p * q];
+        let mut send_rows = vec![0i8; p * q];
+        let mut rbuf = [0i64; MAX_Q];
+        let mut sbuf = [0i64; MAX_Q];
+        for rel in 0..p {
+            src.schedule_rows_into(rel, &mut rbuf[..q], &mut sbuf[..q]);
+            let row = rel * q;
+            for (dst, &v) in recv_rows[row..row + q].iter_mut().zip(&rbuf[..q]) {
+                debug_assert!((-(q as i64)..q as i64).contains(&v));
+                *dst = v as i8;
+            }
+            for (dst, &v) in send_rows[row..row + q].iter_mut().zip(&sbuf[..q]) {
+                debug_assert!((-(q as i64)..q as i64).contains(&v));
+                *dst = v as i8;
+            }
+        }
+        CirculantEngine { sk, root, geom, p, q, n, x, rounds, recv_rows, send_rows }
+    }
+
+    /// Direct-computation convenience (no cache) — the million-rank path.
+    pub fn from_skips(sk: &Arc<Skips>, root: usize, geom: BlockGeometry) -> Self {
+        Self::new(&ScheduleSource::Direct(sk), root, geom)
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Absolute rank of relative rank `rel`.
+    #[inline]
+    fn abs(&self, rel: usize) -> usize {
+        let t = rel + self.root;
+        if t >= self.p {
+            t - self.p
+        } else {
+            t
+        }
+    }
+
+    /// The round-wide phase constants: slot `k` and the shift `delta`
+    /// such that the phased schedule value of any rank at network round
+    /// `j` is `row[k] + delta` — the shared Algorithm-1 formula
+    /// ([`crate::collectives::common::phase_params`]).
+    #[inline]
+    fn round_params(&self, j: usize) -> (usize, i64) {
+        phase_params(self.q, self.x, j)
+    }
+
+    /// Closed-form activity profile of one schedule row: the number of
+    /// network rounds `j` in `0..rounds` whose phased value is
+    /// non-negative (restricted to slots passing `slot_ok`), and the
+    /// earliest such round. O(q) — per slot, the phased value first turns
+    /// non-negative at a computable cycle and stays non-negative after.
+    fn row_occupancy(&self, row: &[i8], slot_ok: impl Fn(usize) -> bool) -> (usize, usize) {
+        let q = self.q;
+        let x = self.x;
+        let rounds = self.rounds;
+        let mut count = 0usize;
+        let mut first = usize::MAX;
+        for k in 0..q {
+            if !slot_ok(k) {
+                continue;
+            }
+            // First network round with slot k, where delta = d0; each
+            // later occurrence (every q rounds) adds q to the value.
+            let j0 = (k + q - x) % q;
+            if j0 >= rounds {
+                continue;
+            }
+            let total = (rounds - 1 - j0) / q + 1;
+            let d0 = -(x as i64) + if k < x { q as i64 } else { 0 };
+            let v0 = row[k] as i64 + d0;
+            let c0 =
+                if v0 >= 0 { 0 } else { ((-v0 + q as i64 - 1) / q as i64) as usize };
+            if c0 < total {
+                count += total - c0;
+                first = first.min(j0 + c0 * q);
+            }
+        }
+        (count, first)
+    }
+
+    #[inline]
+    fn cap(&self, v: i64) -> Option<usize> {
+        if v < 0 {
+            None
+        } else if v as usize >= self.n {
+            Some(self.n - 1)
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Broadcast (Algorithm 1)
+    // ------------------------------------------------------------------
+
+    /// Simulate the full `n`-block broadcast over all `p` ranks.
+    ///
+    /// Payload-free: a broadcast moves blocks of the root's buffer
+    /// unchanged, so only the `(rank, block)` holds bitmap and the block
+    /// *lengths* (for byte/cost accounting) are simulated. Returns the
+    /// run statistics iff every rank ends holding every block; machine-
+    /// model violations return the same [`SimError`]s as the lockstep
+    /// simulator (see the module docs for the enforcement contract).
+    pub fn run_bcast(&self, elem_bytes: usize, cost: &dyn CostModel) -> Result<RunStats, SimError> {
+        let p = self.p;
+        let q = self.q;
+        let n = self.n;
+        let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
+        if p == 1 {
+            return Ok(stats);
+        }
+        let words = (n + 63) / 64;
+        let mut holds = vec![0u64; p * words];
+        for (w, word) in holds[..words].iter_mut().enumerate() {
+            // The root (rel 0) starts with every block.
+            *word = if (w + 1) * 64 <= n { u64::MAX } else { (1u64 << (n - w * 64)) - 1 };
+        }
+        let mut held: Vec<u32> = vec![0; p];
+        held[0] = n as u32;
+        let mut active: Vec<u32> = Vec::with_capacity(p);
+        active.push(0);
+        let mut recv_stamp: Vec<u32> = vec![0; p];
+        let mut recv_from: Vec<u32> = vec![0; p];
+        let mut rank_bytes: Vec<usize> = vec![0; p];
+        let mut deliveries: Vec<(u32, u32)> = Vec::new();
+
+        for j in 0..self.rounds {
+            let (k, delta) = self.round_params(j);
+            let skip = self.sk.skip(k);
+            let stamp = (j + 1) as u32;
+            let mut round_time = 0.0f64;
+            let mut any = false;
+            // Ranks activated during round j join the worklist for j+1:
+            // scan only the prefix that was active at the round start.
+            let live = active.len();
+            for &rel32 in &active[..live] {
+                let rel = rel32 as usize;
+                let t_rel = {
+                    let t = rel + skip;
+                    if t >= p {
+                        t - p
+                    } else {
+                        t
+                    }
+                };
+                if t_rel == 0 {
+                    continue; // never send to the root (it has everything)
+                }
+                let b = match self.cap(self.send_rows[rel * q + k] as i64 + delta) {
+                    Some(b) => b,
+                    None => continue,
+                };
+                if holds[rel * words + b / 64] & (1u64 << (b % 64)) == 0 {
+                    panic!(
+                        "engine: rank {} (rel {rel}) scheduled to send block {b} in round \
+                         {j} but it has not been received — schedule violation",
+                        self.abs(rel)
+                    );
+                }
+                let from = self.abs(rel);
+                let to = self.abs(t_rel);
+                // Receiver-side expectation cross-check (Conditions 1+2).
+                let rb = match self.cap(self.recv_rows[t_rel * q + k] as i64 + delta) {
+                    Some(rb) => rb,
+                    None => {
+                        return Err(SimError::UnexpectedMessage {
+                            round: j,
+                            to,
+                            from,
+                            expected: None,
+                        })
+                    }
+                };
+                debug_assert_eq!(rb, b, "schedules disagree on the block (round {j})");
+                // One-ported receive enforcement.
+                if recv_stamp[t_rel] == stamp {
+                    return Err(SimError::ReceivePortBusy {
+                        round: j,
+                        to,
+                        first_from: recv_from[t_rel] as usize,
+                        second_from: from,
+                    });
+                }
+                recv_stamp[t_rel] = stamp;
+                recv_from[t_rel] = from as u32;
+                let bytes = self.geom.len(b) * elem_bytes;
+                stats.messages += 1;
+                stats.bytes += bytes;
+                rank_bytes[from] += bytes;
+                rank_bytes[to] += bytes;
+                round_time = round_time.max(cost.msg_time(from, to, bytes));
+                any = true;
+                deliveries.push((t_rel as u32, rb as u32));
+            }
+            // Deliver after the send scan: nothing received in round j is
+            // visible to sends before round j+1 (lockstep order).
+            for &(to_rel, b) in &deliveries {
+                let (to_rel, b) = (to_rel as usize, b as usize);
+                let w = to_rel * words + b / 64;
+                let bit = 1u64 << (b % 64);
+                if holds[w] & bit == 0 {
+                    holds[w] |= bit;
+                    if held[to_rel] == 0 {
+                        active.push(to_rel as u32);
+                    }
+                    held[to_rel] += 1;
+                }
+            }
+            deliveries.clear();
+            if any {
+                stats.active_rounds += 1;
+                stats.time += round_time;
+            }
+        }
+        stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+        if let Some(err) = self.find_missing_bcast(&holds, words, &held) {
+            return Err(err);
+        }
+        Ok(stats)
+    }
+
+    /// Deferred missing-message check for broadcast: if any rank ended
+    /// without all `n` blocks, reconstruct the earliest round in which an
+    /// expected block failed to arrive (best effort on broken schedules —
+    /// the lockstep simulator, which aborts mid-run, stays authoritative).
+    fn find_missing_bcast(&self, holds: &[u64], words: usize, held: &[u32]) -> Option<SimError> {
+        if held.iter().all(|&c| c as usize == self.n) {
+            return None;
+        }
+        let q = self.q;
+        for j in 0..self.rounds {
+            let (k, delta) = self.round_params(j);
+            let skip = self.sk.skip(k);
+            for rel in 1..self.p {
+                if held[rel] as usize == self.n {
+                    continue;
+                }
+                let rval = self.recv_rows[rel * q + k] as i64 + delta;
+                let b = match self.cap(rval) {
+                    Some(b) => b,
+                    None => continue,
+                };
+                if holds[rel * words + b / 64] & (1u64 << (b % 64)) == 0 {
+                    let from_rel = {
+                        let t = rel + self.p - skip;
+                        if t >= self.p {
+                            t - self.p
+                        } else {
+                            t
+                        }
+                    };
+                    return Some(SimError::MissingMessage {
+                        round: j,
+                        rank: self.abs(rel),
+                        expected_from: self.abs(from_rel),
+                    });
+                }
+            }
+        }
+        unreachable!("engine: incomplete broadcast without a reconstructable missing message")
+    }
+
+    // ------------------------------------------------------------------
+    // Reduction (reversed schedules, Observation 1.3)
+    // ------------------------------------------------------------------
+
+    /// Simulate the full rooted reduction: `inputs[r]` is *absolute* rank
+    /// `r`'s `m`-element contribution; returns the run statistics and the
+    /// root's fully reduced buffer.
+    ///
+    /// All partials live in one `(rank, block)`-indexed arena; a send
+    /// stages the sender's arena range through a reused per-round scratch
+    /// (the lockstep clone-at-send, minus the per-message allocation) and
+    /// the receiver combines in place with ⊕.
+    pub fn run_reduce<T: Element>(
+        &self,
+        inputs: &[Vec<T>],
+        op: &dyn ReduceOp<T>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<T>), SimError> {
+        let p = self.p;
+        let q = self.q;
+        let m = self.geom.m;
+        assert_eq!(inputs.len(), p, "reduce needs one contribution per rank");
+        let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
+        if p == 1 {
+            assert_eq!(inputs[self.root].len(), m);
+            return Ok((stats, inputs[self.root].clone()));
+        }
+        // The payload arena: rel r's partial of block b lives at
+        // r*m + geom.range(b).
+        let mut arena: Vec<T> = Vec::with_capacity(p * m);
+        for rel in 0..p {
+            let inp = &inputs[self.abs(rel)];
+            assert_eq!(inp.len(), m, "reduce contributions must have {m} elements");
+            arena.extend_from_slice(inp);
+        }
+        // Activity profiles (closed form, O(log p) per rank): a rank
+        // sends in reversed round jr iff its *receive* row is non-negative
+        // at forward round i = rounds-1-jr, so its last reversed send
+        // passes when i drops below its first forward send round. A rank
+        // expects a receive iff its *send* row is non-negative and its
+        // forward to-processor is not the root.
+        let mut first_send = vec![usize::MAX; p];
+        let mut expect_recv = vec![0u32; p];
+        for rel in 0..p {
+            if rel != 0 {
+                let row = &self.recv_rows[rel * q..(rel + 1) * q];
+                let (_, first) = self.row_occupancy(row, |_| true);
+                first_send[rel] = first;
+            }
+            let (cnt, _) = self.row_occupancy(&self.send_rows[rel * q..(rel + 1) * q], |k| {
+                let t = rel + self.sk.skip(k);
+                (if t >= p { t - p } else { t }) != 0
+            });
+            expect_recv[rel] = cnt as u32;
+        }
+        // Active senders; the tail (largest first forward send round)
+        // deactivates first as reversed time sweeps i downwards.
+        let mut active: Vec<u32> =
+            (1..p as u32).filter(|&r| first_send[r as usize] != usize::MAX).collect();
+        active.sort_by_key(|&r| first_send[r as usize]);
+        let mut recv_stamp: Vec<u32> = vec![0; p];
+        let mut recv_from: Vec<u32> = vec![0; p];
+        let mut recv_count: Vec<u32> = vec![0; p];
+        let mut rank_bytes: Vec<usize> = vec![0; p];
+        let mut scratch: Vec<T> = Vec::new();
+        // (dst_rel, dst_block, scratch offset, payload len)
+        let mut deliveries: Vec<(usize, usize, usize, usize)> = Vec::new();
+
+        for jr in 0..self.rounds {
+            let i = self.rounds - 1 - jr;
+            while let Some(&last) = active.last() {
+                if first_send[last as usize] > i {
+                    active.pop();
+                } else {
+                    break;
+                }
+            }
+            let (k, delta) = self.round_params(i);
+            let skip = self.sk.skip(k);
+            let stamp = (jr + 1) as u32;
+            let mut round_time = 0.0f64;
+            let mut any = false;
+            for &rel32 in &active {
+                let rel = rel32 as usize;
+                // Reversal of the broadcast receive: forward our partial
+                // of recvblock[k] to the from-processor.
+                let b = match self.cap(self.recv_rows[rel * q + k] as i64 + delta) {
+                    Some(b) => b,
+                    None => continue,
+                };
+                let to_rel = {
+                    let t = rel + p - skip;
+                    if t >= p {
+                        t - p
+                    } else {
+                        t
+                    }
+                };
+                let from = self.abs(rel);
+                let to = self.abs(to_rel);
+                // Receiver-side cross-check (reversed Condition 2).
+                let rb = match self.cap(self.send_rows[to_rel * q + k] as i64 + delta) {
+                    Some(rb) => rb,
+                    None => {
+                        return Err(SimError::UnexpectedMessage {
+                            round: jr,
+                            to,
+                            from,
+                            expected: None,
+                        })
+                    }
+                };
+                debug_assert_eq!(rb, b, "schedules disagree on the block (reversed round {jr})");
+                if recv_stamp[to_rel] == stamp {
+                    return Err(SimError::ReceivePortBusy {
+                        round: jr,
+                        to,
+                        first_from: recv_from[to_rel] as usize,
+                        second_from: from,
+                    });
+                }
+                recv_stamp[to_rel] = stamp;
+                recv_from[to_rel] = from as u32;
+                recv_count[to_rel] += 1;
+                let (off, len) = self.geom.range(b);
+                // "Send": stage the sender's arena range in the round
+                // scratch so this round's combines see round-start state.
+                let s_off = scratch.len();
+                scratch.extend_from_slice(&arena[rel * m + off..rel * m + off + len]);
+                deliveries.push((to_rel, rb, s_off, len));
+                let bytes = len * elem_bytes;
+                stats.messages += 1;
+                stats.bytes += bytes;
+                rank_bytes[from] += bytes;
+                rank_bytes[to] += bytes;
+                round_time = round_time.max(cost.msg_time(from, to, bytes));
+                any = true;
+            }
+            for &(dst_rel, rb, s_off, len) in &deliveries {
+                let (d_off, d_len) = self.geom.range(rb);
+                let dst = &mut arena[dst_rel * m + d_off..dst_rel * m + d_off + d_len];
+                op.combine(dst, &scratch[s_off..s_off + len]);
+            }
+            deliveries.clear();
+            scratch.clear();
+            if any {
+                stats.active_rounds += 1;
+                stats.time += round_time;
+            }
+        }
+        stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+        if let Some(err) = self.find_missing_reduce(&recv_count, &expect_recv) {
+            return Err(err);
+        }
+        arena.truncate(m); // rel 0 = the root's fully reduced buffer
+        Ok((stats, arena))
+    }
+
+    /// Deferred missing-message check for reduction: compare actual
+    /// against closed-form expected receive counts; on mismatch,
+    /// reconstruct the earliest reversed round whose expected message had
+    /// no sender.
+    fn find_missing_reduce(&self, recv_count: &[u32], expect: &[u32]) -> Option<SimError> {
+        if recv_count.iter().zip(expect).all(|(a, b)| a == b) {
+            return None;
+        }
+        let p = self.p;
+        let q = self.q;
+        for jr in 0..self.rounds {
+            let i = self.rounds - 1 - jr;
+            let (k, delta) = self.round_params(i);
+            let skip = self.sk.skip(k);
+            for rel in 0..p {
+                let sender = {
+                    let t = rel + skip;
+                    if t >= p {
+                        t - p
+                    } else {
+                        t
+                    }
+                };
+                if sender == 0 {
+                    continue; // the root never sends in a reduction
+                }
+                if (self.send_rows[rel * q + k] as i64 + delta) < 0 {
+                    continue; // rel expects nothing here
+                }
+                if (self.recv_rows[sender * q + k] as i64 + delta) < 0 {
+                    return Some(SimError::MissingMessage {
+                        round: jr,
+                        rank: self.abs(rel),
+                        expected_from: self.abs(sender),
+                    });
+                }
+            }
+        }
+        unreachable!("engine: receive-count mismatch without a reconstructable missing message")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::bcast::build_bcast_procs;
+    use crate::collectives::common::SumOp;
+    use crate::collectives::reduce::build_reduce_procs;
+    use crate::sim::cost::{HierarchicalCost, UnitCost};
+    use crate::sim::network::Network;
+
+    fn stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
+        assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+        assert_eq!(a.active_rounds, b.active_rounds, "{ctx}: active_rounds");
+        assert_eq!(a.messages, b.messages, "{ctx}: messages");
+        assert_eq!(a.bytes, b.bytes, "{ctx}: bytes");
+        assert_eq!(a.max_rank_bytes, b.max_rank_bytes, "{ctx}: max_rank_bytes");
+        assert!((a.time - b.time).abs() < 1e-12, "{ctx}: time {} vs {}", a.time, b.time);
+    }
+
+    #[test]
+    fn bcast_stats_match_lockstep_grid() {
+        // The hierarchical cost model distinguishes absolute ranks, so a
+        // broken rel->abs mapping in the engine's cost accounting shows.
+        let cost = HierarchicalCost::vega(4);
+        for p in [1usize, 2, 3, 5, 9, 16, 17, 18, 33] {
+            let sk = Arc::new(Skips::new(p));
+            let src = ScheduleSource::Direct(&sk);
+            for n in [1usize, 2, 5, 8] {
+                for root in [0, p / 2] {
+                    for m in [3 * n + 1, n.saturating_sub(2)] {
+                        let geom = BlockGeometry::new(m, n);
+                        let data: Vec<u32> = (0..m as u32).collect();
+                        let mut procs = build_bcast_procs(&src, root, geom, &data);
+                        let lstats = Network::new(p).run(&mut procs, 4, &cost).unwrap();
+                        assert!(procs.iter().all(|pr| pr.complete()));
+                        let eng = CirculantEngine::new(&src, root, geom);
+                        let estats = eng.run_bcast(4, &cost).unwrap();
+                        stats_eq(
+                            &estats,
+                            &lstats,
+                            &format!("bcast p={p} n={n} root={root} m={m}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_matches_lockstep_grid() {
+        let cost = HierarchicalCost::vega(2);
+        for p in [1usize, 2, 3, 5, 9, 16, 17, 18, 33] {
+            let sk = Arc::new(Skips::new(p));
+            let src = ScheduleSource::Direct(&sk);
+            for n in [1usize, 2, 5] {
+                for root in [0, p - 1] {
+                    let m = 4 * n + 3;
+                    let geom = BlockGeometry::new(m, n);
+                    let inputs: Vec<Vec<i64>> = (0..p)
+                        .map(|r| (0..m).map(|i| ((r + 1) * (i + 3)) as i64 % 257).collect())
+                        .collect();
+                    let op = Arc::new(SumOp);
+                    let mut procs =
+                        build_reduce_procs(&src, root, geom, &inputs, op.clone());
+                    let lstats = Network::new(p).run(&mut procs, 8, &cost).unwrap();
+                    let lbuf = procs.into_iter().nth(root).unwrap().into_buffer();
+                    let eng = CirculantEngine::new(&src, root, geom);
+                    let (estats, ebuf) = eng.run_reduce(&inputs, &SumOp, 8, &cost).unwrap();
+                    stats_eq(&estats, &lstats, &format!("reduce p={p} n={n} root={root}"));
+                    assert_eq!(ebuf, lbuf, "reduce p={p} n={n} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_length_payloads_still_flow() {
+        // m = 0: every block is empty; the schedule still runs and every
+        // "send" counts as a message, exactly like the lockstep procs.
+        let sk = Arc::new(Skips::new(17));
+        let src = ScheduleSource::Direct(&sk);
+        let geom = BlockGeometry::new(0, 4);
+        let data: Vec<u32> = Vec::new();
+        let mut procs = build_bcast_procs(&src, 2, geom, &data);
+        let lstats = Network::new(17).run(&mut procs, 4, &UnitCost).unwrap();
+        let eng = CirculantEngine::new(&src, 2, geom);
+        let estats = eng.run_bcast(4, &UnitCost).unwrap();
+        stats_eq(&estats, &lstats, "empty payload");
+        assert!(estats.messages > 0);
+        assert_eq!(estats.bytes, 0);
+    }
+
+    #[test]
+    fn corrupted_recv_row_is_unexpected_message() {
+        let sk = Arc::new(Skips::new(17));
+        let src = ScheduleSource::Direct(&sk);
+        let mut eng = CirculantEngine::new(&src, 0, BlockGeometry::new(34, 2));
+        // Rank rel 1 receives its baseblock in slot 0; deny it.
+        let q = eng.q;
+        eng.recv_rows[q] = -(q as i64) as i8;
+        match eng.run_bcast(4, &UnitCost) {
+            Err(SimError::UnexpectedMessage { expected: None, .. }) => {}
+            other => panic!("want UnexpectedMessage, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_send_row_is_missing_message() {
+        let sk = Arc::new(Skips::new(9));
+        let src = ScheduleSource::Direct(&sk);
+        let mut eng = CirculantEngine::new(&src, 0, BlockGeometry::new(18, 2));
+        // The root never offers slot 0's block: its first receiver starves
+        // (and, downstream, more ranks stay incomplete).
+        eng.send_rows[0] = -(eng.q as i64) as i8;
+        match eng.run_bcast(4, &UnitCost) {
+            Err(SimError::MissingMessage { .. }) => {}
+            other => panic!("want MissingMessage, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn occupancy_matches_bruteforce() {
+        for p in [2usize, 9, 17, 33] {
+            let sk = Arc::new(Skips::new(p));
+            let src = ScheduleSource::Direct(&sk);
+            for n in [1usize, 3, 7, 11] {
+                let eng = CirculantEngine::new(&src, 0, BlockGeometry::new(n * 2, n));
+                let q = eng.q;
+                for rel in 0..p {
+                    let row = &eng.recv_rows[rel * q..(rel + 1) * q];
+                    let (count, first) = eng.row_occupancy(row, |_| true);
+                    let mut bcount = 0usize;
+                    let mut bfirst = usize::MAX;
+                    for j in 0..eng.rounds {
+                        let (k, delta) = eng.round_params(j);
+                        if row[k] as i64 + delta >= 0 {
+                            bcount += 1;
+                            bfirst = bfirst.min(j);
+                        }
+                    }
+                    assert_eq!(count, bcount, "p={p} n={n} rel={rel}");
+                    assert_eq!(first, bfirst, "p={p} n={n} rel={rel}");
+                }
+            }
+        }
+    }
+}

@@ -1,13 +1,17 @@
 //! The machine substrate: the paper's fully connected, one-ported,
 //! send/receive-bidirectional `p`-processor system, as (a) a lockstep
 //! round-based simulator with machine-model enforcement and cost
-//! accounting ([`network`]), (b) pluggable cost models ([`cost`]) and (c)
-//! a threaded runtime where every rank is an OS thread ([`threads`]).
+//! accounting ([`network`]), (b) pluggable cost models ([`cost`]), (c) a
+//! threaded runtime where every rank is an OS thread ([`threads`]) and
+//! (d) the sparse, zero-copy engine for million-rank full-network
+//! simulation of the circulant collectives ([`engine`]).
 
 pub mod cost;
+pub mod engine;
 pub mod network;
 pub mod threads;
 
 pub use cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
+pub use engine::CirculantEngine;
 pub use network::{Msg, Network, RankProc, RunStats, SimError};
 pub use threads::{run_threaded, run_threaded_stats, Comm};

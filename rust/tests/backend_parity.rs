@@ -1,0 +1,243 @@
+//! Differential backend-parity suite: for a seeded random grid of
+//! (p, n, root, kind, algo) — including non-powers-of-two p and p = 1 —
+//! the lockstep `Network`, the threaded runtime and the sparse `Engine`
+//! must produce identical `Outcome` payloads, `all_received` flags and
+//! `RunStats` round/message/byte counts.
+//!
+//! Deterministic by default; set `TESTKIT_SEED` to explore other grids
+//! (CI runs a fixed seed matrix).
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{
+    Algo, AllgathervReq, AllreduceReq, BackendKind, BcastReq, CommBuilder, Communicator,
+    ReduceReq, ReduceScatterReq,
+};
+use circulant_bcast::sim::{RunStats, UnitCost};
+use circulant_bcast::testkit::Rng;
+
+const BACKENDS: [BackendKind; 3] =
+    [BackendKind::Lockstep, BackendKind::Threaded, BackendKind::Engine];
+
+fn comm(p: usize, backend: BackendKind) -> Communicator {
+    CommBuilder::new(p).cost_model(UnitCost).backend(backend).build()
+}
+
+fn assert_stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.active_rounds, b.active_rounds, "{ctx}: active_rounds");
+    assert_eq!(a.messages, b.messages, "{ctx}: messages");
+    assert_eq!(a.bytes, b.bytes, "{ctx}: bytes");
+    assert_eq!(a.max_rank_bytes, b.max_rank_bytes, "{ctx}: max_rank_bytes");
+    assert!((a.time - b.time).abs() < 1e-12, "{ctx}: time {} vs {}", a.time, b.time);
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    p: usize,
+    root: usize,
+    m: usize,
+    n: usize,
+    kind: usize,
+    algo: Algo,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    // Mix powers of two, their neighbours, primes and p = 1.
+    let p = match rng.range(0, 5) {
+        0 => 1,
+        1 => 1 << rng.range(1, 5),
+        2 => (1 << rng.range(1, 5)) + 1,
+        3 => [3, 7, 13, 17, 19, 23, 29, 31][rng.range(0, 7)],
+        _ => rng.range(2, 40),
+    };
+    Case {
+        p,
+        root: rng.range(0, p - 1),
+        m: rng.range(0, 150),
+        n: rng.range(1, 12),
+        kind: rng.range(0, 4),
+        algo: if rng.chance(1, 4) { Algo::Auto } else { Algo::Circulant },
+    }
+}
+
+fn check_case(c: &Case) {
+    let ctx = format!("{c:?}");
+    match c.kind {
+        // ----- bcast -----
+        0 => {
+            let data: Vec<i64> = (0..c.m as i64).map(|i| i * 7 - 11).collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .bcast(
+                        BcastReq::new(c.root, &data)
+                            .algo(c.algo)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in BACKENDS {
+                let out = run(backend);
+                assert_eq!(out.algo, base.algo, "{ctx} [{backend:?}]: algo");
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_eq!(
+                    out.all_received(),
+                    base.all_received(),
+                    "{ctx} [{backend:?}]: all_received"
+                );
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+        }
+        // ----- reduce -----
+        1 => {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..c.m).map(|i| ((r * 41 + i * 13) % 509) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .reduce(
+                        ReduceReq::new(c.root, &inputs, Arc::new(SumOp))
+                            .algo(c.algo)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in BACKENDS {
+                let out = run(backend);
+                assert_eq!(out.algo, base.algo, "{ctx} [{backend:?}]: algo");
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_eq!(
+                    out.all_received(),
+                    base.all_received(),
+                    "{ctx} [{backend:?}]: all_received"
+                );
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+        }
+        // ----- allgatherv (irregular counts derived from the case) -----
+        2 => {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..(c.m + r * 3) % 60).map(|i| (r * 1000 + i) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .allgatherv(
+                        AllgathervReq::new(&inputs).algo(c.algo).blocks(c.n).elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in BACKENDS {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_eq!(
+                    out.all_received(),
+                    base.all_received(),
+                    "{ctx} [{backend:?}]: all_received"
+                );
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+        }
+        // ----- reduce-scatter (irregular counts) -----
+        3 => {
+            let counts: Vec<usize> = (0..c.p).map(|r| (c.m + r * 5) % 23).collect();
+            let total: usize = counts.iter().sum();
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..total).map(|i| ((r + 3) * (i + 1) % 401) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .reduce_scatter(
+                        ReduceScatterReq::new(&inputs, &counts, Arc::new(SumOp))
+                            .algo(c.algo)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in BACKENDS {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+        }
+        // ----- allreduce -----
+        _ => {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..c.m).map(|i| ((r + 1) * (i + 1) % 333) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .allreduce(
+                        AllreduceReq::new(&inputs, Arc::new(SumOp))
+                            .algo(c.algo)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in BACKENDS {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_random_grid_all_backends_agree() {
+    let mut rng = Rng::from_env();
+    for _ in 0..40 {
+        let c = gen_case(&mut rng);
+        check_case(&c);
+    }
+}
+
+#[test]
+fn degenerate_and_boundary_cases_agree() {
+    // The cases a random grid can miss: p = 1, a single block, m = 0,
+    // m < n (empty blocks), non-zero roots at non-powers-of-two p.
+    let fixed = [
+        Case { p: 1, root: 0, m: 10, n: 3, kind: 0, algo: Algo::Circulant },
+        Case { p: 1, root: 0, m: 10, n: 1, kind: 1, algo: Algo::Circulant },
+        Case { p: 1, root: 0, m: 7, n: 2, kind: 4, algo: Algo::Circulant },
+        Case { p: 2, root: 1, m: 33, n: 4, kind: 0, algo: Algo::Circulant },
+        Case { p: 17, root: 16, m: 0, n: 5, kind: 0, algo: Algo::Circulant },
+        Case { p: 17, root: 3, m: 3, n: 9, kind: 0, algo: Algo::Circulant },
+        Case { p: 18, root: 9, m: 100, n: 5, kind: 1, algo: Algo::Circulant },
+        Case { p: 23, root: 11, m: 64, n: 7, kind: 0, algo: Algo::Auto },
+        Case { p: 31, root: 0, m: 50, n: 6, kind: 2, algo: Algo::Circulant },
+        Case { p: 13, root: 0, m: 40, n: 3, kind: 3, algo: Algo::Circulant },
+        Case { p: 9, root: 0, m: 61, n: 2, kind: 4, algo: Algo::Circulant },
+    ];
+    for c in fixed {
+        check_case(&c);
+    }
+}
+
+#[test]
+fn auto_resolution_is_backend_independent() {
+    // Algo::Auto must resolve identically under every backend (the
+    // small-payload binomial fallback included), so outcomes agree.
+    let data_small: Vec<i32> = (0..16).collect();
+    let data_large: Vec<i32> = (0..10_000).collect();
+    for data in [&data_small, &data_large] {
+        let base = comm(9, BackendKind::Lockstep)
+            .bcast(BcastReq::new(2, data))
+            .unwrap();
+        for backend in BACKENDS {
+            let out = comm(9, backend).bcast(BcastReq::new(2, data)).unwrap();
+            assert_eq!(out.algo, base.algo, "{backend:?} data_len={}", data.len());
+            assert_eq!(out.buffers, base.buffers);
+            assert_stats_eq(&out.stats, &base.stats, &format!("{backend:?}"));
+        }
+    }
+}

@@ -1,15 +1,18 @@
 //! Property-based tests on the collectives, driven through the typed
-//! `Communicator` API: random (p, root, m, n, distribution) — data
-//! integrity, round optimality and machine-model cleanliness on every
-//! draw, with shrinking on failure. All cases of a property share one
-//! `ScheduleCache`, exactly as a long-running service would.
+//! `Communicator` API: random (p, root, m, n, backend) — data integrity,
+//! round optimality and machine-model cleanliness on every draw, with
+//! shrinking to a minimal counterexample on failure (backend shrinks to
+//! lockstep first, so a reported minimum isolates backend-specific bugs).
+//! All cases of a property share one `ScheduleCache`, exactly as a
+//! long-running service would. Deterministic by default; every property
+//! honors `TESTKIT_SEED` through `Rng::from_env` (CI runs a seed matrix).
 
 use std::sync::Arc;
 
 use circulant_bcast::collectives::SumOp;
 use circulant_bcast::comm::{
-    Algo, AllgathervReq, AllreduceReq, BcastReq, CommBuilder, Communicator, ReduceReq,
-    ReduceScatterReq,
+    Algo, AllgathervReq, AllreduceReq, BackendKind, BcastReq, CommBuilder, Communicator,
+    ReduceReq, ReduceScatterReq,
 };
 use circulant_bcast::schedule::{ceil_log2, ScheduleCache};
 use circulant_bcast::sim::UnitCost;
@@ -21,6 +24,17 @@ struct Case {
     root: usize,
     m: usize,
     n: usize,
+    backend: BackendKind,
+}
+
+/// Backends weighted towards the cheap ones (a threaded case spawns `p`
+/// OS threads); the engine path gets steady coverage.
+fn gen_backend(rng: &mut Rng) -> BackendKind {
+    match rng.range(0, 7) {
+        0..=3 => BackendKind::Lockstep,
+        4 | 5 => BackendKind::Engine,
+        _ => BackendKind::Threaded,
+    }
 }
 
 fn gen_case(rng: &mut Rng) -> Case {
@@ -30,11 +44,15 @@ fn gen_case(rng: &mut Rng) -> Case {
         root: rng.range(0, p - 1),
         m: rng.range(0, 200),
         n: rng.range(1, 24),
+        backend: gen_backend(rng),
     }
 }
 
 fn shrink_case(c: &Case) -> Vec<Case> {
     let mut out = Vec::new();
+    if c.backend != BackendKind::Lockstep {
+        out.push(Case { backend: BackendKind::Lockstep, ..c.clone() });
+    }
     if c.p > 1 {
         out.push(Case { p: c.p / 2 + 1, root: c.root % (c.p / 2 + 1), ..c.clone() });
     }
@@ -50,8 +68,8 @@ fn shrink_case(c: &Case) -> Vec<Case> {
     out
 }
 
-fn comm_for(cache: &Arc<ScheduleCache>, p: usize) -> Communicator {
-    CommBuilder::new(p).cache(cache.clone()).cost_model(UnitCost).build()
+fn comm_for(cache: &Arc<ScheduleCache>, p: usize, backend: BackendKind) -> Communicator {
+    CommBuilder::new(p).cache(cache.clone()).cost_model(UnitCost).backend(backend).build()
 }
 
 #[test]
@@ -62,7 +80,7 @@ fn prop_bcast_delivers_everything() {
         gen_case,
         |c| {
             let data: Vec<i64> = (0..c.m as i64).map(|i| i * 3 - 7).collect();
-            let out = comm_for(&cache, c.p)
+            let out = comm_for(&cache, c.p, c.backend)
                 .bcast(BcastReq::new(c.root, &data).algo(Algo::Circulant).blocks(c.n).elem_bytes(8))
                 .map_err(|e| format!("comm error: {e}"))?;
             if !out.all_received() {
@@ -94,7 +112,7 @@ fn prop_reduce_sums_correctly() {
                 .collect();
             let want: Vec<i64> =
                 (0..c.m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let out = comm_for(&cache, c.p)
+            let out = comm_for(&cache, c.p, c.backend)
                 .reduce(
                     ReduceReq::new(c.root, &inputs, Arc::new(SumOp))
                         .algo(Algo::Circulant)
@@ -128,16 +146,16 @@ fn prop_allgatherv_random_counts() {
                     _ => rng.range(40, 120),
                 })
                 .collect();
-            (counts, n)
+            (counts, n, gen_backend(rng))
         },
-        |(counts, n)| {
+        |(counts, n, backend)| {
             let p = counts.len();
             let inputs: Vec<Vec<i32>> = counts
                 .iter()
                 .enumerate()
                 .map(|(r, &c)| (0..c).map(|i| (r * 1000 + i) as i32).collect())
                 .collect();
-            let out = comm_for(&cache, p)
+            let out = comm_for(&cache, p, *backend)
                 .allgatherv(AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(*n))
                 .map_err(|e| format!("comm error: {e}"))?;
             for r in 0..p {
@@ -149,15 +167,18 @@ fn prop_allgatherv_random_counts() {
             }
             Ok(())
         },
-        |(counts, n)| {
+        |(counts, n, backend)| {
             let mut out = Vec::new();
+            if *backend != BackendKind::Lockstep {
+                out.push((counts.clone(), *n, BackendKind::Lockstep));
+            }
             if counts.len() > 1 {
-                out.push((counts[..counts.len() / 2 + 1].to_vec(), *n));
+                out.push((counts[..counts.len() / 2 + 1].to_vec(), *n, *backend));
             }
             if *n > 1 {
-                out.push((counts.clone(), n / 2));
+                out.push((counts.clone(), n / 2, *backend));
             }
-            out.push((counts.iter().map(|c| c / 2).collect(), *n));
+            out.push((counts.iter().map(|c| c / 2).collect(), *n, *backend));
             out
         },
     );
@@ -172,9 +193,9 @@ fn prop_reduce_scatter_random_counts() {
             let p = rng.range(1, 20);
             let n = rng.range(1, 8);
             let counts: Vec<usize> = (0..p).map(|_| rng.range(0, 30)).collect();
-            (counts, n)
+            (counts, n, gen_backend(rng))
         },
-        |(counts, n)| {
+        |(counts, n, backend)| {
             let p = counts.len();
             let total: usize = counts.iter().sum();
             let inputs: Vec<Vec<i64>> = (0..p)
@@ -182,7 +203,7 @@ fn prop_reduce_scatter_random_counts() {
                 .collect();
             let sums: Vec<i64> =
                 (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let out = comm_for(&cache, p)
+            let out = comm_for(&cache, p, *backend)
                 .reduce_scatter(
                     ReduceScatterReq::new(&inputs, counts, Arc::new(SumOp))
                         .algo(Algo::Circulant)
@@ -199,13 +220,16 @@ fn prop_reduce_scatter_random_counts() {
             }
             Ok(())
         },
-        |(counts, n)| {
+        |(counts, n, backend)| {
             let mut out = Vec::new();
+            if *backend != BackendKind::Lockstep {
+                out.push((counts.clone(), *n, BackendKind::Lockstep));
+            }
             if counts.len() > 1 {
-                out.push((counts[..counts.len() / 2 + 1].to_vec(), *n));
+                out.push((counts[..counts.len() / 2 + 1].to_vec(), *n, *backend));
             }
             if *n > 1 {
-                out.push((counts.clone(), n / 2));
+                out.push((counts.clone(), n / 2, *backend));
             }
             out
         },
@@ -227,7 +251,7 @@ fn prop_allreduce_random() {
                 .collect();
             let want: Vec<i64> =
                 (0..c.m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let out = comm_for(&cache, c.p)
+            let out = comm_for(&cache, c.p, c.backend)
                 .allreduce(
                     AllreduceReq::new(&inputs, Arc::new(SumOp))
                         .algo(Algo::Circulant)
@@ -258,7 +282,10 @@ fn prop_cache_never_recomputes_across_cases() {
         let p = rng.range(1, 24);
         let root = rng.range(0, p - 1);
         let data: Vec<i64> = (0..50).collect();
-        comm_for(&cache, p)
+        // Backend-independent invariant: the engine's schedule arena is
+        // served through the same cache at service scale, so the miss
+        // accounting is identical whichever backend handled the call.
+        comm_for(&cache, p, gen_backend(&mut rng))
             .bcast(BcastReq::new(root, &data).algo(Algo::Circulant).blocks(3).elem_bytes(8))
             .unwrap();
         for rel in 0..p {

@@ -4,10 +4,14 @@
 //! plus the doubling laws. Larger p are covered by sampled checks
 //! (the paper verified up to ~2^20 and a band around 2^24).
 
+use std::sync::Arc;
+
+use circulant_bcast::collectives::common::{BlockGeometry, ScheduleSource};
 use circulant_bcast::schedule::doubling::{double_recv_schedules, double_send_schedules};
 use circulant_bcast::schedule::{
-    recv_schedule, send_schedule, verify_all, verify_sampled, Skips,
+    ceil_log2, recv_schedule, send_schedule, verify_all, verify_sampled, Skips,
 };
+use circulant_bcast::sim::{CirculantEngine, UnitCost};
 
 #[test]
 fn all_p_up_to_2048() {
@@ -55,6 +59,69 @@ fn sampled_multimillion() {
         assert!(rep.ok(), "p={p}: {:?}", rep.failures.first());
         assert!(rep.max_violations <= 4);
     }
+}
+
+#[test]
+fn sampled_band_up_to_2_20() {
+    // Dense-ish sampled coverage of the 2^17..2^20 band the full-table
+    // checker cannot reach in CI: 128 sampled ranks per p.
+    for p in [
+        (1usize << 17) + 1,
+        (1 << 18) + 12345,
+        (1 << 19) + 7,
+        (1 << 20) - 1,
+        1 << 20,
+        (1 << 20) + 1,
+    ] {
+        let ranks: Vec<usize> = (0..128).map(|i| (i * 104_729 + 11) % p).collect();
+        let rep = verify_sampled(p, &ranks);
+        assert!(rep.ok(), "p={p}: {:?}", rep.failures.first());
+        assert!(rep.max_violations <= 4, "p={p}");
+    }
+}
+
+/// `verify_all`-style *full-network* validation at scales where the
+/// lockstep simulator is infeasible: the sparse engine simulates every
+/// rank of a complete broadcast and reduction, enforcing the machine
+/// model (one-portedness, expectation cross-checks, completion) as it
+/// goes. An `Ok` run certifies that the full p-rank schedule family
+/// composes into a working collective — the simulation analogue of the
+/// four schedule conditions.
+#[test]
+fn engine_full_network_simulation_large_p() {
+    for p in [(1usize << 14) + 5, (1 << 16) - 1, (1 << 17) + 9] {
+        let sk = Arc::new(Skips::new(p));
+        let src = ScheduleSource::Direct(&sk);
+        let n = 8usize;
+        let q = ceil_log2(p);
+        let eng = CirculantEngine::new(&src, 3 % p, BlockGeometry::new(n * 4, n));
+        let stats = eng.run_bcast(4, &UnitCost).expect("full-network bcast must complete");
+        assert_eq!(stats.rounds, n - 1 + q, "p={p}");
+        // Every non-root rank receives at least its n blocks and at most
+        // one message per round.
+        assert!(stats.messages >= (p - 1) * n, "p={p}");
+        assert!(stats.messages <= (p - 1) * stats.rounds, "p={p}");
+        assert!(stats.active_rounds <= stats.rounds, "p={p}");
+    }
+}
+
+#[test]
+fn engine_full_network_reduce_mid_p() {
+    // The reversed-schedule path, full network at a scale the lockstep
+    // driver handles only slowly: correctness of the root's reduction
+    // certifies the reversed composition end to end.
+    use circulant_bcast::collectives::SumOp;
+    let p = (1usize << 12) + 3;
+    let sk = Arc::new(Skips::new(p));
+    let src = ScheduleSource::Direct(&sk);
+    let n = 4usize;
+    let m = 8usize;
+    let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64; m]).collect();
+    let eng = CirculantEngine::new(&src, 17, BlockGeometry::new(m, n));
+    let (stats, buf) = eng.run_reduce(&inputs, &SumOp, 8, &UnitCost).unwrap();
+    let want = (p * (p - 1) / 2) as i64;
+    assert_eq!(buf, vec![want; m]);
+    assert_eq!(stats.rounds, n - 1 + ceil_log2(p));
 }
 
 #[test]
