@@ -1,25 +1,32 @@
 //! Engine scale trajectory: full-network broadcast simulation from
 //! p = 2^10 up to p = 2^20 (n = 64 blocks) on the sparse engine, with a
 //! lockstep-`Network` comparison while the lockstep simulator is still
-//! feasible. This is the receipts bench for the `sim::engine` tentpole:
-//! the lockstep driver's per-round `0..p` scans and per-message `Vec`
-//! clones stop around a few thousand ranks; the engine's active-set
-//! worklist plus offset-passing arena carries the same machine-model
-//! simulation to the paper's 2^20 regime in seconds.
+//! feasible. This is the receipts bench for the schedule-plane tentpole:
+//! **build** (the parallel all-ranks `ScheduleTable` fill — chunked over
+//! `CBCAST_THREADS` scoped threads, violation-memoized, shared-baseblock)
+//! and **run** (the active-set simulation, scratch-reused) are timed and
+//! reported separately, so the table-fill speedup is visible on its own.
 //!
 //! Usage: `cargo bench --bench engine_scale -- [MAX_EXP]`
 //! where MAX_EXP bounds the largest p = 2^MAX_EXP (default 20; CI smoke
-//! runs 17). Simulated results are cross-checked per size: round count
-//! must be the optimal n - 1 + q and, where the lockstep run exists, all
-//! statistics must match exactly.
+//! runs 17 at CBCAST_THREADS=1 and =4 and asserts the parallel build is
+//! not slower). Simulated results are cross-checked per size: round
+//! count must be the optimal n - 1 + q and, where the lockstep run
+//! exists, all statistics must match exactly.
+//!
+//! A machine-readable record is written to `BENCH_engine_scale.json`
+//! (override with `CBCAST_BENCH_JSON=path`): per-p build/run times plus
+//! totals, threads and message counts — what CI diffs across thread
+//! counts and what the acceptance receipts are read from.
 
+use std::io::Write;
 use std::sync::Arc;
 use std::time::Instant;
 
 use circulant_bcast::collectives::bcast::build_bcast_procs;
 use circulant_bcast::collectives::common::{BlockGeometry, ScheduleSource};
-use circulant_bcast::schedule::{ceil_log2, Skips};
-use circulant_bcast::sim::{CirculantEngine, LinearCost, Network, RunStats};
+use circulant_bcast::schedule::{ceil_log2, configured_threads, ScheduleTable, Skips};
+use circulant_bcast::sim::{CirculantEngine, EngineScratch, LinearCost, Network, RunStats};
 
 const N_BLOCKS: usize = 64;
 /// Elements per block (payload lengths only drive byte accounting).
@@ -29,20 +36,36 @@ const ELEM_BYTES: usize = 4;
 /// the bench's wall time, which is exactly the point).
 const LOCKSTEP_MAX_EXP: u32 = 13;
 
+struct Row {
+    p: usize,
+    q: usize,
+    rounds: usize,
+    build_ms: f64,
+    run_ms: f64,
+    messages: usize,
+    bytes: usize,
+}
+
 fn main() {
     let max_exp: u32 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(20)
         .clamp(10, 24);
+    let threads = configured_threads();
     let cost = LinearCost::hpc_default();
     let m = N_BLOCKS * BLOCK_ELEMS;
+    let mut rows: Vec<Row> = Vec::new();
+    let mut scratch = EngineScratch::<u32>::new();
 
     println!("=== engine_scale: full-network bcast simulation, n = {N_BLOCKS} blocks ===");
-    println!("(p up to 2^{max_exp}; lockstep Network comparison up to 2^{LOCKSTEP_MAX_EXP})\n");
+    println!(
+        "(p up to 2^{max_exp}; schedule-plane build on {threads} thread(s); \
+         lockstep Network comparison up to 2^{LOCKSTEP_MAX_EXP})\n"
+    );
     println!(
         "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
-        "p", "rounds", "build(ms)", "engine(ms)", "lockstep(ms)", "messages", "msgs/µs"
+        "p", "rounds", "build(ms)", "run(ms)", "lockstep(ms)", "messages", "msgs/µs"
     );
 
     for exp in 10..=max_exp {
@@ -50,19 +73,23 @@ fn main() {
         let p = (1usize << exp) + usize::from(exp % 2 == 1);
         let q = ceil_log2(p);
         let sk = Arc::new(Skips::new(p));
-        let src = ScheduleSource::Direct(&sk);
         let geom = BlockGeometry::new(m, N_BLOCKS);
 
+        // Build: the all-ranks flat schedule arena, in parallel.
         let t = Instant::now();
-        let eng = CirculantEngine::new(&src, 0, geom);
+        let table = Arc::new(ScheduleTable::build_with_threads(&sk, threads));
         let build_ms = t.elapsed().as_secs_f64() * 1e3;
 
+        // Run: active-set simulation over the shared plane, reusing one
+        // scratch across all sizes (allocation-free after the largest).
+        let eng = CirculantEngine::new(table, 0, geom);
         let t = Instant::now();
-        let stats = eng.run_bcast(ELEM_BYTES, &cost).expect("engine bcast");
-        let engine_ms = t.elapsed().as_secs_f64() * 1e3;
+        let stats = eng.run_bcast_with(&mut scratch, ELEM_BYTES, &cost).expect("engine bcast");
+        let run_ms = t.elapsed().as_secs_f64() * 1e3;
         assert_eq!(stats.rounds, N_BLOCKS - 1 + q, "p={p}: rounds must be optimal");
 
         let lockstep_ms = if exp <= LOCKSTEP_MAX_EXP {
+            let src = ScheduleSource::Direct(&sk);
             let data: Vec<u32> = (0..m as u32).collect();
             let t = Instant::now();
             let mut procs = build_bcast_procs(&src, 0, geom, &data);
@@ -85,13 +112,62 @@ fn main() {
             p,
             stats.rounds,
             build_ms,
-            engine_ms,
+            run_ms,
             lockstep_ms,
             stats.messages,
-            stats.messages as f64 / (engine_ms * 1e3),
+            stats.messages as f64 / (run_ms * 1e3),
         );
+        rows.push(Row {
+            p,
+            q,
+            rounds: stats.rounds,
+            build_ms,
+            run_ms,
+            messages: stats.messages,
+            bytes: stats.bytes,
+        });
     }
-    println!("\n(build = schedule arena fill via recv/send_schedule_into, O(p log p);");
-    println!(" engine = active-set simulation; lockstep = Network with per-rank procs.");
-    println!(" Identical statistics where both run — the differential receipts.)");
+
+    let json_path = std::env::var("CBCAST_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_engine_scale.json".to_string());
+    write_json(&json_path, threads, &rows).expect("write bench json");
+    let total_build: f64 = rows.iter().map(|r| r.build_ms).sum();
+    let total_run: f64 = rows.iter().map(|r| r.run_ms).sum();
+    println!(
+        "\ntotals: build {total_build:.1} ms, run {total_run:.1} ms, \
+         end-to-end {:.1} ms ({threads} thread(s)) → {json_path}",
+        total_build + total_run
+    );
+    println!("(build = parallel ScheduleTable fill (chunked, violation-memoized,");
+    println!(" shared-baseblock); run = active-set simulation over the shared plane;");
+    println!(" lockstep = Network with per-rank procs. Identical statistics where");
+    println!(" both run — the differential receipts.)");
+}
+
+/// Hand-rolled JSON (the crate is dependency-free; no serde).
+fn write_json(path: &str, threads: usize, rows: &[Row]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let total_build: f64 = rows.iter().map(|r| r.build_ms).sum();
+    let total_run: f64 = rows.iter().map(|r| r.run_ms).sum();
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"engine_scale\",")?;
+    writeln!(f, "  \"n_blocks\": {N_BLOCKS},")?;
+    writeln!(f, "  \"block_elems\": {BLOCK_ELEMS},")?;
+    writeln!(f, "  \"threads\": {threads},")?;
+    writeln!(f, "  \"total_build_ms\": {total_build:.3},")?;
+    writeln!(f, "  \"total_run_ms\": {total_run:.3},")?;
+    writeln!(f, "  \"total_ms\": {:.3},", total_build + total_run)?;
+    writeln!(f, "  \"entries\": [")?;
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"p\": {}, \"q\": {}, \"rounds\": {}, \"build_ms\": {:.3}, \
+             \"run_ms\": {:.3}, \"messages\": {}, \"bytes\": {}}}{comma}",
+            r.p, r.q, r.rounds, r.build_ms, r.run_ms, r.messages, r.bytes
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(())
 }

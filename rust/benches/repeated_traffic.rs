@@ -54,9 +54,10 @@ fn throwaway(p: usize, data: &[i32], backend: BackendKind) -> f64 {
 }
 
 fn main() {
-    // The cache receipts below hold for every backend: lockstep/threaded
-    // serve per-rank procs from the cache, the engine serves its schedule
-    // arena from the same cache at service scale (p <= 4096).
+    // The cache receipts below hold for every backend: all of them serve
+    // the shared all-ranks ScheduleTable from the same cache (resident
+    // for every p benched here — the byte cap admits up to the old
+    // p = 4096 boundary), so the accounting is backend-independent.
     let backend = BackendKind::from_env();
     println!(
         "=== Repeated traffic: persistent Communicator vs per-call rebuild [{} backend] ===",

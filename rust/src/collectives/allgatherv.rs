@@ -14,18 +14,22 @@
 use std::sync::Arc;
 
 use crate::comm::{Algo, AllgathervReq, CommError, Communicator};
-use crate::schedule::{Schedule, Skips};
+use crate::schedule::{ScheduleTable as RowTable, Skips};
 use crate::sim::cost::CostModel;
 use crate::sim::network::{Msg, RankProc, RunStats, SimError};
 
 use super::common::{BlockGeometry, Element, ScheduleSource, World};
 
-/// The schedule table for all `p` relative ranks, shared by every rank's
-/// state machine (`O(p log p)` once, instead of per rank).
+/// The Algorithm-7 view of the all-ranks schedule plane for one block
+/// count `n`: a shared [`RowTable`] (the flat `i8` arena of every
+/// relative rank's recv+send rows — see [`crate::schedule::table`]) plus
+/// the `n`-dependent phase bookkeeping. Building one is O(1) beyond the
+/// row table (which the cache builds in parallel once per `p`), so
+/// per-`n` tables are cheap to memoize per communicator.
 pub struct ScheduleTable {
     pub sk: Arc<Skips>,
-    /// `scheds[rel]` = schedules of relative rank `rel`.
-    pub scheds: Vec<Schedule>,
+    /// All relative ranks' raw schedule rows (shared, `n`-agnostic).
+    rows: Arc<RowTable>,
     /// Blocks per root.
     pub n: usize,
     /// Virtual-round offset.
@@ -37,17 +41,22 @@ impl ScheduleTable {
         Self::build_from(&ScheduleSource::Direct(&world.sk), n)
     }
 
-    /// Build from a [`ScheduleSource`] — on the cached path (the
-    /// [`crate::comm::Communicator`]), all `p` relative-rank schedules
-    /// are served from the shared cache instead of recomputed.
+    /// Build from a [`ScheduleSource`] — on the table/cached paths (the
+    /// [`crate::comm::Communicator`]), the all-ranks row table is shared
+    /// instead of recomputed.
     pub fn build_from(src: &ScheduleSource<'_>, n: usize) -> Arc<Self> {
         assert!(n > 0);
-        let sk = src.skips().clone();
-        let p = sk.p();
+        let rows = src.rows();
+        let sk = rows.skips().clone();
         let q = sk.q();
-        let scheds: Vec<Schedule> = (0..p).map(|r| src.schedule(r)).collect();
         let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
-        Arc::new(ScheduleTable { sk, scheds, n, x })
+        Arc::new(ScheduleTable { sk, rows, n, x })
+    }
+
+    /// The shared all-ranks row table.
+    #[inline]
+    pub fn rows(&self) -> &Arc<RowTable> {
+        &self.rows
     }
 
     #[inline]
@@ -81,8 +90,9 @@ impl ScheduleTable {
     #[inline]
     fn value_at(&self, rel: usize, j: usize, recv: bool) -> i64 {
         let (k, delta) = self.round_params(j);
-        let base = if recv { self.scheds[rel].recv[k] } else { self.scheds[rel].send[k] };
-        base + delta
+        let base =
+            if recv { self.rows.recv_raw(rel, k) } else { self.rows.send_raw(rel, k) };
+        base as i64 + delta
     }
 
     /// Receive-block value of relative rank `rel` at network round `j`.
@@ -98,7 +108,7 @@ impl ScheduleTable {
     }
 
     /// Per-round constants `(k, delta)` such that the phase-advanced
-    /// value for any relative rank is `scheds[rel].{recv,send}[k] + delta`
+    /// value for any relative rank is `rows.{recv,send}_raw(rel, k) + delta`
     /// — hoists the round arithmetic out of the per-root packing loops
     /// (which visit up to `p` roots per rank per round). One shared
     /// definition with the sparse engine
@@ -111,13 +121,13 @@ impl ScheduleTable {
     /// `recv` entry of `rel` given hoisted round params.
     #[inline]
     pub fn recv_fast(&self, rel: usize, k: usize, delta: i64) -> i64 {
-        self.scheds[rel].recv[k] + delta
+        self.rows.recv_raw(rel, k) as i64 + delta
     }
 
     /// `send` entry of `rel` given hoisted round params.
     #[inline]
     pub fn send_fast(&self, rel: usize, k: usize, delta: i64) -> i64 {
-        self.scheds[rel].send[k] + delta
+        self.rows.send_raw(rel, k) as i64 + delta
     }
 
     /// Cap a block value to `None` / `Some(block index)`.

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use crate::schedule::{Schedule, ScheduleCache, Skips};
+use crate::schedule::{Schedule, ScheduleCache, ScheduleTable, Skips};
 
 /// Data element moved by the collectives.
 pub trait Element:
@@ -140,9 +140,30 @@ pub struct PhasedSchedule {
 impl PhasedSchedule {
     /// Build from a computed [`Schedule`] for `n` blocks.
     pub fn new(skips: Arc<Skips>, sched: &Schedule, n: usize) -> Self {
-        assert!(n > 0);
         assert_eq!(skips.p(), sched.p);
-        let q = sched.q;
+        let recv = sched.recv.iter().copied();
+        let send = sched.send.iter().copied();
+        Self::build(skips, sched.rank, n, recv, send)
+    }
+
+    /// Build directly from one rank's raw rows of an all-ranks
+    /// [`ScheduleTable`] — no intermediate [`Schedule`] allocation; this
+    /// is how the table-served proc builders phase their schedules.
+    pub fn from_rows(skips: Arc<Skips>, rel: usize, recv: &[i8], send: &[i8], n: usize) -> Self {
+        let recv = recv.iter().map(|&v| v as i64);
+        let send = send.iter().map(|&v| v as i64);
+        Self::build(skips, rel, n, recv, send)
+    }
+
+    fn build(
+        skips: Arc<Skips>,
+        rel: usize,
+        n: usize,
+        recv: impl Iterator<Item = i64>,
+        send: impl Iterator<Item = i64>,
+    ) -> Self {
+        assert!(n > 0);
+        let q = skips.q();
         let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
         let shift = |v: i64, k: usize| {
             let mut v = v - x as i64;
@@ -152,14 +173,14 @@ impl PhasedSchedule {
             v
         };
         PhasedSchedule {
-            p: sched.p,
+            p: skips.p(),
             q,
-            rel: sched.rank,
+            rel,
             n,
             x,
+            recv_shifted: recv.enumerate().map(|(k, v)| shift(v, k)).collect(),
+            send_shifted: send.enumerate().map(|(k, v)| shift(v, k)).collect(),
             skips,
-            recv_shifted: sched.recv.iter().enumerate().map(|(k, &v)| shift(v, k)).collect(),
-            send_shifted: sched.send.iter().enumerate().map(|(k, &v)| shift(v, k)).collect(),
         }
     }
 
@@ -255,15 +276,18 @@ pub fn phase_params(q: usize, x: usize, j: usize) -> (usize, i64) {
 }
 
 /// Where per-rank schedules come from when constructing a collective's
-/// state machines: computed directly (throwaway, the legacy `*_sim`
-/// path) or served from a shared [`ScheduleCache`] (the
-/// [`crate::comm::Communicator`] path — schedules are *root-relative*,
-/// so one cache entry per relative rank serves every root).
+/// state machines: an already-built all-ranks [`ScheduleTable`] (the
+/// [`crate::comm::Communicator`] path — one parallel-built flat arena
+/// per `p` serves every rank, root and collective), a shared
+/// [`ScheduleCache`] (compute-the-table-on-miss), or computed directly
+/// per rank (throwaway, the legacy `*_sim` path).
 pub enum ScheduleSource<'a> {
     /// Compute schedules on the spot from the skip table.
     Direct(&'a Arc<Skips>),
     /// Serve schedules from a shared cache (compute-on-miss).
     Cached { cache: &'a ScheduleCache, sk: &'a Arc<Skips> },
+    /// Serve rows from an already-built all-ranks schedule table.
+    Table(Arc<ScheduleTable>),
 }
 
 impl ScheduleSource<'_> {
@@ -272,6 +296,7 @@ impl ScheduleSource<'_> {
         match self {
             ScheduleSource::Direct(sk) => sk,
             ScheduleSource::Cached { sk, .. } => sk,
+            ScheduleSource::Table(t) => t.skips(),
         }
     }
 
@@ -280,35 +305,54 @@ impl ScheduleSource<'_> {
         self.skips().p()
     }
 
-    /// The combined schedule of relative rank `rel` (owned; cloned from
-    /// the cache on the cached path — a `Schedule` is two `q`-element
-    /// vectors, so the clone is O(log p)).
+    /// The all-ranks [`ScheduleTable`] this source describes: the shared
+    /// `Arc` itself on the `Table` path, the cache's per-`p` table on the
+    /// `Cached` path (built in parallel on miss, with the cache's
+    /// hit/miss receipts), a freshly built one on the `Direct` path.
+    pub fn rows(&self) -> Arc<ScheduleTable> {
+        match self {
+            ScheduleSource::Direct(sk) => Arc::new(ScheduleTable::build(sk)),
+            ScheduleSource::Cached { cache, sk } => cache.table(sk),
+            ScheduleSource::Table(t) => t.clone(),
+        }
+    }
+
+    /// The combined schedule of relative rank `rel` (owned; two
+    /// `q`-element vectors on every path, so the copy is O(log p)).
     pub fn schedule(&self, rel: usize) -> Schedule {
         match self {
             ScheduleSource::Direct(sk) => Schedule::compute(sk, rel),
             ScheduleSource::Cached { cache, sk } => (*cache.get(sk.p(), rel)).clone(),
+            ScheduleSource::Table(t) => t.schedule(rel),
         }
     }
 
     /// The [`PhasedSchedule`] of absolute `rank` for a collective rooted
-    /// at `root` with `n` blocks.
+    /// at `root` with `n` blocks. On the `Table` path this phases the
+    /// flat rows directly ([`PhasedSchedule::from_rows`]) — no
+    /// intermediate per-rank `Schedule` is materialised.
     pub fn phased(&self, rank: usize, root: usize, n: usize) -> PhasedSchedule {
         let sk = self.skips();
         let p = sk.p();
         let rel = (rank + p - root % p) % p;
-        let sched = self.schedule(rel);
-        PhasedSchedule::new(sk.clone(), &sched, n)
+        match self {
+            ScheduleSource::Table(t) => {
+                PhasedSchedule::from_rows(sk.clone(), rel, t.recv_row(rel), t.send_row(rel), n)
+            }
+            _ => {
+                let sched = self.schedule(rel);
+                PhasedSchedule::new(sk.clone(), &sched, n)
+            }
+        }
     }
 
     /// Fill `recv_out[0..q]` / `send_out[0..q]` with relative rank `rel`'s
-    /// raw schedule rows; returns the baseblock. The allocation-free
-    /// row-filling path used by [`crate::sim::engine`]'s flat schedule
-    /// arena: on the `Direct` path it runs the stack-array cores
-    /// ([`crate::schedule::recv_schedule_into`] /
+    /// raw schedule rows; returns the baseblock. On the `Table` path a
+    /// widening copy out of the flat arena; on the `Direct` path the
+    /// stack-array cores ([`crate::schedule::recv_schedule_into`] /
     /// [`crate::schedule::send_schedule_into`]) with **zero** heap
-    /// allocation per rank; on the `Cached` path it copies the shared
-    /// entry (computing it on miss), so repeated engine traffic on one
-    /// communicator reuses schedules exactly like the proc-based backends.
+    /// allocation per rank; on the `Cached` path a copy of the shared
+    /// per-rank entry (computed on miss).
     pub fn schedule_rows_into(
         &self,
         rel: usize,
@@ -327,6 +371,16 @@ impl ScheduleSource<'_> {
                 recv_out[..q].copy_from_slice(&s.recv);
                 send_out[..q].copy_from_slice(&s.send);
                 s.baseblock
+            }
+            ScheduleSource::Table(t) => {
+                let q = t.q();
+                for (dst, &v) in recv_out[..q].iter_mut().zip(t.recv_row(rel)) {
+                    *dst = v as i64;
+                }
+                for (dst, &v) in send_out[..q].iter_mut().zip(t.send_row(rel)) {
+                    *dst = v as i64;
+                }
+                t.baseblock(rel)
             }
         }
     }
@@ -412,22 +466,47 @@ mod tests {
     }
 
     #[test]
-    fn schedule_rows_into_matches_compute_on_both_paths() {
+    fn schedule_rows_into_matches_compute_on_all_paths() {
         for p in [1usize, 2, 9, 17, 18, 33, 100] {
             let sk = Arc::new(Skips::new(p));
             let q = sk.q();
             let cache = ScheduleCache::new();
             let direct = ScheduleSource::Direct(&sk);
             let cached = ScheduleSource::Cached { cache: &cache, sk: &sk };
+            let table = ScheduleSource::Table(Arc::new(ScheduleTable::build(&sk)));
             let mut rbuf = vec![0i64; q];
             let mut sbuf = vec![0i64; q];
             for rel in 0..p {
                 let want = Schedule::compute(&sk, rel);
-                for src in [&direct, &cached] {
+                for src in [&direct, &cached, &table] {
                     let bb = src.schedule_rows_into(rel, &mut rbuf, &mut sbuf);
                     assert_eq!(bb, want.baseblock, "p={p} rel={rel}");
                     assert_eq!(rbuf, want.recv, "p={p} rel={rel}");
                     assert_eq!(sbuf, want.send, "p={p} rel={rel}");
+                    assert_eq!(src.schedule(rel), want, "p={p} rel={rel}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phased_from_rows_matches_phased_from_schedule() {
+        for p in [2usize, 9, 17, 33] {
+            let sk = Arc::new(Skips::new(p));
+            let table = Arc::new(ScheduleTable::build(&sk));
+            let tsrc = ScheduleSource::Table(table.clone());
+            let dsrc = ScheduleSource::Direct(&sk);
+            for n in [1usize, 3, 7] {
+                for root in [0, p - 1] {
+                    for rank in 0..p {
+                        let a = tsrc.phased(rank, root, n);
+                        let b = dsrc.phased(rank, root, n);
+                        assert_eq!(a.rel, b.rel, "p={p} n={n} root={root} rank={rank}");
+                        for j in 0..b.rounds() {
+                            assert_eq!(a.recv_at(j), b.recv_at(j), "recv p={p} j={j}");
+                            assert_eq!(a.send_at(j), b.send_at(j), "send p={p} j={j}");
+                        }
+                    }
                 }
             }
         }

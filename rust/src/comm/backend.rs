@@ -15,13 +15,15 @@
 //!   panic the rank thread instead of returning an error.
 //! * [`EngineBackend`] — the sparse, zero-copy engine
 //!   ([`crate::sim::engine`]) for full-network simulation at up to
-//!   millions of ranks. The engine evaluates the circulant schedules
-//!   directly (active-set worklist, arena payloads), so it accelerates
-//!   the schedule-driven collectives: the [`super::Communicator`]
-//!   dispatches circulant broadcast and reduce onto it, and every other
-//!   (kind, algorithm) combination — generic [`RankProc`] state machines
-//!   whose activity the engine cannot know — runs on the lockstep
-//!   [`Network`], which is what this trait impl does.
+//!   millions of ranks. The engine evaluates the shared all-ranks
+//!   [`crate::schedule::ScheduleTable`] directly (parallel-built flat
+//!   schedule plane, active-set worklist, arena payloads), so it
+//!   accelerates the schedule-driven collectives: the
+//!   [`super::Communicator`] dispatches circulant broadcast and reduce
+//!   onto it, and every other (kind, algorithm) combination — generic
+//!   [`RankProc`] state machines whose activity the engine cannot know —
+//!   runs on the lockstep [`Network`], which is what this trait impl
+//!   does.
 //!
 //! All sit behind one [`ExecBackend`] trait; [`BackendKind`] is the
 //! value-level selector a [`super::Communicator`] stores.

@@ -2,7 +2,7 @@
 //! every collective through typed requests — and its [`CommBuilder`].
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::collectives::allgatherv::{build_allgatherv_procs, AllgathervProc, ScheduleTable};
 use crate::collectives::baselines::{
@@ -14,9 +14,10 @@ use crate::collectives::common::{BlockGeometry, Element, ScheduleSource};
 use crate::collectives::reduce::{build_reduce_procs, ReduceProc};
 use crate::collectives::reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
 use crate::collectives::rhalving::RhalvingProc;
+use crate::schedule::table::ScheduleTable as RowTable;
 use crate::schedule::{ScheduleCache, Skips};
 use crate::sim::cost::{CostModel, LinearCost};
-use crate::sim::engine::{CirculantEngine, ENGINE_CACHE_MAX_P};
+use crate::sim::engine::CirculantEngine;
 use crate::sim::network::{RankProc, RunStats, SimError};
 
 use super::backend::{build_procs, BackendKind};
@@ -101,6 +102,7 @@ impl CommBuilder {
             tuning: self.tuning,
             backend: self.backend,
             tables: Mutex::new(HashMap::new()),
+            rows_uncached: OnceLock::new(),
         }
     }
 }
@@ -119,10 +121,15 @@ pub struct Communicator {
     cost: Arc<dyn CostModel>,
     tuning: TuningParams,
     backend: BackendKind,
-    /// Memoized Algorithm-7 schedule tables, keyed by block count `n`
-    /// — the all-collectives' analogue of the per-rank schedule cache
-    /// (building a table is O(p log p); repeated traffic shares it).
+    /// Memoized Algorithm-7 schedule tables, keyed by block count `n` —
+    /// thin `n`-phase views over the shared all-ranks row table, so
+    /// repeated all-collective traffic shares both layers.
     tables: Mutex<HashMap<usize, Arc<ScheduleTable>>>,
+    /// The all-ranks row table when it exceeds the shared cache's
+    /// admission cap (`tuning.table_cache_max_bytes`): built once on
+    /// first use and kept for this handle's lifetime, so even
+    /// million-rank traffic pays the parallel build exactly once.
+    rows_uncached: OnceLock<Arc<RowTable>>,
 }
 
 impl Communicator {
@@ -174,27 +181,36 @@ impl Communicator {
         super::request::resolve_blocks(kind, self.p, m, &self.tuning, blocks)
     }
 
-    /// Schedule source backed by this communicator's cache.
-    fn schedules(&self) -> ScheduleSource<'_> {
-        ScheduleSource::Cached { cache: &self.cache, sk: &self.sk }
-    }
-
-    /// Schedule source for the sparse engine: cache-served at service
-    /// scale (repeated traffic reuses schedules exactly like the proc
-    /// backends), computed directly with the allocation-free cores beyond
-    /// [`ENGINE_CACHE_MAX_P`] (a HashMap of `p` `Arc` entries is the
-    /// wrong shape at million-rank scale).
-    fn engine_schedules(&self) -> ScheduleSource<'_> {
-        if self.p <= ENGINE_CACHE_MAX_P {
-            self.schedules()
-        } else {
-            ScheduleSource::Direct(&self.sk)
+    /// The all-ranks schedule row table (the flat, parallel-built
+    /// schedule plane — see [`crate::schedule::table`]) serving every
+    /// collective at this `p`. Under the tuning cap it lives in the
+    /// shared [`ScheduleCache`] (hit/miss receipts: build = `p` misses,
+    /// every later fetch = `p` hits); above it, in this handle's private
+    /// [`OnceLock`] — either way the build runs exactly once per `p`
+    /// for this communicator's traffic.
+    fn rows(&self) -> Arc<RowTable> {
+        let cap = self.tuning.table_cache_max_bytes;
+        if RowTable::bytes_for(&self.sk) <= cap {
+            return self.cache.table_with_cap(&self.sk, cap);
         }
+        // Over the cap the cache declines to store, so the OnceLock is
+        // the once-only point: concurrent first callers block here
+        // instead of racing duplicate O(p log p) builds.
+        self.rows_uncached
+            .get_or_init(|| self.cache.table_with_cap(&self.sk, cap))
+            .clone()
     }
 
-    /// Cached all-relative-ranks schedule table for `n` blocks (the
-    /// Algorithm 7 machinery): built once per block count from the
-    /// schedule cache, then shared by every later call.
+    /// Schedule source backed by the shared schedule plane: one table
+    /// fetch per collective call, then every rank row is served from the
+    /// flat arena with no further cache traffic.
+    fn schedules(&self) -> ScheduleSource<'_> {
+        ScheduleSource::Table(self.rows())
+    }
+
+    /// Cached Algorithm-7 table for `n` blocks: a thin `n`-phase view
+    /// over the shared row table, built once per block count, then
+    /// shared by every later call.
     fn table(&self, n: usize) -> Arc<ScheduleTable> {
         let mut tables = self.tables.lock().unwrap();
         tables
@@ -255,7 +271,7 @@ impl Communicator {
                 // method the engine "only" removes the simulation cost.
                 let n = self.blocks_for(Kind::Bcast, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
-                let eng = CirculantEngine::new(&self.engine_schedules(), req.root, geom);
+                let eng = CirculantEngine::new(self.rows(), req.root, geom);
                 let stats = eng.run_bcast(req.elem_bytes, cost)?;
                 let bufs: Vec<Vec<T>> = (0..p).map(|_| req.data.to_vec()).collect();
                 (stats, bufs)
@@ -340,7 +356,7 @@ impl Communicator {
             Algo::Circulant if self.backend == BackendKind::Engine => {
                 let n = self.blocks_for(Kind::Reduce, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
-                let eng = CirculantEngine::new(&self.engine_schedules(), req.root, geom);
+                let eng = CirculantEngine::new(self.rows(), req.root, geom);
                 let (stats, buffer) =
                     eng.run_reduce(req.inputs, req.op.as_ref(), req.elem_bytes, cost)?;
                 (stats, buffer)

@@ -9,9 +9,11 @@
 //! [`CommBuilder`]) that owns
 //!
 //! * the circulant skip table ([`crate::schedule::Skips`], shared `Arc`),
-//! * a shared [`crate::schedule::ScheduleCache`] so repeated calls — and
-//!   calls with *different roots*, since schedules are root-relative —
-//!   reuse cached schedules instead of recomputing them,
+//! * a shared [`crate::schedule::ScheduleCache`] holding one
+//!   parallel-built all-ranks [`crate::schedule::ScheduleTable`] per `p`,
+//!   so repeated calls — and calls with *different roots*, since
+//!   schedules are root-relative — reuse the one flat schedule plane
+//!   instead of recomputing anything,
 //! * a pluggable execution backend ([`ExecBackend`]: the lockstep
 //!   round-based [`crate::sim::Network`] simulator, the
 //!   [`crate::sim::threads`] runtime where every rank is an OS thread, or

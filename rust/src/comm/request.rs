@@ -59,6 +59,15 @@ pub const SMALL_MSG_BYTES: usize = 2048;
 ///   `Outcome::buffers` assembly is inherently O(p·m); the true
 ///   million-rank regime is served by `CirculantEngine`'s own API (as in
 ///   `benches/engine_scale.rs`), which skips result materialization.
+///
+/// Whichever backend runs, schedules are served from one shared
+/// all-ranks [`crate::schedule::ScheduleTable`] per `p`: a flat,
+/// parallel-built arena that the communicator fetches once per
+/// collective call (resident in the shared [`crate::schedule::ScheduleCache`]
+/// up to [`TuningParams::table_cache_max_bytes`]; held privately on the
+/// handle beyond it). Backends differ only in how the rows are *driven*,
+/// never in which rows they see — which is what keeps the differential
+/// parity suites meaningful.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// Pick automatically: the circulant pipeline with the paper's
@@ -116,20 +125,33 @@ impl Algo {
     }
 }
 
-/// Tuning constants (the paper's F and G from §3: block size
+/// Tuning constants: the paper's F and G from §3 (block size
 /// `F·sqrt(m/q)` for bcast/reduce, `n = sqrt(m·q)/G` for the
-/// all-collectives).
+/// all-collectives), plus the schedule-plane cache bound.
 #[derive(Debug, Clone)]
 pub struct TuningParams {
     pub f_const: f64,
     pub g_const: f64,
+    /// Admission cap, in arena bytes (`2·p·q`), for keeping a
+    /// communicator's all-ranks [`crate::schedule::ScheduleTable`]
+    /// resident in the shared [`crate::schedule::ScheduleCache`]. The
+    /// default ([`crate::schedule::DEFAULT_TABLE_CAP_BYTES`]) admits
+    /// exactly what the historical `p ≤ 4096` rule admitted; above the
+    /// cap the communicator still builds the table once and keeps it
+    /// privately for its own lifetime — the cap only bounds what stays
+    /// resident in the *shared* cache.
+    pub table_cache_max_bytes: usize,
 }
 
 impl Default for TuningParams {
     fn default() -> Self {
         // The paper's experimentally chosen constants (Fig. 1: F = 70,
         // Fig. 2: G = 40).
-        TuningParams { f_const: 70.0, g_const: 40.0 }
+        TuningParams {
+            f_const: 70.0,
+            g_const: 40.0,
+            table_cache_max_bytes: crate::schedule::DEFAULT_TABLE_CAP_BYTES,
+        }
     }
 }
 

@@ -5,16 +5,43 @@
 //! performance (the paper's point), but a real MPI library still reuses a
 //! communicator's schedules across repeated collective calls, and the
 //! all-broadcast/all-reduction collectives need schedules for **all** `p`
-//! roots at once. The cache stores, per `(p, relative rank)`, the combined
-//! receive+send schedule; `Arc`-shared and thread-safe.
+//! roots at once. The cache therefore stores one parallel-built
+//! [`ScheduleTable`] per `p` — the flat all-ranks arena — instead of the
+//! historical per-`(p, relative rank)` `HashMap` rows: after the one
+//! build, every consumer (any rank, any root, any collective, any
+//! backend) reads the shared arena through an `Arc` with no further
+//! computation, and a whole-table fetch is one map lookup instead of `p`.
+//!
+//! **Counter semantics** (the observable the benches/tests pin): building
+//! the table for a `p` charges `p` misses — it computed `p` rank
+//! schedules — and serving an already-built table charges hits equal to
+//! the rank rows served (`p` for a whole-table fetch via [`ScheduleCache::table`],
+//! 1 for a single-rank [`ScheduleCache::get`]). This makes the receipts
+//! identical to the old per-rank map for the standard traffic patterns
+//! (first call at a `p`: `p` misses; every later call: `p` hits).
+//!
+//! **Memory bound**: tables are admitted by *bytes* (`2·p·q`, the arena
+//! size) against a cap — [`DEFAULT_TABLE_CAP_BYTES`] reproduces the old
+//! ad-hoc `p ≤ 4096` admission exactly; callers override it per fetch
+//! ([`ScheduleCache::table_with_cap`], exposed through
+//! `comm::TuningParams::table_cache_max_bytes`). Single-rank [`ScheduleCache::get`]s
+//! above the cap fall back to per-rank entries in a small overflow map
+//! (the historical behaviour, so legacy per-rank traffic at huge `p`
+//! stays cached without admitting a multi-megabyte arena).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::recv::{recv_schedule_core, MAX_Q};
 use super::send::send_schedule_core;
 use super::skips::Skips;
+use super::table::ScheduleTable;
+
+/// Default table-admission cap in arena bytes (`2·p·q`): `2·4096·12`,
+/// which admits exactly the tables the old `p ≤ 4096` rule admitted
+/// (any `p ≤ 4096` has `q ≤ 12`; any larger `p` overshoots the cap).
+pub const DEFAULT_TABLE_CAP_BYTES: usize = 2 * 4096 * 12;
 
 /// Combined per-processor schedule, ready for Algorithm 1 / Algorithm 7.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -56,12 +83,19 @@ impl Schedule {
     }
 }
 
-/// Thread-safe cache of [`Schedule`]s keyed by `(p, relative rank)` and of
-/// [`Skips`] keyed by `p`.
+/// Thread-safe cache of all-ranks [`ScheduleTable`]s keyed by `p` (plus
+/// [`Skips`] keyed by `p`, and a per-rank overflow map for single-rank
+/// requests above the table cap). Reads of a built table are one
+/// `RwLock` read-lock + `Arc` clone; the build itself runs the parallel
+/// chunked fill.
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
     skips: Mutex<HashMap<usize, Arc<Skips>>>,
-    scheds: Mutex<HashMap<(usize, usize), Arc<Schedule>>>,
+    tables: RwLock<HashMap<usize, Arc<ScheduleTable>>>,
+    /// Per-`(p, rank)` entries for `p` whose table exceeds the admission
+    /// cap — the historical shape, kept so legacy single-rank traffic at
+    /// huge `p` still caches without a multi-megabyte arena resident.
+    overflow: Mutex<HashMap<(usize, usize), Arc<Schedule>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -77,15 +111,60 @@ impl ScheduleCache {
         g.entry(p).or_insert_with(|| Arc::new(Skips::new(p))).clone()
     }
 
-    /// The schedule for relative rank `r` of a `p`-processor system
-    /// (cached; computed on miss in `O(log p)`).
+    /// The all-ranks table for `sk.p()` under the default admission cap.
+    pub fn table(&self, sk: &Arc<Skips>) -> Arc<ScheduleTable> {
+        self.table_with_cap(sk, DEFAULT_TABLE_CAP_BYTES)
+    }
+
+    /// The all-ranks table for `sk.p()`: served from the cache when
+    /// built (charging `p` hits), else built in parallel (charging `p`
+    /// misses) and stored iff its arena (`2·p·q` bytes) fits
+    /// `cap_bytes`. Over-cap tables are still *returned* — the caller
+    /// (e.g. a `Communicator`) is expected to hold the `Arc` itself so
+    /// repeated traffic pays the build exactly once.
+    pub fn table_with_cap(&self, sk: &Arc<Skips>, cap_bytes: usize) -> Arc<ScheduleTable> {
+        let p = sk.p();
+        if let Some(t) = self.tables.read().unwrap().get(&p) {
+            self.hits.fetch_add(p as u64, Ordering::Relaxed);
+            return t.clone();
+        }
+        let t = Arc::new(ScheduleTable::build(sk));
+        self.misses.fetch_add(p as u64, Ordering::Relaxed);
+        if t.bytes() <= cap_bytes {
+            // Keep the first build under a concurrent-build race.
+            self.tables.write().unwrap().entry(p).or_insert_with(|| t.clone());
+        }
+        t
+    }
+
+    /// The schedule for relative rank `r` of a `p`-processor system.
     ///
     /// Schedules are *root-relative*: `r` is `(rank - root) mod p`, so one
     /// entry per relative rank serves every root a
-    /// [`crate::comm::Communicator`] is asked to broadcast from.
+    /// [`crate::comm::Communicator`] is asked to broadcast from. Served
+    /// from the all-ranks table whenever one is resident (however it was
+    /// admitted — a table stored under a caller-raised cap serves `get`s
+    /// too); on a full miss, the table is built if it fits the default
+    /// cap, else the per-rank overflow map keeps the historical shape.
+    /// The hit path is one `RwLock` read plus the O(log p) row
+    /// materialisation — no `Skips` lookup.
     pub fn get(&self, p: usize, r: usize) -> Arc<Schedule> {
+        if let Some(t) = self.tables.read().unwrap().get(&p) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(t.schedule(r));
+        }
+        if 2 * p * super::skips::ceil_log2(p) <= DEFAULT_TABLE_CAP_BYTES {
+            let sk = self.skips(p);
+            let t = Arc::new(ScheduleTable::build(&sk));
+            self.misses.fetch_add(p as u64, Ordering::Relaxed);
+            let s = Arc::new(t.schedule(r));
+            self.tables.write().unwrap().entry(p).or_insert(t);
+            return s;
+        }
+        // Above the table cap with no resident table: historical
+        // per-(p, rank) caching.
         {
-            let g = self.scheds.lock().unwrap();
+            let g = self.overflow.lock().unwrap();
             if let Some(s) = g.get(&(p, r)) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return s.clone();
@@ -94,20 +173,23 @@ impl ScheduleCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let sk = self.skips(p);
         let s = Arc::new(Schedule::compute(&sk, r));
-        self.scheds.lock().unwrap().insert((p, r), s.clone());
+        self.overflow.lock().unwrap().insert((p, r), s.clone());
         s
     }
 
     /// `(hits, misses)` counters — the observable that lets callers (and
     /// the repeated-traffic bench / tests) verify schedules are being
-    /// *reused* rather than recomputed per call.
+    /// *reused* rather than recomputed per call. See the module docs for
+    /// the exact accounting (build = `p` misses; serves = rows served).
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
-    /// Cached schedule entries.
+    /// Cached per-rank schedule rows: `p` per resident table, plus the
+    /// overflow entries.
     pub fn len(&self) -> usize {
-        self.scheds.lock().unwrap().len()
+        let tabled: usize = self.tables.read().unwrap().keys().sum();
+        tabled + self.overflow.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -117,7 +199,8 @@ impl ScheduleCache {
     /// Drop all cached entries (counters are reset too).
     pub fn clear(&self) {
         self.skips.lock().unwrap().clear();
-        self.scheds.lock().unwrap().clear();
+        self.tables.write().unwrap().clear();
+        self.overflow.lock().unwrap().clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }
@@ -136,27 +219,99 @@ mod tests {
             let direct = Schedule::compute(&sk, r);
             assert_eq!(*cached, direct);
         }
-        // Second pass hits.
+        // First get built the whole 17-rank table (17 misses); the other
+        // 16 gets of pass one and all 17 of pass two are table serves.
         for r in 0..17 {
             cache.get(17, r);
         }
         let (hits, misses) = cache.stats();
-        assert_eq!(misses, 17);
-        assert_eq!(hits, 17);
+        assert_eq!(misses, 17, "one build charging p misses");
+        assert_eq!(hits, 16 + 17, "every later get is a table serve");
     }
 
     #[test]
-    fn cache_multiple_p() {
+    fn whole_table_fetch_counts_p_rows() {
+        let cache = ScheduleCache::new();
+        let sk = cache.skips(17);
+        let t1 = cache.table(&sk);
+        assert_eq!(t1.p(), 17);
+        let (h, m) = cache.stats();
+        assert_eq!((h, m), (0, 17), "build charges p misses, no hits");
+        let t2 = cache.table(&sk);
+        assert!(Arc::ptr_eq(&t1, &t2), "second fetch is the same arena");
+        let (h, m) = cache.stats();
+        assert_eq!((h, m), (17, 17), "second fetch charges p hits");
+    }
+
+    #[test]
+    fn table_and_get_serve_identical_rows() {
         let cache = ScheduleCache::new();
         for p in [2usize, 9, 17, 64, 100] {
+            let sk = cache.skips(p);
+            let t = cache.table(&sk);
             for r in 0..p {
                 let s = cache.get(p, r);
+                assert_eq!(*s, t.schedule(r), "p={p} r={r}");
                 assert_eq!(s.p, p);
                 assert_eq!(s.rank, r);
                 assert_eq!(s.recv.len(), s.q);
                 assert_eq!(s.send.len(), s.q);
             }
         }
+    }
+
+    #[test]
+    fn over_cap_tables_are_not_resident() {
+        // p = 8192 (q = 13): 2pq = 212992 bytes > the default cap. The
+        // table is returned but not stored; single-rank gets use the
+        // overflow map with the historical 1-miss/1-hit accounting.
+        let cache = ScheduleCache::new();
+        let sk = cache.skips(8192);
+        assert!(ScheduleTable::bytes_for(&sk) > DEFAULT_TABLE_CAP_BYTES);
+        let t = cache.table(&sk);
+        assert_eq!(t.p(), 8192);
+        assert!(cache.tables.read().unwrap().is_empty());
+        let (h0, m0) = cache.stats();
+        assert_eq!((h0, m0), (0, 8192));
+        cache.get(8192, 7);
+        cache.get(8192, 7);
+        let (h1, m1) = cache.stats();
+        assert_eq!(m1 - m0, 1, "overflow miss per new rank");
+        assert_eq!(h1 - h0, 1, "overflow hit on repeat");
+        // A p under the cap still gets a resident table.
+        let sk2 = cache.skips(4096);
+        cache.table(&sk2);
+        assert_eq!(cache.tables.read().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn custom_cap_controls_admission() {
+        let cache = ScheduleCache::new();
+        let sk = cache.skips(1024); // 2pq = 20480 bytes
+        let t = cache.table_with_cap(&sk, 1024);
+        assert_eq!(t.p(), 1024);
+        assert!(cache.tables.read().unwrap().is_empty(), "declined by the tight cap");
+        let t2 = cache.table_with_cap(&sk, usize::MAX);
+        assert_eq!(t2.p(), 1024);
+        assert_eq!(cache.tables.read().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn get_serves_resident_table_above_default_cap() {
+        // A table admitted under a caller-raised cap (e.g. a communicator
+        // with a larger TuningParams::table_cache_max_bytes) serves
+        // single-rank gets too — no overflow recompute, 1 hit per serve.
+        let cache = ScheduleCache::new();
+        let sk = cache.skips(8192);
+        let t = cache.table_with_cap(&sk, usize::MAX);
+        assert_eq!(cache.tables.read().unwrap().len(), 1);
+        let (h0, _) = cache.stats();
+        let s = cache.get(8192, 31);
+        assert_eq!(*s, t.schedule(31));
+        let (h1, m1) = cache.stats();
+        assert_eq!(h1 - h0, 1, "table-served get is a single hit");
+        assert_eq!(m1, 8192, "no overflow miss for a resident table");
+        assert!(cache.overflow.lock().unwrap().is_empty());
     }
 
     #[test]
@@ -172,11 +327,23 @@ mod tests {
                         let s = c.get(p, r);
                         assert_eq!(s.rank, r);
                     }
+                    let sk = c.skips(p);
+                    assert_eq!(c.table(&sk).p(), p);
                 }
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let cache = ScheduleCache::new();
+        cache.get(17, 3);
+        assert!(!cache.is_empty());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats(), (0, 0));
     }
 }

@@ -14,7 +14,9 @@
 //! (identical schedules, slower — the Table 4 comparison), [`doubling`]
 //! the Observation 2/6 constructions used as independent correctness
 //! oracles, [`verify`] the exhaustive four-condition checker (Appendix B),
-//! and [`cache`] the communicator-style schedule cache.
+//! [`table`] the all-ranks schedule plane (one flat `i8` arena per `p`,
+//! filled in parallel over rank chunks), and [`cache`] the
+//! communicator-style schedule cache (one shared table per `p`).
 
 pub mod baseblock;
 pub mod baseline;
@@ -23,11 +25,13 @@ pub mod doubling;
 pub mod recv;
 pub mod send;
 pub mod skips;
+pub mod table;
 pub mod verify;
 
 pub use baseblock::{all_baseblocks, baseblock, canonical_sequence};
-pub use cache::{Schedule, ScheduleCache};
+pub use cache::{Schedule, ScheduleCache, DEFAULT_TABLE_CAP_BYTES};
 pub use recv::{recv_schedule, recv_schedule_into, RecvSchedule};
 pub use send::{send_schedule, send_schedule_into, SendSchedule};
 pub use skips::{ceil_log2, Skips};
+pub use table::{configured_threads, ScheduleTable};
 pub use verify::{verify_all, verify_sampled, VerifyReport};

@@ -42,6 +42,30 @@ pub(crate) fn send_schedule_core(
     b: usize,
     out: &mut [i64; MAX_Q],
 ) -> usize {
+    send_schedule_core_with(sk, r, b, out, &mut |sk, t, k| {
+        let mut buf = [0i64; MAX_Q];
+        recv_schedule_core(sk, t, &mut buf);
+        buf[k]
+    })
+}
+
+/// [`send_schedule_core`] with a pluggable violation resolver: `recv_of`
+/// must return `recvblock[k]` of processor `t` (a fresh `ALLBLOCKS`
+/// search in the default resolver above). Theorem 3 bounds violations by
+/// 4 per processor, and neighbouring ranks' violations often target the
+/// *same* to-processor, so an all-ranks builder
+/// ([`crate::schedule::table::ScheduleTable`]) passes a small memo here
+/// and eliminates nearly all redundant searches.
+pub(crate) fn send_schedule_core_with<F>(
+    sk: &Skips,
+    r: usize,
+    b: usize,
+    out: &mut [i64; MAX_Q],
+    recv_of: &mut F,
+) -> usize
+where
+    F: FnMut(&Skips, usize, usize) -> i64,
+{
     debug_assert!(r < sk.p());
     let q = sk.q();
     let p = sk.p();
@@ -72,9 +96,7 @@ pub(crate) fn send_schedule_core(
                 // predictable here; ask its receive schedule.
                 violations += 1;
                 let t = to_proc(p, r, sk.skip(k));
-                let mut buf = [0i64; MAX_Q];
-                recv_schedule_core(sk, t, &mut buf);
-                sb[k] = buf[k];
+                sb[k] = recv_of(sk, t, k);
             }
             if e > sk.skip(k) {
                 e = sk.skip(k);
@@ -88,9 +110,7 @@ pub(crate) fn send_schedule_core(
                 // Violation: only possible for r' == skip[k].
                 violations += 1;
                 let t = to_proc(p, r, sk.skip(k));
-                let mut buf = [0i64; MAX_Q];
-                recv_schedule_core(sk, t, &mut buf);
-                sb[k] = buf[k];
+                sb[k] = recv_of(sk, t, k);
             } else {
                 sb[k] = c;
             }

@@ -1,0 +1,362 @@
+//! The all-ranks schedule plane: every processor's receive **and** send
+//! schedule for one `p`, in a single flat `i8` arena, built in parallel.
+//!
+//! The paper's headline result is that one rank's schedule costs
+//! `O(log p)`; a full-network consumer (the sparse simulation engine, the
+//! Algorithm-7 all-collectives, the schedule cache) needs all `p` of
+//! them. Filling them one `Vec` at a time, serially, makes the arena fill
+//! the dominant cost at `p = 2^20` — ahead of the actual round
+//! simulation. [`ScheduleTable`] fixes that on three axes:
+//!
+//! * **One allocation, `q`-strided rows.** All `2·p` rows live in one
+//!   contiguous `i8` arena (`2·p·q` bytes — 40 MiB at `p = 2^20`),
+//!   rank-major with the recv row immediately followed by the send row
+//!   (`arena[rel·2q .. rel·2q+q]` / `arena[rel·2q+q .. (rel+1)·2q]`), so
+//!   a consumer touching one rank's schedules touches one or two cache
+//!   lines and a round-`k` sweep strides predictably.
+//! * **Parallel build.** Ranks are independent (the paper's whole point:
+//!   no communication), so the arena is filled with
+//!   `std::thread::scope` over contiguous rank chunks — zero new
+//!   dependencies, thread count from `CBCAST_THREADS` (default: all
+//!   cores). Chunks own disjoint arena slices; no synchronisation.
+//! * **Two serial algorithmic wins inside each chunk.**
+//!   (a) The send-schedule violation path (Algorithm 6) falls back to a
+//!   full `ALLBLOCKS` receive-schedule search for the to-processor;
+//!   Theorem 3 bounds violations by 4 per rank, and neighbouring ranks'
+//!   violations frequently target the *same* to-processor, so a
+//!   `q`-entry LRU memo ([`RecvMemo`]) per chunk eliminates nearly all
+//!   redundant searches. (b) The recv and send rows of one rank share a
+//!   single baseblock computation: `recv_schedule_core` already walks
+//!   Algorithm 3, and its result is handed straight to the send core
+//!   instead of recomputed.
+//!
+//! Rows are *root-relative* and depend only on `p` (not on the block
+//! count `n`, the root, or the collective), so one table serves every
+//! broadcast/reduction/all-collective at its `p` — the
+//! [`crate::schedule::ScheduleCache`] stores exactly one per `p`.
+
+use std::sync::Arc;
+
+use super::cache::Schedule;
+use super::recv::{recv_schedule_core, MAX_Q};
+use super::send::send_schedule_core_with;
+use super::skips::Skips;
+
+/// Thread count for the parallel schedule-plane paths (table build and
+/// the engine's sharded delivery application): the `CBCAST_THREADS`
+/// environment variable if set to a positive integer, else all available
+/// cores. `CBCAST_THREADS=1` is the exact serial path (no scope, no
+/// spawns) — the baseline the CI smoke compares against.
+pub fn configured_threads() -> usize {
+    std::env::var("CBCAST_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Small LRU memo of receive-schedule rows, keyed by processor — the
+/// per-chunk violation-path cache. Capacity `q` (Theorem 3 gives ≤ 4
+/// violations per rank, all targeting to-processors `r + skip[k]`, so a
+/// handful of entries covers the reuse window of a contiguous rank
+/// chunk). Move-to-front on hit, evict-last on insert; `q ≤ 64` keeps
+/// the linear scan trivially cheap.
+struct RecvMemo {
+    cap: usize,
+    entries: Vec<(usize, [i64; MAX_Q])>,
+}
+
+impl RecvMemo {
+    fn new(q: usize) -> Self {
+        RecvMemo { cap: q.max(4), entries: Vec::new() }
+    }
+
+    fn recv_at(&mut self, sk: &Skips, t: usize, k: usize) -> i64 {
+        if let Some(pos) = self.entries.iter().position(|e| e.0 == t) {
+            if pos != 0 {
+                let e = self.entries.remove(pos);
+                self.entries.insert(0, e);
+            }
+            return self.entries[0].1[k];
+        }
+        let mut buf = [0i64; MAX_Q];
+        recv_schedule_core(sk, t, &mut buf);
+        if self.entries.len() == self.cap {
+            self.entries.pop();
+        }
+        self.entries.insert(0, (t, buf));
+        buf[k]
+    }
+}
+
+/// All `p` receive+send schedule rows for one `p`, flat and shareable.
+///
+/// Raw entries lie in `[-q, q]` and `q ≤ 64`, so `i8` holds them; the
+/// phase-advanced value any consumer actually uses at network round `j`
+/// is `row[k] + delta` with `(k, delta)` from
+/// [`crate::collectives::common::phase_params`] — rank-independent, so
+/// the table itself is block-count- and root-agnostic.
+#[derive(Debug, Clone)]
+pub struct ScheduleTable {
+    sk: Arc<Skips>,
+    /// Rank-major rows, stride `2q`: recv row then send row per rank.
+    arena: Vec<i8>,
+    /// Baseblock `b_rel` per rank (`q` for the root; fits `u8`).
+    baseblocks: Vec<u8>,
+    /// Total send-schedule violations resolved across all ranks
+    /// (Theorem 3: ≤ 4·p; observable for the bench receipts).
+    violations: usize,
+}
+
+impl ScheduleTable {
+    /// Build the full table with the configured thread count
+    /// ([`configured_threads`]).
+    pub fn build(sk: &Arc<Skips>) -> Self {
+        Self::build_with_threads(sk, configured_threads())
+    }
+
+    /// Build the full table, filling contiguous rank chunks on `threads`
+    /// scoped threads (`threads = 1` runs strictly serially on the
+    /// calling thread).
+    pub fn build_with_threads(sk: &Arc<Skips>, threads: usize) -> Self {
+        let p = sk.p();
+        let q = sk.q();
+        let mut arena = vec![0i8; p * 2 * q];
+        let mut baseblocks = vec![0u8; p];
+        if q == 0 {
+            // p = 1: empty rows, baseblock 0 by the q = 0 convention.
+            return ScheduleTable { sk: sk.clone(), arena, baseblocks, violations: 0 };
+        }
+        let threads = threads.clamp(1, p);
+        let violations = if threads == 1 {
+            fill_chunk(sk, 0, &mut arena, &mut baseblocks)
+        } else {
+            // ceil(p / threads) ranks per chunk; chunks own disjoint
+            // slices of the arena and the baseblock vector, so the scoped
+            // threads need no synchronisation at all.
+            let chunk_ranks = (p + threads - 1) / threads; // ceil; div_ceil needs 1.73, MSRV is 1.70
+            let mut total = 0usize;
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(threads);
+                for (i, (rows, bbs)) in arena
+                    .chunks_mut(chunk_ranks * 2 * q)
+                    .zip(baseblocks.chunks_mut(chunk_ranks))
+                    .enumerate()
+                {
+                    let start = i * chunk_ranks;
+                    handles.push(s.spawn(move || fill_chunk(sk, start, rows, bbs)));
+                }
+                for h in handles {
+                    total += h.join().expect("schedule-table fill chunk panicked");
+                }
+            });
+            total
+        };
+        ScheduleTable { sk: sk.clone(), arena, baseblocks, violations }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.sk.p()
+    }
+
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.sk.q()
+    }
+
+    #[inline]
+    pub fn skips(&self) -> &Arc<Skips> {
+        &self.sk
+    }
+
+    /// Arena size in bytes (`2·p·q`) — what the cache's admission cap
+    /// compares against.
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// [`Self::bytes`] without building: `2·p·q` for this `sk`.
+    #[inline]
+    pub fn bytes_for(sk: &Skips) -> usize {
+        2 * sk.p() * sk.q()
+    }
+
+    /// Total send-schedule violations resolved during the build.
+    #[inline]
+    pub fn violations(&self) -> usize {
+        self.violations
+    }
+
+    /// Raw `recvblock[k]` of relative rank `rel`.
+    #[inline]
+    pub fn recv_raw(&self, rel: usize, k: usize) -> i8 {
+        self.arena[rel * 2 * self.sk.q() + k]
+    }
+
+    /// Raw `sendblock[k]` of relative rank `rel`.
+    #[inline]
+    pub fn send_raw(&self, rel: usize, k: usize) -> i8 {
+        let q = self.sk.q();
+        self.arena[rel * 2 * q + q + k]
+    }
+
+    /// The `q` raw recv entries of `rel`.
+    #[inline]
+    pub fn recv_row(&self, rel: usize) -> &[i8] {
+        let q = self.sk.q();
+        &self.arena[rel * 2 * q..rel * 2 * q + q]
+    }
+
+    /// The `q` raw send entries of `rel`.
+    #[inline]
+    pub fn send_row(&self, rel: usize) -> &[i8] {
+        let q = self.sk.q();
+        &self.arena[rel * 2 * q + q..(rel + 1) * 2 * q]
+    }
+
+    /// Baseblock `b_rel` (`q` for the root, matching
+    /// [`Schedule::compute`]).
+    #[inline]
+    pub fn baseblock(&self, rel: usize) -> usize {
+        self.baseblocks[rel] as usize
+    }
+
+    /// Materialise one rank's combined [`Schedule`] from the table rows
+    /// (two `q`-element allocations — the compatibility shape served by
+    /// [`crate::schedule::ScheduleCache::get`]).
+    pub fn schedule(&self, rel: usize) -> Schedule {
+        Schedule {
+            p: self.p(),
+            q: self.q(),
+            rank: rel,
+            recv: self.recv_row(rel).iter().map(|&v| v as i64).collect(),
+            send: self.send_row(rel).iter().map(|&v| v as i64).collect(),
+            baseblock: self.baseblock(rel),
+        }
+    }
+
+    /// Test-only corruption hooks (schedule-violation enforcement tests).
+    #[cfg(test)]
+    pub(crate) fn recv_row_mut(&mut self, rel: usize) -> &mut [i8] {
+        let q = self.sk.q();
+        &mut self.arena[rel * 2 * q..rel * 2 * q + q]
+    }
+
+    #[cfg(test)]
+    pub(crate) fn send_row_mut(&mut self, rel: usize) -> &mut [i8] {
+        let q = self.sk.q();
+        &mut self.arena[rel * 2 * q + q..(rel + 1) * 2 * q]
+    }
+}
+
+/// Fill the rows of ranks `start..start + bbs.len()` into `rows` (a
+/// `2q`-strided slice of the arena); returns the violation count. One
+/// baseblock walk per rank (shared by its recv and send row) and one
+/// [`RecvMemo`] for the whole chunk's violation fallbacks.
+fn fill_chunk(sk: &Skips, start: usize, rows: &mut [i8], bbs: &mut [u8]) -> usize {
+    let q = sk.q();
+    debug_assert_eq!(rows.len(), bbs.len() * 2 * q);
+    let mut memo = RecvMemo::new(q);
+    let mut rbuf = [0i64; MAX_Q];
+    let mut sbuf = [0i64; MAX_Q];
+    let mut violations = 0usize;
+    for (i, bb_out) in bbs.iter_mut().enumerate() {
+        let rel = start + i;
+        // (b)-win: the recv core's Algorithm-3 walk is the send core's
+        // baseblock too — computed once per rank, not twice.
+        let (bb, _) = recv_schedule_core(sk, rel, &mut rbuf);
+        violations +=
+            send_schedule_core_with(sk, rel, bb, &mut sbuf, &mut |sk, t, k| {
+                memo.recv_at(sk, t, k)
+            });
+        debug_assert!(bb <= q, "baseblock {bb} out of range");
+        *bb_out = bb as u8;
+        let row = &mut rows[i * 2 * q..(i + 1) * 2 * q];
+        for (dst, &v) in row[..q].iter_mut().zip(&rbuf[..q]) {
+            debug_assert!((-(q as i64)..q as i64).contains(&v));
+            *dst = v as i8;
+        }
+        for (dst, &v) in row[q..].iter_mut().zip(&sbuf[..q]) {
+            debug_assert!((-(q as i64)..q as i64).contains(&v));
+            *dst = v as i8;
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::recv::recv_schedule;
+    use crate::schedule::send::send_schedule;
+
+    fn assert_matches_serial(p: usize, threads: usize) {
+        let sk = Arc::new(Skips::new(p));
+        let t = ScheduleTable::build_with_threads(&sk, threads);
+        assert_eq!(t.p(), p);
+        assert_eq!(t.bytes(), 2 * p * sk.q());
+        for r in 0..p {
+            let rs = recv_schedule(&sk, r);
+            let ss = send_schedule(&sk, r);
+            let trecv: Vec<i64> = t.recv_row(r).iter().map(|&v| v as i64).collect();
+            let tsend: Vec<i64> = t.send_row(r).iter().map(|&v| v as i64).collect();
+            assert_eq!(trecv, rs.blocks, "recv p={p} r={r} threads={threads}");
+            assert_eq!(tsend, ss.blocks, "send p={p} r={r} threads={threads}");
+            assert_eq!(t.baseblock(r), rs.baseblock, "bb p={p} r={r}");
+            let s = t.schedule(r);
+            assert_eq!(s.recv, rs.blocks);
+            assert_eq!(s.send, ss.blocks);
+            assert_eq!(s.rank, r);
+        }
+    }
+
+    #[test]
+    fn matches_serial_cores_small_grid() {
+        for p in [1usize, 2, 3, 4, 5, 8, 9, 16, 17, 18, 31, 32, 33, 100, 127, 128, 129] {
+            for threads in [1usize, 2, 8] {
+                assert_matches_serial(p, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_are_invisible() {
+        // Thread counts that do not divide p: the last chunk is short and
+        // chunk-local memo state must not leak across boundaries.
+        for p in [97usize, 1000, 1023] {
+            for threads in [3usize, 7, 13, 97] {
+                assert_matches_serial(p, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn violations_bounded_by_theorem3() {
+        for p in [17usize, 100, 1000, 4097] {
+            let sk = Arc::new(Skips::new(p));
+            let t = ScheduleTable::build_with_threads(&sk, 4);
+            assert!(t.violations() <= 4 * p, "p={p}: {}", t.violations());
+        }
+    }
+
+    #[test]
+    fn p1_table_is_empty() {
+        let sk = Arc::new(Skips::new(1));
+        let t = ScheduleTable::build(&sk);
+        assert_eq!(t.bytes(), 0);
+        assert!(t.recv_row(0).is_empty());
+        assert!(t.send_row(0).is_empty());
+        assert_eq!(t.baseblock(0), 0);
+    }
+
+    #[test]
+    fn memo_hits_do_not_change_rows() {
+        // A chunk of the whole rank range maximises memo reuse; the rows
+        // must still be bit-identical to the memo-free serial cores
+        // (covered rank by rank in assert_matches_serial, pinned here at
+        // a p with many violations).
+        assert_matches_serial(4099, 1);
+    }
+}

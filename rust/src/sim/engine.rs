@@ -18,7 +18,9 @@
 //!   order). For reduction (reversed schedules) the worklist is pruned
 //!   from the tail as reversed time passes each rank's first forward send
 //!   round — computed in closed form from its schedule row, O(log p) per
-//!   rank, no scanning.
+//!   rank, ordered by a counting sort over rounds (O(p + rounds)), and
+//!   memoized per engine ([`CirculantEngine::run_reduce`] reruns pop a
+//!   cached copy).
 //! * **Arena payload storage, offset-passing sends** — block payloads
 //!   live in one flat arena indexed by `(rank, block)` (`rank*m +
 //!   BlockGeometry::range(b)`); a "send" passes offsets into the arena
@@ -27,14 +29,26 @@
 //!   per-message allocation). A broadcast never transforms payloads at
 //!   all, so its arena degenerates to the caller's buffer plus a
 //!   `(rank, block)` *holds* bitmap — the simulation is payload-free.
-//! * **Allocation-free schedule evaluation** — all `p` schedule rows are
-//!   filled once through [`ScheduleSource::schedule_rows_into`] (backed
-//!   by [`crate::schedule::recv_schedule_into`] /
-//!   [`crate::schedule::send_schedule_into`] on the direct path) into two
-//!   flat `i8` arenas; the per-round phase shift is one `(slot, delta)`
-//!   pair shared by every rank (hoisted exactly like
-//!   `ScheduleTable::round_params`), so the hot path is an array load
-//!   plus an add.
+//! * **Shared schedule plane** — the engine evaluates a
+//!   [`ScheduleTable`]: the all-ranks flat `i8` arena built in parallel
+//!   once per `p` (see [`crate::schedule::table`]) and shared through an
+//!   `Arc` by every engine, root, block count and collective at that `p`.
+//!   The per-round phase shift is one `(slot, delta)` pair shared by
+//!   every rank ([`crate::collectives::common::phase_params`]), so the
+//!   hot path is an `i8` load plus an add.
+//! * **Reusable run scratch** — all per-run state (worklists, bitmaps,
+//!   stamps, delivery queues, the reduction arena) lives in an
+//!   [`EngineScratch`] that callers can hold across runs, making
+//!   repeated [`CirculantEngine::run_bcast_with`] /
+//!   [`CirculantEngine::run_reduce_with`] calls allocation-free after
+//!   the first.
+//! * **Sharded delivery application** — when a round's delivery queue is
+//!   large, applying it (bitmap updates for broadcast, ⊕-combines for
+//!   reduction) is sharded over `std::thread::scope` threads
+//!   ([`crate::schedule::configured_threads`]); one-portedness makes
+//!   every round's delivery targets pairwise distinct, so the shards
+//!   write disjoint state and the result is bit-identical to the serial
+//!   order.
 //!
 //! ## Accounting and enforcement contract
 //!
@@ -58,25 +72,88 @@
 //!
 //! [`Network`]: super::network::Network
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::collectives::common::{phase_params, BlockGeometry, Element, ReduceOp, ScheduleSource};
-use crate::schedule::recv::MAX_Q;
-use crate::schedule::Skips;
+use crate::schedule::table::configured_threads;
+use crate::schedule::{ScheduleTable, Skips};
 use crate::sim::cost::CostModel;
 use crate::sim::network::{RunStats, SimError};
 
-/// Above this `p`, the `comm` layer stops serving the engine's schedule
-/// rows from the shared [`crate::schedule::ScheduleCache`] (a HashMap of
-/// `p` `Arc` entries is the wrong shape at million-rank scale) and
-/// computes them directly with the allocation-free cores.
-pub const ENGINE_CACHE_MAX_P: usize = 1 << 12;
+/// Minimum per-round delivery-queue length before applying it is sharded
+/// across scoped threads — below this the spawn cost dominates the work.
+const PAR_DELIVERY_MIN: usize = 1 << 12;
 
-/// The engine for one `(p, root, block geometry)` configuration: flat
-/// schedule arenas plus the phase bookkeeping of Algorithm 1. Build once,
-/// then run broadcasts ([`Self::run_bcast`]) and reductions
-/// ([`Self::run_reduce`]) over it.
+/// Raw-pointer cell for the sharded delivery application. SAFETY
+/// contract at each use site: one round's delivery targets are pairwise
+/// distinct (enforced by the one-ported receive check before enqueueing),
+/// and the pointed-to layout is target-major, so concurrent shards touch
+/// disjoint memory.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Reusable run scratch: every vector the engine's run loops need, owned
+/// by the caller so repeated runs on one (or several) engines allocate
+/// nothing after the first use. `T` is the reduction element type; for
+/// broadcast-only use any `T` (e.g. `EngineScratch::<()>::new()`) — the
+/// payload fields stay empty.
+#[derive(Default)]
+pub struct EngineScratch<T> {
+    /// Override for the delivery-sharding thread count (`None` = the
+    /// `CBCAST_THREADS`/core default). Exists so tests and benches can
+    /// pin both code paths deterministically.
+    pub delivery_threads: Option<usize>,
+    // --- broadcast ---
+    holds: Vec<u64>,
+    held: Vec<u32>,
+    newly: Vec<u8>,
+    deliveries_b: Vec<(u32, u32)>,
+    // --- shared ---
+    active: Vec<u32>,
+    recv_stamp: Vec<u32>,
+    recv_from: Vec<u32>,
+    rank_bytes: Vec<usize>,
+    // --- reduction ---
+    recv_count: Vec<u32>,
+    arena: Vec<T>,
+    stage: Vec<T>,
+    deliveries_r: Vec<(usize, usize, usize, usize)>,
+}
+
+impl<T: Element> EngineScratch<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Clear and re-zero a scratch vector to `len` — allocation-free once the
+/// capacity has been grown by a first run.
+fn reset<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
+    v.clear();
+    v.resize(len, T::default());
+}
+
+/// Closed-form per-rank activity profile of a reduction, computed once
+/// per engine and shared by every rerun: reversed-schedule senders in
+/// worklist order (counting-sorted by first forward send round) plus the
+/// expected receive counts for the deferred completion check.
+struct ReduceProfile {
+    first_send: Vec<usize>,
+    expect_recv: Vec<u32>,
+    /// Non-root ranks that send at all, ascending by `first_send` (ties
+    /// by rank — the exact order the old stable comparison sort gave).
+    active: Vec<u32>,
+}
+
+/// The engine for one `(p, root, block geometry)` configuration over a
+/// shared all-ranks [`ScheduleTable`]: construction is O(1) beyond the
+/// `Arc` (the table is built once per `p` and reused across engines,
+/// roots, block counts and collectives). Build once, then run broadcasts
+/// ([`Self::run_bcast`]) and reductions ([`Self::run_reduce`]) over it.
 pub struct CirculantEngine {
+    table: Arc<ScheduleTable>,
     sk: Arc<Skips>,
     root: usize,
     geom: BlockGeometry,
@@ -86,47 +163,44 @@ pub struct CirculantEngine {
     /// Virtual-round offset `x = (q - (n-1) mod q) mod q` of Algorithm 1.
     x: usize,
     rounds: usize,
-    /// `recv_rows[rel*q + k]` = raw `recvblock[k]` of relative rank `rel`.
-    /// Raw entries lie in `[-q, q)` and `q <= 64`, so `i8` holds them —
-    /// the whole table is `2·p·q` bytes (40 MiB at `p = 2^20`).
-    recv_rows: Vec<i8>,
-    /// `send_rows[rel*q + k]` = raw `sendblock[k]` of relative rank `rel`.
-    send_rows: Vec<i8>,
+    reduce_profile: OnceLock<ReduceProfile>,
 }
 
 impl CirculantEngine {
-    /// Build the engine from a schedule source (cache-served or direct),
-    /// a broadcast/reduction root and the block geometry.
-    pub fn new(src: &ScheduleSource<'_>, root: usize, geom: BlockGeometry) -> Self {
-        let sk = src.skips().clone();
+    /// Build the engine over a shared all-ranks schedule table, a
+    /// broadcast/reduction root and the block geometry.
+    pub fn new(table: Arc<ScheduleTable>, root: usize, geom: BlockGeometry) -> Self {
+        let sk = table.skips().clone();
         let p = sk.p();
         assert!(root < p, "root {root} out of range for p = {p}");
         let q = sk.q();
         let n = geom.n;
         let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
         let rounds = if p == 1 { 0 } else { n - 1 + q };
-        let mut recv_rows = vec![0i8; p * q];
-        let mut send_rows = vec![0i8; p * q];
-        let mut rbuf = [0i64; MAX_Q];
-        let mut sbuf = [0i64; MAX_Q];
-        for rel in 0..p {
-            src.schedule_rows_into(rel, &mut rbuf[..q], &mut sbuf[..q]);
-            let row = rel * q;
-            for (dst, &v) in recv_rows[row..row + q].iter_mut().zip(&rbuf[..q]) {
-                debug_assert!((-(q as i64)..q as i64).contains(&v));
-                *dst = v as i8;
-            }
-            for (dst, &v) in send_rows[row..row + q].iter_mut().zip(&sbuf[..q]) {
-                debug_assert!((-(q as i64)..q as i64).contains(&v));
-                *dst = v as i8;
-            }
+        CirculantEngine {
+            table,
+            sk,
+            root,
+            geom,
+            p,
+            q,
+            n,
+            x,
+            rounds,
+            reduce_profile: OnceLock::new(),
         }
-        CirculantEngine { sk, root, geom, p, q, n, x, rounds, recv_rows, send_rows }
     }
 
-    /// Direct-computation convenience (no cache) — the million-rank path.
+    /// Build from a [`ScheduleSource`] (table-served, cache-served or
+    /// direct — see [`ScheduleSource::rows`]).
+    pub fn from_source(src: &ScheduleSource<'_>, root: usize, geom: BlockGeometry) -> Self {
+        Self::new(src.rows(), root, geom)
+    }
+
+    /// Direct-computation convenience (no cache): builds a throwaway
+    /// table with the configured parallelism — the million-rank path.
     pub fn from_skips(sk: &Arc<Skips>, root: usize, geom: BlockGeometry) -> Self {
-        Self::new(&ScheduleSource::Direct(sk), root, geom)
+        Self::new(Arc::new(ScheduleTable::build(sk)), root, geom)
     }
 
     #[inline]
@@ -137,6 +211,12 @@ impl CirculantEngine {
     #[inline]
     pub fn rounds(&self) -> usize {
         self.rounds
+    }
+
+    /// The shared schedule plane this engine evaluates.
+    #[inline]
+    pub fn table(&self) -> &Arc<ScheduleTable> {
+        &self.table
     }
 
     /// Absolute rank of relative rank `rel`.
@@ -208,7 +288,14 @@ impl CirculantEngine {
     // Broadcast (Algorithm 1)
     // ------------------------------------------------------------------
 
-    /// Simulate the full `n`-block broadcast over all `p` ranks.
+    /// Simulate the full `n`-block broadcast over all `p` ranks with a
+    /// throwaway scratch. See [`Self::run_bcast_with`].
+    pub fn run_bcast(&self, elem_bytes: usize, cost: &dyn CostModel) -> Result<RunStats, SimError> {
+        self.run_bcast_with(&mut EngineScratch::<()>::new(), elem_bytes, cost)
+    }
+
+    /// Simulate the full `n`-block broadcast over all `p` ranks, reusing
+    /// `scratch` (allocation-free after its first use).
     ///
     /// Payload-free: a broadcast moves blocks of the root's buffer
     /// unchanged, so only the `(rank, block)` holds bitmap and the block
@@ -216,28 +303,38 @@ impl CirculantEngine {
     /// run statistics iff every rank ends holding every block; machine-
     /// model violations return the same [`SimError`]s as the lockstep
     /// simulator (see the module docs for the enforcement contract).
-    pub fn run_bcast(&self, elem_bytes: usize, cost: &dyn CostModel) -> Result<RunStats, SimError> {
+    pub fn run_bcast_with<S: Element>(
+        &self,
+        scratch: &mut EngineScratch<S>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<RunStats, SimError> {
         let p = self.p;
-        let q = self.q;
         let n = self.n;
         let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
         if p == 1 {
             return Ok(stats);
         }
+        let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
         let words = (n + 63) / 64;
-        let mut holds = vec![0u64; p * words];
+        let EngineScratch {
+            holds, held, newly, deliveries_b: deliveries, active, recv_stamp, recv_from,
+            rank_bytes, ..
+        } = scratch;
+        reset(holds, p * words);
         for (w, word) in holds[..words].iter_mut().enumerate() {
             // The root (rel 0) starts with every block.
             *word = if (w + 1) * 64 <= n { u64::MAX } else { (1u64 << (n - w * 64)) - 1 };
         }
-        let mut held: Vec<u32> = vec![0; p];
+        reset(held, p);
         held[0] = n as u32;
-        let mut active: Vec<u32> = Vec::with_capacity(p);
+        active.clear();
+        active.reserve(p);
         active.push(0);
-        let mut recv_stamp: Vec<u32> = vec![0; p];
-        let mut recv_from: Vec<u32> = vec![0; p];
-        let mut rank_bytes: Vec<usize> = vec![0; p];
-        let mut deliveries: Vec<(u32, u32)> = Vec::new();
+        reset(recv_stamp, p);
+        reset(recv_from, p);
+        reset(rank_bytes, p);
+        deliveries.clear();
 
         for j in 0..self.rounds {
             let (k, delta) = self.round_params(j);
@@ -261,7 +358,7 @@ impl CirculantEngine {
                 if t_rel == 0 {
                     continue; // never send to the root (it has everything)
                 }
-                let b = match self.cap(self.send_rows[rel * q + k] as i64 + delta) {
+                let b = match self.cap(self.table.send_raw(rel, k) as i64 + delta) {
                     Some(b) => b,
                     None => continue,
                 };
@@ -275,7 +372,7 @@ impl CirculantEngine {
                 let from = self.abs(rel);
                 let to = self.abs(t_rel);
                 // Receiver-side expectation cross-check (Conditions 1+2).
-                let rb = match self.cap(self.recv_rows[t_rel * q + k] as i64 + delta) {
+                let rb = match self.cap(self.table.recv_raw(t_rel, k) as i64 + delta) {
                     Some(rb) => rb,
                     None => {
                         return Err(SimError::UnexpectedMessage {
@@ -308,17 +405,23 @@ impl CirculantEngine {
                 deliveries.push((t_rel as u32, rb as u32));
             }
             // Deliver after the send scan: nothing received in round j is
-            // visible to sends before round j+1 (lockstep order).
-            for &(to_rel, b) in &deliveries {
-                let (to_rel, b) = (to_rel as usize, b as usize);
-                let w = to_rel * words + b / 64;
-                let bit = 1u64 << (b % 64);
-                if holds[w] & bit == 0 {
-                    holds[w] |= bit;
-                    if held[to_rel] == 0 {
-                        active.push(to_rel as u32);
+            // visible to sends before round j+1 (lockstep order). The
+            // targets are pairwise distinct (one-ported check above), so
+            // a large queue can be applied in parallel shards.
+            if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
+                deliver_bcast_parallel(deliveries, newly, holds, held, active, words, threads);
+            } else {
+                for &(to_rel, b) in deliveries.iter() {
+                    let (to_rel, b) = (to_rel as usize, b as usize);
+                    let w = to_rel * words + b / 64;
+                    let bit = 1u64 << (b % 64);
+                    if holds[w] & bit == 0 {
+                        holds[w] |= bit;
+                        if held[to_rel] == 0 {
+                            active.push(to_rel as u32);
+                        }
+                        held[to_rel] += 1;
                     }
-                    held[to_rel] += 1;
                 }
             }
             deliveries.clear();
@@ -327,8 +430,8 @@ impl CirculantEngine {
                 stats.time += round_time;
             }
         }
-        stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
-        if let Some(err) = self.find_missing_bcast(&holds, words, &held) {
+        stats.max_rank_bytes = rank_bytes.iter().copied().max().unwrap_or(0);
+        if let Some(err) = self.find_missing_bcast(holds, words, held) {
             return Err(err);
         }
         Ok(stats)
@@ -342,7 +445,6 @@ impl CirculantEngine {
         if held.iter().all(|&c| c as usize == self.n) {
             return None;
         }
-        let q = self.q;
         for j in 0..self.rounds {
             let (k, delta) = self.round_params(j);
             let skip = self.sk.skip(k);
@@ -350,7 +452,7 @@ impl CirculantEngine {
                 if held[rel] as usize == self.n {
                     continue;
                 }
-                let rval = self.recv_rows[rel * q + k] as i64 + delta;
+                let rval = self.table.recv_raw(rel, k) as i64 + delta;
                 let b = match self.cap(rval) {
                     Some(b) => b,
                     None => continue,
@@ -379,14 +481,57 @@ impl CirculantEngine {
     // Reduction (reversed schedules, Observation 1.3)
     // ------------------------------------------------------------------
 
-    /// Simulate the full rooted reduction: `inputs[r]` is *absolute* rank
-    /// `r`'s `m`-element contribution; returns the run statistics and the
-    /// root's fully reduced buffer.
-    ///
-    /// All partials live in one `(rank, block)`-indexed arena; a send
-    /// stages the sender's arena range through a reused per-round scratch
-    /// (the lockstep clone-at-send, minus the per-message allocation) and
-    /// the receiver combines in place with ⊕.
+    /// Activity profiles (closed form, O(log p) per rank): a rank sends
+    /// in reversed round `jr` iff its *receive* row is non-negative at
+    /// forward round `i = rounds-1-jr`, so its last reversed send passes
+    /// when `i` drops below its first forward send round. A rank expects
+    /// a receive iff its *send* row is non-negative and its forward
+    /// to-processor is not the root. Computed once per engine; the
+    /// worklist is ordered by a counting sort over first-send rounds —
+    /// O(p + rounds), replacing the old per-run O(p log p) sort.
+    fn reduce_profile(&self) -> &ReduceProfile {
+        self.reduce_profile.get_or_init(|| {
+            let p = self.p;
+            let mut first_send = vec![usize::MAX; p];
+            let mut expect_recv = vec![0u32; p];
+            for rel in 0..p {
+                if rel != 0 {
+                    let (_, first) = self.row_occupancy(self.table.recv_row(rel), |_| true);
+                    first_send[rel] = first;
+                }
+                let (cnt, _) = self.row_occupancy(self.table.send_row(rel), |k| {
+                    let t = rel + self.sk.skip(k);
+                    (if t >= p { t - p } else { t }) != 0
+                });
+                expect_recv[rel] = cnt as u32;
+            }
+            // Counting sort: bucket by first_send (all values < rounds),
+            // prefix-sum to cursors, place ranks ascending — stable, so
+            // the order matches the old stable sort_by_key exactly.
+            let mut cursors = vec![0u32; self.rounds + 1];
+            for rel in 1..p {
+                if first_send[rel] != usize::MAX {
+                    cursors[first_send[rel] + 1] += 1;
+                }
+            }
+            for i in 1..cursors.len() {
+                cursors[i] += cursors[i - 1];
+            }
+            let total = *cursors.last().unwrap() as usize;
+            let mut active = vec![0u32; total];
+            for rel in 1..p {
+                let f = first_send[rel];
+                if f != usize::MAX {
+                    active[cursors[f] as usize] = rel as u32;
+                    cursors[f] += 1;
+                }
+            }
+            ReduceProfile { first_send, expect_recv, active }
+        })
+    }
+
+    /// Simulate the full rooted reduction with a throwaway scratch. See
+    /// [`Self::run_reduce_with`].
     pub fn run_reduce<T: Element>(
         &self,
         inputs: &[Vec<T>],
@@ -394,8 +539,29 @@ impl CirculantEngine {
         elem_bytes: usize,
         cost: &dyn CostModel,
     ) -> Result<(RunStats, Vec<T>), SimError> {
+        self.run_reduce_with(&mut EngineScratch::new(), inputs, op, elem_bytes, cost)
+    }
+
+    /// Simulate the full rooted reduction, reusing `scratch`
+    /// (allocation-free after its first use): `inputs[r]` is *absolute*
+    /// rank `r`'s `m`-element contribution; returns the run statistics
+    /// and the root's fully reduced buffer.
+    ///
+    /// All partials live in one `(rank, block)`-indexed arena; a send
+    /// stages the sender's arena range through a reused per-round scratch
+    /// (the lockstep clone-at-send, minus the per-message allocation) and
+    /// the receiver combines in place with ⊕ — sharded across scoped
+    /// threads when the round's delivery queue is large (distinct
+    /// destinations ⇒ disjoint arena rows ⇒ bit-identical results).
+    pub fn run_reduce_with<T: Element>(
+        &self,
+        scratch: &mut EngineScratch<T>,
+        inputs: &[Vec<T>],
+        op: &dyn ReduceOp<T>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<T>), SimError> {
         let p = self.p;
-        let q = self.q;
         let m = self.geom.m;
         assert_eq!(inputs.len(), p, "reduce needs one contribution per rank");
         let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
@@ -403,51 +569,37 @@ impl CirculantEngine {
             assert_eq!(inputs[self.root].len(), m);
             return Ok((stats, inputs[self.root].clone()));
         }
+        let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        let profile = self.reduce_profile();
+        let EngineScratch {
+            active, recv_stamp, recv_from, recv_count, rank_bytes, arena, stage,
+            deliveries_r: deliveries, ..
+        } = scratch;
         // The payload arena: rel r's partial of block b lives at
         // r*m + geom.range(b).
-        let mut arena: Vec<T> = Vec::with_capacity(p * m);
+        arena.clear();
+        arena.reserve(p * m);
         for rel in 0..p {
             let inp = &inputs[self.abs(rel)];
             assert_eq!(inp.len(), m, "reduce contributions must have {m} elements");
             arena.extend_from_slice(inp);
         }
-        // Activity profiles (closed form, O(log p) per rank): a rank
-        // sends in reversed round jr iff its *receive* row is non-negative
-        // at forward round i = rounds-1-jr, so its last reversed send
-        // passes when i drops below its first forward send round. A rank
-        // expects a receive iff its *send* row is non-negative and its
-        // forward to-processor is not the root.
-        let mut first_send = vec![usize::MAX; p];
-        let mut expect_recv = vec![0u32; p];
-        for rel in 0..p {
-            if rel != 0 {
-                let row = &self.recv_rows[rel * q..(rel + 1) * q];
-                let (_, first) = self.row_occupancy(row, |_| true);
-                first_send[rel] = first;
-            }
-            let (cnt, _) = self.row_occupancy(&self.send_rows[rel * q..(rel + 1) * q], |k| {
-                let t = rel + self.sk.skip(k);
-                (if t >= p { t - p } else { t }) != 0
-            });
-            expect_recv[rel] = cnt as u32;
-        }
-        // Active senders; the tail (largest first forward send round)
-        // deactivates first as reversed time sweeps i downwards.
-        let mut active: Vec<u32> =
-            (1..p as u32).filter(|&r| first_send[r as usize] != usize::MAX).collect();
-        active.sort_by_key(|&r| first_send[r as usize]);
-        let mut recv_stamp: Vec<u32> = vec![0; p];
-        let mut recv_from: Vec<u32> = vec![0; p];
-        let mut recv_count: Vec<u32> = vec![0; p];
-        let mut rank_bytes: Vec<usize> = vec![0; p];
-        let mut scratch: Vec<T> = Vec::new();
-        // (dst_rel, dst_block, scratch offset, payload len)
-        let mut deliveries: Vec<(usize, usize, usize, usize)> = Vec::new();
+        // Active senders (profile order: ascending first forward send
+        // round); the tail deactivates first as reversed time sweeps `i`
+        // downwards.
+        active.clear();
+        active.extend_from_slice(&profile.active);
+        reset(recv_stamp, p);
+        reset(recv_from, p);
+        reset(recv_count, p);
+        reset(rank_bytes, p);
+        stage.clear();
+        deliveries.clear();
 
         for jr in 0..self.rounds {
             let i = self.rounds - 1 - jr;
             while let Some(&last) = active.last() {
-                if first_send[last as usize] > i {
+                if profile.first_send[last as usize] > i {
                     active.pop();
                 } else {
                     break;
@@ -458,11 +610,11 @@ impl CirculantEngine {
             let stamp = (jr + 1) as u32;
             let mut round_time = 0.0f64;
             let mut any = false;
-            for &rel32 in &active {
+            for &rel32 in active.iter() {
                 let rel = rel32 as usize;
                 // Reversal of the broadcast receive: forward our partial
                 // of recvblock[k] to the from-processor.
-                let b = match self.cap(self.recv_rows[rel * q + k] as i64 + delta) {
+                let b = match self.cap(self.table.recv_raw(rel, k) as i64 + delta) {
                     Some(b) => b,
                     None => continue,
                 };
@@ -477,7 +629,7 @@ impl CirculantEngine {
                 let from = self.abs(rel);
                 let to = self.abs(to_rel);
                 // Receiver-side cross-check (reversed Condition 2).
-                let rb = match self.cap(self.send_rows[to_rel * q + k] as i64 + delta) {
+                let rb = match self.cap(self.table.send_raw(to_rel, k) as i64 + delta) {
                     Some(rb) => rb,
                     None => {
                         return Err(SimError::UnexpectedMessage {
@@ -503,8 +655,8 @@ impl CirculantEngine {
                 let (off, len) = self.geom.range(b);
                 // "Send": stage the sender's arena range in the round
                 // scratch so this round's combines see round-start state.
-                let s_off = scratch.len();
-                scratch.extend_from_slice(&arena[rel * m + off..rel * m + off + len]);
+                let s_off = stage.len();
+                stage.extend_from_slice(&arena[rel * m + off..rel * m + off + len]);
                 deliveries.push((to_rel, rb, s_off, len));
                 let bytes = len * elem_bytes;
                 stats.messages += 1;
@@ -514,24 +666,29 @@ impl CirculantEngine {
                 round_time = round_time.max(cost.msg_time(from, to, bytes));
                 any = true;
             }
-            for &(dst_rel, rb, s_off, len) in &deliveries {
-                let (d_off, d_len) = self.geom.range(rb);
-                let dst = &mut arena[dst_rel * m + d_off..dst_rel * m + d_off + d_len];
-                op.combine(dst, &scratch[s_off..s_off + len]);
+            if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
+                deliver_reduce_parallel(deliveries, arena, stage, self.geom, m, op, threads);
+            } else {
+                for &(dst_rel, rb, s_off, len) in deliveries.iter() {
+                    let (d_off, d_len) = self.geom.range(rb);
+                    let dst = &mut arena[dst_rel * m + d_off..dst_rel * m + d_off + d_len];
+                    op.combine(dst, &stage[s_off..s_off + len]);
+                }
             }
             deliveries.clear();
-            scratch.clear();
+            stage.clear();
             if any {
                 stats.active_rounds += 1;
                 stats.time += round_time;
             }
         }
-        stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
-        if let Some(err) = self.find_missing_reduce(&recv_count, &expect_recv) {
+        stats.max_rank_bytes = rank_bytes.iter().copied().max().unwrap_or(0);
+        if let Some(err) = self.find_missing_reduce(recv_count, &profile.expect_recv) {
             return Err(err);
         }
-        arena.truncate(m); // rel 0 = the root's fully reduced buffer
-        Ok((stats, arena))
+        // rel 0 = the root's fully reduced buffer (copied out so the
+        // arena stays reusable scratch).
+        Ok((stats, arena[..m].to_vec()))
     }
 
     /// Deferred missing-message check for reduction: compare actual
@@ -543,7 +700,6 @@ impl CirculantEngine {
             return None;
         }
         let p = self.p;
-        let q = self.q;
         for jr in 0..self.rounds {
             let i = self.rounds - 1 - jr;
             let (k, delta) = self.round_params(i);
@@ -560,10 +716,10 @@ impl CirculantEngine {
                 if sender == 0 {
                     continue; // the root never sends in a reduction
                 }
-                if (self.send_rows[rel * q + k] as i64 + delta) < 0 {
+                if (self.table.send_raw(rel, k) as i64 + delta) < 0 {
                     continue; // rel expects nothing here
                 }
-                if (self.recv_rows[sender * q + k] as i64 + delta) < 0 {
+                if (self.table.recv_raw(sender, k) as i64 + delta) < 0 {
                     return Some(SimError::MissingMessage {
                         round: jr,
                         rank: self.abs(rel),
@@ -574,6 +730,88 @@ impl CirculantEngine {
         }
         unreachable!("engine: receive-count mismatch without a reconstructable missing message")
     }
+}
+
+/// Sharded broadcast delivery: set the `(rank, block)` bits and record
+/// first-block activations in `newly` (delivery-indexed), then append
+/// the activations serially in delivery order — bit-identical state and
+/// worklist order to the serial loop.
+fn deliver_bcast_parallel(
+    deliveries: &[(u32, u32)],
+    newly: &mut Vec<u8>,
+    holds: &mut [u64],
+    held: &mut [u32],
+    active: &mut Vec<u32>,
+    words: usize,
+    threads: usize,
+) {
+    reset(newly, deliveries.len());
+    let chunk = (deliveries.len() + threads - 1) / threads;
+    let holds_ptr = SendPtr(holds.as_mut_ptr());
+    let held_ptr = SendPtr(held.as_mut_ptr());
+    std::thread::scope(|s| {
+        for (dchunk, nchunk) in deliveries.chunks(chunk).zip(newly.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (&(to_rel, b), flag) in dchunk.iter().zip(nchunk) {
+                    let (to_rel, b) = (to_rel as usize, b as usize);
+                    // SAFETY: delivery targets within one round are
+                    // pairwise distinct (one-ported check), and both
+                    // `holds` (rank-major words) and `held` are indexed
+                    // by target rank — every word touched here is owned
+                    // by exactly one delivery, i.e. one shard.
+                    unsafe {
+                        let w = holds_ptr.0.add(to_rel * words + b / 64);
+                        let bit = 1u64 << (b % 64);
+                        if *w & bit == 0 {
+                            *w |= bit;
+                            let h = held_ptr.0.add(to_rel);
+                            *flag = u8::from(*h == 0);
+                            *h += 1;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    for (i, &(to_rel, _)) in deliveries.iter().enumerate() {
+        if newly[i] != 0 {
+            active.push(to_rel);
+        }
+    }
+}
+
+/// Sharded reduction delivery: each delivery ⊕-combines a staged payload
+/// into its destination's arena row. Distinct destinations per round ⇒
+/// disjoint rows ⇒ the shards commute and the result is bit-identical
+/// (each row is combined by exactly one delivery).
+fn deliver_reduce_parallel<T: Element>(
+    deliveries: &[(usize, usize, usize, usize)],
+    arena: &mut [T],
+    stage: &[T],
+    geom: BlockGeometry,
+    m: usize,
+    op: &dyn ReduceOp<T>,
+    threads: usize,
+) {
+    let chunk = (deliveries.len() + threads - 1) / threads;
+    let arena_ptr = SendPtr(arena.as_mut_ptr());
+    std::thread::scope(|s| {
+        for dchunk in deliveries.chunks(chunk) {
+            s.spawn(move || {
+                for &(dst_rel, rb, s_off, len) in dchunk {
+                    let (d_off, d_len) = geom.range(rb);
+                    // SAFETY: destination ranks within one round are
+                    // pairwise distinct (one-ported check), so the
+                    // `dst_rel*m + ..` ranges of concurrent shards are
+                    // disjoint; `stage` is only read.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(arena_ptr.0.add(dst_rel * m + d_off), d_len)
+                    };
+                    op.combine(dst, &stage[s_off..s_off + len]);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -602,6 +840,7 @@ mod tests {
         for p in [1usize, 2, 3, 5, 9, 16, 17, 18, 33] {
             let sk = Arc::new(Skips::new(p));
             let src = ScheduleSource::Direct(&sk);
+            let table = Arc::new(ScheduleTable::build(&sk));
             for n in [1usize, 2, 5, 8] {
                 for root in [0, p / 2] {
                     for m in [3 * n + 1, n.saturating_sub(2)] {
@@ -610,7 +849,7 @@ mod tests {
                         let mut procs = build_bcast_procs(&src, root, geom, &data);
                         let lstats = Network::new(p).run(&mut procs, 4, &cost).unwrap();
                         assert!(procs.iter().all(|pr| pr.complete()));
-                        let eng = CirculantEngine::new(&src, root, geom);
+                        let eng = CirculantEngine::new(table.clone(), root, geom);
                         let estats = eng.run_bcast(4, &cost).unwrap();
                         stats_eq(
                             &estats,
@@ -629,6 +868,7 @@ mod tests {
         for p in [1usize, 2, 3, 5, 9, 16, 17, 18, 33] {
             let sk = Arc::new(Skips::new(p));
             let src = ScheduleSource::Direct(&sk);
+            let table = Arc::new(ScheduleTable::build(&sk));
             for n in [1usize, 2, 5] {
                 for root in [0, p - 1] {
                     let m = 4 * n + 3;
@@ -641,7 +881,7 @@ mod tests {
                         build_reduce_procs(&src, root, geom, &inputs, op.clone());
                     let lstats = Network::new(p).run(&mut procs, 8, &cost).unwrap();
                     let lbuf = procs.into_iter().nth(root).unwrap().into_buffer();
-                    let eng = CirculantEngine::new(&src, root, geom);
+                    let eng = CirculantEngine::new(table.clone(), root, geom);
                     let (estats, ebuf) = eng.run_reduce(&inputs, &SumOp, 8, &cost).unwrap();
                     stats_eq(&estats, &lstats, &format!("reduce p={p} n={n} root={root}"));
                     assert_eq!(ebuf, lbuf, "reduce p={p} n={n} root={root}");
@@ -660,7 +900,7 @@ mod tests {
         let data: Vec<u32> = Vec::new();
         let mut procs = build_bcast_procs(&src, 2, geom, &data);
         let lstats = Network::new(17).run(&mut procs, 4, &UnitCost).unwrap();
-        let eng = CirculantEngine::new(&src, 2, geom);
+        let eng = CirculantEngine::from_skips(&sk, 2, geom);
         let estats = eng.run_bcast(4, &UnitCost).unwrap();
         stats_eq(&estats, &lstats, "empty payload");
         assert!(estats.messages > 0);
@@ -668,13 +908,71 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_is_stable_across_runs_and_engines() {
+        // One scratch across different (p, root, n, collective): every
+        // rerun must produce identical stats/payloads to a fresh run.
+        let mut scratch = EngineScratch::<i64>::new();
+        for p in [5usize, 17, 33] {
+            let sk = Arc::new(Skips::new(p));
+            let table = Arc::new(ScheduleTable::build(&sk));
+            for (root, n, m) in [(0usize, 3usize, 10usize), (p - 1, 5, 21)] {
+                let geom = BlockGeometry::new(m, n);
+                let eng = CirculantEngine::new(table.clone(), root, geom);
+                let fresh = eng.run_bcast(4, &UnitCost).unwrap();
+                for _ in 0..3 {
+                    let reused = eng.run_bcast_with(&mut scratch, 4, &UnitCost).unwrap();
+                    stats_eq(&reused, &fresh, &format!("bcast reuse p={p} root={root}"));
+                }
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| (0..m).map(|i| (r * 31 + i) as i64).collect()).collect();
+                let (fs, fb) = eng.run_reduce(&inputs, &SumOp, 8, &UnitCost).unwrap();
+                for _ in 0..3 {
+                    let (rs, rb) = eng
+                        .run_reduce_with(&mut scratch, &inputs, &SumOp, 8, &UnitCost)
+                        .unwrap();
+                    stats_eq(&rs, &fs, &format!("reduce reuse p={p} root={root}"));
+                    assert_eq!(rb, fb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_deliveries_match_serial() {
+        // Large enough that late rounds cross PAR_DELIVERY_MIN: the
+        // sharded and serial delivery paths must agree bit for bit.
+        let p = (1usize << 14) + 5;
+        let sk = Arc::new(Skips::new(p));
+        let table = Arc::new(ScheduleTable::build(&sk));
+        let geom = BlockGeometry::new(8, 4);
+        let eng = CirculantEngine::new(table.clone(), 3, geom);
+        let mut serial = EngineScratch::<i64>::new();
+        serial.delivery_threads = Some(1);
+        let mut sharded = EngineScratch::<i64>::new();
+        sharded.delivery_threads = Some(8);
+        let a = eng.run_bcast_with(&mut serial, 4, &UnitCost).unwrap();
+        let b = eng.run_bcast_with(&mut sharded, 4, &UnitCost).unwrap();
+        stats_eq(&a, &b, "sharded bcast");
+
+        let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64 % 97; 8]).collect();
+        let (ra, ba) = eng
+            .run_reduce_with(&mut serial, &inputs, &SumOp, 8, &UnitCost)
+            .unwrap();
+        let (rb, bb) = eng
+            .run_reduce_with(&mut sharded, &inputs, &SumOp, 8, &UnitCost)
+            .unwrap();
+        stats_eq(&ra, &rb, "sharded reduce");
+        assert_eq!(ba, bb, "sharded reduce payload");
+    }
+
+    #[test]
     fn corrupted_recv_row_is_unexpected_message() {
         let sk = Arc::new(Skips::new(17));
-        let src = ScheduleSource::Direct(&sk);
-        let mut eng = CirculantEngine::new(&src, 0, BlockGeometry::new(34, 2));
+        let mut table = ScheduleTable::build(&sk);
         // Rank rel 1 receives its baseblock in slot 0; deny it.
-        let q = eng.q;
-        eng.recv_rows[q] = -(q as i64) as i8;
+        let q = table.q();
+        table.recv_row_mut(1)[0] = -(q as i64) as i8;
+        let eng = CirculantEngine::new(Arc::new(table), 0, BlockGeometry::new(34, 2));
         match eng.run_bcast(4, &UnitCost) {
             Err(SimError::UnexpectedMessage { expected: None, .. }) => {}
             other => panic!("want UnexpectedMessage, got {other:?}"),
@@ -684,11 +982,12 @@ mod tests {
     #[test]
     fn corrupted_send_row_is_missing_message() {
         let sk = Arc::new(Skips::new(9));
-        let src = ScheduleSource::Direct(&sk);
-        let mut eng = CirculantEngine::new(&src, 0, BlockGeometry::new(18, 2));
+        let mut table = ScheduleTable::build(&sk);
         // The root never offers slot 0's block: its first receiver starves
         // (and, downstream, more ranks stay incomplete).
-        eng.send_rows[0] = -(eng.q as i64) as i8;
+        let q = table.q();
+        table.send_row_mut(0)[0] = -(q as i64) as i8;
+        let eng = CirculantEngine::new(Arc::new(table), 0, BlockGeometry::new(18, 2));
         match eng.run_bcast(4, &UnitCost) {
             Err(SimError::MissingMessage { .. }) => {}
             other => panic!("want MissingMessage, got {other:?}"),
@@ -699,12 +998,11 @@ mod tests {
     fn occupancy_matches_bruteforce() {
         for p in [2usize, 9, 17, 33] {
             let sk = Arc::new(Skips::new(p));
-            let src = ScheduleSource::Direct(&sk);
+            let table = Arc::new(ScheduleTable::build(&sk));
             for n in [1usize, 3, 7, 11] {
-                let eng = CirculantEngine::new(&src, 0, BlockGeometry::new(n * 2, n));
-                let q = eng.q;
+                let eng = CirculantEngine::new(table.clone(), 0, BlockGeometry::new(n * 2, n));
                 for rel in 0..p {
-                    let row = &eng.recv_rows[rel * q..(rel + 1) * q];
+                    let row = table.recv_row(rel);
                     let (count, first) = eng.row_occupancy(row, |_| true);
                     let mut bcount = 0usize;
                     let mut bfirst = usize::MAX;

@@ -12,6 +12,6 @@ pub mod network;
 pub mod threads;
 
 pub use cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
-pub use engine::CirculantEngine;
+pub use engine::{CirculantEngine, EngineScratch};
 pub use network::{Msg, Network, RankProc, RunStats, SimError};
 pub use threads::{run_threaded, run_threaded_stats, Comm};

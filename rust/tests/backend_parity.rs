@@ -223,6 +223,53 @@ fn degenerate_and_boundary_cases_agree() {
     }
 }
 
+/// Restores `CBCAST_THREADS` on drop — including on assertion panic, so
+/// a failure in the thread-count sweep cannot contaminate later tests.
+struct ThreadEnvGuard(Option<String>);
+
+impl ThreadEnvGuard {
+    fn set() -> Self {
+        ThreadEnvGuard(std::env::var("CBCAST_THREADS").ok())
+    }
+}
+
+impl Drop for ThreadEnvGuard {
+    fn drop(&mut self) {
+        match self.0.take() {
+            Some(v) => std::env::set_var("CBCAST_THREADS", v),
+            None => std::env::remove_var("CBCAST_THREADS"),
+        }
+    }
+}
+
+#[test]
+fn backends_agree_at_every_thread_count() {
+    // The schedule plane builds in parallel (CBCAST_THREADS) and the
+    // engine shards large delivery rounds across the same thread count;
+    // none of that may be observable: at thread counts 1, 2 and 8 every
+    // backend must produce the same outcome as the single-threaded
+    // lockstep baseline. The env var is process-global, so concurrently
+    // running tests read whichever count is current — harmless for
+    // correctness (every count must be right, and their seeded case
+    // generation is unaffected), and the guard restores the previous
+    // value even if an assertion here panics.
+    let _guard = ThreadEnvGuard::set();
+    let fixed = [
+        Case { p: 17, root: 5, m: 120, n: 6, kind: 0, algo: Algo::Circulant },
+        Case { p: 18, root: 9, m: 100, n: 5, kind: 1, algo: Algo::Circulant },
+        Case { p: 23, root: 0, m: 64, n: 4, kind: 2, algo: Algo::Circulant },
+        Case { p: 13, root: 0, m: 40, n: 3, kind: 3, algo: Algo::Circulant },
+        Case { p: 9, root: 0, m: 61, n: 2, kind: 4, algo: Algo::Circulant },
+        Case { p: 1, root: 0, m: 10, n: 3, kind: 0, algo: Algo::Circulant },
+    ];
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("CBCAST_THREADS", threads);
+        for c in fixed {
+            check_case(&c);
+        }
+    }
+}
+
 #[test]
 fn auto_resolution_is_backend_independent() {
     // Algo::Auto must resolve identically under every backend (the

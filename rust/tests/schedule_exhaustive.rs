@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::common::{BlockGeometry, ScheduleSource};
+use circulant_bcast::collectives::common::BlockGeometry;
 use circulant_bcast::schedule::doubling::{double_recv_schedules, double_send_schedules};
 use circulant_bcast::schedule::{
     ceil_log2, recv_schedule, send_schedule, verify_all, verify_sampled, Skips,
@@ -91,10 +91,10 @@ fn sampled_band_up_to_2_20() {
 fn engine_full_network_simulation_large_p() {
     for p in [(1usize << 14) + 5, (1 << 16) - 1, (1 << 17) + 9] {
         let sk = Arc::new(Skips::new(p));
-        let src = ScheduleSource::Direct(&sk);
         let n = 8usize;
         let q = ceil_log2(p);
-        let eng = CirculantEngine::new(&src, 3 % p, BlockGeometry::new(n * 4, n));
+        // Parallel-built schedule plane → engine (the production path).
+        let eng = CirculantEngine::from_skips(&sk, 3 % p, BlockGeometry::new(n * 4, n));
         let stats = eng.run_bcast(4, &UnitCost).expect("full-network bcast must complete");
         assert_eq!(stats.rounds, n - 1 + q, "p={p}");
         // Every non-root rank receives at least its n blocks and at most
@@ -113,11 +113,10 @@ fn engine_full_network_reduce_mid_p() {
     use circulant_bcast::collectives::SumOp;
     let p = (1usize << 12) + 3;
     let sk = Arc::new(Skips::new(p));
-    let src = ScheduleSource::Direct(&sk);
     let n = 4usize;
     let m = 8usize;
     let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64; m]).collect();
-    let eng = CirculantEngine::new(&src, 17, BlockGeometry::new(m, n));
+    let eng = CirculantEngine::from_skips(&sk, 17, BlockGeometry::new(m, n));
     let (stats, buf) = eng.run_reduce(&inputs, &SumOp, 8, &UnitCost).unwrap();
     let want = (p * (p - 1) / 2) as i64;
     assert_eq!(buf, vec![want; m]);

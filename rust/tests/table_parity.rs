@@ -1,0 +1,119 @@
+//! Differential parity for the parallel-built schedule plane: the flat
+//! all-ranks `ScheduleTable` must match the serial per-rank
+//! `recv_schedule` / `send_schedule` cores bit for bit — every row,
+//! every baseblock — over a seeded random grid of p (powers of two ±1,
+//! primes, p = 1, uniform draws) and thread counts 1, 2 and 8 (chunk
+//! boundaries shift with the thread count, so each count exercises a
+//! different memo/chunk layout against the same serial truth).
+//!
+//! Deterministic by default; set `TESTKIT_SEED` to explore other grids
+//! (CI runs a fixed seed matrix).
+
+use std::sync::Arc;
+
+use circulant_bcast::schedule::{
+    recv_schedule, send_schedule, Schedule, ScheduleCache, ScheduleTable, Skips,
+};
+use circulant_bcast::testkit::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Assert the table rows of every rank equal the serial cores' output.
+fn assert_table_matches_serial(p: usize, threads: usize) {
+    let sk = Arc::new(Skips::new(p));
+    let table = ScheduleTable::build_with_threads(&sk, threads);
+    assert_eq!(table.p(), p, "threads={threads}");
+    assert_eq!(table.q(), sk.q());
+    assert_eq!(table.bytes(), 2 * p * sk.q());
+    for r in 0..p {
+        let rs = recv_schedule(&sk, r);
+        let ss = send_schedule(&sk, r);
+        let trecv: Vec<i64> = table.recv_row(r).iter().map(|&v| v as i64).collect();
+        let tsend: Vec<i64> = table.send_row(r).iter().map(|&v| v as i64).collect();
+        assert_eq!(trecv, rs.blocks, "recv p={p} r={r} threads={threads}");
+        assert_eq!(tsend, ss.blocks, "send p={p} r={r} threads={threads}");
+        assert_eq!(table.baseblock(r), rs.baseblock, "baseblock p={p} r={r}");
+        // The materialised compatibility shape agrees too.
+        assert_eq!(table.schedule(r), Schedule::compute(&sk, r), "schedule p={p} r={r}");
+    }
+}
+
+fn gen_p(rng: &mut Rng) -> usize {
+    match rng.range(0, 4) {
+        0 => 1,
+        // Powers of two and their neighbours (up to 2^11 keeps the
+        // serial O(p log p) cross-check fast across the whole grid).
+        1 => {
+            let base = 1usize << rng.range(1, 11);
+            match rng.range(0, 2) {
+                0 => base - 1,
+                1 => base,
+                _ => base + 1,
+            }
+        }
+        2 => [2usize, 3, 5, 7, 13, 17, 31, 61, 127, 251, 509, 1021, 2039][rng.range(0, 12)],
+        _ => rng.range(1, 1500),
+    }
+    .max(1)
+}
+
+#[test]
+fn seeded_random_grid_matches_serial_cores() {
+    let mut rng = Rng::from_env();
+    for _ in 0..25 {
+        let p = gen_p(&mut rng);
+        for threads in THREAD_COUNTS {
+            assert_table_matches_serial(p, threads);
+        }
+    }
+}
+
+#[test]
+fn fixed_boundary_grid_matches_serial_cores() {
+    // The cases a random grid can miss: p = 1 and 2, the paper's table
+    // sizes, dense non-powers around chunk-divisibility edges.
+    for p in [1usize, 2, 3, 4, 9, 17, 18, 97, 100, 1023, 1024, 1025] {
+        for threads in THREAD_COUNTS {
+            assert_table_matches_serial(p, threads);
+        }
+    }
+}
+
+#[test]
+fn thread_counts_build_identical_arenas() {
+    // Beyond matching the serial cores rank-by-rank, the whole arena is
+    // bitwise equal across thread counts (a cheap whole-plane check at a
+    // larger p than the per-rank grid).
+    let mut rng = Rng::from_env();
+    for _ in 0..3 {
+        let p = 2048 + rng.range(0, 2048);
+        let sk = Arc::new(Skips::new(p));
+        let base = ScheduleTable::build_with_threads(&sk, 1);
+        for threads in [2usize, 8] {
+            let t = ScheduleTable::build_with_threads(&sk, threads);
+            for r in 0..p {
+                assert_eq!(t.recv_row(r), base.recv_row(r), "p={p} r={r} threads={threads}");
+                assert_eq!(t.send_row(r), base.send_row(r), "p={p} r={r} threads={threads}");
+                assert_eq!(t.baseblock(r), base.baseblock(r), "p={p} r={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_serves_table_rows_verbatim() {
+    // The cache's table and single-rank entry points serve the same rows
+    // the serial cores produce (the get() path goes through the table
+    // under the default cap).
+    let cache = ScheduleCache::new();
+    let mut rng = Rng::from_env();
+    for _ in 0..8 {
+        let p = gen_p(&mut rng);
+        let sk = cache.skips(p);
+        let table = cache.table(&sk);
+        for r in 0..p {
+            assert_eq!(*cache.get(p, r), table.schedule(r), "p={p} r={r}");
+            assert_eq!(table.schedule(r), Schedule::compute(&sk, r), "p={p} r={r}");
+        }
+    }
+}
