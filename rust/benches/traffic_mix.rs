@@ -1,0 +1,178 @@
+//! Traffic-mix bench: a heterogeneous batch of concurrent collectives
+//! (all five kinds; 3/4 of the ops on eight disjoint rank-window slots,
+//! 1/4 on the full machine) executed (a) sequentially — each op alone
+//! through the blocking API on a communicator of its window size — and
+//! (b) batched through the traffic plane's port-ledger scheduler, with
+//! co-scheduled rounds sharded over `CBCAST_THREADS` scoped threads.
+//!
+//! Usage: `cargo bench --bench traffic_mix -- [N_OPS] [P_EXP]`
+//! (default 64 ops at p = 2^12 — the release-smoke configuration; CI
+//! runs it at `CBCAST_THREADS=1` and `=8`).
+//!
+//! Receipts asserted on every run (deterministic, honour `TESTKIT_SEED`):
+//! every op's batched outcome is bit-identical to its sequential run,
+//! and the aggregate machine-round count is strictly below the
+//! sequential round sum (the disjoint-window slots overlap). Wall-clock
+//! and overlap-model numbers are recorded in `BENCH_traffic_mix.json`
+//! (override with `CBCAST_BENCH_JSON=path`) — the acceptance target is
+//! batched ≤ 0.75× sequential wall-clock at `CBCAST_THREADS=8`.
+
+use std::io::Write;
+use std::time::Instant;
+
+use circulant_bcast::comm::{BatchReport, CommBuilder, Communicator};
+use circulant_bcast::schedule::{configured_threads, verify_one_ported_trace};
+use circulant_bcast::sim::LinearCost;
+use circulant_bcast::testkit::{
+    run_mix_blocking, submit_mix_op, traffic_mix, MixOptions, MixOutcome, Rng, TrafficMix,
+};
+
+/// Disjoint window slots the windowed ops cycle through.
+const SLOTS: usize = 8;
+
+fn machine(p: usize) -> Communicator {
+    CommBuilder::new(p).cost_model(LinearCost::hpc_default()).build()
+}
+
+/// The bench workload: `traffic_mix` kinds/sizes/payloads, with windows
+/// re-pinned so three quarters of the ops land on disjoint slots (true
+/// concurrency) and the rest span the full machine (port time-sharing).
+fn bench_mix(rng: &mut Rng, p: usize, n_ops: usize) -> TrafficMix {
+    let opts = MixOptions { max_m: 256, max_blocks: 8, window_pct: 0, auto_pct: 10 };
+    let mut mix = traffic_mix(rng, p, n_ops, &opts);
+    let slot = p / SLOTS;
+    for (i, op) in mix.ops.iter_mut().enumerate() {
+        if slot > 0 && i % 4 != 3 {
+            op.window = Some(((i % SLOTS) * slot, slot));
+            op.root %= slot;
+        }
+    }
+    mix
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let n_ops: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(64).max(2);
+    let p_exp: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(12).clamp(4, 16);
+    let p = 1usize << p_exp;
+    let threads = configured_threads();
+    let mut rng = Rng::from_env();
+    let mix = bench_mix(&mut rng, p, n_ops);
+
+    println!("=== traffic_mix: {n_ops} concurrent ops, p = 2^{p_exp} = {p} ===");
+    println!(
+        "({} windowed ops on {SLOTS} disjoint slots of {} ranks, {} full-machine; \
+         scheduler on {threads} thread(s))\n",
+        mix.ops.iter().filter(|o| o.window.is_some()).count(),
+        p / SLOTS,
+        mix.ops.iter().filter(|o| o.window.is_none()).count(),
+    );
+
+    // ---- Sequential baseline: each op alone through the blocking API
+    // on a communicator of its window size (built lazily, shared per
+    // size — the strongest sequential opponent: schedules amortised).
+    let mut seq_comms: std::collections::HashMap<usize, Communicator> =
+        std::collections::HashMap::new();
+    let t = Instant::now();
+    let sequential: Vec<MixOutcome> = mix
+        .ops
+        .iter()
+        .map(|op| {
+            let ranks = op.ranks(p);
+            let comm = seq_comms.entry(ranks).or_insert_with(|| machine(ranks));
+            run_mix_blocking(comm, op)
+        })
+        .collect();
+    let sequential_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    // ---- Batched: one submit per op, one run for the whole workload.
+    let comm = machine(p);
+    let t = Instant::now();
+    let mut traffic = comm.traffic().record_trace(true);
+    let handles: Vec<_> = mix
+        .ops
+        .iter()
+        .map(|op| submit_mix_op(&mut traffic, op).expect("bench mixes are well-formed"))
+        .collect();
+    let report: BatchReport = traffic.run().expect("batch run");
+    let batched: Vec<MixOutcome> = handles.into_iter().map(|h| h.take()).collect();
+    let batched_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    // ---- Receipts (deterministic).
+    verify_one_ported_trace(p, report.trace.as_ref().unwrap()).expect("one-ported trace");
+    let mut seq_rounds_sum = 0usize;
+    let mut seq_messages = 0usize;
+    for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+        assert_eq!(b, s, "op #{i} {:?} diverged from its sequential run", mix.ops[i]);
+        match s {
+            MixOutcome::Done { rounds, messages, .. } => {
+                seq_rounds_sum += rounds;
+                seq_messages += messages;
+            }
+            MixOutcome::Failed(e) => panic!("op #{i} failed sequentially: {e}"),
+        }
+    }
+    assert_eq!(
+        report.agg.messages, seq_messages,
+        "overlap reschedules rounds, never messages"
+    );
+    assert!(
+        report.machine_rounds() < seq_rounds_sum,
+        "disjoint-window overlap must beat the sequential round sum \
+         ({} machine rounds vs {seq_rounds_sum})",
+        report.machine_rounds()
+    );
+
+    let ratio = batched_ms / sequential_ms;
+    println!("{:>28} {:>12} {:>12}", "", "sequential", "batched");
+    println!("{:>28} {:>12.1} {:>12.1}", "wall-clock (ms)", sequential_ms, batched_ms);
+    println!("{:>28} {:>12} {:>12}", "rounds", seq_rounds_sum, report.machine_rounds());
+    println!("{:>28} {:>12} {:>12}", "messages", seq_messages, report.agg.messages);
+    println!(
+        "\nbatched/sequential wall-clock ratio: {ratio:.3} at {threads} thread(s) \
+         (acceptance: ≤ 0.75 at CBCAST_THREADS=8)"
+    );
+    println!(
+        "overlap-model completion time: {:.6} s over {} active machine rounds",
+        report.agg.time, report.agg.active_rounds
+    );
+
+    let json_path = std::env::var("CBCAST_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_traffic_mix.json".to_string());
+    write_json(&json_path, p, n_ops, threads, sequential_ms, batched_ms, seq_rounds_sum, &report)
+        .expect("write bench json");
+    println!("→ {json_path}");
+}
+
+/// Hand-rolled JSON (the crate is dependency-free; no serde).
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    p: usize,
+    n_ops: usize,
+    threads: usize,
+    sequential_ms: f64,
+    batched_ms: f64,
+    seq_rounds_sum: usize,
+    report: &BatchReport,
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"traffic_mix\",")?;
+    writeln!(f, "  \"p\": {p},")?;
+    writeln!(f, "  \"ops\": {n_ops},")?;
+    writeln!(f, "  \"threads\": {threads},")?;
+    writeln!(f, "  \"sequential_ms\": {sequential_ms:.3},")?;
+    writeln!(f, "  \"batched_ms\": {batched_ms:.3},")?;
+    writeln!(f, "  \"ratio\": {:.4},", batched_ms / sequential_ms)?;
+    writeln!(f, "  \"machine_rounds\": {},", report.machine_rounds())?;
+    writeln!(f, "  \"sequential_rounds_sum\": {seq_rounds_sum},")?;
+    writeln!(f, "  \"active_rounds\": {},", report.agg.active_rounds)?;
+    writeln!(f, "  \"messages\": {},", report.agg.messages)?;
+    writeln!(f, "  \"bytes\": {},", report.agg.bytes)?;
+    writeln!(f, "  \"max_rank_bytes\": {},", report.agg.max_rank_bytes)?;
+    writeln!(f, "  \"overlap_time_s\": {:.9},", report.agg.time)?;
+    writeln!(f, "  \"failed_ops\": {}", report.failed())?;
+    writeln!(f, "}}")?;
+    Ok(())
+}

@@ -21,11 +21,13 @@ use crate::sim::engine::CirculantEngine;
 use crate::sim::network::{RankProc, RunStats, SimError};
 
 use super::backend::{build_procs, BackendKind};
+use super::nonblocking::Pending;
 use super::outcome::{CommError, Outcome};
 use super::request::{
     Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq, ReduceScatterBlockReq,
     ReduceScatterReq, TuningParams,
 };
+use super::traffic::{SubmitRequest, TrafficEngine};
 
 /// Builder for a [`Communicator`].
 ///
@@ -188,7 +190,7 @@ impl Communicator {
     /// every later fetch = `p` hits); above it, in this handle's private
     /// [`OnceLock`] — either way the build runs exactly once per `p`
     /// for this communicator's traffic.
-    fn rows(&self) -> Arc<RowTable> {
+    pub(crate) fn rows(&self) -> Arc<RowTable> {
         let cap = self.tuning.table_cache_max_bytes;
         if RowTable::bytes_for(&self.sk) <= cap {
             return self.cache.table_with_cap(&self.sk, cap);
@@ -204,19 +206,60 @@ impl Communicator {
     /// Schedule source backed by the shared schedule plane: one table
     /// fetch per collective call, then every rank row is served from the
     /// flat arena with no further cache traffic.
-    fn schedules(&self) -> ScheduleSource<'_> {
+    pub(crate) fn schedules(&self) -> ScheduleSource<'_> {
         ScheduleSource::Table(self.rows())
     }
 
     /// Cached Algorithm-7 table for `n` blocks: a thin `n`-phase view
     /// over the shared row table, built once per block count, then
     /// shared by every later call.
-    fn table(&self, n: usize) -> Arc<ScheduleTable> {
+    pub(crate) fn table(&self, n: usize) -> Arc<ScheduleTable> {
         let mut tables = self.tables.lock().unwrap();
         tables
             .entry(n)
             .or_insert_with(|| ScheduleTable::build_from(&self.schedules(), n))
             .clone()
+    }
+
+    /// A window-sized communicator sharing this handle's cache, cost
+    /// model, tuning and backend — how the traffic plane serves
+    /// operations restricted to a rank window
+    /// ([`crate::comm::nonblocking::Window`]): a window of `len` ranks
+    /// behaves exactly like a `len`-rank communicator, and the shared
+    /// cache means every window size pays schedule computation at most
+    /// once.
+    pub(crate) fn windowed(&self, len: usize) -> Communicator {
+        CommBuilder::new(len)
+            .cache(self.cache.clone())
+            .cost(self.cost.clone())
+            .tuning(self.tuning.clone())
+            .backend(self.backend)
+            .build()
+    }
+
+    /// Open a nonblocking batch on this machine: submit collectives
+    /// ([`TrafficEngine::submit`] / [`Communicator::submit`]), then
+    /// [`TrafficEngine::run`] executes them overlapped under the
+    /// cross-operation port ledger. See [`crate::comm::traffic`].
+    pub fn traffic(&self) -> TrafficEngine<'_> {
+        TrafficEngine::new(self)
+    }
+
+    /// Submit a nonblocking collective (`IbcastReq`, `IreduceReq`,
+    /// `IallgathervReq`, `IreduceScatterReq`, `IallreduceReq`) into a
+    /// batch opened on this communicator; returns the typed
+    /// [`Pending`] handle. Equivalent to [`TrafficEngine::submit`].
+    pub fn submit<T: Element, R: SubmitRequest<T>>(
+        &self,
+        traffic: &mut TrafficEngine<'_>,
+        req: R,
+    ) -> Result<Pending<R::Buffers>, CommError> {
+        if !std::ptr::eq(self, traffic.comm()) {
+            return Err(CommError::BadRequest(
+                "submit into a batch opened on a different communicator".to_string(),
+            ));
+        }
+        traffic.submit(req)
     }
 
     fn run<T, P>(
@@ -313,7 +356,7 @@ impl Communicator {
         // corrected `all_received` notion): each rank holds the full
         // m-element buffer.
         let complete = buffers.len() == p && buffers.iter().all(|b| b.len() == m);
-        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete })
+        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None })
     }
 
     // ---------------------------------------------------------------
@@ -387,7 +430,14 @@ impl Communicator {
             algo => return Err(CommError::Unsupported { kind: Kind::Reduce, algo }),
         };
         let complete = buffer.len() == m;
-        Ok(Outcome { rounds: stats.rounds, stats, buffers: buffer, algo, complete })
+        Ok(Outcome {
+            rounds: stats.rounds,
+            stats,
+            buffers: buffer,
+            algo,
+            complete,
+            machine_span: None,
+        })
     }
 
     // ---------------------------------------------------------------
@@ -467,7 +517,7 @@ impl Communicator {
                 rows.len() == p
                     && rows.iter().zip(req.inputs).all(|(row, inp)| row.len() == inp.len())
             });
-        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete })
+        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None })
     }
 
     // ---------------------------------------------------------------
@@ -546,7 +596,14 @@ impl Communicator {
         // Uniform completion check: rank j holds its counts[j]-element chunk.
         let complete = chunks.len() == p
             && chunks.iter().zip(req.counts).all(|(chunk, &c)| chunk.len() == c);
-        Ok(Outcome { rounds: stats.rounds, stats, buffers: chunks, algo, complete })
+        Ok(Outcome {
+            rounds: stats.rounds,
+            stats,
+            buffers: chunks,
+            algo,
+            complete,
+            machine_span: None,
+        })
     }
 
     /// `MPI_Reduce_scatter_block`: equal chunk per rank.
@@ -604,7 +661,7 @@ impl Communicator {
         // Uniform completion check: every rank holds the full reduced vector.
         let complete =
             buffers.len() == self.p && buffers.iter().all(|b| b.len() == m);
-        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete })
+        Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None })
     }
 
     /// The two phases' stats separately (kept for the legacy
@@ -687,7 +744,7 @@ impl Communicator {
 /// Concatenate each rank's per-root rows into one flat `m`-element
 /// vector (the all-gather → all-reduce result assembly, shared by the
 /// circulant and ring paths).
-fn concat_rows<T: Element>(
+pub(crate) fn concat_rows<T: Element>(
     rows_per_rank: impl Iterator<Item = Vec<Vec<T>>>,
     m: usize,
 ) -> Vec<Vec<T>> {
@@ -706,7 +763,7 @@ fn concat_rows<T: Element>(
 /// `max_rank_bytes` adds too (an upper bound on the true per-rank
 /// maximum over both phases, exact when the same rank is the bottleneck
 /// in both — which the symmetric circulant phases make typical).
-fn combine_stats(a: &RunStats, b: &RunStats) -> RunStats {
+pub(crate) fn combine_stats(a: &RunStats, b: &RunStats) -> RunStats {
     RunStats {
         rounds: a.rounds + b.rounds,
         active_rounds: a.active_rounds + b.active_rounds,

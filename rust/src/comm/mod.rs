@@ -44,18 +44,38 @@
 //! The legacy `*_sim` free functions in [`crate::collectives`] are
 //! deprecated thin wrappers over a throwaway `Communicator`; new code
 //! should build one handle and keep it.
+//!
+//! ## The traffic plane
+//!
+//! Beyond one blocking collective at a time, a communicator serves
+//! *workloads*: [`Communicator::traffic`] opens a batch, the typed
+//! nonblocking requests ([`IbcastReq`], [`IreduceReq`],
+//! [`IallgathervReq`], [`IreduceScatterReq`], [`IallreduceReq`] — each
+//! optionally restricted to a rank [`Window`]) submit into it returning
+//! [`Pending`] handles, and [`TrafficEngine::run`] executes the whole
+//! batch overlapped: disjoint-window operations run truly concurrently,
+//! rank-sharing operations round-interleave under a cross-operation
+//! port ledger that preserves the paper's one-ported discipline. Every
+//! batched operation's [`Outcome`] is bit-identical to running it alone
+//! — see [`traffic`] for the model and guarantees.
 
 pub mod backend;
 pub mod communicator;
+pub mod nonblocking;
 pub mod outcome;
 pub mod request;
+pub mod traffic;
 
 pub use backend::{
     build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, ThreadedBackend,
 };
 pub use communicator::{CommBuilder, Communicator};
+pub use nonblocking::{
+    IallgathervReq, IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Pending, Window,
+};
 pub use outcome::{CommError, Outcome};
 pub use request::{
     resolve_blocks, Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq,
     ReduceScatterBlockReq, ReduceScatterReq, TuningParams, SMALL_MSG_BYTES,
 };
+pub use traffic::{BatchReport, OpReport, SubmitRequest, TrafficEngine};

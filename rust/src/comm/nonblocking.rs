@@ -1,0 +1,314 @@
+//! Nonblocking request vocabulary of the traffic plane: rank
+//! [`Window`]s, the owned submit-request types (`IbcastReq` & co — the
+//! `i`-prefixed nonblocking mirrors of [`super::request`]'s borrowed
+//! blocking requests), and the typed [`Pending`] handle a submission
+//! returns.
+//!
+//! A nonblocking request *owns* its payload (the operation outlives the
+//! submitting call), carries the same options as its blocking mirror
+//! (block-count override, [`Algo`] selection, element width) plus one
+//! new dimension: an optional rank **window** restricting the operation
+//! to a contiguous sub-range of the machine's ranks. Operations over
+//! disjoint windows share no ports, so the batch scheduler
+//! ([`super::traffic::TrafficEngine`]) runs their rounds truly
+//! concurrently; operations sharing ranks are round-interleaved under
+//! the cross-operation port ledger.
+//!
+//! ```no_run
+//! use circulant_bcast::comm::{Communicator, IbcastReq, IallreduceReq};
+//! use circulant_bcast::collectives::SumOp;
+//! use std::sync::Arc;
+//!
+//! let comm = Communicator::new(64);
+//! let mut traffic = comm.traffic();
+//! // Two broadcasts over disjoint halves: truly concurrent rounds.
+//! let a = traffic.submit(IbcastReq::new(0, vec![1i64; 512]).window(0, 32)).unwrap();
+//! let b = traffic.submit(IbcastReq::new(5, vec![2i64; 512]).window(32, 32)).unwrap();
+//! // A full-machine all-reduce, round-interleaved with both.
+//! let grads: Vec<Vec<i64>> = (0..64).map(|r| vec![r as i64; 256]).collect();
+//! let c = traffic.submit(IallreduceReq::new(grads, Arc::new(SumOp))).unwrap();
+//! let report = traffic.run().unwrap();
+//! assert!(a.is_ready() && b.is_ready());       // fulfilled by run()
+//! let _ = (a.wait().unwrap(), b.wait().unwrap());
+//! let out = c.wait().unwrap();
+//! assert!(out.all_received());
+//! // report.agg: aggregate machine rounds / overlap-model completion time.
+//! assert!(report.agg.rounds > 0);
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use crate::collectives::common::ReduceOp;
+
+use super::outcome::{CommError, Outcome};
+use super::request::Algo;
+
+/// A contiguous window of machine ranks an operation runs over: machine
+/// ranks `base .. base + len`. Window-local rank `r` is machine rank
+/// `base + r`; the operation's schedules, roots, statistics and result
+/// buffers are all in the window-local frame (a window of size `len`
+/// behaves exactly like a `len`-rank communicator — which is what the
+/// differential traffic suite compares against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Window {
+    pub base: usize,
+    pub len: usize,
+}
+
+impl Window {
+    pub fn new(base: usize, len: usize) -> Self {
+        Window { base, len }
+    }
+
+    /// The whole machine: ranks `0..p`.
+    pub fn full(p: usize) -> Self {
+        Window { base: 0, len: p }
+    }
+
+    /// One past the last machine rank.
+    #[inline]
+    pub fn end(&self) -> usize {
+        self.base + self.len
+    }
+
+    /// True iff the two windows share no machine rank.
+    #[inline]
+    pub fn disjoint(&self, other: &Window) -> bool {
+        self.end() <= other.base || other.end() <= self.base
+    }
+}
+
+/// The slot a [`Pending`] and its driver share: filled exactly once,
+/// when the batch runs the operation to completion (or to its error).
+pub(crate) type Slot<B> = Arc<Mutex<Option<Result<Outcome<B>, CommError>>>>;
+
+/// Typed handle to a submitted nonblocking collective. The buffer type
+/// `B` matches the blocking mirror's `Outcome` (e.g. `Vec<Vec<T>>` for a
+/// broadcast, `Vec<T>` for a rooted reduction).
+///
+/// The result is delivered by [`super::traffic::TrafficEngine::run`];
+/// [`Pending::wait`] then returns it ([`Pending::is_ready`] /
+/// [`Pending::try_take`] are the non-consuming / non-panicking probes).
+#[derive(Debug)]
+pub struct Pending<B> {
+    slot: Slot<B>,
+}
+
+impl<B> Pending<B> {
+    pub(crate) fn new_pair() -> (Self, Slot<B>) {
+        let slot: Slot<B> = Arc::new(Mutex::new(None));
+        (Pending { slot: slot.clone() }, slot)
+    }
+
+    /// True once the batch has executed this operation.
+    pub fn is_ready(&self) -> bool {
+        self.slot.lock().unwrap().is_some()
+    }
+
+    /// Take the result if the batch has run, `None` otherwise.
+    pub fn try_take(&self) -> Option<Result<Outcome<B>, CommError>> {
+        self.slot.lock().unwrap().take()
+    }
+
+    /// The operation's outcome.
+    ///
+    /// # Panics
+    ///
+    /// If the owning [`super::traffic::TrafficEngine`] has not been
+    /// [`run`](super::traffic::TrafficEngine::run) yet (the traffic
+    /// plane executes batches synchronously; there is nothing to block
+    /// on), or if the result was already taken via [`Pending::try_take`].
+    pub fn wait(self) -> Result<Outcome<B>, CommError> {
+        self.slot.lock().unwrap().take().expect(
+            "Pending::wait before TrafficEngine::run (or after try_take): \
+             run the batch first",
+        )
+    }
+}
+
+/// Nonblocking broadcast (`MPI_Ibcast`): owned mirror of
+/// [`super::request::BcastReq`] plus a rank [`Window`].
+#[derive(Debug, Clone)]
+pub struct IbcastReq<T> {
+    pub root: usize,
+    pub data: Vec<T>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+    /// `None` = the whole machine.
+    pub win: Option<Window>,
+}
+
+impl<T> IbcastReq<T> {
+    pub fn new(root: usize, data: Vec<T>) -> Self {
+        let elem_bytes = std::mem::size_of::<T>();
+        IbcastReq { root, data, blocks: None, algo: Algo::Auto, elem_bytes, win: None }
+    }
+}
+
+/// Nonblocking rooted reduction (`MPI_Ireduce`): `inputs` has one
+/// window-local contribution per window rank.
+#[derive(Clone)]
+pub struct IreduceReq<T> {
+    pub root: usize,
+    pub inputs: Vec<Vec<T>>,
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+    pub win: Option<Window>,
+}
+
+impl<T> IreduceReq<T> {
+    pub fn new(root: usize, inputs: Vec<Vec<T>>, op: Arc<dyn ReduceOp<T>>) -> Self {
+        let elem_bytes = std::mem::size_of::<T>();
+        IreduceReq { root, inputs, op, blocks: None, algo: Algo::Auto, elem_bytes, win: None }
+    }
+}
+
+/// Nonblocking all-broadcast (`MPI_Iallgatherv`).
+#[derive(Debug, Clone)]
+pub struct IallgathervReq<T> {
+    pub inputs: Vec<Vec<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+    pub win: Option<Window>,
+}
+
+impl<T> IallgathervReq<T> {
+    pub fn new(inputs: Vec<Vec<T>>) -> Self {
+        let elem_bytes = std::mem::size_of::<T>();
+        IallgathervReq { inputs, blocks: None, algo: Algo::Auto, elem_bytes, win: None }
+    }
+}
+
+/// Nonblocking irregular all-reduction (`MPI_Ireduce_scatter`).
+#[derive(Clone)]
+pub struct IreduceScatterReq<T> {
+    pub inputs: Vec<Vec<T>>,
+    pub counts: Vec<usize>,
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+    pub win: Option<Window>,
+}
+
+impl<T> IreduceScatterReq<T> {
+    pub fn new(inputs: Vec<Vec<T>>, counts: Vec<usize>, op: Arc<dyn ReduceOp<T>>) -> Self {
+        let elem_bytes = std::mem::size_of::<T>();
+        IreduceScatterReq {
+            inputs,
+            counts,
+            op,
+            blocks: None,
+            algo: Algo::Auto,
+            elem_bytes,
+            win: None,
+        }
+    }
+}
+
+/// Nonblocking all-reduce (`MPI_Iallreduce`).
+#[derive(Clone)]
+pub struct IallreduceReq<T> {
+    pub inputs: Vec<Vec<T>>,
+    pub op: Arc<dyn ReduceOp<T>>,
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub elem_bytes: usize,
+    pub win: Option<Window>,
+}
+
+impl<T> IallreduceReq<T> {
+    pub fn new(inputs: Vec<Vec<T>>, op: Arc<dyn ReduceOp<T>>) -> Self {
+        let elem_bytes = std::mem::size_of::<T>();
+        IallreduceReq { inputs, op, blocks: None, algo: Algo::Auto, elem_bytes, win: None }
+    }
+}
+
+/// The options every nonblocking request carries — the same builder set
+/// as the blocking requests plus `window` (one definition for all five,
+/// the `impl_request_options!` trick of [`super::request`]).
+macro_rules! impl_submit_options {
+    ($($ty:ident),* $(,)?) => {$(
+        impl<T> $ty<T> {
+            /// Override the block count (`None` = the paper's §3 rule,
+            /// applied at the *window* size).
+            pub fn blocks(mut self, n: usize) -> Self {
+                self.blocks = Some(n);
+                self
+            }
+
+            /// Select the algorithm family (default [`Algo::Auto`]).
+            pub fn algo(mut self, algo: Algo) -> Self {
+                self.algo = algo;
+                self
+            }
+
+            /// Element width in bytes for cost accounting (default
+            /// `size_of::<T>()`).
+            pub fn elem_bytes(mut self, bytes: usize) -> Self {
+                self.elem_bytes = bytes;
+                self
+            }
+
+            /// Restrict the operation to machine ranks
+            /// `base .. base + len`.
+            pub fn window(mut self, base: usize, len: usize) -> Self {
+                self.win = Some(Window::new(base, len));
+                self
+            }
+        }
+    )*};
+}
+
+impl_submit_options!(IbcastReq, IreduceReq, IallgathervReq, IreduceScatterReq, IallreduceReq);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_geometry() {
+        let a = Window::new(0, 8);
+        let b = Window::new(8, 8);
+        let c = Window::new(4, 8);
+        assert_eq!(a.end(), 8);
+        assert!(a.disjoint(&b) && b.disjoint(&a));
+        assert!(!a.disjoint(&c) && !c.disjoint(&b));
+        assert_eq!(Window::full(16), Window::new(0, 16));
+    }
+
+    #[test]
+    fn submit_builders_default_to_auto_full_machine() {
+        let req = IbcastReq::new(3, vec![1i64; 8]);
+        assert_eq!(req.algo, Algo::Auto);
+        assert_eq!(req.blocks, None);
+        assert_eq!(req.elem_bytes, 8);
+        assert_eq!(req.win, None);
+        let req = req.blocks(4).algo(Algo::Circulant).elem_bytes(4).window(2, 6);
+        assert_eq!(req.blocks, Some(4));
+        assert_eq!(req.algo, Algo::Circulant);
+        assert_eq!(req.elem_bytes, 4);
+        assert_eq!(req.win, Some(Window::new(2, 6)));
+    }
+
+    #[test]
+    fn pending_probes() {
+        let (pending, slot) = Pending::<Vec<i32>>::new_pair();
+        assert!(!pending.is_ready());
+        assert!(pending.try_take().is_none());
+        *slot.lock().unwrap() = Some(Err(CommError::BadRequest("x".into())));
+        assert!(pending.is_ready());
+        assert!(matches!(pending.wait(), Err(CommError::BadRequest(_))));
+    }
+
+    #[test]
+    #[should_panic(expected = "run the batch first")]
+    fn wait_before_run_panics() {
+        let (pending, _slot) = Pending::<Vec<i32>>::new_pair();
+        let _ = pending.wait();
+    }
+}

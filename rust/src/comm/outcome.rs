@@ -23,6 +23,16 @@ pub struct Outcome<B> {
     /// assemble an incomplete result return
     /// [`CommError::Incomplete`] instead of a `false` flag).
     pub complete: bool,
+    /// Per-op machine-round accounting of the traffic plane: the
+    /// `(first, last)` *machine* rounds this operation was scheduled in
+    /// when executed as part of a batch
+    /// ([`crate::comm::traffic::TrafficEngine`]). `None` for blocking
+    /// calls, and for batched operations that needed no rounds at all
+    /// (`p = 1` windows). Everything else in an `Outcome` — payloads,
+    /// statistics, rounds, errors — is in the operation's own (local)
+    /// frame and bit-identical to a sequential run; only this field
+    /// records where the batch scheduler placed the op.
+    pub machine_span: Option<(usize, usize)>,
 }
 
 impl<B> Outcome<B> {

@@ -68,6 +68,23 @@ pub const SMALL_MSG_BYTES: usize = 2048;
 /// handle beyond it). Backends differ only in how the rows are *driven*,
 /// never in which rows they see — which is what keeps the differential
 /// parity suites meaningful.
+///
+/// # The nonblocking path
+///
+/// The traffic plane ([`crate::comm::traffic::TrafficEngine`]) applies
+/// the same resolution rules at the operation's *window* size: an op
+/// windowed to `len` ranks resolves `Auto` (and the §3 block-count
+/// rules) exactly as a `len`-rank communicator would, so a batched op
+/// always runs the same algorithm as its sequential mirror. Backend
+/// dispatch is preserved too, with one nuance: batched execution is
+/// round-stepped, so under `Lockstep` *and* `Threaded` each op's rounds
+/// are driven by the steppable lockstep driver
+/// ([`crate::sim::StepNet`] — bit-identical to both, as the backend
+/// parity suite shows), while under `Engine` circulant broadcast/reduce
+/// ops step the sparse engine ([`crate::sim::EngineStep`]) and every
+/// other pair steps the lockstep driver, mirroring the blocking
+/// dispatch. The traffic parity suite pins batched ≡ sequential per
+/// backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// Pick automatically: the circulant pipeline with the paper's

@@ -1,0 +1,1820 @@
+//! The traffic plane: batched execution of many concurrent collectives
+//! on one machine — [`TrafficEngine`], the cross-operation round
+//! scheduler behind [`super::Communicator::traffic`].
+//!
+//! ## The model
+//!
+//! A blocking collective owns the whole machine for its run. Real
+//! workloads overlap operations, so the traffic plane extends the
+//! paper's one-ported round-synchronous model *across* operations: in
+//! every **machine round** each rank may serve at most one send and at
+//! most one receive, counted over **all** co-scheduled operations. The
+//! scheduler enforces this with an explicit **port ledger**: each
+//! machine round, operations are visited in submission order; an
+//! operation whose next (local) round's ports are all free claims them
+//! and executes that round, otherwise it stalls to the next machine
+//! round. Consequences:
+//!
+//! * operations over **disjoint rank windows** never share a port, so
+//!   every one of them advances every machine round — the batch
+//!   completes in the *max* of their round counts, not the sum — and
+//!   their rounds execute truly concurrently across the scoped-thread
+//!   pool (operation state is private, so sharding is free);
+//! * operations **sharing ranks** time-share ports deterministically by
+//!   submission order (the earliest-submitted unfinished operation
+//!   always advances, which also guarantees termination);
+//! * every operation's own execution is exactly the blocking lockstep
+//!   run, stepped round by round ([`StepNet`] /
+//!   [`crate::sim::EngineStep`] share the blocking drivers' round
+//!   bodies), so each per-op [`Outcome`] — payloads, statistics, error
+//!   values and rounds, all in the operation's local frame — is
+//!   **bit-identical** to running that operation alone on a fresh
+//!   communicator of its window size. The differential suite
+//!   (`tests/traffic_parity.rs`) pins this.
+//!
+//! ## Accounting
+//!
+//! Per-op accounting lives in each [`Outcome`] (local frame, plus
+//! [`Outcome::machine_span`] recording where the scheduler placed the
+//! op). Aggregate accounting lives in [`BatchReport`]: machine-round
+//! count, total messages/bytes, per-machine-rank bottleneck volume, and
+//! the overlap completion time — the sum over machine rounds of the max
+//! per-message cost across every co-scheduled operation
+//! ([`crate::sim::OverlapClock`]), evaluated on *machine* ranks so
+//! hierarchical cost models see true locality.
+//!
+//! ## Enforcement
+//!
+//! The ledger is a scheduling device *and* a checkable invariant:
+//! enable [`TrafficEngine::record_trace`] and the executed
+//! `(from, to)` pairs of every machine round come back in the
+//! [`BatchReport`], ready for the cross-op oracle
+//! [`crate::schedule::verify_one_ported_trace`]. A broken operation
+//! (corrupt schedule, tampered rank) fails *itself* — same error, same
+//! local round as its sequential run, surfaced through its own
+//! [`Pending`] — while co-scheduled operations complete unaffected;
+//! an erroring round's messages are discarded from the trace, exactly
+//! as the lockstep simulator aborts a round mid-flight.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::collectives::allgatherv::{build_allgatherv_procs, AllgathervProc};
+use crate::collectives::baselines::{
+    BinomialBcastProc, BinomialReduceProc, RingAllgathervProc, RingReduceScatterProc,
+    VdgBcastProc,
+};
+use crate::collectives::bcast::{build_bcast_procs, BcastProc};
+use crate::collectives::common::{BlockGeometry, Element};
+use crate::collectives::reduce::{build_reduce_procs, ReduceProc};
+use crate::collectives::reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
+use crate::collectives::rhalving::RhalvingProc;
+use crate::schedule::configured_threads;
+use crate::sim::cost::{CostModel, OverlapClock};
+use crate::sim::engine::{CirculantEngine, EngineStep, ScratchPool};
+use crate::sim::network::{RankProc, RunStats, SimError, StepNet};
+
+use super::backend::{build_procs, BackendKind};
+use super::communicator::{combine_stats, concat_rows, Communicator};
+use super::nonblocking::{
+    IallgathervReq, IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Pending, Slot,
+    Window,
+};
+use super::outcome::{CommError, Outcome};
+use super::request::{Algo, Kind};
+
+/// One executed message in the machine frame: `(from, to, bytes)`.
+type TraceMsg = (usize, usize, usize);
+
+/// Boxed outcome assembly of a single-phase proc op.
+type Assemble<P, B> =
+    Box<dyn FnOnce(RunStats, Vec<P>) -> Result<Outcome<B>, CommError> + Send>;
+
+/// Boxed outcome assembly of a two-phase op (both phases' stats).
+type Assemble2<P2, B> =
+    Box<dyn FnOnce(RunStats, RunStats, Vec<P2>) -> Result<Outcome<B>, CommError> + Send>;
+
+/// A submitted operation as the scheduler sees it: round-steppable,
+/// port-predictable, result-delivering. Object-safe so one batch mixes
+/// kinds and element types freely.
+trait OpDriver: Send {
+    /// True once every local round has executed — or the operation
+    /// failed (a failed op stops claiming ports immediately).
+    fn done(&self) -> bool;
+
+    /// The machine-frame `(from, to)` port pairs of the next local
+    /// round. Callable repeatedly; must not advance the operation.
+    fn ports(&mut self, out: &mut Vec<(usize, usize)>);
+
+    /// Execute the next local round. Errors are recorded internally
+    /// (surfacing later through the op's `Pending`), never propagated to
+    /// the scheduler.
+    fn step(&mut self, cost: &dyn CostModel);
+
+    /// Move the last executed round's machine-frame messages into `out`
+    /// (empty after an erroring round — the round aborted).
+    fn drain(&mut self, out: &mut Vec<TraceMsg>);
+
+    /// Record the machine-round span the scheduler gave this op.
+    fn set_span(&mut self, span: Option<(usize, usize)>);
+
+    /// Assemble and deliver the final `Outcome` (or error) into the
+    /// operation's `Pending` slot.
+    fn finish(&mut self);
+
+    /// After `finish`: did the operation succeed?
+    fn ok(&self) -> bool;
+
+    /// Local rounds actually executed (partial for failed ops).
+    fn executed(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------
+// Proc-based driver (lockstep round stepping)
+// ---------------------------------------------------------------------
+
+/// Driver over a [`StepNet`] of per-rank state machines — the batched
+/// mirror of the blocking lockstep backend, one per submitted op.
+struct ProcOp<T, P, B> {
+    net: Option<StepNet<T, P>>,
+    assemble: Option<Assemble<P, B>>,
+    slot: Slot<B>,
+    elem_bytes: usize,
+    base: usize,
+    err: Option<SimError>,
+    round_msgs: Vec<TraceMsg>,
+    span: Option<(usize, usize)>,
+    executed: usize,
+    ok: bool,
+}
+
+impl<T, P, B> OpDriver for ProcOp<T, P, B>
+where
+    T: Element,
+    P: RankProc<T> + Send + 'static,
+    B: Send + 'static,
+{
+    fn done(&self) -> bool {
+        self.err.is_some() || self.net.as_ref().map_or(true, |n| n.is_done())
+    }
+
+    fn ports(&mut self, out: &mut Vec<(usize, usize)>) {
+        if self.done() {
+            return;
+        }
+        let start = out.len();
+        self.net.as_ref().unwrap().expected_ports(out);
+        if self.base != 0 {
+            for port in &mut out[start..] {
+                port.0 += self.base;
+                port.1 += self.base;
+            }
+        }
+    }
+
+    fn step(&mut self, cost: &dyn CostModel) {
+        self.round_msgs.clear();
+        let net = self.net.as_mut().expect("step on a finished op");
+        match net.step(self.elem_bytes, cost, Some(&mut self.round_msgs)) {
+            Ok(()) => {
+                self.executed += 1;
+                if self.base != 0 {
+                    for msg in &mut self.round_msgs {
+                        msg.0 += self.base;
+                        msg.1 += self.base;
+                    }
+                }
+            }
+            Err(e) => {
+                self.err = Some(e);
+                self.round_msgs.clear();
+            }
+        }
+    }
+
+    fn drain(&mut self, out: &mut Vec<TraceMsg>) {
+        out.append(&mut self.round_msgs);
+    }
+
+    fn set_span(&mut self, span: Option<(usize, usize)>) {
+        self.span = span;
+    }
+
+    fn finish(&mut self) {
+        let res = match self.err.take() {
+            Some(e) => Err(CommError::Sim(e)),
+            None => {
+                let (stats, procs) = self.net.take().expect("finish twice").finish();
+                (self.assemble.take().expect("finish twice"))(stats, procs)
+            }
+        };
+        let res = res.map(|mut out| {
+            out.machine_span = self.span;
+            out
+        });
+        self.ok = res.is_ok();
+        *self.slot.lock().unwrap() = Some(res);
+    }
+
+    fn ok(&self) -> bool {
+        self.ok
+    }
+
+    fn executed(&self) -> usize {
+        self.executed
+    }
+}
+
+/// Box a proc set + assembly closure as a driver — shared by the five
+/// submit paths and [`TrafficEngine::submit_procs`].
+fn proc_op<T, P, B, F>(
+    procs: Vec<P>,
+    elem_bytes: usize,
+    slot: Slot<B>,
+    base: usize,
+    assemble: F,
+) -> Box<dyn OpDriver>
+where
+    T: Element,
+    P: RankProc<T> + Send + 'static,
+    B: Send + 'static,
+    F: FnOnce(RunStats, Vec<P>) -> Result<Outcome<B>, CommError> + Send + 'static,
+{
+    Box::new(ProcOp {
+        net: Some(StepNet::new(procs)),
+        assemble: Some(Box::new(assemble)),
+        slot,
+        elem_bytes,
+        base,
+        err: None,
+        round_msgs: Vec::new(),
+        span: None,
+        executed: 0,
+        ok: false,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Two-phase driver (all-reduce = reduce-scatter, then all-gather)
+// ---------------------------------------------------------------------
+
+/// Driver for the composed all-reduce: phase 1's state machines run to
+/// completion, the bridge builds phase 2's from their chunks, and the
+/// assembly combines both phases' statistics — exactly the blocking
+/// [`Communicator::allreduce`] composition, stepped round by round.
+/// Phase-2 local rounds restart at 0, matching the sequential run's
+/// error-round frame.
+struct TwoPhaseOp<T, P1, P2, B> {
+    phase1: Option<StepNet<T, P1>>,
+    #[allow(clippy::type_complexity)]
+    bridge: Option<Box<dyn FnOnce(Vec<P1>) -> Vec<P2> + Send>>,
+    phase2: Option<StepNet<T, P2>>,
+    phase1_stats: Option<RunStats>,
+    assemble: Option<Assemble2<P2, B>>,
+    slot: Slot<B>,
+    elem_bytes: usize,
+    base: usize,
+    err: Option<SimError>,
+    round_msgs: Vec<TraceMsg>,
+    span: Option<(usize, usize)>,
+    executed: usize,
+    ok: bool,
+}
+
+impl<T, P1, P2, B> TwoPhaseOp<T, P1, P2, B>
+where
+    T: Element,
+    P1: RankProc<T> + Send + 'static,
+    P2: RankProc<T> + Send + 'static,
+    B: Send + 'static,
+{
+    fn boxed<F1, F2>(
+        phase1: Vec<P1>,
+        bridge: F1,
+        assemble: F2,
+        elem_bytes: usize,
+        slot: Slot<B>,
+        base: usize,
+    ) -> Box<dyn OpDriver>
+    where
+        F1: FnOnce(Vec<P1>) -> Vec<P2> + Send + 'static,
+        F2: FnOnce(RunStats, RunStats, Vec<P2>) -> Result<Outcome<B>, CommError> + Send + 'static,
+    {
+        let mut op = TwoPhaseOp {
+            phase1: Some(StepNet::new(phase1)),
+            bridge: Some(Box::new(bridge)),
+            phase2: None,
+            phase1_stats: None,
+            assemble: Some(Box::new(assemble)),
+            slot,
+            elem_bytes,
+            base,
+            err: None,
+            round_msgs: Vec::new(),
+            span: None,
+            executed: 0,
+            ok: false,
+        };
+        op.advance(); // zero-round phase 1 (p = 1 windows) bridges now
+        Box::new(op)
+    }
+
+    /// Bridge into phase 2 once phase 1 has stepped its last round.
+    fn advance(&mut self) {
+        if self.err.is_some() || self.phase2.is_some() {
+            return;
+        }
+        if self.phase1.as_ref().is_some_and(|n| n.is_done()) {
+            let (stats, procs) = self.phase1.take().unwrap().finish();
+            self.phase1_stats = Some(stats);
+            self.phase2 = Some(StepNet::new((self.bridge.take().unwrap())(procs)));
+        }
+    }
+}
+
+impl<T, P1, P2, B> OpDriver for TwoPhaseOp<T, P1, P2, B>
+where
+    T: Element,
+    P1: RankProc<T> + Send + 'static,
+    P2: RankProc<T> + Send + 'static,
+    B: Send + 'static,
+{
+    fn done(&self) -> bool {
+        self.err.is_some() || self.phase2.as_ref().is_some_and(|n| n.is_done())
+    }
+
+    fn ports(&mut self, out: &mut Vec<(usize, usize)>) {
+        if self.done() {
+            return;
+        }
+        let start = out.len();
+        match (&self.phase1, &self.phase2) {
+            (Some(net), _) => net.expected_ports(out),
+            (None, Some(net)) => net.expected_ports(out),
+            (None, None) => unreachable!("two-phase op with neither phase live"),
+        }
+        if self.base != 0 {
+            for port in &mut out[start..] {
+                port.0 += self.base;
+                port.1 += self.base;
+            }
+        }
+    }
+
+    fn step(&mut self, cost: &dyn CostModel) {
+        self.round_msgs.clear();
+        let res = match (&mut self.phase1, &mut self.phase2) {
+            (Some(net), _) => net.step(self.elem_bytes, cost, Some(&mut self.round_msgs)),
+            (None, Some(net)) => net.step(self.elem_bytes, cost, Some(&mut self.round_msgs)),
+            (None, None) => unreachable!("step on a bridged-out op"),
+        };
+        match res {
+            Ok(()) => {
+                self.executed += 1;
+                if self.base != 0 {
+                    for msg in &mut self.round_msgs {
+                        msg.0 += self.base;
+                        msg.1 += self.base;
+                    }
+                }
+                self.advance();
+            }
+            Err(e) => {
+                self.err = Some(e);
+                self.round_msgs.clear();
+            }
+        }
+    }
+
+    fn drain(&mut self, out: &mut Vec<TraceMsg>) {
+        out.append(&mut self.round_msgs);
+    }
+
+    fn set_span(&mut self, span: Option<(usize, usize)>) {
+        self.span = span;
+    }
+
+    fn finish(&mut self) {
+        let res = match self.err.take() {
+            Some(e) => Err(CommError::Sim(e)),
+            None => {
+                let (ag_stats, procs) = self.phase2.take().expect("finish twice").finish();
+                let rs_stats = self.phase1_stats.take().expect("finish twice");
+                (self.assemble.take().expect("finish twice"))(rs_stats, ag_stats, procs)
+            }
+        };
+        let res = res.map(|mut out| {
+            out.machine_span = self.span;
+            out
+        });
+        self.ok = res.is_ok();
+        *self.slot.lock().unwrap() = Some(res);
+    }
+
+    fn ok(&self) -> bool {
+        self.ok
+    }
+
+    fn executed(&self) -> usize {
+        self.executed
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-backed drivers (circulant bcast/reduce under BackendKind::Engine)
+// ---------------------------------------------------------------------
+
+/// Shared bookkeeping of the two engine drivers.
+struct EngineOpCore<T: Element> {
+    step: Option<EngineStep<T>>,
+    pool: Arc<ScratchPool>,
+    base: usize,
+    err: Option<SimError>,
+    round_msgs: Vec<TraceMsg>,
+    span: Option<(usize, usize)>,
+    executed: usize,
+    ok: bool,
+}
+
+impl<T: Element> EngineOpCore<T> {
+    fn new(step: EngineStep<T>, pool: Arc<ScratchPool>, base: usize) -> Self {
+        EngineOpCore {
+            step: Some(step),
+            pool,
+            base,
+            err: None,
+            round_msgs: Vec::new(),
+            span: None,
+            executed: 0,
+            ok: false,
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.err.is_some() || self.step.as_ref().map_or(true, |s| s.is_done())
+    }
+
+    fn ports(&mut self, out: &mut Vec<(usize, usize)>) {
+        if self.done() {
+            return;
+        }
+        let start = out.len();
+        self.step.as_mut().unwrap().ports(out);
+        if self.base != 0 {
+            for port in &mut out[start..] {
+                port.0 += self.base;
+                port.1 += self.base;
+            }
+        }
+    }
+
+    fn step(&mut self, cost: &dyn CostModel) {
+        self.round_msgs.clear();
+        let step = self.step.as_mut().expect("step on a finished op");
+        match step.step(cost, Some(&mut self.round_msgs)) {
+            Ok(()) => {
+                self.executed += 1;
+                if self.base != 0 {
+                    for msg in &mut self.round_msgs {
+                        msg.0 += self.base;
+                        msg.1 += self.base;
+                    }
+                }
+            }
+            Err(e) => {
+                self.err = Some(e);
+                self.round_msgs.clear();
+            }
+        }
+    }
+
+    /// Close the engine run (deferred checks) and pool the scratch.
+    /// `Err` carries the mid-run error when one was recorded.
+    fn finish_engine(&mut self) -> Result<(RunStats, Option<Vec<T>>), SimError> {
+        if let Some(e) = self.err.take() {
+            // The run aborted mid-round; the scratch inside the
+            // EngineStep is dropped with it (error paths are rare).
+            self.step = None;
+            return Err(e);
+        }
+        let (res, scratch) = self.step.take().expect("finish twice").finish();
+        self.pool.put(scratch);
+        res
+    }
+}
+
+/// Circulant broadcast on the sparse engine: payload-free simulation;
+/// the outcome's buffers are copies of the root data, exactly as the
+/// blocking engine dispatch assembles them.
+struct EngineBcastOp<T: Element> {
+    core: EngineOpCore<T>,
+    data: Vec<T>,
+    p: usize,
+    m: usize,
+    algo: Algo,
+    slot: Slot<Vec<Vec<T>>>,
+}
+
+impl<T: Element> OpDriver for EngineBcastOp<T> {
+    fn done(&self) -> bool {
+        self.core.done()
+    }
+    fn ports(&mut self, out: &mut Vec<(usize, usize)>) {
+        self.core.ports(out)
+    }
+    fn step(&mut self, cost: &dyn CostModel) {
+        self.core.step(cost)
+    }
+    fn drain(&mut self, out: &mut Vec<TraceMsg>) {
+        out.append(&mut self.core.round_msgs);
+    }
+    fn set_span(&mut self, span: Option<(usize, usize)>) {
+        self.core.span = span;
+    }
+
+    fn finish(&mut self) {
+        let res = match self.core.finish_engine() {
+            Err(e) => Err(CommError::Sim(e)),
+            Ok((stats, _)) => {
+                let buffers: Vec<Vec<T>> = (0..self.p).map(|_| self.data.clone()).collect();
+                let complete =
+                    buffers.len() == self.p && buffers.iter().all(|b| b.len() == self.m);
+                Ok(Outcome {
+                    rounds: stats.rounds,
+                    stats,
+                    buffers,
+                    algo: self.algo,
+                    complete,
+                    machine_span: self.core.span,
+                })
+            }
+        };
+        self.core.ok = res.is_ok();
+        *self.slot.lock().unwrap() = Some(res);
+    }
+
+    fn ok(&self) -> bool {
+        self.core.ok
+    }
+    fn executed(&self) -> usize {
+        self.core.executed
+    }
+}
+
+// (EngineReduceOp follows the same shape for the reduction path.)
+
+/// Circulant rooted reduction on the sparse engine.
+struct EngineReduceOp<T: Element> {
+    core: EngineOpCore<T>,
+    m: usize,
+    algo: Algo,
+    slot: Slot<Vec<T>>,
+}
+
+impl<T: Element> OpDriver for EngineReduceOp<T> {
+    fn done(&self) -> bool {
+        self.core.done()
+    }
+    fn ports(&mut self, out: &mut Vec<(usize, usize)>) {
+        self.core.ports(out)
+    }
+    fn step(&mut self, cost: &dyn CostModel) {
+        self.core.step(cost)
+    }
+    fn drain(&mut self, out: &mut Vec<TraceMsg>) {
+        out.append(&mut self.core.round_msgs);
+    }
+    fn set_span(&mut self, span: Option<(usize, usize)>) {
+        self.core.span = span;
+    }
+
+    fn finish(&mut self) {
+        let res = match self.core.finish_engine() {
+            Err(e) => Err(CommError::Sim(e)),
+            Ok((stats, buffer)) => {
+                let buffer = buffer.expect("engine reduce returns the root buffer");
+                let complete = buffer.len() == self.m;
+                Ok(Outcome {
+                    rounds: stats.rounds,
+                    stats,
+                    buffers: buffer,
+                    algo: self.algo,
+                    complete,
+                    machine_span: self.core.span,
+                })
+            }
+        };
+        self.core.ok = res.is_ok();
+        *self.slot.lock().unwrap() = Some(res);
+    }
+
+    fn ok(&self) -> bool {
+        self.core.ok
+    }
+    fn executed(&self) -> usize {
+        self.core.executed
+    }
+}
+
+// ---------------------------------------------------------------------
+// The batch scheduler
+// ---------------------------------------------------------------------
+
+/// One submitted operation's scheduling record.
+struct OpEntry {
+    driver: Box<dyn OpDriver>,
+    kind: Option<Kind>,
+    window: Window,
+    span: Option<(usize, usize)>,
+}
+
+/// Per-op summary in a [`BatchReport`].
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    /// The collective kind; `None` for a custom
+    /// [`TrafficEngine::submit_procs`] operation.
+    pub kind: Option<Kind>,
+    /// The machine-rank window the operation ran over.
+    pub window: Window,
+    /// `(first, last)` machine rounds the scheduler placed the op in
+    /// (`None` if it needed no rounds).
+    pub machine_span: Option<(usize, usize)>,
+    /// Local rounds actually executed (partial when the op failed).
+    pub rounds: usize,
+    /// Did the operation deliver an `Ok` outcome?
+    pub ok: bool,
+}
+
+/// Aggregate result of one [`TrafficEngine::run`].
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// Batch-wide accounting in the **machine** frame: `rounds` =
+    /// machine rounds until the batch drained, `time` = the overlap
+    /// completion time (sum over machine rounds of the max per-message
+    /// cost across every co-scheduled op), `messages`/`bytes` totals,
+    /// `max_rank_bytes` the per-machine-rank bottleneck volume,
+    /// `active_rounds` the machine rounds in which any message flew.
+    pub agg: RunStats,
+    /// Per-op summaries, in submission order.
+    pub ops: Vec<OpReport>,
+    /// The executed `(from, to)` pairs of every machine round, when
+    /// [`TrafficEngine::record_trace`] was enabled — the input to
+    /// [`crate::schedule::verify_one_ported_trace`].
+    pub trace: Option<Vec<Vec<(usize, usize)>>>,
+}
+
+impl BatchReport {
+    /// Machine rounds until the whole batch drained.
+    #[inline]
+    pub fn machine_rounds(&self) -> usize {
+        self.agg.rounds
+    }
+
+    /// How many operations failed.
+    pub fn failed(&self) -> usize {
+        self.ops.iter().filter(|o| !o.ok).count()
+    }
+}
+
+/// A batch of nonblocking collectives over one [`Communicator`]'s
+/// machine: submit operations ([`TrafficEngine::submit`], typed
+/// `I*Req`s), then [`TrafficEngine::run`] executes them under the
+/// cross-op port ledger. See the module docs for the scheduling model.
+pub struct TrafficEngine<'c> {
+    comm: &'c Communicator,
+    ops: Vec<OpEntry>,
+    /// Window-sized sub-communicators, keyed by window length, sharing
+    /// the parent's cache/cost/tuning/backend — so every window size
+    /// pays schedule computation once per batch (and nothing at all when
+    /// the shared cache already holds the table).
+    subs: HashMap<usize, Communicator>,
+    /// Scratch pool shared by the batch's engine-backed operations.
+    pool: Arc<ScratchPool>,
+    threads: Option<usize>,
+    record_trace: bool,
+    ran: bool,
+}
+
+impl<'c> TrafficEngine<'c> {
+    /// A fresh batch over `comm`'s machine (prefer
+    /// [`Communicator::traffic`]).
+    pub fn new(comm: &'c Communicator) -> Self {
+        TrafficEngine {
+            comm,
+            ops: Vec::new(),
+            subs: HashMap::new(),
+            pool: Arc::new(ScratchPool::new()),
+            threads: None,
+            record_trace: false,
+            ran: false,
+        }
+    }
+
+    /// The communicator this batch executes on.
+    #[inline]
+    pub fn comm(&self) -> &Communicator {
+        self.comm
+    }
+
+    /// Operations submitted so far.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Override the scoped-thread count used to step co-scheduled ops
+    /// (default: `CBCAST_THREADS`/all cores, the schedule-plane rule).
+    /// `1` is the exact serial path — results are identical either way
+    /// (operation state is private; only wall-clock changes).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Record every machine round's executed `(from, to)` pairs into the
+    /// [`BatchReport`] (for the one-ported-trace oracle). Off by default:
+    /// a large batch's trace is O(total messages).
+    pub fn record_trace(mut self, on: bool) -> Self {
+        self.record_trace = on;
+        self
+    }
+
+    /// Submit a typed nonblocking collective (`IbcastReq`, `IreduceReq`,
+    /// `IallgathervReq`, `IreduceScatterReq`, `IallreduceReq`); returns
+    /// the typed handle. Malformed requests (bad window/root/lengths,
+    /// unsupported algorithm) fail here, mirroring the blocking
+    /// validation; runtime violations surface later through the handle.
+    pub fn submit<T: Element, R: SubmitRequest<T>>(
+        &mut self,
+        req: R,
+    ) -> Result<Pending<R::Buffers>, CommError> {
+        assert!(!self.ran, "submit after run: open a new batch");
+        req.submit_into(self)
+    }
+
+    /// Advanced: submit a custom proc-based operation — `procs[r]` is
+    /// window rank `r`'s state machine — with `assemble` turning the
+    /// final `(stats, procs)` into the op's `Outcome`. This is the
+    /// extension point for collectives beyond the built-in five (and the
+    /// failure-injection hook the traffic tests use).
+    pub fn submit_procs<T, P, B, F>(
+        &mut self,
+        win: Option<Window>,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        assemble: F,
+    ) -> Result<Pending<B>, CommError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+        B: Send + 'static,
+        F: FnOnce(RunStats, Vec<P>) -> Result<Outcome<B>, CommError> + Send + 'static,
+    {
+        assert!(!self.ran, "submit after run: open a new batch");
+        let window = self.resolve_window(win)?;
+        if procs.len() != window.len {
+            return Err(CommError::BadRequest(format!(
+                "submit_procs needs one proc per window rank ({}), got {}",
+                window.len,
+                procs.len()
+            )));
+        }
+        let (pending, slot) = Pending::new_pair();
+        let driver = proc_op(procs, elem_bytes, slot, window.base, assemble);
+        self.push(driver, None, window);
+        Ok(pending)
+    }
+
+    /// Validate and default an op's window against the machine.
+    fn resolve_window(&self, win: Option<Window>) -> Result<Window, CommError> {
+        let p = self.comm.p();
+        let w = win.unwrap_or_else(|| Window::full(p));
+        // checked_add: `base + len` must not wrap (release builds don't
+        // trap overflow, and a wrapped end would slip past the bound
+        // check only to crash the ledger indexing later).
+        let in_range = w.base.checked_add(w.len).is_some_and(|end| end <= p);
+        if w.len == 0 || !in_range {
+            return Err(CommError::BadRequest(format!(
+                "window [{}, {} ranks) out of range for p = {p}",
+                w.base, w.len
+            )));
+        }
+        Ok(w)
+    }
+
+    /// The communicator serving a window of `len` ranks: the parent for
+    /// full-machine ops, else a cached window-sized sub-communicator.
+    fn sub_comm(&mut self, len: usize) -> &Communicator {
+        if len == self.comm.p() {
+            self.comm
+        } else {
+            self.subs.entry(len).or_insert_with(|| self.comm.windowed(len))
+        }
+    }
+
+    fn push(&mut self, driver: Box<dyn OpDriver>, kind: Option<Kind>, window: Window) {
+        self.ops.push(OpEntry { driver, kind, window, span: None });
+    }
+
+    /// Execute the batch: round-interleave every submitted operation
+    /// under the port ledger, deliver each op's `Outcome` into its
+    /// [`Pending`], and return the aggregate [`BatchReport`]. Per-op
+    /// failures do **not** fail the batch — they surface through the
+    /// failing op's handle while co-scheduled ops complete unaffected.
+    pub fn run(&mut self) -> Result<BatchReport, CommError> {
+        assert!(!self.ran, "TrafficEngine::run may only be called once per batch");
+        self.ran = true;
+        let p = self.comm.p();
+        let threads = self.threads.unwrap_or_else(configured_threads).max(1);
+        let cost = self.comm.cost().clone();
+        let cost: &dyn CostModel = cost.as_ref();
+
+        // The port ledger: one send and one recv stamp per machine rank,
+        // versioned by round (no clearing between rounds).
+        let mut send_stamp = vec![0u32; p];
+        let mut recv_stamp = vec![0u32; p];
+        let mut ports: Vec<(usize, usize)> = Vec::new();
+        let mut scheduled: Vec<usize> = Vec::new();
+        let mut drained: Vec<TraceMsg> = Vec::new();
+        let mut trace: Vec<Vec<(usize, usize)>> = Vec::new();
+        let mut clock = OverlapClock::new();
+        let mut agg = RunStats::default();
+        let mut rank_bytes = vec![0usize; p];
+        let mut round = 0usize;
+
+        while self.ops.iter().any(|e| !e.driver.done()) {
+            let stamp = round as u32 + 1;
+            scheduled.clear();
+            let mut first_unfinished = true;
+            for (i, entry) in self.ops.iter_mut().enumerate() {
+                if entry.driver.done() {
+                    continue;
+                }
+                ports.clear();
+                entry.driver.ports(&mut ports);
+                let free = ports
+                    .iter()
+                    .all(|&(f, t)| send_stamp[f] != stamp && recv_stamp[t] != stamp);
+                // The earliest-submitted unfinished op always runs: its
+                // ports were checked against an empty ledger, so `free`
+                // can only be false through a *self*-conflict — a broken
+                // op, which must execute to surface its violation (and
+                // which would otherwise stall the batch forever).
+                if free || first_unfinished {
+                    for &(f, t) in &ports {
+                        send_stamp[f] = stamp;
+                        recv_stamp[t] = stamp;
+                    }
+                    scheduled.push(i);
+                }
+                first_unfinished = false;
+            }
+            assert!(
+                !scheduled.is_empty(),
+                "traffic scheduler stalled with unfinished operations"
+            );
+
+            // Execute the scheduled rounds. Operation state is private,
+            // so co-scheduled ops shard freely across scoped threads —
+            // bit-identical to the serial order.
+            if threads <= 1 || scheduled.len() <= 1 {
+                for &i in &scheduled {
+                    self.ops[i].driver.step(cost);
+                }
+            } else {
+                let mut want = scheduled.iter().copied().peekable();
+                let mut refs: Vec<&mut OpEntry> = Vec::with_capacity(scheduled.len());
+                for (i, e) in self.ops.iter_mut().enumerate() {
+                    if want.peek() == Some(&i) {
+                        want.next();
+                        refs.push(e);
+                    }
+                }
+                let per = (refs.len() + threads - 1) / threads;
+                std::thread::scope(|s| {
+                    for group in refs.chunks_mut(per) {
+                        s.spawn(move || {
+                            for e in group.iter_mut() {
+                                e.driver.step(cost);
+                            }
+                        });
+                    }
+                });
+            }
+
+            // Drain in submission order: spans, trace, aggregate
+            // accounting (machine frame).
+            let mut round_trace = Vec::new();
+            for &i in &scheduled {
+                let e = &mut self.ops[i];
+                e.span = Some((e.span.map_or(round, |(f, _)| f), round));
+                drained.clear();
+                e.driver.drain(&mut drained);
+                for &(f, t, bytes) in &drained {
+                    agg.messages += 1;
+                    agg.bytes += bytes;
+                    rank_bytes[f] += bytes;
+                    rank_bytes[t] += bytes;
+                    clock.msg(cost, f, t, bytes);
+                    if self.record_trace {
+                        round_trace.push((f, t));
+                    }
+                }
+            }
+            clock.end_round();
+            if self.record_trace {
+                trace.push(round_trace);
+            }
+            round += 1;
+        }
+
+        agg.rounds = round;
+        agg.active_rounds = clock.active_rounds();
+        agg.time = clock.total();
+        agg.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+
+        let ops = self
+            .ops
+            .iter_mut()
+            .map(|e| {
+                e.driver.set_span(e.span);
+                e.driver.finish();
+                OpReport {
+                    kind: e.kind,
+                    window: e.window,
+                    machine_span: e.span,
+                    rounds: e.driver.executed(),
+                    ok: e.driver.ok(),
+                }
+            })
+            .collect();
+        Ok(BatchReport {
+            agg,
+            ops,
+            trace: if self.record_trace { Some(trace) } else { None },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed submission: the five nonblocking requests
+// ---------------------------------------------------------------------
+
+mod sealed {
+    pub trait Sealed {}
+    impl<T> Sealed for super::IbcastReq<T> {}
+    impl<T> Sealed for super::IreduceReq<T> {}
+    impl<T> Sealed for super::IallgathervReq<T> {}
+    impl<T> Sealed for super::IreduceScatterReq<T> {}
+    impl<T> Sealed for super::IallreduceReq<T> {}
+}
+
+/// A typed nonblocking request [`TrafficEngine::submit`] accepts — the
+/// five `I*Req` types of [`super::nonblocking`] (sealed). `Buffers` is
+/// the blocking mirror's `Outcome` buffer type, so a batched op's result
+/// has exactly the blocking shape.
+pub trait SubmitRequest<T: Element>: sealed::Sealed {
+    type Buffers: Send + 'static;
+
+    #[doc(hidden)]
+    fn submit_into(self, traffic: &mut TrafficEngine<'_>)
+        -> Result<Pending<Self::Buffers>, CommError>;
+}
+
+impl<T: Element> SubmitRequest<T> for IbcastReq<T> {
+    type Buffers = Vec<Vec<T>>;
+
+    fn submit_into(
+        self,
+        traffic: &mut TrafficEngine<'_>,
+    ) -> Result<Pending<Vec<Vec<T>>>, CommError> {
+        let window = traffic.resolve_window(self.win)?;
+        let pool = traffic.pool.clone();
+        let (driver, pending) =
+            build_bcast_driver(traffic.sub_comm(window.len), window.base, &pool, self)?;
+        traffic.push(driver, Some(Kind::Bcast), window);
+        Ok(pending)
+    }
+}
+
+impl<T: Element> SubmitRequest<T> for IreduceReq<T> {
+    type Buffers = Vec<T>;
+
+    fn submit_into(self, traffic: &mut TrafficEngine<'_>) -> Result<Pending<Vec<T>>, CommError> {
+        let window = traffic.resolve_window(self.win)?;
+        let pool = traffic.pool.clone();
+        let (driver, pending) =
+            build_reduce_driver(traffic.sub_comm(window.len), window.base, &pool, self)?;
+        traffic.push(driver, Some(Kind::Reduce), window);
+        Ok(pending)
+    }
+}
+
+impl<T: Element> SubmitRequest<T> for IallgathervReq<T> {
+    type Buffers = Vec<Vec<Vec<T>>>;
+
+    fn submit_into(
+        self,
+        traffic: &mut TrafficEngine<'_>,
+    ) -> Result<Pending<Vec<Vec<Vec<T>>>>, CommError> {
+        let window = traffic.resolve_window(self.win)?;
+        let (driver, pending) =
+            build_allgatherv_driver(traffic.sub_comm(window.len), window.base, self)?;
+        traffic.push(driver, Some(Kind::Allgatherv), window);
+        Ok(pending)
+    }
+}
+
+impl<T: Element> SubmitRequest<T> for IreduceScatterReq<T> {
+    type Buffers = Vec<Vec<T>>;
+
+    fn submit_into(
+        self,
+        traffic: &mut TrafficEngine<'_>,
+    ) -> Result<Pending<Vec<Vec<T>>>, CommError> {
+        let window = traffic.resolve_window(self.win)?;
+        let (driver, pending) =
+            build_reduce_scatter_driver(traffic.sub_comm(window.len), window.base, self)?;
+        traffic.push(driver, Some(Kind::ReduceScatter), window);
+        Ok(pending)
+    }
+}
+
+impl<T: Element> SubmitRequest<T> for IallreduceReq<T> {
+    type Buffers = Vec<Vec<T>>;
+
+    fn submit_into(
+        self,
+        traffic: &mut TrafficEngine<'_>,
+    ) -> Result<Pending<Vec<Vec<T>>>, CommError> {
+        let window = traffic.resolve_window(self.win)?;
+        let (driver, pending) =
+            build_allreduce_driver(traffic.sub_comm(window.len), window.base, self)?;
+        traffic.push(driver, Some(Kind::Allreduce), window);
+        Ok(pending)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-kind driver construction — mirrors the blocking `Communicator`
+// methods (validation order, algorithm dispatch, outcome assembly), so
+// batched outcomes are bit-identical to sequential ones. The parity
+// suite `tests/traffic_parity.rs` pins the mirror.
+// ---------------------------------------------------------------------
+
+type Built<B> = (Box<dyn OpDriver>, Pending<B>);
+
+fn build_bcast_driver<T: Element>(
+    sub: &Communicator,
+    base: usize,
+    pool: &Arc<ScratchPool>,
+    req: IbcastReq<T>,
+) -> Result<Built<Vec<Vec<T>>>, CommError> {
+    let p = sub.p();
+    if req.root >= p {
+        return Err(CommError::BadRequest(format!(
+            "bcast root {} out of range for p = {p}",
+            req.root
+        )));
+    }
+    let m = req.data.len();
+    let algo = req.algo.resolve(Kind::Bcast, m, req.elem_bytes, req.blocks);
+    let (pending, slot) = Pending::new_pair();
+    let driver: Box<dyn OpDriver> = match algo {
+        Algo::Circulant if sub.backend() == BackendKind::Engine => {
+            let n = sub.blocks_for(Kind::Bcast, m, req.blocks);
+            let geom = BlockGeometry::new(m, n);
+            let eng = CirculantEngine::new(sub.rows(), req.root, geom);
+            let mut scratch = pool.take::<T>();
+            // The batch already parallelises across operations; keep each
+            // op's delivery application serial so co-scheduled engine ops
+            // don't nest thread scopes.
+            scratch.delivery_threads = Some(1);
+            let step = EngineStep::bcast(eng, scratch, req.elem_bytes);
+            Box::new(EngineBcastOp {
+                core: EngineOpCore::new(step, pool.clone(), base),
+                data: req.data,
+                p,
+                m,
+                algo,
+                slot,
+            })
+        }
+        Algo::Circulant => {
+            let n = sub.blocks_for(Kind::Bcast, m, req.blocks);
+            let geom = BlockGeometry::new(m, n);
+            let procs = build_bcast_procs(&sub.schedules(), req.root, geom, &req.data);
+            proc_op(procs, req.elem_bytes, slot, base, move |stats, procs: Vec<BcastProc<T>>| {
+                if let Some(pr) = procs.iter().find(|pr| !pr.complete()) {
+                    return Err(CommError::Incomplete { kind: Kind::Bcast, rank: pr.rank });
+                }
+                let buffers: Vec<Vec<T>> =
+                    procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                Ok(bcast_outcome(p, m, algo, stats, buffers))
+            })
+        }
+        Algo::Binomial => {
+            let procs = build_procs(p, |r| {
+                let data = if r == req.root { Some(&req.data[..]) } else { None };
+                BinomialBcastProc::new(p, r, req.root, data)
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<BinomialBcastProc<T>>| {
+                    let buffers: Vec<Vec<T>> =
+                        procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                    Ok(bcast_outcome(p, m, algo, stats, buffers))
+                },
+            )
+        }
+        Algo::VanDeGeijn => {
+            let procs = build_procs(p, |r| {
+                let data = if r == req.root { Some(&req.data[..]) } else { None };
+                VdgBcastProc::new(p, r, req.root, m, data)
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<VdgBcastProc<T>>| {
+                    let buffers: Vec<Vec<T>> =
+                        procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                    Ok(bcast_outcome(p, m, algo, stats, buffers))
+                },
+            )
+        }
+        algo => return Err(CommError::Unsupported { kind: Kind::Bcast, algo }),
+    };
+    Ok((driver, pending))
+}
+
+/// The blocking bcast's uniform completion check + outcome shape.
+fn bcast_outcome<T: Element>(
+    p: usize,
+    m: usize,
+    algo: Algo,
+    stats: RunStats,
+    buffers: Vec<Vec<T>>,
+) -> Outcome<Vec<Vec<T>>> {
+    let complete = buffers.len() == p && buffers.iter().all(|b| b.len() == m);
+    Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None }
+}
+
+fn build_reduce_driver<T: Element>(
+    sub: &Communicator,
+    base: usize,
+    pool: &Arc<ScratchPool>,
+    req: IreduceReq<T>,
+) -> Result<Built<Vec<T>>, CommError> {
+    let p = sub.p();
+    if req.inputs.len() != p {
+        return Err(CommError::BadRequest(format!(
+            "reduce needs {p} contributions, got {}",
+            req.inputs.len()
+        )));
+    }
+    if req.root >= p {
+        return Err(CommError::BadRequest(format!(
+            "reduce root {} out of range for p = {p}",
+            req.root
+        )));
+    }
+    let m = req.inputs[0].len();
+    if req.inputs.iter().any(|v| v.len() != m) {
+        return Err(CommError::BadRequest(
+            "reduce requires equal-length contributions".to_string(),
+        ));
+    }
+    let algo = req.algo.resolve(Kind::Reduce, m, req.elem_bytes, req.blocks);
+    let (pending, slot) = Pending::new_pair();
+    let root = req.root;
+    let driver: Box<dyn OpDriver> = match algo {
+        Algo::Circulant if sub.backend() == BackendKind::Engine => {
+            let n = sub.blocks_for(Kind::Reduce, m, req.blocks);
+            let geom = BlockGeometry::new(m, n);
+            let eng = CirculantEngine::new(sub.rows(), root, geom);
+            let mut scratch = pool.take::<T>();
+            scratch.delivery_threads = Some(1);
+            let step =
+                EngineStep::reduce(eng, scratch, &req.inputs, req.op.clone(), req.elem_bytes);
+            Box::new(EngineReduceOp {
+                core: EngineOpCore::new(step, pool.clone(), base),
+                m,
+                algo,
+                slot,
+            })
+        }
+        Algo::Circulant => {
+            let n = sub.blocks_for(Kind::Reduce, m, req.blocks);
+            let geom = BlockGeometry::new(m, n);
+            let procs =
+                build_reduce_procs(&sub.schedules(), root, geom, &req.inputs, req.op.clone());
+            proc_op(procs, req.elem_bytes, slot, base, move |stats, procs: Vec<ReduceProc<T>>| {
+                let buffer = procs.into_iter().nth(root).unwrap().into_buffer();
+                Ok(reduce_outcome(m, algo, stats, buffer))
+            })
+        }
+        Algo::Binomial => {
+            let procs = build_procs(p, |r| {
+                BinomialReduceProc::new(p, r, root, &req.inputs[r], req.op.clone())
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<BinomialReduceProc<T>>| {
+                    let buffer = procs.into_iter().nth(root).unwrap().into_buffer();
+                    Ok(reduce_outcome(m, algo, stats, buffer))
+                },
+            )
+        }
+        algo => return Err(CommError::Unsupported { kind: Kind::Reduce, algo }),
+    };
+    Ok((driver, pending))
+}
+
+/// The blocking reduce's uniform completion check + outcome shape.
+fn reduce_outcome<T: Element>(
+    m: usize,
+    algo: Algo,
+    stats: RunStats,
+    buffer: Vec<T>,
+) -> Outcome<Vec<T>> {
+    let complete = buffer.len() == m;
+    Outcome { rounds: stats.rounds, stats, buffers: buffer, algo, complete, machine_span: None }
+}
+
+fn build_allgatherv_driver<T: Element>(
+    sub: &Communicator,
+    base: usize,
+    req: IallgathervReq<T>,
+) -> Result<Built<Vec<Vec<Vec<T>>>>, CommError> {
+    let p = sub.p();
+    if req.inputs.len() != p {
+        return Err(CommError::BadRequest(format!(
+            "allgatherv needs {p} contributions, got {}",
+            req.inputs.len()
+        )));
+    }
+    let total: usize = req.inputs.iter().map(|v| v.len()).sum();
+    let counts = Arc::new(req.inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
+    let algo = req.algo.resolve(Kind::Allgatherv, total, req.elem_bytes, req.blocks);
+    let (pending, slot) = Pending::new_pair();
+    let lens = counts.clone();
+    let assemble_check = move |stats: RunStats, buffers: Vec<Vec<Vec<T>>>| {
+        // The blocking allgatherv's uniform completion check: every rank
+        // holds every root's full contribution.
+        let complete = buffers.len() == p
+            && buffers.iter().all(|rows| {
+                rows.len() == p
+                    && rows.iter().zip(lens.iter()).all(|(row, &len)| row.len() == len)
+            });
+        Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None }
+    };
+    let driver: Box<dyn OpDriver> = match algo {
+        Algo::Circulant => {
+            let n = sub.blocks_for(Kind::Allgatherv, total, req.blocks);
+            let table = sub.table(n);
+            let procs = build_allgatherv_procs(table, counts, &req.inputs);
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<AllgathervProc<T>>| {
+                    if let Some(pr) = procs.iter().find(|pr| !pr.complete()) {
+                        return Err(CommError::Incomplete {
+                            kind: Kind::Allgatherv,
+                            rank: pr.rank,
+                        });
+                    }
+                    let buffers: Vec<Vec<Vec<T>>> =
+                        procs.into_iter().map(|pr| pr.into_buffers()).collect();
+                    Ok(assemble_check(stats, buffers))
+                },
+            )
+        }
+        Algo::Ring => {
+            let procs = build_procs(p, |r| {
+                RingAllgathervProc::new(p, r, counts.clone(), &req.inputs[r])
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<RingAllgathervProc<T>>| {
+                    let buffers: Vec<Vec<Vec<T>>> =
+                        procs.into_iter().map(|pr| pr.into_buffers()).collect();
+                    Ok(assemble_check(stats, buffers))
+                },
+            )
+        }
+        algo => return Err(CommError::Unsupported { kind: Kind::Allgatherv, algo }),
+    };
+    Ok((driver, pending))
+}
+
+fn build_reduce_scatter_driver<T: Element>(
+    sub: &Communicator,
+    base: usize,
+    req: IreduceScatterReq<T>,
+) -> Result<Built<Vec<Vec<T>>>, CommError> {
+    let p = sub.p();
+    if req.inputs.len() != p || req.counts.len() != p {
+        return Err(CommError::BadRequest(format!(
+            "reduce_scatter needs {p} contributions and {p} counts, got {} and {}",
+            req.inputs.len(),
+            req.counts.len()
+        )));
+    }
+    let total: usize = req.counts.iter().sum();
+    if req.inputs.iter().any(|v| v.len() != total) {
+        return Err(CommError::BadRequest(format!(
+            "reduce_scatter contributions must have sum(counts) = {total} elements"
+        )));
+    }
+    let counts = Arc::new(req.counts.clone());
+    let algo = req.algo.resolve(Kind::ReduceScatter, total, req.elem_bytes, req.blocks);
+    let (pending, slot) = Pending::new_pair();
+    let lens = counts.clone();
+    let assemble_check = move |stats: RunStats, chunks: Vec<Vec<T>>| {
+        // The blocking reduce_scatter's uniform completion check: rank j
+        // holds its counts[j]-element chunk.
+        let complete = chunks.len() == p
+            && chunks.iter().zip(lens.iter()).all(|(chunk, &c)| chunk.len() == c);
+        Outcome {
+            rounds: stats.rounds,
+            stats,
+            buffers: chunks,
+            algo,
+            complete,
+            machine_span: None,
+        }
+    };
+    let driver: Box<dyn OpDriver> = match algo {
+        Algo::Circulant => {
+            let n = sub.blocks_for(Kind::ReduceScatter, total, req.blocks);
+            let table = sub.table(n);
+            let procs =
+                build_reduce_scatter_procs(table, counts, &req.inputs, req.op.clone());
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<ReduceScatterProc<T>>| {
+                    let chunks: Vec<Vec<T>> =
+                        procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                    Ok(assemble_check(stats, chunks))
+                },
+            )
+        }
+        Algo::Ring => {
+            let procs = build_procs(p, |r| {
+                RingReduceScatterProc::new(p, r, counts.clone(), &req.inputs[r], req.op.clone())
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<RingReduceScatterProc<T>>| {
+                    let chunks: Vec<Vec<T>> =
+                        procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                    Ok(assemble_check(stats, chunks))
+                },
+            )
+        }
+        Algo::RecursiveHalving => {
+            let chunk = req.counts[0];
+            if req.counts.iter().any(|&c| c != chunk) {
+                return Err(CommError::BadRequest(
+                    "recursive halving requires equal chunks (reduce_scatter_block)".to_string(),
+                ));
+            }
+            let procs = build_procs(p, |r| {
+                RhalvingProc::new(p, r, chunk, &req.inputs[r], req.op.clone())
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<RhalvingProc<T>>| {
+                    let chunks: Vec<Vec<T>> =
+                        procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                    Ok(assemble_check(stats, chunks))
+                },
+            )
+        }
+        algo => return Err(CommError::Unsupported { kind: Kind::ReduceScatter, algo }),
+    };
+    Ok((driver, pending))
+}
+
+fn build_allreduce_driver<T: Element>(
+    sub: &Communicator,
+    base: usize,
+    req: IallreduceReq<T>,
+) -> Result<Built<Vec<Vec<T>>>, CommError> {
+    let p = sub.p();
+    if req.inputs.len() != p {
+        return Err(CommError::BadRequest(format!(
+            "allreduce needs {p} contributions, got {}",
+            req.inputs.len()
+        )));
+    }
+    let m = req.inputs.first().map(|v| v.len()).unwrap_or(0);
+    if req.inputs.iter().any(|v| v.len() != m) {
+        return Err(CommError::BadRequest(
+            "allreduce requires equal-length contributions".to_string(),
+        ));
+    }
+    // Chunk m over p ranks as equally as possible — the blocking split.
+    let chunk_base = m / p;
+    let rem = m % p;
+    let counts: Vec<usize> = (0..p).map(|j| chunk_base + usize::from(j < rem)).collect();
+    let counts = Arc::new(counts);
+    let algo = req.algo.resolve(Kind::Allreduce, m, req.elem_bytes, req.blocks);
+    let (pending, slot) = Pending::new_pair();
+    let assemble = move |rs_stats: RunStats, ag_stats: RunStats, buffers: Vec<Vec<T>>| {
+        let stats = combine_stats(&rs_stats, &ag_stats);
+        let complete = buffers.len() == p && buffers.iter().all(|b| b.len() == m);
+        Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None }
+    };
+    let driver: Box<dyn OpDriver> = match algo {
+        Algo::Circulant => {
+            let n = sub.blocks_for(Kind::Allreduce, m, req.blocks);
+            let table = sub.table(n);
+            let rs_procs = build_reduce_scatter_procs(
+                table.clone(),
+                counts.clone(),
+                &req.inputs,
+                req.op.clone(),
+            );
+            let bridge_counts = counts.clone();
+            TwoPhaseOp::boxed(
+                rs_procs,
+                move |rs_procs: Vec<ReduceScatterProc<T>>| {
+                    let chunks: Vec<Vec<T>> =
+                        rs_procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                    build_allgatherv_procs(table, bridge_counts, &chunks)
+                },
+                move |rs_stats, ag_stats, ag_procs: Vec<AllgathervProc<T>>| {
+                    if let Some(pr) = ag_procs.iter().find(|pr| !pr.complete()) {
+                        return Err(CommError::Incomplete {
+                            kind: Kind::Allreduce,
+                            rank: pr.rank,
+                        });
+                    }
+                    let buffers =
+                        concat_rows(ag_procs.into_iter().map(|pr| pr.into_buffers()), m);
+                    Ok(assemble(rs_stats, ag_stats, buffers))
+                },
+                req.elem_bytes,
+                slot,
+                base,
+            )
+        }
+        Algo::Ring => {
+            let rs_procs = build_procs(p, |r| {
+                RingReduceScatterProc::new(p, r, counts.clone(), &req.inputs[r], req.op.clone())
+            });
+            let bridge_counts = counts.clone();
+            TwoPhaseOp::boxed(
+                rs_procs,
+                move |rs_procs: Vec<RingReduceScatterProc<T>>| {
+                    let chunks: Vec<Vec<T>> =
+                        rs_procs.into_iter().map(|pr| pr.into_chunk()).collect();
+                    build_procs(p, |r| {
+                        RingAllgathervProc::new(p, r, bridge_counts.clone(), &chunks[r])
+                    })
+                },
+                move |rs_stats, ag_stats, ag_procs: Vec<RingAllgathervProc<T>>| {
+                    let buffers =
+                        concat_rows(ag_procs.into_iter().map(|pr| pr.into_buffers()), m);
+                    Ok(assemble(rs_stats, ag_stats, buffers))
+                },
+                req.elem_bytes,
+                slot,
+                base,
+            )
+        }
+        algo => return Err(CommError::Unsupported { kind: Kind::Allreduce, algo }),
+    };
+    Ok((driver, pending))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::comm::CommBuilder;
+    use crate::sim::UnitCost;
+
+    fn comm(p: usize) -> Communicator {
+        CommBuilder::new(p).cost_model(UnitCost).build()
+    }
+
+    fn stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
+        assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+        assert_eq!(a.active_rounds, b.active_rounds, "{ctx}: active_rounds");
+        assert_eq!(a.messages, b.messages, "{ctx}: messages");
+        assert_eq!(a.bytes, b.bytes, "{ctx}: bytes");
+        assert_eq!(a.max_rank_bytes, b.max_rank_bytes, "{ctx}: max_rank_bytes");
+        assert!((a.time - b.time).abs() < 1e-12, "{ctx}: time");
+    }
+
+    #[test]
+    fn single_op_batches_match_blocking_calls() {
+        use crate::comm::{AllreduceReq, BcastReq, ReduceReq};
+        let p = 17usize;
+        let c = comm(p);
+        let data: Vec<i64> = (0..90).map(|i| i * 3 - 7).collect();
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..40).map(|i| ((r + 1) * (i + 2)) as i64 % 97).collect())
+            .collect();
+
+        let mut traffic = c.traffic().threads(1).record_trace(true);
+        let hb = traffic
+            .submit(IbcastReq::new(3, data.clone()).algo(Algo::Circulant).blocks(5))
+            .unwrap();
+        let report = traffic.run().unwrap();
+        let batched = hb.wait().unwrap();
+        let blocking = c
+            .bcast(BcastReq::new(3, &data).algo(Algo::Circulant).blocks(5))
+            .unwrap();
+        assert_eq!(batched.buffers, blocking.buffers);
+        assert_eq!(batched.algo, blocking.algo);
+        assert_eq!(batched.complete, blocking.complete);
+        stats_eq(&batched.stats, &blocking.stats, "single bcast");
+        // Alone in the batch, the op never stalls: machine rounds equal
+        // its local rounds, the span covers them all.
+        assert_eq!(report.machine_rounds(), blocking.rounds);
+        assert_eq!(batched.machine_span, Some((0, blocking.rounds - 1)));
+        assert_eq!(report.ops.len(), 1);
+        assert!(report.ops[0].ok);
+        assert_eq!(report.ops[0].kind, Some(Kind::Bcast));
+
+        // Reduce and allreduce the same way.
+        let mut traffic = c.traffic().threads(1);
+        let hr = traffic
+            .submit(
+                IreduceReq::new(4, inputs.clone(), Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(3),
+            )
+            .unwrap();
+        let ha = traffic
+            .submit(
+                IallreduceReq::new(inputs.clone(), Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(2),
+            )
+            .unwrap();
+        traffic.run().unwrap();
+        let br = hr.wait().unwrap();
+        let wr = c
+            .reduce(ReduceReq::new(4, &inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(3))
+            .unwrap();
+        assert_eq!(br.buffers, wr.buffers);
+        stats_eq(&br.stats, &wr.stats, "reduce in batch");
+        let ba = ha.wait().unwrap();
+        let wa = c
+            .allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(2))
+            .unwrap();
+        assert_eq!(ba.buffers, wa.buffers);
+        stats_eq(&ba.stats, &wa.stats, "allreduce in batch");
+    }
+
+    #[test]
+    fn disjoint_windows_run_concurrently() {
+        // Four broadcasts over disjoint 8-rank windows: every op advances
+        // every machine round, so the batch takes max (not sum) rounds.
+        let c = comm(32);
+        for threads in [1usize, 4] {
+            let mut traffic = c.traffic().threads(threads).record_trace(true);
+            let data: Vec<i64> = (0..64).collect();
+            let handles: Vec<_> = (0..4)
+                .map(|w| {
+                    traffic
+                        .submit(
+                            IbcastReq::new(w, data.clone())
+                                .algo(Algo::Circulant)
+                                .blocks(4)
+                                .window(8 * w, 8),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            let report = traffic.run().unwrap();
+            // Each op: n - 1 + q = 4 - 1 + 3 = 6 local rounds.
+            assert_eq!(report.machine_rounds(), 6, "threads={threads}");
+            let seq: Communicator = comm(8);
+            for (w, h) in handles.into_iter().enumerate() {
+                let out = h.wait().unwrap();
+                assert_eq!(out.machine_span, Some((0, 5)), "window {w}");
+                let blocking = seq
+                    .bcast(crate::comm::BcastReq::new(w, &data).algo(Algo::Circulant).blocks(4))
+                    .unwrap();
+                assert_eq!(out.buffers, blocking.buffers, "window {w}");
+                stats_eq(&out.stats, &blocking.stats, &format!("window {w}"));
+            }
+            // The trace respects cross-op one-portedness.
+            let trace = report.trace.as_ref().unwrap();
+            crate::schedule::verify_one_ported_trace(32, trace).unwrap();
+        }
+    }
+
+    #[test]
+    fn shared_ranks_interleave_with_parity() {
+        // Two full-machine ops + one windowed op sharing ranks: the batch
+        // takes more machine rounds than any single op, fewer than the
+        // sum, and every per-op outcome matches its sequential run.
+        let p = 9usize;
+        let c = comm(p);
+        let data: Vec<i64> = (0..45).collect();
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..30).map(|i| (r * 7 + i) as i64).collect()).collect();
+        let win_inputs: Vec<Vec<i64>> =
+            (0..4).map(|r| (0..12).map(|i| (r * 11 + i) as i64).collect()).collect();
+
+        let mut traffic = c.traffic().threads(2).record_trace(true);
+        let h1 = traffic
+            .submit(IbcastReq::new(0, data.clone()).algo(Algo::Circulant).blocks(4))
+            .unwrap();
+        let h2 = traffic
+            .submit(
+                IreduceReq::new(2, inputs.clone(), Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(3),
+            )
+            .unwrap();
+        let h3 = traffic
+            .submit(
+                IallgathervReq::new(win_inputs.clone())
+                    .algo(Algo::Circulant)
+                    .blocks(2)
+                    .window(3, 4),
+            )
+            .unwrap();
+        let report = traffic.run().unwrap();
+        crate::schedule::verify_one_ported_trace(p, report.trace.as_ref().unwrap()).unwrap();
+
+        let b1 = h1.wait().unwrap();
+        let s1 = c
+            .bcast(crate::comm::BcastReq::new(0, &data).algo(Algo::Circulant).blocks(4))
+            .unwrap();
+        assert_eq!(b1.buffers, s1.buffers);
+        stats_eq(&b1.stats, &s1.stats, "bcast");
+
+        let b2 = h2.wait().unwrap();
+        let s2 = c
+            .reduce(
+                crate::comm::ReduceReq::new(2, &inputs, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(3),
+            )
+            .unwrap();
+        assert_eq!(b2.buffers, s2.buffers);
+        stats_eq(&b2.stats, &s2.stats, "reduce");
+
+        let b3 = h3.wait().unwrap();
+        let s3 = comm(4)
+            .allgatherv(
+                crate::comm::AllgathervReq::new(&win_inputs).algo(Algo::Circulant).blocks(2),
+            )
+            .unwrap();
+        assert_eq!(b3.buffers, s3.buffers);
+        stats_eq(&b3.stats, &s3.stats, "windowed allgatherv");
+
+        let sum = s1.rounds + s2.rounds + s3.rounds;
+        let longest = s1.rounds.max(s2.rounds).max(s3.rounds);
+        assert!(report.machine_rounds() >= longest);
+        assert!(report.machine_rounds() < sum, "interleaving must beat serialisation");
+    }
+
+    #[test]
+    fn engine_backend_batch_matches_blocking_engine() {
+        let p = 13usize;
+        let c = CommBuilder::new(p).cost_model(UnitCost).backend(BackendKind::Engine).build();
+        let data: Vec<i64> = (0..77).map(|i| i * 5 % 89).collect();
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..31).map(|i| ((r + 2) * (i + 1)) as i64 % 53).collect())
+            .collect();
+        let mut traffic = c.traffic().threads(1).record_trace(true);
+        let hb = traffic
+            .submit(IbcastReq::new(5, data.clone()).algo(Algo::Circulant).blocks(6))
+            .unwrap();
+        let hr = traffic
+            .submit(
+                IreduceReq::new(1, inputs.clone(), Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(4),
+            )
+            .unwrap();
+        let report = traffic.run().unwrap();
+        crate::schedule::verify_one_ported_trace(p, report.trace.as_ref().unwrap()).unwrap();
+        let bb = hb.wait().unwrap();
+        let sb = c
+            .bcast(crate::comm::BcastReq::new(5, &data).algo(Algo::Circulant).blocks(6))
+            .unwrap();
+        assert_eq!(bb.buffers, sb.buffers);
+        stats_eq(&bb.stats, &sb.stats, "engine bcast");
+        let br = hr.wait().unwrap();
+        let sr = c
+            .reduce(
+                crate::comm::ReduceReq::new(1, &inputs, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(4),
+            )
+            .unwrap();
+        assert_eq!(br.buffers, sr.buffers);
+        stats_eq(&br.stats, &sr.stats, "engine reduce");
+        // Finished engine ops pooled their scratch.
+        assert!(traffic.pool.idle() >= 1);
+    }
+
+    #[test]
+    fn p1_windows_and_empty_batches() {
+        let c = comm(5);
+        let report = c.traffic().run().unwrap();
+        assert_eq!(report.machine_rounds(), 0);
+        assert!(report.ops.is_empty());
+
+        let mut traffic = c.traffic();
+        let h = traffic
+            .submit(IbcastReq::new(0, vec![7i64; 9]).algo(Algo::Circulant).blocks(2).window(4, 1))
+            .unwrap();
+        let report = traffic.run().unwrap();
+        let out = h.wait().unwrap();
+        assert_eq!(out.buffers, vec![vec![7i64; 9]]);
+        assert!(out.all_received());
+        assert_eq!(out.rounds, 0);
+        assert_eq!(out.machine_span, None, "zero-round ops occupy no machine round");
+        assert_eq!(report.machine_rounds(), 0);
+    }
+
+    #[test]
+    fn bad_submissions_rejected_like_blocking() {
+        let c = comm(8);
+        let mut traffic = c.traffic();
+        assert!(matches!(
+            traffic.submit(IbcastReq::new(9, vec![1i64; 4])),
+            Err(CommError::BadRequest(_))
+        ));
+        assert!(matches!(
+            traffic.submit(IbcastReq::new(0, vec![1i64; 4]).window(6, 4)),
+            Err(CommError::BadRequest(_))
+        ));
+        // Overflowing windows must be rejected, not wrapped past the
+        // bound check.
+        assert!(matches!(
+            traffic.submit(IbcastReq::new(0, vec![1i64; 4]).window(usize::MAX - 1, 4)),
+            Err(CommError::BadRequest(_))
+        ));
+        assert!(matches!(
+            traffic.submit(IbcastReq::new(0, vec![1i64; 4]).algo(Algo::Ring)),
+            Err(CommError::Unsupported { kind: Kind::Bcast, algo: Algo::Ring })
+        ));
+        let short: Vec<Vec<i64>> = vec![vec![1]; 3];
+        assert!(matches!(
+            traffic.submit(IreduceReq::new(0, short, Arc::new(SumOp))),
+            Err(CommError::BadRequest(_))
+        ));
+        // Rejected submissions leave the batch runnable.
+        let h = traffic
+            .submit(IbcastReq::new(2, vec![5i64; 16]).blocks(2).algo(Algo::Circulant))
+            .unwrap();
+        traffic.run().unwrap();
+        assert!(h.wait().unwrap().all_received());
+    }
+
+    #[test]
+    fn windowed_ops_resolve_blocks_at_window_size() {
+        // Auto block counts and auto algorithm selection must see the
+        // window size, exactly like a fresh Communicator of that size.
+        let c = comm(40);
+        let data: Vec<i64> = (0..4000).collect();
+        let mut traffic = c.traffic();
+        let h = traffic.submit(IbcastReq::new(0, data.clone()).window(10, 17)).unwrap();
+        traffic.run().unwrap();
+        let batched = h.wait().unwrap();
+        let blocking = comm(17).bcast(crate::comm::BcastReq::new(0, &data)).unwrap();
+        assert_eq!(batched.algo, blocking.algo);
+        assert_eq!(batched.rounds, blocking.rounds);
+        assert_eq!(batched.buffers, blocking.buffers);
+        stats_eq(&batched.stats, &blocking.stats, "auto window");
+    }
+}

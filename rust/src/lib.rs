@@ -33,6 +33,14 @@
 //! the block count; every collective returns the same [`comm::Outcome`]
 //! (stats, buffers, resolved algorithm, rounds).
 //!
+//! For concurrent workloads, [`comm::Communicator::traffic`] opens a
+//! nonblocking batch: typed `I*Req` submissions return [`comm::Pending`]
+//! handles and [`comm::TrafficEngine::run`] executes the whole batch
+//! overlapped — disjoint rank windows truly concurrent, shared ranks
+//! round-interleaved under a cross-operation one-ported port ledger,
+//! with every per-op outcome bit-identical to a solo run (see
+//! [`comm::traffic`]).
+//!
 //! ## Layers underneath
 //!
 //! * [`schedule`] — the paper's core contribution: round-optimal broadcast

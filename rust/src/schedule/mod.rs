@@ -34,4 +34,4 @@ pub use recv::{recv_schedule, recv_schedule_into, RecvSchedule};
 pub use send::{send_schedule, send_schedule_into, SendSchedule};
 pub use skips::{ceil_log2, Skips};
 pub use table::{configured_threads, ScheduleTable};
-pub use verify::{verify_all, verify_sampled, VerifyReport};
+pub use verify::{verify_all, verify_one_ported_trace, verify_sampled, VerifyReport};

@@ -33,6 +33,12 @@ pub enum Violation {
     RecursionBound { r: usize, recursions: usize, limit: usize },
     ScanBound { r: usize, scans: usize, limit: usize },
     ViolationBound { r: usize, violations: usize },
+    /// Cross-op trace check: a rank sent twice in one machine round.
+    TraceSendBusy { round: usize, rank: usize },
+    /// Cross-op trace check: a rank received twice in one machine round.
+    TraceRecvBusy { round: usize, rank: usize },
+    /// Cross-op trace check: a self-message or out-of-range rank.
+    TraceBadRank { round: usize, from: usize, to: usize },
 }
 
 /// Summary statistics of one exhaustive verification run.
@@ -223,6 +229,44 @@ pub fn verify_sampled(p: usize, ranks: &[usize]) -> VerifyReport {
     rep
 }
 
+/// Cross-operation one-portedness oracle for the traffic plane.
+///
+/// `trace[j]` holds the `(from, to)` pairs of every message executed in
+/// machine round `j` of an interleaved batch (as recorded by
+/// `comm::traffic::TrafficEngine` with trace recording on, across
+/// **all** co-scheduled operations). The paper's machine model, extended
+/// across operations, demands that in every machine round each rank
+/// sends at most once and receives at most once — send and receive may
+/// coincide, possibly with different partners and different operations.
+/// Self-messages and out-of-range ranks are rejected too.
+///
+/// `O(total messages)` with two stamp arrays; returns the first
+/// violation found (round-major, message order within a round).
+pub fn verify_one_ported_trace(
+    p: usize,
+    trace: &[Vec<(usize, usize)>],
+) -> Result<(), Violation> {
+    let mut send_stamp = vec![0u32; p];
+    let mut recv_stamp = vec![0u32; p];
+    for (round, msgs) in trace.iter().enumerate() {
+        let stamp = round as u32 + 1;
+        for &(from, to) in msgs {
+            if from == to || from >= p || to >= p {
+                return Err(Violation::TraceBadRank { round, from, to });
+            }
+            if send_stamp[from] == stamp {
+                return Err(Violation::TraceSendBusy { round, rank: from });
+            }
+            if recv_stamp[to] == stamp {
+                return Err(Violation::TraceRecvBusy { round, rank: to });
+            }
+            send_stamp[from] = stamp;
+            recv_stamp[to] = stamp;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +296,42 @@ mod tests {
             // no violations at all.
             assert_eq!(rep.max_violations, 0, "p=2^{e}");
         }
+    }
+
+    #[test]
+    fn one_ported_trace_oracle() {
+        // Clean: simultaneous send+recv per rank is the machine model.
+        let clean = vec![
+            vec![(0, 1), (1, 2), (2, 0)], // a ring round: every rank sends and receives once
+            vec![],                       // idle machine rounds are fine
+            vec![(3, 0)],
+        ];
+        assert!(verify_one_ported_trace(4, &clean).is_ok());
+
+        // The same rank sending twice in one round (two ops claiming one
+        // send port) is the cross-op violation the ledger must prevent.
+        let double_send = vec![vec![(0, 1), (0, 2)]];
+        assert_eq!(
+            verify_one_ported_trace(3, &double_send),
+            Err(Violation::TraceSendBusy { round: 0, rank: 0 })
+        );
+        let double_recv = vec![vec![(0, 2), (1, 2)]];
+        assert_eq!(
+            verify_one_ported_trace(3, &double_recv),
+            Err(Violation::TraceRecvBusy { round: 0, rank: 2 })
+        );
+        // ...but the same ports are free again next round.
+        let across_rounds = vec![vec![(0, 1)], vec![(0, 1)]];
+        assert!(verify_one_ported_trace(2, &across_rounds).is_ok());
+
+        assert_eq!(
+            verify_one_ported_trace(3, &[vec![(1, 1)]]),
+            Err(Violation::TraceBadRank { round: 0, from: 1, to: 1 })
+        );
+        assert_eq!(
+            verify_one_ported_trace(3, &[vec![(1, 3)]]),
+            Err(Violation::TraceBadRank { round: 0, from: 1, to: 3 })
+        );
     }
 
     #[test]

@@ -137,6 +137,63 @@ impl CostModel for UnitCost {
     }
 }
 
+/// Completion-time accounting of an *overlapped batch* of collectives:
+/// within one machine round every co-scheduled operation's messages fly
+/// simultaneously (the traffic plane's port ledger guarantees they
+/// respect one-portedness across operations), so the round costs the max
+/// over **all** of those messages of [`CostModel::msg_time`], and the
+/// batch completes in the sum over machine rounds — the round-synchronous
+/// model of [`super::network`], extended across concurrent operations.
+///
+/// Usage: per message call [`OverlapClock::msg`]; at the end of each
+/// machine round call [`OverlapClock::end_round`]; read
+/// [`OverlapClock::total`] when the batch drains. Rounds in which no
+/// message flew cost nothing (matching `RunStats::active_rounds`
+/// semantics).
+#[derive(Debug, Clone, Default)]
+pub struct OverlapClock {
+    round_max: f64,
+    round_any: bool,
+    total: f64,
+    active_rounds: usize,
+}
+
+impl OverlapClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one message of the current machine round.
+    #[inline]
+    pub fn msg(&mut self, cost: &dyn CostModel, from: usize, to: usize, bytes: usize) {
+        self.round_max = self.round_max.max(cost.msg_time(from, to, bytes));
+        self.round_any = true;
+    }
+
+    /// Close the current machine round: fold its max message cost into
+    /// the total (if any message flew) and reset for the next round.
+    pub fn end_round(&mut self) {
+        if self.round_any {
+            self.total += self.round_max;
+            self.active_rounds += 1;
+        }
+        self.round_max = 0.0;
+        self.round_any = false;
+    }
+
+    /// Aggregate completion time of the batch so far, seconds.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Machine rounds in which at least one message flew.
+    #[inline]
+    pub fn active_rounds(&self) -> usize {
+        self.active_rounds
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +216,35 @@ mod tests {
     fn unit_counts_rounds() {
         let m = UnitCost;
         assert_eq!(m.msg_time(3, 5, 12345), 1.0);
+    }
+
+    #[test]
+    fn overlap_clock_folds_round_maxima() {
+        let cost = LinearCost::new(1.0, 0.5);
+        let mut clock = OverlapClock::new();
+        // Round 0: two overlapped messages; only the max (1 + 0.5*4) counts.
+        clock.msg(&cost, 0, 1, 2);
+        clock.msg(&cost, 2, 3, 4);
+        clock.end_round();
+        // Round 1: idle — free.
+        clock.end_round();
+        // Round 2: one message.
+        clock.msg(&cost, 1, 0, 2);
+        clock.end_round();
+        assert!((clock.total() - (3.0 + 2.0)).abs() < 1e-12);
+        assert_eq!(clock.active_rounds(), 2);
+    }
+
+    #[test]
+    fn overlap_of_unit_cost_counts_active_rounds() {
+        // Under UnitCost an overlapped batch's time is exactly its active
+        // machine-round count — concurrent ops sharing a round pay once.
+        let mut clock = OverlapClock::new();
+        for _ in 0..7 {
+            clock.msg(&UnitCost, 0, 1, 8);
+            clock.msg(&UnitCost, 5, 9, 800);
+            clock.end_round();
+        }
+        assert_eq!(clock.total(), 7.0);
     }
 }

@@ -72,7 +72,8 @@
 //!
 //! [`Network`]: super::network::Network
 
-use std::sync::{Arc, OnceLock};
+use std::any::Any;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::collectives::common::{phase_params, BlockGeometry, Element, ReduceOp, ScheduleSource};
 use crate::schedule::table::configured_threads;
@@ -309,17 +310,27 @@ impl CirculantEngine {
         elem_bytes: usize,
         cost: &dyn CostModel,
     ) -> Result<RunStats, SimError> {
-        let p = self.p;
-        let n = self.n;
         let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
-        if p == 1 {
+        if self.p == 1 {
             return Ok(stats);
         }
         let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        self.bcast_init(scratch);
+        for j in 0..self.rounds {
+            self.bcast_round(scratch, j, threads, elem_bytes, cost, &mut stats, None)?;
+        }
+        self.bcast_finish(scratch, &mut stats)?;
+        Ok(stats)
+    }
+
+    /// Reset `scratch` to the broadcast start state: the root (rel 0)
+    /// holds every block, everyone else nothing.
+    fn bcast_init<S: Element>(&self, scratch: &mut EngineScratch<S>) {
+        let p = self.p;
+        let n = self.n;
         let words = (n + 63) / 64;
         let EngineScratch {
-            holds, held, newly, deliveries_b: deliveries, active, recv_stamp, recv_from,
-            rank_bytes, ..
+            holds, held, deliveries_b: deliveries, active, recv_stamp, recv_from, rank_bytes, ..
         } = scratch;
         reset(holds, p * words);
         for (w, word) in holds[..words].iter_mut().enumerate() {
@@ -335,106 +346,178 @@ impl CirculantEngine {
         reset(recv_from, p);
         reset(rank_bytes, p);
         deliveries.clear();
+    }
 
-        for j in 0..self.rounds {
-            let (k, delta) = self.round_params(j);
-            let skip = self.sk.skip(k);
-            let stamp = (j + 1) as u32;
-            let mut round_time = 0.0f64;
-            let mut any = false;
-            // Ranks activated during round j join the worklist for j+1:
-            // scan only the prefix that was active at the round start.
-            let live = active.len();
-            for &rel32 in &active[..live] {
-                let rel = rel32 as usize;
-                let t_rel = {
-                    let t = rel + skip;
-                    if t >= p {
-                        t - p
-                    } else {
-                        t
-                    }
-                };
-                if t_rel == 0 {
-                    continue; // never send to the root (it has everything)
+    /// The `(from, to)` pairs (absolute ranks) broadcast round `j` will
+    /// use given the current worklist — the send scan of
+    /// [`Self::bcast_round`] minus every mutation, so it can be called
+    /// repeatedly (the traffic plane's port-ledger pre-check) before the
+    /// round actually executes.
+    fn bcast_ports<S: Element>(
+        &self,
+        scratch: &EngineScratch<S>,
+        j: usize,
+        out: &mut Vec<(usize, usize)>,
+    ) {
+        let p = self.p;
+        if p == 1 {
+            return;
+        }
+        let (k, delta) = self.round_params(j);
+        let skip = self.sk.skip(k);
+        for &rel32 in scratch.active.iter() {
+            let rel = rel32 as usize;
+            let t_rel = {
+                let t = rel + skip;
+                if t >= p {
+                    t - p
+                } else {
+                    t
                 }
-                let b = match self.cap(self.table.send_raw(rel, k) as i64 + delta) {
-                    Some(b) => b,
-                    None => continue,
-                };
-                if holds[rel * words + b / 64] & (1u64 << (b % 64)) == 0 {
-                    panic!(
-                        "engine: rank {} (rel {rel}) scheduled to send block {b} in round \
-                         {j} but it has not been received — schedule violation",
-                        self.abs(rel)
-                    );
+            };
+            if t_rel == 0 {
+                continue;
+            }
+            if self.cap(self.table.send_raw(rel, k) as i64 + delta).is_none() {
+                continue;
+            }
+            out.push((self.abs(rel), self.abs(t_rel)));
+        }
+    }
+
+    /// Execute broadcast round `j` on `scratch` (must follow
+    /// [`Self::bcast_init`] and rounds `0..j`): the shared round body of
+    /// [`Self::run_bcast_with`] and [`EngineStep`]. `msgs` (when given)
+    /// receives the round's executed `(from, to, bytes)` triples.
+    #[allow(clippy::too_many_arguments)]
+    fn bcast_round<S: Element>(
+        &self,
+        scratch: &mut EngineScratch<S>,
+        j: usize,
+        threads: usize,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        stats: &mut RunStats,
+        mut msgs: Option<&mut Vec<(usize, usize, usize)>>,
+    ) -> Result<(), SimError> {
+        let p = self.p;
+        let n = self.n;
+        let words = (n + 63) / 64;
+        let EngineScratch {
+            holds, held, newly, deliveries_b: deliveries, active, recv_stamp, recv_from,
+            rank_bytes, ..
+        } = scratch;
+        let (k, delta) = self.round_params(j);
+        let skip = self.sk.skip(k);
+        let stamp = (j + 1) as u32;
+        let mut round_time = 0.0f64;
+        let mut any = false;
+        // Ranks activated during round j join the worklist for j+1:
+        // scan only the prefix that was active at the round start.
+        let live = active.len();
+        for &rel32 in &active[..live] {
+            let rel = rel32 as usize;
+            let t_rel = {
+                let t = rel + skip;
+                if t >= p {
+                    t - p
+                } else {
+                    t
                 }
-                let from = self.abs(rel);
-                let to = self.abs(t_rel);
-                // Receiver-side expectation cross-check (Conditions 1+2).
-                let rb = match self.cap(self.table.recv_raw(t_rel, k) as i64 + delta) {
-                    Some(rb) => rb,
-                    None => {
-                        return Err(SimError::UnexpectedMessage {
-                            round: j,
-                            to,
-                            from,
-                            expected: None,
-                        })
-                    }
-                };
-                debug_assert_eq!(rb, b, "schedules disagree on the block (round {j})");
-                // One-ported receive enforcement.
-                if recv_stamp[t_rel] == stamp {
-                    return Err(SimError::ReceivePortBusy {
+            };
+            if t_rel == 0 {
+                continue; // never send to the root (it has everything)
+            }
+            let b = match self.cap(self.table.send_raw(rel, k) as i64 + delta) {
+                Some(b) => b,
+                None => continue,
+            };
+            if holds[rel * words + b / 64] & (1u64 << (b % 64)) == 0 {
+                panic!(
+                    "engine: rank {} (rel {rel}) scheduled to send block {b} in round \
+                     {j} but it has not been received — schedule violation",
+                    self.abs(rel)
+                );
+            }
+            let from = self.abs(rel);
+            let to = self.abs(t_rel);
+            // Receiver-side expectation cross-check (Conditions 1+2).
+            let rb = match self.cap(self.table.recv_raw(t_rel, k) as i64 + delta) {
+                Some(rb) => rb,
+                None => {
+                    return Err(SimError::UnexpectedMessage {
                         round: j,
                         to,
-                        first_from: recv_from[t_rel] as usize,
-                        second_from: from,
-                    });
+                        from,
+                        expected: None,
+                    })
                 }
-                recv_stamp[t_rel] = stamp;
-                recv_from[t_rel] = from as u32;
-                let bytes = self.geom.len(b) * elem_bytes;
-                stats.messages += 1;
-                stats.bytes += bytes;
-                rank_bytes[from] += bytes;
-                rank_bytes[to] += bytes;
-                round_time = round_time.max(cost.msg_time(from, to, bytes));
-                any = true;
-                deliveries.push((t_rel as u32, rb as u32));
+            };
+            debug_assert_eq!(rb, b, "schedules disagree on the block (round {j})");
+            // One-ported receive enforcement.
+            if recv_stamp[t_rel] == stamp {
+                return Err(SimError::ReceivePortBusy {
+                    round: j,
+                    to,
+                    first_from: recv_from[t_rel] as usize,
+                    second_from: from,
+                });
             }
-            // Deliver after the send scan: nothing received in round j is
-            // visible to sends before round j+1 (lockstep order). The
-            // targets are pairwise distinct (one-ported check above), so
-            // a large queue can be applied in parallel shards.
-            if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
-                deliver_bcast_parallel(deliveries, newly, holds, held, active, words, threads);
-            } else {
-                for &(to_rel, b) in deliveries.iter() {
-                    let (to_rel, b) = (to_rel as usize, b as usize);
-                    let w = to_rel * words + b / 64;
-                    let bit = 1u64 << (b % 64);
-                    if holds[w] & bit == 0 {
-                        holds[w] |= bit;
-                        if held[to_rel] == 0 {
-                            active.push(to_rel as u32);
-                        }
-                        held[to_rel] += 1;
+            recv_stamp[t_rel] = stamp;
+            recv_from[t_rel] = from as u32;
+            let bytes = self.geom.len(b) * elem_bytes;
+            stats.messages += 1;
+            stats.bytes += bytes;
+            rank_bytes[from] += bytes;
+            rank_bytes[to] += bytes;
+            round_time = round_time.max(cost.msg_time(from, to, bytes));
+            any = true;
+            if let Some(out) = msgs.as_mut() {
+                out.push((from, to, bytes));
+            }
+            deliveries.push((t_rel as u32, rb as u32));
+        }
+        // Deliver after the send scan: nothing received in round j is
+        // visible to sends before round j+1 (lockstep order). The
+        // targets are pairwise distinct (one-ported check above), so
+        // a large queue can be applied in parallel shards.
+        if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
+            deliver_bcast_parallel(deliveries, newly, holds, held, active, words, threads);
+        } else {
+            for &(to_rel, b) in deliveries.iter() {
+                let (to_rel, b) = (to_rel as usize, b as usize);
+                let w = to_rel * words + b / 64;
+                let bit = 1u64 << (b % 64);
+                if holds[w] & bit == 0 {
+                    holds[w] |= bit;
+                    if held[to_rel] == 0 {
+                        active.push(to_rel as u32);
                     }
+                    held[to_rel] += 1;
                 }
-            }
-            deliveries.clear();
-            if any {
-                stats.active_rounds += 1;
-                stats.time += round_time;
             }
         }
-        stats.max_rank_bytes = rank_bytes.iter().copied().max().unwrap_or(0);
-        if let Some(err) = self.find_missing_bcast(holds, words, held) {
+        deliveries.clear();
+        if any {
+            stats.active_rounds += 1;
+            stats.time += round_time;
+        }
+        Ok(())
+    }
+
+    /// Close a broadcast run: fold `max_rank_bytes` and run the deferred
+    /// missing-message check.
+    fn bcast_finish<S: Element>(
+        &self,
+        scratch: &EngineScratch<S>,
+        stats: &mut RunStats,
+    ) -> Result<(), SimError> {
+        let words = (self.n + 63) / 64;
+        stats.max_rank_bytes = scratch.rank_bytes.iter().copied().max().unwrap_or(0);
+        if let Some(err) = self.find_missing_bcast(&scratch.holds, words, &scratch.held) {
             return Err(err);
         }
-        Ok(stats)
+        Ok(())
     }
 
     /// Deferred missing-message check for broadcast: if any rank ended
@@ -570,6 +653,21 @@ impl CirculantEngine {
             return Ok((stats, inputs[self.root].clone()));
         }
         let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        self.reduce_init(scratch, inputs);
+        for jr in 0..self.rounds {
+            self.reduce_round(scratch, jr, threads, op, elem_bytes, cost, &mut stats, None)?;
+        }
+        self.reduce_finish(scratch, &mut stats)?;
+        Ok((stats, self.reduce_result(scratch)))
+    }
+
+    /// Reset `scratch` to the reduction start state: every rank's
+    /// contribution in the `(rank, block)`-indexed arena, the sender
+    /// worklist in profile order.
+    fn reduce_init<T: Element>(&self, scratch: &mut EngineScratch<T>, inputs: &[Vec<T>]) {
+        let p = self.p;
+        let m = self.geom.m;
+        assert_eq!(inputs.len(), p, "reduce needs one contribution per rank");
         let profile = self.reduce_profile();
         let EngineScratch {
             active, recv_stamp, recv_from, recv_count, rank_bytes, arena, stage,
@@ -595,100 +693,183 @@ impl CirculantEngine {
         reset(rank_bytes, p);
         stage.clear();
         deliveries.clear();
+    }
 
-        for jr in 0..self.rounds {
-            let i = self.rounds - 1 - jr;
-            while let Some(&last) = active.last() {
-                if profile.first_send[last as usize] > i {
-                    active.pop();
-                } else {
-                    break;
-                }
+    /// Drop worklist-tail ranks whose last reversed send has passed by
+    /// reversed round `jr` — idempotent for a fixed `jr`, so both the
+    /// port pre-scan and the round execution may apply it.
+    fn reduce_prune(&self, active: &mut Vec<u32>, first_send: &[usize], jr: usize) {
+        let i = self.rounds - 1 - jr;
+        while let Some(&last) = active.last() {
+            if first_send[last as usize] > i {
+                active.pop();
+            } else {
+                break;
             }
-            let (k, delta) = self.round_params(i);
-            let skip = self.sk.skip(k);
-            let stamp = (jr + 1) as u32;
-            let mut round_time = 0.0f64;
-            let mut any = false;
-            for &rel32 in active.iter() {
-                let rel = rel32 as usize;
-                // Reversal of the broadcast receive: forward our partial
-                // of recvblock[k] to the from-processor.
-                let b = match self.cap(self.table.recv_raw(rel, k) as i64 + delta) {
-                    Some(b) => b,
-                    None => continue,
-                };
-                let to_rel = {
-                    let t = rel + p - skip;
-                    if t >= p {
-                        t - p
-                    } else {
-                        t
-                    }
-                };
-                let from = self.abs(rel);
-                let to = self.abs(to_rel);
-                // Receiver-side cross-check (reversed Condition 2).
-                let rb = match self.cap(self.table.send_raw(to_rel, k) as i64 + delta) {
-                    Some(rb) => rb,
-                    None => {
-                        return Err(SimError::UnexpectedMessage {
-                            round: jr,
-                            to,
-                            from,
-                            expected: None,
-                        })
-                    }
-                };
-                debug_assert_eq!(rb, b, "schedules disagree on the block (reversed round {jr})");
-                if recv_stamp[to_rel] == stamp {
-                    return Err(SimError::ReceivePortBusy {
+        }
+    }
+
+    /// The `(from, to)` pairs (absolute ranks) reversed round `jr` will
+    /// use — the send scan of [`Self::reduce_round`] minus every
+    /// state change except the (idempotent) worklist-tail prune.
+    fn reduce_ports<T: Element>(
+        &self,
+        scratch: &mut EngineScratch<T>,
+        jr: usize,
+        out: &mut Vec<(usize, usize)>,
+    ) {
+        let p = self.p;
+        if p == 1 {
+            return;
+        }
+        let profile = self.reduce_profile();
+        self.reduce_prune(&mut scratch.active, &profile.first_send, jr);
+        let i = self.rounds - 1 - jr;
+        let (k, delta) = self.round_params(i);
+        let skip = self.sk.skip(k);
+        for &rel32 in scratch.active.iter() {
+            let rel = rel32 as usize;
+            if self.cap(self.table.recv_raw(rel, k) as i64 + delta).is_none() {
+                continue;
+            }
+            let to_rel = {
+                let t = rel + p - skip;
+                if t >= p {
+                    t - p
+                } else {
+                    t
+                }
+            };
+            out.push((self.abs(rel), self.abs(to_rel)));
+        }
+    }
+
+    /// Execute reversed round `jr` on `scratch` (must follow
+    /// [`Self::reduce_init`] and rounds `0..jr`): the shared round body
+    /// of [`Self::run_reduce_with`] and [`EngineStep`]. `msgs` (when
+    /// given) receives the round's executed `(from, to, bytes)` triples.
+    #[allow(clippy::too_many_arguments)]
+    fn reduce_round<T: Element>(
+        &self,
+        scratch: &mut EngineScratch<T>,
+        jr: usize,
+        threads: usize,
+        op: &dyn ReduceOp<T>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        stats: &mut RunStats,
+        mut msgs: Option<&mut Vec<(usize, usize, usize)>>,
+    ) -> Result<(), SimError> {
+        let p = self.p;
+        let m = self.geom.m;
+        let profile = self.reduce_profile();
+        let EngineScratch {
+            active, recv_stamp, recv_from, recv_count, rank_bytes, arena, stage,
+            deliveries_r: deliveries, ..
+        } = scratch;
+        self.reduce_prune(active, &profile.first_send, jr);
+        let i = self.rounds - 1 - jr;
+        let (k, delta) = self.round_params(i);
+        let skip = self.sk.skip(k);
+        let stamp = (jr + 1) as u32;
+        let mut round_time = 0.0f64;
+        let mut any = false;
+        for &rel32 in active.iter() {
+            let rel = rel32 as usize;
+            // Reversal of the broadcast receive: forward our partial
+            // of recvblock[k] to the from-processor.
+            let b = match self.cap(self.table.recv_raw(rel, k) as i64 + delta) {
+                Some(b) => b,
+                None => continue,
+            };
+            let to_rel = {
+                let t = rel + p - skip;
+                if t >= p {
+                    t - p
+                } else {
+                    t
+                }
+            };
+            let from = self.abs(rel);
+            let to = self.abs(to_rel);
+            // Receiver-side cross-check (reversed Condition 2).
+            let rb = match self.cap(self.table.send_raw(to_rel, k) as i64 + delta) {
+                Some(rb) => rb,
+                None => {
+                    return Err(SimError::UnexpectedMessage {
                         round: jr,
                         to,
-                        first_from: recv_from[to_rel] as usize,
-                        second_from: from,
-                    });
+                        from,
+                        expected: None,
+                    })
                 }
-                recv_stamp[to_rel] = stamp;
-                recv_from[to_rel] = from as u32;
-                recv_count[to_rel] += 1;
-                let (off, len) = self.geom.range(b);
-                // "Send": stage the sender's arena range in the round
-                // scratch so this round's combines see round-start state.
-                let s_off = stage.len();
-                stage.extend_from_slice(&arena[rel * m + off..rel * m + off + len]);
-                deliveries.push((to_rel, rb, s_off, len));
-                let bytes = len * elem_bytes;
-                stats.messages += 1;
-                stats.bytes += bytes;
-                rank_bytes[from] += bytes;
-                rank_bytes[to] += bytes;
-                round_time = round_time.max(cost.msg_time(from, to, bytes));
-                any = true;
+            };
+            debug_assert_eq!(rb, b, "schedules disagree on the block (reversed round {jr})");
+            if recv_stamp[to_rel] == stamp {
+                return Err(SimError::ReceivePortBusy {
+                    round: jr,
+                    to,
+                    first_from: recv_from[to_rel] as usize,
+                    second_from: from,
+                });
             }
-            if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
-                deliver_reduce_parallel(deliveries, arena, stage, self.geom, m, op, threads);
-            } else {
-                for &(dst_rel, rb, s_off, len) in deliveries.iter() {
-                    let (d_off, d_len) = self.geom.range(rb);
-                    let dst = &mut arena[dst_rel * m + d_off..dst_rel * m + d_off + d_len];
-                    op.combine(dst, &stage[s_off..s_off + len]);
-                }
-            }
-            deliveries.clear();
-            stage.clear();
-            if any {
-                stats.active_rounds += 1;
-                stats.time += round_time;
+            recv_stamp[to_rel] = stamp;
+            recv_from[to_rel] = from as u32;
+            recv_count[to_rel] += 1;
+            let (off, len) = self.geom.range(b);
+            // "Send": stage the sender's arena range in the round
+            // scratch so this round's combines see round-start state.
+            let s_off = stage.len();
+            stage.extend_from_slice(&arena[rel * m + off..rel * m + off + len]);
+            deliveries.push((to_rel, rb, s_off, len));
+            let bytes = len * elem_bytes;
+            stats.messages += 1;
+            stats.bytes += bytes;
+            rank_bytes[from] += bytes;
+            rank_bytes[to] += bytes;
+            round_time = round_time.max(cost.msg_time(from, to, bytes));
+            any = true;
+            if let Some(out) = msgs.as_mut() {
+                out.push((from, to, bytes));
             }
         }
-        stats.max_rank_bytes = rank_bytes.iter().copied().max().unwrap_or(0);
-        if let Some(err) = self.find_missing_reduce(recv_count, &profile.expect_recv) {
+        if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
+            deliver_reduce_parallel(deliveries, arena, stage, self.geom, m, op, threads);
+        } else {
+            for &(dst_rel, rb, s_off, len) in deliveries.iter() {
+                let (d_off, d_len) = self.geom.range(rb);
+                let dst = &mut arena[dst_rel * m + d_off..dst_rel * m + d_off + d_len];
+                op.combine(dst, &stage[s_off..s_off + len]);
+            }
+        }
+        deliveries.clear();
+        stage.clear();
+        if any {
+            stats.active_rounds += 1;
+            stats.time += round_time;
+        }
+        Ok(())
+    }
+
+    /// Close a reduction run: fold `max_rank_bytes` and run the deferred
+    /// receive-count check.
+    fn reduce_finish<T: Element>(
+        &self,
+        scratch: &EngineScratch<T>,
+        stats: &mut RunStats,
+    ) -> Result<(), SimError> {
+        stats.max_rank_bytes = scratch.rank_bytes.iter().copied().max().unwrap_or(0);
+        let profile = self.reduce_profile();
+        if let Some(err) = self.find_missing_reduce(&scratch.recv_count, &profile.expect_recv) {
             return Err(err);
         }
-        // rel 0 = the root's fully reduced buffer (copied out so the
-        // arena stays reusable scratch).
-        Ok((stats, arena[..m].to_vec()))
+        Ok(())
+    }
+
+    /// The root's fully reduced buffer — rel 0's arena row (copied out so
+    /// the arena stays reusable scratch).
+    fn reduce_result<T: Element>(&self, scratch: &EngineScratch<T>) -> Vec<T> {
+        scratch.arena[..self.geom.m].to_vec()
     }
 
     /// Deferred missing-message check for reduction: compare actual
@@ -729,6 +910,176 @@ impl CirculantEngine {
             }
         }
         unreachable!("engine: receive-count mismatch without a reconstructable missing message")
+    }
+}
+
+/// A resumable, round-steppable engine run — the per-round counterpart
+/// of [`CirculantEngine::run_bcast_with`] /
+/// [`CirculantEngine::run_reduce_with`], built from the *same* shared
+/// round bodies, so a stepped run is bit-identical (payloads, statistics
+/// and error values alike) to a blocking one. This is what lets the
+/// traffic plane ([`crate::comm::traffic::TrafficEngine`]) drive many
+/// engines in lockstep machine rounds, interleaving their rounds with
+/// other collectives under the cross-operation port ledger.
+///
+/// An `EngineStep` owns its [`CirculantEngine`] (construction is O(1)
+/// past the shared `Arc<ScheduleTable>`) and an [`EngineScratch`] —
+/// typically borrowed from a [`ScratchPool`] and returned by
+/// [`EngineStep::finish`] so overlapping operations reuse run scratch
+/// instead of allocating per operation.
+pub struct EngineStep<T: Element> {
+    eng: CirculantEngine,
+    scratch: EngineScratch<T>,
+    /// `Some(op)` for a reduction, `None` for a broadcast.
+    op: Option<Arc<dyn ReduceOp<T>>>,
+    elem_bytes: usize,
+    threads: usize,
+    j: usize,
+    stats: RunStats,
+}
+
+impl<T: Element> EngineStep<T> {
+    /// Begin a steppable broadcast run.
+    pub fn bcast(eng: CirculantEngine, mut scratch: EngineScratch<T>, elem_bytes: usize) -> Self {
+        let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        let stats = RunStats { rounds: eng.rounds, ..Default::default() };
+        eng.bcast_init(&mut scratch);
+        EngineStep { eng, scratch, op: None, elem_bytes, threads, j: 0, stats }
+    }
+
+    /// Begin a steppable reduction run: `inputs[r]` is absolute rank
+    /// `r`'s contribution, copied into the arena up front.
+    pub fn reduce(
+        eng: CirculantEngine,
+        mut scratch: EngineScratch<T>,
+        inputs: &[Vec<T>],
+        op: Arc<dyn ReduceOp<T>>,
+        elem_bytes: usize,
+    ) -> Self {
+        let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        let stats = RunStats { rounds: eng.rounds, ..Default::default() };
+        eng.reduce_init(&mut scratch, inputs);
+        EngineStep { eng, scratch, op: Some(op), elem_bytes, threads, j: 0, stats }
+    }
+
+    #[inline]
+    pub fn rounds(&self) -> usize {
+        self.eng.rounds
+    }
+
+    /// The round the next [`EngineStep::step`] will execute.
+    #[inline]
+    pub fn next_round(&self) -> usize {
+        self.j
+    }
+
+    #[inline]
+    pub fn is_done(&self) -> bool {
+        self.j >= self.eng.rounds
+    }
+
+    /// The `(from, to)` pairs (absolute ranks) the next round will use —
+    /// callable any number of times before the round executes (the
+    /// port-ledger pre-check; see [`CirculantEngine`]'s `*_ports` scans).
+    pub fn ports(&mut self, out: &mut Vec<(usize, usize)>) {
+        if self.is_done() {
+            return;
+        }
+        match &self.op {
+            None => self.eng.bcast_ports(&self.scratch, self.j, out),
+            Some(_) => self.eng.reduce_ports(&mut self.scratch, self.j, out),
+        }
+    }
+
+    /// Execute the next round; `msgs` (when given) receives the round's
+    /// executed `(from, to, bytes)` triples. On error the run is
+    /// poisoned exactly where a blocking run would have aborted.
+    pub fn step(
+        &mut self,
+        cost: &dyn CostModel,
+        msgs: Option<&mut Vec<(usize, usize, usize)>>,
+    ) -> Result<(), SimError> {
+        assert!(!self.is_done(), "step called on a completed run");
+        let op = self.op.clone();
+        let res = match op {
+            None => self.eng.bcast_round(
+                &mut self.scratch,
+                self.j,
+                self.threads,
+                self.elem_bytes,
+                cost,
+                &mut self.stats,
+                msgs,
+            ),
+            Some(op) => self.eng.reduce_round(
+                &mut self.scratch,
+                self.j,
+                self.threads,
+                op.as_ref(),
+                self.elem_bytes,
+                cost,
+                &mut self.stats,
+                msgs,
+            ),
+        };
+        if res.is_ok() {
+            self.j += 1;
+        }
+        res
+    }
+
+    /// Close the run (all rounds must be stepped): the deferred
+    /// completion checks, final statistics and — for a reduction — the
+    /// root's reduced buffer, plus the scratch back for pooling.
+    #[allow(clippy::type_complexity)]
+    pub fn finish(mut self) -> (Result<(RunStats, Option<Vec<T>>), SimError>, EngineScratch<T>) {
+        assert!(self.is_done(), "finish called with rounds remaining");
+        let res = match &self.op {
+            None => self.eng.bcast_finish(&self.scratch, &mut self.stats),
+            Some(_) => self.eng.reduce_finish(&self.scratch, &mut self.stats),
+        };
+        let res = res.map(|()| {
+            let buf = self.op.as_ref().map(|_| self.eng.reduce_result(&self.scratch));
+            (self.stats.clone(), buf)
+        });
+        (res, self.scratch)
+    }
+}
+
+/// A shared pool of [`EngineScratch`] values, type-erased so one pool
+/// serves a heterogeneous batch of operations: [`ScratchPool::take`]
+/// returns a pooled scratch of the requested element type when one is
+/// free (allocation-free past its first use), else a fresh one; finished
+/// operations [`ScratchPool::put`] their scratch back.
+#[derive(Default)]
+pub struct ScratchPool {
+    free: Mutex<Vec<Box<dyn Any + Send>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A scratch of element type `T`: pooled if available, fresh
+    /// otherwise. Callers should re-set `delivery_threads` — a pooled
+    /// scratch keeps its previous override.
+    pub fn take<T: Element>(&self) -> EngineScratch<T> {
+        let mut free = self.free.lock().unwrap();
+        if let Some(pos) = free.iter().position(|b| b.is::<EngineScratch<T>>()) {
+            return *free.swap_remove(pos).downcast().expect("position() type-checked");
+        }
+        EngineScratch::new()
+    }
+
+    /// Return a scratch for reuse.
+    pub fn put<T: Element>(&self, scratch: EngineScratch<T>) {
+        self.free.lock().unwrap().push(Box::new(scratch));
+    }
+
+    /// Number of pooled (idle) scratches.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
     }
 }
 
@@ -992,6 +1343,115 @@ mod tests {
             Err(SimError::MissingMessage { .. }) => {}
             other => panic!("want MissingMessage, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn stepped_runs_match_blocking_runs() {
+        // EngineStep shares the blocking run's round bodies; this pins
+        // that a round-by-round drive (with port pre-scans in between)
+        // yields bit-identical stats, payloads and port predictions.
+        let pool = ScratchPool::new();
+        for p in [1usize, 2, 5, 17, 33] {
+            let sk = Arc::new(Skips::new(p));
+            let table = Arc::new(ScheduleTable::build(&sk));
+            for (root, n, m) in [(0usize, 1usize, 5usize), (p - 1, 4, 18)] {
+                let geom = BlockGeometry::new(m, n);
+                let eng = CirculantEngine::new(table.clone(), root, geom);
+                let blocking = eng.run_bcast(4, &UnitCost).unwrap();
+
+                let eng2 = CirculantEngine::new(table.clone(), root, geom);
+                let mut step = EngineStep::<i64>::bcast(eng2, pool.take(), 4);
+                let mut ports = Vec::new();
+                let mut msgs = Vec::new();
+                while !step.is_done() {
+                    ports.clear();
+                    step.ports(&mut ports);
+                    ports.sort_unstable();
+                    msgs.clear();
+                    step.step(&UnitCost, Some(&mut msgs)).unwrap();
+                    let mut sent: Vec<(usize, usize)> =
+                        msgs.iter().map(|&(f, t, _)| (f, t)).collect();
+                    sent.sort_unstable();
+                    assert_eq!(ports, sent, "bcast ports predict sends p={p} root={root}");
+                }
+                let (res, scratch) = step.finish();
+                pool.put(scratch);
+                let (sstats, sbuf) = res.unwrap();
+                stats_eq(&sstats, &blocking, &format!("stepped bcast p={p} root={root}"));
+                assert!(sbuf.is_none());
+
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| (0..m).map(|i| (r * 13 + i) as i64).collect()).collect();
+                let (bstats, bbuf) = eng.run_reduce(&inputs, &SumOp, 8, &UnitCost).unwrap();
+                let mut step = EngineStep::<i64>::reduce(
+                    CirculantEngine::new(table.clone(), root, geom),
+                    pool.take(),
+                    &inputs,
+                    Arc::new(SumOp),
+                    8,
+                );
+                while !step.is_done() {
+                    ports.clear();
+                    step.ports(&mut ports);
+                    ports.sort_unstable();
+                    msgs.clear();
+                    step.step(&UnitCost, Some(&mut msgs)).unwrap();
+                    let mut sent: Vec<(usize, usize)> =
+                        msgs.iter().map(|&(f, t, _)| (f, t)).collect();
+                    sent.sort_unstable();
+                    assert_eq!(ports, sent, "reduce ports predict sends p={p} root={root}");
+                }
+                let (res, scratch) = step.finish();
+                pool.put(scratch);
+                let (rstats, rbuf) = res.unwrap();
+                stats_eq(&rstats, &bstats, &format!("stepped reduce p={p} root={root}"));
+                assert_eq!(rbuf.unwrap(), bbuf, "stepped reduce payload p={p} root={root}");
+            }
+        }
+        assert!(pool.idle() >= 1, "finished steps return scratch to the pool");
+    }
+
+    #[test]
+    fn stepped_run_surfaces_blocking_errors() {
+        // A corrupted schedule must fail a stepped run with the same
+        // error value (and round) the blocking run reports.
+        let sk = Arc::new(Skips::new(17));
+        let mut table = ScheduleTable::build(&sk);
+        let q = table.q();
+        table.recv_row_mut(1)[0] = -(q as i64) as i8;
+        let table = Arc::new(table);
+        let geom = BlockGeometry::new(34, 2);
+        let eng = CirculantEngine::new(table.clone(), 0, geom);
+        let blocking = eng.run_bcast(4, &UnitCost).unwrap_err();
+        let mut step =
+            EngineStep::<u32>::bcast(CirculantEngine::new(table, 0, geom), EngineScratch::new(), 4);
+        let stepped = loop {
+            match step.step(&UnitCost, None) {
+                Ok(()) => assert!(!step.is_done(), "corrupted run must not complete"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(stepped, blocking);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_by_type() {
+        let pool = ScratchPool::new();
+        let mut a = pool.take::<i64>();
+        a.holds.reserve(1024);
+        let marker = a.holds.capacity();
+        pool.put(a);
+        // A different element type gets a fresh scratch...
+        let b = pool.take::<u32>();
+        assert_eq!(b.holds.capacity(), 0);
+        assert_eq!(pool.idle(), 1);
+        // ...while the matching type gets the pooled one back.
+        let c = pool.take::<i64>();
+        assert_eq!(c.holds.capacity(), marker);
+        assert_eq!(pool.idle(), 0);
+        pool.put(b);
+        pool.put(c);
+        assert_eq!(pool.idle(), 2);
     }
 
     #[test]

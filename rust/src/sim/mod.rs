@@ -11,7 +11,7 @@ pub mod engine;
 pub mod network;
 pub mod threads;
 
-pub use cost::{CostModel, HierarchicalCost, LinearCost, UnitCost};
-pub use engine::{CirculantEngine, EngineScratch};
-pub use network::{Msg, Network, RankProc, RunStats, SimError};
+pub use cost::{CostModel, HierarchicalCost, LinearCost, OverlapClock, UnitCost};
+pub use engine::{CirculantEngine, EngineScratch, EngineStep, ScratchPool};
+pub use network::{Msg, Network, RankProc, RunStats, SimError, StepNet};
 pub use threads::{run_threaded, run_threaded_stats, Comm};

@@ -144,65 +144,202 @@ impl Network {
         let mut inbox: Vec<Option<(usize, Vec<T>)>> = (0..self.p).map(|_| None).collect();
 
         for round in 0..total_rounds {
-            let mut round_time = 0.0f64;
-            let mut any = false;
-
-            // Collect sends.
-            for r in 0..self.p {
-                if let Some(msg) = procs[r].send(round) {
-                    if msg.to == r {
-                        return Err(SimError::SelfMessage { round, rank: r });
-                    }
-                    if msg.to >= self.p {
-                        return Err(SimError::BadTarget { round, rank: r, to: msg.to });
-                    }
-                    if let Some((first, _)) = &inbox[msg.to] {
-                        return Err(SimError::ReceivePortBusy {
-                            round,
-                            to: msg.to,
-                            first_from: *first,
-                            second_from: r,
-                        });
-                    }
-                    let bytes = msg.data.len() * elem_bytes;
-                    stats.messages += 1;
-                    stats.bytes += bytes;
-                    rank_bytes[r] += bytes;
-                    rank_bytes[msg.to] += bytes;
-                    round_time = round_time.max(cost.msg_time(r, msg.to, bytes));
-                    any = true;
-                    inbox[msg.to] = Some((r, msg.data));
-                }
-            }
-
-            // Cross-check expectations, then deliver.
-            for (to, slot) in inbox.iter_mut().enumerate() {
-                let expected = procs[to].expects(round);
-                match (slot.take(), expected) {
-                    (Some((from, data)), Some(exp)) if exp == from => {
-                        procs[to].recv(round, from, data);
-                    }
-                    (Some((from, _)), exp) => {
-                        return Err(SimError::UnexpectedMessage { round, to, from, expected: exp });
-                    }
-                    (None, Some(exp)) => {
-                        return Err(SimError::MissingMessage {
-                            round,
-                            rank: to,
-                            expected_from: exp,
-                        });
-                    }
-                    (None, None) => {}
-                }
-            }
-
-            if any {
-                stats.active_rounds += 1;
-                stats.time += round_time;
-            }
+            lockstep_round(
+                procs, round, &mut inbox, &mut stats, &mut rank_bytes, elem_bytes, cost, None,
+            )?;
         }
         stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
         Ok(stats)
+    }
+}
+
+/// One lockstep round over `procs` — the single machine-model round body
+/// shared by [`Network::run`] and [`StepNet::step`], so blocking and
+/// stepped execution enforce the identical model by construction: send
+/// collection (self/target/port checks in rank order, accounting),
+/// expectation cross-check and delivery in rank order. `msgs` (when
+/// given) receives the round's executed `(from, to, bytes)` triples.
+#[allow(clippy::too_many_arguments)]
+fn lockstep_round<T: Clone, P: RankProc<T>>(
+    procs: &mut [P],
+    round: usize,
+    inbox: &mut [Option<(usize, Vec<T>)>],
+    stats: &mut RunStats,
+    rank_bytes: &mut [usize],
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    mut msgs: Option<&mut Vec<(usize, usize, usize)>>,
+) -> Result<(), SimError> {
+    let p = procs.len();
+    let mut round_time = 0.0f64;
+    let mut any = false;
+
+    // Collect sends.
+    for r in 0..p {
+        if let Some(msg) = procs[r].send(round) {
+            if msg.to == r {
+                return Err(SimError::SelfMessage { round, rank: r });
+            }
+            if msg.to >= p {
+                return Err(SimError::BadTarget { round, rank: r, to: msg.to });
+            }
+            if let Some((first, _)) = &inbox[msg.to] {
+                return Err(SimError::ReceivePortBusy {
+                    round,
+                    to: msg.to,
+                    first_from: *first,
+                    second_from: r,
+                });
+            }
+            let bytes = msg.data.len() * elem_bytes;
+            stats.messages += 1;
+            stats.bytes += bytes;
+            rank_bytes[r] += bytes;
+            rank_bytes[msg.to] += bytes;
+            round_time = round_time.max(cost.msg_time(r, msg.to, bytes));
+            any = true;
+            if let Some(out) = msgs.as_mut() {
+                out.push((r, msg.to, bytes));
+            }
+            inbox[msg.to] = Some((r, msg.data));
+        }
+    }
+
+    // Cross-check expectations, then deliver.
+    for (to, slot) in inbox.iter_mut().enumerate() {
+        let expected = procs[to].expects(round);
+        match (slot.take(), expected) {
+            (Some((from, data)), Some(exp)) if exp == from => {
+                procs[to].recv(round, from, data);
+            }
+            (Some((from, _)), exp) => {
+                return Err(SimError::UnexpectedMessage { round, to, from, expected: exp });
+            }
+            (None, Some(exp)) => {
+                return Err(SimError::MissingMessage { round, rank: to, expected_from: exp });
+            }
+            (None, None) => {}
+        }
+    }
+
+    if any {
+        stats.active_rounds += 1;
+        stats.time += round_time;
+    }
+    Ok(())
+}
+
+/// A resumable, round-steppable driver over one collective's rank state
+/// machines — the per-round counterpart of [`Network::run`], with the
+/// identical machine-model enforcement, check order and accounting, so a
+/// collective stepped round by round produces bit-identical results to a
+/// blocking run. This is what lets the traffic plane
+/// ([`crate::comm::traffic::TrafficEngine`]) interleave the rounds of
+/// many concurrent collectives under one cross-operation port ledger.
+///
+/// Two extra affordances over `Network::run`:
+///
+/// * [`StepNet::expected_ports`] reports the `(from, to)` pairs the next
+///   round will use *without* driving the state machines (derived from
+///   the receivers' [`RankProc::expects`] — in schedule-driven
+///   collectives both endpoints know each round in advance, so
+///   expectations predict the sends exactly; the lockstep cross-check in
+///   [`StepNet::step`] still verifies this on every executed round).
+/// * [`StepNet::step`] optionally reports the round's executed
+///   `(from, to, bytes)` messages, feeding the traffic plane's port
+///   trace and aggregate cost accounting.
+pub struct StepNet<T, P> {
+    procs: Vec<P>,
+    rounds: usize,
+    next: usize,
+    stats: RunStats,
+    rank_bytes: Vec<usize>,
+    inbox: Vec<Option<(usize, Vec<T>)>>,
+}
+
+impl<T: Clone, P: RankProc<T>> StepNet<T, P> {
+    pub fn new(procs: Vec<P>) -> Self {
+        let p = procs.len();
+        assert!(p > 0);
+        let rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
+        StepNet {
+            procs,
+            rounds,
+            next: 0,
+            stats: RunStats { rounds, ..Default::default() },
+            rank_bytes: vec![0usize; p],
+            inbox: (0..p).map(|_| None).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.procs.len()
+    }
+
+    /// Total rounds (max over ranks of [`RankProc::rounds`]).
+    #[inline]
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// The round the next [`StepNet::step`] will execute.
+    #[inline]
+    pub fn next_round(&self) -> usize {
+        self.next
+    }
+
+    #[inline]
+    pub fn is_done(&self) -> bool {
+        self.next >= self.rounds
+    }
+
+    /// The `(from, to)` pairs the next round is expected to use, from the
+    /// receivers' schedules. No-op when the run is complete.
+    pub fn expected_ports(&self, out: &mut Vec<(usize, usize)>) {
+        if self.is_done() {
+            return;
+        }
+        for (to, pr) in self.procs.iter().enumerate() {
+            if let Some(from) = pr.expects(self.next) {
+                out.push((from, to));
+            }
+        }
+    }
+
+    /// Execute the next round — the shared [`lockstep_round`] body, so a
+    /// stepped run enforces exactly what [`Network::run`] enforces. On
+    /// success, `msgs` (when given) receives the round's
+    /// `(from, to, bytes)` triples; on error the run is poisoned exactly
+    /// where a blocking run would have aborted.
+    pub fn step(
+        &mut self,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        msgs: Option<&mut Vec<(usize, usize, usize)>>,
+    ) -> Result<(), SimError> {
+        assert!(!self.is_done(), "step called on a completed run");
+        let round = self.next;
+        lockstep_round(
+            &mut self.procs,
+            round,
+            &mut self.inbox,
+            &mut self.stats,
+            &mut self.rank_bytes,
+            elem_bytes,
+            cost,
+            msgs,
+        )?;
+        self.next = round + 1;
+        Ok(())
+    }
+
+    /// Final statistics and state machines; call once every round has
+    /// been stepped.
+    pub fn finish(mut self) -> (RunStats, Vec<P>) {
+        assert!(self.is_done(), "finish called with rounds remaining");
+        self.stats.max_rank_bytes = self.rank_bytes.iter().copied().max().unwrap_or(0);
+        (self.stats, self.procs)
     }
 }
 
@@ -309,5 +446,54 @@ mod tests {
             net.run(&mut procs, 1, &UnitCost).unwrap_err(),
             SimError::SelfMessage { round: 0, rank: 0 }
         );
+    }
+
+    #[test]
+    fn stepnet_matches_blocking_run() {
+        let p = 5;
+        let mk = || -> Vec<RingShift> {
+            (0..p)
+                .map(|r| RingShift { rank: r, p, rounds: p - 1, val: vec![r as u32], seen: vec![] })
+                .collect()
+        };
+        let mut blocking = mk();
+        let bstats = Network::new(p).run(&mut blocking, 4, &UnitCost).unwrap();
+
+        let mut step = StepNet::new(mk());
+        let mut ports = Vec::new();
+        let mut msgs = Vec::new();
+        while !step.is_done() {
+            ports.clear();
+            step.expected_ports(&mut ports);
+            assert_eq!(ports.len(), p, "every rank receives every round");
+            msgs.clear();
+            step.step(4, &UnitCost, Some(&mut msgs)).unwrap();
+            assert_eq!(msgs.len(), p);
+            // Expectations predicted the executed sends exactly.
+            let mut want: Vec<(usize, usize)> = msgs.iter().map(|&(f, t, _)| (f, t)).collect();
+            want.sort_unstable();
+            ports.sort_unstable();
+            assert_eq!(ports, want);
+        }
+        let (sstats, sprocs) = step.finish();
+        assert_eq!(sstats.rounds, bstats.rounds);
+        assert_eq!(sstats.active_rounds, bstats.active_rounds);
+        assert_eq!(sstats.messages, bstats.messages);
+        assert_eq!(sstats.bytes, bstats.bytes);
+        assert_eq!(sstats.max_rank_bytes, bstats.max_rank_bytes);
+        assert!((sstats.time - bstats.time).abs() < 1e-12);
+        for (a, b) in blocking.iter().zip(&sprocs) {
+            assert_eq!(a.val, b.val);
+            assert_eq!(a.seen, b.seen);
+        }
+    }
+
+    #[test]
+    fn stepnet_reports_violations_like_blocking() {
+        let mut blocking: Vec<Collider> = (0..3).map(|r| Collider { rank: r }).collect();
+        let berr = Network::new(3).run(&mut blocking, 1, &UnitCost).unwrap_err();
+        let mut step = StepNet::new((0..3).map(|r| Collider { rank: r }).collect::<Vec<_>>());
+        let serr = step.step(1, &UnitCost, None).unwrap_err();
+        assert_eq!(berr, serr);
     }
 }

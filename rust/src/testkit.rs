@@ -5,7 +5,48 @@
 //! Provides a deterministic xorshift PRNG and a `forall` driver that, on
 //! failure, retries with "shrunk" (halved) integer inputs to report a
 //! small counterexample. Deterministic by default (fixed seed) so CI is
-//! reproducible; set `TESTKIT_SEED` to explore.
+//! reproducible; set `TESTKIT_SEED` to explore — [`effective_seed`]
+//! resolves the active seed, every `forall` failure prints it, and
+//! [`install_seed_reporter`] appends it to arbitrary panic reports so
+//! seed-matrix CI failures reproduce from the log alone.
+//!
+//! Also home to the seeded multi-collective workload generator
+//! ([`TrafficMix`] / [`traffic_mix`]) and its batched/blocking adapters
+//! ([`submit_mix_op`], [`run_mix_blocking`], [`MixOutcome`]) shared by
+//! the differential traffic suite, the property tests and
+//! `benches/traffic_mix.rs`.
+
+/// The fixed default seed (used when `TESTKIT_SEED` is unset).
+pub const DEFAULT_SEED: u64 = 0x9E3779B97F4A7C15;
+
+/// The seed every `Rng::from_env` draw resolves to: `TESTKIT_SEED` if
+/// set and parseable, else [`DEFAULT_SEED`]. Exposed so failure reports
+/// can print the value that reproduces the run.
+pub fn effective_seed() -> u64 {
+    std::env::var("TESTKIT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+/// Install a process-wide panic hook that appends the effective
+/// `TESTKIT_SEED` to every panic report, so a CI seed-matrix failure is
+/// reproducible from the log alone — call once at the top of any
+/// seed-driven integration test (idempotent; chains to the previous
+/// hook, so the original message is preserved).
+pub fn install_seed_reporter() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            prev(info);
+            eprintln!(
+                "note: effective TESTKIT_SEED = {} (set TESTKIT_SEED to reproduce)",
+                effective_seed()
+            );
+        }));
+    });
+}
 
 /// xorshift64* PRNG — deterministic, seedable, no dependencies.
 #[derive(Debug, Clone)]
@@ -18,11 +59,7 @@ impl Rng {
 
     /// Seed from `TESTKIT_SEED` or the fixed default.
     pub fn from_env() -> Self {
-        let seed = std::env::var("TESTKIT_SEED")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0x9E3779B97F4A7C15);
-        Rng::new(seed)
+        Rng::new(effective_seed())
     }
 
     #[inline]
@@ -70,7 +107,10 @@ where
     for i in 0..cases {
         let case = generate(&mut rng);
         if let Err(msg) = prop(&case) {
-            panic!("property failed on case #{i}: {case:?}\n  {msg}");
+            panic!(
+                "property failed on case #{i} (TESTKIT_SEED = {}): {case:?}\n  {msg}",
+                effective_seed()
+            );
         }
     }
 }
@@ -104,7 +144,8 @@ where
                 }
             }
             panic!(
-                "property failed on case #{i}\n  original: {case:?}\n  shrunk:   {best:?}\n  {best_msg}"
+                "property failed on case #{i} (TESTKIT_SEED = {})\n  original: {case:?}\n  shrunk:   {best:?}\n  {best_msg}",
+                effective_seed()
             );
         }
     }
@@ -162,5 +203,331 @@ mod tests {
             |&n| if n < 10 { Ok(()) } else { Err(format!("n={n}")) },
             |&n| if n > 1 { vec![n / 2] } else { vec![] },
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// TrafficMix: the seeded multi-collective workload generator
+// ---------------------------------------------------------------------
+
+use std::sync::Arc;
+
+use crate::collectives::SumOp;
+use crate::comm::{
+    Algo, AllgathervReq, AllreduceReq, BcastReq, CommError, Communicator, IallgathervReq,
+    IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Kind, Outcome, Pending, ReduceReq,
+    ReduceScatterReq, TrafficEngine,
+};
+
+/// One operation of a synthetic traffic mix: kind × window × root ×
+/// size × block count × algorithm, with a private `data_seed` from
+/// which the payloads are derived deterministically — so the batched
+/// and the sequential side of a differential test (and the bench)
+/// construct bit-identical inputs without sharing buffers.
+#[derive(Debug, Clone)]
+pub struct MixOp {
+    pub kind: Kind,
+    /// `(base, len)` machine-rank window; `None` = the whole machine.
+    pub window: Option<(usize, usize)>,
+    /// Window-local root (rooted collectives; ignored by the rest).
+    pub root: usize,
+    /// Payload scale in elements (total across roots/chunks for the
+    /// all-collectives).
+    pub m: usize,
+    /// Explicit block count; `None` = the library's §3 rule (which is
+    /// also what lets `Algo::Auto` fall back to the binomial tree for
+    /// small rooted payloads).
+    pub blocks: Option<usize>,
+    pub algo: Algo,
+    pub data_seed: u64,
+}
+
+impl MixOp {
+    /// Ranks this op runs over on a `p`-rank machine.
+    pub fn ranks(&self, p: usize) -> usize {
+        self.window.map(|(_, len)| len).unwrap_or(p)
+    }
+
+    fn data_rng(&self) -> Rng {
+        Rng::new(self.data_seed)
+    }
+
+    /// The broadcast payload (`m` elements).
+    pub fn bcast_data(&self) -> Vec<i64> {
+        self.data_rng().vec_i64(self.m, -999, 999)
+    }
+
+    /// Equal-length per-rank contributions (reduce / allreduce).
+    pub fn equal_inputs(&self, ranks: usize) -> Vec<Vec<i64>> {
+        let mut rng = self.data_rng();
+        (0..ranks).map(|_| rng.vec_i64(self.m, -999, 999)).collect()
+    }
+
+    /// Irregular per-rank counts summing to roughly `m` (allgatherv) —
+    /// zeros, spikes and ordinary values, like the paper's irregular
+    /// problems.
+    pub fn irregular_counts(&self, ranks: usize) -> Vec<usize> {
+        let mut rng = self.data_rng();
+        let cap = (2 * self.m / ranks.max(1)).max(1);
+        (0..ranks)
+            .map(|_| match rng.range(0, 3) {
+                0 => 0,
+                1 => rng.range(1, cap),
+                _ => rng.range(1, 2 * cap),
+            })
+            .collect()
+    }
+
+    /// The allgatherv inputs matching [`MixOp::irregular_counts`].
+    pub fn allgatherv_inputs(&self, ranks: usize) -> Vec<Vec<i64>> {
+        let counts = self.irregular_counts(ranks);
+        let mut rng = self.data_rng();
+        for _ in 0..ranks {
+            rng.next_u64(); // decorrelate from the counts draw
+        }
+        counts.iter().map(|&c| rng.vec_i64(c, -999, 999)).collect()
+    }
+
+    /// Reduce-scatter `(counts, inputs)`: per-destination counts (zeros
+    /// allowed) and one full-length contribution per rank.
+    pub fn reduce_scatter_shape(&self, ranks: usize) -> (Vec<usize>, Vec<Vec<i64>>) {
+        let mut rng = self.data_rng();
+        let cap = (2 * self.m / ranks.max(1)).max(1);
+        let counts: Vec<usize> = (0..ranks).map(|_| rng.range(0, cap)).collect();
+        let total: usize = counts.iter().sum();
+        let inputs: Vec<Vec<i64>> = (0..ranks).map(|_| rng.vec_i64(total, -999, 999)).collect();
+        (counts, inputs)
+    }
+}
+
+/// A seeded multi-collective workload: `ops` in submission (arrival)
+/// order over a `p`-rank machine. Shared by the differential traffic
+/// suite, the property tests and `benches/traffic_mix.rs`.
+#[derive(Debug, Clone)]
+pub struct TrafficMix {
+    pub p: usize,
+    pub ops: Vec<MixOp>,
+}
+
+/// Knobs of [`traffic_mix`].
+#[derive(Debug, Clone)]
+pub struct MixOptions {
+    /// Max payload scale per op (elements).
+    pub max_m: usize,
+    /// Max explicit block count.
+    pub max_blocks: usize,
+    /// Percent of ops restricted to a random sub-window (when `p > 1`).
+    pub window_pct: u64,
+    /// Percent of ops submitted with `Algo::Auto` (and no block
+    /// override), exercising the small-payload binomial fallback.
+    pub auto_pct: u64,
+}
+
+impl Default for MixOptions {
+    fn default() -> Self {
+        MixOptions { max_m: 48, max_blocks: 8, window_pct: 40, auto_pct: 25 }
+    }
+}
+
+/// Draw a traffic mix: `n_ops` operations over all five collective
+/// kinds, random roots/sizes/windows, in random arrival order.
+/// Deterministic per `rng` state — `Rng::from_env` honours
+/// `TESTKIT_SEED`.
+pub fn traffic_mix(rng: &mut Rng, p: usize, n_ops: usize, opts: &MixOptions) -> TrafficMix {
+    let ops = (0..n_ops)
+        .map(|_| {
+            let window = if p > 1 && rng.chance(opts.window_pct, 100) {
+                let len = rng.range(1, p);
+                Some((rng.range(0, p - len), len))
+            } else {
+                None
+            };
+            let ranks = window.map(|(_, len)| len).unwrap_or(p);
+            let kind = match rng.range(0, 4) {
+                0 => Kind::Bcast,
+                1 => Kind::Reduce,
+                2 => Kind::Allgatherv,
+                3 => Kind::ReduceScatter,
+                _ => Kind::Allreduce,
+            };
+            let auto = rng.chance(opts.auto_pct, 100);
+            MixOp {
+                kind,
+                window,
+                root: rng.range(0, ranks - 1),
+                m: rng.range(0, opts.max_m),
+                blocks: if auto { None } else { Some(rng.range(1, opts.max_blocks)) },
+                algo: if auto { Algo::Auto } else { Algo::Circulant },
+                data_seed: rng.next_u64(),
+            }
+        })
+        .collect();
+    TrafficMix { p, ops }
+}
+
+/// Uniform, comparable result of one mix op — buffers flattened to
+/// rank-major `Vec<Vec<i64>>`, plus everything the differential suite
+/// compares bit-for-bit (completion, resolved algorithm, rounds, the
+/// full statistics; errors as their display string, which carries the
+/// error kind and round).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MixOutcome {
+    Done {
+        buffers: Vec<Vec<i64>>,
+        complete: bool,
+        algo: Algo,
+        rounds: usize,
+        active_rounds: usize,
+        messages: usize,
+        bytes: usize,
+        max_rank_bytes: usize,
+        time: f64,
+    },
+    Failed(String),
+}
+
+fn done<B>(out: Outcome<B>, flatten: impl FnOnce(B) -> Vec<Vec<i64>>) -> MixOutcome {
+    MixOutcome::Done {
+        complete: out.complete,
+        algo: out.algo,
+        rounds: out.rounds,
+        active_rounds: out.stats.active_rounds,
+        messages: out.stats.messages,
+        bytes: out.stats.bytes,
+        max_rank_bytes: out.stats.max_rank_bytes,
+        time: out.stats.time,
+        buffers: flatten(out.buffers),
+    }
+}
+
+fn mix_outcome<B>(
+    res: Result<Outcome<B>, CommError>,
+    flatten: impl FnOnce(B) -> Vec<Vec<i64>>,
+) -> MixOutcome {
+    match res {
+        Ok(out) => done(out, flatten),
+        Err(e) => MixOutcome::Failed(format!("{e}")),
+    }
+}
+
+fn flatten_rows(rows_per_rank: Vec<Vec<Vec<i64>>>) -> Vec<Vec<i64>> {
+    rows_per_rank.into_iter().map(|rows| rows.into_iter().flatten().collect()).collect()
+}
+
+/// The typed handle of a submitted mix op (one variant per kind).
+pub enum MixPending {
+    Bcast(Pending<Vec<Vec<i64>>>),
+    Reduce(Pending<Vec<i64>>),
+    Allgatherv(Pending<Vec<Vec<Vec<i64>>>>),
+    ReduceScatter(Pending<Vec<Vec<i64>>>),
+    Allreduce(Pending<Vec<Vec<i64>>>),
+}
+
+impl MixPending {
+    /// Take the batched result (after `TrafficEngine::run`).
+    pub fn take(self) -> MixOutcome {
+        match self {
+            MixPending::Bcast(h) => mix_outcome(h.wait(), |b| b),
+            MixPending::Reduce(h) => mix_outcome(h.wait(), |b| vec![b]),
+            MixPending::Allgatherv(h) => mix_outcome(h.wait(), flatten_rows),
+            MixPending::ReduceScatter(h) => mix_outcome(h.wait(), |b| b),
+            MixPending::Allreduce(h) => mix_outcome(h.wait(), |b| b),
+        }
+    }
+}
+
+/// Submit one mix op into a batch (payloads derived from the op's
+/// `data_seed`). Returns the typed handle; submission errors surface as
+/// the `Err` they would be on the blocking path.
+pub fn submit_mix_op(
+    traffic: &mut TrafficEngine<'_>,
+    op: &MixOp,
+) -> Result<MixPending, CommError> {
+    let p = traffic.comm().p();
+    let ranks = op.ranks(p);
+    macro_rules! opts {
+        ($req:expr) => {{
+            let mut req = $req.algo(op.algo);
+            if let Some(n) = op.blocks {
+                req = req.blocks(n);
+            }
+            if let Some((base, len)) = op.window {
+                req = req.window(base, len);
+            }
+            req
+        }};
+    }
+    Ok(match op.kind {
+        Kind::Bcast => MixPending::Bcast(
+            traffic.submit(opts!(IbcastReq::new(op.root, op.bcast_data())))?,
+        ),
+        Kind::Reduce => MixPending::Reduce(traffic.submit(opts!(IreduceReq::new(
+            op.root,
+            op.equal_inputs(ranks),
+            Arc::new(SumOp)
+        )))?),
+        Kind::Allgatherv => MixPending::Allgatherv(
+            traffic.submit(opts!(IallgathervReq::new(op.allgatherv_inputs(ranks))))?,
+        ),
+        Kind::ReduceScatter => {
+            let (counts, inputs) = op.reduce_scatter_shape(ranks);
+            MixPending::ReduceScatter(traffic.submit(opts!(IreduceScatterReq::new(
+                inputs,
+                counts,
+                Arc::new(SumOp)
+            )))?)
+        }
+        Kind::Allreduce => MixPending::Allreduce(traffic.submit(opts!(IallreduceReq::new(
+            op.equal_inputs(ranks),
+            Arc::new(SumOp)
+        )))?),
+    })
+}
+
+/// Run one mix op through the *blocking* API on `comm` (which must have
+/// `p == op.ranks(machine_p)` — i.e. a fresh communicator of the op's
+/// window size): the sequential side of the differential comparison.
+pub fn run_mix_blocking(comm: &Communicator, op: &MixOp) -> MixOutcome {
+    let ranks = comm.p();
+    macro_rules! opts {
+        ($req:expr) => {{
+            let mut req = $req.algo(op.algo);
+            if let Some(n) = op.blocks {
+                req = req.blocks(n);
+            }
+            req
+        }};
+    }
+    match op.kind {
+        Kind::Bcast => {
+            let data = op.bcast_data();
+            mix_outcome(comm.bcast(opts!(BcastReq::new(op.root, &data))), |b| b)
+        }
+        Kind::Reduce => {
+            let inputs = op.equal_inputs(ranks);
+            mix_outcome(
+                comm.reduce(opts!(ReduceReq::new(op.root, &inputs, Arc::new(SumOp)))),
+                |b| vec![b],
+            )
+        }
+        Kind::Allgatherv => {
+            let inputs = op.allgatherv_inputs(ranks);
+            mix_outcome(comm.allgatherv(opts!(AllgathervReq::new(&inputs))), flatten_rows)
+        }
+        Kind::ReduceScatter => {
+            let (counts, inputs) = op.reduce_scatter_shape(ranks);
+            mix_outcome(
+                comm.reduce_scatter(opts!(ReduceScatterReq::new(
+                    &inputs,
+                    &counts,
+                    Arc::new(SumOp)
+                ))),
+                |b| b,
+            )
+        }
+        Kind::Allreduce => {
+            let inputs = op.equal_inputs(ranks);
+            mix_outcome(comm.allreduce(opts!(AllreduceReq::new(&inputs, Arc::new(SumOp)))), |b| b)
+        }
     }
 }

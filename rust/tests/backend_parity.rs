@@ -15,7 +15,7 @@ use circulant_bcast::comm::{
     ReduceReq, ReduceScatterReq,
 };
 use circulant_bcast::sim::{RunStats, UnitCost};
-use circulant_bcast::testkit::Rng;
+use circulant_bcast::testkit::{install_seed_reporter, Rng};
 
 const BACKENDS: [BackendKind; 3] =
     [BackendKind::Lockstep, BackendKind::Threaded, BackendKind::Engine];
@@ -194,6 +194,7 @@ fn check_case(c: &Case) {
 
 #[test]
 fn seeded_random_grid_all_backends_agree() {
+    install_seed_reporter();
     let mut rng = Rng::from_env();
     for _ in 0..40 {
         let c = gen_case(&mut rng);
@@ -244,6 +245,7 @@ impl Drop for ThreadEnvGuard {
 
 #[test]
 fn backends_agree_at_every_thread_count() {
+    install_seed_reporter();
     // The schedule plane builds in parallel (CBCAST_THREADS) and the
     // engine shards large delivery rounds across the same thread count;
     // none of that may be observable: at thread counts 1, 2 and 8 every

@@ -3,10 +3,18 @@
 //! the simulator doubles as a schedule validator, and these tests prove
 //! the validator actually fires.
 
+use std::sync::Arc;
+
 use circulant_bcast::collectives::bcast::BcastProc;
 use circulant_bcast::collectives::common::{BlockGeometry, World};
-use circulant_bcast::sim::network::{Msg, Network, RankProc, SimError};
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{
+    Algo, BcastReq, CommBuilder, CommError, IbcastReq, IreduceReq, Outcome, ReduceReq,
+};
+use circulant_bcast::schedule::verify_one_ported_trace;
+use circulant_bcast::sim::network::{Msg, Network, RankProc, RunStats, SimError};
 use circulant_bcast::sim::UnitCost;
+use circulant_bcast::testkit::install_seed_reporter;
 
 /// Wraps a proc and tampers with its behaviour.
 struct Tamper<P> {
@@ -175,4 +183,145 @@ fn clean_run_has_no_failures() {
     let mut t = wrap(procs(p, 36, 4), |_| (None, false, None));
     let stats = Network::new(p).run(&mut t, 4, &UnitCost).unwrap();
     assert_eq!(stats.rounds, 4 - 1 + 4);
+}
+
+// ---------------------------------------------------------------------
+// Traffic plane: a violation injected mid-batch must surface in exactly
+// the offending op's Outcome (same error, same local round as its
+// sequential run) while co-scheduled ops complete unaffected.
+// ---------------------------------------------------------------------
+
+/// Outcome assembly for tampered bcast procs submitted through
+/// `TrafficEngine::submit_procs` (only reached if the op completes —
+/// i.e. by the untampered control).
+fn tamper_assemble(
+    p: usize,
+    m: usize,
+) -> impl FnOnce(RunStats, Vec<Tamper<BcastProc<u32>>>) -> Result<Outcome<Vec<Vec<u32>>>, CommError>
+       + Send
+       + 'static {
+    move |stats, procs| {
+        let buffers: Vec<Vec<u32>> =
+            procs.into_iter().map(|t| t.inner.into_buffer()).collect();
+        let complete = buffers.len() == p && buffers.iter().all(|b| b.len() == m);
+        Ok(Outcome {
+            rounds: stats.rounds,
+            stats,
+            buffers,
+            algo: Algo::Circulant,
+            complete,
+            machine_span: None,
+        })
+    }
+}
+
+/// The shared scenario: a batch of [healthy bcast, tampered bcast
+/// (tamper chosen by `tamper`), healthy reduce]. Asserts the tampered
+/// op fails with exactly `expected` (its solo lockstep error) and both
+/// healthy ops match their solo runs bit for bit.
+fn check_mid_batch_isolation(
+    tamper: impl Fn(usize) -> (Option<usize>, bool, Option<usize>) + Copy,
+) {
+    install_seed_reporter();
+    let p = 9usize;
+    let (m, n) = (36usize, 4usize);
+
+    // Sequential truth: the tampered op alone on the lockstep Network.
+    let mut solo = wrap(procs(p, m, n), tamper);
+    let expected = Network::new(p).run(&mut solo, 4, &UnitCost).unwrap_err();
+
+    let comm = CommBuilder::new(p).cost_model(UnitCost).build();
+    let data: Vec<i64> = (0..50).map(|i| i * 3 - 11).collect();
+    let inputs: Vec<Vec<i64>> =
+        (0..p).map(|r| (0..20).map(|i| ((r + 1) * (i + 3)) as i64 % 71).collect()).collect();
+
+    for threads in [1usize, 4] {
+        let mut traffic = comm.traffic().threads(threads).record_trace(true);
+        let healthy_bcast = traffic
+            .submit(IbcastReq::new(2, data.clone()).algo(Algo::Circulant).blocks(3))
+            .unwrap();
+        let tampered = traffic
+            .submit_procs(None, wrap(procs(p, m, n), tamper), 4, tamper_assemble(p, m))
+            .unwrap();
+        let healthy_reduce = traffic
+            .submit(
+                IreduceReq::new(0, inputs.clone(), Arc::new(SumOp)).algo(Algo::Circulant).blocks(2),
+            )
+            .unwrap();
+        let report = traffic.run().unwrap();
+
+        // The executed trace still respects the cross-op discipline
+        // (the erroring round's messages were discarded, mirroring the
+        // lockstep mid-round abort).
+        verify_one_ported_trace(p, report.trace.as_ref().unwrap()).unwrap();
+
+        // Offending op: exactly the sequential error (kind AND round).
+        match tampered.wait() {
+            Err(CommError::Sim(e)) => {
+                assert_eq!(e, expected, "threads={threads}: batched error must match solo")
+            }
+            other => panic!("tampered op must fail with the solo SimError, got {other:?}"),
+        }
+        assert_eq!(report.failed(), 1, "threads={threads}");
+        assert!(report.ops[0].ok && !report.ops[1].ok && report.ops[2].ok);
+
+        // Co-scheduled ops: unaffected, bit-identical to solo runs.
+        let got_b = healthy_bcast.wait().unwrap();
+        let solo_b =
+            comm.bcast(BcastReq::new(2, &data).algo(Algo::Circulant).blocks(3)).unwrap();
+        assert_eq!(got_b.buffers, solo_b.buffers, "threads={threads}");
+        assert_eq!(got_b.stats.messages, solo_b.stats.messages);
+        assert_eq!(got_b.stats.bytes, solo_b.stats.bytes);
+        assert_eq!(got_b.rounds, solo_b.rounds);
+        assert!(got_b.all_received());
+
+        let got_r = healthy_reduce.wait().unwrap();
+        let solo_r = comm
+            .reduce(ReduceReq::new(0, &inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(2))
+            .unwrap();
+        assert_eq!(got_r.buffers, solo_r.buffers, "threads={threads}");
+        assert_eq!(got_r.stats.messages, solo_r.stats.messages);
+        assert_eq!(got_r.rounds, solo_r.rounds);
+    }
+}
+
+#[test]
+fn traffic_redirected_message_isolated_to_offending_op() {
+    // Rank 1 redirects its round-0 message to rank 5.
+    check_mid_batch_isolation(|r| (if r == 1 { Some(5) } else { None }, false, None));
+}
+
+#[test]
+fn traffic_muted_sender_isolated_to_offending_op() {
+    // Rank 1 never sends: a receiver downstream starves.
+    check_mid_batch_isolation(|r| (None, r == 1, None));
+}
+
+#[test]
+fn traffic_unsolicited_sender_isolated_to_offending_op() {
+    // Rank 5 sends an unsolicited round-0 message to rank 7.
+    check_mid_batch_isolation(|r| (None, false, if r == 5 { Some(7) } else { None }));
+}
+
+#[test]
+fn traffic_untampered_custom_procs_complete() {
+    // Control: the same proc set, untampered, submitted through the
+    // custom-op escape hatch, completes with the full payload.
+    install_seed_reporter();
+    let p = 9usize;
+    let (m, n) = (36usize, 4usize);
+    let comm = CommBuilder::new(p).cost_model(UnitCost).build();
+    let mut traffic = comm.traffic().threads(2);
+    let clean = wrap(procs(p, m, n), |_| (None, false, None));
+    let handle = traffic.submit_procs(None, clean, 4, tamper_assemble(p, m)).unwrap();
+    let report = traffic.run().unwrap();
+    let out = handle.wait().unwrap();
+    assert!(out.all_received());
+    assert_eq!(out.rounds, n - 1 + 4);
+    let want: Vec<u32> = (0..m as u32).collect();
+    for buf in &out.buffers {
+        assert_eq!(buf, &want);
+    }
+    assert_eq!(report.failed(), 0);
+    assert_eq!(out.machine_span, Some((0, out.rounds - 1)));
 }

@@ -14,9 +14,11 @@ use circulant_bcast::comm::{
     Algo, AllgathervReq, AllreduceReq, BackendKind, BcastReq, CommBuilder, Communicator,
     ReduceReq, ReduceScatterReq,
 };
-use circulant_bcast::schedule::{ceil_log2, ScheduleCache};
+use circulant_bcast::schedule::{ceil_log2, verify_one_ported_trace, ScheduleCache};
 use circulant_bcast::sim::UnitCost;
-use circulant_bcast::testkit::{forall_shrink, Rng};
+use circulant_bcast::testkit::{
+    forall_shrink, submit_mix_op, traffic_mix, MixOptions, MixOutcome, Rng, TrafficMix,
+};
 
 #[derive(Debug, Clone)]
 struct Case {
@@ -267,6 +269,114 @@ fn prop_allreduce_random() {
             Ok(())
         },
         shrink_case,
+    );
+}
+
+/// Run a mix as one batch on a fresh machine; return (per-op outcomes,
+/// verified machine-round trace length).
+fn run_mix_batched(mix: &TrafficMix, threads: usize) -> Result<(Vec<MixOutcome>, usize), String> {
+    let comm = CommBuilder::new(mix.p).cost_model(UnitCost).build();
+    let mut traffic = comm.traffic().threads(threads).record_trace(true);
+    let mut handles = Vec::with_capacity(mix.ops.len());
+    for op in &mix.ops {
+        handles.push(submit_mix_op(&mut traffic, op).map_err(|e| format!("submit: {e}"))?);
+    }
+    let report = traffic.run().map_err(|e| format!("run: {e}"))?;
+    let trace = report.trace.as_ref().expect("trace recording on");
+    verify_one_ported_trace(mix.p, trace)
+        .map_err(|v| format!("one-ported trace violated: {v:?}"))?;
+    Ok((handles.into_iter().map(|h| h.take()).collect(), trace.len()))
+}
+
+#[test]
+fn prop_traffic_respects_cross_op_port_discipline() {
+    // The tentpole invariant as a property: whatever mix of kinds,
+    // windows, sizes and arrival orders is thrown at the batch
+    // scheduler, no machine round of the executed trace has any rank
+    // sending twice or receiving twice — across ALL co-scheduled ops —
+    // and the trace spans exactly the reported machine rounds.
+    forall_shrink(
+        40,
+        |rng| {
+            let p = rng.range(1, 28);
+            let mix = traffic_mix(rng, p, rng.range(1, 6), &MixOptions::default());
+            (mix, [1usize, 2, 8][rng.range(0, 2)])
+        },
+        |(mix, threads)| {
+            let (outcomes, trace_rounds) = run_mix_batched(mix, *threads)?;
+            if outcomes.iter().any(|o| matches!(o, MixOutcome::Failed(_))) {
+                return Err("healthy mix op failed".into());
+            }
+            if trace_rounds == 0 && mix.ops.iter().any(|op| op.ranks(mix.p) > 1) {
+                return Err("multi-rank ops executed in zero machine rounds".into());
+            }
+            Ok(())
+        },
+        |(mix, threads)| {
+            let mut out = Vec::new();
+            if mix.ops.len() > 1 {
+                for i in 0..mix.ops.len() {
+                    let mut ops = mix.ops.clone();
+                    ops.remove(i);
+                    out.push((TrafficMix { p: mix.p, ops }, *threads));
+                }
+            }
+            if *threads != 1 {
+                out.push((mix.clone(), 1));
+            }
+            out
+        },
+    );
+}
+
+#[test]
+fn prop_arrival_order_permutation_invariance() {
+    // Same mix, shuffled submission order ⇒ same per-op payloads and
+    // statistics (each op's outcome is its own; only machine spans may
+    // move with the schedule).
+    forall_shrink(
+        25,
+        |rng| {
+            let p = rng.range(2, 24);
+            let n_ops = rng.range(2, 6);
+            let mix = traffic_mix(rng, p, n_ops, &MixOptions::default());
+            // A random permutation of 0..n_ops (Fisher–Yates).
+            let mut perm: Vec<usize> = (0..mix.ops.len()).collect();
+            for i in (1..perm.len()).rev() {
+                perm.swap(i, rng.range(0, i));
+            }
+            (mix, perm)
+        },
+        |(mix, perm)| {
+            let (base, _) = run_mix_batched(mix, 2)?;
+            let shuffled = TrafficMix {
+                p: mix.p,
+                ops: perm.iter().map(|&i| mix.ops[i].clone()).collect(),
+            };
+            let (permuted, _) = run_mix_batched(&shuffled, 2)?;
+            for (pos, &orig) in perm.iter().enumerate() {
+                if permuted[pos] != base[orig] {
+                    return Err(format!(
+                        "op {orig} changed under permutation {perm:?}:\n  base:     {:?}\n  \
+                         permuted: {:?}",
+                        base[orig], permuted[pos]
+                    ));
+                }
+            }
+            Ok(())
+        },
+        |(mix, perm)| {
+            let mut out = Vec::new();
+            if mix.ops.len() > 2 {
+                // Drop the last op (keeping the permutation valid by
+                // dropping its index too).
+                let keep = mix.ops.len() - 1;
+                let ops: Vec<_> = mix.ops[..keep].to_vec();
+                let perm: Vec<usize> = perm.iter().copied().filter(|&i| i < keep).collect();
+                out.push((TrafficMix { p: mix.p, ops }, perm));
+            }
+            out
+        },
     );
 }
 

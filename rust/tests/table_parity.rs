@@ -14,7 +14,7 @@ use std::sync::Arc;
 use circulant_bcast::schedule::{
     recv_schedule, send_schedule, Schedule, ScheduleCache, ScheduleTable, Skips,
 };
-use circulant_bcast::testkit::Rng;
+use circulant_bcast::testkit::{install_seed_reporter, Rng};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 
@@ -59,6 +59,7 @@ fn gen_p(rng: &mut Rng) -> usize {
 
 #[test]
 fn seeded_random_grid_matches_serial_cores() {
+    install_seed_reporter();
     let mut rng = Rng::from_env();
     for _ in 0..25 {
         let p = gen_p(&mut rng);
@@ -81,6 +82,7 @@ fn fixed_boundary_grid_matches_serial_cores() {
 
 #[test]
 fn thread_counts_build_identical_arenas() {
+    install_seed_reporter();
     // Beyond matching the serial cores rank-by-rank, the whole arena is
     // bitwise equal across thread counts (a cheap whole-plane check at a
     // larger p than the per-rank grid).
@@ -102,6 +104,7 @@ fn thread_counts_build_identical_arenas() {
 
 #[test]
 fn cache_serves_table_rows_verbatim() {
+    install_seed_reporter();
     // The cache's table and single-rank entry points serve the same rows
     // the serial cores produce (the get() path goes through the table
     // under the default cap).

@@ -1,0 +1,318 @@
+//! Differential traffic-mix fuzz suite: for seeded random multi-op
+//! workloads (all five collective kinds, random roots/sizes/windows,
+//! arbitrary arrival order), every op's batched `Outcome` must be
+//! bit-identical — payloads, completion flags, resolved algorithm,
+//! rounds, full statistics, and error kind/round on failures — to
+//! running the same op alone on a fresh `Communicator` of its window
+//! size, at every tested scheduler thread count. Every batched run's
+//! port trace is additionally checked against the cross-op one-ported
+//! oracle. Failing cases shrink to the smallest failing op subset (then
+//! to one scheduler thread) before reporting.
+//!
+//! Deterministic by default; honours `TESTKIT_SEED` (CI runs a 3-seed
+//! matrix), and every panic reports the effective seed.
+
+use circulant_bcast::comm::{Algo, BackendKind, CommBuilder, Communicator, Kind};
+use circulant_bcast::schedule::verify_one_ported_trace;
+use circulant_bcast::sim::UnitCost;
+use circulant_bcast::testkit::{
+    forall_shrink, install_seed_reporter, run_mix_blocking, submit_mix_op, traffic_mix,
+    MixOp, MixOptions, MixOutcome, Rng, TrafficMix,
+};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn machine(p: usize, backend: BackendKind) -> Communicator {
+    CommBuilder::new(p).cost_model(UnitCost).backend(backend).build()
+}
+
+/// Execute `mix` as one batch at `threads` scheduler threads; verify
+/// the recorded port trace; return per-op outcomes in submission order.
+fn run_batched(
+    mix: &TrafficMix,
+    backend: BackendKind,
+    threads: usize,
+) -> Result<Vec<MixOutcome>, String> {
+    let comm = machine(mix.p, backend);
+    let mut traffic = comm.traffic().threads(threads).record_trace(true);
+    let mut handles = Vec::with_capacity(mix.ops.len());
+    for (i, op) in mix.ops.iter().enumerate() {
+        handles.push(
+            submit_mix_op(&mut traffic, op).map_err(|e| format!("op #{i} submit: {e}"))?,
+        );
+    }
+    let report = traffic.run().map_err(|e| format!("batch run: {e}"))?;
+    verify_one_ported_trace(mix.p, report.trace.as_ref().expect("trace recording on"))
+        .map_err(|v| format!("one-ported trace violated: {v:?}"))?;
+    Ok(handles.into_iter().map(|h| h.take()).collect())
+}
+
+/// The sequential side: each op alone, on a fresh communicator of its
+/// window size.
+fn run_sequential(mix: &TrafficMix, backend: BackendKind) -> Vec<MixOutcome> {
+    mix.ops
+        .iter()
+        .map(|op| run_mix_blocking(&machine(op.ranks(mix.p), backend), op))
+        .collect()
+}
+
+fn check_parity(mix: &TrafficMix, backend: BackendKind, threads: usize) -> Result<(), String> {
+    let batched = run_batched(mix, backend, threads)?;
+    let sequential = run_sequential(mix, backend);
+    for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+        if b != s {
+            return Err(format!(
+                "op #{i} {:?} diverged (backend {backend:?}, threads {threads}):\n  batched:    \
+                 {b:?}\n  sequential: {s:?}",
+                mix.ops[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    mix: TrafficMix,
+    threads: usize,
+}
+
+/// Shrink to the smallest failing op subset first (halves, then single
+/// drops), then to one scheduler thread.
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    let ops = &c.mix.ops;
+    if ops.len() > 1 {
+        let half = ops.len() / 2;
+        for sub in [&ops[..half], &ops[half..]] {
+            out.push(Case {
+                mix: TrafficMix { p: c.mix.p, ops: sub.to_vec() },
+                threads: c.threads,
+            });
+        }
+        for i in 0..ops.len() {
+            let mut rest = ops.clone();
+            rest.remove(i);
+            out.push(Case { mix: TrafficMix { p: c.mix.p, ops: rest }, threads: c.threads });
+        }
+    }
+    if c.threads != 1 {
+        out.push(Case { mix: c.mix.clone(), threads: 1 });
+    }
+    out
+}
+
+/// The suite's p grid: 1, powers of two and neighbours, primes, and
+/// ordinary sizes (the 2^14 end is covered by `large_p_bcast_reduce`,
+/// where lockstep feasibility bounds the mix).
+fn gen_p(rng: &mut Rng) -> usize {
+    match rng.range(0, 4) {
+        0 => 1,
+        1 => 1 << rng.range(1, 5),
+        2 => {
+            let b = 1usize << rng.range(1, 5);
+            if rng.chance(1, 2) {
+                b + 1
+            } else {
+                b - 1
+            }
+        }
+        3 => [3, 5, 7, 13, 17, 19, 23, 29, 31, 37, 41][rng.range(0, 10)],
+        _ => rng.range(2, 48),
+    }
+}
+
+#[test]
+fn batched_matches_sequential_fuzz() {
+    install_seed_reporter();
+    let mut t = 0usize;
+    forall_shrink(
+        24,
+        |rng| {
+            let p = gen_p(rng);
+            let n_ops = rng.range(1, 8);
+            t += 1;
+            Case {
+                mix: traffic_mix(rng, p, n_ops, &MixOptions::default()),
+                threads: THREAD_COUNTS[t % THREAD_COUNTS.len()],
+            }
+        },
+        |c| check_parity(&c.mix, BackendKind::Lockstep, c.threads),
+        shrink_case,
+    );
+}
+
+#[test]
+fn engine_backend_batched_matches_sequential() {
+    install_seed_reporter();
+    let mut t = 0usize;
+    forall_shrink(
+        10,
+        |rng| {
+            let p = gen_p(rng);
+            let n_ops = rng.range(1, 5);
+            t += 1;
+            Case {
+                mix: traffic_mix(rng, p, n_ops, &MixOptions::default()),
+                threads: THREAD_COUNTS[t % THREAD_COUNTS.len()],
+            }
+        },
+        |c| check_parity(&c.mix, BackendKind::Engine, c.threads),
+        shrink_case,
+    );
+}
+
+#[test]
+fn thirty_two_ops_agree_at_every_thread_count() {
+    // The issue's upper bound: 32 concurrent ops on one machine. Beyond
+    // sequential parity, the three thread counts must agree with each
+    // other exactly (scheduling is deterministic; threading only shards
+    // the per-round work).
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    let mix = traffic_mix(&mut rng, 33, 32, &MixOptions::default());
+    let sequential = run_sequential(&mix, BackendKind::Lockstep);
+    let mut per_thread = Vec::new();
+    for threads in THREAD_COUNTS {
+        let batched = run_batched(&mix, BackendKind::Lockstep, threads).unwrap();
+        for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+            assert_eq!(b, s, "op #{i} {:?} at threads={threads}", mix.ops[i]);
+        }
+        per_thread.push(batched);
+    }
+    assert_eq!(per_thread[0], per_thread[1]);
+    assert_eq!(per_thread[0], per_thread[2]);
+}
+
+#[test]
+fn large_p_bcast_reduce_parity() {
+    // The 2^14 end of the grid. Only the O(p·rounds) kinds are feasible
+    // on the lockstep sequential side at this scale; windows put one op
+    // on a prime-sized sub-machine.
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    let p = (1 << 14) + 1;
+    let ops = vec![
+        MixOp {
+            kind: Kind::Bcast,
+            window: None,
+            root: rng.range(0, p - 1),
+            m: 24,
+            blocks: Some(4),
+            algo: Algo::Circulant,
+            data_seed: rng.next_u64(),
+        },
+        MixOp {
+            kind: Kind::Bcast,
+            window: Some((3, 8191)),
+            root: 17,
+            m: 16,
+            blocks: Some(3),
+            algo: Algo::Circulant,
+            data_seed: rng.next_u64(),
+        },
+        MixOp {
+            kind: Kind::Reduce,
+            window: Some((8200, 4096)),
+            root: 5,
+            m: 8,
+            blocks: Some(2),
+            algo: Algo::Circulant,
+            data_seed: rng.next_u64(),
+        },
+    ];
+    let mix = TrafficMix { p, ops };
+    for threads in [1usize, 8] {
+        check_parity(&mix, BackendKind::Lockstep, threads).unwrap();
+    }
+}
+
+#[test]
+fn disjoint_window_mix_takes_max_not_sum() {
+    // Five ops — one of each kind — over five disjoint windows: nobody
+    // ever stalls, so the batch's machine rounds equal the longest op's
+    // local rounds (strictly below the sequential sum).
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    let p = 40usize;
+    let kinds = [
+        Kind::Bcast,
+        Kind::Reduce,
+        Kind::Allgatherv,
+        Kind::ReduceScatter,
+        Kind::Allreduce,
+    ];
+    let ops: Vec<MixOp> = kinds
+        .iter()
+        .enumerate()
+        .map(|(w, &kind)| MixOp {
+            kind,
+            window: Some((8 * w, 8)),
+            root: rng.range(0, 7),
+            m: 20,
+            blocks: Some(1 + w),
+            algo: Algo::Circulant,
+            data_seed: rng.next_u64(),
+        })
+        .collect();
+    let mix = TrafficMix { p, ops };
+
+    let comm = machine(p, BackendKind::Lockstep);
+    let mut traffic = comm.traffic().threads(4).record_trace(true);
+    let handles: Vec<_> = mix
+        .ops
+        .iter()
+        .map(|op| submit_mix_op(&mut traffic, op).unwrap())
+        .collect();
+    let report = traffic.run().unwrap();
+    verify_one_ported_trace(p, report.trace.as_ref().unwrap()).unwrap();
+
+    let sequential = run_sequential(&mix, BackendKind::Lockstep);
+    let mut max_rounds = 0usize;
+    let mut sum_rounds = 0usize;
+    for ((h, s), op) in handles.into_iter().zip(&sequential).zip(&mix.ops) {
+        let b = h.take();
+        assert_eq!(&b, s, "{op:?}");
+        let MixOutcome::Done { rounds, .. } = s else {
+            panic!("sequential op failed: {s:?}");
+        };
+        max_rounds = max_rounds.max(*rounds);
+        sum_rounds += *rounds;
+    }
+    assert_eq!(
+        report.machine_rounds(),
+        max_rounds,
+        "disjoint windows never stall: batch rounds = max over ops"
+    );
+    assert!(
+        report.machine_rounds() < sum_rounds,
+        "aggregate machine rounds must beat the sequential sum"
+    );
+    // Every op was scheduled from machine round 0.
+    for op in &report.ops {
+        assert!(op.ok);
+        assert_eq!(op.machine_span.map(|(first, _)| first), Some(0));
+    }
+}
+
+#[test]
+fn shuffled_submission_preserves_per_op_outcomes() {
+    // Arrival-order permutation invariance at the suite level: the same
+    // ops submitted in reversed and rotated order produce the same
+    // per-op outcome multiset (each op keeps its own result; only the
+    // machine spans may move). The property suite fuzzes this further.
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    let mix = traffic_mix(&mut rng, 19, 6, &MixOptions::default());
+    let base = run_batched(&mix, BackendKind::Lockstep, 2).unwrap();
+    for rotation in [1usize, 3] {
+        let mut ops = mix.ops.clone();
+        ops.rotate_left(rotation);
+        let rotated = TrafficMix { p: mix.p, ops };
+        let outcomes = run_batched(&rotated, BackendKind::Lockstep, 2).unwrap();
+        for (i, out) in outcomes.iter().enumerate() {
+            let orig = (i + rotation) % mix.ops.len();
+            assert_eq!(out, &base[orig], "op {orig} changed under rotation {rotation}");
+        }
+    }
+}
