@@ -1,0 +1,128 @@
+//! Per-rank schedule build cost — the paper's headline O(log p) claim as
+//! receipts for the SPMD rank plane: what ONE rank pays to compute its
+//! own recv+send schedule (`recv_schedule_into` + `send_schedule_into`,
+//! exactly `RankComm`'s rooted hot path), sampled across ranks, for p
+//! from 2^10 up to 2^20. The per-rank cost must stay essentially flat —
+//! it grows only with q = ceil(log2 p), i.e. ~2x over the whole sweep —
+//! while whole-machine precomputation grows a millionfold.
+//!
+//! Usage: `cargo bench --bench rank_schedule -- [MAX_EXP]`
+//! (default 20; CI's `spmd-smoke` job runs the full sweep and gates on
+//! the JSON below.)
+//!
+//! A machine-readable record is written to `BENCH_rank_schedule.json`
+//! (override with `CBCAST_BENCH_JSON=path`): per-p sampled ranks,
+//! ns/rank and ns/rank/q — what the CI flatness gate reads.
+
+use std::hint::black_box;
+use std::io::Write;
+use std::time::Instant;
+
+use circulant_bcast::schedule::{
+    ceil_log2, recv_schedule_into, send_schedule_into, Skips,
+};
+
+/// Ranks sampled per p (evenly strided; every rank when p is smaller).
+const SAMPLES: usize = 4096;
+/// Repetitions per sampled rank, to lift tiny timings out of clock noise.
+const REPS: usize = 8;
+
+struct Row {
+    p: usize,
+    q: usize,
+    sampled: usize,
+    ns_per_rank: f64,
+    ns_per_rank_per_q: f64,
+}
+
+fn main() {
+    let max_exp: u32 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20)
+        .clamp(10, 24);
+
+    println!("=== rank_schedule: per-rank O(log p) schedule build (the RankComm hot path) ===");
+    println!(
+        "({} sampled ranks x {REPS} reps per p; p up to 2^{max_exp}; \
+         recv_schedule_into + send_schedule_into per rank)\n",
+        SAMPLES
+    );
+    println!(
+        "{:>10} {:>4} {:>9} {:>14} {:>16}",
+        "p", "q", "sampled", "ns/rank", "ns/rank/q"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut recv = [0i64; 64];
+    let mut send = [0i64; 64];
+    for exp in 10..=max_exp {
+        // Off-by-one p exercises the non-power-of-two schedule structure.
+        let p = (1usize << exp) + usize::from(exp % 2 == 1);
+        let q = ceil_log2(p);
+        let sk = Skips::new(p);
+        let stride = (p / SAMPLES).max(1);
+        let mut sampled = 0usize;
+        let t = Instant::now();
+        let mut r = 0usize;
+        while r < p && sampled < SAMPLES {
+            for _ in 0..REPS {
+                let bb = recv_schedule_into(&sk, r, &mut recv);
+                send_schedule_into(&sk, r, bb, &mut send);
+                black_box((&recv, &send));
+            }
+            sampled += 1;
+            r += stride;
+        }
+        let ns_per_rank = t.elapsed().as_nanos() as f64 / (sampled * REPS) as f64;
+        let per_q = ns_per_rank / q as f64;
+        println!("{p:>10} {q:>4} {sampled:>9} {ns_per_rank:>14.1} {per_q:>16.2}");
+        rows.push(Row { p, q, sampled, ns_per_rank, ns_per_rank_per_q: per_q });
+    }
+
+    let json_path = std::env::var("CBCAST_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_rank_schedule.json".to_string());
+    write_json(&json_path, &rows).expect("write bench json");
+
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    println!(
+        "\nflatness: {:.1} ns/rank at p = {} -> {:.1} ns/rank at p = {} \
+         (x{:.2}; q grew x{:.2})",
+        first.ns_per_rank,
+        first.p,
+        last.ns_per_rank,
+        last.p,
+        last.ns_per_rank / first.ns_per_rank,
+        last.q as f64 / first.q as f64
+    );
+    println!("-> {json_path}");
+    println!("(this is RankComm's per-call schedule cost: O(log p) per rank, no table,");
+    println!(" no communication — the paper's Theorems 2-3 discipline, measured.)");
+}
+
+/// Hand-rolled JSON (the crate is dependency-free; no serde).
+fn write_json(path: &str, rows: &[Row]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let max_ns = rows.iter().map(|r| r.ns_per_rank).fold(0.0f64, f64::max);
+    let ratio = rows[rows.len() - 1].ns_per_rank / rows[0].ns_per_rank;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"rank_schedule\",")?;
+    writeln!(f, "  \"samples\": {SAMPLES},")?;
+    writeln!(f, "  \"reps\": {REPS},")?;
+    writeln!(f, "  \"max_ns_per_rank\": {max_ns:.3},")?;
+    writeln!(f, "  \"last_over_first_ratio\": {ratio:.4},")?;
+    writeln!(f, "  \"entries\": [")?;
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"p\": {}, \"q\": {}, \"sampled\": {}, \"ns_per_rank\": {:.3}, \
+             \"ns_per_rank_per_q\": {:.4}}}{comma}",
+            r.p, r.q, r.sampled, r.ns_per_rank, r.ns_per_rank_per_q
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}

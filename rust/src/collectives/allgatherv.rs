@@ -13,23 +13,52 @@
 
 use std::sync::Arc;
 
-use crate::comm::{Algo, AllgathervReq, CommError, Communicator};
 use crate::schedule::{ScheduleTable as RowTable, Skips};
-use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc};
 
 use super::common::{BlockGeometry, Element, ScheduleSource, World};
 
+/// Where an Algorithm-7 table's raw rows live: the shared all-ranks
+/// [`RowTable`] (the god-view plane, built once per `p` and shared), or
+/// a rank-locally computed arena (the SPMD plane: one processor's own
+/// relative rows for every root — see
+/// [`ScheduleTable::build_rank_local`]). Layout and values are
+/// identical; only provenance differs.
+enum Rows {
+    Shared(Arc<RowTable>),
+    Local { arena: Vec<i8>, q: usize },
+}
+
+impl Rows {
+    #[inline]
+    fn recv_raw(&self, rel: usize, k: usize) -> i8 {
+        match self {
+            Rows::Shared(t) => t.recv_raw(rel, k),
+            Rows::Local { arena, q } => arena[rel * 2 * q + k],
+        }
+    }
+
+    #[inline]
+    fn send_raw(&self, rel: usize, k: usize) -> i8 {
+        match self {
+            Rows::Shared(t) => t.send_raw(rel, k),
+            Rows::Local { arena, q } => arena[rel * 2 * q + q + k],
+        }
+    }
+}
+
 /// The Algorithm-7 view of the all-ranks schedule plane for one block
-/// count `n`: a shared [`RowTable`] (the flat `i8` arena of every
-/// relative rank's recv+send rows — see [`crate::schedule::table`]) plus
-/// the `n`-dependent phase bookkeeping. Building one is O(1) beyond the
-/// row table (which the cache builds in parallel once per `p`), so
-/// per-`n` tables are cheap to memoize per communicator.
+/// count `n`: the raw recv+send rows of every relative rank (shared
+/// [`RowTable`] on the god-view path, rank-locally computed on the SPMD
+/// path — see [`crate::schedule::table`] and
+/// [`ScheduleTable::build_rank_local`]) plus the `n`-dependent phase
+/// bookkeeping. Building the shared flavour is O(1) beyond the row
+/// table (which the cache builds in parallel once per `p`), so per-`n`
+/// tables are cheap to memoize per communicator.
 pub struct ScheduleTable {
     pub sk: Arc<Skips>,
-    /// All relative ranks' raw schedule rows (shared, `n`-agnostic).
-    rows: Arc<RowTable>,
+    /// All relative ranks' raw schedule rows (`n`-agnostic).
+    rows: Rows,
     /// Blocks per root.
     pub n: usize,
     /// Virtual-round offset.
@@ -50,13 +79,59 @@ impl ScheduleTable {
         let sk = rows.skips().clone();
         let q = sk.q();
         let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
-        Arc::new(ScheduleTable { sk, rows, n, x })
+        Arc::new(ScheduleTable { sk, rows: Rows::Shared(rows), n, x })
     }
 
-    /// The shared all-ranks row table.
+    /// Rank-local build for the SPMD plane ([`crate::comm::RankComm`]):
+    /// Algorithm 7 has each processor hold, *for every root `j`*, its
+    /// own receive/send schedule at relative position `(r - j) mod p` —
+    /// and as `j` sweeps the roots, that position sweeps all `p`
+    /// relative ranks. So the rank-local precompute is this processor's
+    /// own row for each of the `p` concurrent broadcasts, filled here
+    /// with the per-rank O(log p) cores
+    /// ([`crate::schedule::recv_schedule_into`] /
+    /// [`crate::schedule::send_schedule_into`]): Θ(p log p) time and
+    /// space per rank (proportional to the `p` buffers the rank must
+    /// hold anyway), **independently computed, no communication, no
+    /// shared [`RowTable`]** — exactly the paper's per-processor
+    /// discipline.
+    pub fn build_rank_local(sk: &Arc<Skips>, n: usize) -> Arc<Self> {
+        assert!(n > 0);
+        let p = sk.p();
+        let q = sk.q();
+        let x = if q == 0 { 0 } else { (q - (n - 1) % q) % q };
+        let mut arena = vec![0i8; p * 2 * q];
+        if q > 0 {
+            let mut rbuf = vec![0i64; q];
+            let mut sbuf = vec![0i64; q];
+            for rel in 0..p {
+                let bb = crate::schedule::recv_schedule_into(sk, rel, &mut rbuf);
+                crate::schedule::send_schedule_into(sk, rel, bb, &mut sbuf);
+                let row = &mut arena[rel * 2 * q..(rel + 1) * 2 * q];
+                for (dst, &v) in row[..q].iter_mut().zip(rbuf.iter()) {
+                    *dst = v as i8;
+                }
+                for (dst, &v) in row[q..].iter_mut().zip(sbuf.iter()) {
+                    *dst = v as i8;
+                }
+            }
+        }
+        Arc::new(ScheduleTable {
+            sk: sk.clone(),
+            rows: Rows::Local { arena, q },
+            n,
+            x,
+        })
+    }
+
+    /// The shared all-ranks row table backing this view, when there is
+    /// one (`None` for rank-local SPMD tables).
     #[inline]
-    pub fn rows(&self) -> &Arc<RowTable> {
-        &self.rows
+    pub fn shared_rows(&self) -> Option<&Arc<RowTable>> {
+        match &self.rows {
+            Rows::Shared(t) => Some(t),
+            Rows::Local { .. } => None,
+        }
     }
 
     #[inline]
@@ -343,8 +418,8 @@ impl<T: Element> RankProc<T> for AllgathervProc<T> {
 }
 
 /// Build all `p` rank state machines over one shared [`ScheduleTable`] —
-/// the shared construction loop used by the [`crate::comm`] backends and
-/// the legacy wrappers alike.
+/// the shared construction loop used by the [`crate::comm`] backends (the
+/// SPMD plane builds one machine per rank over a rank-local table instead).
 pub fn build_allgatherv_procs<T: Element>(
     table: Arc<ScheduleTable>,
     counts: Arc<Vec<usize>>,
@@ -355,62 +430,10 @@ pub fn build_allgatherv_procs<T: Element>(
     })
 }
 
-/// Result of a simulated all-broadcast.
-pub struct AllgathervResult<T> {
-    pub stats: RunStats,
-    /// `buffers[r][j]` = root `j`'s data as received by rank `r`.
-    pub buffers: Vec<Vec<Vec<T>>>,
-}
-
-/// Run the full irregular all-broadcast: `inputs[r]` is rank `r`'s data
-/// (arbitrary per-rank lengths), divided into `n` blocks each.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call `.allgatherv(AllgathervReq::new(inputs))`; \
-            it reuses cached schedules across calls"
-)]
-pub fn allgatherv_sim<T: Element>(
-    inputs: &[Vec<T>],
-    n: usize,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<AllgathervResult<T>, SimError> {
-    let comm = Communicator::new(inputs.len());
-    let req = AllgathervReq::new(inputs)
-        .blocks(n)
-        .algo(Algo::Circulant)
-        .elem_bytes(elem_bytes);
-    match comm.allgatherv_with(req, cost) {
-        Ok(out) => Ok(AllgathervResult { stats: out.stats, buffers: out.buffers }),
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("allgatherv_sim: {e}"),
-    }
-}
-
-/// Regular all-gather: every rank contributes the same number of elements.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call `.allgather(AllgathervReq::new(inputs))`"
-)]
-pub fn allgather_sim<T: Element>(
-    inputs: &[Vec<T>],
-    n: usize,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<AllgathervResult<T>, SimError> {
-    let len = inputs[0].len();
-    assert!(inputs.iter().all(|v| v.len() == len), "allgather requires equal counts");
-    // (calling the sibling deprecated wrapper is fine: deprecation
-    // warnings are suppressed inside deprecated items)
-    allgatherv_sim(inputs, n, elem_bytes, cost)
-}
-
-// The module tests deliberately exercise the deprecated wrappers: they
-// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::comm::{Algo, AllgathervReq, Communicator};
     use crate::sim::cost::UnitCost;
 
     fn check_allgatherv(counts: &[usize], n: usize) {
@@ -418,18 +441,21 @@ mod tests {
         let inputs: Vec<Vec<i32>> = (0..p)
             .map(|r| (0..counts[r]).map(|i| (r * 10000 + i) as i32).collect())
             .collect();
-        let res = allgatherv_sim(&inputs, n, 4, &UnitCost).unwrap();
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .allgatherv(AllgathervReq::new(&inputs).algo(Algo::Circulant).blocks(n))
+            .unwrap();
         for r in 0..p {
             for j in 0..p {
                 assert_eq!(
-                    res.buffers[r][j], inputs[j],
+                    out.buffers[r][j], inputs[j],
                     "rank {r} root {j} counts={counts:?} n={n}"
                 );
             }
         }
         if p > 1 {
             let q = crate::schedule::ceil_log2(p);
-            assert_eq!(res.stats.rounds, n - 1 + q);
+            assert_eq!(out.stats.rounds, n - 1 + q);
         }
     }
 
@@ -481,6 +507,38 @@ mod tests {
         let counts: Vec<usize> = (0..17).map(|i| (i * 13) % 40).collect();
         for n in [1usize, 2, 5, 10] {
             check_allgatherv(&counts, n);
+        }
+    }
+
+    #[test]
+    fn rank_local_table_matches_shared_rows() {
+        // The SPMD plane's rank-locally computed rows must be
+        // bit-identical to the shared god-view plane for every relative
+        // rank and round (they are the same schedules, computed by the
+        // same cores — only provenance differs).
+        for p in [1usize, 2, 9, 17, 18, 33] {
+            let sk = Arc::new(Skips::new(p));
+            for n in [1usize, 3, 7] {
+                let shared = ScheduleTable::build_from(&ScheduleSource::Direct(&sk), n);
+                let local = ScheduleTable::build_rank_local(&sk, n);
+                assert!(local.shared_rows().is_none());
+                assert!(shared.shared_rows().is_some());
+                assert_eq!(local.x, shared.x, "p={p} n={n}");
+                for rel in 0..p {
+                    for j in 0..shared.rounds() {
+                        assert_eq!(
+                            local.recv_at(rel, j),
+                            shared.recv_at(rel, j),
+                            "recv p={p} n={n} rel={rel} j={j}"
+                        );
+                        assert_eq!(
+                            local.send_at(rel, j),
+                            shared.send_at(rel, j),
+                            "send p={p} n={n} rel={rel} j={j}"
+                        );
+                    }
+                }
+            }
         }
     }
 }

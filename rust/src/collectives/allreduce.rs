@@ -7,75 +7,17 @@
 //! This is the gradient-allreduce building block used by the end-to-end
 //! example (data-parallel training traffic). The front door for running
 //! it is [`crate::comm::Communicator::allreduce`]; both phases share one
-//! cached [`super::allgatherv::ScheduleTable`] there.
+//! cached [`super::allgatherv::ScheduleTable`] there. The per-rank SPMD
+//! form is [`crate::comm::RankComm::allreduce`]. (The legacy
+//! `allreduce_sim` wrapper finished its deprecation cycle and was
+//! removed.)
 
-use std::sync::Arc;
-
-use crate::comm::{Algo, AllreduceReq, CommError, Communicator};
-use crate::sim::cost::CostModel;
-use crate::sim::network::{RunStats, SimError};
-
-use super::common::{Element, ReduceOp};
-
-/// Result of a simulated all-reduce.
-pub struct AllreduceResult<T> {
-    /// Stats of the reduce-scatter half.
-    pub rs_stats: RunStats,
-    /// Stats of the all-gather half.
-    pub ag_stats: RunStats,
-    /// `buffers[r]` = the fully reduced vector at rank `r`.
-    pub buffers: Vec<Vec<T>>,
-}
-
-impl<T> AllreduceResult<T> {
-    /// Combined simulated time.
-    pub fn time(&self) -> f64 {
-        self.rs_stats.time + self.ag_stats.time
-    }
-
-    /// Combined rounds.
-    pub fn rounds(&self) -> usize {
-        self.rs_stats.rounds + self.ag_stats.rounds
-    }
-}
-
-/// Run all-reduce over `p` ranks: every rank contributes `inputs[r]` (all
-/// the same length `m`); every rank ends with the elementwise reduction.
-/// The vector is chunked over ranks (`counts` as equal as possible), each
-/// chunk divided into `n` blocks.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call \
-            `.allreduce(AllreduceReq::new(inputs, op))`; it reuses cached schedules across calls"
-)]
-pub fn allreduce_sim<T: Element>(
-    inputs: &[Vec<T>],
-    n: usize,
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<AllreduceResult<T>, SimError> {
-    let comm = Communicator::new(inputs.len());
-    let req = AllreduceReq::new(inputs, op)
-        .blocks(n)
-        .algo(Algo::Circulant)
-        .elem_bytes(elem_bytes);
-    match comm.allreduce_parts_with(req, cost) {
-        Ok((rs_stats, ag_stats, buffers, _)) => {
-            Ok(AllreduceResult { rs_stats, ag_stats, buffers })
-        }
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("allreduce_sim: {e}"),
-    }
-}
-
-// The module tests deliberately exercise the deprecated wrapper: it pins
-// the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
-    use super::*;
+    use std::sync::Arc;
+
     use crate::collectives::common::SumOp;
+    use crate::comm::{Algo, AllreduceReq, Communicator};
     use crate::sim::cost::UnitCost;
 
     fn check_allreduce(p: usize, m: usize, n: usize) {
@@ -83,9 +25,14 @@ mod tests {
             .map(|r| (0..m).map(|i| ((r + 1) * (i + 1)) as i64 % 503).collect())
             .collect();
         let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-        let res = allreduce_sim(&inputs, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .allreduce(
+                AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(n),
+            )
+            .unwrap();
         for r in 0..p {
-            assert_eq!(res.buffers[r], expect, "p={p} m={m} n={n} rank={r}");
+            assert_eq!(out.buffers[r], expect, "p={p} m={m} n={n} rank={r}");
         }
     }
 
@@ -110,8 +57,14 @@ mod tests {
         let m = 170usize;
         let n = 5usize;
         let inputs: Vec<Vec<i64>> = (0..p).map(|_| vec![1i64; m]).collect();
-        let res = allreduce_sim(&inputs, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .allreduce(
+                AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(n),
+            )
+            .unwrap();
         let q = crate::schedule::ceil_log2(p);
-        assert_eq!(res.rounds(), 2 * (n - 1 + q));
+        // Two phases of n - 1 + q rounds each.
+        assert_eq!(out.rounds, 2 * (n - 1 + q));
     }
 }

@@ -11,24 +11,10 @@
 
 use std::sync::Arc;
 
-use crate::comm::{
-    Algo, AllgathervReq, BcastReq, CommError, Communicator, ReduceReq, ReduceScatterReq,
-};
 use crate::schedule::ceil_log2;
-use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc};
 
 use super::common::{BlockGeometry, Element, ReduceOp};
-
-/// Map a `comm` error back onto the wrappers' historical `SimError`
-/// return type (anything non-simulation is a caller bug, as before).
-fn unwrap_sim<T>(res: Result<T, CommError>, what: &str) -> Result<T, SimError> {
-    match res {
-        Ok(v) => Ok(v),
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("{what}: {e}"),
-    }
-}
 
 // ---------------------------------------------------------------------
 // Binomial-tree broadcast
@@ -94,24 +80,6 @@ impl<T: Element> RankProc<T> for BinomialBcastProc<T> {
             self.q
         }
     }
-}
-
-/// Simulate a binomial-tree broadcast.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `comm::Communicator::bcast` with `Algo::Binomial`"
-)]
-pub fn binomial_bcast_sim<T: Element>(
-    p: usize,
-    root: usize,
-    data: &[T],
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    let comm = Communicator::new(p);
-    let req = BcastReq::new(root, data).algo(Algo::Binomial).elem_bytes(elem_bytes);
-    let out = unwrap_sim(comm.bcast_with(req, cost), "binomial_bcast_sim")?;
-    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -183,25 +151,6 @@ impl<T: Element> RankProc<T> for BinomialReduceProc<T> {
             self.q
         }
     }
-}
-
-/// Simulate a binomial-tree reduction; returns the root's buffer.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `comm::Communicator::reduce` with `Algo::Binomial`"
-)]
-pub fn binomial_reduce_sim<T: Element>(
-    inputs: &[Vec<T>],
-    root: usize,
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<(RunStats, Vec<T>), SimError> {
-    let p = inputs.len();
-    let comm = Communicator::new(p);
-    let req = ReduceReq::new(root, inputs, op).algo(Algo::Binomial).elem_bytes(elem_bytes);
-    let out = unwrap_sim(comm.reduce_with(req, cost), "binomial_reduce_sim")?;
-    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -383,24 +332,6 @@ impl<T: Element> RankProc<T> for VdgBcastProc<T> {
     }
 }
 
-/// Simulate a van de Geijn (scatter + ring all-gather) broadcast.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `comm::Communicator::bcast` with `Algo::VanDeGeijn`"
-)]
-pub fn vdg_bcast_sim<T: Element>(
-    p: usize,
-    root: usize,
-    data: &[T],
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    let comm = Communicator::new(p);
-    let req = BcastReq::new(root, data).algo(Algo::VanDeGeijn).elem_bytes(elem_bytes);
-    let out = unwrap_sim(comm.bcast_with(req, cost), "vdg_bcast_sim")?;
-    Ok((out.stats, out.buffers))
-}
-
 // ---------------------------------------------------------------------
 // Ring all-gather(v)
 // ---------------------------------------------------------------------
@@ -475,22 +406,6 @@ impl<T: Element> RankProc<T> for RingAllgathervProc<T> {
             self.p - 1
         }
     }
-}
-
-/// Simulate a ring all-gatherv.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `comm::Communicator::allgatherv` with `Algo::Ring`"
-)]
-pub fn ring_allgatherv_sim<T: Element>(
-    inputs: &[Vec<T>],
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<(RunStats, Vec<Vec<Vec<T>>>), SimError> {
-    let comm = Communicator::new(inputs.len());
-    let req = AllgathervReq::new(inputs).algo(Algo::Ring).elem_bytes(elem_bytes);
-    let out = unwrap_sim(comm.allgatherv_with(req, cost), "ring_allgatherv_sim")?;
-    Ok((out.stats, out.buffers))
 }
 
 // ---------------------------------------------------------------------
@@ -574,44 +489,31 @@ impl<T: Element> RankProc<T> for RingReduceScatterProc<T> {
     }
 }
 
-/// Simulate a ring reduce-scatter.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `comm::Communicator::reduce_scatter` with `Algo::Ring`"
-)]
-pub fn ring_reduce_scatter_sim<T: Element>(
-    inputs: &[Vec<T>],
-    counts: &[usize],
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    let comm = Communicator::new(inputs.len());
-    let req = ReduceScatterReq::new(inputs, counts, op).algo(Algo::Ring).elem_bytes(elem_bytes);
-    let out = unwrap_sim(comm.reduce_scatter_with(req, cost), "ring_reduce_scatter_sim")?;
-    Ok((out.stats, out.buffers))
-}
-
-// The module tests deliberately exercise the deprecated wrappers: they
-// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;
+    use crate::comm::{
+        Algo, AllgathervReq, BcastReq, Communicator, ReduceReq, ReduceScatterReq,
+    };
     use crate::sim::cost::UnitCost;
+
+    fn comm(p: usize) -> Communicator {
+        Communicator::builder(p).cost_model(UnitCost).build()
+    }
 
     #[test]
     fn binomial_bcast_all_p() {
         for p in 1..=33 {
             for root in [0, p / 2, p - 1] {
                 let data: Vec<u32> = (0..50).collect();
-                let (stats, bufs) = binomial_bcast_sim(p, root, &data, 4, &UnitCost).unwrap();
-                for b in &bufs {
+                let out =
+                    comm(p).bcast(BcastReq::new(root, &data).algo(Algo::Binomial)).unwrap();
+                for b in &out.buffers {
                     assert_eq!(b, &data, "p={p} root={root}");
                 }
                 if p > 1 {
-                    assert_eq!(stats.rounds, ceil_log2(p));
+                    assert_eq!(out.stats.rounds, ceil_log2(p));
                 }
             }
         }
@@ -626,9 +528,10 @@ mod tests {
             let expect: Vec<i64> =
                 (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
             for root in [0, p - 1] {
-                let (_, buf) =
-                    binomial_reduce_sim(&inputs, root, Arc::new(SumOp), 8, &UnitCost).unwrap();
-                assert_eq!(buf, expect, "p={p} root={root}");
+                let out = comm(p)
+                    .reduce(ReduceReq::new(root, &inputs, Arc::new(SumOp)).algo(Algo::Binomial))
+                    .unwrap();
+                assert_eq!(out.buffers, expect, "p={p} root={root}");
             }
         }
     }
@@ -638,12 +541,14 @@ mod tests {
         for p in 1..=33 {
             for root in [0, p / 3] {
                 let data: Vec<u32> = (0..97).map(|i| i * 3 + 1).collect();
-                let (stats, bufs) = vdg_bcast_sim(p, root, &data, 4, &UnitCost).unwrap();
-                for b in &bufs {
+                let out = comm(p)
+                    .bcast(BcastReq::new(root, &data).algo(Algo::VanDeGeijn))
+                    .unwrap();
+                for b in &out.buffers {
                     assert_eq!(b, &data, "p={p} root={root}");
                 }
                 if p > 1 {
-                    assert_eq!(stats.rounds, ceil_log2(p) + p - 1);
+                    assert_eq!(out.stats.rounds, ceil_log2(p) + p - 1);
                 }
             }
         }
@@ -655,8 +560,10 @@ mod tests {
         // bottleneck; check total bytes: binomial = (p-1)*m, vdg < 2*m*p.
         let p = 16;
         let data: Vec<u32> = (0..4096).collect();
-        let (b_stats, _) = binomial_bcast_sim(p, 0, &data, 4, &UnitCost).unwrap();
-        let (v_stats, _) = vdg_bcast_sim(p, 0, &data, 4, &UnitCost).unwrap();
+        let b_stats =
+            comm(p).bcast(BcastReq::new(0, &data).algo(Algo::Binomial)).unwrap().stats;
+        let v_stats =
+            comm(p).bcast(BcastReq::new(0, &data).algo(Algo::VanDeGeijn)).unwrap().stats;
         assert_eq!(b_stats.bytes, (p - 1) * 4096 * 4);
         assert!(v_stats.bytes < 2 * 4096 * 4 * p);
         // The real win: max bytes through any single rank.
@@ -683,14 +590,18 @@ mod tests {
                 let inputs: Vec<Vec<i32>> = (0..p)
                     .map(|r| (0..counts[r]).map(|i| (r * 100 + i) as i32).collect())
                     .collect();
-                let (stats, bufs) = ring_allgatherv_sim(&inputs, 4, &UnitCost).unwrap();
+                let out =
+                    comm(p).allgatherv(AllgathervReq::new(&inputs).algo(Algo::Ring)).unwrap();
                 for r in 0..p {
                     for j in 0..p {
-                        assert_eq!(bufs[r][j], inputs[j], "p={p} style={style} r={r} j={j}");
+                        assert_eq!(
+                            out.buffers[r][j], inputs[j],
+                            "p={p} style={style} r={r} j={j}"
+                        );
                     }
                 }
                 if p > 1 {
-                    assert_eq!(stats.rounds, p - 1);
+                    assert_eq!(out.stats.rounds, p - 1);
                 }
             }
         }
@@ -706,12 +617,18 @@ mod tests {
                 .collect();
             let sums: Vec<i64> =
                 (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-            let (_, chunks) =
-                ring_reduce_scatter_sim(&inputs, &counts, Arc::new(SumOp), 8, &UnitCost)
-                    .unwrap();
+            let out = comm(p)
+                .reduce_scatter(
+                    ReduceScatterReq::new(&inputs, &counts, Arc::new(SumOp)).algo(Algo::Ring),
+                )
+                .unwrap();
             let mut off = 0;
             for r in 0..p {
-                assert_eq!(chunks[r], sums[off..off + counts[r]].to_vec(), "p={p} r={r}");
+                assert_eq!(
+                    out.buffers[r],
+                    sums[off..off + counts[r]].to_vec(),
+                    "p={p} r={r}"
+                );
                 off += counts[r];
             }
         }

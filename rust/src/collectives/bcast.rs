@@ -9,13 +9,12 @@
 //!
 //! The front door for running this collective is
 //! [`crate::comm::Communicator::bcast`]; this module provides the
-//! per-rank state machine ([`BcastProc`]), the shared proc builder
-//! ([`build_bcast_procs`]) and the deprecated legacy wrappers.
+//! per-rank state machine ([`BcastProc`]) and the shared proc builder
+//! ([`build_bcast_procs`]). (The legacy `bcast_sim`/`bcast_procs`
+//! wrappers finished their deprecation cycle and were removed.)
 
-use crate::comm::{Algo, BcastReq, CommError, Communicator};
 use crate::schedule::Schedule;
-use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc};
 
 use super::common::{BlockGeometry, Element, PhasedSchedule, ScheduleSource, World};
 
@@ -143,8 +142,8 @@ impl<T: Element> RankProc<T> for BcastProc<T> {
 }
 
 /// Build all `p` rank state machines from one schedule source — the one
-/// shared construction loop used by the [`crate::comm`] backends and the
-/// legacy wrappers alike.
+/// shared construction loop used by the [`crate::comm`] backends (the
+/// SPMD plane builds one machine per rank instead: [`crate::comm::RankComm`]).
 pub fn build_bcast_procs<T: Element>(
     src: &ScheduleSource<'_>,
     root: usize,
@@ -162,96 +161,31 @@ pub fn build_bcast_procs<T: Element>(
     })
 }
 
-/// Result of a simulated broadcast.
-pub struct BcastResult<T> {
-    pub stats: RunStats,
-    pub buffers: Vec<Vec<T>>,
-    /// Payload length every rank must end up holding.
-    pub m: usize,
-}
-
-impl<T> BcastResult<T> {
-    /// True iff every rank assembled the complete `m`-element buffer.
-    /// (Historically this only checked that *some* buffers existed, which
-    /// was vacuously true even with ranks missing blocks.)
-    pub fn all_received(&self) -> bool {
-        !self.buffers.is_empty() && self.buffers.iter().all(|b| b.len() == self.m)
-    }
-}
-
-/// Run a full broadcast of `data` from `root` over `p` simulated ranks
-/// with `n` blocks, validating the machine model; returns per-rank final
-/// buffers and run statistics.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call `.bcast(BcastReq::new(root, data))`; \
-            it reuses cached schedules across calls and roots"
-)]
-pub fn bcast_sim<T: Element>(
-    p: usize,
-    root: usize,
-    data: &[T],
-    n: usize,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<BcastResult<T>, SimError> {
-    let comm = Communicator::new(p);
-    let req = BcastReq::new(root, data)
-        .blocks(n)
-        .algo(Algo::Circulant)
-        .elem_bytes(elem_bytes);
-    match comm.bcast_with(req, cost) {
-        Ok(out) => Ok(BcastResult { stats: out.stats, buffers: out.buffers, m: data.len() }),
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("bcast_sim: {e}"),
-    }
-}
-
-/// Build the full set of rank procs (for the threaded runtime or custom
-/// drivers).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `build_bcast_procs` with a `ScheduleSource` (cache-served via `comm::Communicator`)"
-)]
-pub fn bcast_procs<T: Element>(
-    p: usize,
-    root: usize,
-    data: &[T],
-    n: usize,
-) -> Vec<BcastProc<T>> {
-    let world = World::new(p);
-    build_bcast_procs(
-        &ScheduleSource::Direct(&world.sk),
-        root,
-        BlockGeometry::new(data.len(), n),
-        data,
-    )
-}
-
 /// Convenience: schedule objects for every rank (used by inspection tools).
 pub fn all_schedules(world: &World) -> Vec<Schedule> {
     (0..world.p()).map(|r| Schedule::compute(&world.sk, r)).collect()
 }
 
-// The module tests deliberately exercise the deprecated wrappers: they
-// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::comm::{Algo, BcastReq, Communicator};
     use crate::sim::cost::UnitCost;
 
     fn check_bcast(p: usize, root: usize, m: usize, n: usize) {
         let data: Vec<u32> = (0..m as u32).map(|i| i.wrapping_mul(2654435761)).collect();
-        let res = bcast_sim(p, root, &data, n, 4, &UnitCost).unwrap();
-        assert!(res.all_received(), "p={p} root={root} m={m} n={n}");
-        for (r, buf) in res.buffers.iter().enumerate() {
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .bcast(BcastReq::new(root, &data).algo(Algo::Circulant).blocks(n).elem_bytes(4))
+            .unwrap();
+        assert!(out.all_received(), "p={p} root={root} m={m} n={n}");
+        for (r, buf) in out.buffers.iter().enumerate() {
             assert_eq!(buf, &data, "p={p} root={root} m={m} n={n} rank={r}");
         }
         // Round optimality: n - 1 + ceil(log2 p) rounds.
         if p > 1 {
             let q = crate::schedule::ceil_log2(p);
-            assert_eq!(res.stats.rounds, n - 1 + q, "p={p} n={n}");
+            assert_eq!(out.stats.rounds, n - 1 + q, "p={p} n={n}");
         }
     }
 
@@ -303,9 +237,12 @@ mod tests {
         // n = 1: q rounds, like a binomial tree.
         for p in [2usize, 3, 8, 15, 16, 17] {
             let data = vec![7u32; 10];
-            let res = bcast_sim(p, 0, &data, 1, 4, &UnitCost).unwrap();
+            let comm = Communicator::builder(p).cost_model(UnitCost).build();
+            let out = comm
+                .bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(1))
+                .unwrap();
             let q = crate::schedule::ceil_log2(p);
-            assert_eq!(res.stats.rounds, q);
+            assert_eq!(out.stats.rounds, q);
         }
     }
 
@@ -314,29 +251,5 @@ mod tests {
         for p in [31usize, 32, 33, 100, 127, 128, 129] {
             check_bcast(p, 0, 96, 6);
         }
-    }
-
-    #[test]
-    fn all_received_reflects_completion() {
-        // The corrected check: a rank with a short (incomplete) buffer is
-        // detected, where the old `!buffers.is_empty()` was vacuously true.
-        let good = BcastResult::<u32> {
-            stats: RunStats::default(),
-            buffers: vec![vec![1, 2, 3]; 4],
-            m: 3,
-        };
-        assert!(good.all_received());
-        let bad = BcastResult::<u32> {
-            stats: RunStats::default(),
-            buffers: vec![vec![1, 2, 3], vec![1]],
-            m: 3,
-        };
-        assert!(!bad.all_received());
-        let empty = BcastResult::<u32> {
-            stats: RunStats::default(),
-            buffers: Vec::new(),
-            m: 3,
-        };
-        assert!(!empty.all_received());
     }
 }

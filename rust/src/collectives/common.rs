@@ -155,6 +155,23 @@ impl PhasedSchedule {
         Self::build(skips, rel, n, recv, send)
     }
 
+    /// Build from this rank's **own** raw schedule rows as filled by the
+    /// per-rank cores ([`crate::schedule::recv_schedule_into`] /
+    /// [`crate::schedule::send_schedule_into`]) — the O(log p) rank-local
+    /// entry point of the SPMD plane ([`crate::comm::RankComm`]): no
+    /// table, no other rank's rows, just the `2q` entries this processor
+    /// computed for itself.
+    pub fn from_own_rows(
+        skips: Arc<Skips>,
+        rel: usize,
+        recv: &[i64],
+        send: &[i64],
+        n: usize,
+    ) -> Self {
+        let q = skips.q();
+        Self::build(skips, rel, n, recv[..q].iter().copied(), send[..q].iter().copied())
+    }
+
     fn build(
         skips: Arc<Skips>,
         rel: usize,

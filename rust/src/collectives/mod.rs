@@ -12,10 +12,11 @@
 //! | block-count selection (§3) | [`tuning`] | — |
 //!
 //! **Run collectives through [`crate::comm::Communicator`]** — the typed,
-//! schedule-caching front door. This module provides the per-rank state
-//! machines, the shared `build_*_procs` construction loops, and the
-//! deprecated legacy `*_sim` free functions (thin wrappers over a
-//! throwaway `Communicator`, kept for source compatibility).
+//! schedule-caching front door — or, for the paper's per-processor SPMD
+//! model, through [`crate::comm::RankComm`]. This module provides the
+//! per-rank state machines and the shared `build_*_procs` construction
+//! loops. (The legacy `*_sim` free functions and `bcast_procs` finished
+//! their one-release deprecation cycle and were removed.)
 
 pub mod allgatherv;
 pub mod allreduce;
@@ -35,16 +36,3 @@ pub use common::{
 };
 pub use reduce::{build_reduce_procs, ReduceProc};
 pub use reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
-
-// Legacy entry points, re-exported for source compatibility; each is a
-// deprecated wrapper over a throwaway `comm::Communicator`.
-#[allow(deprecated)]
-pub use allgatherv::{allgather_sim, allgatherv_sim};
-#[allow(deprecated)]
-pub use allreduce::allreduce_sim;
-#[allow(deprecated)]
-pub use bcast::{bcast_procs, bcast_sim};
-#[allow(deprecated)]
-pub use reduce::reduce_sim;
-#[allow(deprecated)]
-pub use reduce_scatter::{reduce_scatter_block_sim, reduce_scatter_sim};

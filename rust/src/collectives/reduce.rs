@@ -16,9 +16,7 @@
 
 use std::sync::Arc;
 
-use crate::comm::{Algo, CommError, Communicator, ReduceReq};
-use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc};
 
 use super::common::{BlockGeometry, Element, PhasedSchedule, ReduceOp, ScheduleSource, World};
 
@@ -134,8 +132,8 @@ impl<T: Element> RankProc<T> for ReduceProc<T> {
 }
 
 /// Build all `p` rank state machines from one schedule source — the
-/// shared construction loop used by the [`crate::comm`] backends and the
-/// legacy wrapper alike.
+/// shared construction loop used by the [`crate::comm`] backends (the
+/// SPMD plane builds one machine per rank instead: [`crate::comm::RankComm`]).
 pub fn build_reduce_procs<T: Element>(
     src: &ScheduleSource<'_>,
     root: usize,
@@ -155,48 +153,11 @@ pub fn build_reduce_procs<T: Element>(
     })
 }
 
-/// Result of a simulated reduction.
-pub struct ReduceResult<T> {
-    pub stats: RunStats,
-    /// The reduced buffer at the root.
-    pub buffer: Vec<T>,
-}
-
-/// Run a full reduction to `root` over `p` simulated ranks: `inputs[r]` is
-/// rank `r`'s contribution (all of length `m`), divided into `n` blocks.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call `.reduce(ReduceReq::new(root, inputs, op))`; \
-            it reuses cached schedules across calls and roots"
-)]
-pub fn reduce_sim<T: Element>(
-    inputs: &[Vec<T>],
-    root: usize,
-    n: usize,
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<ReduceResult<T>, SimError> {
-    let p = inputs.len();
-    let comm = Communicator::new(p);
-    let req = ReduceReq::new(root, inputs, op)
-        .blocks(n)
-        .algo(Algo::Circulant)
-        .elem_bytes(elem_bytes);
-    match comm.reduce_with(req, cost) {
-        Ok(out) => Ok(ReduceResult { stats: out.stats, buffer: out.buffers }),
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("reduce_sim: {e}"),
-    }
-}
-
-// The module tests deliberately exercise the deprecated wrapper: it pins
-// the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;
+    use crate::comm::{Algo, Communicator, ReduceReq};
     use crate::sim::cost::UnitCost;
 
     fn check_reduce(p: usize, root: usize, m: usize, n: usize) {
@@ -206,11 +167,18 @@ mod tests {
         let expect: Vec<i64> = (0..m)
             .map(|i| inputs.iter().map(|v| v[i]).sum())
             .collect();
-        let res = reduce_sim(&inputs, root, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
-        assert_eq!(res.buffer, expect, "p={p} root={root} m={m} n={n}");
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .reduce(
+                ReduceReq::new(root, &inputs, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(n),
+            )
+            .unwrap();
+        assert_eq!(out.buffers, expect, "p={p} root={root} m={m} n={n}");
         if p > 1 {
             let q = crate::schedule::ceil_log2(p);
-            assert_eq!(res.stats.rounds, n - 1 + q);
+            assert_eq!(out.stats.rounds, n - 1 + q);
         }
     }
 
@@ -265,7 +233,10 @@ mod tests {
             .collect();
         let expect: Vec<i64> =
             (0..m).map(|i| inputs.iter().map(|v| v[i]).max().unwrap()).collect();
-        let res = reduce_sim(&inputs, 0, 4, Arc::new(MaxOp), 8, &UnitCost).unwrap();
-        assert_eq!(res.buffer, expect);
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .reduce(ReduceReq::new(0, &inputs, Arc::new(MaxOp)).algo(Algo::Circulant).blocks(4))
+            .unwrap();
+        assert_eq!(out.buffers, expect);
     }
 }

@@ -13,9 +13,7 @@
 
 use std::sync::Arc;
 
-use crate::comm::{Algo, CommError, Communicator, ReduceScatterReq};
-use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc};
 
 use super::allgatherv::ScheduleTable;
 use super::common::{BlockGeometry, Element, ReduceOp};
@@ -187,8 +185,8 @@ impl<T: Element> RankProc<T> for ReduceScatterProc<T> {
 }
 
 /// Build all `p` rank state machines over one shared [`ScheduleTable`] —
-/// the shared construction loop used by the [`crate::comm`] backends and
-/// the legacy wrappers alike.
+/// the shared construction loop used by the [`crate::comm`] backends (the
+/// SPMD plane builds one machine per rank over a rank-local table instead).
 pub fn build_reduce_scatter_procs<T: Element>(
     table: Arc<ScheduleTable>,
     counts: Arc<Vec<usize>>,
@@ -200,68 +198,11 @@ pub fn build_reduce_scatter_procs<T: Element>(
     })
 }
 
-/// Result of a simulated all-reduction.
-pub struct ReduceScatterResult<T> {
-    pub stats: RunStats,
-    /// `chunks[r]` = the fully reduced chunk owned by rank `r`.
-    pub chunks: Vec<Vec<T>>,
-}
-
-/// Run the irregular all-reduction: `inputs[r]` is rank `r`'s full vector
-/// (concatenation of per-destination chunks sized by `counts`).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call \
-            `.reduce_scatter(ReduceScatterReq::new(inputs, counts, op))`; \
-            it reuses cached schedules across calls"
-)]
-pub fn reduce_scatter_sim<T: Element>(
-    inputs: &[Vec<T>],
-    counts: &[usize],
-    n: usize,
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<ReduceScatterResult<T>, SimError> {
-    let comm = Communicator::new(inputs.len());
-    let req = ReduceScatterReq::new(inputs, counts, op)
-        .blocks(n)
-        .algo(Algo::Circulant)
-        .elem_bytes(elem_bytes);
-    match comm.reduce_scatter_with(req, cost) {
-        Ok(out) => Ok(ReduceScatterResult { stats: out.stats, chunks: out.buffers }),
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("reduce_scatter_sim: {e}"),
-    }
-}
-
-/// `MPI_Reduce_scatter_block`: equal chunk of `block_elems` per rank.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a persistent `comm::Communicator` and call \
-            `.reduce_scatter_block(ReduceScatterBlockReq::new(inputs, block_elems, op))`"
-)]
-pub fn reduce_scatter_block_sim<T: Element>(
-    inputs: &[Vec<T>],
-    block_elems: usize,
-    n: usize,
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<ReduceScatterResult<T>, SimError> {
-    let p = inputs.len();
-    // (calling the sibling deprecated wrapper is fine: deprecation
-    // warnings are suppressed inside deprecated items)
-    reduce_scatter_sim(inputs, &vec![block_elems; p], n, op, elem_bytes, cost)
-}
-
-// The module tests deliberately exercise the deprecated wrappers: they
-// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;
+    use crate::comm::{Algo, Communicator, ReduceScatterReq};
     use crate::sim::cost::UnitCost;
 
     fn check_reduce_scatter(counts: &[usize], n: usize) {
@@ -272,12 +213,18 @@ mod tests {
             .collect();
         // Expected: elementwise sum, then chunked by counts.
         let sums: Vec<i64> = (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-        let res =
-            reduce_scatter_sim(&inputs, counts, n, Arc::new(SumOp), 8, &UnitCost).unwrap();
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .reduce_scatter(
+                ReduceScatterReq::new(&inputs, counts, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(n),
+            )
+            .unwrap();
         let mut off = 0usize;
         for r in 0..p {
             assert_eq!(
-                res.chunks[r],
+                out.buffers[r],
                 sums[off..off + counts[r]].to_vec(),
                 "rank {r} counts={counts:?} n={n}"
             );
@@ -285,7 +232,7 @@ mod tests {
         }
         if p > 1 {
             let q = crate::schedule::ceil_log2(p);
-            assert_eq!(res.stats.rounds, n - 1 + q);
+            assert_eq!(out.stats.rounds, n - 1 + q);
         }
     }
 
@@ -328,13 +275,20 @@ mod tests {
     fn reduce_scatter_volume_optimal() {
         // Observation 1.4: p-1 blocks sent and received per rank (n = 1,
         // equal blocks): total messages' volume = p(p-1) blocks.
+        use crate::comm::ReduceScatterBlockReq;
         let p = 16usize;
         let b = 4usize;
         let inputs: Vec<Vec<i64>> =
             (0..p).map(|r| (0..p * b).map(|i| (r + i) as i64).collect()).collect();
-        let res = reduce_scatter_block_sim(&inputs, b, 1, Arc::new(SumOp), 8, &UnitCost)
+        let comm = Communicator::builder(p).cost_model(UnitCost).build();
+        let out = comm
+            .reduce_scatter_block(
+                ReduceScatterBlockReq::new(&inputs, b, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(1),
+            )
             .unwrap();
-        let total_blocks = res.stats.bytes / (8 * b);
+        let total_blocks = out.stats.bytes / (8 * b);
         assert_eq!(total_blocks, p * (p - 1), "volume should be exactly p(p-1) blocks");
     }
 }

@@ -12,8 +12,7 @@
 
 use std::sync::Arc;
 
-use crate::sim::cost::CostModel;
-use crate::sim::network::{Msg, RankProc, RunStats, SimError};
+use crate::sim::network::{Msg, RankProc};
 
 use super::common::{Element, ReduceOp};
 
@@ -248,38 +247,26 @@ impl<T: Element> RankProc<T> for RhalvingProc<T> {
     }
 }
 
-/// Simulate recursive-halving reduce-scatter (equal `chunk` per rank).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `comm::Communicator::reduce_scatter_block` with `Algo::RecursiveHalving`"
-)]
-pub fn rhalving_reduce_scatter_sim<T: Element>(
-    inputs: &[Vec<T>],
-    chunk: usize,
-    op: Arc<dyn ReduceOp<T>>,
-    elem_bytes: usize,
-    cost: &dyn CostModel,
-) -> Result<(RunStats, Vec<Vec<T>>), SimError> {
-    use crate::comm::{Algo, CommError, Communicator, ReduceScatterBlockReq};
-    let comm = Communicator::new(inputs.len());
-    let req = ReduceScatterBlockReq::new(inputs, chunk, op)
-        .algo(Algo::RecursiveHalving)
-        .elem_bytes(elem_bytes);
-    match comm.reduce_scatter_block_with(req, cost) {
-        Ok(out) => Ok((out.stats, out.buffers)),
-        Err(CommError::Sim(e)) => Err(e),
-        Err(e) => panic!("rhalving_reduce_scatter_sim: {e}"),
-    }
-}
-
-// The module tests deliberately exercise the deprecated wrappers: they
-// pin the delegation to `comm::Communicator` to the historical behavior.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::collectives::common::SumOp;
+    use crate::comm::{Algo, Communicator, ReduceScatterBlockReq};
     use crate::sim::UnitCost;
+
+    fn rhalving(
+        inputs: &[Vec<i64>],
+        chunk: usize,
+    ) -> (crate::sim::RunStats, Vec<Vec<i64>>) {
+        let comm = Communicator::builder(inputs.len()).cost_model(UnitCost).build();
+        let out = comm
+            .reduce_scatter_block(
+                ReduceScatterBlockReq::new(inputs, chunk, Arc::new(SumOp))
+                    .algo(Algo::RecursiveHalving),
+            )
+            .unwrap();
+        (out.stats, out.buffers)
+    }
 
     fn check(p: usize, chunk: usize) {
         let total = p * chunk;
@@ -288,9 +275,7 @@ mod tests {
             .collect();
         let sums: Vec<i64> =
             (0..total).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-        let (_, chunks) =
-            rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost)
-                .unwrap();
+        let (_, chunks) = rhalving(&inputs, chunk);
         for r in 0..p {
             assert_eq!(chunks[r], sums[r * chunk..(r + 1) * chunk].to_vec(), "p={p} r={r}");
         }
@@ -323,27 +308,33 @@ mod tests {
         // full extra vector through one port — the per-rank bottleneck
         // volume inflates ~1.5x, while the circulant algorithm stays at
         // the optimal p-1 blocks through every port for every p.
-        use crate::collectives::reduce_scatter_block_sim;
         let chunk = 16usize;
+        let circulant = |inputs: &[Vec<i64>]| {
+            let comm = Communicator::builder(inputs.len()).cost_model(UnitCost).build();
+            comm.reduce_scatter_block(
+                ReduceScatterBlockReq::new(inputs, chunk, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(1),
+            )
+            .unwrap()
+            .stats
+        };
         for p in [15usize, 31, 63] {
             let inputs: Vec<Vec<i64>> =
                 (0..p).map(|r| (0..p * chunk).map(|i| (r + i) as i64).collect()).collect();
-            let (rh, _) =
-                rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost)
-                    .unwrap();
-            let circ = reduce_scatter_block_sim(&inputs, chunk, 1, Arc::new(SumOp), 8, &UnitCost)
-                .unwrap();
+            let (rh, _) = rhalving(&inputs, chunk);
+            let circ = circulant(&inputs);
             assert!(
-                rh.bytes >= circ.stats.bytes,
+                rh.bytes >= circ.bytes,
                 "p={p}: rh bytes={} circ bytes={}",
                 rh.bytes,
-                circ.stats.bytes
+                circ.bytes
             );
             assert!(
-                rh.max_rank_bytes as f64 > 1.4 * circ.stats.max_rank_bytes as f64,
+                rh.max_rank_bytes as f64 > 1.4 * circ.max_rank_bytes as f64,
                 "p={p}: rh max/rank={} circ max/rank={}",
                 rh.max_rank_bytes,
-                circ.stats.max_rank_bytes
+                circ.max_rank_bytes
             );
         }
         // And for p just above a power of two, the overhead is small —
@@ -351,10 +342,8 @@ mod tests {
         let p = 17usize;
         let inputs: Vec<Vec<i64>> =
             (0..p).map(|r| (0..p * chunk).map(|i| (r + i) as i64).collect()).collect();
-        let (rh, _) =
-            rhalving_reduce_scatter_sim(&inputs, chunk, Arc::new(SumOp), 8, &UnitCost).unwrap();
-        let circ =
-            reduce_scatter_block_sim(&inputs, chunk, 1, Arc::new(SumOp), 8, &UnitCost).unwrap();
-        assert!((rh.bytes as f64) < 1.1 * circ.stats.bytes as f64);
+        let (rh, _) = rhalving(&inputs, chunk);
+        let circ = circulant(&inputs);
+        assert!((rh.bytes as f64) < 1.1 * circ.bytes as f64);
     }
 }

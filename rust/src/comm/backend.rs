@@ -25,13 +25,28 @@
 //!   runs on the lockstep [`Network`], which is what this trait impl
 //!   does.
 //!
+//! * [`SpmdBackend`] — the SPMD rank plane ([`super::rank`]): one OS
+//!   thread per rank over [`super::transport::ThreadTransport`]
+//!   mailboxes, each rank driven through the one-ported round loop —
+//!   the first backend where ranks genuinely execute concurrently over
+//!   a pluggable transport rather than being simulated. For the
+//!   circulant collectives the [`super::Communicator`] bypasses this
+//!   generic entry point entirely and fans the request out to `p`
+//!   [`super::RankComm`]s (each computing only its own O(log p)
+//!   schedule — no table); generic state machines land here and are
+//!   driven over the same transport.
+//!
 //! All sit behind one [`ExecBackend`] trait; [`BackendKind`] is the
 //! value-level selector a [`super::Communicator`] stores.
 
 use crate::collectives::common::Element;
 use crate::sim::cost::CostModel;
 use crate::sim::network::{Network, RankProc, RunStats, SimError};
-use crate::sim::threads::run_threaded_stats;
+use crate::sim::threads::{fold_send_logs, run_threaded_stats};
+
+use super::outcome::CommError;
+use super::rank::{close_after, collect_ranks, drive_proc};
+use super::transport::{ThreadTransport, Transport, TransportError};
 
 /// A way of driving `p` rank state machines to completion.
 pub trait ExecBackend {
@@ -128,6 +143,114 @@ impl ExecBackend for EngineBackend {
     }
 }
 
+/// The SPMD rank plane as an [`ExecBackend`].
+///
+/// The typed circulant collectives never reach this generic entry point
+/// under [`BackendKind::Spmd`] — the [`super::Communicator`] fans them
+/// out to per-rank [`super::RankComm`]s directly (each rank computing
+/// only its own O(log p) schedule). What lands here are generic
+/// [`RankProc`] state machines (baseline algorithms, custom procs):
+/// each runs on its own OS thread over a
+/// [`super::transport::ThreadTransport`] endpoint, driven by the shared
+/// one-ported round loop, with the lockstep statistics fold.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpmdBackend;
+
+impl ExecBackend for SpmdBackend {
+    fn name(&self) -> &'static str {
+        "spmd"
+    }
+
+    fn execute<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        run_transport_stats(procs, elem_bytes, cost)
+    }
+}
+
+/// Drive generic rank state machines over [`ThreadTransport`] — one OS
+/// thread per rank, free-running, with the identical statistics fold as
+/// the lockstep/threaded backends. World teardown (`close_after`) and
+/// error triage (`collect_ranks`) are the rank plane's own machinery,
+/// so the Spmd backend and the `RankComm` fan-outs surface identical
+/// root causes; the selected error maps back onto [`SimError`] (they
+/// share its vocabulary).
+pub(crate) fn run_transport_stats<T, P>(
+    procs: Vec<P>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<P>), SimError>
+where
+    T: Element,
+    P: RankProc<T> + Send,
+{
+    let p = procs.len();
+    let total_rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
+    let world = ThreadTransport::<T>::world(p);
+    let results: Vec<Result<(P, Vec<(usize, usize, usize)>), CommError>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = procs
+                .into_iter()
+                .zip(world)
+                .map(|(mut pr, mut tr)| {
+                    s.spawn(move || {
+                        // A panicking proc (schedule-violation diagnostics
+                        // panic, as on the threaded backend) must still
+                        // bring the world down so siblings fail fast.
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || drive_proc(&mut pr, &mut tr, 0).map_err(CommError::Transport),
+                        ));
+                        match res {
+                            Ok(inner) => {
+                                close_after::<T, _, _>(&mut tr, inner).map(|run| (pr, run.sends))
+                            }
+                            Err(payload) => {
+                                let _ = tr.close(Some("rank thread panicked"));
+                                std::panic::resume_unwind(payload);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("spmd rank thread panicked"))
+                .collect()
+        });
+
+    let (done, logs): (Vec<_>, Vec<_>) = collect_ranks(results)
+        .map_err(transport_root_to_sim)?
+        .into_iter()
+        .unzip();
+    Ok((fold_send_logs(&logs, total_rounds, elem_bytes, cost), done))
+}
+
+/// Map the triaged root cause of a generic SPMD run back onto the
+/// lockstep error vocabulary ([`ExecBackend`]'s error type).
+fn transport_root_to_sim(e: CommError) -> SimError {
+    match e {
+        CommError::Transport(TransportError::Machine(s)) => s,
+        // The starved victim's own deadline: exactly a missing message.
+        CommError::Transport(TransportError::Timeout { rank, round, from }) => {
+            SimError::MissingMessage { round, rank, expected_from: from }
+        }
+        // Echoes / driver bugs that the triage only surfaces when no
+        // better root cause exists anywhere in the world.
+        CommError::Transport(
+            TransportError::Shutdown { rank, round, .. }
+            | TransportError::OutOfRound { rank, round, .. },
+        ) => SimError::MissingMessage { round, rank, expected_from: rank },
+        other => unreachable!("generic SPMD drive can only fail with transport errors: {other}"),
+    }
+}
+
 /// Value-level backend selector stored by a [`super::Communicator`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
@@ -137,6 +260,12 @@ pub enum BackendKind {
     /// The sparse million-rank engine (circulant bcast/reduce run on
     /// [`crate::sim::engine::CirculantEngine`]; everything else lockstep).
     Engine,
+    /// The SPMD rank plane: circulant collectives fan out to per-rank
+    /// [`super::RankComm`]s over
+    /// [`super::transport::ThreadTransport`] (one real thread per rank,
+    /// per-rank O(log p) schedules, no shared table); generic procs run
+    /// on [`SpmdBackend`] over the same transport.
+    Spmd,
 }
 
 impl BackendKind {
@@ -145,6 +274,7 @@ impl BackendKind {
             BackendKind::Lockstep => LockstepBackend.name(),
             BackendKind::Threaded => ThreadedBackend.name(),
             BackendKind::Engine => EngineBackend.name(),
+            BackendKind::Spmd => SpmdBackend.name(),
         }
     }
 
@@ -154,6 +284,7 @@ impl BackendKind {
             "lockstep" | "network" => BackendKind::Lockstep,
             "threaded" | "threads" => BackendKind::Threaded,
             "engine" | "sparse" => BackendKind::Engine,
+            "spmd" | "rank" => BackendKind::Spmd,
             _ => return None,
         })
     }
@@ -182,6 +313,7 @@ impl BackendKind {
             BackendKind::Lockstep => LockstepBackend.execute::<T, P>(procs, elem_bytes, cost),
             BackendKind::Threaded => ThreadedBackend.execute::<T, P>(procs, elem_bytes, cost),
             BackendKind::Engine => EngineBackend.execute::<T, P>(procs, elem_bytes, cost),
+            BackendKind::Spmd => SpmdBackend.execute::<T, P>(procs, elem_bytes, cost),
         }
     }
 }
@@ -247,6 +379,7 @@ mod tests {
         assert_eq!(BackendKind::Lockstep.name(), "lockstep");
         assert_eq!(BackendKind::Threaded.name(), "threaded");
         assert_eq!(BackendKind::Engine.name(), "engine");
+        assert_eq!(BackendKind::Spmd.name(), "spmd");
         assert_eq!(BackendKind::default(), BackendKind::Lockstep);
         let (stats, _) =
             BackendKind::Threaded.execute::<u32, Shift>(shifts(4), 4, &UnitCost).unwrap();
@@ -263,6 +396,25 @@ mod tests {
         assert_eq!(BackendKind::parse("threaded"), Some(BackendKind::Threaded));
         assert_eq!(BackendKind::parse("engine"), Some(BackendKind::Engine));
         assert_eq!(BackendKind::parse("sparse"), Some(BackendKind::Engine));
+        assert_eq!(BackendKind::parse("spmd"), Some(BackendKind::Spmd));
+        assert_eq!(BackendKind::parse("rank"), Some(BackendKind::Spmd));
         assert!(BackendKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn spmd_backend_drives_generic_procs_like_lockstep() {
+        let p = 6usize;
+        let (ls, lprocs) =
+            LockstepBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        let (ss, sprocs) = SpmdBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        assert_eq!(ls.rounds, ss.rounds);
+        assert_eq!(ls.messages, ss.messages);
+        assert_eq!(ls.bytes, ss.bytes);
+        assert_eq!(ls.active_rounds, ss.active_rounds);
+        assert_eq!(ls.max_rank_bytes, ss.max_rank_bytes);
+        assert!((ls.time - ss.time).abs() < 1e-12);
+        for (a, b) in lprocs.iter().zip(&sprocs) {
+            assert_eq!(a.val, b.val);
+        }
     }
 }

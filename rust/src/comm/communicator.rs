@@ -23,6 +23,10 @@ use crate::sim::network::{RankProc, RunStats, SimError};
 use super::backend::{build_procs, BackendKind};
 use super::nonblocking::Pending;
 use super::outcome::{CommError, Outcome};
+use super::rank::{
+    spmd_allgatherv, spmd_allreduce, spmd_bcast, spmd_reduce, spmd_reduce_scatter,
+    TransportKind,
+};
 use super::request::{
     Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq, ReduceScatterBlockReq,
     ReduceScatterReq, TuningParams,
@@ -319,6 +323,22 @@ impl Communicator {
                 let bufs: Vec<Vec<T>> = (0..p).map(|_| req.data.to_vec()).collect();
                 (stats, bufs)
             }
+            Algo::Circulant if self.backend == BackendKind::Spmd => {
+                // The SPMD rank plane: p RankComms over ThreadTransport,
+                // each computing only its own O(log p) schedule — the
+                // whole-machine ScheduleTable is never touched.
+                let n = self.blocks_for(Kind::Bcast, m, req.blocks);
+                let (stats, bufs) = spmd_bcast(
+                    &self.sk,
+                    req.root,
+                    req.data,
+                    n,
+                    req.elem_bytes,
+                    cost,
+                    TransportKind::Threads,
+                )?;
+                (stats, bufs)
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::Bcast, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
@@ -404,6 +424,20 @@ impl Communicator {
                     eng.run_reduce(req.inputs, req.op.as_ref(), req.elem_bytes, cost)?;
                 (stats, buffer)
             }
+            Algo::Circulant if self.backend == BackendKind::Spmd => {
+                let n = self.blocks_for(Kind::Reduce, m, req.blocks);
+                let (stats, buffer) = spmd_reduce(
+                    &self.sk,
+                    req.root,
+                    req.inputs,
+                    n,
+                    req.op.clone(),
+                    req.elem_bytes,
+                    cost,
+                    TransportKind::Threads,
+                )?;
+                (stats, buffer)
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::Reduce, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
@@ -485,6 +519,18 @@ impl Communicator {
         let counts = Arc::new(req.inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
         let algo = req.algo.resolve(Kind::Allgatherv, total, req.elem_bytes, req.blocks);
         let (stats, buffers) = match algo {
+            Algo::Circulant if self.backend == BackendKind::Spmd => {
+                let n = self.blocks_for(Kind::Allgatherv, total, req.blocks);
+                let (stats, bufs) = spmd_allgatherv(
+                    &self.sk,
+                    req.inputs,
+                    n,
+                    req.elem_bytes,
+                    cost,
+                    TransportKind::Threads,
+                )?;
+                (stats, bufs)
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::Allgatherv, total, req.blocks);
                 let table = self.table(n);
@@ -556,6 +602,20 @@ impl Communicator {
         let counts = Arc::new(req.counts.to_vec());
         let algo = req.algo.resolve(Kind::ReduceScatter, total, req.elem_bytes, req.blocks);
         let (stats, chunks) = match algo {
+            Algo::Circulant if self.backend == BackendKind::Spmd => {
+                let n = self.blocks_for(Kind::ReduceScatter, total, req.blocks);
+                let (stats, chunks) = spmd_reduce_scatter(
+                    &self.sk,
+                    req.inputs,
+                    req.counts,
+                    n,
+                    req.op.clone(),
+                    req.elem_bytes,
+                    cost,
+                    TransportKind::Threads,
+                )?;
+                (stats, chunks)
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::ReduceScatter, total, req.blocks);
                 let table = self.table(n);
@@ -664,8 +724,8 @@ impl Communicator {
         Ok(Outcome { rounds: stats.rounds, stats, buffers, algo, complete, machine_span: None })
     }
 
-    /// The two phases' stats separately (kept for the legacy
-    /// `allreduce_sim` result shape).
+    /// The two phases' stats separately (the per-phase shape the
+    /// traffic plane and the SPMD fan-out share).
     pub(crate) fn allreduce_parts_with<T: Element>(
         &self,
         req: AllreduceReq<'_, T>,
@@ -691,6 +751,19 @@ impl Communicator {
         let counts = Arc::new(counts);
         let algo = req.algo.resolve(Kind::Allreduce, m, req.elem_bytes, req.blocks);
         match algo {
+            Algo::Circulant if self.backend == BackendKind::Spmd => {
+                let n = self.blocks_for(Kind::Allreduce, m, req.blocks);
+                let (rs_stats, ag_stats, buffers) = spmd_allreduce(
+                    &self.sk,
+                    req.inputs,
+                    n,
+                    req.op.clone(),
+                    req.elem_bytes,
+                    cost,
+                    TransportKind::Threads,
+                )?;
+                Ok((rs_stats, ag_stats, buffers, algo))
+            }
             Algo::Circulant => {
                 let n = self.blocks_for(Kind::Allreduce, m, req.blocks);
                 let table = self.table(n);

@@ -41,9 +41,28 @@
 //! assert_eq!(out.buffers[5], data);
 //! ```
 //!
-//! The legacy `*_sim` free functions in [`crate::collectives`] are
-//! deprecated thin wrappers over a throwaway `Communicator`; new code
-//! should build one handle and keep it.
+//! (The legacy `*_sim` free functions that once wrapped a throwaway
+//! `Communicator` completed their deprecation cycle and are gone; build
+//! one handle and keep it.)
+//!
+//! ## The rank plane
+//!
+//! The `Communicator` is a *god view*: one caller owns every rank's
+//! buffers. The paper's programming model is the opposite — each
+//! processor computes its own O(log p) schedule independently, with no
+//! communication — and the SPMD rank plane gives it an API:
+//! [`RankComm`] is a per-rank handle (built from `(p, r)` + a shared
+//! `Arc<Skips>`) exposing rank-local `bcast`/`reduce`/`allgatherv`/
+//! `reduce_scatter`/`allreduce` over caller-owned `&mut [T]` buffers,
+//! driven round by round through a pluggable [`Transport`]:
+//! [`ThreadTransport`] (a real one-thread-per-rank runtime with
+//! mutex/condvar mailboxes) or [`LoopbackTransport`] (a lockstep
+//! round-barrier replay with the full machine-model check set). The
+//! god view is one client of the same plane:
+//! [`BackendKind::Spmd`] fans each circulant request out to `p`
+//! `RankComm`s over `ThreadTransport` and reassembles the usual
+//! [`Outcome`] — bit-identical to the lockstep backend
+//! (`tests/spmd_parity.rs`). See [`rank`] and [`transport`].
 //!
 //! ## The traffic plane
 //!
@@ -63,12 +82,17 @@ pub mod backend;
 pub mod communicator;
 pub mod nonblocking;
 pub mod outcome;
+pub mod rank;
 pub mod request;
 pub mod traffic;
+pub mod transport;
 
 pub use backend::{
-    build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, ThreadedBackend,
+    build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, SpmdBackend,
+    ThreadedBackend,
 };
+pub use rank::{RankComm, RankRun, TransportKind};
+pub use transport::{LoopbackTransport, ThreadTransport, Transport, TransportError};
 pub use communicator::{CommBuilder, Communicator};
 pub use nonblocking::{
     IallgathervReq, IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Pending, Window,

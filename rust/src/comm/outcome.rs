@@ -4,6 +4,7 @@
 use crate::sim::network::{RunStats, SimError};
 
 use super::request::{Algo, Kind};
+use super::transport::TransportError;
 
 /// What every collective returns: run statistics, the result buffers
 /// (shape depends on the collective — see each method's docs), the
@@ -36,9 +37,10 @@ pub struct Outcome<B> {
 }
 
 impl<B> Outcome<B> {
-    /// Per-rank completion of the whole collective. Unlike the legacy
-    /// `BcastResult::all_received` (which only checked that *some* buffers
-    /// existed), this reflects the actual per-rank block bookkeeping.
+    /// Per-rank completion of the whole collective. Unlike the
+    /// long-removed legacy `BcastResult::all_received` (which only
+    /// checked that *some* buffers existed), this reflects the actual
+    /// per-rank block bookkeeping.
     pub fn all_received(&self) -> bool {
         self.complete
     }
@@ -60,6 +62,11 @@ pub enum CommError {
     BadRequest(String),
     /// A rank ended the run missing blocks (per-rank completion check).
     Incomplete { kind: Kind, rank: usize },
+    /// The SPMD rank plane's transport failed: a machine-model
+    /// violation surfaced by a [`crate::comm::Transport`] (in the same
+    /// [`SimError`] vocabulary as [`CommError::Sim`]), a round-discipline
+    /// misuse, a shutdown echo, or a timeout.
+    Transport(TransportError),
 }
 
 impl std::fmt::Display for CommError {
@@ -73,6 +80,7 @@ impl std::fmt::Display for CommError {
             CommError::Incomplete { kind, rank } => {
                 write!(f, "{kind:?}: rank {rank} finished incomplete (missing blocks)")
             }
+            CommError::Transport(e) => write!(f, "rank-plane transport failure: {e}"),
         }
     }
 }
@@ -81,6 +89,7 @@ impl std::error::Error for CommError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             CommError::Sim(e) => Some(e),
+            CommError::Transport(e) => Some(e),
             _ => None,
         }
     }
@@ -89,5 +98,11 @@ impl std::error::Error for CommError {
 impl From<SimError> for CommError {
     fn from(e: SimError) -> Self {
         CommError::Sim(e)
+    }
+}
+
+impl From<TransportError> for CommError {
+    fn from(e: TransportError) -> Self {
+        CommError::Transport(e)
     }
 }

@@ -1,0 +1,865 @@
+//! The SPMD rank plane: a per-rank [`RankComm`] handle that runs the
+//! paper's collectives the way the paper says processors do — **each
+//! rank computes only its own O(log p) schedule, independently, without
+//! communication**, and exchanges messages through a pluggable
+//! [`Transport`].
+//!
+//! Every public entry point elsewhere in this crate is a "god view": one
+//! caller owns all `p` ranks' inputs and a whole-machine schedule table
+//! serves the backends. A `RankComm` is the opposite — the MPI-shaped
+//! programming model: constructed per rank from `(p, r)` + a shared
+//! `Arc<Skips>` (the O(log p) skip table every rank derives from `p`
+//! alone), it computes **only its own** recv/send rows with the per-rank
+//! cores ([`crate::schedule::recv_schedule_into`] /
+//! [`crate::schedule::send_schedule_into`]) and binds only caller-owned
+//! `&mut [T]` buffers:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use circulant_bcast::comm::{RankComm, ThreadTransport};
+//! use circulant_bcast::schedule::Skips;
+//!
+//! let p = 8;
+//! let sk = Arc::new(Skips::new(p));
+//! std::thread::scope(|s| {
+//!     for (r, mut tr) in ThreadTransport::<i64>::world(p).into_iter().enumerate() {
+//!         let sk = sk.clone();
+//!         s.spawn(move || {
+//!             let rc = RankComm::new(p, r, sk);          // O(log p) state
+//!             let mut buf = vec![r as i64; 1024];        // caller-owned
+//!             rc.allreduce(&mut tr, &mut buf, 4,
+//!                 Arc::new(circulant_bcast::collectives::SumOp)).unwrap();
+//!         });
+//!     }
+//! });
+//! ```
+//!
+//! # Per-rank schedule state
+//!
+//! * **Rooted collectives** ([`RankComm::bcast`], [`RankComm::reduce`])
+//!   — the hot path: `2q` i8-sized entries (one recv row + one send row
+//!   at this rank's root-relative position), recomputed in O(log p) per
+//!   call. No [`crate::schedule::ScheduleTable`], no other rank's row,
+//!   ever: per-rank schedule state is O(log p), not O(p log p) —
+//!   exactly the paper's Theorem 2/3 discipline.
+//! * **All-collectives** ([`RankComm::allgatherv`],
+//!   [`RankComm::reduce_scatter`], [`RankComm::allreduce`]) — Algorithm
+//!   7 has every processor participate in `p` concurrent broadcasts, so
+//!   each rank computes its *own* relative row for every root `j`
+//!   (positions `(r - j) mod p`, which sweep all `p` relative ranks):
+//!   Θ(p log p) per rank, proportional to the `p` result buffers the
+//!   rank must hold anyway, still rank-local and communication-free
+//!   ([`crate::collectives::allgatherv::ScheduleTable::build_rank_local`]).
+//!
+//! # Driving and the round discipline
+//!
+//! Each collective is one pass of the one-ported round loop over the
+//! [`Transport`]: per round — at most one send, a flush, at most one
+//! receive — then a close. The transport chooses the execution style:
+//! [`ThreadTransport`] is the real one-thread-per-rank runtime (ranks
+//! genuinely concurrent, free-running), [`LoopbackTransport`] replays
+//! the lockstep round barrier with the full machine-model check set.
+//! The differential suite (`tests/spmd_parity.rs`) pins both
+//! bit-identical to the god-view backends.
+//!
+//! # The fan-out bridge
+//!
+//! [`spmd_bcast`] and friends fan a god-view request out to `p`
+//! `RankComm`s (one scoped thread per rank over the chosen transport)
+//! and reassemble a god-view result with the lockstep statistics
+//! accounting — this is what [`crate::comm::BackendKind::Spmd`] runs
+//! under the [`crate::comm::Communicator`].
+
+use std::sync::Arc;
+
+use crate::collectives::allgatherv::{AllgathervProc, ScheduleTable as AgScheduleTable};
+use crate::collectives::bcast::BcastProc;
+use crate::collectives::common::{BlockGeometry, Element, PhasedSchedule, ReduceOp};
+use crate::collectives::reduce::ReduceProc;
+use crate::collectives::reduce_scatter::ReduceScatterProc;
+use crate::schedule::recv::MAX_Q;
+use crate::schedule::{recv_schedule_into, send_schedule_into, Skips};
+use crate::sim::cost::CostModel;
+use crate::sim::network::{Msg, RankProc, RunStats};
+use crate::sim::threads::fold_send_logs;
+
+use super::outcome::CommError;
+use super::request::Kind;
+use super::transport::{LoopbackTransport, ThreadTransport, Transport, TransportError};
+
+/// Per-rank receipts of one collective run: what this rank did, in its
+/// own frame. The fan-out helpers fold all `p` of these into the exact
+/// god-view [`RunStats`] a lockstep run would report.
+#[derive(Debug, Clone, Default)]
+pub struct RankRun {
+    /// Rounds this rank's state machine spans (including no-op rounds).
+    pub rounds: usize,
+    /// This rank's sends as `(round, to, payload elements)`, in round
+    /// order (rounds are collective-local; multi-phase collectives
+    /// report one `RankRun` per phase).
+    pub sends: Vec<(usize, usize, usize)>,
+    /// Messages this rank received.
+    pub recvs: usize,
+}
+
+/// A per-rank communicator handle — see the module docs for the model.
+///
+/// State is `(p, rank, Arc<Skips>)`: O(log p). Schedules are computed
+/// per call (they are root-relative), also in O(log p) for the rooted
+/// collectives — the paper's headline cost, paid where the paper says
+/// it is paid: on every processor, independently.
+pub struct RankComm {
+    p: usize,
+    rank: usize,
+    sk: Arc<Skips>,
+}
+
+impl RankComm {
+    /// Handle for `rank` of a `p`-rank world sharing the skip table
+    /// `sk` (every rank derives the same `Skips` from `p` alone — the
+    /// `Arc` is an in-process convenience, not shared schedule state).
+    pub fn new(p: usize, rank: usize, sk: Arc<Skips>) -> Self {
+        assert!(p > 0, "a world needs at least one rank");
+        assert!(rank < p, "rank {rank} out of range for p = {p}");
+        assert_eq!(sk.p(), p, "skip table built for a different p");
+        RankComm { p, rank, sk }
+    }
+
+    /// [`RankComm::new`] computing its own skip table (O(log p)).
+    pub fn for_rank(p: usize, rank: usize) -> Self {
+        Self::new(p, rank, Arc::new(Skips::new(p)))
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// `q = ceil(log2 p)`.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.sk.q()
+    }
+
+    #[inline]
+    pub fn skips(&self) -> &Arc<Skips> {
+        &self.sk
+    }
+
+    /// This rank's own phased schedule for a collective rooted at
+    /// `root` with `n` blocks: the per-rank cores fill two stack rows
+    /// (zero heap beyond the returned O(log p) schedule), nothing else.
+    fn own_phased(&self, root: usize, n: usize) -> PhasedSchedule {
+        let rel = (self.rank + self.p - root % self.p) % self.p;
+        let mut recv = [0i64; MAX_Q];
+        let mut send = [0i64; MAX_Q];
+        let bb = recv_schedule_into(&self.sk, rel, &mut recv);
+        send_schedule_into(&self.sk, rel, bb, &mut send);
+        PhasedSchedule::from_own_rows(self.sk.clone(), rel, &recv, &send, n)
+    }
+
+    fn check_call<T, Tr: Transport<T>>(
+        &self,
+        tr: &Tr,
+        blocks: usize,
+    ) -> Result<(), CommError> {
+        if tr.p() != self.p || tr.rank() != self.rank {
+            return Err(CommError::BadRequest(format!(
+                "transport endpoint is rank {}/{} but this handle is rank {}/{}",
+                tr.rank(),
+                tr.p(),
+                self.rank,
+                self.p
+            )));
+        }
+        if blocks == 0 {
+            return Err(CommError::BadRequest("block count must be >= 1".to_string()));
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Rooted collectives: O(log p) schedule state
+    // ---------------------------------------------------------------
+
+    /// Rank-local `MPI_Bcast` (Algorithm 1, `blocks` pipeline blocks):
+    /// at `root`, `buf` holds the payload; everywhere else its contents
+    /// are overwritten with the received payload. All ranks must pass
+    /// the same `root`, `buf.len()` and `blocks` — the SPMD contract.
+    pub fn bcast<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        root: usize,
+        buf: &mut [T],
+        blocks: usize,
+    ) -> Result<RankRun, CommError> {
+        // Validation failures go through close_after too: an invalid
+        // call on one rank must still bring the world down instead of
+        // leaving siblings blocked until their timeout.
+        let res = self.bcast_inner(tr, root, buf, blocks);
+        close_after::<T, Tr, _>(tr, res)
+    }
+
+    fn bcast_inner<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        root: usize,
+        buf: &mut [T],
+        blocks: usize,
+    ) -> Result<RankRun, CommError> {
+        self.check_call::<T, Tr>(tr, blocks)?;
+        self.check_root(root, "bcast")?;
+        let geom = BlockGeometry::new(buf.len(), blocks);
+        let ps = self.own_phased(root, blocks);
+        let data = if self.rank == root { Some(&buf[..]) } else { None };
+        let mut proc_ = BcastProc::with_schedule(ps, self.rank, root, geom, data);
+        let run = drive_proc(&mut proc_, tr, 0).map_err(CommError::Transport)?;
+        if !proc_.complete() {
+            return Err(CommError::Incomplete { kind: Kind::Bcast, rank: self.rank });
+        }
+        buf.copy_from_slice(&proc_.into_buffer());
+        Ok(run)
+    }
+
+    /// Rank-local `MPI_Reduce` (reversed schedules, Observation 1.3):
+    /// every rank contributes `buf`; at `root`, `buf` is overwritten
+    /// with the elementwise ⊕ over all ranks (non-root buffers are left
+    /// untouched).
+    pub fn reduce<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        root: usize,
+        buf: &mut [T],
+        blocks: usize,
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Result<RankRun, CommError> {
+        let res = self.reduce_inner(tr, root, buf, blocks, op);
+        close_after::<T, Tr, _>(tr, res)
+    }
+
+    fn reduce_inner<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        root: usize,
+        buf: &mut [T],
+        blocks: usize,
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Result<RankRun, CommError> {
+        self.check_call::<T, Tr>(tr, blocks)?;
+        self.check_root(root, "reduce")?;
+        let geom = BlockGeometry::new(buf.len(), blocks);
+        let ps = self.own_phased(root, blocks);
+        let mut proc_ = ReduceProc::with_schedule(ps, self.rank, root, geom, buf, op);
+        let run = drive_proc(&mut proc_, tr, 0).map_err(CommError::Transport)?;
+        if self.rank == root {
+            buf.copy_from_slice(&proc_.into_buffer());
+        }
+        Ok(run)
+    }
+
+    // ---------------------------------------------------------------
+    // All-collectives: Θ(p log p) rank-local schedule state (Alg. 7)
+    // ---------------------------------------------------------------
+
+    /// Rank-local `MPI_Allgatherv` (Algorithm 7): `buf` is the full
+    /// concatenated result buffer (`sum(counts)` elements) with this
+    /// rank's own segment pre-filled; on success every segment is
+    /// filled with its root's contribution.
+    pub fn allgatherv<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        counts: &[usize],
+        buf: &mut [T],
+        blocks: usize,
+    ) -> Result<RankRun, CommError> {
+        let res = self.allgatherv_inner(tr, counts, buf, blocks);
+        close_after::<T, Tr, _>(tr, res)
+    }
+
+    fn allgatherv_inner<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        counts: &[usize],
+        buf: &mut [T],
+        blocks: usize,
+    ) -> Result<RankRun, CommError> {
+        self.check_call::<T, Tr>(tr, blocks)?;
+        self.check_counts(counts, buf.len(), "allgatherv")?;
+        let table = AgScheduleTable::build_rank_local(&self.sk, blocks);
+        let off_r: usize = counts[..self.rank].iter().sum();
+        let own = &buf[off_r..off_r + counts[self.rank]];
+        let mut proc_ =
+            AllgathervProc::new(table, Arc::new(counts.to_vec()), self.rank, own);
+        let run = drive_proc(&mut proc_, tr, 0).map_err(CommError::Transport)?;
+        if !proc_.complete() {
+            return Err(CommError::Incomplete { kind: Kind::Allgatherv, rank: self.rank });
+        }
+        scatter_rows(buf, counts, proc_.into_buffers());
+        Ok(run)
+    }
+
+    /// Rank-local `MPI_Reduce_scatter` (reversed Algorithm 7,
+    /// Observation 1.4): `input` is this rank's full contribution
+    /// (`sum(counts)` elements, concatenated per destination); `out`
+    /// (`counts[rank]` elements) receives this rank's fully reduced
+    /// chunk.
+    pub fn reduce_scatter<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        counts: &[usize],
+        input: &[T],
+        out: &mut [T],
+        blocks: usize,
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Result<RankRun, CommError> {
+        let res = self.reduce_scatter_inner(tr, counts, input, out, blocks, op);
+        close_after::<T, Tr, _>(tr, res)
+    }
+
+    fn reduce_scatter_inner<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        counts: &[usize],
+        input: &[T],
+        out: &mut [T],
+        blocks: usize,
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Result<RankRun, CommError> {
+        self.check_call::<T, Tr>(tr, blocks)?;
+        self.check_counts(counts, input.len(), "reduce_scatter")?;
+        if out.len() != counts[self.rank] {
+            return Err(CommError::BadRequest(format!(
+                "reduce_scatter out buffer must hold counts[{}] = {} elements, got {}",
+                self.rank,
+                counts[self.rank],
+                out.len()
+            )));
+        }
+        let table = AgScheduleTable::build_rank_local(&self.sk, blocks);
+        let mut proc_ =
+            ReduceScatterProc::new(table, Arc::new(counts.to_vec()), self.rank, input, op);
+        let run = drive_proc(&mut proc_, tr, 0).map_err(CommError::Transport)?;
+        out.copy_from_slice(&proc_.into_chunk());
+        Ok(run)
+    }
+
+    /// Rank-local `MPI_Allreduce` (reduce-scatter + all-gather on the
+    /// same circulant pattern): `buf` contributes this rank's vector
+    /// and is overwritten with the elementwise ⊕ over all ranks.
+    /// Returns one [`RankRun`] per phase (their round tags are
+    /// contiguous on the transport).
+    pub fn allreduce<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        buf: &mut [T],
+        blocks: usize,
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Result<(RankRun, RankRun), CommError> {
+        let res = self.allreduce_inner(tr, buf, blocks, op);
+        close_after::<T, Tr, _>(tr, res)
+    }
+
+    fn allreduce_inner<T: Element, Tr: Transport<T>>(
+        &self,
+        tr: &mut Tr,
+        buf: &mut [T],
+        blocks: usize,
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Result<(RankRun, RankRun), CommError> {
+        self.check_call::<T, Tr>(tr, blocks)?;
+        let counts = Arc::new(allreduce_counts(self.p, buf.len()));
+        let table = AgScheduleTable::build_rank_local(&self.sk, blocks);
+
+        // Phase 1: reduce-scatter (reversed all-broadcast).
+        let mut rs =
+            ReduceScatterProc::new(table.clone(), counts.clone(), self.rank, buf, op);
+        let run_rs = drive_proc(&mut rs, tr, 0).map_err(CommError::Transport)?;
+        let chunk = rs.into_chunk();
+
+        // Phase 2: all-gather of the reduced chunks; round tags continue
+        // where phase 1 stopped, so one transport world serves both.
+        let mut ag = AllgathervProc::new(table, counts.clone(), self.rank, &chunk);
+        let run_ag =
+            drive_proc(&mut ag, tr, run_rs.rounds).map_err(CommError::Transport)?;
+        if !ag.complete() {
+            return Err(CommError::Incomplete { kind: Kind::Allreduce, rank: self.rank });
+        }
+        scatter_rows(buf, &counts, ag.into_buffers());
+        Ok((run_rs, run_ag))
+    }
+
+    fn check_root(&self, root: usize, what: &str) -> Result<(), CommError> {
+        if root >= self.p {
+            return Err(CommError::BadRequest(format!(
+                "{what} root {root} out of range for p = {}",
+                self.p
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_counts(
+        &self,
+        counts: &[usize],
+        have: usize,
+        what: &str,
+    ) -> Result<usize, CommError> {
+        if counts.len() != self.p {
+            return Err(CommError::BadRequest(format!(
+                "{what} needs {} counts, got {}",
+                self.p,
+                counts.len()
+            )));
+        }
+        let total: usize = counts.iter().sum();
+        if have != total {
+            return Err(CommError::BadRequest(format!(
+                "{what} buffer must hold sum(counts) = {total} elements, got {have}"
+            )));
+        }
+        Ok(total)
+    }
+}
+
+/// The equal-as-possible chunking the god-view all-reduce uses — one
+/// definition so the SPMD plane splits identically.
+fn allreduce_counts(p: usize, m: usize) -> Vec<usize> {
+    let base = m / p;
+    let rem = m % p;
+    (0..p).map(|j| base + usize::from(j < rem)).collect()
+}
+
+/// Copy per-root rows back into the flat concatenated buffer.
+fn scatter_rows<T: Element>(buf: &mut [T], counts: &[usize], rows: Vec<Vec<T>>) {
+    let mut off = 0usize;
+    for (j, row) in rows.into_iter().enumerate() {
+        buf[off..off + counts[j]].copy_from_slice(&row);
+        off += counts[j];
+    }
+}
+
+/// Retire the transport endpoint, preserving the collective's own error
+/// (a failing rank must shut the world down so no sibling deadlocks).
+/// Shared with the generic [`crate::comm::SpmdBackend`] driver.
+pub(crate) fn close_after<T, Tr: Transport<T>, R>(
+    tr: &mut Tr,
+    res: Result<R, CommError>,
+) -> Result<R, CommError> {
+    match res {
+        Ok(v) => match tr.close(None) {
+            Ok(()) => Ok(v),
+            Err(e) => Err(CommError::Transport(e)),
+        },
+        Err(e) => {
+            let _ = tr.close(Some(&e.to_string()));
+            Err(e)
+        }
+    }
+}
+
+/// The one-ported round loop: per round — at most one send, a flush, at
+/// most one receive — exactly the discipline the [`Transport`] contract
+/// states. Shared by every [`RankComm`] collective and the generic
+/// [`crate::comm::SpmdBackend`] proc driver, so the rank plane has a
+/// single definition of "drive a state machine over a transport".
+pub(crate) fn drive_proc<T, P, Tr>(
+    proc_: &mut P,
+    tr: &mut Tr,
+    base_round: usize,
+) -> Result<RankRun, TransportError>
+where
+    T: Element,
+    P: RankProc<T>,
+    Tr: Transport<T>,
+{
+    let rounds = proc_.rounds();
+    let mut sends = Vec::new();
+    let mut recvs = 0usize;
+    for j in 0..rounds {
+        let tag = base_round + j;
+        if let Some(Msg { to, data }) = proc_.send(j) {
+            sends.push((j, to, data.len()));
+            tr.send(tag, to, data)?;
+        }
+        tr.flush(tag)?;
+        if let Some(from) = proc_.expects(j) {
+            let data = tr.recv(tag, from)?;
+            proc_.recv(j, from, data);
+            recvs += 1;
+        }
+    }
+    Ok(RankRun { rounds, sends, recvs })
+}
+
+// ---------------------------------------------------------------------
+// The fan-out bridge: god-view request -> p RankComms -> god-view result
+// ---------------------------------------------------------------------
+
+/// Which transport a fan-out drives the ranks over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// [`ThreadTransport`]: the real one-thread-per-rank runtime,
+    /// free-running — what [`crate::comm::BackendKind::Spmd`] uses.
+    Threads,
+    /// [`LoopbackTransport`]: the lockstep round-barrier replay with
+    /// full machine-model checks — the differential mirror.
+    Loopback,
+}
+
+/// Run `per_rank` on one scoped thread per world endpoint; a panicking
+/// rank poisons its world (so siblings fail fast instead of
+/// deadlocking) before the panic propagates.
+fn fanout<T, Tr, R, F>(world: Vec<Tr>, per_rank: F) -> Vec<Result<R, CommError>>
+where
+    T: Element,
+    Tr: Transport<T> + Send,
+    R: Send,
+    F: Fn(usize, &mut Tr) -> Result<R, CommError> + Sync,
+{
+    std::thread::scope(|s| {
+        let f = &per_rank;
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut tr)| {
+                s.spawn(move || {
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || f(r, &mut tr),
+                    ));
+                    match res {
+                        Ok(v) => v,
+                        Err(payload) => {
+                            let _ = tr.close(Some("rank thread panicked"));
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("SPMD rank thread panicked"))
+            .collect()
+    })
+}
+
+/// Error-triage tiers for one rank's failure, from most to least
+/// informative: a genuine violation or misuse beats a starved victim's
+/// own timeout, which beats a shutdown echo of some *other* rank's
+/// failure — the one policy shared by every SPMD fan-out (this module's
+/// `spmd_*` helpers and the generic [`crate::comm::SpmdBackend`]).
+fn triage(e: &CommError) -> u8 {
+    match e {
+        CommError::Transport(TransportError::Shutdown { .. }) => 2,
+        CommError::Transport(TransportError::Timeout { .. }) => 1,
+        _ => 0,
+    }
+}
+
+/// All ranks' results, or the most informative error (ties broken by
+/// rank order).
+pub(crate) fn collect_ranks<R>(
+    results: Vec<Result<R, CommError>>,
+) -> Result<Vec<R>, CommError> {
+    let mut ok = Vec::with_capacity(results.len());
+    let mut best: Option<(u8, CommError)> = None;
+    for res in results {
+        match res {
+            Ok(v) => ok.push(v),
+            Err(e) => {
+                let tier = triage(&e);
+                if best.as_ref().map_or(true, |(t, _)| tier < *t) {
+                    best = Some((tier, e));
+                }
+            }
+        }
+    }
+    match best {
+        Some((_, e)) => Err(e),
+        None => Ok(ok),
+    }
+}
+
+/// Fold per-rank [`RankRun`]s into god-view [`RunStats`] with the
+/// lockstep accounting (shared with the threaded runtime); consumes the
+/// runs so the send logs move instead of being cloned.
+fn fold_runs(runs: Vec<RankRun>, elem_bytes: usize, cost: &dyn CostModel) -> RunStats {
+    let total_rounds = runs.iter().map(|r| r.rounds).max().unwrap_or(0);
+    let logs: Vec<Vec<(usize, usize, usize)>> = runs.into_iter().map(|r| r.sends).collect();
+    fold_send_logs(&logs, total_rounds, elem_bytes, cost)
+}
+
+fn make_world<T: Element>(p: usize, kind: TransportKind) -> WorldEndpoints<T> {
+    match kind {
+        TransportKind::Threads => WorldEndpoints::Threads(ThreadTransport::world(p)),
+        TransportKind::Loopback => WorldEndpoints::Loopback(LoopbackTransport::world(p)),
+    }
+}
+
+enum WorldEndpoints<T> {
+    Threads(Vec<ThreadTransport<T>>),
+    Loopback(Vec<LoopbackTransport<T>>),
+}
+
+macro_rules! over_world {
+    ($world:expr, $per_rank:expr) => {
+        match $world {
+            WorldEndpoints::Threads(w) => fanout(w, $per_rank),
+            WorldEndpoints::Loopback(w) => fanout(w, $per_rank),
+        }
+    };
+}
+
+/// Fan a broadcast out to `p` [`RankComm`]s over `kind` and reassemble
+/// the god-view `(stats, per-rank buffers)` — bit-identical to a
+/// lockstep run on healthy schedules.
+pub fn spmd_bcast<T: Element>(
+    sk: &Arc<Skips>,
+    root: usize,
+    data: &[T],
+    blocks: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    kind: TransportKind,
+) -> Result<(RunStats, Vec<Vec<T>>), CommError> {
+    let p = sk.p();
+    let m = data.len();
+    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+        let rc = RankComm::new(p, r, sk.clone());
+        let mut buf = if r == root { data.to_vec() } else { vec![T::default(); m] };
+        let run = rc.bcast(tr, root, &mut buf, blocks)?;
+        Ok((buf, run))
+    });
+    let (bufs, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
+    let stats = fold_runs(runs, elem_bytes, cost);
+    Ok((stats, bufs))
+}
+
+/// Fan a rooted reduction out; returns `(stats, root buffer)`.
+#[allow(clippy::too_many_arguments)]
+pub fn spmd_reduce<T: Element>(
+    sk: &Arc<Skips>,
+    root: usize,
+    inputs: &[Vec<T>],
+    blocks: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    kind: TransportKind,
+) -> Result<(RunStats, Vec<T>), CommError> {
+    let p = sk.p();
+    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+        let rc = RankComm::new(p, r, sk.clone());
+        let mut buf = inputs[r].clone();
+        let run = rc.reduce(tr, root, &mut buf, blocks, op.clone())?;
+        Ok((buf, run))
+    });
+    let (bufs, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
+    let stats = fold_runs(runs, elem_bytes, cost);
+    let buffer = bufs.into_iter().nth(root).unwrap_or_default();
+    Ok((stats, buffer))
+}
+
+/// Fan an all-broadcast out; returns `(stats, buffers[rank][root])`.
+pub fn spmd_allgatherv<T: Element>(
+    sk: &Arc<Skips>,
+    inputs: &[Vec<T>],
+    blocks: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    kind: TransportKind,
+) -> Result<(RunStats, Vec<Vec<Vec<T>>>), CommError> {
+    let p = sk.p();
+    let counts: Vec<usize> = inputs.iter().map(|v| v.len()).collect();
+    let total: usize = counts.iter().sum();
+    let counts = &counts;
+    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+        let rc = RankComm::new(p, r, sk.clone());
+        let mut buf = vec![T::default(); total];
+        let off: usize = counts[..r].iter().sum();
+        buf[off..off + counts[r]].copy_from_slice(&inputs[r]);
+        let run = rc.allgatherv(tr, counts, &mut buf, blocks)?;
+        Ok((buf, run))
+    });
+    let (flats, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
+    let stats = fold_runs(runs, elem_bytes, cost);
+    let buffers = flats.into_iter().map(|flat| split_by_counts(&flat, counts)).collect();
+    Ok((stats, buffers))
+}
+
+/// Fan an all-reduction (reduce-scatter) out; returns
+/// `(stats, chunks[rank])`.
+#[allow(clippy::too_many_arguments)]
+pub fn spmd_reduce_scatter<T: Element>(
+    sk: &Arc<Skips>,
+    inputs: &[Vec<T>],
+    counts: &[usize],
+    blocks: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    kind: TransportKind,
+) -> Result<(RunStats, Vec<Vec<T>>), CommError> {
+    let p = sk.p();
+    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+        let rc = RankComm::new(p, r, sk.clone());
+        let mut out = vec![T::default(); counts[r]];
+        let run = rc.reduce_scatter(tr, counts, &inputs[r], &mut out, blocks, op.clone())?;
+        Ok((out, run))
+    });
+    let (chunks, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
+    let stats = fold_runs(runs, elem_bytes, cost);
+    Ok((stats, chunks))
+}
+
+/// Fan an all-reduce out; returns the two phases' stats separately
+/// (the god view combines them with its usual phase-sum rule) plus
+/// every rank's reduced vector.
+pub fn spmd_allreduce<T: Element>(
+    sk: &Arc<Skips>,
+    inputs: &[Vec<T>],
+    blocks: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    kind: TransportKind,
+) -> Result<(RunStats, RunStats, Vec<Vec<T>>), CommError> {
+    let p = sk.p();
+    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+        let rc = RankComm::new(p, r, sk.clone());
+        let mut buf = inputs[r].clone();
+        let (run_rs, run_ag) = rc.allreduce(tr, &mut buf, blocks, op.clone())?;
+        Ok((buf, run_rs, run_ag))
+    });
+    let per_rank = collect_ranks(results)?;
+    let mut bufs = Vec::with_capacity(per_rank.len());
+    let mut rs_runs = Vec::with_capacity(per_rank.len());
+    let mut ag_runs = Vec::with_capacity(per_rank.len());
+    for (buf, run_rs, run_ag) in per_rank {
+        bufs.push(buf);
+        rs_runs.push(run_rs);
+        ag_runs.push(run_ag);
+    }
+    let rs_stats = fold_runs(rs_runs, elem_bytes, cost);
+    let ag_stats = fold_runs(ag_runs, elem_bytes, cost);
+    Ok((rs_stats, ag_stats, bufs))
+}
+
+fn split_by_counts<T: Element>(flat: &[T], counts: &[usize]) -> Vec<Vec<T>> {
+    let mut out = Vec::with_capacity(counts.len());
+    let mut off = 0usize;
+    for &c in counts {
+        out.push(flat[off..off + c].to_vec());
+        off += c;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::common::SumOp;
+    use crate::sim::cost::UnitCost;
+
+    /// One RankComm per thread over both transports: the per-rank API
+    /// standalone, without any god-view driver.
+    fn run_bcast_world(kind: TransportKind, p: usize, root: usize, m: usize, n: usize) {
+        let sk = Arc::new(Skips::new(p));
+        let data: Vec<i64> = (0..m as i64).map(|i| i * 3 - 7).collect();
+        let (stats, bufs) =
+            spmd_bcast(&sk, root, &data, n, 8, &UnitCost, kind).expect("spmd bcast");
+        assert_eq!(bufs.len(), p);
+        for (r, b) in bufs.iter().enumerate() {
+            assert_eq!(b, &data, "kind={kind:?} p={p} rank={r}");
+        }
+        if p > 1 {
+            assert_eq!(stats.rounds, n - 1 + sk.q());
+            assert_eq!(stats.messages, (p - 1) * n);
+        } else {
+            assert_eq!(stats.messages, 0);
+        }
+    }
+
+    #[test]
+    fn spmd_bcast_both_transports_small_grid() {
+        for p in [1usize, 2, 3, 5, 9, 17] {
+            for kind in [TransportKind::Threads, TransportKind::Loopback] {
+                run_bcast_world(kind, p, 0, 48, 4);
+                if p > 2 {
+                    run_bcast_world(kind, p, p - 1, 33, 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmd_reduce_sums_to_root() {
+        let p = 9usize;
+        let m = 40usize;
+        let sk = Arc::new(Skips::new(p));
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..m).map(|i| (r * 100 + i) as i64).collect()).collect();
+        let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        for kind in [TransportKind::Threads, TransportKind::Loopback] {
+            for root in [0usize, 4, 8] {
+                let (_, buf) = spmd_reduce(
+                    &sk,
+                    root,
+                    &inputs,
+                    3,
+                    Arc::new(SumOp),
+                    8,
+                    &UnitCost,
+                    kind,
+                )
+                .unwrap();
+                assert_eq!(buf, expect, "kind={kind:?} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmd_allreduce_all_ranks_agree() {
+        let p = 7usize;
+        let m = 29usize;
+        let sk = Arc::new(Skips::new(p));
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..m).map(|i| ((r + 1) * (i + 1)) as i64 % 97).collect())
+            .collect();
+        let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        for kind in [TransportKind::Threads, TransportKind::Loopback] {
+            let (_, _, bufs) =
+                spmd_allreduce(&sk, &inputs, 2, Arc::new(SumOp), 8, &UnitCost, kind)
+                    .unwrap();
+            for (r, b) in bufs.iter().enumerate() {
+                assert_eq!(b, &expect, "kind={kind:?} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_comm_state_is_own_rows_only() {
+        // The rooted hot path computes this rank's own 2q-entry schedule
+        // and nothing else: the phased schedule agrees with the direct
+        // per-rank computation for every (rank, root).
+        let p = 17usize;
+        let sk = Arc::new(Skips::new(p));
+        for rank in 0..p {
+            let rc = RankComm::new(p, rank, sk.clone());
+            for root in [0usize, 3, 16] {
+                let ps = rc.own_phased(root, 5);
+                let want = crate::collectives::common::phased_for(&sk, rank, root, 5);
+                assert_eq!(ps.rel, want.rel);
+                for j in 0..want.rounds() {
+                    assert_eq!(ps.recv_at(j), want.recv_at(j), "rank={rank} root={root} j={j}");
+                    assert_eq!(ps.send_at(j), want.send_at(j), "rank={rank} root={root} j={j}");
+                }
+            }
+        }
+    }
+}

@@ -59,15 +59,29 @@ pub const SMALL_MSG_BYTES: usize = 2048;
 ///   `Outcome::buffers` assembly is inherently O(p·m); the true
 ///   million-rank regime is served by `CirculantEngine`'s own API (as in
 ///   `benches/engine_scale.rs`), which skips result materialization.
+/// * `Spmd` runs every [`Algo::Circulant`] collective on the SPMD rank
+///   plane: the request fans out to `p` per-rank
+///   [`crate::comm::RankComm`]s over
+///   [`crate::comm::ThreadTransport`], each rank computing **only its
+///   own** O(log p) schedule (no shared table is built or fetched) and
+///   genuinely executing on its own OS thread. Non-circulant pairs run
+///   their generic state machines over the same transport
+///   ([`crate::comm::SpmdBackend`]). Results and statistics are
+///   bit-identical to the lockstep backend (`tests/spmd_parity.rs`).
 ///
-/// Whichever backend runs, schedules are served from one shared
-/// all-ranks [`crate::schedule::ScheduleTable`] per `p`: a flat,
-/// parallel-built arena that the communicator fetches once per
-/// collective call (resident in the shared [`crate::schedule::ScheduleCache`]
-/// up to [`TuningParams::table_cache_max_bytes`]; held privately on the
-/// handle beyond it). Backends differ only in how the rows are *driven*,
-/// never in which rows they see — which is what keeps the differential
-/// parity suites meaningful.
+/// Whichever simulated backend runs (`Lockstep`/`Threaded`/`Engine`),
+/// schedules are served from one shared all-ranks
+/// [`crate::schedule::ScheduleTable`] per `p`: a flat, parallel-built
+/// arena that the communicator fetches once per collective call
+/// (resident in the shared [`crate::schedule::ScheduleCache`] up to
+/// [`TuningParams::table_cache_max_bytes`]; held privately on the
+/// handle beyond it). Backends differ only in how the rows are
+/// *driven*, never in which rows they see — which is what keeps the
+/// differential parity suites meaningful. The `Spmd` backend is the
+/// deliberate exception: it never touches the shared plane for the
+/// circulant collectives, because recomputing per-rank rows in O(log p)
+/// *is* the paper's model — the parity suite proves the two roads yield
+/// the same schedules.
 ///
 /// # The nonblocking path
 ///
@@ -77,14 +91,14 @@ pub const SMALL_MSG_BYTES: usize = 2048;
 /// rules) exactly as a `len`-rank communicator would, so a batched op
 /// always runs the same algorithm as its sequential mirror. Backend
 /// dispatch is preserved too, with one nuance: batched execution is
-/// round-stepped, so under `Lockstep` *and* `Threaded` each op's rounds
-/// are driven by the steppable lockstep driver
-/// ([`crate::sim::StepNet`] — bit-identical to both, as the backend
-/// parity suite shows), while under `Engine` circulant broadcast/reduce
-/// ops step the sparse engine ([`crate::sim::EngineStep`]) and every
-/// other pair steps the lockstep driver, mirroring the blocking
-/// dispatch. The traffic parity suite pins batched ≡ sequential per
-/// backend.
+/// round-stepped, so under `Lockstep`, `Threaded` *and* `Spmd` each
+/// op's rounds are driven by the steppable lockstep driver
+/// ([`crate::sim::StepNet`] — bit-identical to all three, as the
+/// backend parity suite shows), while under `Engine` circulant
+/// broadcast/reduce ops step the sparse engine
+/// ([`crate::sim::EngineStep`]) and every other pair steps the lockstep
+/// driver, mirroring the blocking dispatch. The traffic parity suite
+/// pins batched ≡ sequential per backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
     /// Pick automatically: the circulant pipeline with the paper's

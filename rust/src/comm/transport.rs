@@ -1,0 +1,830 @@
+//! The pluggable message fabric under the SPMD rank plane
+//! ([`super::rank::RankComm`]): a [`Transport`] moves one rank's
+//! round-tagged messages, and nothing else — no schedules, no payload
+//! interpretation, no global view.
+//!
+//! # The one-ported round discipline
+//!
+//! The paper's machine model is round-based and one-ported: per round a
+//! rank sends at most one message and receives at most one message. A
+//! [`Transport`] endpoint must be driven in exactly that discipline, per
+//! round `j` in non-decreasing order:
+//!
+//! 1. at most one [`Transport::send`]`(j, peer, data)`,
+//! 2. one [`Transport::flush`]`(j)` (seals the rank's sends for `j`),
+//! 3. at most one [`Transport::recv`]`(j, peer)`,
+//!
+//! and one final [`Transport::close`] when the rank is done (or dead).
+//! Both shipped transports *enforce* the caller side of this contract —
+//! a second send or receive in one round, or a send into an already
+//! sealed round, is rejected as [`TransportError::OutOfRound`] — and
+//! surface machine-model violations (port collisions, self-messages,
+//! wrong-peer deliveries, missing messages) in the lockstep simulator's
+//! own vocabulary, [`crate::sim::SimError`], wrapped as
+//! [`TransportError::Machine`].
+//!
+//! # The two shipped transports
+//!
+//! * [`ThreadTransport`] — the real in-process runtime: one endpoint per
+//!   rank, each typically owned by its own OS thread, with
+//!   mutex/condvar mailboxes (zero dependencies). Ranks free-run — rank
+//!   A may be several rounds ahead of rank B, exactly as MPI processes
+//!   would be — and out-of-order arrivals match on their round tag.
+//!   Like the [`crate::sim::threads`] runtime, detection of broken
+//!   schedules is best-effort (port collisions and wrong-peer
+//!   deliveries are caught; a message nobody ever sends surfaces as a
+//!   [`TransportError::Timeout`]); a detected violation poisons the
+//!   whole world so every blocked endpoint wakes with
+//!   [`TransportError::Shutdown`] instead of deadlocking.
+//! * [`LoopbackTransport`] — the lockstep replay: a barrier per round
+//!   (receives wait until *every* active rank has sealed the round),
+//!   after which delivery runs the same checks, in the same vocabulary,
+//!   as the lockstep [`crate::sim::Network`] round body — port busy and
+//!   self/bad-target at send, wrong-peer and missing-message at
+//!   delivery, undeliverable leftovers once a round can no longer be
+//!   received. This is the differential mirror: the SPMD parity suite
+//!   pins `ThreadTransport` ≡ `LoopbackTransport` ≡ god-view backends.
+//!
+//! One world serves one collective operation: round tags are only
+//! meaningful within a single operation (multi-phase collectives like
+//! all-reduce keep tags monotone across their phases), and [`close`]
+//! consumes the endpoint's participation.
+//!
+//! [`close`]: Transport::close
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::sim::network::SimError;
+
+/// Default blocking-receive deadline — generous; a blown deadline means
+/// a peer died or the schedule references a message nobody sends
+/// (mirrors the threaded runtime's timeout).
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// What a [`Transport`] can report. Machine-model violations reuse the
+/// lockstep simulator's [`SimError`] vocabulary so the SPMD plane and
+/// the god-view backends describe broken schedules identically.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportError {
+    /// The machine model was violated (same meaning as on the lockstep
+    /// [`crate::sim::Network`]): port collision, self-message, bad
+    /// target, wrong-peer delivery, missing message.
+    Machine(SimError),
+    /// The *caller* broke the one-ported round discipline: a second
+    /// send/receive in one round, a send or receive for a round that
+    /// was already passed, or a receive before the round was flushed.
+    OutOfRound { rank: usize, round: usize, what: &'static str },
+    /// The world was shut down (another rank failed or closed with an
+    /// error) while this endpoint was waiting.
+    Shutdown { rank: usize, round: usize, reason: String },
+    /// A blocking receive hit its deadline — the peer died without
+    /// closing, or the schedule references a message nobody sends.
+    Timeout { rank: usize, round: usize, from: usize },
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Machine(e) => write!(f, "machine-model violation: {e}"),
+            TransportError::OutOfRound { rank, round, what } => {
+                write!(f, "rank {rank}: round-discipline violation in round {round}: {what}")
+            }
+            TransportError::Shutdown { rank, round, reason } => {
+                write!(f, "rank {rank}: transport shut down in round {round}: {reason}")
+            }
+            TransportError::Timeout { rank, round, from } => write!(
+                f,
+                "rank {rank}: timed out waiting for (round {round}, from {from})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Per-endpoint bookkeeping of the one-ported round discipline (shared
+/// by both shipped transports). Tracks the highest round each verb was
+/// issued for; re-issuing a verb at or below its high-water mark is the
+/// caller's bug and is rejected before any shared state is touched.
+#[derive(Debug, Clone, Copy, Default)]
+struct Discipline {
+    sent: Option<usize>,
+    flushed: Option<usize>,
+    recvd: Option<usize>,
+}
+
+impl Discipline {
+    fn check_send(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
+        if self.sent.is_some_and(|r| round <= r) {
+            return Err(TransportError::OutOfRound {
+                rank,
+                round,
+                what: "second send in or before an already-sent round",
+            });
+        }
+        if self.flushed.is_some_and(|r| round <= r) {
+            return Err(TransportError::OutOfRound {
+                rank,
+                round,
+                what: "send into an already-flushed round",
+            });
+        }
+        self.sent = Some(round);
+        Ok(())
+    }
+
+    fn check_flush(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
+        if self.flushed.is_some_and(|r| round < r) {
+            return Err(TransportError::OutOfRound {
+                rank,
+                round,
+                what: "flush for an earlier round",
+            });
+        }
+        self.flushed = Some(round);
+        Ok(())
+    }
+
+    fn check_recv(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
+        if self.recvd.is_some_and(|r| round <= r) {
+            return Err(TransportError::OutOfRound {
+                rank,
+                round,
+                what: "second receive in or before an already-received round",
+            });
+        }
+        self.recvd = Some(round);
+        Ok(())
+    }
+}
+
+/// One rank's view of the message fabric — see the module docs for the
+/// round discipline every implementation enforces and every caller must
+/// follow. [`super::rank::RankComm`] drives exactly this discipline;
+/// custom transports (RDMA shims, recorded replays, fault injectors)
+/// plug in here.
+pub trait Transport<T>: Send {
+    /// Ranks in the world this endpoint belongs to.
+    fn p(&self) -> usize;
+
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+
+    /// Send `data` to `peer`, tagged with `round`. Must not block on the
+    /// peer (one-ported schedules never need it to).
+    fn send(&mut self, round: usize, peer: usize, data: Vec<T>) -> Result<(), TransportError>;
+
+    /// Seal this rank's sends for `round` (called once per round, after
+    /// the round's send if any, before its receive if any). The
+    /// lockstep transport's round barrier counts these; the threaded
+    /// transport ignores them.
+    fn flush(&mut self, round: usize) -> Result<(), TransportError>;
+
+    /// Blocking receive of the round-`round` message from `peer`.
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError>;
+
+    /// Retire this endpoint: `error` is `Some` when the rank aborted
+    /// (shuts the world down so no sibling deadlocks), `None` on clean
+    /// completion (may itself report a violation discovered at the end,
+    /// e.g. a message this rank never received).
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError>;
+}
+
+// ---------------------------------------------------------------------
+// ThreadTransport: free-running mutex/condvar mailboxes
+// ---------------------------------------------------------------------
+
+struct BoxState<T> {
+    /// round -> (from, payload); one-portedness means at most one live
+    /// entry per round on a valid schedule.
+    msgs: HashMap<usize, (usize, Vec<T>)>,
+    poisoned: Option<String>,
+}
+
+struct RankBox<T> {
+    state: Mutex<BoxState<T>>,
+    cv: Condvar,
+}
+
+/// The real in-process runtime endpoint: one per rank, mutex/condvar
+/// mailboxes, ranks free-running (no barriers — the paper's schedules
+/// are round-*numbered*, not barrier-synchronised, and this transport
+/// is the second, independent proof of that after
+/// [`crate::sim::threads`]). See the module docs for semantics.
+pub struct ThreadTransport<T> {
+    rank: usize,
+    boxes: Arc<Vec<RankBox<T>>>,
+    timeout: Duration,
+    disc: Discipline,
+}
+
+impl<T: Send> ThreadTransport<T> {
+    /// Endpoints for all `p` ranks of a fresh world
+    /// ([`DEFAULT_TIMEOUT`] receive deadline).
+    pub fn world(p: usize) -> Vec<ThreadTransport<T>> {
+        Self::world_with_timeout(p, DEFAULT_TIMEOUT)
+    }
+
+    /// [`ThreadTransport::world`] with an explicit receive deadline
+    /// (failure-injection tests use a short one).
+    pub fn world_with_timeout(p: usize, timeout: Duration) -> Vec<ThreadTransport<T>> {
+        assert!(p > 0);
+        let boxes: Arc<Vec<RankBox<T>>> = Arc::new(
+            (0..p)
+                .map(|_| RankBox {
+                    state: Mutex::new(BoxState { msgs: HashMap::new(), poisoned: None }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+        );
+        (0..p)
+            .map(|rank| ThreadTransport {
+                rank,
+                boxes: boxes.clone(),
+                timeout,
+                disc: Discipline::default(),
+            })
+            .collect()
+    }
+
+    /// Shut the whole world down: every blocked and future call on any
+    /// endpoint fails with [`TransportError::Shutdown`] instead of
+    /// waiting — the no-deadlocked-mailboxes guarantee.
+    pub fn poison(&self, reason: &str) {
+        for b in self.boxes.iter() {
+            let mut st = b.state.lock().unwrap();
+            if st.poisoned.is_none() {
+                st.poisoned = Some(reason.to_string());
+            }
+            drop(st);
+            b.cv.notify_all();
+        }
+    }
+}
+
+impl<T: Send> Transport<T> for ThreadTransport<T> {
+    fn p(&self) -> usize {
+        self.boxes.len()
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&mut self, round: usize, peer: usize, data: Vec<T>) -> Result<(), TransportError> {
+        self.disc.check_send(self.rank, round)?;
+        if peer == self.rank {
+            return Err(TransportError::Machine(SimError::SelfMessage {
+                round,
+                rank: self.rank,
+            }));
+        }
+        if peer >= self.boxes.len() {
+            return Err(TransportError::Machine(SimError::BadTarget {
+                round,
+                rank: self.rank,
+                to: peer,
+            }));
+        }
+        let err = {
+            let mut st = self.boxes[peer].state.lock().unwrap();
+            if let Some(reason) = &st.poisoned {
+                return Err(TransportError::Shutdown {
+                    rank: self.rank,
+                    round,
+                    reason: reason.clone(),
+                });
+            }
+            match st.msgs.get(&round).map(|(first_from, _)| *first_from) {
+                Some(first_from) => Some(SimError::ReceivePortBusy {
+                    round,
+                    to: peer,
+                    first_from,
+                    second_from: self.rank,
+                }),
+                None => {
+                    st.msgs.insert(round, (self.rank, data));
+                    None
+                }
+            }
+        };
+        match err {
+            Some(e) => {
+                // A port collision is a broken schedule: abort the whole
+                // world (the lockstep driver would abort mid-round too).
+                self.poison(&e.to_string());
+                Err(TransportError::Machine(e))
+            }
+            None => {
+                self.boxes[peer].cv.notify_all();
+                Ok(())
+            }
+        }
+    }
+
+    fn flush(&mut self, round: usize) -> Result<(), TransportError> {
+        // Free-running: nothing to seal; keep the discipline honest.
+        self.disc.check_flush(self.rank, round)
+    }
+
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
+        self.disc.check_recv(self.rank, round)?;
+        let deadline = Instant::now() + self.timeout;
+        let mybox = &self.boxes[self.rank];
+        let mut st = mybox.state.lock().unwrap();
+        loop {
+            // Abort semantics: once the world is poisoned nothing more is
+            // delivered, even if a matching message is already queued —
+            // mirroring the lockstep driver's mid-round abort.
+            if let Some(reason) = &st.poisoned {
+                return Err(TransportError::Shutdown {
+                    rank: self.rank,
+                    round,
+                    reason: reason.clone(),
+                });
+            }
+            match st.msgs.get(&round).map(|(from, _)| *from) {
+                Some(from) if from == peer => {
+                    let (_, data) = st.msgs.remove(&round).unwrap();
+                    return Ok(data);
+                }
+                Some(from) => {
+                    // One-ported: a same-round message from anyone else
+                    // means the send and receive schedules disagree.
+                    let e = SimError::UnexpectedMessage {
+                        round,
+                        to: self.rank,
+                        from,
+                        expected: Some(peer),
+                    };
+                    drop(st);
+                    self.poison(&e.to_string());
+                    return Err(TransportError::Machine(e));
+                }
+                None => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                let e = TransportError::Timeout { rank: self.rank, round, from: peer };
+                self.poison(&e.to_string());
+                return Err(e);
+            }
+            let (guard, _) = mybox.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
+        if let Some(reason) = error {
+            self.poison(reason);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// LoopbackTransport: the lockstep replay (round barrier + full checks)
+// ---------------------------------------------------------------------
+
+struct LoopState<T> {
+    /// round -> (to -> (from, payload)): the round's in-flight inbox,
+    /// exactly the lockstep round body's delivery slots.
+    msgs: HashMap<usize, HashMap<usize, (usize, Vec<T>)>>,
+    /// `sealed[r]` = number of rounds rank `r` has flushed (rounds
+    /// `0..sealed[r]` are sealed).
+    sealed: Vec<usize>,
+    retired: Vec<bool>,
+    poisoned: Option<String>,
+}
+
+impl<T> LoopState<T> {
+    /// Lowest seal count over live ranks (`usize::MAX` once all retired)
+    /// — rounds below it minus one can no longer be received by anyone.
+    fn min_active_sealed(&self) -> usize {
+        self.sealed
+            .iter()
+            .zip(&self.retired)
+            .filter(|(_, &r)| !r)
+            .map(|(&s, _)| s)
+            .min()
+            .unwrap_or(usize::MAX)
+    }
+
+    /// A message of round `jj` still undelivered once every live rank
+    /// has sealed `jj + 1` (i.e. passed its `recv(jj)` point) is exactly
+    /// the lockstep `UnexpectedMessage` at a receiver that expected
+    /// nothing.
+    fn leftover(&self, before: usize) -> Option<SimError> {
+        let mut worst: Option<(usize, usize, usize)> = None;
+        for (&jj, slots) in &self.msgs {
+            if jj + 2 <= before {
+                for (&to, &(from, _)) in slots {
+                    let cand = (jj, to, from);
+                    if worst.map_or(true, |w| cand < w) {
+                        worst = Some(cand);
+                    }
+                }
+            }
+        }
+        worst.map(|(round, to, from)| SimError::UnexpectedMessage {
+            round,
+            to,
+            from,
+            expected: None,
+        })
+    }
+}
+
+struct LoopShared<T> {
+    state: Mutex<LoopState<T>>,
+    cv: Condvar,
+}
+
+/// The lockstep replay transport: a per-round barrier (receives wait
+/// until every live rank has sealed the round), then delivery with the
+/// full lockstep [`crate::sim::Network`] check set — the differential
+/// mirror of [`ThreadTransport`]. See the module docs.
+pub struct LoopbackTransport<T> {
+    rank: usize,
+    p: usize,
+    shared: Arc<LoopShared<T>>,
+    timeout: Duration,
+    disc: Discipline,
+}
+
+impl<T: Send> LoopbackTransport<T> {
+    /// Endpoints for all `p` ranks of a fresh lockstep world.
+    pub fn world(p: usize) -> Vec<LoopbackTransport<T>> {
+        Self::world_with_timeout(p, DEFAULT_TIMEOUT)
+    }
+
+    /// [`LoopbackTransport::world`] with an explicit barrier deadline.
+    pub fn world_with_timeout(p: usize, timeout: Duration) -> Vec<LoopbackTransport<T>> {
+        assert!(p > 0);
+        let shared = Arc::new(LoopShared {
+            state: Mutex::new(LoopState {
+                msgs: HashMap::new(),
+                sealed: vec![0; p],
+                retired: vec![false; p],
+                poisoned: None,
+            }),
+            cv: Condvar::new(),
+        });
+        (0..p)
+            .map(|rank| LoopbackTransport {
+                rank,
+                p,
+                shared: shared.clone(),
+                timeout,
+                disc: Discipline::default(),
+            })
+            .collect()
+    }
+
+    fn poison_locked(st: &mut LoopState<T>, reason: &str) {
+        if st.poisoned.is_none() {
+            st.poisoned = Some(reason.to_string());
+        }
+    }
+}
+
+impl<T: Send> Transport<T> for LoopbackTransport<T> {
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&mut self, round: usize, peer: usize, data: Vec<T>) -> Result<(), TransportError> {
+        self.disc.check_send(self.rank, round)?;
+        if peer == self.rank {
+            return Err(TransportError::Machine(SimError::SelfMessage {
+                round,
+                rank: self.rank,
+            }));
+        }
+        if peer >= self.p {
+            return Err(TransportError::Machine(SimError::BadTarget {
+                round,
+                rank: self.rank,
+                to: peer,
+            }));
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(reason) = &st.poisoned {
+            return Err(TransportError::Shutdown {
+                rank: self.rank,
+                round,
+                reason: reason.clone(),
+            });
+        }
+        let dup = st
+            .msgs
+            .get(&round)
+            .and_then(|slots| slots.get(&peer))
+            .map(|(first_from, _)| *first_from);
+        if let Some(first_from) = dup {
+            let e = SimError::ReceivePortBusy {
+                round,
+                to: peer,
+                first_from,
+                second_from: self.rank,
+            };
+            Self::poison_locked(&mut st, &e.to_string());
+            drop(st);
+            self.shared.cv.notify_all();
+            return Err(TransportError::Machine(e));
+        }
+        st.msgs.entry(round).or_default().insert(peer, (self.rank, data));
+        Ok(())
+    }
+
+    fn flush(&mut self, round: usize) -> Result<(), TransportError> {
+        self.disc.check_flush(self.rank, round)?;
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(reason) = &st.poisoned {
+            return Err(TransportError::Shutdown {
+                rank: self.rank,
+                round,
+                reason: reason.clone(),
+            });
+        }
+        if st.sealed[self.rank] < round + 1 {
+            st.sealed[self.rank] = round + 1;
+        }
+        // Rounds nobody can receive anymore must be empty — the
+        // lockstep "message at a rank that expected none" check.
+        let horizon = st.min_active_sealed();
+        if let Some(e) = st.leftover(horizon) {
+            Self::poison_locked(&mut st, &e.to_string());
+            drop(st);
+            self.shared.cv.notify_all();
+            return Err(TransportError::Machine(e));
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
+        if !self.disc.flushed.is_some_and(|f| f >= round) {
+            return Err(TransportError::OutOfRound {
+                rank: self.rank,
+                round,
+                what: "receive before the round was flushed",
+            });
+        }
+        self.disc.check_recv(self.rank, round)?;
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        // The round barrier: wait until every live rank sealed `round`.
+        loop {
+            if let Some(reason) = &st.poisoned {
+                return Err(TransportError::Shutdown {
+                    rank: self.rank,
+                    round,
+                    reason: reason.clone(),
+                });
+            }
+            let ready = st
+                .sealed
+                .iter()
+                .zip(&st.retired)
+                .all(|(&s, &r)| r || s > round);
+            if ready {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let e = TransportError::Timeout { rank: self.rank, round, from: peer };
+                Self::poison_locked(&mut st, &e.to_string());
+                drop(st);
+                self.shared.cv.notify_all();
+                return Err(e);
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        // Delivery, with the lockstep cross-check.
+        let taken = st.msgs.get_mut(&round).and_then(|slots| slots.remove(&self.rank));
+        match taken {
+            Some((from, data)) if from == peer => {
+                if st.msgs.get(&round).is_some_and(|slots| slots.is_empty()) {
+                    st.msgs.remove(&round);
+                }
+                Ok(data)
+            }
+            Some((from, _)) => {
+                let e = SimError::UnexpectedMessage {
+                    round,
+                    to: self.rank,
+                    from,
+                    expected: Some(peer),
+                };
+                Self::poison_locked(&mut st, &e.to_string());
+                drop(st);
+                self.shared.cv.notify_all();
+                Err(TransportError::Machine(e))
+            }
+            None => {
+                let e = SimError::MissingMessage {
+                    round,
+                    rank: self.rank,
+                    expected_from: peer,
+                };
+                Self::poison_locked(&mut st, &e.to_string());
+                drop(st);
+                self.shared.cv.notify_all();
+                Err(TransportError::Machine(e))
+            }
+        }
+    }
+
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
+        let mut st = self.shared.state.lock().unwrap();
+        st.retired[self.rank] = true;
+        if let Some(reason) = error {
+            Self::poison_locked(&mut st, reason);
+        }
+        let mut res = Ok(());
+        if st.poisoned.is_none() && st.retired.iter().all(|&r| r) {
+            // Last one out checks the lights: undelivered messages are
+            // schedule bugs (lockstep `UnexpectedMessage`).
+            if let Some(e) = st.leftover(usize::MAX) {
+                Self::poison_locked(&mut st, &e.to_string());
+                res = Err(TransportError::Machine(e));
+            }
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn take2<T>(mut v: Vec<T>) -> (T, T) {
+        let b = v.pop().unwrap();
+        let a = v.pop().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn thread_transport_delivers_out_of_order() {
+        let (mut t0, mut t1) = take2(ThreadTransport::<u32>::world(2));
+        t0.send(0, 1, vec![10]).unwrap();
+        t1.flush(0).unwrap();
+        t0.flush(0).unwrap();
+        t0.send(1, 1, vec![11]).unwrap();
+        // Round-tag matching: rank 1 takes round 1 first, then round 0...
+        // one-ported discipline forbids recv going backwards, so take them
+        // in order here; the out-of-order case is covered by the threaded
+        // collectives (rank 0 ran two rounds ahead before rank 1 received).
+        assert_eq!(t1.recv(0, 0).unwrap(), vec![10]);
+        t1.flush(1).unwrap();
+        assert_eq!(t1.recv(1, 0).unwrap(), vec![11]);
+    }
+
+    // NOTE: out-of-round-send, send-into-flushed-round and wrong-peer-recv
+    // misuse coverage lives at the public-API level in
+    // `tests/failure_injection.rs` (the SPMD section), alongside the
+    // tampered-rank scenarios.
+
+    #[test]
+    fn self_message_and_bad_target_rejected() {
+        let (mut t0, _t1) = take2(ThreadTransport::<u8>::world(2));
+        assert!(matches!(
+            t0.send(0, 0, vec![]),
+            Err(TransportError::Machine(SimError::SelfMessage { round: 0, rank: 0 }))
+        ));
+        let (mut l0, _l1) = take2(LoopbackTransport::<u8>::world(2));
+        assert!(matches!(
+            l0.send(0, 5, vec![]),
+            Err(TransportError::Machine(SimError::BadTarget { round: 0, rank: 0, to: 5 }))
+        ));
+    }
+
+    #[test]
+    fn thread_port_collision_detected_and_poisons() {
+        let mut world = ThreadTransport::<u8>::world(3);
+        let mut t2 = world.pop().unwrap();
+        let mut t1 = world.pop().unwrap();
+        let mut t0 = world.pop().unwrap();
+        t0.send(0, 2, vec![1]).unwrap();
+        match t1.send(0, 2, vec![2]) {
+            Err(TransportError::Machine(SimError::ReceivePortBusy {
+                round: 0,
+                to: 2,
+                first_from: 0,
+                second_from: 1,
+            })) => {}
+            other => panic!("expected ReceivePortBusy, got {other:?}"),
+        }
+        // World poisoned: the victim does not hang, it sees the shutdown.
+        t2.flush(0).unwrap();
+        assert!(matches!(t2.recv(0, 0), Err(TransportError::Shutdown { .. })));
+    }
+
+    #[test]
+    fn loopback_missing_message_detected_at_barrier() {
+        // Two ranks, both flush round 0, rank 1 expects a message that
+        // was never sent: the barrier completes and the lockstep check
+        // fires (no timeout involved).
+        let (mut t0, mut t1) = take2(LoopbackTransport::<u8>::world(2));
+        t0.flush(0).unwrap();
+        t1.flush(0).unwrap();
+        match t1.recv(0, 0) {
+            Err(TransportError::Machine(SimError::MissingMessage {
+                round: 0,
+                rank: 1,
+                expected_from: 0,
+            })) => {}
+            other => panic!("expected MissingMessage, got {other:?}"),
+        }
+        // Poisoned world: rank 0's close is clean (it retires), but any
+        // further blocking verb reports shutdown.
+        assert!(matches!(
+            t0.flush(1),
+            Err(TransportError::Shutdown { .. })
+        ));
+    }
+
+    #[test]
+    fn loopback_recv_before_flush_rejected() {
+        let (mut t0, _t1) = take2(LoopbackTransport::<u8>::world(2));
+        assert!(matches!(
+            t0.recv(0, 1),
+            Err(TransportError::OutOfRound { .. })
+        ));
+    }
+
+    #[test]
+    fn loopback_leftover_surfaces_on_close() {
+        // Rank 0 sends a message rank 1 never receives; both complete
+        // "cleanly" — the last close reports the undelivered message as
+        // the lockstep UnexpectedMessage it is.
+        let (mut t0, mut t1) = take2(LoopbackTransport::<u8>::world(2));
+        t0.send(0, 1, vec![9]).unwrap();
+        t0.flush(0).unwrap();
+        t1.flush(0).unwrap();
+        t0.close(None).unwrap();
+        match t1.close(None) {
+            Err(TransportError::Machine(SimError::UnexpectedMessage {
+                round: 0,
+                to: 1,
+                from: 0,
+                expected: None,
+            })) => {}
+            other => panic!("expected leftover UnexpectedMessage, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn loopback_barrier_runs_a_real_exchange() {
+        // Two threads, three rounds of ping-pong, all delivered in
+        // lockstep with no errors.
+        let (t0, t1) = take2(LoopbackTransport::<u32>::world(2));
+        let a = std::thread::spawn(move || {
+            let mut t = t0;
+            for j in 0..3usize {
+                t.send(j, 1, vec![j as u32]).unwrap();
+                t.flush(j).unwrap();
+                assert_eq!(t.recv(j, 1).unwrap(), vec![100 + j as u32]);
+            }
+            t.close(None).unwrap();
+        });
+        let b = std::thread::spawn(move || {
+            let mut t = t1;
+            for j in 0..3usize {
+                t.send(j, 0, vec![100 + j as u32]).unwrap();
+                t.flush(j).unwrap();
+                assert_eq!(t.recv(j, 0).unwrap(), vec![j as u32]);
+            }
+            t.close(None).unwrap();
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+    }
+
+    #[test]
+    fn thread_timeout_poisons_instead_of_deadlocking() {
+        let mut world = ThreadTransport::<u8>::world_with_timeout(2, Duration::from_millis(50));
+        let mut t1 = world.pop().unwrap();
+        let mut t0 = world.pop().unwrap();
+        t0.flush(0).unwrap();
+        assert!(matches!(
+            t0.recv(0, 1),
+            Err(TransportError::Timeout { rank: 0, round: 0, from: 1 })
+        ));
+        // The timeout shut the world down for everyone.
+        t1.flush(0).unwrap();
+        assert!(matches!(t1.recv(0, 0), Err(TransportError::Shutdown { .. })));
+    }
+}

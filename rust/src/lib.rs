@@ -41,6 +41,13 @@
 //! with every per-op outcome bit-identical to a solo run (see
 //! [`comm::traffic`]).
 //!
+//! For the paper's own programming model — each processor computes its
+//! O(log p) schedule independently, with no communication — the SPMD
+//! rank plane ([`comm::rank`]) provides per-rank [`comm::RankComm`]
+//! handles over a pluggable [`comm::Transport`] (a real
+//! one-thread-per-rank runtime, or a lockstep replay), and
+//! [`comm::BackendKind::Spmd`] runs the god-view API on top of it.
+//!
 //! ## Layers underneath
 //!
 //! * [`schedule`] — the paper's core contribution: round-optimal broadcast
@@ -58,8 +65,8 @@
 //!   all-broadcast/allgatherv (Algorithm 7), reduction and all-reduction
 //!   via reversed schedules (Observation 1), their classical baselines
 //!   (binomial, ring, recursive-doubling, van-de-Geijn-style), and
-//!   block-count tuning. The legacy `*_sim` free functions survive as
-//!   `#[deprecated]` wrappers over a throwaway communicator.
+//!   block-count tuning. (The legacy `*_sim` free functions finished
+//!   their deprecation cycle and were removed — use a `Communicator`.)
 //! * [`runtime`] — the PJRT bridge: AOT-compiled XLA artifacts (authored
 //!   in JAX/Pallas at build time, `artifacts/*.hlo.txt`) loaded and
 //!   executed from Rust for the reduction operator hot path (gated behind

@@ -176,10 +176,27 @@ where
         logs.push(log);
     }
 
+    (fold_send_logs(&logs, total_rounds, elem_bytes, cost), done)
+}
+
+/// Fold per-rank send logs — `logs[from]` lists that rank's
+/// `(round, to, elems)` sends — into the exact [`RunStats`] the lockstep
+/// [`super::network::Network`] computes for the same messages: per-round
+/// `max` message cost summed over active rounds, total/ per-rank byte
+/// accounting, message counts. The one accounting definition shared by
+/// the threaded runtime and the SPMD rank plane
+/// ([`crate::comm::rank`]), which is what makes their statistics
+/// bit-identical to a lockstep run by construction.
+pub(crate) fn fold_send_logs(
+    logs: &[Vec<(usize, usize, usize)>],
+    total_rounds: usize,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> RunStats {
     let mut stats = RunStats { rounds: total_rounds, ..Default::default() };
     let mut round_time = vec![0.0f64; total_rounds];
     let mut round_any = vec![false; total_rounds];
-    let mut rank_bytes = vec![0usize; p];
+    let mut rank_bytes = vec![0usize; logs.len()];
     for (from, log) in logs.iter().enumerate() {
         for &(round, to, elems) in log {
             let bytes = elems * elem_bytes;
@@ -198,7 +215,7 @@ where
         }
     }
     stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
-    (stats, done)
+    stats
 }
 
 /// Run all ranks' state machines on real threads; returns the final state

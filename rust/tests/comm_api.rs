@@ -1,7 +1,8 @@
 //! The `Communicator` API contract: schedule reuse across repeated calls
 //! and roots (with cache hit/miss receipts), result stability, degenerate
-//! `p = 1` and nonzero-root cases through the typed interface, backend
-//! parity, and the deprecation-path equivalence of the legacy wrappers.
+//! `p = 1` and nonzero-root cases through the typed interface, and
+//! backend parity. (The legacy `*_sim` wrappers finished their
+//! deprecation cycle and are gone; the typed API is the only entry.)
 
 use std::sync::Arc;
 
@@ -285,26 +286,28 @@ fn threaded_backend_full_parity_on_reduce_scatter() {
 }
 
 // -------------------------------------------------------------------
-// Deprecation path: the legacy wrappers still agree with the new API.
+// SPMD backend through the public API.
 // -------------------------------------------------------------------
 
 #[test]
-#[allow(deprecated)]
-fn legacy_wrappers_match_communicator() {
-    use circulant_bcast::collectives::{bcast_sim, reduce_sim};
+fn spmd_backend_full_parity_on_bcast_and_reduce() {
     let p = 11usize;
     let data: Vec<i64> = (0..121).collect();
-    let legacy = bcast_sim(p, 4, &data, 5, 8, &UnitCost).unwrap();
-    assert!(legacy.all_received());
-    let modern = comm(p)
+    let spmd = || CommBuilder::new(p).cost_model(UnitCost).backend(BackendKind::Spmd).build();
+    let a = comm(p)
         .bcast(BcastReq::new(4, &data).algo(Algo::Circulant).blocks(5).elem_bytes(8))
         .unwrap();
-    assert_eq!(legacy.buffers, modern.buffers);
-    assert_eq!(legacy.stats.messages, modern.stats.messages);
+    let b = spmd()
+        .bcast(BcastReq::new(4, &data).algo(Algo::Circulant).blocks(5).elem_bytes(8))
+        .unwrap();
+    assert_eq!(a.buffers, b.buffers);
+    assert_eq!(a.stats.messages, b.stats.messages);
+    assert_eq!(a.stats.bytes, b.stats.bytes);
+    assert_eq!(a.rounds, b.rounds);
+    assert!(b.all_received());
 
     let inputs: Vec<Vec<i64>> = (0..p).map(|_| data.clone()).collect();
-    let legacy = reduce_sim(&inputs, 4, 5, Arc::new(SumOp), 8, &UnitCost).unwrap();
-    let modern = comm(p)
+    let ra = comm(p)
         .reduce(
             ReduceReq::new(4, &inputs, Arc::new(SumOp))
                 .algo(Algo::Circulant)
@@ -312,5 +315,14 @@ fn legacy_wrappers_match_communicator() {
                 .elem_bytes(8),
         )
         .unwrap();
-    assert_eq!(legacy.buffer, modern.buffers);
+    let rb = spmd()
+        .reduce(
+            ReduceReq::new(4, &inputs, Arc::new(SumOp))
+                .algo(Algo::Circulant)
+                .blocks(5)
+                .elem_bytes(8),
+        )
+        .unwrap();
+    assert_eq!(ra.buffers, rb.buffers);
+    assert_eq!(ra.stats.messages, rb.stats.messages);
 }

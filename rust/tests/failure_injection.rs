@@ -5,13 +5,16 @@
 
 use std::sync::Arc;
 
+use std::time::Duration;
+
 use circulant_bcast::collectives::bcast::BcastProc;
 use circulant_bcast::collectives::common::{BlockGeometry, World};
 use circulant_bcast::collectives::SumOp;
 use circulant_bcast::comm::{
-    Algo, BcastReq, CommBuilder, CommError, IbcastReq, IreduceReq, Outcome, ReduceReq,
+    Algo, BcastReq, CommBuilder, CommError, IbcastReq, IreduceReq, LoopbackTransport, Outcome,
+    RankComm, ReduceReq, ThreadTransport, Transport, TransportError,
 };
-use circulant_bcast::schedule::verify_one_ported_trace;
+use circulant_bcast::schedule::{verify_one_ported_trace, Skips};
 use circulant_bcast::sim::network::{Msg, Network, RankProc, RunStats, SimError};
 use circulant_bcast::sim::UnitCost;
 use circulant_bcast::testkit::install_seed_reporter;
@@ -301,6 +304,237 @@ fn traffic_muted_sender_isolated_to_offending_op() {
 fn traffic_unsolicited_sender_isolated_to_offending_op() {
     // Rank 5 sends an unsolicited round-0 message to rank 7.
     check_mid_batch_isolation(|r| (None, false, if r == 5 { Some(7) } else { None }));
+}
+
+// ---------------------------------------------------------------------
+// SPMD rank plane: transport misuse and tampered ranks. The transport
+// must reject round-discipline violations, surface wrong-peer
+// deliveries in the lockstep SimError vocabulary, and — the key
+// liveness property — shut the whole world down when one rank
+// misbehaves, so no healthy rank's mailbox ever deadlocks.
+// ---------------------------------------------------------------------
+
+#[test]
+fn spmd_out_of_round_sends_rejected_on_both_transports() {
+    // Second send in a round, and a send for an earlier round, are
+    // caller-side discipline violations on every transport.
+    let mut tw = ThreadTransport::<u32>::world(3);
+    let mut t0 = tw.remove(0);
+    t0.send(2, 1, vec![1]).unwrap();
+    assert!(matches!(
+        t0.send(2, 1, vec![2]),
+        Err(TransportError::OutOfRound { round: 2, .. })
+    ));
+    assert!(matches!(
+        t0.send(0, 2, vec![3]),
+        Err(TransportError::OutOfRound { round: 0, .. })
+    ));
+
+    let mut lw = LoopbackTransport::<u32>::world(3);
+    let mut l0 = lw.remove(0);
+    // Sealing a round forbids sending into it afterwards.
+    l0.flush(0).unwrap();
+    assert!(matches!(
+        l0.send(0, 1, vec![1]),
+        Err(TransportError::OutOfRound { round: 0, .. })
+    ));
+}
+
+#[test]
+fn spmd_wrong_peer_recv_is_the_lockstep_unexpected_message() {
+    let mut w = ThreadTransport::<u32>::world(3);
+    let mut t2 = w.pop().unwrap();
+    let mut t1 = w.pop().unwrap();
+    t1.send(0, 2, vec![7]).unwrap();
+    t2.flush(0).unwrap();
+    match t2.recv(0, 0) {
+        Err(TransportError::Machine(SimError::UnexpectedMessage {
+            round: 0,
+            to: 2,
+            from: 1,
+            expected: Some(0),
+        })) => {}
+        other => panic!("expected the lockstep UnexpectedMessage, got {other:?}"),
+    }
+    // The violation poisoned the world: the innocent sender does not
+    // hang on its own receive, it sees the shutdown.
+    assert!(matches!(t1.recv(0, 2), Err(TransportError::Shutdown { .. })));
+}
+
+/// Forwarding transport that silently drops this rank's sends — the
+/// SPMD analogue of the muted-sender tamper above (and a demonstration
+/// that `Transport` is pluggable enough for fault injectors).
+struct Mute<Tr>(Tr);
+
+impl<T, Tr: Transport<T>> Transport<T> for Mute<Tr> {
+    fn p(&self) -> usize {
+        self.0.p()
+    }
+    fn rank(&self) -> usize {
+        self.0.rank()
+    }
+    fn send(&mut self, _round: usize, _peer: usize, _data: Vec<T>) -> Result<(), TransportError> {
+        Ok(()) // dropped on the floor
+    }
+    fn flush(&mut self, round: usize) -> Result<(), TransportError> {
+        self.0.flush(round)
+    }
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
+        self.0.recv(round, peer)
+    }
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
+        self.0.close(error)
+    }
+}
+
+/// One bad rank (rank 1, muted) in a p = 9 SPMD broadcast: some victim
+/// must surface the solo lockstep error (`MissingMessage` on the
+/// loopback transport, a timeout-shutdown on the free-running thread
+/// transport), every healthy rank must return — not deadlock — and the
+/// whole world must come down cleanly.
+#[test]
+fn spmd_tampered_rank_fails_alone_and_world_shuts_down() {
+    install_seed_reporter();
+    let p = 9usize;
+    let (m, n) = (36usize, 4usize);
+    let sk = Arc::new(Skips::new(p));
+    let data: Vec<u32> = (0..m as u32).collect();
+
+    // Solo truth: the same tamper on the lockstep Network.
+    let mut solo = wrap(procs(p, m, n), |r| (None, r == 1, None));
+    let solo_err = Network::new(p).run(&mut solo, 4, &UnitCost).unwrap_err();
+    assert!(matches!(solo_err, SimError::MissingMessage { .. }));
+
+    // Loopback: the victim's error is in the same vocabulary (a
+    // MissingMessage at the barrier — no timeouts involved).
+    let world = LoopbackTransport::<u32>::world_with_timeout(p, Duration::from_secs(10));
+    let results = run_tampered_bcast(world, &sk, &data, n, 1);
+    assert_outcomes(&results, p, |e| {
+        matches!(
+            e,
+            CommError::Transport(TransportError::Machine(SimError::MissingMessage { .. }))
+        )
+    });
+
+    // ThreadTransport: free-running, so the starved victim times out;
+    // the timeout poisons the world and everyone returns promptly.
+    let world = ThreadTransport::<u32>::world_with_timeout(p, Duration::from_millis(300));
+    let results = run_tampered_bcast(world, &sk, &data, n, 1);
+    assert_outcomes(&results, p, |e| {
+        matches!(e, CommError::Transport(TransportError::Timeout { .. }))
+    });
+}
+
+/// Drive a p-rank SPMD bcast with rank `bad` muted; returns per-rank
+/// results (the scope returning at all is the no-deadlock receipt).
+fn run_tampered_bcast<Tr: Transport<u32> + Send>(
+    world: Vec<Tr>,
+    sk: &Arc<Skips>,
+    data: &[u32],
+    n: usize,
+    bad: usize,
+) -> Vec<Result<(), CommError>> {
+    let p = sk.p();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut tr)| {
+                let sk = sk.clone();
+                s.spawn(move || {
+                    let rc = RankComm::new(p, r, sk);
+                    let mut buf =
+                        if r == 0 { data.to_vec() } else { vec![0u32; data.len()] };
+                    if r == bad {
+                        rc.bcast(&mut Mute(tr), 0, &mut buf, n).map(|_| ())
+                    } else {
+                        rc.bcast(&mut tr, 0, &mut buf, n).map(|_| ())
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    })
+}
+
+/// At least one rank fails, at least one failure matches the expected
+/// solo shape, and every failure is either that shape, a shutdown echo,
+/// a timeout, or a completion-check `Incomplete` — nothing hangs, and
+/// nothing succeeds that should not (the root and early receivers may
+/// legitimately finish before the world comes down).
+fn assert_outcomes(
+    results: &[Result<(), CommError>],
+    p: usize,
+    expected: impl Fn(&CommError) -> bool,
+) {
+    assert_eq!(results.len(), p);
+    let errors: Vec<&CommError> =
+        results.iter().filter_map(|r| r.as_ref().err()).collect();
+    assert!(!errors.is_empty(), "a tampered world must not fully succeed");
+    assert!(
+        errors.iter().any(|e| expected(e)),
+        "no error matched the expected solo shape: {errors:?}"
+    );
+    for &e in &errors {
+        assert!(
+            expected(e)
+                || matches!(
+                    e,
+                    CommError::Transport(
+                        TransportError::Shutdown { .. } | TransportError::Timeout { .. }
+                    )
+                )
+                || matches!(e, CommError::Incomplete { .. }),
+            "unexpected error shape: {e:?}"
+        );
+    }
+}
+
+/// Run the untampered control world; every rank's final buffer.
+fn run_clean_bcast<Tr: Transport<u32> + Send>(
+    world: Vec<Tr>,
+    sk: &Arc<Skips>,
+    data: &[u32],
+    n: usize,
+) -> Vec<Result<Vec<u32>, CommError>> {
+    let p = sk.p();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut tr)| {
+                let sk = sk.clone();
+                s.spawn(move || {
+                    let rc = RankComm::new(p, r, sk);
+                    let mut buf =
+                        if r == 0 { data.to_vec() } else { vec![0u32; data.len()] };
+                    rc.bcast(&mut tr, 0, &mut buf, n).map(|_| buf)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn spmd_untampered_world_completes_cleanly() {
+    // Control for the tamper scenario: the identical setup, no mute —
+    // every rank completes with the full payload on both transports.
+    let p = 9usize;
+    let (m, n) = (36usize, 4usize);
+    let sk = Arc::new(Skips::new(p));
+    let data: Vec<u32> = (0..m as u32).collect();
+    let thread_world = ThreadTransport::<u32>::world(p);
+    let loop_world = LoopbackTransport::<u32>::world(p);
+    for (label, results) in [
+        ("threads", run_clean_bcast(thread_world, &sk, &data, n)),
+        ("loopback", run_clean_bcast(loop_world, &sk, &data, n)),
+    ] {
+        for (r, res) in results.iter().enumerate() {
+            let buf = res.as_ref().unwrap_or_else(|e| panic!("{label} rank {r}: {e}"));
+            assert_eq!(buf, &data, "{label} rank={r}");
+        }
+    }
 }
 
 #[test]

@@ -29,13 +29,15 @@ struct Case {
     backend: BackendKind,
 }
 
-/// Backends weighted towards the cheap ones (a threaded case spawns `p`
-/// OS threads); the engine path gets steady coverage.
+/// Backends weighted towards the cheap ones (a threaded or SPMD case
+/// spawns `p` OS threads); the engine and rank-plane paths get steady
+/// coverage.
 fn gen_backend(rng: &mut Rng) -> BackendKind {
     match rng.range(0, 7) {
         0..=3 => BackendKind::Lockstep,
         4 | 5 => BackendKind::Engine,
-        _ => BackendKind::Threaded,
+        6 => BackendKind::Threaded,
+        _ => BackendKind::Spmd,
     }
 }
 

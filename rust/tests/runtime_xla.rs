@@ -8,15 +8,19 @@
 //! entirely.
 
 #![cfg(feature = "xla")]
-// Exercises the legacy `*_sim` wrappers on purpose (they delegate to
-// `comm::Communicator`).
-#![allow(deprecated)]
 
 use std::sync::Arc;
 
-use circulant_bcast::collectives::{reduce_scatter_block_sim, reduce_sim, ReduceOp};
+use circulant_bcast::collectives::ReduceOp;
+use circulant_bcast::comm::{
+    Algo, CommBuilder, Communicator, ReduceReq, ReduceScatterBlockReq,
+};
 use circulant_bcast::runtime::{DType, XlaRuntime, XlaSumOp};
 use circulant_bcast::sim::LinearCost;
+
+fn comm(p: usize) -> Communicator {
+    CommBuilder::new(p).cost_model(LinearCost::hpc_default()).build()
+}
 
 fn runtime() -> Arc<XlaRuntime> {
     Arc::new(XlaRuntime::new().expect("artifacts missing — run `make artifacts`"))
@@ -105,10 +109,12 @@ fn reduce_collective_with_xla_operator() {
         .map(|r| (0..m).map(|i| (r * 7 + i) as f32 * 0.125).collect())
         .collect();
     let expect: Vec<f32> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-    let res = reduce_sim(&inputs, 0, 4, op, 4, &LinearCost::hpc_default()).unwrap();
-    assert_eq!(res.buffer.len(), m);
+    let out = comm(p)
+        .reduce(ReduceReq::new(0, &inputs, op).algo(Algo::Circulant).blocks(4).elem_bytes(4))
+        .unwrap();
+    assert_eq!(out.buffers.len(), m);
     for i in 0..m {
-        assert!((res.buffer[i] - expect[i]).abs() < 1e-3, "i={i}");
+        assert!((out.buffers[i] - expect[i]).abs() < 1e-3, "i={i}");
     }
 }
 
@@ -123,11 +129,16 @@ fn reduce_scatter_with_xla_operator() {
         .collect();
     let sums: Vec<i32> =
         (0..p * chunk).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-    let res =
-        reduce_scatter_block_sim(&inputs, chunk, 2, op, 4, &LinearCost::hpc_default())
-            .unwrap();
+    let out = comm(p)
+        .reduce_scatter_block(
+            ReduceScatterBlockReq::new(&inputs, chunk, op)
+                .algo(Algo::Circulant)
+                .blocks(2)
+                .elem_bytes(4),
+        )
+        .unwrap();
     for r in 0..p {
-        assert_eq!(res.chunks[r], sums[r * chunk..(r + 1) * chunk].to_vec(), "rank {r}");
+        assert_eq!(out.buffers[r], sums[r * chunk..(r + 1) * chunk].to_vec(), "rank {r}");
     }
 }
 

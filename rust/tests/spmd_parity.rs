@@ -1,0 +1,346 @@
+//! Differential SPMD parity suite: for a seeded `(p, n, root, kind)`
+//! grid — p over 1, powers of two ±1 and primes — the per-rank
+//! `RankComm` outputs over **both** transports (`ThreadTransport`, the
+//! real one-thread-per-rank runtime, and `LoopbackTransport`, the
+//! lockstep round-barrier replay) must be bit-identical to the god-view
+//! `Communicator` outcomes on the lockstep and engine backends:
+//! payloads, completion, and the full `RunStats` accounting.
+//!
+//! This is the receipt for the rank plane's core claim: recomputing each
+//! rank's schedule independently in O(log p) (no shared table, no
+//! communication) yields exactly the schedules — and therefore exactly
+//! the collectives — the whole-machine plane produces.
+//!
+//! Deterministic by default; honors `TESTKIT_SEED` (CI runs the fixed
+//! three-seed matrix).
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::rank::{
+    spmd_allgatherv, spmd_allreduce, spmd_bcast, spmd_reduce, spmd_reduce_scatter,
+};
+use circulant_bcast::comm::{
+    Algo, AllgathervReq, AllreduceReq, BackendKind, BcastReq, CommBuilder, Communicator,
+    ReduceReq, ReduceScatterReq, TransportKind,
+};
+use circulant_bcast::schedule::Skips;
+use circulant_bcast::sim::{RunStats, UnitCost};
+use circulant_bcast::testkit::{install_seed_reporter, Rng};
+
+fn comm(p: usize, backend: BackendKind) -> Communicator {
+    CommBuilder::new(p).cost_model(UnitCost).backend(backend).build()
+}
+
+fn assert_stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.active_rounds, b.active_rounds, "{ctx}: active_rounds");
+    assert_eq!(a.messages, b.messages, "{ctx}: messages");
+    assert_eq!(a.bytes, b.bytes, "{ctx}: bytes");
+    assert_eq!(a.max_rank_bytes, b.max_rank_bytes, "{ctx}: max_rank_bytes");
+    assert!((a.time - b.time).abs() < 1e-12, "{ctx}: time {} vs {}", a.time, b.time);
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    p: usize,
+    root: usize,
+    m: usize,
+    n: usize,
+    kind: usize,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    // p = 1, powers of two and their ±1 neighbours, primes.
+    let p = match rng.range(0, 4) {
+        0 => 1,
+        1 => 1 << rng.range(1, 5),
+        2 => (1 << rng.range(1, 5)) + 1,
+        3 => (1 << rng.range(2, 5)) - 1,
+        _ => [3, 7, 13, 17, 19, 23, 29, 31][rng.range(0, 7)],
+    };
+    Case {
+        p,
+        root: rng.range(0, p - 1),
+        m: rng.range(0, 120),
+        n: rng.range(1, 10),
+        kind: rng.range(0, 4),
+    }
+}
+
+/// God-view truth on lockstep + engine, SPMD over both transports, all
+/// compared bit for bit.
+fn check_case(c: &Case) {
+    let ctx = format!("{c:?}");
+    let sk = Arc::new(Skips::new(c.p));
+    match c.kind {
+        // ----- bcast -----
+        0 => {
+            let data: Vec<i64> = (0..c.m as i64).map(|i| i * 7 - 11).collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .bcast(
+                        BcastReq::new(c.root, &data)
+                            .algo(Algo::Circulant)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+                let out = run(backend);
+                assert_eq!(out.algo, base.algo, "{ctx} [{backend:?}]: algo");
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_eq!(out.all_received(), base.all_received(), "{ctx} [{backend:?}]");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+            let (lstats, lbufs) = spmd_bcast(
+                &sk,
+                c.root,
+                &data,
+                c.n,
+                8,
+                &UnitCost,
+                TransportKind::Loopback,
+            )
+            .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
+            assert_eq!(lbufs, base.buffers, "{ctx} [loopback]: payload");
+            assert_stats_eq(&lstats, &base.stats, &format!("{ctx} [loopback]"));
+        }
+        // ----- reduce -----
+        1 => {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..c.m).map(|i| ((r * 41 + i * 13) % 509) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .reduce(
+                        ReduceReq::new(c.root, &inputs, Arc::new(SumOp))
+                            .algo(Algo::Circulant)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+            let (lstats, lbuf) = spmd_reduce(
+                &sk,
+                c.root,
+                &inputs,
+                c.n,
+                Arc::new(SumOp),
+                8,
+                &UnitCost,
+                TransportKind::Loopback,
+            )
+            .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
+            assert_eq!(lbuf, base.buffers, "{ctx} [loopback]: payload");
+            assert_stats_eq(&lstats, &base.stats, &format!("{ctx} [loopback]"));
+        }
+        // ----- allgatherv (irregular counts derived from the case) -----
+        2 => {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..(c.m + r * 3) % 60).map(|i| (r * 1000 + i) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .allgatherv(
+                        AllgathervReq::new(&inputs)
+                            .algo(Algo::Circulant)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+            let (lstats, lbufs) =
+                spmd_allgatherv(&sk, &inputs, c.n, 8, &UnitCost, TransportKind::Loopback)
+                    .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
+            assert_eq!(lbufs, base.buffers, "{ctx} [loopback]: payload");
+            assert_stats_eq(&lstats, &base.stats, &format!("{ctx} [loopback]"));
+        }
+        // ----- reduce-scatter (irregular counts) -----
+        3 => {
+            let counts: Vec<usize> = (0..c.p).map(|r| (c.m + r * 5) % 23).collect();
+            let total: usize = counts.iter().sum();
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..total).map(|i| ((r + 3) * (i + 1) % 401) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .reduce_scatter(
+                        ReduceScatterReq::new(&inputs, &counts, Arc::new(SumOp))
+                            .algo(Algo::Circulant)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+            let (lstats, lchunks) = spmd_reduce_scatter(
+                &sk,
+                &inputs,
+                &counts,
+                c.n,
+                Arc::new(SumOp),
+                8,
+                &UnitCost,
+                TransportKind::Loopback,
+            )
+            .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
+            assert_eq!(lchunks, base.buffers, "{ctx} [loopback]: payload");
+            assert_stats_eq(&lstats, &base.stats, &format!("{ctx} [loopback]"));
+        }
+        // ----- allreduce -----
+        _ => {
+            let inputs: Vec<Vec<i64>> = (0..c.p)
+                .map(|r| (0..c.m).map(|i| ((r + 1) * (i + 1) % 333) as i64).collect())
+                .collect();
+            let run = |backend| {
+                comm(c.p, backend)
+                    .allreduce(
+                        AllreduceReq::new(&inputs, Arc::new(SumOp))
+                            .algo(Algo::Circulant)
+                            .blocks(c.n)
+                            .elem_bytes(8),
+                    )
+                    .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
+            };
+            let base = run(BackendKind::Lockstep);
+            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+                let out = run(backend);
+                assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
+                assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
+            }
+            // Loopback direct fan-out: per-phase stats must recombine to
+            // the god-view aggregate.
+            let (rs, ag, lbufs) = spmd_allreduce(
+                &sk,
+                &inputs,
+                c.n,
+                Arc::new(SumOp),
+                8,
+                &UnitCost,
+                TransportKind::Loopback,
+            )
+            .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
+            assert_eq!(lbufs, base.buffers, "{ctx} [loopback]: payload");
+            assert_eq!(rs.rounds + ag.rounds, base.stats.rounds, "{ctx} [loopback]");
+            assert_eq!(
+                rs.active_rounds + ag.active_rounds,
+                base.stats.active_rounds,
+                "{ctx} [loopback]"
+            );
+            assert_eq!(rs.messages + ag.messages, base.stats.messages, "{ctx} [loopback]");
+            assert_eq!(rs.bytes + ag.bytes, base.stats.bytes, "{ctx} [loopback]");
+            assert_eq!(
+                rs.max_rank_bytes + ag.max_rank_bytes,
+                base.stats.max_rank_bytes,
+                "{ctx} [loopback]"
+            );
+            assert!(
+                (rs.time + ag.time - base.stats.time).abs() < 1e-12,
+                "{ctx} [loopback]: time"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_random_grid_spmd_matches_god_view() {
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    for _ in 0..30 {
+        let c = gen_case(&mut rng);
+        check_case(&c);
+    }
+}
+
+#[test]
+fn degenerate_and_boundary_cases() {
+    // What a random grid can miss: p = 1 (zero rounds on every plane),
+    // empty payloads, more blocks than elements, non-zero roots at
+    // non-powers-of-two p, every collective kind.
+    let fixed = [
+        Case { p: 1, root: 0, m: 10, n: 3, kind: 0 },
+        Case { p: 1, root: 0, m: 10, n: 1, kind: 1 },
+        Case { p: 1, root: 0, m: 7, n: 2, kind: 4 },
+        Case { p: 2, root: 1, m: 33, n: 4, kind: 0 },
+        Case { p: 17, root: 16, m: 0, n: 5, kind: 0 },
+        Case { p: 17, root: 3, m: 3, n: 9, kind: 0 },
+        Case { p: 18, root: 9, m: 100, n: 5, kind: 1 },
+        Case { p: 31, root: 0, m: 50, n: 6, kind: 2 },
+        Case { p: 13, root: 0, m: 40, n: 3, kind: 3 },
+        Case { p: 9, root: 0, m: 61, n: 2, kind: 4 },
+        Case { p: 33, root: 20, m: 64, n: 7, kind: 0 },
+    ];
+    for c in fixed {
+        check_case(&c);
+    }
+}
+
+#[test]
+fn spmd_backend_serves_non_circulant_algos_too() {
+    // Under BackendKind::Spmd, non-circulant algorithms run their
+    // generic state machines over ThreadTransport — same results as
+    // lockstep.
+    let p = 13usize;
+    let data: Vec<i64> = (0..200).collect();
+    let base = comm(p, BackendKind::Lockstep)
+        .bcast(BcastReq::new(3, &data).algo(Algo::Binomial))
+        .unwrap();
+    let out = comm(p, BackendKind::Spmd)
+        .bcast(BcastReq::new(3, &data).algo(Algo::Binomial))
+        .unwrap();
+    assert_eq!(out.buffers, base.buffers);
+    assert_stats_eq(&out.stats, &base.stats, "binomial under spmd");
+}
+
+/// Release smoke (CI `spmd-smoke` job): p = 512 real rank threads over
+/// `ThreadTransport`, full payload + stats parity against the lockstep
+/// god view. `#[ignore]`d in the default run — 512 OS threads per call
+/// is deliberate load, not unit-test fare.
+#[test]
+#[ignore]
+fn smoke_p512_thread_transport() {
+    install_seed_reporter();
+    let p = 512usize;
+    let data: Vec<i64> = (0..2048).map(|i| (i * 37) % 1013).collect();
+    let base = comm(p, BackendKind::Lockstep)
+        .bcast(BcastReq::new(129, &data).algo(Algo::Circulant).blocks(8).elem_bytes(8))
+        .unwrap();
+    let out = comm(p, BackendKind::Spmd)
+        .bcast(BcastReq::new(129, &data).algo(Algo::Circulant).blocks(8).elem_bytes(8))
+        .unwrap();
+    assert_eq!(out.buffers, base.buffers);
+    assert_stats_eq(&out.stats, &base.stats, "p=512 bcast");
+    assert!(out.all_received());
+
+    let inputs: Vec<Vec<i64>> = (0..p)
+        .map(|r| (0..512).map(|i| ((r + 1) * (i + 1)) as i64 % 7919).collect())
+        .collect();
+    let base = comm(p, BackendKind::Lockstep)
+        .allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(4))
+        .unwrap();
+    let out = comm(p, BackendKind::Spmd)
+        .allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(4))
+        .unwrap();
+    assert_eq!(out.buffers, base.buffers);
+    assert_stats_eq(&out.stats, &base.stats, "p=512 allreduce");
+}
