@@ -1,0 +1,195 @@
+//! Socket-service bench: one in-process `cbcastd`-style daemon
+//! (Unix-domain socket, bounded admission queue) driven by several
+//! concurrent client threads, each submitting a seeded traffic mix of
+//! all five collective kinds over the wire protocol. Reports sustained
+//! ops/sec, client-observed p50/p99 latency, and the number of
+//! admission refusals the bounded queue issued under the concurrent
+//! load.
+//!
+//! Usage: `cargo bench --bench socket_service -- [CLIENTS] [OPS] [P]`
+//! (default 4 clients × 32 ops at p = 64; the queue is kept deliberately
+//! shallow so backpressure is exercised, not just measured at zero).
+//!
+//! Receipts asserted on every run (deterministic, honour `TESTKIT_SEED`):
+//! every successful reply's digest + statistics are bit-identical to a
+//! solo run of the same op spec on a fresh communicator, and every
+//! failed reply fails with the identical error string. Numbers land in
+//! `BENCH_socket_service.json` (override with `CBCAST_BENCH_JSON=path`).
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use circulant_bcast::comm::CommBuilder;
+use circulant_bcast::service::{serve_unix, summarize, ServiceClient, ServiceConfig, ServiceReply};
+use circulant_bcast::testkit::{run_mix_blocking, traffic_mix, MixOptions, Rng};
+
+fn bench_sock() -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("cbcast-bench-{}.sock", std::process::id()));
+    p
+}
+
+/// One client thread: connect as its own tenant, submit every op with
+/// reject-and-retry, verify each terminal reply against a solo run.
+/// Returns (ok, failed, rejections, per-op latencies in ms).
+fn client_thread(
+    path: PathBuf,
+    tenant: String,
+    p: usize,
+    n_ops: usize,
+    seed: u64,
+) -> (usize, usize, usize, Vec<f64>) {
+    let mut client = ServiceClient::connect_unix_retry(&path, &tenant, Duration::from_secs(10))
+        .expect("client connect");
+    let mix = traffic_mix(&mut Rng::new(seed), p, n_ops, &MixOptions::default());
+    let (mut ok, mut failed, mut rejections) = (0usize, 0usize, 0usize);
+    let mut latencies_ms = Vec::with_capacity(n_ops);
+    for (i, op) in mix.ops.iter().enumerate() {
+        let t = Instant::now();
+        let reply = loop {
+            match client.call(i as u64, op).expect("wire call") {
+                ServiceReply::Rejected { retry_after_ms } => {
+                    rejections += 1;
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(1) as u64));
+                }
+                reply => break reply,
+            }
+        };
+        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let solo = run_mix_blocking(&CommBuilder::new(op.ranks(p)).build(), op);
+        match (reply, summarize(&solo)) {
+            (ServiceReply::Ok(got), Ok(want)) => {
+                assert_eq!(got, want, "{tenant} op #{i} diverged from solo run");
+                ok += 1;
+            }
+            (ServiceReply::Err(got), Err(want)) => {
+                assert_eq!(got, want, "{tenant} op #{i} failed differently from solo run");
+                failed += 1;
+            }
+            (got, want) => panic!("{tenant} op #{i}: daemon said {got:?}, solo said {want:?}"),
+        }
+    }
+    client.bye().expect("bye");
+    (ok, failed, rejections, latencies_ms)
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let clients: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let per_client: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
+    let p: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(64).max(2);
+    let base_seed: u64 = std::env::var("TESTKIT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+
+    let path = bench_sock();
+    // Shallow queue: with `clients` tenants pipelining into a
+    // `clients`-slot queue during the gather window, refusals are part
+    // of the workload, not a failure mode.
+    let cfg = ServiceConfig {
+        p,
+        queue_cap: clients.max(2),
+        gather: Duration::from_millis(2),
+        retry_after: Duration::from_millis(1),
+        ..ServiceConfig::default()
+    };
+    let handle = serve_unix(&path, cfg).expect("bind daemon");
+
+    println!("=== socket_service: {clients} clients × {per_client} ops, p = {p} ===");
+    println!(
+        "(uds daemon, queue_cap = {}, every reply verified against a solo run)\n",
+        clients.max(2)
+    );
+
+    let start = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let path = path.clone();
+            let tenant = format!("bench-{c}");
+            let seed = base_seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(c as u64 + 1)
+                .max(1);
+            std::thread::spawn(move || client_thread(path, tenant, p, per_client, seed))
+        })
+        .collect();
+    let (mut ok, mut failed, mut rejections) = (0usize, 0usize, 0usize);
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(clients * per_client);
+    for w in workers {
+        let (o, f, r, lat) = w.join().expect("client thread");
+        ok += o;
+        failed += f;
+        rejections += r;
+        latencies_ms.extend(lat);
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+
+    handle.shutdown();
+    let metrics = handle.join();
+
+    // ---- Receipts (deterministic).
+    let total = clients * per_client;
+    assert_eq!(ok + failed, total, "every op must get exactly one terminal reply");
+    assert_eq!(metrics.completed + metrics.failed, total);
+    assert_eq!(metrics.rejected, rejections, "daemon and clients must agree on refusals");
+    assert_eq!(metrics.tenants.len(), clients, "one usage row per tenant");
+
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    let pct = |q: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * q).round() as usize];
+    let ops_per_sec = total as f64 / elapsed_s.max(1e-9);
+
+    println!("{:>24} {:>12}", "ops (ok / failed)", format!("{ok} / {failed}"));
+    println!("{:>24} {:>12}", "admission rejections", rejections);
+    println!("{:>24} {:>12.3}", "elapsed (s)", elapsed_s);
+    println!("{:>24} {:>12.1}", "ops/sec", ops_per_sec);
+    println!("{:>24} {:>12.3}", "p50 latency (ms)", pct(0.50));
+    println!("{:>24} {:>12.3}", "p99 latency (ms)", pct(0.99));
+    println!(
+        "\nall {total} replies bit-identical to solo runs across {} batches",
+        metrics.batches
+    );
+
+    let json_path = std::env::var("CBCAST_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_socket_service.json".to_string());
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    write_json(
+        &json_path, p, clients, total, ok, failed, rejections, elapsed_s, ops_per_sec, p50, p99,
+    )
+    .expect("write bench json");
+    println!("→ {json_path}");
+}
+
+/// Hand-rolled JSON (the crate is dependency-free; no serde).
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    p: usize,
+    clients: usize,
+    ops: usize,
+    ok: usize,
+    failed: usize,
+    rejections: usize,
+    elapsed_s: f64,
+    ops_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"socket_service\",")?;
+    writeln!(f, "  \"p\": {p},")?;
+    writeln!(f, "  \"clients\": {clients},")?;
+    writeln!(f, "  \"ops\": {ops},")?;
+    writeln!(f, "  \"ok\": {ok},")?;
+    writeln!(f, "  \"failed\": {failed},")?;
+    writeln!(f, "  \"rejections\": {rejections},")?;
+    writeln!(f, "  \"elapsed_s\": {elapsed_s:.3},")?;
+    writeln!(f, "  \"ops_per_sec\": {ops_per_sec:.1},")?;
+    writeln!(f, "  \"p50_ms\": {p50_ms:.3},")?;
+    writeln!(f, "  \"p99_ms\": {p99_ms:.3},")?;
+    writeln!(f, "  \"verified\": true")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}

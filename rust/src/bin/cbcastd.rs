@@ -1,0 +1,245 @@
+//! `cbcastd` — the collective service daemon and its workload client.
+//!
+//! ```text
+//! cbcastd serve    (--uds PATH | --tcp ADDR) [-p N] [--queue-cap N]
+//!                  [--batch-max N] [--threads N] [--gather-ms N]
+//!                  [--retry-after-ms N] [--client-timeout-ms N]
+//! cbcastd client   (--uds PATH | --tcp ADDR) [--tenant NAME] [--ops N]
+//!                  [--seed S] [--verify]
+//! cbcastd stats    (--uds PATH | --tcp ADDR)
+//! cbcastd shutdown (--uds PATH | --tcp ADDR)
+//! ```
+//!
+//! `serve` binds, then blocks until a client sends the administrative
+//! shutdown frame. `client` generates a seeded traffic mix
+//! (`TESTKIT_SEED` conventions do not apply here — pass `--seed`),
+//! submits every op with reject-and-retry, and prints one summary line;
+//! with `--verify` it also recomputes each op solo and asserts the
+//! daemon's digest + statistics match bit-for-bit. Exit codes: 0 ok,
+//! 1 failure, 2 usage.
+//!
+//! (Hand-rolled argument parsing: the image has no network access and
+//! the vendored crate set does not include clap.)
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use circulant_bcast::comm::CommBuilder;
+use circulant_bcast::service::{
+    serve_tcp, serve_unix, summarize, ServiceClient, ServiceConfig, ServiceReply,
+};
+use circulant_bcast::testkit::{run_mix_blocking, traffic_mix, MixOptions, Rng};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("client") => cmd_client(&args[1..]),
+        Some("stats") => cmd_stats(&args[1..]),
+        Some("shutdown") => cmd_shutdown(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}; try `cbcastd help`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!("cbcastd — long-lived collective service daemon (circulant schedules, Träff 2024)");
+    println!("commands: serve, client, stats, shutdown, help");
+    println!("see the header of rust/src/bin/cbcastd.rs or README.md for options");
+}
+
+/// Tiny flag parser: returns the value following `name`.
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn opt_usize(args: &[String], name: &str, default: usize) -> usize {
+    opt(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn opt_u64(args: &[String], name: &str, default: u64) -> u64 {
+    opt(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn connect(args: &[String], tenant: &str) -> Result<ServiceClient, i32> {
+    let client = if let Some(path) = opt(args, "--uds") {
+        ServiceClient::connect_unix_retry(Path::new(path), tenant, Duration::from_secs(10))
+    } else if let Some(addr) = opt(args, "--tcp") {
+        ServiceClient::connect_tcp(addr, tenant)
+    } else {
+        eprintln!("need --uds PATH or --tcp ADDR");
+        return Err(2);
+    };
+    client.map_err(|e| {
+        eprintln!("connect failed: {e}");
+        1
+    })
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let mut cfg = ServiceConfig {
+        p: opt_usize(args, "-p", 32),
+        queue_cap: opt_usize(args, "--queue-cap", 128),
+        batch_max: opt_usize(args, "--batch-max", 64),
+        ..ServiceConfig::default()
+    };
+    cfg.gather = Duration::from_millis(opt_u64(args, "--gather-ms", 2));
+    cfg.retry_after = Duration::from_millis(opt_u64(args, "--retry-after-ms", 5));
+    cfg.client_timeout = Duration::from_millis(opt_u64(args, "--client-timeout-ms", 2000));
+    if let Some(t) = opt(args, "--threads").and_then(|v| v.parse().ok()) {
+        cfg.threads = Some(t);
+    }
+
+    let handle = if let Some(path) = opt(args, "--uds") {
+        serve_unix(Path::new(path), cfg)
+    } else if let Some(addr) = opt(args, "--tcp") {
+        serve_tcp(addr, cfg)
+    } else {
+        eprintln!("need --uds PATH or --tcp ADDR");
+        return 2;
+    };
+    let handle = match handle {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            return 1;
+        }
+    };
+    match handle.addr() {
+        Some(addr) => println!("cbcastd: serving p={} on tcp {addr}", handle.p()),
+        None => println!("cbcastd: serving p={} on uds", handle.p()),
+    }
+    // Blocks until a client sends the administrative shutdown frame.
+    let metrics = handle.join();
+    println!(
+        "cbcastd: stopped after {} batches ({} ops ok, {} failed, {} rejections, {} dropped)",
+        metrics.batches, metrics.completed, metrics.failed, metrics.rejected, metrics.dropped
+    );
+    0
+}
+
+fn cmd_client(args: &[String]) -> i32 {
+    let tenant = opt(args, "--tenant").unwrap_or("default");
+    let n_ops = opt_usize(args, "--ops", 16);
+    let seed = opt_u64(args, "--seed", 1);
+    let verify = has_flag(args, "--verify");
+
+    let mut client = match connect(args, tenant) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    let p = client.p();
+    let mix = traffic_mix(&mut Rng::new(seed.max(1)), p, n_ops, &MixOptions::default());
+
+    let start = Instant::now();
+    let (mut ok, mut failed, mut rejections) = (0usize, 0usize, 0usize);
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n_ops);
+    for (i, op) in mix.ops.iter().enumerate() {
+        let op_start = Instant::now();
+        // Count refusals ourselves (call_admitted would hide them).
+        let reply = loop {
+            match client.call(i as u64, op) {
+                Ok(ServiceReply::Rejected { retry_after_ms }) => {
+                    rejections += 1;
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(1) as u64));
+                }
+                Ok(reply) => break reply,
+                Err(e) => {
+                    eprintln!("tenant {tenant}: op #{i} transport error: {e}");
+                    return 1;
+                }
+            }
+        };
+        latencies_ms.push(op_start.elapsed().as_secs_f64() * 1e3);
+        match reply {
+            ServiceReply::Ok(got) => {
+                ok += 1;
+                if verify {
+                    let solo = run_mix_blocking(&CommBuilder::new(op.ranks(p)).build(), op);
+                    if summarize(&solo) != Ok(got.clone()) {
+                        eprintln!(
+                            "tenant {tenant}: op #{i} diverged from solo run\n  daemon: {got:?}\n  solo:   {:?}",
+                            summarize(&solo)
+                        );
+                        return 1;
+                    }
+                }
+            }
+            ServiceReply::Err(msg) => {
+                failed += 1;
+                if verify {
+                    let solo = run_mix_blocking(&CommBuilder::new(op.ranks(p)).build(), op);
+                    if summarize(&solo) != Err(msg.clone()) {
+                        eprintln!(
+                            "tenant {tenant}: op #{i} failed differently from solo run\n  daemon: {msg}\n  solo:   {:?}",
+                            summarize(&solo)
+                        );
+                        return 1;
+                    }
+                }
+            }
+            ServiceReply::Rejected { .. } => unreachable!("handled in the retry loop"),
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    let pct = |q: f64| -> f64 {
+        if latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies_ms.len() - 1) as f64 * q).round() as usize;
+        latencies_ms[idx]
+    };
+    println!(
+        "tenant={tenant} ops={n_ops} ok={ok} failed={failed} rejections={rejections} \
+         elapsed_s={elapsed:.3} ops_per_sec={:.1} p50_ms={:.3} p99_ms={:.3} verified={verify}",
+        n_ops as f64 / elapsed.max(1e-9),
+        pct(0.50),
+        pct(0.99),
+    );
+    let _ = client.bye();
+    0
+}
+
+fn cmd_stats(args: &[String]) -> i32 {
+    let mut client = match connect(args, "stats") {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    match client.stats() {
+        Ok(text) => {
+            print!("{text}");
+            let _ = client.bye();
+            0
+        }
+        Err(e) => {
+            eprintln!("stats failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_shutdown(args: &[String]) -> i32 {
+    let client = match connect(args, "admin") {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    match client.shutdown_daemon() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("shutdown failed: {e}");
+            1
+        }
+    }
+}

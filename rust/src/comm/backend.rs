@@ -36,6 +36,15 @@
 //!   schedule — no table); generic state machines land here and are
 //!   driven over the same transport.
 //!
+//! * [`SocketBackend`] — the wire plane: the same fan-out as
+//!   [`SpmdBackend`], but over [`super::socket::SocketTransport`]
+//!   endpoints whose messages cross real OS sockets (in-process
+//!   `UnixStream::pair` meshes here; multi-process worlds rendezvous
+//!   via [`super::socket`]'s `uds_world`/`tcp_world`). Falls back to
+//!   [`ThreadTransport`] when the element type is not wire-encodable —
+//!   mirroring the engine backend's documented lockstep fallback for
+//!   requests its fast path cannot serve.
+//!
 //! All sit behind one [`ExecBackend`] trait; [`BackendKind`] is the
 //! value-level selector a [`super::Communicator`] stores.
 
@@ -45,7 +54,8 @@ use crate::sim::network::{Network, RankProc, RunStats, SimError};
 use crate::sim::threads::{fold_send_logs, run_threaded_stats};
 
 use super::outcome::CommError;
-use super::rank::{close_after, collect_ranks, drive_proc};
+use super::rank::{close_after, collect_ranks, drive_proc, TransportKind};
+use super::socket::SocketTransport;
 use super::transport::{ThreadTransport, Transport, TransportError};
 
 /// A way of driving `p` rank state machines to completion.
@@ -175,6 +185,39 @@ impl ExecBackend for SpmdBackend {
     }
 }
 
+/// The wire plane as an [`ExecBackend`].
+///
+/// Identical contract to [`SpmdBackend`] — the typed circulant
+/// collectives fan out to per-rank [`super::RankComm`]s under
+/// [`BackendKind::Socket`] and never reach this generic entry point —
+/// but the ranks' messages cross real OS sockets
+/// ([`super::socket::SocketTransport`] over in-process
+/// `UnixStream::pair` meshes), length-prefixed frames, reader threads
+/// and all. The one-ported round discipline holds across the wire; on
+/// healthy schedules results and statistics are bit-identical to
+/// lockstep.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SocketBackend;
+
+impl ExecBackend for SocketBackend {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn execute<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        run_socket_stats(procs, elem_bytes, cost)
+    }
+}
+
 /// Drive generic rank state machines over [`ThreadTransport`] — one OS
 /// thread per rank, free-running, with the identical statistics fold as
 /// the lockstep/threaded backends. World teardown (`close_after`) and
@@ -191,9 +234,45 @@ where
     T: Element,
     P: RankProc<T> + Send,
 {
-    let p = procs.len();
+    let world = ThreadTransport::<T>::world(procs.len());
+    drive_world(procs, world, elem_bytes, cost)
+}
+
+/// [`run_transport_stats`] over the wire plane: generic rank state
+/// machines on [`SocketTransport`] endpoints (in-process
+/// `UnixStream::pair` meshes). A world that cannot be built — a
+/// non-wire-encodable element type, descriptor exhaustion — falls back
+/// to [`ThreadTransport`], keeping the backend total over every
+/// [`Element`] exactly like the engine backend's lockstep fallback.
+pub(crate) fn run_socket_stats<T, P>(
+    procs: Vec<P>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<P>), SimError>
+where
+    T: Element,
+    P: RankProc<T> + Send,
+{
+    match SocketTransport::<T>::pair_world(procs.len()) {
+        Ok(world) => drive_world(procs, world, elem_bytes, cost),
+        Err(_) => run_transport_stats(procs, elem_bytes, cost),
+    }
+}
+
+/// The shared fan-out body: drive each proc over its endpoint on its
+/// own scoped thread, then triage and fold.
+fn drive_world<T, P, Tr>(
+    procs: Vec<P>,
+    world: Vec<Tr>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+) -> Result<(RunStats, Vec<P>), SimError>
+where
+    T: Element,
+    P: RankProc<T> + Send,
+    Tr: Transport<T> + Send,
+{
     let total_rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
-    let world = ThreadTransport::<T>::world(p);
     let results: Vec<Result<(P, Vec<(usize, usize, usize)>), CommError>> =
         std::thread::scope(|s| {
             let handles: Vec<_> = procs
@@ -266,6 +345,11 @@ pub enum BackendKind {
     /// per-rank O(log p) schedules, no shared table); generic procs run
     /// on [`SpmdBackend`] over the same transport.
     Spmd,
+    /// The wire plane: the SPMD fan-out over
+    /// [`super::socket::SocketTransport`] — real OS sockets,
+    /// length-prefixed frames, per-peer reader threads; generic procs
+    /// run on [`SocketBackend`] over the same transport.
+    Socket,
 }
 
 impl BackendKind {
@@ -275,6 +359,7 @@ impl BackendKind {
             BackendKind::Threaded => ThreadedBackend.name(),
             BackendKind::Engine => EngineBackend.name(),
             BackendKind::Spmd => SpmdBackend.name(),
+            BackendKind::Socket => SocketBackend.name(),
         }
     }
 
@@ -285,13 +370,31 @@ impl BackendKind {
             "threaded" | "threads" => BackendKind::Threaded,
             "engine" | "sparse" => BackendKind::Engine,
             "spmd" | "rank" => BackendKind::Spmd,
+            "socket" | "wire" => BackendKind::Socket,
             _ => return None,
         })
     }
 
+    /// True for the backends that execute collectives on the SPMD rank
+    /// plane (per-rank `RankComm`s over a [`Transport`]) rather than a
+    /// god-view simulator.
+    pub fn is_rank_plane(self) -> bool {
+        matches!(self, BackendKind::Spmd | BackendKind::Socket)
+    }
+
+    /// Which transport this backend's rank-plane fan-outs drive
+    /// (meaningful when [`BackendKind::is_rank_plane`]).
+    pub(crate) fn rank_plane_transport(self) -> TransportKind {
+        match self {
+            BackendKind::Socket => TransportKind::Socket,
+            _ => TransportKind::Threads,
+        }
+    }
+
     /// Backend selected by the `CBCAST_BACKEND` environment variable
-    /// (`lockstep` | `threaded` | `engine`), defaulting to lockstep —
-    /// how the benches accept either backend without changing code.
+    /// (`lockstep` | `threaded` | `engine` | `spmd` | `socket`),
+    /// defaulting to lockstep — how the benches accept any backend
+    /// without changing code.
     pub fn from_env() -> BackendKind {
         std::env::var("CBCAST_BACKEND")
             .ok()
@@ -314,6 +417,7 @@ impl BackendKind {
             BackendKind::Threaded => ThreadedBackend.execute::<T, P>(procs, elem_bytes, cost),
             BackendKind::Engine => EngineBackend.execute::<T, P>(procs, elem_bytes, cost),
             BackendKind::Spmd => SpmdBackend.execute::<T, P>(procs, elem_bytes, cost),
+            BackendKind::Socket => SocketBackend.execute::<T, P>(procs, elem_bytes, cost),
         }
     }
 }
@@ -398,7 +502,14 @@ mod tests {
         assert_eq!(BackendKind::parse("sparse"), Some(BackendKind::Engine));
         assert_eq!(BackendKind::parse("spmd"), Some(BackendKind::Spmd));
         assert_eq!(BackendKind::parse("rank"), Some(BackendKind::Spmd));
+        assert_eq!(BackendKind::parse("socket"), Some(BackendKind::Socket));
+        assert_eq!(BackendKind::parse("wire"), Some(BackendKind::Socket));
         assert!(BackendKind::parse("nope").is_none());
+        assert!(BackendKind::Socket.is_rank_plane());
+        assert!(BackendKind::Spmd.is_rank_plane());
+        assert!(!BackendKind::Lockstep.is_rank_plane());
+        assert_eq!(BackendKind::Socket.rank_plane_transport(), TransportKind::Socket);
+        assert_eq!(BackendKind::Spmd.rank_plane_transport(), TransportKind::Threads);
     }
 
     #[test]
@@ -414,6 +525,24 @@ mod tests {
         assert_eq!(ls.max_rank_bytes, ss.max_rank_bytes);
         assert!((ls.time - ss.time).abs() < 1e-12);
         for (a, b) in lprocs.iter().zip(&sprocs) {
+            assert_eq!(a.val, b.val);
+        }
+    }
+
+    #[test]
+    fn socket_backend_drives_generic_procs_like_lockstep() {
+        let p = 6usize;
+        let (ls, lprocs) =
+            LockstepBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        let (ws, wprocs) =
+            SocketBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        assert_eq!(ls.rounds, ws.rounds);
+        assert_eq!(ls.messages, ws.messages);
+        assert_eq!(ls.bytes, ws.bytes);
+        assert_eq!(ls.active_rounds, ws.active_rounds);
+        assert_eq!(ls.max_rank_bytes, ws.max_rank_bytes);
+        assert!((ls.time - ws.time).abs() < 1e-12);
+        for (a, b) in lprocs.iter().zip(&wprocs) {
             assert_eq!(a.val, b.val);
         }
     }

@@ -25,7 +25,6 @@ use super::nonblocking::Pending;
 use super::outcome::{CommError, Outcome};
 use super::rank::{
     spmd_allgatherv, spmd_allreduce, spmd_bcast, spmd_reduce, spmd_reduce_scatter,
-    TransportKind,
 };
 use super::request::{
     Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq, ReduceScatterBlockReq,
@@ -323,10 +322,12 @@ impl Communicator {
                 let bufs: Vec<Vec<T>> = (0..p).map(|_| req.data.to_vec()).collect();
                 (stats, bufs)
             }
-            Algo::Circulant if self.backend == BackendKind::Spmd => {
-                // The SPMD rank plane: p RankComms over ThreadTransport,
-                // each computing only its own O(log p) schedule — the
-                // whole-machine ScheduleTable is never touched.
+            Algo::Circulant if self.backend.is_rank_plane() => {
+                // The SPMD rank plane: p RankComms over the backend's
+                // transport (mailbox threads for Spmd, real sockets
+                // for Socket), each computing only its own O(log p)
+                // schedule — the whole-machine ScheduleTable is never
+                // touched.
                 let n = self.blocks_for(Kind::Bcast, m, req.blocks);
                 let (stats, bufs) = spmd_bcast(
                     &self.sk,
@@ -335,7 +336,7 @@ impl Communicator {
                     n,
                     req.elem_bytes,
                     cost,
-                    TransportKind::Threads,
+                    self.backend.rank_plane_transport(),
                 )?;
                 (stats, bufs)
             }
@@ -424,7 +425,7 @@ impl Communicator {
                     eng.run_reduce(req.inputs, req.op.as_ref(), req.elem_bytes, cost)?;
                 (stats, buffer)
             }
-            Algo::Circulant if self.backend == BackendKind::Spmd => {
+            Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::Reduce, m, req.blocks);
                 let (stats, buffer) = spmd_reduce(
                     &self.sk,
@@ -434,7 +435,7 @@ impl Communicator {
                     req.op.clone(),
                     req.elem_bytes,
                     cost,
-                    TransportKind::Threads,
+                    self.backend.rank_plane_transport(),
                 )?;
                 (stats, buffer)
             }
@@ -519,7 +520,7 @@ impl Communicator {
         let counts = Arc::new(req.inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
         let algo = req.algo.resolve(Kind::Allgatherv, total, req.elem_bytes, req.blocks);
         let (stats, buffers) = match algo {
-            Algo::Circulant if self.backend == BackendKind::Spmd => {
+            Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::Allgatherv, total, req.blocks);
                 let (stats, bufs) = spmd_allgatherv(
                     &self.sk,
@@ -527,7 +528,7 @@ impl Communicator {
                     n,
                     req.elem_bytes,
                     cost,
-                    TransportKind::Threads,
+                    self.backend.rank_plane_transport(),
                 )?;
                 (stats, bufs)
             }
@@ -602,7 +603,7 @@ impl Communicator {
         let counts = Arc::new(req.counts.to_vec());
         let algo = req.algo.resolve(Kind::ReduceScatter, total, req.elem_bytes, req.blocks);
         let (stats, chunks) = match algo {
-            Algo::Circulant if self.backend == BackendKind::Spmd => {
+            Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::ReduceScatter, total, req.blocks);
                 let (stats, chunks) = spmd_reduce_scatter(
                     &self.sk,
@@ -612,7 +613,7 @@ impl Communicator {
                     req.op.clone(),
                     req.elem_bytes,
                     cost,
-                    TransportKind::Threads,
+                    self.backend.rank_plane_transport(),
                 )?;
                 (stats, chunks)
             }
@@ -751,7 +752,7 @@ impl Communicator {
         let counts = Arc::new(counts);
         let algo = req.algo.resolve(Kind::Allreduce, m, req.elem_bytes, req.blocks);
         match algo {
-            Algo::Circulant if self.backend == BackendKind::Spmd => {
+            Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::Allreduce, m, req.blocks);
                 let (rs_stats, ag_stats, buffers) = spmd_allreduce(
                     &self.sk,
@@ -760,7 +761,7 @@ impl Communicator {
                     req.op.clone(),
                     req.elem_bytes,
                     cost,
-                    TransportKind::Threads,
+                    self.backend.rank_plane_transport(),
                 )?;
                 Ok((rs_stats, ag_stats, buffers, algo))
             }

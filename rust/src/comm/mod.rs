@@ -64,6 +64,18 @@
 //! [`Outcome`] — bit-identical to the lockstep backend
 //! (`tests/spmd_parity.rs`). See [`rank`] and [`transport`].
 //!
+//! ## The wire plane
+//!
+//! [`SocketTransport`] carries the same rank plane across real OS
+//! sockets: length-prefixed frames over Unix-domain socketpairs
+//! in-process ([`SocketTransport::pair_world`]) or over UDS/TCP
+//! rendezvous between processes, with a versioned handshake pinning
+//! `(p, rank, world_id)` and wire faults mapped into the same
+//! [`TransportError`] vocabulary. [`BackendKind::Socket`] runs the
+//! god-view API on top of it — still bit-identical to lockstep — and
+//! [`crate::service`] builds a long-lived collective daemon over the
+//! same framing. See [`socket`].
+//!
 //! ## The traffic plane
 //!
 //! Beyond one blocking collective at a time, a communicator serves
@@ -84,20 +96,24 @@ pub mod nonblocking;
 pub mod outcome;
 pub mod rank;
 pub mod request;
+pub mod socket;
 pub mod traffic;
 pub mod transport;
 
 pub use backend::{
-    build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, SpmdBackend,
-    ThreadedBackend,
+    build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, SocketBackend,
+    SpmdBackend, ThreadedBackend,
 };
 pub use rank::{RankComm, RankRun, TransportKind};
-pub use transport::{LoopbackTransport, ThreadTransport, Transport, TransportError};
+pub use socket::{fresh_world_id, SocketTransport};
+pub use transport::{
+    configured_timeout, LoopbackTransport, ThreadTransport, Transport, TransportError,
+};
 pub use communicator::{CommBuilder, Communicator};
 pub use nonblocking::{
     IallgathervReq, IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Pending, Window,
 };
-pub use outcome::{CommError, Outcome};
+pub use outcome::{CommError, Outcome, TenantUsage};
 pub use request::{
     resolve_blocks, Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq,
     ReduceScatterBlockReq, ReduceScatterReq, TuningParams, SMALL_MSG_BYTES,

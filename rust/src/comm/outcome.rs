@@ -51,6 +51,32 @@ impl<B> Outcome<B> {
     }
 }
 
+/// Per-tenant usage accounting of one traffic-plane batch.
+///
+/// The collective service daemon ([`crate::service`]) tags every job it
+/// admits with the submitting client's tenant label; the traffic engine
+/// folds the per-op message/byte counters into one row per tenant and
+/// reports them on [`crate::comm::BatchReport::tenants`]. Admission
+/// rejections never reach the engine, so the daemon folds those in after
+/// the batch via `BatchReport::note_rejected`. Untagged (library-level)
+/// submissions carry no tenant and produce no row.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantUsage {
+    /// The tenant label from the client handshake.
+    pub tenant: String,
+    /// Operations admitted into the batch for this tenant.
+    pub ops: usize,
+    /// Of those, operations that finished complete and error-free.
+    pub ok: usize,
+    /// Point-to-point messages sent on behalf of this tenant.
+    pub messages: usize,
+    /// Payload bytes moved on behalf of this tenant.
+    pub bytes: usize,
+    /// Requests refused at admission (queue saturated) — folded in by
+    /// the daemon, not the engine.
+    pub rejected: usize,
+}
+
 /// Unified error type of the `comm` layer.
 #[derive(Debug)]
 pub enum CommError {

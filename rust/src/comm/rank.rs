@@ -85,6 +85,7 @@ use crate::sim::threads::fold_send_logs;
 
 use super::outcome::CommError;
 use super::request::Kind;
+use super::socket::SocketTransport;
 use super::transport::{LoopbackTransport, ThreadTransport, Transport, TransportError};
 
 /// Per-rank receipts of one collective run: what this rank did, in its
@@ -509,6 +510,10 @@ pub enum TransportKind {
     /// [`LoopbackTransport`]: the lockstep round-barrier replay with
     /// full machine-model checks — the differential mirror.
     Loopback,
+    /// [`crate::comm::socket::SocketTransport`] over in-process
+    /// `UnixStream::pair` meshes: the wire plane's real-socket
+    /// endpoints — what [`crate::comm::BackendKind::Socket`] uses.
+    Socket,
 }
 
 /// Run `per_rank` on one scoped thread per world endpoint; a panicking
@@ -594,16 +599,24 @@ fn fold_runs(runs: Vec<RankRun>, elem_bytes: usize, cost: &dyn CostModel) -> Run
     fold_send_logs(&logs, total_rounds, elem_bytes, cost)
 }
 
-fn make_world<T: Element>(p: usize, kind: TransportKind) -> WorldEndpoints<T> {
-    match kind {
+fn make_world<T: Element>(p: usize, kind: TransportKind) -> Result<WorldEndpoints<T>, CommError> {
+    Ok(match kind {
         TransportKind::Threads => WorldEndpoints::Threads(ThreadTransport::world(p)),
         TransportKind::Loopback => WorldEndpoints::Loopback(LoopbackTransport::world(p)),
-    }
+        // Socket worlds can genuinely fail to build: a non-wire-
+        // encodable element type, or descriptor exhaustion (a full
+        // mesh holds p·(p−1) socket ends).
+        TransportKind::Socket => WorldEndpoints::Socket(
+            SocketTransport::pair_world(p)
+                .map_err(|e| CommError::BadRequest(format!("socket world (p = {p}): {e}")))?,
+        ),
+    })
 }
 
 enum WorldEndpoints<T> {
     Threads(Vec<ThreadTransport<T>>),
     Loopback(Vec<LoopbackTransport<T>>),
+    Socket(Vec<SocketTransport<T>>),
 }
 
 macro_rules! over_world {
@@ -611,6 +624,7 @@ macro_rules! over_world {
         match $world {
             WorldEndpoints::Threads(w) => fanout(w, $per_rank),
             WorldEndpoints::Loopback(w) => fanout(w, $per_rank),
+            WorldEndpoints::Socket(w) => fanout(w, $per_rank),
         }
     };
 }
@@ -629,7 +643,7 @@ pub fn spmd_bcast<T: Element>(
 ) -> Result<(RunStats, Vec<Vec<T>>), CommError> {
     let p = sk.p();
     let m = data.len();
-    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+    let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
         let rc = RankComm::new(p, r, sk.clone());
         let mut buf = if r == root { data.to_vec() } else { vec![T::default(); m] };
         let run = rc.bcast(tr, root, &mut buf, blocks)?;
@@ -653,7 +667,7 @@ pub fn spmd_reduce<T: Element>(
     kind: TransportKind,
 ) -> Result<(RunStats, Vec<T>), CommError> {
     let p = sk.p();
-    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+    let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
         let rc = RankComm::new(p, r, sk.clone());
         let mut buf = inputs[r].clone();
         let run = rc.reduce(tr, root, &mut buf, blocks, op.clone())?;
@@ -678,7 +692,7 @@ pub fn spmd_allgatherv<T: Element>(
     let counts: Vec<usize> = inputs.iter().map(|v| v.len()).collect();
     let total: usize = counts.iter().sum();
     let counts = &counts;
-    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+    let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
         let rc = RankComm::new(p, r, sk.clone());
         let mut buf = vec![T::default(); total];
         let off: usize = counts[..r].iter().sum();
@@ -706,7 +720,7 @@ pub fn spmd_reduce_scatter<T: Element>(
     kind: TransportKind,
 ) -> Result<(RunStats, Vec<Vec<T>>), CommError> {
     let p = sk.p();
-    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+    let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
         let rc = RankComm::new(p, r, sk.clone());
         let mut out = vec![T::default(); counts[r]];
         let run = rc.reduce_scatter(tr, counts, &inputs[r], &mut out, blocks, op.clone())?;
@@ -730,7 +744,7 @@ pub fn spmd_allreduce<T: Element>(
     kind: TransportKind,
 ) -> Result<(RunStats, RunStats, Vec<Vec<T>>), CommError> {
     let p = sk.p();
-    let results = over_world!(make_world::<T>(p, kind), |r, tr: &mut _| {
+    let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
         let rc = RankComm::new(p, r, sk.clone());
         let mut buf = inputs[r].clone();
         let (run_rs, run_ag) = rc.allreduce(tr, &mut buf, blocks, op.clone())?;
@@ -786,9 +800,11 @@ mod tests {
     }
 
     #[test]
-    fn spmd_bcast_both_transports_small_grid() {
+    fn spmd_bcast_all_transports_small_grid() {
         for p in [1usize, 2, 3, 5, 9, 17] {
-            for kind in [TransportKind::Threads, TransportKind::Loopback] {
+            for kind in
+                [TransportKind::Threads, TransportKind::Loopback, TransportKind::Socket]
+            {
                 run_bcast_world(kind, p, 0, 48, 4);
                 if p > 2 {
                     run_bcast_world(kind, p, p - 1, 33, 3);
@@ -805,7 +821,7 @@ mod tests {
         let inputs: Vec<Vec<i64>> =
             (0..p).map(|r| (0..m).map(|i| (r * 100 + i) as i64).collect()).collect();
         let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-        for kind in [TransportKind::Threads, TransportKind::Loopback] {
+        for kind in [TransportKind::Threads, TransportKind::Loopback, TransportKind::Socket] {
             for root in [0usize, 4, 8] {
                 let (_, buf) = spmd_reduce(
                     &sk,
@@ -832,7 +848,7 @@ mod tests {
             .map(|r| (0..m).map(|i| ((r + 1) * (i + 1)) as i64 % 97).collect())
             .collect();
         let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
-        for kind in [TransportKind::Threads, TransportKind::Loopback] {
+        for kind in [TransportKind::Threads, TransportKind::Loopback, TransportKind::Socket] {
             let (_, _, bufs) =
                 spmd_allreduce(&sk, &inputs, 2, Arc::new(SumOp), 8, &UnitCost, kind)
                     .unwrap();

@@ -68,6 +68,11 @@ pub const SMALL_MSG_BYTES: usize = 2048;
 ///   their generic state machines over the same transport
 ///   ([`crate::comm::SpmdBackend`]). Results and statistics are
 ///   bit-identical to the lockstep backend (`tests/spmd_parity.rs`).
+/// * `Socket` is `Spmd` with the wire swapped in: the same per-rank
+///   fan-out, but over [`crate::comm::SocketTransport`] — every
+///   message crosses a real OS socket (`UnixStream::pair` meshes for
+///   in-process worlds). Same bit-identity pin, same parity suite;
+///   use it to validate wire behavior rather than for speed.
 ///
 /// Whichever simulated backend runs (`Lockstep`/`Threaded`/`Engine`),
 /// schedules are served from one shared all-ranks

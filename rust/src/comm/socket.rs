@@ -1,0 +1,1348 @@
+//! The wire plane: [`SocketTransport`] carries the SPMD rank plane's
+//! messages across real OS sockets — Unix-domain or TCP — one process
+//! (or thread) per rank. The paper's point makes this cheap: schedule
+//! computation is communication-free and O(log p) per rank, so each
+//! endpoint derives its own 2·⌈log₂ p⌉ schedule entries locally and
+//! only payload blocks cross the wire.
+//!
+//! **The one-ported round discipline holds across the wire.** Each
+//! endpoint enforces the caller side of the
+//! [`super::transport`] contract with the same `Discipline`
+//! bookkeeping as the in-process transports, and machine-model
+//! violations surface in the lockstep [`SimError`] vocabulary wrapped
+//! as [`TransportError::Machine`] — the SPMD parity suite pins
+//! `SocketTransport` bit-identical (buffers *and* stats) to lockstep.
+//!
+//! # Frames
+//!
+//! Everything on a wire-plane connection is a length-prefixed frame
+//! (all integers little-endian; `len` counts the type byte plus body):
+//!
+//! ```text
+//! [ len: u32 ][ type: u8 ][ body: len - 1 bytes ]
+//!
+//! HELLO (1)  magic u32, version u16, p u32, rank u32,
+//!            world_id u64, elem_bytes u32
+//! DATA  (2)  round u32, src u32, dst u32, count u32,
+//!            payload: count * elem_bytes bytes
+//! BYE   (3)  (empty) — clean close of the sender's write side
+//! ABORT (4)  reason: utf-8 — the sender's world was poisoned
+//! ```
+//!
+//! # Handshake
+//!
+//! The first frame on every link is a versioned `HELLO` pinning
+//! `(p, rank, world_id, elem_bytes)`. A mismatch — wrong world, wrong
+//! protocol version, wrong element width — is a typed failure: at
+//! rendezvous time it is an [`io::Error`] from the constructor; after
+//! assembly the link's reader poisons the local world and every
+//! blocked verb fails with [`TransportError::Shutdown`].
+//!
+//! # Failure mapping
+//!
+//! Wire faults land in the same vocabulary the in-process transports
+//! use, never as raw I/O errors from `send`/`recv`:
+//!
+//! * peer closed cleanly (`BYE` or EOF at a frame boundary) but the
+//!   schedule still expects a message from it →
+//!   [`SimError::MissingMessage`];
+//! * peer silent past the receive deadline →
+//!   [`TransportError::Timeout`];
+//! * truncated frame, torn payload, misrouted frame, port collision →
+//!   world poisoned with the diagnosis, verbs fail as
+//!   [`TransportError::Shutdown`] (collisions use the
+//!   [`SimError::ReceivePortBusy`] text);
+//! * a rank that fails broadcasts `ABORT` on [`Transport::close`], so
+//!   poisoning propagates across process boundaries too.
+//!
+//! # Topologies
+//!
+//! * [`SocketTransport::pair_world`] — all `p` endpoints in one
+//!   process over `UnixStream::pair` meshes (the parity suite's
+//!   harness). A full mesh holds p·(p−1) descriptor ends: p = 24 fits
+//!   a 1024-fd soft limit, p = 64 wants `ulimit -n` ≥ 8192.
+//! * [`SocketTransport::uds_world`] / [`SocketTransport::tcp_world`] —
+//!   one endpoint per *process*, rendezvous by dialing every lower
+//!   rank and accepting from every higher rank (acceptors identify
+//!   peers by their `HELLO`, so accept order never matters).
+
+use std::any::TypeId;
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::transport::{configured_timeout, Discipline, Transport, TransportError};
+use crate::sim::network::SimError;
+
+/// Wire protocol magic ("CBW1") — first field of every `HELLO`.
+pub(crate) const MAGIC: u32 = 0x4342_5731;
+/// Wire protocol version; bumped on any frame-format change.
+pub(crate) const VERSION: u16 = 1;
+/// Sanity bound on a single frame (256 MiB) — anything larger is a
+/// corrupt length prefix, not a payload.
+pub(crate) const MAX_FRAME: usize = 1 << 28;
+
+const FT_HELLO: u8 = 1;
+const FT_DATA: u8 = 2;
+const FT_BYE: u8 = 3;
+const FT_ABORT: u8 = 4;
+
+// ---------------------------------------------------------------------
+// Byte helpers shared with the service plane
+// ---------------------------------------------------------------------
+
+pub(crate) fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed utf-8 string (u32 length + bytes).
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn bad_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Cursor over a frame body; every getter fails with a typed
+/// `InvalidData` on a short body instead of panicking.
+pub(crate) struct Body<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Body<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Body<'a> {
+        Body { b }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.b.len() < n {
+            return Err(bad_data("wire: short frame body".into()));
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    pub(crate) fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u16(&mut self) -> io::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Counterpart of [`put_str`].
+    pub(crate) fn str(&mut self) -> io::Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| bad_data("wire: invalid utf-8".into()))
+    }
+
+    pub(crate) fn rest(&mut self) -> &'a [u8] {
+        std::mem::take(&mut self.b)
+    }
+}
+
+/// Seal `body` into a full `[len][type][body]` frame ready to write.
+pub(crate) fn seal(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 5);
+    put_u32(&mut out, (body.len() + 1) as u32);
+    out.push(kind);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Read exactly `buf.len()` bytes. `Ok(false)` means EOF *before any
+/// byte* — a clean stop at a frame boundary when called on a length
+/// prefix. EOF mid-buffer is the typed truncation error.
+pub(crate) fn fill(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "wire: truncated frame",
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one `[len][type][body]` frame. `Ok(None)` is a clean EOF at a
+/// frame boundary; EOF anywhere inside a frame is `UnexpectedEof`.
+pub(crate) fn read_raw_frame(r: &mut impl Read) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut len4 = [0u8; 4];
+    if !fill(r, &mut len4)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(bad_data(format!("wire: bad frame length {len}")));
+    }
+    let mut kind1 = [0u8; 1];
+    if !fill(r, &mut kind1)? {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "wire: truncated frame",
+        ));
+    }
+    let mut body = vec![0u8; len - 1];
+    if !fill(r, &mut body)? {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "wire: truncated frame",
+        ));
+    }
+    Ok(Some((kind1[0], body)))
+}
+
+// ---------------------------------------------------------------------
+// Stream: one enum over the two socket families
+// ---------------------------------------------------------------------
+
+/// A bidirectional byte stream over either socket family. The service
+/// plane reuses this for client connections.
+pub(crate) enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub(crate) fn try_clone(&self) -> io::Result<Stream> {
+        Ok(match self {
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+
+    pub(crate) fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.shutdown(how),
+            Stream::Tcp(s) => s.shutdown(how),
+        }
+    }
+
+    pub(crate) fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(dur),
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Codec: elements <-> little-endian bytes, resolved once per world
+// ---------------------------------------------------------------------
+
+/// Fixed-width primitives the wire can carry. Payloads are encoded
+/// per-element little-endian, so frames are byte-identical across
+/// endianness and process boundaries.
+trait Prim: Copy + 'static {
+    const WIDTH: usize;
+    fn put(self, out: &mut Vec<u8>);
+    fn take(bytes: &[u8]) -> Self;
+}
+
+macro_rules! impl_prim {
+    ($($t:ty),*) => {$(
+        impl Prim for $t {
+            const WIDTH: usize = std::mem::size_of::<$t>();
+            fn put(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn take(bytes: &[u8]) -> Self {
+                Self::from_le_bytes(bytes.try_into().unwrap())
+            }
+        }
+    )*};
+}
+
+impl_prim!(i8, u8, i16, u16, i32, u32, i64, u64, f32, f64);
+
+fn enc_as<W: Prim, T: 'static>(xs: &[T], out: &mut Vec<u8>) {
+    debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<W>());
+    // SAFETY: `Codec::resolve` installs this function only after
+    // proving TypeId::of::<T>() == TypeId::of::<W>(), so the slice
+    // cast is an identity cast.
+    let ws: &[W] = unsafe { &*(xs as *const [T] as *const [W]) };
+    for w in ws {
+        w.put(out);
+    }
+}
+
+fn dec_as<W: Prim, T: 'static>(bytes: &[u8], out: &mut Vec<T>) {
+    debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<W>());
+    for chunk in bytes.chunks_exact(W::WIDTH) {
+        let w = W::take(chunk);
+        // SAFETY: T == W (proven by `Codec::resolve`), so this is an
+        // identity copy.
+        out.push(unsafe { std::mem::transmute_copy::<W, T>(&w) });
+    }
+}
+
+/// The per-world element codec: a pair of monomorphised encode/decode
+/// fns plus the wire width, resolved by `TypeId` probe so the
+/// transport stays generic over [`crate::collectives::Element`]
+/// without asking element types to know about serialization.
+struct Codec<T> {
+    elem_bytes: usize,
+    enc: fn(&[T], &mut Vec<u8>),
+    dec: fn(&[u8], &mut Vec<T>),
+}
+
+impl<T> Clone for Codec<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for Codec<T> {}
+
+impl<T: 'static> Codec<T> {
+    /// `None` when `T` is not one of the fixed-width primitives the
+    /// wire can carry.
+    fn resolve() -> Option<Codec<T>> {
+        macro_rules! probe {
+            ($($w:ty),*) => {$(
+                if TypeId::of::<T>() == TypeId::of::<$w>() {
+                    return Some(Codec {
+                        elem_bytes: <$w as Prim>::WIDTH,
+                        enc: enc_as::<$w, T>,
+                        dec: dec_as::<$w, T>,
+                    });
+                }
+            )*};
+        }
+        probe!(i8, u8, i16, u16, i32, u32, i64, u64, f32, f64);
+        None
+    }
+}
+
+fn not_encodable() -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidInput,
+        "element type is not wire-encodable (not a fixed-width primitive)",
+    )
+}
+
+// ---------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------
+
+struct Hello {
+    magic: u32,
+    version: u16,
+    p: u32,
+    rank: u32,
+    world_id: u64,
+    elem_bytes: u32,
+}
+
+enum Frame {
+    Hello(Hello),
+    Data { round: u32, src: u32, dst: u32, count: u32, payload: Vec<u8> },
+    Bye,
+    Abort(String),
+}
+
+fn hello_frame(p: usize, rank: usize, world_id: u64, elem_bytes: usize) -> Vec<u8> {
+    let mut body = Vec::with_capacity(26);
+    put_u32(&mut body, MAGIC);
+    put_u16(&mut body, VERSION);
+    put_u32(&mut body, p as u32);
+    put_u32(&mut body, rank as u32);
+    put_u64(&mut body, world_id);
+    put_u32(&mut body, elem_bytes as u32);
+    seal(FT_HELLO, &body)
+}
+
+fn data_frame<T>(codec: &Codec<T>, round: usize, src: usize, dst: usize, data: &[T]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(16 + data.len() * codec.elem_bytes);
+    put_u32(&mut body, round as u32);
+    put_u32(&mut body, src as u32);
+    put_u32(&mut body, dst as u32);
+    put_u32(&mut body, data.len() as u32);
+    (codec.enc)(data, &mut body);
+    seal(FT_DATA, &body)
+}
+
+fn parse_hello(body: &[u8]) -> io::Result<Hello> {
+    let mut b = Body::new(body);
+    Ok(Hello {
+        magic: b.u32()?,
+        version: b.u16()?,
+        p: b.u32()?,
+        rank: b.u32()?,
+        world_id: b.u64()?,
+        elem_bytes: b.u32()?,
+    })
+}
+
+fn parse_frame(kind: u8, body: Vec<u8>) -> io::Result<Frame> {
+    match kind {
+        FT_HELLO => Ok(Frame::Hello(parse_hello(&body)?)),
+        FT_DATA => {
+            let mut b = Body::new(&body);
+            let round = b.u32()?;
+            let src = b.u32()?;
+            let dst = b.u32()?;
+            let count = b.u32()?;
+            let payload = b.rest().to_vec();
+            Ok(Frame::Data { round, src, dst, count, payload })
+        }
+        FT_BYE => Ok(Frame::Bye),
+        FT_ABORT => Ok(Frame::Abort(String::from_utf8_lossy(&body).into_owned())),
+        other => Err(bad_data(format!("wire: unknown frame type {other}"))),
+    }
+}
+
+/// Validate a peer's `HELLO` against this world; returns the peer's
+/// claimed rank.
+fn vet_hello(h: &Hello, p: usize, world_id: u64, elem_bytes: usize) -> Result<usize, String> {
+    if h.magic != MAGIC {
+        return Err(format!("handshake: bad magic {:#010x}", h.magic));
+    }
+    if h.version != VERSION {
+        return Err(format!(
+            "handshake: protocol version {} (this side speaks {VERSION})",
+            h.version
+        ));
+    }
+    if h.p as usize != p {
+        return Err(format!("handshake: world size {} (expected {p})", h.p));
+    }
+    if h.world_id != world_id {
+        return Err(format!(
+            "handshake: world id {:#018x} (expected {world_id:#018x})",
+            h.world_id
+        ));
+    }
+    if h.elem_bytes as usize != elem_bytes {
+        return Err(format!(
+            "handshake: element width {} (expected {elem_bytes})",
+            h.elem_bytes
+        ));
+    }
+    if h.rank as usize >= p {
+        return Err(format!("handshake: rank {} out of range for p = {p}", h.rank));
+    }
+    Ok(h.rank as usize)
+}
+
+// ---------------------------------------------------------------------
+// Mailbox + reader threads
+// ---------------------------------------------------------------------
+
+struct SockState<T> {
+    /// round -> (from, payload); one-portedness means at most one live
+    /// entry per round on a valid schedule.
+    msgs: HashMap<usize, (usize, Vec<T>)>,
+    /// `gone[r]`: rank `r`'s link reached EOF or said `BYE` — nothing
+    /// further will ever arrive from it.
+    gone: Vec<bool>,
+    poisoned: Option<String>,
+}
+
+struct SockShared<T> {
+    state: Mutex<SockState<T>>,
+    cv: Condvar,
+}
+
+impl<T> SockShared<T> {
+    /// Set-once local poison + wake every waiter.
+    fn poison(&self, reason: &str) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(reason.to_string());
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn mark_gone(&self, peer: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.gone[peer] = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+struct ReaderCtx<T> {
+    shared: Arc<SockShared<T>>,
+    codec: Codec<T>,
+    me: usize,
+    p: usize,
+    world_id: u64,
+    peer: usize,
+    /// The link's first frame must be a valid `HELLO` (false when the
+    /// rendezvous already validated it synchronously).
+    expect_hello: bool,
+}
+
+/// One reader thread per peer link: drains frames into the shared
+/// mailbox under the same round-tag matching as `ThreadTransport`'s
+/// mailboxes. After a poison it keeps draining (and discarding) so a
+/// remote sender's `write_all` never blocks on a full socket buffer.
+fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
+    loop {
+        let frame = match read_raw_frame(&mut rx) {
+            // Clean EOF at a frame boundary: the peer is gone (a peer
+            // that *finished* says BYE first; either way nothing more
+            // will arrive on this link).
+            Ok(None) => {
+                ctx.shared.mark_gone(ctx.peer);
+                return;
+            }
+            Ok(Some((kind, body))) => match parse_frame(kind, body) {
+                Ok(f) => f,
+                Err(e) => {
+                    ctx.shared.poison(&format!("wire: rank {}: {e}", ctx.peer));
+                    continue;
+                }
+            },
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+                ctx.shared
+                    .poison(&format!("wire: truncated frame from rank {}", ctx.peer));
+                ctx.shared.mark_gone(ctx.peer);
+                return;
+            }
+            // Reset / broken pipe etc.: the link is dead.
+            Err(_) => {
+                ctx.shared.mark_gone(ctx.peer);
+                return;
+            }
+        };
+        match frame {
+            Frame::Hello(h) => {
+                if !ctx.expect_hello {
+                    ctx.shared
+                        .poison(&format!("wire: duplicate HELLO from rank {}", ctx.peer));
+                } else {
+                    match vet_hello(&h, ctx.p, ctx.world_id, ctx.codec.elem_bytes) {
+                        Ok(r) if r == ctx.peer => ctx.expect_hello = false,
+                        Ok(r) => ctx.shared.poison(&format!(
+                            "wire: link to rank {} answered as rank {r}",
+                            ctx.peer
+                        )),
+                        Err(m) => ctx.shared.poison(&format!("wire: rank {}: {m}", ctx.peer)),
+                    }
+                }
+            }
+            Frame::Data { .. } if ctx.expect_hello => {
+                ctx.shared
+                    .poison(&format!("wire: rank {} sent data before HELLO", ctx.peer));
+            }
+            Frame::Data { round, src, dst, count, payload } => {
+                if src as usize != ctx.peer || dst as usize != ctx.me {
+                    ctx.shared.poison(&format!(
+                        "wire: misrouted frame (round {round}, {src} -> {dst}) on link {} <- {}",
+                        ctx.me, ctx.peer
+                    ));
+                    continue;
+                }
+                if count as usize * ctx.codec.elem_bytes != payload.len() {
+                    ctx.shared.poison(&format!(
+                        "wire: torn payload from rank {} in round {round} \
+                         ({} bytes for count {count})",
+                        ctx.peer,
+                        payload.len()
+                    ));
+                    continue;
+                }
+                let mut data = Vec::with_capacity(count as usize);
+                (ctx.codec.dec)(&payload, &mut data);
+                let round = round as usize;
+                let mut st = ctx.shared.state.lock().unwrap();
+                if st.poisoned.is_some() {
+                    // Drain-and-discard: keep the peer's writes moving.
+                    continue;
+                }
+                match st.msgs.get(&round).map(|(f, _)| *f) {
+                    Some(first_from) => {
+                        let e = SimError::ReceivePortBusy {
+                            round,
+                            to: ctx.me,
+                            first_from,
+                            second_from: ctx.peer,
+                        };
+                        drop(st);
+                        ctx.shared.poison(&e.to_string());
+                    }
+                    None => {
+                        st.msgs.insert(round, (ctx.peer, data));
+                        drop(st);
+                        ctx.shared.cv.notify_all();
+                    }
+                }
+            }
+            Frame::Bye => {
+                ctx.shared.mark_gone(ctx.peer);
+                return;
+            }
+            Frame::Abort(reason) => {
+                // Poison propagated from a failed remote rank; keep
+                // draining until its write side closes.
+                ctx.shared.poison(&reason);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SocketTransport
+// ---------------------------------------------------------------------
+
+static WORLD_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh process-unique world id for [`SocketTransport::pair_world`]
+/// and hand-rolled rendezvous (multi-process worlds agree on one out
+/// of band — CLI flag, env, launcher).
+pub fn fresh_world_id() -> u64 {
+    ((std::process::id() as u64) << 32) ^ WORLD_SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One rank's endpoint of a socket world: a [`Transport`] whose
+/// messages cross real OS sockets (Unix-domain or TCP). Per-peer
+/// reader threads feed a mutex/condvar mailbox with the exact
+/// round-tag matching of [`super::transport::ThreadTransport`]; the
+/// one-ported round discipline is enforced endpoint-side, and wire
+/// faults surface as typed [`TransportError`]s (see the module docs
+/// for the mapping).
+pub struct SocketTransport<T> {
+    rank: usize,
+    p: usize,
+    links: Vec<Option<Stream>>,
+    shared: Arc<SockShared<T>>,
+    codec: Codec<T>,
+    timeout: Duration,
+    disc: Discipline,
+    closed: bool,
+}
+
+impl<T: Send + 'static> SocketTransport<T> {
+    /// Endpoints for all `p` ranks of a fresh in-process world over
+    /// `UnixStream::pair` meshes — real sockets, zero rendezvous.
+    /// Receive deadline from
+    /// [`super::transport::configured_timeout`]. Fails when `T` is
+    /// not wire-encodable or the process is out of descriptors.
+    pub fn pair_world(p: usize) -> io::Result<Vec<SocketTransport<T>>> {
+        Self::pair_world_with_timeout(p, configured_timeout())
+    }
+
+    /// [`SocketTransport::pair_world`] with an explicit receive
+    /// deadline (failure-injection tests use a short one).
+    pub fn pair_world_with_timeout(
+        p: usize,
+        timeout: Duration,
+    ) -> io::Result<Vec<SocketTransport<T>>> {
+        assert!(p > 0);
+        let world_id = fresh_world_id();
+        let mut rows: Vec<Vec<Option<(Stream, bool)>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let (a, b) = UnixStream::pair()?;
+                rows[i][j] = Some((Stream::Unix(a), true));
+                rows[j][i] = Some((Stream::Unix(b), true));
+            }
+        }
+        rows.into_iter()
+            .enumerate()
+            .map(|(rank, row)| Self::assemble(rank, p, world_id, row, timeout, true))
+            .collect()
+    }
+
+    /// This rank's endpoint of a multi-process world over Unix-domain
+    /// sockets: rank `r` listens at `dir/rank-{r}.sock`, dials every
+    /// lower rank and accepts from every higher rank. All ranks must
+    /// agree on `(p, world_id, dir)`; `timeout` bounds the whole
+    /// rendezvous and becomes the receive deadline.
+    pub fn uds_world(
+        rank: usize,
+        p: usize,
+        world_id: u64,
+        dir: &Path,
+        timeout: Duration,
+    ) -> io::Result<SocketTransport<T>> {
+        assert!(rank < p);
+        let codec = Codec::<T>::resolve().ok_or_else(not_encodable)?;
+        let listener = if rank + 1 < p {
+            let path = dir.join(format!("rank-{rank}.sock"));
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path)?;
+            l.set_nonblocking(true)?;
+            Some(l)
+        } else {
+            None
+        };
+        let deadline = Instant::now() + timeout;
+        let row = mesh_rendezvous(
+            rank,
+            p,
+            world_id,
+            codec.elem_bytes,
+            deadline,
+            |peer| {
+                UnixStream::connect(dir.join(format!("rank-{peer}.sock"))).map(Stream::Unix)
+            },
+            || {
+                accept_deadline(deadline, || {
+                    let (s, _) = listener.as_ref().unwrap().accept()?;
+                    s.set_nonblocking(false)?;
+                    Ok(Stream::Unix(s))
+                })
+            },
+        )?;
+        Self::assemble(rank, p, world_id, row, timeout, false)
+    }
+
+    /// This rank's endpoint of a multi-process world over TCP:
+    /// `addrs[r]` is rank `r`'s listen address; rank `r` dials every
+    /// lower rank and accepts from every higher rank. Same rendezvous
+    /// contract as [`SocketTransport::uds_world`].
+    pub fn tcp_world(
+        rank: usize,
+        p: usize,
+        world_id: u64,
+        addrs: &[SocketAddr],
+        timeout: Duration,
+    ) -> io::Result<SocketTransport<T>> {
+        assert!(rank < p && addrs.len() == p);
+        let codec = Codec::<T>::resolve().ok_or_else(not_encodable)?;
+        let listener = if rank + 1 < p {
+            let l = TcpListener::bind(addrs[rank])?;
+            l.set_nonblocking(true)?;
+            Some(l)
+        } else {
+            None
+        };
+        let deadline = Instant::now() + timeout;
+        let row = mesh_rendezvous(
+            rank,
+            p,
+            world_id,
+            codec.elem_bytes,
+            deadline,
+            |peer| {
+                let s = TcpStream::connect(addrs[peer])?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            },
+            || {
+                accept_deadline(deadline, || {
+                    let (s, _) = listener.as_ref().unwrap().accept()?;
+                    s.set_nonblocking(false)?;
+                    s.set_nodelay(true)?;
+                    Ok(Stream::Tcp(s))
+                })
+            },
+        )?;
+        Self::assemble(rank, p, world_id, row, timeout, false)
+    }
+
+    /// Wire a resolved mesh into an endpoint: spawn one reader thread
+    /// per link (`expect_hello` links validate the peer's `HELLO` as
+    /// their first frame) and, when `send_hello`, write ours on every
+    /// link first.
+    fn assemble(
+        rank: usize,
+        p: usize,
+        world_id: u64,
+        row: Vec<Option<(Stream, bool)>>,
+        timeout: Duration,
+        send_hello: bool,
+    ) -> io::Result<SocketTransport<T>> {
+        let codec = Codec::<T>::resolve().ok_or_else(not_encodable)?;
+        let shared = Arc::new(SockShared {
+            state: Mutex::new(SockState {
+                msgs: HashMap::new(),
+                gone: vec![false; p],
+                poisoned: None,
+            }),
+            cv: Condvar::new(),
+        });
+        let hello = hello_frame(p, rank, world_id, codec.elem_bytes);
+        let mut links: Vec<Option<Stream>> = Vec::with_capacity(p);
+        for (peer, slot) in row.into_iter().enumerate() {
+            let Some((mut stream, expect_hello)) = slot else {
+                links.push(None);
+                continue;
+            };
+            if send_hello {
+                stream.write_all(&hello)?;
+            }
+            let rx = stream.try_clone()?;
+            let ctx = ReaderCtx {
+                shared: shared.clone(),
+                codec,
+                me: rank,
+                p,
+                world_id,
+                peer,
+                expect_hello,
+            };
+            std::thread::Builder::new()
+                .name(format!("cbwire-{rank}<-{peer}"))
+                .stack_size(128 * 1024)
+                .spawn(move || reader_loop(rx, ctx))?;
+            links.push(Some(stream));
+        }
+        Ok(SocketTransport {
+            rank,
+            p,
+            links,
+            shared,
+            codec,
+            timeout,
+            disc: Discipline::default(),
+            closed: false,
+        })
+    }
+
+    /// Poison the local world and broadcast `ABORT` so remote worlds
+    /// poison too — every blocked and future verb on any endpoint of
+    /// the world fails with [`TransportError::Shutdown`] instead of
+    /// deadlocking.
+    fn poison(&mut self, reason: &str) {
+        self.shared.poison(reason);
+        let frame = seal(FT_ABORT, reason.as_bytes());
+        for link in self.links.iter_mut().flatten() {
+            let _ = link.write_all(&frame);
+        }
+    }
+}
+
+impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&mut self, round: usize, peer: usize, data: Vec<T>) -> Result<(), TransportError> {
+        self.disc.check_send(self.rank, round)?;
+        if peer == self.rank {
+            return Err(TransportError::Machine(SimError::SelfMessage {
+                round,
+                rank: self.rank,
+            }));
+        }
+        if peer >= self.p {
+            return Err(TransportError::Machine(SimError::BadTarget {
+                round,
+                rank: self.rank,
+                to: peer,
+            }));
+        }
+        {
+            let st = self.shared.state.lock().unwrap();
+            if let Some(reason) = &st.poisoned {
+                return Err(TransportError::Shutdown {
+                    rank: self.rank,
+                    round,
+                    reason: reason.clone(),
+                });
+            }
+        }
+        let frame = data_frame(&self.codec, round, self.rank, peer, &data);
+        let res = match self.links[peer].as_mut() {
+            Some(link) => link.write_all(&frame),
+            None => unreachable!("mesh link missing for peer {peer}"),
+        };
+        if let Err(e) = res {
+            let reason = format!("wire: send to rank {peer} in round {round} failed: {e}");
+            self.poison(&reason);
+            return Err(TransportError::Shutdown { rank: self.rank, round, reason });
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self, round: usize) -> Result<(), TransportError> {
+        // Free-running like ThreadTransport: the wire needs no seal;
+        // keep the discipline honest.
+        self.disc.check_flush(self.rank, round)
+    }
+
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
+        self.disc.check_recv(self.rank, round)?;
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            // Abort semantics: once poisoned nothing more is
+            // delivered, mirroring the lockstep mid-round abort.
+            if let Some(reason) = &st.poisoned {
+                return Err(TransportError::Shutdown {
+                    rank: self.rank,
+                    round,
+                    reason: reason.clone(),
+                });
+            }
+            match st.msgs.get(&round).map(|(from, _)| *from) {
+                Some(from) if from == peer => {
+                    let (_, data) = st.msgs.remove(&round).unwrap();
+                    return Ok(data);
+                }
+                Some(from) => {
+                    // One-ported: a same-round message from anyone
+                    // else means the schedules disagree.
+                    let e = SimError::UnexpectedMessage {
+                        round,
+                        to: self.rank,
+                        from,
+                        expected: Some(peer),
+                    };
+                    drop(st);
+                    self.poison(&e.to_string());
+                    return Err(TransportError::Machine(e));
+                }
+                None => {}
+            }
+            if peer >= self.p || st.gone[peer] {
+                // The peer's link is closed and its message for this
+                // round never arrived: it is a rank that died (or a
+                // schedule that references a message nobody sends) —
+                // the lockstep vocabulary for that is MissingMessage.
+                let e = SimError::MissingMessage {
+                    round,
+                    rank: self.rank,
+                    expected_from: peer,
+                };
+                drop(st);
+                self.poison(&e.to_string());
+                return Err(TransportError::Machine(e));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                let e = TransportError::Timeout { rank: self.rank, round, from: peer };
+                self.poison(&e.to_string());
+                return Err(e);
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
+        if self.closed {
+            return Ok(());
+        }
+        self.closed = true;
+        match error {
+            Some(reason) => {
+                // Failed rank: poison locally, tell every peer why
+                // (ABORT), then close our write sides.
+                self.poison(reason);
+                for link in self.links.iter_mut().flatten() {
+                    let _ = link.shutdown(Shutdown::Write);
+                }
+            }
+            None => {
+                // Clean completion: BYE tells peers "nothing further
+                // from me" so a schedule still expecting a message
+                // surfaces MissingMessage, not a 30 s timeout.
+                let bye = seal(FT_BYE, &[]);
+                for link in self.links.iter_mut().flatten() {
+                    let _ = link.write_all(&bye);
+                    let _ = link.shutdown(Shutdown::Write);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<T> Drop for SocketTransport<T> {
+    fn drop(&mut self) {
+        if !self.closed {
+            // Dropped without close(): a crashed rank. Tear the links
+            // down so peer readers observe EOF-without-BYE and report
+            // this rank gone (their recv -> MissingMessage) instead of
+            // waiting out the deadline.
+            for link in self.links.iter_mut().flatten() {
+                let _ = link.shutdown(Shutdown::Both);
+            }
+        } else {
+            // Already closed: reap our reader threads by closing the
+            // read sides too.
+            for link in self.links.iter_mut().flatten() {
+                let _ = link.shutdown(Shutdown::Read);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rendezvous helpers
+// ---------------------------------------------------------------------
+
+/// Poll a nonblocking accept until `deadline`.
+fn accept_deadline(
+    deadline: Instant,
+    mut accept_one: impl FnMut() -> io::Result<Stream>,
+) -> io::Result<Stream> {
+    loop {
+        match accept_one() {
+            Ok(s) => return Ok(s),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "wire: accept timed out waiting for higher ranks",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Retry a dial until `deadline` while the peer has not bound yet.
+fn dial_retry(
+    deadline: Instant,
+    mut dial: impl FnMut() -> io::Result<Stream>,
+) -> io::Result<Stream> {
+    loop {
+        match dial() {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        format!("wire: connect timed out: {e}"),
+                    ));
+                }
+                match e.kind() {
+                    io::ErrorKind::ConnectionRefused
+                    | io::ErrorKind::NotFound
+                    | io::ErrorKind::AddrNotAvailable => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    _ => return Err(e),
+                }
+            }
+        }
+    }
+}
+
+/// Full-mesh rendezvous: dial every lower rank (sending our `HELLO`
+/// immediately; theirs is validated asynchronously by the link's
+/// reader), accept from every higher rank (reading and validating the
+/// peer's `HELLO` synchronously to identify it — accept order is
+/// arbitrary — then answering with ours).
+fn mesh_rendezvous(
+    rank: usize,
+    p: usize,
+    world_id: u64,
+    elem_bytes: usize,
+    deadline: Instant,
+    dial: impl Fn(usize) -> io::Result<Stream>,
+    mut accept: impl FnMut() -> io::Result<Stream>,
+) -> io::Result<Vec<Option<(Stream, bool)>>> {
+    let hello = hello_frame(p, rank, world_id, elem_bytes);
+    let mut row: Vec<Option<(Stream, bool)>> = (0..p).map(|_| None).collect();
+    for peer in 0..rank {
+        let mut s = dial_retry(deadline, || dial(peer))?;
+        s.write_all(&hello)?;
+        row[peer] = Some((s, true));
+    }
+    for _ in (rank + 1)..p {
+        let mut s = accept()?;
+        let left = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        s.set_read_timeout(Some(left))?;
+        let peer = read_hello_sync(&mut s, p, world_id, elem_bytes)?;
+        if peer <= rank || row[peer].is_some() {
+            return Err(bad_data(format!(
+                "handshake: unexpected connection from rank {peer}"
+            )));
+        }
+        s.set_read_timeout(None)?;
+        s.write_all(&hello)?;
+        row[peer] = Some((s, false));
+    }
+    Ok(row)
+}
+
+/// Synchronously read and validate a peer's `HELLO`; returns its rank.
+fn read_hello_sync(
+    s: &mut Stream,
+    p: usize,
+    world_id: u64,
+    elem_bytes: usize,
+) -> io::Result<usize> {
+    let Some((kind, body)) = read_raw_frame(s)? else {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "handshake: peer closed before HELLO",
+        ));
+    };
+    if kind != FT_HELLO {
+        return Err(bad_data(format!(
+            "handshake: first frame type {kind}, expected HELLO"
+        )));
+    }
+    let h = parse_hello(&body)?;
+    vet_hello(&h, p, world_id, elem_bytes).map_err(bad_data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn world(p: usize) -> Vec<SocketTransport<i64>> {
+        SocketTransport::pair_world(p).expect("pair world")
+    }
+
+    #[test]
+    fn codec_roundtrips_every_primitive() {
+        fn rt<T: PartialEq + std::fmt::Debug + Copy + Send + 'static>(xs: Vec<T>) {
+            let c = Codec::<T>::resolve().unwrap();
+            let mut bytes = Vec::new();
+            (c.enc)(&xs, &mut bytes);
+            assert_eq!(bytes.len(), xs.len() * c.elem_bytes);
+            let mut back = Vec::new();
+            (c.dec)(&bytes, &mut back);
+            assert_eq!(back, xs);
+        }
+        rt(vec![-1i8, 7]);
+        rt(vec![1u8, 255]);
+        rt(vec![-300i16, 300]);
+        rt(vec![9u16, 0]);
+        rt(vec![-2i32, 9]);
+        rt(vec![70_000u32, 3]);
+        rt(vec![-5i64, 1 << 40]);
+        rt(vec![u64::MAX, 0]);
+        rt(vec![1.5f32, -0.25]);
+        rt(vec![std::f64::consts::PI, -1e300]);
+    }
+
+    #[test]
+    fn non_wire_encodable_elements_are_rejected() {
+        let err = SocketTransport::<[u8; 3]>::pair_world(2).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn truncated_and_boundary_frames_are_detected() {
+        // Claims 5 body+type bytes, carries 3: truncation.
+        let mut short: &[u8] = &[5, 0, 0, 0, FT_DATA, 1, 2];
+        let e = read_raw_frame(&mut short).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof);
+        // EOF at a frame boundary is clean.
+        let mut empty: &[u8] = &[];
+        assert!(read_raw_frame(&mut empty).unwrap().is_none());
+        // Zero-length frames are corrupt.
+        let mut zero: &[u8] = &[0, 0, 0, 0];
+        assert_eq!(
+            read_raw_frame(&mut zero).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+    }
+
+    #[test]
+    fn pair_world_moves_round_tagged_messages() {
+        let mut w = world(3);
+        let mut t2 = w.pop().unwrap();
+        let mut t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        let h1 = thread::spawn(move || {
+            t1.send(0, 0, vec![7i64, 8]).unwrap();
+            t1.flush(0).unwrap();
+            let got = t1.recv(1, 2).unwrap();
+            t1.close(None).unwrap();
+            got
+        });
+        let h2 = thread::spawn(move || {
+            // Out-of-order arrival relative to rank 1's round cursor is
+            // fine: messages match on their round tag.
+            t2.send(1, 1, vec![5i64]).unwrap();
+            t2.flush(1).unwrap();
+            t2.close(None).unwrap();
+        });
+        t0.flush(0).unwrap();
+        let got = t0.recv(0, 1).unwrap();
+        t0.close(None).unwrap();
+        assert_eq!(got, vec![7, 8]);
+        assert_eq!(h1.join().unwrap(), vec![5]);
+        h2.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_poisons_the_world_across_the_wire() {
+        let mut w =
+            SocketTransport::<i64>::pair_world_with_timeout(2, Duration::from_millis(50)).unwrap();
+        let mut t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        let e0 = t0.recv(0, 1).unwrap_err(); // nobody sends
+        assert!(matches!(e0, TransportError::Timeout { rank: 0, round: 0, from: 1 }), "{e0:?}");
+        // The ABORT broadcast poisons rank 1's world too.
+        let e1 = t1.recv(0, 0).unwrap_err();
+        assert!(matches!(e1, TransportError::Shutdown { .. }), "{e1:?}");
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_missing_message() {
+        let mut w = world(2);
+        let t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        drop(t1); // crash without close(): EOF without BYE
+        let e = t0.recv(0, 1).unwrap_err();
+        assert_eq!(
+            e,
+            TransportError::Machine(SimError::MissingMessage {
+                round: 0,
+                rank: 0,
+                expected_from: 1
+            })
+        );
+    }
+
+    #[test]
+    fn clean_close_without_expected_message_is_missing_message() {
+        let mut w = world(2);
+        let mut t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        t1.close(None).unwrap(); // BYE: "nothing further from me"
+        let e = t0.recv(0, 1).unwrap_err();
+        assert_eq!(
+            e,
+            TransportError::Machine(SimError::MissingMessage {
+                round: 0,
+                rank: 0,
+                expected_from: 1
+            })
+        );
+    }
+
+    #[test]
+    fn receive_port_collision_poisons_the_world() {
+        let mut w = world(3);
+        let mut t2 = w.pop().unwrap();
+        let mut t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        t1.send(0, 0, vec![1]).unwrap();
+        t2.send(0, 0, vec![2]).unwrap();
+        // Rank 0's reader rejects whichever round-0 delivery lands
+        // second; wait for both to land before receiving.
+        thread::sleep(Duration::from_millis(100));
+        let e = t0.recv(0, 1).unwrap_err();
+        assert!(matches!(e, TransportError::Shutdown { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn round_discipline_is_enforced() {
+        let mut w = world(2);
+        let _t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        t0.send(3, 1, vec![1]).unwrap();
+        let e = t0.send(3, 1, vec![2]).unwrap_err();
+        assert!(matches!(e, TransportError::OutOfRound { round: 3, .. }), "{e:?}");
+        t0.flush(3).unwrap();
+        let e = t0.send(3, 1, vec![2]).unwrap_err();
+        assert!(matches!(e, TransportError::OutOfRound { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn self_and_bad_targets_are_machine_errors() {
+        let mut w = world(2);
+        let _t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        assert_eq!(
+            t0.send(0, 0, vec![1]).unwrap_err(),
+            TransportError::Machine(SimError::SelfMessage { round: 0, rank: 0 })
+        );
+        assert_eq!(
+            t0.send(1, 9, vec![1]).unwrap_err(),
+            TransportError::Machine(SimError::BadTarget { round: 1, rank: 0, to: 9 })
+        );
+    }
+
+    #[test]
+    fn uds_world_rendezvous_two_processes_worth() {
+        let dir = std::env::temp_dir().join(format!("cbwire-uds-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let wid = fresh_world_id();
+        let d2 = dir.clone();
+        let h = thread::spawn(move || {
+            let mut t1 =
+                SocketTransport::<i64>::uds_world(1, 2, wid, &d2, Duration::from_secs(10))
+                    .unwrap();
+            t1.send(0, 0, vec![42]).unwrap();
+            t1.flush(0).unwrap();
+            let got = t1.recv(1, 0).unwrap();
+            t1.close(None).unwrap();
+            got
+        });
+        let mut t0 =
+            SocketTransport::<i64>::uds_world(0, 2, wid, &dir, Duration::from_secs(10)).unwrap();
+        t0.flush(0).unwrap();
+        assert_eq!(t0.recv(0, 1).unwrap(), vec![42]);
+        t0.send(1, 1, vec![7]).unwrap();
+        t0.flush(1).unwrap();
+        t0.close(None).unwrap();
+        assert_eq!(h.join().unwrap(), vec![7]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

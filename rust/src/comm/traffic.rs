@@ -80,7 +80,7 @@ use super::nonblocking::{
     IallgathervReq, IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Pending, Slot,
     Window,
 };
-use super::outcome::{CommError, Outcome};
+use super::outcome::{CommError, Outcome, TenantUsage};
 use super::request::{Algo, Kind};
 
 /// One executed message in the machine frame: `(from, to, bytes)`.
@@ -626,6 +626,13 @@ struct OpEntry {
     kind: Option<Kind>,
     window: Window,
     span: Option<(usize, usize)>,
+    /// The tenant label in force at submission time ([`TrafficEngine::
+    /// for_tenant`]); `None` for untagged library-level submissions.
+    tenant: Option<Arc<str>>,
+    /// Machine-frame messages this op put on the wire (drained rounds).
+    messages: usize,
+    /// Machine-frame payload bytes this op put on the wire.
+    bytes: usize,
 }
 
 /// Per-op summary in a [`BatchReport`].
@@ -643,6 +650,13 @@ pub struct OpReport {
     pub rounds: usize,
     /// Did the operation deliver an `Ok` outcome?
     pub ok: bool,
+    /// The tenant label the op was submitted under (`None` for untagged
+    /// library-level submissions).
+    pub tenant: Option<Arc<str>>,
+    /// Machine-frame messages this op sent.
+    pub messages: usize,
+    /// Machine-frame payload bytes this op moved.
+    pub bytes: usize,
 }
 
 /// Aggregate result of one [`TrafficEngine::run`].
@@ -661,6 +675,12 @@ pub struct BatchReport {
     /// [`TrafficEngine::record_trace`] was enabled — the input to
     /// [`crate::schedule::verify_one_ported_trace`].
     pub trace: Option<Vec<Vec<(usize, usize)>>>,
+    /// Per-tenant usage rows, in first-submission order — one row per
+    /// distinct [`TrafficEngine::for_tenant`] label seen in the batch
+    /// (empty when no op was tagged). Admission rejections are folded in
+    /// after the run by the service daemon via
+    /// [`BatchReport::note_rejected`].
+    pub tenants: Vec<TenantUsage>,
 }
 
 impl BatchReport {
@@ -673,6 +693,27 @@ impl BatchReport {
     /// How many operations failed.
     pub fn failed(&self) -> usize {
         self.ops.iter().filter(|o| !o.ok).count()
+    }
+
+    /// Fold `n` admission rejections into `tenant`'s usage row (creating
+    /// an otherwise-zero row if the tenant got nothing admitted). The
+    /// engine never sees rejected requests — the service daemon calls
+    /// this after the batch with its own admission counters.
+    pub fn note_rejected(&mut self, tenant: &str, n: usize) {
+        if let Some(row) = self.tenants.iter_mut().find(|u| u.tenant == tenant) {
+            row.rejected += n;
+        } else {
+            self.tenants.push(TenantUsage {
+                tenant: tenant.to_string(),
+                rejected: n,
+                ..TenantUsage::default()
+            });
+        }
+    }
+
+    /// The usage row for `tenant`, if any op (or rejection) carried it.
+    pub fn tenant(&self, tenant: &str) -> Option<&TenantUsage> {
+        self.tenants.iter().find(|u| u.tenant == tenant)
     }
 }
 
@@ -693,6 +734,9 @@ pub struct TrafficEngine<'c> {
     threads: Option<usize>,
     record_trace: bool,
     ran: bool,
+    /// The tenant label stamped onto subsequent submissions
+    /// ([`TrafficEngine::for_tenant`]); `None` = untagged.
+    tenant: Option<Arc<str>>,
 }
 
 impl<'c> TrafficEngine<'c> {
@@ -707,6 +751,7 @@ impl<'c> TrafficEngine<'c> {
             threads: None,
             record_trace: false,
             ran: false,
+            tenant: None,
         }
     }
 
@@ -742,6 +787,17 @@ impl<'c> TrafficEngine<'c> {
     pub fn record_trace(mut self, on: bool) -> Self {
         self.record_trace = on;
         self
+    }
+
+    /// Tag every *subsequent* submission with a tenant label. The batch
+    /// report then carries one [`TenantUsage`] row per distinct label —
+    /// ops admitted, ops completed ok, messages and bytes moved — which
+    /// is how the collective service daemon ([`crate::service`]) bills
+    /// interleaved client work out of one shared batch. Call again to
+    /// switch labels mid-batch; scheduling and results are completely
+    /// unaffected by tagging.
+    pub fn for_tenant(&mut self, label: &str) {
+        self.tenant = Some(Arc::from(label));
     }
 
     /// Submit a typed nonblocking collective (`IbcastReq`, `IreduceReq`,
@@ -818,7 +874,15 @@ impl<'c> TrafficEngine<'c> {
     }
 
     fn push(&mut self, driver: Box<dyn OpDriver>, kind: Option<Kind>, window: Window) {
-        self.ops.push(OpEntry { driver, kind, window, span: None });
+        self.ops.push(OpEntry {
+            driver,
+            kind,
+            window,
+            span: None,
+            tenant: self.tenant.clone(),
+            messages: 0,
+            bytes: 0,
+        });
     }
 
     /// Execute the batch: round-interleave every submitted operation
@@ -918,6 +982,8 @@ impl<'c> TrafficEngine<'c> {
                 for &(f, t, bytes) in &drained {
                     agg.messages += 1;
                     agg.bytes += bytes;
+                    e.messages += 1;
+                    e.bytes += bytes;
                     rank_bytes[f] += bytes;
                     rank_bytes[t] += bytes;
                     clock.msg(cost, f, t, bytes);
@@ -938,7 +1004,7 @@ impl<'c> TrafficEngine<'c> {
         agg.time = clock.total();
         agg.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
 
-        let ops = self
+        let ops: Vec<OpReport> = self
             .ops
             .iter_mut()
             .map(|e| {
@@ -950,13 +1016,39 @@ impl<'c> TrafficEngine<'c> {
                     machine_span: e.span,
                     rounds: e.driver.executed(),
                     ok: e.driver.ok(),
+                    tenant: e.tenant.clone(),
+                    messages: e.messages,
+                    bytes: e.bytes,
                 }
             })
             .collect();
+
+        // Fold tagged ops into per-tenant rows (first-submission order).
+        let mut tenants: Vec<TenantUsage> = Vec::new();
+        for op in &ops {
+            let Some(label) = op.tenant.as_deref() else { continue };
+            let idx = match tenants.iter().position(|u| u.tenant == label) {
+                Some(i) => i,
+                None => {
+                    tenants.push(TenantUsage {
+                        tenant: label.to_string(),
+                        ..TenantUsage::default()
+                    });
+                    tenants.len() - 1
+                }
+            };
+            let row = &mut tenants[idx];
+            row.ops += 1;
+            row.ok += op.ok as usize;
+            row.messages += op.messages;
+            row.bytes += op.bytes;
+        }
+
         Ok(BatchReport {
             agg,
             ops,
             trace: if self.record_trace { Some(trace) } else { None },
+            tenants,
         })
     }
 }
@@ -1816,5 +1908,75 @@ mod tests {
         assert_eq!(batched.rounds, blocking.rounds);
         assert_eq!(batched.buffers, blocking.buffers);
         stats_eq(&batched.stats, &blocking.stats, "auto window");
+    }
+
+    #[test]
+    fn tenant_rows_partition_the_batch_accounting() {
+        // Two tenants interleaved in one batch: the per-tenant rows must
+        // partition the aggregate message/byte totals exactly, and
+        // tagging must not perturb results (parity pinned elsewhere).
+        let p = 9usize;
+        let c = comm(p);
+        let data: Vec<i64> = (0..36).collect();
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..18).map(|i| (r * 5 + i) as i64).collect()).collect();
+
+        let mut traffic = c.traffic().threads(1);
+        traffic.for_tenant("alice");
+        let ha = traffic
+            .submit(IbcastReq::new(0, data.clone()).algo(Algo::Circulant).blocks(3))
+            .unwrap();
+        traffic.for_tenant("bob");
+        let hb = traffic
+            .submit(
+                IreduceReq::new(2, inputs.clone(), Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(2),
+            )
+            .unwrap();
+        traffic.for_tenant("alice");
+        let hc = traffic
+            .submit(IbcastReq::new(4, data.clone()).algo(Algo::Circulant).blocks(2))
+            .unwrap();
+        let mut report = traffic.run().unwrap();
+        assert!(ha.wait().unwrap().all_received());
+        hb.wait().unwrap();
+        assert!(hc.wait().unwrap().all_received());
+
+        assert_eq!(report.tenants.len(), 2);
+        let alice = report.tenant("alice").unwrap().clone();
+        let bob = report.tenant("bob").unwrap().clone();
+        assert_eq!((alice.ops, alice.ok), (2, 2));
+        assert_eq!((bob.ops, bob.ok), (1, 1));
+        assert_eq!(alice.messages + bob.messages, report.agg.messages);
+        assert_eq!(alice.bytes + bob.bytes, report.agg.bytes);
+        assert!(alice.messages > 0 && bob.messages > 0);
+        assert_eq!(alice.rejected + bob.rejected, 0);
+        // Per-op rows carry the same labels in submission order.
+        let labels: Vec<Option<&str>> =
+            report.ops.iter().map(|o| o.tenant.as_deref()).collect();
+        assert_eq!(labels, vec![Some("alice"), Some("bob"), Some("alice")]);
+
+        // Admission rejections fold into existing rows or create new ones.
+        report.note_rejected("bob", 3);
+        report.note_rejected("carol", 1);
+        assert_eq!(report.tenant("bob").unwrap().rejected, 3);
+        let carol = report.tenant("carol").unwrap();
+        assert_eq!((carol.ops, carol.rejected), (0, 1));
+    }
+
+    #[test]
+    fn untagged_batches_report_no_tenants() {
+        let c = comm(5);
+        let mut traffic = c.traffic();
+        let h = traffic
+            .submit(IbcastReq::new(0, vec![1i64; 10]).algo(Algo::Circulant).blocks(2))
+            .unwrap();
+        let report = traffic.run().unwrap();
+        assert!(h.wait().unwrap().all_received());
+        assert!(report.tenants.is_empty());
+        assert!(report.ops[0].tenant.is_none());
+        assert_eq!(report.ops[0].messages, report.agg.messages);
+        assert_eq!(report.ops[0].bytes, report.agg.bytes);
     }
 }

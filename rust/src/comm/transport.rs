@@ -23,7 +23,7 @@
 //! own vocabulary, [`crate::sim::SimError`], wrapped as
 //! [`TransportError::Machine`].
 //!
-//! # The two shipped transports
+//! # The shipped transports
 //!
 //! * [`ThreadTransport`] — the real in-process runtime: one endpoint per
 //!   rank, each typically owned by its own OS thread, with
@@ -44,6 +44,11 @@
 //!   delivery, undeliverable leftovers once a round can no longer be
 //!   received. This is the differential mirror: the SPMD parity suite
 //!   pins `ThreadTransport` ≡ `LoopbackTransport` ≡ god-view backends.
+//! * [`super::socket::SocketTransport`] — the wire plane: the same
+//!   mailbox/round discipline as `ThreadTransport`, but messages cross
+//!   real OS sockets (Unix-domain or TCP) as length-prefixed frames,
+//!   so endpoints can live in different processes (see
+//!   [`super::socket`]).
 //!
 //! One world serves one collective operation: round tags are only
 //! meaningful within a single operation (multi-phase collectives like
@@ -62,6 +67,23 @@ use crate::sim::network::SimError;
 /// a peer died or the schedule references a message nobody sends
 /// (mirrors the threaded runtime's timeout).
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The receive deadline shared by the in-process and wire transports:
+/// `CBCAST_TRANSPORT_TIMEOUT_MS` (whole milliseconds, ≥ 1) when set,
+/// [`DEFAULT_TIMEOUT`] otherwise — one timeout story for
+/// [`ThreadTransport::world`] and
+/// [`super::socket::SocketTransport::pair_world`]. Tests that need a
+/// deterministic deadline pass one explicitly via the
+/// `*_with_timeout` constructors instead of relying on the
+/// environment.
+pub fn configured_timeout() -> Duration {
+    std::env::var("CBCAST_TRANSPORT_TIMEOUT_MS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&ms| ms >= 1)
+        .map(Duration::from_millis)
+        .unwrap_or(DEFAULT_TIMEOUT)
+}
 
 /// What a [`Transport`] can report. Machine-model violations reuse the
 /// lockstep simulator's [`SimError`] vocabulary so the SPMD plane and
@@ -109,14 +131,14 @@ impl std::error::Error for TransportError {}
 /// issued for; re-issuing a verb at or below its high-water mark is the
 /// caller's bug and is rejected before any shared state is touched.
 #[derive(Debug, Clone, Copy, Default)]
-struct Discipline {
+pub(crate) struct Discipline {
     sent: Option<usize>,
     flushed: Option<usize>,
     recvd: Option<usize>,
 }
 
 impl Discipline {
-    fn check_send(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
+    pub(crate) fn check_send(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
         if self.sent.is_some_and(|r| round <= r) {
             return Err(TransportError::OutOfRound {
                 rank,
@@ -135,7 +157,7 @@ impl Discipline {
         Ok(())
     }
 
-    fn check_flush(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
+    pub(crate) fn check_flush(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
         if self.flushed.is_some_and(|r| round < r) {
             return Err(TransportError::OutOfRound {
                 rank,
@@ -147,7 +169,7 @@ impl Discipline {
         Ok(())
     }
 
-    fn check_recv(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
+    pub(crate) fn check_recv(&mut self, rank: usize, round: usize) -> Result<(), TransportError> {
         if self.recvd.is_some_and(|r| round <= r) {
             return Err(TransportError::OutOfRound {
                 rank,
@@ -221,10 +243,11 @@ pub struct ThreadTransport<T> {
 }
 
 impl<T: Send> ThreadTransport<T> {
-    /// Endpoints for all `p` ranks of a fresh world
-    /// ([`DEFAULT_TIMEOUT`] receive deadline).
+    /// Endpoints for all `p` ranks of a fresh world (receive deadline
+    /// from [`configured_timeout`]: `CBCAST_TRANSPORT_TIMEOUT_MS` or
+    /// [`DEFAULT_TIMEOUT`]).
     pub fn world(p: usize) -> Vec<ThreadTransport<T>> {
-        Self::world_with_timeout(p, DEFAULT_TIMEOUT)
+        Self::world_with_timeout(p, configured_timeout())
     }
 
     /// [`ThreadTransport::world`] with an explicit receive deadline

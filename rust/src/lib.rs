@@ -47,6 +47,11 @@
 //! handles over a pluggable [`comm::Transport`] (a real
 //! one-thread-per-rank runtime, or a lockstep replay), and
 //! [`comm::BackendKind::Spmd`] runs the god-view API on top of it.
+//! The wire plane carries the same rank plane across real OS sockets
+//! ([`comm::SocketTransport`], [`comm::BackendKind::Socket`]), and the
+//! [`service`] module builds a long-lived collective daemon with
+//! admission control on top of the same framing (the `cbcastd`
+//! binary).
 //!
 //! ## Layers underneath
 //!
@@ -73,6 +78,10 @@
 //!   the `xla` cargo feature; a graceful stub compiles in otherwise).
 //! * [`coordinator`] — the service layer: planner, metrics, request loop
 //!   (used by the `cbcast` CLI), with execution delegated to [`comm`].
+//! * [`service`] — the collective service daemon over the wire plane:
+//!   concurrent tenant connections, bounded admission into shared
+//!   traffic-plane batches, per-tenant usage accounting (the `cbcastd`
+//!   binary).
 //! * [`testkit`] — a tiny property-testing harness (offline substitute for
 //!   `proptest`).
 
@@ -81,5 +90,6 @@ pub mod comm;
 pub mod coordinator;
 pub mod runtime;
 pub mod schedule;
+pub mod service;
 pub mod sim;
 pub mod testkit;

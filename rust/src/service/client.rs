@@ -1,0 +1,171 @@
+//! The client side of the collective service: connect, submit op
+//! specs, collect digests — never payload buffers.
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::comm::socket::{read_raw_frame, Stream};
+use crate::comm::transport::configured_timeout;
+use crate::testkit::MixOp;
+
+use super::wire::{
+    bye_frame, chello_frame, parse_res_err, parse_res_ok, parse_res_reject, parse_shello,
+    parse_stats_res, req_frame, shutdown_frame, stats_frame, FT_RES_ERR, FT_RES_OK,
+    FT_RES_REJECT, FT_SHELLO, FT_STATS_RES,
+};
+use super::ServiceReply;
+
+fn proto(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// One connection to a running daemon, identified by a tenant label.
+///
+/// Replies to this connection's requests arrive in submission order
+/// (the daemon admits a connection's frames FIFO and replies per batch
+/// in admission order), so a pipelining client can match them by
+/// `req_id` without reordering; [`ServiceClient::call`] is the simple
+/// one-outstanding-request wrapper.
+pub struct ServiceClient {
+    stream: Stream,
+    p: usize,
+}
+
+impl ServiceClient {
+    /// Connect over a Unix-domain socket.
+    pub fn connect_unix(path: &Path, tenant: &str) -> io::Result<ServiceClient> {
+        Self::handshake(Stream::Unix(UnixStream::connect(path)?), tenant)
+    }
+
+    /// [`ServiceClient::connect_unix`], retrying while the daemon is
+    /// still binding (races a just-spawned daemon politely).
+    pub fn connect_unix_retry(
+        path: &Path,
+        tenant: &str,
+        patience: Duration,
+    ) -> io::Result<ServiceClient> {
+        let deadline = Instant::now() + patience;
+        loop {
+            match UnixStream::connect(path) {
+                Ok(s) => return Self::handshake(Stream::Unix(s), tenant),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+
+    /// Connect over TCP.
+    pub fn connect_tcp(addr: &str, tenant: &str) -> io::Result<ServiceClient> {
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Self::handshake(Stream::Tcp(s), tenant)
+    }
+
+    fn handshake(mut stream: Stream, tenant: &str) -> io::Result<ServiceClient> {
+        // Replies can wait on whole batches; reuse the transport-plane
+        // deadline (`CBCAST_TRANSPORT_TIMEOUT_MS`, default 30 s).
+        stream.set_read_timeout(Some(configured_timeout()))?;
+        stream.write_all(&chello_frame(tenant))?;
+        match read_raw_frame(&mut stream)? {
+            Some((FT_SHELLO, body)) => {
+                let p = parse_shello(&body)?;
+                Ok(ServiceClient { stream, p })
+            }
+            Some((kind, _)) => Err(proto(format!(
+                "service handshake: expected server hello, got frame type {kind:#x}"
+            ))),
+            None => Err(proto("service handshake: daemon closed the connection")),
+        }
+    }
+
+    /// Machine size of the daemon's communicator (from the handshake).
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Ship one op spec under `req_id` without waiting for the reply.
+    pub fn submit(&mut self, req_id: u64, op: &MixOp) -> io::Result<()> {
+        self.stream.write_all(&req_frame(req_id, op))
+    }
+
+    /// Read the next reply frame: `(req_id, reply)`.
+    pub fn recv_reply(&mut self) -> io::Result<(u64, ServiceReply)> {
+        match read_raw_frame(&mut self.stream)? {
+            Some((FT_RES_OK, body)) => {
+                let (id, summary) = parse_res_ok(&body)?;
+                Ok((id, ServiceReply::Ok(summary)))
+            }
+            Some((FT_RES_ERR, body)) => {
+                let (id, msg) = parse_res_err(&body)?;
+                Ok((id, ServiceReply::Err(msg)))
+            }
+            Some((FT_RES_REJECT, body)) => {
+                let (id, retry_after_ms) = parse_res_reject(&body)?;
+                Ok((id, ServiceReply::Rejected { retry_after_ms }))
+            }
+            Some((kind, _)) => {
+                Err(proto(format!("service: unexpected reply frame type {kind:#x}")))
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "service: daemon closed the connection",
+            )),
+        }
+    }
+
+    /// Submit one op and wait for its reply (one outstanding request).
+    pub fn call(&mut self, req_id: u64, op: &MixOp) -> io::Result<ServiceReply> {
+        self.submit(req_id, op)?;
+        let (id, reply) = self.recv_reply()?;
+        if id != req_id {
+            return Err(proto(format!("service: reply for request {id}, expected {req_id}")));
+        }
+        Ok(reply)
+    }
+
+    /// [`ServiceClient::call`], resubmitting after each admission
+    /// refusal with the daemon's backoff hint — returns the first
+    /// non-rejected reply.
+    pub fn call_admitted(&mut self, req_id: u64, op: &MixOp) -> io::Result<ServiceReply> {
+        loop {
+            match self.call(req_id, op)? {
+                ServiceReply::Rejected { retry_after_ms } => {
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(1) as u64));
+                }
+                reply => return Ok(reply),
+            }
+        }
+    }
+
+    /// Fetch the daemon's counters as one text blob.
+    pub fn stats(&mut self) -> io::Result<String> {
+        self.stream.write_all(&stats_frame())?;
+        match read_raw_frame(&mut self.stream)? {
+            Some((FT_STATS_RES, body)) => parse_stats_res(&body),
+            Some((kind, _)) => {
+                Err(proto(format!("service: expected stats, got frame type {kind:#x}")))
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "service: daemon closed the connection",
+            )),
+        }
+    }
+
+    /// Clean goodbye.
+    pub fn bye(mut self) -> io::Result<()> {
+        self.stream.write_all(&bye_frame())
+    }
+
+    /// Administrative daemon shutdown (CI teardown).
+    pub fn shutdown_daemon(mut self) -> io::Result<()> {
+        self.stream.write_all(&shutdown_frame())
+    }
+}

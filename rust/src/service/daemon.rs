@@ -1,0 +1,590 @@
+//! The collective service daemon: a long-lived owner of one
+//! [`Communicator`] that accepts concurrent client connections, admits
+//! their requests into shared traffic-plane batches under explicit
+//! admission control, and bills every tenant out of the batch report.
+//!
+//! ## Threads
+//!
+//! * one **accept** thread polls the (nonblocking) listener and spawns
+//!   a handler thread per connection;
+//! * one **handler** thread per connection does the hello exchange,
+//!   then reads request frames with an idle-tolerant deadline — a
+//!   timeout *before* a frame's first byte is an idle client (keep
+//!   waiting, check shutdown), a timeout *mid*-frame is a slow-loris
+//!   stall (drop the connection, count it) — so one stalled client
+//!   never blocks the others;
+//! * one **batcher** thread owns the `Communicator`: it sleeps a short
+//!   gather window once work arrives, drains up to
+//!   [`ServiceConfig::batch_max`] jobs, tags each with its tenant
+//!   ([`crate::comm::TrafficEngine::for_tenant`]), runs them as ONE
+//!   overlapped batch under the cross-op port ledger, and writes each
+//!   job's reply. Per-op failures surface on that op's reply while
+//!   co-batched ops complete — the traffic plane's contract.
+//!
+//! ## Admission control
+//!
+//! The queue between handlers and the batcher is bounded
+//! ([`ServiceConfig::queue_cap`]). A request arriving at a full queue
+//! is refused *immediately* with a `retry_after` hint — it never
+//! blocks, never evicts admitted work — and the refusal is charged to
+//! the tenant's usage row on the next batch report
+//! ([`crate::comm::BatchReport::note_rejected`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::os::unix::net::UnixListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::comm::socket::{fill, read_raw_frame, Stream, MAX_FRAME};
+use crate::comm::{CommBuilder, Communicator, TenantUsage};
+use crate::testkit::{submit_mix_op, MixOp, MixPending};
+
+use super::wire::{
+    parse_chello, parse_req, res_err_frame, res_ok_frame, res_reject_frame, shello_frame,
+    stats_res_frame, summarize, FT_BYE, FT_CHELLO, FT_REQ, FT_SHUTDOWN, FT_STATS,
+};
+
+/// Daemon-side cap on a request's payload scale (elements): payloads
+/// are *derived*, not shipped, so this bounds the daemon's own memory,
+/// not the wire.
+pub const MAX_OP_M: usize = 1 << 16;
+
+/// Knobs of the collective service daemon.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Machine size of the daemon's communicator.
+    pub p: usize,
+    /// Bound on the handler→batcher queue; requests beyond it are
+    /// refused with a retry hint (admission control).
+    pub queue_cap: usize,
+    /// Max ops drained into one batch.
+    pub batch_max: usize,
+    /// How long the batcher waits after the first job arrives, so
+    /// concurrent clients land in the same batch.
+    pub gather: Duration,
+    /// The backoff hint sent with an admission refusal.
+    pub retry_after: Duration,
+    /// Mid-frame read deadline per connection — the slow-loris cutoff.
+    pub client_timeout: Duration,
+    /// Scoped-thread override for batch execution (`None` = the
+    /// engine's default rule).
+    pub threads: Option<usize>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            p: 32,
+            queue_cap: 128,
+            batch_max: 64,
+            gather: Duration::from_millis(2),
+            retry_after: Duration::from_millis(5),
+            client_timeout: Duration::from_secs(2),
+            threads: None,
+        }
+    }
+}
+
+/// A counters snapshot ([`ServiceHandle::metrics`]). Cumulative over
+/// the daemon's lifetime; the per-tenant rows fold in one
+/// [`TenantUsage`] per label across every batch.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    /// Connections accepted.
+    pub connections: usize,
+    /// Requests admitted into the queue.
+    pub admitted: usize,
+    /// Requests refused at admission (queue full).
+    pub rejected: usize,
+    /// Ops that completed with an `Ok` outcome.
+    pub completed: usize,
+    /// Ops that failed (malformed, oversized, or a runtime error).
+    pub failed: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Connections dropped for protocol violations or slow-loris
+    /// stalls.
+    pub dropped: usize,
+    /// Cumulative per-tenant usage.
+    pub tenants: Vec<TenantUsage>,
+}
+
+/// One admitted request waiting for the batcher.
+struct Job {
+    tenant: Arc<str>,
+    spec: MixOp,
+    req_id: u64,
+    /// The connection's write half, shared with its handler thread.
+    reply: Arc<Mutex<Stream>>,
+}
+
+/// State shared by every daemon thread.
+struct Inner {
+    cfg: ServiceConfig,
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    metrics: Mutex<ServiceMetrics>,
+    /// Per-tenant admission refusals since the last batch — drained
+    /// into the next [`crate::comm::BatchReport`].
+    rejects: Mutex<HashMap<String, usize>>,
+    /// Handler threads, joined at [`ServiceHandle::join`].
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    /// The TCP bound address, when serving TCP.
+    addr: Option<SocketAddr>,
+    /// The UDS path, removed on join, when serving UDS.
+    uds_path: Option<PathBuf>,
+}
+
+impl Inner {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// A running daemon ([`serve_unix`] / [`serve_tcp`]). Call
+/// [`ServiceHandle::shutdown`] then [`ServiceHandle::join`] for a
+/// programmatic stop, or `join` alone to block until a client sends
+/// the administrative shutdown frame.
+pub struct ServiceHandle {
+    inner: Arc<Inner>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    /// The bound TCP address (`None` when serving UDS) — useful with
+    /// `serve_tcp("127.0.0.1:0", …)`.
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.inner.addr
+    }
+
+    /// Machine size of the daemon's communicator.
+    pub fn p(&self) -> usize {
+        self.inner.cfg.p
+    }
+
+    /// A counters snapshot.
+    pub fn metrics(&self) -> ServiceMetrics {
+        self.inner.metrics.lock().unwrap().clone()
+    }
+
+    /// Ask every daemon thread to wind down (returns immediately).
+    pub fn shutdown(&self) {
+        self.inner.request_stop();
+    }
+
+    /// Block until the daemon stops — immediately after
+    /// [`ServiceHandle::shutdown`], or when a client sends the
+    /// administrative shutdown frame. Joins every thread (handlers
+    /// finish within one idle-poll tick), removes the UDS socket file,
+    /// and returns the final counters — replies are written *before*
+    /// the batcher folds its counters, so only this post-join snapshot
+    /// is guaranteed to account for every reply a client has seen.
+    pub fn join(mut self) -> ServiceMetrics {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let conns = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        for t in conns {
+            let _ = t.join();
+        }
+        if let Some(path) = &self.inner.uds_path {
+            let _ = std::fs::remove_file(path);
+        }
+        self.inner.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        // `join` drains `threads`; a handle dropped without joining
+        // still asks the daemon to stop (threads detach and exit on
+        // their next poll tick).
+        if !self.threads.is_empty() {
+            self.inner.request_stop();
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Stream::Unix(s))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+}
+
+/// Serve on a Unix-domain socket at `path` (a stale socket file is
+/// replaced).
+pub fn serve_unix(path: &Path, cfg: ServiceConfig) -> io::Result<ServiceHandle> {
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)?;
+    listener.set_nonblocking(true)?;
+    serve(Listener::Unix(listener), cfg, None, Some(path.to_path_buf()))
+}
+
+/// Serve on a TCP address (`"127.0.0.1:0"` binds an ephemeral port —
+/// read it back from [`ServiceHandle::addr`]).
+pub fn serve_tcp(addr: &str, cfg: ServiceConfig) -> io::Result<ServiceHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let bound = listener.local_addr()?;
+    serve(Listener::Tcp(listener), cfg, Some(bound), None)
+}
+
+fn serve(
+    listener: Listener,
+    cfg: ServiceConfig,
+    addr: Option<SocketAddr>,
+    uds_path: Option<PathBuf>,
+) -> io::Result<ServiceHandle> {
+    if cfg.p == 0 || cfg.queue_cap == 0 || cfg.batch_max == 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "service: p, queue_cap and batch_max must all be >= 1",
+        ));
+    }
+    let inner = Arc::new(Inner {
+        cfg,
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+        metrics: Mutex::new(ServiceMetrics::default()),
+        rejects: Mutex::new(HashMap::new()),
+        conns: Mutex::new(Vec::new()),
+        addr,
+        uds_path,
+    });
+    let accept = {
+        let inner = inner.clone();
+        thread::Builder::new()
+            .name("cbcastd-accept".into())
+            .spawn(move || accept_loop(&inner, listener))?
+    };
+    let batcher = {
+        let inner = inner.clone();
+        thread::Builder::new().name("cbcastd-batch".into()).spawn(move || batch_loop(&inner))?
+    };
+    Ok(ServiceHandle { inner, threads: vec![accept, batcher] })
+}
+
+fn accept_loop(inner: &Arc<Inner>, listener: Listener) {
+    while !inner.stopping() {
+        match listener.accept() {
+            Ok(stream) => {
+                inner.metrics.lock().unwrap().connections += 1;
+                let conn_inner = inner.clone();
+                let handle = thread::Builder::new()
+                    .name("cbcastd-conn".into())
+                    .spawn(move || handle_conn(&conn_inner, stream));
+                if let Ok(h) = handle {
+                    inner.conns.lock().unwrap().push(h);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// What one idle-tolerant read step produced.
+enum Incoming {
+    Frame(u8, Vec<u8>),
+    /// No frame started before the poll deadline — not an error.
+    Idle,
+    /// Clean EOF between frames.
+    Closed,
+}
+
+/// Read one frame, distinguishing idleness from a slow-loris stall:
+/// the *first* byte is awaited under a short `poll` deadline (a miss is
+/// [`Incoming::Idle`] — loop and re-check shutdown); once a frame has
+/// started, the rest must arrive within `frame_timeout` or the read
+/// errors out and the caller drops the connection.
+fn read_frame_idle(
+    s: &mut Stream,
+    poll: Duration,
+    frame_timeout: Duration,
+) -> io::Result<Incoming> {
+    let _ = s.set_read_timeout(Some(poll));
+    let mut first = [0u8; 1];
+    loop {
+        match s.read(&mut first) {
+            Ok(0) => return Ok(Incoming::Closed),
+            Ok(_) => break,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                return Ok(Incoming::Idle)
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let _ = s.set_read_timeout(Some(frame_timeout));
+    let mut rest = [0u8; 3];
+    if !fill(s, &mut rest)? {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "service: connection closed inside a frame header",
+        ));
+    }
+    let len = u32::from_le_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("service: frame length {len} out of range"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    if !fill(s, &mut buf)? {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "service: connection closed inside a frame body",
+        ));
+    }
+    let kind = buf[0];
+    let body = buf.split_off(1);
+    Ok(Incoming::Frame(kind, body))
+}
+
+fn drop_conn(inner: &Inner) {
+    inner.metrics.lock().unwrap().dropped += 1;
+}
+
+fn send_frame(reply: &Arc<Mutex<Stream>>, frame: &[u8]) {
+    // A vanished client just loses its reply; the batch is unaffected.
+    let _ = reply.lock().unwrap().write_all(frame);
+}
+
+fn handle_conn(inner: &Arc<Inner>, mut stream: Stream) {
+    // Handshake under the full frame deadline: a client that connects
+    // and stalls is a slow-loris from byte one.
+    let _ = stream.set_read_timeout(Some(inner.cfg.client_timeout));
+    let tenant: Arc<str> = match read_raw_frame(&mut stream) {
+        Ok(Some((FT_CHELLO, body))) => match parse_chello(&body) {
+            Ok(t) => Arc::from(t.as_str()),
+            Err(_) => return drop_conn(inner),
+        },
+        _ => return drop_conn(inner),
+    };
+    if stream.write_all(&shello_frame(inner.cfg.p)).is_err() {
+        return drop_conn(inner);
+    }
+    let reply = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return drop_conn(inner),
+    };
+
+    // Idle polls stay short so shutdown is responsive regardless of
+    // how generous the slow-loris cutoff is.
+    let poll = inner.cfg.client_timeout.min(Duration::from_millis(100));
+    loop {
+        if inner.stopping() {
+            return;
+        }
+        let (kind, body) = match read_frame_idle(&mut stream, poll, inner.cfg.client_timeout) {
+            Ok(Incoming::Frame(kind, body)) => (kind, body),
+            Ok(Incoming::Idle) => continue,
+            Ok(Incoming::Closed) => return,
+            Err(_) => return drop_conn(inner),
+        };
+        match kind {
+            FT_REQ => {
+                let (req_id, spec) = match parse_req(&body) {
+                    Ok(x) => x,
+                    Err(_) => return drop_conn(inner),
+                };
+                admit(inner, &tenant, req_id, spec, &reply);
+            }
+            FT_STATS => {
+                let text = render_stats(inner);
+                send_frame(&reply, &stats_res_frame(&text));
+            }
+            FT_BYE => return,
+            FT_SHUTDOWN => {
+                inner.request_stop();
+                return;
+            }
+            _ => return drop_conn(inner),
+        }
+    }
+}
+
+/// Admission control: an oversized op fails outright, a full queue
+/// refuses with the retry hint, everything else enqueues for the
+/// batcher.
+fn admit(inner: &Inner, tenant: &Arc<str>, req_id: u64, spec: MixOp, reply: &Arc<Mutex<Stream>>) {
+    if spec.m > MAX_OP_M {
+        inner.metrics.lock().unwrap().failed += 1;
+        let msg = format!("bad request: payload scale {} exceeds daemon cap {MAX_OP_M}", spec.m);
+        send_frame(reply, &res_err_frame(req_id, &msg));
+        return;
+    }
+    let mut q = inner.queue.lock().unwrap();
+    if q.len() >= inner.cfg.queue_cap {
+        drop(q);
+        *inner.rejects.lock().unwrap().entry(tenant.to_string()).or_insert(0) += 1;
+        inner.metrics.lock().unwrap().rejected += 1;
+        let hint = inner.cfg.retry_after.as_millis().min(u32::MAX as u128) as u32;
+        send_frame(reply, &res_reject_frame(req_id, hint.max(1)));
+    } else {
+        q.push_back(Job { tenant: tenant.clone(), spec, req_id, reply: reply.clone() });
+        inner.cv.notify_all();
+        drop(q);
+        inner.metrics.lock().unwrap().admitted += 1;
+    }
+}
+
+fn batch_loop(inner: &Arc<Inner>) {
+    // The batcher owns the communicator for the daemon's lifetime —
+    // schedule tables are computed once and reused across every batch.
+    let comm = CommBuilder::new(inner.cfg.p).build();
+    loop {
+        let mut q = inner.queue.lock().unwrap();
+        while q.is_empty() && !inner.stopping() {
+            let (guard, _) = inner.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = guard;
+        }
+        if q.is_empty() {
+            return; // stop requested with nothing left to drain
+        }
+        drop(q);
+        // Gather window: let concurrently-arriving requests join this
+        // batch instead of each riding alone.
+        thread::sleep(inner.cfg.gather);
+        let jobs: Vec<Job> = {
+            let mut q = inner.queue.lock().unwrap();
+            let n = q.len().min(inner.cfg.batch_max);
+            q.drain(..n).collect()
+        };
+        run_batch(inner, &comm, jobs);
+    }
+}
+
+fn run_batch(inner: &Inner, comm: &Communicator, jobs: Vec<Job>) {
+    let mut traffic = comm.traffic();
+    if let Some(t) = inner.cfg.threads {
+        traffic = traffic.threads(t);
+    }
+    let mut submit_failed = 0usize;
+    let mut admitted: Vec<(Job, MixPending)> = Vec::new();
+    for job in jobs {
+        traffic.for_tenant(&job.tenant);
+        match submit_mix_op(&mut traffic, &job.spec) {
+            Ok(pending) => admitted.push((job, pending)),
+            Err(e) => {
+                submit_failed += 1;
+                send_frame(&job.reply, &res_err_frame(job.req_id, &format!("{e}")));
+            }
+        }
+    }
+    let mut report = match traffic.run() {
+        Ok(r) => r,
+        Err(e) => {
+            let msg = format!("batch execution failed: {e}");
+            let n = admitted.len();
+            for (job, _) in &admitted {
+                send_frame(&job.reply, &res_err_frame(job.req_id, &msg));
+            }
+            let mut m = inner.metrics.lock().unwrap();
+            m.failed += submit_failed + n;
+            return;
+        }
+    };
+    // Charge the admission refusals accumulated since the last batch.
+    for (tenant, n) in inner.rejects.lock().unwrap().drain() {
+        report.note_rejected(&tenant, n);
+    }
+    let mut completed = 0usize;
+    let mut failed = submit_failed;
+    for (job, pending) in admitted {
+        match summarize(&pending.take()) {
+            Ok(summary) => {
+                completed += 1;
+                send_frame(&job.reply, &res_ok_frame(job.req_id, &summary));
+            }
+            Err(msg) => {
+                failed += 1;
+                send_frame(&job.reply, &res_err_frame(job.req_id, &msg));
+            }
+        }
+    }
+    let mut m = inner.metrics.lock().unwrap();
+    m.batches += 1;
+    m.completed += completed;
+    m.failed += failed;
+    fold_usage(&mut m.tenants, &report.tenants);
+}
+
+/// Fold one batch's tenant rows into the cumulative metrics rows.
+fn fold_usage(total: &mut Vec<TenantUsage>, batch: &[TenantUsage]) {
+    for row in batch {
+        let idx = match total.iter().position(|u| u.tenant == row.tenant) {
+            Some(i) => i,
+            None => {
+                total.push(TenantUsage { tenant: row.tenant.clone(), ..TenantUsage::default() });
+                total.len() - 1
+            }
+        };
+        let t = &mut total[idx];
+        t.ops += row.ops;
+        t.ok += row.ok;
+        t.messages += row.messages;
+        t.bytes += row.bytes;
+        t.rejected += row.rejected;
+    }
+}
+
+fn render_stats(inner: &Inner) -> String {
+    let depth = inner.queue.lock().unwrap().len();
+    let m = inner.metrics.lock().unwrap();
+    let mut out = format!(
+        "p={} queue_depth={} connections={} admitted={} rejected={} completed={} failed={} \
+         batches={} dropped={}\n",
+        inner.cfg.p,
+        depth,
+        m.connections,
+        m.admitted,
+        m.rejected,
+        m.completed,
+        m.failed,
+        m.batches,
+        m.dropped,
+    );
+    for t in &m.tenants {
+        out.push_str(&format!(
+            "tenant={} ops={} ok={} messages={} bytes={} rejected={}\n",
+            t.tenant, t.ops, t.ok, t.messages, t.bytes, t.rejected
+        ));
+    }
+    out
+}

@@ -1,0 +1,175 @@
+//! The collective service: a long-lived daemon over the wire plane.
+//!
+//! The wire plane ([`crate::comm::socket`]) moves *ranks* across
+//! sockets; this module moves *requests*. A daemon
+//! ([`serve_unix`] / [`serve_tcp`], or the `cbcastd` binary) owns one
+//! [`crate::comm::Communicator`] and accepts concurrent client
+//! connections over the same length-prefixed framing. Each client
+//! identifies a **tenant** in its hello, then submits collective
+//! *specifications* — kind, window, root, size, block count,
+//! algorithm, data seed ([`crate::testkit::MixOp`]); payload buffers
+//! never cross the wire, both sides derive them from the seed. The
+//! daemon gathers concurrently-arriving requests into one traffic-plane
+//! batch ([`crate::comm::TrafficEngine`]), so interleaved client work
+//! round-shares the machine under the cross-op one-ported port ledger,
+//! and replies per op with a result digest + the full statistics line
+//! ([`OpSummary`]) — enough for any client to assert bit-identity
+//! against a solo run of the same spec.
+//!
+//! **Admission control** is explicit: the handler→batcher queue is
+//! bounded, and a request hitting the bound is refused immediately with
+//! a `retry_after` hint ([`ServiceReply::Rejected`]) instead of
+//! queueing unboundedly. Refusals, like completed work, are charged to
+//! the tenant's usage row ([`crate::comm::TenantUsage`]) in the batch
+//! report.
+//!
+//! The one-ported round discipline holds end to end: every admitted op
+//! executes on the engine's port ledger, so nothing the daemon batches
+//! can ever schedule two sends (or two receives) on one rank in one
+//! machine round — the same invariant the lockstep simulator enforces.
+
+mod client;
+mod daemon;
+mod wire;
+
+pub use client::ServiceClient;
+pub use daemon::{
+    serve_tcp, serve_unix, ServiceConfig, ServiceHandle, ServiceMetrics, MAX_OP_M,
+};
+pub use wire::{mix_digest, summarize, OpSummary, ServiceReply};
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    use crate::comm::CommBuilder;
+    use crate::testkit::{run_mix_blocking, traffic_mix, MixOptions, Rng};
+
+    use super::*;
+
+    fn temp_sock(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cbcastd-test-{tag}-{}.sock", std::process::id()));
+        p
+    }
+
+    fn test_config(p: usize) -> ServiceConfig {
+        ServiceConfig {
+            p,
+            client_timeout: Duration::from_millis(500),
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn daemon_replies_match_solo_runs() {
+        let p = 16usize;
+        let path = temp_sock("parity");
+        let handle = serve_unix(&path, test_config(p)).unwrap();
+        let mut client =
+            ServiceClient::connect_unix_retry(&path, "solo", Duration::from_secs(5)).unwrap();
+        assert_eq!(client.p(), p);
+
+        let mix = traffic_mix(&mut Rng::new(0xC0FFEE), p, 12, &MixOptions::default());
+        for (i, op) in mix.ops.iter().enumerate() {
+            let reply = client.call_admitted(i as u64, op).unwrap();
+            let solo = run_mix_blocking(&CommBuilder::new(op.ranks(p)).build(), op);
+            match (reply, summarize(&solo)) {
+                (ServiceReply::Ok(got), Ok(want)) => assert_eq!(got, want, "op #{i}: {op:?}"),
+                (ServiceReply::Err(got), Err(want)) => assert_eq!(got, want, "op #{i}: {op:?}"),
+                (got, want) => panic!("op #{i}: daemon said {got:?}, solo said {want:?}"),
+            }
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("tenant=solo"), "stats must bill the tenant: {stats}");
+        client.bye().unwrap();
+        handle.shutdown();
+        let metrics = handle.join();
+        assert_eq!(metrics.admitted, 12);
+        assert_eq!(metrics.completed + metrics.failed, 12);
+        let row = metrics.tenants.iter().find(|t| t.tenant == "solo").unwrap();
+        assert_eq!(row.ops, 12);
+    }
+
+    #[test]
+    fn saturated_queue_rejects_with_retry_hint() {
+        // A one-slot queue and a long gather window: the batcher sits in
+        // its gather sleep while we stuff the queue, so all but the
+        // admitted request are refused — then succeed on resubmission.
+        let path = temp_sock("reject");
+        let cfg = ServiceConfig {
+            p: 8,
+            queue_cap: 1,
+            gather: Duration::from_millis(300),
+            retry_after: Duration::from_millis(2),
+            client_timeout: Duration::from_millis(500),
+            ..ServiceConfig::default()
+        };
+        let handle = serve_unix(&path, cfg).unwrap();
+        let mut client =
+            ServiceClient::connect_unix_retry(&path, "greedy", Duration::from_secs(5)).unwrap();
+        let mix = traffic_mix(&mut Rng::new(7), 8, 6, &MixOptions::default());
+
+        // Pipeline all six without waiting: at most one fits the queue.
+        for (i, op) in mix.ops.iter().enumerate() {
+            client.submit(i as u64, op).unwrap();
+        }
+        let mut rejected = Vec::new();
+        let mut done = 0usize;
+        while done < mix.ops.len() {
+            let (id, reply) = client.recv_reply().unwrap();
+            match reply {
+                ServiceReply::Rejected { retry_after_ms } => {
+                    assert!(retry_after_ms >= 1);
+                    rejected.push(id);
+                }
+                ServiceReply::Ok(_) | ServiceReply::Err(_) => done += 1,
+            }
+            // Resubmit rejected ops once replies start flowing (the
+            // batcher has drained the queue by then).
+            if done > 0 {
+                for id in rejected.drain(..) {
+                    client.submit(id, &mix.ops[id as usize]).unwrap();
+                }
+            }
+        }
+        handle.shutdown();
+        let metrics = handle.join();
+        assert!(metrics.rejected >= 1, "a one-slot queue must refuse pipelined work");
+        assert_eq!(metrics.completed + metrics.failed, 6);
+        let row = metrics.tenants.iter().find(|t| t.tenant == "greedy").unwrap();
+        assert!(row.rejected >= 1, "refusals must be billed to the tenant: {row:?}");
+    }
+
+    #[test]
+    fn oversized_ops_fail_without_poisoning_the_connection() {
+        let path = temp_sock("cap");
+        let handle = serve_unix(&path, test_config(4)).unwrap();
+        let mut client =
+            ServiceClient::connect_unix_retry(&path, "big", Duration::from_secs(5)).unwrap();
+        let mut mix = traffic_mix(&mut Rng::new(3), 4, 2, &MixOptions::default());
+        mix.ops[0].m = MAX_OP_M + 1;
+        match client.call_admitted(0, &mix.ops[0]).unwrap() {
+            ServiceReply::Err(msg) => assert!(msg.contains("exceeds daemon cap"), "{msg}"),
+            other => panic!("oversized op must fail, got {other:?}"),
+        }
+        // The connection (and the daemon) keep serving.
+        let reply = client.call_admitted(1, &mix.ops[1]).unwrap();
+        assert!(!matches!(reply, ServiceReply::Rejected { .. }));
+        handle.shutdown();
+        handle.join();
+    }
+
+    #[test]
+    fn client_shutdown_frame_stops_the_daemon() {
+        let path = temp_sock("shutdown");
+        let handle = serve_unix(&path, test_config(4)).unwrap();
+        let client =
+            ServiceClient::connect_unix_retry(&path, "admin", Duration::from_secs(5)).unwrap();
+        client.shutdown_daemon().unwrap();
+        // join() returns only because the shutdown frame stopped every
+        // thread; a hang here is the failure.
+        handle.join();
+    }
+}

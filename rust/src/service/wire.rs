@@ -1,0 +1,478 @@
+//! The client↔daemon request protocol, layered on the wire plane's
+//! framing ([`crate::comm::socket`]): same `[len | type | body]` frames,
+//! a disjoint frame-type range (`0x10..`), and a `MixOp` codec so a
+//! client ships an operation *specification* — never payload buffers.
+//! Payloads are derived deterministically on both sides from the op's
+//! `data_seed` (the [`crate::testkit::MixOp`] convention), which is what
+//! makes the differential check cheap: the daemon returns a digest and
+//! the client can recompute the expected digest from a solo run.
+
+use std::io;
+
+use crate::comm::socket::{put_str, put_u16, put_u32, put_u64, seal, Body, MAGIC, VERSION};
+use crate::comm::{Algo, Kind};
+use crate::testkit::{MixOp, MixOutcome};
+
+// Service frame types — disjoint from the transport's `1..=4` range so
+// a stray transport frame on a service connection is an instant
+// protocol error, not a misparse.
+/// Client hello: `magic, version, tenant`.
+pub(crate) const FT_CHELLO: u8 = 0x10;
+/// Server hello: `magic, version, p`.
+pub(crate) const FT_SHELLO: u8 = 0x11;
+/// Collective request: `req_id, MixOp`.
+pub(crate) const FT_REQ: u8 = 0x12;
+/// Completed op: `req_id, OpSummary`.
+pub(crate) const FT_RES_OK: u8 = 0x13;
+/// Failed op (or malformed request): `req_id, message`.
+pub(crate) const FT_RES_ERR: u8 = 0x14;
+/// Admission refusal: `req_id, retry_after_ms`.
+pub(crate) const FT_RES_REJECT: u8 = 0x15;
+/// Stats request (empty body).
+pub(crate) const FT_STATS: u8 = 0x16;
+/// Stats response: one text blob.
+pub(crate) const FT_STATS_RES: u8 = 0x17;
+/// Clean client goodbye (empty body).
+pub(crate) const FT_BYE: u8 = 0x18;
+/// Administrative daemon shutdown (empty body).
+pub(crate) const FT_SHUTDOWN: u8 = 0x19;
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+// --- enum codecs ------------------------------------------------------
+
+pub(crate) fn kind_code(k: Kind) -> u8 {
+    match k {
+        Kind::Bcast => 0,
+        Kind::Reduce => 1,
+        Kind::Allgatherv => 2,
+        Kind::ReduceScatter => 3,
+        Kind::Allreduce => 4,
+    }
+}
+
+pub(crate) fn kind_from(code: u8) -> io::Result<Kind> {
+    Ok(match code {
+        0 => Kind::Bcast,
+        1 => Kind::Reduce,
+        2 => Kind::Allgatherv,
+        3 => Kind::ReduceScatter,
+        4 => Kind::Allreduce,
+        c => return Err(bad(format!("service: unknown collective kind code {c}"))),
+    })
+}
+
+pub(crate) fn algo_code(a: Algo) -> u8 {
+    match a {
+        Algo::Auto => 0,
+        Algo::Circulant => 1,
+        Algo::Binomial => 2,
+        Algo::VanDeGeijn => 3,
+        Algo::Ring => 4,
+        Algo::RecursiveHalving => 5,
+    }
+}
+
+pub(crate) fn algo_from(code: u8) -> io::Result<Algo> {
+    Ok(match code {
+        0 => Algo::Auto,
+        1 => Algo::Circulant,
+        2 => Algo::Binomial,
+        3 => Algo::VanDeGeijn,
+        4 => Algo::Ring,
+        5 => Algo::RecursiveHalving,
+        c => return Err(bad(format!("service: unknown algorithm code {c}"))),
+    })
+}
+
+// --- hello frames -----------------------------------------------------
+
+pub(crate) fn chello_frame(tenant: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16 + tenant.len());
+    put_u32(&mut b, MAGIC);
+    put_u16(&mut b, VERSION);
+    put_str(&mut b, tenant);
+    seal(FT_CHELLO, &b)
+}
+
+pub(crate) fn parse_chello(body: &[u8]) -> io::Result<String> {
+    let mut b = Body::new(body);
+    if b.u32()? != MAGIC {
+        return Err(bad("service handshake: bad magic"));
+    }
+    let v = b.u16()?;
+    if v != VERSION {
+        return Err(bad(format!("service handshake: version {v}, daemon speaks {VERSION}")));
+    }
+    let tenant = b.str()?;
+    if tenant.is_empty() || tenant.len() > 64 {
+        return Err(bad("service handshake: tenant label must be 1..=64 bytes"));
+    }
+    Ok(tenant)
+}
+
+pub(crate) fn shello_frame(p: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(10);
+    put_u32(&mut b, MAGIC);
+    put_u16(&mut b, VERSION);
+    put_u32(&mut b, p as u32);
+    seal(FT_SHELLO, &b)
+}
+
+pub(crate) fn parse_shello(body: &[u8]) -> io::Result<usize> {
+    let mut b = Body::new(body);
+    if b.u32()? != MAGIC {
+        return Err(bad("service handshake: bad magic"));
+    }
+    let v = b.u16()?;
+    if v != VERSION {
+        return Err(bad(format!("service handshake: version {v}, client speaks {VERSION}")));
+    }
+    Ok(b.u32()? as usize)
+}
+
+// --- request frame ----------------------------------------------------
+
+/// Serialize a request: `req_id` then the op spec (kind, window, root,
+/// m, blocks, algo, data_seed). No payload bytes ever cross — both
+/// sides regenerate them from `data_seed`.
+pub(crate) fn req_frame(req_id: u64, op: &MixOp) -> Vec<u8> {
+    let mut b = Vec::with_capacity(48);
+    put_u64(&mut b, req_id);
+    b.push(kind_code(op.kind));
+    match op.window {
+        Some((base, len)) => {
+            b.push(1);
+            put_u32(&mut b, base as u32);
+            put_u32(&mut b, len as u32);
+        }
+        None => b.push(0),
+    }
+    put_u32(&mut b, op.root as u32);
+    put_u32(&mut b, op.m as u32);
+    match op.blocks {
+        Some(n) => {
+            b.push(1);
+            put_u32(&mut b, n as u32);
+        }
+        None => b.push(0),
+    }
+    b.push(algo_code(op.algo));
+    put_u64(&mut b, op.data_seed);
+    seal(FT_REQ, &b)
+}
+
+pub(crate) fn parse_req(body: &[u8]) -> io::Result<(u64, MixOp)> {
+    let mut b = Body::new(body);
+    let req_id = b.u64()?;
+    let kind = kind_from(b.u8()?)?;
+    let window = match b.u8()? {
+        0 => None,
+        1 => Some((b.u32()? as usize, b.u32()? as usize)),
+        c => return Err(bad(format!("service request: bad window tag {c}"))),
+    };
+    let root = b.u32()? as usize;
+    let m = b.u32()? as usize;
+    let blocks = match b.u8()? {
+        0 => None,
+        1 => Some(b.u32()? as usize),
+        c => return Err(bad(format!("service request: bad blocks tag {c}"))),
+    };
+    let algo = algo_from(b.u8()?)?;
+    let data_seed = b.u64()?;
+    Ok((req_id, MixOp { kind, window, root, m, blocks, algo, data_seed }))
+}
+
+// --- response frames --------------------------------------------------
+
+/// What the daemon returns for a completed op: a content digest over
+/// the rank-major result buffers plus the full statistics line — enough
+/// for a client to assert bit-identity against a solo
+/// [`crate::testkit::run_mix_blocking`] run without shipping buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpSummary {
+    /// FNV-1a digest of the rank-major result buffers ([`mix_digest`]).
+    pub digest: u64,
+    pub complete: bool,
+    /// The resolved algorithm (never `Auto`).
+    pub algo: Algo,
+    pub rounds: usize,
+    pub active_rounds: usize,
+    pub messages: usize,
+    pub bytes: usize,
+    pub max_rank_bytes: usize,
+    pub time: f64,
+}
+
+/// One reply to a submitted request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceReply {
+    /// The op ran; compare the summary against a solo run.
+    Ok(OpSummary),
+    /// The op was admitted but failed (or was malformed) — the
+    /// `CommError` display string, same as [`MixOutcome::Failed`].
+    Err(String),
+    /// Admission control refused the op (queue saturated); resubmit
+    /// after the hinted backoff.
+    Rejected { retry_after_ms: u32 },
+}
+
+/// FNV-1a over the rank-major buffers, mixing each rank's length so
+/// `[[1],[  ]]` and `[[ ],[1]]` digest differently.
+pub fn mix_digest(buffers: &[Vec<i64>]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &byte in bytes {
+            h ^= byte as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for row in buffers {
+        eat(&(row.len() as u64).to_le_bytes());
+        for v in row {
+            eat(&v.to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Summarize a mix outcome the way the daemon reports it: `Ok` carries
+/// the digest + stats, `Err` the failure string. Clients run this on a
+/// solo [`crate::testkit::run_mix_blocking`] result to get the exact
+/// value the daemon's reply must equal.
+pub fn summarize(outcome: &MixOutcome) -> Result<OpSummary, String> {
+    match outcome {
+        MixOutcome::Done {
+            buffers,
+            complete,
+            algo,
+            rounds,
+            active_rounds,
+            messages,
+            bytes,
+            max_rank_bytes,
+            time,
+        } => Ok(OpSummary {
+            digest: mix_digest(buffers),
+            complete: *complete,
+            algo: *algo,
+            rounds: *rounds,
+            active_rounds: *active_rounds,
+            messages: *messages,
+            bytes: *bytes,
+            max_rank_bytes: *max_rank_bytes,
+            time: *time,
+        }),
+        MixOutcome::Failed(msg) => Err(msg.clone()),
+    }
+}
+
+pub(crate) fn res_ok_frame(req_id: u64, s: &OpSummary) -> Vec<u8> {
+    let mut b = Vec::with_capacity(64);
+    put_u64(&mut b, req_id);
+    put_u64(&mut b, s.digest);
+    b.push(s.complete as u8);
+    b.push(algo_code(s.algo));
+    put_u32(&mut b, s.rounds as u32);
+    put_u32(&mut b, s.active_rounds as u32);
+    put_u64(&mut b, s.messages as u64);
+    put_u64(&mut b, s.bytes as u64);
+    put_u64(&mut b, s.max_rank_bytes as u64);
+    put_u64(&mut b, s.time.to_bits());
+    seal(FT_RES_OK, &b)
+}
+
+pub(crate) fn parse_res_ok(body: &[u8]) -> io::Result<(u64, OpSummary)> {
+    let mut b = Body::new(body);
+    let req_id = b.u64()?;
+    let digest = b.u64()?;
+    let complete = b.u8()? != 0;
+    let algo = algo_from(b.u8()?)?;
+    let rounds = b.u32()? as usize;
+    let active_rounds = b.u32()? as usize;
+    let messages = b.u64()? as usize;
+    let bytes = b.u64()? as usize;
+    let max_rank_bytes = b.u64()? as usize;
+    let time = f64::from_bits(b.u64()?);
+    Ok((
+        req_id,
+        OpSummary {
+            digest,
+            complete,
+            algo,
+            rounds,
+            active_rounds,
+            messages,
+            bytes,
+            max_rank_bytes,
+            time,
+        },
+    ))
+}
+
+pub(crate) fn res_err_frame(req_id: u64, msg: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(12 + msg.len());
+    put_u64(&mut b, req_id);
+    put_str(&mut b, msg);
+    seal(FT_RES_ERR, &b)
+}
+
+pub(crate) fn parse_res_err(body: &[u8]) -> io::Result<(u64, String)> {
+    let mut b = Body::new(body);
+    Ok((b.u64()?, b.str()?))
+}
+
+pub(crate) fn res_reject_frame(req_id: u64, retry_after_ms: u32) -> Vec<u8> {
+    let mut b = Vec::with_capacity(12);
+    put_u64(&mut b, req_id);
+    put_u32(&mut b, retry_after_ms);
+    seal(FT_RES_REJECT, &b)
+}
+
+pub(crate) fn parse_res_reject(body: &[u8]) -> io::Result<(u64, u32)> {
+    let mut b = Body::new(body);
+    Ok((b.u64()?, b.u32()?))
+}
+
+pub(crate) fn stats_frame() -> Vec<u8> {
+    seal(FT_STATS, &[])
+}
+
+pub(crate) fn stats_res_frame(text: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(4 + text.len());
+    put_str(&mut b, text);
+    seal(FT_STATS_RES, &b)
+}
+
+pub(crate) fn parse_stats_res(body: &[u8]) -> io::Result<String> {
+    Body::new(body).str()
+}
+
+pub(crate) fn bye_frame() -> Vec<u8> {
+    seal(FT_BYE, &[])
+}
+
+pub(crate) fn shutdown_frame() -> Vec<u8> {
+    seal(FT_SHUTDOWN, &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn req_frames_roundtrip_every_field_shape() {
+        let ops = [
+            MixOp {
+                kind: Kind::Bcast,
+                window: None,
+                root: 3,
+                m: 120,
+                blocks: Some(5),
+                algo: Algo::Circulant,
+                data_seed: 0xDEAD_BEEF_CAFE_F00D,
+            },
+            MixOp {
+                kind: Kind::Allreduce,
+                window: Some((4, 9)),
+                root: 0,
+                m: 0,
+                blocks: None,
+                algo: Algo::Auto,
+                data_seed: 1,
+            },
+            MixOp {
+                kind: Kind::ReduceScatter,
+                window: Some((0, 1)),
+                root: 0,
+                m: 48,
+                blocks: Some(1),
+                algo: Algo::RecursiveHalving,
+                data_seed: u64::MAX,
+            },
+        ];
+        for (i, op) in ops.iter().enumerate() {
+            let frame = req_frame(77 + i as u64, op);
+            // Strip the length prefix + type byte, as the read loop does.
+            let (id, back) = parse_req(&frame[5..]).unwrap();
+            assert_eq!(id, 77 + i as u64);
+            assert_eq!(back.kind, op.kind);
+            assert_eq!(back.window, op.window);
+            assert_eq!(back.root, op.root);
+            assert_eq!(back.m, op.m);
+            assert_eq!(back.blocks, op.blocks);
+            assert_eq!(back.algo, op.algo);
+            assert_eq!(back.data_seed, op.data_seed);
+            assert_eq!(frame[4], FT_REQ);
+        }
+    }
+
+    #[test]
+    fn summary_frames_roundtrip_including_time_bits() {
+        let s = OpSummary {
+            digest: 0x1234_5678_9ABC_DEF0,
+            complete: true,
+            algo: Algo::Binomial,
+            rounds: 11,
+            active_rounds: 9,
+            messages: 140,
+            bytes: 11_200,
+            max_rank_bytes: 960,
+            time: 12.625e-6,
+        };
+        let frame = res_ok_frame(9, &s);
+        let (id, back) = parse_res_ok(&frame[5..]).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(back, s);
+        assert_eq!(back.time.to_bits(), s.time.to_bits());
+    }
+
+    #[test]
+    fn hello_reject_and_err_frames_roundtrip() {
+        let t = parse_chello(&chello_frame("tenant-a")[5..]).unwrap();
+        assert_eq!(t, "tenant-a");
+        assert!(parse_chello(&chello_frame("")[5..]).is_err(), "empty tenant refused");
+        let p = parse_shello(&shello_frame(256)[5..]).unwrap();
+        assert_eq!(p, 256);
+        let (id, msg) = parse_res_err(&res_err_frame(3, "bad request: nope")[5..]).unwrap();
+        assert_eq!((id, msg.as_str()), (3, "bad request: nope"));
+        let (id, ms) = parse_res_reject(&res_reject_frame(8, 5)[5..]).unwrap();
+        assert_eq!((id, ms), (8, 5));
+        let text = parse_stats_res(&stats_res_frame("ops=4")[5..]).unwrap();
+        assert_eq!(text, "ops=4");
+    }
+
+    #[test]
+    fn digests_distinguish_shape_and_content() {
+        let a = mix_digest(&[vec![1], vec![]]);
+        let b = mix_digest(&[vec![], vec![1]]);
+        let c = mix_digest(&[vec![1], vec![]]);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+        assert_ne!(mix_digest(&[vec![1, 2]]), mix_digest(&[vec![2, 1]]));
+    }
+
+    #[test]
+    fn unknown_codes_are_invalid_data() {
+        assert!(kind_from(9).is_err());
+        assert!(algo_from(9).is_err());
+        for k in [Kind::Bcast, Kind::Reduce, Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce]
+        {
+            assert_eq!(kind_from(kind_code(k)).unwrap(), k);
+        }
+        for a in [
+            Algo::Auto,
+            Algo::Circulant,
+            Algo::Binomial,
+            Algo::VanDeGeijn,
+            Algo::Ring,
+            Algo::RecursiveHalving,
+        ] {
+            assert_eq!(algo_from(algo_code(a)).unwrap(), a);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Service-daemon failure injection and concurrency acceptance
+//! (`rust/src/service/`): several tenants hammer one daemon at once and
+//! every reply must stay bit-identical to a solo run of the same op
+//! spec; a slow-loris connection must be cut without disturbing healthy
+//! tenants; a malformed op must fail alone while its co-batched
+//! neighbours complete — the traffic plane's per-op isolation contract,
+//! observed through the wire.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use circulant_bcast::comm::{CommBuilder, Kind};
+use circulant_bcast::service::{
+    serve_tcp, serve_unix, summarize, ServiceClient, ServiceConfig, ServiceReply,
+};
+use circulant_bcast::testkit::{
+    install_seed_reporter, run_mix_blocking, traffic_mix, MixOp, MixOptions, Rng,
+};
+
+fn temp_sock(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("cbcastd-it-{tag}-{}.sock", std::process::id()));
+    p
+}
+
+/// Call with reject-and-retry, then assert the terminal reply is
+/// bit-identical to a solo run of the same spec on a fresh machine.
+fn call_and_verify(client: &mut ServiceClient, id: u64, op: &MixOp, p: usize) -> bool {
+    let reply = client.call_admitted(id, op).expect("wire call");
+    let solo = run_mix_blocking(&CommBuilder::new(op.ranks(p)).build(), op);
+    match (reply, summarize(&solo)) {
+        (ServiceReply::Ok(got), Ok(want)) => {
+            assert_eq!(got, want, "op {id} ({op:?}) diverged from its solo run");
+            true
+        }
+        (ServiceReply::Err(got), Err(want)) => {
+            assert_eq!(got, want, "op {id} ({op:?}) failed differently from its solo run");
+            false
+        }
+        (got, want) => panic!("op {id}: daemon said {got:?}, solo said {want:?}"),
+    }
+}
+
+/// The acceptance workload: four tenants, each pumping 16 mixed ops
+/// concurrently into one daemon (64 ops total, batched under the shared
+/// port ledger), every reply checked against a solo run.
+#[test]
+fn concurrent_tenants_all_match_their_solo_runs() {
+    install_seed_reporter();
+    let p = 16usize;
+    let (clients, per_client) = (4usize, 16usize);
+    let path = temp_sock("acceptance");
+    let cfg = ServiceConfig {
+        p,
+        gather: Duration::from_millis(5),
+        client_timeout: Duration::from_millis(2000),
+        ..ServiceConfig::default()
+    };
+    let handle = serve_unix(&path, cfg).unwrap();
+
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let path = path.clone();
+            std::thread::spawn(move || {
+                let tenant = format!("tenant-{c}");
+                let mut client =
+                    ServiceClient::connect_unix_retry(&path, &tenant, Duration::from_secs(5))
+                        .expect("connect");
+                let mut rng = Rng::new(0xACCE97 + c as u64);
+                let mix = traffic_mix(&mut rng, p, per_client, &MixOptions::default());
+                let mut ok = 0usize;
+                for (i, op) in mix.ops.iter().enumerate() {
+                    ok += usize::from(call_and_verify(&mut client, i as u64, op, p));
+                }
+                client.bye().expect("bye");
+                ok
+            })
+        })
+        .collect();
+    let total_ok: usize = workers.into_iter().map(|w| w.join().expect("client thread")).sum();
+
+    handle.shutdown();
+    let metrics = handle.join();
+    let total = clients * per_client;
+    assert_eq!(metrics.admitted, total, "every op admitted (retries re-admit)");
+    assert_eq!(metrics.completed + metrics.failed, total);
+    assert_eq!(metrics.completed, total_ok);
+    assert_eq!(metrics.tenants.len(), clients, "one usage row per tenant: {:?}", metrics.tenants);
+    for c in 0..clients {
+        let label = format!("tenant-{c}");
+        let row = metrics.tenants.iter().find(|t| t.tenant == label).unwrap();
+        assert_eq!(row.ops, per_client, "tenant {label} billed per op: {row:?}");
+    }
+}
+
+/// A slow-loris connection — valid hello, then a frame that starts and
+/// never finishes — is dropped at the mid-frame deadline, while a
+/// healthy tenant on the same daemon keeps completing verified work.
+#[test]
+fn slow_loris_is_dropped_while_healthy_work_completes() {
+    let p = 8usize;
+    let path = temp_sock("loris");
+    let cfg = ServiceConfig {
+        p,
+        client_timeout: Duration::from_millis(200),
+        ..ServiceConfig::default()
+    };
+    let handle = serve_unix(&path, cfg).unwrap();
+    let mut healthy =
+        ServiceClient::connect_unix_retry(&path, "healthy", Duration::from_secs(5)).unwrap();
+
+    // Hand-rolled service CHELLO (magic "CBW1", version 1, tenant), then
+    // one byte of a next frame's length prefix — and silence.
+    let mut loris = std::os::unix::net::UnixStream::connect(&path).unwrap();
+    let tenant = b"loris";
+    let mut chello = Vec::new();
+    chello.extend_from_slice(&(1u32 + 4 + 2 + 4 + tenant.len() as u32).to_le_bytes());
+    chello.push(0x10);
+    chello.extend_from_slice(&0x4342_5731u32.to_le_bytes());
+    chello.extend_from_slice(&1u16.to_le_bytes());
+    chello.extend_from_slice(&(tenant.len() as u32).to_le_bytes());
+    chello.extend_from_slice(tenant);
+    loris.write_all(&chello).unwrap();
+    loris.write_all(&[3u8]).unwrap(); // a frame begins… and stalls
+
+    // The healthy tenant's work is unaffected while the loris stalls.
+    let mix = traffic_mix(&mut Rng::new(5), p, 4, &MixOptions::default());
+    for (i, op) in mix.ops.iter().enumerate() {
+        call_and_verify(&mut healthy, i as u64, op, p);
+    }
+
+    // The daemon cuts the loris at the mid-frame deadline.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if handle.metrics().dropped >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slow-loris connection was never dropped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    healthy.bye().unwrap();
+    handle.shutdown();
+    let metrics = handle.join();
+    assert_eq!(metrics.completed + metrics.failed, 4);
+    assert_eq!(metrics.dropped, 1);
+    assert!(metrics.tenants.iter().all(|t| t.tenant != "loris"), "a dropped loris bills nothing");
+}
+
+/// Per-op isolation through the wire: a malformed spec co-batched with
+/// healthy ops fails alone — with the same error a solo run produces —
+/// while its neighbours complete bit-identically.
+#[test]
+fn malformed_op_fails_alone_in_a_shared_batch() {
+    let p = 12usize;
+    let path = temp_sock("isolation");
+    let cfg = ServiceConfig {
+        p,
+        gather: Duration::from_millis(100),
+        client_timeout: Duration::from_millis(2000),
+        ..ServiceConfig::default()
+    };
+    let handle = serve_unix(&path, cfg).unwrap();
+    let mut client =
+        ServiceClient::connect_unix_retry(&path, "mixed", Duration::from_secs(5)).unwrap();
+
+    let mut mix = traffic_mix(&mut Rng::new(11), p, 5, &MixOptions::default());
+    // A broadcast whose root lies outside its own rank window: rejected
+    // with the same `BadRequest` a solo run of the spec produces. (The
+    // kind is pinned — unrooted collectives ignore `root`.)
+    mix.ops[2].kind = Kind::Bcast;
+    mix.ops[2].window = Some((0, 4));
+    mix.ops[2].root = 7;
+
+    // Pipeline all five inside one gather window, then collect.
+    for (i, op) in mix.ops.iter().enumerate() {
+        client.submit(i as u64, op).unwrap();
+    }
+    let mut verdicts = vec![None; mix.ops.len()];
+    while verdicts.iter().any(|v| v.is_none()) {
+        let (id, reply) = client.recv_reply().unwrap();
+        let op = &mix.ops[id as usize];
+        let solo = run_mix_blocking(&CommBuilder::new(op.ranks(p)).build(), op);
+        match (reply, summarize(&solo)) {
+            (ServiceReply::Ok(got), Ok(want)) => {
+                assert_eq!(got, want, "op #{id} diverged");
+                verdicts[id as usize] = Some(true);
+            }
+            (ServiceReply::Err(got), Err(want)) => {
+                assert_eq!(got, want, "op #{id} failed differently");
+                verdicts[id as usize] = Some(false);
+            }
+            (ServiceReply::Rejected { .. }, _) => {
+                client.submit(id, op).unwrap();
+            }
+            (got, want) => panic!("op #{id}: daemon said {got:?}, solo said {want:?}"),
+        }
+    }
+    assert_eq!(verdicts[2], Some(false), "the malformed op must fail");
+    let healthy_ok =
+        verdicts.iter().enumerate().filter(|(i, _)| *i != 2).all(|(_, v)| *v == Some(true));
+    assert!(healthy_ok, "co-batched healthy ops must all complete: {verdicts:?}");
+    client.bye().unwrap();
+    handle.shutdown();
+    handle.join();
+}
+
+/// The same service speaks TCP: an ephemeral-port daemon serves a
+/// verified op over `127.0.0.1`.
+#[test]
+fn tcp_daemon_round_trips() {
+    let p = 8usize;
+    let cfg =
+        ServiceConfig { p, client_timeout: Duration::from_millis(2000), ..Default::default() };
+    let handle = serve_tcp("127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().expect("tcp daemon reports its address");
+    let mut client = ServiceClient::connect_tcp(&addr.to_string(), "tcp-tenant").unwrap();
+    assert_eq!(client.p(), p);
+    let mix = traffic_mix(&mut Rng::new(21), p, 3, &MixOptions::default());
+    for (i, op) in mix.ops.iter().enumerate() {
+        call_and_verify(&mut client, i as u64, op, p);
+    }
+    client.bye().unwrap();
+    handle.shutdown();
+    handle.join();
+}

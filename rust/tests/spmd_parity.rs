@@ -1,10 +1,11 @@
 //! Differential SPMD parity suite: for a seeded `(p, n, root, kind)`
 //! grid — p over 1, powers of two ±1 and primes — the per-rank
-//! `RankComm` outputs over **both** transports (`ThreadTransport`, the
-//! real one-thread-per-rank runtime, and `LoopbackTransport`, the
-//! lockstep round-barrier replay) must be bit-identical to the god-view
-//! `Communicator` outcomes on the lockstep and engine backends:
-//! payloads, completion, and the full `RunStats` accounting.
+//! `RankComm` outputs over **all three** transports (`ThreadTransport`,
+//! the real one-thread-per-rank runtime; `LoopbackTransport`, the
+//! lockstep round-barrier replay; and `SocketTransport`, real OS
+//! sockets with length-prefixed frames) must be bit-identical to the
+//! god-view `Communicator` outcomes on the lockstep and engine
+//! backends: payloads, completion, and the full `RunStats` accounting.
 //!
 //! This is the receipt for the rank plane's core claim: recomputing each
 //! rank's schedule independently in O(log p) (no shared table, no
@@ -30,6 +31,23 @@ use circulant_bcast::testkit::{install_seed_reporter, Rng};
 
 fn comm(p: usize, backend: BackendKind) -> Communicator {
     CommBuilder::new(p).cost_model(UnitCost).backend(backend).build()
+}
+
+/// Socket worlds are a full p·(p−1) mesh of socketpair fd ends; cap
+/// in-process socket parity at 24 ranks (552 fds) to stay well inside
+/// the default 1024-fd soft limit. The p = 64 case is the `#[ignore]`d
+/// release smoke.
+const SOCKET_P_CAP: usize = 24;
+
+/// The backends every case is checked against (beyond the lockstep
+/// base): engine and SPMD always, the wire plane when the fd budget
+/// allows.
+fn diff_backends(p: usize) -> Vec<BackendKind> {
+    let mut backends = vec![BackendKind::Engine, BackendKind::Spmd];
+    if p <= SOCKET_P_CAP {
+        backends.push(BackendKind::Socket);
+    }
+    backends
 }
 
 fn assert_stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
@@ -88,7 +106,7 @@ fn check_case(c: &Case) {
                     .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
             };
             let base = run(BackendKind::Lockstep);
-            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+            for backend in diff_backends(c.p) {
                 let out = run(backend);
                 assert_eq!(out.algo, base.algo, "{ctx} [{backend:?}]: algo");
                 assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
@@ -124,7 +142,7 @@ fn check_case(c: &Case) {
                     .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
             };
             let base = run(BackendKind::Lockstep);
-            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+            for backend in diff_backends(c.p) {
                 let out = run(backend);
                 assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
                 assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
@@ -159,7 +177,7 @@ fn check_case(c: &Case) {
                     .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
             };
             let base = run(BackendKind::Lockstep);
-            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+            for backend in diff_backends(c.p) {
                 let out = run(backend);
                 assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
                 assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
@@ -188,7 +206,7 @@ fn check_case(c: &Case) {
                     .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
             };
             let base = run(BackendKind::Lockstep);
-            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+            for backend in diff_backends(c.p) {
                 let out = run(backend);
                 assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
                 assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
@@ -223,7 +241,7 @@ fn check_case(c: &Case) {
                     .unwrap_or_else(|e| panic!("{ctx} [{backend:?}]: {e}"))
             };
             let base = run(BackendKind::Lockstep);
-            for backend in [BackendKind::Engine, BackendKind::Spmd] {
+            for backend in diff_backends(c.p) {
                 let out = run(backend);
                 assert_eq!(out.buffers, base.buffers, "{ctx} [{backend:?}]: payload");
                 assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
@@ -310,6 +328,75 @@ fn spmd_backend_serves_non_circulant_algos_too() {
         .unwrap();
     assert_eq!(out.buffers, base.buffers);
     assert_stats_eq(&out.stats, &base.stats, "binomial under spmd");
+}
+
+/// The wire-plane parity grid (socket side of the seeded matrix):
+/// seeded `(p, n, root, kind)` cases clamped to the socketpair fd
+/// budget, each run through the full differential check — which at
+/// these sizes includes `BackendKind::Socket`, i.e. real OS sockets
+/// carrying every schedule message — plus the direct rank-plane
+/// fan-out over `TransportKind::Socket`. Buffers AND stats must be
+/// bit-identical to lockstep.
+#[test]
+fn socket_parity() {
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    let mut checked = 0usize;
+    while checked < 20 {
+        let c = gen_case(&mut rng);
+        if c.p > SOCKET_P_CAP {
+            continue;
+        }
+        check_case(&c);
+        checked += 1;
+    }
+
+    // The direct SPMD entry point over real sockets, p = 1 (a world of
+    // zero links) and a prime.
+    for p in [1usize, 11] {
+        let sk = Arc::new(Skips::new(p));
+        let data: Vec<i64> = (0..64).map(|i| i * 3 - 40).collect();
+        let base = comm(p, BackendKind::Lockstep)
+            .bcast(BcastReq::new(p - 1, &data).algo(Algo::Circulant).blocks(4).elem_bytes(8))
+            .unwrap();
+        let (stats, bufs) =
+            spmd_bcast(&sk, p - 1, &data, 4, 8, &UnitCost, TransportKind::Socket)
+                .unwrap_or_else(|e| panic!("p={p} [socket direct]: {e}"));
+        assert_eq!(bufs, base.buffers, "p={p} [socket direct]: payload");
+        assert_stats_eq(&stats, &base.stats, &format!("p={p} [socket direct]"));
+    }
+}
+
+/// Release smoke (CI `socket-smoke` job): p = 64 over real socketpairs
+/// is 64·63 = 4032 fd ends — beyond the default 1024-fd soft limit, so
+/// `#[ignore]`d in the default run (the CI job raises `ulimit -n`
+/// before opting in).
+#[test]
+#[ignore]
+fn smoke_p64_socket_transport() {
+    install_seed_reporter();
+    let p = 64usize;
+    let data: Vec<i64> = (0..1024).map(|i| (i * 37) % 1013).collect();
+    let base = comm(p, BackendKind::Lockstep)
+        .bcast(BcastReq::new(17, &data).algo(Algo::Circulant).blocks(6).elem_bytes(8))
+        .unwrap();
+    let out = comm(p, BackendKind::Socket)
+        .bcast(BcastReq::new(17, &data).algo(Algo::Circulant).blocks(6).elem_bytes(8))
+        .unwrap();
+    assert_eq!(out.buffers, base.buffers);
+    assert_stats_eq(&out.stats, &base.stats, "p=64 socket bcast");
+    assert!(out.all_received());
+
+    let inputs: Vec<Vec<i64>> =
+        (0..p).map(|r| (0..256).map(|i| ((r + 1) * (i + 1)) as i64 % 7919).collect()).collect();
+    let base = comm(p, BackendKind::Lockstep)
+        .allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(4))
+        .unwrap();
+    let out = comm(p, BackendKind::Socket)
+        .allreduce(AllreduceReq::new(&inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(4))
+        .unwrap();
+    assert_eq!(out.buffers, base.buffers);
+    assert_stats_eq(&out.stats, &base.stats, "p=64 socket allreduce");
 }
 
 /// Release smoke (CI `spmd-smoke` job): p = 512 real rank threads over

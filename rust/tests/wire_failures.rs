@@ -1,0 +1,211 @@
+//! Wire-level failure injection for the socket transport
+//! (`rust/src/comm/socket.rs`): impostor endpoints speak raw bytes at a
+//! real rendezvous and the tests pin the *typed* failure every fault
+//! maps to — handshake mismatches are `io::Error`s at the constructor
+//! or `TransportError::Shutdown` after assembly, truncation poisons the
+//! world, and a peer that dies mid-schedule surfaces in the lockstep
+//! vocabulary as `SimError::MissingMessage`. The frame layout is
+//! re-derived here by hand, byte for byte, so these tests double as an
+//! independent check of the wire format documented in the module docs.
+
+use std::io::{Read, Write};
+use std::net::Shutdown;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use circulant_bcast::comm::{fresh_world_id, SocketTransport, Transport, TransportError};
+use circulant_bcast::sim::SimError;
+
+// -- The wire format, reconstructed independently of the crate ---------
+
+const MAGIC: u32 = 0x4342_5731; // "CBW1"
+const VERSION: u16 = 1;
+const FT_HELLO: u8 = 1;
+const FT_DATA: u8 = 2;
+const ELEM_BYTES_I64: u32 = 8;
+
+/// `[len: u32][type: u8][body]`, len counting type + body.
+fn seal(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 5);
+    out.extend_from_slice(&((body.len() + 1) as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(body);
+    out
+}
+
+fn hello(version: u16, p: u32, rank: u32, world_id: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(26);
+    body.extend_from_slice(&MAGIC.to_le_bytes());
+    body.extend_from_slice(&version.to_le_bytes());
+    body.extend_from_slice(&p.to_le_bytes());
+    body.extend_from_slice(&rank.to_le_bytes());
+    body.extend_from_slice(&world_id.to_le_bytes());
+    body.extend_from_slice(&ELEM_BYTES_I64.to_le_bytes());
+    seal(FT_HELLO, &body)
+}
+
+// -- Harness ----------------------------------------------------------
+
+fn temp_world_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cbwire-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create rendezvous dir");
+    dir
+}
+
+/// Dial `dir/rank-0.sock`, retrying until the rank under test binds it.
+fn dial_rank0(dir: &Path) -> UnixStream {
+    let path = dir.join("rank-0.sock");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match UnixStream::connect(&path) {
+            Ok(s) => return s,
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(2))
+            }
+            Err(e) => panic!("rank 0 never bound {path:?}: {e}"),
+        }
+    }
+}
+
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+// -- Handshake faults -------------------------------------------------
+
+/// A dialer claiming a different world id must be refused at rendezvous
+/// time: the acceptor's constructor fails with a typed handshake error
+/// instead of assembling a world that silently mixes two jobs' traffic.
+#[test]
+fn acceptor_rejects_hello_from_the_wrong_world() {
+    let dir = temp_world_dir("wrong-world");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&hello(VERSION, 2, 1, wid ^ 1)).unwrap();
+
+    let err = rank0.join().unwrap().expect_err("wrong world id must not assemble");
+    let msg = err.to_string();
+    assert!(msg.contains("handshake") && msg.contains("world id"), "got: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same refusal for a protocol-version mismatch — the version field is
+/// load-bearing, not decorative.
+#[test]
+fn acceptor_rejects_hello_with_wrong_protocol_version() {
+    let dir = temp_world_dir("wrong-version");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&hello(VERSION + 1, 2, 1, wid)).unwrap();
+
+    let err = rank0.join().unwrap().expect_err("wrong version must not assemble");
+    let msg = err.to_string();
+    assert!(msg.contains("handshake") && msg.contains("version"), "got: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The dial side validates the acceptor's answering `HELLO`
+/// asynchronously: a mismatched world id poisons the dialer's world,
+/// so its next verb fails `Shutdown` with the handshake diagnosis
+/// instead of deadlocking against traffic from the wrong job.
+#[test]
+fn dialer_poisons_on_answering_hello_from_the_wrong_world() {
+    let dir = temp_world_dir("bad-answer");
+    let wid = fresh_world_id();
+    let listener = UnixListener::bind(dir.join("rank-0.sock")).unwrap();
+    let rank1 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(1, 2, wid, &dir, TIMEOUT))
+    };
+    let (mut conn, _) = listener.accept().unwrap();
+    // Swallow rank 1's HELLO (4 len + 1 type + 26 body bytes), then
+    // answer as rank 0 of a *different* world.
+    let mut buf = [0u8; 31];
+    conn.read_exact(&mut buf).unwrap();
+    conn.write_all(&hello(VERSION, 2, 0, wid ^ 1)).unwrap();
+
+    let mut t = rank1.join().unwrap().expect("dial side assembles before validating");
+    match t.recv(0, 0) {
+        Err(TransportError::Shutdown { reason, .. }) => {
+            assert!(reason.contains("handshake") && reason.contains("world id"), "got: {reason}")
+        }
+        other => panic!("expected Shutdown with handshake diagnosis, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -- Frame faults -----------------------------------------------------
+
+/// A frame whose stream ends mid-body is a *truncation*, not a clean
+/// close: the reader poisons the world with the diagnosis and the
+/// blocked receive fails `Shutdown` instead of timing out.
+#[test]
+fn truncated_frame_poisons_the_receiver() {
+    let dir = temp_world_dir("truncated");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&hello(VERSION, 2, 1, wid)).unwrap();
+    // A DATA frame claiming 41 bytes of type + body, delivering 8.
+    let mut torn = Vec::new();
+    torn.extend_from_slice(&41u32.to_le_bytes());
+    torn.push(FT_DATA);
+    torn.extend_from_slice(&[0u8; 7]);
+    impostor.write_all(&torn).unwrap();
+    impostor.shutdown(Shutdown::Write).unwrap();
+
+    let mut t = rank0.join().unwrap().expect("valid HELLO assembles");
+    match t.recv(0, 1) {
+        Err(TransportError::Shutdown { reason, .. }) => {
+            assert!(reason.contains("truncated"), "got: {reason}")
+        }
+        other => panic!("expected Shutdown on truncation, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -- Dead peers -------------------------------------------------------
+
+/// A peer that completes round 0 and then crashes (dropped endpoint, no
+/// BYE, no ABORT) must surface in the lockstep vocabulary: the round-0
+/// message still delivers, the round-1 receive fails
+/// `MissingMessage` — not a raw I/O error, not a full receive-deadline
+/// stall.
+#[test]
+fn peer_death_mid_schedule_is_missing_message() {
+    let dir = temp_world_dir("dead-peer");
+    let wid = fresh_world_id();
+    let rank1 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || {
+            let mut t = SocketTransport::<i64>::uds_world(1, 2, wid, &dir, TIMEOUT)
+                .expect("rank 1 assembles");
+            t.send(0, 0, vec![7, 11]).expect("round-0 send");
+            // Dropped without close(): a crashed rank.
+        })
+    };
+    let mut t =
+        SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT).expect("rank 0 assembles");
+    assert_eq!(t.recv(0, 1).expect("round 0 delivers before the crash"), vec![7, 11]);
+    rank1.join().unwrap();
+    match t.recv(1, 1) {
+        Err(TransportError::Machine(SimError::MissingMessage {
+            round: 1,
+            expected_from: 1,
+            ..
+        })) => {}
+        other => panic!("expected MissingMessage from the dead rank, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
