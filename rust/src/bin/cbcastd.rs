@@ -8,6 +8,9 @@
 //!                  [--seed S] [--verify]
 //! cbcastd stats    (--uds PATH | --tcp ADDR)
 //! cbcastd shutdown (--uds PATH | --tcp ADDR)
+//! cbcastd rank     --dir DIR --rank R -p N [--world-id W] [--m M]
+//!                  [--root R0] [--blocks B] [--seed S] [--crash-after K]
+//!                  [--timeout-ms T] [--max-shrinks S]
 //! ```
 //!
 //! `serve` binds, then blocks until a client sends the administrative
@@ -18,13 +21,30 @@
 //! daemon's digest + statistics match bit-for-bit. Exit codes: 0 ok,
 //! 1 failure, 2 usage.
 //!
+//! `rank` is one rank of a **multi-process elastic world** — the
+//! process-granular analogue of the in-process recovery suite
+//! (`tests/recovery.rs`). Launch `p` of them against a shared `--dir`;
+//! they rendezvous over UDS (`uds_world_epoch`), broadcast a seeded
+//! payload, and print `rank R OK epoch E p P digest D`. Give exactly
+//! one of them `--crash-after K`: that process dies at round `K`
+//! **without closing its sockets** (`abort()` skips destructors), the
+//! survivors read EOF-without-BYE on their direct links, agree on the
+//! dead rank with no coordinator, rebuild a (p−1)-rank world under
+//! `--dir/epoch-1` with the epoch-stamped handshake, and rerun — so
+//! all survivors print the same digest at `epoch 1 p {p-1}`. The CI
+//! `recovery-smoke` job drives this at p = 64 with a real kill.
+//!
 //! (Hand-rolled argument parsing: the image has no network access and
 //! the vendored crate set does not include clap.)
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use circulant_bcast::comm::CommBuilder;
+use circulant_bcast::comm::{
+    CommBuilder, CrashAfter, Membership, RankComm, SocketTransport, Transport,
+};
+use circulant_bcast::schedule::Skips;
 use circulant_bcast::service::{
     serve_tcp, serve_unix, summarize, ServiceClient, ServiceConfig, ServiceReply,
 };
@@ -37,6 +57,7 @@ fn main() {
         Some("client") => cmd_client(&args[1..]),
         Some("stats") => cmd_stats(&args[1..]),
         Some("shutdown") => cmd_shutdown(&args[1..]),
+        Some("rank") => cmd_rank(&args[1..]),
         Some("help") | None => {
             print_help();
             0
@@ -51,7 +72,7 @@ fn main() {
 
 fn print_help() {
     println!("cbcastd — long-lived collective service daemon (circulant schedules, Träff 2024)");
-    println!("commands: serve, client, stats, shutdown, help");
+    println!("commands: serve, client, stats, shutdown, rank, help");
     println!("see the header of rust/src/bin/cbcastd.rs or README.md for options");
 }
 
@@ -240,6 +261,135 @@ fn cmd_shutdown(args: &[String]) -> i32 {
         Err(e) => {
             eprintln!("shutdown failed: {e}");
             1
+        }
+    }
+}
+
+/// FNV-1a over the payload bytes — a cheap digest every survivor can
+/// print so the smoke harness checks bit-identity with `sort -u`.
+fn fnv1a(data: &[i64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn cmd_rank(args: &[String]) -> i32 {
+    let Some(dir) = opt(args, "--dir") else {
+        eprintln!("need --dir DIR (shared rendezvous directory)");
+        return 2;
+    };
+    let Some(my_rank) = opt(args, "--rank").and_then(|v| v.parse::<usize>().ok()) else {
+        eprintln!("need --rank R");
+        return 2;
+    };
+    let p = opt_usize(args, "-p", 0);
+    if p == 0 || my_rank >= p {
+        eprintln!("need -p N with 0 <= rank < N (got rank {my_rank}, p {p})");
+        return 2;
+    }
+    let world_id = opt_u64(args, "--world-id", 1);
+    let m = opt_usize(args, "--m", 4096);
+    let mut root_g = opt_usize(args, "--root", 0);
+    let blocks = opt_usize(args, "--blocks", 8);
+    let crash_after = opt(args, "--crash-after").and_then(|v| v.parse::<usize>().ok());
+    let timeout = Duration::from_millis(opt_u64(args, "--timeout-ms", 10_000));
+    let max_shrinks = opt_usize(args, "--max-shrinks", 2);
+    let seed = opt_u64(args, "--seed", 1);
+    if root_g >= p {
+        eprintln!("--root {root_g} out of range for p = {p}");
+        return 2;
+    }
+
+    // Every process derives the payload from the shared seed, so the
+    // root of *any* epoch can serve it and survivors can restart a
+    // broadcast whose original root died.
+    let data: Vec<i64> = Rng::new(seed.max(1)).vec_i64(m, -1_000_000, 1_000_000);
+    let base = Path::new(dir);
+    let mut membership = Membership::new(p);
+    let mut shrinks = 0usize;
+
+    loop {
+        let epoch = membership.epoch();
+        let pp = membership.p();
+        let Some(rd) = membership.dense(my_rank) else {
+            // Only reachable if this process was named dead by others
+            // yet lived — a split verdict the smoke must surface.
+            eprintln!("rank {my_rank}: voted out of epoch {epoch}, exiting");
+            return 1;
+        };
+        let root_d = membership.dense(root_g).expect("elected root is a member");
+        let edir = base.join(format!("epoch-{epoch}"));
+        if let Err(e) = std::fs::create_dir_all(&edir) {
+            eprintln!("rank {my_rank}: mkdir {}: {e}", edir.display());
+            return 1;
+        }
+        let tr = match SocketTransport::<i64>::uds_world_epoch(
+            rd, pp, world_id, epoch, &edir, timeout,
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("rank {my_rank}: rendezvous failed (epoch {epoch}, p {pp}): {e}");
+                return 1;
+            }
+        };
+        let rc = RankComm::new(pp, rd, Arc::new(Skips::new(pp)));
+        let mut buf = if rd == root_d { data.clone() } else { vec![0i64; data.len()] };
+
+        if let Some(k) = crash_after {
+            // This process is the designated victim: die at round `k`
+            // without saying goodbye. `abort()` skips destructors, so
+            // no BYE/ABORT frame is ever written — peers read raw EOF
+            // on their direct links, the signature of a killed process.
+            let mut dead = CrashAfter::new(tr, k);
+            let _ = rc.bcast(&mut dead, root_d, &mut buf, blocks);
+            std::process::abort();
+        }
+
+        let mut tr = tr;
+        match rc.bcast(&mut tr, root_d, &mut buf, blocks) {
+            Ok(_) => {
+                println!(
+                    "rank {my_rank} OK epoch {epoch} p {pp} digest {:016x}",
+                    fnv1a(&buf)
+                );
+                return 0;
+            }
+            Err(e) => {
+                // Let the reader threads drain the EOFs still in
+                // flight, then harvest the link-accounting detector.
+                std::thread::sleep(Duration::from_millis(500));
+                let suspects_d = tr.failed_peers();
+                drop(tr);
+                if suspects_d.is_empty() {
+                    eprintln!(
+                        "rank {my_rank}: epoch {epoch} failed with no dead peer detected: {e}"
+                    );
+                    return 1;
+                }
+                if shrinks >= max_shrinks {
+                    eprintln!(
+                        "rank {my_rank}: shrink budget ({max_shrinks}) exhausted at epoch {epoch}"
+                    );
+                    return 1;
+                }
+                shrinks += 1;
+                let suspects_g: Vec<usize> =
+                    suspects_d.iter().map(|&d| membership.global(d)).collect();
+                let (next, change) = membership.shrink(&suspects_g);
+                eprintln!(
+                    "rank {my_rank}: epoch {epoch} lost {:?}; rebuilding at p {} (epoch {})",
+                    change.failed,
+                    next.p(),
+                    next.epoch()
+                );
+                membership = next;
+                root_g = membership.elect_root(root_g);
+            }
         }
     }
 }

@@ -382,6 +382,19 @@ impl BackendKind {
         matches!(self, BackendKind::Spmd | BackendKind::Socket)
     }
 
+    /// True for the backends whose transports carry a failure detector
+    /// ([`crate::comm::Transport::failed_peers`]) and can therefore
+    /// drive the recovery plane ([`crate::comm::membership`]): a rank
+    /// death is *detected* (suspicion board on the threaded world,
+    /// crashed-link accounting on the wire), the survivors shrink to a
+    /// dense (p − 1)-rank world, and affected ops restart there. The
+    /// god-view simulators have no independent rank processes to lose,
+    /// and the loopback replay has no detector — on those a failure
+    /// stays terminal.
+    pub fn supports_recovery(self) -> bool {
+        matches!(self, BackendKind::Spmd | BackendKind::Socket)
+    }
+
     /// Which transport this backend's rank-plane fan-outs drive
     /// (meaningful when [`BackendKind::is_rank_plane`]).
     pub(crate) fn rank_plane_transport(self) -> TransportKind {

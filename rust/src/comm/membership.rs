@@ -1,0 +1,697 @@
+//! The recovery plane: elastic membership over the rank-plane worlds.
+//!
+//! The paper's headline property — every rank computes its own O(log p)
+//! schedule rows independently, with **no communication** — is exactly
+//! what makes membership *shrink* cheap: when a rank dies, each survivor
+//! rebuilds its (p−1)-world rows locally in microseconds
+//! ([`super::rank::RankComm::shrink`]); nothing is redistributed, no
+//! coordinator holds schedule state. This module supplies the pieces
+//! around that observation:
+//!
+//! * [`Membership`] — the epoch-stamped survivor set. Ranks keep two
+//!   identities: the **global** id they were born with in the original
+//!   (epoch-0) world, and the **dense** rank `0..p′` they occupy in the
+//!   current epoch's world (the circulant schedules need dense ranks).
+//!   A [`Membership::shrink`] bumps the epoch and yields the
+//!   [`MembershipChange`] receipt that also rides on
+//!   [`CommError::MembershipChanged`].
+//! * **Failure detection without a coordinator.** Survivors learn who
+//!   died from their transports ([`Transport::failed_peers`]):
+//!   [`ThreadTransport`] keeps a world-shared suspicion board fed by
+//!   wait-chain-walking timeout accusations, and
+//!   [`super::socket::SocketTransport`] marks peers whose link hit
+//!   EOF/error without a deliberate BYE/ABORT — and because the wire
+//!   mesh is full, *every* survivor observes a dead peer's EOF on its
+//!   own direct link, so the survivors' failed sets agree without any
+//!   exchange. Detection is completed by the existing poison/ABORT
+//!   storm: one survivor noticing is enough to wake all of them.
+//! * [`CrashAfter`] — the fault injector: a [`Transport`] wrapper whose
+//!   endpoint dies at a chosen round and, crucially, **does not close**
+//!   the inner endpoint, so the world sees a genuine crash signature
+//!   (silence in-process; EOF-without-BYE on the wire), not a polite
+//!   departure.
+//! * [`elastic_bcast`] — the god-view shrink-and-recover driver used by
+//!   the recovery suite: run a broadcast, harvest suspects on failure,
+//!   [`Membership::shrink`], re-elect the root if it died (lowest
+//!   surviving global rank), and restart on the smaller world until the
+//!   run completes or the shrink budget is exhausted
+//!   ([`CommError::MembershipChanged`]). Because each epoch restarts
+//!   the collective from its root's payload, the surviving world's
+//!   result is **bit-identical to a fresh run at the shrunken size** —
+//!   the recovery guarantee the tests pin.
+//!
+//! The multi-process analogue (one OS process per rank, real kills)
+//! lives in the `cbcastd rank` subcommand and the CI `recovery-smoke`
+//! job; the daemon's batch-granular recovery lives in
+//! [`crate::service`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::collectives::common::Element;
+use crate::schedule::Skips;
+use crate::sim::network::SimError;
+
+use super::outcome::CommError;
+use super::rank::{RankComm, TransportKind};
+use super::socket::SocketTransport;
+use super::transport::{ThreadTransport, Transport, TransportError};
+
+/// The `reason` string a [`CrashAfter`] endpoint reports to its own
+/// caller when it dies. Only the victim ever sees it — survivors see
+/// the crash, not the label.
+pub const INJECTED_CRASH: &str = "injected crash: rank killed by fault plan";
+
+// ---------------------------------------------------------------------
+// Membership: the epoch-stamped survivor set
+// ---------------------------------------------------------------------
+
+/// The survivor set of one world, stamped with the epoch it belongs to.
+///
+/// `members` holds **global** (original-world) rank ids, sorted; a
+/// member's position in the list is its **dense** rank in the current
+/// epoch's world. Epoch 0 is the full original world, where dense and
+/// global coincide. Every shrink bumps the epoch — wire worlds embed
+/// the epoch in their handshake so stragglers from a dead epoch are
+/// refused at the door rather than corrupting the new world.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    epoch: u64,
+    members: Vec<usize>,
+}
+
+/// The receipt of one [`Membership::shrink`] — also the payload of
+/// [`CommError::MembershipChanged`]. All ranks are global ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipChange {
+    /// The epoch the shrink created.
+    pub epoch: u64,
+    /// Ranks removed by this shrink, sorted.
+    pub failed: Vec<usize>,
+    /// Ranks remaining after this shrink, sorted.
+    pub survivors: Vec<usize>,
+}
+
+impl Membership {
+    /// The full epoch-0 world: members `0..p`.
+    pub fn new(p: usize) -> Self {
+        assert!(p > 0, "a world needs at least one rank");
+        Membership { epoch: 0, members: (0..p).collect() }
+    }
+
+    /// Current world size (`p′`).
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.members.len()
+    }
+
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The surviving global ids, sorted (dense rank = position).
+    #[inline]
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Global id of the member at dense rank `dense`.
+    #[inline]
+    pub fn global(&self, dense: usize) -> usize {
+        self.members[dense]
+    }
+
+    /// Dense rank of global id `global`, or `None` if it is not (or no
+    /// longer) a member.
+    pub fn dense(&self, global: usize) -> Option<usize> {
+        self.members.binary_search(&global).ok()
+    }
+
+    /// Remove the listed **global** ids: the survivors keep their
+    /// relative order and are renumbered densely, the epoch advances.
+    /// Non-members in `failed` are ignored. Returns the new membership
+    /// and the change receipt. Panics if nobody would survive — a
+    /// world cannot shrink to zero ranks.
+    pub fn shrink(&self, failed: &[usize]) -> (Membership, MembershipChange) {
+        let dead: BTreeSet<usize> =
+            failed.iter().copied().filter(|g| self.dense(*g).is_some()).collect();
+        let members: Vec<usize> =
+            self.members.iter().copied().filter(|g| !dead.contains(g)).collect();
+        assert!(!members.is_empty(), "membership cannot shrink to an empty world");
+        let epoch = self.epoch + 1;
+        let change = MembershipChange {
+            epoch,
+            failed: dead.into_iter().collect(),
+            survivors: members.clone(),
+        };
+        (Membership { epoch, members }, change)
+    }
+
+    /// The root for restarted rooted ops: `preferred` (a global id) if
+    /// it survived, else the **lowest surviving global rank** — the
+    /// deterministic election every survivor computes identically with
+    /// no exchange (they agree on the member list, so they agree on its
+    /// minimum).
+    pub fn elect_root(&self, preferred: usize) -> usize {
+        if self.dense(preferred).is_some() {
+            preferred
+        } else {
+            self.members[0]
+        }
+    }
+
+    /// Remap a rank window given in the **original (global) frame** into
+    /// this membership's dense frame: the window keeps every surviving
+    /// member whose global id falls in `[base, base + len)`. Because
+    /// members are sorted, those survivors are contiguous in the dense
+    /// numbering. Returns `None` when the window lost *all* its ranks —
+    /// the op has no world left to run on.
+    pub fn remap_window(&self, base: usize, len: usize) -> Option<(usize, usize)> {
+        let base_d = self.members.iter().filter(|&&g| g < base).count();
+        let len_d = self.members.iter().filter(|&&g| g >= base && g < base + len).count();
+        if len_d == 0 {
+            None
+        } else {
+            Some((base_d, len_d))
+        }
+    }
+}
+
+/// The failed rank a detected failure names, if the error carries one:
+/// a transport [`TransportError::Timeout`] names the rank it starved
+/// waiting for, and a [`SimError::MissingMessage`] (raw or
+/// transport-wrapped) names the sender that never sent. Shutdown echoes
+/// and machine-model violations name nobody — they are consequences,
+/// not causes.
+pub fn suspect_of(e: &CommError) -> Option<usize> {
+    match e {
+        CommError::Transport(TransportError::Timeout { from, .. }) => Some(*from),
+        CommError::Transport(TransportError::Machine(SimError::MissingMessage {
+            expected_from,
+            ..
+        })) => Some(*expected_from),
+        CommError::Sim(SimError::MissingMessage { expected_from, .. }) => Some(*expected_from),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// CrashAfter: the fault injector with a real crash signature
+// ---------------------------------------------------------------------
+
+/// A [`Transport`] wrapper that kills its endpoint at a chosen round:
+/// every verb at `round >= crash_round` fails with
+/// [`TransportError::Shutdown`] (reason [`INJECTED_CRASH`]) and — the
+/// important part — [`Transport::close`] after the crash is a **no-op**
+/// that drops the inner endpoint unclosed. A dead process doesn't say
+/// goodbye: on [`ThreadTransport`] the victim simply falls silent (its
+/// peers' receives time out), and on
+/// [`super::socket::SocketTransport`] the unclosed drop slams the
+/// sockets shut so every peer reads EOF without a BYE/ABORT — the exact
+/// signature of a killed process, which is what the survivors'
+/// [`Transport::failed_peers`] detectors key on. The victim's own
+/// error return must never feed detection (a real corpse reports
+/// nothing); only the survivors' observations count.
+pub struct CrashAfter<Tr> {
+    inner: Tr,
+    crash_round: usize,
+    crashed: bool,
+}
+
+impl<Tr> CrashAfter<Tr> {
+    /// Wrap `inner`; it dies at the first verb tagged `crash_round` or
+    /// later (`0` = before it ever communicates).
+    pub fn new(inner: Tr, crash_round: usize) -> Self {
+        CrashAfter { inner, crash_round, crashed: false }
+    }
+
+    /// Has the injected crash fired yet?
+    pub fn crashed(&self) -> bool {
+        self.crashed
+    }
+}
+
+impl<Tr> CrashAfter<Tr> {
+    fn die<T>(&mut self, round: usize) -> TransportError
+    where
+        Tr: Transport<T>,
+    {
+        self.crashed = true;
+        TransportError::Shutdown {
+            rank: self.inner.rank(),
+            round,
+            reason: INJECTED_CRASH.to_string(),
+        }
+    }
+}
+
+impl<T, Tr: Transport<T>> Transport<T> for CrashAfter<Tr> {
+    fn p(&self) -> usize {
+        self.inner.p()
+    }
+
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn send(&mut self, round: usize, peer: usize, data: Vec<T>) -> Result<(), TransportError> {
+        if self.crashed || round >= self.crash_round {
+            return Err(self.die(round));
+        }
+        self.inner.send(round, peer, data)
+    }
+
+    fn flush(&mut self, round: usize) -> Result<(), TransportError> {
+        if self.crashed || round >= self.crash_round {
+            return Err(self.die(round));
+        }
+        self.inner.flush(round)
+    }
+
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
+        if self.crashed || round >= self.crash_round {
+            return Err(self.die(round));
+        }
+        self.inner.recv(round, peer)
+    }
+
+    fn failed_peers(&self) -> Vec<usize> {
+        self.inner.failed_peers()
+    }
+
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
+        if self.crashed {
+            // The corpse sends nothing — no BYE, no ABORT. Dropping the
+            // inner endpoint unclosed produces the crash signature the
+            // survivors' detectors look for.
+            return Ok(());
+        }
+        self.inner.close(error)
+    }
+}
+
+/// Which ranks to kill, and when: `(epoch, global rank, crash round)`
+/// triples consumed by [`elastic_bcast`]. Entries for ranks already
+/// dead in the given epoch are ignored.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    crashes: Vec<(u64, usize, usize)>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — [`elastic_bcast`] then degenerates to
+    /// a plain fan-out run).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Kill global rank `global` at transport round `round` of epoch
+    /// `epoch` (builder-style).
+    pub fn crash(mut self, epoch: u64, global: usize, round: usize) -> Self {
+        self.crashes.push((epoch, global, round));
+        self
+    }
+
+    /// The victims of `epoch`, as `(global, crash_round)`.
+    fn at(&self, epoch: u64) -> Vec<(usize, usize)> {
+        self.crashes
+            .iter()
+            .filter(|(e, _, _)| *e == epoch)
+            .map(|&(_, g, r)| (g, r))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The elastic driver: run, detect, shrink, restart
+// ---------------------------------------------------------------------
+
+/// The outcome of an [`elastic_bcast`]: how the world ended up, every
+/// shrink it took to get there, and the survivors' payloads.
+#[derive(Debug)]
+pub struct ElasticReport<T> {
+    /// The final (surviving) membership.
+    pub membership: Membership,
+    /// One receipt per shrink, in order (empty = no failures).
+    pub changes: Vec<MembershipChange>,
+    /// The global rank that served as root in the successful epoch
+    /// (the original root unless it died — then the lowest survivor).
+    pub root: usize,
+    /// `(global rank, payload)` per survivor, in global-rank order.
+    /// Restarted epochs rerun the collective from scratch on the
+    /// shrunken world, so these are bit-identical to a fresh run at
+    /// the final size.
+    pub buffers: Vec<(usize, Vec<T>)>,
+}
+
+/// One rank's observation of one epoch, as harvested by the driver.
+struct Obs<T> {
+    /// The rank's result payload (`Some` iff its collective returned Ok).
+    buf: Option<Vec<T>>,
+    /// The rank's detector output ([`Transport::failed_peers`]), dense.
+    harvest: Vec<usize>,
+    /// The rank's error, if any.
+    err: Option<CommError>,
+    /// Was this rank a planned victim? Victims' reports are discarded —
+    /// a real corpse reports nothing.
+    victim: bool,
+}
+
+/// How long survivors wait after an error before harvesting their
+/// detectors — lets socket reader threads drain the EOFs/ABORTs still
+/// in flight. In-process boards are updated synchronously, so this only
+/// pads the wire case.
+const SETTLE: Duration = Duration::from_millis(150);
+
+/// Run one epoch's broadcast over a concrete transport world, injecting
+/// the planned crashes, and collect every rank's observation. Never
+/// fails as a whole — per-rank errors ride inside the observations so
+/// the driver sees all of them.
+fn run_epoch<T, Tr>(
+    world: Vec<Tr>,
+    root_d: usize,
+    data: &[T],
+    blocks: usize,
+    victims: &BTreeMap<usize, usize>,
+) -> Vec<Obs<T>>
+where
+    T: Element,
+    Tr: Transport<T>,
+{
+    let pp = world.len();
+    let sk = Arc::new(Skips::new(pp));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(r, tr)| {
+                let sk = sk.clone();
+                s.spawn(move || {
+                    let rc = RankComm::new(pp, r, sk);
+                    let mut buf = if r == root_d {
+                        data.to_vec()
+                    } else {
+                        vec![T::default(); data.len()]
+                    };
+                    if let Some(&cr) = victims.get(&r) {
+                        let mut dead = CrashAfter::new(tr, cr);
+                        let err = rc.bcast(&mut dead, root_d, &mut buf, blocks).err();
+                        // `dead` drops here WITHOUT closing the inner
+                        // endpoint — the crash signature.
+                        Obs { buf: None, harvest: Vec::new(), err, victim: true }
+                    } else {
+                        let mut tr = tr;
+                        let res = rc.bcast(&mut tr, root_d, &mut buf, blocks);
+                        let (buf, err) = match res {
+                            Ok(_) => (Some(buf), None),
+                            Err(e) => (None, Some(e)),
+                        };
+                        if err.is_some() {
+                            std::thread::sleep(SETTLE);
+                        }
+                        let harvest = tr.failed_peers();
+                        Obs { buf, harvest, err, victim: false }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("elastic rank thread panicked"))
+            .collect()
+    })
+}
+
+/// Shrink-and-recover broadcast: the god-view elastic driver.
+///
+/// Starts at the full `p`-rank world and repeats — run the broadcast
+/// (injecting `plan`'s crashes for the current epoch), and on failure
+/// harvest the survivors' failure detectors, [`Membership::shrink`] by
+/// their union, re-elect the root if it died (lowest surviving global
+/// rank takes over and serves `data`), and restart on the rebuilt
+/// world — until an epoch completes cleanly or `max_shrinks` is
+/// exhausted ([`CommError::MembershipChanged`] with the last change's
+/// receipt). Failures nobody can attribute to a dead rank (genuine
+/// schedule violations, misuse) stay terminal and are returned as-is.
+///
+/// Supported on [`TransportKind::Threads`] and
+/// [`TransportKind::Socket`] — the two worlds with failure detectors.
+/// `timeout` is the per-world receive deadline (keep it well above the
+/// scheduler noise of the host; it bounds how long detection takes).
+#[allow(clippy::too_many_arguments)]
+pub fn elastic_bcast<T: Element>(
+    p: usize,
+    root: usize,
+    data: &[T],
+    blocks: usize,
+    kind: TransportKind,
+    plan: &FaultPlan,
+    max_shrinks: usize,
+    timeout: Duration,
+) -> Result<ElasticReport<T>, CommError> {
+    assert!(p > 0, "a world needs at least one rank");
+    assert!(root < p, "root {root} out of range for p = {p}");
+    let mut membership = Membership::new(p);
+    let mut changes: Vec<MembershipChange> = Vec::new();
+    let mut root_g = root;
+
+    loop {
+        let pp = membership.p();
+        let root_d = membership
+            .dense(root_g)
+            .expect("elected root is always a member");
+        // The current epoch's victims, in the dense frame.
+        let victims: BTreeMap<usize, usize> = plan
+            .at(membership.epoch())
+            .into_iter()
+            .filter_map(|(g, r)| membership.dense(g).map(|d| (d, r)))
+            .collect();
+
+        let obs: Vec<Obs<T>> = match kind {
+            TransportKind::Threads => run_epoch(
+                ThreadTransport::<T>::world_with_timeout(pp, timeout),
+                root_d,
+                data,
+                blocks,
+                &victims,
+            ),
+            TransportKind::Socket => run_epoch(
+                SocketTransport::<T>::pair_world_with_timeout(pp, timeout).map_err(|e| {
+                    CommError::BadRequest(format!("socket world (p = {pp}): {e}"))
+                })?,
+                root_d,
+                data,
+                blocks,
+                &victims,
+            ),
+            TransportKind::Loopback => {
+                return Err(CommError::BadRequest(
+                    "elastic recovery needs a failure detector; the loopback replay \
+                     has none (use Threads or Socket)"
+                        .to_string(),
+                ))
+            }
+        };
+
+        // Detection: the union of the *survivors'* detector outputs.
+        // Victims' observations are discarded wholesale — a dead rank
+        // reports nothing. Only if no detector fired do we fall back to
+        // what the survivor errors themselves name (the muted-rank
+        // case: a peer that is silent but never closed a socket).
+        let mut suspects_d: BTreeSet<usize> = BTreeSet::new();
+        for o in obs.iter().filter(|o| !o.victim) {
+            suspects_d.extend(o.harvest.iter().copied());
+        }
+        if suspects_d.is_empty() {
+            for o in obs.iter().filter(|o| !o.victim) {
+                if let Some(e) = &o.err {
+                    suspects_d.extend(suspect_of(e));
+                }
+            }
+        }
+        let errored = obs.iter().any(|o| !o.victim && o.err.is_some());
+
+        if !errored && suspects_d.is_empty() {
+            // Clean epoch: assemble the survivor payloads.
+            let buffers = obs
+                .into_iter()
+                .enumerate()
+                .filter(|(_, o)| !o.victim)
+                .map(|(d, o)| {
+                    (membership.global(d), o.buf.expect("clean epoch has every payload"))
+                })
+                .collect();
+            return Ok(ElasticReport { membership, changes, root: root_g, buffers });
+        }
+
+        if suspects_d.is_empty() {
+            // Errors nobody attributes to a death: terminal. Surface the
+            // most informative one (reuse the rank plane's triage).
+            let errs: Vec<Result<(), CommError>> = obs
+                .into_iter()
+                .filter(|o| !o.victim)
+                .filter_map(|o| o.err.map(Err))
+                .collect();
+            return Err(super::rank::collect_ranks(errs)
+                .expect_err("at least one rank errored"));
+        }
+
+        // A shrink is due. Out of budget → typed membership error.
+        let suspects_g: Vec<usize> =
+            suspects_d.iter().map(|&d| membership.global(d)).collect();
+        if changes.len() >= max_shrinks {
+            let (_, change) = membership.shrink(&suspects_g);
+            return Err(CommError::MembershipChanged {
+                epoch: change.epoch,
+                failed: change.failed,
+                survivors: change.survivors,
+            });
+        }
+        let (next, change) = membership.shrink(&suspects_g);
+        membership = next;
+        root_g = membership.elect_root(root_g);
+        changes.push(change);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership_shrink_renumbers_densely() {
+        let m = Membership::new(8);
+        assert_eq!(m.p(), 8);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.dense(5), Some(5));
+        let (m1, change) = m.shrink(&[3, 6]);
+        assert_eq!(m1.p(), 6);
+        assert_eq!(m1.epoch(), 1);
+        assert_eq!(change.epoch, 1);
+        assert_eq!(change.failed, vec![3, 6]);
+        assert_eq!(change.survivors, vec![0, 1, 2, 4, 5, 7]);
+        assert_eq!(m1.dense(3), None);
+        assert_eq!(m1.dense(4), Some(3));
+        assert_eq!(m1.dense(7), Some(5));
+        assert_eq!(m1.global(5), 7);
+        // A second shrink composes: global ids are stable across epochs.
+        let (m2, c2) = m1.shrink(&[0, 3]); // 3 already dead: ignored
+        assert_eq!(c2.failed, vec![0]);
+        assert_eq!(m2.p(), 5);
+        assert_eq!(m2.epoch(), 2);
+        assert_eq!(m2.members(), &[1, 2, 4, 5, 7]);
+    }
+
+    #[test]
+    fn root_election_prefers_the_incumbent() {
+        let (m, _) = Membership::new(8).shrink(&[0, 2]);
+        assert_eq!(m.elect_root(5), 5, "a surviving root keeps the job");
+        assert_eq!(m.elect_root(2), 1, "a dead root is replaced by the lowest survivor");
+        assert_eq!(m.elect_root(0), 1);
+    }
+
+    #[test]
+    fn window_remap_keeps_surviving_contiguity() {
+        let (m, _) = Membership::new(10).shrink(&[4, 7]);
+        // Window [4, 8) in the global frame loses 4 and 7, keeps 5, 6.
+        assert_eq!(m.remap_window(4, 4), Some((4, 2)));
+        // Window [0, 4) is untouched and stays where it was.
+        assert_eq!(m.remap_window(0, 4), Some((0, 4)));
+        // Window [8, 2) shifts down by the two dead ranks below it.
+        assert_eq!(m.remap_window(8, 2), Some((6, 2)));
+        // A window that lost everyone has no world left.
+        let (m2, _) = Membership::new(4).shrink(&[2, 3]);
+        assert_eq!(m2.remap_window(2, 2), None);
+    }
+
+    #[test]
+    fn suspects_come_from_timeouts_and_missing_messages() {
+        assert_eq!(
+            suspect_of(&CommError::Transport(TransportError::Timeout {
+                rank: 0,
+                round: 3,
+                from: 5
+            })),
+            Some(5)
+        );
+        assert_eq!(
+            suspect_of(&CommError::Sim(SimError::MissingMessage {
+                round: 2,
+                rank: 1,
+                expected_from: 4
+            })),
+            Some(4)
+        );
+        assert_eq!(
+            suspect_of(&CommError::Transport(TransportError::Shutdown {
+                rank: 0,
+                round: 0,
+                reason: "echo".to_string()
+            })),
+            None,
+            "shutdown echoes accuse nobody"
+        );
+        assert_eq!(suspect_of(&CommError::BadRequest("nope".to_string())), None);
+    }
+
+    #[test]
+    fn crash_after_dies_on_schedule_and_never_says_goodbye() {
+        let mut world = ThreadTransport::<u8>::world_with_timeout(
+            2,
+            Duration::from_millis(50),
+        );
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let mut dead = CrashAfter::new(t0, 1);
+        dead.send(0, 1, vec![7]).unwrap();
+        dead.flush(0).unwrap();
+        assert!(!dead.crashed());
+        match dead.flush(1) {
+            Err(TransportError::Shutdown { rank: 0, round: 1, reason }) => {
+                assert_eq!(reason, INJECTED_CRASH)
+            }
+            other => panic!("expected the injected crash, got {other:?}"),
+        }
+        assert!(dead.crashed());
+        // Post-crash close is swallowed: the world is NOT poisoned by a
+        // polite ABORT — the victim simply falls silent...
+        dead.close(Some("should never reach the world")).unwrap();
+        drop(dead);
+        // ...so the survivor's receive times out (and accuses rank 0)
+        // instead of seeing a shutdown echo.
+        let mut t1 = t1;
+        assert_eq!(t1.recv(0, 0).ok(), Some(vec![7]), "pre-crash sends delivered");
+        t1.flush(0).unwrap();
+        t1.flush(1).unwrap();
+        assert!(matches!(
+            t1.recv(1, 0),
+            Err(TransportError::Timeout { rank: 1, round: 1, from: 0 })
+        ));
+        assert_eq!(t1.failed_peers(), vec![0]);
+    }
+
+    #[test]
+    fn elastic_bcast_without_faults_is_a_plain_run() {
+        let data: Vec<i64> = (0..40).map(|i| i * 11 - 3).collect();
+        let report = elastic_bcast(
+            8,
+            0,
+            &data,
+            4,
+            TransportKind::Threads,
+            &FaultPlan::none(),
+            2,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(report.changes.is_empty());
+        assert_eq!(report.membership.p(), 8);
+        assert_eq!(report.root, 0);
+        assert_eq!(report.buffers.len(), 8);
+        for (g, buf) in &report.buffers {
+            assert_eq!(buf, &data, "rank {g}");
+        }
+    }
+}

@@ -76,6 +76,25 @@
 //! [`crate::service`] builds a long-lived collective daemon over the
 //! same framing. See [`socket`].
 //!
+//! ## The recovery plane
+//!
+//! When a rank **dies** mid-collective the world no longer terminates
+//! the computation: the surviving transports detect the crash
+//! ([`Transport::failed_peers`] — a wait-chain-walking suspicion board
+//! on [`ThreadTransport`], EOF-without-farewell link accounting on
+//! [`SocketTransport`]), the survivors agree on the shrunken rank set
+//! with **no coordinator** (the detectors are world-shared /
+//! full-mesh-symmetric by construction), and an epoch-stamped
+//! [`Membership`] renumbers them densely so each survivor rebuilds its
+//! O(log p) schedule rows locally — the paper's communication-free
+//! schedule computation is exactly what makes the shrink cheap.
+//! Affected operations restart on the rebuilt world (a dead root is
+//! replaced by the lowest surviving rank) and the event surfaces as
+//! [`CommError::MembershipChanged`]. See [`membership`] for the
+//! elastic driver, [`CrashAfter`] fault injection, and the recovery
+//! guarantee pinned by `tests/recovery.rs`: the surviving world's
+//! payloads are bit-identical to a fresh run at the shrunken size.
+//!
 //! ## The traffic plane
 //!
 //! Beyond one blocking collective at a time, a communicator serves
@@ -92,6 +111,7 @@
 
 pub mod backend;
 pub mod communicator;
+pub mod membership;
 pub mod nonblocking;
 pub mod outcome;
 pub mod rank;
@@ -103,6 +123,10 @@ pub mod transport;
 pub use backend::{
     build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, SocketBackend,
     SpmdBackend, ThreadedBackend,
+};
+pub use membership::{
+    elastic_bcast, suspect_of, CrashAfter, ElasticReport, FaultPlan, Membership,
+    MembershipChange,
 };
 pub use rank::{RankComm, RankRun, TransportKind};
 pub use socket::{fresh_world_id, SocketTransport};

@@ -75,6 +75,12 @@ pub struct TenantUsage {
     /// Requests refused at admission (queue saturated) — folded in by
     /// the daemon, not the engine.
     pub rejected: usize,
+    /// Operations that were disrupted by a membership change (a rank
+    /// died in the daemon's world) and re-admitted onto the rebuilt,
+    /// shrunken communicator — folded in by the daemon's recovery path,
+    /// not the engine. A restarted op is billed here *and* in
+    /// [`TenantUsage::ops`] when it eventually runs.
+    pub restarted: usize,
 }
 
 /// Unified error type of the `comm` layer.
@@ -93,6 +99,16 @@ pub enum CommError {
     /// [`SimError`] vocabulary as [`CommError::Sim`]), a round-discipline
     /// misuse, a shutdown echo, or a timeout.
     Transport(TransportError),
+    /// Ranks died and the world **shrank** instead of terminating: the
+    /// recovery plane ([`crate::comm::membership`]) detected the listed
+    /// `failed` ranks, the `survivors` rebuilt a smaller world under the
+    /// new `epoch`, but the requested operation could not be completed
+    /// within its shrink budget (or vanished with the failures, e.g. a
+    /// window whose every rank died). Unlike every other variant this is
+    /// not a terminal machine fault — the caller can retry on the
+    /// survivors' world. All ranks are **original-world** (epoch-0
+    /// global) ids.
+    MembershipChanged { epoch: u64, failed: Vec<usize>, survivors: Vec<usize> },
 }
 
 impl std::fmt::Display for CommError {
@@ -107,6 +123,12 @@ impl std::fmt::Display for CommError {
                 write!(f, "{kind:?}: rank {rank} finished incomplete (missing blocks)")
             }
             CommError::Transport(e) => write!(f, "rank-plane transport failure: {e}"),
+            CommError::MembershipChanged { epoch, failed, survivors } => write!(
+                f,
+                "membership changed (epoch {epoch}): ranks {failed:?} failed, \
+                 {} survivors remain",
+                survivors.len()
+            ),
         }
     }
 }

@@ -131,6 +131,33 @@ impl RankComm {
         Self::new(p, rank, Arc::new(Skips::new(p)))
     }
 
+    /// Rebuild this handle for the **survivor world** after the listed
+    /// ranks (dense ranks of *this* world) died: survivors are
+    /// renumbered densely in rank order and the new handle derives a
+    /// fresh `Skips` for `p − |failed|` — O(log p′) per rank,
+    /// communication-free, which is exactly why the paper's schedules
+    /// make membership shrink cheap (every survivor rebuilds locally;
+    /// nobody redistributes schedule state). Returns `None` when this
+    /// rank is itself among the failed or nobody survives; duplicate
+    /// and out-of-range entries in `failed` are ignored. The epoch
+    /// bookkeeping lives one layer up in
+    /// [`super::membership::Membership`] — this is the per-rank
+    /// renumbering it prescribes.
+    pub fn shrink(&self, failed: &[usize]) -> Option<RankComm> {
+        let mut dead = vec![false; self.p];
+        for &f in failed {
+            if f < self.p {
+                dead[f] = true;
+            }
+        }
+        if dead[self.rank] {
+            return None;
+        }
+        let new_p = dead.iter().filter(|&&d| !d).count();
+        let dead_below = dead[..self.rank].iter().filter(|&&d| d).count();
+        Some(RankComm::new(new_p, self.rank - dead_below, Arc::new(Skips::new(new_p))))
+    }
+
     #[inline]
     pub fn p(&self) -> usize {
         self.p

@@ -22,7 +22,7 @@
 //! [ len: u32 ][ type: u8 ][ body: len - 1 bytes ]
 //!
 //! HELLO (1)  magic u32, version u16, p u32, rank u32,
-//!            world_id u64, elem_bytes u32
+//!            world_id u64, elem_bytes u32, epoch u64
 //! DATA  (2)  round u32, src u32, dst u32, count u32,
 //!            payload: count * elem_bytes bytes
 //! BYE   (3)  (empty) — clean close of the sender's write side
@@ -32,11 +32,28 @@
 //! # Handshake
 //!
 //! The first frame on every link is a versioned `HELLO` pinning
-//! `(p, rank, world_id, elem_bytes)`. A mismatch — wrong world, wrong
-//! protocol version, wrong element width — is a typed failure: at
-//! rendezvous time it is an [`io::Error`] from the constructor; after
-//! assembly the link's reader poisons the local world and every
-//! blocked verb fails with [`TransportError::Shutdown`].
+//! `(p, rank, world_id, elem_bytes, epoch)`. A mismatch — wrong world,
+//! wrong protocol version, wrong element width, wrong membership
+//! epoch — is a typed failure: at rendezvous time it is an
+//! [`io::Error`] from the constructor; after assembly the link's
+//! reader poisons the local world and every blocked verb fails with
+//! [`TransportError::Shutdown`]. The epoch field (v2) lets the
+//! recovery plane rebuild a shrunken world under `epoch + 1` and have
+//! stragglers from the dead epoch refused at the door instead of
+//! corrupting the new world.
+//!
+//! # Crash detection
+//!
+//! Every link terminates exactly one of two ways, and the reader keeps
+//! the distinction: a **deliberate** departure announces itself (`BYE`
+//! on clean completion, `ABORT` on failure) before the socket closes,
+//! while a **crash** — the process died, the endpoint was dropped
+//! without [`Transport::close`] — slams the socket shut with no
+//! farewell frame (plain EOF) or mid-frame (truncation / reset).
+//! [`Transport::failed_peers`] reports the peers whose links died the
+//! second way. Because the mesh is full, every survivor observes a
+//! dead peer's EOF on its *own* direct link — the survivors' failed
+//! sets agree without any coordinator or extra exchange.
 //!
 //! # Failure mapping
 //!
@@ -82,7 +99,8 @@ use crate::sim::network::SimError;
 /// Wire protocol magic ("CBW1") — first field of every `HELLO`.
 pub(crate) const MAGIC: u32 = 0x4342_5731;
 /// Wire protocol version; bumped on any frame-format change.
-pub(crate) const VERSION: u16 = 1;
+/// v2 appended the membership `epoch` field to `HELLO`.
+pub(crate) const VERSION: u16 = 2;
 /// Sanity bound on a single frame (256 MiB) — anything larger is a
 /// corrupt length prefix, not a payload.
 pub(crate) const MAX_FRAME: usize = 1 << 28;
@@ -392,6 +410,7 @@ struct Hello {
     rank: u32,
     world_id: u64,
     elem_bytes: u32,
+    epoch: u64,
 }
 
 enum Frame {
@@ -401,14 +420,15 @@ enum Frame {
     Abort(String),
 }
 
-fn hello_frame(p: usize, rank: usize, world_id: u64, elem_bytes: usize) -> Vec<u8> {
-    let mut body = Vec::with_capacity(26);
+fn hello_frame(p: usize, rank: usize, world_id: u64, elem_bytes: usize, epoch: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(34);
     put_u32(&mut body, MAGIC);
     put_u16(&mut body, VERSION);
     put_u32(&mut body, p as u32);
     put_u32(&mut body, rank as u32);
     put_u64(&mut body, world_id);
     put_u32(&mut body, elem_bytes as u32);
+    put_u64(&mut body, epoch);
     seal(FT_HELLO, &body)
 }
 
@@ -424,14 +444,17 @@ fn data_frame<T>(codec: &Codec<T>, round: usize, src: usize, dst: usize, data: &
 
 fn parse_hello(body: &[u8]) -> io::Result<Hello> {
     let mut b = Body::new(body);
-    Ok(Hello {
-        magic: b.u32()?,
-        version: b.u16()?,
-        p: b.u32()?,
-        rank: b.u32()?,
-        world_id: b.u64()?,
-        elem_bytes: b.u32()?,
-    })
+    let magic = b.u32()?;
+    let version = b.u16()?;
+    let p = b.u32()?;
+    let rank = b.u32()?;
+    let world_id = b.u64()?;
+    let elem_bytes = b.u32()?;
+    // The epoch field arrived in v2; tolerate its absence here so a
+    // v1 peer fails `vet_hello`'s version check with the useful
+    // diagnosis instead of a bare short-body parse error.
+    let epoch = if version >= 2 { b.u64()? } else { 0 };
+    Ok(Hello { magic, version, p, rank, world_id, elem_bytes, epoch })
 }
 
 fn parse_frame(kind: u8, body: Vec<u8>) -> io::Result<Frame> {
@@ -454,7 +477,13 @@ fn parse_frame(kind: u8, body: Vec<u8>) -> io::Result<Frame> {
 
 /// Validate a peer's `HELLO` against this world; returns the peer's
 /// claimed rank.
-fn vet_hello(h: &Hello, p: usize, world_id: u64, elem_bytes: usize) -> Result<usize, String> {
+fn vet_hello(
+    h: &Hello,
+    p: usize,
+    world_id: u64,
+    elem_bytes: usize,
+    epoch: u64,
+) -> Result<usize, String> {
     if h.magic != MAGIC {
         return Err(format!("handshake: bad magic {:#010x}", h.magic));
     }
@@ -479,6 +508,13 @@ fn vet_hello(h: &Hello, p: usize, world_id: u64, elem_bytes: usize) -> Result<us
             h.elem_bytes
         ));
     }
+    if h.epoch != epoch {
+        return Err(format!(
+            "handshake: membership epoch {} (this world is epoch {epoch}) — \
+             a straggler from a pre-shrink world",
+            h.epoch
+        ));
+    }
     if h.rank as usize >= p {
         return Err(format!("handshake: rank {} out of range for p = {p}", h.rank));
     }
@@ -496,6 +532,12 @@ struct SockState<T> {
     /// `gone[r]`: rank `r`'s link reached EOF or said `BYE` — nothing
     /// further will ever arrive from it.
     gone: Vec<bool>,
+    /// `crashed[r]`: rank `r`'s link died *without* a deliberate
+    /// farewell (`BYE`/`ABORT`) — EOF out of nowhere, truncation, or a
+    /// reset: the signature of a killed process, as opposed to a rank
+    /// that finished or failed politely. Feeds
+    /// [`Transport::failed_peers`].
+    crashed: Vec<bool>,
     poisoned: Option<String>,
 }
 
@@ -515,9 +557,14 @@ impl<T> SockShared<T> {
         self.cv.notify_all();
     }
 
-    fn mark_gone(&self, peer: usize) {
+    /// `crashed` records whether the link died without a deliberate
+    /// `BYE`/`ABORT` first — the crash signature.
+    fn mark_gone(&self, peer: usize, crashed: bool) {
         let mut st = self.state.lock().unwrap();
         st.gone[peer] = true;
+        if crashed {
+            st.crashed[peer] = true;
+        }
         drop(st);
         self.cv.notify_all();
     }
@@ -529,6 +576,7 @@ struct ReaderCtx<T> {
     me: usize,
     p: usize,
     world_id: u64,
+    epoch: u64,
     peer: usize,
     /// The link's first frame must be a valid `HELLO` (false when the
     /// rendezvous already validated it synchronously).
@@ -539,14 +587,22 @@ struct ReaderCtx<T> {
 /// mailbox under the same round-tag matching as `ThreadTransport`'s
 /// mailboxes. After a poison it keeps draining (and discarding) so a
 /// remote sender's `write_all` never blocks on a full socket buffer.
+///
+/// The reader also runs the crash detector: a link that terminates
+/// without the peer having announced its departure first (`BYE` on
+/// clean completion, `ABORT` on failure) is marked **crashed** — a
+/// killed process never says goodbye, a deliberate one always does.
 fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
+    // Has the peer announced its departure (BYE or ABORT)? Link death
+    // after an announcement is expected teardown; before one, a crash.
+    let mut deliberate = false;
     loop {
         let frame = match read_raw_frame(&mut rx) {
-            // Clean EOF at a frame boundary: the peer is gone (a peer
-            // that *finished* says BYE first; either way nothing more
-            // will arrive on this link).
+            // EOF at a frame boundary: the peer is gone. Without a
+            // prior BYE/ABORT this is the crash signature — a dropped
+            // endpoint slams the socket with no farewell frame.
             Ok(None) => {
-                ctx.shared.mark_gone(ctx.peer);
+                ctx.shared.mark_gone(ctx.peer, !deliberate);
                 return;
             }
             Ok(Some((kind, body))) => match parse_frame(kind, body) {
@@ -559,12 +615,12 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
                 ctx.shared
                     .poison(&format!("wire: truncated frame from rank {}", ctx.peer));
-                ctx.shared.mark_gone(ctx.peer);
+                ctx.shared.mark_gone(ctx.peer, !deliberate);
                 return;
             }
             // Reset / broken pipe etc.: the link is dead.
             Err(_) => {
-                ctx.shared.mark_gone(ctx.peer);
+                ctx.shared.mark_gone(ctx.peer, !deliberate);
                 return;
             }
         };
@@ -574,7 +630,7 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
                     ctx.shared
                         .poison(&format!("wire: duplicate HELLO from rank {}", ctx.peer));
                 } else {
-                    match vet_hello(&h, ctx.p, ctx.world_id, ctx.codec.elem_bytes) {
+                    match vet_hello(&h, ctx.p, ctx.world_id, ctx.codec.elem_bytes, ctx.epoch) {
                         Ok(r) if r == ctx.peer => ctx.expect_hello = false,
                         Ok(r) => ctx.shared.poison(&format!(
                             "wire: link to rank {} answered as rank {r}",
@@ -632,12 +688,14 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
                 }
             }
             Frame::Bye => {
-                ctx.shared.mark_gone(ctx.peer);
+                ctx.shared.mark_gone(ctx.peer, false);
                 return;
             }
             Frame::Abort(reason) => {
                 // Poison propagated from a failed remote rank; keep
-                // draining until its write side closes.
+                // draining until its write side closes. A failed rank
+                // that *announced* its failure did not crash.
+                deliberate = true;
                 ctx.shared.poison(&reason);
             }
         }
@@ -667,6 +725,7 @@ pub fn fresh_world_id() -> u64 {
 pub struct SocketTransport<T> {
     rank: usize,
     p: usize,
+    epoch: u64,
     links: Vec<Option<Stream>>,
     shared: Arc<SockShared<T>>,
     codec: Codec<T>,
@@ -704,7 +763,7 @@ impl<T: Send + 'static> SocketTransport<T> {
         }
         rows.into_iter()
             .enumerate()
-            .map(|(rank, row)| Self::assemble(rank, p, world_id, row, timeout, true))
+            .map(|(rank, row)| Self::assemble(rank, p, world_id, 0, row, timeout, true))
             .collect()
     }
 
@@ -717,6 +776,22 @@ impl<T: Send + 'static> SocketTransport<T> {
         rank: usize,
         p: usize,
         world_id: u64,
+        dir: &Path,
+        timeout: Duration,
+    ) -> io::Result<SocketTransport<T>> {
+        Self::uds_world_epoch(rank, p, world_id, 0, dir, timeout)
+    }
+
+    /// [`SocketTransport::uds_world`] for a post-shrink world: the
+    /// recovery plane rebuilds survivors under `epoch + 1` (with a
+    /// fresh socket directory), and the epoch-stamped handshake
+    /// refuses stragglers that still think they live in the dead
+    /// epoch. `rank` and `p` are the *dense* (post-shrink) values.
+    pub fn uds_world_epoch(
+        rank: usize,
+        p: usize,
+        world_id: u64,
+        epoch: u64,
         dir: &Path,
         timeout: Duration,
     ) -> io::Result<SocketTransport<T>> {
@@ -737,6 +812,7 @@ impl<T: Send + 'static> SocketTransport<T> {
             p,
             world_id,
             codec.elem_bytes,
+            epoch,
             deadline,
             |peer| {
                 UnixStream::connect(dir.join(format!("rank-{peer}.sock"))).map(Stream::Unix)
@@ -749,7 +825,7 @@ impl<T: Send + 'static> SocketTransport<T> {
                 })
             },
         )?;
-        Self::assemble(rank, p, world_id, row, timeout, false)
+        Self::assemble(rank, p, world_id, epoch, row, timeout, false)
     }
 
     /// This rank's endpoint of a multi-process world over TCP:
@@ -778,6 +854,7 @@ impl<T: Send + 'static> SocketTransport<T> {
             p,
             world_id,
             codec.elem_bytes,
+            0,
             deadline,
             |peer| {
                 let s = TcpStream::connect(addrs[peer])?;
@@ -793,7 +870,7 @@ impl<T: Send + 'static> SocketTransport<T> {
                 })
             },
         )?;
-        Self::assemble(rank, p, world_id, row, timeout, false)
+        Self::assemble(rank, p, world_id, 0, row, timeout, false)
     }
 
     /// Wire a resolved mesh into an endpoint: spawn one reader thread
@@ -804,6 +881,7 @@ impl<T: Send + 'static> SocketTransport<T> {
         rank: usize,
         p: usize,
         world_id: u64,
+        epoch: u64,
         row: Vec<Option<(Stream, bool)>>,
         timeout: Duration,
         send_hello: bool,
@@ -813,11 +891,12 @@ impl<T: Send + 'static> SocketTransport<T> {
             state: Mutex::new(SockState {
                 msgs: HashMap::new(),
                 gone: vec![false; p],
+                crashed: vec![false; p],
                 poisoned: None,
             }),
             cv: Condvar::new(),
         });
-        let hello = hello_frame(p, rank, world_id, codec.elem_bytes);
+        let hello = hello_frame(p, rank, world_id, codec.elem_bytes, epoch);
         let mut links: Vec<Option<Stream>> = Vec::with_capacity(p);
         for (peer, slot) in row.into_iter().enumerate() {
             let Some((mut stream, expect_hello)) = slot else {
@@ -834,6 +913,7 @@ impl<T: Send + 'static> SocketTransport<T> {
                 me: rank,
                 p,
                 world_id,
+                epoch,
                 peer,
                 expect_hello,
             };
@@ -846,6 +926,7 @@ impl<T: Send + 'static> SocketTransport<T> {
         Ok(SocketTransport {
             rank,
             p,
+            epoch,
             links,
             shared,
             codec,
@@ -853,6 +934,19 @@ impl<T: Send + 'static> SocketTransport<T> {
             disc: Discipline::default(),
             closed: false,
         })
+    }
+
+    /// The membership epoch this world was assembled under (0 for the
+    /// original, pre-shrink world).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The poison reason, if this endpoint's world has been poisoned —
+    /// lets a supervisor distinguish "this world is dead" from "this
+    /// verb failed" without issuing another verb.
+    pub fn poisoned(&self) -> Option<String> {
+        self.shared.state.lock().unwrap().poisoned.clone()
     }
 
     /// Poison the local world and broadcast `ABORT` so remote worlds
@@ -981,6 +1075,15 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
         }
     }
 
+    fn failed_peers(&self) -> Vec<usize> {
+        let st = self.shared.state.lock().unwrap();
+        st.crashed
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &c)| c.then_some(r))
+            .collect()
+    }
+
     fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
         if self.closed {
             return Ok(());
@@ -1094,11 +1197,12 @@ fn mesh_rendezvous(
     p: usize,
     world_id: u64,
     elem_bytes: usize,
+    epoch: u64,
     deadline: Instant,
     dial: impl Fn(usize) -> io::Result<Stream>,
     mut accept: impl FnMut() -> io::Result<Stream>,
 ) -> io::Result<Vec<Option<(Stream, bool)>>> {
-    let hello = hello_frame(p, rank, world_id, elem_bytes);
+    let hello = hello_frame(p, rank, world_id, elem_bytes, epoch);
     let mut row: Vec<Option<(Stream, bool)>> = (0..p).map(|_| None).collect();
     for peer in 0..rank {
         let mut s = dial_retry(deadline, || dial(peer))?;
@@ -1111,7 +1215,7 @@ fn mesh_rendezvous(
             .saturating_duration_since(Instant::now())
             .max(Duration::from_millis(1));
         s.set_read_timeout(Some(left))?;
-        let peer = read_hello_sync(&mut s, p, world_id, elem_bytes)?;
+        let peer = read_hello_sync(&mut s, p, world_id, elem_bytes, epoch)?;
         if peer <= rank || row[peer].is_some() {
             return Err(bad_data(format!(
                 "handshake: unexpected connection from rank {peer}"
@@ -1130,6 +1234,7 @@ fn read_hello_sync(
     p: usize,
     world_id: u64,
     elem_bytes: usize,
+    epoch: u64,
 ) -> io::Result<usize> {
     let Some((kind, body)) = read_raw_frame(s)? else {
         return Err(io::Error::new(
@@ -1143,7 +1248,7 @@ fn read_hello_sync(
         )));
     }
     let h = parse_hello(&body)?;
-    vet_hello(&h, p, world_id, elem_bytes).map_err(bad_data)
+    vet_hello(&h, p, world_id, elem_bytes, epoch).map_err(bad_data)
 }
 
 #[cfg(test)]
@@ -1317,6 +1422,59 @@ mod tests {
             t0.send(1, 9, vec![1]).unwrap_err(),
             TransportError::Machine(SimError::BadTarget { round: 1, rank: 0, to: 9 })
         );
+    }
+
+    #[test]
+    fn failed_peers_reports_crashes_not_departures() {
+        let mut w = world(3);
+        let t2 = w.pop().unwrap();
+        let mut t1 = w.pop().unwrap();
+        let t0 = w.pop().unwrap();
+        drop(t2); // crash signature: EOF without BYE/ABORT
+        t1.close(None).unwrap(); // deliberate: BYE first
+        thread::sleep(Duration::from_millis(100)); // let the readers drain
+        assert_eq!(t0.failed_peers(), vec![2], "only the crash is a failure");
+        assert!(t0.poisoned().is_none(), "detection alone poisons nothing");
+        assert_eq!(t0.epoch(), 0);
+    }
+
+    #[test]
+    fn announced_failure_is_not_a_crash() {
+        let mut w = world(2);
+        let mut t1 = w.pop().unwrap();
+        let t0 = w.pop().unwrap();
+        // Rank 1 fails *politely*: ABORT broadcast, then teardown.
+        t1.close(Some("rank 1 gave up")).unwrap();
+        drop(t1);
+        thread::sleep(Duration::from_millis(100));
+        assert_eq!(t0.failed_peers(), Vec::<usize>::new());
+        let reason = t0.poisoned().expect("the ABORT propagated");
+        assert!(reason.contains("gave up"), "{reason}");
+    }
+
+    #[test]
+    fn epoch_mismatch_is_refused_at_the_door() {
+        let dir = std::env::temp_dir().join(format!("cbwire-epoch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let wid = fresh_world_id();
+        let d2 = dir.clone();
+        let h = thread::spawn(move || {
+            // A straggler that still thinks it lives in epoch 0.
+            SocketTransport::<i64>::uds_world_epoch(1, 2, wid, 0, &d2, Duration::from_secs(10))
+        });
+        // The rebuilt epoch-1 world refuses it during rendezvous.
+        let err = SocketTransport::<i64>::uds_world_epoch(
+            0,
+            2,
+            wid,
+            1,
+            &dir,
+            Duration::from_secs(10),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("membership epoch"), "{err}");
+        let _ = h.join();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

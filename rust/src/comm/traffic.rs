@@ -715,6 +715,38 @@ impl BatchReport {
     pub fn tenant(&self, tenant: &str) -> Option<&TenantUsage> {
         self.tenants.iter().find(|u| u.tenant == tenant)
     }
+
+    /// Checkpoint accessor for the recovery plane: indices (submission
+    /// order) of the ops that delivered an `Ok` outcome. After a
+    /// membership change these are settled — their results were taken
+    /// from the *old* world before it died and need no replay.
+    pub fn completed_ops(&self) -> Vec<usize> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter_map(|(i, o)| o.ok.then_some(i))
+            .collect()
+    }
+
+    /// Checkpoint accessor for the recovery plane: indices (submission
+    /// order) of the ops that must be replayed on the rebuilt world
+    /// after the listed machine ranks `failed` — every op that failed
+    /// outright, plus every op (even an apparently-complete one) whose
+    /// window contains a failed rank: its result may have been
+    /// assembled from a rank that was already dying, so it is restarted
+    /// rather than trusted. Ops over windows **disjoint** from every
+    /// failed rank and finished `Ok` are untouched — the property the
+    /// mid-batch recovery test pins.
+    pub fn restart_set(&self, failed: &[usize]) -> Vec<usize> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| {
+                !o.ok || failed.iter().any(|&f| f >= o.window.base && f < o.window.end())
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
 }
 
 /// A batch of nonblocking collectives over one [`Communicator`]'s

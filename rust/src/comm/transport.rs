@@ -57,7 +57,7 @@
 //!
 //! [`close`]: Transport::close
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -68,21 +68,48 @@ use crate::sim::network::SimError;
 /// (mirrors the threaded runtime's timeout).
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Parse one `CBCAST_TRANSPORT_TIMEOUT_MS` value: a whole number of
+/// milliseconds with a **≥ 1 ms floor** (a zero deadline would make
+/// every blocking receive fail instantly, which is never what a knob
+/// typo means). Split out of [`configured_timeout`] so the rejection
+/// rules are explicit and unit-testable rather than buried in an
+/// `and_then` chain that silently swallows garbage.
+fn parse_timeout_ms(raw: &str) -> Result<Duration, String> {
+    match raw.trim().parse::<u64>() {
+        Ok(0) => Err("0 is below the 1 ms floor (the deadline must be positive)".to_string()),
+        Ok(ms) => Ok(Duration::from_millis(ms)),
+        Err(e) => Err(format!("not a whole number of milliseconds: {e}")),
+    }
+}
+
 /// The receive deadline shared by the in-process and wire transports:
-/// `CBCAST_TRANSPORT_TIMEOUT_MS` (whole milliseconds, ≥ 1) when set,
-/// [`DEFAULT_TIMEOUT`] otherwise — one timeout story for
-/// [`ThreadTransport::world`] and
-/// [`super::socket::SocketTransport::pair_world`]. Tests that need a
-/// deterministic deadline pass one explicitly via the
-/// `*_with_timeout` constructors instead of relying on the
-/// environment.
+/// `CBCAST_TRANSPORT_TIMEOUT_MS` (whole milliseconds, **≥ 1** — see
+/// [`parse_timeout_ms`]'s floor) when set and valid, [`DEFAULT_TIMEOUT`]
+/// otherwise — one timeout story for [`ThreadTransport::world`] and
+/// [`super::socket::SocketTransport::pair_world`]. An **invalid** value
+/// (unparsable, or `0`) no longer disappears silently: it is reported
+/// once on stderr and the default is used, so a typo'd knob can't make
+/// a test run "pass" under the wrong deadline unnoticed. Tests that
+/// need a deterministic deadline pass one explicitly via the
+/// `*_with_timeout` constructors instead of relying on the environment.
 pub fn configured_timeout() -> Duration {
-    std::env::var("CBCAST_TRANSPORT_TIMEOUT_MS")
-        .ok()
-        .and_then(|s| s.trim().parse::<u64>().ok())
-        .filter(|&ms| ms >= 1)
-        .map(Duration::from_millis)
-        .unwrap_or(DEFAULT_TIMEOUT)
+    match std::env::var("CBCAST_TRANSPORT_TIMEOUT_MS") {
+        Err(_) => DEFAULT_TIMEOUT,
+        Ok(raw) => match parse_timeout_ms(&raw) {
+            Ok(d) => d,
+            Err(why) => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "cbcast: ignoring CBCAST_TRANSPORT_TIMEOUT_MS={raw:?} ({why}); \
+                         using the {} s default",
+                        DEFAULT_TIMEOUT.as_secs()
+                    );
+                });
+                DEFAULT_TIMEOUT
+            }
+        },
+    }
 }
 
 /// What a [`Transport`] can report. Machine-model violations reuse the
@@ -207,6 +234,22 @@ pub trait Transport<T>: Send {
     /// Blocking receive of the round-`round` message from `peer`.
     fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError>;
 
+    /// Peers this endpoint believes have **crashed** — died without the
+    /// deliberate goodbye of a clean [`Transport::close`]. This is the
+    /// recovery plane's detector output ([`super::membership`]): after a
+    /// failed collective, survivors harvest each endpoint's suspects,
+    /// shrink the [`super::membership::Membership`] by their union, and
+    /// rebuild. [`ThreadTransport`] reports ranks the world timed out
+    /// waiting on (shared-memory board, identical at every survivor);
+    /// [`super::socket::SocketTransport`] reports peers whose link hit
+    /// EOF/error *without* a BYE or ABORT frame — and since the wire
+    /// mesh is full, every survivor observes a dead peer's EOF on its
+    /// own link, so the sets agree without any coordinator. The default
+    /// (no detector) suspects nobody.
+    fn failed_peers(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
     /// Retire this endpoint: `error` is `Some` when the rank aborted
     /// (shuts the world down so no sibling deadlocks), `None` on clean
     /// completion (may itself report a violation discovered at the end,
@@ -223,6 +266,13 @@ struct BoxState<T> {
     /// entry per round on a valid schedule.
     msgs: HashMap<usize, (usize, Vec<T>)>,
     poisoned: Option<String>,
+    /// Who this rank is currently blocked waiting on (set for the
+    /// duration of a blocking [`Transport::recv`]) — the wait-chain
+    /// pointer the failure detector walks. A rank that timed out leaves
+    /// a *blame marker* here (the rank it ultimately accused), so
+    /// concurrent walkers passing through it still land on the real
+    /// suspect instead of accusing this merely-starved rank.
+    waiting_on: Option<usize>,
 }
 
 struct RankBox<T> {
@@ -238,6 +288,12 @@ struct RankBox<T> {
 pub struct ThreadTransport<T> {
     rank: usize,
     boxes: Arc<Vec<RankBox<T>>>,
+    /// World-shared suspicion board: ranks some endpoint timed out
+    /// waiting on. In-process the board is shared memory, so every
+    /// survivor reads the identical failed set through
+    /// [`Transport::failed_peers`] — the perfect-detector analogue of
+    /// the socket plane's per-link EOF observations.
+    suspects: Arc<Mutex<BTreeSet<usize>>>,
     timeout: Duration,
     disc: Discipline,
 }
@@ -257,19 +313,48 @@ impl<T: Send> ThreadTransport<T> {
         let boxes: Arc<Vec<RankBox<T>>> = Arc::new(
             (0..p)
                 .map(|_| RankBox {
-                    state: Mutex::new(BoxState { msgs: HashMap::new(), poisoned: None }),
+                    state: Mutex::new(BoxState {
+                        msgs: HashMap::new(),
+                        poisoned: None,
+                        waiting_on: None,
+                    }),
                     cv: Condvar::new(),
                 })
                 .collect(),
         );
+        let suspects = Arc::new(Mutex::new(BTreeSet::new()));
         (0..p)
             .map(|rank| ThreadTransport {
                 rank,
                 boxes: boxes.clone(),
+                suspects: suspects.clone(),
                 timeout,
                 disc: Discipline::default(),
             })
             .collect()
+    }
+
+    /// Walk the wait chain from `suspect` to the rank that is *not*
+    /// blocked in a receive — the failure detector's accusation rule.
+    /// When a rank dies mid-collective, the ranks starved of its
+    /// messages cascade into blocked receives within microseconds of
+    /// each other and their deadlines fire near-simultaneously; naively
+    /// accusing one's direct peer would then indict a healthy,
+    /// merely-starved rank. Following `waiting_on` pointers (capped at
+    /// `p` hops for broken-schedule cycles) lands every accuser on the
+    /// chain's root: the rank that stopped calling transport verbs —
+    /// the dead one. Best-effort, like all of this runtime's detection:
+    /// a rank caught computing between rounds at the instant of the
+    /// walk can be blamed, which is the usual unreliable-detector
+    /// caveat, vanishingly unlikely at sane timeouts.
+    fn accuse(&self, mut suspect: usize) -> usize {
+        for _ in 0..self.boxes.len() {
+            match self.boxes[suspect].state.lock().unwrap().waiting_on {
+                Some(next) if next != suspect => suspect = next,
+                _ => break,
+            }
+        }
+        suspect
     }
 
     /// Shut the whole world down: every blocked and future call on any
@@ -357,20 +442,21 @@ impl<T: Send> Transport<T> for ThreadTransport<T> {
         let deadline = Instant::now() + self.timeout;
         let mybox = &self.boxes[self.rank];
         let mut st = mybox.state.lock().unwrap();
+        // Publish the wait-chain pointer for the failure detector.
+        st.waiting_on = Some(peer);
         loop {
             // Abort semantics: once the world is poisoned nothing more is
             // delivered, even if a matching message is already queued —
             // mirroring the lockstep driver's mid-round abort.
             if let Some(reason) = &st.poisoned {
-                return Err(TransportError::Shutdown {
-                    rank: self.rank,
-                    round,
-                    reason: reason.clone(),
-                });
+                let reason = reason.clone();
+                st.waiting_on = None;
+                return Err(TransportError::Shutdown { rank: self.rank, round, reason });
             }
             match st.msgs.get(&round).map(|(from, _)| *from) {
                 Some(from) if from == peer => {
                     let (_, data) = st.msgs.remove(&round).unwrap();
+                    st.waiting_on = None;
                     return Ok(data);
                 }
                 Some(from) => {
@@ -382,6 +468,7 @@ impl<T: Send> Transport<T> for ThreadTransport<T> {
                         from,
                         expected: Some(peer),
                     };
+                    st.waiting_on = None;
                     drop(st);
                     self.poison(&e.to_string());
                     return Err(TransportError::Machine(e));
@@ -390,7 +477,14 @@ impl<T: Send> Transport<T> for ThreadTransport<T> {
             }
             let now = Instant::now();
             if now >= deadline {
+                // Keep our own waiting_on pointing at `peer` during the
+                // walk — a concurrent walker passing through us must
+                // still reach the chain's root — then overwrite it with
+                // the blame marker (see `accuse`).
                 drop(st);
+                let suspect = self.accuse(peer);
+                self.suspects.lock().unwrap().insert(suspect);
+                mybox.state.lock().unwrap().waiting_on = Some(suspect);
                 let e = TransportError::Timeout { rank: self.rank, round, from: peer };
                 self.poison(&e.to_string());
                 return Err(e);
@@ -398,6 +492,10 @@ impl<T: Send> Transport<T> for ThreadTransport<T> {
             let (guard, _) = mybox.cv.wait_timeout(st, deadline - now).unwrap();
             st = guard;
         }
+    }
+
+    fn failed_peers(&self) -> Vec<usize> {
+        self.suspects.lock().unwrap().iter().copied().collect()
     }
 
     fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
@@ -849,5 +947,33 @@ mod tests {
         // The timeout shut the world down for everyone.
         t1.flush(0).unwrap();
         assert!(matches!(t1.recv(0, 0), Err(TransportError::Shutdown { .. })));
+    }
+
+    #[test]
+    fn thread_timeout_accuses_the_awaited_peer() {
+        // The suspicion board is world-shared: after rank 0 times out
+        // waiting on rank 1, *every* endpoint's failed_peers names
+        // exactly rank 1 — the recovery plane's detector contract.
+        let mut world = ThreadTransport::<u8>::world_with_timeout(3, Duration::from_millis(50));
+        let t2 = world.pop().unwrap();
+        let t1 = world.pop().unwrap();
+        let mut t0 = world.pop().unwrap();
+        assert!(t0.failed_peers().is_empty(), "fresh world suspects nobody");
+        t0.flush(0).unwrap();
+        assert!(matches!(t0.recv(0, 1), Err(TransportError::Timeout { .. })));
+        assert_eq!(t0.failed_peers(), vec![1]);
+        assert_eq!(t1.failed_peers(), vec![1]);
+        assert_eq!(t2.failed_peers(), vec![1]);
+    }
+
+    #[test]
+    fn timeout_knob_parser_enforces_the_floor() {
+        assert_eq!(parse_timeout_ms("250"), Ok(Duration::from_millis(250)));
+        assert_eq!(parse_timeout_ms(" 42 "), Ok(Duration::from_millis(42)));
+        assert_eq!(parse_timeout_ms("1"), Ok(Duration::from_millis(1)));
+        assert!(parse_timeout_ms("0").unwrap_err().contains("1 ms floor"));
+        assert!(parse_timeout_ms("30s").is_err(), "units are not accepted");
+        assert!(parse_timeout_ms("-5").is_err());
+        assert!(parse_timeout_ms("").is_err());
     }
 }

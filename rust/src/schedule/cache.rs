@@ -29,6 +29,7 @@
 //! (the historical behaviour, so legacy per-rank traffic at huge `p`
 //! stays cached without admitting a multi-megabyte arena).
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -129,12 +130,28 @@ impl ScheduleCache {
             return t.clone();
         }
         let t = Arc::new(ScheduleTable::build(sk));
-        self.misses.fetch_add(p as u64, Ordering::Relaxed);
-        if t.bytes() <= cap_bytes {
-            // Keep the first build under a concurrent-build race.
-            self.tables.write().unwrap().entry(p).or_insert_with(|| t.clone());
+        if t.bytes() > cap_bytes {
+            // Over-cap tables are never resident, so there is no winner
+            // to dedupe against: every build really computed `p` rows.
+            self.misses.fetch_add(p as u64, Ordering::Relaxed);
+            return t;
         }
-        t
+        // Charge under the write lock: exactly one concurrent builder
+        // wins the race and charges `p` misses; every loser finds the
+        // winner's table already resident, discards its own build, and
+        // is billed as a serve (`p` hits) — so the hit/miss receipts
+        // cannot drift however many threads build the same `p` at once.
+        match self.tables.write().unwrap().entry(p) {
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(p as u64, Ordering::Relaxed);
+                v.insert(t.clone());
+                t
+            }
+            Entry::Occupied(o) => {
+                self.hits.fetch_add(p as u64, Ordering::Relaxed);
+                o.get().clone()
+            }
+        }
     }
 
     /// The schedule for relative rank `r` of a `p`-processor system.
@@ -156,25 +173,37 @@ impl ScheduleCache {
         if 2 * p * super::skips::ceil_log2(p) <= DEFAULT_TABLE_CAP_BYTES {
             let sk = self.skips(p);
             let t = Arc::new(ScheduleTable::build(&sk));
-            self.misses.fetch_add(p as u64, Ordering::Relaxed);
-            let s = Arc::new(t.schedule(r));
-            self.tables.write().unwrap().entry(p).or_insert(t);
-            return s;
+            // Same race rule as `table_with_cap`: only the builder that
+            // wins the insert charges `p` misses; a loser is billed the
+            // single table serve it actually got.
+            return match self.tables.write().unwrap().entry(p) {
+                Entry::Vacant(v) => {
+                    self.misses.fetch_add(p as u64, Ordering::Relaxed);
+                    let s = Arc::new(t.schedule(r));
+                    v.insert(t);
+                    s
+                }
+                Entry::Occupied(o) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    Arc::new(o.get().schedule(r))
+                }
+            };
         }
         // Above the table cap with no resident table: historical
-        // per-(p, rank) caching.
-        {
-            let g = self.overflow.lock().unwrap();
-            if let Some(s) = g.get(&(p, r)) {
+        // per-(p, rank) caching. The row compute runs under the overflow
+        // lock (O(log p), cheap) so racing threads on one `(p, r)` cannot
+        // double-charge the miss.
+        let sk = self.skips(p);
+        match self.overflow.lock().unwrap().entry((p, r)) {
+            Entry::Occupied(o) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return s.clone();
+                o.get().clone()
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                v.insert(Arc::new(Schedule::compute(&sk, r))).clone()
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let sk = self.skips(p);
-        let s = Arc::new(Schedule::compute(&sk, r));
-        self.overflow.lock().unwrap().insert((p, r), s.clone());
-        s
     }
 
     /// `(hits, misses)` counters — the observable that lets callers (and
@@ -312,6 +341,57 @@ mod tests {
         assert_eq!(h1 - h0, 1, "table-served get is a single hit");
         assert_eq!(m1, 8192, "no overflow miss for a resident table");
         assert!(cache.overflow.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn racing_table_builds_charge_one_miss_set() {
+        // Regression: the pre-fix `table_with_cap` charged `p` misses
+        // per *builder* — N threads racing the first build of a `p`
+        // inflated the miss counter N-fold while storing one table.
+        // Post-fix the receipts are deterministic under any
+        // interleaving: one winner charges p misses, and each of the
+        // N−1 others — whether it loses the insert race or arrives
+        // after the winner's insert — is billed as a p-hit serve.
+        use std::sync::Barrier;
+        let cache = ScheduleCache::new();
+        let sk = cache.skips(17);
+        let n = 8usize;
+        let barrier = Barrier::new(n);
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    barrier.wait();
+                    assert_eq!(cache.table(&sk).p(), 17);
+                });
+            }
+        });
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 17, "exactly one concurrent build may charge p misses");
+        assert_eq!(hits, (n as u64 - 1) * 17, "every losing builder is billed as a serve");
+        assert_eq!(cache.tables.read().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn racing_gets_build_once() {
+        // The same race through `get`'s build path: one winner charges
+        // the `p` misses; each loser gets a 1-hit table serve.
+        use std::sync::Barrier;
+        let cache = ScheduleCache::new();
+        let n = 8usize;
+        let barrier = Barrier::new(n);
+        std::thread::scope(|s| {
+            for t in 0..n {
+                let cache = &cache;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    assert_eq!(cache.get(17, t % 17).rank, t % 17);
+                });
+            }
+        });
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 17, "one build, p misses, no double charge");
+        assert_eq!(hits, n as u64 - 1, "losers are single table serves");
     }
 
     #[test]

@@ -22,6 +22,12 @@ fn proto(msg: impl Into<String>) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.into())
 }
 
+/// Default submission budget for [`ServiceClient::call_admitted`]:
+/// with the doubling backoff this tolerates minutes of daemon
+/// saturation before giving up, while still guaranteeing termination
+/// against a zero-capacity daemon.
+pub const DEFAULT_ADMIT_ATTEMPTS: usize = 16;
+
 /// One connection to a running daemon, identified by a tenant label.
 ///
 /// Replies to this connection's requests arrive in submission order
@@ -130,18 +136,48 @@ impl ServiceClient {
         Ok(reply)
     }
 
-    /// [`ServiceClient::call`], resubmitting after each admission
-    /// refusal with the daemon's backoff hint — returns the first
-    /// non-rejected reply.
+    /// [`ServiceClient::call_admitted_budget`] with the default budget
+    /// of [`DEFAULT_ADMIT_ATTEMPTS`] submissions.
     pub fn call_admitted(&mut self, req_id: u64, op: &MixOp) -> io::Result<ServiceReply> {
-        loop {
+        self.call_admitted_budget(req_id, op, DEFAULT_ADMIT_ATTEMPTS)
+    }
+
+    /// [`ServiceClient::call`], resubmitting after each admission
+    /// refusal — returns the first non-rejected reply.
+    ///
+    /// The retry is **bounded**: at most `attempts` submissions, sleeping
+    /// the daemon's `retry_after` hint doubled per refusal (capped at
+    /// 500 ms per sleep). A daemon that refuses every attempt — e.g. one
+    /// configured with a zero-capacity queue, or permanently saturated —
+    /// yields a typed [`io::ErrorKind::TimedOut`] "admission exhausted"
+    /// error instead of the pre-fix unbounded spin.
+    pub fn call_admitted_budget(
+        &mut self,
+        req_id: u64,
+        op: &MixOp,
+        attempts: usize,
+    ) -> io::Result<ServiceReply> {
+        const BACKOFF_CAP: Duration = Duration::from_millis(500);
+        for attempt in 0..attempts {
             match self.call(req_id, op)? {
                 ServiceReply::Rejected { retry_after_ms } => {
-                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(1) as u64));
+                    if attempt + 1 == attempts {
+                        break; // budget spent: no point sleeping again
+                    }
+                    let hint = Duration::from_millis(retry_after_ms.max(1) as u64);
+                    let backoff = hint.saturating_mul(1u32 << attempt.min(8) as u32);
+                    std::thread::sleep(backoff.min(BACKOFF_CAP));
                 }
                 reply => return Ok(reply),
             }
         }
+        Err(io::Error::new(
+            io::ErrorKind::TimedOut,
+            format!(
+                "service: admission exhausted after {attempts} attempts \
+                 (request {req_id} kept being refused; daemon saturated?)"
+            ),
+        ))
     }
 
     /// Fetch the daemon's counters as one text blob.

@@ -40,6 +40,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
+use crate::comm::membership::Membership;
 use crate::comm::socket::{fill, read_raw_frame, Stream, MAX_FRAME};
 use crate::comm::{CommBuilder, Communicator, TenantUsage};
 use crate::testkit::{submit_mix_op, MixOp, MixPending};
@@ -74,6 +75,17 @@ pub struct ServiceConfig {
     /// Scoped-thread override for batch execution (`None` = the
     /// engine's default rule).
     pub threads: Option<usize>,
+    /// Deterministic fault knob for the recovery path:
+    /// `Some((rank, before_batch))` kills **global** rank `rank`
+    /// immediately before batch number `before_batch` (0-indexed)
+    /// executes. The batcher then shrinks its [`Membership`], rebuilds
+    /// the communicator at `p − 1`, remaps the drained jobs' windows
+    /// and roots into the surviving dense frame (an op whose window
+    /// lost every rank gets an error reply), and bills the disruption
+    /// as [`TenantUsage::restarted`]. This is the in-process stand-in
+    /// for a rank process dying mid-service (the multi-process
+    /// analogue is exercised by the `cbcastd rank` CI smoke).
+    pub fault: Option<(usize, usize)>,
 }
 
 impl Default for ServiceConfig {
@@ -86,6 +98,7 @@ impl Default for ServiceConfig {
             retry_after: Duration::from_millis(5),
             client_timeout: Duration::from_secs(2),
             threads: None,
+            fault: None,
         }
     }
 }
@@ -110,6 +123,12 @@ pub struct ServiceMetrics {
     /// Connections dropped for protocol violations or slow-loris
     /// stalls.
     pub dropped: usize,
+    /// Membership recoveries performed: each one shrank the world by a
+    /// dead rank and rebuilt the communicator for the survivors.
+    pub recoveries: usize,
+    /// The batcher's current membership epoch (0 = the original,
+    /// never-shrunk world; advances once per recovery).
+    pub epoch: u64,
     /// Cumulative per-tenant usage.
     pub tenants: Vec<TenantUsage>,
 }
@@ -263,11 +282,25 @@ fn serve(
     addr: Option<SocketAddr>,
     uds_path: Option<PathBuf>,
 ) -> io::Result<ServiceHandle> {
-    if cfg.p == 0 || cfg.queue_cap == 0 || cfg.batch_max == 0 {
+    // `queue_cap == 0` is deliberately legal: a zero-capacity queue
+    // refuses every request, which is exactly what the client-side
+    // admission-exhaustion path is tested against.
+    if cfg.p == 0 || cfg.batch_max == 0 {
         return Err(io::Error::new(
             io::ErrorKind::InvalidInput,
-            "service: p, queue_cap and batch_max must all be >= 1",
+            "service: p and batch_max must both be >= 1",
         ));
+    }
+    if let Some((rank, _)) = cfg.fault {
+        if rank >= cfg.p || cfg.p == 1 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "service: fault rank {rank} invalid for p = {} (need rank < p and p > 1)",
+                    cfg.p
+                ),
+            ));
+        }
     }
     let inner = Arc::new(Inner {
         cfg,
@@ -465,9 +498,15 @@ fn admit(inner: &Inner, tenant: &Arc<str>, req_id: u64, spec: MixOp, reply: &Arc
 }
 
 fn batch_loop(inner: &Arc<Inner>) {
-    // The batcher owns the communicator for the daemon's lifetime —
-    // schedule tables are computed once and reused across every batch.
-    let comm = CommBuilder::new(inner.cfg.p).build();
+    // The batcher owns the communicator — schedule tables are computed
+    // once and reused across every batch. Under the recovery plane the
+    // communicator is *rebuildable*: when a rank dies the membership
+    // shrinks and a fresh (p − 1)-rank communicator takes over (cheap
+    // by the paper's construction — every schedule row is recomputed
+    // locally in O(log p), no state is redistributed).
+    let mut membership = Membership::new(inner.cfg.p);
+    let mut comm = CommBuilder::new(inner.cfg.p).build();
+    let mut batch_no = 0usize;
     loop {
         let mut q = inner.queue.lock().unwrap();
         while q.is_empty() && !inner.stopping() {
@@ -486,20 +525,93 @@ fn batch_loop(inner: &Arc<Inner>) {
             let n = q.len().min(inner.cfg.batch_max);
             q.drain(..n).collect()
         };
-        run_batch(inner, &comm, jobs);
+        // The deterministic fault: the configured rank dies right
+        // before this batch runs. Shrink, rebuild, and re-admit the
+        // drained jobs onto the survivors' communicator.
+        let mut disrupted = false;
+        if let Some((victim, before)) = inner.cfg.fault {
+            if batch_no == before && membership.dense(victim).is_some() {
+                let (next, _change) = membership.shrink(&[victim]);
+                membership = next;
+                comm = CommBuilder::new(membership.p()).build();
+                disrupted = true;
+                let mut m = inner.metrics.lock().unwrap();
+                m.recoveries += 1;
+                m.epoch = membership.epoch();
+            }
+        }
+        run_batch(inner, &membership, &comm, jobs, disrupted);
+        batch_no += 1;
     }
 }
 
-fn run_batch(inner: &Inner, comm: &Communicator, jobs: Vec<Job>) {
+/// Re-express a client's op spec (always phrased in the **original**
+/// epoch-0 frame the client was told at handshake) in the current
+/// membership's dense frame. Identity at epoch 0. After a shrink:
+/// windows drop their dead ranks and slide down ([`Membership::
+/// remap_window`]); a dead root is replaced by the window's lowest
+/// surviving rank; a window that lost *every* rank is an error — the
+/// op has no world left to run on.
+fn remap_spec(spec: &MixOp, ms: &Membership) -> Result<MixOp, String> {
+    if ms.epoch() == 0 {
+        return Ok(spec.clone());
+    }
+    let mut out = spec.clone();
+    match spec.window {
+        None => {
+            let root_g = ms.elect_root(spec.root);
+            out.root = ms.dense(root_g).expect("elected root is a member");
+        }
+        Some((base, len)) => {
+            let Some((base_d, len_d)) = ms.remap_window(base, len) else {
+                return Err(format!(
+                    "window ({base}, {len}) lost every rank to membership \
+                     changes (epoch {})",
+                    ms.epoch()
+                ));
+            };
+            out.window = Some((base_d, len_d));
+            out.root = match ms.dense(base + spec.root) {
+                Some(d) => d - base_d,
+                // The window-local root died: its lowest survivor —
+                // dense index `base_d`, window-local 0 — takes over.
+                None => 0,
+            };
+        }
+    }
+    Ok(out)
+}
+
+fn run_batch(
+    inner: &Inner,
+    membership: &Membership,
+    comm: &Communicator,
+    jobs: Vec<Job>,
+    disrupted: bool,
+) {
     let mut traffic = comm.traffic();
     if let Some(t) = inner.cfg.threads {
         traffic = traffic.threads(t);
     }
     let mut submit_failed = 0usize;
+    let mut restarted: Vec<Arc<str>> = Vec::new();
     let mut admitted: Vec<(Job, MixPending)> = Vec::new();
     for job in jobs {
+        let spec = match remap_spec(&job.spec, membership) {
+            Ok(s) => s,
+            Err(msg) => {
+                submit_failed += 1;
+                send_frame(&job.reply, &res_err_frame(job.req_id, &format!("bad request: {msg}")));
+                continue;
+            }
+        };
+        if disrupted {
+            // This job was queued when the rank died: it runs on the
+            // rebuilt world, and the disruption is billed to its tenant.
+            restarted.push(job.tenant.clone());
+        }
         traffic.for_tenant(&job.tenant);
-        match submit_mix_op(&mut traffic, &job.spec) {
+        match submit_mix_op(&mut traffic, &spec) {
             Ok(pending) => admitted.push((job, pending)),
             Err(e) => {
                 submit_failed += 1;
@@ -523,6 +635,19 @@ fn run_batch(inner: &Inner, comm: &Communicator, jobs: Vec<Job>) {
     // Charge the admission refusals accumulated since the last batch.
     for (tenant, n) in inner.rejects.lock().unwrap().drain() {
         report.note_rejected(&tenant, n);
+    }
+    // Bill each membership-change disruption to the tenant whose op
+    // was re-admitted onto the rebuilt communicator.
+    for tenant in &restarted {
+        if let Some(row) = report.tenants.iter_mut().find(|u| u.tenant == **tenant) {
+            row.restarted += 1;
+        } else {
+            report.tenants.push(TenantUsage {
+                tenant: tenant.to_string(),
+                restarted: 1,
+                ..TenantUsage::default()
+            });
+        }
     }
     let mut completed = 0usize;
     let mut failed = submit_failed;
@@ -561,6 +686,7 @@ fn fold_usage(total: &mut Vec<TenantUsage>, batch: &[TenantUsage]) {
         t.messages += row.messages;
         t.bytes += row.bytes;
         t.rejected += row.rejected;
+        t.restarted += row.restarted;
     }
 }
 
@@ -569,7 +695,7 @@ fn render_stats(inner: &Inner) -> String {
     let m = inner.metrics.lock().unwrap();
     let mut out = format!(
         "p={} queue_depth={} connections={} admitted={} rejected={} completed={} failed={} \
-         batches={} dropped={}\n",
+         batches={} dropped={} recoveries={} epoch={}\n",
         inner.cfg.p,
         depth,
         m.connections,
@@ -579,11 +705,13 @@ fn render_stats(inner: &Inner) -> String {
         m.failed,
         m.batches,
         m.dropped,
+        m.recoveries,
+        m.epoch,
     );
     for t in &m.tenants {
         out.push_str(&format!(
-            "tenant={} ops={} ok={} messages={} bytes={} rejected={}\n",
-            t.tenant, t.ops, t.ok, t.messages, t.bytes, t.rejected
+            "tenant={} ops={} ok={} messages={} bytes={} rejected={} restarted={}\n",
+            t.tenant, t.ops, t.ok, t.messages, t.bytes, t.rejected, t.restarted
         ));
     }
     out

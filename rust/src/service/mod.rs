@@ -32,7 +32,7 @@ mod client;
 mod daemon;
 mod wire;
 
-pub use client::ServiceClient;
+pub use client::{ServiceClient, DEFAULT_ADMIT_ATTEMPTS};
 pub use daemon::{
     serve_tcp, serve_unix, ServiceConfig, ServiceHandle, ServiceMetrics, MAX_OP_M,
 };
@@ -159,6 +159,159 @@ mod tests {
         assert!(!matches!(reply, ServiceReply::Rejected { .. }));
         handle.shutdown();
         handle.join();
+    }
+
+    #[test]
+    fn zero_capacity_daemon_exhausts_admission_budget() {
+        // The pre-fix client retried admission refusals forever; against
+        // a zero-capacity queue that was an infinite loop. The bounded
+        // budget must surface a typed "admission exhausted" error.
+        let path = temp_sock("zerocap");
+        let cfg = ServiceConfig {
+            p: 4,
+            queue_cap: 0,
+            retry_after: Duration::from_millis(1),
+            client_timeout: Duration::from_millis(500),
+            ..ServiceConfig::default()
+        };
+        let handle = serve_unix(&path, cfg).unwrap();
+        let mut client =
+            ServiceClient::connect_unix_retry(&path, "starved", Duration::from_secs(5)).unwrap();
+        let mix = traffic_mix(&mut Rng::new(11), 4, 1, &MixOptions::default());
+        let err = client.call_admitted_budget(0, &mix.ops[0], 4).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        assert!(err.to_string().contains("admission exhausted"), "{err}");
+        handle.shutdown();
+        let metrics = handle.join();
+        assert_eq!(metrics.admitted, 0, "nothing fits a zero-capacity queue");
+        assert_eq!(metrics.rejected, 4, "every attempt in the budget was refused");
+    }
+
+    #[test]
+    fn vanished_client_loses_only_its_reply() {
+        // The daemon deliberately ignores reply-write failures
+        // (`send_frame`): a client that drops mid-batch hits the write
+        // with a broken pipe. Pin that the failure stays contained —
+        // the co-batched client's digest is still correct, the ghost's
+        // op still runs, and both tenants are still billed.
+        let path = temp_sock("vanish");
+        let cfg = ServiceConfig {
+            p: 8,
+            gather: Duration::from_millis(300),
+            client_timeout: Duration::from_millis(500),
+            ..ServiceConfig::default()
+        };
+        let handle = serve_unix(&path, cfg).unwrap();
+        let mix = traffic_mix(&mut Rng::new(0xDEAD), 8, 2, &MixOptions::default());
+
+        let mut ghost =
+            ServiceClient::connect_unix_retry(&path, "ghost", Duration::from_secs(5)).unwrap();
+        let mut stayer =
+            ServiceClient::connect_unix_retry(&path, "stayer", Duration::from_secs(5)).unwrap();
+        // Both land in the same 300 ms gather window...
+        ghost.submit(0, &mix.ops[0]).unwrap();
+        stayer.submit(1, &mix.ops[1]).unwrap();
+        // ...then the ghost vanishes before its reply can be written
+        // (the submitted frame stays readable in the socket buffer, so
+        // the op is still admitted).
+        drop(ghost);
+
+        let (id, reply) = stayer.recv_reply().unwrap();
+        assert_eq!(id, 1);
+        let solo = run_mix_blocking(&CommBuilder::new(mix.ops[1].ranks(8)).build(), &mix.ops[1]);
+        match (reply, summarize(&solo)) {
+            (ServiceReply::Ok(got), Ok(want)) => assert_eq!(got, want),
+            (ServiceReply::Err(got), Err(want)) => assert_eq!(got, want),
+            (got, want) => panic!("stayer got {got:?}, solo said {want:?}"),
+        }
+        handle.shutdown();
+        let metrics = handle.join();
+        assert_eq!(metrics.admitted, 2);
+        assert_eq!(
+            metrics.completed + metrics.failed,
+            2,
+            "the ghost's op still ran and was counted: {metrics:?}"
+        );
+        let row = metrics.tenants.iter().find(|t| t.tenant == "ghost").unwrap();
+        assert_eq!(row.ops, 1, "the vanished tenant is still billed: {row:?}");
+    }
+
+    #[test]
+    fn daemon_recovers_from_a_dead_rank_mid_service() {
+        use crate::comm::request::{Algo, Kind};
+        use crate::testkit::MixOp;
+
+        let p = 8usize;
+        let bcast = |root: usize, window, seed: u64| MixOp {
+            kind: Kind::Bcast,
+            window,
+            root,
+            m: 48,
+            blocks: None,
+            algo: Algo::Auto,
+            data_seed: seed,
+        };
+        let path = temp_sock("recover");
+        let cfg = ServiceConfig {
+            p,
+            client_timeout: Duration::from_millis(500),
+            // Rank 3 dies immediately before batch #1 executes.
+            fault: Some((3, 1)),
+            ..ServiceConfig::default()
+        };
+        let handle = serve_unix(&path, cfg).unwrap();
+        let mut client =
+            ServiceClient::connect_unix_retry(&path, "elastic", Duration::from_secs(5))
+                .unwrap();
+
+        // Batch 0: the full 8-rank world serves as usual.
+        let op0 = bcast(0, None, 101);
+        let want0 = summarize(&run_mix_blocking(&CommBuilder::new(p).build(), &op0)).unwrap();
+        match client.call_admitted(0, &op0).unwrap() {
+            ServiceReply::Ok(got) => assert_eq!(got, want0),
+            other => panic!("pre-fault op must succeed, got {other:?}"),
+        }
+
+        // Batch 1: rank 3 dies first. The daemon shrinks to the 7-rank
+        // survivor world and re-admits the queued op there — the reply
+        // must be bit-identical to a fresh solo run at p = 7 (root 0
+        // survived, and with the dense renumbering the whole-machine
+        // spec is unchanged).
+        let op1 = bcast(0, None, 202);
+        let want1 = summarize(&run_mix_blocking(&CommBuilder::new(p - 1).build(), &op1)).unwrap();
+        match client.call_admitted(1, &op1).unwrap() {
+            ServiceReply::Ok(got) => assert_eq!(got, want1, "survivor world must match fresh p-1"),
+            other => panic!("post-fault op must succeed on the shrunken world, got {other:?}"),
+        }
+
+        // A dead root is replaced by the lowest surviving rank (global
+        // 0 -> dense 0).
+        let op2 = bcast(3, None, 303);
+        let mut op2_remap = op2.clone();
+        op2_remap.root = 0;
+        let want2 =
+            summarize(&run_mix_blocking(&CommBuilder::new(p - 1).build(), &op2_remap)).unwrap();
+        match client.call_admitted(2, &op2).unwrap() {
+            ServiceReply::Ok(got) => assert_eq!(got, want2, "dead root must be re-elected"),
+            other => panic!("dead-root op must succeed under the new root, got {other:?}"),
+        }
+
+        // A window whose every rank died has no world left.
+        let op3 = bcast(0, Some((3, 1)), 404);
+        match client.call_admitted(3, &op3).unwrap() {
+            ServiceReply::Err(msg) => assert!(msg.contains("lost every rank"), "{msg}"),
+            other => panic!("a vanished window must fail, got {other:?}"),
+        }
+
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("recoveries=1"), "{stats}");
+        assert!(stats.contains("epoch=1"), "{stats}");
+        handle.shutdown();
+        let metrics = handle.join();
+        assert_eq!(metrics.recoveries, 1);
+        assert_eq!(metrics.epoch, 1);
+        let row = metrics.tenants.iter().find(|t| t.tenant == "elastic").unwrap();
+        assert!(row.restarted >= 1, "the disruption must be billed: {row:?}");
     }
 
     #[test]

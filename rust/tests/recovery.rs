@@ -1,0 +1,345 @@
+//! The recovery suite: shrink-and-recover when ranks die.
+//!
+//! The paper's communication-free O(log p) schedule computation makes
+//! elastic membership cheap — each survivor rebuilds its (p − 1)-rank
+//! schedule rows locally, nothing is redistributed. This suite pins the
+//! recovery plane's guarantees end to end:
+//!
+//! * a single rank crashing mid-broadcast shrinks the world by exactly
+//!   that rank, and the survivors' payloads are **bit-identical to a
+//!   fresh run at the shrunken size** — on both the threaded world
+//!   (suspicion-board detection) and the wire world (EOF-without-BYE
+//!   link accounting), at p ∈ {8, 2^k ± 1};
+//! * a dead **root** is replaced by the lowest surviving rank, which
+//!   serves the payload in the restarted epoch;
+//! * a **two-failure cascade** (a second rank dying during the first
+//!   recovery's restarted epoch) shrinks twice and still completes;
+//! * a failure inside a **windowed traffic batch** restarts only the
+//!   ops whose windows intersect the dead rank — disjoint-window ops
+//!   keep their (bit-identical) results;
+//! * the shrink budget is enforced: a world out of budget surfaces the
+//!   typed [`CommError::MembershipChanged`] instead of looping.
+//!
+//! Deterministic by default; honors `TESTKIT_SEED` (CI runs the fixed
+//! three-seed matrix). The multi-process analogue — real killed
+//! processes over UDS — is the `recovery-smoke` release CI job driving
+//! `cbcastd rank`.
+
+use std::time::Duration;
+
+use circulant_bcast::comm::{
+    elastic_bcast, CommBuilder, CommError, FaultPlan, IbcastReq, Membership, RankComm,
+    TransportKind,
+};
+use circulant_bcast::schedule::Skips;
+use circulant_bcast::testkit::{install_seed_reporter, Rng};
+use std::sync::Arc;
+
+/// Short enough that a test-sized crash is detected quickly, long
+/// enough that a loaded CI host never starves a healthy rank into a
+/// false timeout before its peer's messages arrive.
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+fn payload(n: usize, seed: u64) -> Vec<i64> {
+    Rng::new(seed).vec_i64(n, -999, 999)
+}
+
+/// The recovery guarantee, checked exhaustively: run `elastic_bcast`
+/// with `plan`, assert the final world lost exactly `expect_failed`
+/// (original-world ids), and that every survivor's payload equals the
+/// root's data — which a fresh run at the final size trivially
+/// produces, so bit-identity to that fresh run follows (and is also
+/// asserted directly against a no-fault elastic run at p′).
+fn assert_recovers(
+    p: usize,
+    root: usize,
+    kind: TransportKind,
+    plan: &FaultPlan,
+    expect_failed: &[usize],
+    expect_root: usize,
+    seed: u64,
+) {
+    let data = payload(96, seed);
+    let report = elastic_bcast(p, root, &data, 4, kind, plan, 4, TIMEOUT)
+        .unwrap_or_else(|e| panic!("p = {p} {kind:?}: recovery failed: {e}"));
+    let p2 = p - expect_failed.len();
+    assert_eq!(report.membership.p(), p2, "world must shrink by the dead ranks");
+    assert_eq!(report.root, expect_root);
+    let survivors: Vec<usize> = (0..p).filter(|r| !expect_failed.contains(r)).collect();
+    assert_eq!(report.membership.members(), &survivors[..]);
+    assert_eq!(report.buffers.len(), p2);
+    for (g, buf) in &report.buffers {
+        assert_eq!(buf, &data, "rank {g} (p = {p}, {kind:?})");
+    }
+    // Bit-identity to a fresh run at the shrunken size, pinned
+    // directly: a fault-free elastic run over p′ fresh ranks.
+    let fresh = elastic_bcast(p2, 0, &data, 4, kind, &FaultPlan::none(), 0, TIMEOUT)
+        .unwrap_or_else(|e| panic!("fresh p = {p2} {kind:?} run failed: {e}"));
+    for ((_, recovered), (_, fresh)) in report.buffers.iter().zip(fresh.buffers.iter()) {
+        assert_eq!(recovered, fresh, "recovered world must match a fresh p' world");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Membership + RankComm shrink units
+// ---------------------------------------------------------------------
+
+#[test]
+fn rankcomm_shrink_matches_fresh_construction() {
+    install_seed_reporter();
+    // RankComm::shrink must renumber exactly like building fresh
+    // (p − |failed|)-rank handles: same p, same dense rank.
+    for p in [2usize, 5, 8, 9, 17] {
+        let sk = Arc::new(Skips::new(p));
+        for victim in [0, p / 2, p - 1] {
+            for r in 0..p {
+                let rc = RankComm::new(p, r, sk.clone());
+                let shrunk = rc.shrink(&[victim]);
+                if r == victim {
+                    assert!(shrunk.is_none(), "a dead rank has no survivor handle");
+                } else {
+                    let s = shrunk.unwrap();
+                    assert_eq!(s.p(), p - 1);
+                    let expect = if r < victim { r } else { r - 1 };
+                    assert_eq!(s.rank(), expect, "p = {p}, victim {victim}, rank {r}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn membership_survives_paper_grid_shrinks() {
+    install_seed_reporter();
+    // p over powers of two ± 1 — the schedule-interesting sizes.
+    for p in [3usize, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33] {
+        let m = Membership::new(p);
+        let victim = p / 2;
+        let (m1, change) = m.shrink(&[victim]);
+        assert_eq!(m1.p(), p - 1);
+        assert_eq!(change.failed, vec![victim]);
+        assert_eq!(change.epoch, 1);
+        for g in 0..p {
+            match m1.dense(g) {
+                None => assert_eq!(g, victim),
+                Some(d) => assert_eq!(m1.global(d), g),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Single crash mid-broadcast: threads and wire, p ∈ {8, 2^k ± 1}
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_crash_mid_bcast_recovers_on_threads() {
+    install_seed_reporter();
+    for (p, victim) in [(8usize, 5usize), (7, 3), (9, 6)] {
+        let plan = FaultPlan::none().crash(0, victim, 1);
+        assert_recovers(p, 0, TransportKind::Threads, &plan, &[victim], 0, 0xA11CE + p as u64);
+    }
+}
+
+#[test]
+fn single_crash_mid_bcast_recovers_on_sockets() {
+    install_seed_reporter();
+    // Wire worlds are full socketpair meshes (p·(p−1) fd ends) and each
+    // epoch builds a fresh one; the same p grid as threads stays well
+    // inside the default fd limit.
+    for (p, victim) in [(8usize, 5usize), (7, 3), (9, 6)] {
+        let plan = FaultPlan::none().crash(0, victim, 1);
+        assert_recovers(p, 0, TransportKind::Socket, &plan, &[victim], 0, 0xB0B + p as u64);
+    }
+}
+
+#[test]
+fn crash_before_any_round_recovers_too() {
+    install_seed_reporter();
+    // crash_round 0: the victim dies before it communicates at all —
+    // the pure-silence case (no partial sends to help detection).
+    let plan = FaultPlan::none().crash(0, 2, 0);
+    assert_recovers(8, 0, TransportKind::Threads, &plan, &[2], 0, 0x51E7);
+}
+
+// ---------------------------------------------------------------------
+// Root death: the lowest survivor takes over
+// ---------------------------------------------------------------------
+
+#[test]
+fn dead_root_is_replaced_by_lowest_survivor() {
+    install_seed_reporter();
+    // Root 2 dies; rank 0 is the lowest survivor and serves the data
+    // in the restarted epoch. (The driver hands the payload to
+    // whichever rank is root each epoch — the god-view stand-in for
+    // "the payload is replicated/recoverable", which is what lets a
+    // root death be survivable at all.)
+    let plan = FaultPlan::none().crash(0, 2, 1);
+    assert_recovers(8, 2, TransportKind::Threads, &plan, &[2], 0, 0x0007);
+    let plan = FaultPlan::none().crash(0, 2, 1);
+    assert_recovers(8, 2, TransportKind::Socket, &plan, &[2], 0, 0x0008);
+}
+
+// ---------------------------------------------------------------------
+// Two-failure cascade: a second death during recovery
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_failure_cascade_shrinks_twice() {
+    install_seed_reporter();
+    // Epoch 0: rank 4 dies. Epoch 1 (the recovery run): rank 7 dies
+    // too. The world must shrink twice — 9 → 8 → 7 — and complete.
+    let data = payload(96, 0xCA5CADE);
+    let plan = FaultPlan::none().crash(0, 4, 1).crash(1, 7, 1);
+    let report =
+        elastic_bcast(9, 0, &data, 4, TransportKind::Threads, &plan, 4, TIMEOUT).unwrap();
+    assert_eq!(report.changes.len(), 2, "two shrinks: {:?}", report.changes);
+    assert_eq!(report.membership.p(), 7);
+    assert_eq!(report.membership.epoch(), 2);
+    assert_eq!(report.changes[0].failed, vec![4]);
+    assert_eq!(report.changes[1].failed, vec![7]);
+    for (g, buf) in &report.buffers {
+        assert_eq!(buf, &data, "rank {g}");
+    }
+}
+
+#[test]
+fn shrink_budget_exhaustion_is_typed() {
+    install_seed_reporter();
+    // Budget 1, two planned deaths: the second shrink is refused and
+    // the caller gets the membership receipt, not a hang or a panic.
+    let data = payload(48, 0xB7D6E7);
+    let plan = FaultPlan::none().crash(0, 1, 1).crash(1, 2, 1);
+    let err = elastic_bcast(5, 0, &data, 2, TransportKind::Threads, &plan, 1, TIMEOUT)
+        .expect_err("budget 1 cannot absorb two failures");
+    match err {
+        CommError::MembershipChanged { epoch, failed, survivors } => {
+            assert_eq!(epoch, 2);
+            assert_eq!(failed, vec![2]);
+            assert_eq!(survivors, vec![0, 3, 4], "original-world ids");
+        }
+        other => panic!("expected MembershipChanged, got {other}"),
+    }
+}
+
+#[test]
+fn loopback_has_no_detector_and_says_so() {
+    install_seed_reporter();
+    let data = payload(8, 1);
+    let err = elastic_bcast(
+        4,
+        0,
+        &data,
+        1,
+        TransportKind::Loopback,
+        &FaultPlan::none(),
+        1,
+        TIMEOUT,
+    )
+    .expect_err("loopback cannot drive recovery");
+    assert!(matches!(err, CommError::BadRequest(_)), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Mid-batch failure: disjoint-window ops keep their results
+// ---------------------------------------------------------------------
+
+#[test]
+fn restart_set_spares_disjoint_windows() {
+    install_seed_reporter();
+    // A windowed traffic batch on the god-view plane: ops over
+    // [0, 4), [4, 4) and the full machine. Rank 5 "dies" after the
+    // batch: the checkpoint accessors must restart exactly the ops
+    // whose windows contain rank 5, and the disjoint ops' outcomes —
+    // already delivered — must be bit-identical to solo runs.
+    let p = 8usize;
+    let comm = CommBuilder::new(p).build();
+    let data_a = payload(32, 0xAAA);
+    let data_b = payload(32, 0xBBB);
+    let data_c = payload(32, 0xCCC);
+    let mut traffic = comm.traffic();
+    let pa = traffic
+        .submit(IbcastReq::new(0, data_a.clone()).window(0, 4))
+        .unwrap();
+    let pb = traffic
+        .submit(IbcastReq::new(1, data_b.clone()).window(4, 4))
+        .unwrap();
+    let pc = traffic.submit(IbcastReq::new(0, data_c.clone())).unwrap();
+    let report = traffic.run().unwrap();
+    assert_eq!(report.completed_ops(), vec![0, 1, 2], "all three completed");
+
+    // Rank 5 dies. Window [0,4) is disjoint; [4,4) and the full
+    // machine intersect.
+    assert_eq!(report.restart_set(&[5]), vec![1, 2]);
+    // A rank outside every window (none here, p = 8 is covered) —
+    // but a hypothetical failure of rank 0 intersects ops 0 and 2.
+    assert_eq!(report.restart_set(&[0]), vec![0, 2]);
+
+    // The spared op's delivered buffers are untouched and correct.
+    let out_a = pa.wait().unwrap();
+    for (r, buf) in out_a.buffers.iter().enumerate() {
+        assert_eq!(buf, &data_a, "window rank {r}");
+    }
+    // The intersecting ops delivered too (the death came *after* the
+    // batch) — restart_set is the daemon's replay decision, not a
+    // verdict on these buffers.
+    assert!(pb.wait().is_ok());
+    assert!(pc.wait().is_ok());
+
+    // And the replay itself: rerun the restart set on the shrunken
+    // world, windows remapped. [4,4) loses rank 5 -> dense (4,3); the
+    // full machine becomes p = 7.
+    let m = Membership::new(p);
+    let (m1, _) = m.shrink(&[5]);
+    let (b_base, b_len) = m1.remap_window(4, 4).unwrap();
+    assert_eq!((b_base, b_len), (4, 3));
+    let comm7 = CommBuilder::new(m1.p()).build();
+    let mut replay = comm7.traffic();
+    let rb = replay
+        .submit(IbcastReq::new(1, data_b.clone()).window(b_base, b_len))
+        .unwrap();
+    let rc = replay.submit(IbcastReq::new(0, data_c.clone())).unwrap();
+    replay.run().unwrap();
+    let out_b = rb.wait().unwrap();
+    assert_eq!(out_b.buffers.len(), 3, "the remapped window kept 3 of 4 ranks");
+    for buf in &out_b.buffers {
+        assert_eq!(buf, &data_b);
+    }
+    let out_c = rc.wait().unwrap();
+    assert_eq!(out_c.buffers.len(), 7);
+    for buf in &out_c.buffers {
+        assert_eq!(buf, &data_c);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure during a windowed batch on the elastic driver's worlds
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_fault_elastic_runs_match_plain_spmd() {
+    install_seed_reporter();
+    // elastic_bcast with an empty plan must degenerate to a plain run
+    // at every paper-grid size — the recovery plane costs nothing when
+    // nobody dies.
+    for p in [1usize, 2, 3, 8, 9] {
+        let data = payload(64, 0xD06 + p as u64);
+        let report = elastic_bcast(
+            p,
+            0,
+            &data,
+            4,
+            TransportKind::Threads,
+            &FaultPlan::none(),
+            0,
+            TIMEOUT,
+        )
+        .unwrap();
+        assert!(report.changes.is_empty());
+        assert_eq!(report.membership.epoch(), 0);
+        assert_eq!(report.buffers.len(), p);
+        for (g, buf) in &report.buffers {
+            assert_eq!(buf, &data, "p = {p}, rank {g}");
+        }
+    }
+}
