@@ -4,6 +4,8 @@
 //! cbcastd serve    (--uds PATH | --tcp ADDR) [-p N] [--queue-cap N]
 //!                  [--batch-max N] [--threads N] [--gather-ms N]
 //!                  [--retry-after-ms N] [--client-timeout-ms N]
+//!                  [--chaos-drop N] [--chaos-dup N] [--chaos-reorder N]
+//!                  [--chaos-delay N] [--chaos-corrupt N] [--chaos-seed S]
 //! cbcastd client   (--uds PATH | --tcp ADDR) [--tenant NAME] [--ops N]
 //!                  [--seed S] [--verify]
 //! cbcastd stats    (--uds PATH | --tcp ADDR)
@@ -14,7 +16,14 @@
 //! ```
 //!
 //! `serve` binds, then blocks until a client sends the administrative
-//! shutdown frame. `client` generates a seeded traffic mix
+//! shutdown frame. The `--chaos-*` flags (rates per 10 000 frames,
+//! `--chaos-delay` capped at 5 ms, `--chaos-corrupt` flipping 3 bits)
+//! assemble a seeded frame-level fault plan the daemon self-probes at
+//! startup over a chaos-socket world: a plan the protocol-v3
+//! reliability layer cannot heal refuses to serve, a healable one
+//! starts normally and its healed faults show on the stats/stop lines.
+//!
+//! `client` generates a seeded traffic mix
 //! (`TESTKIT_SEED` conventions do not apply here — pass `--seed`),
 //! submits every op with reject-and-retry, and prints one summary line;
 //! with `--verify` it also recomputes each op solo and asserts the
@@ -42,7 +51,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use circulant_bcast::comm::{
-    CommBuilder, CrashAfter, Membership, RankComm, SocketTransport, Transport,
+    global_wire_faults, CommBuilder, CrashAfter, FaultPlan, Membership, RankComm,
+    SocketTransport, Transport,
 };
 use circulant_bcast::schedule::Skips;
 use circulant_bcast::service::{
@@ -121,6 +131,32 @@ fn cmd_serve(args: &[String]) -> i32 {
     if let Some(t) = opt(args, "--threads").and_then(|v| v.parse().ok()) {
         cfg.threads = Some(t);
     }
+    // Chaos knob: rates are per 10 000 frames; any non-zero rate arms
+    // the seeded plan (and the startup self-probe behind it).
+    let drop = opt_u64(args, "--chaos-drop", 0) as u32;
+    let dup = opt_u64(args, "--chaos-dup", 0) as u32;
+    let reorder = opt_u64(args, "--chaos-reorder", 0) as u32;
+    let delay = opt_u64(args, "--chaos-delay", 0) as u32;
+    let corrupt = opt_u64(args, "--chaos-corrupt", 0) as u32;
+    if drop + dup + reorder + delay + corrupt > 0 {
+        let mut plan = FaultPlan::new(opt_u64(args, "--chaos-seed", 1).max(1));
+        if drop > 0 {
+            plan = plan.drop_per_10k(drop);
+        }
+        if dup > 0 {
+            plan = plan.dup_per_10k(dup);
+        }
+        if reorder > 0 {
+            plan = plan.reorder_per_10k(reorder);
+        }
+        if delay > 0 {
+            plan = plan.delay_per_10k(delay, 5);
+        }
+        if corrupt > 0 {
+            plan = plan.corrupt_per_10k(corrupt, 3);
+        }
+        cfg.chaos = Some(plan);
+    }
 
     let handle = if let Some(path) = opt(args, "--uds") {
         serve_unix(Path::new(path), cfg)
@@ -144,8 +180,14 @@ fn cmd_serve(args: &[String]) -> i32 {
     // Blocks until a client sends the administrative shutdown frame.
     let metrics = handle.join();
     println!(
-        "cbcastd: stopped after {} batches ({} ops ok, {} failed, {} rejections, {} dropped)",
-        metrics.batches, metrics.completed, metrics.failed, metrics.rejected, metrics.dropped
+        "cbcastd: stopped after {} batches ({} ops ok, {} failed, {} rejections, {} dropped) \
+         wire: {}",
+        metrics.batches,
+        metrics.completed,
+        metrics.failed,
+        metrics.rejected,
+        metrics.dropped,
+        global_wire_faults(),
     );
     0
 }

@@ -1,0 +1,371 @@
+//! The chaos plane: deterministic, replayable wire-fault injection.
+//!
+//! A [`FaultPlan`] is a seeded, *stateless* fault oracle: for every
+//! `(src, dst, frame-index)` triple it returns the same [`Verdict`] —
+//! deliver, drop, duplicate, reorder, delay, or corrupt-k-bits — so an
+//! entire fault sequence is replayable from a single `TESTKIT_SEED`.
+//! No RNG state is threaded through the transport; the verdict is a
+//! pure hash of `(seed, link, index)`, which is what makes the
+//! differential chaos grid in `tests/chaos.rs` deterministic across
+//! threads, processes and reruns.
+//!
+//! Two injection points consume a plan:
+//!
+//! * **Byte level** — [`super::socket::SocketTransport`] threads the
+//!   plan into each link's raw write path (see
+//!   [`super::socket::SocketTransport::pair_world_chaos`] and
+//!   [`super::rank::TransportKind::ChaosSocket`]). Every verdict is
+//!   expressible there: duplicated, reordered and bit-flipped frames
+//!   hit the wire for real, and the v3 reliable-delivery layer
+//!   (CRC + seq/ack + retransmission) is what heals them.
+//! * **Verb level** — [`ChaosTransport`] wraps *any*
+//!   [`Transport`]. Verbs have no bytes to corrupt, so only the
+//!   verb-expressible subset applies (drop = swallow the send,
+//!   delay = sleep); the rest deliver unchanged. In-process transports
+//!   have no healing layer underneath, so a dropped verb surfaces as
+//!   the receiver's timeout — useful for failure-path tests, not for
+//!   parity.
+//!
+//! Faults are injected on the *send* side only and never touch the
+//! control frames (`HELLO`/`BYE`/`ABORT`): chaos models a lossy wire
+//! under an established link, not a hostile rendezvous (that is
+//! `tests/wire_failures.rs` territory).
+
+use std::time::Duration;
+
+use super::outcome::WireFaults;
+use super::transport::{Transport, TransportError};
+
+/// The fault-rate denominator: all rates are per-10 000 frames.
+const DENOM: u64 = 10_000;
+
+/// What the chaos plane does to one frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Pass the frame through untouched.
+    Deliver,
+    /// Swallow the frame; it never reaches the wire.
+    Drop,
+    /// Emit the frame twice back to back.
+    Duplicate,
+    /// Hold the frame and emit it *after* the link's next frame
+    /// (reorder-within-window, window = 1).
+    Reorder,
+    /// Emit the frame after sleeping this long.
+    Delay(Duration),
+    /// Flip `bits` bits at `entropy`-derived offsets in the frame
+    /// body (never the length prefix — corrupting the length would
+    /// desync the byte stream, which no checksum can heal).
+    Corrupt { bits: u32, entropy: u64 },
+}
+
+/// A seeded, deterministic fault plan: per-(link, frame-index)
+/// verdicts with configurable per-10k rates. `Copy` and comparable so
+/// it can ride inside [`super::rank::TransportKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    drop: u32,
+    dup: u32,
+    reorder: u32,
+    delay: u32,
+    delay_max_ms: u32,
+    corrupt: u32,
+    corrupt_bits: u32,
+    /// A rank whose every link drops everything, both directions —
+    /// the "provably gone" peer that must exhaust the retry budget
+    /// and escalate into the membership shrink path.
+    blackhole: Option<usize>,
+}
+
+impl FaultPlan {
+    /// A quiet plan: every verdict is `Deliver` until rates are added
+    /// with the builder methods.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop: 0,
+            dup: 0,
+            reorder: 0,
+            delay: 0,
+            delay_max_ms: 0,
+            corrupt: 0,
+            corrupt_bits: 1,
+            blackhole: None,
+        }
+    }
+
+    /// Drop `n` frames per 10k.
+    pub fn drop_per_10k(mut self, n: u32) -> FaultPlan {
+        self.drop = n;
+        self.check()
+    }
+
+    /// Duplicate `n` frames per 10k.
+    pub fn dup_per_10k(mut self, n: u32) -> FaultPlan {
+        self.dup = n;
+        self.check()
+    }
+
+    /// Reorder `n` frames per 10k (held past the link's next frame).
+    pub fn reorder_per_10k(mut self, n: u32) -> FaultPlan {
+        self.reorder = n;
+        self.check()
+    }
+
+    /// Delay `n` frames per 10k by up to `max_ms` milliseconds.
+    pub fn delay_per_10k(mut self, n: u32, max_ms: u32) -> FaultPlan {
+        self.delay = n;
+        self.delay_max_ms = max_ms;
+        self.check()
+    }
+
+    /// Corrupt `n` frames per 10k by flipping `bits` bits each.
+    pub fn corrupt_per_10k(mut self, n: u32, bits: u32) -> FaultPlan {
+        self.corrupt = n;
+        self.corrupt_bits = bits.max(1);
+        self.check()
+    }
+
+    /// Drop *everything* on every link touching `rank` — the
+    /// unreachable-peer scenario that must escalate into a shrink.
+    pub fn blackhole(mut self, rank: usize) -> FaultPlan {
+        self.blackhole = Some(rank);
+        self
+    }
+
+    /// The seed the verdicts hash from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Does this plan ever inject anything?
+    pub fn is_active(&self) -> bool {
+        self.drop + self.dup + self.reorder + self.delay + self.corrupt > 0
+            || self.blackhole.is_some()
+    }
+
+    fn check(self) -> FaultPlan {
+        let total =
+            u64::from(self.drop + self.dup + self.reorder + self.delay + self.corrupt);
+        assert!(
+            total <= DENOM,
+            "fault rates sum to {total} per 10k (more than every frame)"
+        );
+        self
+    }
+
+    /// The verdict for the `frame_idx`-th frame on the `src -> dst`
+    /// link. Pure: same plan, same triple, same verdict.
+    pub fn verdict(&self, src: usize, dst: usize, frame_idx: u64) -> Verdict {
+        if let Some(v) = self.blackhole {
+            if src == v || dst == v {
+                return Verdict::Drop;
+            }
+        }
+        let link = ((src as u64) << 32) | (dst as u64 & 0xFFFF_FFFF);
+        let h = mix64(
+            self.seed
+                .wrapping_add(mix64(link))
+                .wrapping_add(frame_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        let draw = (h % DENOM) as u32;
+        let mut edge = self.drop;
+        if draw < edge {
+            return Verdict::Drop;
+        }
+        edge += self.dup;
+        if draw < edge {
+            return Verdict::Duplicate;
+        }
+        edge += self.reorder;
+        if draw < edge {
+            return Verdict::Reorder;
+        }
+        edge += self.delay;
+        if draw < edge {
+            let ms = (h >> 32) % u64::from(self.delay_max_ms).max(1);
+            return Verdict::Delay(Duration::from_millis(ms));
+        }
+        edge += self.corrupt;
+        if draw < edge {
+            return Verdict::Corrupt { bits: self.corrupt_bits, entropy: h };
+        }
+        Verdict::Deliver
+    }
+}
+
+/// splitmix64 finalizer — the same mixer testkit's generators build
+/// on, good enough to decorrelate (seed, link, index) triples.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Verb-level chaos: wraps any [`Transport`] and applies the
+/// verb-expressible subset of a [`FaultPlan`] to `send` — `Drop`
+/// swallows the send, `Delay` sleeps first, everything else delivers
+/// (verbs carry no bytes to duplicate, reorder or corrupt; those
+/// verdicts only exist under [`super::socket::SocketTransport`]'s
+/// byte-level shim, where the reliable-delivery layer heals them).
+pub struct ChaosTransport<Tr> {
+    inner: Tr,
+    plan: FaultPlan,
+    /// Per-peer frame-index cursors, so verdicts line up with the
+    /// plan's per-link sequences.
+    sent: Vec<u64>,
+    injected: u64,
+}
+
+impl<Tr> ChaosTransport<Tr> {
+    pub fn new<T>(inner: Tr, plan: FaultPlan) -> ChaosTransport<Tr>
+    where
+        Tr: Transport<T>,
+    {
+        let p = inner.p();
+        ChaosTransport { inner, plan, sent: vec![0; p], injected: 0 }
+    }
+
+    /// How many verdicts actually changed behaviour (drops + delays).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    pub fn into_inner(self) -> Tr {
+        self.inner
+    }
+}
+
+impl<T, Tr: Transport<T>> Transport<T> for ChaosTransport<Tr> {
+    fn p(&self) -> usize {
+        self.inner.p()
+    }
+
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn send(&mut self, round: usize, peer: usize, data: Vec<T>) -> Result<(), TransportError> {
+        // Invalid targets bypass chaos so the machine-model errors
+        // (self-message, bad target, discipline) stay exact.
+        if peer >= self.inner.p() || peer == self.inner.rank() {
+            return self.inner.send(round, peer, data);
+        }
+        let idx = self.sent[peer];
+        self.sent[peer] += 1;
+        match self.plan.verdict(self.inner.rank(), peer, idx) {
+            Verdict::Drop => {
+                self.injected += 1;
+                Ok(())
+            }
+            Verdict::Delay(d) => {
+                self.injected += 1;
+                std::thread::sleep(d.min(Duration::from_millis(50)));
+                self.inner.send(round, peer, data)
+            }
+            _ => self.inner.send(round, peer, data),
+        }
+    }
+
+    fn flush(&mut self, round: usize) -> Result<(), TransportError> {
+        self.inner.flush(round)
+    }
+
+    fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
+        self.inner.recv(round, peer)
+    }
+
+    fn failed_peers(&self) -> Vec<usize> {
+        self.inner.failed_peers()
+    }
+
+    fn wire_faults(&self) -> Option<WireFaults> {
+        self.inner.wire_faults()
+    }
+
+    fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
+        self.inner.close(error)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::ThreadTransport;
+
+    #[test]
+    fn verdicts_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::new(7).drop_per_10k(2_000).corrupt_per_10k(1_000, 2);
+        let b = FaultPlan::new(7).drop_per_10k(2_000).corrupt_per_10k(1_000, 2);
+        let c = FaultPlan::new(8).drop_per_10k(2_000).corrupt_per_10k(1_000, 2);
+        let seq = |p: &FaultPlan| (0..200).map(|i| p.verdict(1, 2, i)).collect::<Vec<_>>();
+        assert_eq!(seq(&a), seq(&b), "same seed, same plan, same verdicts");
+        assert_ne!(seq(&a), seq(&c), "a different seed draws differently");
+        assert_ne!(
+            seq(&a),
+            (0..200).map(|i| a.verdict(2, 1, i)).collect::<Vec<_>>(),
+            "each link direction draws independently"
+        );
+    }
+
+    #[test]
+    fn rates_land_near_their_nominal_values() {
+        let plan = FaultPlan::new(42).drop_per_10k(1_000);
+        let drops = (0..10_000u64)
+            .filter(|&i| plan.verdict(0, 1, i) == Verdict::Drop)
+            .count();
+        assert!(
+            (800..1_200).contains(&drops),
+            "10% nominal drew {drops} drops in 10k frames"
+        );
+    }
+
+    #[test]
+    fn a_quiet_plan_delivers_everything() {
+        let plan = FaultPlan::new(1);
+        assert!(!plan.is_active());
+        assert!((0..1_000).all(|i| plan.verdict(3, 4, i) == Verdict::Deliver));
+    }
+
+    #[test]
+    fn blackhole_swallows_both_directions() {
+        let plan = FaultPlan::new(9).blackhole(2);
+        assert!(plan.is_active());
+        assert_eq!(plan.verdict(2, 0, 5), Verdict::Drop);
+        assert_eq!(plan.verdict(1, 2, 5), Verdict::Drop);
+        assert_eq!(plan.verdict(0, 1, 5), Verdict::Deliver);
+    }
+
+    #[test]
+    fn corrupt_verdicts_carry_the_requested_bit_count() {
+        let plan = FaultPlan::new(3).corrupt_per_10k(10_000, 3);
+        match plan.verdict(0, 1, 0) {
+            Verdict::Corrupt { bits, .. } => assert_eq!(bits, 3),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_verbs_surface_as_the_receivers_timeout() {
+        let mut w =
+            ThreadTransport::<i64>::world_with_timeout(2, Duration::from_millis(100));
+        let t1 = w.pop().unwrap();
+        let t0 = w.pop().unwrap();
+        let mut c0 = ChaosTransport::new(t0, FaultPlan::new(5).drop_per_10k(10_000));
+        let h = std::thread::spawn(move || {
+            let mut t1 = t1;
+            t1.recv(0, 0)
+        });
+        c0.send(0, 1, vec![7i64]).unwrap(); // swallowed
+        c0.flush(0).unwrap();
+        assert_eq!(c0.injected(), 1);
+        let e = h.join().unwrap().unwrap_err();
+        assert!(
+            matches!(e, TransportError::Timeout { .. }),
+            "no healing layer under a verb-level drop: {e:?}"
+        );
+    }
+}

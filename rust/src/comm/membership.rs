@@ -30,15 +30,25 @@
 //!   the inner endpoint, so the world sees a genuine crash signature
 //!   (silence in-process; EOF-without-BYE on the wire), not a polite
 //!   departure.
-//! * [`elastic_bcast`] — the god-view shrink-and-recover driver used by
-//!   the recovery suite: run a broadcast, harvest suspects on failure,
-//!   [`Membership::shrink`], re-elect the root if it died (lowest
-//!   surviving global rank), and restart on the smaller world until the
-//!   run completes or the shrink budget is exhausted
-//!   ([`CommError::MembershipChanged`]). Because each epoch restarts
-//!   the collective from its root's payload, the surviving world's
-//!   result is **bit-identical to a fresh run at the shrunken size** —
-//!   the recovery guarantee the tests pin.
+//! * [`elastic_bcast`] / [`elastic_reduce`] — the god-view
+//!   shrink-and-recover drivers used by the recovery suite: run the
+//!   collective, harvest suspects on failure, [`Membership::shrink`],
+//!   re-elect the root if it died (lowest surviving global rank), and
+//!   restart on the smaller world until the run completes or the shrink
+//!   budget is exhausted ([`CommError::MembershipChanged`]). Both share
+//!   one driver skeleton and differ only in how each epoch's starting
+//!   buffers are laid out (a broadcast reseeds from the root's payload;
+//!   a reduction re-contributes every survivor's original input).
+//!   Because each epoch restarts the collective from scratch, the
+//!   surviving world's result is **bit-identical to a fresh run at the
+//!   shrunken size** — the recovery guarantee the tests pin.
+//!
+//! Injected faults here are *crashes* ([`CrashPlan`]): ranks that die
+//! and stay dead, consuming a membership epoch. The other fault family
+//! — transient wire faults that the protocol-v3 socket layer heals in
+//! place without shrinking anything — lives in [`super::chaos`]
+//! (whose `FaultPlan` names frame-level drop/corrupt/reorder verdicts,
+//! not deaths).
 //!
 //! The multi-process analogue (one OS process per rank, real kills)
 //! lives in the `cbcastd rank` subcommand and the CI `recovery-smoke`
@@ -49,7 +59,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::collectives::common::Element;
+use crate::collectives::common::{Element, ReduceOp};
 use crate::schedule::Skips;
 use crate::sim::network::SimError;
 
@@ -293,18 +303,23 @@ impl<T, Tr: Transport<T>> Transport<T> for CrashAfter<Tr> {
 }
 
 /// Which ranks to kill, and when: `(epoch, global rank, crash round)`
-/// triples consumed by [`elastic_bcast`]. Entries for ranks already
-/// dead in the given epoch are ignored.
+/// triples consumed by [`elastic_bcast`]/[`elastic_reduce`]. Entries
+/// for ranks already dead in the given epoch are ignored.
+///
+/// Named for what it injects: permanent **crashes** that consume a
+/// membership epoch. Transient wire faults (which heal without a
+/// shrink) are planned by the frame-level [`super::chaos::FaultPlan`]
+/// instead.
 #[derive(Debug, Clone, Default)]
-pub struct FaultPlan {
+pub struct CrashPlan {
     crashes: Vec<(u64, usize, usize)>,
 }
 
-impl FaultPlan {
-    /// An empty plan (no faults — [`elastic_bcast`] then degenerates to
-    /// a plain fan-out run).
+impl CrashPlan {
+    /// An empty plan (no faults — the elastic drivers then degenerate
+    /// to a plain fan-out run).
     pub fn none() -> Self {
-        FaultPlan::default()
+        CrashPlan::default()
     }
 
     /// Kill global rank `global` at transport round `round` of epoch
@@ -365,15 +380,28 @@ struct Obs<T> {
 /// pads the wire case.
 const SETTLE: Duration = Duration::from_millis(150);
 
-/// Run one epoch's broadcast over a concrete transport world, injecting
-/// the planned crashes, and collect every rank's observation. Never
-/// fails as a whole — per-rank errors ride inside the observations so
-/// the driver sees all of them.
+/// Which rooted collective an elastic epoch runs — the selector
+/// [`run_epoch`] dispatches on. `Reduce` carries the shared operator
+/// (already `Send + Sync` by the [`ReduceOp`] contract, so one `Arc`
+/// serves every rank thread).
+enum Collective<T> {
+    Bcast,
+    Reduce { op: Arc<dyn ReduceOp<T>> },
+}
+
+/// Run one epoch's collective over a concrete transport world, injecting
+/// the planned crashes, and collect every rank's observation. `inits`
+/// holds each dense rank's starting buffer (the driver lays these out
+/// per collective: a broadcast seeds only the root, a reduction seeds
+/// every rank with its own contribution). Never fails as a whole —
+/// per-rank errors ride inside the observations so the driver sees all
+/// of them.
 fn run_epoch<T, Tr>(
     world: Vec<Tr>,
     root_d: usize,
-    data: &[T],
+    inits: &[Vec<T>],
     blocks: usize,
+    coll: &Collective<T>,
     victims: &BTreeMap<usize, usize>,
 ) -> Vec<Obs<T>>
 where
@@ -381,6 +409,7 @@ where
     Tr: Transport<T>,
 {
     let pp = world.len();
+    debug_assert_eq!(inits.len(), pp);
     let sk = Arc::new(Skips::new(pp));
     std::thread::scope(|s| {
         let handles: Vec<_> = world
@@ -390,20 +419,28 @@ where
                 let sk = sk.clone();
                 s.spawn(move || {
                     let rc = RankComm::new(pp, r, sk);
-                    let mut buf = if r == root_d {
-                        data.to_vec()
-                    } else {
-                        vec![T::default(); data.len()]
-                    };
+                    let mut buf = inits[r].clone();
                     if let Some(&cr) = victims.get(&r) {
                         let mut dead = CrashAfter::new(tr, cr);
-                        let err = rc.bcast(&mut dead, root_d, &mut buf, blocks).err();
+                        let err = match coll {
+                            Collective::Bcast => {
+                                rc.bcast(&mut dead, root_d, &mut buf, blocks).err()
+                            }
+                            Collective::Reduce { op } => rc
+                                .reduce(&mut dead, root_d, &mut buf, blocks, op.clone())
+                                .err(),
+                        };
                         // `dead` drops here WITHOUT closing the inner
                         // endpoint — the crash signature.
                         Obs { buf: None, harvest: Vec::new(), err, victim: true }
                     } else {
                         let mut tr = tr;
-                        let res = rc.bcast(&mut tr, root_d, &mut buf, blocks);
+                        let res = match coll {
+                            Collective::Bcast => rc.bcast(&mut tr, root_d, &mut buf, blocks),
+                            Collective::Reduce { op } => {
+                                rc.reduce(&mut tr, root_d, &mut buf, blocks, op.clone())
+                            }
+                        };
                         let (buf, err) = match res {
                             Ok(_) => (Some(buf), None),
                             Err(e) => (None, Some(e)),
@@ -424,32 +461,26 @@ where
     })
 }
 
-/// Shrink-and-recover broadcast: the god-view elastic driver.
-///
-/// Starts at the full `p`-rank world and repeats — run the broadcast
-/// (injecting `plan`'s crashes for the current epoch), and on failure
-/// harvest the survivors' failure detectors, [`Membership::shrink`] by
-/// their union, re-elect the root if it died (lowest surviving global
-/// rank takes over and serves `data`), and restart on the rebuilt
-/// world — until an epoch completes cleanly or `max_shrinks` is
-/// exhausted ([`CommError::MembershipChanged`] with the last change's
-/// receipt). Failures nobody can attribute to a dead rank (genuine
-/// schedule violations, misuse) stay terminal and are returned as-is.
-///
-/// Supported on [`TransportKind::Threads`] and
-/// [`TransportKind::Socket`] — the two worlds with failure detectors.
-/// `timeout` is the per-world receive deadline (keep it well above the
-/// scheduler noise of the host; it bounds how long detection takes).
+/// The shared shrink-and-recover skeleton behind [`elastic_bcast`] and
+/// [`elastic_reduce`]: run the collective (injecting `plan`'s crashes
+/// for the current epoch), and on failure harvest the survivors'
+/// failure detectors, [`Membership::shrink`] by their union, re-elect
+/// the root if it died, and restart on the rebuilt world — until an
+/// epoch completes cleanly or `max_shrinks` is exhausted. `make_inits`
+/// lays out each epoch's dense starting buffers from the current
+/// membership and dense root — the only point where the two collectives
+/// differ in recovery semantics.
 #[allow(clippy::too_many_arguments)]
-pub fn elastic_bcast<T: Element>(
+fn elastic_drive<T: Element>(
     p: usize,
     root: usize,
-    data: &[T],
     blocks: usize,
     kind: TransportKind,
-    plan: &FaultPlan,
+    plan: &CrashPlan,
     max_shrinks: usize,
     timeout: Duration,
+    coll: Collective<T>,
+    make_inits: impl Fn(&Membership, usize) -> Vec<Vec<T>>,
 ) -> Result<ElasticReport<T>, CommError> {
     assert!(p > 0, "a world needs at least one rank");
     assert!(root < p, "root {root} out of range for p = {p}");
@@ -468,13 +499,15 @@ pub fn elastic_bcast<T: Element>(
             .into_iter()
             .filter_map(|(g, r)| membership.dense(g).map(|d| (d, r)))
             .collect();
+        let inits = make_inits(&membership, root_d);
 
         let obs: Vec<Obs<T>> = match kind {
             TransportKind::Threads => run_epoch(
                 ThreadTransport::<T>::world_with_timeout(pp, timeout),
                 root_d,
-                data,
+                &inits,
                 blocks,
+                &coll,
                 &victims,
             ),
             TransportKind::Socket => run_epoch(
@@ -482,8 +515,23 @@ pub fn elastic_bcast<T: Element>(
                     CommError::BadRequest(format!("socket world (p = {pp}): {e}"))
                 })?,
                 root_d,
-                data,
+                &inits,
                 blocks,
+                &coll,
+                &victims,
+            ),
+            TransportKind::ChaosSocket(chaos) => run_epoch(
+                SocketTransport::<T>::pair_world_chaos(pp, timeout, chaos).map_err(
+                    |e| {
+                        CommError::BadRequest(format!(
+                            "chaos socket world (p = {pp}): {e}"
+                        ))
+                    },
+                )?,
+                root_d,
+                &inits,
+                blocks,
+                &coll,
                 &victims,
             ),
             TransportKind::Loopback => {
@@ -495,13 +543,22 @@ pub fn elastic_bcast<T: Element>(
             }
         };
 
-        // Detection: the union of the *survivors'* detector outputs.
-        // Victims' observations are discarded wholesale — a dead rank
-        // reports nothing. Only if no detector fired do we fall back to
-        // what the survivor errors themselves name (the muted-rank
-        // case: a peer that is silent but never closed a socket).
+        // Detection: the union of the *survivors'* detector outputs —
+        // except reporters that accuse **more than half the world**,
+        // whose own wire is the likelier culprit. (A blackholed rank
+        // exhausts its retry budget toward *every* peer and would
+        // otherwise vote the whole world dead; meanwhile every peer's
+        // budget exhausts toward *it*, and that majority accusation is
+        // the signal that survives the filter.) Victims' observations
+        // are discarded wholesale — a dead rank reports nothing. Only
+        // if no detector fired do we fall back to what the survivor
+        // errors themselves name (the muted-rank case: a peer that is
+        // silent but never closed a socket).
         let mut suspects_d: BTreeSet<usize> = BTreeSet::new();
         for o in obs.iter().filter(|o| !o.victim) {
+            if o.harvest.len() * 2 > pp {
+                continue;
+            }
             suspects_d.extend(o.harvest.iter().copied());
         }
         if suspects_d.is_empty() {
@@ -538,15 +595,23 @@ pub fn elastic_bcast<T: Element>(
                 .expect_err("at least one rank errored"));
         }
 
-        // A shrink is due. Out of budget → typed membership error.
+        // A shrink is due. Out of budget — or a suspects set covering
+        // *every* member, which no world can shrink past (mutual
+        // accusation under symmetric faults, e.g. a blackholed two-rank
+        // world) — → typed membership error.
         let suspects_g: Vec<usize> =
             suspects_d.iter().map(|&d| membership.global(d)).collect();
-        if changes.len() >= max_shrinks {
-            let (_, change) = membership.shrink(&suspects_g);
+        if changes.len() >= max_shrinks || suspects_g.len() >= membership.p() {
+            let survivors: Vec<usize> = membership
+                .members()
+                .iter()
+                .copied()
+                .filter(|g| !suspects_g.contains(g))
+                .collect();
             return Err(CommError::MembershipChanged {
-                epoch: change.epoch,
-                failed: change.failed,
-                survivors: change.survivors,
+                epoch: membership.epoch() + 1,
+                failed: suspects_g,
+                survivors,
             });
         }
         let (next, change) = membership.shrink(&suspects_g);
@@ -554,6 +619,111 @@ pub fn elastic_bcast<T: Element>(
         root_g = membership.elect_root(root_g);
         changes.push(change);
     }
+}
+
+/// Shrink-and-recover broadcast: the god-view elastic driver.
+///
+/// Starts at the full `p`-rank world and repeats — run the broadcast
+/// (injecting `plan`'s crashes for the current epoch), and on failure
+/// harvest the survivors' failure detectors, [`Membership::shrink`] by
+/// their union, re-elect the root if it died (lowest surviving global
+/// rank takes over and serves `data`), and restart on the rebuilt
+/// world — until an epoch completes cleanly or `max_shrinks` is
+/// exhausted ([`CommError::MembershipChanged`] with the last change's
+/// receipt). Failures nobody can attribute to a dead rank (genuine
+/// schedule violations, misuse) stay terminal and are returned as-is.
+///
+/// Supported on [`TransportKind::Threads`], [`TransportKind::Socket`]
+/// and [`TransportKind::ChaosSocket`] — the worlds with failure
+/// detectors (the chaos world additionally injects transient wire
+/// faults, which the v3 socket layer heals *without* consuming a
+/// shrink). `timeout` is the per-world receive deadline (keep it well
+/// above the scheduler noise of the host; it bounds how long detection
+/// takes).
+#[allow(clippy::too_many_arguments)]
+pub fn elastic_bcast<T: Element>(
+    p: usize,
+    root: usize,
+    data: &[T],
+    blocks: usize,
+    kind: TransportKind,
+    plan: &CrashPlan,
+    max_shrinks: usize,
+    timeout: Duration,
+) -> Result<ElasticReport<T>, CommError> {
+    elastic_drive(
+        p,
+        root,
+        blocks,
+        kind,
+        plan,
+        max_shrinks,
+        timeout,
+        Collective::Bcast,
+        |m, root_d| {
+            (0..m.p())
+                .map(|d| {
+                    if d == root_d {
+                        data.to_vec()
+                    } else {
+                        vec![T::default(); data.len()]
+                    }
+                })
+                .collect()
+        },
+    )
+}
+
+/// Shrink-and-recover reduction: [`elastic_bcast`]'s sibling on the
+/// same harvest → shrink → re-elect → restart skeleton.
+///
+/// `inputs` holds one contribution per **global** (epoch-0) rank;
+/// every epoch re-contributes each *survivor's* original input, so
+/// a recovered run's result is bit-identical to a fresh reduction at
+/// the shrunken size over the survivors' inputs — a dead rank's
+/// contribution is genuinely lost, exactly as if it had never joined.
+/// The root's entry in [`ElasticReport::buffers`] holds the reduction;
+/// non-root entries hold whatever partial accumulations the circulant
+/// schedule left behind (deterministic, but not meaningful). If the
+/// root dies, the lowest surviving global rank takes over and the
+/// reduction restarts toward it.
+#[allow(clippy::too_many_arguments)]
+pub fn elastic_reduce<T: Element>(
+    p: usize,
+    root: usize,
+    inputs: &[Vec<T>],
+    blocks: usize,
+    op: Arc<dyn ReduceOp<T>>,
+    kind: TransportKind,
+    plan: &CrashPlan,
+    max_shrinks: usize,
+    timeout: Duration,
+) -> Result<ElasticReport<T>, CommError> {
+    if inputs.len() != p {
+        return Err(CommError::BadRequest(format!(
+            "elastic reduce needs one input per rank: got {} for p = {p}",
+            inputs.len()
+        )));
+    }
+    if let Some(bad) = inputs.iter().position(|i| i.len() != inputs[0].len()) {
+        return Err(CommError::BadRequest(format!(
+            "elastic reduce inputs must agree in length: rank {bad} has {} elements, \
+             rank 0 has {}",
+            inputs[bad].len(),
+            inputs[0].len()
+        )));
+    }
+    elastic_drive(
+        p,
+        root,
+        blocks,
+        kind,
+        plan,
+        max_shrinks,
+        timeout,
+        Collective::Reduce { op },
+        |m, _| m.members().iter().map(|&g| inputs[g].clone()).collect(),
+    )
 }
 
 #[cfg(test)]
@@ -681,7 +851,7 @@ mod tests {
             &data,
             4,
             TransportKind::Threads,
-            &FaultPlan::none(),
+            &CrashPlan::none(),
             2,
             Duration::from_secs(5),
         )
@@ -693,5 +863,66 @@ mod tests {
         for (g, buf) in &report.buffers {
             assert_eq!(buf, &data, "rank {g}");
         }
+    }
+
+    #[test]
+    fn elastic_reduce_without_faults_sums_every_contribution() {
+        use crate::collectives::SumOp;
+        let p = 8;
+        let n = 40usize;
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..n).map(|i| (r * 1000 + i) as i64).collect()).collect();
+        let expect: Vec<i64> =
+            (0..n).map(|i| inputs.iter().map(|row| row[i]).sum()).collect();
+        let report = elastic_reduce(
+            p,
+            3,
+            &inputs,
+            4,
+            Arc::new(SumOp),
+            TransportKind::Threads,
+            &CrashPlan::none(),
+            2,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(report.changes.is_empty());
+        assert_eq!(report.root, 3);
+        let (g, buf) =
+            report.buffers.iter().find(|(g, _)| *g == 3).expect("root payload present");
+        assert_eq!(*g, 3);
+        assert_eq!(buf, &expect);
+    }
+
+    #[test]
+    fn elastic_reduce_rejects_mismatched_inputs() {
+        use crate::collectives::SumOp;
+        let inputs = vec![vec![1i64; 8], vec![2i64; 7]];
+        let err = elastic_reduce(
+            2,
+            0,
+            &inputs,
+            2,
+            Arc::new(SumOp),
+            TransportKind::Threads,
+            &CrashPlan::none(),
+            1,
+            Duration::from_secs(5),
+        )
+        .unwrap_err();
+        assert!(matches!(err, CommError::BadRequest(_)));
+        let err = elastic_reduce(
+            4,
+            0,
+            &inputs,
+            2,
+            Arc::new(SumOp),
+            TransportKind::Threads,
+            &CrashPlan::none(),
+            1,
+            Duration::from_secs(5),
+        )
+        .unwrap_err();
+        assert!(matches!(err, CommError::BadRequest(_)));
     }
 }

@@ -71,7 +71,14 @@
 //! in-process ([`SocketTransport::pair_world`]) or over UDS/TCP
 //! rendezvous between processes, with a versioned handshake pinning
 //! `(p, rank, world_id)` and wire faults mapped into the same
-//! [`TransportError`] vocabulary. [`BackendKind::Socket`] runs the
+//! [`TransportError`] vocabulary. Protocol v3 layers reliable
+//! delivery underneath — CRC32-trailed frames, per-link seq/ack,
+//! retransmission with capped backoff, a dedup window — so transient
+//! wire faults heal in place and only a provably-gone peer escalates
+//! to the recovery plane; the deterministic [`chaos`] plane
+//! ([`FaultPlan`], [`ChaosTransport`],
+//! [`SocketTransport::pair_world_chaos`]) injects replayable fault
+//! sequences to pin exactly that. [`BackendKind::Socket`] runs the
 //! god-view API on top of it — still bit-identical to lockstep — and
 //! [`crate::service`] builds a long-lived collective daemon over the
 //! same framing. See [`socket`].
@@ -110,6 +117,7 @@
 //! — see [`traffic`] for the model and guarantees.
 
 pub mod backend;
+pub mod chaos;
 pub mod communicator;
 pub mod membership;
 pub mod nonblocking;
@@ -124,12 +132,13 @@ pub use backend::{
     build_procs, BackendKind, EngineBackend, ExecBackend, LockstepBackend, SocketBackend,
     SpmdBackend, ThreadedBackend,
 };
+pub use chaos::{ChaosTransport, FaultPlan, Verdict};
 pub use membership::{
-    elastic_bcast, suspect_of, CrashAfter, ElasticReport, FaultPlan, Membership,
-    MembershipChange,
+    elastic_bcast, elastic_reduce, suspect_of, CrashAfter, CrashPlan, ElasticReport,
+    Membership, MembershipChange,
 };
 pub use rank::{RankComm, RankRun, TransportKind};
-pub use socket::{fresh_world_id, SocketTransport};
+pub use socket::{fresh_world_id, global_wire_faults, SocketTransport};
 pub use transport::{
     configured_timeout, LoopbackTransport, ThreadTransport, Transport, TransportError,
 };
@@ -137,7 +146,7 @@ pub use communicator::{CommBuilder, Communicator};
 pub use nonblocking::{
     IallgathervReq, IallreduceReq, IbcastReq, IreduceReq, IreduceScatterReq, Pending, Window,
 };
-pub use outcome::{CommError, Outcome, TenantUsage};
+pub use outcome::{CommError, Outcome, TenantUsage, WireFaults};
 pub use request::{
     resolve_blocks, Algo, AllgathervReq, AllreduceReq, BcastReq, Kind, ReduceReq,
     ReduceScatterBlockReq, ReduceScatterReq, TuningParams, SMALL_MSG_BYTES,

@@ -83,6 +83,56 @@ pub struct TenantUsage {
     pub restarted: usize,
 }
 
+/// Reliable-delivery counters of a healing wire layer
+/// ([`crate::comm::SocketTransport`]'s protocol-v3 seq/ack/CRC
+/// machinery). These count *transient* faults that were absorbed in
+/// place — deliberately kept **out** of [`RunStats`]/[`Outcome`], so a
+/// run over a lossy wire stays bit-identical to a fault-free run (the
+/// differential chaos grid pins exactly that). Surfaced instead via
+/// [`crate::comm::Transport::wire_faults`] and the service plane's
+/// metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireFaults {
+    /// DATA frames re-sent because no cumulative ACK covered them
+    /// within the retransmission timeout.
+    pub retransmits: u64,
+    /// Received frames discarded by the per-link dedup window
+    /// (duplicated by the wire, or a retransmit whose original won).
+    pub dup_drops: u64,
+    /// Received frames discarded because their CRC32 trailer did not
+    /// match — healed by the sender's retransmission, not a poison.
+    pub crc_fails: u64,
+    /// Peers declared crashed after the retry budget was exhausted —
+    /// the hand-off from the healing layer to the
+    /// [`crate::comm::Membership`] shrink path.
+    pub escalations: u64,
+}
+
+impl WireFaults {
+    /// Did the wire layer see (and absorb or escalate) anything?
+    pub fn any(&self) -> bool {
+        self.retransmits + self.dup_drops + self.crc_fails + self.escalations > 0
+    }
+
+    /// Fold another endpoint's counters into this accumulator.
+    pub fn merge(&mut self, other: &WireFaults) {
+        self.retransmits += other.retransmits;
+        self.dup_drops += other.dup_drops;
+        self.crc_fails += other.crc_fails;
+        self.escalations += other.escalations;
+    }
+}
+
+impl std::fmt::Display for WireFaults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "retransmits={} dup_drops={} crc_fails={} escalations={}",
+            self.retransmits, self.dup_drops, self.crc_fails, self.escalations
+        )
+    }
+}
+
 /// Unified error type of the `comm` layer.
 #[derive(Debug)]
 pub enum CommError {

@@ -83,6 +83,7 @@ use crate::sim::cost::CostModel;
 use crate::sim::network::{Msg, RankProc, RunStats};
 use crate::sim::threads::fold_send_logs;
 
+use super::chaos::FaultPlan;
 use super::outcome::CommError;
 use super::request::Kind;
 use super::socket::SocketTransport;
@@ -541,6 +542,13 @@ pub enum TransportKind {
     /// `UnixStream::pair` meshes: the wire plane's real-socket
     /// endpoints — what [`crate::comm::BackendKind::Socket`] uses.
     Socket,
+    /// [`TransportKind::Socket`] with a seeded [`FaultPlan`] threaded
+    /// into every link's write path: the chaos plane's byte-level
+    /// injection point. The v3 reliability layer heals the injected
+    /// faults, so results stay bit-identical to [`TransportKind::Socket`]
+    /// — the differential chaos grid (`tests/chaos.rs`) pins exactly
+    /// that.
+    ChaosSocket(FaultPlan),
 }
 
 /// Run `per_rank` on one scoped thread per world endpoint; a panicking
@@ -636,6 +644,12 @@ fn make_world<T: Element>(p: usize, kind: TransportKind) -> Result<WorldEndpoint
         TransportKind::Socket => WorldEndpoints::Socket(
             SocketTransport::pair_world(p)
                 .map_err(|e| CommError::BadRequest(format!("socket world (p = {p}): {e}")))?,
+        ),
+        TransportKind::ChaosSocket(plan) => WorldEndpoints::Socket(
+            SocketTransport::pair_world_chaos(p, super::transport::configured_timeout(), plan)
+                .map_err(|e| {
+                    CommError::BadRequest(format!("chaos socket world (p = {p}): {e}"))
+                })?,
         ),
     })
 }

@@ -13,21 +13,69 @@
 //! as [`TransportError::Machine`] — the SPMD parity suite pins
 //! `SocketTransport` bit-identical (buffers *and* stats) to lockstep.
 //!
-//! # Frames
+//! # Frames (protocol v3)
 //!
 //! Everything on a wire-plane connection is a length-prefixed frame
-//! (all integers little-endian; `len` counts the type byte plus body):
+//! (all integers little-endian; `len` counts the type byte, the body
+//! and the trailing checksum):
 //!
 //! ```text
-//! [ len: u32 ][ type: u8 ][ body: len - 1 bytes ]
+//! [ len: u32 ][ type: u8 ][ body ][ crc32: u32 ]
 //!
 //! HELLO (1)  magic u32, version u16, p u32, rank u32,
 //!            world_id u64, elem_bytes u32, epoch u64
-//! DATA  (2)  round u32, src u32, dst u32, count u32,
-//!            payload: count * elem_bytes bytes
+//! DATA  (2)  seq u64, ack u64, round u32, src u32, dst u32,
+//!            count u32, payload: count * elem_bytes bytes
 //! BYE   (3)  (empty) — clean close of the sender's write side
 //! ABORT (4)  reason: utf-8 — the sender's world was poisoned
+//! ACK   (5)  ack u64 — cumulative acknowledgement (idle fallback)
 //! ```
+//!
+//! The CRC32 (IEEE, reflected) covers `[type][body]`. v3 added the
+//! checksum trailer, the `seq`/`ack` fields on `DATA` and the `ACK`
+//! frame; v2 had appended the membership `epoch` field to `HELLO`.
+//!
+//! # Reliable delivery
+//!
+//! Transient wire faults — a dropped, duplicated, reordered, delayed
+//! or bit-flipped frame — must not be confused with a crashed peer.
+//! v3 layers a retransmission protocol under the mailbox:
+//!
+//! * every `DATA` frame carries a per-link sequence number (`seq`,
+//!   from 1) and a cumulative acknowledgement (`ack`) of the highest
+//!   contiguously-delivered sequence in the opposite direction;
+//! * the sender keeps each unacknowledged frame in a bounded
+//!   retransmission queue and re-emits it on a capped exponential
+//!   backoff ([`rto_for`]) driven by a per-endpoint ticker thread;
+//! * a receiver with ACK debt and no outgoing `DATA` to piggyback on
+//!   announces progress with an idle `ACK` frame;
+//! * a per-link dedup window (`rx_seen` above the contiguous
+//!   `rx_delivered` floor) drops duplicates — wire-duplicated frames
+//!   and retransmissions whose original won — and re-announces the
+//!   cumulative ACK so the sender's queue drains;
+//! * a frame whose checksum fails is discarded silently: the sender's
+//!   retransmission heals it.
+//!
+//! Corruption and loss therefore become retransmits, not a poisoned
+//! world. Only *retry-budget exhaustion* ([`MAX_ATTEMPTS`]) — or a
+//! hard write error on a link whose peer never announced departure —
+//! escalates: the peer is marked **crashed**, feeding the existing
+//! [`Transport::failed_peers`] → `Membership::shrink` ladder. The
+//! counters ([`Transport::wire_faults`], [`global_wire_faults`]) are
+//! deliberately kept out of run statistics so a run over a lossy wire
+//! stays bit-identical to a fault-free run.
+//!
+//! # The chaos shim
+//!
+//! [`SocketTransport::pair_world_chaos`] threads a deterministic
+//! [`FaultPlan`] into every link's raw write path: each emission
+//! draws a [`Verdict`] (drop / duplicate / reorder / delay /
+//! corrupt-k-bits) from the seeded plan, so whole fault sequences are
+//! replayable. Faults apply to `DATA`/`ACK` emissions only — control
+//! frames (`HELLO`/`BYE`/`ABORT`) model the established link, not the
+//! rendezvous — and retransmissions draw fresh verdicts. Corruption
+//! never touches the length prefix: a desynced byte stream is the one
+//! fault no checksum can heal.
 //!
 //! # Handshake
 //!
@@ -37,8 +85,8 @@
 //! epoch — is a typed failure: at rendezvous time it is an
 //! [`io::Error`] from the constructor; after assembly the link's
 //! reader poisons the local world and every blocked verb fails with
-//! [`TransportError::Shutdown`]. The epoch field (v2) lets the
-//! recovery plane rebuild a shrunken world under `epoch + 1` and have
+//! [`TransportError::Shutdown`]. The epoch field lets the recovery
+//! plane rebuild a shrunken world under `epoch + 1` and have
 //! stragglers from the dead epoch refused at the door instead of
 //! corrupting the new world.
 //!
@@ -49,17 +97,22 @@
 //! on clean completion, `ABORT` on failure) before the socket closes,
 //! while a **crash** — the process died, the endpoint was dropped
 //! without [`Transport::close`] — slams the socket shut with no
-//! farewell frame (plain EOF) or mid-frame (truncation / reset).
-//! [`Transport::failed_peers`] reports the peers whose links died the
-//! second way. Because the mesh is full, every survivor observes a
-//! dead peer's EOF on its *own* direct link — the survivors' failed
-//! sets agree without any coordinator or extra exchange.
+//! farewell frame (plain EOF) or mid-frame (truncation / reset). The
+//! reliability layer adds the third detector: a peer that acknowledges
+//! nothing for [`MAX_ATTEMPTS`] retransmissions of one frame is
+//! declared crashed even though its socket is formally open.
+//! [`Transport::failed_peers`] reports all of them. Because the mesh
+//! is full, every survivor observes a dead peer's silence on its *own*
+//! direct link — the survivors' failed sets agree without any
+//! coordinator or extra exchange.
 //!
 //! # Failure mapping
 //!
 //! Wire faults land in the same vocabulary the in-process transports
 //! use, never as raw I/O errors from `send`/`recv`:
 //!
+//! * transient faults (drop / duplicate / reorder / delay / corrupt)
+//!   → healed in place by the reliability layer; no error at all;
 //! * peer closed cleanly (`BYE` or EOF at a frame boundary) but the
 //!   schedule still expects a message from it →
 //!   [`SimError::MissingMessage`];
@@ -69,6 +122,10 @@
 //!   world poisoned with the diagnosis, verbs fail as
 //!   [`TransportError::Shutdown`] (collisions use the
 //!   [`SimError::ReceivePortBusy`] text);
+//! * a reader or ticker thread that panics poisons the endpoint state
+//!   mutex; every lock site recovers the guard and converts the panic
+//!   into a world-poisoning `Shutdown` diagnosis instead of silent
+//!   thread death;
 //! * a rank that fails broadcasts `ABORT` on [`Transport::close`], so
 //!   poisoning propagates across process boundaries too.
 //!
@@ -84,23 +141,26 @@
 //!   peers by their `HELLO`, so accept order never matters).
 
 use std::any::TypeId;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use super::chaos::{FaultPlan, Verdict};
+use super::outcome::WireFaults;
 use super::transport::{configured_timeout, Discipline, Transport, TransportError};
 use crate::sim::network::SimError;
 
 /// Wire protocol magic ("CBW1") — first field of every `HELLO`.
 pub(crate) const MAGIC: u32 = 0x4342_5731;
 /// Wire protocol version; bumped on any frame-format change.
-/// v2 appended the membership `epoch` field to `HELLO`.
-pub(crate) const VERSION: u16 = 2;
+/// v2 appended the membership `epoch` field to `HELLO`; v3 added the
+/// CRC32 trailer, `seq`/`ack` on `DATA`, and the `ACK` frame.
+pub(crate) const VERSION: u16 = 3;
 /// Sanity bound on a single frame (256 MiB) — anything larger is a
 /// corrupt length prefix, not a payload.
 pub(crate) const MAX_FRAME: usize = 1 << 28;
@@ -109,6 +169,40 @@ const FT_HELLO: u8 = 1;
 const FT_DATA: u8 = 2;
 const FT_BYE: u8 = 3;
 const FT_ABORT: u8 = 4;
+const FT_ACK: u8 = 5;
+
+// ---------------------------------------------------------------------
+// Reliability parameters
+// ---------------------------------------------------------------------
+
+/// Transmissions of one frame before the peer is declared crashed:
+/// the original send plus `MAX_ATTEMPTS` retransmissions.
+const MAX_ATTEMPTS: u32 = 8;
+/// First retransmission timeout; doubles per attempt up to
+/// [`RTO_CAP`].
+const RTO_BASE: Duration = Duration::from_millis(25);
+/// Retransmission timeout ceiling.
+const RTO_CAP: Duration = Duration::from_millis(200);
+/// The ticker's cadence: retransmission scan + idle-ACK fallback.
+const TICK: Duration = Duration::from_millis(5);
+/// Unacknowledged frames a link will buffer before concluding the
+/// peer is not consuming at all (treated like budget exhaustion).
+const RETX_QUEUE_MAX: usize = 1024;
+/// Bound on [`Transport::close`]'s settle wait for in-flight
+/// retransmissions and ACK debt.
+const LINGER_MAX: Duration = Duration::from_secs(2);
+
+/// Capped exponential backoff: 25 ms, 50, 100, then 200 ms flat.
+/// Full budget to escalation ≈ 1.4 s — well under the receive
+/// deadlines the tests and the daemon run with.
+fn rto_for(attempts: u32) -> Duration {
+    (RTO_BASE * 2u32.pow(attempts.min(3))).min(RTO_CAP)
+}
+
+/// The diagnosis every lock site reports when a reader/ticker thread
+/// panicked while holding the endpoint state — the panic poisons the
+/// world instead of dying silently.
+const POISONED_MUTEX: &str = "wire: endpoint state mutex poisoned by a panicked thread";
 
 // ---------------------------------------------------------------------
 // Byte helpers shared with the service plane
@@ -185,12 +279,59 @@ impl<'a> Body<'a> {
 }
 
 /// Seal `body` into a full `[len][type][body]` frame ready to write.
+/// The service plane's frames use this (no checksum — they ride a
+/// request/response protocol that retries at the call layer); the
+/// rank plane seals with [`seal_crc`].
 pub(crate) fn seal(kind: u8, body: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(body.len() + 5);
     put_u32(&mut out, (body.len() + 1) as u32);
     out.push(kind);
     out.extend_from_slice(body);
     out
+}
+
+/// CRC32 (IEEE 802.3, reflected, init/xorout `0xFFFFFFFF`) over
+/// `[kind][body]` — bitwise, no table; frames are small and the wire
+/// is not the bottleneck. Check value: `crc32` of `"123456789"` is
+/// `0xCBF43926`.
+pub(crate) fn crc32(kind: u8, body: &[u8]) -> u32 {
+    fn crc_byte(mut c: u32, b: u8) -> u32 {
+        c ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (c & 1).wrapping_neg();
+            c = (c >> 1) ^ (0xEDB8_8320 & mask);
+        }
+        c
+    }
+    let mut c = 0xFFFF_FFFFu32;
+    c = crc_byte(c, kind);
+    for &b in body {
+        c = crc_byte(c, b);
+    }
+    !c
+}
+
+/// Seal `body` into a v3 rank-plane frame:
+/// `[len][type][body][crc32 of type+body]`.
+pub(crate) fn seal_crc(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 9);
+    put_u32(&mut out, (body.len() + 5) as u32);
+    out.push(kind);
+    out.extend_from_slice(body);
+    put_u32(&mut out, crc32(kind, body));
+    out
+}
+
+/// Outcome of reading one checksummed rank-plane frame.
+#[derive(Debug)]
+pub(crate) enum WireRead {
+    /// Clean EOF at a frame boundary.
+    Eof,
+    /// The frame arrived whole but its CRC32 trailer did not match:
+    /// discard it — the sender's retransmission heals the loss.
+    CrcMismatch,
+    /// A verified `(type, body)` with the trailer stripped.
+    Frame(u8, Vec<u8>),
 }
 
 /// Read exactly `buf.len()` bytes. `Ok(false)` means EOF *before any
@@ -243,6 +384,25 @@ pub(crate) fn read_raw_frame(r: &mut impl Read) -> io::Result<Option<(u8, Vec<u8
         ));
     }
     Ok(Some((kind1[0], body)))
+}
+
+/// Read one v3 rank-plane frame and verify its checksum trailer.
+pub(crate) fn read_wire_frame(r: &mut impl Read) -> io::Result<WireRead> {
+    let Some((kind, mut body)) = read_raw_frame(r)? else {
+        return Ok(WireRead::Eof);
+    };
+    if body.len() < 4 {
+        return Err(bad_data(
+            "wire: frame too short for its checksum trailer".into(),
+        ));
+    }
+    let split = body.len() - 4;
+    let want = u32::from_le_bytes(body[split..].try_into().unwrap());
+    body.truncate(split);
+    if crc32(kind, &body) != want {
+        return Ok(WireRead::CrcMismatch);
+    }
+    Ok(WireRead::Frame(kind, body))
 }
 
 // ---------------------------------------------------------------------
@@ -415,7 +575,8 @@ struct Hello {
 
 enum Frame {
     Hello(Hello),
-    Data { round: u32, src: u32, dst: u32, count: u32, payload: Vec<u8> },
+    Data { seq: u64, ack: u64, round: u32, src: u32, dst: u32, count: u32, payload: Vec<u8> },
+    Ack { ack: u64 },
     Bye,
     Abort(String),
 }
@@ -429,17 +590,41 @@ fn hello_frame(p: usize, rank: usize, world_id: u64, elem_bytes: usize, epoch: u
     put_u64(&mut body, world_id);
     put_u32(&mut body, elem_bytes as u32);
     put_u64(&mut body, epoch);
-    seal(FT_HELLO, &body)
+    seal_crc(FT_HELLO, &body)
 }
 
-fn data_frame<T>(codec: &Codec<T>, round: usize, src: usize, dst: usize, data: &[T]) -> Vec<u8> {
-    let mut body = Vec::with_capacity(16 + data.len() * codec.elem_bytes);
+fn data_frame<T>(
+    codec: &Codec<T>,
+    seq: u64,
+    ack: u64,
+    round: usize,
+    src: usize,
+    dst: usize,
+    data: &[T],
+) -> Vec<u8> {
+    let mut body = Vec::with_capacity(32 + data.len() * codec.elem_bytes);
+    put_u64(&mut body, seq);
+    put_u64(&mut body, ack);
     put_u32(&mut body, round as u32);
     put_u32(&mut body, src as u32);
     put_u32(&mut body, dst as u32);
     put_u32(&mut body, data.len() as u32);
     (codec.enc)(data, &mut body);
-    seal(FT_DATA, &body)
+    seal_crc(FT_DATA, &body)
+}
+
+fn ack_frame(ack: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(8);
+    put_u64(&mut body, ack);
+    seal_crc(FT_ACK, &body)
+}
+
+fn bye_frame() -> Vec<u8> {
+    seal_crc(FT_BYE, &[])
+}
+
+fn abort_frame(reason: &str) -> Vec<u8> {
+    seal_crc(FT_ABORT, reason.as_bytes())
 }
 
 fn parse_hello(body: &[u8]) -> io::Result<Hello> {
@@ -462,12 +647,18 @@ fn parse_frame(kind: u8, body: Vec<u8>) -> io::Result<Frame> {
         FT_HELLO => Ok(Frame::Hello(parse_hello(&body)?)),
         FT_DATA => {
             let mut b = Body::new(&body);
+            let seq = b.u64()?;
+            let ack = b.u64()?;
             let round = b.u32()?;
             let src = b.u32()?;
             let dst = b.u32()?;
             let count = b.u32()?;
             let payload = b.rest().to_vec();
-            Ok(Frame::Data { round, src, dst, count, payload })
+            Ok(Frame::Data { seq, ack, round, src, dst, count, payload })
+        }
+        FT_ACK => {
+            let mut b = Body::new(&body);
+            Ok(Frame::Ack { ack: b.u64()? })
         }
         FT_BYE => Ok(Frame::Bye),
         FT_ABORT => Ok(Frame::Abort(String::from_utf8_lossy(&body).into_owned())),
@@ -522,6 +713,244 @@ fn vet_hello(
 }
 
 // ---------------------------------------------------------------------
+// Wire-fault counters
+// ---------------------------------------------------------------------
+
+static GLOBAL_RETRANSMITS: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_DUP_DROPS: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_CRC_FAILS: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_ESCALATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide [`WireFaults`] accumulated across every
+/// [`SocketTransport`] endpoint this process ever assembled — live, so
+/// a supervisor (the `cbcastd` stats line) can report wire health
+/// without holding transport handles.
+pub fn global_wire_faults() -> WireFaults {
+    WireFaults {
+        retransmits: GLOBAL_RETRANSMITS.load(Ordering::Relaxed),
+        dup_drops: GLOBAL_DUP_DROPS.load(Ordering::Relaxed),
+        crc_fails: GLOBAL_CRC_FAILS.load(Ordering::Relaxed),
+        escalations: GLOBAL_ESCALATIONS.load(Ordering::Relaxed),
+    }
+}
+
+/// Per-endpoint fault counters; every increment also feeds the
+/// process-global accumulators behind [`global_wire_faults`].
+#[derive(Default)]
+struct WireCounters {
+    retransmits: AtomicU64,
+    dup_drops: AtomicU64,
+    crc_fails: AtomicU64,
+    escalations: AtomicU64,
+}
+
+impl WireCounters {
+    fn retransmit(&self) {
+        self.retransmits.fetch_add(1, Ordering::Relaxed);
+        GLOBAL_RETRANSMITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn dup_drop(&self) {
+        self.dup_drops.fetch_add(1, Ordering::Relaxed);
+        GLOBAL_DUP_DROPS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn crc_fail(&self) {
+        self.crc_fails.fetch_add(1, Ordering::Relaxed);
+        GLOBAL_CRC_FAILS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn escalation(&self) {
+        self.escalations.fetch_add(1, Ordering::Relaxed);
+        GLOBAL_ESCALATIONS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> WireFaults {
+        WireFaults {
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            dup_drops: self.dup_drops.load(Ordering::Relaxed),
+            crc_fails: self.crc_fails.load(Ordering::Relaxed),
+            escalations: self.escalations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-link reliability state
+// ---------------------------------------------------------------------
+
+/// One unacknowledged frame in a link's retransmission queue. The
+/// sealed bytes are immutable; a retransmission re-emits them as-is
+/// (the stale piggybacked `ack` is harmless — cumulative ACKs are
+/// monotone and the receiver takes the max).
+struct Retx {
+    seq: u64,
+    frame: Vec<u8>,
+    sent_at: Instant,
+    attempts: u32,
+}
+
+/// The chaos shim threaded into one link's write path: a shared
+/// [`FaultPlan`] plus this link's frame-index cursor and the
+/// reorder-hold buffer.
+struct LinkChaos {
+    plan: FaultPlan,
+    src: usize,
+    dst: usize,
+    next_idx: u64,
+    /// Frames held by a `Reorder` verdict; emitted after the link's
+    /// next frame (or by the ticker, whichever comes first).
+    held: Vec<Vec<u8>>,
+}
+
+/// One link's write side plus its reliability state, shared by the
+/// app thread (send), the link's reader thread (ACK/dedup processing)
+/// and the endpoint's ticker (retransmission, idle-ACK).
+struct LinkTx {
+    stream: Stream,
+    /// Next outgoing sequence number (from 1; 0 means "nothing").
+    next_seq: u64,
+    /// Highest cumulative ACK the peer has announced.
+    acked: u64,
+    /// Sent-but-unacknowledged frames, seq-ascending.
+    queue: VecDeque<Retx>,
+    /// Highest contiguously-delivered incoming sequence.
+    rx_delivered: u64,
+    /// Delivered sequences above the contiguous floor (the dedup
+    /// window's sparse part).
+    rx_seen: BTreeSet<u64>,
+    /// Highest cumulative ACK we have announced to the peer.
+    ack_sent: u64,
+    /// A duplicate arrived: our last ACK may have been lost —
+    /// re-announce it even if `ack_sent` already covers everything.
+    reack: bool,
+    chaos: Option<LinkChaos>,
+    /// The peer was declared crashed on this link (budget exhausted or
+    /// hard write error); stop writing, let the schedule surface it.
+    dead: bool,
+}
+
+impl LinkTx {
+    /// Emit one chaos-eligible frame (`DATA`/`ACK`): draw a verdict
+    /// from the plan (if any) and apply it. Retransmissions pass
+    /// through here too, drawing fresh verdicts.
+    fn emit(&mut self, frame: &[u8]) -> io::Result<()> {
+        let Some(ch) = self.chaos.as_mut() else {
+            return self.stream.write_all(frame);
+        };
+        let idx = ch.next_idx;
+        ch.next_idx += 1;
+        let verdict = ch.plan.verdict(ch.src, ch.dst, idx);
+        match verdict {
+            Verdict::Deliver => self.stream.write_all(frame)?,
+            Verdict::Drop => {}
+            Verdict::Duplicate => {
+                self.stream.write_all(frame)?;
+                self.stream.write_all(frame)?;
+            }
+            Verdict::Reorder => {
+                self.chaos.as_mut().unwrap().held.push(frame.to_vec());
+            }
+            Verdict::Delay(d) => {
+                std::thread::sleep(d.min(Duration::from_millis(20)));
+                self.stream.write_all(frame)?;
+            }
+            Verdict::Corrupt { bits, entropy } => {
+                let mut copy = frame.to_vec();
+                flip_bits(&mut copy, bits, entropy);
+                self.stream.write_all(&copy)?;
+            }
+        }
+        if !matches!(verdict, Verdict::Reorder) {
+            self.flush_held()?;
+        }
+        Ok(())
+    }
+
+    /// Release any reorder-held frames, in hold order.
+    fn flush_held(&mut self) -> io::Result<()> {
+        let held = match self.chaos.as_mut() {
+            Some(ch) if !ch.held.is_empty() => std::mem::take(&mut ch.held),
+            _ => return Ok(()),
+        };
+        for f in held {
+            self.stream.write_all(&f)?;
+        }
+        Ok(())
+    }
+
+    /// Control frames (`HELLO`/`BYE`/`ABORT`) bypass chaos and the
+    /// retransmission queue: chaos models a lossy wire under an
+    /// established link, and control frames are never sequenced.
+    fn write_control(&mut self, frame: &[u8]) -> io::Result<()> {
+        self.stream.write_all(frame)
+    }
+}
+
+/// Flip `bits` bits at `entropy`-derived offsets, never touching the
+/// 4-byte length prefix — a corrupted length desyncs the byte stream,
+/// which no checksum can heal (offset collisions may cancel a flip;
+/// the verdict then degenerates to `Deliver`, which is fine).
+fn flip_bits(frame: &mut [u8], bits: u32, entropy: u64) {
+    let span = frame.len().saturating_sub(4);
+    if span == 0 {
+        return;
+    }
+    let mut e = entropy;
+    for _ in 0..bits {
+        e = e.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut h = e;
+        h ^= h >> 30;
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 27;
+        let off = 4 + (h as usize) % span;
+        let bit = ((h >> 59) & 7) as u32;
+        frame[off] ^= 1u8 << bit;
+    }
+}
+
+/// Lock a link, recovering the guard if a thread panicked while
+/// holding it — link state is plain bookkeeping, safe to continue
+/// with; the world-level diagnosis happens at the state mutex.
+fn lock_link(l: &Mutex<LinkTx>) -> MutexGuard<'_, LinkTx> {
+    match l.lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
+}
+
+/// Fold a peer's cumulative ACK into the link: advance the high-water
+/// mark and drop covered frames off the retransmission queue.
+fn process_ack(link: &Mutex<LinkTx>, ack: u64) {
+    let mut tx = lock_link(link);
+    if ack > tx.acked {
+        tx.acked = ack;
+    }
+    while tx.queue.front().map_or(false, |r| r.seq <= tx.acked) {
+        tx.queue.pop_front();
+    }
+}
+
+/// Dedup-window check for an incoming `DATA` sequence. `true` means
+/// first sighting — deliver it; `false` means duplicate — drop it and
+/// schedule an ACK re-announcement (the duplicate usually means our
+/// ACK was lost). Runs even when the world is poisoned, so peer
+/// retransmission queues keep draining without spurious escalations
+/// during teardown.
+fn note_fresh(link: &Mutex<LinkTx>, seq: u64) -> bool {
+    let mut tx = lock_link(link);
+    if seq <= tx.rx_delivered || tx.rx_seen.contains(&seq) {
+        tx.reack = true;
+        return false;
+    }
+    tx.rx_seen.insert(seq);
+    while tx.rx_seen.remove(&(tx.rx_delivered + 1)) {
+        tx.rx_delivered += 1;
+    }
+    true
+}
+
+// ---------------------------------------------------------------------
 // Mailbox + reader threads
 // ---------------------------------------------------------------------
 
@@ -533,10 +962,10 @@ struct SockState<T> {
     /// further will ever arrive from it.
     gone: Vec<bool>,
     /// `crashed[r]`: rank `r`'s link died *without* a deliberate
-    /// farewell (`BYE`/`ABORT`) — EOF out of nowhere, truncation, or a
-    /// reset: the signature of a killed process, as opposed to a rank
-    /// that finished or failed politely. Feeds
-    /// [`Transport::failed_peers`].
+    /// farewell (`BYE`/`ABORT`) — EOF out of nowhere, truncation, a
+    /// reset, or an exhausted retransmission budget: the signature of
+    /// a killed process, as opposed to a rank that finished or failed
+    /// politely. Feeds [`Transport::failed_peers`].
     crashed: Vec<bool>,
     poisoned: Option<String>,
 }
@@ -547,9 +976,25 @@ struct SockShared<T> {
 }
 
 impl<T> SockShared<T> {
+    /// Lock the endpoint state, converting a poisoned mutex (a reader
+    /// or ticker thread panicked mid-update) into a world-poisoning
+    /// diagnosis instead of propagating the panic or dying silently.
+    fn lock_state(&self) -> MutexGuard<'_, SockState<T>> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(e) => {
+                let mut g = e.into_inner();
+                if g.poisoned.is_none() {
+                    g.poisoned = Some(POISONED_MUTEX.to_string());
+                }
+                g
+            }
+        }
+    }
+
     /// Set-once local poison + wake every waiter.
     fn poison(&self, reason: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         if st.poisoned.is_none() {
             st.poisoned = Some(reason.to_string());
         }
@@ -560,7 +1005,7 @@ impl<T> SockShared<T> {
     /// `crashed` records whether the link died without a deliberate
     /// `BYE`/`ABORT` first — the crash signature.
     fn mark_gone(&self, peer: usize, crashed: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.gone[peer] = true;
         if crashed {
             st.crashed[peer] = true;
@@ -568,10 +1013,29 @@ impl<T> SockShared<T> {
         drop(st);
         self.cv.notify_all();
     }
+
+    /// Send-side death declaration (retry budget exhausted, queue
+    /// overflow, or a hard write error): mark the peer crashed —
+    /// *unless* it already departed deliberately (`BYE`/`ABORT`), in
+    /// which case the broken pipe is expected teardown, not a crash.
+    /// Returns whether the peer was newly marked.
+    fn mark_send_dead(&self, peer: usize) -> bool {
+        let mut st = self.lock_state();
+        if st.gone[peer] {
+            return false;
+        }
+        st.gone[peer] = true;
+        st.crashed[peer] = true;
+        drop(st);
+        self.cv.notify_all();
+        true
+    }
 }
 
 struct ReaderCtx<T> {
     shared: Arc<SockShared<T>>,
+    link: Arc<Mutex<LinkTx>>,
+    counters: Arc<WireCounters>,
     codec: Codec<T>,
     me: usize,
     p: usize,
@@ -583,10 +1047,13 @@ struct ReaderCtx<T> {
     expect_hello: bool,
 }
 
-/// One reader thread per peer link: drains frames into the shared
-/// mailbox under the same round-tag matching as `ThreadTransport`'s
-/// mailboxes. After a poison it keeps draining (and discarding) so a
-/// remote sender's `write_all` never blocks on a full socket buffer.
+/// One reader thread per peer link: verifies each frame's checksum,
+/// runs the ACK/dedup machinery, and drains verified `DATA` into the
+/// shared mailbox under the same round-tag matching as
+/// `ThreadTransport`'s mailboxes. After a poison it keeps draining
+/// (and discarding) so a remote sender's `write_all` never blocks on
+/// a full socket buffer — and keeps ACKing, so peer retransmission
+/// queues settle without spurious escalations during teardown.
 ///
 /// The reader also runs the crash detector: a link that terminates
 /// without the peer having announced its departure first (`BYE` on
@@ -597,15 +1064,22 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
     // after an announcement is expected teardown; before one, a crash.
     let mut deliberate = false;
     loop {
-        let frame = match read_raw_frame(&mut rx) {
+        let frame = match read_wire_frame(&mut rx) {
             // EOF at a frame boundary: the peer is gone. Without a
             // prior BYE/ABORT this is the crash signature — a dropped
             // endpoint slams the socket with no farewell frame.
-            Ok(None) => {
+            Ok(WireRead::Eof) => {
                 ctx.shared.mark_gone(ctx.peer, !deliberate);
                 return;
             }
-            Ok(Some((kind, body))) => match parse_frame(kind, body) {
+            // A corrupted frame is a transient fault, not a protocol
+            // violation: discard it and let the sender's
+            // retransmission heal the loss.
+            Ok(WireRead::CrcMismatch) => {
+                ctx.counters.crc_fail();
+                continue;
+            }
+            Ok(WireRead::Frame(kind, body)) => match parse_frame(kind, body) {
                 Ok(f) => f,
                 Err(e) => {
                     ctx.shared.poison(&format!("wire: rank {}: {e}", ctx.peer));
@@ -640,11 +1114,15 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
                     }
                 }
             }
+            Frame::Ack { ack } => process_ack(&ctx.link, ack),
             Frame::Data { .. } if ctx.expect_hello => {
                 ctx.shared
                     .poison(&format!("wire: rank {} sent data before HELLO", ctx.peer));
             }
-            Frame::Data { round, src, dst, count, payload } => {
+            Frame::Data { seq, ack, round, src, dst, count, payload } => {
+                // The piggybacked ACK is good even when the data
+                // itself turns out to be a duplicate or torn.
+                process_ack(&ctx.link, ack);
                 if src as usize != ctx.peer || dst as usize != ctx.me {
                     ctx.shared.poison(&format!(
                         "wire: misrouted frame (round {round}, {src} -> {dst}) on link {} <- {}",
@@ -661,10 +1139,18 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
                     ));
                     continue;
                 }
+                if !note_fresh(&ctx.link, seq) {
+                    // Duplicate: the wire (or a retransmission whose
+                    // original won) replayed it. Dropped exactly here;
+                    // the mailbox never sees it, so ReceivePortBusy
+                    // still means a genuinely broken schedule.
+                    ctx.counters.dup_drop();
+                    continue;
+                }
                 let mut data = Vec::with_capacity(count as usize);
                 (ctx.codec.dec)(&payload, &mut data);
                 let round = round as usize;
-                let mut st = ctx.shared.state.lock().unwrap();
+                let mut st = ctx.shared.lock_state();
                 if st.poisoned.is_some() {
                     // Drain-and-discard: keep the peer's writes moving.
                     continue;
@@ -688,8 +1174,14 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
                 }
             }
             Frame::Bye => {
+                // "Nothing further from me" — but keep the reader
+                // draining: post-BYE frames (re-ACKs of our data, a
+                // retransmission racing the BYE) must still be
+                // processed, or a chaos-lost final ACK could never be
+                // re-announced and the peer's close-linger would
+                // exhaust its budget and spuriously crash-mark us.
+                deliberate = true;
                 ctx.shared.mark_gone(ctx.peer, false);
-                return;
             }
             Frame::Abort(reason) => {
                 // Poison propagated from a failed remote rank; keep
@@ -697,6 +1189,95 @@ fn reader_loop<T: Send + 'static>(mut rx: Stream, mut ctx: ReaderCtx<T>) {
                 // that *announced* its failure did not crash.
                 deliberate = true;
                 ctx.shared.poison(&reason);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The ticker: retransmission + idle-ACK fallback
+// ---------------------------------------------------------------------
+
+struct TickerCtx<T> {
+    shared: Arc<SockShared<T>>,
+    links: Vec<Option<Arc<Mutex<LinkTx>>>>,
+    counters: Arc<WireCounters>,
+    stop: Arc<AtomicBool>,
+}
+
+/// One ticker thread per endpoint. Every [`TICK`] it sweeps the
+/// links: releases reorder-held frames, announces ACK debt that has
+/// no outgoing `DATA` to piggyback on, and retransmits overdue queue
+/// entries under the capped backoff. A link whose budget is exhausted
+/// (or whose stream errors) is declared dead and its peer escalated
+/// to `crashed` — the hand-off to the membership shrink path.
+fn ticker_loop<T: Send + 'static>(ctx: TickerCtx<T>) {
+    loop {
+        std::thread::sleep(TICK);
+        if ctx.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut newly_dead: Vec<usize> = Vec::new();
+        for (peer, slot) in ctx.links.iter().enumerate() {
+            let Some(link) = slot else { continue };
+            let mut tx = lock_link(link);
+            if tx.dead {
+                continue;
+            }
+            if tx.flush_held().is_err() {
+                tx.dead = true;
+                newly_dead.push(peer);
+                continue;
+            }
+            if tx.rx_delivered > tx.ack_sent || tx.reack {
+                let frame = ack_frame(tx.rx_delivered);
+                match tx.emit(&frame) {
+                    Ok(()) => {
+                        tx.ack_sent = tx.rx_delivered;
+                        tx.reack = false;
+                    }
+                    Err(_) => {
+                        tx.dead = true;
+                        newly_dead.push(peer);
+                        continue;
+                    }
+                }
+            }
+            let now = Instant::now();
+            for i in 0..tx.queue.len() {
+                let (overdue, exhausted, frame) = {
+                    let r = &tx.queue[i];
+                    let overdue = now.duration_since(r.sent_at) >= rto_for(r.attempts);
+                    let exhausted = overdue && r.attempts >= MAX_ATTEMPTS;
+                    let frame = if overdue && !exhausted { r.frame.clone() } else { Vec::new() };
+                    (overdue, exhausted, frame)
+                };
+                if !overdue {
+                    continue;
+                }
+                if exhausted {
+                    tx.dead = true;
+                    newly_dead.push(peer);
+                    break;
+                }
+                tx.queue[i].attempts += 1;
+                tx.queue[i].sent_at = now;
+                ctx.counters.retransmit();
+                if tx.emit(&frame).is_err() {
+                    tx.dead = true;
+                    newly_dead.push(peer);
+                    break;
+                }
+            }
+        }
+        if ctx.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // All link guards are dropped; only now touch the state mutex
+        // (lock order: link, then state — never both at once).
+        for peer in newly_dead {
+            if ctx.shared.mark_send_dead(peer) {
+                ctx.counters.escalation();
             }
         }
     }
@@ -718,16 +1299,19 @@ pub fn fresh_world_id() -> u64 {
 /// One rank's endpoint of a socket world: a [`Transport`] whose
 /// messages cross real OS sockets (Unix-domain or TCP). Per-peer
 /// reader threads feed a mutex/condvar mailbox with the exact
-/// round-tag matching of [`super::transport::ThreadTransport`]; the
+/// round-tag matching of [`super::transport::ThreadTransport`]; a
+/// per-endpoint ticker drives the v3 reliability layer (CRC,
+/// seq/ack, retransmission, dedup — see the module docs); the
 /// one-ported round discipline is enforced endpoint-side, and wire
-/// faults surface as typed [`TransportError`]s (see the module docs
-/// for the mapping).
+/// faults surface as typed [`TransportError`]s.
 pub struct SocketTransport<T> {
     rank: usize,
     p: usize,
     epoch: u64,
-    links: Vec<Option<Stream>>,
+    links: Vec<Option<Arc<Mutex<LinkTx>>>>,
     shared: Arc<SockShared<T>>,
+    counters: Arc<WireCounters>,
+    stop: Arc<AtomicBool>,
     codec: Codec<T>,
     timeout: Duration,
     disc: Discipline,
@@ -750,6 +1334,29 @@ impl<T: Send + 'static> SocketTransport<T> {
         p: usize,
         timeout: Duration,
     ) -> io::Result<Vec<SocketTransport<T>>> {
+        Self::pair_build(p, timeout, None)
+    }
+
+    /// [`SocketTransport::pair_world_with_timeout`] with a seeded
+    /// [`FaultPlan`] threaded into every link's write path — the
+    /// chaos plane's byte-level injection point. The reliability
+    /// layer heals the injected faults in place; only a plan that
+    /// starves a link past the retry budget (e.g.
+    /// [`FaultPlan::blackhole`]) escalates into
+    /// [`Transport::failed_peers`].
+    pub fn pair_world_chaos(
+        p: usize,
+        timeout: Duration,
+        plan: FaultPlan,
+    ) -> io::Result<Vec<SocketTransport<T>>> {
+        Self::pair_build(p, timeout, Some(plan))
+    }
+
+    fn pair_build(
+        p: usize,
+        timeout: Duration,
+        chaos: Option<FaultPlan>,
+    ) -> io::Result<Vec<SocketTransport<T>>> {
         assert!(p > 0);
         let world_id = fresh_world_id();
         let mut rows: Vec<Vec<Option<(Stream, bool)>>> =
@@ -763,7 +1370,7 @@ impl<T: Send + 'static> SocketTransport<T> {
         }
         rows.into_iter()
             .enumerate()
-            .map(|(rank, row)| Self::assemble(rank, p, world_id, 0, row, timeout, true))
+            .map(|(rank, row)| Self::assemble(rank, p, world_id, 0, row, timeout, true, chaos))
             .collect()
     }
 
@@ -825,7 +1432,7 @@ impl<T: Send + 'static> SocketTransport<T> {
                 })
             },
         )?;
-        Self::assemble(rank, p, world_id, epoch, row, timeout, false)
+        Self::assemble(rank, p, world_id, epoch, row, timeout, false, None)
     }
 
     /// This rank's endpoint of a multi-process world over TCP:
@@ -870,13 +1477,15 @@ impl<T: Send + 'static> SocketTransport<T> {
                 })
             },
         )?;
-        Self::assemble(rank, p, world_id, 0, row, timeout, false)
+        Self::assemble(rank, p, world_id, 0, row, timeout, false, None)
     }
 
-    /// Wire a resolved mesh into an endpoint: spawn one reader thread
-    /// per link (`expect_hello` links validate the peer's `HELLO` as
-    /// their first frame) and, when `send_hello`, write ours on every
-    /// link first.
+    /// Wire a resolved mesh into an endpoint: wrap each link in its
+    /// reliability state (with the chaos shim, if any), spawn one
+    /// reader thread per link (`expect_hello` links validate the
+    /// peer's `HELLO` as their first frame), write our `HELLO` first
+    /// when `send_hello`, and start the endpoint's ticker.
+    #[allow(clippy::too_many_arguments)]
     fn assemble(
         rank: usize,
         p: usize,
@@ -885,6 +1494,7 @@ impl<T: Send + 'static> SocketTransport<T> {
         row: Vec<Option<(Stream, bool)>>,
         timeout: Duration,
         send_hello: bool,
+        chaos: Option<FaultPlan>,
     ) -> io::Result<SocketTransport<T>> {
         let codec = Codec::<T>::resolve().ok_or_else(not_encodable)?;
         let shared = Arc::new(SockShared {
@@ -896,19 +1506,43 @@ impl<T: Send + 'static> SocketTransport<T> {
             }),
             cv: Condvar::new(),
         });
+        let counters = Arc::new(WireCounters::default());
+        let stop = Arc::new(AtomicBool::new(false));
         let hello = hello_frame(p, rank, world_id, codec.elem_bytes, epoch);
-        let mut links: Vec<Option<Stream>> = Vec::with_capacity(p);
+        let mut links: Vec<Option<Arc<Mutex<LinkTx>>>> = Vec::with_capacity(p);
         for (peer, slot) in row.into_iter().enumerate() {
             let Some((mut stream, expect_hello)) = slot else {
                 links.push(None);
                 continue;
             };
             if send_hello {
+                // HELLO bypasses chaos: the shim models a lossy wire
+                // under an established link, not a failed rendezvous.
                 stream.write_all(&hello)?;
             }
             let rx = stream.try_clone()?;
+            let link = Arc::new(Mutex::new(LinkTx {
+                stream,
+                next_seq: 1,
+                acked: 0,
+                queue: VecDeque::new(),
+                rx_delivered: 0,
+                rx_seen: BTreeSet::new(),
+                ack_sent: 0,
+                reack: false,
+                chaos: chaos.map(|plan| LinkChaos {
+                    plan,
+                    src: rank,
+                    dst: peer,
+                    next_idx: 0,
+                    held: Vec::new(),
+                }),
+                dead: false,
+            }));
             let ctx = ReaderCtx {
                 shared: shared.clone(),
+                link: link.clone(),
+                counters: counters.clone(),
                 codec,
                 me: rank,
                 p,
@@ -921,14 +1555,26 @@ impl<T: Send + 'static> SocketTransport<T> {
                 .name(format!("cbwire-{rank}<-{peer}"))
                 .stack_size(128 * 1024)
                 .spawn(move || reader_loop(rx, ctx))?;
-            links.push(Some(stream));
+            links.push(Some(link));
         }
+        let tctx = TickerCtx {
+            shared: shared.clone(),
+            links: links.clone(),
+            counters: counters.clone(),
+            stop: stop.clone(),
+        };
+        std::thread::Builder::new()
+            .name(format!("cbtick-{rank}"))
+            .stack_size(64 * 1024)
+            .spawn(move || ticker_loop(tctx))?;
         Ok(SocketTransport {
             rank,
             p,
             epoch,
             links,
             shared,
+            counters,
+            stop,
             codec,
             timeout,
             disc: Discipline::default(),
@@ -946,18 +1592,52 @@ impl<T: Send + 'static> SocketTransport<T> {
     /// lets a supervisor distinguish "this world is dead" from "this
     /// verb failed" without issuing another verb.
     pub fn poisoned(&self) -> Option<String> {
-        self.shared.state.lock().unwrap().poisoned.clone()
+        self.shared.lock_state().poisoned.clone()
     }
 
     /// Poison the local world and broadcast `ABORT` so remote worlds
     /// poison too — every blocked and future verb on any endpoint of
     /// the world fails with [`TransportError::Shutdown`] instead of
     /// deadlocking.
-    fn poison(&mut self, reason: &str) {
+    fn poison(&self, reason: &str) {
         self.shared.poison(reason);
-        let frame = seal(FT_ABORT, reason.as_bytes());
-        for link in self.links.iter_mut().flatten() {
-            let _ = link.write_all(&frame);
+        let frame = abort_frame(reason);
+        for link in self.links.iter().flatten() {
+            let mut tx = lock_link(link);
+            if !tx.dead {
+                let _ = tx.write_control(&frame);
+            }
+        }
+    }
+
+    /// Wait (bounded by [`LINGER_MAX`]) until every live link has
+    /// settled: retransmission queue empty (everything acknowledged),
+    /// no reorder-held frames, no unannounced ACK debt. Called before
+    /// `BYE` on a clean close, so chaos-dropped final frames heal
+    /// before we promise "nothing further from me".
+    fn linger(&self) {
+        let deadline = Instant::now() + LINGER_MAX;
+        loop {
+            let mut settled = true;
+            for link in self.links.iter().flatten() {
+                let tx = lock_link(link);
+                if tx.dead {
+                    continue;
+                }
+                let held_empty = tx.chaos.as_ref().map_or(true, |c| c.held.is_empty());
+                if !tx.queue.is_empty()
+                    || !held_empty
+                    || tx.rx_delivered > tx.ack_sent
+                    || tx.reack
+                {
+                    settled = false;
+                    break;
+                }
+            }
+            if settled || Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 }
@@ -987,7 +1667,7 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
             }));
         }
         {
-            let st = self.shared.state.lock().unwrap();
+            let st = self.shared.lock_state();
             if let Some(reason) = &st.poisoned {
                 return Err(TransportError::Shutdown {
                     rank: self.rank,
@@ -996,15 +1676,49 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
                 });
             }
         }
-        let frame = data_frame(&self.codec, round, self.rank, peer, &data);
-        let res = match self.links[peer].as_mut() {
-            Some(link) => link.write_all(&frame),
-            None => unreachable!("mesh link missing for peer {peer}"),
-        };
-        if let Err(e) = res {
-            let reason = format!("wire: send to rank {peer} in round {round} failed: {e}");
-            self.poison(&reason);
-            return Err(TransportError::Shutdown { rank: self.rank, round, reason });
+        let link = self.links[peer].as_ref().expect("mesh link missing").clone();
+        let mut tx = lock_link(&link);
+        if tx.dead {
+            // Posted semantics: the peer is already declared crashed;
+            // the schedule surfaces that at the receiver as
+            // MissingMessage, the detector as failed_peers().
+            return Ok(());
+        }
+        if tx.queue.len() >= RETX_QUEUE_MAX {
+            // The peer acknowledges nothing and we keep producing:
+            // same conclusion as budget exhaustion, reached by volume.
+            tx.dead = true;
+            drop(tx);
+            if self.shared.mark_send_dead(peer) {
+                self.counters.escalation();
+            }
+            return Ok(());
+        }
+        let seq = tx.next_seq;
+        tx.next_seq += 1;
+        let ack = tx.rx_delivered;
+        let frame = data_frame(&self.codec, seq, ack, round, self.rank, peer, &data);
+        tx.queue.push_back(Retx {
+            seq,
+            frame: frame.clone(),
+            sent_at: Instant::now(),
+            attempts: 0,
+        });
+        // The piggybacked ACK covers any pending re-announcement.
+        if ack > tx.ack_sent {
+            tx.ack_sent = ack;
+        }
+        tx.reack = false;
+        let res = tx.emit(&frame);
+        if res.is_err() {
+            tx.dead = true;
+        }
+        drop(tx);
+        // A write error is the peer's problem, not the world's: mark
+        // it crashed (unless it departed deliberately) and let the
+        // schedule surface the gap — never poison on send.
+        if res.is_err() && self.shared.mark_send_dead(peer) {
+            self.counters.escalation();
         }
         Ok(())
     }
@@ -1018,7 +1732,7 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
     fn recv(&mut self, round: usize, peer: usize) -> Result<Vec<T>, TransportError> {
         self.disc.check_recv(self.rank, round)?;
         let deadline = Instant::now() + self.timeout;
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock_state();
         loop {
             // Abort semantics: once poisoned nothing more is
             // delivered, mirroring the lockstep mid-round abort.
@@ -1070,18 +1784,32 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
                 self.poison(&e.to_string());
                 return Err(e);
             }
-            let (guard, _) = self.shared.cv.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
+            st = match self.shared.cv.wait_timeout(st, deadline - now) {
+                Ok((guard, _)) => guard,
+                Err(e) => {
+                    // A thread panicked while holding the state: turn
+                    // the panic into the poisoned-world diagnosis.
+                    let (mut guard, _) = e.into_inner();
+                    if guard.poisoned.is_none() {
+                        guard.poisoned = Some(POISONED_MUTEX.to_string());
+                    }
+                    guard
+                }
+            };
         }
     }
 
     fn failed_peers(&self) -> Vec<usize> {
-        let st = self.shared.state.lock().unwrap();
+        let st = self.shared.lock_state();
         st.crashed
             .iter()
             .enumerate()
             .filter_map(|(r, &c)| c.then_some(r))
             .collect()
+    }
+
+    fn wire_faults(&self) -> Option<WireFaults> {
+        Some(self.counters.snapshot())
     }
 
     fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
@@ -1092,20 +1820,23 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
         match error {
             Some(reason) => {
                 // Failed rank: poison locally, tell every peer why
-                // (ABORT), then close our write sides.
+                // (ABORT). Write sides stay open — the reliability
+                // layer keeps ACKing so peer queues drain; Drop tears
+                // the sockets down.
                 self.poison(reason);
-                for link in self.links.iter_mut().flatten() {
-                    let _ = link.shutdown(Shutdown::Write);
-                }
             }
             None => {
-                // Clean completion: BYE tells peers "nothing further
-                // from me" so a schedule still expecting a message
-                // surfaces MissingMessage, not a 30 s timeout.
-                let bye = seal(FT_BYE, &[]);
-                for link in self.links.iter_mut().flatten() {
-                    let _ = link.write_all(&bye);
-                    let _ = link.shutdown(Shutdown::Write);
+                // Clean completion: settle in-flight retransmissions
+                // and ACK debt first, then BYE tells peers "nothing
+                // further from me" so a schedule still expecting a
+                // message surfaces MissingMessage, not a 30 s timeout.
+                self.linger();
+                let bye = bye_frame();
+                for link in self.links.iter().flatten() {
+                    let mut tx = lock_link(link);
+                    if !tx.dead {
+                        let _ = tx.write_control(&bye);
+                    }
                 }
             }
         }
@@ -1115,20 +1846,17 @@ impl<T: Send + 'static> Transport<T> for SocketTransport<T> {
 
 impl<T> Drop for SocketTransport<T> {
     fn drop(&mut self) {
-        if !self.closed {
-            // Dropped without close(): a crashed rank. Tear the links
-            // down so peer readers observe EOF-without-BYE and report
-            // this rank gone (their recv -> MissingMessage) instead of
-            // waiting out the deadline.
-            for link in self.links.iter_mut().flatten() {
-                let _ = link.shutdown(Shutdown::Both);
-            }
-        } else {
-            // Already closed: reap our reader threads by closing the
-            // read sides too.
-            for link in self.links.iter_mut().flatten() {
-                let _ = link.shutdown(Shutdown::Read);
-            }
+        // Stop the ticker (it exits within one tick; not joined — a
+        // teardown should not wait on a sleeper) and slam every
+        // socket. shutdown(Both) reaches the reader/ticker fd clones
+        // too. After a deliberate close() the peers already hold our
+        // BYE/ABORT, so the EOF is expected teardown; without one,
+        // the EOF-without-farewell is exactly the crash signature the
+        // peers' readers are built to detect.
+        self.stop.store(true, Ordering::SeqCst);
+        for link in self.links.iter().flatten() {
+            let tx = lock_link(link);
+            let _ = tx.stream.shutdown(Shutdown::Both);
         }
     }
 }
@@ -1192,6 +1920,7 @@ fn dial_retry(
 /// reader), accept from every higher rank (reading and validating the
 /// peer's `HELLO` synchronously to identify it — accept order is
 /// arbitrary — then answering with ours).
+#[allow(clippy::too_many_arguments)]
 fn mesh_rendezvous(
     rank: usize,
     p: usize,
@@ -1229,6 +1958,9 @@ fn mesh_rendezvous(
 }
 
 /// Synchronously read and validate a peer's `HELLO`; returns its rank.
+/// A checksum failure here is a hard error, not a retransmittable
+/// miss: chaos never touches `HELLO`, so a corrupt one means a broken
+/// or hostile dialer.
 fn read_hello_sync(
     s: &mut Stream,
     p: usize,
@@ -1236,11 +1968,17 @@ fn read_hello_sync(
     elem_bytes: usize,
     epoch: u64,
 ) -> io::Result<usize> {
-    let Some((kind, body)) = read_raw_frame(s)? else {
-        return Err(io::Error::new(
-            io::ErrorKind::UnexpectedEof,
-            "handshake: peer closed before HELLO",
-        ));
+    let (kind, body) = match read_wire_frame(s)? {
+        WireRead::Eof => {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "handshake: peer closed before HELLO",
+            ));
+        }
+        WireRead::CrcMismatch => {
+            return Err(bad_data("handshake: HELLO failed its checksum".into()));
+        }
+        WireRead::Frame(kind, body) => (kind, body),
     };
     if kind != FT_HELLO {
         return Err(bad_data(format!(
@@ -1304,6 +2042,39 @@ mod tests {
             read_raw_frame(&mut zero).unwrap_err().kind(),
             io::ErrorKind::InvalidData
         );
+    }
+
+    #[test]
+    fn crc32_matches_the_known_check_value() {
+        // The IEEE CRC32 check value: crc of ascii "123456789".
+        assert_eq!(crc32(b'1', b"23456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn sealed_frames_carry_and_verify_their_checksum() {
+        let f = seal_crc(FT_DATA, &[1, 2, 3]);
+        assert_eq!(f.len(), 4 + 1 + 3 + 4);
+        let mut r: &[u8] = &f;
+        match read_wire_frame(&mut r).unwrap() {
+            WireRead::Frame(kind, body) => {
+                assert_eq!(kind, FT_DATA);
+                assert_eq!(body, vec![1, 2, 3]);
+            }
+            other => panic!("expected a verified frame, got {other:?}"),
+        }
+        // A flipped body bit fails the checksum.
+        let mut bad = f.clone();
+        bad[6] ^= 0x40;
+        let mut r: &[u8] = &bad;
+        assert!(matches!(read_wire_frame(&mut r).unwrap(), WireRead::CrcMismatch));
+        // The type byte is covered too.
+        let mut badk = f.clone();
+        badk[4] ^= 0x01;
+        let mut r: &[u8] = &badk;
+        assert!(matches!(read_wire_frame(&mut r).unwrap(), WireRead::CrcMismatch));
+        // EOF at a boundary is still clean.
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_wire_frame(&mut empty).unwrap(), WireRead::Eof));
     }
 
     #[test]
@@ -1502,5 +2273,109 @@ mod tests {
         t0.close(None).unwrap();
         assert_eq!(h.join().unwrap(), vec![7]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // -----------------------------------------------------------------
+    // Chaos + reliability
+    // -----------------------------------------------------------------
+
+    /// Run `rounds` one-way sends under `plan` (rank 0 -> rank 1 of a
+    /// two-rank chaos world), assert every payload arrives intact and
+    /// nobody is declared failed, and return both endpoints' merged
+    /// fault counters.
+    fn chaos_one_way(plan: FaultPlan, rounds: usize) -> WireFaults {
+        let mut w =
+            SocketTransport::<i64>::pair_world_chaos(2, Duration::from_secs(10), plan).unwrap();
+        let mut t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        let h = thread::spawn(move || {
+            for j in 0..rounds {
+                t0.send(j, 1, vec![j as i64, -(j as i64)]).unwrap();
+                t0.flush(j).unwrap();
+            }
+            t0.close(None).unwrap();
+            t0
+        });
+        for j in 0..rounds {
+            t1.flush(j).unwrap();
+            let got = t1.recv(j, 0).unwrap();
+            assert_eq!(got, vec![j as i64, -(j as i64)], "round {j} payload");
+        }
+        t1.close(None).unwrap();
+        let t0 = h.join().unwrap();
+        assert_eq!(t0.failed_peers(), Vec::<usize>::new());
+        assert_eq!(t1.failed_peers(), Vec::<usize>::new());
+        assert!(t0.poisoned().is_none(), "{:?}", t0.poisoned());
+        assert!(t1.poisoned().is_none(), "{:?}", t1.poisoned());
+        let mut faults = t0.wire_faults().unwrap();
+        faults.merge(&t1.wire_faults().unwrap());
+        faults
+    }
+
+    #[test]
+    fn dropped_frames_heal_by_retransmission() {
+        let faults = chaos_one_way(FaultPlan::new(0xD0).drop_per_10k(3_000), 60);
+        assert!(faults.retransmits > 0, "30% drop must force retransmits: {faults}");
+        assert_eq!(faults.escalations, 0, "{faults}");
+    }
+
+    #[test]
+    fn duplicated_frames_are_dropped_by_the_dedup_window() {
+        // Any duplicate reaching the mailbox would trip the
+        // ReceivePortBusy poison, so clean delivery is itself the
+        // assertion; the counter pins where the duplicates died.
+        let faults = chaos_one_way(FaultPlan::new(0xD1).dup_per_10k(4_000), 40);
+        assert!(faults.dup_drops > 0, "40% duplication must hit the window: {faults}");
+        assert_eq!(faults.escalations, 0, "{faults}");
+    }
+
+    #[test]
+    fn reordered_frames_are_absorbed_by_round_tag_matching() {
+        let faults = chaos_one_way(FaultPlan::new(0xD2).reorder_per_10k(3_000), 40);
+        assert_eq!(faults.escalations, 0, "{faults}");
+        assert_eq!(faults.crc_fails, 0, "reordering corrupts nothing: {faults}");
+    }
+
+    #[test]
+    fn corrupted_frames_heal_by_retransmission() {
+        let faults = chaos_one_way(FaultPlan::new(0xD3).corrupt_per_10k(2_500, 3), 40);
+        assert!(faults.crc_fails > 0, "25% corruption must fail checksums: {faults}");
+        assert!(faults.retransmits > 0, "every corrupt frame needs a resend: {faults}");
+        assert_eq!(faults.escalations, 0, "{faults}");
+    }
+
+    #[test]
+    fn a_mixed_plan_heals_without_consuming_an_epoch() {
+        let plan = FaultPlan::new(0xD4)
+            .drop_per_10k(500)
+            .dup_per_10k(500)
+            .reorder_per_10k(500)
+            .corrupt_per_10k(500, 2);
+        let faults = chaos_one_way(plan, 80);
+        assert!(faults.any(), "a 20% composite plan cannot be invisible: {faults}");
+        assert_eq!(faults.escalations, 0, "{faults}");
+    }
+
+    #[test]
+    fn a_blackholed_peer_exhausts_the_retry_budget_and_escalates() {
+        let plan = FaultPlan::new(11).blackhole(1);
+        let mut w =
+            SocketTransport::<i64>::pair_world_chaos(2, Duration::from_secs(5), plan).unwrap();
+        let _t1 = w.pop().unwrap();
+        let mut t0 = w.pop().unwrap();
+        t0.send(0, 1, vec![1, 2, 3]).unwrap(); // posted; the wire eats it
+        let deadline = Instant::now() + Duration::from_secs(4);
+        while t0.failed_peers().is_empty() && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(t0.failed_peers(), vec![1], "budget exhaustion marks the peer crashed");
+        let wf = t0.wire_faults().unwrap();
+        assert!(wf.escalations >= 1, "{wf}");
+        assert!(wf.retransmits >= u64::from(MAX_ATTEMPTS), "{wf}");
+        assert!(
+            t0.poisoned().is_none(),
+            "escalation is detection, not poison: {:?}",
+            t0.poisoned()
+        );
     }
 }

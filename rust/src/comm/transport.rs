@@ -250,6 +250,18 @@ pub trait Transport<T>: Send {
         Vec::new()
     }
 
+    /// Cumulative reliable-delivery counters for this endpoint, when a
+    /// healing wire layer runs underneath
+    /// ([`super::socket::SocketTransport`]'s protocol-v3
+    /// CRC/seq/ack/retransmission machinery). `None` means the
+    /// transport has no lossy wire to heal — the in-process transports
+    /// deliver by construction. These counters never appear in
+    /// run statistics: a healed run stays bit-identical to a
+    /// fault-free one.
+    fn wire_faults(&self) -> Option<super::outcome::WireFaults> {
+        None
+    }
+
     /// Retire this endpoint: `error` is `Some` when the rank aborted
     /// (shuts the world down so no sibling deadlocks), `None` on clean
     /// completion (may itself report a violation discovered at the end,

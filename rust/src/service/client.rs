@@ -38,6 +38,60 @@ pub const DEFAULT_ADMIT_ATTEMPTS: usize = 16;
 pub struct ServiceClient {
     stream: Stream,
     p: usize,
+    /// Seed of this tenant's admission-backoff jitter, derived from the
+    /// tenant label at handshake ([`tenant_seed`]) — deterministic per
+    /// tenant, distinct across tenants, so saturated clients desynchronize
+    /// instead of stampeding the daemon in lockstep.
+    jitter_seed: u64,
+}
+
+/// FNV-1a-64 of a tenant label: the deterministic jitter seed. Two
+/// tenants hammering a saturated daemon retry on *different* (but each
+/// individually replayable) sleep schedules.
+pub(crate) fn tenant_seed(tenant: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in tenant.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64 finalizer — the same stateless per-index hash the chaos
+/// plane uses ([`crate::comm::chaos`]): one u64 in, one well-mixed u64
+/// out, no RNG state to thread around.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-refusal backoff cap: no single sleep exceeds this, however far
+/// the doubling has climbed.
+const BACKOFF_CAP: Duration = Duration::from_millis(500);
+
+/// The sleep after the `attempt`-th admission refusal (0-indexed):
+/// the daemon's `retry_after` hint doubled per refusal, capped at
+/// [`BACKOFF_CAP`], then jittered into `[50%, 100%]` of that base by a
+/// stateless hash of `(seed, attempt)`. Deterministic — same tenant,
+/// same refusal index, same sleep — which is what lets the test suite
+/// pin two tenants to *distinct* schedules without any timing games.
+fn jittered_backoff(hint_ms: u32, attempt: usize, seed: u64) -> Duration {
+    let hint = Duration::from_millis(hint_ms.max(1) as u64);
+    let base = hint.saturating_mul(1u32 << attempt.min(8) as u32).min(BACKOFF_CAP);
+    let base_us = base.as_micros() as u64;
+    let h = mix64(seed ^ (attempt as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+    let half = base_us / 2;
+    Duration::from_micros(half + h % (half + 1))
+}
+
+/// The full sleep schedule a client with `seed` would follow through
+/// `attempts` submissions (there is one sleep *between* consecutive
+/// submissions, so the schedule has `attempts − 1` entries). Pure —
+/// exists so tests can assert schedule properties without sleeping.
+pub(crate) fn backoff_schedule(hint_ms: u32, attempts: usize, seed: u64) -> Vec<Duration> {
+    (0..attempts.saturating_sub(1)).map(|a| jittered_backoff(hint_ms, a, seed)).collect()
 }
 
 impl ServiceClient {
@@ -82,7 +136,7 @@ impl ServiceClient {
         match read_raw_frame(&mut stream)? {
             Some((FT_SHELLO, body)) => {
                 let p = parse_shello(&body)?;
-                Ok(ServiceClient { stream, p })
+                Ok(ServiceClient { stream, p, jitter_seed: tenant_seed(tenant) })
             }
             Some((kind, _)) => Err(proto(format!(
                 "service handshake: expected server hello, got frame type {kind:#x}"
@@ -147,26 +201,30 @@ impl ServiceClient {
     ///
     /// The retry is **bounded**: at most `attempts` submissions, sleeping
     /// the daemon's `retry_after` hint doubled per refusal (capped at
-    /// 500 ms per sleep). A daemon that refuses every attempt — e.g. one
-    /// configured with a zero-capacity queue, or permanently saturated —
-    /// yields a typed [`io::ErrorKind::TimedOut`] "admission exhausted"
-    /// error instead of the pre-fix unbounded spin.
+    /// 500 ms per sleep) and **jittered** into 50–100% of that base by a
+    /// deterministic per-tenant hash ([`jittered_backoff`]) — so tenants
+    /// refused together do not resubmit together. A daemon that refuses
+    /// every attempt — e.g. one configured with a zero-capacity queue,
+    /// or permanently saturated — yields a typed
+    /// [`io::ErrorKind::TimedOut`] "admission exhausted" error instead
+    /// of the pre-fix unbounded spin.
     pub fn call_admitted_budget(
         &mut self,
         req_id: u64,
         op: &MixOp,
         attempts: usize,
     ) -> io::Result<ServiceReply> {
-        const BACKOFF_CAP: Duration = Duration::from_millis(500);
         for attempt in 0..attempts {
             match self.call(req_id, op)? {
                 ServiceReply::Rejected { retry_after_ms } => {
                     if attempt + 1 == attempts {
                         break; // budget spent: no point sleeping again
                     }
-                    let hint = Duration::from_millis(retry_after_ms.max(1) as u64);
-                    let backoff = hint.saturating_mul(1u32 << attempt.min(8) as u32);
-                    std::thread::sleep(backoff.min(BACKOFF_CAP));
+                    std::thread::sleep(jittered_backoff(
+                        retry_after_ms,
+                        attempt,
+                        self.jitter_seed,
+                    ));
                 }
                 reply => return Ok(reply),
             }

@@ -40,9 +40,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
-use crate::comm::membership::Membership;
-use crate::comm::socket::{fill, read_raw_frame, Stream, MAX_FRAME};
-use crate::comm::{CommBuilder, Communicator, TenantUsage};
+use crate::comm::chaos::FaultPlan;
+use crate::comm::membership::{elastic_bcast, CrashPlan, Membership};
+use crate::comm::rank::TransportKind;
+use crate::comm::socket::{fill, global_wire_faults, read_raw_frame, Stream, MAX_FRAME};
+use crate::comm::{CommBuilder, Communicator, TenantUsage, WireFaults};
 use crate::testkit::{submit_mix_op, MixOp, MixPending};
 
 use super::wire::{
@@ -86,6 +88,18 @@ pub struct ServiceConfig {
     /// for a rank process dying mid-service (the multi-process
     /// analogue is exercised by the `cbcastd rank` CI smoke).
     pub fault: Option<(usize, usize)>,
+    /// Deterministic **transient**-fault knob: a seeded frame-level
+    /// [`FaultPlan`] the daemon self-probes at startup. Before serving,
+    /// the daemon runs one small broadcast over a chaos-socket world
+    /// under this plan with a zero shrink budget, and refuses to start
+    /// if the protocol-v3 reliability layer cannot heal the injected
+    /// faults (e.g. a blackholed link that exhausts the retry budget).
+    /// Whatever the probe healed stays visible in the process-wide
+    /// wire counters ([`ServiceMetrics::wire`], the stats line).
+    /// `None` = no probe. Unlike [`ServiceConfig::fault`], a passing
+    /// chaos plan consumes **no** membership epoch — that distinction
+    /// is the chaos plane's whole point.
+    pub chaos: Option<FaultPlan>,
 }
 
 impl Default for ServiceConfig {
@@ -99,6 +113,7 @@ impl Default for ServiceConfig {
             client_timeout: Duration::from_secs(2),
             threads: None,
             fault: None,
+            chaos: None,
         }
     }
 }
@@ -129,6 +144,12 @@ pub struct ServiceMetrics {
     /// The batcher's current membership epoch (0 = the original,
     /// never-shrunk world; advances once per recovery).
     pub epoch: u64,
+    /// Snapshot of the process-wide reliable-delivery counters
+    /// ([`crate::comm::global_wire_faults`]): transient wire faults
+    /// healed in place (or escalated) by every protocol-v3 socket
+    /// endpoint this process has run — the daemon's chaos self-probe
+    /// included. Populated at snapshot time, not accumulated here.
+    pub wire: WireFaults,
     /// Cumulative per-tenant usage.
     pub tenants: Vec<TenantUsage>,
 }
@@ -192,9 +213,11 @@ impl ServiceHandle {
         self.inner.cfg.p
     }
 
-    /// A counters snapshot.
+    /// A counters snapshot (with the live wire counters folded in).
     pub fn metrics(&self) -> ServiceMetrics {
-        self.inner.metrics.lock().unwrap().clone()
+        let mut m = self.inner.metrics.lock().unwrap().clone();
+        m.wire = global_wire_faults();
+        m
     }
 
     /// Ask every daemon thread to wind down (returns immediately).
@@ -220,7 +243,9 @@ impl ServiceHandle {
         if let Some(path) = &self.inner.uds_path {
             let _ = std::fs::remove_file(path);
         }
-        self.inner.metrics.lock().unwrap().clone()
+        let mut m = self.inner.metrics.lock().unwrap().clone();
+        m.wire = global_wire_faults();
+        m
     }
 }
 
@@ -302,6 +327,9 @@ fn serve(
             ));
         }
     }
+    if let Some(plan) = cfg.chaos {
+        chaos_probe(plan).map_err(|msg| io::Error::new(io::ErrorKind::InvalidInput, msg))?;
+    }
     let inner = Arc::new(Inner {
         cfg,
         queue: Mutex::new(VecDeque::new()),
@@ -324,6 +352,42 @@ fn serve(
         thread::Builder::new().name("cbcastd-batch".into()).spawn(move || batch_loop(&inner))?
     };
     Ok(ServiceHandle { inner, threads: vec![accept, batcher] })
+}
+
+/// The startup self-probe behind [`ServiceConfig::chaos`]: one small
+/// broadcast over a two-rank chaos-socket world under the configured
+/// plan, with a **zero** shrink budget — the probe passes iff the
+/// protocol-v3 reliability layer heals every injected fault without
+/// consuming a membership epoch and without corrupting the payload.
+/// Whatever it healed stays visible in the process-wide wire counters
+/// ([`ServiceMetrics::wire`]).
+fn chaos_probe(plan: FaultPlan) -> Result<(), String> {
+    let data: Vec<i64> = (0..64).map(|i| i * 7 - 3).collect();
+    let report = elastic_bcast(
+        2,
+        0,
+        &data,
+        4,
+        TransportKind::ChaosSocket(plan),
+        &CrashPlan::none(),
+        0,
+        Duration::from_secs(10),
+    )
+    .map_err(|e| format!("service: chaos self-probe did not heal under the plan: {e}"))?;
+    if !report.changes.is_empty() {
+        return Err(
+            "service: chaos self-probe consumed a membership epoch (plan too hostile)"
+                .to_string(),
+        );
+    }
+    for (g, buf) in &report.buffers {
+        if buf != &data {
+            return Err(format!(
+                "service: chaos self-probe delivered a corrupted payload at rank {g}"
+            ));
+        }
+    }
+    Ok(())
 }
 
 fn accept_loop(inner: &Arc<Inner>, listener: Listener) {
@@ -708,6 +772,7 @@ fn render_stats(inner: &Inner) -> String {
         m.recoveries,
         m.epoch,
     );
+    out.push_str(&format!("wire: {}\n", global_wire_faults()));
     for t in &m.tenants {
         out.push_str(&format!(
             "tenant={} ops={} ok={} messages={} bytes={} rejected={} restarted={}\n",

@@ -188,6 +188,99 @@ mod tests {
     }
 
     #[test]
+    fn distinct_tenants_follow_distinct_jitter_schedules() {
+        use super::client::{backoff_schedule, tenant_seed};
+
+        // Two tenants against the same zero-capacity daemon: both must
+        // exhaust the same bounded budget (the jitter changes *when*
+        // they resubmit, never *how often*)...
+        let path = temp_sock("jitter");
+        let cfg = ServiceConfig {
+            p: 4,
+            queue_cap: 0,
+            retry_after: Duration::from_millis(1),
+            client_timeout: Duration::from_millis(500),
+            ..ServiceConfig::default()
+        };
+        let handle = serve_unix(&path, cfg).unwrap();
+        let mix = traffic_mix(&mut Rng::new(21), 4, 1, &MixOptions::default());
+        for tenant in ["jitter-a", "jitter-b"] {
+            let mut client =
+                ServiceClient::connect_unix_retry(&path, tenant, Duration::from_secs(5))
+                    .unwrap();
+            let err = client.call_admitted_budget(0, &mix.ops[0], 4).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{tenant}: {err}");
+        }
+        handle.shutdown();
+        let metrics = handle.join();
+        assert_eq!(metrics.admitted, 0);
+        assert_eq!(metrics.rejected, 8, "both tenants spent the full budget");
+
+        // ...while their sleep schedules are deterministic per tenant,
+        // distinct across tenants, and bounded to 50-100% of the capped
+        // doubling base.
+        let (sa, sb) = (tenant_seed("jitter-a"), tenant_seed("jitter-b"));
+        assert_ne!(sa, sb);
+        let sched_a = backoff_schedule(5, 8, sa);
+        let sched_b = backoff_schedule(5, 8, sb);
+        assert_eq!(sched_a, backoff_schedule(5, 8, sa), "schedules replay per tenant");
+        assert_ne!(sched_a, sched_b, "distinct tenants must desynchronize");
+        assert_eq!(sched_a.len(), 7, "one sleep between consecutive submissions");
+        for (i, d) in sched_a.iter().enumerate() {
+            let base = Duration::from_millis(5)
+                .saturating_mul(1u32 << i.min(8) as u32)
+                .min(Duration::from_millis(500));
+            assert!(*d <= base, "sleep #{i} {d:?} above its base {base:?}");
+            assert!(*d >= base / 2, "sleep #{i} {d:?} below half its base {base:?}");
+        }
+    }
+
+    #[test]
+    fn chaos_knob_probes_at_startup_and_reports_wire_counters() {
+        use crate::comm::FaultPlan;
+
+        // A healable plan: the daemon self-probes a lossy two-rank
+        // chaos-socket world at startup, heals it, and serves normally
+        // with the wire counters on its stats line.
+        let path = temp_sock("chaosknob");
+        let cfg = ServiceConfig {
+            p: 4,
+            client_timeout: Duration::from_millis(500),
+            chaos: Some(FaultPlan::new(0xCAFE).drop_per_10k(1_500).corrupt_per_10k(1_500, 3)),
+            ..ServiceConfig::default()
+        };
+        let handle = serve_unix(&path, cfg).unwrap();
+        let mut client =
+            ServiceClient::connect_unix_retry(&path, "chaos", Duration::from_secs(5)).unwrap();
+        let mix = traffic_mix(&mut Rng::new(5), 4, 2, &MixOptions::default());
+        for (i, op) in mix.ops.iter().enumerate() {
+            let reply = client.call_admitted(i as u64, op).unwrap();
+            assert!(!matches!(reply, ServiceReply::Rejected { .. }));
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("wire: retransmits="), "{stats}");
+        handle.shutdown();
+        let metrics = handle.join();
+        assert_eq!(metrics.completed + metrics.failed, 2);
+        assert_eq!(metrics.recoveries, 0, "a healable plan consumes no epoch");
+        assert_eq!(metrics.epoch, 0);
+
+        // An unhealable plan (a blackholed link exhausts the retry
+        // budget) must be refused at startup, not discovered in service.
+        let err = serve_unix(
+            &temp_sock("chaosknob-hostile"),
+            ServiceConfig {
+                p: 4,
+                chaos: Some(FaultPlan::new(1).blackhole(1)),
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput, "{err}");
+        assert!(err.to_string().contains("chaos self-probe"), "{err}");
+    }
+
+    #[test]
     fn vanished_client_loses_only_its_reply() {
         // The daemon deliberately ignores reply-write failures
         // (`send_frame`): a client that drops mid-batch hits the write

@@ -6,6 +6,15 @@
 //! `data_seed` (the [`crate::testkit::MixOp`] convention), which is what
 //! makes the differential check cheap: the daemon returns a digest and
 //! the client can recompute the expected digest from a solo run.
+//!
+//! Service frames deliberately stay on the CRC-less `seal`/raw-read
+//! path: the protocol-v3 CRC/seq/ack reliability machinery belongs to
+//! the rank plane's DATA traffic (where a corrupted frame must heal by
+//! retransmission mid-collective), while a service connection is plain
+//! request/response — a mangled frame here is a protocol error that
+//! drops the connection, exactly as before. The shared `VERSION` bump
+//! to 3 is transparent to this protocol: both sides compare the same
+//! constant in their hellos.
 
 use std::io;
 

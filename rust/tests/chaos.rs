@@ -1,0 +1,271 @@
+//! The differential chaos grid: the receipt for the PR's core claim
+//! that **transient wire faults do not change results and do not
+//! shrink the world**.
+//!
+//! Seeded `(p, n, kind, fault plan)` cases run the same collective
+//! twice — once over `TransportKind::Socket` (fault-free) and once
+//! over `TransportKind::ChaosSocket` with per-10k drop / duplicate /
+//! reorder / delay / corrupt rates up to 10% injected under the socket
+//! layer — and every payload and every verb-level statistic must be
+//! bit-identical. Retransmissions, CRC discards and dedup drops are
+//! invisible at the verb layer by design; they surface only in the
+//! [`WireFaults`] counters.
+//!
+//! The elastic driver rides the same worlds: a chaos'd
+//! `elastic_bcast` must complete at **epoch 0** with zero shrinks,
+//! while a blackholed rank — the one fault no retransmission heals —
+//! must exhaust the retry budget, escalate into the membership shrink
+//! path, and leave survivor payloads bit-identical to a fresh run at
+//! the smaller size.
+//!
+//! Deterministic by default; honors `TESTKIT_SEED` (the CI
+//! `chaos-smoke` job runs the `#[ignore]`d p = 16 case across the
+//! fixed three-seed matrix).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::rank::{spmd_allreduce, spmd_bcast, spmd_reduce};
+use circulant_bcast::comm::{
+    elastic_bcast, elastic_reduce, global_wire_faults, CrashPlan, FaultPlan, TransportKind,
+};
+use circulant_bcast::schedule::Skips;
+use circulant_bcast::sim::{RunStats, UnitCost};
+use circulant_bcast::testkit::{effective_seed, install_seed_reporter, Rng};
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn assert_stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.active_rounds, b.active_rounds, "{ctx}: active_rounds");
+    assert_eq!(a.messages, b.messages, "{ctx}: messages");
+    assert_eq!(a.bytes, b.bytes, "{ctx}: bytes");
+    assert_eq!(a.max_rank_bytes, b.max_rank_bytes, "{ctx}: max_rank_bytes");
+    assert!((a.time - b.time).abs() < 1e-12, "{ctx}: time {} vs {}", a.time, b.time);
+}
+
+/// A random plan with every fault kind active and rates up to ~10%
+/// drop — heavy enough to exercise the reliability layer on every
+/// case, far below the retry budget's exhaustion point.
+fn gen_plan(rng: &mut Rng) -> FaultPlan {
+    FaultPlan::new(rng.next_u64())
+        .drop_per_10k(rng.range(100, 1000) as u32)
+        .dup_per_10k(rng.range(0, 400) as u32)
+        .reorder_per_10k(rng.range(0, 400) as u32)
+        .delay_per_10k(rng.range(0, 200) as u32, 3)
+        .corrupt_per_10k(rng.range(100, 1000) as u32, rng.range(1, 4) as u32)
+}
+
+/// One differential case: fault-free socket world vs the same world
+/// with `plan` injected under it. Payloads and stats bit-identical.
+fn check_case(p: usize, m: usize, n: usize, coll: usize, plan: FaultPlan, ctx: &str) {
+    let sk = Arc::new(Skips::new(p));
+    let clean = TransportKind::Socket;
+    let chaos = TransportKind::ChaosSocket(plan);
+    match coll {
+        0 => {
+            let data: Vec<i64> = (0..m as i64).map(|i| i * 7 - 11).collect();
+            let root = p - 1;
+            let (cs, cb) = spmd_bcast(&sk, root, &data, n, 8, &UnitCost, clean)
+                .unwrap_or_else(|e| panic!("{ctx} [clean bcast]: {e}"));
+            let (xs, xb) = spmd_bcast(&sk, root, &data, n, 8, &UnitCost, chaos)
+                .unwrap_or_else(|e| panic!("{ctx} [chaos bcast]: {e}"));
+            assert_eq!(xb, cb, "{ctx}: bcast payload");
+            assert_stats_eq(&xs, &cs, &format!("{ctx}: bcast"));
+        }
+        1 => {
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| ((r * 41 + i * 13) % 509) as i64).collect())
+                .collect();
+            let (cs, cb) = spmd_reduce(&sk, 0, &inputs, n, Arc::new(SumOp), 8, &UnitCost, clean)
+                .unwrap_or_else(|e| panic!("{ctx} [clean reduce]: {e}"));
+            let (xs, xb) = spmd_reduce(&sk, 0, &inputs, n, Arc::new(SumOp), 8, &UnitCost, chaos)
+                .unwrap_or_else(|e| panic!("{ctx} [chaos reduce]: {e}"));
+            assert_eq!(xb, cb, "{ctx}: reduce payload");
+            assert_stats_eq(&xs, &cs, &format!("{ctx}: reduce"));
+        }
+        _ => {
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| ((r + 1) * (i + 1) % 333) as i64).collect())
+                .collect();
+            let (crs, cag, cb) =
+                spmd_allreduce(&sk, &inputs, n, Arc::new(SumOp), 8, &UnitCost, clean)
+                    .unwrap_or_else(|e| panic!("{ctx} [clean allreduce]: {e}"));
+            let (xrs, xag, xb) =
+                spmd_allreduce(&sk, &inputs, n, Arc::new(SumOp), 8, &UnitCost, chaos)
+                    .unwrap_or_else(|e| panic!("{ctx} [chaos allreduce]: {e}"));
+            assert_eq!(xb, cb, "{ctx}: allreduce payload");
+            assert_stats_eq(&xrs, &crs, &format!("{ctx}: allreduce rs phase"));
+            assert_stats_eq(&xag, &cag, &format!("{ctx}: allreduce ag phase"));
+        }
+    }
+}
+
+/// The seeded differential grid: transient faults up to 10% leave
+/// every collective bit-identical to the fault-free run.
+#[test]
+fn chaos_grid_matches_fault_free_runs() {
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    for i in 0..6 {
+        let p = [2, 3, 4, 5, 7, 8, 9, 11][rng.range(0, 7)];
+        let m = rng.range(1, 96);
+        let n = rng.range(1, 6);
+        let coll = rng.range(0, 2);
+        let plan = gen_plan(&mut rng);
+        check_case(p, m, n, coll, plan, &format!("case {i}: p={p} m={m} n={n} coll={coll}"));
+    }
+}
+
+/// A fixed heavy case that provably exercises the reliability layer:
+/// with ~16% of frames dropped or corrupted over an allreduce's many
+/// hundreds of frames, the process-global fault counters must move —
+/// the healing is real, not a plan that never fired.
+#[test]
+fn heavy_chaos_moves_the_wire_fault_counters() {
+    let before = global_wire_faults();
+    let plan = FaultPlan::new(0xD1CE).drop_per_10k(800).corrupt_per_10k(800, 3);
+    check_case(8, 256, 4, 2, plan, "heavy: p=8 m=256 n=4 allreduce");
+    let after = global_wire_faults();
+    assert!(
+        after.retransmits > before.retransmits || after.crc_fails > before.crc_fails,
+        "a 16% fault rate over hundreds of frames must trip the counters \
+         (before {before}, after {after})"
+    );
+}
+
+/// The elastic driver over a chaos world: transient faults heal under
+/// the collective, so recovery never triggers — zero shrinks, epoch 0,
+/// payloads bit-identical to the fault-free elastic run.
+#[test]
+fn elastic_world_under_chaos_consumes_no_epochs() {
+    let p = 6;
+    let data: Vec<i64> = (0..96).map(|i| i * 5 - 17).collect();
+    let plan = FaultPlan::new(0xC0FFEE).drop_per_10k(500).dup_per_10k(250).corrupt_per_10k(500, 2);
+    let chaos = elastic_bcast(
+        p,
+        2,
+        &data,
+        4,
+        TransportKind::ChaosSocket(plan),
+        &CrashPlan::none(),
+        2,
+        TIMEOUT,
+    )
+    .expect("chaos'd elastic bcast heals without shrinking");
+    assert!(chaos.changes.is_empty(), "no epochs may be consumed: {:?}", chaos.changes);
+    assert_eq!(chaos.membership.epoch(), 0);
+    assert_eq!(chaos.membership.p(), p);
+
+    let clean = elastic_bcast(
+        p,
+        2,
+        &data,
+        4,
+        TransportKind::Socket,
+        &CrashPlan::none(),
+        0,
+        TIMEOUT,
+    )
+    .expect("fault-free elastic bcast");
+    assert_eq!(chaos.root, clean.root);
+    assert_eq!(chaos.buffers, clean.buffers, "chaos world must match the fault-free world");
+}
+
+/// The escalation path: a blackholed rank is the one fault no
+/// retransmission heals. The retry budget exhausts, the membership
+/// plane shrinks by exactly that rank (one epoch), and the restarted
+/// reduction on the survivor world is bit-identical to a fresh
+/// (p − 1)-rank run over the survivors' inputs. The victim is the
+/// highest rank so the rebuilt dense world leaves the blackhole with
+/// nothing to swallow.
+#[test]
+fn a_blackholed_rank_escalates_into_the_shrink_path() {
+    let before = global_wire_faults();
+    let p = 4;
+    let victim = 3;
+    let n = 64;
+    let inputs: Vec<Vec<i64>> =
+        (0..p).map(|r| Rng::new(0xB1A0 + r as u64).vec_i64(n, -999, 999)).collect();
+    let report = elastic_reduce(
+        p,
+        1,
+        &inputs,
+        4,
+        Arc::new(SumOp),
+        TransportKind::ChaosSocket(FaultPlan::new(7).blackhole(victim)),
+        &CrashPlan::none(),
+        2,
+        TIMEOUT,
+    )
+    .expect("blackhole must shrink, then complete");
+
+    assert_eq!(report.changes.len(), 1, "exactly one shrink: {:?}", report.changes);
+    assert_eq!(report.changes[0].failed, vec![victim]);
+    assert_eq!(report.membership.epoch(), 1);
+    assert_eq!(report.membership.p(), p - 1);
+    assert_eq!(report.root, 1, "the root survived and keeps serving");
+
+    let fresh = elastic_reduce(
+        p - 1,
+        1,
+        &inputs[..p - 1],
+        4,
+        Arc::new(SumOp),
+        TransportKind::Socket,
+        &CrashPlan::none(),
+        0,
+        TIMEOUT,
+    )
+    .expect("fresh survivor-world reduce");
+    assert_eq!(
+        report.buffers, fresh.buffers,
+        "survivor payloads must be bit-identical to a fresh (p − 1) run"
+    );
+
+    let after = global_wire_faults();
+    assert!(
+        after.escalations > before.escalations,
+        "budget exhaustion must be counted as an escalation \
+         (before {before}, after {after})"
+    );
+}
+
+/// Release smoke (CI `chaos-smoke` job): p = 16 over real socketpairs
+/// with 5% drop + 5% corrupt, seeded from the CI matrix via
+/// `TESTKIT_SEED`. Socket parity AND zero membership epochs consumed.
+/// `#[ignore]`d in the default run — a 16·15-end mesh built four times
+/// over is deliberate load (the CI job raises `ulimit -n` first).
+#[test]
+#[ignore]
+fn chaos_smoke_p16() {
+    install_seed_reporter();
+    let plan = FaultPlan::new(effective_seed()).drop_per_10k(500).corrupt_per_10k(500, 3);
+    check_case(16, 512, 6, 0, plan, "smoke: p=16 bcast");
+    check_case(16, 256, 4, 2, plan, "smoke: p=16 allreduce");
+
+    let before = global_wire_faults();
+    let data: Vec<i64> = (0..256).map(|i| (i * 37) % 1013).collect();
+    let report = elastic_bcast(
+        16,
+        5,
+        &data,
+        4,
+        TransportKind::ChaosSocket(plan),
+        &CrashPlan::none(),
+        2,
+        TIMEOUT,
+    )
+    .expect("chaos smoke: elastic bcast heals");
+    assert!(report.changes.is_empty(), "zero epochs consumed: {:?}", report.changes);
+    assert_eq!(report.membership.epoch(), 0);
+    for (g, buf) in &report.buffers {
+        assert_eq!(buf, &data, "rank {g} payload");
+    }
+    let after = global_wire_faults();
+    assert!(
+        after.retransmits > before.retransmits || after.crc_fails > before.crc_fails,
+        "5% + 5% fault rates must exercise the reliability layer"
+    );
+}

@@ -28,8 +28,8 @@
 use std::time::Duration;
 
 use circulant_bcast::comm::{
-    elastic_bcast, CommBuilder, CommError, FaultPlan, IbcastReq, Membership, RankComm,
-    TransportKind,
+    elastic_bcast, elastic_reduce, CommBuilder, CommError, CrashPlan, IbcastReq, Membership,
+    RankComm, TransportKind,
 };
 use circulant_bcast::schedule::Skips;
 use circulant_bcast::testkit::{install_seed_reporter, Rng};
@@ -54,7 +54,7 @@ fn assert_recovers(
     p: usize,
     root: usize,
     kind: TransportKind,
-    plan: &FaultPlan,
+    plan: &CrashPlan,
     expect_failed: &[usize],
     expect_root: usize,
     seed: u64,
@@ -73,7 +73,7 @@ fn assert_recovers(
     }
     // Bit-identity to a fresh run at the shrunken size, pinned
     // directly: a fault-free elastic run over p′ fresh ranks.
-    let fresh = elastic_bcast(p2, 0, &data, 4, kind, &FaultPlan::none(), 0, TIMEOUT)
+    let fresh = elastic_bcast(p2, 0, &data, 4, kind, &CrashPlan::none(), 0, TIMEOUT)
         .unwrap_or_else(|e| panic!("fresh p = {p2} {kind:?} run failed: {e}"));
     for ((_, recovered), (_, fresh)) in report.buffers.iter().zip(fresh.buffers.iter()) {
         assert_eq!(recovered, fresh, "recovered world must match a fresh p' world");
@@ -136,7 +136,7 @@ fn membership_survives_paper_grid_shrinks() {
 fn single_crash_mid_bcast_recovers_on_threads() {
     install_seed_reporter();
     for (p, victim) in [(8usize, 5usize), (7, 3), (9, 6)] {
-        let plan = FaultPlan::none().crash(0, victim, 1);
+        let plan = CrashPlan::none().crash(0, victim, 1);
         assert_recovers(p, 0, TransportKind::Threads, &plan, &[victim], 0, 0xA11CE + p as u64);
     }
 }
@@ -148,7 +148,7 @@ fn single_crash_mid_bcast_recovers_on_sockets() {
     // epoch builds a fresh one; the same p grid as threads stays well
     // inside the default fd limit.
     for (p, victim) in [(8usize, 5usize), (7, 3), (9, 6)] {
-        let plan = FaultPlan::none().crash(0, victim, 1);
+        let plan = CrashPlan::none().crash(0, victim, 1);
         assert_recovers(p, 0, TransportKind::Socket, &plan, &[victim], 0, 0xB0B + p as u64);
     }
 }
@@ -158,7 +158,7 @@ fn crash_before_any_round_recovers_too() {
     install_seed_reporter();
     // crash_round 0: the victim dies before it communicates at all —
     // the pure-silence case (no partial sends to help detection).
-    let plan = FaultPlan::none().crash(0, 2, 0);
+    let plan = CrashPlan::none().crash(0, 2, 0);
     assert_recovers(8, 0, TransportKind::Threads, &plan, &[2], 0, 0x51E7);
 }
 
@@ -174,10 +174,70 @@ fn dead_root_is_replaced_by_lowest_survivor() {
     // whichever rank is root each epoch — the god-view stand-in for
     // "the payload is replicated/recoverable", which is what lets a
     // root death be survivable at all.)
-    let plan = FaultPlan::none().crash(0, 2, 1);
+    let plan = CrashPlan::none().crash(0, 2, 1);
     assert_recovers(8, 2, TransportKind::Threads, &plan, &[2], 0, 0x0007);
-    let plan = FaultPlan::none().crash(0, 2, 1);
+    let plan = CrashPlan::none().crash(0, 2, 1);
     assert_recovers(8, 2, TransportKind::Socket, &plan, &[2], 0, 0x0008);
+}
+
+#[test]
+fn elastic_reduce_survives_a_dead_root() {
+    use circulant_bcast::collectives::SumOp;
+    install_seed_reporter();
+    // elastic_reduce rides the same harvest → shrink → re-elect →
+    // restart skeleton as elastic_bcast. Root 3 dies mid-reduction;
+    // rank 0 (the lowest survivor) takes over, every survivor
+    // re-contributes its original input, and the recovered sum equals
+    // a fresh p′ = 7 reduction over the survivors' inputs — rank 3's
+    // contribution is genuinely lost with it.
+    let p = 8usize;
+    let n = 64usize;
+    let inputs: Vec<Vec<i64>> = (0..p).map(|r| payload(n, 0x5EED + r as u64)).collect();
+    for kind in [TransportKind::Threads, TransportKind::Socket] {
+        let plan = CrashPlan::none().crash(0, 3, 1);
+        let report = elastic_reduce(
+            p,
+            3,
+            &inputs,
+            4,
+            Arc::new(SumOp),
+            kind,
+            &plan,
+            2,
+            TIMEOUT,
+        )
+        .unwrap_or_else(|e| panic!("{kind:?}: reduce recovery failed: {e}"));
+        assert_eq!(report.changes.len(), 1);
+        assert_eq!(report.changes[0].failed, vec![3]);
+        assert_eq!(report.membership.p(), p - 1);
+        assert_eq!(report.root, 0, "the lowest survivor takes over a dead root");
+        let want: Vec<i64> = (0..n)
+            .map(|i| (0..p).filter(|&r| r != 3).map(|r| inputs[r][i]).sum())
+            .collect();
+        let (_, got) =
+            report.buffers.iter().find(|(g, _)| *g == 0).expect("new root's payload");
+        assert_eq!(got, &want, "{kind:?}: survivors' sum, without the dead rank");
+
+        // Bit-identity to a fresh run at the shrunken size: the same
+        // survivors' inputs reduced on a fresh 7-rank world.
+        let survivor_inputs: Vec<Vec<i64>> =
+            (0..p).filter(|&r| r != 3).map(|r| inputs[r].clone()).collect();
+        let fresh = elastic_reduce(
+            p - 1,
+            0,
+            &survivor_inputs,
+            4,
+            Arc::new(SumOp),
+            kind,
+            &CrashPlan::none(),
+            0,
+            TIMEOUT,
+        )
+        .unwrap_or_else(|e| panic!("{kind:?}: fresh p−1 reduce failed: {e}"));
+        let (_, fresh_root) =
+            fresh.buffers.iter().find(|(g, _)| *g == 0).expect("fresh root's payload");
+        assert_eq!(got, fresh_root, "{kind:?}: recovered reduce must match fresh p′");
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -190,7 +250,7 @@ fn two_failure_cascade_shrinks_twice() {
     // Epoch 0: rank 4 dies. Epoch 1 (the recovery run): rank 7 dies
     // too. The world must shrink twice — 9 → 8 → 7 — and complete.
     let data = payload(96, 0xCA5CADE);
-    let plan = FaultPlan::none().crash(0, 4, 1).crash(1, 7, 1);
+    let plan = CrashPlan::none().crash(0, 4, 1).crash(1, 7, 1);
     let report =
         elastic_bcast(9, 0, &data, 4, TransportKind::Threads, &plan, 4, TIMEOUT).unwrap();
     assert_eq!(report.changes.len(), 2, "two shrinks: {:?}", report.changes);
@@ -209,7 +269,7 @@ fn shrink_budget_exhaustion_is_typed() {
     // Budget 1, two planned deaths: the second shrink is refused and
     // the caller gets the membership receipt, not a hang or a panic.
     let data = payload(48, 0xB7D6E7);
-    let plan = FaultPlan::none().crash(0, 1, 1).crash(1, 2, 1);
+    let plan = CrashPlan::none().crash(0, 1, 1).crash(1, 2, 1);
     let err = elastic_bcast(5, 0, &data, 2, TransportKind::Threads, &plan, 1, TIMEOUT)
         .expect_err("budget 1 cannot absorb two failures");
     match err {
@@ -232,7 +292,7 @@ fn loopback_has_no_detector_and_says_so() {
         &data,
         1,
         TransportKind::Loopback,
-        &FaultPlan::none(),
+        &CrashPlan::none(),
         1,
         TIMEOUT,
     )
@@ -330,7 +390,7 @@ fn no_fault_elastic_runs_match_plain_spmd() {
             &data,
             4,
             TransportKind::Threads,
-            &FaultPlan::none(),
+            &CrashPlan::none(),
             0,
             TIMEOUT,
         )

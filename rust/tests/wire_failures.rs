@@ -3,10 +3,13 @@
 //! real rendezvous and the tests pin the *typed* failure every fault
 //! maps to — handshake mismatches are `io::Error`s at the constructor
 //! or `TransportError::Shutdown` after assembly, truncation poisons the
-//! world, and a peer that dies mid-schedule surfaces in the lockstep
-//! vocabulary as `SimError::MissingMessage`. The frame layout is
-//! re-derived here by hand, byte for byte, so these tests double as an
-//! independent check of the wire format documented in the module docs.
+//! world, a corrupted or replayed `DATA` frame is healed by the v3
+//! reliability layer (discard + retransmit, dedup window) without
+//! poisoning anything, and a peer that dies mid-schedule surfaces in
+//! the lockstep vocabulary as `SimError::MissingMessage`. The v3 frame
+//! layout — CRC32 trailer, sequence/ACK header — is re-derived here by
+//! hand, byte for byte, so these tests double as an independent check
+//! of the wire format documented in the module docs.
 
 use std::io::{Read, Write};
 use std::net::Shutdown;
@@ -20,29 +23,64 @@ use circulant_bcast::sim::SimError;
 // -- The wire format, reconstructed independently of the crate ---------
 
 const MAGIC: u32 = 0x4342_5731; // "CBW1"
-const VERSION: u16 = 1;
+const VERSION: u16 = 3;
 const FT_HELLO: u8 = 1;
 const FT_DATA: u8 = 2;
 const ELEM_BYTES_I64: u32 = 8;
 
-/// `[len: u32][type: u8][body]`, len counting type + body.
+/// CRC32 (IEEE, reflected 0xEDB8_8320) over `[type][body]` — the same
+/// polynomial the crate uses, implemented independently.
+fn crc32(kind: u8, body: &[u8]) -> u32 {
+    let mut c: u32 = !0;
+    for &b in std::iter::once(&kind).chain(body.iter()) {
+        c ^= b as u32;
+        for _ in 0..8 {
+            let mask = (c & 1).wrapping_neg();
+            c = (c >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !c
+}
+
+/// v3 frame: `[len: u32][type: u8][body][crc: u32]`, len counting
+/// type + body + crc.
 fn seal(kind: u8, body: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(body.len() + 5);
-    out.extend_from_slice(&((body.len() + 1) as u32).to_le_bytes());
+    let crc = crc32(kind, body);
+    let mut out = Vec::with_capacity(body.len() + 9);
+    out.extend_from_slice(&((body.len() + 5) as u32).to_le_bytes());
     out.push(kind);
     out.extend_from_slice(body);
+    out.extend_from_slice(&crc.to_le_bytes());
     out
 }
 
+/// v3 HELLO: 34-byte body `(magic, version, p, rank, world_id,
+/// elem_bytes, epoch)` — 43 bytes on the wire once sealed.
 fn hello(version: u16, p: u32, rank: u32, world_id: u64) -> Vec<u8> {
-    let mut body = Vec::with_capacity(26);
+    let mut body = Vec::with_capacity(34);
     body.extend_from_slice(&MAGIC.to_le_bytes());
     body.extend_from_slice(&version.to_le_bytes());
     body.extend_from_slice(&p.to_le_bytes());
     body.extend_from_slice(&rank.to_le_bytes());
     body.extend_from_slice(&world_id.to_le_bytes());
     body.extend_from_slice(&ELEM_BYTES_I64.to_le_bytes());
+    body.extend_from_slice(&0u64.to_le_bytes()); // epoch
     seal(FT_HELLO, &body)
+}
+
+/// v3 DATA: `(seq, ack, round, src, dst, count, payload)`.
+fn data(seq: u64, ack: u64, round: u32, src: u32, dst: u32, payload: &[i64]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(32 + payload.len() * 8);
+    body.extend_from_slice(&seq.to_le_bytes());
+    body.extend_from_slice(&ack.to_le_bytes());
+    body.extend_from_slice(&round.to_le_bytes());
+    body.extend_from_slice(&src.to_le_bytes());
+    body.extend_from_slice(&dst.to_le_bytes());
+    body.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    for v in payload {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    seal(FT_DATA, &body)
 }
 
 // -- Harness ----------------------------------------------------------
@@ -126,9 +164,9 @@ fn dialer_poisons_on_answering_hello_from_the_wrong_world() {
         std::thread::spawn(move || SocketTransport::<i64>::uds_world(1, 2, wid, &dir, TIMEOUT))
     };
     let (mut conn, _) = listener.accept().unwrap();
-    // Swallow rank 1's HELLO (4 len + 1 type + 26 body bytes), then
-    // answer as rank 0 of a *different* world.
-    let mut buf = [0u8; 31];
+    // Swallow rank 1's HELLO (4 len + 1 type + 34 body + 4 crc bytes),
+    // then answer as rank 0 of a *different* world.
+    let mut buf = [0u8; 43];
     conn.read_exact(&mut buf).unwrap();
     conn.write_all(&hello(VERSION, 2, 0, wid ^ 1)).unwrap();
 
@@ -138,6 +176,54 @@ fn dialer_poisons_on_answering_hello_from_the_wrong_world() {
             assert!(reason.contains("handshake") && reason.contains("world id"), "got: {reason}")
         }
         other => panic!("expected Shutdown with handshake diagnosis, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A reordered rendezvous — the link's first frame is `DATA`, with the
+/// `HELLO` notionally still in flight behind it — is refused at the
+/// constructor: the handshake cannot be inferred from data traffic, so
+/// the acceptor demands `HELLO` first, by type.
+#[test]
+fn reordered_rendezvous_with_data_before_hello_is_refused() {
+    let dir = temp_world_dir("data-first");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&data(1, 0, 0, 1, 0, &[1, 2])).unwrap();
+
+    let err = rank0.join().unwrap().expect_err("DATA before HELLO must not assemble");
+    let msg = err.to_string();
+    assert!(msg.contains("expected HELLO"), "got: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A *second* `HELLO` on an established link is a protocol violation —
+/// a duplicated rendezvous frame cannot be healed by retransmission
+/// semantics (HELLO carries no sequence number), so the world poisons
+/// with the duplicate-HELLO diagnosis.
+#[test]
+fn duplicate_hello_on_an_established_link_poisons_the_world() {
+    let dir = temp_world_dir("dup-hello");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&hello(VERSION, 2, 1, wid)).unwrap();
+    let mut t = rank0.join().unwrap().expect("valid HELLO assembles");
+    // The wire replays the HELLO after the link is up.
+    impostor.write_all(&hello(VERSION, 2, 1, wid)).unwrap();
+
+    match t.recv(0, 1) {
+        Err(TransportError::Shutdown { reason, .. }) => {
+            assert!(reason.contains("duplicate HELLO"), "got: {reason}")
+        }
+        other => panic!("expected Shutdown on duplicate HELLO, got {other:?}"),
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -157,7 +243,7 @@ fn truncated_frame_poisons_the_receiver() {
     };
     let mut impostor = dial_rank0(&dir);
     impostor.write_all(&hello(VERSION, 2, 1, wid)).unwrap();
-    // A DATA frame claiming 41 bytes of type + body, delivering 8.
+    // A DATA frame claiming 41 bytes of type + body + crc, delivering 8.
     let mut torn = Vec::new();
     torn.extend_from_slice(&41u32.to_le_bytes());
     torn.push(FT_DATA);
@@ -172,6 +258,73 @@ fn truncated_frame_poisons_the_receiver() {
         }
         other => panic!("expected Shutdown on truncation, got {other:?}"),
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupted frame is a *transient* fault, not a protocol violation:
+/// the CRC check discards it silently and the (simulated) sender's
+/// retransmission of the same sequence number delivers. The world stays
+/// healthy — no poison, no crash-marking — and the endpoint counts the
+/// checksum failure.
+#[test]
+fn corrupted_frame_is_discarded_and_the_resend_delivers() {
+    let dir = temp_world_dir("crc-resend");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&hello(VERSION, 2, 1, wid)).unwrap();
+    let mut t = rank0.join().unwrap().expect("valid HELLO assembles");
+
+    // Seal a valid frame, then flip one payload bit — the length
+    // prefix still describes the frame, so only the CRC catches it.
+    let mut corrupted = data(1, 0, 0, 1, 0, &[70, 71, 72]);
+    let last = corrupted.len() - 6; // inside the payload, before the crc
+    corrupted[last] ^= 0x10;
+    impostor.write_all(&corrupted).unwrap();
+    // ... and the retransmission, byte-identical to the original.
+    impostor.write_all(&data(1, 0, 0, 1, 0, &[70, 71, 72])).unwrap();
+
+    assert_eq!(t.recv(0, 1).expect("resend heals the corruption"), vec![70, 71, 72]);
+    assert!(t.failed_peers().is_empty(), "a corrupted frame must not crash-mark the peer");
+    let faults = t.wire_faults().expect("socket transport surfaces wire faults");
+    assert!(faults.crc_fails >= 1, "checksum failure must be counted: {faults}");
+    drop(impostor);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The dedup window: a `DATA` frame replayed N times (duplicated by
+/// the wire, or a retransmission whose original already won) delivers
+/// exactly once. The mailbox never sees the copies — so the schedule's
+/// one-message-per-round invariant (`ReceivePortBusy`) keeps meaning a
+/// genuinely broken schedule — and each drop is counted.
+#[test]
+fn replayed_data_frames_deduplicate_to_one_delivery() {
+    let dir = temp_world_dir("dedup");
+    let wid = fresh_world_id();
+    let rank0 = {
+        let dir = dir.clone();
+        std::thread::spawn(move || SocketTransport::<i64>::uds_world(0, 2, wid, &dir, TIMEOUT))
+    };
+    let mut impostor = dial_rank0(&dir);
+    impostor.write_all(&hello(VERSION, 2, 1, wid)).unwrap();
+    let mut t = rank0.join().unwrap().expect("valid HELLO assembles");
+
+    let frame = data(1, 0, 0, 1, 0, &[42, 43]);
+    for _ in 0..5 {
+        impostor.write_all(&frame).unwrap();
+    }
+    // A genuinely fresh frame behind the replay storm still delivers.
+    impostor.write_all(&data(2, 0, 1, 1, 0, &[44, 45])).unwrap();
+
+    assert_eq!(t.recv(0, 1).expect("first copy delivers"), vec![42, 43]);
+    assert_eq!(t.recv(1, 1).expect("fresh frame delivers after the storm"), vec![44, 45]);
+    assert!(t.failed_peers().is_empty(), "duplicates must not crash-mark the peer");
+    let faults = t.wire_faults().expect("socket transport surfaces wire faults");
+    assert!(faults.dup_drops >= 4, "four replayed copies must be dropped: {faults}");
+    drop(impostor);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
