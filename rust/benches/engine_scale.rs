@@ -10,14 +10,17 @@
 //! Usage: `cargo bench --bench engine_scale -- [MAX_EXP]`
 //! where MAX_EXP bounds the largest p = 2^MAX_EXP (default 20; CI smoke
 //! runs 17 at CBCAST_THREADS=1 and =4 and asserts the parallel build is
-//! not slower). Simulated results are cross-checked per size: round
-//! count must be the optimal n - 1 + q and, where the lockstep run
-//! exists, all statistics must match exactly.
+//! not slower, plus CBCAST_BUILD_KERNEL=scalar vs =lanes and asserts
+//! the vectorized build is not slower). Simulated results are
+//! cross-checked per size: round count must be the optimal n - 1 + q
+//! and, where the lockstep run exists, all statistics must match
+//! exactly.
 //!
 //! A machine-readable record is written to `BENCH_engine_scale.json`
 //! (override with `CBCAST_BENCH_JSON=path`): per-p build/run times plus
-//! totals, threads and message counts — what CI diffs across thread
-//! counts and what the acceptance receipts are read from.
+//! totals, threads, the construction kernel and message counts — what
+//! CI diffs across thread counts and kernels and what the acceptance
+//! receipts are read from.
 
 use std::io::Write;
 use std::sync::Arc;
@@ -25,7 +28,9 @@ use std::time::Instant;
 
 use circulant_bcast::collectives::bcast::build_bcast_procs;
 use circulant_bcast::collectives::common::{BlockGeometry, ScheduleSource};
-use circulant_bcast::schedule::{ceil_log2, configured_threads, ScheduleTable, Skips};
+use circulant_bcast::schedule::{
+    ceil_log2, configured_build_kernel, configured_threads, BuildKernel, ScheduleTable, Skips,
+};
 use circulant_bcast::sim::{CirculantEngine, EngineScratch, LinearCost, Network, RunStats};
 
 const N_BLOCKS: usize = 64;
@@ -53,6 +58,11 @@ fn main() {
         .unwrap_or(20)
         .clamp(10, 24);
     let threads = configured_threads();
+    let kernel = configured_build_kernel();
+    let kernel_name = match kernel {
+        BuildKernel::Scalar => "scalar",
+        BuildKernel::Lanes => "lanes",
+    };
     let cost = LinearCost::hpc_default();
     let m = N_BLOCKS * BLOCK_ELEMS;
     let mut rows: Vec<Row> = Vec::new();
@@ -60,8 +70,8 @@ fn main() {
 
     println!("=== engine_scale: full-network bcast simulation, n = {N_BLOCKS} blocks ===");
     println!(
-        "(p up to 2^{max_exp}; schedule-plane build on {threads} thread(s); \
-         lockstep Network comparison up to 2^{LOCKSTEP_MAX_EXP})\n"
+        "(p up to 2^{max_exp}; schedule-plane build on {threads} thread(s), \
+         {kernel_name} kernel; lockstep Network comparison up to 2^{LOCKSTEP_MAX_EXP})\n"
     );
     println!(
         "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
@@ -75,9 +85,10 @@ fn main() {
         let sk = Arc::new(Skips::new(p));
         let geom = BlockGeometry::new(m, N_BLOCKS);
 
-        // Build: the all-ranks flat schedule arena, in parallel.
+        // Build: the all-ranks flat schedule arena, in parallel, with
+        // the configured construction kernel.
         let t = Instant::now();
-        let table = Arc::new(ScheduleTable::build_with_threads(&sk, threads));
+        let table = Arc::new(ScheduleTable::build_with_kernel(&sk, threads, kernel));
         let build_ms = t.elapsed().as_secs_f64() * 1e3;
 
         // Run: active-set simulation over the shared plane, reusing one
@@ -130,22 +141,22 @@ fn main() {
 
     let json_path = std::env::var("CBCAST_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_engine_scale.json".to_string());
-    write_json(&json_path, threads, &rows).expect("write bench json");
+    write_json(&json_path, threads, kernel_name, &rows).expect("write bench json");
     let total_build: f64 = rows.iter().map(|r| r.build_ms).sum();
     let total_run: f64 = rows.iter().map(|r| r.run_ms).sum();
     println!(
         "\ntotals: build {total_build:.1} ms, run {total_run:.1} ms, \
-         end-to-end {:.1} ms ({threads} thread(s)) → {json_path}",
+         end-to-end {:.1} ms ({threads} thread(s), {kernel_name} kernel) → {json_path}",
         total_build + total_run
     );
     println!("(build = parallel ScheduleTable fill (chunked, violation-memoized,");
-    println!(" shared-baseblock); run = active-set simulation over the shared plane;");
+    println!(" {kernel_name} kernel); run = active-set simulation over the shared plane;");
     println!(" lockstep = Network with per-rank procs. Identical statistics where");
     println!(" both run — the differential receipts.)");
 }
 
 /// Hand-rolled JSON (the crate is dependency-free; no serde).
-fn write_json(path: &str, threads: usize, rows: &[Row]) -> std::io::Result<()> {
+fn write_json(path: &str, threads: usize, kernel: &str, rows: &[Row]) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
     let total_build: f64 = rows.iter().map(|r| r.build_ms).sum();
     let total_run: f64 = rows.iter().map(|r| r.run_ms).sum();
@@ -154,6 +165,7 @@ fn write_json(path: &str, threads: usize, rows: &[Row]) -> std::io::Result<()> {
     writeln!(f, "  \"n_blocks\": {N_BLOCKS},")?;
     writeln!(f, "  \"block_elems\": {BLOCK_ELEMS},")?;
     writeln!(f, "  \"threads\": {threads},")?;
+    writeln!(f, "  \"kernel\": \"{kernel}\",")?;
     writeln!(f, "  \"total_build_ms\": {total_build:.3},")?;
     writeln!(f, "  \"total_run_ms\": {total_run:.3},")?;
     writeln!(f, "  \"total_ms\": {:.3},", total_build + total_run)?;

@@ -12,7 +12,10 @@
 //!
 //! A machine-readable record is written to `BENCH_rank_schedule.json`
 //! (override with `CBCAST_BENCH_JSON=path`): per-p sampled ranks,
-//! ns/rank and ns/rank/q — what the CI flatness gate reads.
+//! ns/rank and ns/rank/q — what the CI flatness gate reads — plus a
+//! recv-core vs send-core split (`recv_ns_per_rank` /
+//! `send_ns_per_rank`, each timed on its own over the same sampled
+//! ranks) so a regression in one Algorithm is attributable.
 
 use std::hint::black_box;
 use std::io::Write;
@@ -33,6 +36,8 @@ struct Row {
     sampled: usize,
     ns_per_rank: f64,
     ns_per_rank_per_q: f64,
+    recv_ns_per_rank: f64,
+    send_ns_per_rank: f64,
 }
 
 fn main() {
@@ -49,8 +54,8 @@ fn main() {
         SAMPLES
     );
     println!(
-        "{:>10} {:>4} {:>9} {:>14} {:>16}",
-        "p", "q", "sampled", "ns/rank", "ns/rank/q"
+        "{:>10} {:>4} {:>9} {:>14} {:>16} {:>10} {:>10}",
+        "p", "q", "sampled", "ns/rank", "ns/rank/q", "recv(ns)", "send(ns)"
     );
 
     let mut rows: Vec<Row> = Vec::new();
@@ -62,22 +67,58 @@ fn main() {
         let q = ceil_log2(p);
         let sk = Skips::new(p);
         let stride = (p / SAMPLES).max(1);
-        let mut sampled = 0usize;
+        let ranks: Vec<usize> =
+            (0..SAMPLES).map(|i| i * stride).take_while(|&r| r < p).collect();
+        let sampled = ranks.len();
+
+        // Combined: the RankComm rooted hot path (what the flatness
+        // gate reads — semantics unchanged from earlier receipts).
         let t = Instant::now();
-        let mut r = 0usize;
-        while r < p && sampled < SAMPLES {
+        for &r in &ranks {
             for _ in 0..REPS {
                 let bb = recv_schedule_into(&sk, r, &mut recv);
                 send_schedule_into(&sk, r, bb, &mut send);
                 black_box((&recv, &send));
             }
-            sampled += 1;
-            r += stride;
         }
         let ns_per_rank = t.elapsed().as_nanos() as f64 / (sampled * REPS) as f64;
+
+        // Split receipts: each core timed on its own over the same
+        // ranks (send gets its baseblocks precomputed outside the
+        // timed region), so a regression is attributable to one side.
+        let t = Instant::now();
+        for &r in &ranks {
+            for _ in 0..REPS {
+                let bb = recv_schedule_into(&sk, r, &mut recv);
+                black_box((&recv, bb));
+            }
+        }
+        let recv_ns = t.elapsed().as_nanos() as f64 / (sampled * REPS) as f64;
+        let bbs: Vec<usize> =
+            ranks.iter().map(|&r| recv_schedule_into(&sk, r, &mut recv)).collect();
+        let t = Instant::now();
+        for (&r, &bb) in ranks.iter().zip(&bbs) {
+            for _ in 0..REPS {
+                send_schedule_into(&sk, r, bb, &mut send);
+                black_box(&send);
+            }
+        }
+        let send_ns = t.elapsed().as_nanos() as f64 / (sampled * REPS) as f64;
+
         let per_q = ns_per_rank / q as f64;
-        println!("{p:>10} {q:>4} {sampled:>9} {ns_per_rank:>14.1} {per_q:>16.2}");
-        rows.push(Row { p, q, sampled, ns_per_rank, ns_per_rank_per_q: per_q });
+        println!(
+            "{p:>10} {q:>4} {sampled:>9} {ns_per_rank:>14.1} {per_q:>16.2} \
+             {recv_ns:>10.1} {send_ns:>10.1}"
+        );
+        rows.push(Row {
+            p,
+            q,
+            sampled,
+            ns_per_rank,
+            ns_per_rank_per_q: per_q,
+            recv_ns_per_rank: recv_ns,
+            send_ns_per_rank: send_ns,
+        });
     }
 
     let json_path = std::env::var("CBCAST_BENCH_JSON")
@@ -118,8 +159,10 @@ fn write_json(path: &str, rows: &[Row]) -> std::io::Result<()> {
         writeln!(
             f,
             "    {{\"p\": {}, \"q\": {}, \"sampled\": {}, \"ns_per_rank\": {:.3}, \
-             \"ns_per_rank_per_q\": {:.4}}}{comma}",
-            r.p, r.q, r.sampled, r.ns_per_rank, r.ns_per_rank_per_q
+             \"ns_per_rank_per_q\": {:.4}, \"recv_ns_per_rank\": {:.3}, \
+             \"send_ns_per_rank\": {:.3}}}{comma}",
+            r.p, r.q, r.sampled, r.ns_per_rank, r.ns_per_rank_per_q, r.recv_ns_per_rank,
+            r.send_ns_per_rank
         )?;
     }
     writeln!(f, "  ]")?;

@@ -51,8 +51,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use circulant_bcast::comm::{
-    global_wire_faults, CommBuilder, CrashAfter, FaultPlan, Membership, RankComm,
-    SocketTransport, Transport,
+    CommBuilder, CrashAfter, FaultPlan, Membership, RankComm, SocketTransport, Transport,
 };
 use circulant_bcast::schedule::Skips;
 use circulant_bcast::service::{
@@ -187,7 +186,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         metrics.failed,
         metrics.rejected,
         metrics.dropped,
-        global_wire_faults(),
+        metrics.wire,
     );
     0
 }

@@ -63,7 +63,7 @@ use crate::collectives::common::{Element, ReduceOp};
 use crate::schedule::Skips;
 use crate::sim::network::SimError;
 
-use super::outcome::CommError;
+use super::outcome::{CommError, WireFaults};
 use super::rank::{RankComm, TransportKind};
 use super::socket::SocketTransport;
 use super::transport::{ThreadTransport, Transport, TransportError};
@@ -291,6 +291,13 @@ impl<T, Tr: Transport<T>> Transport<T> for CrashAfter<Tr> {
         self.inner.failed_peers()
     }
 
+    fn wire_faults(&self) -> Option<WireFaults> {
+        // The wrapper kills the rank, not the wire: whatever reliable-
+        // delivery work the inner endpoint did before (and after) the
+        // crash stays attributable to this world's accounting.
+        self.inner.wire_faults()
+    }
+
     fn close(&mut self, error: Option<&str>) -> Result<(), TransportError> {
         if self.crashed {
             // The corpse sends nothing — no BYE, no ABORT. Dropping the
@@ -359,6 +366,12 @@ pub struct ElasticReport<T> {
     /// shrunken world, so these are bit-identical to a fresh run at
     /// the final size.
     pub buffers: Vec<(usize, Vec<T>)>,
+    /// Reliable-wire fault counters summed over **this run's**
+    /// endpoints (every rank of every epoch, victims included) — the
+    /// per-world accounting, independent of whatever other transports
+    /// in the process are doing. All-zero on transports without wire
+    /// counters (threads, loopback).
+    pub wire: WireFaults,
 }
 
 /// One rank's observation of one epoch, as harvested by the driver.
@@ -372,6 +385,10 @@ struct Obs<T> {
     /// Was this rank a planned victim? Victims' reports are discarded —
     /// a real corpse reports nothing.
     victim: bool,
+    /// The endpoint's reliable-wire counters ([`Transport::wire_faults`];
+    /// `None` on transports without a wire). Harvested even from
+    /// victims — the counters describe the wire, not the rank's vote.
+    wire: Option<WireFaults>,
 }
 
 /// How long survivors wait after an error before harvesting their
@@ -431,8 +448,10 @@ where
                                 .err(),
                         };
                         // `dead` drops here WITHOUT closing the inner
-                        // endpoint — the crash signature.
-                        Obs { buf: None, harvest: Vec::new(), err, victim: true }
+                        // endpoint — the crash signature. Its wire
+                        // counters are still this world's traffic.
+                        let wire = dead.wire_faults();
+                        Obs { buf: None, harvest: Vec::new(), err, victim: true, wire }
                     } else {
                         let mut tr = tr;
                         let res = match coll {
@@ -449,7 +468,8 @@ where
                             std::thread::sleep(SETTLE);
                         }
                         let harvest = tr.failed_peers();
-                        Obs { buf, harvest, err, victim: false }
+                        let wire = tr.wire_faults();
+                        Obs { buf, harvest, err, victim: false, wire }
                     }
                 })
             })
@@ -487,6 +507,7 @@ fn elastic_drive<T: Element>(
     let mut membership = Membership::new(p);
     let mut changes: Vec<MembershipChange> = Vec::new();
     let mut root_g = root;
+    let mut wire = WireFaults::default();
 
     loop {
         let pp = membership.p();
@@ -543,6 +564,15 @@ fn elastic_drive<T: Element>(
             }
         };
 
+        // Per-world wire accounting: fold every endpoint's counters
+        // (victims included — their wire traffic is this run's) into
+        // the run total before the observations are consumed.
+        for o in &obs {
+            if let Some(w) = &o.wire {
+                wire.merge(w);
+            }
+        }
+
         // Detection: the union of the *survivors'* detector outputs —
         // except reporters that accuse **more than half the world**,
         // whose own wire is the likelier culprit. (A blackholed rank
@@ -580,7 +610,7 @@ fn elastic_drive<T: Element>(
                     (membership.global(d), o.buf.expect("clean epoch has every payload"))
                 })
                 .collect();
-            return Ok(ElasticReport { membership, changes, root: root_g, buffers });
+            return Ok(ElasticReport { membership, changes, root: root_g, buffers, wire });
         }
 
         if suspects_d.is_empty() {

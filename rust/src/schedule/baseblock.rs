@@ -40,6 +40,43 @@ pub fn baseblock(sk: &Skips, r: usize) -> usize {
     q
 }
 
+/// Lane width of the batch-vectorized schedule builders: enough `i64`
+/// lanes to fill a 512-bit vector, small enough that a tail group's
+/// padded lanes waste little work.
+pub(crate) const LANES: usize = 8;
+
+/// Branchless lane variant of [`baseblock`]: the Algorithm-3 walk for
+/// [`LANES`] ranks at once, each lane's data-dependent branches turned
+/// into selects so the compiler can vectorize the whole descent.
+///
+/// The scalar walk *returns* at the first `acc + skip(k) == r` hit; a
+/// lane cannot return early, so a per-lane `found` flag freezes its
+/// accumulator and result instead — continuing the walk unfrozen could
+/// match a second, wrong index (e.g. `r = 3` over skips 1,2,3 would hit
+/// `k = 2` first and then the stale `acc` would land on `k = 0`).
+/// Lanes that never match keep the fallthrough value `q` — exactly the
+/// scalar convention for the root.
+pub(crate) fn baseblock_lanes(sk: &Skips, r: &[i64; LANES]) -> [i64; LANES] {
+    let q = sk.q();
+    if q == 0 {
+        return [0i64; LANES];
+    }
+    let mut acc = [0i64; LANES];
+    let mut bb = [q as i64; LANES];
+    let mut found = [false; LANES];
+    for k in (0..q).rev() {
+        let s_k = sk.skip(k) as i64;
+        for i in 0..LANES {
+            let s = acc[i] + s_k;
+            let eq = !found[i] && s == r[i];
+            bb[i] = if eq { k as i64 } else { bb[i] };
+            found[i] |= eq;
+            acc[i] = if !found[i] && s < r[i] { s } else { acc[i] };
+        }
+    }
+    bb
+}
+
 /// The full canonical skip sequence for `r` (increasing skip indices),
 /// i.e. the distinct skips summing to `r` chosen by the Algorithm-3 walk.
 /// Empty for `r = 0`.
@@ -223,6 +260,34 @@ mod tests {
         for p in 2..100 {
             let sk = Skips::new(p);
             assert_eq!(baseblock(&sk, 0), sk.q());
+        }
+    }
+
+    #[test]
+    fn lane_walk_matches_scalar_walk() {
+        // Every rank of every p through the lane kernel, in arbitrary
+        // lane groupings (including groups mixing the root with
+        // non-roots and groups of duplicated ranks, as tail padding
+        // produces).
+        for p in [1usize, 2, 3, 9, 17, 18, 100, 257, 1000] {
+            let sk = Skips::new(p);
+            let mut r = 0usize;
+            while r < p {
+                let mut rv = [0i64; LANES];
+                for (i, v) in rv.iter_mut().enumerate() {
+                    *v = ((r + i).min(p - 1)) as i64;
+                }
+                let bb = baseblock_lanes(&sk, &rv);
+                for i in 0..LANES {
+                    assert_eq!(
+                        bb[i],
+                        baseblock(&sk, rv[i] as usize) as i64,
+                        "p={p} r={}",
+                        rv[i]
+                    );
+                }
+                r += LANES;
+            }
         }
     }
 

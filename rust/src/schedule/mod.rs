@@ -33,5 +33,5 @@ pub use cache::{Schedule, ScheduleCache, DEFAULT_TABLE_CAP_BYTES};
 pub use recv::{recv_schedule, recv_schedule_into, RecvSchedule};
 pub use send::{send_schedule, send_schedule_into, SendSchedule};
 pub use skips::{ceil_log2, Skips};
-pub use table::{configured_threads, ScheduleTable};
+pub use table::{configured_build_kernel, configured_threads, BuildKernel, ScheduleTable};
 pub use verify::{verify_all, verify_one_ported_trace, verify_sampled, VerifyReport};

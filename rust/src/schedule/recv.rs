@@ -14,6 +14,27 @@
 //! each is used once. Lemma 5 bounds the recursive calls by `q - 1`,
 //! Lemma 6 the total scan count by `2q + R` — both are instrumented and
 //! machine-checked in the test suite.
+//!
+//! ## The all-ranks gather identity
+//!
+//! A consumer that needs **every** rank's recv row (the
+//! [`crate::schedule::ScheduleTable`] build) does not need `p` of these
+//! searches. Correctness Conditions 1+2 define the send schedule as
+//! `sendblock[k]_r = recvblock[k]_{(r + skip[k]) mod p}`, and Algorithm 6
+//! computes exactly that value for every round — including its violation
+//! rounds, whose fallback *is* a recv-schedule lookup of the
+//! to-processor. Since `r ↦ (r + skip[k]) mod p` is a bijection on ranks
+//! for each `k`, the identity inverts:
+//!
+//! ```text
+//! recvblock[k]_t = sendblock[k]_{(t + p − skip[k]) mod p}
+//! ```
+//!
+//! so once all send rows exist, every recv row is a pure gather — no
+//! search at all. The table's lane-kernel build path does exactly this;
+//! the equality over all `(r, k)` is pinned by the
+//! `send_equals_recv_of_to_processor` test in
+//! [`crate::schedule::send`] and the table-vs-serial parity grids.
 
 use super::baseblock::baseblock;
 use super::skips::Skips;

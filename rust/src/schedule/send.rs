@@ -15,7 +15,7 @@
 //! back to one receive-schedule computation for the to-processor; Theorem 3
 //! bounds them by **4 per processor**, preserving `O(log p)` total.
 
-use super::baseblock::baseblock;
+use super::baseblock::{baseblock, LANES};
 use super::recv::{recv_schedule_core, MAX_Q};
 use super::skips::Skips;
 
@@ -120,6 +120,64 @@ where
     }
     sb[0] = b as i64 - q as i64;
     violations
+}
+
+/// Branchless lane variant of the Algorithm-6 walk: the send rows of
+/// [`LANES`] ranks at once, staged round-major (`stage[k][lane]`) so
+/// each descent step is one straight-line pass over the lanes —
+/// selects instead of branches, the shape the autovectorizer chews on.
+///
+/// `r` and `b` hold each lane's rank and baseblock
+/// ([`super::baseblock::baseblock_lanes`]). Returns one violation
+/// bitmask per lane (bit `k` set ⇔ the scalar walk would have taken
+/// the round-`k` violation branch); the **caller** resolves those
+/// entries through a receive-schedule lookup, exactly as the scalar
+/// core's `recv_of` callback does — a violation only substitutes the
+/// emitted entry, never the `r'`/`c`/`e` recursion, so the post-hoc
+/// overwrite is exact. Two caveats the caller owns: a lane carrying
+/// the **root** (`r = 0`) runs the non-root recursion and produces
+/// garbage — overwrite its row with the scalar `0..q-1` and ignore its
+/// mask; and `q = 0` (p = 1) must not reach this kernel.
+pub(crate) fn send_lanes(
+    sk: &Skips,
+    r: &[i64; LANES],
+    b: &[i64; LANES],
+    stage: &mut [[i64; LANES]; MAX_Q],
+) -> [u64; LANES] {
+    let q = sk.q();
+    let p = sk.p() as i64;
+    debug_assert!(q >= 1);
+    let mut rp = *r; // virtual processor index r'
+    let mut c = *b; // block the lower part keeps resending
+    let mut e = [p; LANES]; // exclusive upper bound on r'
+    let mut viol = [0u64; LANES];
+    for k in (1..q).rev() {
+        let s_k = sk.skip(k) as i64;
+        let s_km1 = sk.skip(k - 1) as i64;
+        let kq = k as i64 - q as i64;
+        let k1 = k == 1;
+        let row = &mut stage[k];
+        for i in 0..LANES {
+            let lower = rp[i] < s_k;
+            // The no-violation predicates of the two scalar branches.
+            // Both sides are evaluated lane-wide; `lower` selects. The
+            // upper-part `e - s_k` is dead for lower lanes but cannot
+            // trap in i64.
+            let lo_ok = rp[i] + s_k < e[i] || e[i] < s_km1 || (k1 && b[i] > 0);
+            let up_ok = k1 || rp[i] > s_k || e[i] - s_k < s_km1 || rp[i] + s_k <= e[i];
+            let ok = if lower { lo_ok } else { up_ok };
+            let cv = if lower { c[i] } else { kq };
+            row[i] = cv;
+            c[i] = cv;
+            viol[i] |= u64::from(!ok) << k;
+            e[i] = if lower { e[i].min(s_k) } else { e[i] - s_k };
+            rp[i] = if lower { rp[i] } else { rp[i] - s_k };
+        }
+    }
+    for i in 0..LANES {
+        stage[0][i] = b[i] - q as i64;
+    }
+    viol
 }
 
 /// Compute only the `sendblock` entries (no instrumentation wrapper) into
@@ -280,6 +338,52 @@ mod tests {
             for r in 1..p {
                 let s = send_schedule(&sk, r);
                 assert_eq!(s.blocks[0], s.baseblock as i64 - sk.q() as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn lane_walk_matches_scalar_walk() {
+        // Lane groups of consecutive ranks: after resolving the masked
+        // violation entries the staged rows must equal the scalar core's
+        // rows entry for entry, and each lane's popcount must equal the
+        // scalar violation count (the masks name the same rounds).
+        use crate::schedule::baseblock::baseblock_lanes;
+        for p in [2usize, 3, 9, 17, 18, 100, 257, 1000] {
+            let sk = Skips::new(p);
+            let q = sk.q();
+            let mut stage = [[0i64; LANES]; MAX_Q];
+            let mut r = 0usize;
+            while r < p {
+                let mut rv = [0i64; LANES];
+                for (i, v) in rv.iter_mut().enumerate() {
+                    *v = ((r + i).min(p - 1)) as i64;
+                }
+                let bb = baseblock_lanes(&sk, &rv);
+                let viol = send_lanes(&sk, &rv, &bb, &mut stage);
+                for i in 0..LANES {
+                    let rel = rv[i] as usize;
+                    if rel == 0 {
+                        continue; // the root lane's output is discarded by contract
+                    }
+                    let want = send_schedule(&sk, rel);
+                    assert_eq!(
+                        viol[i].count_ones() as usize, want.violations,
+                        "p={p} r={rel}: violation mask"
+                    );
+                    let mut got: Vec<i64> = (0..q).map(|k| stage[k][i]).collect();
+                    let mut vm = viol[i];
+                    while vm != 0 {
+                        let k = vm.trailing_zeros() as usize;
+                        vm &= vm - 1;
+                        let t = sk.to_proc(rel, k);
+                        let mut buf = [0i64; MAX_Q];
+                        recv_schedule_core(&sk, t, &mut buf);
+                        got[k] = buf[k];
+                    }
+                    assert_eq!(got, want.blocks, "p={p} r={rel}");
+                }
+                r += LANES;
             }
         }
     }

@@ -6,7 +6,7 @@
 //! Algorithm-7 all-collectives, the schedule cache) needs all `p` of
 //! them. Filling them one `Vec` at a time, serially, makes the arena fill
 //! the dominant cost at `p = 2^20` — ahead of the actual round
-//! simulation. [`ScheduleTable`] fixes that on three axes:
+//! simulation. [`ScheduleTable`] fixes that on four axes:
 //!
 //! * **One allocation, `q`-strided rows.** All `2·p` rows live in one
 //!   contiguous `i8` arena (`2·p·q` bytes — 40 MiB at `p = 2^20`),
@@ -17,18 +17,38 @@
 //! * **Parallel build.** Ranks are independent (the paper's whole point:
 //!   no communication), so the arena is filled with
 //!   `std::thread::scope` over contiguous rank chunks — zero new
-//!   dependencies, thread count from `CBCAST_THREADS` (default: all
-//!   cores). Chunks own disjoint arena slices; no synchronisation.
+//!   dependencies, thread count from `CBCAST_THREADS`
+//!   ([`configured_threads`]). Chunks own disjoint slices; no
+//!   synchronisation.
+//! * **Batch-vectorized construction** ([`BuildKernel::Lanes`], the
+//!   default). The scalar cores walk Algorithm 3 and Algorithm 6 one
+//!   rank at a time through data-dependent branches; the lane kernels
+//!   ([`crate::schedule::baseblock::baseblock_lanes`],
+//!   [`crate::schedule::send::send_lanes`]) instead push
+//!   [`crate::schedule::baseblock::LANES`] consecutive ranks through
+//!   the same walks as branchless `i64` lane arrays (selects instead of
+//!   branches — the shape the autovectorizer chews on), recording the
+//!   rare Algorithm-6 violations in per-lane bitmasks resolved
+//!   afterwards through the per-chunk [`RecvMemo`]. The expensive
+//!   `ALLBLOCKS` receive-schedule search is then skipped for the bulk
+//!   build entirely: pass 1 fills every **send** row plus baseblocks,
+//!   and pass 2 derives every **recv** row by the Correctness
+//!   Conditions 1+2 identity `recvblock[k]_t = sendblock[k]_{(t + p −
+//!   skip[k]) mod p}` — a pure gather (see
+//!   [`crate::schedule::recv`]). Both kernels are pinned bit-identical
+//!   to the scalar cores by `tests/table_parity.rs`;
+//!   `CBCAST_BUILD_KERNEL=scalar` keeps the reference path selectable
+//!   at run time.
 //! * **Two serial algorithmic wins inside each chunk.**
 //!   (a) The send-schedule violation path (Algorithm 6) falls back to a
 //!   full `ALLBLOCKS` receive-schedule search for the to-processor;
 //!   Theorem 3 bounds violations by 4 per rank, and neighbouring ranks'
 //!   violations frequently target the *same* to-processor, so a
 //!   `q`-entry LRU memo ([`RecvMemo`]) per chunk eliminates nearly all
-//!   redundant searches. (b) The recv and send rows of one rank share a
-//!   single baseblock computation: `recv_schedule_core` already walks
-//!   Algorithm 3, and its result is handed straight to the send core
-//!   instead of recomputed.
+//!   redundant searches. (b) On the scalar path, the recv and send rows
+//!   of one rank share a single baseblock computation:
+//!   `recv_schedule_core` already walks Algorithm 3, and its result is
+//!   handed straight to the send core instead of recomputed.
 //!
 //! Rows are *root-relative* and depend only on `p` (not on the block
 //! count `n`, the root, or the collective), so one table serves every
@@ -37,22 +57,104 @@
 
 use std::sync::Arc;
 
+use super::baseblock::{baseblock_lanes, LANES};
 use super::cache::Schedule;
 use super::recv::{recv_schedule_core, MAX_Q};
-use super::send::send_schedule_core_with;
+use super::send::{send_lanes, send_schedule_core_with};
 use super::skips::Skips;
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a `CBCAST_THREADS` value: a positive integer, nothing else.
+/// `0` is rejected explicitly — a zero-thread build cannot run, and
+/// silently treating it as "all cores" hid misconfiguration.
+fn parse_threads(raw: &str) -> Result<usize, String> {
+    let t: usize =
+        raw.trim().parse().map_err(|e| format!("not an unsigned integer: {e}"))?;
+    if t == 0 {
+        return Err("thread count must be >= 1".to_string());
+    }
+    Ok(t)
+}
 
 /// Thread count for the parallel schedule-plane paths (table build and
 /// the engine's sharded delivery application): the `CBCAST_THREADS`
-/// environment variable if set to a positive integer, else all available
-/// cores. `CBCAST_THREADS=1` is the exact serial path (no scope, no
-/// spawns) — the baseline the CI smoke compares against.
+/// environment variable if set to a **positive** integer, else all
+/// available cores. `CBCAST_THREADS=1` is the exact serial path (no
+/// scope, no spawns) — the baseline the CI smoke compares against.
+///
+/// Invalid values (`0`, garbage) are **rejected with a once-per-process
+/// warning** and fall back to the all-cores default — the documented
+/// floor is 1 thread. (Same contract shape as the transport's
+/// `CBCAST_TRANSPORT_TIMEOUT_MS` parsing: misconfiguration signals
+/// instead of silently meaning something else.)
 pub fn configured_threads() -> usize {
-    std::env::var("CBCAST_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .filter(|&t| t >= 1)
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    match std::env::var("CBCAST_THREADS") {
+        Ok(raw) => match parse_threads(&raw) {
+            Ok(t) => t,
+            Err(why) => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "cbcast: ignoring CBCAST_THREADS={raw:?} ({why}); \
+                         using all {} cores",
+                        default_threads()
+                    );
+                });
+                default_threads()
+            }
+        },
+        Err(_) => default_threads(),
+    }
+}
+
+/// Which construction kernel [`ScheduleTable::build_with_threads`] runs.
+/// Both produce bit-identical arenas (pinned by `tests/table_parity.rs`);
+/// they differ only in speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuildKernel {
+    /// The reference path: one rank at a time through the branchy
+    /// scalar Algorithm 3/5/6 cores (recv rows via `ALLBLOCKS`).
+    Scalar,
+    /// The batch-vectorized path (default): branchless lane kernels
+    /// fill send rows + baseblocks for [`LANES`] ranks at a time, then
+    /// recv rows are gathered from send rows by Conditions 1+2.
+    Lanes,
+}
+
+/// Parse a `CBCAST_BUILD_KERNEL` value (`"lanes"` or `"scalar"`,
+/// case-insensitive).
+fn parse_build_kernel(raw: &str) -> Result<BuildKernel, String> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "lanes" => Ok(BuildKernel::Lanes),
+        "scalar" => Ok(BuildKernel::Scalar),
+        other => Err(format!("unknown kernel {other:?} (expected \"lanes\" or \"scalar\")")),
+    }
+}
+
+/// The construction kernel from the `CBCAST_BUILD_KERNEL` environment
+/// variable: `lanes` (the default) or `scalar` (the reference path the
+/// CI engine-scale smoke diffs against). Invalid values warn once and
+/// fall back to the default, mirroring [`configured_threads`].
+pub fn configured_build_kernel() -> BuildKernel {
+    match std::env::var("CBCAST_BUILD_KERNEL") {
+        Ok(raw) => match parse_build_kernel(&raw) {
+            Ok(k) => k,
+            Err(why) => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "cbcast: ignoring CBCAST_BUILD_KERNEL={raw:?} ({why}); \
+                         using the lanes kernel"
+                    );
+                });
+                BuildKernel::Lanes
+            }
+        },
+        Err(_) => BuildKernel::Lanes,
+    }
 }
 
 /// Small LRU memo of receive-schedule rows, keyed by processor — the
@@ -91,7 +193,12 @@ impl RecvMemo {
 
 /// All `p` receive+send schedule rows for one `p`, flat and shareable.
 ///
-/// Raw entries lie in `[-q, q]` and `q ≤ 64`, so `i8` holds them; the
+/// Raw entries lie in the half-open `[-q, q)` and `q ≤ 64`, so `i8`
+/// holds them: a recv row carries one non-negative baseblock `< q` and
+/// negatives from `{-1, …, -q}` (Condition 3), and every send entry
+/// equals some rank's recv entry (Conditions 1+2) or, for the root row,
+/// `0..q-1` — the value `q` itself never appears in a row (the root's
+/// conventional baseblock `q` lives only in [`Self::baseblock`]). The
 /// phase-advanced value any consumer actually uses at network round `j`
 /// is `row[k] + delta` with `(k, delta)` from
 /// [`crate::collectives::common::phase_params`] — rank-independent, so
@@ -110,15 +217,23 @@ pub struct ScheduleTable {
 
 impl ScheduleTable {
     /// Build the full table with the configured thread count
-    /// ([`configured_threads`]).
+    /// ([`configured_threads`]) and kernel ([`configured_build_kernel`]).
     pub fn build(sk: &Arc<Skips>) -> Self {
-        Self::build_with_threads(sk, configured_threads())
+        Self::build_with_kernel(sk, configured_threads(), configured_build_kernel())
     }
 
     /// Build the full table, filling contiguous rank chunks on `threads`
     /// scoped threads (`threads = 1` runs strictly serially on the
-    /// calling thread).
+    /// calling thread), with the kernel from the environment
+    /// ([`configured_build_kernel`]).
     pub fn build_with_threads(sk: &Arc<Skips>, threads: usize) -> Self {
+        Self::build_with_kernel(sk, threads, configured_build_kernel())
+    }
+
+    /// Build the full table with an explicit construction kernel — the
+    /// programmatic knob behind the `CBCAST_BUILD_KERNEL` env var, used
+    /// by the parity tests and the CI bench gate to diff the two paths.
+    pub fn build_with_kernel(sk: &Arc<Skips>, threads: usize, kernel: BuildKernel) -> Self {
         let p = sk.p();
         let q = sk.q();
         let mut arena = vec![0i8; p * 2 * q];
@@ -128,31 +243,100 @@ impl ScheduleTable {
             return ScheduleTable { sk: sk.clone(), arena, baseblocks, violations: 0 };
         }
         let threads = threads.clamp(1, p);
+        let violations = match kernel {
+            BuildKernel::Scalar => {
+                Self::fill_scalar(sk, threads, &mut arena, &mut baseblocks)
+            }
+            BuildKernel::Lanes => {
+                Self::fill_lanes(sk, threads, &mut arena, &mut baseblocks)
+            }
+        };
+        ScheduleTable { sk: sk.clone(), arena, baseblocks, violations }
+    }
+
+    /// The reference path: per-rank scalar cores straight into the
+    /// arena, parallel over contiguous rank chunks.
+    fn fill_scalar(
+        sk: &Arc<Skips>,
+        threads: usize,
+        arena: &mut [i8],
+        baseblocks: &mut [u8],
+    ) -> usize {
+        let p = sk.p();
+        let q = sk.q();
+        if threads == 1 {
+            return fill_chunk(sk, 0, arena, baseblocks);
+        }
+        // ceil(p / threads) ranks per chunk; chunks own disjoint
+        // slices of the arena and the baseblock vector, so the scoped
+        // threads need no synchronisation at all.
+        let chunk_ranks = (p + threads - 1) / threads; // ceil; div_ceil needs 1.73, MSRV is 1.70
+        let mut total = 0usize;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            for (i, (rows, bbs)) in arena
+                .chunks_mut(chunk_ranks * 2 * q)
+                .zip(baseblocks.chunks_mut(chunk_ranks))
+                .enumerate()
+            {
+                let start = i * chunk_ranks;
+                handles.push(s.spawn(move || fill_chunk(sk, start, rows, bbs)));
+            }
+            for h in handles {
+                total += h.join().expect("schedule-table fill chunk panicked");
+            }
+        });
+        total
+    }
+
+    /// The batch-vectorized path: pass 1 fills a send-row staging
+    /// buffer (stride `q`) plus baseblocks through the lane kernels;
+    /// pass 2 assembles the arena, gathering each recv row from the
+    /// staged send rows by Conditions 1+2. Both passes run parallel
+    /// over contiguous rank chunks; pass 2 only *reads* the shared
+    /// staging buffer, so the whole build is safe Rust.
+    fn fill_lanes(
+        sk: &Arc<Skips>,
+        threads: usize,
+        arena: &mut [i8],
+        baseblocks: &mut [u8],
+    ) -> usize {
+        let p = sk.p();
+        let q = sk.q();
+        let mut send_tmp = vec![0i8; p * q];
+        let chunk_ranks = (p + threads - 1) / threads;
         let violations = if threads == 1 {
-            fill_chunk(sk, 0, &mut arena, &mut baseblocks)
+            fill_send_chunk_lanes(sk, 0, &mut send_tmp, baseblocks)
         } else {
-            // ceil(p / threads) ranks per chunk; chunks own disjoint
-            // slices of the arena and the baseblock vector, so the scoped
-            // threads need no synchronisation at all.
-            let chunk_ranks = (p + threads - 1) / threads; // ceil; div_ceil needs 1.73, MSRV is 1.70
             let mut total = 0usize;
             std::thread::scope(|s| {
                 let mut handles = Vec::with_capacity(threads);
-                for (i, (rows, bbs)) in arena
-                    .chunks_mut(chunk_ranks * 2 * q)
+                for (i, (rows, bbs)) in send_tmp
+                    .chunks_mut(chunk_ranks * q)
                     .zip(baseblocks.chunks_mut(chunk_ranks))
                     .enumerate()
                 {
                     let start = i * chunk_ranks;
-                    handles.push(s.spawn(move || fill_chunk(sk, start, rows, bbs)));
+                    handles.push(s.spawn(move || fill_send_chunk_lanes(sk, start, rows, bbs)));
                 }
                 for h in handles {
-                    total += h.join().expect("schedule-table fill chunk panicked");
+                    total += h.join().expect("schedule-table send chunk panicked");
                 }
             });
             total
         };
-        ScheduleTable { sk: sk.clone(), arena, baseblocks, violations }
+        let send_tmp = &send_tmp;
+        if threads == 1 {
+            gather_arena_chunk(sk, 0, arena, send_tmp);
+        } else {
+            std::thread::scope(|s| {
+                for (i, rows) in arena.chunks_mut(chunk_ranks * 2 * q).enumerate() {
+                    let start = i * chunk_ranks;
+                    s.spawn(move || gather_arena_chunk(sk, start, rows, send_tmp));
+                }
+            });
+        }
+        violations
     }
 
     #[inline]
@@ -286,6 +470,91 @@ fn fill_chunk(sk: &Skips, start: usize, rows: &mut [i8], bbs: &mut [u8]) -> usiz
     violations
 }
 
+/// Lane-kernel pass 1: fill the **send** rows of ranks
+/// `start..start + bbs.len()` into `rows` (stride `q`) plus their
+/// baseblocks; returns the violation count. Ranks go through the
+/// branchless lane kernels [`LANES`] at a time (a short tail group pads
+/// by clamping to the last rank; padded lanes' outputs are discarded).
+/// Violations land in per-lane bitmasks and are resolved afterwards
+/// through the chunk's [`RecvMemo`] — the memo returns pure schedule
+/// values, so resolution order cannot change the rows.
+fn fill_send_chunk_lanes(sk: &Skips, start: usize, rows: &mut [i8], bbs: &mut [u8]) -> usize {
+    let q = sk.q();
+    let p = sk.p();
+    debug_assert_eq!(rows.len(), bbs.len() * q);
+    let mut memo = RecvMemo::new(q);
+    let mut stage = [[0i64; LANES]; MAX_Q];
+    let mut violations = 0usize;
+    let n = bbs.len();
+    let mut base = 0usize;
+    while base < n {
+        let width = LANES.min(n - base);
+        let mut rv = [0i64; LANES];
+        for (i, v) in rv.iter_mut().enumerate() {
+            *v = (start + base + i.min(width - 1)) as i64;
+        }
+        let bb = baseblock_lanes(sk, &rv);
+        let viol = send_lanes(sk, &rv, &bb, &mut stage);
+        for i in 0..width {
+            let rel = start + base + i;
+            debug_assert!(bb[i] >= 0 && bb[i] <= q as i64, "baseblock {} out of range", bb[i]);
+            bbs[base + i] = bb[i] as u8;
+            let row = &mut rows[(base + i) * q..(base + i + 1) * q];
+            if rel == 0 {
+                // The root's row is not produced by the non-root
+                // recursion: it greedily sends 0..q-1 (zero violations).
+                for (k, dst) in row.iter_mut().enumerate() {
+                    *dst = k as i8;
+                }
+                continue;
+            }
+            let mut vm = viol[i];
+            violations += vm.count_ones() as usize;
+            while vm != 0 {
+                let k = 63 - vm.leading_zeros() as usize; // descending, like the scalar walk
+                vm &= !(1u64 << k);
+                let t = rel + sk.skip(k);
+                let t = if t >= p { t - p } else { t };
+                stage[k][i] = memo.recv_at(sk, t, k);
+            }
+            for (k, dst) in row.iter_mut().enumerate() {
+                let v = stage[k][i];
+                debug_assert!((-(q as i64)..q as i64).contains(&v));
+                *dst = v as i8;
+            }
+        }
+        base += width;
+    }
+    violations
+}
+
+/// Lane-kernel pass 2: assemble the arena rows of ranks
+/// `start..start + rows.len() / 2q` from the staged send rows. The send
+/// row is a straight copy; the recv row is the Conditions 1+2 gather
+/// `recvblock[k]_rel = sendblock[k]_{(rel + p − skip[k]) mod p}` — the
+/// map `r ↦ (r + skip[k]) mod p` is a bijection per round, so every
+/// recv entry is some staged send entry (see [`crate::schedule::recv`]
+/// for why this identity is exact, violations included).
+fn gather_arena_chunk(sk: &Skips, start: usize, rows: &mut [i8], send_tmp: &[i8]) {
+    let q = sk.q();
+    let p = sk.p();
+    debug_assert_eq!(rows.len() % (2 * q), 0);
+    let n = rows.len() / (2 * q);
+    for i in 0..n {
+        let rel = start + i;
+        let row = &mut rows[i * 2 * q..(i + 1) * 2 * q];
+        row[q..].copy_from_slice(&send_tmp[rel * q..(rel + 1) * q]);
+        for (k, dst) in row[..q].iter_mut().enumerate() {
+            // skip(k) < p for k < q, so one conditional subtract mods.
+            let mut src = rel + p - sk.skip(k);
+            if src >= p {
+                src -= p;
+            }
+            *dst = send_tmp[src * q + k];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,22 +562,24 @@ mod tests {
     use crate::schedule::send::send_schedule;
 
     fn assert_matches_serial(p: usize, threads: usize) {
-        let sk = Arc::new(Skips::new(p));
-        let t = ScheduleTable::build_with_threads(&sk, threads);
-        assert_eq!(t.p(), p);
-        assert_eq!(t.bytes(), 2 * p * sk.q());
-        for r in 0..p {
-            let rs = recv_schedule(&sk, r);
-            let ss = send_schedule(&sk, r);
-            let trecv: Vec<i64> = t.recv_row(r).iter().map(|&v| v as i64).collect();
-            let tsend: Vec<i64> = t.send_row(r).iter().map(|&v| v as i64).collect();
-            assert_eq!(trecv, rs.blocks, "recv p={p} r={r} threads={threads}");
-            assert_eq!(tsend, ss.blocks, "send p={p} r={r} threads={threads}");
-            assert_eq!(t.baseblock(r), rs.baseblock, "bb p={p} r={r}");
-            let s = t.schedule(r);
-            assert_eq!(s.recv, rs.blocks);
-            assert_eq!(s.send, ss.blocks);
-            assert_eq!(s.rank, r);
+        for kernel in [BuildKernel::Scalar, BuildKernel::Lanes] {
+            let sk = Arc::new(Skips::new(p));
+            let t = ScheduleTable::build_with_kernel(&sk, threads, kernel);
+            assert_eq!(t.p(), p);
+            assert_eq!(t.bytes(), 2 * p * sk.q());
+            for r in 0..p {
+                let rs = recv_schedule(&sk, r);
+                let ss = send_schedule(&sk, r);
+                let trecv: Vec<i64> = t.recv_row(r).iter().map(|&v| v as i64).collect();
+                let tsend: Vec<i64> = t.send_row(r).iter().map(|&v| v as i64).collect();
+                assert_eq!(trecv, rs.blocks, "recv p={p} r={r} threads={threads} {kernel:?}");
+                assert_eq!(tsend, ss.blocks, "send p={p} r={r} threads={threads} {kernel:?}");
+                assert_eq!(t.baseblock(r), rs.baseblock, "bb p={p} r={r} {kernel:?}");
+                let s = t.schedule(r);
+                assert_eq!(s.recv, rs.blocks);
+                assert_eq!(s.send, ss.blocks);
+                assert_eq!(s.rank, r);
+            }
         }
     }
 
@@ -329,6 +600,20 @@ mod tests {
             for threads in [3usize, 7, 13, 97] {
                 assert_matches_serial(p, threads);
             }
+        }
+    }
+
+    #[test]
+    fn kernels_agree_on_violation_counts() {
+        // The lane kernel's violation mask must name exactly the rounds
+        // the scalar walk resolves through the memo — same set, so the
+        // same total (Theorem 3 keeps both ≤ 4·p).
+        for p in [17usize, 100, 1000, 4097] {
+            let sk = Arc::new(Skips::new(p));
+            let a = ScheduleTable::build_with_kernel(&sk, 4, BuildKernel::Scalar);
+            let b = ScheduleTable::build_with_kernel(&sk, 4, BuildKernel::Lanes);
+            assert_eq!(a.violations(), b.violations(), "p={p}");
+            assert!(a.violations() <= 4 * p, "p={p}: {}", a.violations());
         }
     }
 
@@ -358,5 +643,56 @@ mod tests {
         // (covered rank by rank in assert_matches_serial, pinned here at
         // a p with many violations).
         assert_matches_serial(4099, 1);
+    }
+
+    #[test]
+    fn lane_group_boundaries_are_invisible() {
+        // p around multiples of LANES: full groups, one-short tails, and
+        // one-over heads all reduce to the same rows.
+        for p in [LANES - 1, LANES, LANES + 1, 4 * LANES - 1, 4 * LANES, 4 * LANES + 1] {
+            assert_matches_serial(p, 1);
+            assert_matches_serial(p, 3);
+        }
+    }
+
+    #[test]
+    fn thread_knob_parses_with_a_floor_of_one() {
+        assert_eq!(parse_threads("4"), Ok(4));
+        assert_eq!(parse_threads(" 16 "), Ok(16));
+        assert!(parse_threads("0").is_err(), "zero threads cannot run a build");
+        assert!(parse_threads("").is_err());
+        assert!(parse_threads("lots").is_err());
+        assert!(parse_threads("-2").is_err());
+        assert!(parse_threads("1.5").is_err());
+    }
+
+    #[test]
+    fn kernel_knob_parses_both_names_only() {
+        assert_eq!(parse_build_kernel("lanes"), Ok(BuildKernel::Lanes));
+        assert_eq!(parse_build_kernel(" Scalar "), Ok(BuildKernel::Scalar));
+        assert!(parse_build_kernel("simd").is_err());
+        assert!(parse_build_kernel("").is_err());
+    }
+
+    #[test]
+    fn raw_entries_stay_in_half_open_range() {
+        // The documented contract: every raw entry lies in [-q, q) —
+        // the value q never appears in a row (the root's conventional
+        // baseblock q is metadata, not a row entry).
+        for p in [2usize, 9, 17, 100, 1023] {
+            for kernel in [BuildKernel::Scalar, BuildKernel::Lanes] {
+                let sk = Arc::new(Skips::new(p));
+                let q = sk.q() as i64;
+                let t = ScheduleTable::build_with_kernel(&sk, 2, kernel);
+                for r in 0..p {
+                    for &v in t.recv_row(r).iter().chain(t.send_row(r)) {
+                        assert!(
+                            (-q..q).contains(&(v as i64)),
+                            "p={p} r={r} {kernel:?}: entry {v} outside [-{q}, {q})"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -43,8 +43,8 @@ use std::time::Duration;
 use crate::comm::chaos::FaultPlan;
 use crate::comm::membership::{elastic_bcast, CrashPlan, Membership};
 use crate::comm::rank::TransportKind;
-use crate::comm::socket::{fill, global_wire_faults, read_raw_frame, Stream, MAX_FRAME};
-use crate::comm::{CommBuilder, Communicator, TenantUsage, WireFaults};
+use crate::comm::socket::{fill, read_raw_frame, Stream, MAX_FRAME};
+use crate::comm::{CommBuilder, Communicator, OpReport, TenantUsage, TrafficEngine, WireFaults};
 use crate::testkit::{submit_mix_op, MixOp, MixPending};
 
 use super::wire::{
@@ -78,15 +78,21 @@ pub struct ServiceConfig {
     /// engine's default rule).
     pub threads: Option<usize>,
     /// Deterministic fault knob for the recovery path:
-    /// `Some((rank, before_batch))` kills **global** rank `rank`
-    /// immediately before batch number `before_batch` (0-indexed)
-    /// executes. The batcher then shrinks its [`Membership`], rebuilds
-    /// the communicator at `p − 1`, remaps the drained jobs' windows
-    /// and roots into the surviving dense frame (an op whose window
-    /// lost every rank gets an error reply), and bills the disruption
-    /// as [`TenantUsage::restarted`]. This is the in-process stand-in
-    /// for a rank process dying mid-service (the multi-process
-    /// analogue is exercised by the `cbcastd rank` CI smoke).
+    /// `Some((rank, during_batch))` kills **global** rank `rank` while
+    /// batch number `during_batch` (0-indexed) is in flight. The batch
+    /// first runs on the current world; the batcher then replays ONLY
+    /// the ops the death actually disrupts
+    /// ([`crate::comm::BatchReport::restart_set`]: failed ops plus
+    /// every op whose dense window contains the victim) — it shrinks
+    /// its [`Membership`], rebuilds the communicator at `p − 1`, remaps
+    /// the disrupted jobs' windows and roots into the surviving dense
+    /// frame (an op whose window lost every rank gets an error reply),
+    /// and bills each replayed op as [`TenantUsage::restarted`].
+    /// Completed ops on windows disjoint from the victim keep their
+    /// first-run results and are billed exactly once. This is the
+    /// in-process stand-in for a rank process dying mid-service (the
+    /// multi-process analogue is exercised by the `cbcastd rank` CI
+    /// smoke).
     pub fault: Option<(usize, usize)>,
     /// Deterministic **transient**-fault knob: a seeded frame-level
     /// [`FaultPlan`] the daemon self-probes at startup. Before serving,
@@ -94,11 +100,13 @@ pub struct ServiceConfig {
     /// under this plan with a zero shrink budget, and refuses to start
     /// if the protocol-v3 reliability layer cannot heal the injected
     /// faults (e.g. a blackholed link that exhausts the retry budget).
-    /// Whatever the probe healed stays visible in the process-wide
-    /// wire counters ([`ServiceMetrics::wire`], the stats line).
-    /// `None` = no probe. Unlike [`ServiceConfig::fault`], a passing
-    /// chaos plan consumes **no** membership epoch — that distinction
-    /// is the chaos plane's whole point.
+    /// Whatever the probe healed is recorded in **this daemon's own**
+    /// wire counters ([`ServiceMetrics::wire`], the stats line) —
+    /// scoped to the probe's world, so co-resident daemons report
+    /// independently. `None` = no probe. Unlike
+    /// [`ServiceConfig::fault`], a passing chaos plan consumes **no**
+    /// membership epoch — that distinction is the chaos plane's whole
+    /// point.
     pub chaos: Option<FaultPlan>,
 }
 
@@ -144,11 +152,14 @@ pub struct ServiceMetrics {
     /// The batcher's current membership epoch (0 = the original,
     /// never-shrunk world; advances once per recovery).
     pub epoch: u64,
-    /// Snapshot of the process-wide reliable-delivery counters
-    /// ([`crate::comm::global_wire_faults`]): transient wire faults
-    /// healed in place (or escalated) by every protocol-v3 socket
-    /// endpoint this process has run — the daemon's chaos self-probe
-    /// included. Populated at snapshot time, not accumulated here.
+    /// **This daemon's** reliable-delivery counters: transient wire
+    /// faults healed in place (or escalated) by the protocol-v3 socket
+    /// endpoints of this daemon's own worlds — today that is the chaos
+    /// self-probe's world ([`ServiceConfig::chaos`]; the batcher's
+    /// in-process communicator has no wire). Scoped per daemon — two
+    /// daemons in one process account independently; the process-wide
+    /// debug aggregate stays available as
+    /// [`crate::comm::global_wire_faults`].
     pub wire: WireFaults,
     /// Cumulative per-tenant usage.
     pub tenants: Vec<TenantUsage>,
@@ -213,11 +224,9 @@ impl ServiceHandle {
         self.inner.cfg.p
     }
 
-    /// A counters snapshot (with the live wire counters folded in).
+    /// A counters snapshot.
     pub fn metrics(&self) -> ServiceMetrics {
-        let mut m = self.inner.metrics.lock().unwrap().clone();
-        m.wire = global_wire_faults();
-        m
+        self.inner.metrics.lock().unwrap().clone()
     }
 
     /// Ask every daemon thread to wind down (returns immediately).
@@ -243,9 +252,7 @@ impl ServiceHandle {
         if let Some(path) = &self.inner.uds_path {
             let _ = std::fs::remove_file(path);
         }
-        let mut m = self.inner.metrics.lock().unwrap().clone();
-        m.wire = global_wire_faults();
-        m
+        self.inner.metrics.lock().unwrap().clone()
     }
 }
 
@@ -327,15 +334,19 @@ fn serve(
             ));
         }
     }
+    let mut metrics = ServiceMetrics::default();
     if let Some(plan) = cfg.chaos {
-        chaos_probe(plan).map_err(|msg| io::Error::new(io::ErrorKind::InvalidInput, msg))?;
+        // The probe's world is this daemon's wire: whatever it healed
+        // seeds the daemon-scoped counters.
+        metrics.wire =
+            chaos_probe(plan).map_err(|msg| io::Error::new(io::ErrorKind::InvalidInput, msg))?;
     }
     let inner = Arc::new(Inner {
         cfg,
         queue: Mutex::new(VecDeque::new()),
         cv: Condvar::new(),
         stop: AtomicBool::new(false),
-        metrics: Mutex::new(ServiceMetrics::default()),
+        metrics: Mutex::new(metrics),
         rejects: Mutex::new(HashMap::new()),
         conns: Mutex::new(Vec::new()),
         addr,
@@ -359,9 +370,10 @@ fn serve(
 /// plan, with a **zero** shrink budget — the probe passes iff the
 /// protocol-v3 reliability layer heals every injected fault without
 /// consuming a membership epoch and without corrupting the payload.
-/// Whatever it healed stays visible in the process-wide wire counters
-/// ([`ServiceMetrics::wire`]).
-fn chaos_probe(plan: FaultPlan) -> Result<(), String> {
+/// Returns the probe world's own wire-fault counters
+/// ([`crate::comm::membership::ElasticReport::wire`]) so the caller can
+/// seed the daemon-scoped [`ServiceMetrics::wire`].
+fn chaos_probe(plan: FaultPlan) -> Result<WireFaults, String> {
     let data: Vec<i64> = (0..64).map(|i| i * 7 - 3).collect();
     let report = elastic_bcast(
         2,
@@ -387,7 +399,7 @@ fn chaos_probe(plan: FaultPlan) -> Result<(), String> {
             ));
         }
     }
-    Ok(())
+    Ok(report.wire)
 }
 
 fn accept_loop(inner: &Arc<Inner>, listener: Listener) {
@@ -589,22 +601,19 @@ fn batch_loop(inner: &Arc<Inner>) {
             let n = q.len().min(inner.cfg.batch_max);
             q.drain(..n).collect()
         };
-        // The deterministic fault: the configured rank dies right
-        // before this batch runs. Shrink, rebuild, and re-admit the
-        // drained jobs onto the survivors' communicator.
-        let mut disrupted = false;
-        if let Some((victim, before)) = inner.cfg.fault {
-            if batch_no == before && membership.dense(victim).is_some() {
-                let (next, _change) = membership.shrink(&[victim]);
-                membership = next;
-                comm = CommBuilder::new(membership.p()).build();
-                disrupted = true;
-                let mut m = inner.metrics.lock().unwrap();
-                m.recoveries += 1;
-                m.epoch = membership.epoch();
+        // The deterministic fault: the configured rank dies while this
+        // batch is in flight. The batch still runs on the current
+        // world; `run_batch` then replays only the ops the death
+        // disrupted on the shrunken, rebuilt communicator.
+        let fault = match inner.cfg.fault {
+            Some((victim, during))
+                if batch_no == during && membership.dense(victim).is_some() =>
+            {
+                Some(victim)
             }
-        }
-        run_batch(inner, &membership, &comm, jobs, disrupted);
+            _ => None,
+        };
+        run_batch(inner, &mut membership, &mut comm, jobs, fault);
         batch_no += 1;
     }
 }
@@ -646,43 +655,81 @@ fn remap_spec(spec: &MixOp, ms: &Membership) -> Result<MixOp, String> {
     Ok(out)
 }
 
-fn run_batch(
-    inner: &Inner,
+/// Remap and submit a set of jobs into `traffic`. A job that fails the
+/// remap or the submission gets its error reply immediately; the count
+/// of those is returned alongside the admitted `(job, pending)` pairs
+/// (in submission order — 1:1 with the run's `BatchReport::ops`).
+fn submit_jobs(
+    traffic: &mut TrafficEngine<'_>,
     membership: &Membership,
-    comm: &Communicator,
     jobs: Vec<Job>,
-    disrupted: bool,
-) {
-    let mut traffic = comm.traffic();
-    if let Some(t) = inner.cfg.threads {
-        traffic = traffic.threads(t);
-    }
-    let mut submit_failed = 0usize;
-    let mut restarted: Vec<Arc<str>> = Vec::new();
+) -> (Vec<(Job, MixPending)>, usize) {
+    let mut failed = 0usize;
     let mut admitted: Vec<(Job, MixPending)> = Vec::new();
     for job in jobs {
         let spec = match remap_spec(&job.spec, membership) {
             Ok(s) => s,
             Err(msg) => {
-                submit_failed += 1;
+                failed += 1;
                 send_frame(&job.reply, &res_err_frame(job.req_id, &format!("bad request: {msg}")));
                 continue;
             }
         };
-        if disrupted {
-            // This job was queued when the rank died: it runs on the
-            // rebuilt world, and the disruption is billed to its tenant.
-            restarted.push(job.tenant.clone());
-        }
         traffic.for_tenant(&job.tenant);
-        match submit_mix_op(&mut traffic, &spec) {
+        match submit_mix_op(traffic, &spec) {
             Ok(pending) => admitted.push((job, pending)),
             Err(e) => {
-                submit_failed += 1;
+                failed += 1;
                 send_frame(&job.reply, &res_err_frame(job.req_id, &format!("{e}")));
             }
         }
     }
+    (admitted, failed)
+}
+
+/// Take one finished op's outcome and reply to its client.
+fn settle(job: &Job, pending: MixPending, completed: &mut usize, failed: &mut usize) {
+    match summarize(&pending.take()) {
+        Ok(summary) => {
+            *completed += 1;
+            send_frame(&job.reply, &res_ok_frame(job.req_id, &summary));
+        }
+        Err(msg) => {
+            *failed += 1;
+            send_frame(&job.reply, &res_err_frame(job.req_id, &msg));
+        }
+    }
+}
+
+/// Strike one op's phase-1 usage out of the batch's tenant rows: the op
+/// is about to be replayed on the rebuilt world, and the replay run
+/// bills it again — without the discharge a restarted op would
+/// double-count in `ops`/`ok`/`messages`/`bytes`.
+fn discharge_op(tenants: &mut [TenantUsage], op: &OpReport) {
+    let Some(tenant) = &op.tenant else { return };
+    if let Some(row) = tenants.iter_mut().find(|u| u.tenant == **tenant) {
+        row.ops -= 1;
+        row.ok -= usize::from(op.ok);
+        row.messages -= op.messages;
+        row.bytes -= op.bytes;
+    }
+}
+
+fn run_batch(
+    inner: &Inner,
+    membership: &mut Membership,
+    comm: &mut Communicator,
+    jobs: Vec<Job>,
+    fault: Option<usize>,
+) {
+    // Phase 1: the whole batch runs on the current world — the fault
+    // (if any) is discovered *after* the run, as it would be on a real
+    // wire, and decides per-op what can be kept.
+    let mut traffic = comm.traffic();
+    if let Some(t) = inner.cfg.threads {
+        traffic = traffic.threads(t);
+    }
+    let (admitted, submit_failed) = submit_jobs(&mut traffic, membership, jobs);
     let mut report = match traffic.run() {
         Ok(r) => r,
         Err(e) => {
@@ -700,33 +747,86 @@ fn run_batch(
     for (tenant, n) in inner.rejects.lock().unwrap().drain() {
         report.note_rejected(&tenant, n);
     }
-    // Bill each membership-change disruption to the tenant whose op
-    // was re-admitted onto the rebuilt communicator.
-    for tenant in &restarted {
-        if let Some(row) = report.tenants.iter_mut().find(|u| u.tenant == **tenant) {
-            row.restarted += 1;
-        } else {
-            report.tenants.push(TenantUsage {
-                tenant: tenant.to_string(),
-                restarted: 1,
-                ..TenantUsage::default()
-            });
-        }
-    }
+
     let mut completed = 0usize;
     let mut failed = submit_failed;
-    for (job, pending) in admitted {
-        match summarize(&pending.take()) {
-            Ok(summary) => {
-                completed += 1;
-                send_frame(&job.reply, &res_ok_frame(job.req_id, &summary));
+    let mut replay: Vec<Job> = Vec::new();
+    if let Some(victim) = fault {
+        // The victim died while the batch was in flight. Only the ops
+        // the death disrupted — [`BatchReport::restart_set`]: failed
+        // ops, plus ops whose window contains the victim — are
+        // replayed. A completed op over a disjoint window keeps its
+        // result, replies from phase 1, and is billed exactly once.
+        let vd = membership.dense(victim).expect("fault victim is a member");
+        debug_assert_eq!(report.ops.len(), admitted.len());
+        let mut is_restart = vec![false; admitted.len()];
+        for i in report.restart_set(&[vd]) {
+            is_restart[i] = true;
+        }
+        for (i, (job, pending)) in admitted.into_iter().enumerate() {
+            if is_restart[i] {
+                discharge_op(&mut report.tenants, &report.ops[i]);
+                drop(pending); // phase-1 result untrusted — discarded
+                replay.push(job);
+            } else {
+                settle(&job, pending, &mut completed, &mut failed);
             }
-            Err(msg) => {
-                failed += 1;
-                send_frame(&job.reply, &res_err_frame(job.req_id, &msg));
+        }
+        // Shrink, rebuild, count the recovery. Schedule rows on the
+        // (p − 1)-rank world are recomputed locally in O(log p).
+        let (next, _change) = membership.shrink(&[victim]);
+        *membership = next;
+        *comm = CommBuilder::new(membership.p()).build();
+        {
+            let mut m = inner.metrics.lock().unwrap();
+            m.recoveries += 1;
+            m.epoch = membership.epoch();
+        }
+        // Bill each disruption to the tenant whose op is re-admitted
+        // onto the rebuilt communicator (also billed when the replay
+        // remap then fails — the disruption still happened to them).
+        for job in &replay {
+            if let Some(row) = report.tenants.iter_mut().find(|u| u.tenant == *job.tenant) {
+                row.restarted += 1;
+            } else {
+                report.tenants.push(TenantUsage {
+                    tenant: job.tenant.to_string(),
+                    restarted: 1,
+                    ..TenantUsage::default()
+                });
+            }
+        }
+    } else {
+        for (job, pending) in admitted {
+            settle(&job, pending, &mut completed, &mut failed);
+        }
+    }
+
+    // Phase 2: replay only the disrupted ops on the rebuilt world.
+    if !replay.is_empty() {
+        let mut traffic = comm.traffic();
+        if let Some(t) = inner.cfg.threads {
+            traffic = traffic.threads(t);
+        }
+        let (readmitted, replay_failed) = submit_jobs(&mut traffic, membership, replay);
+        failed += replay_failed;
+        match traffic.run() {
+            Ok(rep2) => {
+                for (job, pending) in readmitted {
+                    settle(&job, pending, &mut completed, &mut failed);
+                }
+                fold_usage(&mut report.tenants, &rep2.tenants);
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e}");
+                failed += readmitted.len();
+                for (job, _) in &readmitted {
+                    send_frame(&job.reply, &res_err_frame(job.req_id, &msg));
+                }
             }
         }
     }
+
     let mut m = inner.metrics.lock().unwrap();
     m.batches += 1;
     m.completed += completed;
@@ -772,7 +872,7 @@ fn render_stats(inner: &Inner) -> String {
         m.recoveries,
         m.epoch,
     );
-    out.push_str(&format!("wire: {}\n", global_wire_faults()));
+    out.push_str(&format!("wire: {}\n", m.wire));
     for t in &m.tenants {
         out.push_str(&format!(
             "tenant={} ops={} ok={} messages={} bytes={} rejected={} restarted={}\n",

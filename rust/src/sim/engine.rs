@@ -36,12 +36,15 @@
 //!   The per-round phase shift is one `(slot, delta)` pair shared by
 //!   every rank ([`crate::collectives::common::phase_params`]), so the
 //!   hot path is an `i8` load plus an add.
-//! * **Reusable run scratch** — all per-run state (worklists, bitmaps,
-//!   stamps, delivery queues, the reduction arena) lives in an
-//!   [`EngineScratch`] that callers can hold across runs, making
-//!   repeated [`CirculantEngine::run_bcast_with`] /
+//! * **Reusable, word-packed run scratch** — all per-run state
+//!   (worklists, bitmaps, receive marks, delivery queues, the reduction
+//!   arena) lives in an [`EngineScratch`] that callers can hold across
+//!   runs, making repeated [`CirculantEngine::run_bcast_with`] /
 //!   [`CirculantEngine::run_reduce_with`] calls allocation-free after
-//!   the first.
+//!   the first. Hot per-rank state is packed word-at-a-time: one `u64`
+//!   receive mark per rank (round stamp ∥ sender), rank-major `u64`
+//!   possession words whose completion check is a `memcmp` per rank,
+//!   and 16-byte reduction deliveries (see [`EngineScratch`]).
 //! * **Sharded delivery application** — when a round's delivery queue is
 //!   large, applying it (bitmap updates for broadcast, ⊕-combines for
 //!   reduction) is sharded over `std::thread::scope` threads
@@ -100,6 +103,15 @@ unsafe impl<T> Sync for SendPtr<T> {}
 /// nothing after the first use. `T` is the reduction element type; for
 /// broadcast-only use any `T` (e.g. `EngineScratch::<()>::new()`) — the
 /// payload fields stay empty.
+///
+/// The per-rank state is deliberately packed for the round loops'
+/// access patterns: the one-ported receive check reads and writes one
+/// `u64` *mark* per target (round stamp in the high half, sender in the
+/// low half — a single cache-line touch instead of two parallel
+/// arrays), broadcast possession is a rank-major `u64` bitmap whose
+/// completion check is a word compare per rank, and a queued reduction
+/// delivery is 16 bytes (`(to_rel, block, stage offset)` — the combine
+/// length is derivable from the block geometry, so it is not stored).
 #[derive(Default)]
 pub struct EngineScratch<T> {
     /// Override for the delivery-sharding thread count (`None` = the
@@ -113,14 +125,17 @@ pub struct EngineScratch<T> {
     deliveries_b: Vec<(u32, u32)>,
     // --- shared ---
     active: Vec<u32>,
-    recv_stamp: Vec<u32>,
-    recv_from: Vec<u32>,
+    /// One-ported receive marks, one word per rank: `stamp << 32 |
+    /// sender`. A round-`j` receive is a busy-port violation iff the
+    /// high half already equals round `j`'s stamp; the low half then
+    /// names the first sender for the error value.
+    recv_mark: Vec<u64>,
     rank_bytes: Vec<usize>,
     // --- reduction ---
     recv_count: Vec<u32>,
     arena: Vec<T>,
     stage: Vec<T>,
-    deliveries_r: Vec<(usize, usize, usize, usize)>,
+    deliveries_r: Vec<(u32, u32, usize)>,
 }
 
 impl<T: Element> EngineScratch<T> {
@@ -330,7 +345,7 @@ impl CirculantEngine {
         let n = self.n;
         let words = (n + 63) / 64;
         let EngineScratch {
-            holds, held, deliveries_b: deliveries, active, recv_stamp, recv_from, rank_bytes, ..
+            holds, held, deliveries_b: deliveries, active, recv_mark, rank_bytes, ..
         } = scratch;
         reset(holds, p * words);
         for (w, word) in holds[..words].iter_mut().enumerate() {
@@ -342,8 +357,7 @@ impl CirculantEngine {
         active.clear();
         active.reserve(p);
         active.push(0);
-        reset(recv_stamp, p);
-        reset(recv_from, p);
+        reset(recv_mark, p);
         reset(rank_bytes, p);
         deliveries.clear();
     }
@@ -404,12 +418,11 @@ impl CirculantEngine {
         let n = self.n;
         let words = (n + 63) / 64;
         let EngineScratch {
-            holds, held, newly, deliveries_b: deliveries, active, recv_stamp, recv_from,
-            rank_bytes, ..
+            holds, held, newly, deliveries_b: deliveries, active, recv_mark, rank_bytes, ..
         } = scratch;
         let (k, delta) = self.round_params(j);
         let skip = self.sk.skip(k);
-        let stamp = (j + 1) as u32;
+        let stamp = (j + 1) as u64;
         let mut round_time = 0.0f64;
         let mut any = false;
         // Ranks activated during round j join the worklist for j+1:
@@ -454,17 +467,16 @@ impl CirculantEngine {
                 }
             };
             debug_assert_eq!(rb, b, "schedules disagree on the block (round {j})");
-            // One-ported receive enforcement.
-            if recv_stamp[t_rel] == stamp {
+            // One-ported receive enforcement: one mark word per target.
+            if recv_mark[t_rel] >> 32 == stamp {
                 return Err(SimError::ReceivePortBusy {
                     round: j,
                     to,
-                    first_from: recv_from[t_rel] as usize,
+                    first_from: (recv_mark[t_rel] & 0xffff_ffff) as usize,
                     second_from: from,
                 });
             }
-            recv_stamp[t_rel] = stamp;
-            recv_from[t_rel] = from as u32;
+            recv_mark[t_rel] = stamp << 32 | from as u64;
             let bytes = self.geom.len(b) * elem_bytes;
             stats.messages += 1;
             stats.bytes += bytes;
@@ -524,17 +536,27 @@ impl CirculantEngine {
     /// without all `n` blocks, reconstruct the earliest round in which an
     /// expected block failed to arrive (best effort on broken schedules —
     /// the lockstep simulator, which aborts mid-run, stays authoritative).
+    ///
+    /// The completion test compares each rank's possession words against
+    /// the root's (the root holds every block from init and never
+    /// changes), i.e. one `memcmp` per rank rather than a bit test per
+    /// `(round, rank)` probe. The reconstruction scan then visits only
+    /// the ranks that ended incomplete: a `(j, rel)` hit requires `rel`'s
+    /// possession bit for the round's block to be clear, so complete
+    /// ranks can never anchor one — restricting the inner loop to the
+    /// ascending incomplete list preserves the lexicographically
+    /// earliest `(round, rank)` error exactly.
     fn find_missing_bcast(&self, holds: &[u64], words: usize, held: &[u32]) -> Option<SimError> {
-        if held.iter().all(|&c| c as usize == self.n) {
+        let template = &holds[..words];
+        if words == 0 || holds.chunks_exact(words).all(|row| row == template) {
             return None;
         }
+        let incomplete: Vec<usize> =
+            (1..self.p).filter(|&rel| held[rel] as usize != self.n).collect();
         for j in 0..self.rounds {
             let (k, delta) = self.round_params(j);
             let skip = self.sk.skip(k);
-            for rel in 1..self.p {
-                if held[rel] as usize == self.n {
-                    continue;
-                }
+            for &rel in &incomplete {
                 let rval = self.table.recv_raw(rel, k) as i64 + delta;
                 let b = match self.cap(rval) {
                     Some(b) => b,
@@ -670,7 +692,7 @@ impl CirculantEngine {
         assert_eq!(inputs.len(), p, "reduce needs one contribution per rank");
         let profile = self.reduce_profile();
         let EngineScratch {
-            active, recv_stamp, recv_from, recv_count, rank_bytes, arena, stage,
+            active, recv_mark, recv_count, rank_bytes, arena, stage,
             deliveries_r: deliveries, ..
         } = scratch;
         // The payload arena: rel r's partial of block b lives at
@@ -687,8 +709,7 @@ impl CirculantEngine {
         // downwards.
         active.clear();
         active.extend_from_slice(&profile.active);
-        reset(recv_stamp, p);
-        reset(recv_from, p);
+        reset(recv_mark, p);
         reset(recv_count, p);
         reset(rank_bytes, p);
         stage.clear();
@@ -764,14 +785,14 @@ impl CirculantEngine {
         let m = self.geom.m;
         let profile = self.reduce_profile();
         let EngineScratch {
-            active, recv_stamp, recv_from, recv_count, rank_bytes, arena, stage,
+            active, recv_mark, recv_count, rank_bytes, arena, stage,
             deliveries_r: deliveries, ..
         } = scratch;
         self.reduce_prune(active, &profile.first_send, jr);
         let i = self.rounds - 1 - jr;
         let (k, delta) = self.round_params(i);
         let skip = self.sk.skip(k);
-        let stamp = (jr + 1) as u32;
+        let stamp = (jr + 1) as u64;
         let mut round_time = 0.0f64;
         let mut any = false;
         for &rel32 in active.iter() {
@@ -805,23 +826,24 @@ impl CirculantEngine {
                 }
             };
             debug_assert_eq!(rb, b, "schedules disagree on the block (reversed round {jr})");
-            if recv_stamp[to_rel] == stamp {
+            if recv_mark[to_rel] >> 32 == stamp {
                 return Err(SimError::ReceivePortBusy {
                     round: jr,
                     to,
-                    first_from: recv_from[to_rel] as usize,
+                    first_from: (recv_mark[to_rel] & 0xffff_ffff) as usize,
                     second_from: from,
                 });
             }
-            recv_stamp[to_rel] = stamp;
-            recv_from[to_rel] = from as u32;
+            recv_mark[to_rel] = stamp << 32 | from as u64;
             recv_count[to_rel] += 1;
             let (off, len) = self.geom.range(b);
             // "Send": stage the sender's arena range in the round
             // scratch so this round's combines see round-start state.
+            // The queued delivery is 16 bytes — the combine length is
+            // re-derived from the geometry at application time.
             let s_off = stage.len();
             stage.extend_from_slice(&arena[rel * m + off..rel * m + off + len]);
-            deliveries.push((to_rel, rb, s_off, len));
+            deliveries.push((to_rel as u32, rb as u32, s_off));
             let bytes = len * elem_bytes;
             stats.messages += 1;
             stats.bytes += bytes;
@@ -836,10 +858,11 @@ impl CirculantEngine {
         if threads > 1 && deliveries.len() >= PAR_DELIVERY_MIN {
             deliver_reduce_parallel(deliveries, arena, stage, self.geom, m, op, threads);
         } else {
-            for &(dst_rel, rb, s_off, len) in deliveries.iter() {
+            for &(dst_rel, rb, s_off) in deliveries.iter() {
+                let (dst_rel, rb) = (dst_rel as usize, rb as usize);
                 let (d_off, d_len) = self.geom.range(rb);
                 let dst = &mut arena[dst_rel * m + d_off..dst_rel * m + d_off + d_len];
-                op.combine(dst, &stage[s_off..s_off + len]);
+                op.combine(dst, &stage[s_off..s_off + d_len]);
             }
         }
         deliveries.clear();
@@ -873,19 +896,31 @@ impl CirculantEngine {
     }
 
     /// Deferred missing-message check for reduction: compare actual
-    /// against closed-form expected receive counts; on mismatch,
-    /// reconstruct the earliest reversed round whose expected message had
-    /// no sender.
+    /// against closed-form expected receive counts (one slice compare —
+    /// `memcmp` — on the happy path); on mismatch, reconstruct the
+    /// earliest reversed round whose expected message had no sender.
+    ///
+    /// The reconstruction scan visits only the ranks whose counts
+    /// diverged: a `(jr, rel)` hit means `rel` expected a receive (send
+    /// row non-negative, to-processor not the root) that its unique
+    /// per-round sender `rel + skip` never sent — and since a rank's
+    /// receives in a reversed round can only come from that one sender,
+    /// every hit leaves `rel`'s actual count short of its expectation.
+    /// Iterating the divergent ranks in ascending order inside the
+    /// round-outer loop therefore preserves the lexicographically
+    /// earliest `(round, rank)` error exactly.
     fn find_missing_reduce(&self, recv_count: &[u32], expect: &[u32]) -> Option<SimError> {
-        if recv_count.iter().zip(expect).all(|(a, b)| a == b) {
+        if recv_count == expect {
             return None;
         }
         let p = self.p;
+        let divergent: Vec<usize> =
+            (0..p).filter(|&rel| recv_count[rel] != expect[rel]).collect();
         for jr in 0..self.rounds {
             let i = self.rounds - 1 - jr;
             let (k, delta) = self.round_params(i);
             let skip = self.sk.skip(k);
-            for rel in 0..p {
+            for &rel in &divergent {
                 let sender = {
                     let t = rel + skip;
                     if t >= p {
@@ -1136,7 +1171,7 @@ fn deliver_bcast_parallel(
 /// disjoint rows ⇒ the shards commute and the result is bit-identical
 /// (each row is combined by exactly one delivery).
 fn deliver_reduce_parallel<T: Element>(
-    deliveries: &[(usize, usize, usize, usize)],
+    deliveries: &[(u32, u32, usize)],
     arena: &mut [T],
     stage: &[T],
     geom: BlockGeometry,
@@ -1149,7 +1184,8 @@ fn deliver_reduce_parallel<T: Element>(
     std::thread::scope(|s| {
         for dchunk in deliveries.chunks(chunk) {
             s.spawn(move || {
-                for &(dst_rel, rb, s_off, len) in dchunk {
+                for &(dst_rel, rb, s_off) in dchunk {
+                    let (dst_rel, rb) = (dst_rel as usize, rb as usize);
                     let (d_off, d_len) = geom.range(rb);
                     // SAFETY: destination ranks within one round are
                     // pairwise distinct (one-ported check), so the
@@ -1158,7 +1194,7 @@ fn deliver_reduce_parallel<T: Element>(
                     let dst = unsafe {
                         std::slice::from_raw_parts_mut(arena_ptr.0.add(dst_rel * m + d_off), d_len)
                     };
-                    op.combine(dst, &stage[s_off..s_off + len]);
+                    op.combine(dst, &stage[s_off..s_off + d_len]);
                 }
             });
         }

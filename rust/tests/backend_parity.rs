@@ -2,7 +2,10 @@
 //! (p, n, root, kind, algo) — including non-powers-of-two p and p = 1 —
 //! the lockstep `Network`, the threaded runtime and the sparse `Engine`
 //! must produce identical `Outcome` payloads, `all_received` flags and
-//! `RunStats` round/message/byte counts.
+//! `RunStats` round/message/byte counts. The engine's word-packed
+//! receive marks, staged deliveries and memcmp completion checks ride
+//! under every reduction case here; a dedicated scale case crosses the
+//! sharded parallel-delivery threshold as well.
 //!
 //! Deterministic by default; set `TESTKIT_SEED` to explore other grids
 //! (CI runs a fixed seed matrix).
@@ -270,6 +273,39 @@ fn backends_agree_at_every_thread_count() {
             check_case(&c);
         }
     }
+}
+
+#[test]
+fn packed_reduce_path_matches_lockstep_above_the_delivery_shard_threshold() {
+    // The engine's reduction path stages blocks into a word-packed
+    // scratch, queues 16-byte deliveries whose combine lengths are
+    // re-derived from the block geometry at application time, and
+    // checks completion with a packed-count memcmp. None of that may
+    // be observable. p > 4096 pushes a mid-reduction round's delivery
+    // queue past the engine's parallel-delivery threshold, so the
+    // sharded application path runs too — payloads and every statistic
+    // must still match the lockstep baseline exactly. (The small-p
+    // grids above keep the serial delivery path honest; this is the
+    // sharded one.)
+    let p = 4099usize; // prime, non-power-of-two, above the shard cut
+    let m = 32usize;
+    let inputs: Vec<Vec<i64>> =
+        (0..p).map(|r| (0..m).map(|i| ((r * 19 + i * 7) % 1009) as i64).collect()).collect();
+    let run = |backend| {
+        comm(p, backend)
+            .reduce(
+                ReduceReq::new(7, &inputs, Arc::new(SumOp))
+                    .algo(Algo::Circulant)
+                    .blocks(8)
+                    .elem_bytes(8),
+            )
+            .unwrap_or_else(|e| panic!("p={p} [{backend:?}]: {e}"))
+    };
+    let base = run(BackendKind::Lockstep);
+    let out = run(BackendKind::Engine);
+    assert_eq!(out.buffers, base.buffers, "packed reduce payload at p={p}");
+    assert_eq!(out.all_received(), base.all_received());
+    assert_stats_eq(&out.stats, &base.stats, &format!("packed reduce p={p}"));
 }
 
 #[test]

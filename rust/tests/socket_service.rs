@@ -10,7 +10,7 @@ use std::io::Write;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use circulant_bcast::comm::{CommBuilder, Kind};
+use circulant_bcast::comm::{global_wire_faults, CommBuilder, FaultPlan, Kind, WireFaults};
 use circulant_bcast::service::{
     serve_tcp, serve_unix, summarize, ServiceClient, ServiceConfig, ServiceReply,
 };
@@ -203,6 +203,67 @@ fn malformed_op_fails_alone_in_a_shared_batch() {
     client.bye().unwrap();
     handle.shutdown();
     handle.join();
+}
+
+/// Two daemons in one process report **independent** wire-fault
+/// counters: the chaos'd daemon's startup self-probe moves its own
+/// `ServiceMetrics::wire` row, while a plain daemon serving real work
+/// at the same time reports all zeros — even though the process-global
+/// debug aggregate (`global_wire_faults`) has absorbed the chaos
+/// daemon's healing by then. This is the regression test for the
+/// cross-contamination bug where every daemon's stats line re-read the
+/// process-global counters and so reported its neighbours' faults as
+/// its own.
+#[test]
+fn two_daemons_report_independent_wire_counters() {
+    let p = 4usize;
+    let chaos_path = temp_sock("wire-chaos");
+    let plain_path = temp_sock("wire-plain");
+    let chaos_cfg = ServiceConfig {
+        p,
+        client_timeout: Duration::from_millis(2000),
+        chaos: Some(FaultPlan::new(0x1D013).drop_per_10k(1_500).corrupt_per_10k(1_500, 3)),
+        ..ServiceConfig::default()
+    };
+    let chaos_handle = serve_unix(&chaos_path, chaos_cfg).unwrap();
+    let plain_cfg =
+        ServiceConfig { p, client_timeout: Duration::from_millis(2000), ..ServiceConfig::default() };
+    let plain_handle = serve_unix(&plain_path, plain_cfg).unwrap();
+
+    // Both daemons serve verified work side by side.
+    for (path, tenant) in [(&chaos_path, "chaotic"), (&plain_path, "calm")] {
+        let mut client =
+            ServiceClient::connect_unix_retry(path, tenant, Duration::from_secs(5)).unwrap();
+        let mix = traffic_mix(&mut Rng::new(31), p, 2, &MixOptions::default());
+        for (i, op) in mix.ops.iter().enumerate() {
+            call_and_verify(&mut client, i as u64, op, p);
+        }
+        client.bye().unwrap();
+    }
+
+    chaos_handle.shutdown();
+    plain_handle.shutdown();
+    let chaos_metrics = chaos_handle.join();
+    let plain_metrics = plain_handle.join();
+
+    // The chaos daemon's self-probe healed injected faults — in *its*
+    // counters. The heavy plan makes a zero-fault probe implausible.
+    assert!(
+        chaos_metrics.wire.any(),
+        "the chaos daemon's probe must land in its own wire row: {}",
+        chaos_metrics.wire
+    );
+    // The plain daemon saw none of it, even though the process-global
+    // aggregate in this very process has absorbed the probe's healing.
+    assert_eq!(
+        plain_metrics.wire,
+        WireFaults::default(),
+        "a fault-free daemon must report zeros, not its neighbour's faults"
+    );
+    assert!(
+        global_wire_faults().any(),
+        "the process-global debug aggregate still absorbs every world"
+    );
 }
 
 /// The same service speaks TCP: an ephemeral-port daemon serves a

@@ -4,7 +4,11 @@
 //! every baseblock — over a seeded random grid of p (powers of two ±1,
 //! primes, p = 1, uniform draws) and thread counts 1, 2 and 8 (chunk
 //! boundaries shift with the thread count, so each count exercises a
-//! different memo/chunk layout against the same serial truth).
+//! different memo/chunk layout against the same serial truth). The
+//! construction-kernel axis rides the same grids: the batch-vectorized
+//! lane kernel (`BuildKernel::Lanes`, vectors of 8 ranks) must build
+//! the same arena as the scalar kernel bit for bit, with the
+//! lane-boundary p and chunk sizes pinned explicitly.
 //!
 //! Deterministic by default; set `TESTKIT_SEED` to explore other grids
 //! (CI runs a fixed seed matrix).
@@ -12,7 +16,7 @@
 use std::sync::Arc;
 
 use circulant_bcast::schedule::{
-    recv_schedule, send_schedule, Schedule, ScheduleCache, ScheduleTable, Skips,
+    recv_schedule, send_schedule, BuildKernel, Schedule, ScheduleCache, ScheduleTable, Skips,
 };
 use circulant_bcast::testkit::{install_seed_reporter, Rng};
 
@@ -97,6 +101,81 @@ fn thread_counts_build_identical_arenas() {
                 assert_eq!(t.recv_row(r), base.recv_row(r), "p={p} r={r} threads={threads}");
                 assert_eq!(t.send_row(r), base.send_row(r), "p={p} r={r} threads={threads}");
                 assert_eq!(t.baseblock(r), base.baseblock(r), "p={p} r={r}");
+            }
+        }
+    }
+}
+
+/// Assert the vectorized lane kernel builds the same table as the
+/// scalar kernel — arena, baseblocks and the violation tally, bit for
+/// bit — at one (p, threads) point.
+fn assert_kernels_agree(p: usize, threads: usize) {
+    let sk = Arc::new(Skips::new(p));
+    let scalar = ScheduleTable::build_with_kernel(&sk, threads, BuildKernel::Scalar);
+    let lanes = ScheduleTable::build_with_kernel(&sk, threads, BuildKernel::Lanes);
+    assert_eq!(
+        scalar.violations(),
+        lanes.violations(),
+        "violation tally p={p} threads={threads}"
+    );
+    for r in 0..p {
+        assert_eq!(scalar.recv_row(r), lanes.recv_row(r), "recv p={p} r={r} threads={threads}");
+        assert_eq!(scalar.send_row(r), lanes.send_row(r), "send p={p} r={r} threads={threads}");
+        assert_eq!(scalar.baseblock(r), lanes.baseblock(r), "baseblock p={p} r={r}");
+    }
+}
+
+#[test]
+fn lane_boundary_grid_scalar_and_lanes_agree() {
+    // The lane kernel walks ranks in vectors of 8: p straddling every
+    // multiple of the lane width up to a few vectors — plus thread
+    // counts that land chunk boundaries at lane ± 1 (p = 15/16/17 at
+    // threads = 2 give chunks of 8/8/9; 63/64/65 at threads = 8 give
+    // 8/8/9) — are exactly where a masked tail lane, a clamp-padded
+    // rank or a mid-vector chunk split could diverge from the scalar
+    // walk.
+    let ps = [
+        7usize, 8, 9, 15, 16, 17, 23, 24, 25, 31, 32, 33, 63, 64, 65, 127, 128, 129, 1023,
+        1024, 1025,
+    ];
+    for p in ps {
+        for threads in THREAD_COUNTS {
+            assert_kernels_agree(p, threads);
+        }
+    }
+}
+
+#[test]
+fn seeded_grid_scalar_and_lanes_agree() {
+    install_seed_reporter();
+    let mut rng = Rng::from_env();
+    for _ in 0..10 {
+        let p = gen_p(&mut rng);
+        let threads = THREAD_COUNTS[rng.range(0, 2)];
+        assert_kernels_agree(p, threads);
+    }
+}
+
+#[test]
+fn raw_rows_stay_in_the_half_open_skip_range() {
+    // The raw-entry range contract is **half-open**: every arena entry
+    // encodes a signed skip index in [-q, q) — `-q` (the q-th negative
+    // round) occurs, `+q` never does (positive rounds stop at q − 1).
+    // Regression for the doc/code mismatch that claimed a closed
+    // [-q, q] range; both kernels are held to it.
+    for p in [1usize, 2, 3, 5, 8, 9, 16, 17, 100, 509, 1024, 1025] {
+        let sk = Arc::new(Skips::new(p));
+        let q = sk.q() as i64;
+        for kernel in [BuildKernel::Scalar, BuildKernel::Lanes] {
+            let t = ScheduleTable::build_with_kernel(&sk, 1, kernel);
+            for r in 0..p {
+                for &v in t.recv_row(r).iter().chain(t.send_row(r)) {
+                    let v = v as i64;
+                    assert!(
+                        -q <= v && v < q,
+                        "p={p} r={r}: raw entry {v} outside [-{q}, {q}) ({kernel:?})"
+                    );
+                }
             }
         }
     }
