@@ -1,0 +1,242 @@
+//! Cost-plane crossover receipts: for every point of a (machine, p, m)
+//! grid, run each candidate rooted-collective family explicitly under a
+//! configured LogP machine, read the `LogPClock`-measured completion
+//! time off `RunStats::logp_time`, and record what `Algo::Auto`'s
+//! closed-form argmin (`Algo::resolve_with`) would have picked next to
+//! the *measured* winner. CI's `costmodel-smoke` gate asserts that Auto
+//! matches the measured winner on >= 80% of the grid and never loses by
+//! more than 25% — the acceptance receipts for cost-driven selection.
+//!
+//! Usage: `cargo bench --bench costmodel`
+//! A machine-readable record is written to `BENCH_costmodel.json`
+//! (override with `CBCAST_BENCH_JSON=path`).
+
+use std::io::Write;
+use std::sync::Arc;
+
+use circulant_bcast::collectives::tuning::{
+    predict_binomial, predict_circulant, predict_opttree, predict_vdg,
+};
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{
+    resolve_blocks, Algo, BcastReq, CommBuilder, Communicator, Kind, ReduceReq, TuningParams,
+};
+use circulant_bcast::sim::{LogPParams, UnitCost};
+
+const ELEM_BYTES: usize = 8;
+
+/// One grid point's receipts.
+struct Row {
+    machine: &'static str,
+    kind: Kind,
+    p: usize,
+    m: usize,
+    n: usize,
+    auto_pick: Algo,
+    winner: Algo,
+    auto_time: f64,
+    winner_time: f64,
+    /// (algo, predicted, measured) per candidate.
+    candidates: Vec<(Algo, f64, f64)>,
+}
+
+impl Row {
+    fn matched(&self) -> bool {
+        self.auto_pick == self.winner
+    }
+
+    /// How much slower Auto's pick ran than the measured winner.
+    fn loss(&self) -> f64 {
+        if self.winner_time > 0.0 {
+            self.auto_time / self.winner_time
+        } else {
+            1.0
+        }
+    }
+}
+
+fn algo_name(a: Algo) -> &'static str {
+    match a {
+        Algo::Circulant => "circulant",
+        Algo::Binomial => "binomial",
+        Algo::VanDeGeijn => "vdg",
+        Algo::OptTree => "opttree",
+        Algo::Ring => "ring",
+        Algo::RecursiveHalving => "rhalving",
+        Algo::Auto => "auto",
+    }
+}
+
+fn comm(p: usize, params: LogPParams) -> Communicator {
+    let tuning = TuningParams { logp: Some(params), ..TuningParams::default() };
+    CommBuilder::new(p).cost_model(UnitCost).tuning(tuning).build()
+}
+
+/// Measured LogP completion of one explicit (kind, algo) run.
+fn measure(c: &Communicator, kind: Kind, algo: Algo, p: usize, m: usize) -> f64 {
+    let out = match kind {
+        Kind::Bcast => {
+            let data: Vec<i64> = (0..m as i64).map(|i| i * 7 % 1009).collect();
+            c.bcast(BcastReq::new(0, &data).algo(algo).elem_bytes(ELEM_BYTES))
+                .expect("bcast candidate")
+        }
+        Kind::Reduce => {
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| ((r * 31 + i * 7) % 1009) as i64).collect())
+                .collect();
+            let req = ReduceReq::new(0, &inputs, Arc::new(SumOp)).algo(algo);
+            c.reduce(req.elem_bytes(ELEM_BYTES)).expect("reduce candidate")
+        }
+        other => unreachable!("bench only sweeps rooted collectives, got {other:?}"),
+    };
+    out.stats.logp_time.expect("cost plane attached")
+}
+
+/// Run one grid point: every candidate family explicitly, Auto's pick
+/// next to the measured winner.
+fn run_point(machine: &'static str, params: LogPParams, kind: Kind, p: usize, m: usize) -> Row {
+    let c = comm(p, params);
+    let total = m * ELEM_BYTES;
+    let tp = TuningParams { logp: Some(params), ..TuningParams::default() };
+    let n = resolve_blocks(kind, p, m, &tp, None);
+    let family: &[Algo] = match kind {
+        Kind::Bcast => &[Algo::Circulant, Algo::Binomial, Algo::VanDeGeijn, Algo::OptTree],
+        _ => &[Algo::Circulant, Algo::Binomial, Algo::OptTree],
+    };
+    let candidates: Vec<(Algo, f64, f64)> = family
+        .iter()
+        .map(|&algo| {
+            let predicted = match algo {
+                Algo::Circulant => predict_circulant(p, n, total, &params),
+                Algo::Binomial => predict_binomial(p, total, &params),
+                Algo::VanDeGeijn => predict_vdg(p, total, &params),
+                Algo::OptTree => predict_opttree(p, total, &params),
+                a => unreachable!("{a:?} is not in the rooted candidate family"),
+            };
+            (algo, predicted, measure(&c, kind, algo, p, m))
+        })
+        .collect();
+    let auto_pick = Algo::Auto.resolve_with(kind, p, m, ELEM_BYTES, None, &tp);
+    let mut winner = candidates[0];
+    for &cand in &candidates[1..] {
+        if cand.2 < winner.2 {
+            winner = cand;
+        }
+    }
+    let auto_time = candidates.iter().find(|t| t.0 == auto_pick).expect("in family").2;
+    Row {
+        machine,
+        kind,
+        p,
+        m,
+        n,
+        auto_pick,
+        winner: winner.0,
+        auto_time,
+        winner_time: winner.2,
+        candidates,
+    }
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<12} {:>7} {:>4} {:>8} {:>5} {:>11} {:>11} {:>12.2} {:>12.2} {:>6}",
+        r.machine,
+        format!("{:?}", r.kind),
+        r.p,
+        r.m,
+        r.n,
+        algo_name(r.auto_pick),
+        algo_name(r.winner),
+        r.auto_time * 1e6,
+        r.winner_time * 1e6,
+        if r.matched() { "yes" } else { "NO" },
+    );
+}
+
+fn main() {
+    let machines: [(&'static str, LogPParams); 3] = [
+        ("default", LogPParams::default()),
+        // Long-haul wire: latency dominates, trees win longer.
+        ("fat-latency", LogPParams::new(2e-5, 5e-7, 1e-7)),
+        // Thin pipe: the per-packet gap dominates, pipelining wins earlier.
+        ("thin-pipe", LogPParams::new(2e-6, 5e-7, 1e-6)),
+    ];
+    let mut rows: Vec<Row> = Vec::new();
+    println!("=== costmodel: Auto's predicted argmin vs the LogPClock-measured winner ===\n");
+    println!(
+        "{:<12} {:>7} {:>4} {:>8} {:>5} {:>11} {:>11} {:>12} {:>12} {:>6}",
+        "machine", "kind", "p", "m", "n", "auto", "winner", "auto(us)", "winner(us)", "match"
+    );
+    for (machine, params) in machines {
+        for p in [8usize, 24, 64] {
+            for m in [16usize, 1024, 8192, 131072] {
+                for kind in [Kind::Bcast, Kind::Reduce] {
+                    let row = run_point(machine, params, kind, p, m);
+                    print_row(&row);
+                    rows.push(row);
+                }
+            }
+        }
+    }
+
+    let matches = rows.iter().filter(|r| r.matched()).count();
+    let fraction = matches as f64 / rows.len() as f64;
+    let worst = rows.iter().map(Row::loss).fold(1.0f64, f64::max);
+    println!(
+        "\nAuto matched the measured winner on {matches}/{} points ({:.0}%), \
+         worst loss {:.1}% over the winner",
+        rows.len(),
+        fraction * 100.0,
+        (worst - 1.0) * 100.0
+    );
+
+    let json_path = std::env::var("CBCAST_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_costmodel.json".to_string());
+    write_json(&json_path, &rows, fraction, worst).expect("write bench json");
+    println!("→ {json_path}");
+}
+
+fn candidate_json(c: &(Algo, f64, f64)) -> String {
+    let (algo, predicted, measured) = *c;
+    format!(
+        "{{\"algo\": \"{}\", \"predicted\": {predicted:e}, \"measured\": {measured:e}}}",
+        algo_name(algo)
+    )
+}
+
+/// Hand-rolled JSON (the crate is dependency-free; no serde).
+fn write_json(path: &str, rows: &[Row], fraction: f64, worst: f64) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"costmodel\",")?;
+    writeln!(f, "  \"points\": {},", rows.len())?;
+    writeln!(f, "  \"match_fraction\": {fraction:.4},")?;
+    writeln!(f, "  \"worst_loss\": {worst:.4},")?;
+    writeln!(f, "  \"entries\": [")?;
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        let cands: Vec<String> = r.candidates.iter().map(candidate_json).collect();
+        writeln!(
+            f,
+            "    {{\"machine\": \"{}\", \"kind\": \"{:?}\", \"p\": {}, \"m\": {}, \"n\": {}, \
+             \"auto\": \"{}\", \"winner\": \"{}\", \"auto_time\": {:e}, \"winner_time\": {:e}, \
+             \"match\": {}, \"loss\": {:.4}, \"candidates\": [{}]}}{comma}",
+            r.machine,
+            r.kind,
+            r.p,
+            r.m,
+            r.n,
+            algo_name(r.auto_pick),
+            algo_name(r.winner),
+            r.auto_time,
+            r.winner_time,
+            r.matched(),
+            r.loss(),
+            cands.join(", "),
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use crate::schedule::ceil_log2;
+use crate::schedule::{ceil_log2, OptTree};
 use crate::sim::network::{Msg, RankProc};
 
 use super::common::{BlockGeometry, Element, ReduceOp};
@@ -150,6 +150,123 @@ impl<T: Element> RankProc<T> for BinomialReduceProc<T> {
         } else {
             self.q
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Karp optimal-tree broadcast / reduction (the cost plane's baseline)
+// ---------------------------------------------------------------------
+
+/// LogP-optimal tree broadcast: the full `m`-element buffer on every
+/// edge of a shared [`OptTree`] (built once for the run's machine
+/// parameters — see [`crate::schedule::opttree`]). Tree node `v` is
+/// root-relative rank `v`, so any root runs the same tree shape.
+pub struct OptTreeBcastProc<T> {
+    rank: usize,
+    root: usize,
+    p: usize,
+    tree: Arc<OptTree>,
+    buf: Option<Vec<T>>,
+}
+
+impl<T: Element> OptTreeBcastProc<T> {
+    pub fn new(tree: Arc<OptTree>, p: usize, rank: usize, root: usize, data: Option<&[T]>) -> Self {
+        assert_eq!(tree.p(), p, "tree built for a different world size");
+        OptTreeBcastProc { rank, root, p, tree, buf: data.map(|d| d.to_vec()) }
+    }
+
+    #[inline]
+    fn vrel(&self) -> usize {
+        (self.rank + self.p - self.root % self.p) % self.p
+    }
+
+    #[inline]
+    fn abs(&self, node: usize) -> usize {
+        (node + self.root) % self.p
+    }
+
+    pub fn into_buffer(self) -> Vec<T> {
+        self.buf.unwrap_or_else(|| panic!("rank {}: never received", self.rank))
+    }
+}
+
+impl<T: Element> RankProc<T> for OptTreeBcastProc<T> {
+    fn send(&mut self, round: usize) -> Option<Msg<T>> {
+        let child = self.tree.bcast_send(self.vrel(), round)?;
+        let data = self.buf.as_ref().expect("opttree: sending before receiving").clone();
+        Some(Msg { to: self.abs(child), data })
+    }
+
+    fn expects(&self, round: usize) -> Option<usize> {
+        self.tree.bcast_recv(self.vrel(), round).map(|v| self.abs(v))
+    }
+
+    fn recv(&mut self, _round: usize, _from: usize, data: Vec<T>) {
+        self.buf = Some(data);
+    }
+
+    fn rounds(&self) -> usize {
+        self.tree.rounds()
+    }
+}
+
+/// LogP-optimal tree reduction: the broadcast tree reversed
+/// round-by-round — every node ⊕-combines its children's partials (they
+/// all arrive strictly before its own send round by construction), then
+/// forwards the accumulated vector to its parent.
+pub struct OptTreeReduceProc<T> {
+    rank: usize,
+    root: usize,
+    p: usize,
+    tree: Arc<OptTree>,
+    op: Arc<dyn ReduceOp<T>>,
+    buf: Vec<T>,
+}
+
+impl<T: Element> OptTreeReduceProc<T> {
+    pub fn new(
+        tree: Arc<OptTree>,
+        p: usize,
+        rank: usize,
+        root: usize,
+        data: &[T],
+        op: Arc<dyn ReduceOp<T>>,
+    ) -> Self {
+        assert_eq!(tree.p(), p, "tree built for a different world size");
+        OptTreeReduceProc { rank, root, p, tree, op, buf: data.to_vec() }
+    }
+
+    #[inline]
+    fn vrel(&self) -> usize {
+        (self.rank + self.p - self.root % self.p) % self.p
+    }
+
+    #[inline]
+    fn abs(&self, node: usize) -> usize {
+        (node + self.root) % self.p
+    }
+
+    pub fn into_buffer(self) -> Vec<T> {
+        self.buf
+    }
+}
+
+impl<T: Element> RankProc<T> for OptTreeReduceProc<T> {
+    fn send(&mut self, round: usize) -> Option<Msg<T>> {
+        let parent = self.tree.reduce_send(self.vrel(), round)?;
+        Some(Msg { to: self.abs(parent), data: self.buf.clone() })
+    }
+
+    fn expects(&self, round: usize) -> Option<usize> {
+        self.tree.reduce_recv(self.vrel(), round).map(|v| self.abs(v))
+    }
+
+    fn recv(&mut self, _round: usize, _from: usize, data: Vec<T>) {
+        self.op.combine(&mut self.buf, &data);
+    }
+
+    fn rounds(&self) -> usize {
+        self.tree.rounds()
     }
 }
 
@@ -530,6 +647,35 @@ mod tests {
             for root in [0, p - 1] {
                 let out = comm(p)
                     .reduce(ReduceReq::new(root, &inputs, Arc::new(SumOp)).algo(Algo::Binomial))
+                    .unwrap();
+                assert_eq!(out.buffers, expect, "p={p} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn opttree_bcast_all_p() {
+        for p in 1..=33 {
+            for root in [0, p / 2, p - 1] {
+                let data: Vec<u32> = (0..50).collect();
+                let out = comm(p).bcast(BcastReq::new(root, &data).algo(Algo::OptTree)).unwrap();
+                for b in &out.buffers {
+                    assert_eq!(b, &data, "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn opttree_reduce_all_p() {
+        for p in 1..=33usize {
+            let m = 20;
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..m).map(|i| (r + i) as i64).collect()).collect();
+            let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+            for root in [0, p - 1] {
+                let out = comm(p)
+                    .reduce(ReduceReq::new(root, &inputs, Arc::new(SumOp)).algo(Algo::OptTree))
                     .unwrap();
                 assert_eq!(out.buffers, expect, "p={p} root={root}");
             }

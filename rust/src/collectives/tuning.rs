@@ -8,7 +8,8 @@
 //! minimising `(n-1+q)(α + β·m·s/n)` is `n* = sqrt(β·m·s·(q-1)/α)` — both
 //! are provided, and the block-size ablation bench contrasts them.
 
-use crate::schedule::ceil_log2;
+use crate::schedule::{ceil_log2, OptTree};
+use crate::sim::cost::LogPParams;
 
 /// Clamp a candidate block count into `[1, max(m, 1)]`.
 fn clamp_n(n: f64, m: usize) -> usize {
@@ -74,6 +75,83 @@ pub fn pipeline_time_model(
     (n - 1.0 + q) * (alpha + beta * block_bytes)
 }
 
+// ---------------------------------------------------------------------
+// LogP closed-form predictors — the cost plane's per-family estimates
+// ---------------------------------------------------------------------
+//
+// One function per algorithm family, each returning the predicted
+// completion time (seconds) of moving `total_bytes` of payload across
+// `p` ranks under `params`. `Algo::Auto` argmins over the applicable
+// families when LogP parameters are configured
+// (`crate::comm::Algo::resolve_with`); the bench gate in
+// `benches/costmodel.rs` cross-checks the predictions' *ordering*
+// against `LogPClock`-measured traces.
+
+/// Minimum spacing between consecutive same-size messages on one port:
+/// `max(o, packets·g)`.
+#[inline]
+fn port_spacing(bytes: usize, params: &LogPParams) -> f64 {
+    (LogPParams::packets(bytes) as f64 * params.g).max(params.o)
+}
+
+/// Circulant pipeline (`n − 1 + q` rounds, one `total/n`-byte block per
+/// message): the first block reaches the last rank after `q` dependent
+/// hops, the remaining `n − 1` blocks stream behind it at port rate.
+pub fn predict_circulant(p: usize, n: usize, total_bytes: usize, params: &LogPParams) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let n = n.max(1);
+    let q = ceil_log2(p);
+    let block = (total_bytes + n - 1) / n;
+    q as f64 * params.msg_time(block) + (n - 1) as f64 * port_spacing(block, params)
+}
+
+/// Binomial tree: `q` dependent hops of the full buffer.
+pub fn predict_binomial(p: usize, total_bytes: usize, params: &LogPParams) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    ceil_log2(p) as f64 * params.msg_time(total_bytes)
+}
+
+/// van de Geijn: binomial scatter of halving chunks, then a `p − 1`
+/// round ring all-gather of `total/p` chunks.
+pub fn predict_vdg(p: usize, total_bytes: usize, params: &LogPParams) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let q = ceil_log2(p);
+    let scatter: f64 = (1..=q).map(|t| params.msg_time(total_bytes >> t)).sum();
+    scatter + (p - 1) as f64 * params.msg_time(total_bytes / p)
+}
+
+/// Ring: `p − 1` dependent rounds of `total/p`-byte chunks.
+pub fn predict_ring(p: usize, total_bytes: usize, params: &LogPParams) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * params.msg_time(total_bytes / p)
+}
+
+/// Recursive halving: `q` exchanges of halving chunks.
+pub fn predict_rhalving(p: usize, total_bytes: usize, params: &LogPParams) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (1..=ceil_log2(p)).map(|k| params.msg_time(total_bytes >> k)).sum()
+}
+
+/// Karp optimal tree: the greedy construction's own completion label on
+/// the machine scaled for `total_bytes`-sized payloads — exact under
+/// the [`crate::sim::LogPClock`] by construction, not an estimate.
+pub fn predict_opttree(p: usize, total_bytes: usize, params: &LogPParams) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    OptTree::build(p, &params.scaled_for(total_bytes)).completion()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +189,60 @@ mod tests {
     #[test]
     fn n_clamped_to_m() {
         assert!(bcast_blocks_paper(4, 1 << 20, 0.0001) <= 4);
+    }
+
+    #[test]
+    fn predictors_degenerate_at_p1() {
+        let params = LogPParams::default();
+        assert_eq!(predict_circulant(1, 8, 1 << 20, &params), 0.0);
+        assert_eq!(predict_binomial(1, 1 << 20, &params), 0.0);
+        assert_eq!(predict_vdg(1, 1 << 20, &params), 0.0);
+        assert_eq!(predict_ring(1, 1 << 20, &params), 0.0);
+        assert_eq!(predict_rhalving(1, 1 << 20, &params), 0.0);
+        assert_eq!(predict_opttree(1, 1 << 20, &params), 0.0);
+    }
+
+    #[test]
+    fn predicted_crossover_matches_the_folklore() {
+        // Small single-packet payload: trees (opttree ≤ binomial) beat
+        // the pipeline and vdG; huge payload: the pipelined circulant
+        // with a good n beats both trees.
+        let params = LogPParams::default();
+        let p = 64;
+        let small = 64usize;
+        let t_tree = predict_opttree(p, small, &params);
+        assert!(t_tree <= predict_binomial(p, small, &params) + 1e-15);
+        assert!(t_tree < predict_circulant(p, 8, small, &params));
+
+        let big = 64 << 20;
+        let n = bcast_blocks_paper(big / 4, p, 70.0);
+        let t_pipe = predict_circulant(p, n, big, &params);
+        assert!(t_pipe < predict_binomial(p, big, &params));
+        assert!(t_pipe < predict_opttree(p, big, &params));
+    }
+
+    #[test]
+    fn predictions_monotone_in_each_logp_knob() {
+        let base = LogPParams::default();
+        let bigger_l = LogPParams::new(base.l * 10.0, base.o, base.g);
+        let bigger_o = LogPParams::new(base.l, base.o * 10.0, base.g);
+        let bigger_g = LogPParams::new(base.l, base.o, base.g * 10.0);
+        let (p, bytes) = (48, 1 << 20);
+        for predict in [
+            predict_binomial as fn(usize, usize, &LogPParams) -> f64,
+            predict_vdg,
+            predict_ring,
+            predict_rhalving,
+            predict_opttree,
+        ] {
+            let t = predict(p, bytes, &base);
+            assert!(predict(p, bytes, &bigger_l) >= t);
+            assert!(predict(p, bytes, &bigger_o) >= t);
+            assert!(predict(p, bytes, &bigger_g) >= t);
+        }
+        let t = predict_circulant(p, 16, bytes, &base);
+        assert!(predict_circulant(p, 16, bytes, &bigger_l) >= t);
+        assert!(predict_circulant(p, 16, bytes, &bigger_o) >= t);
+        assert!(predict_circulant(p, 16, bytes, &bigger_g) >= t);
     }
 }

@@ -49,9 +49,9 @@
 //! value-level selector a [`super::Communicator`] stores.
 
 use crate::collectives::common::Element;
-use crate::sim::cost::CostModel;
+use crate::sim::cost::{CostModel, LogPParams};
 use crate::sim::network::{Network, RankProc, RunStats, SimError};
-use crate::sim::threads::{fold_send_logs, run_threaded_stats};
+use crate::sim::threads::{fold_send_logs, run_threaded_stats_logp};
 
 use super::outcome::CommError;
 use super::rank::{close_after, collect_ranks, drive_proc, TransportKind};
@@ -72,6 +72,25 @@ pub trait ExecBackend {
     ) -> Result<(RunStats, Vec<P>), SimError>
     where
         T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
+        self.execute_logp::<T, P>(procs, elem_bytes, cost, None)
+    }
+
+    /// [`ExecBackend::execute`] with the cost plane attached: when
+    /// `logp` is given, the run's message trace is additionally clocked
+    /// by a [`crate::sim::LogPClock`] and the predicted completion time
+    /// lands in `RunStats::logp_time`. Every backend folds the *same*
+    /// round-tagged send logs, so the clocked time is backend-invariant.
+    fn execute_logp<T, P>(
+        &self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
         P: RankProc<T> + Send + 'static;
 }
 
@@ -84,17 +103,18 @@ impl ExecBackend for LockstepBackend {
         "lockstep"
     }
 
-    fn execute<T, P>(
+    fn execute_logp<T, P>(
         &self,
         mut procs: Vec<P>,
         elem_bytes: usize,
         cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
     ) -> Result<(RunStats, Vec<P>), SimError>
     where
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
-        let stats = Network::new(procs.len()).run(&mut procs, elem_bytes, cost)?;
+        let stats = Network::new(procs.len()).run_logp(&mut procs, elem_bytes, cost, logp)?;
         Ok((stats, procs))
     }
 }
@@ -109,17 +129,18 @@ impl ExecBackend for ThreadedBackend {
         "threaded"
     }
 
-    fn execute<T, P>(
+    fn execute_logp<T, P>(
         &self,
         procs: Vec<P>,
         elem_bytes: usize,
         cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
     ) -> Result<(RunStats, Vec<P>), SimError>
     where
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
-        Ok(run_threaded_stats(procs, elem_bytes, cost))
+        Ok(run_threaded_stats_logp(procs, elem_bytes, cost, logp))
     }
 }
 
@@ -139,17 +160,18 @@ impl ExecBackend for EngineBackend {
         "engine"
     }
 
-    fn execute<T, P>(
+    fn execute_logp<T, P>(
         &self,
         procs: Vec<P>,
         elem_bytes: usize,
         cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
     ) -> Result<(RunStats, Vec<P>), SimError>
     where
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
-        LockstepBackend.execute::<T, P>(procs, elem_bytes, cost)
+        LockstepBackend.execute_logp::<T, P>(procs, elem_bytes, cost, logp)
     }
 }
 
@@ -171,17 +193,18 @@ impl ExecBackend for SpmdBackend {
         "spmd"
     }
 
-    fn execute<T, P>(
+    fn execute_logp<T, P>(
         &self,
         procs: Vec<P>,
         elem_bytes: usize,
         cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
     ) -> Result<(RunStats, Vec<P>), SimError>
     where
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
-        run_transport_stats(procs, elem_bytes, cost)
+        run_transport_stats(procs, elem_bytes, cost, logp)
     }
 }
 
@@ -204,17 +227,18 @@ impl ExecBackend for SocketBackend {
         "socket"
     }
 
-    fn execute<T, P>(
+    fn execute_logp<T, P>(
         &self,
         procs: Vec<P>,
         elem_bytes: usize,
         cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
     ) -> Result<(RunStats, Vec<P>), SimError>
     where
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
-        run_socket_stats(procs, elem_bytes, cost)
+        run_socket_stats(procs, elem_bytes, cost, logp)
     }
 }
 
@@ -229,13 +253,14 @@ pub(crate) fn run_transport_stats<T, P>(
     procs: Vec<P>,
     elem_bytes: usize,
     cost: &dyn CostModel,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<P>), SimError>
 where
     T: Element,
     P: RankProc<T> + Send,
 {
     let world = ThreadTransport::<T>::world(procs.len());
-    drive_world(procs, world, elem_bytes, cost)
+    drive_world(procs, world, elem_bytes, cost, logp)
 }
 
 /// [`run_transport_stats`] over the wire plane: generic rank state
@@ -248,14 +273,15 @@ pub(crate) fn run_socket_stats<T, P>(
     procs: Vec<P>,
     elem_bytes: usize,
     cost: &dyn CostModel,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<P>), SimError>
 where
     T: Element,
     P: RankProc<T> + Send,
 {
     match SocketTransport::<T>::pair_world(procs.len()) {
-        Ok(world) => drive_world(procs, world, elem_bytes, cost),
-        Err(_) => run_transport_stats(procs, elem_bytes, cost),
+        Ok(world) => drive_world(procs, world, elem_bytes, cost, logp),
+        Err(_) => run_transport_stats(procs, elem_bytes, cost, logp),
     }
 }
 
@@ -266,6 +292,7 @@ fn drive_world<T, P, Tr>(
     world: Vec<Tr>,
     elem_bytes: usize,
     cost: &dyn CostModel,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<P>), SimError>
 where
     T: Element,
@@ -308,7 +335,7 @@ where
         .map_err(transport_root_to_sim)?
         .into_iter()
         .unzip();
-    Ok((fold_send_logs(&logs, total_rounds, elem_bytes, cost), done))
+    Ok((fold_send_logs(&logs, total_rounds, elem_bytes, cost, logp), done))
 }
 
 /// Map the triaged root cause of a generic SPMD run back onto the
@@ -425,12 +452,34 @@ impl BackendKind {
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
+        self.execute_logp::<T, P>(procs, elem_bytes, cost, None)
+    }
+
+    pub(crate) fn execute_logp<T, P>(
+        self,
+        procs: Vec<P>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
+    ) -> Result<(RunStats, Vec<P>), SimError>
+    where
+        T: Element,
+        P: RankProc<T> + Send + 'static,
+    {
         match self {
-            BackendKind::Lockstep => LockstepBackend.execute::<T, P>(procs, elem_bytes, cost),
-            BackendKind::Threaded => ThreadedBackend.execute::<T, P>(procs, elem_bytes, cost),
-            BackendKind::Engine => EngineBackend.execute::<T, P>(procs, elem_bytes, cost),
-            BackendKind::Spmd => SpmdBackend.execute::<T, P>(procs, elem_bytes, cost),
-            BackendKind::Socket => SocketBackend.execute::<T, P>(procs, elem_bytes, cost),
+            BackendKind::Lockstep => {
+                LockstepBackend.execute_logp::<T, P>(procs, elem_bytes, cost, logp)
+            }
+            BackendKind::Threaded => {
+                ThreadedBackend.execute_logp::<T, P>(procs, elem_bytes, cost, logp)
+            }
+            BackendKind::Engine => {
+                EngineBackend.execute_logp::<T, P>(procs, elem_bytes, cost, logp)
+            }
+            BackendKind::Spmd => SpmdBackend.execute_logp::<T, P>(procs, elem_bytes, cost, logp),
+            BackendKind::Socket => {
+                SocketBackend.execute_logp::<T, P>(procs, elem_bytes, cost, logp)
+            }
         }
     }
 }
@@ -540,6 +589,32 @@ mod tests {
         for (a, b) in lprocs.iter().zip(&sprocs) {
             assert_eq!(a.val, b.val);
         }
+    }
+
+    #[test]
+    fn execute_logp_attaches_backend_invariant_time() {
+        let p = 5usize;
+        let params = LogPParams::default();
+        let (ls, _) = LockstepBackend
+            .execute_logp::<u32, Shift>(shifts(p), 4, &UnitCost, Some(&params))
+            .unwrap();
+        let t = ls.logp_time.expect("clock attached under Some(params)");
+        assert!(t > 0.0);
+        let (ts, _) = ThreadedBackend
+            .execute_logp::<u32, Shift>(shifts(p), 4, &UnitCost, Some(&params))
+            .unwrap();
+        let (ss, _) = SpmdBackend
+            .execute_logp::<u32, Shift>(shifts(p), 4, &UnitCost, Some(&params))
+            .unwrap();
+        let (ws, _) = SocketBackend
+            .execute_logp::<u32, Shift>(shifts(p), 4, &UnitCost, Some(&params))
+            .unwrap();
+        assert_eq!(ts.logp_time, Some(t), "threaded");
+        assert_eq!(ss.logp_time, Some(t), "spmd");
+        assert_eq!(ws.logp_time, Some(t), "socket");
+        // Without parameters the cost plane stays detached.
+        let (plain, _) = LockstepBackend.execute::<u32, Shift>(shifts(p), 4, &UnitCost).unwrap();
+        assert_eq!(plain.logp_time, None);
     }
 
     #[test]

@@ -6,8 +6,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::collectives::allgatherv::{build_allgatherv_procs, AllgathervProc, ScheduleTable};
 use crate::collectives::baselines::{
-    BinomialBcastProc, BinomialReduceProc, RingAllgathervProc, RingReduceScatterProc,
-    VdgBcastProc,
+    BinomialBcastProc, BinomialReduceProc, OptTreeBcastProc, OptTreeReduceProc,
+    RingAllgathervProc, RingReduceScatterProc, VdgBcastProc,
 };
 use crate::collectives::bcast::{build_bcast_procs, BcastProc};
 use crate::collectives::common::{BlockGeometry, Element, ScheduleSource};
@@ -15,9 +15,9 @@ use crate::collectives::reduce::{build_reduce_procs, ReduceProc};
 use crate::collectives::reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
 use crate::collectives::rhalving::RhalvingProc;
 use crate::schedule::table::ScheduleTable as RowTable;
-use crate::schedule::{ScheduleCache, Skips};
-use crate::sim::cost::{CostModel, LinearCost};
-use crate::sim::engine::CirculantEngine;
+use crate::schedule::{OptTree, ScheduleCache, Skips};
+use crate::sim::cost::{CostModel, LinearCost, LogPParams};
+use crate::sim::engine::{CirculantEngine, EngineScratch};
 use crate::sim::network::{RankProc, RunStats, SimError};
 
 use super::backend::{build_procs, BackendKind};
@@ -275,7 +275,26 @@ impl Communicator {
         T: Element,
         P: RankProc<T> + Send + 'static,
     {
-        self.backend.execute::<T, P>(procs, elem_bytes, cost)
+        // With LogP parameters configured, every run through the
+        // communicator also carries the cost plane's clock
+        // (`RunStats::logp_time`), whatever the backend.
+        self.backend.execute_logp::<T, P>(procs, elem_bytes, cost, self.tuning.logp.as_ref())
+    }
+
+    /// The machine the cost plane prices this communicator against:
+    /// configured LogP parameters, or the documented defaults — used
+    /// only where an [`Algo::OptTree`] tree must be built even though
+    /// no parameters were configured.
+    fn logp_or_default(&self) -> LogPParams {
+        self.tuning.logp.unwrap_or_default()
+    }
+
+    /// The [`OptTree`] for an `m`-element, `elem_bytes`-wide payload:
+    /// the greedy build on the machine scaled for the full message
+    /// size, shared by every rank's proc (and bit-identical across
+    /// backends — the build is deterministic).
+    pub(crate) fn opttree_for(&self, m: usize, elem_bytes: usize) -> Arc<OptTree> {
+        Arc::new(OptTree::build(self.p, &self.logp_or_default().scaled_for(m * elem_bytes)))
     }
 
     // ---------------------------------------------------------------
@@ -305,7 +324,8 @@ impl Communicator {
             )));
         }
         let m = req.data.len();
-        let algo = req.algo.resolve(Kind::Bcast, m, req.elem_bytes, req.blocks);
+        let algo =
+            req.algo.resolve_with(Kind::Bcast, p, m, req.elem_bytes, req.blocks, &self.tuning);
         let (stats, buffers) = match algo {
             Algo::Circulant if self.backend == BackendKind::Engine => {
                 // The sparse engine simulates the schedule directly (a
@@ -318,7 +338,12 @@ impl Communicator {
                 let n = self.blocks_for(Kind::Bcast, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
                 let eng = CirculantEngine::new(self.rows(), req.root, geom);
-                let stats = eng.run_bcast(req.elem_bytes, cost)?;
+                let stats = eng.run_bcast_clocked(
+                    &mut EngineScratch::<()>::new(),
+                    req.elem_bytes,
+                    cost,
+                    self.tuning.logp.as_ref(),
+                )?;
                 let bufs: Vec<Vec<T>> = (0..p).map(|_| req.data.to_vec()).collect();
                 (stats, bufs)
             }
@@ -337,6 +362,7 @@ impl Communicator {
                     req.elem_bytes,
                     cost,
                     self.backend.rank_plane_transport(),
+                    self.tuning.logp.as_ref(),
                 )?;
                 (stats, bufs)
             }
@@ -368,6 +394,17 @@ impl Communicator {
                 });
                 let (stats, procs) =
                     self.run::<T, VdgBcastProc<T>>(procs, req.elem_bytes, cost)?;
+                let bufs: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                (stats, bufs)
+            }
+            Algo::OptTree => {
+                let tree = self.opttree_for(m, req.elem_bytes);
+                let procs = build_procs(p, |r| {
+                    let data = if r == req.root { Some(req.data) } else { None };
+                    OptTreeBcastProc::new(tree.clone(), p, r, req.root, data)
+                });
+                let (stats, procs) =
+                    self.run::<T, OptTreeBcastProc<T>>(procs, req.elem_bytes, cost)?;
                 let bufs: Vec<Vec<T>> = procs.into_iter().map(|pr| pr.into_buffer()).collect();
                 (stats, bufs)
             }
@@ -415,14 +452,21 @@ impl Communicator {
                 "reduce requires equal-length contributions".to_string(),
             ));
         }
-        let algo = req.algo.resolve(Kind::Reduce, m, req.elem_bytes, req.blocks);
+        let algo =
+            req.algo.resolve_with(Kind::Reduce, p, m, req.elem_bytes, req.blocks, &self.tuning);
         let (stats, buffer) = match algo {
             Algo::Circulant if self.backend == BackendKind::Engine => {
                 let n = self.blocks_for(Kind::Reduce, m, req.blocks);
                 let geom = BlockGeometry::new(m, n);
                 let eng = CirculantEngine::new(self.rows(), req.root, geom);
-                let (stats, buffer) =
-                    eng.run_reduce(req.inputs, req.op.as_ref(), req.elem_bytes, cost)?;
+                let (stats, buffer) = eng.run_reduce_clocked(
+                    &mut EngineScratch::new(),
+                    req.inputs,
+                    req.op.as_ref(),
+                    req.elem_bytes,
+                    cost,
+                    self.tuning.logp.as_ref(),
+                )?;
                 (stats, buffer)
             }
             Algo::Circulant if self.backend.is_rank_plane() => {
@@ -436,6 +480,7 @@ impl Communicator {
                     req.elem_bytes,
                     cost,
                     self.backend.rank_plane_transport(),
+                    self.tuning.logp.as_ref(),
                 )?;
                 (stats, buffer)
             }
@@ -459,6 +504,23 @@ impl Communicator {
                 });
                 let (stats, procs) =
                     self.run::<T, BinomialReduceProc<T>>(procs, req.elem_bytes, cost)?;
+                let buffer = procs.into_iter().nth(req.root).unwrap().into_buffer();
+                (stats, buffer)
+            }
+            Algo::OptTree => {
+                let tree = self.opttree_for(m, req.elem_bytes);
+                let procs = build_procs(p, |r| {
+                    OptTreeReduceProc::new(
+                        tree.clone(),
+                        p,
+                        r,
+                        req.root,
+                        &req.inputs[r],
+                        req.op.clone(),
+                    )
+                });
+                let (stats, procs) =
+                    self.run::<T, OptTreeReduceProc<T>>(procs, req.elem_bytes, cost)?;
                 let buffer = procs.into_iter().nth(req.root).unwrap().into_buffer();
                 (stats, buffer)
             }
@@ -518,7 +580,14 @@ impl Communicator {
         }
         let total: usize = req.inputs.iter().map(|v| v.len()).sum();
         let counts = Arc::new(req.inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
-        let algo = req.algo.resolve(Kind::Allgatherv, total, req.elem_bytes, req.blocks);
+        let algo = req.algo.resolve_with(
+            Kind::Allgatherv,
+            p,
+            total,
+            req.elem_bytes,
+            req.blocks,
+            &self.tuning,
+        );
         let (stats, buffers) = match algo {
             Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::Allgatherv, total, req.blocks);
@@ -529,6 +598,7 @@ impl Communicator {
                     req.elem_bytes,
                     cost,
                     self.backend.rank_plane_transport(),
+                    self.tuning.logp.as_ref(),
                 )?;
                 (stats, bufs)
             }
@@ -601,7 +671,14 @@ impl Communicator {
             )));
         }
         let counts = Arc::new(req.counts.to_vec());
-        let algo = req.algo.resolve(Kind::ReduceScatter, total, req.elem_bytes, req.blocks);
+        let algo = req.algo.resolve_with(
+            Kind::ReduceScatter,
+            p,
+            total,
+            req.elem_bytes,
+            req.blocks,
+            &self.tuning,
+        );
         let (stats, chunks) = match algo {
             Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::ReduceScatter, total, req.blocks);
@@ -614,6 +691,7 @@ impl Communicator {
                     req.elem_bytes,
                     cost,
                     self.backend.rank_plane_transport(),
+                    self.tuning.logp.as_ref(),
                 )?;
                 (stats, chunks)
             }
@@ -750,7 +828,8 @@ impl Communicator {
         let rem = m % p;
         let counts: Vec<usize> = (0..p).map(|j| base + usize::from(j < rem)).collect();
         let counts = Arc::new(counts);
-        let algo = req.algo.resolve(Kind::Allreduce, m, req.elem_bytes, req.blocks);
+        let algo =
+            req.algo.resolve_with(Kind::Allreduce, p, m, req.elem_bytes, req.blocks, &self.tuning);
         match algo {
             Algo::Circulant if self.backend.is_rank_plane() => {
                 let n = self.blocks_for(Kind::Allreduce, m, req.blocks);
@@ -762,6 +841,7 @@ impl Communicator {
                     req.elem_bytes,
                     cost,
                     self.backend.rank_plane_transport(),
+                    self.tuning.logp.as_ref(),
                 )?;
                 Ok((rs_stats, ag_stats, buffers, algo))
             }
@@ -845,6 +925,13 @@ pub(crate) fn combine_stats(a: &RunStats, b: &RunStats) -> RunStats {
         bytes: a.bytes + b.bytes,
         max_rank_bytes: a.max_rank_bytes + b.max_rank_bytes,
         time: a.time + b.time,
+        // Phases run back-to-back on the modelled machine, so their
+        // predicted times add; a phase without the clock attached
+        // leaves whatever the other phase measured.
+        logp_time: match (a.logp_time, b.logp_time) {
+            (Some(x), Some(y)) => Some(x + y),
+            (x, y) => x.or(y),
+        },
     }
 }
 

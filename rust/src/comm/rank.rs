@@ -79,7 +79,7 @@ use crate::collectives::reduce::ReduceProc;
 use crate::collectives::reduce_scatter::ReduceScatterProc;
 use crate::schedule::recv::MAX_Q;
 use crate::schedule::{recv_schedule_into, send_schedule_into, Skips};
-use crate::sim::cost::CostModel;
+use crate::sim::cost::{CostModel, LogPParams};
 use crate::sim::network::{Msg, RankProc, RunStats};
 use crate::sim::threads::fold_send_logs;
 
@@ -628,10 +628,15 @@ pub(crate) fn collect_ranks<R>(
 /// Fold per-rank [`RankRun`]s into god-view [`RunStats`] with the
 /// lockstep accounting (shared with the threaded runtime); consumes the
 /// runs so the send logs move instead of being cloned.
-fn fold_runs(runs: Vec<RankRun>, elem_bytes: usize, cost: &dyn CostModel) -> RunStats {
+fn fold_runs(
+    runs: Vec<RankRun>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    logp: Option<&LogPParams>,
+) -> RunStats {
     let total_rounds = runs.iter().map(|r| r.rounds).max().unwrap_or(0);
     let logs: Vec<Vec<(usize, usize, usize)>> = runs.into_iter().map(|r| r.sends).collect();
-    fold_send_logs(&logs, total_rounds, elem_bytes, cost)
+    fold_send_logs(&logs, total_rounds, elem_bytes, cost, logp)
 }
 
 fn make_world<T: Element>(p: usize, kind: TransportKind) -> Result<WorldEndpoints<T>, CommError> {
@@ -672,7 +677,9 @@ macro_rules! over_world {
 
 /// Fan a broadcast out to `p` [`RankComm`]s over `kind` and reassemble
 /// the god-view `(stats, per-rank buffers)` — bit-identical to a
-/// lockstep run on healthy schedules.
+/// lockstep run on healthy schedules. `logp` attaches the cost plane's
+/// [`crate::sim::LogPClock`] to the folded stats (`RunStats::logp_time`).
+#[allow(clippy::too_many_arguments)]
 pub fn spmd_bcast<T: Element>(
     sk: &Arc<Skips>,
     root: usize,
@@ -681,6 +688,7 @@ pub fn spmd_bcast<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
     kind: TransportKind,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<Vec<T>>), CommError> {
     let p = sk.p();
     let m = data.len();
@@ -691,7 +699,7 @@ pub fn spmd_bcast<T: Element>(
         Ok((buf, run))
     });
     let (bufs, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
-    let stats = fold_runs(runs, elem_bytes, cost);
+    let stats = fold_runs(runs, elem_bytes, cost, logp);
     Ok((stats, bufs))
 }
 
@@ -706,6 +714,7 @@ pub fn spmd_reduce<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
     kind: TransportKind,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<T>), CommError> {
     let p = sk.p();
     let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
@@ -715,12 +724,13 @@ pub fn spmd_reduce<T: Element>(
         Ok((buf, run))
     });
     let (bufs, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
-    let stats = fold_runs(runs, elem_bytes, cost);
+    let stats = fold_runs(runs, elem_bytes, cost, logp);
     let buffer = bufs.into_iter().nth(root).unwrap_or_default();
     Ok((stats, buffer))
 }
 
 /// Fan an all-broadcast out; returns `(stats, buffers[rank][root])`.
+#[allow(clippy::too_many_arguments)]
 pub fn spmd_allgatherv<T: Element>(
     sk: &Arc<Skips>,
     inputs: &[Vec<T>],
@@ -728,6 +738,7 @@ pub fn spmd_allgatherv<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
     kind: TransportKind,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<Vec<Vec<T>>>), CommError> {
     let p = sk.p();
     let counts: Vec<usize> = inputs.iter().map(|v| v.len()).collect();
@@ -742,7 +753,7 @@ pub fn spmd_allgatherv<T: Element>(
         Ok((buf, run))
     });
     let (flats, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
-    let stats = fold_runs(runs, elem_bytes, cost);
+    let stats = fold_runs(runs, elem_bytes, cost, logp);
     let buffers = flats.into_iter().map(|flat| split_by_counts(&flat, counts)).collect();
     Ok((stats, buffers))
 }
@@ -759,6 +770,7 @@ pub fn spmd_reduce_scatter<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
     kind: TransportKind,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, Vec<Vec<T>>), CommError> {
     let p = sk.p();
     let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
@@ -768,13 +780,14 @@ pub fn spmd_reduce_scatter<T: Element>(
         Ok((out, run))
     });
     let (chunks, runs): (Vec<_>, Vec<_>) = collect_ranks(results)?.into_iter().unzip();
-    let stats = fold_runs(runs, elem_bytes, cost);
+    let stats = fold_runs(runs, elem_bytes, cost, logp);
     Ok((stats, chunks))
 }
 
 /// Fan an all-reduce out; returns the two phases' stats separately
 /// (the god view combines them with its usual phase-sum rule) plus
 /// every rank's reduced vector.
+#[allow(clippy::too_many_arguments)]
 pub fn spmd_allreduce<T: Element>(
     sk: &Arc<Skips>,
     inputs: &[Vec<T>],
@@ -783,6 +796,7 @@ pub fn spmd_allreduce<T: Element>(
     elem_bytes: usize,
     cost: &dyn CostModel,
     kind: TransportKind,
+    logp: Option<&LogPParams>,
 ) -> Result<(RunStats, RunStats, Vec<Vec<T>>), CommError> {
     let p = sk.p();
     let results = over_world!(make_world::<T>(p, kind)?, |r, tr: &mut _| {
@@ -800,8 +814,8 @@ pub fn spmd_allreduce<T: Element>(
         rs_runs.push(run_rs);
         ag_runs.push(run_ag);
     }
-    let rs_stats = fold_runs(rs_runs, elem_bytes, cost);
-    let ag_stats = fold_runs(ag_runs, elem_bytes, cost);
+    let rs_stats = fold_runs(rs_runs, elem_bytes, cost, logp);
+    let ag_stats = fold_runs(ag_runs, elem_bytes, cost, logp);
     Ok((rs_stats, ag_stats, bufs))
 }
 
@@ -827,7 +841,7 @@ mod tests {
         let sk = Arc::new(Skips::new(p));
         let data: Vec<i64> = (0..m as i64).map(|i| i * 3 - 7).collect();
         let (stats, bufs) =
-            spmd_bcast(&sk, root, &data, n, 8, &UnitCost, kind).expect("spmd bcast");
+            spmd_bcast(&sk, root, &data, n, 8, &UnitCost, kind, None).expect("spmd bcast");
         assert_eq!(bufs.len(), p);
         for (r, b) in bufs.iter().enumerate() {
             assert_eq!(b, &data, "kind={kind:?} p={p} rank={r}");
@@ -873,6 +887,7 @@ mod tests {
                     8,
                     &UnitCost,
                     kind,
+                    None,
                 )
                 .unwrap();
                 assert_eq!(buf, expect, "kind={kind:?} root={root}");
@@ -891,7 +906,7 @@ mod tests {
         let expect: Vec<i64> = (0..m).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
         for kind in [TransportKind::Threads, TransportKind::Loopback, TransportKind::Socket] {
             let (_, _, bufs) =
-                spmd_allreduce(&sk, &inputs, 2, Arc::new(SumOp), 8, &UnitCost, kind)
+                spmd_allreduce(&sk, &inputs, 2, Arc::new(SumOp), 8, &UnitCost, kind, None)
                     .unwrap();
             for (r, b) in bufs.iter().enumerate() {
                 assert_eq!(b, &expect, "kind={kind:?} rank={r}");

@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use crate::collectives::common::ReduceOp;
+use crate::sim::LogPParams;
 
 /// The collective operations a [`super::Communicator`] serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -106,9 +107,21 @@ pub const SMALL_MSG_BYTES: usize = 2048;
 /// pins batched ≡ sequential per backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
-    /// Pick automatically: the circulant pipeline with the paper's
-    /// `tuning::*` block-count rule, except for small rooted payloads
+    /// Pick automatically.
+    ///
+    /// Without LogP parameters ([`TuningParams::logp`] `None`, the
+    /// default when no `CBCAST_LOGP_*` env knob is set) this is the
+    /// legacy §3 rule: the circulant pipeline with the paper's
+    /// `tuning::*` block count, except for small rooted payloads
     /// (≤ [`SMALL_MSG_BYTES`]) where the binomial tree is selected.
+    ///
+    /// With LogP parameters configured, resolution is *cost-driven*:
+    /// the closed-form predictors in [`crate::collectives::tuning`]
+    /// (`predict_circulant`, `predict_binomial`, `predict_vdg`,
+    /// `predict_ring`, `predict_opttree`) estimate each applicable
+    /// family's completion time for this `(kind, p, payload)` and the
+    /// argmin wins — ties prefer the circulant pipeline. An explicit
+    /// block-count override still pins the pipeline either way.
     Auto,
     /// The paper's circulant-schedule pipelined algorithms.
     Circulant,
@@ -122,6 +135,14 @@ pub enum Algo {
     /// Recursive halving with power-of-two folding (reduce-scatter with
     /// equal chunks) — the Observation 1.4 volume comparator.
     RecursiveHalving,
+    /// Karp et al.'s greedy LogP-optimal broadcast tree
+    /// ([`crate::schedule::OptTree`]) — bcast (root → leaves) and
+    /// reduce (the same tree reversed round-by-round). The tree shape
+    /// depends only on `(p, LogP params, payload bytes)`, never on the
+    /// backend, so results are bit-identical across all backends. Built
+    /// for [`TuningParams::logp`] (or [`LogPParams::default`] when
+    /// unset) scaled to the payload size.
+    OptTree,
 }
 
 impl Algo {
@@ -134,6 +155,7 @@ impl Algo {
             "vdg" | "native-large" => Algo::VanDeGeijn,
             "ring" => Algo::Ring,
             "rhalving" | "recursive-halving" => Algo::RecursiveHalving,
+            "opttree" | "karp" => Algo::OptTree,
             _ => return None,
         })
     }
@@ -159,6 +181,79 @@ impl Algo {
             _ => Algo::Circulant,
         }
     }
+
+    /// Cost-driven [`Algo::Auto`] resolution — the communicator-side
+    /// entry point. Explicit variants pass through; a block-count
+    /// override pins the circulant pipeline; without LogP parameters
+    /// ([`TuningParams::logp`] `None`) this is exactly the legacy
+    /// [`Algo::resolve`] rule. With parameters configured, each
+    /// applicable family's closed-form LogP prediction is computed for
+    /// this `(kind, p, m·elem_bytes)` and the argmin wins (strict `<`
+    /// with the circulant pipeline listed first, so ties keep the
+    /// paper's algorithm). Never returns `Auto`.
+    ///
+    /// Candidate families per kind: bcast — circulant, binomial,
+    /// van de Geijn, opttree; reduce — circulant, binomial, opttree;
+    /// allgatherv / reduce-scatter — circulant, ring; allreduce —
+    /// circulant, ring (both with their reduce-scatter + all-gather
+    /// phases doubled). Recursive halving is never auto-picked: it
+    /// rejects unequal chunk layouts, which `Auto` cannot rule out.
+    pub fn resolve_with(
+        self,
+        kind: Kind,
+        p: usize,
+        m: usize,
+        elem_bytes: usize,
+        blocks: Option<usize>,
+        tuning: &TuningParams,
+    ) -> Algo {
+        if self != Algo::Auto {
+            return self;
+        }
+        if blocks.is_some() {
+            return Algo::Circulant;
+        }
+        let params = match tuning.logp {
+            Some(params) => params,
+            None => return self.resolve(kind, m, elem_bytes, blocks),
+        };
+        use crate::collectives::tuning::{
+            predict_binomial, predict_circulant, predict_opttree, predict_ring, predict_vdg,
+        };
+        let total = m * elem_bytes;
+        let n = resolve_blocks(kind, p, m, tuning, None);
+        let circulant = predict_circulant(p, n, total, &params);
+        let candidates: Vec<(Algo, f64)> = match kind {
+            Kind::Bcast => vec![
+                (Algo::Circulant, circulant),
+                (Algo::Binomial, predict_binomial(p, total, &params)),
+                (Algo::VanDeGeijn, predict_vdg(p, total, &params)),
+                (Algo::OptTree, predict_opttree(p, total, &params)),
+            ],
+            Kind::Reduce => vec![
+                (Algo::Circulant, circulant),
+                (Algo::Binomial, predict_binomial(p, total, &params)),
+                (Algo::OptTree, predict_opttree(p, total, &params)),
+            ],
+            Kind::Allgatherv | Kind::ReduceScatter => vec![
+                (Algo::Circulant, circulant),
+                (Algo::Ring, predict_ring(p, total, &params)),
+            ],
+            // Allreduce = reduce-scatter + all-gather on the same
+            // pattern: both families run two phases.
+            Kind::Allreduce => vec![
+                (Algo::Circulant, 2.0 * circulant),
+                (Algo::Ring, 2.0 * predict_ring(p, total, &params)),
+            ],
+        };
+        let mut best = candidates[0];
+        for &cand in &candidates[1..] {
+            if cand.1 < best.1 {
+                best = cand;
+            }
+        }
+        best.0
+    }
 }
 
 /// Tuning constants: the paper's F and G from §3 (block size
@@ -177,6 +272,14 @@ pub struct TuningParams {
     /// privately for its own lifetime — the cap only bounds what stays
     /// resident in the *shared* cache.
     pub table_cache_max_bytes: usize,
+    /// LogP machine parameters for the cost plane. `Some` switches
+    /// [`Algo::Auto`] to cost-driven resolution
+    /// ([`Algo::resolve_with`]), attaches a [`crate::sim::LogPClock`]
+    /// to every run (surfaced as `RunStats::logp_time`), and sets the
+    /// machine [`Algo::OptTree`] builds its tree for. The default pulls
+    /// [`LogPParams::from_env`]: `None` unless at least one
+    /// `CBCAST_LOGP_{L,O,G}` env knob is set.
+    pub logp: Option<LogPParams>,
 }
 
 impl Default for TuningParams {
@@ -187,6 +290,7 @@ impl Default for TuningParams {
             f_const: 70.0,
             g_const: 40.0,
             table_cache_max_bytes: crate::schedule::DEFAULT_TABLE_CAP_BYTES,
+            logp: LogPParams::from_env(),
         }
     }
 }
@@ -407,8 +511,83 @@ mod tests {
         assert_eq!(Algo::parse("new"), Some(Algo::Circulant));
         assert_eq!(Algo::parse("auto"), Some(Algo::Auto));
         assert_eq!(Algo::parse("rhalving"), Some(Algo::RecursiveHalving));
+        assert_eq!(Algo::parse("opttree"), Some(Algo::OptTree));
+        assert_eq!(Algo::parse("karp"), Some(Algo::OptTree));
         assert!(Kind::parse("nope").is_none());
         assert!(Algo::parse("nope").is_none());
+    }
+
+    /// A `TuningParams` pinned to an explicit LogP setting — tests never
+    /// go through `Default` (which reads the env) to stay immune to
+    /// `CBCAST_LOGP_*` leaking between parallel tests.
+    fn tuning_with(logp: Option<LogPParams>) -> TuningParams {
+        TuningParams {
+            f_const: 70.0,
+            g_const: 40.0,
+            table_cache_max_bytes: crate::schedule::DEFAULT_TABLE_CAP_BYTES,
+            logp,
+        }
+    }
+
+    #[test]
+    fn resolve_with_no_logp_is_the_legacy_rule_verbatim() {
+        let tuning = tuning_with(None);
+        let kinds = [
+            Kind::Bcast,
+            Kind::Reduce,
+            Kind::Allgatherv,
+            Kind::ReduceScatter,
+            Kind::Allreduce,
+        ];
+        for kind in kinds {
+            for p in [2usize, 7, 64, 333] {
+                for m in [1usize, 16, 512, 513, 1 << 16] {
+                    for blocks in [None, Some(4)] {
+                        assert_eq!(
+                            Algo::Auto.resolve_with(kind, p, m, 4, blocks, &tuning),
+                            Algo::Auto.resolve(kind, m, 4, blocks),
+                            "kind={kind:?} p={p} m={m} blocks={blocks:?}"
+                        );
+                    }
+                }
+            }
+        }
+        // Explicit variants pass through untouched either way.
+        assert_eq!(
+            Algo::Ring.resolve_with(Kind::Bcast, 8, 16, 4, None, &tuning),
+            Algo::Ring
+        );
+    }
+
+    #[test]
+    fn cost_driven_auto_follows_the_crossover() {
+        let tuning = tuning_with(Some(LogPParams::default()));
+        // Tiny rooted payload: a tree family must win.
+        let pick = Algo::Auto.resolve_with(Kind::Bcast, 64, 16, 4, None, &tuning);
+        assert!(
+            pick == Algo::OptTree || pick == Algo::Binomial,
+            "small bcast picked {pick:?}"
+        );
+        // Huge rooted payload: the pipelined circulant must win.
+        assert_eq!(
+            Algo::Auto.resolve_with(Kind::Bcast, 64, 1 << 22, 4, None, &tuning),
+            Algo::Circulant
+        );
+        // Blocks override pins the pipeline even in cost-driven mode.
+        assert_eq!(
+            Algo::Auto.resolve_with(Kind::Bcast, 64, 16, 4, Some(8), &tuning),
+            Algo::Circulant
+        );
+        // All-collectives only ever pick circulant or ring.
+        for kind in [Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce] {
+            for m in [64usize, 1 << 20] {
+                let pick = Algo::Auto.resolve_with(kind, 8, m, 4, None, &tuning);
+                assert!(
+                    pick == Algo::Circulant || pick == Algo::Ring,
+                    "kind={kind:?} m={m} picked {pick:?}"
+                );
+            }
+        }
     }
 
     #[test]

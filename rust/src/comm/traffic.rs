@@ -61,8 +61,8 @@ use std::sync::Arc;
 
 use crate::collectives::allgatherv::{build_allgatherv_procs, AllgathervProc};
 use crate::collectives::baselines::{
-    BinomialBcastProc, BinomialReduceProc, RingAllgathervProc, RingReduceScatterProc,
-    VdgBcastProc,
+    BinomialBcastProc, BinomialReduceProc, OptTreeBcastProc, OptTreeReduceProc,
+    RingAllgathervProc, RingReduceScatterProc, VdgBcastProc,
 };
 use crate::collectives::bcast::{build_bcast_procs, BcastProc};
 use crate::collectives::common::{BlockGeometry, Element};
@@ -70,7 +70,7 @@ use crate::collectives::reduce::{build_reduce_procs, ReduceProc};
 use crate::collectives::reduce_scatter::{build_reduce_scatter_procs, ReduceScatterProc};
 use crate::collectives::rhalving::RhalvingProc;
 use crate::schedule::configured_threads;
-use crate::sim::cost::{CostModel, OverlapClock};
+use crate::sim::cost::{CostModel, LogPClock, OverlapClock};
 use crate::sim::engine::{CirculantEngine, EngineStep, ScratchPool};
 use crate::sim::network::{RankProc, RunStats, SimError, StepNet};
 
@@ -939,6 +939,12 @@ impl<'c> TrafficEngine<'c> {
         let mut drained: Vec<TraceMsg> = Vec::new();
         let mut trace: Vec<Vec<(usize, usize)>> = Vec::new();
         let mut clock = OverlapClock::new();
+        // The cost plane's clock rides along when LogP parameters are
+        // configured: the whole batch's machine-frame trace — every
+        // co-scheduled op together — is priced as one schedule, so
+        // `agg.logp_time` is the predicted completion of the batch,
+        // overlap included.
+        let mut logp_clock = self.comm.tuning().logp.map(LogPClock::new);
         let mut agg = RunStats::default();
         let mut rank_bytes = vec![0usize; p];
         let mut round = 0usize;
@@ -1019,12 +1025,18 @@ impl<'c> TrafficEngine<'c> {
                     rank_bytes[f] += bytes;
                     rank_bytes[t] += bytes;
                     clock.msg(cost, f, t, bytes);
+                    if let Some(c) = logp_clock.as_mut() {
+                        c.msg(f, t, bytes);
+                    }
                     if self.record_trace {
                         round_trace.push((f, t));
                     }
                 }
             }
             clock.end_round();
+            if let Some(c) = logp_clock.as_mut() {
+                c.end_round();
+            }
             if self.record_trace {
                 trace.push(round_trace);
             }
@@ -1035,6 +1047,7 @@ impl<'c> TrafficEngine<'c> {
         agg.active_rounds = clock.active_rounds();
         agg.time = clock.total();
         agg.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+        agg.logp_time = logp_clock.map(|c| c.total());
 
         let ops: Vec<OpReport> = self
             .ops
@@ -1207,7 +1220,7 @@ fn build_bcast_driver<T: Element>(
         )));
     }
     let m = req.data.len();
-    let algo = req.algo.resolve(Kind::Bcast, m, req.elem_bytes, req.blocks);
+    let algo = req.algo.resolve_with(Kind::Bcast, p, m, req.elem_bytes, req.blocks, sub.tuning());
     let (pending, slot) = Pending::new_pair();
     let driver: Box<dyn OpDriver> = match algo {
         Algo::Circulant if sub.backend() == BackendKind::Engine => {
@@ -1276,6 +1289,24 @@ fn build_bcast_driver<T: Element>(
                 },
             )
         }
+        Algo::OptTree => {
+            let tree = sub.opttree_for(m, req.elem_bytes);
+            let procs = build_procs(p, |r| {
+                let data = if r == req.root { Some(&req.data[..]) } else { None };
+                OptTreeBcastProc::new(tree.clone(), p, r, req.root, data)
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<OptTreeBcastProc<T>>| {
+                    let buffers: Vec<Vec<T>> =
+                        procs.into_iter().map(|pr| pr.into_buffer()).collect();
+                    Ok(bcast_outcome(p, m, algo, stats, buffers))
+                },
+            )
+        }
         algo => return Err(CommError::Unsupported { kind: Kind::Bcast, algo }),
     };
     Ok((driver, pending))
@@ -1318,7 +1349,7 @@ fn build_reduce_driver<T: Element>(
             "reduce requires equal-length contributions".to_string(),
         ));
     }
-    let algo = req.algo.resolve(Kind::Reduce, m, req.elem_bytes, req.blocks);
+    let algo = req.algo.resolve_with(Kind::Reduce, p, m, req.elem_bytes, req.blocks, sub.tuning());
     let (pending, slot) = Pending::new_pair();
     let root = req.root;
     let driver: Box<dyn OpDriver> = match algo {
@@ -1362,6 +1393,22 @@ fn build_reduce_driver<T: Element>(
                 },
             )
         }
+        Algo::OptTree => {
+            let tree = sub.opttree_for(m, req.elem_bytes);
+            let procs = build_procs(p, |r| {
+                OptTreeReduceProc::new(tree.clone(), p, r, root, &req.inputs[r], req.op.clone())
+            });
+            proc_op(
+                procs,
+                req.elem_bytes,
+                slot,
+                base,
+                move |stats, procs: Vec<OptTreeReduceProc<T>>| {
+                    let buffer = procs.into_iter().nth(root).unwrap().into_buffer();
+                    Ok(reduce_outcome(m, algo, stats, buffer))
+                },
+            )
+        }
         algo => return Err(CommError::Unsupported { kind: Kind::Reduce, algo }),
     };
     Ok((driver, pending))
@@ -1392,7 +1439,8 @@ fn build_allgatherv_driver<T: Element>(
     }
     let total: usize = req.inputs.iter().map(|v| v.len()).sum();
     let counts = Arc::new(req.inputs.iter().map(|v| v.len()).collect::<Vec<_>>());
-    let algo = req.algo.resolve(Kind::Allgatherv, total, req.elem_bytes, req.blocks);
+    let algo =
+        req.algo.resolve_with(Kind::Allgatherv, p, total, req.elem_bytes, req.blocks, sub.tuning());
     let (pending, slot) = Pending::new_pair();
     let lens = counts.clone();
     let assemble_check = move |stats: RunStats, buffers: Vec<Vec<Vec<T>>>| {
@@ -1469,7 +1517,14 @@ fn build_reduce_scatter_driver<T: Element>(
         )));
     }
     let counts = Arc::new(req.counts.clone());
-    let algo = req.algo.resolve(Kind::ReduceScatter, total, req.elem_bytes, req.blocks);
+    let algo = req.algo.resolve_with(
+        Kind::ReduceScatter,
+        p,
+        total,
+        req.elem_bytes,
+        req.blocks,
+        sub.tuning(),
+    );
     let (pending, slot) = Pending::new_pair();
     let lens = counts.clone();
     let assemble_check = move |stats: RunStats, chunks: Vec<Vec<T>>| {
@@ -1570,7 +1625,8 @@ fn build_allreduce_driver<T: Element>(
     let rem = m % p;
     let counts: Vec<usize> = (0..p).map(|j| chunk_base + usize::from(j < rem)).collect();
     let counts = Arc::new(counts);
-    let algo = req.algo.resolve(Kind::Allreduce, m, req.elem_bytes, req.blocks);
+    let algo =
+        req.algo.resolve_with(Kind::Allreduce, p, m, req.elem_bytes, req.blocks, sub.tuning());
     let (pending, slot) = Pending::new_pair();
     let assemble = move |rs_stats: RunStats, ag_stats: RunStats, buffers: Vec<Vec<T>>| {
         let stats = combine_stats(&rs_stats, &ag_stats);

@@ -208,7 +208,9 @@ mod tests {
         let combos = [
             (Kind::Bcast, Algo::Binomial),
             (Kind::Bcast, Algo::VanDeGeijn),
+            (Kind::Bcast, Algo::OptTree),
             (Kind::Reduce, Algo::Binomial),
+            (Kind::Reduce, Algo::OptTree),
             (Kind::Allgatherv, Algo::Ring),
             (Kind::ReduceScatter, Algo::Ring),
             (Kind::Allreduce, Algo::Ring),

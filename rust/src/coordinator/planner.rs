@@ -107,7 +107,7 @@ pub fn plan(req: &Request, tp: &TuningParams) -> Plan {
     let q = ceil_log2(req.p.max(1));
     // The same rule a Communicator applies — one definition, two callers.
     let n = crate::comm::resolve_blocks(req.kind, req.p, req.m, tp, req.blocks);
-    let algo = req.algo.resolve(req.kind, req.m, req.elem_bytes, req.blocks);
+    let algo = req.algo.resolve_with(req.kind, req.p, req.m, req.elem_bytes, req.blocks, tp);
     let rounds = if req.p <= 1 {
         0
     } else {
@@ -129,6 +129,16 @@ pub fn plan(req: &Request, tp: &TuningParams) -> Plan {
                     q
                 } else {
                     q + 1
+                }
+            }
+            // The Karp tree's depth depends on the LogP parameters it was
+            // built against; rebuild the (cheap) tree to read its height.
+            Algo::OptTree => {
+                let params = tp.logp.unwrap_or_default().scaled_for(req.m * req.elem_bytes);
+                let rounds = crate::schedule::OptTree::build(req.p, &params).rounds();
+                match req.kind {
+                    Kind::Allreduce => 2 * rounds,
+                    _ => rounds,
                 }
             }
             Algo::Auto => unreachable!("resolve() never returns Auto"),

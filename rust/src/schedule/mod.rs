@@ -15,13 +15,16 @@
 //! the Observation 2/6 constructions used as independent correctness
 //! oracles, [`verify`] the exhaustive four-condition checker (Appendix B),
 //! [`table`] the all-ranks schedule plane (one flat `i8` arena per `p`,
-//! filled in parallel over rank chunks), and [`cache`] the
-//! communicator-style schedule cache (one shared table per `p`).
+//! filled in parallel over rank chunks), [`cache`] the
+//! communicator-style schedule cache (one shared table per `p`), and
+//! [`opttree`] the greedy LogP-optimal broadcast tree of Karp et al. —
+//! the cost plane's baseline schedule family (`Algo::OptTree`).
 
 pub mod baseblock;
 pub mod baseline;
 pub mod cache;
 pub mod doubling;
+pub mod opttree;
 pub mod recv;
 pub mod send;
 pub mod skips;
@@ -30,6 +33,7 @@ pub mod verify;
 
 pub use baseblock::{all_baseblocks, baseblock, canonical_sequence};
 pub use cache::{Schedule, ScheduleCache, DEFAULT_TABLE_CAP_BYTES};
+pub use opttree::OptTree;
 pub use recv::{recv_schedule, recv_schedule_into, RecvSchedule};
 pub use send::{send_schedule, send_schedule_into, SendSchedule};
 pub use skips::{ceil_log2, Skips};

@@ -1,0 +1,324 @@
+//! Karp et al.'s optimal broadcast tree in the LogP model.
+//!
+//! In LogP (latency `L`, per-endpoint overhead `o`, per-port gap `g`), a
+//! single-item broadcast is optimal iff every processor forwards as soon
+//! and as often as it can: the greedy construction repeatedly attaches
+//! the next receiver to whichever already-informed node can complete a
+//! send *earliest* ("Optimal broadcast and summation in the LogP model",
+//! Karp, Sahay, Santos, Schauser 1993). A node that became informed at
+//! time `t` can have its `i`-th child (0-indexed) fully informed at
+//!
+//! ```text
+//! t + max(o, g)·i + L + 2o
+//! ```
+//!
+//! The construction here is the O(p log p) incremental-frontier version:
+//! a min-heap of candidate `(completion, sender)` pairs with lazy
+//! deletion — attaching a child only invalidates that sender's own stale
+//! entries, which are skipped when popped. Ties break on the lower node
+//! index, so the tree is fully deterministic for a given `(p, params)`
+//! and therefore bit-identical across every execution backend.
+//!
+//! Besides the time labels, the tree carries a *round mapping* for the
+//! repo's one-ported round-synchronous machine: node `w`, attached as
+//! the `i`-th child of `v`, receives in round `send_start(v) + i` and
+//! starts sending in the next round (`send_start(root) = 0`). Each node
+//! sends at most once and receives exactly once per round by
+//! construction, so the mapped schedule passes the lockstep simulator's
+//! machine-model enforcement unchanged; replaying the mapped trace
+//! through a [`crate::sim::LogPClock`] reproduces the greedy labels
+//! exactly (the cross-validation pinned in `tests/costmodel.rs`).
+//!
+//! [`crate::comm::Algo::OptTree`] runs this tree as a broadcast (root →
+//! leaves) and, reversed round-by-round, as a reduction (leaves → root,
+//! ⊕-combining at each parent) — see
+//! `collectives::baselines::{OptTreeBcastProc, OptTreeReduceProc}`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::sim::cost::LogPParams;
+
+/// Min-heap candidate: the earliest completion of `node`'s next send.
+/// Ordered *reversed* on (time, node) so `BinaryHeap` pops the minimum;
+/// the node index tie-break keeps the construction deterministic.
+#[derive(PartialEq)]
+struct Cand {
+    time: f64,
+    node: usize,
+}
+
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The greedy LogP-optimal broadcast tree over `p` *relative* nodes
+/// (node 0 = root; callers map node ↔ rank, typically
+/// `rank = (root + node) % p`).
+#[derive(Debug, Clone)]
+pub struct OptTree {
+    p: usize,
+    params: LogPParams,
+    /// Parent node of each node (`parent[0] == 0`).
+    parent: Vec<usize>,
+    /// Children of each node, in attach (= send) order.
+    children: Vec<Vec<usize>>,
+    /// First round each node sends in (`send_start[0] == 0`; otherwise
+    /// `recv_round + 1`).
+    send_start: Vec<usize>,
+    /// Round each non-root node receives in (`recv_round[0] == 0`,
+    /// unused — the root never receives).
+    recv_round: Vec<usize>,
+    /// Greedy time label: when each node is fully informed.
+    labels: Vec<f64>,
+    rounds: usize,
+    completion: f64,
+}
+
+impl OptTree {
+    /// Build the optimal tree for `p` nodes under `params` in
+    /// O(p log p). For multi-packet payloads pass
+    /// [`LogPParams::scaled_for`] the message size — the greedy run on
+    /// the scaled single-packet machine is the optimal tree for that
+    /// payload.
+    pub fn build(p: usize, params: &LogPParams) -> OptTree {
+        assert!(p > 0);
+        let mut tree = OptTree {
+            p,
+            params: *params,
+            parent: vec![0; p],
+            children: vec![Vec::new(); p],
+            send_start: vec![0; p],
+            recv_round: vec![0; p],
+            labels: vec![0.0; p],
+            rounds: 0,
+            completion: 0.0,
+        };
+        if p == 1 {
+            return tree;
+        }
+        let spacing = params.g.max(params.o);
+        let hop = params.l + 2.0 * params.o;
+        // next_send(v) = label(v) + spacing·|children(v)| + hop.
+        let mut heap = BinaryHeap::with_capacity(2 * p);
+        heap.push(Cand { time: hop, node: 0 });
+        let mut created = 1usize;
+        while created < p {
+            let Cand { time, node: v } = heap.pop().expect("frontier never runs dry");
+            let cur = tree.labels[v] + spacing * tree.children[v].len() as f64 + hop;
+            if time < cur {
+                continue; // stale: v gained a child since this was pushed
+            }
+            let w = created;
+            created += 1;
+            tree.parent[w] = v;
+            tree.labels[w] = time;
+            tree.recv_round[w] = tree.send_start[v] + tree.children[v].len();
+            tree.send_start[w] = tree.recv_round[w] + 1;
+            tree.children[v].push(w);
+            tree.rounds = tree.rounds.max(tree.recv_round[w] + 1);
+            tree.completion = tree.completion.max(time);
+            heap.push(Cand { time: time + hop, node: w });
+            heap.push(Cand {
+                time: tree.labels[v] + spacing * tree.children[v].len() as f64 + hop,
+                node: v,
+            });
+        }
+        tree
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// The machine parameters the tree was built for.
+    #[inline]
+    pub fn params(&self) -> &LogPParams {
+        &self.params
+    }
+
+    /// Rounds of the one-ported round mapping (0 for `p == 1`).
+    #[inline]
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Predicted LogP completion time of the broadcast, seconds: the
+    /// max greedy label (when the last node is fully informed).
+    #[inline]
+    pub fn completion(&self) -> f64 {
+        self.completion
+    }
+
+    /// Parent node of `node` (the root is its own parent).
+    #[inline]
+    pub fn parent(&self, node: usize) -> usize {
+        self.parent[node]
+    }
+
+    /// Round the non-root `node` receives in (broadcast direction).
+    #[inline]
+    pub fn recv_round(&self, node: usize) -> usize {
+        self.recv_round[node]
+    }
+
+    /// Greedy time label of `node` (when it is fully informed).
+    #[inline]
+    pub fn label(&self, node: usize) -> f64 {
+        self.labels[node]
+    }
+
+    /// Broadcast: the child `node` sends to in `round`, if any.
+    #[inline]
+    pub fn bcast_send(&self, node: usize, round: usize) -> Option<usize> {
+        let i = round.checked_sub(self.send_start[node])?;
+        self.children[node].get(i).copied()
+    }
+
+    /// Broadcast: the parent `node` receives from in `round`, if any.
+    #[inline]
+    pub fn bcast_recv(&self, node: usize, round: usize) -> Option<usize> {
+        (node != 0 && self.recv_round[node] == round).then_some(self.parent[node])
+    }
+
+    /// Reduction (the broadcast reversed round-by-round): the parent
+    /// `node` sends its partial to in `round`, if any.
+    #[inline]
+    pub fn reduce_send(&self, node: usize, round: usize) -> Option<usize> {
+        (node != 0 && self.rounds - 1 - self.recv_round[node] == round)
+            .then_some(self.parent[node])
+    }
+
+    /// Reduction: the child `node` ⊕-combines from in `round`, if any.
+    #[inline]
+    pub fn reduce_recv(&self, node: usize, round: usize) -> Option<usize> {
+        let i = (self.rounds - 1 - round).checked_sub(self.send_start[node])?;
+        self.children[node].get(i).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_tree_is_empty() {
+        let t = OptTree::build(1, &LogPParams::default());
+        assert_eq!(t.rounds(), 0);
+        assert_eq!(t.completion(), 0.0);
+    }
+
+    #[test]
+    fn two_nodes_cost_one_hop() {
+        let t = OptTree::build(2, &LogPParams::new(1.0, 0.25, 0.125));
+        assert_eq!(t.rounds(), 1);
+        assert_eq!(t.parent(1), 0);
+        assert_eq!(t.recv_round(1), 0);
+        assert!((t.completion() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_dominated_machine_grows_a_star() {
+        // L + 2o = 1.5 ≫ spacing 0.25: the root informs all three
+        // children itself before the first child could forward anything.
+        let t = OptTree::build(4, &LogPParams::new(1.0, 0.25, 0.125));
+        assert_eq!(t.parent(1), 0);
+        assert_eq!(t.parent(2), 0);
+        assert_eq!(t.parent(3), 0);
+        assert_eq!(t.rounds(), 3);
+        // Third child: 2 spacings + one hop.
+        assert!((t.completion() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_dominated_machine_grows_deep() {
+        // spacing = g = 2.0 > hop 1.5: re-sending from the root is
+        // slower than forwarding, so the tree must chain.
+        let t = OptTree::build(4, &LogPParams::new(1.0, 0.25, 2.0));
+        assert_eq!(t.parent(1), 0);
+        assert_eq!(t.parent(2), 1, "second node forwards before root resends");
+        assert_eq!(t.parent(3), 0);
+        assert!((t.completion() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_and_mapped_rounds_are_one_ported() {
+        for p in [2usize, 3, 7, 16, 33, 100] {
+            let params = LogPParams::default();
+            let a = OptTree::build(p, &params);
+            let b = OptTree::build(p, &params);
+            assert_eq!(a.parent, b.parent, "p={p}");
+            assert_eq!(a.recv_round, b.recv_round, "p={p}");
+            // Round mapping: every non-root receives exactly once; per
+            // round each node sends ≤ 1 and receives ≤ 1, and a node
+            // only sends after its receive round.
+            for w in 1..p {
+                assert!(a.recv_round(w) < a.rounds(), "p={p} node {w}");
+                assert!(a.send_start[w] > a.recv_round[w]);
+            }
+            for round in 0..a.rounds() {
+                let mut sending = vec![false; p];
+                let mut receiving = vec![false; p];
+                for v in 0..p {
+                    if let Some(w) = a.bcast_send(v, round) {
+                        assert!(!sending[v], "p={p} round {round}: double send");
+                        sending[v] = true;
+                        assert!(!receiving[w], "p={p} round {round}: port busy");
+                        receiving[w] = true;
+                        assert_eq!(a.bcast_recv(w, round), Some(v));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_respect_the_greedy_recurrence() {
+        let params = LogPParams::new(1.0, 0.25, 0.125);
+        let spacing = params.g.max(params.o);
+        let hop = params.l + 2.0 * params.o;
+        let t = OptTree::build(37, &params);
+        for w in 1..37 {
+            let v = t.parent(w);
+            // w's label is its parent's label plus the child-index
+            // spacing plus one hop.
+            let i = t.recv_round(w) - t.send_start[v];
+            let want = t.label(v) + spacing * i as f64 + hop;
+            assert!((t.label(w) - want).abs() < 1e-12, "node {w}");
+            // Completion is the max label.
+            assert!(t.label(w) <= t.completion() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn reduce_mapping_reverses_the_broadcast() {
+        let t = OptTree::build(19, &LogPParams::default());
+        let r = t.rounds();
+        for w in 1..19 {
+            let round = r - 1 - t.recv_round(w);
+            assert_eq!(t.reduce_send(w, round), Some(t.parent(w)));
+            assert_eq!(t.reduce_recv(t.parent(w), round), Some(w));
+            // A node's children all arrive strictly before it sends up.
+            for &c in &t.children[w] {
+                assert!(
+                    r - 1 - t.recv_round(c) < round,
+                    "child {c} must arrive before {w} sends"
+                );
+            }
+        }
+    }
+}

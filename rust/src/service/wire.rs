@@ -81,6 +81,7 @@ pub(crate) fn algo_code(a: Algo) -> u8 {
         Algo::VanDeGeijn => 3,
         Algo::Ring => 4,
         Algo::RecursiveHalving => 5,
+        Algo::OptTree => 6,
     }
 }
 
@@ -92,6 +93,7 @@ pub(crate) fn algo_from(code: u8) -> io::Result<Algo> {
         3 => Algo::VanDeGeijn,
         4 => Algo::Ring,
         5 => Algo::RecursiveHalving,
+        6 => Algo::OptTree,
         c => return Err(bad(format!("service: unknown algorithm code {c}"))),
     })
 }
@@ -480,6 +482,7 @@ mod tests {
             Algo::VanDeGeijn,
             Algo::Ring,
             Algo::RecursiveHalving,
+            Algo::OptTree,
         ] {
             assert_eq!(algo_from(algo_code(a)).unwrap(), a);
         }

@@ -194,6 +194,242 @@ impl OverlapClock {
     }
 }
 
+// ----------------------------------------------------------------------
+// LogP: the cost plane's machine description and per-port clock
+// ----------------------------------------------------------------------
+
+/// Messages are charged per `LOGP_PACKET_BYTES`-byte packet: the first
+/// packet pays the full `L + 2o`, every further packet one more `g` on
+/// the wire and on each port (a LogGP-style long-message extension that
+/// degenerates to plain LogP for single-packet messages).
+pub const LOGP_PACKET_BYTES: usize = 1024;
+
+/// LogP machine description (Karp et al.): `L` wire latency, `o`
+/// per-endpoint send/receive overhead, `g` minimum gap between
+/// consecutive packets on one port — all in seconds.
+///
+/// Configure via the env knobs `CBCAST_LOGP_L` / `CBCAST_LOGP_O` /
+/// `CBCAST_LOGP_G` (positive decimal seconds; invalid or non-positive
+/// values warn once and fall back to that knob's default), or
+/// programmatically through `TuningParams::logp`. When *none* of the
+/// knobs is set, [`LogPParams::from_env`] returns `None` and the cost
+/// plane stays off — `Algo::Auto` keeps the paper's §3 rules and
+/// `RunStats::logp_time` stays `None`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogPParams {
+    /// Wire latency, seconds.
+    pub l: f64,
+    /// Per-endpoint overhead (charged at sender and receiver), seconds.
+    pub o: f64,
+    /// Gap between consecutive packets on one port, seconds.
+    pub g: f64,
+}
+
+impl Default for LogPParams {
+    /// Commodity-HPC-like defaults: 2 µs latency, 0.5 µs overhead and a
+    /// per-1 KiB-packet gap matching ~10 GB/s port bandwidth — the same
+    /// regime as [`LinearCost::hpc_default`].
+    fn default() -> Self {
+        LogPParams { l: 2e-6, o: 5e-7, g: 1e-7 }
+    }
+}
+
+/// Parse one LogP knob: a positive, finite decimal number of seconds.
+/// Pure so the rejection rules are unit-testable without env races.
+fn parse_logp_secs(raw: &str) -> Result<f64, String> {
+    match raw.trim().parse::<f64>() {
+        Ok(v) if v.is_finite() && v > 0.0 => Ok(v),
+        Ok(_) => Err("must be a positive number of seconds".to_string()),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+/// Read one `CBCAST_LOGP_*` knob: `None` if unset, `Some(default)` with
+/// a once-per-knob warning if set but invalid (the `CBCAST_THREADS`
+/// convention — a typo must not silently reshape the machine model).
+fn logp_knob(name: &str, default: f64, warned: &'static std::sync::Once) -> Option<f64> {
+    match std::env::var(name) {
+        Ok(raw) => match parse_logp_secs(&raw) {
+            Ok(v) => Some(v),
+            Err(why) => {
+                warned.call_once(|| {
+                    eprintln!("cbcast: ignoring {name}={raw:?} ({why}); using {default:e} s");
+                });
+                Some(default)
+            }
+        },
+        Err(_) => None,
+    }
+}
+
+impl LogPParams {
+    pub fn new(l: f64, o: f64, g: f64) -> Self {
+        LogPParams { l, o, g }
+    }
+
+    /// The configured machine description, or `None` when no
+    /// `CBCAST_LOGP_{L,O,G}` knob is set (cost plane off). Knobs that
+    /// *are* set but invalid warn once and take that knob's default;
+    /// unset knobs silently take the default once any other knob opts
+    /// the cost plane in.
+    pub fn from_env() -> Option<LogPParams> {
+        static WARN_L: std::sync::Once = std::sync::Once::new();
+        static WARN_O: std::sync::Once = std::sync::Once::new();
+        static WARN_G: std::sync::Once = std::sync::Once::new();
+        let d = LogPParams::default();
+        let l = logp_knob("CBCAST_LOGP_L", d.l, &WARN_L);
+        let o = logp_knob("CBCAST_LOGP_O", d.o, &WARN_O);
+        let g = logp_knob("CBCAST_LOGP_G", d.g, &WARN_G);
+        if l.is_none() && o.is_none() && g.is_none() {
+            return None;
+        }
+        Some(LogPParams {
+            l: l.unwrap_or(d.l),
+            o: o.unwrap_or(d.o),
+            g: g.unwrap_or(d.g),
+        })
+    }
+
+    /// Packets a `bytes`-byte message occupies (at least one).
+    #[inline]
+    pub fn packets(bytes: usize) -> usize {
+        // ceil; div_ceil needs 1.73, MSRV is 1.70
+        ((bytes + LOGP_PACKET_BYTES - 1) / LOGP_PACKET_BYTES).max(1)
+    }
+
+    /// Endpoint-to-endpoint time of one isolated `bytes`-byte message:
+    /// `L + 2o + (packets − 1)·g`. This is also the closed-form unit the
+    /// `Algo::Auto` predictors are built from.
+    #[inline]
+    pub fn msg_time(&self, bytes: usize) -> f64 {
+        self.l + 2.0 * self.o + (Self::packets(bytes) - 1) as f64 * self.g
+    }
+
+    /// The parameters of an *effective* single-packet machine whose
+    /// messages are all `bytes` long: in-flight time absorbs the extra
+    /// packets' `g`, and the port gap scales to the whole message. Karp's
+    /// single-packet optimal-tree greedy run on the scaled machine yields
+    /// the optimal tree for `bytes`-sized payloads.
+    pub fn scaled_for(&self, bytes: usize) -> LogPParams {
+        let packets = Self::packets(bytes) as f64;
+        LogPParams {
+            l: self.l + (packets - 1.0) * self.g,
+            o: self.o,
+            g: packets * self.g,
+        }
+    }
+}
+
+/// Per-port LogP completion clock over a round-synchronous message trace
+/// — the cost plane's counterpart of [`OverlapClock`].
+///
+/// Where [`OverlapClock`] charges each machine round the max of its
+/// per-message [`CostModel`] costs, `LogPClock` keeps *per-rank
+/// send/receive timelines*: each message charges `o` on the sender port,
+/// `o` on the receiver port, `g` between consecutive packets on either
+/// port and `L` in flight, so pipelined schedules genuinely overlap
+/// latency instead of paying it once per round.
+///
+/// Feed it the same way as [`OverlapClock`]: per message call
+/// [`LogPClock::msg`], per machine round [`LogPClock::end_round`], then
+/// read [`LogPClock::total`]. Rounds are processed with *snapshot*
+/// semantics: a round's sends depend only on data that arrived in
+/// earlier rounds (the lockstep contract), so within a round the
+/// feeding order of messages does not change the result — each rank
+/// sends at most once and receives at most once per round.
+#[derive(Debug, Clone)]
+pub struct LogPClock {
+    params: LogPParams,
+    /// Earliest time each rank's send port is free again.
+    send_free: Vec<f64>,
+    /// Earliest time each rank's receive port is free again.
+    recv_free: Vec<f64>,
+    /// Time each rank's data (received in rounds `< current`) is ready.
+    ready: Vec<f64>,
+    /// Messages of the current round: `(from, to, bytes)`.
+    round: Vec<(usize, usize, usize)>,
+    completion: f64,
+    active_rounds: usize,
+}
+
+impl LogPClock {
+    pub fn new(params: LogPParams) -> Self {
+        LogPClock {
+            params,
+            send_free: Vec::new(),
+            recv_free: Vec::new(),
+            ready: Vec::new(),
+            round: Vec::new(),
+            completion: 0.0,
+            active_rounds: 0,
+        }
+    }
+
+    pub fn params(&self) -> &LogPParams {
+        &self.params
+    }
+
+    fn grow(&mut self, rank: usize) {
+        if rank >= self.ready.len() {
+            self.send_free.resize(rank + 1, 0.0);
+            self.recv_free.resize(rank + 1, 0.0);
+            self.ready.resize(rank + 1, 0.0);
+        }
+    }
+
+    /// Buffer one message of the current machine round (applied at
+    /// [`LogPClock::end_round`] under snapshot semantics).
+    #[inline]
+    pub fn msg(&mut self, from: usize, to: usize, bytes: usize) {
+        self.round.push((from, to, bytes));
+    }
+
+    /// Close the current machine round: charge every buffered message
+    /// against the port timelines. Sends gate on the sender's data as of
+    /// the *previous* round's end, so intra-round feeding order is
+    /// irrelevant (each rank sends ≤ 1 and receives ≤ 1 per round).
+    pub fn end_round(&mut self) {
+        if self.round.is_empty() {
+            return;
+        }
+        self.active_rounds += 1;
+        let LogPParams { l, o, g } = self.params;
+        let msgs = std::mem::take(&mut self.round);
+        // Snapshot: sender readiness as of the end of the last round.
+        // (One send per rank per round ⇒ send_free/recv_free are each
+        // touched at most once below; ready[] updates are deferred.)
+        let mut done_updates: Vec<(usize, f64)> = Vec::with_capacity(msgs.len());
+        for (from, to, bytes) in msgs {
+            self.grow(from.max(to));
+            let packets = LogPParams::packets(bytes) as f64;
+            let port = (packets * g).max(o);
+            let start = self.ready[from].max(self.send_free[from]);
+            self.send_free[from] = start + port;
+            let arrive = start + o + (packets - 1.0) * g + l;
+            let begin = arrive.max(self.recv_free[to]);
+            self.recv_free[to] = begin + port;
+            let done = begin + o;
+            done_updates.push((to, done));
+            self.completion = self.completion.max(done);
+        }
+        for (to, done) in done_updates {
+            self.ready[to] = self.ready[to].max(done);
+        }
+    }
+
+    /// Predicted completion time of everything fed so far, seconds.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.completion
+    }
+
+    /// Machine rounds in which at least one message flew.
+    #[inline]
+    pub fn active_rounds(&self) -> usize {
+        self.active_rounds
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,5 +482,141 @@ mod tests {
             clock.end_round();
         }
         assert_eq!(clock.total(), 7.0);
+    }
+
+    // ------------------------------------------------------------------
+    // LogP
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn logp_knob_parse_accepts_positive_seconds() {
+        assert_eq!(parse_logp_secs("2e-6"), Ok(2e-6));
+        assert_eq!(parse_logp_secs(" 0.5 "), Ok(0.5));
+        assert_eq!(parse_logp_secs("1"), Ok(1.0));
+    }
+
+    #[test]
+    fn logp_knob_parse_rejects_zero_negative_and_garbage() {
+        // The floor: zero or negative seconds would break the clock's
+        // monotone timelines, so they are rejected (warn-once + default
+        // at the env layer), as are NaN/inf and non-numbers.
+        assert!(parse_logp_secs("0").is_err());
+        assert!(parse_logp_secs("-1e-6").is_err());
+        assert!(parse_logp_secs("NaN").is_err());
+        assert!(parse_logp_secs("inf").is_err());
+        assert!(parse_logp_secs("2 us").is_err());
+        assert!(parse_logp_secs("").is_err());
+    }
+
+    #[test]
+    fn logp_packets_and_msg_time() {
+        let p = LogPParams::new(1.0, 0.25, 0.125);
+        assert_eq!(LogPParams::packets(0), 1);
+        assert_eq!(LogPParams::packets(1), 1);
+        assert_eq!(LogPParams::packets(LOGP_PACKET_BYTES), 1);
+        assert_eq!(LogPParams::packets(LOGP_PACKET_BYTES + 1), 2);
+        // Single packet: L + 2o exactly (Karp's point-to-point time).
+        assert!((p.msg_time(64) - 1.5).abs() < 1e-12);
+        // Three packets: two extra gaps on the wire.
+        assert!((p.msg_time(3 * LOGP_PACKET_BYTES) - (1.5 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logp_clock_single_hop_is_l_plus_2o() {
+        let mut clock = LogPClock::new(LogPParams::new(1.0, 0.25, 0.125));
+        clock.msg(0, 1, 8);
+        clock.end_round();
+        assert!((clock.total() - 1.5).abs() < 1e-12);
+        assert_eq!(clock.active_rounds(), 1);
+    }
+
+    #[test]
+    fn logp_clock_chains_dependent_hops() {
+        // 0 → 1 in round 0, 1 → 2 in round 1: the second send gates on
+        // the first arrival, so the chain costs 2·(L + 2o).
+        let mut clock = LogPClock::new(LogPParams::new(1.0, 0.25, 0.125));
+        clock.msg(0, 1, 8);
+        clock.end_round();
+        clock.msg(1, 2, 8);
+        clock.end_round();
+        assert!((clock.total() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logp_clock_charges_send_port_gap() {
+        // Root sends to 1 then to 2 in consecutive rounds: the second
+        // send waits on the send port (max(o, g)), not on new data, so
+        // completion is max(o, g) + L + 2o — Karp's two-child root.
+        let params = LogPParams::new(1.0, 0.25, 0.125);
+        let mut clock = LogPClock::new(params);
+        clock.msg(0, 1, 8);
+        clock.end_round();
+        clock.msg(0, 2, 8);
+        clock.end_round();
+        assert!((clock.total() - (0.25 + 1.5)).abs() < 1e-12);
+
+        // With g > o the gap dominates the spacing.
+        let mut clock = LogPClock::new(LogPParams::new(1.0, 0.25, 0.5));
+        clock.msg(0, 1, 8);
+        clock.end_round();
+        clock.msg(0, 2, 8);
+        clock.end_round();
+        assert!((clock.total() - (0.5 + 1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logp_clock_intra_round_order_is_irrelevant() {
+        // Two independent chains fed in different orders within each
+        // round must clock identically (snapshot semantics).
+        let params = LogPParams::new(1.0, 0.25, 0.125);
+        let mut a = LogPClock::new(params);
+        let mut b = LogPClock::new(params);
+        a.msg(0, 1, 2048);
+        a.msg(2, 3, 8);
+        b.msg(2, 3, 8);
+        b.msg(0, 1, 2048);
+        a.end_round();
+        b.end_round();
+        a.msg(1, 2, 8);
+        a.msg(3, 0, 8);
+        b.msg(3, 0, 8);
+        b.msg(1, 2, 8);
+        a.end_round();
+        b.end_round();
+        assert_eq!(a.total(), b.total());
+        assert_eq!(a.active_rounds(), b.active_rounds());
+    }
+
+    #[test]
+    fn logp_clock_monotone_in_each_parameter() {
+        // A fixed pipelined trace gets strictly slower as any one of
+        // L, o, g grows.
+        let trace: Vec<(usize, usize, usize)> = (0..6)
+            .flat_map(|r| vec![(r % 4, (r + 1) % 4, 4096), ((r + 2) % 4, (r + 3) % 4, 64)])
+            .collect();
+        let run = |params: LogPParams| {
+            let mut clock = LogPClock::new(params);
+            for chunk in trace.chunks(2) {
+                for &(f, t, b) in chunk {
+                    clock.msg(f, t, b);
+                }
+                clock.end_round();
+            }
+            clock.total()
+        };
+        let base = run(LogPParams::new(1.0, 0.25, 0.125));
+        assert!(run(LogPParams::new(2.0, 0.25, 0.125)) > base);
+        assert!(run(LogPParams::new(1.0, 0.5, 0.125)) > base);
+        assert!(run(LogPParams::new(1.0, 0.25, 0.25)) > base);
+    }
+
+    #[test]
+    fn logp_scaled_machine_matches_packet_charges() {
+        let p = LogPParams::new(1.0, 0.25, 0.125);
+        let s = p.scaled_for(3 * LOGP_PACKET_BYTES);
+        // Same endpoint-to-endpoint time for the full message…
+        assert!((s.msg_time(8) - p.msg_time(3 * LOGP_PACKET_BYTES)).abs() < 1e-12);
+        // …and the port gap covers all three packets.
+        assert!((s.g - 0.375).abs() < 1e-12);
     }
 }

@@ -81,7 +81,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::collectives::common::{phase_params, BlockGeometry, Element, ReduceOp, ScheduleSource};
 use crate::schedule::table::configured_threads;
 use crate::schedule::{ScheduleTable, Skips};
-use crate::sim::cost::CostModel;
+use crate::sim::cost::{CostModel, LogPClock, LogPParams};
 use crate::sim::network::{RunStats, SimError};
 
 /// Minimum per-round delivery-queue length before applying it is sharded
@@ -325,16 +325,48 @@ impl CirculantEngine {
         elem_bytes: usize,
         cost: &dyn CostModel,
     ) -> Result<RunStats, SimError> {
+        self.run_bcast_clocked(scratch, elem_bytes, cost, None)
+    }
+
+    /// [`Self::run_bcast_with`] with the cost plane attached: when `logp`
+    /// is given, the executed trace is additionally clocked by a
+    /// [`crate::sim::LogPClock`] (`RunStats::logp_time`).
+    pub fn run_bcast_clocked<S: Element>(
+        &self,
+        scratch: &mut EngineScratch<S>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
+    ) -> Result<RunStats, SimError> {
         let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
         if self.p == 1 {
+            stats.logp_time = logp.map(|_| 0.0);
             return Ok(stats);
         }
         let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        let mut clock = logp.map(|p| LogPClock::new(*p));
+        let mut trace: Vec<(usize, usize, usize)> = Vec::new();
         self.bcast_init(scratch);
         for j in 0..self.rounds {
-            self.bcast_round(scratch, j, threads, elem_bytes, cost, &mut stats, None)?;
+            self.bcast_round(
+                scratch,
+                j,
+                threads,
+                elem_bytes,
+                cost,
+                &mut stats,
+                if clock.is_some() { Some(&mut trace) } else { None },
+            )?;
+            if let Some(c) = clock.as_mut() {
+                for &(from, to, bytes) in trace.iter() {
+                    c.msg(from, to, bytes);
+                }
+                c.end_round();
+                trace.clear();
+            }
         }
         self.bcast_finish(scratch, &mut stats)?;
+        stats.logp_time = clock.map(|c| c.total());
         Ok(stats)
     }
 
@@ -666,20 +698,55 @@ impl CirculantEngine {
         elem_bytes: usize,
         cost: &dyn CostModel,
     ) -> Result<(RunStats, Vec<T>), SimError> {
+        self.run_reduce_clocked(scratch, inputs, op, elem_bytes, cost, None)
+    }
+
+    /// [`Self::run_reduce_with`] with the cost plane attached: when
+    /// `logp` is given, the executed trace is additionally clocked by a
+    /// [`crate::sim::LogPClock`] (`RunStats::logp_time`).
+    pub fn run_reduce_clocked<T: Element>(
+        &self,
+        scratch: &mut EngineScratch<T>,
+        inputs: &[Vec<T>],
+        op: &dyn ReduceOp<T>,
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
+    ) -> Result<(RunStats, Vec<T>), SimError> {
         let p = self.p;
         let m = self.geom.m;
         assert_eq!(inputs.len(), p, "reduce needs one contribution per rank");
         let mut stats = RunStats { rounds: self.rounds, ..Default::default() };
         if p == 1 {
             assert_eq!(inputs[self.root].len(), m);
+            stats.logp_time = logp.map(|_| 0.0);
             return Ok((stats, inputs[self.root].clone()));
         }
         let threads = scratch.delivery_threads.unwrap_or_else(configured_threads);
+        let mut clock = logp.map(|p| LogPClock::new(*p));
+        let mut trace: Vec<(usize, usize, usize)> = Vec::new();
         self.reduce_init(scratch, inputs);
         for jr in 0..self.rounds {
-            self.reduce_round(scratch, jr, threads, op, elem_bytes, cost, &mut stats, None)?;
+            self.reduce_round(
+                scratch,
+                jr,
+                threads,
+                op,
+                elem_bytes,
+                cost,
+                &mut stats,
+                if clock.is_some() { Some(&mut trace) } else { None },
+            )?;
+            if let Some(c) = clock.as_mut() {
+                for &(from, to, bytes) in trace.iter() {
+                    c.msg(from, to, bytes);
+                }
+                c.end_round();
+                trace.clear();
+            }
         }
         self.reduce_finish(scratch, &mut stats)?;
+        stats.logp_time = clock.map(|c| c.total());
         Ok((stats, self.reduce_result(scratch)))
     }
 

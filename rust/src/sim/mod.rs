@@ -11,7 +11,10 @@ pub mod engine;
 pub mod network;
 pub mod threads;
 
-pub use cost::{CostModel, HierarchicalCost, LinearCost, OverlapClock, UnitCost};
+pub use cost::{
+    CostModel, HierarchicalCost, LinearCost, LogPClock, LogPParams, OverlapClock, UnitCost,
+    LOGP_PACKET_BYTES,
+};
 pub use engine::{CirculantEngine, EngineScratch, EngineStep, ScratchPool};
 pub use network::{Msg, Network, RankProc, RunStats, SimError, StepNet};
-pub use threads::{run_threaded, run_threaded_stats, Comm};
+pub use threads::{run_threaded, run_threaded_stats, run_threaded_stats_logp, Comm};

@@ -17,7 +17,7 @@
 //! and abort the run — this is the simulator's most valuable service as a
 //! correctness instrument.
 
-use super::cost::CostModel;
+use super::cost::{CostModel, LogPClock, LogPParams};
 
 /// An outgoing message declared by a rank for the current round.
 #[derive(Debug, Clone)]
@@ -65,6 +65,10 @@ pub struct RunStats {
     /// Simulated completion time under the run's cost model, seconds:
     /// `sum over rounds of max over the round's messages of msg_time`.
     pub time: f64,
+    /// Predicted completion time under the LogP cost plane
+    /// ([`super::cost::LogPClock`] over the executed trace), seconds —
+    /// `Some` only when LogP parameters were configured for the run.
+    pub logp_time: Option<f64>,
 }
 
 /// Simulation errors — all indicate a broken schedule/collective.
@@ -135,20 +139,43 @@ impl Network {
         elem_bytes: usize,
         cost: &dyn CostModel,
     ) -> Result<RunStats, SimError> {
+        self.run_logp(procs, elem_bytes, cost, None)
+    }
+
+    /// [`Network::run`] with the cost plane attached: when `logp` is
+    /// given, the executed trace is additionally clocked by a
+    /// [`LogPClock`] and the prediction lands in `RunStats::logp_time`.
+    pub fn run_logp<T: Clone, P: RankProc<T>>(
+        &mut self,
+        procs: &mut [P],
+        elem_bytes: usize,
+        cost: &dyn CostModel,
+        logp: Option<&LogPParams>,
+    ) -> Result<RunStats, SimError> {
         assert_eq!(procs.len(), self.p);
         let total_rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
         let mut stats = RunStats { rounds: total_rounds, ..Default::default() };
         let mut rank_bytes = vec![0usize; self.p];
+        let mut clock = logp.map(|p| LogPClock::new(*p));
 
         // Reusable per-round delivery slots: receiver -> (sender, data).
         let mut inbox: Vec<Option<(usize, Vec<T>)>> = (0..self.p).map(|_| None).collect();
 
         for round in 0..total_rounds {
             lockstep_round(
-                procs, round, &mut inbox, &mut stats, &mut rank_bytes, elem_bytes, cost, None,
+                procs,
+                round,
+                &mut inbox,
+                &mut stats,
+                &mut rank_bytes,
+                elem_bytes,
+                cost,
+                None,
+                clock.as_mut(),
             )?;
         }
         stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+        stats.logp_time = clock.map(|c| c.total());
         Ok(stats)
     }
 }
@@ -158,7 +185,9 @@ impl Network {
 /// stepped execution enforce the identical model by construction: send
 /// collection (self/target/port checks in rank order, accounting),
 /// expectation cross-check and delivery in rank order. `msgs` (when
-/// given) receives the round's executed `(from, to, bytes)` triples.
+/// given) receives the round's executed `(from, to, bytes)` triples;
+/// `clock` (when given) is fed the same triples and closed with
+/// [`LogPClock::end_round`].
 #[allow(clippy::too_many_arguments)]
 fn lockstep_round<T: Clone, P: RankProc<T>>(
     procs: &mut [P],
@@ -169,6 +198,7 @@ fn lockstep_round<T: Clone, P: RankProc<T>>(
     elem_bytes: usize,
     cost: &dyn CostModel,
     mut msgs: Option<&mut Vec<(usize, usize, usize)>>,
+    mut clock: Option<&mut LogPClock>,
 ) -> Result<(), SimError> {
     let p = procs.len();
     let mut round_time = 0.0f64;
@@ -201,6 +231,9 @@ fn lockstep_round<T: Clone, P: RankProc<T>>(
             if let Some(out) = msgs.as_mut() {
                 out.push((r, msg.to, bytes));
             }
+            if let Some(c) = clock.as_mut() {
+                c.msg(r, msg.to, bytes);
+            }
             inbox[msg.to] = Some((r, msg.data));
         }
     }
@@ -225,6 +258,9 @@ fn lockstep_round<T: Clone, P: RankProc<T>>(
     if any {
         stats.active_rounds += 1;
         stats.time += round_time;
+    }
+    if let Some(c) = clock {
+        c.end_round();
     }
     Ok(())
 }
@@ -255,6 +291,7 @@ pub struct StepNet<T, P> {
     stats: RunStats,
     rank_bytes: Vec<usize>,
     inbox: Vec<Option<(usize, Vec<T>)>>,
+    logp: Option<LogPClock>,
 }
 
 impl<T: Clone, P: RankProc<T>> StepNet<T, P> {
@@ -269,7 +306,16 @@ impl<T: Clone, P: RankProc<T>> StepNet<T, P> {
             stats: RunStats { rounds, ..Default::default() },
             rank_bytes: vec![0usize; p],
             inbox: (0..p).map(|_| None).collect(),
+            logp: None,
         }
+    }
+
+    /// Attach the LogP cost plane: every subsequently stepped round is
+    /// also clocked by a [`LogPClock`] and [`StepNet::finish`] reports
+    /// the prediction in `RunStats::logp_time`. Call before the first
+    /// [`StepNet::step`] so the whole trace is covered.
+    pub fn set_logp(&mut self, params: &LogPParams) {
+        self.logp = Some(LogPClock::new(*params));
     }
 
     #[inline]
@@ -329,6 +375,7 @@ impl<T: Clone, P: RankProc<T>> StepNet<T, P> {
             elem_bytes,
             cost,
             msgs,
+            self.logp.as_mut(),
         )?;
         self.next = round + 1;
         Ok(())
@@ -339,6 +386,7 @@ impl<T: Clone, P: RankProc<T>> StepNet<T, P> {
     pub fn finish(mut self) -> (RunStats, Vec<P>) {
         assert!(self.is_done(), "finish called with rounds remaining");
         self.stats.max_rank_bytes = self.rank_bytes.iter().copied().max().unwrap_or(0);
+        self.stats.logp_time = self.logp.map(|c| c.total());
         (self.stats, self.procs)
     }
 }

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use super::cost::CostModel;
+use super::cost::{CostModel, LogPClock, LogPParams};
 use super::network::{Msg, RankProc, RunStats};
 
 /// One round-tagged message in flight.
@@ -155,6 +155,22 @@ where
     T: Send + 'static,
     P: RankProc<T> + Send + 'static,
 {
+    run_threaded_stats_logp(procs, elem_bytes, cost, None)
+}
+
+/// [`run_threaded_stats`] with the cost plane attached: the folded logs
+/// are additionally clocked by a [`super::cost::LogPClock`] when `logp`
+/// is given (`RunStats::logp_time`).
+pub fn run_threaded_stats_logp<T, P>(
+    procs: Vec<P>,
+    elem_bytes: usize,
+    cost: &dyn CostModel,
+    logp: Option<&LogPParams>,
+) -> (RunStats, Vec<P>)
+where
+    T: Send + 'static,
+    P: RankProc<T> + Send + 'static,
+{
     let p = procs.len();
     let total_rounds = procs.iter().map(|pr| pr.rounds()).max().unwrap_or(0);
     let comms = Comm::<T>::world(p, Duration::from_secs(30));
@@ -176,7 +192,7 @@ where
         logs.push(log);
     }
 
-    (fold_send_logs(&logs, total_rounds, elem_bytes, cost), done)
+    (fold_send_logs(&logs, total_rounds, elem_bytes, cost, logp), done)
 }
 
 /// Fold per-rank send logs — `logs[from]` lists that rank's
@@ -192,6 +208,7 @@ pub(crate) fn fold_send_logs(
     total_rounds: usize,
     elem_bytes: usize,
     cost: &dyn CostModel,
+    logp: Option<&LogPParams>,
 ) -> RunStats {
     let mut stats = RunStats { rounds: total_rounds, ..Default::default() };
     let mut round_time = vec![0.0f64; total_rounds];
@@ -215,6 +232,24 @@ pub(crate) fn fold_send_logs(
         }
     }
     stats.max_rank_bytes = rank_bytes.into_iter().max().unwrap_or(0);
+    // The LogP clock needs the messages in machine-round order; the
+    // per-rank logs are each round-sorted, so bucket by round and replay.
+    if let Some(params) = logp {
+        let mut clock = LogPClock::new(*params);
+        let mut by_round: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); total_rounds];
+        for (from, log) in logs.iter().enumerate() {
+            for &(round, to, elems) in log {
+                by_round[round].push((from, to, elems * elem_bytes));
+            }
+        }
+        for round in by_round {
+            for (from, to, bytes) in round {
+                clock.msg(from, to, bytes);
+            }
+            clock.end_round();
+        }
+        stats.logp_time = Some(clock.total());
+    }
     stats
 }
 

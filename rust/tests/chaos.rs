@@ -68,9 +68,9 @@ fn check_case(p: usize, m: usize, n: usize, coll: usize, plan: FaultPlan, ctx: &
         0 => {
             let data: Vec<i64> = (0..m as i64).map(|i| i * 7 - 11).collect();
             let root = p - 1;
-            let (cs, cb) = spmd_bcast(&sk, root, &data, n, 8, &UnitCost, clean)
+            let (cs, cb) = spmd_bcast(&sk, root, &data, n, 8, &UnitCost, clean, None)
                 .unwrap_or_else(|e| panic!("{ctx} [clean bcast]: {e}"));
-            let (xs, xb) = spmd_bcast(&sk, root, &data, n, 8, &UnitCost, chaos)
+            let (xs, xb) = spmd_bcast(&sk, root, &data, n, 8, &UnitCost, chaos, None)
                 .unwrap_or_else(|e| panic!("{ctx} [chaos bcast]: {e}"));
             assert_eq!(xb, cb, "{ctx}: bcast payload");
             assert_stats_eq(&xs, &cs, &format!("{ctx}: bcast"));
@@ -79,10 +79,12 @@ fn check_case(p: usize, m: usize, n: usize, coll: usize, plan: FaultPlan, ctx: &
             let inputs: Vec<Vec<i64>> = (0..p)
                 .map(|r| (0..m).map(|i| ((r * 41 + i * 13) % 509) as i64).collect())
                 .collect();
-            let (cs, cb) = spmd_reduce(&sk, 0, &inputs, n, Arc::new(SumOp), 8, &UnitCost, clean)
-                .unwrap_or_else(|e| panic!("{ctx} [clean reduce]: {e}"));
-            let (xs, xb) = spmd_reduce(&sk, 0, &inputs, n, Arc::new(SumOp), 8, &UnitCost, chaos)
-                .unwrap_or_else(|e| panic!("{ctx} [chaos reduce]: {e}"));
+            let (cs, cb) =
+                spmd_reduce(&sk, 0, &inputs, n, Arc::new(SumOp), 8, &UnitCost, clean, None)
+                    .unwrap_or_else(|e| panic!("{ctx} [clean reduce]: {e}"));
+            let (xs, xb) =
+                spmd_reduce(&sk, 0, &inputs, n, Arc::new(SumOp), 8, &UnitCost, chaos, None)
+                    .unwrap_or_else(|e| panic!("{ctx} [chaos reduce]: {e}"));
             assert_eq!(xb, cb, "{ctx}: reduce payload");
             assert_stats_eq(&xs, &cs, &format!("{ctx}: reduce"));
         }
@@ -91,10 +93,10 @@ fn check_case(p: usize, m: usize, n: usize, coll: usize, plan: FaultPlan, ctx: &
                 .map(|r| (0..m).map(|i| ((r + 1) * (i + 1) % 333) as i64).collect())
                 .collect();
             let (crs, cag, cb) =
-                spmd_allreduce(&sk, &inputs, n, Arc::new(SumOp), 8, &UnitCost, clean)
+                spmd_allreduce(&sk, &inputs, n, Arc::new(SumOp), 8, &UnitCost, clean, None)
                     .unwrap_or_else(|e| panic!("{ctx} [clean allreduce]: {e}"));
             let (xrs, xag, xb) =
-                spmd_allreduce(&sk, &inputs, n, Arc::new(SumOp), 8, &UnitCost, chaos)
+                spmd_allreduce(&sk, &inputs, n, Arc::new(SumOp), 8, &UnitCost, chaos, None)
                     .unwrap_or_else(|e| panic!("{ctx} [chaos allreduce]: {e}"));
             assert_eq!(xb, cb, "{ctx}: allreduce payload");
             assert_stats_eq(&xrs, &crs, &format!("{ctx}: allreduce rs phase"));

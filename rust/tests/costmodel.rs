@@ -1,0 +1,227 @@
+//! The cost plane contract (integration level):
+//!
+//! * **Back-compat** — with no LogP parameters configured, `Algo::Auto`
+//!   reproduces the paper's §3 picks verbatim over a (kind, p, m,
+//!   blocks) grid.
+//! * **Cross-validation** — circulant runs under a configured machine
+//!   carry `RunStats::logp_time`, keep the optimal `n - 1 + q` round
+//!   count, and the predicted time is monotone in each of L, o, g.
+//! * **OptTree** — `Algo::OptTree` is bit-identical across the lockstep,
+//!   engine, SPMD and threaded backends, and its measured `logp_time`
+//!   equals the greedy construction's own completion label (the
+//!   `predict_opttree` closed form is exact, not an estimate).
+//! * **Cost-driven Auto** — with a machine configured, `Algo::Auto`
+//!   follows the predicted-cost argmin: trees for small rooted
+//!   payloads, the pipelined circulant for large ones, and explicit
+//!   block counts still pin the circulant pipeline.
+
+use std::sync::Arc;
+
+use circulant_bcast::collectives::tuning::predict_opttree;
+use circulant_bcast::collectives::SumOp;
+use circulant_bcast::comm::{
+    Algo, BackendKind, BcastReq, CommBuilder, Communicator, Kind, ReduceReq, TuningParams,
+};
+use circulant_bcast::schedule::ceil_log2;
+use circulant_bcast::sim::{LogPParams, UnitCost};
+
+/// Explicit tuning literal — never `TuningParams::default()` for the
+/// `logp` field, which reads the `CBCAST_LOGP_*` env knobs and would
+/// race with whatever environment the test harness runs under.
+fn tuning(logp: Option<LogPParams>) -> TuningParams {
+    TuningParams { logp, ..TuningParams::default() }
+}
+
+fn comm(p: usize, logp: Option<LogPParams>) -> Communicator {
+    CommBuilder::new(p).cost_model(UnitCost).tuning(tuning(logp)).build()
+}
+
+// -------------------------------------------------------------------
+// Back-compat: no machine configured => the legacy rules, verbatim.
+// -------------------------------------------------------------------
+
+#[test]
+fn auto_without_logp_is_the_legacy_rule_verbatim() {
+    let tp = tuning(None);
+    for kind in
+        [Kind::Bcast, Kind::Reduce, Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce]
+    {
+        for p in [2usize, 5, 17, 64, 257] {
+            for m in [0usize, 1, 7, 64, 4096, 1 << 16] {
+                for blocks in [None, Some(4)] {
+                    let legacy = Algo::Auto.resolve(kind, m, 8, blocks);
+                    let picked = Algo::Auto.resolve_with(kind, p, m, 8, blocks, &tp);
+                    assert_eq!(picked, legacy, "{kind:?} p={p} m={m} blocks={blocks:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn no_machine_means_no_logp_time() {
+    let data: Vec<i64> = (0..340).collect();
+    let c = comm(17, None);
+    let out = c.bcast(BcastReq::new(0, &data).algo(Algo::Circulant).blocks(5)).unwrap();
+    assert_eq!(out.stats.logp_time, None);
+}
+
+// -------------------------------------------------------------------
+// Cross-validation: the clock against the simulator's round counts.
+// -------------------------------------------------------------------
+
+#[test]
+fn circulant_runs_carry_a_logp_time_at_optimal_rounds() {
+    let params = LogPParams::default();
+    let (p, n) = (17usize, 8usize);
+    let q = ceil_log2(p);
+    let data: Vec<i64> = (0..640).map(|i| i * 3 - 5).collect();
+    let c = comm(p, Some(params));
+
+    let req = BcastReq::new(0, &data).algo(Algo::Circulant).blocks(n).elem_bytes(8);
+    let out = c.bcast(req).unwrap();
+    assert!(out.all_received());
+    assert_eq!(out.stats.rounds, n - 1 + q, "bcast keeps the optimal round count");
+    let t_bcast = out.stats.logp_time.expect("cost plane attached to bcast");
+    assert!(t_bcast > 0.0);
+
+    let inputs: Vec<Vec<i64>> = (0..p)
+        .map(|r| (0..640).map(|i| ((r + 1) * (i + 3) % 271) as i64).collect())
+        .collect();
+    let req = ReduceReq::new(3, &inputs, Arc::new(SumOp)).algo(Algo::Circulant).blocks(n);
+    let red = c.reduce(req.elem_bytes(8)).unwrap();
+    assert_eq!(red.stats.rounds, n - 1 + q, "reduce keeps the optimal round count");
+    assert!(red.stats.logp_time.expect("cost plane attached to reduce") > 0.0);
+}
+
+#[test]
+fn measured_logp_time_is_monotone_in_each_knob() {
+    // Multi-packet blocks (2048 elems / 4 blocks = 4 KiB blocks) so the
+    // per-packet gap g is visible on the wire, not only at the ports.
+    let base = LogPParams::default();
+    let data: Vec<i64> = (0..2048).collect();
+    let time = |params: LogPParams| {
+        let req = BcastReq::new(0, &data).algo(Algo::Circulant).blocks(4).elem_bytes(8);
+        comm(13, Some(params)).bcast(req).unwrap().stats.logp_time.unwrap()
+    };
+    let t0 = time(base);
+    assert!(time(LogPParams::new(base.l * 10.0, base.o, base.g)) > t0, "monotone in L");
+    assert!(time(LogPParams::new(base.l, base.o * 10.0, base.g)) > t0, "monotone in o");
+    assert!(time(LogPParams::new(base.l, base.o, base.g * 10.0)) > t0, "monotone in g");
+}
+
+// -------------------------------------------------------------------
+// OptTree: backend parity and exactness of the closed-form predictor.
+// -------------------------------------------------------------------
+
+#[test]
+fn opttree_bit_identical_across_backends() {
+    let params = LogPParams::default();
+    for p in [5usize, 8, 13] {
+        let data: Vec<i64> = (0..96).map(|i| i * 5 - 7).collect();
+        let root = 2 % p;
+        let run = |backend| {
+            let c = CommBuilder::new(p)
+                .cost_model(UnitCost)
+                .tuning(tuning(Some(params)))
+                .backend(backend)
+                .build();
+            c.bcast(BcastReq::new(root, &data).algo(Algo::OptTree).elem_bytes(8)).unwrap()
+        };
+        let base = run(BackendKind::Lockstep);
+        assert!(base.all_received(), "p={p}");
+        assert!(base.buffers.iter().all(|b| b == &data), "p={p}");
+        assert!(base.stats.logp_time.is_some(), "p={p}");
+        for backend in [BackendKind::Engine, BackendKind::Spmd, BackendKind::Threaded] {
+            let out = run(backend);
+            assert_eq!(out.algo, base.algo, "p={p} {backend:?}");
+            assert_eq!(out.buffers, base.buffers, "p={p} {backend:?}");
+            assert_eq!(out.stats.rounds, base.stats.rounds, "p={p} {backend:?}");
+            assert_eq!(out.stats.messages, base.stats.messages, "p={p} {backend:?}");
+            assert_eq!(out.stats.bytes, base.stats.bytes, "p={p} {backend:?}");
+            assert_eq!(
+                out.stats.logp_time,
+                base.stats.logp_time,
+                "p={p} {backend:?}: the predicted time must be backend-invariant"
+            );
+        }
+    }
+}
+
+#[test]
+fn opttree_reduce_agrees_across_backends() {
+    let params = LogPParams::default();
+    let p = 9usize;
+    let inputs: Vec<Vec<i64>> = (0..p)
+        .map(|r| (0..48).map(|i| ((r * 37 + i * 11) % 401) as i64).collect())
+        .collect();
+    let expect: Vec<i64> = (0..48).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+    let run = |backend| {
+        let c = CommBuilder::new(p)
+            .cost_model(UnitCost)
+            .tuning(tuning(Some(params)))
+            .backend(backend)
+            .build();
+        let req = ReduceReq::new(4, &inputs, Arc::new(SumOp)).algo(Algo::OptTree);
+        c.reduce(req.elem_bytes(8)).unwrap()
+    };
+    let base = run(BackendKind::Lockstep);
+    assert_eq!(base.buffers, expect);
+    for backend in [BackendKind::Engine, BackendKind::Spmd, BackendKind::Threaded] {
+        let out = run(backend);
+        assert_eq!(out.buffers, expect, "{backend:?}");
+        assert_eq!(out.stats.logp_time, base.stats.logp_time, "{backend:?}");
+    }
+}
+
+#[test]
+fn opttree_measured_time_is_the_tree_completion_label() {
+    // The greedy construction's completion label IS the LogP time of its
+    // own schedule: replaying the tree's round trace through the clock
+    // must reproduce it (up to float association noise).
+    let params = LogPParams::default();
+    for p in [2usize, 6, 13, 32] {
+        let m = 512usize; // 4 KiB payload: multi-packet on the wire
+        let data: Vec<i64> = (0..m as i64).collect();
+        let c = comm(p, Some(params));
+        let out = c.bcast(BcastReq::new(0, &data).algo(Algo::OptTree).elem_bytes(8)).unwrap();
+        let predicted = predict_opttree(p, m * 8, &params);
+        let measured = out.stats.logp_time.unwrap();
+        assert!(
+            (measured - predicted).abs() <= 1e-9 * predicted.max(1e-12),
+            "p={p}: measured={measured} predicted={predicted}"
+        );
+    }
+}
+
+// -------------------------------------------------------------------
+// Cost-driven Auto: the argmin over the candidate families.
+// -------------------------------------------------------------------
+
+#[test]
+fn cost_driven_auto_picks_trees_small_and_pipeline_large() {
+    let params = LogPParams::default();
+    let tp = tuning(Some(params));
+
+    // Small rooted payload: the Karp tree is LogP-optimal.
+    assert_eq!(Algo::Auto.resolve_with(Kind::Bcast, 64, 8, 8, None, &tp), Algo::OptTree);
+    // Huge payload: the pipelined circulant amortizes the latency.
+    assert_eq!(Algo::Auto.resolve_with(Kind::Bcast, 64, 1 << 20, 8, None, &tp), Algo::Circulant);
+    // An explicit block count is a request for the pipeline, machine or no.
+    assert_eq!(Algo::Auto.resolve_with(Kind::Bcast, 64, 8, 8, Some(4), &tp), Algo::Circulant);
+    // The all-collectives only ever choose between circulant and ring.
+    for kind in [Kind::Allgatherv, Kind::ReduceScatter, Kind::Allreduce] {
+        for m in [8usize, 1 << 16] {
+            let pick = Algo::Auto.resolve_with(kind, 24, m, 8, None, &tp);
+            let ok = pick == Algo::Circulant || pick == Algo::Ring;
+            assert!(ok, "{kind:?} m={m}: picked {pick:?}");
+        }
+    }
+
+    // End to end: the resolved algorithm is reported on the outcome.
+    let data: Vec<i64> = (0..64).collect();
+    let c = comm(64, Some(params));
+    let out = c.bcast(BcastReq::new(0, &data).algo(Algo::Auto).elem_bytes(8)).unwrap();
+    assert_eq!(out.algo, Algo::OptTree);
+    assert!(out.buffers.iter().all(|b| b == &data));
+}

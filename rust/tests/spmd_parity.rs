@@ -121,6 +121,7 @@ fn check_case(c: &Case) {
                 8,
                 &UnitCost,
                 TransportKind::Loopback,
+                None,
             )
             .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
             assert_eq!(lbufs, base.buffers, "{ctx} [loopback]: payload");
@@ -156,6 +157,7 @@ fn check_case(c: &Case) {
                 8,
                 &UnitCost,
                 TransportKind::Loopback,
+                None,
             )
             .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
             assert_eq!(lbuf, base.buffers, "{ctx} [loopback]: payload");
@@ -183,7 +185,7 @@ fn check_case(c: &Case) {
                 assert_stats_eq(&out.stats, &base.stats, &format!("{ctx} [{backend:?}]"));
             }
             let (lstats, lbufs) =
-                spmd_allgatherv(&sk, &inputs, c.n, 8, &UnitCost, TransportKind::Loopback)
+                spmd_allgatherv(&sk, &inputs, c.n, 8, &UnitCost, TransportKind::Loopback, None)
                     .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
             assert_eq!(lbufs, base.buffers, "{ctx} [loopback]: payload");
             assert_stats_eq(&lstats, &base.stats, &format!("{ctx} [loopback]"));
@@ -220,6 +222,7 @@ fn check_case(c: &Case) {
                 8,
                 &UnitCost,
                 TransportKind::Loopback,
+                None,
             )
             .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
             assert_eq!(lchunks, base.buffers, "{ctx} [loopback]: payload");
@@ -256,6 +259,7 @@ fn check_case(c: &Case) {
                 8,
                 &UnitCost,
                 TransportKind::Loopback,
+                None,
             )
             .unwrap_or_else(|e| panic!("{ctx} [loopback]: {e}"));
             assert_eq!(lbufs, base.buffers, "{ctx} [loopback]: payload");
@@ -360,7 +364,7 @@ fn socket_parity() {
             .bcast(BcastReq::new(p - 1, &data).algo(Algo::Circulant).blocks(4).elem_bytes(8))
             .unwrap();
         let (stats, bufs) =
-            spmd_bcast(&sk, p - 1, &data, 4, 8, &UnitCost, TransportKind::Socket)
+            spmd_bcast(&sk, p - 1, &data, 4, 8, &UnitCost, TransportKind::Socket, None)
                 .unwrap_or_else(|e| panic!("p={p} [socket direct]: {e}"));
         assert_eq!(bufs, base.buffers, "p={p} [socket direct]: payload");
         assert_stats_eq(&stats, &base.stats, &format!("p={p} [socket direct]"));
